@@ -1,0 +1,92 @@
+//! End-to-end serving driver (the DESIGN.md validation run): boots the full
+//! three-layer stack — learned FSM policies (L3), AOT-compiled JAX/Pallas
+//! cell artifacts (L2/L1) over PJRT — and serves batched requests from
+//! concurrent clients across all workload families, reporting throughput
+//! and latency percentiles per workload and per system mode.
+//!
+//! Requires `make artifacts`. Results recorded in EXPERIMENTS.md.
+//!
+//! Run: `cargo run --release --example serve_e2e -- [--requests 128] [--hidden 64]`
+
+use std::time::Duration;
+
+use ed_batch::batching::fsm::Encoding;
+use ed_batch::coordinator::server::{Server, ServerConfig};
+use ed_batch::coordinator::SystemMode;
+use ed_batch::util::cli::Args;
+use ed_batch::util::rng::Rng;
+use ed_batch::workloads::{Workload, WorkloadKind};
+
+fn main() -> anyhow::Result<()> {
+    let args = Args::from_env();
+    let requests = args.usize("requests", 128);
+    let hidden = args.usize("hidden", 64);
+    let clients = args.usize("clients", 4);
+
+    if !std::path::Path::new("artifacts/manifest.json").exists() {
+        anyhow::bail!("artifacts/manifest.json missing — run `make artifacts` first");
+    }
+
+    println!(
+        "# serve_e2e: {} requests x {} workloads, hidden={}, {} clients, PJRT backend",
+        requests, 3, hidden, clients
+    );
+    println!(
+        "{:<14} {:<14} {:>9} {:>9} {:>9} {:>8} {:>9}",
+        "workload", "mode", "inst/s", "p50 ms", "p99 ms", "batches", "MB moved"
+    );
+
+    for kind in [
+        WorkloadKind::BiLstmTagger, // chain
+        WorkloadKind::TreeLstm,     // tree
+        WorkloadKind::LatticeLstm,  // lattice
+    ] {
+        for mode in [
+            SystemMode::VanillaDyNet,
+            SystemMode::CavsDyNet,
+            SystemMode::EdBatch,
+        ] {
+            let server = Server::start(ServerConfig {
+                workload: kind,
+                hidden,
+                mode,
+                max_batch: 32,
+                batch_window: Duration::from_millis(2),
+                artifacts_dir: Some("artifacts".into()),
+                encoding: Encoding::Sort,
+                seed: 7,
+            })?;
+            let mut handles = Vec::new();
+            for c in 0..clients {
+                let client = server.client();
+                let w = Workload::new(kind, hidden);
+                let n = requests / clients;
+                handles.push(std::thread::spawn(move || {
+                    let mut rng = Rng::new(31 * (c as u64 + 1));
+                    for _ in 0..n {
+                        let g = w.gen_instance(&mut rng);
+                        let resp = client.infer(g).expect("infer");
+                        assert!(resp.sink_outputs.iter().flatten().all(|v| v.is_finite()));
+                    }
+                }));
+            }
+            for h in handles {
+                h.join().expect("client thread");
+            }
+            let snap = server.metrics.snapshot();
+            println!(
+                "{:<14} {:<14} {:>9.1} {:>9.2} {:>9.2} {:>8} {:>9.2}",
+                kind.name(),
+                mode.name(),
+                snap.throughput(),
+                snap.latency_p50_s * 1e3,
+                snap.latency_p99_s * 1e3,
+                snap.batches_executed,
+                snap.memcpy_elems as f64 * 4.0 / 1e6,
+            );
+            server.shutdown()?;
+        }
+    }
+    println!("\nall workloads served successfully over the PJRT artifact path.");
+    Ok(())
+}

@@ -1,0 +1,78 @@
+//! Tree-structured sentiment analysis — the paper's motivating tree
+//! workload (TreeLSTM over constituency parses, per-node sentiment heads).
+//!
+//! Serves a stream of parse trees through the ED-Batch server and compares
+//! the three systems' behaviour on the same request stream: learned-FSM
+//! batching executes all sentiment heads in ONE batch per mini-batch
+//! (Fig.1/Fig.2), the baselines split them across depths.
+//!
+//! Run: `cargo run --release --example tree_sentiment -- [--requests 64]`
+
+use std::time::Duration;
+
+use ed_batch::batching::fsm::Encoding;
+use ed_batch::coordinator::server::{Server, ServerConfig};
+use ed_batch::coordinator::SystemMode;
+use ed_batch::util::cli::Args;
+use ed_batch::util::rng::Rng;
+use ed_batch::workloads::{Workload, WorkloadKind};
+
+fn main() -> anyhow::Result<()> {
+    let args = Args::from_env();
+    let requests = args.usize("requests", 64);
+    let hidden = args.usize("hidden", 64);
+    let artifacts = std::path::Path::new("artifacts/manifest.json")
+        .exists()
+        .then(|| "artifacts".to_string());
+    if artifacts.is_none() {
+        println!("artifacts/ missing -> CPU backend (run `make artifacts` for PJRT)");
+    }
+
+    for mode in [
+        SystemMode::VanillaDyNet,
+        SystemMode::CavsDyNet,
+        SystemMode::EdBatch,
+    ] {
+        let server = Server::start(ServerConfig {
+            workload: WorkloadKind::TreeLstm,
+            hidden,
+            mode,
+            max_batch: 16,
+            batch_window: Duration::from_millis(2),
+            artifacts_dir: artifacts.clone(),
+            encoding: Encoding::Sort,
+            seed: 11,
+        })?;
+        // 4 concurrent clients submitting parse trees
+        let mut handles = Vec::new();
+        for c in 0..4u64 {
+            let client = server.client();
+            let w = Workload::new(WorkloadKind::TreeLstm, hidden);
+            let n = requests / 4;
+            handles.push(std::thread::spawn(move || {
+                let mut rng = Rng::new(1000 + c);
+                for _ in 0..n {
+                    let tree = w.gen_instance(&mut rng);
+                    let resp = client.infer(tree).expect("infer");
+                    assert!(!resp.sink_outputs.is_empty());
+                }
+            }));
+        }
+        for h in handles {
+            h.join().expect("client");
+        }
+        let snap = server.metrics.snapshot();
+        println!(
+            "{:<14} {:>7.1} inst/s | p50 {:>7.2}ms p99 {:>7.2}ms | {} batches, {} kernels, {:.2} MB moved",
+            mode.name(),
+            snap.throughput(),
+            snap.latency_p50_s * 1e3,
+            snap.latency_p99_s * 1e3,
+            snap.batches_executed,
+            snap.kernel_calls,
+            snap.memcpy_elems as f64 * 4.0 / 1e6,
+        );
+        server.shutdown()?;
+    }
+    Ok(())
+}

@@ -1,0 +1,111 @@
+"""AOT compile path: lower every (cell, hidden, batch-bucket) to HLO *text*.
+
+HLO text — NOT ``HloModuleProto.serialize()`` — is the interchange format:
+jax >= 0.5 emits protos with 64-bit instruction ids which the rust side's
+xla_extension 0.5.1 rejects (``proto.id() <= INT_MAX``); the text parser
+reassigns ids and round-trips cleanly.  See /opt/xla-example/load_hlo/.
+
+Run once via ``make artifacts``; rust never invokes python at request time.
+
+Output layout::
+
+    artifacts/
+      <cell>_h<H>_b<B>.hlo.txt     one module per (cell, hidden, bucket)
+      manifest.json                index the rust runtime loads at boot
+"""
+
+from __future__ import annotations
+
+import argparse
+import functools
+import json
+import operator
+import pathlib
+import time
+
+import jax
+
+
+def np_prod(xs):
+    return functools.reduce(operator.mul, xs, 1)
+from jax._src.lib import xla_client as xc
+
+from . import model
+
+DEFAULT_HIDDEN = [64, 128, 256, 512]
+DEFAULT_BUCKETS = [1, 4, 16, 32, 64, 128, 256]
+
+# Skip combos whose *single largest argument* exceeds this (e.g. the
+# MV-RNN's per-instance [B, H, H] matrices at B=256, H=512 would be 256 MB).
+MAX_ARG_ELEMS = 16 * 2**20
+
+
+def to_hlo_text(lowered) -> str:
+    """StableHLO -> XlaComputation -> HLO text (ids reassigned by the parser)."""
+    mlir_mod = lowered.compiler_ir("stablehlo")
+    comp = xc._xla.mlir.mlir_module_to_xla_computation(
+        str(mlir_mod), use_tuple_args=False, return_tuple=True
+    )
+    return comp.as_hlo_text()
+
+
+def lower_cell(cell: str, hidden: int, batch: int) -> str:
+    fn, shapes, _ = model.CELLS[cell]
+    args = [jax.ShapeDtypeStruct(s, jax.numpy.float32) for s in shapes(batch, hidden)]
+    lowered = jax.jit(fn).lower(*args)
+    return to_hlo_text(lowered)
+
+
+def main() -> None:
+    ap = argparse.ArgumentParser(description=__doc__)
+    ap.add_argument("--out-dir", default="../artifacts")
+    ap.add_argument("--hidden", type=int, nargs="*", default=DEFAULT_HIDDEN)
+    ap.add_argument("--buckets", type=int, nargs="*", default=DEFAULT_BUCKETS)
+    ap.add_argument("--cells", nargs="*", default=list(model.CELLS.keys()))
+    args = ap.parse_args()
+
+    out_dir = pathlib.Path(args.out_dir)
+    out_dir.mkdir(parents=True, exist_ok=True)
+
+    entries = []
+    t0 = time.time()
+    for cell in args.cells:
+        fn, shapes, n_out = model.CELLS[cell]
+        for hidden in args.hidden:
+            for bucket in args.buckets:
+                biggest = max(
+                    int(np_prod(s)) for s in shapes(bucket, hidden)
+                )
+                if biggest > MAX_ARG_ELEMS:
+                    print(f"  skip {cell}_h{hidden}_b{bucket} (arg {biggest} elems)")
+                    continue
+                name = f"{cell}_h{hidden}_b{bucket}"
+                path = out_dir / f"{name}.hlo.txt"
+                text = lower_cell(cell, hidden, bucket)
+                path.write_text(text)
+                entries.append(
+                    {
+                        "cell": cell,
+                        "hidden": hidden,
+                        "batch": bucket,
+                        "file": path.name,
+                        "arg_shapes": [list(s) for s in shapes(bucket, hidden)],
+                        "num_outputs": n_out,
+                    }
+                )
+                print(f"  lowered {name} ({len(text)} chars)")
+
+    manifest = {
+        "version": 1,
+        "generated_unix": int(time.time()),
+        "entries": entries,
+    }
+    (out_dir / "manifest.json").write_text(json.dumps(manifest, indent=1))
+    print(
+        f"wrote {len(entries)} artifacts + manifest to {out_dir} "
+        f"in {time.time() - t0:.1f}s"
+    )
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,2 @@
+# Layer-1 Pallas kernels (pallas_ops) + pure-jnp oracles (ref).
+from . import pallas_ops, ref  # noqa: F401

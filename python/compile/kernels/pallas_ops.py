@@ -1,0 +1,300 @@
+"""Layer-1 Pallas kernels for ED-Batch batched cell execution.
+
+These are the compute hot-spots of the batched runtime: a tiled
+``matmul + bias`` kernel (used by every cell's affine stage) and fused
+pointwise-gate kernels for LSTM / GRU / TreeLSTM cells.
+
+All kernels are lowered with ``interpret=True`` so the resulting HLO runs on
+the CPU PJRT client (real TPU lowering emits a Mosaic custom-call the CPU
+plugin cannot execute).  Tiling is still expressed through ``BlockSpec`` so
+the VMEM/MXU structure is what a TPU build would use:
+
+* batch tile ``bm``: up to 128 rows (MXU systolic height),
+* column tile ``bn``: up to 512 output columns (4 MXU lanes of 128),
+* the contraction dim is kept whole per tile — for the model sizes ED-Batch
+  evaluates (hidden <= 512) a full ``[D, bn]`` weight slab fits in VMEM.
+
+``ref.py`` holds the pure-jnp oracles these are tested against.
+"""
+
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+# Interpret mode: mandatory for CPU-PJRT execution of the lowered HLO.
+_INTERPRET = True
+
+# MXU-shaped tile ceilings (see DESIGN.md §Hardware-Adaptation).
+_MAX_BM = 128
+_MAX_BN = 512
+
+
+def _tile(dim: int, ceiling: int) -> int:
+    """Largest power-of-two tile <= ceiling that divides ``dim``.
+
+    Batch buckets and hidden sizes in ED-Batch are powers of two (or small
+    multiples of 32), so this always finds an exact tile and no masking is
+    needed inside the kernels.
+    """
+    t = min(dim, ceiling)
+    while dim % t != 0:
+        t //= 2
+    return max(t, 1)
+
+
+# ---------------------------------------------------------------------------
+# Tiled affine: out[B, N] = x[B, D] @ w[D, N] + b[N]
+# ---------------------------------------------------------------------------
+
+
+def _affine_kernel(x_ref, w_ref, b_ref, o_ref):
+    o_ref[...] = (
+        jnp.dot(x_ref[...], w_ref[...], preferred_element_type=jnp.float32)
+        + b_ref[...]
+    )
+
+
+def affine(x: jax.Array, w: jax.Array, b: jax.Array) -> jax.Array:
+    """``x @ w + b`` as a Pallas kernel tiled (bm, D) x (D, bn)."""
+    m, d = x.shape
+    d2, n = w.shape
+    assert d == d2, f"contraction mismatch {d} vs {d2}"
+    bm, bn = _tile(m, _MAX_BM), _tile(n, _MAX_BN)
+    grid = (m // bm, n // bn)
+    return pl.pallas_call(
+        _affine_kernel,
+        grid=grid,
+        in_specs=[
+            pl.BlockSpec((bm, d), lambda i, j: (i, 0)),
+            pl.BlockSpec((d, bn), lambda i, j: (0, j)),
+            pl.BlockSpec((1, bn), lambda i, j: (0, j)),
+        ],
+        out_specs=pl.BlockSpec((bm, bn), lambda i, j: (i, j)),
+        out_shape=jax.ShapeDtypeStruct((m, n), jnp.float32),
+        interpret=_INTERPRET,
+    )(x, w, b.reshape(1, -1))
+
+
+# ---------------------------------------------------------------------------
+# Dual-input affine: gates[B, N] = x @ wx + h @ wh + b
+# (the LSTM/GRU affine stage; fusing both matmuls in one kernel halves the
+# HBM->VMEM traffic for the activations.)
+# ---------------------------------------------------------------------------
+
+
+def _dual_affine_kernel(x_ref, h_ref, wx_ref, wh_ref, b_ref, o_ref):
+    acc = jnp.dot(x_ref[...], wx_ref[...], preferred_element_type=jnp.float32)
+    acc += jnp.dot(h_ref[...], wh_ref[...], preferred_element_type=jnp.float32)
+    o_ref[...] = acc + b_ref[...]
+
+
+def dual_affine(
+    x: jax.Array, h: jax.Array, wx: jax.Array, wh: jax.Array, b: jax.Array
+) -> jax.Array:
+    m, d = x.shape
+    _, hdim = h.shape
+    n = wx.shape[1]
+    assert wh.shape == (hdim, n)
+    bm, bn = _tile(m, _MAX_BM), _tile(n, _MAX_BN)
+    grid = (m // bm, n // bn)
+    return pl.pallas_call(
+        _dual_affine_kernel,
+        grid=grid,
+        in_specs=[
+            pl.BlockSpec((bm, d), lambda i, j: (i, 0)),
+            pl.BlockSpec((bm, hdim), lambda i, j: (i, 0)),
+            pl.BlockSpec((d, bn), lambda i, j: (0, j)),
+            pl.BlockSpec((hdim, bn), lambda i, j: (0, j)),
+            pl.BlockSpec((1, bn), lambda i, j: (0, j)),
+        ],
+        out_specs=pl.BlockSpec((bm, bn), lambda i, j: (i, j)),
+        out_shape=jax.ShapeDtypeStruct((m, n), jnp.float32),
+        interpret=_INTERPRET,
+    )(x, h, wx, wh, b.reshape(1, -1))
+
+
+# ---------------------------------------------------------------------------
+# Fused LSTM pointwise stage:
+#   i, f, g, o = split(gates, 4, axis=1)
+#   c' = sigmoid(f) * c + sigmoid(i) * tanh(g)
+#   h' = sigmoid(o) * tanh(c')
+# Tiled over (batch, hidden); each program reads the four gate columns for
+# its hidden tile.
+# ---------------------------------------------------------------------------
+
+
+def _lstm_pointwise_kernel(gates_ref, c_ref, h_out_ref, c_out_ref):
+    h = c_ref.shape[-1]
+    g = gates_ref[...]
+    i_g = jax.nn.sigmoid(g[:, 0:h])
+    f_g = jax.nn.sigmoid(g[:, h : 2 * h])
+    g_g = jnp.tanh(g[:, 2 * h : 3 * h])
+    o_g = jax.nn.sigmoid(g[:, 3 * h : 4 * h])
+    c_new = f_g * c_ref[...] + i_g * g_g
+    c_out_ref[...] = c_new
+    h_out_ref[...] = o_g * jnp.tanh(c_new)
+
+
+def lstm_pointwise(gates: jax.Array, c: jax.Array):
+    """Fused LSTM gate nonlinearities + state update. gates: [B, 4H], c: [B, H]."""
+    m, h = c.shape
+    assert gates.shape == (m, 4 * h)
+    bm = _tile(m, _MAX_BM)
+    grid = (m // bm,)
+    return pl.pallas_call(
+        _lstm_pointwise_kernel,
+        grid=grid,
+        in_specs=[
+            pl.BlockSpec((bm, 4 * h), lambda i: (i, 0)),
+            pl.BlockSpec((bm, h), lambda i: (i, 0)),
+        ],
+        out_specs=[
+            pl.BlockSpec((bm, h), lambda i: (i, 0)),
+            pl.BlockSpec((bm, h), lambda i: (i, 0)),
+        ],
+        out_shape=[
+            jax.ShapeDtypeStruct((m, h), jnp.float32),
+            jax.ShapeDtypeStruct((m, h), jnp.float32),
+        ],
+        interpret=_INTERPRET,
+    )(gates, c)
+
+
+# ---------------------------------------------------------------------------
+# Fused TreeLSTM pointwise stage (binary N-ary TreeLSTM, Tai et al. 2015):
+#   gates: [B, 5H] -> i, f_l, f_r, g, o
+#   c' = sigmoid(f_l) * c_l + sigmoid(f_r) * c_r + sigmoid(i) * tanh(g)
+#   h' = sigmoid(o) * tanh(c')
+# ---------------------------------------------------------------------------
+
+
+def _treelstm_pointwise_kernel(gates_ref, cl_ref, cr_ref, h_out_ref, c_out_ref):
+    h = cl_ref.shape[-1]
+    g = gates_ref[...]
+    i_g = jax.nn.sigmoid(g[:, 0:h])
+    fl_g = jax.nn.sigmoid(g[:, h : 2 * h])
+    fr_g = jax.nn.sigmoid(g[:, 2 * h : 3 * h])
+    g_g = jnp.tanh(g[:, 3 * h : 4 * h])
+    o_g = jax.nn.sigmoid(g[:, 4 * h : 5 * h])
+    c_new = fl_g * cl_ref[...] + fr_g * cr_ref[...] + i_g * g_g
+    c_out_ref[...] = c_new
+    h_out_ref[...] = o_g * jnp.tanh(c_new)
+
+
+def treelstm_pointwise(gates: jax.Array, c_l: jax.Array, c_r: jax.Array):
+    m, h = c_l.shape
+    assert gates.shape == (m, 5 * h)
+    bm = _tile(m, _MAX_BM)
+    grid = (m // bm,)
+    return pl.pallas_call(
+        _treelstm_pointwise_kernel,
+        grid=grid,
+        in_specs=[
+            pl.BlockSpec((bm, 5 * h), lambda i: (i, 0)),
+            pl.BlockSpec((bm, h), lambda i: (i, 0)),
+            pl.BlockSpec((bm, h), lambda i: (i, 0)),
+        ],
+        out_specs=[
+            pl.BlockSpec((bm, h), lambda i: (i, 0)),
+            pl.BlockSpec((bm, h), lambda i: (i, 0)),
+        ],
+        out_shape=[
+            jax.ShapeDtypeStruct((m, h), jnp.float32),
+            jax.ShapeDtypeStruct((m, h), jnp.float32),
+        ],
+        interpret=_INTERPRET,
+    )(gates, c_l, c_r)
+
+
+# ---------------------------------------------------------------------------
+# Fused GRU pointwise stage:
+#   rz: [B, 2H] = x @ Wxrz + h @ Whrz + b  (precomputed affine)
+#   r, z = sigmoid(split(rz))
+#   n = tanh(nx + r * nh)          (nx = x-affine, nh = h-affine of candidate)
+#   h' = (1 - z) * n + z * h
+# ---------------------------------------------------------------------------
+
+
+def _gru_pointwise_kernel(rz_ref, nx_ref, nh_ref, h_ref, o_ref):
+    h = h_ref.shape[-1]
+    rz = rz_ref[...]
+    r = jax.nn.sigmoid(rz[:, 0:h])
+    z = jax.nn.sigmoid(rz[:, h : 2 * h])
+    n = jnp.tanh(nx_ref[...] + r * nh_ref[...])
+    o_ref[...] = (1.0 - z) * n + z * h_ref[...]
+
+
+def gru_pointwise(rz: jax.Array, nx: jax.Array, nh: jax.Array, h: jax.Array):
+    m, hd = h.shape
+    assert rz.shape == (m, 2 * hd)
+    bm = _tile(m, _MAX_BM)
+    grid = (m // bm,)
+    return pl.pallas_call(
+        _gru_pointwise_kernel,
+        grid=grid,
+        in_specs=[
+            pl.BlockSpec((bm, 2 * hd), lambda i: (i, 0)),
+            pl.BlockSpec((bm, hd), lambda i: (i, 0)),
+            pl.BlockSpec((bm, hd), lambda i: (i, 0)),
+            pl.BlockSpec((bm, hd), lambda i: (i, 0)),
+        ],
+        out_specs=pl.BlockSpec((bm, hd), lambda i: (i, 0)),
+        out_shape=jax.ShapeDtypeStruct((m, hd), jnp.float32),
+        interpret=_INTERPRET,
+    )(rz, nx, nh, h)
+
+
+# ---------------------------------------------------------------------------
+# Batched square matmul for the MV-RNN cell: out[B, H, H] <- a[B, H, H] @ b[B, H, H]
+# Grid over the batch; each program does one HxH MXU matmul.
+# ---------------------------------------------------------------------------
+
+
+def _bmm_kernel(a_ref, b_ref, o_ref):
+    o_ref[...] = jnp.einsum(
+        "bij,bjk->bik", a_ref[...], b_ref[...], preferred_element_type=jnp.float32
+    )
+
+
+def batched_matmul(a: jax.Array, b: jax.Array) -> jax.Array:
+    bsz, h, _ = a.shape
+    bm = _tile(bsz, 8)  # small batch tile: each step is already an HxH matmul
+    grid = (bsz // bm,)
+    return pl.pallas_call(
+        _bmm_kernel,
+        grid=grid,
+        in_specs=[
+            pl.BlockSpec((bm, h, h), lambda i: (i, 0, 0)),
+            pl.BlockSpec((bm, h, h), lambda i: (i, 0, 0)),
+        ],
+        out_specs=pl.BlockSpec((bm, h, h), lambda i: (i, 0, 0)),
+        out_shape=jax.ShapeDtypeStruct((bsz, h, h), jnp.float32),
+        interpret=_INTERPRET,
+    )(a, b)
+
+
+# ---------------------------------------------------------------------------
+# VMEM / MXU accounting used by DESIGN.md §Perf (estimates for a real-TPU
+# build; interpret mode gives no hardware timing).
+# ---------------------------------------------------------------------------
+
+
+@functools.lru_cache(maxsize=None)
+def vmem_bytes_dual_affine(batch: int, d: int, h: int, n: int) -> int:
+    """Per-program VMEM footprint of the dual_affine kernel tiles (f32)."""
+    bm, bn = _tile(batch, _MAX_BM), _tile(n, _MAX_BN)
+    words = bm * d + bm * h + d * bn + h * bn + bn + bm * bn
+    return 4 * words
+
+
+@functools.lru_cache(maxsize=None)
+def mxu_utilization_estimate(batch: int, d: int) -> float:
+    """Fraction of 128x128 MXU lanes active for a [bm, d] x [d, bn] tile."""
+    bm = _tile(batch, _MAX_BM)
+    rows = min(bm, 128) / 128.0
+    cols = min(d, 128) / 128.0
+    return rows * cols

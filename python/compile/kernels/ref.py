@@ -1,0 +1,111 @@
+"""Pure-jnp oracles for every Pallas kernel and fused cell in ED-Batch.
+
+These are the correctness ground truth: ``python/tests`` asserts the Pallas
+kernels (``pallas_ops``) and the lowered cell functions (``model``) match
+these to float32 tolerance across a hypothesis-driven sweep of shapes.
+"""
+
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+
+def affine(x, w, b):
+    return x @ w + b
+
+
+def dual_affine(x, h, wx, wh, b):
+    return x @ wx + h @ wh + b
+
+
+def lstm_pointwise(gates, c):
+    h = c.shape[-1]
+    i = jax.nn.sigmoid(gates[:, 0:h])
+    f = jax.nn.sigmoid(gates[:, h : 2 * h])
+    g = jnp.tanh(gates[:, 2 * h : 3 * h])
+    o = jax.nn.sigmoid(gates[:, 3 * h : 4 * h])
+    c_new = f * c + i * g
+    return o * jnp.tanh(c_new), c_new
+
+
+def lstm_cell(x, h, c, wx, wh, b):
+    gates = dual_affine(x, h, wx, wh, b)
+    return lstm_pointwise(gates, c)
+
+
+def treelstm_pointwise(gates, c_l, c_r):
+    h = c_l.shape[-1]
+    i = jax.nn.sigmoid(gates[:, 0:h])
+    f_l = jax.nn.sigmoid(gates[:, h : 2 * h])
+    f_r = jax.nn.sigmoid(gates[:, 2 * h : 3 * h])
+    g = jnp.tanh(gates[:, 3 * h : 4 * h])
+    o = jax.nn.sigmoid(gates[:, 4 * h : 5 * h])
+    c_new = f_l * c_l + f_r * c_r + i * g
+    return o * jnp.tanh(c_new), c_new
+
+
+def treelstm_internal(h_l, h_r, c_l, c_r, u_l, u_r, b):
+    gates = h_l @ u_l + h_r @ u_r + b
+    return treelstm_pointwise(gates, c_l, c_r)
+
+
+def treelstm_leaf(x, wx, b):
+    """Leaf cell: input-only gates (no forget path — no children)."""
+    hdim = wx.shape[1] // 3
+    gates = x @ wx + b
+    i = jax.nn.sigmoid(gates[:, 0:hdim])
+    g = jnp.tanh(gates[:, hdim : 2 * hdim])
+    o = jax.nn.sigmoid(gates[:, 2 * hdim : 3 * hdim])
+    c_new = i * g
+    return o * jnp.tanh(c_new), c_new
+
+
+def gru_pointwise(rz, nx, nh, h):
+    hd = h.shape[-1]
+    r = jax.nn.sigmoid(rz[:, 0:hd])
+    z = jax.nn.sigmoid(rz[:, hd : 2 * hd])
+    n = jnp.tanh(nx + r * nh)
+    return (1.0 - z) * n + z * h
+
+
+def gru_cell(x, h, w_rz_x, w_rz_h, b_rz, w_n_x, w_n_h, b_n):
+    rz = x @ w_rz_x + h @ w_rz_h + b_rz
+    nx = x @ w_n_x + b_n
+    nh = h @ w_n_h
+    return gru_pointwise(rz, nx, nh, h)
+
+
+def treegru_internal(h_l, h_r, u_rz_l, u_rz_r, b_rz, u_n_l, u_n_r, b_n):
+    """Binary TreeGRU: children hidden states combined GRU-style.
+
+    r_l, r_r, z from the joint affine; candidate uses reset-gated children;
+    new h interpolates between the candidate and the mean child state.
+    """
+    hd = h_l.shape[-1]
+    rz = h_l @ u_rz_l + h_r @ u_rz_r + b_rz  # [B, 3H] -> r_l, r_r, z
+    r_l = jax.nn.sigmoid(rz[:, 0:hd])
+    r_r = jax.nn.sigmoid(rz[:, hd : 2 * hd])
+    z = jax.nn.sigmoid(rz[:, 2 * hd : 3 * hd])
+    n = jnp.tanh((r_l * h_l) @ u_n_l + (r_r * h_r) @ u_n_r + b_n)
+    h_bar = 0.5 * (h_l + h_r)
+    return (1.0 - z) * n + z * h_bar
+
+
+def treegru_leaf(x, wx, b):
+    return jnp.tanh(x @ wx + b)
+
+
+def mv_cell(h_l, h_r, m_l, m_r, w_v, b_v, w_m, b_m):
+    """MV-RNN (Socher et al. 2012) combine step.
+
+    Each constituent carries a vector h [H] and a matrix M [H, H]:
+      h' = tanh([M_r h_l ; M_l h_r] @ W_v + b_v)
+      M' = W_m applied to the stacked child matrices (per-element matmuls)
+    """
+    cross_l = jnp.einsum("bij,bj->bi", m_r, h_l)
+    cross_r = jnp.einsum("bij,bj->bi", m_l, h_r)
+    h_new = jnp.tanh(jnp.concatenate([cross_l, cross_r], axis=-1) @ w_v + b_v)
+    stacked = jnp.concatenate([m_l, m_r], axis=1)  # [B, 2H, H]
+    m_new = jnp.einsum("ij,bjk->bik", w_m, stacked) + b_m
+    return h_new, m_new

@@ -1,0 +1,165 @@
+"""Layer-2 JAX cell definitions for ED-Batch.
+
+Each function here is one *batched cell step* — the unit the rust coordinator
+invokes after its FSM batching pass groups dataflow-graph nodes of one type.
+The affine/pointwise hot-spots go through the Layer-1 Pallas kernels in
+``kernels.pallas_ops`` so everything lowers into a single HLO module per
+(cell, hidden size, batch bucket), AOT-compiled by ``aot.py`` and executed
+from rust via PJRT.
+
+Conventions (all float32):
+  * batch dim ``B`` leads everywhere,
+  * embedding size == hidden size ``H`` (the paper's "model size"),
+  * weights are module *parameters* of the lowered computation so one
+    artifact serves any weight values.
+"""
+
+from __future__ import annotations
+
+from typing import Callable, Dict, List, Tuple
+
+import jax
+import jax.numpy as jnp
+
+from .kernels import pallas_ops as pk
+
+
+# ---------------------------------------------------------------------------
+# Cell step functions (return tuples — lowered with return_tuple=True).
+# ---------------------------------------------------------------------------
+
+
+def lstm_step(x, h, c, wx, wh, b):
+    """Fused LSTM cell: one dual-affine Pallas matmul + fused pointwise."""
+    gates = pk.dual_affine(x, h, wx, wh, b)
+    h_new, c_new = pk.lstm_pointwise(gates, c)
+    return h_new, c_new
+
+
+def gru_step(x, h, w_rz_x, w_rz_h, b_rz, w_n_x, w_n_h, b_n):
+    """Fused GRU cell: r/z affine + candidate affines + fused pointwise."""
+    rz = pk.dual_affine(x, h, w_rz_x, w_rz_h, b_rz)
+    nx = pk.affine(x, w_n_x, b_n)
+    nh = pk.affine(h, w_n_h, jnp.zeros((w_n_h.shape[1],), jnp.float32))
+    h_new = pk.gru_pointwise(rz, nx, nh, h)
+    return (h_new,)
+
+
+def treelstm_internal(h_l, h_r, c_l, c_r, u_l, u_r, b):
+    """Binary N-ary TreeLSTM internal node (Tai et al. 2015)."""
+    gates = pk.dual_affine(h_l, h_r, u_l, u_r, b)  # [B, 5H]
+    h_new, c_new = pk.treelstm_pointwise(gates, c_l, c_r)
+    return h_new, c_new
+
+
+def treelstm_leaf(x, wx, b):
+    """TreeLSTM leaf node: input-only i/g/o gates."""
+    hdim = wx.shape[1] // 3
+    gates = pk.affine(x, wx, b)
+    i = jax.nn.sigmoid(gates[:, 0:hdim])
+    g = jnp.tanh(gates[:, hdim : 2 * hdim])
+    o = jax.nn.sigmoid(gates[:, 2 * hdim : 3 * hdim])
+    c_new = i * g
+    return o * jnp.tanh(c_new), c_new
+
+
+def treegru_internal(h_l, h_r, u_rz_l, u_rz_r, b_rz, u_n_l, u_n_r, b_n):
+    """Binary TreeGRU internal node."""
+    hd = h_l.shape[-1]
+    rz = pk.dual_affine(h_l, h_r, u_rz_l, u_rz_r, b_rz)  # [B, 3H]
+    r_l = jax.nn.sigmoid(rz[:, 0:hd])
+    r_r = jax.nn.sigmoid(rz[:, hd : 2 * hd])
+    z = jax.nn.sigmoid(rz[:, 2 * hd : 3 * hd])
+    zero = jnp.zeros((u_n_l.shape[1],), jnp.float32)
+    n = jnp.tanh(pk.affine(r_l * h_l, u_n_l, zero) + pk.affine(r_r * h_r, u_n_r, b_n))
+    h_bar = 0.5 * (h_l + h_r)
+    return ((1.0 - z) * n + z * h_bar,)
+
+
+def treegru_leaf(x, wx, b):
+    return (jnp.tanh(pk.affine(x, wx, b)),)
+
+
+def mv_cell(h_l, h_r, m_l, m_r, w_v, b_v, w_m, b_m):
+    """MV-RNN combine: vector via cross matrix-vector products, matrix via
+    a shared linear map over the stacked child matrices."""
+    cross_l = jnp.einsum("bij,bj->bi", m_r, h_l)
+    cross_r = jnp.einsum("bij,bj->bi", m_l, h_r)
+    h_new = jnp.tanh(
+        pk.affine(jnp.concatenate([cross_l, cross_r], axis=-1), w_v, b_v)
+    )
+    stacked = jnp.concatenate([m_l, m_r], axis=1)  # [B, 2H, H]
+    m_new = jnp.einsum("ij,bjk->bik", w_m, stacked) + b_m
+    return h_new, m_new
+
+
+def classifier(h, w, b):
+    """Output projection (tagger head / NMT logits — pre-softmax)."""
+    return (pk.affine(h, w, b),)
+
+
+# ---------------------------------------------------------------------------
+# Registry: cell name -> (fn, arg-shape builder, #outputs).
+# Shapes are functions of (batch B, hidden H); label space fixed small.
+# ---------------------------------------------------------------------------
+
+NUM_CLASSES = 32  # tagger label space / NMT vocab slice used by benchmarks
+
+CellSpec = Tuple[Callable, Callable[[int, int], List[Tuple[int, ...]]], int]
+
+CELLS: Dict[str, CellSpec] = {
+    "lstm": (
+        lstm_step,
+        lambda b, h: [(b, h), (b, h), (b, h), (h, 4 * h), (h, 4 * h), (4 * h,)],
+        2,
+    ),
+    "gru": (
+        gru_step,
+        lambda b, h: [
+            (b, h), (b, h),
+            (h, 2 * h), (h, 2 * h), (2 * h,),
+            (h, h), (h, h), (h,),
+        ],
+        1,
+    ),
+    "treelstm_internal": (
+        treelstm_internal,
+        lambda b, h: [
+            (b, h), (b, h), (b, h), (b, h),
+            (h, 5 * h), (h, 5 * h), (5 * h,),
+        ],
+        2,
+    ),
+    "treelstm_leaf": (
+        treelstm_leaf,
+        lambda b, h: [(b, h), (h, 3 * h), (3 * h,)],
+        2,
+    ),
+    "treegru_internal": (
+        treegru_internal,
+        lambda b, h: [
+            (b, h), (b, h),
+            (h, 3 * h), (h, 3 * h), (3 * h,),
+            (h, h), (h, h), (h,),
+        ],
+        1,
+    ),
+    "treegru_leaf": (
+        treegru_leaf,
+        lambda b, h: [(b, h), (h, h), (h,)],
+        1,
+    ),
+    "mv_cell": (
+        mv_cell,
+        lambda b, h: [
+            (b, h), (b, h), (b, h, h), (b, h, h),
+            (2 * h, h), (h,), (h, 2 * h), (h, h),
+        ],
+        2,
+    ),
+    "classifier": (
+        classifier,
+        lambda b, h: [(b, h), (h, NUM_CLASSES), (NUM_CLASSES,)],
+        1,
+    ),
+}

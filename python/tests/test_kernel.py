@@ -1,0 +1,142 @@
+"""Pallas kernels vs pure-jnp oracles — the core L1 correctness signal.
+
+Hypothesis sweeps the shape space (batch buckets x hidden sizes) and random
+seeds; every kernel must match ``ref`` to f32 tolerance.
+"""
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+from hypothesis import given, settings, strategies as st
+
+from compile.kernels import pallas_ops as pk
+from compile.kernels import ref
+
+BATCHES = [1, 2, 4, 8, 16, 64, 128, 256]
+HIDDENS = [32, 64, 128, 256]
+
+batch_st = st.sampled_from(BATCHES)
+hidden_st = st.sampled_from(HIDDENS)
+seed_st = st.integers(min_value=0, max_value=2**31 - 1)
+
+
+def rand(key, *shape):
+    return jax.random.normal(key, shape, dtype=jnp.float32)
+
+
+def keys(seed, n):
+    return jax.random.split(jax.random.PRNGKey(seed), n)
+
+
+def assert_close(a, b, atol=2e-5, rtol=2e-5):
+    np.testing.assert_allclose(np.asarray(a), np.asarray(b), atol=atol, rtol=rtol)
+
+
+# ---------------------------------------------------------------------------
+# affine / dual_affine
+# ---------------------------------------------------------------------------
+
+
+@settings(max_examples=20, deadline=None)
+@given(b=batch_st, h=hidden_st, seed=seed_st)
+def test_affine_matches_ref(b, h, seed):
+    k = keys(seed, 3)
+    x, w, bias = rand(k[0], b, h), rand(k[1], h, 4 * h), rand(k[2], 4 * h)
+    assert_close(pk.affine(x, w, bias), ref.affine(x, w, bias))
+
+
+@settings(max_examples=20, deadline=None)
+@given(b=batch_st, h=hidden_st, seed=seed_st)
+def test_dual_affine_matches_ref(b, h, seed):
+    k = keys(seed, 5)
+    x, hh = rand(k[0], b, h), rand(k[1], b, h)
+    wx, wh, bias = rand(k[2], h, 4 * h), rand(k[3], h, 4 * h), rand(k[4], 4 * h)
+    assert_close(
+        pk.dual_affine(x, hh, wx, wh, bias), ref.dual_affine(x, hh, wx, wh, bias)
+    )
+
+
+def test_affine_rectangular_tiles():
+    # Non-square: contraction 96, out 512 exercises the bn tiling path.
+    k = keys(7, 3)
+    x, w, bias = rand(k[0], 64, 96), rand(k[1], 96, 512), rand(k[2], 512)
+    assert_close(pk.affine(x, w, bias), ref.affine(x, w, bias))
+
+
+def test_affine_batch_one():
+    k = keys(11, 3)
+    x, w, bias = rand(k[0], 1, 32), rand(k[1], 32, 128), rand(k[2], 128)
+    assert_close(pk.affine(x, w, bias), ref.affine(x, w, bias))
+
+
+# ---------------------------------------------------------------------------
+# pointwise fusions
+# ---------------------------------------------------------------------------
+
+
+@settings(max_examples=20, deadline=None)
+@given(b=batch_st, h=hidden_st, seed=seed_st)
+def test_lstm_pointwise_matches_ref(b, h, seed):
+    k = keys(seed, 2)
+    gates, c = rand(k[0], b, 4 * h), rand(k[1], b, h)
+    h_k, c_k = pk.lstm_pointwise(gates, c)
+    h_r, c_r = ref.lstm_pointwise(gates, c)
+    assert_close(h_k, h_r)
+    assert_close(c_k, c_r)
+
+
+@settings(max_examples=20, deadline=None)
+@given(b=batch_st, h=hidden_st, seed=seed_st)
+def test_treelstm_pointwise_matches_ref(b, h, seed):
+    k = keys(seed, 3)
+    gates = rand(k[0], b, 5 * h)
+    cl, cr = rand(k[1], b, h), rand(k[2], b, h)
+    h_k, c_k = pk.treelstm_pointwise(gates, cl, cr)
+    h_r, c_r = ref.treelstm_pointwise(gates, cl, cr)
+    assert_close(h_k, h_r)
+    assert_close(c_k, c_r)
+
+
+@settings(max_examples=20, deadline=None)
+@given(b=batch_st, h=hidden_st, seed=seed_st)
+def test_gru_pointwise_matches_ref(b, h, seed):
+    k = keys(seed, 4)
+    rz, nx = rand(k[0], b, 2 * h), rand(k[1], b, h)
+    nh, hh = rand(k[2], b, h), rand(k[3], b, h)
+    assert_close(pk.gru_pointwise(rz, nx, nh, hh), ref.gru_pointwise(rz, nx, nh, hh))
+
+
+@settings(max_examples=10, deadline=None)
+@given(b=st.sampled_from([1, 2, 4, 8]), h=st.sampled_from([16, 32, 64]), seed=seed_st)
+def test_batched_matmul_matches_ref(b, h, seed):
+    k = keys(seed, 2)
+    a, bb = rand(k[0], b, h, h), rand(k[1], b, h, h)
+    assert_close(pk.batched_matmul(a, bb), jnp.einsum("bij,bjk->bik", a, bb),
+                 atol=1e-4, rtol=1e-4)
+
+
+# ---------------------------------------------------------------------------
+# tiling helper invariants
+# ---------------------------------------------------------------------------
+
+
+@given(dim=st.integers(min_value=1, max_value=4096), ceil=st.sampled_from([8, 128, 512]))
+@settings(max_examples=200, deadline=None)
+def test_tile_divides_and_bounded(dim, ceil):
+    t = pk._tile(dim, ceil)
+    assert 1 <= t <= ceil
+    assert dim % t == 0
+
+
+def test_vmem_budget_for_paper_sizes():
+    # All (batch, hidden) configs the benchmarks use must fit a 16 MiB VMEM.
+    for b in [1, 8, 32, 64, 128, 256]:
+        for h in [32, 64, 128, 256, 512]:
+            assert pk.vmem_bytes_dual_affine(b, h, h, 4 * h) <= 16 * 2**20, (b, h)
+
+
+def test_mxu_estimate_range():
+    for b in [1, 8, 128, 256]:
+        u = pk.mxu_utilization_estimate(b, 128)
+        assert 0.0 < u <= 1.0

@@ -1,0 +1,140 @@
+//! Micro-benchmarks for the L3 hot paths (criterion-style; our own harness
+//! since criterion is unavailable offline — see util::bench).
+//!
+//! Usage: `cargo bench --bench micro [-- <filter>]`; ED_BENCH_FAST=1 for a
+//! smoke run.
+
+use ed_batch::batching::agenda::AgendaPolicy;
+use ed_batch::batching::depth::DepthPolicy;
+use ed_batch::batching::fsm::{Encoding, FsmPolicy};
+use ed_batch::batching::oracle::SufficientConditionPolicy;
+use ed_batch::batching::run_policy;
+use ed_batch::exec::cpu_kernels;
+use ed_batch::graph::frontier::Frontier;
+use ed_batch::memory::planner::pq_plan;
+use ed_batch::pqtree::PqTree;
+use ed_batch::subgraph::SubgraphKind;
+use ed_batch::util::bench::{bb, Bencher};
+use ed_batch::util::json::Json;
+use ed_batch::util::rng::Rng;
+use ed_batch::workloads::{Workload, WorkloadKind};
+
+fn main() {
+    let mut b = Bencher::from_env("micro");
+
+    // --- graph / frontier -------------------------------------------------
+    let w = Workload::new(WorkloadKind::LatticeLstm, 64);
+    let mut rng = Rng::new(1);
+    let mut g = w.gen_batch(32, &mut rng);
+    g.freeze();
+    let nt = w.registry.num_types();
+
+    b.bench("graph_gen_batch32_lattice", || {
+        let mut rng = Rng::new(2);
+        bb(w.gen_batch(32, &mut rng).len())
+    });
+
+    b.bench("frontier_init_lattice32", || bb(Frontier::new(&g, nt)));
+
+    b.bench("frontier_full_drain_fsm_fallback", || {
+        let mut p = FsmPolicy::new(Encoding::Sort);
+        bb(run_policy(&g, nt, &mut p).num_batches())
+    });
+
+    b.bench("schedule_agenda_lattice32", || {
+        bb(run_policy(&g, nt, &mut AgendaPolicy::new(nt)).num_batches())
+    });
+
+    b.bench("schedule_depth_lattice32", || {
+        bb(run_policy(&g, nt, &mut DepthPolicy::new()).num_batches())
+    });
+
+    b.bench("schedule_sc_heuristic_lattice32", || {
+        bb(run_policy(&g, nt, &mut SufficientConditionPolicy).num_batches())
+    });
+
+    // --- FSM state encoding (the per-step runtime cost) -------------------
+    let f = Frontier::new(&g, nt);
+    let mut scratch = Vec::new();
+    b.bench("fsm_encode_sort", || {
+        Encoding::Sort.encode_into(&f, &mut scratch);
+        bb(scratch.len())
+    });
+
+    let mut policy = FsmPolicy::new(Encoding::Sort);
+    b.bench("fsm_state_intern_and_greedy", || bb(policy.greedy(&f)));
+
+    // --- PQ tree ------------------------------------------------------------
+    b.bench("pqtree_universal64_reduce20", || {
+        let mut t = PqTree::universal(64);
+        let mut r = Rng::new(3);
+        for _ in 0..20 {
+            let a = r.below(63) as u32;
+            bb(t.reduce(&[a, a + 1]));
+        }
+        bb(t.frontier().len())
+    });
+
+    let sg = SubgraphKind::LstmCell.build(64, 8);
+    let batches = sg.batch();
+    b.bench("pq_plan_lstm_cell", || bb(pq_plan(&batches, &sg.sizes).order.len()));
+
+    b.bench("subgraph_batch_extraction_lstm", || bb(sg.batch().len()));
+
+    // --- CPU kernels ---------------------------------------------------------
+    let a: Vec<f32> = (0..64 * 64).map(|i| (i % 13) as f32 * 0.01).collect();
+    let bm: Vec<f32> = (0..64 * 64).map(|i| (i % 7) as f32 * 0.02).collect();
+    let mut c = vec![0.0f32; 64 * 64];
+    b.bench("matmul_64x64x64", || {
+        cpu_kernels::matmul(&a, &bm, &mut c, 64, 64, 64);
+        bb(c[0])
+    });
+
+    let mut out = vec![0.0f32; 64 * 64];
+    b.bench("sigmoid_4096", || {
+        cpu_kernels::sigmoid(&a, &mut out);
+        bb(out[0])
+    });
+
+    // --- JSON (manifest parse path) ------------------------------------------
+    let manifest = std::fs::read_to_string("artifacts/manifest.json").unwrap_or_else(|_| {
+        r#"{"entries":[{"cell":"lstm","hidden":64,"batch":4,"file":"f","arg_shapes":[[4,64]],"num_outputs":2}]}"#
+            .to_string()
+    });
+    b.bench("json_parse_manifest", || bb(Json::parse(&manifest).unwrap()));
+
+    // --- PJRT execute (if artifacts present) ---------------------------------
+    if std::path::Path::new("artifacts/manifest.json").exists() {
+        let reg = ed_batch::runtime::ArtifactRegistry::load(
+            "artifacts",
+            Some(&|k: &ed_batch::runtime::manifest::ArtifactKey| {
+                k.hidden == 64 && k.cell == "lstm"
+            }),
+        )
+        .expect("registry");
+        for bucket in [1usize, 16, 64, 256] {
+            let compiled = reg.cell_for_batch("lstm", 64, bucket).unwrap();
+            let args: Vec<Vec<f32>> = compiled
+                .arg_shapes
+                .iter()
+                .map(|s| vec![0.1f32; s.iter().product()])
+                .collect();
+            b.bench(&format!("pjrt_lstm_h64_b{bucket}_reupload"), || {
+                bb(compiled.execute(&args).unwrap())
+            });
+            // hot path: weights staged on device once (§Perf iteration 1)
+            let staged: Vec<(Vec<f32>, Vec<usize>)> = args[3..]
+                .iter()
+                .zip(&compiled.arg_shapes[3..])
+                .map(|(a, s)| (a.clone(), s.clone()))
+                .collect();
+            let wbufs = compiled.stage_weights(&staged).unwrap();
+            let data = args[..3].to_vec();
+            b.bench(&format!("pjrt_lstm_h64_b{bucket}_cached_w"), || {
+                bb(compiled.execute_with_weights(&data, &wbufs).unwrap())
+            });
+        }
+    }
+
+    b.finish();
+}

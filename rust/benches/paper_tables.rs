@@ -1,0 +1,36 @@
+//! `cargo bench --bench paper_tables` — regenerates every paper table and
+//! figure via the benchsuite harnesses. ED_BENCH_FAST=1 (or --fast via
+//! `ed-batch bench`) runs reduced sweeps.
+
+use ed_batch::benchsuite::{self, BenchOpts};
+use ed_batch::util::cli::Args;
+
+fn main() {
+    let args = Args::from_env();
+    let mut opts = BenchOpts::from_args(&args);
+    if std::env::var("ED_BENCH_FAST").is_ok() {
+        opts.fast = true;
+    }
+    println!("# ED-Batch paper tables (fast={})", opts.fast);
+
+    benchsuite::fig9::run(&opts);
+    benchsuite::table2::run(&opts);
+    benchsuite::table3::run(&opts);
+    benchsuite::table4::run(&opts);
+
+    let has_artifacts = std::path::Path::new(&format!("{}/manifest.json", opts.artifacts_dir))
+        .exists();
+    if has_artifacts {
+        if let Err(e) = benchsuite::fig8::run(&opts) {
+            eprintln!("fig8 failed: {e:#}");
+        }
+        if let Err(e) = benchsuite::fig6::run(&opts) {
+            eprintln!("fig6 failed: {e:#}");
+        }
+        if let Err(e) = benchsuite::table5::run(&opts) {
+            eprintln!("table5 failed: {e:#}");
+        }
+    } else {
+        eprintln!("skipping fig6/fig8/table5: run `make artifacts` first");
+    }
+}

@@ -1,0 +1,139 @@
+//! Depth-based batching — TensorFlow Fold's heuristic (Looks et al. 2017).
+//!
+//! Operations of the same type at the same *topological depth* are batched
+//! together, depths executed in ascending order. The paper's Fig.1(b) shows
+//! why this is suboptimal on tree networks: output nodes at different
+//! depths land in different batches even though one batch would suffice.
+
+use crate::graph::frontier::Frontier;
+use crate::graph::{Graph, OpType};
+
+use super::Policy;
+
+pub struct DepthPolicy {
+    depths: Vec<u32>,
+}
+
+impl DepthPolicy {
+    pub fn new() -> Self {
+        DepthPolicy { depths: Vec::new() }
+    }
+}
+
+impl Default for DepthPolicy {
+    fn default() -> Self {
+        Self::new()
+    }
+}
+
+impl Policy for DepthPolicy {
+    fn reset(&mut self, graph: &Graph) {
+        self.depths = graph.depths();
+    }
+
+    fn next_type(&mut self, graph: &Graph, frontier: &Frontier) -> OpType {
+        // Among ready nodes, the minimum depth present; among those, the
+        // smallest type id — this reproduces "execute depth d, all types,
+        // then depth d+1" with a deterministic type order within a depth.
+        //
+        // Note a ready node always has depth <= any unexecuted node's depth
+        // along its own paths, so processing min-depth-first is exactly
+        // TF-Fold's schedule.
+        let mut best: Option<(u32, OpType)> = None;
+        for t in frontier.ready_types() {
+            // min depth among ready nodes of type t
+            let d = frontier_min_depth(graph, frontier, t, &self.depths);
+            match best {
+                None => best = Some((d, t)),
+                Some((bd, bt)) => {
+                    if d < bd || (d == bd && t < bt) {
+                        best = Some((d, t));
+                    }
+                }
+            }
+        }
+        best.expect("no ready types").1
+    }
+
+    fn pop_nodes(
+        &mut self,
+        graph: &Graph,
+        frontier: &mut crate::graph::frontier::Frontier,
+        t: OpType,
+    ) -> Vec<crate::graph::NodeId> {
+        // TF-Fold batches one (type, depth) group at a time.
+        let d = frontier_min_depth(graph, frontier, t, &self.depths);
+        let depths = &self.depths;
+        frontier.pop_batch_where(t, |n| depths[n.idx()] == d)
+    }
+}
+
+fn frontier_min_depth(
+    _graph: &Graph,
+    frontier: &Frontier,
+    t: OpType,
+    depths: &[u32],
+) -> u32 {
+    frontier
+        .ready_nodes(t)
+        .iter()
+        .map(|n| depths[n.idx()])
+        .min()
+        .unwrap_or(u32::MAX)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::batching::{run_policy, validate_schedule};
+    use crate::graph::{Graph, NodeId};
+
+    /// The paper's Fig.1 tree: depth-based needs 4 batches for the O nodes.
+    fn io_tree() -> Graph {
+        let (ti, to, tr) = (OpType(0), OpType(1), OpType(2));
+        let mut g = Graph::new();
+        let i0 = g.add(ti, vec![], 0);
+        let i1 = g.add(ti, vec![i0], 0);
+        let i2 = g.add(ti, vec![i1], 0);
+        let i3 = g.add(ti, vec![i2], 0);
+        let o0 = g.add(to, vec![i0], 0);
+        let o1 = g.add(to, vec![i1], 0);
+        let o2 = g.add(to, vec![i2], 0);
+        let o3 = g.add(to, vec![i3], 0);
+        let r0 = g.add(tr, vec![o0, o1], 0);
+        let r1 = g.add(tr, vec![r0, o2], 0);
+        g.add(tr, vec![r1, o3], 0);
+        g.freeze();
+        g
+    }
+
+    #[test]
+    fn depth_splits_output_nodes() {
+        let g = io_tree();
+        let s = run_policy(&g, 3, &mut DepthPolicy::new());
+        validate_schedule(&g, &s).unwrap();
+        // O nodes at depths 1..4 -> 4 separate O batches (Fig.1(b))
+        let o_batches = s.batches.iter().filter(|b| b.op == OpType(1)).count();
+        assert_eq!(o_batches, 4);
+        // strictly worse than the lower bound (8)
+        assert!(s.num_batches() > g.batch_lower_bound(3) as usize);
+    }
+
+    #[test]
+    fn depth_optimal_on_chains() {
+        // parallel chains of equal type: depth-based is optimal
+        let mut g = Graph::new();
+        for _ in 0..3 {
+            let mut prev: Option<NodeId> = None;
+            for _ in 0..4 {
+                let preds = prev.map(|p| vec![p]).unwrap_or_default();
+                prev = Some(g.add(OpType(0), preds, 0));
+            }
+        }
+        g.freeze();
+        let s = run_policy(&g, 1, &mut DepthPolicy::new());
+        validate_schedule(&g, &s).unwrap();
+        assert_eq!(s.num_batches(), 4);
+        assert!(s.batches.iter().all(|b| b.nodes.len() == 3));
+    }
+}

@@ -1,0 +1,388 @@
+//! FSM-based dynamic batching (paper §2.2) — the core contribution.
+//!
+//! The dataflow graph is encoded into a small discrete state via one of
+//! three encodings (§2.3):
+//!
+//! * `E_base(G)`  — the *set* of op types on the frontier,
+//! * `E_max(G)`   — `E_base` plus the most common frontier type,
+//! * `E_sort(G)`  — frontier types *sorted by ready count* (the strongest,
+//!   used by default in the paper's evaluation).
+//!
+//! A learned policy π maps state → next type to batch. States are
+//! hash-consed to dense ids so the inference-time lookup is a single hash
+//! probe into the Q-table (paper: "a lookup into stored Q functions in
+//! constant time").
+
+use rustc_hash::FxHashMap;
+
+use crate::graph::frontier::Frontier;
+use crate::graph::{Graph, OpType};
+use crate::util::json::Json;
+
+use super::Policy;
+
+#[derive(Clone, Copy, Debug, PartialEq, Eq, Hash)]
+pub enum Encoding {
+    Base,
+    Max,
+    Sort,
+}
+
+impl Encoding {
+    pub fn name(self) -> &'static str {
+        match self {
+            Encoding::Base => "base",
+            Encoding::Max => "max",
+            Encoding::Sort => "sort",
+        }
+    }
+
+    pub fn from_name(s: &str) -> Option<Encoding> {
+        match s {
+            "base" => Some(Encoding::Base),
+            "max" => Some(Encoding::Max),
+            "sort" => Some(Encoding::Sort),
+            _ => None,
+        }
+    }
+
+    /// Encode the frontier into a canonical key.
+    /// Reuses `scratch` to stay allocation-free on the hot path.
+    pub fn encode_into(self, frontier: &Frontier, scratch: &mut Vec<u16>) {
+        scratch.clear();
+        match self {
+            Encoding::Base => {
+                for t in frontier.ready_types() {
+                    scratch.push(t.0);
+                }
+            }
+            Encoding::Max => {
+                let mut max_t = 0u16;
+                let mut max_c = 0usize;
+                for t in frontier.ready_types() {
+                    scratch.push(t.0);
+                    let c = frontier.ready_count(t);
+                    if c > max_c {
+                        max_c = c;
+                        max_t = t.0;
+                    }
+                }
+                scratch.push(max_t);
+            }
+            Encoding::Sort => {
+                let mut tc: Vec<(u16, usize)> = frontier
+                    .ready_types()
+                    .into_iter()
+                    .map(|t| (t.0, frontier.ready_count(t)))
+                    .collect();
+                // descending count, ties ascending type id
+                tc.sort_by(|a, b| b.1.cmp(&a.1).then(a.0.cmp(&b.0)));
+                for (t, _) in tc {
+                    scratch.push(t);
+                }
+            }
+        }
+    }
+}
+
+/// Hash-consing interner: canonical state key -> dense `StateId`.
+#[derive(Clone, Debug, Default)]
+pub struct StateSpace {
+    ids: FxHashMap<Vec<u16>, u32>,
+}
+
+pub type StateId = u32;
+
+impl StateSpace {
+    pub fn new() -> Self {
+        Self::default()
+    }
+
+    pub fn intern(&mut self, key: &[u16]) -> StateId {
+        if let Some(&id) = self.ids.get(key) {
+            return id;
+        }
+        let id = self.ids.len() as u32;
+        self.ids.insert(key.to_vec(), id);
+        id
+    }
+
+    pub fn len(&self) -> usize {
+        self.ids.len()
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.ids.is_empty()
+    }
+}
+
+/// The learned FSM: Q(s, a) table + encoding. Inference = argmax_a Q(s, a)
+/// over the ready types; unseen states fall back to the sufficient-condition
+/// heuristic (so the FSM generalizes to unseen frontier patterns).
+#[derive(Clone, Debug)]
+pub struct FsmPolicy {
+    pub encoding: Encoding,
+    pub states: StateSpace,
+    pub q: FxHashMap<(StateId, u16), f64>,
+    scratch: Vec<u16>,
+    /// count of next_type calls that missed the Q-table (diagnostics)
+    pub fallback_hits: u64,
+}
+
+impl FsmPolicy {
+    pub fn new(encoding: Encoding) -> Self {
+        FsmPolicy {
+            encoding,
+            states: StateSpace::new(),
+            q: FxHashMap::default(),
+            scratch: Vec::new(),
+            fallback_hits: 0,
+        }
+    }
+
+    /// Current state id for the frontier (interning new states on the fly).
+    pub fn state_of(&mut self, frontier: &Frontier) -> StateId {
+        self.encoding.encode_into(frontier, &mut self.scratch);
+        let key = std::mem::take(&mut self.scratch);
+        let id = self.states.intern(&key);
+        self.scratch = key;
+        id
+    }
+
+    pub fn q_value(&self, s: StateId, a: OpType) -> Option<f64> {
+        self.q.get(&(s, a.0)).copied()
+    }
+
+    pub fn set_q(&mut self, s: StateId, a: OpType, v: f64) {
+        self.q.insert((s, a.0), v);
+    }
+
+    /// Greedy action: argmax over ready types of Q(s, a); if the state has
+    /// no Q entries (unseen at training time), use the Lemma-1 ratio.
+    ///
+    /// Lemma-1 guard: if some ready type has readiness ratio exactly 1,
+    /// committing it first never lengthens the optimal batch sequence
+    /// (Appendix A.2), so the choice set is restricted to those types —
+    /// this shields inference from noisy Q estimates on provably-safe
+    /// decisions while leaving the learned policy in charge everywhere
+    /// the theorem is silent.
+    pub fn greedy(&mut self, frontier: &Frontier) -> OpType {
+        let ready = frontier.ready_types();
+        let safe: Vec<OpType> = ready
+            .iter()
+            .copied()
+            .filter(|&t| (frontier.reward_ratio(t) - 1.0).abs() < 1e-12)
+            .collect();
+        let candidates: &[OpType] = if safe.is_empty() { &ready } else { &safe };
+
+        let s = self.state_of(frontier);
+        let mut best: Option<(f64, OpType)> = None;
+        let mut any = false;
+        for &t in candidates {
+            if let Some(q) = self.q_value(s, t) {
+                any = true;
+                match best {
+                    None => best = Some((q, t)),
+                    Some((bq, bt)) => {
+                        if q > bq || (q == bq && t < bt) {
+                            best = Some((q, t));
+                        }
+                    }
+                }
+            }
+        }
+        if !any {
+            self.fallback_hits += 1;
+            if safe.is_empty() {
+                return fallback_choice(frontier);
+            }
+            // among safe types: largest ready batch, ties by type id
+            return safe
+                .iter()
+                .copied()
+                .max_by_key(|&t| (frontier.ready_count(t), std::cmp::Reverse(t.0)))
+                .unwrap();
+        }
+        best.unwrap().1
+    }
+
+    // -- persistence ------------------------------------------------------
+
+    /// Serialize the learned policy (encoding + state keys + Q values).
+    pub fn to_json(&self) -> Json {
+        let mut states: Vec<(&Vec<u16>, u32)> =
+            self.states.ids.iter().map(|(k, &v)| (k, v)).collect();
+        states.sort_by_key(|&(_, id)| id);
+        let state_arr: Vec<Json> = states
+            .iter()
+            .map(|(k, _)| Json::Arr(k.iter().map(|&t| Json::from(t as u64)).collect()))
+            .collect();
+        let q_arr: Vec<Json> = self
+            .q
+            .iter()
+            .map(|(&(s, a), &v)| {
+                Json::Arr(vec![
+                    Json::from(s as u64),
+                    Json::from(a as u64),
+                    Json::from(v),
+                ])
+            })
+            .collect();
+        Json::obj(vec![
+            ("encoding", Json::from(self.encoding.name())),
+            ("states", Json::Arr(state_arr)),
+            ("q", Json::Arr(q_arr)),
+        ])
+    }
+
+    pub fn from_json(j: &Json) -> Result<FsmPolicy, String> {
+        let enc = Encoding::from_name(
+            j.get("encoding")
+                .and_then(|e| e.as_str())
+                .ok_or("missing encoding")?,
+        )
+        .ok_or("bad encoding")?;
+        let mut p = FsmPolicy::new(enc);
+        for key in j.get("states").and_then(|s| s.as_arr()).ok_or("states")? {
+            let k: Vec<u16> = key
+                .as_arr()
+                .ok_or("state key")?
+                .iter()
+                .map(|v| v.as_u64().unwrap_or(0) as u16)
+                .collect();
+            p.states.intern(&k);
+        }
+        for row in j.get("q").and_then(|s| s.as_arr()).ok_or("q")? {
+            let r = row.as_arr().ok_or("q row")?;
+            if r.len() != 3 {
+                return Err("q row len".into());
+            }
+            p.q.insert(
+                (
+                    r[0].as_u64().ok_or("q s")? as u32,
+                    r[1].as_u64().ok_or("q a")? as u16,
+                ),
+                r[2].as_f64().ok_or("q v")?,
+            );
+        }
+        Ok(p)
+    }
+}
+
+/// Lemma-1-guided fallback for unseen states: maximize the readiness ratio,
+/// break ties by larger ready count, then smaller type id.
+pub fn fallback_choice(frontier: &Frontier) -> OpType {
+    let mut best: Option<(f64, usize, OpType)> = None;
+    for t in frontier.ready_types() {
+        let ratio = frontier.reward_ratio(t);
+        let count = frontier.ready_count(t);
+        let better = match &best {
+            None => true,
+            Some((br, bc, bt)) => {
+                ratio > *br
+                    || (ratio == *br && count > *bc)
+                    || (ratio == *br && count == *bc && t < *bt)
+            }
+        };
+        if better {
+            best = Some((ratio, count, t));
+        }
+    }
+    best.expect("no ready types").2
+}
+
+impl Policy for FsmPolicy {
+    fn next_type(&mut self, _graph: &Graph, frontier: &Frontier) -> OpType {
+        self.greedy(frontier)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::graph::Graph;
+
+    fn io_tree() -> Graph {
+        let (ti, to, tr) = (OpType(0), OpType(1), OpType(2));
+        let mut g = Graph::new();
+        let i0 = g.add(ti, vec![], 0);
+        let i1 = g.add(ti, vec![i0], 0);
+        let i2 = g.add(ti, vec![i1], 0);
+        let i3 = g.add(ti, vec![i2], 0);
+        let o0 = g.add(to, vec![i0], 0);
+        let o1 = g.add(to, vec![i1], 0);
+        let o2 = g.add(to, vec![i2], 0);
+        let o3 = g.add(to, vec![i3], 0);
+        let r0 = g.add(tr, vec![o0, o1], 0);
+        let r1 = g.add(tr, vec![r0, o2], 0);
+        g.add(tr, vec![r1, o3], 0);
+        g.freeze();
+        g
+    }
+
+    #[test]
+    fn encodings_differ_in_resolution() {
+        let g = io_tree();
+        let mut f = Frontier::new(&g, 3);
+        f.execute_type(&g, OpType(0)); // now frontier = {I, O}
+        let mut base = Vec::new();
+        Encoding::Base.encode_into(&f, &mut base);
+        assert_eq!(base, vec![0, 1]);
+        let mut maxk = Vec::new();
+        Encoding::Max.encode_into(&f, &mut maxk);
+        assert_eq!(maxk, vec![0, 1, 0]); // both count 1, tie -> type 0
+        let mut sortk = Vec::new();
+        Encoding::Sort.encode_into(&f, &mut sortk);
+        assert_eq!(sortk, vec![0, 1]); // equal counts -> type order
+    }
+
+    #[test]
+    fn state_interning_stable() {
+        let mut ss = StateSpace::new();
+        let a = ss.intern(&[1, 2, 3]);
+        let b = ss.intern(&[1, 2, 3]);
+        let c = ss.intern(&[1, 2]);
+        assert_eq!(a, b);
+        assert_ne!(a, c);
+        assert_eq!(ss.len(), 2);
+    }
+
+    #[test]
+    fn fallback_follows_lemma1_on_io_tree() {
+        // with an empty Q table, the FSM policy follows the sufficient
+        // condition and finds the optimal 8-batch schedule.
+        let g = io_tree();
+        let mut p = FsmPolicy::new(Encoding::Sort);
+        let s = crate::batching::run_policy(&g, 3, &mut p);
+        crate::batching::validate_schedule(&g, &s).unwrap();
+        assert_eq!(s.num_batches() as u64, g.batch_lower_bound(3));
+        assert!(p.fallback_hits > 0);
+    }
+
+    #[test]
+    fn q_table_overrides_fallback() {
+        let g = io_tree();
+        let mut p = FsmPolicy::new(Encoding::Sort);
+        // state after nothing executed: only I ready -> state {I}
+        let f = Frontier::new(&g, 3);
+        let s0 = p.state_of(&f);
+        p.set_q(s0, OpType(0), 1.0);
+        let choice = p.greedy(&f);
+        assert_eq!(choice, OpType(0));
+    }
+
+    #[test]
+    fn json_roundtrip() {
+        let mut p = FsmPolicy::new(Encoding::Sort);
+        p.states.intern(&[0, 1]);
+        p.states.intern(&[1]);
+        p.set_q(0, OpType(0), 0.5);
+        p.set_q(1, OpType(1), -2.0);
+        let j = p.to_json();
+        let p2 = FsmPolicy::from_json(&j).unwrap();
+        assert_eq!(p2.encoding, Encoding::Sort);
+        assert_eq!(p2.states.len(), 2);
+        assert_eq!(p2.q_value(0, OpType(0)), Some(0.5));
+        assert_eq!(p2.q_value(1, OpType(1)), Some(-2.0));
+    }
+}

@@ -1,0 +1,182 @@
+//! Dynamic batching policies (paper §2) — Alg.1 with pluggable "next type"
+//! choosers:
+//!
+//! * [`depth`] — TF-Fold's depth-based batching (baseline),
+//! * [`agenda`] — DyNet's agenda-based batching (baseline),
+//! * [`fsm`] — the paper's FSM policy with `E_base` / `E_max` / `E_sort`
+//!   state encodings (learned via [`crate::rl`]),
+//! * [`oracle`] — the sufficient-condition heuristic (Lemma 1) and the
+//!   Appendix-A.3 lower bound,
+//! * [`cortex_like`] — a Cortex-style specialized static-recursion baseline
+//!   for Table 5.
+
+pub mod agenda;
+pub mod cortex_like;
+pub mod depth;
+pub mod fsm;
+pub mod oracle;
+
+use crate::graph::frontier::Frontier;
+use crate::graph::{Graph, NodeId, OpType};
+
+/// One executed batch: an op type + the nodes grouped into it.
+#[derive(Clone, Debug)]
+pub struct Batch {
+    pub op: OpType,
+    pub nodes: Vec<NodeId>,
+}
+
+/// A batching schedule for a whole graph.
+#[derive(Clone, Debug, Default)]
+pub struct Schedule {
+    pub batches: Vec<Batch>,
+}
+
+impl Schedule {
+    pub fn num_batches(&self) -> usize {
+        self.batches.len()
+    }
+
+    pub fn num_nodes(&self) -> usize {
+        self.batches.iter().map(|b| b.nodes.len()).sum()
+    }
+
+    /// The type sequence (the paper's "batch sequence" s ∈ T*).
+    pub fn type_sequence(&self) -> Vec<OpType> {
+        self.batches.iter().map(|b| b.op).collect()
+    }
+}
+
+/// A policy chooses the next op type to batch given the current frontier
+/// (Alg.1 line 3). Implementations must only return types with ready nodes.
+pub trait Policy {
+    fn next_type(&mut self, graph: &Graph, frontier: &Frontier) -> OpType;
+
+    /// Select the node subset for the chosen type. The default (Alg.1
+    /// line 4) takes *all* ready nodes of the type; the depth-based
+    /// baseline overrides this to take only one (type, depth) group.
+    fn pop_nodes(&mut self, graph: &Graph, frontier: &mut Frontier, t: OpType) -> Vec<NodeId> {
+        let _ = graph;
+        frontier.pop_batch(t)
+    }
+
+    /// Hook called after each batch commits (stateful baselines use it).
+    fn observe_batch(&mut self, _graph: &Graph, _batch: &Batch) {}
+
+    /// Reset per-graph state before a new graph is scheduled.
+    fn reset(&mut self, _graph: &Graph) {}
+}
+
+/// Alg.1: run a policy to completion over `graph`, producing the schedule.
+/// `graph` must be frozen.
+pub fn run_policy<P: Policy + ?Sized>(
+    graph: &Graph,
+    num_types: usize,
+    policy: &mut P,
+) -> Schedule {
+    policy.reset(graph);
+    let mut frontier = Frontier::new(graph, num_types);
+    let mut schedule = Schedule::default();
+    while !frontier.is_done() {
+        let t = policy.next_type(graph, &frontier);
+        debug_assert!(
+            frontier.ready_count(t) > 0,
+            "policy chose type {t:?} with empty frontier"
+        );
+        let nodes = policy.pop_nodes(graph, &mut frontier, t);
+        debug_assert!(!nodes.is_empty(), "policy selected an empty batch");
+        frontier.commit(graph, &nodes);
+        let batch = Batch { op: t, nodes };
+        policy.observe_batch(graph, &batch);
+        schedule.batches.push(batch);
+    }
+    schedule
+}
+
+/// Validate that a schedule is a legal execution of `graph` (tests).
+pub fn validate_schedule(graph: &Graph, schedule: &Schedule) -> Result<(), String> {
+    let mut done = vec![false; graph.len()];
+    for (bi, b) in schedule.batches.iter().enumerate() {
+        for &n in &b.nodes {
+            if graph.op(n) != b.op {
+                return Err(format!("batch {bi}: node {n:?} type mismatch"));
+            }
+            for p in &graph.node(n).preds {
+                if !done[p.idx()] {
+                    return Err(format!("batch {bi}: node {n:?} dep {p:?} not done"));
+                }
+            }
+        }
+        for &n in &b.nodes {
+            if done[n.idx()] {
+                return Err(format!("batch {bi}: node {n:?} executed twice"));
+            }
+            done[n.idx()] = true;
+        }
+    }
+    if done.iter().all(|&d| d) {
+        Ok(())
+    } else {
+        Err(format!(
+            "{} nodes never executed",
+            done.iter().filter(|&&d| !d).count()
+        ))
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::graph::Graph;
+
+    struct FirstReady;
+    impl Policy for FirstReady {
+        fn next_type(&mut self, _g: &Graph, f: &Frontier) -> OpType {
+            f.ready_types()[0]
+        }
+    }
+
+    fn chain(n: usize) -> Graph {
+        let mut g = Graph::new();
+        let mut prev = None;
+        for _ in 0..n {
+            let preds = prev.map(|p| vec![p]).unwrap_or_default();
+            prev = Some(g.add(OpType(0), preds, 0));
+        }
+        g.freeze();
+        g
+    }
+
+    #[test]
+    fn run_policy_drains_graph() {
+        let g = chain(5);
+        let s = run_policy(&g, 1, &mut FirstReady);
+        assert_eq!(s.num_batches(), 5);
+        assert_eq!(s.num_nodes(), 5);
+        validate_schedule(&g, &s).unwrap();
+    }
+
+    #[test]
+    fn validate_catches_dep_violation() {
+        let g = chain(2);
+        let bad = Schedule {
+            batches: vec![Batch {
+                op: OpType(0),
+                nodes: vec![NodeId(1), NodeId(0)],
+            }],
+        };
+        assert!(validate_schedule(&g, &bad).is_err());
+    }
+
+    #[test]
+    fn validate_catches_missing_nodes() {
+        let g = chain(2);
+        let bad = Schedule {
+            batches: vec![Batch {
+                op: OpType(0),
+                nodes: vec![NodeId(0)],
+            }],
+        };
+        assert!(validate_schedule(&g, &bad).is_err());
+    }
+}

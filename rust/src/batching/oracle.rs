@@ -1,0 +1,153 @@
+//! The sufficient-condition-guided heuristic (paper §5.3) and lower-bound
+//! utilities (Appendix A.3).
+//!
+//! The heuristic greedily picks the ready type maximizing the Lemma-1
+//! ratio `|Frontier_t(G)| / |Frontier(G^t)|`. The paper uses it as the
+//! quality yardstick for the learned FSM ("the FSM-based algorithm can be
+//! treated as a time-efficient distiller of this heuristic") — it matches
+//! the best FSM batch counts but recomputing the ratio per step is too
+//! slow for the runtime path (here it is O(T) per step thanks to the
+//! incremental frontier, but in general it requires graph analysis that
+//! DyNet-style runtimes cannot afford per node).
+
+use crate::graph::frontier::Frontier;
+use crate::graph::{Graph, OpType};
+
+use super::{fsm::fallback_choice, Policy, Schedule};
+
+/// Greedy Lemma-1 policy.
+#[derive(Default)]
+pub struct SufficientConditionPolicy;
+
+impl Policy for SufficientConditionPolicy {
+    fn next_type(&mut self, _graph: &Graph, frontier: &Frontier) -> OpType {
+        fallback_choice(frontier)
+    }
+}
+
+/// Brute-force optimal batching via IDA*-style DFS over type sequences.
+/// Exponential — only for tiny graphs in tests (verifies Lemma 1 and the
+/// lower bound's tightness on the unit-test topologies).
+pub fn optimal_batch_count(graph: &Graph, num_types: usize, limit: usize) -> Option<usize> {
+    fn dfs(
+        graph: &Graph,
+        num_types: usize,
+        frontier: &Frontier,
+        depth: usize,
+        best: &mut usize,
+    ) {
+        if frontier.is_done() {
+            *best = (*best).min(depth);
+            return;
+        }
+        if depth + 1 >= *best {
+            return; // bound
+        }
+        for t in frontier.ready_types() {
+            let mut f = frontier.clone();
+            f.execute_type(graph, t);
+            dfs(graph, num_types, &f, depth + 1, best);
+        }
+    }
+    let f = Frontier::new(graph, num_types);
+    let mut best = limit + 1;
+    dfs(graph, num_types, &f, 0, &mut best);
+    (best <= limit).then_some(best)
+}
+
+/// Count batches per type in a schedule (bench reporting).
+pub fn batches_per_type(schedule: &Schedule, num_types: usize) -> Vec<usize> {
+    let mut v = vec![0; num_types];
+    for b in &schedule.batches {
+        v[b.op.0 as usize] += 1;
+    }
+    v
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::batching::{run_policy, validate_schedule};
+    use crate::graph::Graph;
+
+    fn io_tree() -> Graph {
+        let (ti, to, tr) = (OpType(0), OpType(1), OpType(2));
+        let mut g = Graph::new();
+        let i0 = g.add(ti, vec![], 0);
+        let i1 = g.add(ti, vec![i0], 0);
+        let i2 = g.add(ti, vec![i1], 0);
+        let i3 = g.add(ti, vec![i2], 0);
+        let o0 = g.add(to, vec![i0], 0);
+        let o1 = g.add(to, vec![i1], 0);
+        let o2 = g.add(to, vec![i2], 0);
+        let o3 = g.add(to, vec![i3], 0);
+        let r0 = g.add(tr, vec![o0, o1], 0);
+        let r1 = g.add(tr, vec![r0, o2], 0);
+        g.add(tr, vec![r1, o3], 0);
+        g.freeze();
+        g
+    }
+
+    #[test]
+    fn sc_heuristic_optimal_on_io_tree() {
+        let g = io_tree();
+        let s = run_policy(&g, 3, &mut SufficientConditionPolicy);
+        validate_schedule(&g, &s).unwrap();
+        assert_eq!(s.num_batches() as u64, g.batch_lower_bound(3));
+    }
+
+    #[test]
+    fn brute_force_agrees_with_lower_bound_on_io_tree() {
+        let g = io_tree();
+        let opt = optimal_batch_count(&g, 3, 12).unwrap();
+        assert_eq!(opt as u64, g.batch_lower_bound(3));
+    }
+
+    #[test]
+    fn sc_heuristic_matches_brute_force_on_small_random_graphs() {
+        use crate::util::rng::Rng;
+        let mut rng = Rng::new(17);
+        for case in 0..20 {
+            // random small DAG with 3 types
+            let mut g = Graph::new();
+            let n = 4 + rng.usize_below(6);
+            for i in 0..n {
+                let t = OpType(rng.below(3) as u16);
+                let mut preds = Vec::new();
+                if i > 0 {
+                    let np = rng.usize_below(2.min(i) + 1);
+                    for _ in 0..np {
+                        preds.push(crate::graph::NodeId(rng.below(i as u64) as u32));
+                    }
+                    preds.sort();
+                    preds.dedup();
+                }
+                g.add(t, preds, 0);
+            }
+            g.freeze();
+            let s = run_policy(&g, 3, &mut SufficientConditionPolicy);
+            validate_schedule(&g, &s).unwrap();
+            let opt = optimal_batch_count(&g, 3, s.num_batches()).unwrap();
+            // SC-heuristic is greedy: never better than optimal, and on
+            // adversarial random DAGs (unlike the paper's structured
+            // workloads, where it is optimal — see Fig.9 benches) it can
+            // pay a small overhead. Sanity-bound it.
+            assert!(s.num_batches() >= opt, "case {case}: beat optimal?!");
+            assert!(
+                s.num_batches() <= opt * 2,
+                "case {case}: sc={} opt={}",
+                s.num_batches(),
+                opt
+            );
+        }
+    }
+
+    #[test]
+    fn batches_per_type_counts() {
+        let g = io_tree();
+        let s = run_policy(&g, 3, &mut SufficientConditionPolicy);
+        let per = batches_per_type(&s, 3);
+        assert_eq!(per.iter().sum::<usize>(), s.num_batches());
+        assert_eq!(per[1], 1, "O executed in exactly one batch");
+    }
+}

@@ -1,0 +1,62 @@
+//! Fig.8 — time decomposition of the inference pass (construction /
+//! scheduling / execution) for Cavs DyNet vs ED-Batch, at the paper's
+//! setting (model size 128, batch size 64).
+
+use anyhow::Result;
+
+use crate::coordinator::SystemMode;
+use crate::runtime::ArtifactRegistry;
+use crate::workloads::{Workload, PAPER_WORKLOADS};
+
+use super::{fig6::run_pipeline, fmt_ms, print_table, BenchOpts};
+
+#[derive(Clone, Debug)]
+pub struct Fig8Row {
+    pub workload: String,
+    pub mode: &'static str,
+    pub construction_ms: f64,
+    pub scheduling_ms: f64,
+    pub execution_ms: f64,
+}
+
+pub fn run(opts: &BenchOpts) -> Result<Vec<Fig8Row>> {
+    // paper: model=128, batch=64; fast mode scales down
+    let hidden = if opts.fast { opts.hidden } else { 128 };
+    let batch = if opts.fast { 16 } else { 64 };
+    let registry =
+        ArtifactRegistry::load(&opts.artifacts_dir, Some(&move |k| k.hidden == hidden))?;
+
+    let mut rows = Vec::new();
+    for kind in PAPER_WORKLOADS {
+        let w = Workload::new(kind, hidden);
+        for mode in [SystemMode::CavsDyNet, SystemMode::EdBatch] {
+            let (bd, _) = run_pipeline(mode, &w, &registry, hidden, batch, opts.seed)?;
+            rows.push(Fig8Row {
+                workload: kind.name().to_string(),
+                mode: mode.name(),
+                construction_ms: bd.construction_s * 1e3,
+                scheduling_ms: bd.scheduling_s * 1e3,
+                execution_ms: bd.execution_s * 1e3,
+            });
+        }
+    }
+
+    print_table(
+        &format!("Fig.8 — time decomposition (ms), model={hidden}, batch={batch}"),
+        &["workload", "system", "construction", "scheduling", "execution", "total"],
+        &rows
+            .iter()
+            .map(|r| {
+                vec![
+                    r.workload.clone(),
+                    r.mode.to_string(),
+                    format!("{:.3}", r.construction_ms),
+                    format!("{:.3}", r.scheduling_ms),
+                    format!("{:.3}", r.execution_ms),
+                    fmt_ms((r.construction_ms + r.scheduling_ms + r.execution_ms) / 1e3),
+                ]
+            })
+            .collect::<Vec<_>>(),
+    );
+    Ok(rows)
+}

@@ -1,0 +1,151 @@
+//! Fig.9 — number of batches per batching algorithm, per workload.
+//!
+//! Series: depth-based (TF-Fold), agenda-based (DyNet), FSM-base/max/sort
+//! (learned), the sufficient-condition heuristic, and the Appendix-A.3
+//! lower bound. The paper's headline: FSM cuts batch counts by up to 3.27x
+//! on lattices and executes the tree outputs in one batch.
+
+use crate::batching::agenda::AgendaPolicy;
+use crate::batching::depth::DepthPolicy;
+use crate::batching::fsm::Encoding;
+use crate::batching::oracle::SufficientConditionPolicy;
+use crate::batching::run_policy;
+use crate::rl::{train, TrainConfig};
+use crate::util::rng::Rng;
+use crate::workloads::{Workload, PAPER_WORKLOADS};
+
+use super::{print_table, BenchOpts};
+
+#[derive(Clone, Debug)]
+pub struct Fig9Row {
+    pub workload: String,
+    pub depth: usize,
+    pub agenda: usize,
+    pub fsm_base: usize,
+    pub fsm_max: usize,
+    pub fsm_sort: usize,
+    pub sc_heuristic: usize,
+    pub lower_bound: u64,
+}
+
+pub fn run(opts: &BenchOpts) -> Vec<Fig9Row> {
+    let eval_instances = if opts.fast { 8 } else { 64 };
+    let train_cfg = TrainConfig {
+        max_iters: if opts.fast { 200 } else { 1000 },
+        ..TrainConfig::default()
+    };
+    let mut rows = Vec::new();
+    for kind in PAPER_WORKLOADS {
+        let w = Workload::new(kind, opts.hidden);
+        let nt = w.registry.num_types();
+        let mut rng = Rng::new(opts.seed);
+        let mut g = w.gen_batch(eval_instances, &mut rng);
+        g.freeze();
+
+        let depth = run_policy(&g, nt, &mut DepthPolicy::new()).num_batches();
+        let agenda = run_policy(&g, nt, &mut AgendaPolicy::new(nt)).num_batches();
+        let sc = run_policy(&g, nt, &mut SufficientConditionPolicy).num_batches();
+
+        let fsm = |enc: Encoding| {
+            let (mut policy, _) = train(&w, enc, &train_cfg, opts.seed + enc.name().len() as u64);
+            run_policy(&g, nt, &mut policy).num_batches()
+        };
+        let fsm_base = fsm(Encoding::Base);
+        let fsm_max = fsm(Encoding::Max);
+        let fsm_sort = fsm(Encoding::Sort);
+
+        rows.push(Fig9Row {
+            workload: kind.name().to_string(),
+            depth,
+            agenda,
+            fsm_base,
+            fsm_max,
+            fsm_sort,
+            sc_heuristic: sc,
+            lower_bound: g.batch_lower_bound(nt),
+        });
+    }
+
+    print_table(
+        "Fig.9 — number of batches per algorithm",
+        &[
+            "workload",
+            "depth",
+            "agenda",
+            "fsm-base",
+            "fsm-max",
+            "fsm-sort",
+            "sc-heur",
+            "lower-bd",
+            "best/agenda",
+        ],
+        &rows
+            .iter()
+            .map(|r| {
+                let best = r.fsm_sort.min(r.fsm_base).min(r.fsm_max);
+                vec![
+                    r.workload.clone(),
+                    r.depth.to_string(),
+                    r.agenda.to_string(),
+                    r.fsm_base.to_string(),
+                    r.fsm_max.to_string(),
+                    r.fsm_sort.to_string(),
+                    r.sc_heuristic.to_string(),
+                    r.lower_bound.to_string(),
+                    format!("{:.2}x", r.agenda.min(r.depth) as f64 / best as f64),
+                ]
+            })
+            .collect::<Vec<_>>(),
+    );
+    rows
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn fsm_never_worse_than_best_baseline_on_trees_and_lattices() {
+        let mut opts = BenchOpts::fast_default();
+        opts.seed = 3;
+        let rows = run(&opts);
+        for r in &rows {
+            let best_fsm = r.fsm_sort.min(r.fsm_base).min(r.fsm_max);
+            let best_baseline = r.depth.min(r.agenda);
+            // treelstm-2type and the lattices are the paper's hardest cases
+            // (they need the full 1000 RL trials; §5.3 reports the FSM
+            // landing 23%/44% above the SC heuristic there). Under the fast
+            // test budget (200 trials) allow a small margin on those; the
+            // full `ed-batch bench fig9` run uses the paper's budget.
+            let hard = r.workload == "treelstm-2type" || r.workload.starts_with("lattice");
+            let slack = if hard {
+                (best_baseline as f64 * 1.15) as usize
+            } else {
+                best_baseline
+            };
+            assert!(
+                best_fsm <= slack,
+                "{}: fsm {best_fsm} vs baseline {best_baseline}",
+                r.workload
+            );
+            assert!(best_fsm as u64 >= r.lower_bound, "{}", r.workload);
+        }
+    }
+
+    #[test]
+    fn tree_workloads_hit_lower_bound_with_fsm_sort() {
+        let mut opts = BenchOpts::fast_default();
+        opts.seed = 4;
+        let rows = run(&opts);
+        for r in rows.iter().filter(|r| r.workload.starts_with("tree")) {
+            if r.workload == "treelstm-2type" {
+                continue; // paper: 23% above best on 2type
+            }
+            assert_eq!(
+                r.fsm_sort as u64, r.lower_bound,
+                "{} should reach the lower bound",
+                r.workload
+            );
+        }
+    }
+}

@@ -1,0 +1,91 @@
+//! Benchmark harnesses regenerating every table and figure of the paper's
+//! evaluation (§5). Each submodule prints the same rows/series the paper
+//! reports and returns structured results for tests / EXPERIMENTS.md.
+//!
+//! Run via `ed-batch bench <fig6|fig8|fig9|table2|table3|table4|table5|all>`.
+
+pub mod fig6;
+pub mod fig8;
+pub mod fig9;
+pub mod table2;
+pub mod table3;
+pub mod table4;
+pub mod table5;
+
+use crate::util::cli::Args;
+
+/// Shared bench options parsed from the CLI.
+#[derive(Clone, Debug)]
+pub struct BenchOpts {
+    pub hidden: usize,
+    pub batch_sizes: Vec<usize>,
+    pub seed: u64,
+    /// fewer repetitions / smaller sweeps for smoke runs
+    pub fast: bool,
+    pub artifacts_dir: String,
+}
+
+impl BenchOpts {
+    pub fn from_args(args: &Args) -> BenchOpts {
+        BenchOpts {
+            hidden: args.usize("hidden", 64),
+            batch_sizes: args.usize_list("batch-sizes", &[1, 8, 32, 64, 128, 256]),
+            seed: args.u64("seed", 42),
+            fast: args.flag("fast") || std::env::var("ED_BENCH_FAST").is_ok(),
+            artifacts_dir: args.get_or("artifacts", "artifacts").to_string(),
+        }
+    }
+
+    pub fn fast_default() -> BenchOpts {
+        BenchOpts {
+            hidden: 32,
+            batch_sizes: vec![1, 8, 32],
+            seed: 42,
+            fast: true,
+            artifacts_dir: "artifacts".to_string(),
+        }
+    }
+}
+
+/// Markdown-ish table printer shared by the harnesses.
+pub fn print_table(title: &str, header: &[&str], rows: &[Vec<String>]) {
+    println!("\n## {title}\n");
+    let mut widths: Vec<usize> = header.iter().map(|h| h.len()).collect();
+    for row in rows {
+        for (i, cell) in row.iter().enumerate() {
+            if i < widths.len() {
+                widths[i] = widths[i].max(cell.len());
+            }
+        }
+    }
+    let line = |cells: &[String]| {
+        let mut s = String::from("|");
+        for (i, c) in cells.iter().enumerate() {
+            s.push_str(&format!(" {:<w$} |", c, w = widths.get(i).copied().unwrap_or(8)));
+        }
+        s
+    };
+    println!("{}", line(&header.iter().map(|h| h.to_string()).collect::<Vec<_>>()));
+    println!(
+        "|{}",
+        widths
+            .iter()
+            .map(|w| format!("{}-|", "-".repeat(w + 2 - 1)))
+            .collect::<String>()
+    );
+    for row in rows {
+        println!("{}", line(row));
+    }
+}
+
+pub fn fmt_ms(s: f64) -> String {
+    format!("{:.3}", s * 1e3)
+}
+
+pub fn fmt_ratio(a: f64, b: f64) -> String {
+    if b == 0.0 {
+        "inf".to_string()
+    } else {
+        format!("{:.2}", a / b)
+    }
+}

@@ -1,0 +1,131 @@
+//! Table 2 — static-subgraph ablation: DyNet memory allocation vs the
+//! PQ-tree layout. For each of the seven cells we report per-subgraph
+//! latency, gather/scatter ("Mem") kernels, and memcpy volume, plus the
+//! improvement ratios. batch size = 8, model size = 64 as in the paper.
+
+use crate::exec::SubgraphExec;
+use crate::memory::planner::pq_plan;
+use crate::memory::{evaluate_layout, MemoryPlan};
+use crate::subgraph::ALL_SUBGRAPHS;
+
+use super::{fmt_ratio, print_table, BenchOpts};
+
+#[derive(Clone, Debug)]
+pub struct Table2Row {
+    pub subgraph: String,
+    pub latency_dynet_s: f64,
+    pub latency_pq_s: f64,
+    pub mem_kernels_dynet: usize,
+    pub mem_kernels_pq: usize,
+    pub memcpy_dynet_kb: f64,
+    pub memcpy_pq_kb: f64,
+}
+
+fn median_latency(ex: &mut SubgraphExec, reps: usize) -> f64 {
+    let mut times: Vec<f64> = (0..reps).map(|_| ex.run()).collect();
+    times.sort_by(|a, b| a.partial_cmp(b).unwrap());
+    times[times.len() / 2]
+}
+
+pub fn run(opts: &BenchOpts) -> Vec<Table2Row> {
+    // paper setting: batch size = 8, model size = 64
+    let hidden = if opts.fast { 32 } else { 64 };
+    let inst_batch = 8;
+    let reps = if opts.fast { 5 } else { 30 };
+
+    let mut rows = Vec::new();
+    for kind in ALL_SUBGRAPHS {
+        let sg = kind.build(hidden, inst_batch);
+        let batches = sg.batch();
+
+        let naive_plan = MemoryPlan::creation_order(&sg.sizes);
+        let naive_metrics = evaluate_layout(&naive_plan, &sg.sizes, &batches);
+        let mut naive_ex = SubgraphExec::new(sg.clone(), naive_plan, batches.clone());
+        naive_ex.init_random(opts.seed);
+        let naive_lat = median_latency(&mut naive_ex, reps);
+
+        let pq = pq_plan(&batches, &sg.sizes);
+        let pq_metrics = evaluate_layout(&pq.plan, &sg.sizes, &batches);
+        let mut pq_ex = SubgraphExec::new(sg.clone(), pq.plan, batches.clone());
+        pq_ex.init_random(opts.seed);
+        let pq_lat = median_latency(&mut pq_ex, reps);
+
+        rows.push(Table2Row {
+            subgraph: kind.name().to_string(),
+            latency_dynet_s: naive_lat,
+            latency_pq_s: pq_lat,
+            mem_kernels_dynet: naive_metrics.mem_kernels,
+            mem_kernels_pq: pq_metrics.mem_kernels,
+            memcpy_dynet_kb: naive_metrics.memcpy_bytes() as f64 / 1024.0,
+            memcpy_pq_kb: pq_metrics.memcpy_bytes() as f64 / 1024.0,
+        });
+    }
+
+    print_table(
+        &format!(
+            "Table 2 — DyNet alloc vs PQ-tree alloc (batch={inst_batch}, model={hidden})"
+        ),
+        &[
+            "subgraph",
+            "latency ms (dynet/pq)",
+            "ratio",
+            "mem kernels (dynet/pq)",
+            "ratio",
+            "memcpy kB (dynet/pq)",
+            "ratio",
+        ],
+        &rows
+            .iter()
+            .map(|r| {
+                vec![
+                    r.subgraph.clone(),
+                    format!(
+                        "{:.3} / {:.3}",
+                        r.latency_dynet_s * 1e3,
+                        r.latency_pq_s * 1e3
+                    ),
+                    fmt_ratio(r.latency_dynet_s, r.latency_pq_s),
+                    format!("{} / {}", r.mem_kernels_dynet, r.mem_kernels_pq),
+                    fmt_ratio(r.mem_kernels_dynet as f64, r.mem_kernels_pq as f64),
+                    format!("{:.1} / {:.1}", r.memcpy_dynet_kb, r.memcpy_pq_kb),
+                    fmt_ratio(r.memcpy_dynet_kb, r.memcpy_pq_kb),
+                ]
+            })
+            .collect::<Vec<_>>(),
+    );
+    rows
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn pq_dominates_dynet_layout() {
+        let opts = BenchOpts::fast_default();
+        let rows = run(&opts);
+        assert_eq!(rows.len(), 7);
+        for r in &rows {
+            assert!(
+                r.mem_kernels_pq <= r.mem_kernels_dynet,
+                "{}: {} vs {}",
+                r.subgraph,
+                r.mem_kernels_pq,
+                r.mem_kernels_dynet
+            );
+            assert!(
+                r.memcpy_pq_kb <= r.memcpy_dynet_kb + 1e-9,
+                "{}",
+                r.subgraph
+            );
+        }
+        // the weight-heavy cells must show a large memcpy reduction
+        let lstm = rows.iter().find(|r| r.subgraph == "LSTMCell").unwrap();
+        assert!(
+            lstm.memcpy_dynet_kb / lstm.memcpy_pq_kb.max(0.001) > 2.0,
+            "LSTMCell reduction too small: {} / {}",
+            lstm.memcpy_dynet_kb,
+            lstm.memcpy_pq_kb
+        );
+    }
+}

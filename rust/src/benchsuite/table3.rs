@@ -1,0 +1,76 @@
+//! Table 3 — RL training time and iterations per workload.
+//!
+//! The paper trains up to 1000 trials, checking every 50 and stopping
+//! early when the greedy policy reaches the batch-count lower bound;
+//! reported times range from 0.14s (TreeLSTM) to 21.7s (LatticeLSTM).
+
+use crate::batching::fsm::Encoding;
+use crate::rl::{train, TrainConfig};
+use crate::workloads::{Workload, ALL_WORKLOADS};
+
+use super::{print_table, BenchOpts};
+
+#[derive(Clone, Debug)]
+pub struct Table3Row {
+    pub workload: String,
+    pub time_s: f64,
+    pub iterations: usize,
+    pub reached_lower_bound: bool,
+    pub num_states: usize,
+}
+
+pub fn run(opts: &BenchOpts) -> Vec<Table3Row> {
+    let cfg = TrainConfig {
+        max_iters: if opts.fast { 200 } else { 1000 },
+        check_every: 50,
+        ..TrainConfig::default()
+    };
+    let mut rows = Vec::new();
+    for kind in ALL_WORKLOADS {
+        let w = Workload::new(kind, opts.hidden);
+        let (_, stats) = train(&w, Encoding::Sort, &cfg, opts.seed);
+        rows.push(Table3Row {
+            workload: kind.name().to_string(),
+            time_s: stats.wall_time_s,
+            iterations: stats.iterations,
+            reached_lower_bound: stats.reached_lower_bound,
+            num_states: stats.num_states,
+        });
+    }
+    print_table(
+        "Table 3 — RL training time and iterations",
+        &["workload", "time (s)", "train iter.", "hit lower bd", "|states|"],
+        &rows
+            .iter()
+            .map(|r| {
+                vec![
+                    r.workload.clone(),
+                    format!("{:.3}", r.time_s),
+                    r.iterations.to_string(),
+                    r.reached_lower_bound.to_string(),
+                    r.num_states.to_string(),
+                ]
+            })
+            .collect::<Vec<_>>(),
+    );
+    rows
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn training_completes_for_all_workloads() {
+        let opts = BenchOpts::fast_default();
+        let rows = run(&opts);
+        assert_eq!(rows.len(), ALL_WORKLOADS.len());
+        for r in &rows {
+            assert!(r.time_s > 0.0, "{}", r.workload);
+            assert!(r.iterations >= 50, "{}", r.workload);
+        }
+        // chains and simple trees converge quickly (paper: 50 iterations)
+        let tl = rows.iter().find(|r| r.workload == "treelstm").unwrap();
+        assert!(tl.reached_lower_bound, "treelstm should hit the bound");
+    }
+}

@@ -1,0 +1,84 @@
+//! Table 4 — static-subgraph compile time: intra-subgraph batching plus
+//! the PQ-tree memory planning, per cell (paper: tens of milliseconds).
+
+use std::time::Instant;
+
+use crate::memory::planner::pq_plan;
+use crate::subgraph::ALL_SUBGRAPHS;
+
+use super::{print_table, BenchOpts};
+
+#[derive(Clone, Debug)]
+pub struct Table4Row {
+    pub subgraph: String,
+    pub time_ms: f64,
+    pub batches: usize,
+    pub vars: usize,
+    pub dropped_constraints: usize,
+}
+
+pub fn run(opts: &BenchOpts) -> Vec<Table4Row> {
+    let hidden = if opts.fast { 32 } else { 64 };
+    let inst_batch = 8;
+    let mut rows = Vec::new();
+    for kind in ALL_SUBGRAPHS {
+        // median of several compile runs
+        let reps = if opts.fast { 3 } else { 9 };
+        let mut times = Vec::with_capacity(reps);
+        let mut batches_n = 0;
+        let mut vars_n = 0;
+        let mut dropped = 0;
+        for _ in 0..reps {
+            let t0 = Instant::now();
+            let sg = kind.build(hidden, inst_batch);
+            let batches = sg.batch();
+            let out = pq_plan(&batches, &sg.sizes);
+            times.push(t0.elapsed().as_secs_f64());
+            batches_n = batches.len();
+            vars_n = sg.num_vars();
+            dropped = out.dropped_adjacency + out.dropped_broadcast + out.dropped_orders;
+        }
+        times.sort_by(|a, b| a.partial_cmp(b).unwrap());
+        rows.push(Table4Row {
+            subgraph: kind.name().to_string(),
+            time_ms: times[times.len() / 2] * 1e3,
+            batches: batches_n,
+            vars: vars_n,
+            dropped_constraints: dropped,
+        });
+    }
+    print_table(
+        "Table 4 — static subgraph compile time",
+        &["subgraph", "time (ms)", "#batches", "#vars", "dropped cons"],
+        &rows
+            .iter()
+            .map(|r| {
+                vec![
+                    r.subgraph.clone(),
+                    format!("{:.2}", r.time_ms),
+                    r.batches.to_string(),
+                    r.vars.to_string(),
+                    r.dropped_constraints.to_string(),
+                ]
+            })
+            .collect::<Vec<_>>(),
+    );
+    rows
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn compile_times_are_interactive() {
+        let opts = BenchOpts::fast_default();
+        let rows = run(&opts);
+        assert_eq!(rows.len(), 7);
+        for r in &rows {
+            // paper reports <= 30ms; allow generous slack on debug builds
+            assert!(r.time_ms < 5_000.0, "{}: {}ms", r.subgraph, r.time_ms);
+            assert!(r.batches > 0);
+        }
+    }
+}

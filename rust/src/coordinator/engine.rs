@@ -1,0 +1,800 @@
+//! Cell-granularity batched execution engine.
+//!
+//! Consumes a scheduled graph (output of the batching layer) and executes
+//! each batch through either:
+//! * **PJRT** — the AOT-compiled fused-cell artifacts (`make artifacts`),
+//!   the production hot path; or
+//! * **CPU** — a reference implementation on `exec::cpu_kernels`, used for
+//!   numerics cross-checks and artifact-free unit tests.
+//!
+//! Per batch: gather per-node inputs from the state store into `[lanes, W]`
+//! buffers, zero-pad to the artifact's batch bucket, execute, scatter
+//! results back. Gather/scatter volumes are counted (they are the
+//! graph-level data movement DyNet-style batching inherently pays).
+
+use anyhow::{anyhow, Result};
+use rustc_hash::FxHashMap;
+
+use crate::batching::Schedule;
+use crate::exec::cpu_kernels as k;
+use crate::graph::{CellKind, Graph, NodeId, TypeRegistry};
+use crate::runtime::ArtifactRegistry;
+use crate::util::rng::Rng;
+
+/// How many leading artifact args are per-lane data (rest are weights).
+#[allow(dead_code)] // documented per-cell arg convention; kept for clarity
+fn data_arg_count(cell: &str) -> usize {
+    match cell {
+        "lstm" => 3,                // x, h, c
+        "gru" => 2,                 // x, h
+        "treelstm_internal" => 4,   // h_l, h_r, c_l, c_r
+        "treelstm_leaf" => 1,       // x
+        "treegru_internal" => 2,    // h_l, h_r
+        "treegru_leaf" => 1,        // x
+        "mv_cell" => 4,             // h_l, h_r, m_l, m_r
+        "classifier" => 1,          // h
+        _ => 1,
+    }
+}
+
+/// Execution statistics for one scheduled graph.
+#[derive(Clone, Copy, Debug, Default)]
+pub struct ExecReport {
+    pub batches: usize,
+    pub kernel_calls: usize,
+    /// lanes of padding added to reach artifact buckets
+    pub padded_lanes: usize,
+    /// graph-level gather/scatter volume (elements)
+    pub memcpy_elems: usize,
+    pub exec_s: f64,
+}
+
+pub enum Backend<'a> {
+    Pjrt(&'a ArtifactRegistry),
+    Cpu,
+}
+
+/// Engine: weights + per-node state store + batch dispatch.
+pub struct CellEngine<'a> {
+    pub backend: Backend<'a>,
+    pub hidden: usize,
+    /// per-cell weight buffers, generated once per engine (seeded)
+    weights: FxHashMap<String, Vec<Vec<f32>>>,
+    /// extra copy work charged inside cells as real copies, reproducing
+    /// baseline in-cell gather costs measured by the subgraph executor
+    /// (see benchsuite::fig6): per cell name, (fixed elems per batch —
+    /// weight gathers happen once per batched kernel — plus elems per
+    /// lane — activation gathers scale with the batch).
+    pub in_cell_copy_elems: FxHashMap<String, (usize, usize)>,
+    /// extra kernel launches charged per cell batch (unfused baselines:
+    /// a cell that is K primitive batches pays K-1 extra real launches of
+    /// a minimal artifact). PJRT backend only.
+    pub extra_launches: FxHashMap<String, usize>,
+    scratch_copy: Vec<f32>,
+    noop_args: Option<Vec<Vec<f32>>>,
+    /// device-staged weight buffers per cell (uploaded once; §Perf it.1)
+    weights_dev: FxHashMap<String, Vec<xla::PjRtBuffer>>,
+}
+
+/// Per-node output state (h plus optional second tensor c/M).
+pub struct StateStore {
+    pub h: Vec<Vec<f32>>,
+    pub c: Vec<Vec<f32>>,
+}
+
+impl StateStore {
+    pub fn new(n: usize) -> Self {
+        StateStore {
+            h: vec![Vec::new(); n],
+            c: vec![Vec::new(); n],
+        }
+    }
+}
+
+impl<'a> CellEngine<'a> {
+    pub fn new(backend: Backend<'a>, hidden: usize, _seed: u64) -> Self {
+        CellEngine {
+            backend,
+            hidden,
+            weights: FxHashMap::default(),
+            in_cell_copy_elems: FxHashMap::default(),
+            extra_launches: FxHashMap::default(),
+            scratch_copy: Vec::new(),
+            noop_args: None,
+            weights_dev: FxHashMap::default(),
+        }
+    }
+
+    fn weight_shapes(cell: &str, h: usize) -> Vec<Vec<usize>> {
+        let nc = crate::workloads::NUM_CLASSES;
+        match cell {
+            "lstm" => vec![vec![h, 4 * h], vec![h, 4 * h], vec![4 * h]],
+            "gru" => vec![
+                vec![h, 2 * h],
+                vec![h, 2 * h],
+                vec![2 * h],
+                vec![h, h],
+                vec![h, h],
+                vec![h],
+            ],
+            "treelstm_internal" => vec![vec![h, 5 * h], vec![h, 5 * h], vec![5 * h]],
+            "treelstm_leaf" => vec![vec![h, 3 * h], vec![3 * h]],
+            "treegru_internal" => vec![
+                vec![h, 3 * h],
+                vec![h, 3 * h],
+                vec![3 * h],
+                vec![h, h],
+                vec![h, h],
+                vec![h],
+            ],
+            "treegru_leaf" => vec![vec![h, h], vec![h]],
+            "mv_cell" => vec![vec![2 * h, h], vec![h], vec![h, 2 * h], vec![h, h]],
+            "classifier" => vec![vec![h, nc], vec![nc]],
+            _ => vec![],
+        }
+    }
+
+    fn weights_for(&mut self, cell: &str) -> &Vec<Vec<f32>> {
+        let h = self.hidden;
+        self.weights.entry(cell.to_string()).or_insert_with(|| {
+            // deterministic per (cell, hidden): both backends see the same
+            let mut rng = Rng::new(0xED0 ^ (h as u64) << 8 ^ cell.len() as u64);
+            let mut hasher: u64 = 0;
+            for b in cell.bytes() {
+                hasher = hasher.wrapping_mul(31).wrapping_add(b as u64);
+            }
+            let mut rng2 = Rng::new(rng.next_u64() ^ hasher);
+            Self::weight_shapes(cell, h)
+                .into_iter()
+                .map(|shape| {
+                    let n: usize = shape.iter().product();
+                    let scale = 1.0 / (h as f32).sqrt();
+                    (0..n).map(|_| (rng2.f32() - 0.5) * 2.0 * scale).collect()
+                })
+                .collect()
+        })
+    }
+
+    /// Execute a scheduled graph; returns the report. State store must be
+    /// sized to the graph.
+    pub fn execute(
+        &mut self,
+        graph: &Graph,
+        types: &TypeRegistry,
+        schedule: &Schedule,
+        store: &mut StateStore,
+    ) -> Result<ExecReport> {
+        let t0 = std::time::Instant::now();
+        let mut report = ExecReport {
+            batches: schedule.batches.len(),
+            ..Default::default()
+        };
+        for batch in &schedule.batches {
+            let info = types.info(batch.op);
+            match info.cell {
+                CellKind::Source => self.exec_source(graph, &batch.nodes, store),
+                CellKind::Reduce => self.exec_reduce(graph, &batch.nodes, info.out_elems, store),
+                CellKind::Classifier => {
+                    self.exec_cell(graph, "classifier", &batch.nodes, store, &mut report)?
+                }
+                CellKind::Lstm => self.exec_cell(graph, "lstm", &batch.nodes, store, &mut report)?,
+                CellKind::Gru => self.exec_cell(graph, "gru", &batch.nodes, store, &mut report)?,
+                CellKind::TreeLstmInternal => {
+                    self.exec_cell(graph, "treelstm_internal", &batch.nodes, store, &mut report)?
+                }
+                CellKind::TreeLstmLeaf => {
+                    self.exec_cell(graph, "treelstm_leaf", &batch.nodes, store, &mut report)?
+                }
+                CellKind::TreeGruInternal => {
+                    self.exec_cell(graph, "treegru_internal", &batch.nodes, store, &mut report)?
+                }
+                CellKind::TreeGruLeaf => {
+                    self.exec_cell(graph, "treegru_leaf", &batch.nodes, store, &mut report)?
+                }
+                CellKind::MvCell => {
+                    self.exec_cell(graph, "mv_cell", &batch.nodes, store, &mut report)?
+                }
+            }
+        }
+        report.exec_s = t0.elapsed().as_secs_f64();
+        Ok(report)
+    }
+
+    // -- sources / reduce ------------------------------------------------
+
+    fn exec_source(&mut self, _graph: &Graph, nodes: &[NodeId], store: &mut StateStore) {
+        let h = self.hidden;
+        for &n in nodes {
+            // deterministic embedding per node index
+            let mut rng = Rng::new(0xE4BED ^ n.0 as u64);
+            store.h[n.idx()] = (0..h).map(|_| (rng.f32() - 0.5) * 0.2).collect();
+            // MV-RNN sources also carry a matrix; materialize lazily when a
+            // MvCell consumes it (see gather_mv_state)
+        }
+    }
+
+    fn exec_reduce(
+        &mut self,
+        graph: &Graph,
+        nodes: &[NodeId],
+        width: usize,
+        store: &mut StateStore,
+    ) {
+        for &n in nodes {
+            let mut acc = vec![0.0f32; width];
+            for &p in &graph.node(n).preds {
+                let src = &store.h[p.idx()];
+                let len = src.len().min(width);
+                k::axpy(1.0, &src[..len], &mut acc[..len]);
+            }
+            store.h[n.idx()] = acc;
+        }
+    }
+
+    // -- cell batches -----------------------------------------------------
+
+    /// Gather per-lane data args for `cell` from the predecessor states.
+    fn gather_data_args(
+        &mut self,
+        graph: &Graph,
+        cell: &str,
+        nodes: &[NodeId],
+        bucket: usize,
+        store: &StateStore,
+        report: &mut ExecReport,
+    ) -> Vec<Vec<f32>> {
+        let h = self.hidden;
+        let lanes = nodes.len();
+        let widths: Vec<usize> = match cell {
+            "lstm" => vec![h, h, h],
+            "gru" => vec![h, h],
+            "treelstm_internal" => vec![h, h, h, h],
+            "treelstm_leaf" => vec![h],
+            "treegru_internal" => vec![h, h],
+            "treegru_leaf" => vec![h],
+            "mv_cell" => vec![h, h, h * h, h * h],
+            "classifier" => vec![h],
+            _ => vec![h],
+        };
+        let mut args: Vec<Vec<f32>> = widths.iter().map(|w| vec![0.0; bucket * w]).collect();
+        for (lane, &n) in nodes.iter().enumerate() {
+            let preds = &graph.node(n).preds;
+            match cell {
+                "lstm" | "gru" => {
+                    // preds: [x-provider, state-providers...]
+                    if let Some(&x) = preds.first() {
+                        copy_lane(&mut args[0], lane, h, &store.h[x.idx()]);
+                    }
+                    for &p in preds.iter().skip(1) {
+                        add_lane(&mut args[1], lane, h, &store.h[p.idx()]);
+                        if cell == "lstm" {
+                            add_lane(&mut args[2], lane, h, &store.c[p.idx()]);
+                        }
+                    }
+                }
+                "treelstm_internal" => {
+                    let (l, r) = two_children(preds);
+                    copy_lane(&mut args[0], lane, h, &store.h[l.idx()]);
+                    copy_lane(&mut args[1], lane, h, &store.h[r.idx()]);
+                    copy_lane(&mut args[2], lane, h, &store.c[l.idx()]);
+                    copy_lane(&mut args[3], lane, h, &store.c[r.idx()]);
+                }
+                "treegru_internal" => {
+                    let (l, r) = two_children(preds);
+                    copy_lane(&mut args[0], lane, h, &store.h[l.idx()]);
+                    copy_lane(&mut args[1], lane, h, &store.h[r.idx()]);
+                }
+                "mv_cell" => {
+                    let (l, r) = two_children(preds);
+                    copy_lane(&mut args[0], lane, h, &store.h[l.idx()]);
+                    copy_lane(&mut args[1], lane, h, &store.h[r.idx()]);
+                    copy_mv_matrix(&mut args[2], lane, h, l, &store.c[l.idx()]);
+                    copy_mv_matrix(&mut args[3], lane, h, r, &store.c[r.idx()]);
+                }
+                "treelstm_leaf" | "treegru_leaf" => {
+                    if let Some(&x) = preds.first() {
+                        copy_lane(&mut args[0], lane, h, &store.h[x.idx()]);
+                    }
+                }
+                "classifier" => {
+                    for &p in preds {
+                        add_lane(&mut args[0], lane, h, &store.h[p.idx()]);
+                    }
+                }
+                _ => {}
+            }
+        }
+        report.memcpy_elems += args.iter().map(|a| a.len() / bucket * lanes).sum::<usize>();
+        args
+    }
+
+    fn exec_cell(
+        &mut self,
+        graph: &Graph,
+        cell: &str,
+        nodes: &[NodeId],
+        store: &mut StateStore,
+        report: &mut ExecReport,
+    ) -> Result<()> {
+        if nodes.is_empty() {
+            return Ok(());
+        }
+        let h = self.hidden;
+        // split into chunks minimizing padded compute (see chunk_plan)
+        let chunk_sizes: Vec<usize> = match &self.backend {
+            Backend::Pjrt(reg) => reg
+                .chunk_plan(cell, h, nodes.len())
+                .ok_or_else(|| anyhow!("no artifact for {cell} h={h}"))?
+                .into_iter()
+                .collect(),
+            Backend::Cpu => vec![nodes.len().max(1)],
+        };
+        let mut cursor = 0usize;
+        for planned_bucket in chunk_sizes {
+            let take = planned_bucket.min(nodes.len() - cursor);
+            let chunk = &nodes[cursor..cursor + take];
+            cursor += take;
+            let bucket = match &self.backend {
+                Backend::Pjrt(_) => planned_bucket,
+                Backend::Cpu => chunk.len(),
+            };
+            report.padded_lanes += bucket - chunk.len();
+            let data = self.gather_data_args(graph, cell, chunk, bucket, store, report);
+            // charge the configured in-cell copy work (baseline modes)
+            if let Some(&(fixed, per_lane)) = self.in_cell_copy_elems.get(cell) {
+                let elems = fixed + per_lane * chunk.len();
+                if elems > 0 {
+                    self.charge_copy(elems);
+                    report.memcpy_elems += elems;
+                    report.kernel_calls += 1;
+                }
+            }
+            let outs = match &self.backend {
+                Backend::Pjrt(reg) => {
+                    let compiled = reg
+                        .cell_for_batch(cell, h, chunk.len())
+                        .ok_or_else(|| anyhow!("missing artifact {cell} h={h}"))?;
+                    // stage weights on device once per cell (§Perf it.1:
+                    // avoids re-uploading Θ(H²) tensors on every call)
+                    if !self.weights_dev.contains_key(cell) {
+                        let host = self.weights_for(cell).clone();
+                        let dims = Self::weight_shapes(cell, h);
+                        let staged: Vec<(Vec<f32>, Vec<usize>)> =
+                            host.into_iter().zip(dims).collect();
+                        let bufs = compiled.stage_weights(&staged)?;
+                        self.weights_dev.insert(cell.to_string(), bufs);
+                    }
+                    compiled.execute_with_weights(&data, &self.weights_dev[cell])?
+                }
+                Backend::Cpu => self.cpu_cell(cell, &data, bucket)?,
+            };
+            report.kernel_calls += 1;
+            // unfused-baseline launch charge: real extra launches of a
+            // minimal artifact (one per primitive batch beyond the first)
+            if let Some(&extra) = self.extra_launches.get(cell) {
+                if let Backend::Pjrt(reg) = &self.backend {
+                    if let Some(noop) = reg.cell_for_batch("classifier", h, 1) {
+                        if self.noop_args.is_none() {
+                            self.noop_args = Some(
+                                noop.arg_shapes
+                                    .iter()
+                                    .map(|s| vec![0.0f32; s.iter().product()])
+                                    .collect(),
+                            );
+                        }
+                        for _ in 0..extra {
+                            let _ = noop.execute(self.noop_args.as_ref().unwrap())?;
+                        }
+                        report.kernel_calls += extra;
+                    }
+                }
+            }
+            // scatter outputs back to the per-node store
+            let out_w: Vec<usize> = outs.iter().map(|o| o.len() / bucket).collect();
+            for (lane, &n) in chunk.iter().enumerate() {
+                store.h[n.idx()] =
+                    outs[0][lane * out_w[0]..(lane + 1) * out_w[0]].to_vec();
+                if outs.len() > 1 {
+                    store.c[n.idx()] =
+                        outs[1][lane * out_w[1]..(lane + 1) * out_w[1]].to_vec();
+                }
+                report.memcpy_elems += out_w.iter().sum::<usize>();
+            }
+        }
+        Ok(())
+    }
+
+    /// Perform `elems` worth of real copy work (baseline in-cell gathers).
+    fn charge_copy(&mut self, elems: usize) {
+        if self.scratch_copy.len() < elems {
+            self.scratch_copy.resize(elems, 0.0);
+        }
+        let (a, b) = self.scratch_copy.split_at_mut(elems / 2);
+        let n = a.len().min(b.len());
+        b[..n].copy_from_slice(&a[..n]);
+    }
+
+    // -- CPU reference backend --------------------------------------------
+
+    fn cpu_cell(&mut self, cell: &str, data: &[Vec<f32>], b: usize) -> Result<Vec<Vec<f32>>> {
+        let h = self.hidden;
+        let w = self.weights_for(cell).clone();
+        let nc = crate::workloads::NUM_CLASSES;
+        let out = match cell {
+            "lstm" => {
+                let gates = affine2(&data[0], &data[1], &w[0], &w[1], &w[2], b, h, 4 * h);
+                lstm_pointwise(&gates, &data[2], b, h)
+            }
+            "gru" => {
+                let rz = affine2(&data[0], &data[1], &w[0], &w[1], &w[2], b, h, 2 * h);
+                let mut nx = vec![0.0; b * h];
+                k::matmul(&data[0], &w[3], &mut nx, b, h, h);
+                let mut nxb = vec![0.0; b * h];
+                k::add_bias(&nx, &w[5], &mut nxb);
+                let mut nh = vec![0.0; b * h];
+                k::matmul(&data[1], &w[4], &mut nh, b, h, h);
+                vec![gru_pointwise(&rz, &nxb, &nh, &data[1], b, h)]
+            }
+            "treelstm_internal" => {
+                let gates = affine2(&data[0], &data[1], &w[0], &w[1], &w[2], b, h, 5 * h);
+                treelstm_pointwise(&gates, &data[2], &data[3], b, h)
+            }
+            "treelstm_leaf" => {
+                let mut g = vec![0.0; b * 3 * h];
+                k::matmul(&data[0], &w[0], &mut g, b, h, 3 * h);
+                let mut gb = vec![0.0; b * 3 * h];
+                k::add_bias(&g, &w[1], &mut gb);
+                treelstm_leaf_pointwise(&gb, b, h)
+            }
+            "treegru_internal" => {
+                let rz = affine2(&data[0], &data[1], &w[0], &w[1], &w[2], b, h, 3 * h);
+                let mut h2 = vec![0.0; b * h];
+                for i in 0..b {
+                    for j in 0..h {
+                        let r_l = sigm(rz[i * 3 * h + j]);
+                        let r_r = sigm(rz[i * 3 * h + h + j]);
+                        let _ = (r_l, r_r);
+                    }
+                }
+                // candidate: tanh((r_l*h_l) @ w3 + (r_r*h_r) @ w4 + b5)
+                let mut rhl = vec![0.0; b * h];
+                let mut rhr = vec![0.0; b * h];
+                for i in 0..b {
+                    for j in 0..h {
+                        rhl[i * h + j] = sigm(rz[i * 3 * h + j]) * data[0][i * h + j];
+                        rhr[i * h + j] = sigm(rz[i * 3 * h + h + j]) * data[1][i * h + j];
+                    }
+                }
+                let mut n1 = vec![0.0; b * h];
+                k::matmul(&rhl, &w[3], &mut n1, b, h, h);
+                let mut n2 = vec![0.0; b * h];
+                k::matmul(&rhr, &w[4], &mut n2, b, h, h);
+                for i in 0..b {
+                    for j in 0..h {
+                        let z = sigm(rz[i * 3 * h + 2 * h + j]);
+                        let n =
+                            (n1[i * h + j] + n2[i * h + j] + w[5][j]).tanh();
+                        let hbar = 0.5 * (data[0][i * h + j] + data[1][i * h + j]);
+                        h2[i * h + j] = (1.0 - z) * n + z * hbar;
+                    }
+                }
+                vec![h2]
+            }
+            "treegru_leaf" => {
+                let mut m = vec![0.0; b * h];
+                k::matmul(&data[0], &w[0], &mut m, b, h, h);
+                let mut mb = vec![0.0; b * h];
+                k::add_bias(&m, &w[1], &mut mb);
+                let mut out = vec![0.0; b * h];
+                k::tanh(&mb, &mut out);
+                vec![out]
+            }
+            "mv_cell" => {
+                // cross_l[b] = M_r[b] h_l[b]; cross_r[b] = M_l[b] h_r[b]
+                let mut cat = vec![0.0; b * 2 * h];
+                for i in 0..b {
+                    for r in 0..h {
+                        let mut acc_l = 0.0;
+                        let mut acc_r = 0.0;
+                        for cidx in 0..h {
+                            acc_l += data[3][i * h * h + r * h + cidx] * data[0][i * h + cidx];
+                            acc_r += data[2][i * h * h + r * h + cidx] * data[1][i * h + cidx];
+                        }
+                        cat[i * 2 * h + r] = acc_l;
+                        cat[i * 2 * h + h + r] = acc_r;
+                    }
+                }
+                let mut hv = vec![0.0; b * h];
+                k::matmul(&cat, &w[0], &mut hv, b, 2 * h, h);
+                let mut hvb = vec![0.0; b * h];
+                k::add_bias(&hv, &w[1], &mut hvb);
+                let mut hout = vec![0.0; b * h];
+                k::tanh(&hvb, &mut hout);
+                // m' = w2[h,2h] @ [M_l; M_r] + w3
+                let mut mout = vec![0.0; b * h * h];
+                for i in 0..b {
+                    let mut stacked = vec![0.0; 2 * h * h];
+                    stacked[..h * h].copy_from_slice(&data[2][i * h * h..(i + 1) * h * h]);
+                    stacked[h * h..].copy_from_slice(&data[3][i * h * h..(i + 1) * h * h]);
+                    let mut mm = vec![0.0; h * h];
+                    k::matmul(&w[2], &stacked, &mut mm, h, 2 * h, h);
+                    for (o, (&a, &bv)) in mout[i * h * h..(i + 1) * h * h]
+                        .iter_mut()
+                        .zip(mm.iter().zip(w[3].iter()))
+                    {
+                        *o = a + bv;
+                    }
+                }
+                vec![hout, mout]
+            }
+            "classifier" => {
+                let mut l = vec![0.0; b * nc];
+                k::matmul(&data[0], &w[0], &mut l, b, h, nc);
+                let mut lb = vec![0.0; b * nc];
+                k::add_bias(&l, &w[1], &mut lb);
+                vec![lb]
+            }
+            other => return Err(anyhow!("cpu backend: unknown cell {other}")),
+        };
+        Ok(out)
+    }
+}
+
+// -- small helpers ---------------------------------------------------------
+
+fn two_children(preds: &[NodeId]) -> (NodeId, NodeId) {
+    match preds.len() {
+        0 => (NodeId(0), NodeId(0)),
+        1 => (preds[0], preds[0]),
+        _ => (preds[0], preds[1]),
+    }
+}
+
+fn copy_lane(buf: &mut [f32], lane: usize, w: usize, src: &[f32]) {
+    if src.is_empty() {
+        return; // zero state
+    }
+    let n = w.min(src.len());
+    buf[lane * w..lane * w + n].copy_from_slice(&src[..n]);
+}
+
+fn add_lane(buf: &mut [f32], lane: usize, w: usize, src: &[f32]) {
+    if src.is_empty() {
+        return;
+    }
+    let n = w.min(src.len());
+    k::axpy(1.0, &src[..n], &mut buf[lane * w..lane * w + n]);
+}
+
+/// Sources don't carry an M matrix; leaves over embeds use a deterministic
+/// near-identity matrix so numerics stay bounded.
+fn copy_mv_matrix(buf: &mut [f32], lane: usize, h: usize, node: NodeId, src: &[f32]) {
+    let w = h * h;
+    if src.len() == w {
+        buf[lane * w..(lane + 1) * w].copy_from_slice(src);
+        return;
+    }
+    let mut rng = Rng::new(0x33AA ^ node.0 as u64);
+    for r in 0..h {
+        for c in 0..h {
+            let eye = if r == c { 1.0 } else { 0.0 };
+            buf[lane * w + r * h + c] = eye + (rng.f32() - 0.5) * 0.02;
+        }
+    }
+}
+
+fn sigm(x: f32) -> f32 {
+    1.0 / (1.0 + (-x).exp())
+}
+
+fn affine2(
+    x: &[f32],
+    hvec: &[f32],
+    wx: &[f32],
+    wh: &[f32],
+    bias: &[f32],
+    b: usize,
+    h: usize,
+    n: usize,
+) -> Vec<f32> {
+    let mut g1 = vec![0.0; b * n];
+    k::matmul(x, wx, &mut g1, b, h, n);
+    let mut g2 = vec![0.0; b * n];
+    k::matmul(hvec, wh, &mut g2, b, h, n);
+    let mut s = vec![0.0; b * n];
+    k::add(&g1, &g2, &mut s);
+    let mut out = vec![0.0; b * n];
+    k::add_bias(&s, bias, &mut out);
+    out
+}
+
+fn gru_pointwise(rz: &[f32], nx: &[f32], nh: &[f32], hprev: &[f32], b: usize, h: usize) -> Vec<f32> {
+    let mut out = vec![0.0; b * h];
+    for i in 0..b {
+        for j in 0..h {
+            let r = sigm(rz[i * 2 * h + j]);
+            let z = sigm(rz[i * 2 * h + h + j]);
+            let n = (nx[i * h + j] + r * nh[i * h + j]).tanh();
+            out[i * h + j] = (1.0 - z) * n + z * hprev[i * h + j];
+        }
+    }
+    out
+}
+
+fn lstm_pointwise(gates: &[f32], c: &[f32], b: usize, h: usize) -> Vec<Vec<f32>> {
+    let mut hn = vec![0.0; b * h];
+    let mut cn = vec![0.0; b * h];
+    for i in 0..b {
+        for j in 0..h {
+            let g = |k: usize| gates[i * 4 * h + k * h + j];
+            let cv = sigm(g(1)) * c[i * h + j] + sigm(g(0)) * g(2).tanh();
+            cn[i * h + j] = cv;
+            hn[i * h + j] = sigm(g(3)) * cv.tanh();
+        }
+    }
+    vec![hn, cn]
+}
+
+fn treelstm_pointwise(gates: &[f32], cl: &[f32], cr: &[f32], b: usize, h: usize) -> Vec<Vec<f32>> {
+    let mut hn = vec![0.0; b * h];
+    let mut cn = vec![0.0; b * h];
+    for i in 0..b {
+        for j in 0..h {
+            let g = |k: usize| gates[i * 5 * h + k * h + j];
+            let cv = sigm(g(1)) * cl[i * h + j] + sigm(g(2)) * cr[i * h + j]
+                + sigm(g(0)) * g(3).tanh();
+            cn[i * h + j] = cv;
+            hn[i * h + j] = sigm(g(4)) * cv.tanh();
+        }
+    }
+    vec![hn, cn]
+}
+
+fn treelstm_leaf_pointwise(gates: &[f32], b: usize, h: usize) -> Vec<Vec<f32>> {
+    let mut hn = vec![0.0; b * h];
+    let mut cn = vec![0.0; b * h];
+    for i in 0..b {
+        for j in 0..h {
+            let g = |k: usize| gates[i * 3 * h + k * h + j];
+            let cv = sigm(g(0)) * g(1).tanh();
+            cn[i * h + j] = cv;
+            hn[i * h + j] = sigm(g(2)) * cv.tanh();
+        }
+    }
+    vec![hn, cn]
+}
+
+/// Run a full pipeline (schedule + execute) on a merged graph.
+pub fn run_graph(
+    engine: &mut CellEngine,
+    graph: &mut Graph,
+    types: &TypeRegistry,
+    policy: &mut dyn crate::batching::Policy,
+) -> Result<(crate::coordinator::TimeBreakdown, ExecReport)> {
+    use std::time::Instant;
+    let t0 = Instant::now();
+    graph.freeze();
+    let construction_s = t0.elapsed().as_secs_f64();
+
+    let t1 = Instant::now();
+    let schedule = crate::batching::run_policy(graph, types.num_types(), policy);
+    let scheduling_s = t1.elapsed().as_secs_f64();
+
+    let mut store = StateStore::new(graph.len());
+    let report = engine.execute(graph, types, &schedule, &mut store)?;
+    Ok((
+        crate::coordinator::TimeBreakdown {
+            construction_s,
+            scheduling_s,
+            execution_s: report.exec_s,
+        },
+        report,
+    ))
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::batching::fsm::{Encoding, FsmPolicy};
+    use crate::util::rng::Rng;
+    use crate::workloads::{Workload, WorkloadKind, ALL_WORKLOADS};
+
+    fn run_cpu(kind: WorkloadKind, seed: u64) -> (ExecReport, Vec<Vec<f32>>) {
+        let w = Workload::new(kind, 32);
+        let mut rng = Rng::new(seed);
+        let mut g = w.gen_batch(3, &mut rng);
+        let mut engine = CellEngine::new(Backend::Cpu, 32, 1);
+        let mut policy = FsmPolicy::new(Encoding::Sort);
+        g.freeze();
+        let schedule = crate::batching::run_policy(&g, w.registry.num_types(), &mut policy);
+        let mut store = StateStore::new(g.len());
+        let report = engine
+            .execute(&g, &w.registry, &schedule, &mut store)
+            .unwrap();
+        (report, store.h)
+    }
+
+    #[test]
+    fn cpu_backend_runs_all_workloads() {
+        for kind in ALL_WORKLOADS {
+            let (report, h) = run_cpu(kind, 11);
+            assert!(report.batches > 0, "{kind:?}");
+            assert!(report.kernel_calls > 0, "{kind:?}");
+            // every node got an output
+            assert!(
+                h.iter().all(|v| !v.is_empty()),
+                "{kind:?}: some nodes have no output"
+            );
+            assert!(
+                h.iter().flatten().all(|v| v.is_finite()),
+                "{kind:?}: non-finite outputs"
+            );
+        }
+    }
+
+    #[test]
+    fn deterministic_across_runs() {
+        let (_, h1) = run_cpu(WorkloadKind::TreeLstm, 5);
+        let (_, h2) = run_cpu(WorkloadKind::TreeLstm, 5);
+        assert_eq!(h1, h2);
+    }
+
+    #[test]
+    fn schedule_order_does_not_change_values() {
+        // agenda vs fsm schedules must produce identical node outputs
+        let w = Workload::new(WorkloadKind::LatticeLstm, 32);
+        let mut rng = Rng::new(9);
+        let mut g = w.gen_batch(2, &mut rng);
+        g.freeze();
+        let nt = w.registry.num_types();
+
+        let mut outs = Vec::new();
+        for agenda in [false, true] {
+            let schedule = if agenda {
+                crate::batching::run_policy(
+                    &g,
+                    nt,
+                    &mut crate::batching::agenda::AgendaPolicy::new(nt),
+                )
+            } else {
+                crate::batching::run_policy(&g, nt, &mut FsmPolicy::new(Encoding::Sort))
+            };
+            let mut engine = CellEngine::new(Backend::Cpu, 32, 1);
+            let mut store = StateStore::new(g.len());
+            engine
+                .execute(&g, &w.registry, &schedule, &mut store)
+                .unwrap();
+            outs.push(store.h);
+        }
+        for (a, b) in outs[0].iter().zip(outs[1].iter()) {
+            for (x, y) in a.iter().zip(b.iter()) {
+                assert!((x - y).abs() < 1e-4, "{x} vs {y}");
+            }
+        }
+    }
+
+    #[test]
+    fn in_cell_copy_charge_counts() {
+        let w = Workload::new(WorkloadKind::TreeLstm, 32);
+        let mut rng = Rng::new(2);
+        let mut g = w.gen_batch(2, &mut rng);
+        g.freeze();
+        let schedule = crate::batching::run_policy(
+            &g,
+            w.registry.num_types(),
+            &mut FsmPolicy::new(Encoding::Sort),
+        );
+        let mut base = CellEngine::new(Backend::Cpu, 32, 1);
+        let mut store = StateStore::new(g.len());
+        let r0 = base.execute(&g, &w.registry, &schedule, &mut store).unwrap();
+        let mut charged = CellEngine::new(Backend::Cpu, 32, 1);
+        charged
+            .in_cell_copy_elems
+            .insert("treelstm_internal".into(), (1000, 200));
+        let mut store2 = StateStore::new(g.len());
+        let r1 = charged
+            .execute(&g, &w.registry, &schedule, &mut store2)
+            .unwrap();
+        assert!(r1.memcpy_elems > r0.memcpy_elems);
+    }
+}

@@ -1,0 +1,144 @@
+//! Serving metrics: throughput, latency percentiles, batching counters.
+
+use std::sync::Mutex;
+use std::time::{Duration, Instant};
+
+use crate::util::stats::Samples;
+
+use super::TimeBreakdown;
+
+#[derive(Default)]
+struct Inner {
+    latencies: Samples,
+    breakdown: TimeBreakdown,
+    requests: u64,
+    instances: u64,
+    batches_executed: u64,
+    kernel_calls: u64,
+    memcpy_elems: u64,
+    padded_lanes: u64,
+}
+
+/// Thread-safe metrics sink shared between server workers.
+pub struct Metrics {
+    inner: Mutex<Inner>,
+    started: Mutex<Instant>,
+}
+
+impl Default for Metrics {
+    fn default() -> Self {
+        Metrics::new()
+    }
+}
+
+/// Snapshot for reporting.
+#[derive(Clone, Debug)]
+pub struct MetricsSnapshot {
+    pub requests: u64,
+    pub instances: u64,
+    pub batches_executed: u64,
+    pub kernel_calls: u64,
+    pub memcpy_elems: u64,
+    pub padded_lanes: u64,
+    pub latency_p50_s: f64,
+    pub latency_p99_s: f64,
+    pub latency_mean_s: f64,
+    pub breakdown: TimeBreakdown,
+    pub elapsed_s: f64,
+}
+
+impl MetricsSnapshot {
+    pub fn throughput(&self) -> f64 {
+        if self.elapsed_s <= 0.0 {
+            return 0.0;
+        }
+        self.instances as f64 / self.elapsed_s
+    }
+}
+
+impl Metrics {
+    pub fn new() -> Self {
+        Metrics {
+            inner: Mutex::new(Inner::default()),
+            started: Mutex::new(Instant::now()),
+        }
+    }
+
+    /// Restart the throughput clock (called once the server finishes boot —
+    /// artifact compilation and policy training shouldn't count against
+    /// serving throughput).
+    pub fn reset_clock(&self) {
+        *self.started.lock().unwrap() = Instant::now();
+    }
+
+    pub fn record_request(&self, latency: Duration) {
+        let mut g = self.inner.lock().unwrap();
+        g.requests += 1;
+        g.latencies.record_duration(latency);
+    }
+
+    pub fn record_minibatch(
+        &self,
+        instances: usize,
+        breakdown: &TimeBreakdown,
+        report: &crate::coordinator::engine::ExecReport,
+    ) {
+        let mut g = self.inner.lock().unwrap();
+        g.instances += instances as u64;
+        g.breakdown.add(breakdown);
+        g.batches_executed += report.batches as u64;
+        g.kernel_calls += report.kernel_calls as u64;
+        g.memcpy_elems += report.memcpy_elems as u64;
+        g.padded_lanes += report.padded_lanes as u64;
+    }
+
+    pub fn snapshot(&self) -> MetricsSnapshot {
+        let g = self.inner.lock().unwrap();
+        MetricsSnapshot {
+            requests: g.requests,
+            instances: g.instances,
+            batches_executed: g.batches_executed,
+            kernel_calls: g.kernel_calls,
+            memcpy_elems: g.memcpy_elems,
+            padded_lanes: g.padded_lanes,
+            latency_p50_s: g.latencies.p50(),
+            latency_p99_s: g.latencies.p99(),
+            latency_mean_s: g.latencies.mean(),
+            breakdown: g.breakdown,
+            elapsed_s: self.started.lock().unwrap().elapsed().as_secs_f64(),
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::coordinator::engine::ExecReport;
+
+    #[test]
+    fn records_and_snapshots() {
+        let m = Metrics::new();
+        m.record_request(Duration::from_millis(10));
+        m.record_request(Duration::from_millis(30));
+        let report = ExecReport {
+            batches: 5,
+            kernel_calls: 7,
+            padded_lanes: 2,
+            memcpy_elems: 100,
+            exec_s: 0.01,
+        };
+        let bd = TimeBreakdown {
+            construction_s: 0.001,
+            scheduling_s: 0.002,
+            execution_s: 0.01,
+        };
+        m.record_minibatch(4, &bd, &report);
+        let s = m.snapshot();
+        assert_eq!(s.requests, 2);
+        assert_eq!(s.instances, 4);
+        assert_eq!(s.batches_executed, 5);
+        assert_eq!(s.kernel_calls, 7);
+        assert!(s.latency_p50_s >= 0.01);
+        assert!(s.throughput() > 0.0);
+    }
+}

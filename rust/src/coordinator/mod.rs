@@ -1,0 +1,60 @@
+//! Layer-3 coordinator: the serving front-end over the batching runtime.
+//!
+//! * [`engine`] — cell-granularity batched execution of scheduled graphs
+//!   (PJRT artifacts on the hot path, plus a CPU reference backend used to
+//!   cross-check numerics in tests),
+//! * [`server`] — thread-based request router + dynamic batcher,
+//! * [`metrics`] — throughput/latency accounting,
+//! * [`policies`] — load/train/persist the per-workload FSM policies.
+
+pub mod engine;
+pub mod metrics;
+pub mod policies;
+pub mod server;
+
+/// Which batching policy + memory mode a serving configuration uses —
+/// the three systems Fig.6/Fig.8 compare.
+#[derive(Clone, Copy, Debug, PartialEq, Eq, Hash)]
+pub enum SystemMode {
+    /// DyNet: agenda-based batching at primitive granularity (no static
+    /// subgraph pre-definition).
+    VanillaDyNet,
+    /// DyNet + Cavs optimizations: cell-granularity batching with the
+    /// better of agenda/depth, DyNet memory allocation inside cells.
+    CavsDyNet,
+    /// This paper: learned-FSM batching + PQ-tree cell memory planning.
+    EdBatch,
+}
+
+impl SystemMode {
+    pub fn name(self) -> &'static str {
+        match self {
+            SystemMode::VanillaDyNet => "vanilla-dynet",
+            SystemMode::CavsDyNet => "cavs-dynet",
+            SystemMode::EdBatch => "ed-batch",
+        }
+    }
+}
+
+/// Per-inference-pass time decomposition (Fig.8).
+#[derive(Clone, Copy, Debug, Default)]
+pub struct TimeBreakdown {
+    /// dataflow-graph definition time
+    pub construction_s: f64,
+    /// dynamic-batching analysis time
+    pub scheduling_s: f64,
+    /// batched kernel execution (incl. gather/scatter)
+    pub execution_s: f64,
+}
+
+impl TimeBreakdown {
+    pub fn total(&self) -> f64 {
+        self.construction_s + self.scheduling_s + self.execution_s
+    }
+
+    pub fn add(&mut self, other: &TimeBreakdown) {
+        self.construction_s += other.construction_s;
+        self.scheduling_s += other.scheduling_s;
+        self.execution_s += other.execution_s;
+    }
+}

@@ -1,0 +1,67 @@
+//! Policy store: train-or-load the per-workload FSM batching policies.
+//!
+//! Training happens once per (workload, encoding) before serving (paper §4:
+//! "Before execution, the RL algorithm learns the batching policy") and the
+//! learned Q-table is persisted to `artifacts/policy_<workload>.json` so
+//! subsequent boots skip training.
+
+use std::path::Path;
+
+use anyhow::{anyhow, Result};
+
+use crate::batching::fsm::{Encoding, FsmPolicy};
+use crate::rl::{train, TrainConfig, TrainStats};
+use crate::util::json::Json;
+use crate::workloads::{Workload, WorkloadKind};
+
+pub fn policy_path(dir: &str, kind: WorkloadKind, encoding: Encoding) -> String {
+    format!("{dir}/policy_{}_{}.json", kind.name(), encoding.name())
+}
+
+/// Load a persisted policy, or train one and persist it.
+pub fn load_or_train(
+    dir: &str,
+    workload: &Workload,
+    encoding: Encoding,
+    cfg: &TrainConfig,
+    seed: u64,
+) -> Result<(FsmPolicy, Option<TrainStats>)> {
+    let path = policy_path(dir, workload.kind, encoding);
+    if Path::new(&path).exists() {
+        let text = std::fs::read_to_string(&path)?;
+        let j = Json::parse(&text).map_err(|e| anyhow!("policy json: {e}"))?;
+        let p = FsmPolicy::from_json(&j).map_err(|e| anyhow!("policy decode: {e}"))?;
+        return Ok((p, None));
+    }
+    let (policy, stats) = train(workload, encoding, cfg, seed);
+    if let Some(parent) = Path::new(&path).parent() {
+        let _ = std::fs::create_dir_all(parent);
+    }
+    std::fs::write(&path, policy.to_json().to_string())?;
+    Ok((policy, Some(stats)))
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn trains_then_loads_roundtrip() {
+        let dir = std::env::temp_dir().join(format!("edbatch_pol_{}", std::process::id()));
+        let dir = dir.to_str().unwrap().to_string();
+        let w = Workload::new(WorkloadKind::TreeLstm, 32);
+        let cfg = TrainConfig {
+            max_iters: 100,
+            check_every: 25,
+            train_batch: 2,
+            ..TrainConfig::default()
+        };
+        let (p1, stats1) = load_or_train(&dir, &w, Encoding::Sort, &cfg, 3).unwrap();
+        assert!(stats1.is_some(), "first call trains");
+        let (p2, stats2) = load_or_train(&dir, &w, Encoding::Sort, &cfg, 3).unwrap();
+        assert!(stats2.is_none(), "second call loads");
+        assert_eq!(p1.states.len(), p2.states.len());
+        assert_eq!(p1.q.len(), p2.q.len());
+        let _ = std::fs::remove_dir_all(&dir);
+    }
+}

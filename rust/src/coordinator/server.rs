@@ -1,0 +1,397 @@
+//! The serving front-end: request router + dynamic batcher.
+//!
+//! A worker thread owns the engine (and the PJRT client, which is not
+//! shared across threads); clients submit instances through a channel and
+//! block on a per-request response channel. The batcher groups up to
+//! `max_batch` instances arriving within `batch_window` (classic
+//! size-or-timeout dynamic batching), merges their dataflow graphs, runs
+//! the configured batching policy, and executes.
+//!
+//! (tokio is unavailable in this build environment — see Cargo.toml — so
+//! the router is built on std::sync::mpsc + threads; the architecture is
+//! the same as an async one: one logical task per request, one batcher.)
+
+use std::sync::atomic::{AtomicBool, Ordering};
+use std::sync::mpsc::{sync_channel, Receiver, RecvTimeoutError, SyncSender};
+use std::sync::Arc;
+use std::thread::JoinHandle;
+use std::time::{Duration, Instant};
+
+use anyhow::{anyhow, Result};
+
+use crate::batching::agenda::AgendaPolicy;
+use crate::batching::depth::DepthPolicy;
+use crate::batching::fsm::Encoding;
+use crate::batching::{run_policy, Policy};
+use crate::graph::Graph;
+use crate::rl::TrainConfig;
+use crate::runtime::ArtifactRegistry;
+use crate::util::rng::Rng;
+use crate::workloads::{Workload, WorkloadKind};
+
+use super::engine::{Backend, CellEngine, ExecReport, StateStore};
+use super::metrics::Metrics;
+use super::{SystemMode, TimeBreakdown};
+
+#[derive(Clone, Debug)]
+pub struct ServerConfig {
+    pub workload: WorkloadKind,
+    pub hidden: usize,
+    pub mode: SystemMode,
+    /// max instances per merged mini-batch
+    pub max_batch: usize,
+    /// how long the batcher waits to fill a mini-batch
+    pub batch_window: Duration,
+    /// artifacts directory; None = CPU reference backend
+    pub artifacts_dir: Option<String>,
+    pub encoding: Encoding,
+    pub seed: u64,
+}
+
+impl Default for ServerConfig {
+    fn default() -> Self {
+        ServerConfig {
+            workload: WorkloadKind::TreeLstm,
+            hidden: 64,
+            mode: SystemMode::EdBatch,
+            max_batch: 32,
+            batch_window: Duration::from_millis(2),
+            artifacts_dir: None,
+            encoding: Encoding::Sort,
+            seed: 7,
+        }
+    }
+}
+
+/// One inference request: a single instance's dataflow graph.
+pub struct Request {
+    pub graph: Graph,
+    submitted: Instant,
+    respond: SyncSender<Response>,
+}
+
+/// Response: the h-outputs of the instance's sink nodes (nodes with no
+/// consumers), plus timing.
+#[derive(Clone, Debug)]
+pub struct Response {
+    pub sink_outputs: Vec<Vec<f32>>,
+    pub latency: Duration,
+}
+
+pub struct Server {
+    tx: SyncSender<Request>,
+    pub metrics: Arc<Metrics>,
+    stop: Arc<AtomicBool>,
+    handle: Option<JoinHandle<Result<()>>>,
+}
+
+pub struct Client {
+    tx: SyncSender<Request>,
+}
+
+impl Client {
+    /// Blocking inference call.
+    pub fn infer(&self, graph: Graph) -> Result<Response> {
+        let (rtx, rrx) = sync_channel(1);
+        self.tx
+            .send(Request {
+                graph,
+                submitted: Instant::now(),
+                respond: rtx,
+            })
+            .map_err(|_| anyhow!("server stopped"))?;
+        rrx.recv().map_err(|_| anyhow!("server dropped request"))
+    }
+}
+
+impl Server {
+    pub fn start(config: ServerConfig) -> Result<Server> {
+        let metrics = Arc::new(Metrics::new());
+        let (tx, rx) = sync_channel::<Request>(1024);
+        let (ready_tx, ready_rx) = sync_channel::<()>(1);
+        let m2 = metrics.clone();
+        let stop = Arc::new(AtomicBool::new(false));
+        let s2 = stop.clone();
+        let handle = std::thread::Builder::new()
+            .name("ed-batch-worker".into())
+            .spawn(move || worker_loop(config, rx, m2, s2, ready_tx))
+            .expect("spawn worker");
+        // block until the engine is built (artifacts compiled, policy
+        // trained/loaded) so boot time never counts as request latency
+        let _ = ready_rx.recv();
+        metrics.reset_clock();
+        Ok(Server {
+            tx,
+            metrics,
+            stop,
+            handle: Some(handle),
+        })
+    }
+
+    pub fn client(&self) -> Client {
+        Client {
+            tx: self.tx.clone(),
+        }
+    }
+
+    /// Graceful shutdown: signal the worker and join it. In-flight
+    /// requests are completed; clients holding a [`Client`] afterwards
+    /// get an error on `infer`.
+    pub fn shutdown(mut self) -> Result<()> {
+        self.stop.store(true, Ordering::SeqCst);
+        drop(self.tx);
+        if let Some(h) = self.handle.take() {
+            h.join().map_err(|_| anyhow!("worker panicked"))??;
+        }
+        Ok(())
+    }
+}
+
+/// Build the batching policy for a mode. For Cavs, calibrate agenda vs
+/// depth on a sample graph and keep the better (paper §5.1).
+pub fn policy_for_mode(
+    mode: SystemMode,
+    workload: &Workload,
+    encoding: Encoding,
+    artifacts_dir: Option<&str>,
+    seed: u64,
+) -> Result<Box<dyn Policy + Send>> {
+    let nt = workload.registry.num_types();
+    match mode {
+        SystemMode::VanillaDyNet => Ok(Box::new(AgendaPolicy::new(nt))),
+        SystemMode::CavsDyNet => {
+            let mut rng = Rng::new(seed);
+            let mut sample = workload.gen_batch(8, &mut rng);
+            sample.freeze();
+            let agenda = run_policy(&sample, nt, &mut AgendaPolicy::new(nt)).num_batches();
+            let depth = run_policy(&sample, nt, &mut DepthPolicy::new()).num_batches();
+            if depth < agenda {
+                Ok(Box::new(DepthPolicy::new()))
+            } else {
+                Ok(Box::new(AgendaPolicy::new(nt)))
+            }
+        }
+        SystemMode::EdBatch => {
+            let dir = artifacts_dir.unwrap_or("artifacts");
+            let cfg = TrainConfig::default();
+            let (policy, _) =
+                super::policies::load_or_train(dir, workload, encoding, &cfg, seed)?;
+            Ok(Box::new(policy))
+        }
+    }
+}
+
+fn worker_loop(
+    config: ServerConfig,
+    rx: Receiver<Request>,
+    metrics: Arc<Metrics>,
+    stop: Arc<AtomicBool>,
+    ready: SyncSender<()>,
+) -> Result<()> {
+    let workload = Workload::new(config.workload, config.hidden);
+    let registry = match &config.artifacts_dir {
+        Some(dir) => {
+            let hidden = config.hidden;
+            Some(ArtifactRegistry::load(
+                dir,
+                Some(&move |k| k.hidden == hidden),
+            )?)
+        }
+        None => None,
+    };
+    let mut engine = match &registry {
+        Some(reg) => CellEngine::new(Backend::Pjrt(reg), config.hidden, config.seed),
+        None => CellEngine::new(Backend::Cpu, config.hidden, config.seed),
+    };
+    // apply the mode's in-cell memory/launch profile (same accounting the
+    // Fig.6/Fig.8 harnesses use)
+    let charges =
+        crate::benchsuite::fig6::charges_for_mode(config.mode, &workload.registry, config.hidden);
+    engine.in_cell_copy_elems = charges.copy_elems;
+    engine.extra_launches = charges.extra_launches;
+    let mut policy = policy_for_mode(
+        config.mode,
+        &workload,
+        config.encoding,
+        config.artifacts_dir.as_deref(),
+        config.seed,
+    )?;
+    let _ = ready.send(());
+
+    loop {
+        // wait for the first request of a mini-batch, polling the stop flag
+        let first = loop {
+            if stop.load(Ordering::SeqCst) {
+                // drain anything already queued, then exit
+                match rx.try_recv() {
+                    Ok(r) => break r,
+                    Err(_) => return Ok(()),
+                }
+            }
+            match rx.recv_timeout(Duration::from_millis(20)) {
+                Ok(r) => break r,
+                Err(RecvTimeoutError::Timeout) => continue,
+                Err(RecvTimeoutError::Disconnected) => return Ok(()),
+            }
+        };
+        let mut pending = vec![first];
+        let deadline = Instant::now() + config.batch_window;
+        while pending.len() < config.max_batch {
+            let now = Instant::now();
+            if now >= deadline {
+                break;
+            }
+            match rx.recv_timeout(deadline - now) {
+                Ok(r) => pending.push(r),
+                Err(RecvTimeoutError::Timeout) => break,
+                Err(RecvTimeoutError::Disconnected) => break,
+            }
+        }
+        process_minibatch(
+            &workload,
+            &mut engine,
+            policy.as_mut(),
+            &metrics,
+            pending,
+        )?;
+    }
+}
+
+fn process_minibatch(
+    workload: &Workload,
+    engine: &mut CellEngine,
+    policy: &mut (dyn Policy + Send),
+    metrics: &Metrics,
+    pending: Vec<Request>,
+) -> Result<()> {
+    // -- construction: merge instance graphs -----------------------------
+    let t0 = Instant::now();
+    let mut merged = Graph::new();
+    let mut offsets = Vec::with_capacity(pending.len());
+    for req in &pending {
+        offsets.push(merged.merge(&req.graph));
+    }
+    merged.freeze();
+    let construction_s = t0.elapsed().as_secs_f64();
+
+    // -- scheduling -------------------------------------------------------
+    let t1 = Instant::now();
+    let schedule = run_policy(&merged, workload.registry.num_types(), policy);
+    let scheduling_s = t1.elapsed().as_secs_f64();
+
+    // -- execution ----------------------------------------------------------
+    let mut store = StateStore::new(merged.len());
+    let report: ExecReport = engine.execute(&merged, &workload.registry, &schedule, &mut store)?;
+
+    let breakdown = TimeBreakdown {
+        construction_s,
+        scheduling_s,
+        execution_s: report.exec_s,
+    };
+    metrics.record_minibatch(pending.len(), &breakdown, &report);
+
+    // -- respond: sink node outputs per instance ---------------------------
+    // compute consumer counts once
+    let mut has_consumer = vec![false; merged.len()];
+    for n in &merged.nodes {
+        for p in &n.preds {
+            has_consumer[p.idx()] = true;
+        }
+    }
+    for (i, req) in pending.into_iter().enumerate() {
+        let start = offsets[i] as usize;
+        let end = if i + 1 < offsets.len() {
+            offsets[i + 1] as usize
+        } else {
+            merged.len()
+        };
+        let sink_outputs: Vec<Vec<f32>> = (start..end)
+            .filter(|&j| !has_consumer[j])
+            .map(|j| store.h[j].clone())
+            .collect();
+        let latency = req.submitted.elapsed();
+        metrics.record_request(latency);
+        let _ = req.respond.send(Response {
+            sink_outputs,
+            latency,
+        });
+    }
+    Ok(())
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn quick_config(mode: SystemMode) -> ServerConfig {
+        ServerConfig {
+            workload: WorkloadKind::TreeLstm,
+            hidden: 32,
+            mode,
+            max_batch: 8,
+            batch_window: Duration::from_millis(1),
+            artifacts_dir: None, // CPU backend for unit tests
+            encoding: Encoding::Sort,
+            seed: 3,
+        }
+    }
+
+    #[test]
+    fn serves_requests_cpu_backend() {
+        // NOTE: EdBatch mode would train + persist a policy; use Cavs here
+        // to keep unit tests filesystem-free. EdBatch covered in
+        // integration tests with a temp dir.
+        let server = Server::start(quick_config(SystemMode::CavsDyNet)).unwrap();
+        let client = server.client();
+        let w = Workload::new(WorkloadKind::TreeLstm, 32);
+        let mut rng = Rng::new(1);
+        for _ in 0..5 {
+            let g = w.gen_instance(&mut rng);
+            let resp = client.infer(g).unwrap();
+            assert!(!resp.sink_outputs.is_empty());
+            assert!(resp.sink_outputs.iter().flatten().all(|v| v.is_finite()));
+        }
+        let snap = server.metrics.snapshot();
+        assert_eq!(snap.requests, 5);
+        assert!(snap.batches_executed > 0);
+        server.shutdown().unwrap();
+    }
+
+    #[test]
+    fn concurrent_clients_get_batched() {
+        let mut cfg = quick_config(SystemMode::CavsDyNet);
+        cfg.batch_window = Duration::from_millis(20);
+        let server = Server::start(cfg).unwrap();
+        let w = Arc::new(Workload::new(WorkloadKind::TreeLstm, 32));
+        let mut handles = Vec::new();
+        for t in 0..6 {
+            let client = server.client();
+            let w = w.clone();
+            handles.push(std::thread::spawn(move || {
+                let mut rng = Rng::new(100 + t);
+                let g = w.gen_instance(&mut rng);
+                client.infer(g).unwrap()
+            }));
+        }
+        for h in handles {
+            let resp = h.join().unwrap();
+            assert!(!resp.sink_outputs.is_empty());
+        }
+        let snap = server.metrics.snapshot();
+        assert_eq!(snap.requests, 6);
+        // the 20ms window should have merged several requests per mini-batch
+        assert!(snap.instances >= 6);
+        server.shutdown().unwrap();
+    }
+
+    #[test]
+    fn vanilla_mode_works() {
+        let server = Server::start(quick_config(SystemMode::VanillaDyNet)).unwrap();
+        let client = server.client();
+        let w = Workload::new(WorkloadKind::BiLstmTagger, 32);
+        let mut rng = Rng::new(5);
+        let resp = client.infer(w.gen_instance(&mut rng)).unwrap();
+        assert!(!resp.sink_outputs.is_empty());
+        server.shutdown().unwrap();
+    }
+}

@@ -1,0 +1,170 @@
+//! CPU primitive kernels — the "vendor library" stand-in for the
+//! DyNet-granularity baseline and the static-subgraph executor.
+//!
+//! The matmul is register-blocked (4x4 micro-kernel over k) which is enough
+//! to make the executor compute-bound at the Table-2 sizes; elementwise ops
+//! are simple vectorizable loops.
+
+/// C[m,n] = A[m,k] @ B[k,n], row-major, accumulate-into (C pre-zeroed).
+pub fn matmul(a: &[f32], b: &[f32], c: &mut [f32], m: usize, k: usize, n: usize) {
+    debug_assert_eq!(a.len(), m * k);
+    debug_assert_eq!(b.len(), k * n);
+    debug_assert_eq!(c.len(), m * n);
+    c.fill(0.0);
+    // i-k-j loop order: unit-stride inner loop over both B and C rows
+    for i in 0..m {
+        let arow = &a[i * k..(i + 1) * k];
+        let crow = &mut c[i * n..(i + 1) * n];
+        for (kk, &av) in arow.iter().enumerate() {
+            if av == 0.0 {
+                continue;
+            }
+            let brow = &b[kk * n..(kk + 1) * n];
+            for (cv, &bv) in crow.iter_mut().zip(brow.iter()) {
+                *cv += av * bv;
+            }
+        }
+    }
+}
+
+#[inline]
+pub fn add(a: &[f32], b: &[f32], out: &mut [f32]) {
+    for ((o, &x), &y) in out.iter_mut().zip(a).zip(b) {
+        *o = x + y;
+    }
+}
+
+#[inline]
+pub fn add3(a: &[f32], b: &[f32], c: &[f32], out: &mut [f32]) {
+    for (((o, &x), &y), &z) in out.iter_mut().zip(a).zip(b).zip(c) {
+        *o = x + y + z;
+    }
+}
+
+/// rows of `a` [rows, n] plus bias [n]
+pub fn add_bias(a: &[f32], bias: &[f32], out: &mut [f32]) {
+    let n = bias.len();
+    debug_assert_eq!(a.len() % n, 0);
+    for (orow, arow) in out.chunks_exact_mut(n).zip(a.chunks_exact(n)) {
+        for ((o, &x), &b) in orow.iter_mut().zip(arow).zip(bias) {
+            *o = x + b;
+        }
+    }
+}
+
+#[inline]
+pub fn sigmoid(a: &[f32], out: &mut [f32]) {
+    for (o, &x) in out.iter_mut().zip(a) {
+        *o = 1.0 / (1.0 + (-x).exp());
+    }
+}
+
+#[inline]
+pub fn tanh(a: &[f32], out: &mut [f32]) {
+    for (o, &x) in out.iter_mut().zip(a) {
+        *o = x.tanh();
+    }
+}
+
+#[inline]
+pub fn cmult(a: &[f32], b: &[f32], out: &mut [f32]) {
+    for ((o, &x), &y) in out.iter_mut().zip(a).zip(b) {
+        *o = x * y;
+    }
+}
+
+#[inline]
+pub fn one_minus(a: &[f32], out: &mut [f32]) {
+    for (o, &x) in out.iter_mut().zip(a) {
+        *o = 1.0 - x;
+    }
+}
+
+#[inline]
+pub fn mean2(a: &[f32], b: &[f32], out: &mut [f32]) {
+    for ((o, &x), &y) in out.iter_mut().zip(a).zip(b) {
+        *o = 0.5 * (x + y);
+    }
+}
+
+#[inline]
+pub fn axpy(alpha: f32, x: &[f32], y: &mut [f32]) {
+    for (yo, &xv) in y.iter_mut().zip(x) {
+        *yo += alpha * xv;
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn matmul_identity() {
+        // A @ I = A
+        let a = vec![1.0, 2.0, 3.0, 4.0, 5.0, 6.0]; // 2x3
+        let mut eye = vec![0.0; 9];
+        for i in 0..3 {
+            eye[i * 3 + i] = 1.0;
+        }
+        let mut c = vec![0.0; 6];
+        matmul(&a, &eye, &mut c, 2, 3, 3);
+        assert_eq!(c, a);
+    }
+
+    #[test]
+    fn matmul_known_values() {
+        // [[1,2],[3,4]] @ [[5,6],[7,8]] = [[19,22],[43,50]]
+        let a = vec![1.0, 2.0, 3.0, 4.0];
+        let b = vec![5.0, 6.0, 7.0, 8.0];
+        let mut c = vec![0.0; 4];
+        matmul(&a, &b, &mut c, 2, 2, 2);
+        assert_eq!(c, vec![19.0, 22.0, 43.0, 50.0]);
+    }
+
+    #[test]
+    fn matmul_rectangular() {
+        // 1x3 @ 3x2
+        let a = vec![1.0, 0.5, -1.0];
+        let b = vec![2.0, 0.0, 4.0, 2.0, 6.0, -2.0];
+        let mut c = vec![0.0; 2];
+        matmul(&a, &b, &mut c, 1, 3, 2);
+        assert_eq!(c, vec![1.0 * 2.0 + 0.5 * 4.0 - 6.0, 1.0 + 2.0]);
+    }
+
+    #[test]
+    fn elementwise_ops() {
+        let a = vec![0.0, 1.0, -1.0];
+        let b = vec![2.0, 3.0, 4.0];
+        let mut out = vec![0.0; 3];
+        add(&a, &b, &mut out);
+        assert_eq!(out, vec![2.0, 4.0, 3.0]);
+        cmult(&a, &b, &mut out);
+        assert_eq!(out, vec![0.0, 3.0, -4.0]);
+        one_minus(&a, &mut out);
+        assert_eq!(out, vec![1.0, 0.0, 2.0]);
+        mean2(&a, &b, &mut out);
+        assert_eq!(out, vec![1.0, 2.0, 1.5]);
+    }
+
+    #[test]
+    fn sigmoid_tanh_ranges() {
+        let a: Vec<f32> = (-10..=10).map(|i| i as f32).collect();
+        let mut s = vec![0.0; a.len()];
+        sigmoid(&a, &mut s);
+        assert!(s.iter().all(|&v| (0.0..=1.0).contains(&v)));
+        assert!((s[10] - 0.5).abs() < 1e-6);
+        let mut t = vec![0.0; a.len()];
+        tanh(&a, &mut t);
+        assert!(t.iter().all(|&v| (-1.0..=1.0).contains(&v)));
+        assert!(t[10].abs() < 1e-6);
+    }
+
+    #[test]
+    fn add_bias_broadcasts_rows() {
+        let a = vec![1.0, 2.0, 3.0, 4.0]; // 2 rows of 2
+        let bias = vec![10.0, 20.0];
+        let mut out = vec![0.0; 4];
+        add_bias(&a, &bias, &mut out);
+        assert_eq!(out, vec![11.0, 22.0, 13.0, 24.0]);
+    }
+}

@@ -1,0 +1,271 @@
+//! Frontier tracking for Alg.1 — the runtime-critical core of dynamic
+//! batching. Maintains, incrementally per executed batch:
+//!
+//! * `Frontier_t(G)` — ready (in-degree-0) unexecuted nodes per type,
+//! * `|Frontier(G^t)|` — the frontier size of the *type-induced subgraph*
+//!   `G^t` (type-t nodes with no unexecuted type-t direct predecessor),
+//!   which is the denominator of the paper's reward Eq.(1) / Lemma 1.
+//!
+//! All updates are O(out-degree) per executed node; state queries are O(T).
+
+use super::{Graph, NodeId, OpType};
+
+#[derive(Clone, Debug)]
+pub struct Frontier {
+    /// remaining unexecuted-pred count per node
+    indeg: Vec<u32>,
+    /// remaining unexecuted same-type pred count per node (for G^t frontier)
+    same_indeg: Vec<u32>,
+    executed: Vec<bool>,
+    /// ready node list per type
+    ready: Vec<Vec<NodeId>>,
+    /// |Frontier(G^t)| per type
+    subgraph_frontier: Vec<u32>,
+    /// number of unexecuted nodes
+    remaining: usize,
+    num_types: usize,
+}
+
+impl Frontier {
+    /// `graph` must be frozen (successor table built).
+    pub fn new(graph: &Graph, num_types: usize) -> Self {
+        let n = graph.len();
+        let mut indeg = vec![0u32; n];
+        let mut same_indeg = vec![0u32; n];
+        for (i, node) in graph.nodes.iter().enumerate() {
+            indeg[i] = node.preds.len() as u32;
+            same_indeg[i] = node
+                .preds
+                .iter()
+                .filter(|p| graph.op(**p) == node.op)
+                .count() as u32;
+        }
+        let mut ready = vec![Vec::new(); num_types];
+        let mut subgraph_frontier = vec![0u32; num_types];
+        for (i, node) in graph.nodes.iter().enumerate() {
+            if indeg[i] == 0 {
+                ready[node.op.0 as usize].push(NodeId(i as u32));
+            }
+            if same_indeg[i] == 0 {
+                subgraph_frontier[node.op.0 as usize] += 1;
+            }
+        }
+        Frontier {
+            indeg,
+            same_indeg,
+            executed: vec![false; n],
+            ready,
+            subgraph_frontier,
+            remaining: n,
+            num_types,
+        }
+    }
+
+    pub fn remaining(&self) -> usize {
+        self.remaining
+    }
+
+    pub fn is_done(&self) -> bool {
+        self.remaining == 0
+    }
+
+    /// |Frontier_t(G)|
+    #[inline]
+    pub fn ready_count(&self, t: OpType) -> usize {
+        self.ready[t.0 as usize].len()
+    }
+
+    /// The ready nodes of type `t` (read-only view).
+    #[inline]
+    pub fn ready_nodes(&self, t: OpType) -> &[NodeId] {
+        &self.ready[t.0 as usize]
+    }
+
+    /// |Frontier(G^t)| — frontier size of the type-induced subgraph.
+    #[inline]
+    pub fn subgraph_frontier_count(&self, t: OpType) -> usize {
+        self.subgraph_frontier[t.0 as usize] as usize
+    }
+
+    /// Types with at least one ready node, ascending type id.
+    pub fn ready_types(&self) -> Vec<OpType> {
+        (0..self.num_types)
+            .filter(|&t| !self.ready[t].is_empty())
+            .map(|t| OpType(t as u16))
+            .collect()
+    }
+
+    /// Reward ratio of Eq.(1): |Frontier_t(G)| / |Frontier(G^t)| ∈ (0, 1].
+    ///
+    /// (The paper's Eq.(1) prints the reciprocal, but its worked example
+    /// — 5/7 for O vs 1/1 for I — and Lemma 1 both require the ratio to be
+    /// ≤ 1 and maximal exactly when every subgraph-frontier node is ready;
+    /// we implement that reading.)
+    pub fn reward_ratio(&self, t: OpType) -> f64 {
+        let sub = self.subgraph_frontier_count(t);
+        if sub == 0 {
+            return 0.0;
+        }
+        self.ready_count(t) as f64 / sub as f64
+    }
+
+    /// Take all ready nodes of type `t` as the next batch (Alg.1 line 4).
+    /// Does NOT update dependency state — call [`Frontier::commit`] after
+    /// the batch is (logically) executed.
+    pub fn pop_batch(&mut self, t: OpType) -> Vec<NodeId> {
+        std::mem::take(&mut self.ready[t.0 as usize])
+    }
+
+    /// Take only the ready nodes of type `t` satisfying `keep` (used by the
+    /// depth-based baseline, which batches per (type, depth) pair).
+    pub fn pop_batch_where(
+        &mut self,
+        t: OpType,
+        mut keep: impl FnMut(NodeId) -> bool,
+    ) -> Vec<NodeId> {
+        let ready = &mut self.ready[t.0 as usize];
+        let mut taken = Vec::new();
+        ready.retain(|&n| {
+            if keep(n) {
+                taken.push(n);
+                false
+            } else {
+                true
+            }
+        });
+        taken
+    }
+
+    /// Mark `batch` executed and update ready sets (Alg.1 line 6).
+    pub fn commit(&mut self, graph: &Graph, batch: &[NodeId]) {
+        for &v in batch {
+            debug_assert!(!self.executed[v.idx()], "double execution of {v:?}");
+            debug_assert_eq!(self.indeg[v.idx()], 0, "{v:?} executed before ready");
+            self.executed[v.idx()] = true;
+            self.remaining -= 1;
+            // v leaves G^t's frontier (ready nodes always belong to it)
+            let t = graph.op(v).0 as usize;
+            debug_assert!(self.subgraph_frontier[t] > 0);
+            self.subgraph_frontier[t] -= 1;
+            for &s in graph.succs(v) {
+                let si = s.idx();
+                self.indeg[si] -= 1;
+                if self.indeg[si] == 0 {
+                    self.ready[graph.op(s).0 as usize].push(s);
+                }
+                if graph.op(s) == graph.op(v) {
+                    self.same_indeg[si] -= 1;
+                    if self.same_indeg[si] == 0 {
+                        self.subgraph_frontier[graph.op(s).0 as usize] += 1;
+                    }
+                }
+            }
+        }
+    }
+
+    /// Convenience: pop + commit in one step, returning the batch.
+    pub fn execute_type(&mut self, graph: &Graph, t: OpType) -> Vec<NodeId> {
+        let batch = self.pop_batch(t);
+        self.commit(graph, &batch);
+        batch
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::graph::Graph;
+
+    /// Fig.1(a)-style mini tree: I internal, O output, R reduction.
+    /// leaves (I) -> I -> I chain; each I also feeds an O; O's feed an R chain.
+    fn io_tree() -> (Graph, OpType, OpType, OpType) {
+        let (ti, to, tr) = (OpType(0), OpType(1), OpType(2));
+        let mut g = Graph::new();
+        // chain of 4 I nodes (parse-tree spine)
+        let i0 = g.add(ti, vec![], 0);
+        let i1 = g.add(ti, vec![i0], 0);
+        let i2 = g.add(ti, vec![i1], 0);
+        let i3 = g.add(ti, vec![i2], 0);
+        // each I feeds an O
+        let o0 = g.add(to, vec![i0], 0);
+        let o1 = g.add(to, vec![i1], 0);
+        let o2 = g.add(to, vec![i2], 0);
+        let o3 = g.add(to, vec![i3], 0);
+        // R chain consuming the O's
+        let r0 = g.add(tr, vec![o0, o1], 0);
+        let r1 = g.add(tr, vec![r0, o2], 0);
+        g.add(tr, vec![r1, o3], 0);
+        g.freeze();
+        (g, ti, to, tr)
+    }
+
+    #[test]
+    fn initial_state() {
+        let (g, ti, to, tr) = io_tree();
+        let f = Frontier::new(&g, 3);
+        assert_eq!(f.ready_count(ti), 1); // i0
+        assert_eq!(f.ready_count(to), 0);
+        assert_eq!(f.ready_count(tr), 0);
+        // G^I frontier: i0 only (chain); G^O: all 4 O's; G^R: r0 only.
+        assert_eq!(f.subgraph_frontier_count(ti), 1);
+        assert_eq!(f.subgraph_frontier_count(to), 4);
+        assert_eq!(f.subgraph_frontier_count(tr), 1);
+    }
+
+    #[test]
+    fn reward_ratio_prefers_delaying_o() {
+        let (g, ti, to, _) = io_tree();
+        let mut f = Frontier::new(&g, 3);
+        // execute i0: now i1 ready, o0 ready
+        let b = f.execute_type(&g, ti);
+        assert_eq!(b.len(), 1);
+        assert_eq!(f.ready_count(to), 1);
+        // ratio for O = 1/4 (<1), for I = 1/1 -> I preferred (Lemma 1)
+        assert!((f.reward_ratio(to) - 0.25).abs() < 1e-12);
+        assert!((f.reward_ratio(ti) - 1.0).abs() < 1e-12);
+    }
+
+    #[test]
+    fn full_drain_optimal_sequence() {
+        let (g, ti, to, tr) = io_tree();
+        let mut f = Frontier::new(&g, 3);
+        let mut batches = 0;
+        // optimal: I, I, I, I, O(all), R, R, R = 4 + 1 + 3
+        for _ in 0..4 {
+            let b = f.execute_type(&g, ti);
+            assert_eq!(b.len(), 1);
+            batches += 1;
+        }
+        let b = f.execute_type(&g, to);
+        assert_eq!(b.len(), 4);
+        batches += 1;
+        while !f.is_done() {
+            let b = f.execute_type(&g, tr);
+            assert_eq!(b.len(), 1);
+            batches += 1;
+        }
+        assert_eq!(batches, 8);
+        assert_eq!(g.batch_lower_bound(3), 8); // 4 + 1 + 3
+    }
+
+    #[test]
+    fn commit_updates_subgraph_frontier_incrementally() {
+        let (g, ti, to, _tr) = io_tree();
+        let mut f = Frontier::new(&g, 3);
+        // executing all I's one by one never changes G^O frontier (no O->O edges)
+        for _ in 0..4 {
+            f.execute_type(&g, ti);
+            assert_eq!(f.subgraph_frontier_count(to), 4);
+        }
+        // execute the O batch: G^O frontier drops to 0
+        f.execute_type(&g, to);
+        assert_eq!(f.subgraph_frontier_count(to), 0);
+    }
+
+    #[test]
+    fn ready_types_sorted() {
+        let (g, _, _, _) = io_tree();
+        let f = Frontier::new(&g, 3);
+        assert_eq!(f.ready_types(), vec![OpType(0)]);
+    }
+}

@@ -1,0 +1,32 @@
+//! # ED-Batch
+//!
+//! A rust + JAX + Pallas reproduction of *ED-Batch: Efficient Automatic
+//! Batching of Dynamic Neural Networks via Learned Finite State Machines*
+//! (ICML 2023).
+//!
+//! Layering (see DESIGN.md):
+//! * **Layer 3 (this crate)** — the dynamic-batching coordinator: dataflow
+//!   graphs, FSM/depth/agenda batching policies, tabular-Q-learning policy
+//!   training, PQ-tree memory planning, arena executor, PJRT runtime and
+//!   the serving front-end.
+//! * **Layer 2 (python/compile/model.py)** — JAX cell definitions, lowered
+//!   AOT to `artifacts/*.hlo.txt`.
+//! * **Layer 1 (python/compile/kernels/)** — Pallas kernels for the fused
+//!   cell hot-spots.
+//!
+//! Quickstart: see `examples/quickstart.rs`; end-to-end serving driver in
+//! `examples/serve_e2e.rs`.
+
+pub mod batching;
+pub mod coordinator;
+pub mod exec;
+pub mod graph;
+pub mod memory;
+pub mod pqtree;
+pub mod rl;
+pub mod runtime;
+pub mod subgraph;
+pub mod util;
+pub mod workloads;
+
+pub mod benchsuite;

@@ -1,0 +1,243 @@
+//! `ed-batch` — CLI for the ED-Batch reproduction.
+//!
+//! ```text
+//! ed-batch bench <fig6|fig8|fig9|table2|table3|table4|table5|all> [--fast]
+//!          serve  --workload treelstm [--mode ed-batch] [--hidden 64] ...
+//!          train-policy --workload treelstm [--encoding sort]
+//!          inspect --workload treelstm           # graph stats + schedules
+//! ```
+
+use anyhow::{anyhow, Result};
+
+use ed_batch::batching::agenda::AgendaPolicy;
+use ed_batch::batching::depth::DepthPolicy;
+use ed_batch::batching::fsm::Encoding;
+use ed_batch::batching::oracle::SufficientConditionPolicy;
+use ed_batch::batching::run_policy;
+use ed_batch::benchsuite::{self, BenchOpts};
+use ed_batch::coordinator::server::{Server, ServerConfig};
+use ed_batch::coordinator::SystemMode;
+use ed_batch::rl::TrainConfig;
+use ed_batch::util::cli::Args;
+use ed_batch::util::rng::Rng;
+use ed_batch::workloads::{Workload, WorkloadKind};
+
+fn main() {
+    let args = Args::from_env();
+    let code = match run(&args) {
+        Ok(()) => 0,
+        Err(e) => {
+            eprintln!("error: {e:#}");
+            1
+        }
+    };
+    std::process::exit(code);
+}
+
+fn run(args: &Args) -> Result<()> {
+    match args.positional.first().map(|s| s.as_str()) {
+        Some("bench") => bench(args),
+        Some("serve") => serve(args),
+        Some("train-policy") => train_policy(args),
+        Some("inspect") => inspect(args),
+        _ => {
+            println!(
+                "ed-batch — FSM-batched dynamic-DNN serving (ICML'23 reproduction)\n\n\
+                 usage:\n  \
+                 ed-batch bench <fig6|fig8|fig9|table2|table3|table4|table5|all> [--fast] [--hidden N]\n  \
+                 ed-batch serve --workload <name> [--mode ed-batch|cavs-dynet|vanilla-dynet]\n             \
+                 [--hidden N] [--requests N] [--max-batch N] [--no-pjrt]\n  \
+                 ed-batch train-policy --workload <name> [--encoding base|max|sort]\n  \
+                 ed-batch inspect --workload <name> [--instances N]\n\n\
+                 workloads: bilstm-tagger bilstm-tagger-withchar lstm-nmt treelstm treegru\n            \
+                 mv-rnn treelstm-2type lattice-lstm lattice-gru"
+            );
+            Ok(())
+        }
+    }
+}
+
+fn bench(args: &Args) -> Result<()> {
+    let opts = BenchOpts::from_args(args);
+    let which = args
+        .positional
+        .get(1)
+        .map(|s| s.as_str())
+        .unwrap_or("all");
+    let run_one = |name: &str| -> Result<()> {
+        match name {
+            "fig6" => benchsuite::fig6::run(&opts).map(|_| ()),
+            "fig8" => benchsuite::fig8::run(&opts).map(|_| ()),
+            "fig9" => {
+                benchsuite::fig9::run(&opts);
+                Ok(())
+            }
+            "table2" => {
+                benchsuite::table2::run(&opts);
+                Ok(())
+            }
+            "table3" => {
+                benchsuite::table3::run(&opts);
+                Ok(())
+            }
+            "table4" => {
+                benchsuite::table4::run(&opts);
+                Ok(())
+            }
+            "table5" => benchsuite::table5::run(&opts).map(|_| ()),
+            other => Err(anyhow!("unknown bench target '{other}'")),
+        }
+    };
+    if which == "all" {
+        for name in ["fig9", "table2", "table3", "table4", "fig8", "fig6", "table5"] {
+            run_one(name)?;
+        }
+        Ok(())
+    } else {
+        run_one(which)
+    }
+}
+
+fn workload_from(args: &Args) -> Result<WorkloadKind> {
+    let name = args.get_or("workload", "treelstm");
+    WorkloadKind::from_name(name).ok_or_else(|| anyhow!("unknown workload '{name}'"))
+}
+
+fn serve(args: &Args) -> Result<()> {
+    let kind = workload_from(args)?;
+    let hidden = args.usize("hidden", 64);
+    let mode = match args.get_or("mode", "ed-batch") {
+        "ed-batch" => SystemMode::EdBatch,
+        "cavs-dynet" => SystemMode::CavsDyNet,
+        "vanilla-dynet" => SystemMode::VanillaDyNet,
+        m => return Err(anyhow!("unknown mode '{m}'")),
+    };
+    let requests = args.usize("requests", 256);
+    let config = ServerConfig {
+        workload: kind,
+        hidden,
+        mode,
+        max_batch: args.usize("max-batch", 32),
+        batch_window: std::time::Duration::from_millis(args.u64("window-ms", 2)),
+        artifacts_dir: if args.flag("no-pjrt") {
+            None
+        } else {
+            Some(args.get_or("artifacts", "artifacts").to_string())
+        },
+        encoding: Encoding::from_name(args.get_or("encoding", "sort"))
+            .ok_or_else(|| anyhow!("bad encoding"))?,
+        seed: args.u64("seed", 7),
+    };
+    println!(
+        "serving {} (mode={}, hidden={hidden}, pjrt={})",
+        kind.name(),
+        mode.name(),
+        config.artifacts_dir.is_some()
+    );
+    let server = Server::start(config)?;
+    let w = Workload::new(kind, hidden);
+    let clients = args.usize("clients", 4);
+    let per_client = requests / clients.max(1);
+    let mut handles = Vec::new();
+    for c in 0..clients {
+        let client = server.client();
+        let w = Workload::new(kind, hidden);
+        let seed = args.u64("seed", 7) + c as u64;
+        handles.push(std::thread::spawn(move || {
+            let mut rng = Rng::new(seed);
+            for _ in 0..per_client {
+                let g = w.gen_instance(&mut rng);
+                client.infer(g).expect("infer");
+            }
+        }));
+    }
+    for h in handles {
+        h.join().map_err(|_| anyhow!("client panicked"))?;
+    }
+    let snap = server.metrics.snapshot();
+    println!(
+        "done: {} requests, {:.1} inst/s, p50 {:.2}ms p99 {:.2}ms | batches {}, kernels {}, memcpy {:.1} MB, padded lanes {}",
+        snap.requests,
+        snap.throughput(),
+        snap.latency_p50_s * 1e3,
+        snap.latency_p99_s * 1e3,
+        snap.batches_executed,
+        snap.kernel_calls,
+        snap.memcpy_elems as f64 * 4.0 / 1e6,
+        snap.padded_lanes,
+    );
+    println!(
+        "time decomposition: construction {:.1}ms scheduling {:.1}ms execution {:.1}ms",
+        snap.breakdown.construction_s * 1e3,
+        snap.breakdown.scheduling_s * 1e3,
+        snap.breakdown.execution_s * 1e3
+    );
+    let _ = w;
+    server.shutdown()
+}
+
+fn train_policy(args: &Args) -> Result<()> {
+    let kind = workload_from(args)?;
+    let hidden = args.usize("hidden", 64);
+    let encoding = Encoding::from_name(args.get_or("encoding", "sort"))
+        .ok_or_else(|| anyhow!("bad encoding"))?;
+    let w = Workload::new(kind, hidden);
+    let cfg = TrainConfig {
+        max_iters: args.usize("max-iters", 1000),
+        ..TrainConfig::default()
+    };
+    let dir = args.get_or("artifacts", "artifacts");
+    let path = ed_batch::coordinator::policies::policy_path(dir, kind, encoding);
+    let _ = std::fs::remove_file(&path); // force retrain
+    let (policy, stats) =
+        ed_batch::coordinator::policies::load_or_train(dir, &w, encoding, &cfg, args.u64("seed", 7))?;
+    let stats = stats.expect("trained");
+    println!(
+        "trained {} ({}): {} iters in {:.3}s, {} states, greedy {} batches (lower bound {}), saved to {path}",
+        kind.name(),
+        encoding.name(),
+        stats.iterations,
+        stats.wall_time_s,
+        policy.states.len(),
+        stats.greedy_batches,
+        stats.lower_bound,
+    );
+    Ok(())
+}
+
+fn inspect(args: &Args) -> Result<()> {
+    let kind = workload_from(args)?;
+    let hidden = args.usize("hidden", 64);
+    let instances = args.usize("instances", 8);
+    let w = Workload::new(kind, hidden);
+    let mut rng = Rng::new(args.u64("seed", 42));
+    let mut g = w.gen_batch(instances, &mut rng);
+    g.freeze();
+    let nt = w.registry.num_types();
+    println!("workload {} ({:?})", kind.name(), kind.family());
+    println!("graph: {} nodes, {} instances", g.len(), instances);
+    let hist = g.type_histogram(nt);
+    for t in w.registry.types() {
+        println!(
+            "  type {:>2} {:<14} x{:<5} ({:?})",
+            t.0,
+            w.registry.info(t).name,
+            hist[t.0 as usize],
+            w.registry.info(t).cell
+        );
+    }
+    println!("lower bound: {}", g.batch_lower_bound(nt));
+    println!(
+        "depth:   {} batches",
+        run_policy(&g, nt, &mut DepthPolicy::new()).num_batches()
+    );
+    println!(
+        "agenda:  {} batches",
+        run_policy(&g, nt, &mut AgendaPolicy::new(nt)).num_batches()
+    );
+    println!(
+        "sc-heur: {} batches",
+        run_policy(&g, nt, &mut SufficientConditionPolicy).num_batches()
+    );
+    Ok(())
+}

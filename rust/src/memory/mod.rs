@@ -1,0 +1,355 @@
+//! Memory planning for batched execution (paper §3).
+//!
+//! Batched vendor kernels require each source/result operand to be
+//! contiguous and mutually aligned in memory. [`planner`] implements the
+//! paper's PQ-tree planner (Alg.2) that picks an inter-tensor layout where
+//! batches need no gather/scatter; [`LayoutMetrics`] measures what a layout
+//! actually costs (the Table-2 numbers); the DyNet-style baseline allocates
+//! in creation order.
+
+pub mod planner;
+
+use rustc_hash::FxHashMap;
+
+pub type Var = crate::pqtree::Var;
+
+/// One batched operation over `lanes` parallel instances:
+/// `dst[i] = op(srcs[0][i], srcs[1][i], ...)`.
+#[derive(Clone, Debug)]
+pub struct BatchOp {
+    pub name: String,
+    /// source operands; each operand lists one var per lane
+    pub srcs: Vec<Vec<Var>>,
+    /// result operand, one var per lane
+    pub dst: Vec<Var>,
+}
+
+impl BatchOp {
+    pub fn lanes(&self) -> usize {
+        self.dst.len()
+    }
+
+    pub fn operands(&self) -> impl Iterator<Item = &Vec<Var>> {
+        self.srcs.iter().chain(std::iter::once(&self.dst))
+    }
+}
+
+/// A memory layout: element offset per variable.
+#[derive(Clone, Debug)]
+pub struct MemoryPlan {
+    pub offsets: Vec<usize>,
+    pub total_elems: usize,
+}
+
+impl MemoryPlan {
+    /// Layout variables following `order`, packing by each var's size.
+    pub fn from_order(order: &[Var], sizes: &[usize]) -> MemoryPlan {
+        assert_eq!(order.len(), sizes.len());
+        let mut offsets = vec![0usize; sizes.len()];
+        let mut off = 0;
+        for &v in order {
+            offsets[v as usize] = off;
+            off += sizes[v as usize];
+        }
+        MemoryPlan {
+            offsets,
+            total_elems: off,
+        }
+    }
+
+    /// DyNet-style baseline: allocate in variable-id (creation) order.
+    pub fn creation_order(sizes: &[usize]) -> MemoryPlan {
+        let order: Vec<Var> = (0..sizes.len() as Var).collect();
+        MemoryPlan::from_order(&order, sizes)
+    }
+
+    pub fn offset(&self, v: Var) -> usize {
+        self.offsets[v as usize]
+    }
+}
+
+/// Gather/scatter cost of executing `batches` under a layout — the
+/// quantities Table 2 reports (memory kernels and memcpy volume).
+#[derive(Clone, Debug, Default, PartialEq, Eq)]
+pub struct LayoutMetrics {
+    /// number of gather/scatter kernels launched
+    pub mem_kernels: usize,
+    /// elements moved by those kernels
+    pub memcpy_elems: usize,
+    /// operands that were directly usable (contiguous + aligned)
+    pub direct_operands: usize,
+    /// total operands considered
+    pub total_operands: usize,
+}
+
+impl LayoutMetrics {
+    pub fn memcpy_bytes(&self) -> usize {
+        self.memcpy_elems * 4 // f32
+    }
+}
+
+/// Lane order of an operand under a plan: `Some(perm)` if the operand's
+/// vars occupy one contiguous block, where `perm[i]` is the lane whose var
+/// sits at block position `i`; `None` if not contiguous.
+fn operand_block_order(
+    plan: &MemoryPlan,
+    sizes: &[usize],
+    operand: &[Var],
+) -> Option<Vec<usize>> {
+    let mut lanes: Vec<usize> = (0..operand.len()).collect();
+    lanes.sort_by_key(|&i| plan.offset(operand[i]));
+    let mut expected = plan.offset(operand[lanes[0]]);
+    for &i in &lanes {
+        if plan.offset(operand[i]) != expected {
+            return None;
+        }
+        expected += sizes[operand[i] as usize];
+    }
+    Some(lanes)
+}
+
+/// Evaluate the gather/scatter cost of `batches` under `plan`.
+///
+/// A batch executes copy-free iff every operand (sources and result) is
+/// contiguous and all share one lane order. Otherwise each non-conforming
+/// source operand costs one gather kernel and each non-conforming result
+/// costs one scatter (DyNet's execution strategy).
+pub fn evaluate_layout(plan: &MemoryPlan, sizes: &[usize], batches: &[BatchOp]) -> LayoutMetrics {
+    let mut m = LayoutMetrics::default();
+    for b in batches {
+        if b.lanes() <= 1 {
+            // single-lane ops execute in place, no batching constraint
+            m.direct_operands += b.srcs.len() + 1;
+            m.total_operands += b.srcs.len() + 1;
+            continue;
+        }
+        // reference lane order: the result's if contiguous, else natural
+        let dst_order = operand_block_order(plan, sizes, &b.dst);
+        let reference: Vec<usize> = dst_order
+            .clone()
+            .unwrap_or_else(|| (0..b.lanes()).collect());
+        for src in &b.srcs {
+            m.total_operands += 1;
+            let ord = operand_block_order(plan, sizes, src);
+            if ord.as_deref() == Some(&reference[..]) {
+                m.direct_operands += 1;
+            } else {
+                m.mem_kernels += 1;
+                m.memcpy_elems += src.iter().map(|&v| sizes[v as usize]).sum::<usize>();
+            }
+        }
+        m.total_operands += 1;
+        if dst_order.is_some() {
+            m.direct_operands += 1;
+        } else {
+            m.mem_kernels += 1;
+            m.memcpy_elems += b.dst.iter().map(|&v| sizes[v as usize]).sum::<usize>();
+        }
+    }
+    m
+}
+
+/// Per-batch access plan used by the executor: direct slice or gather.
+#[derive(Clone, Debug)]
+pub struct BatchAccessPlan {
+    pub src_access: Vec<OperandAccess>,
+    pub dst_access: OperandAccess,
+    /// common lane order all direct operands share
+    pub lane_order: Vec<usize>,
+}
+
+#[derive(Clone, Debug)]
+pub enum OperandAccess {
+    /// contiguous & aligned: base element offset
+    Direct { base: usize },
+    /// per-lane element offsets (gather for srcs / scatter for dst),
+    /// in lane order
+    Indirect { offsets: Vec<usize> },
+}
+
+/// Build the executor's access plan for one batch under a layout.
+pub fn access_plan(plan: &MemoryPlan, sizes: &[usize], b: &BatchOp) -> BatchAccessPlan {
+    let dst_order = operand_block_order(plan, sizes, &b.dst);
+    let lane_order: Vec<usize> = dst_order
+        .clone()
+        .unwrap_or_else(|| (0..b.lanes()).collect());
+    let mk = |operand: &[Var], want: &[usize]| -> OperandAccess {
+        let ord = operand_block_order(plan, sizes, operand);
+        if ord.as_deref() == Some(want) {
+            OperandAccess::Direct {
+                base: plan.offset(operand[want[0]]),
+            }
+        } else {
+            OperandAccess::Indirect {
+                offsets: want.iter().map(|&i| plan.offset(operand[i])).collect(),
+            }
+        }
+    };
+    BatchAccessPlan {
+        src_access: b.srcs.iter().map(|s| mk(s, &lane_order)).collect(),
+        dst_access: mk(&b.dst, &lane_order),
+        lane_order,
+    }
+}
+
+/// Highest var id + 1 across all operands.
+pub fn num_vars(batches: &[BatchOp]) -> usize {
+    let mut max = 0;
+    for b in batches {
+        for op in b.operands() {
+            for &v in op {
+                max = max.max(v as usize + 1);
+            }
+        }
+    }
+    max
+}
+
+/// Map each var to the batches referencing it (diagnostics).
+pub fn var_uses(batches: &[BatchOp]) -> FxHashMap<Var, Vec<usize>> {
+    let mut m: FxHashMap<Var, Vec<usize>> = FxHashMap::default();
+    for (i, b) in batches.iter().enumerate() {
+        for op in b.operands() {
+            for &v in op {
+                let e = m.entry(v).or_default();
+                if e.last() != Some(&i) {
+                    e.push(i);
+                }
+            }
+        }
+    }
+    m
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn sizes(n: usize, sz: usize) -> Vec<usize> {
+        vec![sz; n]
+    }
+
+    #[test]
+    fn creation_order_offsets() {
+        let p = MemoryPlan::creation_order(&[4, 2, 3]);
+        assert_eq!(p.offsets, vec![0, 4, 6]);
+        assert_eq!(p.total_elems, 9);
+    }
+
+    #[test]
+    fn from_order_respects_order() {
+        let p = MemoryPlan::from_order(&[2, 0, 1], &[4, 2, 3]);
+        assert_eq!(p.offset(2), 0);
+        assert_eq!(p.offset(0), 3);
+        assert_eq!(p.offset(1), 7);
+    }
+
+    #[test]
+    fn aligned_contiguous_batch_is_free() {
+        let s = sizes(4, 2);
+        let plan = MemoryPlan::creation_order(&s);
+        let b = BatchOp {
+            name: "t".into(),
+            srcs: vec![vec![0, 1]],
+            dst: vec![2, 3],
+        };
+        let m = evaluate_layout(&plan, &s, &[b]);
+        assert_eq!(m.mem_kernels, 0);
+        assert_eq!(m.memcpy_elems, 0);
+        assert_eq!(m.direct_operands, 2);
+    }
+
+    #[test]
+    fn misaligned_source_needs_gather() {
+        // src lanes (1, 0) vs dst (2, 3): src block order reversed
+        let s = sizes(4, 2);
+        let plan = MemoryPlan::creation_order(&s);
+        let b = BatchOp {
+            name: "t".into(),
+            srcs: vec![vec![1, 0]],
+            dst: vec![2, 3],
+        };
+        let m = evaluate_layout(&plan, &s, &[b]);
+        assert_eq!(m.mem_kernels, 1);
+        assert_eq!(m.memcpy_elems, 4);
+    }
+
+    #[test]
+    fn scattered_dst_needs_scatter() {
+        let s = sizes(4, 2);
+        let plan = MemoryPlan::creation_order(&s);
+        let b = BatchOp {
+            name: "t".into(),
+            srcs: vec![vec![0, 2]],
+            dst: vec![1, 3],
+        };
+        let m = evaluate_layout(&plan, &s, &[b]);
+        // src {0,2} not contiguous, dst {1,3} not contiguous -> 2 kernels
+        assert_eq!(m.mem_kernels, 2);
+    }
+
+    #[test]
+    fn paper_fig3_layout_is_free() {
+        // Fig.3: vars x1..x8 (0-indexed 0..7).
+        // B1: cmult([x1,x3],[x2,x1]) -> [x4,x5]
+        // B2: sigmoid([x4,x3,x5]) -> [x6,x8,x7]
+        // (lane pairing follows the paper's transformed constraint
+        //  {x4,x5} -> {x6,x7}, hence x4->x6, x3->x8, x5->x7)
+        let s = sizes(8, 1);
+        let b1 = BatchOp {
+            name: "b1".into(),
+            srcs: vec![vec![0, 2], vec![1, 0]],
+            dst: vec![3, 4],
+        };
+        let b2 = BatchOp {
+            name: "b2".into(),
+            srcs: vec![vec![3, 2, 4]],
+            dst: vec![5, 7, 6],
+        };
+        let naive =
+            evaluate_layout(&MemoryPlan::creation_order(&s), &s, &[b1.clone(), b2.clone()]);
+        assert!(naive.mem_kernels > 0);
+        // the paper's ideal order (x2,x1,x3,x4,x5,x8,x6,x7)
+        let ideal = MemoryPlan::from_order(&[1, 0, 2, 3, 4, 7, 5, 6], &s);
+        let m = evaluate_layout(&ideal, &s, &[b1, b2]);
+        assert_eq!(m.mem_kernels, 0, "{m:?}");
+    }
+
+    #[test]
+    fn access_plan_direct_and_indirect() {
+        let s = sizes(4, 2);
+        let plan = MemoryPlan::creation_order(&s);
+        let b = BatchOp {
+            name: "t".into(),
+            srcs: vec![vec![0, 1], vec![3, 1]],
+            dst: vec![2, 3],
+        };
+        let ap = access_plan(&plan, &s, &b);
+        assert!(matches!(ap.src_access[0], OperandAccess::Direct { base: 0 }));
+        assert!(matches!(ap.src_access[1], OperandAccess::Indirect { .. }));
+        assert!(matches!(ap.dst_access, OperandAccess::Direct { base: 4 }));
+    }
+
+    #[test]
+    fn single_lane_batches_are_free() {
+        let s = sizes(2, 8);
+        let plan = MemoryPlan::creation_order(&s);
+        let b = BatchOp {
+            name: "t".into(),
+            srcs: vec![vec![0]],
+            dst: vec![1],
+        };
+        let m = evaluate_layout(&plan, &s, &[b]);
+        assert_eq!(m.mem_kernels, 0);
+    }
+
+    #[test]
+    fn num_vars_counts_max() {
+        let b = BatchOp {
+            name: "t".into(),
+            srcs: vec![vec![0, 9]],
+            dst: vec![4, 2],
+        };
+        assert_eq!(num_vars(&[b]), 10);
+    }
+}

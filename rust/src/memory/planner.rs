@@ -1,0 +1,690 @@
+//! PQ-tree memory allocation — the paper's Alg.2.
+//!
+//! 1. **ConstructPQTree**: adjacency constraint per batch operand.
+//! 2. **BroadcastConstraint**: make operand tree structures isomorphic by
+//!    translating each operand's induced structure constraints to the other
+//!    operands via lane alignment and re-reducing, to a fixpoint.
+//! 3. **DecideNodesOrder**: union-find over (Q-node, direction) and
+//!    (P-node, permutation) pairs so aligned operands traverse in the same
+//!    lane order (extended union-find of Alg.6, with σ transformations).
+//! 4. **GetLeafOrder**: constrained DFS emits the final allocation order.
+//!
+//! Infeasible constraints are dropped (the paper erases the batch from the
+//! optimization set); the resulting layout is always *valid* — the
+//! executor's access plan falls back to gather/scatter wherever the layout
+//! falls short, and `evaluate_layout` reports exactly how often.
+
+use rustc_hash::{FxHashMap, FxHashSet};
+
+use crate::pqtree::{Idx, Kind, PqTree, Var};
+
+use super::{BatchOp, MemoryPlan};
+
+/// Planner outcome + diagnostics.
+#[derive(Clone, Debug)]
+pub struct PlanOutcome {
+    pub plan: MemoryPlan,
+    pub order: Vec<Var>,
+    /// operand adjacency constraints that were infeasible and dropped
+    pub dropped_adjacency: usize,
+    /// broadcast constraints that were infeasible and dropped
+    pub dropped_broadcast: usize,
+    /// node-order relations that conflicted and were dropped
+    pub dropped_orders: usize,
+    /// broadcast passes until fixpoint
+    pub passes: usize,
+}
+
+/// Run the full Alg.2 pipeline.
+pub fn pq_plan(batches: &[BatchOp], sizes: &[usize]) -> PlanOutcome {
+    let n = sizes.len();
+    let mut tree = PqTree::universal(n);
+    let mut dropped_adjacency = 0;
+
+    // -- 1. adjacency constraints -------------------------------------
+    for b in batches {
+        if b.lanes() <= 1 {
+            continue;
+        }
+        for op in b.operands() {
+            if !tree.reduce(op) {
+                dropped_adjacency += 1;
+            }
+        }
+    }
+
+    // -- 2. broadcast to fixpoint --------------------------------------
+    let mut dropped_broadcast = 0;
+    let mut passes = 0;
+    loop {
+        passes += 1;
+        let before = tree.fingerprint();
+        for b in batches {
+            if b.lanes() <= 1 {
+                continue;
+            }
+            broadcast_batch(&mut tree, b, &mut dropped_broadcast);
+        }
+        if tree.fingerprint() == before || passes >= 32 {
+            break;
+        }
+    }
+
+    // -- 3. node order decision -----------------------------------------
+    let mut qdsu = ParityDsu::new(tree_capacity(&tree));
+    let mut pdsu = PermDsu::new(tree_capacity(&tree));
+    let mut dropped_orders = 0;
+    for b in batches {
+        if b.lanes() <= 1 {
+            continue;
+        }
+        decide_orders_for_batch(&tree, b, &mut qdsu, &mut pdsu, &mut dropped_orders);
+    }
+
+    // -- 4. leaf order ----------------------------------------------------
+    let order = leaf_order(&tree, &mut qdsu, &mut pdsu);
+    let plan = MemoryPlan::from_order(&order, sizes);
+    PlanOutcome {
+        plan,
+        order,
+        dropped_adjacency,
+        dropped_broadcast,
+        dropped_orders,
+        passes,
+    }
+}
+
+fn tree_capacity(tree: &PqTree) -> usize {
+    // arena indices keep growing during reduces; reserve generously
+    tree.num_vars() * 8 + 64
+}
+
+// ---------------------------------------------------------------------
+// pass 2: BroadcastConstraint
+// ---------------------------------------------------------------------
+
+/// Lane map of an operand: var -> lane (None if operand has duplicates).
+fn lane_map(operand: &[Var]) -> Option<FxHashMap<Var, usize>> {
+    let mut m = FxHashMap::default();
+    for (i, &v) in operand.iter().enumerate() {
+        if m.insert(v, i).is_some() {
+            return None;
+        }
+    }
+    Some(m)
+}
+
+/// Parse the tree structure induced on `operand` as lane-index constraint
+/// sets (GETSUBTREECONS + the index transform of PARSECONSTRAINTS).
+fn subtree_constraints(tree: &PqTree, lanes: &FxHashMap<Var, usize>) -> Vec<Vec<usize>> {
+    let mut out = Vec::new();
+    let oset: FxHashSet<Var> = lanes.keys().copied().collect();
+    collect_node_constraints(tree, tree.root(), &oset, lanes, &mut out);
+    out
+}
+
+fn collect_node_constraints(
+    tree: &PqTree,
+    n: Idx,
+    oset: &FxHashSet<Var>,
+    lanes: &FxHashMap<Var, usize>,
+    out: &mut Vec<Vec<usize>>,
+) {
+    match tree.kind(n) {
+        Kind::Leaf(_) => {}
+        Kind::P => {
+            let leaves = tree.leaves_under(n);
+            if leaves.len() >= 2 && leaves.iter().all(|v| oset.contains(v)) {
+                out.push(leaves.iter().map(|v| lanes[v]).collect());
+            }
+            for &c in tree.children(n) {
+                collect_node_constraints(tree, c, oset, lanes, out);
+            }
+        }
+        Kind::Q => {
+            let child_leaves: Vec<Vec<Var>> = tree
+                .children(n)
+                .iter()
+                .map(|&c| tree.leaves_under(c))
+                .collect();
+            for w in child_leaves.windows(2) {
+                let union: Vec<Var> = w[0].iter().chain(w[1].iter()).copied().collect();
+                if union.len() >= 2 && union.iter().all(|v| oset.contains(v)) {
+                    out.push(union.iter().map(|v| lanes[v]).collect());
+                }
+            }
+            for &c in tree.children(n) {
+                collect_node_constraints(tree, c, oset, lanes, out);
+            }
+        }
+    }
+}
+
+/// Broadcast one batch's structural constraints across all its operands.
+fn broadcast_batch(tree: &mut PqTree, b: &BatchOp, dropped: &mut usize) {
+    // collect lane-index constraints from every operand's current structure
+    let mut lane_cons: Vec<Vec<usize>> = Vec::new();
+    let mut seen: FxHashSet<Vec<usize>> = FxHashSet::default();
+    // operands with a lane count differing from the batch are malformed —
+    // skip them rather than indexing out of bounds
+    let operands: Vec<&Vec<Var>> = b.operands().filter(|o| o.len() == b.lanes()).collect();
+    for op in &operands {
+        if let Some(lanes) = lane_map(op) {
+            for mut c in subtree_constraints(tree, &lanes) {
+                c.sort_unstable();
+                if seen.insert(c.clone()) {
+                    lane_cons.push(c);
+                }
+            }
+        }
+    }
+    // apply each constraint to every operand (aligned translation)
+    for c in &lane_cons {
+        for op in &operands {
+            let vars: Vec<Var> = c.iter().map(|&i| op[i]).collect();
+            if !tree.reduce(&vars) {
+                *dropped += 1;
+            }
+        }
+    }
+}
+
+// ---------------------------------------------------------------------
+// pass 3: DecideNodesOrder (extended union-find with transformations)
+// ---------------------------------------------------------------------
+
+/// Union-find with a boolean "flip" transformation (Q-node directions).
+pub struct ParityDsu {
+    parent: Vec<usize>,
+    /// flip relative to parent
+    flip: Vec<bool>,
+}
+
+impl ParityDsu {
+    pub fn new(n: usize) -> Self {
+        ParityDsu {
+            parent: (0..n).collect(),
+            flip: vec![false; n],
+        }
+    }
+
+    fn ensure(&mut self, n: usize) {
+        while self.parent.len() <= n {
+            self.parent.push(self.parent.len());
+            self.flip.push(false);
+        }
+    }
+
+    /// (root, flip of `x` relative to root)
+    pub fn find(&mut self, x: usize) -> (usize, bool) {
+        self.ensure(x);
+        if self.parent[x] == x {
+            return (x, false);
+        }
+        let (r, f) = self.find(self.parent[x]);
+        self.parent[x] = r;
+        self.flip[x] ^= f;
+        (r, self.flip[x])
+    }
+
+    /// Enforce flip(a) XOR flip(b) == rel. Returns false on conflict.
+    pub fn union(&mut self, a: usize, b: usize, rel: bool) -> bool {
+        let (ra, fa) = self.find(a);
+        let (rb, fb) = self.find(b);
+        if ra == rb {
+            return (fa ^ fb) == rel;
+        }
+        self.parent[rb] = ra;
+        self.flip[rb] = fa ^ fb ^ rel;
+        true
+    }
+}
+
+type Perm = Vec<u8>;
+
+fn compose(a: &Perm, b: &Perm) -> Perm {
+    // (a ∘ b)[i] = a[b[i]]
+    b.iter().map(|&i| a[i as usize]).collect()
+}
+
+fn invert(a: &Perm) -> Perm {
+    let mut inv = vec![0u8; a.len()];
+    for (i, &v) in a.iter().enumerate() {
+        inv[v as usize] = i as u8;
+    }
+    inv
+}
+
+fn identity(n: usize) -> Perm {
+    (0..n as u8).collect()
+}
+
+/// Union-find carrying child-index permutations (P-node orders).
+/// `perm[x]` maps x's child indices to its parent's canonical indices.
+pub struct PermDsu {
+    parent: Vec<usize>,
+    perm: Vec<Option<Perm>>,
+}
+
+impl PermDsu {
+    pub fn new(n: usize) -> Self {
+        PermDsu {
+            parent: (0..n).collect(),
+            perm: vec![None; n],
+        }
+    }
+
+    fn ensure(&mut self, n: usize) {
+        while self.parent.len() <= n {
+            self.parent.push(self.parent.len());
+            self.perm.push(None);
+        }
+    }
+
+    /// (root, permutation mapping x's children to root's canonical order)
+    pub fn find(&mut self, x: usize, arity: usize) -> (usize, Perm) {
+        self.ensure(x);
+        if self.parent[x] == x {
+            return (x, identity(arity));
+        }
+        let p = self.parent[x];
+        let my = self.perm[x].clone().unwrap_or_else(|| identity(arity));
+        let (r, pp) = self.find(p, my.len());
+        let total = compose(&pp, &my);
+        self.parent[x] = r;
+        self.perm[x] = Some(total.clone());
+        (r, total)
+    }
+
+    /// Enforce: child i of `a` corresponds to child m[i] of `b`.
+    /// Returns false on conflict (including arity mismatch with an earlier
+    /// relation — dropped like any incompatible constraint).
+    pub fn union(&mut self, a: usize, b: usize, m: &Perm) -> bool {
+        let k = m.len();
+        let (ra, pa) = self.find(a, k);
+        let (rb, pb) = self.find(b, k);
+        if pa.len() != k || pb.len() != k {
+            return false;
+        }
+        // canonical relation: rb-canon -> ra-canon is pa ∘ m⁻¹ ∘ pb⁻¹
+        let rel = compose(&pa, &compose(&invert(m), &invert(&pb)));
+        if ra == rb {
+            return rel == identity(k);
+        }
+        self.parent[rb] = ra;
+        self.perm[rb] = Some(rel);
+        true
+    }
+}
+
+/// Position set + traversal direction of node `n` restricted to an operand.
+/// Returns (sorted lane set, dir) where dir is Some(false)=ascending /
+/// Some(true)=descending / None if non-monotone or single-child coverage.
+fn node_lane_profile(
+    tree: &PqTree,
+    n: Idx,
+    lanes: &FxHashMap<Var, usize>,
+) -> Option<(Vec<usize>, Vec<Vec<usize>>)> {
+    // per-child sorted lane sets (children with empty intersection skipped)
+    let mut per_child: Vec<Vec<usize>> = Vec::new();
+    let mut all: Vec<usize> = Vec::new();
+    for &c in tree.children(n) {
+        let ls: Vec<usize> = tree
+            .leaves_under(c)
+            .iter()
+            .filter_map(|v| lanes.get(v).copied())
+            .collect();
+        if !ls.is_empty() {
+            let mut s = ls;
+            s.sort_unstable();
+            all.extend(s.iter().copied());
+            per_child.push(s);
+        }
+    }
+    if all.len() < 2 || per_child.len() < 2 {
+        return None;
+    }
+    all.sort_unstable();
+    Some((all, per_child))
+}
+
+fn decide_orders_for_batch(
+    tree: &PqTree,
+    b: &BatchOp,
+    qdsu: &mut ParityDsu,
+    pdsu: &mut PermDsu,
+    dropped: &mut usize,
+) {
+    let operands: Vec<&Vec<Var>> = b.operands().collect();
+    let lane_maps: Vec<Option<FxHashMap<Var, usize>>> =
+        operands.iter().map(|o| lane_map(o)).collect();
+    // reference operand: the result (last); fall back to first valid
+    let ref_i = match lane_maps.iter().rposition(|m| m.is_some()) {
+        Some(i) => i,
+        None => return,
+    };
+    let ref_lanes = lane_maps[ref_i].as_ref().unwrap();
+
+    // profile every internal node against the reference operand
+    let mut ref_profiles: FxHashMap<Vec<usize>, (Idx, Vec<Vec<usize>>)> = FxHashMap::default();
+    collect_profiles(tree, tree.root(), ref_lanes, &mut ref_profiles);
+
+    for (oi, lm) in lane_maps.iter().enumerate() {
+        if oi == ref_i {
+            continue;
+        }
+        let Some(lm) = lm else { continue };
+        let mut other: FxHashMap<Vec<usize>, (Idx, Vec<Vec<usize>>)> = FxHashMap::default();
+        collect_profiles(tree, tree.root(), lm, &mut other);
+        for (laneset, (n1, ch1)) in &ref_profiles {
+            let Some((n2, ch2)) = other.get(laneset) else {
+                continue;
+            };
+            relate_nodes(tree, *n1, ch1, *n2, ch2, qdsu, pdsu, dropped);
+        }
+    }
+}
+
+fn collect_profiles(
+    tree: &PqTree,
+    n: Idx,
+    lanes: &FxHashMap<Var, usize>,
+    out: &mut FxHashMap<Vec<usize>, (Idx, Vec<Vec<usize>>)>,
+) {
+    if !matches!(tree.kind(n), Kind::Leaf(_)) {
+        if let Some((all, per_child)) = node_lane_profile(tree, n, lanes) {
+            out.insert(all, (n, per_child));
+        }
+        for &c in tree.children(n) {
+            collect_profiles(tree, c, lanes, out);
+        }
+    }
+}
+
+#[allow(clippy::too_many_arguments)]
+fn relate_nodes(
+    tree: &PqTree,
+    n1: Idx,
+    ch1: &[Vec<usize>],
+    n2: Idx,
+    ch2: &[Vec<usize>],
+    qdsu: &mut ParityDsu,
+    pdsu: &mut PermDsu,
+    dropped: &mut usize,
+) {
+    match (tree.kind(n1), tree.kind(n2)) {
+        (Kind::Q, Kind::Q) => {
+            // direction = are the per-child lane runs ascending?
+            let dir = |ch: &[Vec<usize>]| -> Option<bool> {
+                let firsts: Vec<usize> = ch.iter().map(|c| c[0]).collect();
+                if firsts.windows(2).all(|w| w[0] < w[1]) {
+                    Some(false) // ascending = forward
+                } else if firsts.windows(2).all(|w| w[0] > w[1]) {
+                    Some(true) // descending = reversed
+                } else {
+                    None
+                }
+            };
+            if let (Some(d1), Some(d2)) = (dir(ch1), dir(ch2)) {
+                // alignment wants both to read ascending: flip(n1) == d1,
+                // flip(n2) == d2  =>  flip(n1) XOR flip(n2) == d1 XOR d2
+                if !qdsu.union(n1, n2, d1 ^ d2) {
+                    *dropped += 1;
+                }
+            }
+        }
+        (Kind::P, Kind::P) => {
+            // P-relations are only sound when the operand covers *all*
+            // children of both nodes (partial coverage leaves the node's
+            // arity ambiguous across batches).
+            if ch1.len() != tree.children(n1).len() || ch2.len() != tree.children(n2).len() {
+                return;
+            }
+            if ch1.len() != ch2.len() || n1 == n2 {
+                if n1 != n2 {
+                    *dropped += 1;
+                }
+                return;
+            }
+            // match children by identical lane sets
+            let k = ch1.len();
+            if k > 64 {
+                return;
+            }
+            let mut m: Perm = vec![0; k];
+            let idx2: FxHashMap<&Vec<usize>, usize> =
+                ch2.iter().enumerate().map(|(i, c)| (c, i)).collect();
+            for (i, c) in ch1.iter().enumerate() {
+                match idx2.get(c) {
+                    Some(&j) => m[i] = j as u8,
+                    None => return, // no clean correspondence
+                }
+            }
+            if !pdsu.union(n1, n2, &m) {
+                *dropped += 1;
+            }
+        }
+        _ => {}
+    }
+}
+
+// ---------------------------------------------------------------------
+// pass 4: GetLeafOrder
+// ---------------------------------------------------------------------
+
+fn leaf_order(tree: &PqTree, qdsu: &mut ParityDsu, pdsu: &mut PermDsu) -> Vec<Var> {
+    let mut out = Vec::with_capacity(tree.num_vars());
+    emit(tree, tree.root(), qdsu, pdsu, &mut out);
+    debug_assert_eq!(out.len(), tree.num_vars());
+    out
+}
+
+fn emit(tree: &PqTree, n: Idx, qdsu: &mut ParityDsu, pdsu: &mut PermDsu, out: &mut Vec<Var>) {
+    match tree.kind(n) {
+        Kind::Leaf(v) => out.push(*v),
+        Kind::Q => {
+            let (_, flip) = qdsu.find(n);
+            let ch = tree.children(n);
+            if flip {
+                for &c in ch.iter().rev() {
+                    emit(tree, c, qdsu, pdsu, out);
+                }
+            } else {
+                for &c in ch {
+                    emit(tree, c, qdsu, pdsu, out);
+                }
+            }
+        }
+        Kind::P => {
+            let ch = tree.children(n);
+            let (_, perm) = pdsu.find(n, ch.len());
+            // order children by their canonical rank
+            let mut order: Vec<usize> = (0..ch.len()).collect();
+            if perm.len() == ch.len() {
+                order.sort_by_key(|&i| perm[i]);
+            }
+            for i in order {
+                emit(tree, ch[i], qdsu, pdsu, out);
+            }
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::memory::{evaluate_layout, BatchOp, MemoryPlan};
+
+    fn fig3_batches() -> (Vec<BatchOp>, Vec<usize>) {
+        // see memory::tests::paper_fig3_layout_is_free for the lane pairing
+        let b1 = BatchOp {
+            name: "b1".into(),
+            srcs: vec![vec![0, 2], vec![1, 0]],
+            dst: vec![3, 4],
+        };
+        let b2 = BatchOp {
+            name: "b2".into(),
+            srcs: vec![vec![3, 2, 4]],
+            dst: vec![5, 7, 6],
+        };
+        (vec![b1, b2], vec![1; 8])
+    }
+
+    #[test]
+    fn plans_paper_example_copy_free() {
+        let (batches, sizes) = fig3_batches();
+        let out = pq_plan(&batches, &sizes);
+        let m = evaluate_layout(&out.plan, &sizes, &batches);
+        assert_eq!(
+            m.mem_kernels, 0,
+            "order {:?} metrics {m:?} (dropped adj {} bc {} ord {})",
+            out.order, out.dropped_adjacency, out.dropped_broadcast, out.dropped_orders
+        );
+    }
+
+    #[test]
+    fn plan_beats_creation_order_on_paper_example() {
+        let (batches, sizes) = fig3_batches();
+        let naive = evaluate_layout(&MemoryPlan::creation_order(&sizes), &sizes, &batches);
+        let out = pq_plan(&batches, &sizes);
+        let planned = evaluate_layout(&out.plan, &sizes, &batches);
+        assert!(planned.mem_kernels < naive.mem_kernels);
+        assert!(planned.memcpy_elems < naive.memcpy_elems);
+    }
+
+    #[test]
+    fn parity_dsu_propagates() {
+        let mut d = ParityDsu::new(4);
+        assert!(d.union(0, 1, true));
+        assert!(d.union(1, 2, true));
+        // 0 and 2 must be equal-direction
+        let (r0, f0) = d.find(0);
+        let (r2, f2) = d.find(2);
+        assert_eq!(r0, r2);
+        assert_eq!(f0 ^ f2, false);
+        // conflicting relation rejected
+        assert!(!d.union(0, 2, true));
+        assert!(d.union(0, 2, false));
+    }
+
+    #[test]
+    fn perm_dsu_detects_conflict() {
+        let mut d = PermDsu::new(4);
+        assert!(d.union(0, 1, &vec![1, 0]));
+        assert!(d.union(1, 2, &vec![0, 1]));
+        // 0-1 swapped, 1-2 identity => 0-2 must be swapped
+        assert!(d.union(0, 2, &vec![1, 0]));
+        assert!(!d.union(0, 2, &vec![0, 1]));
+    }
+
+    #[test]
+    fn perm_compose_invert() {
+        let a: Perm = vec![2, 0, 1];
+        let ia = invert(&a);
+        assert_eq!(compose(&a, &ia), identity(3));
+        assert_eq!(compose(&ia, &a), identity(3));
+    }
+
+    #[test]
+    fn single_batch_chain_is_copy_free() {
+        // y_i = f(x_i): two batches sharing the intermediate
+        // b1: [0,1] -> [2,3]; b2: [2,3] -> [4,5]
+        let batches = vec![
+            BatchOp {
+                name: "f".into(),
+                srcs: vec![vec![0, 1]],
+                dst: vec![2, 3],
+            },
+            BatchOp {
+                name: "g".into(),
+                srcs: vec![vec![2, 3]],
+                dst: vec![4, 5],
+            },
+        ];
+        let sizes = vec![2; 6];
+        let out = pq_plan(&batches, &sizes);
+        let m = evaluate_layout(&out.plan, &sizes, &batches);
+        assert_eq!(m.mem_kernels, 0, "order {:?}", out.order);
+    }
+
+    #[test]
+    fn reversed_alignment_is_fixed_by_order_pass() {
+        // b: srcs [1,0] -> dst [2,3]: needs var1 before var0
+        let batches = vec![BatchOp {
+            name: "f".into(),
+            srcs: vec![vec![1, 0]],
+            dst: vec![2, 3],
+        }];
+        let sizes = vec![1; 4];
+        let out = pq_plan(&batches, &sizes);
+        let m = evaluate_layout(&out.plan, &sizes, &batches);
+        assert_eq!(m.mem_kernels, 0, "order {:?}", out.order);
+    }
+
+    #[test]
+    fn infeasible_constraints_are_dropped_not_fatal() {
+        // three mutually-crossing operand groups over 4 vars can conflict;
+        // planner must still return a valid plan
+        let batches = vec![
+            BatchOp {
+                name: "a".into(),
+                srcs: vec![vec![0, 1], vec![1, 2], vec![2, 0]],
+                dst: vec![3, 4],
+            },
+            BatchOp {
+                name: "b".into(),
+                srcs: vec![vec![3, 4]],
+                dst: vec![5, 6],
+            },
+        ];
+        let sizes = vec![1; 7];
+        let out = pq_plan(&batches, &sizes);
+        // all vars present exactly once
+        let mut sorted = out.order.clone();
+        sorted.sort();
+        assert_eq!(sorted, (0..7).collect::<Vec<_>>());
+    }
+
+    #[test]
+    fn random_batch_programs_stay_valid_permutations() {
+        use crate::util::rng::Rng;
+        let mut rng = Rng::new(31);
+        for _ in 0..30 {
+            let nvars = 6 + rng.usize_below(10);
+            let mut batches = Vec::new();
+            let mut next = nvars as Var; // intermediates created on the fly
+            for _ in 0..3 {
+                let lanes = 2 + rng.usize_below(3);
+                let mut src = Vec::new();
+                for _ in 0..lanes {
+                    src.push(rng.below(next as u64) as Var);
+                }
+                let dst: Vec<Var> = (0..lanes)
+                    .map(|_| {
+                        let v = next;
+                        next += 1;
+                        v
+                    })
+                    .collect();
+                batches.push(BatchOp {
+                    name: "r".into(),
+                    srcs: vec![src],
+                    dst,
+                });
+            }
+            let sizes = vec![1usize; next as usize];
+            let out = pq_plan(&batches, &sizes);
+            let mut sorted = out.order.clone();
+            sorted.sort();
+            assert_eq!(sorted, (0..next).collect::<Vec<_>>());
+            // planned never worse than creation order
+            let naive =
+                evaluate_layout(&MemoryPlan::creation_order(&sizes), &sizes, &batches);
+            let planned = evaluate_layout(&out.plan, &sizes, &batches);
+            assert!(
+                planned.mem_kernels <= naive.mem_kernels + 1,
+                "planned {planned:?} naive {naive:?}"
+            );
+        }
+    }
+}

@@ -1,0 +1,631 @@
+//! PQ tree (Booth & Lueker 1976) — the consecutive-ones data structure
+//! behind ED-Batch's memory planner (paper §3.2).
+//!
+//! A PQ tree over a variable set X compactly represents the permutations of
+//! X in which every previously-`reduce`d subset appears consecutively:
+//! * **leaf** — one variable,
+//! * **P-node** — children may be permuted arbitrarily,
+//! * **Q-node** — children are ordered, the order may only be reversed.
+//!
+//! This implementation uses the classic template set (P1–P6, Q1–Q3) in a
+//! clean recursive form: each `reduce(S)` walks the pertinent subtree once,
+//! labelling nodes Empty / Full / Partial bottom-up and restructuring
+//! partial nodes into Q-sequences. It is O(tree size) per reduce rather
+//! than Booth–Lueker's amortized O(|S|) — the planner's constraint sets are
+//! tiny (subgraph batches), so clarity wins; the planner-level complexity
+//! bound of Lemma 2 is preserved because the tree size is O(#vars).
+
+use rustc_hash::FxHashSet;
+
+pub type Var = u32;
+pub type Idx = usize;
+
+#[derive(Clone, Debug, PartialEq, Eq)]
+pub enum Kind {
+    Leaf(Var),
+    P,
+    Q,
+}
+
+#[derive(Clone, Debug)]
+struct Node {
+    kind: Kind,
+    children: Vec<Idx>,
+    /// present (not deleted) — the arena never shrinks
+    alive: bool,
+}
+
+/// Arena-allocated PQ tree.
+#[derive(Clone, Debug)]
+pub struct PqTree {
+    nodes: Vec<Node>,
+    root: Idx,
+    /// var -> leaf node idx
+    leaf_of: Vec<Idx>,
+    /// monotonically bumped on every structural change (planner fixpoint)
+    pub version: u64,
+}
+
+/// Node labels during a reduce pass.
+#[derive(Clone, Debug)]
+enum Label {
+    Empty,
+    Full,
+    /// sequence of subtree ids, each wholly Empty or Full,
+    /// ordered empty-end -> full-end
+    Partial(Vec<Idx>),
+}
+
+impl PqTree {
+    /// Universal tree: a single P-node over all variables (all permutations).
+    pub fn universal(num_vars: usize) -> PqTree {
+        assert!(num_vars >= 1);
+        let mut nodes = Vec::with_capacity(num_vars + 1);
+        let mut leaf_of = Vec::with_capacity(num_vars);
+        for v in 0..num_vars {
+            nodes.push(Node {
+                kind: Kind::Leaf(v as Var),
+                children: Vec::new(),
+                alive: true,
+            });
+            leaf_of.push(v);
+        }
+        let root = if num_vars == 1 {
+            0
+        } else {
+            nodes.push(Node {
+                kind: Kind::P,
+                children: (0..num_vars).collect(),
+                alive: true,
+            });
+            num_vars
+        };
+        PqTree {
+            nodes,
+            root,
+            leaf_of,
+            version: 0,
+        }
+    }
+
+    pub fn num_vars(&self) -> usize {
+        self.leaf_of.len()
+    }
+
+    // ------------------------------------------------------------------
+    // inspection
+    // ------------------------------------------------------------------
+
+    pub fn root(&self) -> Idx {
+        self.root
+    }
+
+    pub fn kind(&self, n: Idx) -> &Kind {
+        &self.nodes[n].kind
+    }
+
+    pub fn children(&self, n: Idx) -> &[Idx] {
+        &self.nodes[n].children
+    }
+
+    pub fn leaf_node(&self, v: Var) -> Idx {
+        self.leaf_of[v as usize]
+    }
+
+    /// Leaves under `n` in current left-to-right order.
+    pub fn leaves_under(&self, n: Idx) -> Vec<Var> {
+        let mut out = Vec::new();
+        self.collect_leaves(n, &mut out);
+        out
+    }
+
+    fn collect_leaves(&self, n: Idx, out: &mut Vec<Var>) {
+        match self.nodes[n].kind {
+            Kind::Leaf(v) => out.push(v),
+            _ => {
+                for &c in &self.nodes[n].children {
+                    self.collect_leaves(c, out);
+                }
+            }
+        }
+    }
+
+    /// One admissible permutation: current left-to-right leaf order.
+    pub fn frontier(&self) -> Vec<Var> {
+        self.leaves_under(self.root)
+    }
+
+    /// A structural fingerprint, orientation-insensitive (used by the
+    /// planner's fixpoint loop to detect convergence).
+    pub fn fingerprint(&self) -> u64 {
+        fn mix(h: &mut u64, v: u64) {
+            *h ^= v;
+            *h = h.wrapping_mul(0x100000001b3);
+        }
+        fn walk(t: &PqTree, n: Idx) -> u64 {
+            let mut h = 0xcbf29ce484222325u64;
+            match t.nodes[n].kind {
+                Kind::Leaf(v) => mix(&mut h, 1000 + v as u64),
+                Kind::P => {
+                    mix(&mut h, 1);
+                    // P children are unordered: combine order-independently
+                    let mut acc = 0u64;
+                    for &c in &t.nodes[n].children {
+                        acc = acc.wrapping_add(walk(t, c));
+                    }
+                    mix(&mut h, acc);
+                }
+                Kind::Q => {
+                    mix(&mut h, 3);
+                    // Q order matters up to reversal: take min of both dirs
+                    let mut fwd = 0xcbf29ce484222325u64;
+                    for &c in &t.nodes[n].children {
+                        mix(&mut fwd, walk(t, c));
+                    }
+                    let mut bwd = 0xcbf29ce484222325u64;
+                    for &c in t.nodes[n].children.iter().rev() {
+                        mix(&mut bwd, walk(t, c));
+                    }
+                    mix(&mut h, fwd.min(bwd));
+                }
+            }
+            h
+        }
+        walk(self, self.root)
+    }
+
+    /// Number of alive internal nodes (diagnostics / complexity tests).
+    pub fn internal_count(&self) -> usize {
+        self.nodes
+            .iter()
+            .filter(|n| n.alive && !matches!(n.kind, Kind::Leaf(_)))
+            .count()
+    }
+
+    // ------------------------------------------------------------------
+    // reduce
+    // ------------------------------------------------------------------
+
+    /// Restrict the represented permutations so the variables in `s` are
+    /// consecutive. Returns false (tree left unchanged) if impossible.
+    pub fn reduce(&mut self, s: &[Var]) -> bool {
+        let sset: FxHashSet<Var> = s.iter().copied().collect();
+        if sset.len() <= 1 || sset.len() >= self.num_vars() {
+            return true;
+        }
+        let backup = self.clone();
+        // full-leaf counts per node
+        let mut counts = vec![0u32; self.nodes.len()];
+        self.count_full(self.root, &sset, &mut counts);
+        let pertinent_root =
+            self.find_pertinent_root(self.root, sset.len() as u32, &counts);
+        match self.reduce_root(pertinent_root, &sset, &counts) {
+            Ok(()) => {
+                self.version += 1;
+                true
+            }
+            Err(()) => {
+                *self = backup;
+                false
+            }
+        }
+    }
+
+    fn count_full(&self, n: Idx, s: &FxHashSet<Var>, counts: &mut Vec<u32>) -> u32 {
+        let c = match &self.nodes[n].kind {
+            Kind::Leaf(v) => u32::from(s.contains(v)),
+            _ => {
+                let children = self.nodes[n].children.clone();
+                children
+                    .iter()
+                    .map(|&ch| self.count_full(ch, s, counts))
+                    .sum()
+            }
+        };
+        counts[n] = c;
+        c
+    }
+
+    /// Deepest node whose subtree contains all of S.
+    fn find_pertinent_root(&self, n: Idx, want: u32, counts: &[u32]) -> Idx {
+        debug_assert_eq!(counts[n], want);
+        for &c in &self.nodes[n].children {
+            if counts[c] == want {
+                return self.find_pertinent_root(c, want, counts);
+            }
+        }
+        n
+    }
+
+    /// Reduce below the pertinent root (templates P2/P4/P6, Q3 at the root).
+    fn reduce_root(&mut self, root: Idx, s: &FxHashSet<Var>, counts: &[u32]) -> Result<(), ()> {
+        // Root wholly full: S == leaves(root), always consecutive.
+        if counts[root] as usize == self.leaves_count(root) {
+            return Ok(());
+        }
+        match self.nodes[root].kind.clone() {
+            Kind::Leaf(_) => Ok(()), // single leaf, trivially fine
+            Kind::P => {
+                let children = self.nodes[root].children.clone();
+                let mut empties = Vec::new();
+                let mut fulls = Vec::new();
+                let mut partials: Vec<Vec<Idx>> = Vec::new();
+                for c in children {
+                    match self.label(c, s, counts)? {
+                        Label::Empty => empties.push(c),
+                        Label::Full => fulls.push(c),
+                        Label::Partial(seq) => partials.push(seq),
+                    }
+                }
+                if partials.len() > 2 {
+                    return Err(());
+                }
+                match partials.len() {
+                    0 => {
+                        // template P2: group fulls under one new P child
+                        if fulls.len() >= 2 {
+                            let fp = self.new_p(fulls);
+                            let mut ch = empties;
+                            ch.push(fp);
+                            self.replace_children(root, ch);
+                            self.normalize(root);
+                        }
+                        Ok(())
+                    }
+                    1 => {
+                        // template P4: Q = partial(empty->full) ++ F-group
+                        let mut seq = partials.pop().unwrap();
+                        if let Some(fgroup) = self.group_p(fulls) {
+                            seq.push(fgroup);
+                        }
+                        let q = self.new_q(seq);
+                        if empties.is_empty() {
+                            // root becomes the Q itself
+                            self.replace_with(root, q);
+                        } else {
+                            let mut ch = empties;
+                            ch.push(q);
+                            self.replace_children(root, ch);
+                        }
+                        self.normalize_from_root();
+                        Ok(())
+                    }
+                    2 => {
+                        // template P6:
+                        // Q = partial1(empty->full) ++ F-group ++ rev(partial2)
+                        let p2 = partials.pop().unwrap();
+                        let mut seq = partials.pop().unwrap();
+                        if let Some(fgroup) = self.group_p(fulls) {
+                            seq.push(fgroup);
+                        }
+                        seq.extend(p2.into_iter().rev());
+                        let q = self.new_q(seq);
+                        if empties.is_empty() {
+                            self.replace_with(root, q);
+                        } else {
+                            let mut ch = empties;
+                            ch.push(q);
+                            self.replace_children(root, ch);
+                        }
+                        self.normalize_from_root();
+                        Ok(())
+                    }
+                    _ => unreachable!(),
+                }
+            }
+            Kind::Q => {
+                // template Q3: children must form E* (partial)? F* (partial)? E*
+                let children = self.nodes[root].children.clone();
+                let mut labels = Vec::with_capacity(children.len());
+                for &c in &children {
+                    labels.push(self.label(c, s, counts)?);
+                }
+                let mut new_children: Vec<Idx> = Vec::new();
+                // 0 = leading empties, 1 = full block, 2 = trailing empties
+                let mut state = 0;
+                for (i, lab) in labels.iter().enumerate() {
+                    match (state, lab) {
+                        (0, Label::Empty) => new_children.push(children[i]),
+                        (0, Label::Full) => {
+                            state = 1;
+                            new_children.push(children[i]);
+                        }
+                        (0, Label::Partial(seq)) => {
+                            state = 1;
+                            new_children.extend(seq.iter().copied());
+                        }
+                        (1, Label::Full) => new_children.push(children[i]),
+                        (1, Label::Partial(seq)) => {
+                            state = 2;
+                            new_children.extend(seq.iter().rev().copied());
+                        }
+                        (1, Label::Empty) => {
+                            state = 2;
+                            new_children.push(children[i]);
+                        }
+                        (2, Label::Empty) => new_children.push(children[i]),
+                        _ => return Err(()),
+                    }
+                }
+                self.replace_children(root, new_children);
+                self.normalize_from_root();
+                Ok(())
+            }
+        }
+    }
+
+    /// Label a non-root pertinent node, restructuring partial nodes into
+    /// flat empty->full child sequences (templates P1/P3/P5, Q1/Q2).
+    fn label(&mut self, n: Idx, s: &FxHashSet<Var>, counts: &[u32]) -> Result<Label, ()> {
+        let total = self.leaves_count(n) as u32;
+        if counts[n] == 0 {
+            return Ok(Label::Empty);
+        }
+        if counts[n] == total {
+            return Ok(Label::Full);
+        }
+        match self.nodes[n].kind.clone() {
+            Kind::Leaf(_) => unreachable!("leaf is always empty or full"),
+            Kind::P => {
+                // template P3/P5: partial P -> [E-group, partial..., F-group]
+                let children = self.nodes[n].children.clone();
+                let mut empties = Vec::new();
+                let mut fulls = Vec::new();
+                let mut partial: Option<Vec<Idx>> = None;
+                for c in children {
+                    match self.label(c, s, counts)? {
+                        Label::Empty => empties.push(c),
+                        Label::Full => fulls.push(c),
+                        Label::Partial(seq) => {
+                            if partial.is_some() {
+                                return Err(()); // two partials only legal at root
+                            }
+                            partial = Some(seq);
+                        }
+                    }
+                }
+                let mut seq = Vec::new();
+                if let Some(eg) = self.group_p(empties) {
+                    seq.push(eg);
+                }
+                if let Some(p) = partial {
+                    seq.extend(p);
+                }
+                if let Some(fg) = self.group_p(fulls) {
+                    seq.push(fg);
+                }
+                self.delete(n);
+                Ok(Label::Partial(seq))
+            }
+            Kind::Q => {
+                // template Q2: children pattern E* (partial)? F* (or reverse)
+                let children = self.nodes[n].children.clone();
+                let mut labels = Vec::with_capacity(children.len());
+                for &c in &children {
+                    labels.push(self.label(c, s, counts)?);
+                }
+                let seq = q2_sequence(&children, &labels)?;
+                self.delete(n);
+                Ok(Label::Partial(seq))
+            }
+        }
+    }
+
+    fn leaves_count(&self, n: Idx) -> usize {
+        match self.nodes[n].kind {
+            Kind::Leaf(_) => 1,
+            _ => self.nodes[n]
+                .children
+                .iter()
+                .map(|&c| self.leaves_count(c))
+                .sum(),
+        }
+    }
+
+    // ------------------------------------------------------------------
+    // structural helpers
+    // ------------------------------------------------------------------
+
+    fn alloc(&mut self, kind: Kind, children: Vec<Idx>) -> Idx {
+        let id = self.nodes.len();
+        self.nodes.push(Node {
+            kind,
+            children,
+            alive: true,
+        });
+        id
+    }
+
+    fn new_p(&mut self, children: Vec<Idx>) -> Idx {
+        debug_assert!(children.len() >= 2);
+        self.alloc(Kind::P, children)
+    }
+
+    fn new_q(&mut self, children: Vec<Idx>) -> Idx {
+        if children.len() == 1 {
+            return children[0];
+        }
+        let kind = if children.len() == 2 { Kind::P } else { Kind::Q };
+        self.alloc(kind, children)
+    }
+
+    /// Group >=2 nodes under a fresh P node; 1 passes through; 0 -> None.
+    fn group_p(&mut self, nodes: Vec<Idx>) -> Option<Idx> {
+        match nodes.len() {
+            0 => None,
+            1 => Some(nodes[0]),
+            _ => Some(self.new_p(nodes)),
+        }
+    }
+
+    fn replace_children(&mut self, n: Idx, children: Vec<Idx>) {
+        self.nodes[n].children = children;
+    }
+
+    /// Replace node `n` in place by node `m`'s content (root rewrites).
+    fn replace_with(&mut self, n: Idx, m: Idx) {
+        if n == m {
+            return;
+        }
+        let node = self.nodes[m].clone();
+        self.nodes[n].kind = node.kind;
+        self.nodes[n].children = node.children;
+        if let Kind::Leaf(v) = self.nodes[n].kind {
+            self.leaf_of[v as usize] = n;
+        }
+        self.delete(m);
+    }
+
+    fn delete(&mut self, n: Idx) {
+        self.nodes[n].alive = false;
+        self.nodes[n].children.clear();
+    }
+
+    fn normalize_from_root(&mut self) {
+        self.normalize(self.root);
+    }
+
+    /// Collapse degenerate nodes after a rewrite: single-child internal
+    /// nodes are spliced out; 2-child Q nodes become P (same permutations).
+    fn normalize(&mut self, n: Idx) {
+        if matches!(self.nodes[n].kind, Kind::Leaf(_)) {
+            return;
+        }
+        let children = self.nodes[n].children.clone();
+        for c in children {
+            self.splice_single(n, c);
+        }
+        let children = self.nodes[n].children.clone();
+        for c in children {
+            self.normalize(c);
+        }
+        if self.nodes[n].children.len() == 1 {
+            let only = self.nodes[n].children[0];
+            self.replace_with(n, only);
+        } else if matches!(self.nodes[n].kind, Kind::Q) && self.nodes[n].children.len() == 2 {
+            self.nodes[n].kind = Kind::P;
+        }
+    }
+
+    fn splice_single(&mut self, parent: Idx, c: Idx) {
+        if matches!(self.nodes[c].kind, Kind::Leaf(_)) {
+            return;
+        }
+        if self.nodes[c].children.len() == 1 {
+            let gc = self.nodes[c].children[0];
+            let pos = self.nodes[parent]
+                .children
+                .iter()
+                .position(|&x| x == c)
+                .expect("child not under parent");
+            self.nodes[parent].children[pos] = gc;
+            self.delete(c);
+            self.splice_single(parent, gc);
+        }
+    }
+
+    /// Exhaustively enumerate admissible permutations (tests only; tiny trees).
+    pub fn enumerate_permutations(&self) -> Vec<Vec<Var>> {
+        fn perms_of(t: &PqTree, n: Idx) -> Vec<Vec<Var>> {
+            match &t.nodes[n].kind {
+                Kind::Leaf(v) => vec![vec![*v]],
+                Kind::P => {
+                    let ch = t.nodes[n].children.clone();
+                    let mut out = Vec::new();
+                    let mut order: Vec<usize> = (0..ch.len()).collect();
+                    permute(&mut order, 0, &mut |ord| {
+                        let parts: Vec<Vec<Vec<Var>>> =
+                            ord.iter().map(|&i| perms_of(t, ch[i])).collect();
+                        cartesian(&parts, &mut out);
+                    });
+                    out.sort();
+                    out.dedup();
+                    out
+                }
+                Kind::Q => {
+                    let ch = t.nodes[n].children.clone();
+                    let mut out = Vec::new();
+                    for rev in [false, true] {
+                        let idxs: Vec<usize> = if rev {
+                            (0..ch.len()).rev().collect()
+                        } else {
+                            (0..ch.len()).collect()
+                        };
+                        let parts: Vec<Vec<Vec<Var>>> =
+                            idxs.iter().map(|&i| perms_of(t, ch[i])).collect();
+                        cartesian(&parts, &mut out);
+                    }
+                    out.sort();
+                    out.dedup();
+                    out
+                }
+            }
+        }
+        fn permute(v: &mut Vec<usize>, k: usize, f: &mut impl FnMut(&[usize])) {
+            if k == v.len() {
+                f(v);
+                return;
+            }
+            for i in k..v.len() {
+                v.swap(k, i);
+                permute(v, k + 1, f);
+                v.swap(k, i);
+            }
+        }
+        fn cartesian(parts: &[Vec<Vec<Var>>], out: &mut Vec<Vec<Var>>) {
+            fn rec(parts: &[Vec<Vec<Var>>], acc: &mut Vec<Var>, out: &mut Vec<Vec<Var>>) {
+                match parts.split_first() {
+                    None => out.push(acc.clone()),
+                    Some((first, rest)) => {
+                        for p in first {
+                            let len = acc.len();
+                            acc.extend(p.iter().copied());
+                            rec(rest, acc, out);
+                            acc.truncate(len);
+                        }
+                    }
+                }
+            }
+            let mut acc = Vec::new();
+            rec(parts, &mut acc, out);
+        }
+        let mut ps = perms_of(self, self.root);
+        ps.sort();
+        ps.dedup();
+        ps
+    }
+}
+
+/// Template Q2 on a labelled child sequence: accept E* (partial)? F* or its
+/// reverse, returning the flattened empty->full sequence.
+fn q2_sequence(children: &[Idx], labels: &[Label]) -> Result<Vec<Idx>, ()> {
+    'dir: for rev in [false, true] {
+        let order: Vec<usize> = if rev {
+            (0..children.len()).rev().collect()
+        } else {
+            (0..children.len()).collect()
+        };
+        let mut seq: Vec<Idx> = Vec::new();
+        let mut state = 0; // 0 = empties, 1 = fulls
+        for &i in &order {
+            match (&labels[i], state) {
+                (Label::Empty, 0) => seq.push(children[i]),
+                (Label::Empty, _) => continue 'dir,
+                (Label::Partial(p), 0) => {
+                    state = 1;
+                    seq.extend(p.iter().copied());
+                }
+                (Label::Partial(_), _) => continue 'dir,
+                (Label::Full, _) => {
+                    state = 1;
+                    seq.push(children[i]);
+                }
+            }
+        }
+        return Ok(seq);
+    }
+    Err(())
+}
+
+#[cfg(test)]
+mod tests;

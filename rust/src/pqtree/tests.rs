@@ -1,0 +1,258 @@
+//! PQ tree unit tests: template behaviour, permutation semantics
+//! (checked exhaustively against a brute-force consecutivity oracle on
+//! small universes), and failure cases.
+
+use super::*;
+
+/// Brute force: all permutations of 0..n where each set in `cons` is
+/// consecutive.
+fn brute_force(n: usize, cons: &[Vec<Var>]) -> Vec<Vec<Var>> {
+    fn permute(v: &mut Vec<Var>, k: usize, f: &mut impl FnMut(&[Var])) {
+        if k == v.len() {
+            f(v);
+            return;
+        }
+        for i in k..v.len() {
+            v.swap(k, i);
+            permute(v, k + 1, f);
+            v.swap(k, i);
+        }
+    }
+    let mut vars: Vec<Var> = (0..n as Var).collect();
+    let mut out = Vec::new();
+    permute(&mut vars, 0, &mut |perm| {
+        let ok = cons.iter().all(|c| {
+            let mut pos: Vec<usize> = c
+                .iter()
+                .map(|v| perm.iter().position(|x| x == v).unwrap())
+                .collect();
+            pos.sort();
+            pos.windows(2).all(|w| w[1] == w[0] + 1)
+        });
+        if ok {
+            out.push(perm.to_vec());
+        }
+    });
+    out.sort();
+    out
+}
+
+fn check_equiv(n: usize, cons: &[Vec<Var>]) {
+    let mut t = PqTree::universal(n);
+    let mut feasible = true;
+    for c in cons {
+        if !t.reduce(c) {
+            feasible = false;
+            break;
+        }
+    }
+    let expect = brute_force(n, cons);
+    if !feasible {
+        assert!(
+            expect.is_empty(),
+            "tree rejected feasible constraints {cons:?} (expect {} perms)",
+            expect.len()
+        );
+        return;
+    }
+    let got = t.enumerate_permutations();
+    assert_eq!(
+        got, expect,
+        "permutation sets differ for constraints {cons:?}"
+    );
+}
+
+#[test]
+fn universal_tree_all_permutations() {
+    let t = PqTree::universal(4);
+    assert_eq!(t.enumerate_permutations().len(), 24);
+}
+
+#[test]
+fn single_constraint_pair() {
+    check_equiv(4, &[vec![0, 1]]);
+}
+
+#[test]
+fn nested_constraints() {
+    check_equiv(5, &[vec![0, 1], vec![0, 1, 2]]);
+}
+
+#[test]
+fn overlapping_constraints_make_q() {
+    // {0,1} and {1,2} -> 0-1-2 ordered block (Q structure)
+    check_equiv(4, &[vec![0, 1], vec![1, 2]]);
+}
+
+#[test]
+fn chain_of_overlaps() {
+    check_equiv(5, &[vec![0, 1], vec![1, 2], vec![2, 3]]);
+}
+
+#[test]
+fn disjoint_groups() {
+    check_equiv(6, &[vec![0, 1], vec![3, 4]]);
+}
+
+#[test]
+fn infeasible_triple_overlap() {
+    // {0,1},{1,2},{0,2} over >3 elems with {0,2} needing adjacency both
+    // sides of 1: feasible exactly as the block {0,1,2}... actually
+    // {0,1},{1,2},{2,0} is satisfiable only if 0,1,2 adjacent in a cycle —
+    // impossible in a line for all three pairs unless n == 3.
+    check_equiv(4, &[vec![0, 1], vec![1, 2], vec![2, 0]]);
+}
+
+#[test]
+fn crossing_constraints_infeasible() {
+    // {0,1,2} and {1,3} and {0,3}: brute force decides
+    check_equiv(4, &[vec![0, 1, 2], vec![1, 3], vec![0, 3]]);
+}
+
+#[test]
+fn full_set_constraint_is_noop() {
+    let mut t = PqTree::universal(3);
+    assert!(t.reduce(&[0, 1, 2]));
+    assert_eq!(t.enumerate_permutations().len(), 6);
+}
+
+#[test]
+fn singleton_and_empty_noop() {
+    let mut t = PqTree::universal(3);
+    assert!(t.reduce(&[1]));
+    assert!(t.reduce(&[]));
+    assert_eq!(t.enumerate_permutations().len(), 6);
+}
+
+#[test]
+fn duplicate_vars_in_constraint() {
+    let mut t = PqTree::universal(4);
+    assert!(t.reduce(&[0, 1, 1, 0]));
+    let perms = t.enumerate_permutations();
+    assert_eq!(perms, brute_force(4, &[vec![0, 1]]));
+}
+
+#[test]
+fn failed_reduce_leaves_tree_unchanged() {
+    let mut t = PqTree::universal(4);
+    assert!(t.reduce(&[0, 1]));
+    assert!(t.reduce(&[1, 2]));
+    let before = t.enumerate_permutations();
+    let v = t.version;
+    assert!(!t.reduce(&[0, 2])); // infeasible given the chain 0-1-2
+    assert_eq!(t.version, v);
+    assert_eq!(t.enumerate_permutations(), before);
+}
+
+#[test]
+fn frontier_is_admissible() {
+    let mut t = PqTree::universal(6);
+    for c in [vec![0u32, 1], vec![1, 2], vec![4, 5]] {
+        assert!(t.reduce(&c));
+    }
+    let f = t.frontier();
+    let all = t.enumerate_permutations();
+    assert!(all.contains(&f), "frontier {f:?} not in admissible set");
+}
+
+#[test]
+fn paper_example_layout() {
+    // Fig.3/4: B1 = gather([x1,x3],[x2,x1]) -> [x4,x5];
+    // B2 = ([x4,x3,x5] etc.) -> [x8,x6,x7].
+    // Adjacency constraints (1-indexed in paper, 0-indexed here):
+    // {x4,x5}, {x1,x3}, {x2,x1}, {x4,x3,x5}, {x6,x7,x8}
+    let idx = |v: u32| v - 1; // paper is 1-based
+    let cons: Vec<Vec<Var>> = vec![
+        vec![idx(4), idx(5)],
+        vec![idx(1), idx(3)],
+        vec![idx(2), idx(1)],
+        vec![idx(4), idx(3), idx(5)],
+        vec![idx(6), idx(7), idx(8)],
+    ];
+    let mut t = PqTree::universal(8);
+    for c in &cons {
+        assert!(t.reduce(c), "constraint {c:?} must be feasible");
+    }
+    // the paper's sequence (x2,x1,x3,x4,x5,x6,x7,x8) must be admissible
+    let want: Vec<Var> = vec![1, 0, 2, 3, 4, 5, 6, 7];
+    let all = t.enumerate_permutations();
+    assert!(
+        all.contains(&want),
+        "paper's layout must be admissible ({} perms)",
+        all.len()
+    );
+    // and every admissible permutation satisfies all constraints
+    assert_eq!(all, brute_force(8, &cons));
+}
+
+#[test]
+fn randomized_equivalence_with_brute_force() {
+    use crate::util::rng::Rng;
+    let mut rng = Rng::new(42);
+    for case in 0..60 {
+        let n = 3 + rng.usize_below(4); // 3..6 vars
+        let k = 1 + rng.usize_below(4); // 1..4 constraints
+        let cons: Vec<Vec<Var>> = (0..k)
+            .map(|_| {
+                let sz = 2 + rng.usize_below(n - 1);
+                let mut vars: Vec<Var> = (0..n as Var).collect();
+                rng.shuffle(&mut vars);
+                vars.truncate(sz);
+                vars
+            })
+            .collect();
+        // brute-force equivalence including infeasibility agreement
+        let expect = brute_force(n, &cons);
+        let mut t = PqTree::universal(n);
+        let mut ok = true;
+        for c in &cons {
+            if !t.reduce(c) {
+                ok = false;
+                break;
+            }
+        }
+        if !ok {
+            assert!(
+                expect.is_empty(),
+                "case {case}: rejected feasible constraints {cons:?}"
+            );
+            continue;
+        }
+        assert_eq!(
+            t.enumerate_permutations(),
+            expect,
+            "case {case}: constraints {cons:?}"
+        );
+    }
+}
+
+#[test]
+fn internal_count_bounded_by_leaves() {
+    use crate::util::rng::Rng;
+    let mut rng = Rng::new(7);
+    let n = 32;
+    let mut t = PqTree::universal(n);
+    for _ in 0..40 {
+        let sz = 2 + rng.usize_below(5);
+        let mut vars: Vec<Var> = (0..n as Var).collect();
+        rng.shuffle(&mut vars);
+        vars.truncate(sz);
+        t.reduce(&vars);
+        assert!(
+            t.internal_count() <= n,
+            "internal nodes must stay <= #leaves"
+        );
+    }
+}
+
+#[test]
+fn fingerprint_changes_on_structure_change() {
+    let mut t = PqTree::universal(5);
+    let f0 = t.fingerprint();
+    assert!(t.reduce(&[0, 1]));
+    let f1 = t.fingerprint();
+    assert_ne!(f0, f1);
+    // reducing an already-satisfied constraint must converge (fixpoint)
+    assert!(t.reduce(&[0, 1]));
+    assert_eq!(t.fingerprint(), f1);
+}

@@ -1,0 +1,142 @@
+//! `artifacts/manifest.json` parsing — the contract between `aot.py` and
+//! the rust runtime.
+
+use anyhow::{anyhow, Result};
+
+use crate::util::json::Json;
+
+#[derive(Clone, Debug, PartialEq, Eq, Hash)]
+pub struct ArtifactKey {
+    pub cell: String,
+    pub hidden: usize,
+    pub batch: usize,
+}
+
+impl ArtifactKey {
+    pub fn name(&self) -> String {
+        format!("{}_h{}_b{}", self.cell, self.hidden, self.batch)
+    }
+}
+
+#[derive(Clone, Debug)]
+pub struct ManifestEntry {
+    pub key: ArtifactKey,
+    pub file: String,
+    pub arg_shapes: Vec<Vec<usize>>,
+    pub num_outputs: usize,
+}
+
+#[derive(Clone, Debug)]
+pub struct Manifest {
+    pub entries: Vec<ManifestEntry>,
+}
+
+impl Manifest {
+    pub fn load(dir: &str) -> Result<Manifest> {
+        let text = std::fs::read_to_string(format!("{dir}/manifest.json"))?;
+        Manifest::parse(&text)
+    }
+
+    pub fn parse(text: &str) -> Result<Manifest> {
+        let j = Json::parse(text).map_err(|e| anyhow!("manifest json: {e}"))?;
+        let entries = j
+            .get("entries")
+            .and_then(|e| e.as_arr())
+            .ok_or_else(|| anyhow!("manifest missing entries"))?;
+        let mut out = Vec::with_capacity(entries.len());
+        for e in entries {
+            let get_str = |k: &str| {
+                e.get(k)
+                    .and_then(|v| v.as_str())
+                    .map(|s| s.to_string())
+                    .ok_or_else(|| anyhow!("entry missing {k}"))
+            };
+            let get_usize = |k: &str| {
+                e.get(k)
+                    .and_then(|v| v.as_usize())
+                    .ok_or_else(|| anyhow!("entry missing {k}"))
+            };
+            let arg_shapes = e
+                .get("arg_shapes")
+                .and_then(|v| v.as_arr())
+                .ok_or_else(|| anyhow!("entry missing arg_shapes"))?
+                .iter()
+                .map(|s| {
+                    s.as_arr()
+                        .map(|dims| dims.iter().filter_map(|d| d.as_usize()).collect())
+                        .ok_or_else(|| anyhow!("bad shape"))
+                })
+                .collect::<Result<Vec<Vec<usize>>>>()?;
+            out.push(ManifestEntry {
+                key: ArtifactKey {
+                    cell: get_str("cell")?,
+                    hidden: get_usize("hidden")?,
+                    batch: get_usize("batch")?,
+                },
+                file: get_str("file")?,
+                arg_shapes,
+                num_outputs: get_usize("num_outputs")?,
+            });
+        }
+        Ok(Manifest { entries: out })
+    }
+
+    /// Cells present in the manifest (deduped).
+    pub fn cells(&self) -> Vec<String> {
+        let mut v: Vec<String> = self.entries.iter().map(|e| e.key.cell.clone()).collect();
+        v.sort();
+        v.dedup();
+        v
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    const SAMPLE: &str = r#"{
+        "version": 1,
+        "entries": [
+            {"cell": "lstm", "hidden": 64, "batch": 4,
+             "file": "lstm_h64_b4.hlo.txt",
+             "arg_shapes": [[4,64],[4,64],[4,64],[64,256],[64,256],[256]],
+             "num_outputs": 2}
+        ]
+    }"#;
+
+    #[test]
+    fn parses_sample() {
+        let m = Manifest::parse(SAMPLE).unwrap();
+        assert_eq!(m.entries.len(), 1);
+        let e = &m.entries[0];
+        assert_eq!(e.key.cell, "lstm");
+        assert_eq!(e.key.hidden, 64);
+        assert_eq!(e.key.batch, 4);
+        assert_eq!(e.arg_shapes.len(), 6);
+        assert_eq!(e.arg_shapes[3], vec![64, 256]);
+        assert_eq!(e.num_outputs, 2);
+        assert_eq!(e.key.name(), "lstm_h64_b4");
+    }
+
+    #[test]
+    fn rejects_malformed() {
+        assert!(Manifest::parse("{}").is_err());
+        assert!(Manifest::parse("{\"entries\": [{}]}").is_err());
+        assert!(Manifest::parse("not json").is_err());
+    }
+
+    #[test]
+    fn cells_deduped() {
+        let m = Manifest::parse(SAMPLE).unwrap();
+        assert_eq!(m.cells(), vec!["lstm".to_string()]);
+    }
+
+    #[test]
+    fn real_manifest_if_present() {
+        // integration smoke against the actual artifacts dir when built
+        if let Ok(m) = Manifest::load("artifacts") {
+            assert!(!m.entries.is_empty());
+            assert!(m.cells().contains(&"lstm".to_string()));
+        }
+    }
+}

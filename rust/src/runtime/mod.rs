@@ -1,0 +1,307 @@
+//! PJRT runtime: load the AOT artifacts produced by `python/compile/aot.py`
+//! and execute them from the rust hot path.
+//!
+//! Flow (see /opt/xla-example/load_hlo/): `PjRtClient::cpu()` →
+//! `HloModuleProto::from_text_file` → `XlaComputation::from_proto` →
+//! `client.compile` → `executable.execute`. HLO *text* is the interchange
+//! format (serialized protos from jax >= 0.5 use 64-bit ids the pinned
+//! xla_extension 0.5.1 rejects).
+//!
+//! The [`ArtifactRegistry`] indexes compiled executables by
+//! (cell, hidden, batch bucket); [`bucket_for`] rounds a dynamic batch up
+//! to the nearest compiled bucket (inputs are zero-padded by the engine).
+
+pub mod manifest;
+
+use anyhow::{anyhow, Context, Result};
+use rustc_hash::FxHashMap;
+
+use manifest::{ArtifactKey, Manifest};
+
+/// One compiled cell executable + its signature.
+pub struct CompiledCell {
+    pub key: ArtifactKey,
+    pub arg_shapes: Vec<Vec<usize>>,
+    pub num_outputs: usize,
+    exe: xla::PjRtLoadedExecutable,
+    client: xla::PjRtClient,
+}
+
+impl CompiledCell {
+    /// Execute with flat f32 buffers, one per argument (row-major).
+    /// Returns the flattened outputs.
+    pub fn execute(&self, args: &[Vec<f32>]) -> Result<Vec<Vec<f32>>> {
+        if args.len() != self.arg_shapes.len() {
+            return Err(anyhow!(
+                "{}: expected {} args, got {}",
+                self.key.name(),
+                self.arg_shapes.len(),
+                args.len()
+            ));
+        }
+        let mut literals = Vec::with_capacity(args.len());
+        for (buf, shape) in args.iter().zip(&self.arg_shapes) {
+            let want: usize = shape.iter().product();
+            if buf.len() != want {
+                return Err(anyhow!(
+                    "{}: arg size {} != shape {:?}",
+                    self.key.name(),
+                    buf.len(),
+                    shape
+                ));
+            }
+            let dims: Vec<i64> = shape.iter().map(|&d| d as i64).collect();
+            literals.push(xla::Literal::vec1(buf).reshape(&dims)?);
+        }
+        let result = self.exe.execute::<xla::Literal>(&literals)?[0][0].to_literal_sync()?;
+        self.unpack(result)
+    }
+
+    /// Hot-path variant: per-call (activation) args are uploaded fresh,
+    /// weight args are pre-staged device buffers (uploaded once per engine
+    /// — see `CellEngine::device_weights`). Cuts the dominant per-call
+    /// cost of re-uploading Θ(H²) weights (§Perf iteration 1).
+    pub fn execute_with_weights(
+        &self,
+        data: &[Vec<f32>],
+        weights: &[xla::PjRtBuffer],
+    ) -> Result<Vec<Vec<f32>>> {
+        if data.len() + weights.len() != self.arg_shapes.len() {
+            return Err(anyhow!(
+                "{}: {} data + {} weight args != {} expected",
+                self.key.name(),
+                data.len(),
+                weights.len(),
+                self.arg_shapes.len()
+            ));
+        }
+        let mut bufs: Vec<xla::PjRtBuffer> = Vec::with_capacity(data.len());
+        for (buf, shape) in data.iter().zip(&self.arg_shapes) {
+            bufs.push(self.client.buffer_from_host_buffer(buf, shape, None)?);
+        }
+        let all: Vec<&xla::PjRtBuffer> = bufs.iter().chain(weights.iter()).collect();
+        let outputs = self.exe.execute_b(&all)?;
+        let result = outputs[0][0].to_literal_sync()?;
+        self.unpack(result)
+    }
+
+    fn unpack(&self, result: xla::Literal) -> Result<Vec<Vec<f32>>> {
+        // aot.py lowers with return_tuple=True: unpack the tuple
+        let parts = result.to_tuple()?;
+        let mut out = Vec::with_capacity(parts.len());
+        for p in parts {
+            out.push(p.to_vec::<f32>()?);
+        }
+        if out.len() != self.num_outputs {
+            return Err(anyhow!(
+                "{}: expected {} outputs, got {}",
+                self.key.name(),
+                self.num_outputs,
+                out.len()
+            ));
+        }
+        Ok(out)
+    }
+
+    /// Upload host weight tensors to device buffers (done once per engine).
+    pub fn stage_weights(&self, weights: &[(Vec<f32>, Vec<usize>)]) -> Result<Vec<xla::PjRtBuffer>> {
+        weights
+            .iter()
+            .map(|(w, dims)| {
+                self.client
+                    .buffer_from_host_buffer(w, dims, None)
+                    .map_err(Into::into)
+            })
+            .collect()
+    }
+}
+
+/// Registry of compiled executables, keyed by (cell, hidden, batch).
+pub struct ArtifactRegistry {
+    pub client: xla::PjRtClient,
+    cells: FxHashMap<ArtifactKey, CompiledCell>,
+    /// available batch buckets per (cell, hidden), ascending
+    buckets: FxHashMap<(String, usize), Vec<usize>>,
+}
+
+impl ArtifactRegistry {
+    /// Load and compile every artifact in `dir`'s manifest.
+    /// `filter` can restrict to specific cells/hiddens to cut boot time.
+    pub fn load(dir: &str, filter: Option<&dyn Fn(&ArtifactKey) -> bool>) -> Result<Self> {
+        let manifest = Manifest::load(dir)
+            .with_context(|| format!("loading manifest from {dir} (run `make artifacts`)"))?;
+        let client = xla::PjRtClient::cpu()?;
+        let mut cells = FxHashMap::default();
+        let mut buckets: FxHashMap<(String, usize), Vec<usize>> = FxHashMap::default();
+        for e in &manifest.entries {
+            let key = e.key.clone();
+            if let Some(f) = filter {
+                if !f(&key) {
+                    continue;
+                }
+            }
+            let path = format!("{dir}/{}", e.file);
+            let proto = xla::HloModuleProto::from_text_file(&path)
+                .with_context(|| format!("parsing {path}"))?;
+            let comp = xla::XlaComputation::from_proto(&proto);
+            let exe = client
+                .compile(&comp)
+                .with_context(|| format!("compiling {path}"))?;
+            buckets
+                .entry((key.cell.clone(), key.hidden))
+                .or_default()
+                .push(key.batch);
+            cells.insert(
+                key.clone(),
+                CompiledCell {
+                    key,
+                    arg_shapes: e.arg_shapes.clone(),
+                    num_outputs: e.num_outputs,
+                    exe,
+                    client: client.clone(),
+                },
+            );
+        }
+        for v in buckets.values_mut() {
+            v.sort_unstable();
+            v.dedup();
+        }
+        Ok(ArtifactRegistry {
+            client,
+            cells,
+            buckets,
+        })
+    }
+
+    pub fn len(&self) -> usize {
+        self.cells.len()
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.cells.is_empty()
+    }
+
+    pub fn get(&self, key: &ArtifactKey) -> Option<&CompiledCell> {
+        self.cells.get(key)
+    }
+
+    /// Smallest compiled bucket >= n for (cell, hidden); None if none fits.
+    pub fn bucket_for(&self, cell: &str, hidden: usize, n: usize) -> Option<usize> {
+        let bs = self.buckets.get(&(cell.to_string(), hidden))?;
+        bs.iter().copied().find(|&b| b >= n).or(bs.last().copied())
+    }
+
+    /// Largest compiled bucket (used to split oversized batches).
+    pub fn max_bucket(&self, cell: &str, hidden: usize) -> Option<usize> {
+        self.buckets
+            .get(&(cell.to_string(), hidden))
+            .and_then(|b| b.last().copied())
+    }
+
+    pub fn cell_for_batch(
+        &self,
+        cell: &str,
+        hidden: usize,
+        n: usize,
+    ) -> Option<&CompiledCell> {
+        let bucket = self.bucket_for(cell, hidden, n)?;
+        self.cells.get(&ArtifactKey {
+            cell: cell.to_string(),
+            hidden,
+            batch: bucket,
+        })
+    }
+
+    /// Split a batch of `n` lanes into executable chunks minimizing total
+    /// padded compute (DP over the available buckets; kernel-launch
+    /// overhead modelled as a small per-chunk epsilon so ties prefer fewer
+    /// calls). E.g. with buckets {64, 256}, n=120 -> [64, 64] instead of a
+    /// single 256-bucket call that wastes 2.1x compute in padding.
+    pub fn chunk_plan(&self, cell: &str, hidden: usize, n: usize) -> Option<Vec<usize>> {
+        let bs = self.buckets.get(&(cell.to_string(), hidden))?;
+        if bs.is_empty() || n == 0 {
+            return None;
+        }
+        const LAUNCH_EPS: f64 = 0.5; // lanes-equivalent cost per kernel call
+        // dp[k] = (cost, first bucket) to cover k remaining lanes
+        let mut dp: Vec<(f64, usize)> = vec![(f64::INFINITY, 0); n + 1];
+        dp[0] = (0.0, 0);
+        for k in 1..=n {
+            for &b in bs {
+                let rest = k.saturating_sub(b);
+                let cand = b as f64 + LAUNCH_EPS + dp[rest].0;
+                if cand < dp[k].0 {
+                    dp[k] = (cand, b);
+                }
+            }
+        }
+        let mut out = Vec::new();
+        let mut k = n;
+        while k > 0 {
+            let b = dp[k].1;
+            debug_assert!(b > 0);
+            out.push(b);
+            k = k.saturating_sub(b);
+        }
+        Some(out)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn registry_with_buckets(bs: Vec<usize>) -> ArtifactRegistry {
+        let mut buckets = FxHashMap::default();
+        buckets.insert(("lstm".to_string(), 64), bs);
+        ArtifactRegistry {
+            client: xla::PjRtClient::cpu().expect("cpu client"),
+            cells: FxHashMap::default(),
+            buckets,
+        }
+    }
+
+    #[test]
+    fn chunk_plan_avoids_padding_waste() {
+        let reg = registry_with_buckets(vec![1, 4, 16, 32, 64, 128, 256]);
+        // 120 lanes: [64, 32, 16, 4, 4] (sum 120) beats one 128 slightly,
+        // but launch eps prefers fewer calls when padding is small:
+        let plan = reg.chunk_plan("lstm", 64, 120).unwrap();
+        let total: usize = plan.iter().sum();
+        assert!(total >= 120);
+        assert!(total <= 128, "plan {plan:?} wastes too much");
+        // 300 lanes: exact cover 256 + 32 + 4 + 4 + 4 or similar
+        let plan = reg.chunk_plan("lstm", 64, 300).unwrap();
+        let total: usize = plan.iter().sum();
+        assert!((300..=308).contains(&total), "plan {plan:?}");
+        // n smaller than smallest bucket still works
+        let reg2 = registry_with_buckets(vec![4, 16]);
+        let plan = reg2.chunk_plan("lstm", 64, 2).unwrap();
+        assert_eq!(plan, vec![4]);
+    }
+
+    #[test]
+    fn chunk_plan_exact_bucket_single_call() {
+        let reg = registry_with_buckets(vec![1, 4, 16, 64, 256]);
+        for n in [1usize, 4, 16, 64, 256] {
+            let plan = reg.chunk_plan("lstm", 64, n).unwrap();
+            assert_eq!(plan, vec![n], "exact bucket should be one call");
+        }
+    }
+
+    #[test]
+    fn bucket_selection_logic() {
+        // exercise bucket_for's search without a PJRT client
+        let mut buckets: FxHashMap<(String, usize), Vec<usize>> = FxHashMap::default();
+        buckets.insert(("lstm".into(), 64), vec![1, 4, 16, 64, 256]);
+        // construct a registry shell (no cells) by transmuting is unsafe;
+        // instead test the search logic directly:
+        let bs = &buckets[&("lstm".to_string(), 64)];
+        let find = |n: usize| bs.iter().copied().find(|&b| b >= n).or(bs.last().copied());
+        assert_eq!(find(1), Some(1));
+        assert_eq!(find(3), Some(4));
+        assert_eq!(find(17), Some(64));
+        assert_eq!(find(256), Some(256));
+        assert_eq!(find(300), Some(256)); // oversized -> engine splits
+    }
+}

@@ -1,0 +1,528 @@
+//! Static subgraphs (paper §3, Table 2/4): the cell bodies expressed as a
+//! primitive-op IR, batched at compile time, and memory-planned with the
+//! PQ tree.
+//!
+//! A [`Subgraph`] is one cell application over an instance mini-batch of
+//! `B` inputs with hidden size `H` — e.g. the LSTMCell's four gates
+//! `y_g = X @ W_g + b_g` plus the pointwise tail. Intra-subgraph batching
+//! groups same-signature primitives (the four gate affines become one
+//! 4-lane batched matmul); the PQ planner then lays out the variables —
+//! including the *weights* — so batched operands are contiguous+aligned.
+//! This is where Table 2's up-to-66x memcpy reduction comes from: weight
+//! matrices are Θ(H²) while activations are Θ(BH).
+
+use crate::batching::oracle::SufficientConditionPolicy;
+use crate::batching::run_policy;
+use crate::graph::{Graph, NodeId, TypeRegistry};
+use crate::memory::{BatchOp, Var};
+
+/// Primitive operations of the cell IR. Shapes:
+/// * activation vectors are `[B, H]` (size B*H),
+/// * weights `[H, H]`, biases `[H]`, MV matrices `[H, H]` per instance are
+///   simplified to shared `[H, H]` (batch folded into the vector vars).
+#[derive(Clone, Debug, PartialEq)]
+pub enum Prim {
+    /// leaf: external input (activations)
+    Input,
+    /// leaf: parameter (weights/bias)
+    Param,
+    /// X[B,H] @ W[H,H] -> [B,H]
+    MatMulXW { x: Var, w: Var },
+    /// W[H,H] @ M[H,H] -> [H,H] (MV-RNN matrix path)
+    MatMatWM { w: Var, m: Var },
+    /// a + b (elementwise, equal sizes)
+    Add { a: Var, b: Var },
+    /// a + b + c (elementwise, equal sizes)
+    Add3 { a: Var, b: Var, c: Var },
+    /// a[B,H] + bias[H] broadcast over rows
+    AddBias { a: Var, b: Var },
+    Sigmoid { a: Var },
+    Tanh { a: Var },
+    /// a * b elementwise
+    CMult { a: Var, b: Var },
+    /// 1 - a
+    OneMinus { a: Var },
+    /// 0.5 * (a + b)
+    Mean2 { a: Var, b: Var },
+}
+
+impl Prim {
+    pub fn operands(&self) -> Vec<Var> {
+        match self {
+            Prim::Input | Prim::Param => vec![],
+            Prim::MatMulXW { x, w } => vec![*x, *w],
+            Prim::MatMatWM { w, m } => vec![*w, *m],
+            Prim::Add { a, b } | Prim::AddBias { a, b } | Prim::CMult { a, b } | Prim::Mean2 { a, b } => {
+                vec![*a, *b]
+            }
+            Prim::Add3 { a, b, c } => vec![*a, *b, *c],
+            Prim::Sigmoid { a } | Prim::Tanh { a } | Prim::OneMinus { a } => vec![*a],
+        }
+    }
+
+    /// Batching signature discriminant (same kind + same operand sizes batch).
+    fn kind_tag(&self) -> u8 {
+        match self {
+            Prim::Input => 0,
+            Prim::Param => 1,
+            Prim::MatMulXW { .. } => 2,
+            Prim::MatMatWM { .. } => 3,
+            Prim::Add { .. } => 4,
+            Prim::Add3 { .. } => 5,
+            Prim::AddBias { .. } => 6,
+            Prim::Sigmoid { .. } => 7,
+            Prim::Tanh { .. } => 8,
+            Prim::CMult { .. } => 9,
+            Prim::OneMinus { .. } => 10,
+            Prim::Mean2 { .. } => 11,
+        }
+    }
+}
+
+/// One static subgraph: SSA list of vars (leaf or computed), sizes in
+/// elements, and the designated outputs.
+#[derive(Clone, Debug, Default)]
+pub struct Subgraph {
+    pub name: String,
+    pub defs: Vec<Prim>,
+    pub sizes: Vec<usize>,
+    pub outputs: Vec<Var>,
+    pub hidden: usize,
+    pub inst_batch: usize,
+}
+
+impl Subgraph {
+    pub fn num_vars(&self) -> usize {
+        self.defs.len()
+    }
+
+    fn push(&mut self, p: Prim, size: usize) -> Var {
+        let v = self.defs.len() as Var;
+        self.defs.push(p);
+        self.sizes.push(size);
+        v
+    }
+
+    pub fn input(&mut self, size: usize) -> Var {
+        self.push(Prim::Input, size)
+    }
+
+    pub fn param(&mut self, size: usize) -> Var {
+        self.push(Prim::Param, size)
+    }
+
+    /// Validate SSA well-formedness (operands defined before use).
+    pub fn validate(&self) -> Result<(), String> {
+        for (i, d) in self.defs.iter().enumerate() {
+            for o in d.operands() {
+                if o as usize >= i {
+                    return Err(format!("var {i} uses later/undefined var {o}"));
+                }
+            }
+        }
+        Ok(())
+    }
+
+    /// Intra-subgraph batching: schedule compute vars with the
+    /// sufficient-condition policy over signature types, then emit
+    /// [`BatchOp`]s whose lanes are the grouped primitives.
+    ///
+    /// (The paper performs this step "as a grid search"; with the Lemma-1
+    /// heuristic available we get identical groupings on these cells at
+    /// lower compile cost — see Table 4 bench.)
+    pub fn batch(&self) -> Vec<BatchOp> {
+        // map compute vars -> graph nodes
+        let mut reg = TypeRegistry::new();
+        let mut g = Graph::new();
+        let mut node_of: Vec<Option<NodeId>> = vec![None; self.defs.len()];
+        let mut var_of_node: Vec<Var> = Vec::new();
+        for (i, d) in self.defs.iter().enumerate() {
+            if matches!(d, Prim::Input | Prim::Param) {
+                continue;
+            }
+            let sig = format!(
+                "k{}s{}_{}",
+                d.kind_tag(),
+                self.sizes[i],
+                d.operands()
+                    .iter()
+                    .map(|&o| self.sizes[o as usize].to_string())
+                    .collect::<Vec<_>>()
+                    .join("x")
+            );
+            let t = reg.register(&sig, crate::graph::CellKind::Source, self.sizes[i], 0);
+            let preds: Vec<NodeId> = d
+                .operands()
+                .iter()
+                .filter_map(|&o| node_of[o as usize])
+                .collect();
+            let n = g.add(t, preds, 0);
+            node_of[i] = Some(n);
+            var_of_node.push(i as Var);
+        }
+        g.freeze();
+        let schedule = run_policy(&g, reg.num_types(), &mut SufficientConditionPolicy);
+        let mut out = Vec::new();
+        for batch in schedule.batches {
+            let lanes: Vec<Var> = batch.nodes.iter().map(|n| var_of_node[n.idx()]).collect();
+            let arity = self.defs[lanes[0] as usize].operands().len();
+            let mut srcs: Vec<Vec<Var>> = vec![Vec::with_capacity(lanes.len()); arity];
+            for &v in &lanes {
+                let ops = self.defs[v as usize].operands();
+                for (k, o) in ops.into_iter().enumerate() {
+                    srcs[k].push(o);
+                }
+            }
+            out.push(BatchOp {
+                name: format!("{}:{}", self.name, out.len()),
+                srcs,
+                dst: lanes,
+            });
+        }
+        out
+    }
+}
+
+/// The operation each lane of a batch performs (executor dispatch).
+pub fn batch_prim_kind(sg: &Subgraph, b: &BatchOp) -> Prim {
+    sg.defs[b.dst[0] as usize].clone()
+}
+
+// -----------------------------------------------------------------------
+// The seven Table-2 subgraphs
+// -----------------------------------------------------------------------
+
+/// Table 2 subgraph set.
+#[derive(Clone, Copy, Debug, PartialEq, Eq, Hash)]
+pub enum SubgraphKind {
+    GruCell,
+    LstmCell,
+    MvCell,
+    TreeGruInternal,
+    TreeGruLeaf,
+    TreeLstmInternal,
+    TreeLstmLeaf,
+}
+
+pub const ALL_SUBGRAPHS: [SubgraphKind; 7] = [
+    SubgraphKind::GruCell,
+    SubgraphKind::LstmCell,
+    SubgraphKind::MvCell,
+    SubgraphKind::TreeGruInternal,
+    SubgraphKind::TreeGruLeaf,
+    SubgraphKind::TreeLstmInternal,
+    SubgraphKind::TreeLstmLeaf,
+];
+
+impl SubgraphKind {
+    pub fn name(self) -> &'static str {
+        match self {
+            SubgraphKind::GruCell => "GRUCell",
+            SubgraphKind::LstmCell => "LSTMCell",
+            SubgraphKind::MvCell => "MVCell",
+            SubgraphKind::TreeGruInternal => "TreeGRU-Internal",
+            SubgraphKind::TreeGruLeaf => "TreeGRU-Leaf",
+            SubgraphKind::TreeLstmInternal => "TreeLSTM-Internal",
+            SubgraphKind::TreeLstmLeaf => "TreeLSTM-Leaf",
+        }
+    }
+
+    pub fn build(self, hidden: usize, inst_batch: usize) -> Subgraph {
+        match self {
+            SubgraphKind::GruCell => gru_cell(hidden, inst_batch),
+            SubgraphKind::LstmCell => lstm_cell(hidden, inst_batch),
+            SubgraphKind::MvCell => mv_cell(hidden, inst_batch),
+            SubgraphKind::TreeGruInternal => treegru_internal(hidden, inst_batch),
+            SubgraphKind::TreeGruLeaf => treegru_leaf(hidden, inst_batch),
+            SubgraphKind::TreeLstmInternal => treelstm_internal(hidden, inst_batch),
+            SubgraphKind::TreeLstmLeaf => treelstm_leaf(hidden, inst_batch),
+        }
+    }
+}
+
+fn new_sg(name: &str, hidden: usize, inst_batch: usize) -> Subgraph {
+    Subgraph {
+        name: name.to_string(),
+        hidden,
+        inst_batch,
+        ..Default::default()
+    }
+}
+
+/// gate(x-affine + h-affine + bias) for one gate; returns pre-activation.
+fn gate_pre(sg: &mut Subgraph, bh: usize, hh: usize, h: usize, x: Var, hv: Var) -> Var {
+    let wx = sg.param(hh);
+    let wh = sg.param(hh);
+    let b = sg.param(h);
+    let m1 = sg.push(Prim::MatMulXW { x, w: wx }, bh);
+    let m2 = sg.push(Prim::MatMulXW { x: hv, w: wh }, bh);
+    let s = sg.push(Prim::Add { a: m1, b: m2 }, bh);
+    sg.push(Prim::AddBias { a: s, b }, bh)
+}
+
+pub fn lstm_cell(hd: usize, ib: usize) -> Subgraph {
+    let (bh, hh) = (ib * hd, hd * hd);
+    let mut sg = new_sg("LSTMCell", hd, ib);
+    let x = sg.input(bh);
+    let h = sg.input(bh);
+    let c = sg.input(bh);
+    let pre_i = gate_pre(&mut sg, bh, hh, hd, x, h);
+    let pre_f = gate_pre(&mut sg, bh, hh, hd, x, h);
+    let pre_g = gate_pre(&mut sg, bh, hh, hd, x, h);
+    let pre_o = gate_pre(&mut sg, bh, hh, hd, x, h);
+    let i = sg.push(Prim::Sigmoid { a: pre_i }, bh);
+    let f = sg.push(Prim::Sigmoid { a: pre_f }, bh);
+    let gg = sg.push(Prim::Tanh { a: pre_g }, bh);
+    let o = sg.push(Prim::Sigmoid { a: pre_o }, bh);
+    let fc = sg.push(Prim::CMult { a: f, b: c }, bh);
+    let ig = sg.push(Prim::CMult { a: i, b: gg }, bh);
+    let c2 = sg.push(Prim::Add { a: fc, b: ig }, bh);
+    let tc = sg.push(Prim::Tanh { a: c2 }, bh);
+    let h2 = sg.push(Prim::CMult { a: o, b: tc }, bh);
+    sg.outputs = vec![h2, c2];
+    sg
+}
+
+pub fn gru_cell(hd: usize, ib: usize) -> Subgraph {
+    let (bh, hh) = (ib * hd, hd * hd);
+    let mut sg = new_sg("GRUCell", hd, ib);
+    let x = sg.input(bh);
+    let h = sg.input(bh);
+    let pre_r = gate_pre(&mut sg, bh, hh, hd, x, h);
+    let pre_z = gate_pre(&mut sg, bh, hh, hd, x, h);
+    let r = sg.push(Prim::Sigmoid { a: pre_r }, bh);
+    let z = sg.push(Prim::Sigmoid { a: pre_z }, bh);
+    let rh = sg.push(Prim::CMult { a: r, b: h }, bh);
+    let pre_n = gate_pre(&mut sg, bh, hh, hd, x, rh);
+    let n = sg.push(Prim::Tanh { a: pre_n }, bh);
+    let zh = sg.push(Prim::CMult { a: z, b: h }, bh);
+    let omz = sg.push(Prim::OneMinus { a: z }, bh);
+    let on = sg.push(Prim::CMult { a: omz, b: n }, bh);
+    let h2 = sg.push(Prim::Add { a: on, b: zh }, bh);
+    sg.outputs = vec![h2];
+    sg
+}
+
+pub fn mv_cell(hd: usize, ib: usize) -> Subgraph {
+    let (bh, hh) = (ib * hd, hd * hd);
+    let mut sg = new_sg("MVCell", hd, ib);
+    let h_l = sg.input(bh);
+    let h_r = sg.input(bh);
+    let m_l = sg.input(hh);
+    let m_r = sg.input(hh);
+    // vector path: cross interactions then affine combine
+    let cross_l = sg.push(Prim::MatMulXW { x: h_l, w: m_r }, bh);
+    let cross_r = sg.push(Prim::MatMulXW { x: h_r, w: m_l }, bh);
+    let wv1 = sg.param(hh);
+    let wv2 = sg.param(hh);
+    let bv = sg.param(hd);
+    let a1 = sg.push(Prim::MatMulXW { x: cross_l, w: wv1 }, bh);
+    let a2 = sg.push(Prim::MatMulXW { x: cross_r, w: wv2 }, bh);
+    let s = sg.push(Prim::Add { a: a1, b: a2 }, bh);
+    let sb = sg.push(Prim::AddBias { a: s, b: bv }, bh);
+    let v = sg.push(Prim::Tanh { a: sb }, bh);
+    // matrix path
+    let wm1 = sg.param(hh);
+    let wm2 = sg.param(hh);
+    let bm = sg.param(hh);
+    let mm1 = sg.push(Prim::MatMatWM { w: wm1, m: m_l }, hh);
+    let mm2 = sg.push(Prim::MatMatWM { w: wm2, m: m_r }, hh);
+    let msum = sg.push(Prim::Add3 { a: mm1, b: mm2, c: bm }, hh);
+    sg.outputs = vec![v, msum];
+    sg
+}
+
+pub fn treelstm_internal(hd: usize, ib: usize) -> Subgraph {
+    let (bh, hh) = (ib * hd, hd * hd);
+    let mut sg = new_sg("TreeLSTM-Internal", hd, ib);
+    let h_l = sg.input(bh);
+    let h_r = sg.input(bh);
+    let c_l = sg.input(bh);
+    let c_r = sg.input(bh);
+    // gates i, f_l, f_r, g, o: each U_l h_l + U_r h_r + b
+    let mut pre = Vec::new();
+    for _ in 0..5 {
+        pre.push(gate_pre(&mut sg, bh, hh, hd, h_l, h_r));
+    }
+    let i = sg.push(Prim::Sigmoid { a: pre[0] }, bh);
+    let f_l = sg.push(Prim::Sigmoid { a: pre[1] }, bh);
+    let f_r = sg.push(Prim::Sigmoid { a: pre[2] }, bh);
+    let gg = sg.push(Prim::Tanh { a: pre[3] }, bh);
+    let o = sg.push(Prim::Sigmoid { a: pre[4] }, bh);
+    let flc = sg.push(Prim::CMult { a: f_l, b: c_l }, bh);
+    let frc = sg.push(Prim::CMult { a: f_r, b: c_r }, bh);
+    let ig = sg.push(Prim::CMult { a: i, b: gg }, bh);
+    let c2 = sg.push(Prim::Add3 { a: flc, b: frc, c: ig }, bh);
+    let tc = sg.push(Prim::Tanh { a: c2 }, bh);
+    let h2 = sg.push(Prim::CMult { a: o, b: tc }, bh);
+    sg.outputs = vec![h2, c2];
+    sg
+}
+
+pub fn treelstm_leaf(hd: usize, ib: usize) -> Subgraph {
+    let (bh, hh) = (ib * hd, hd * hd);
+    let mut sg = new_sg("TreeLSTM-Leaf", hd, ib);
+    let x = sg.input(bh);
+    // input-only gates i, g, o
+    let mut pre = Vec::new();
+    for _ in 0..3 {
+        let w = sg.param(hh);
+        let b = sg.param(hd);
+        let m = sg.push(Prim::MatMulXW { x, w }, bh);
+        pre.push(sg.push(Prim::AddBias { a: m, b }, bh));
+    }
+    let i = sg.push(Prim::Sigmoid { a: pre[0] }, bh);
+    let gg = sg.push(Prim::Tanh { a: pre[1] }, bh);
+    let o = sg.push(Prim::Sigmoid { a: pre[2] }, bh);
+    let c2 = sg.push(Prim::CMult { a: i, b: gg }, bh);
+    let tc = sg.push(Prim::Tanh { a: c2 }, bh);
+    let h2 = sg.push(Prim::CMult { a: o, b: tc }, bh);
+    sg.outputs = vec![h2, c2];
+    sg
+}
+
+pub fn treegru_internal(hd: usize, ib: usize) -> Subgraph {
+    let (bh, hh) = (ib * hd, hd * hd);
+    let mut sg = new_sg("TreeGRU-Internal", hd, ib);
+    let h_l = sg.input(bh);
+    let h_r = sg.input(bh);
+    let pre_rl = gate_pre(&mut sg, bh, hh, hd, h_l, h_r);
+    let pre_rr = gate_pre(&mut sg, bh, hh, hd, h_l, h_r);
+    let pre_z = gate_pre(&mut sg, bh, hh, hd, h_l, h_r);
+    let r_l = sg.push(Prim::Sigmoid { a: pre_rl }, bh);
+    let r_r = sg.push(Prim::Sigmoid { a: pre_rr }, bh);
+    let z = sg.push(Prim::Sigmoid { a: pre_z }, bh);
+    let rhl = sg.push(Prim::CMult { a: r_l, b: h_l }, bh);
+    let rhr = sg.push(Prim::CMult { a: r_r, b: h_r }, bh);
+    let pre_n = gate_pre(&mut sg, bh, hh, hd, rhl, rhr);
+    let n = sg.push(Prim::Tanh { a: pre_n }, bh);
+    let hbar = sg.push(Prim::Mean2 { a: h_l, b: h_r }, bh);
+    let zh = sg.push(Prim::CMult { a: z, b: hbar }, bh);
+    let omz = sg.push(Prim::OneMinus { a: z }, bh);
+    let on = sg.push(Prim::CMult { a: omz, b: n }, bh);
+    let h2 = sg.push(Prim::Add { a: on, b: zh }, bh);
+    sg.outputs = vec![h2];
+    sg
+}
+
+pub fn treegru_leaf(hd: usize, ib: usize) -> Subgraph {
+    let (bh, hh) = (ib * hd, hd * hd);
+    let mut sg = new_sg("TreeGRU-Leaf", hd, ib);
+    let x = sg.input(bh);
+    let w = sg.param(hh);
+    let b = sg.param(hd);
+    let m = sg.push(Prim::MatMulXW { x, w }, bh);
+    let mb = sg.push(Prim::AddBias { a: m, b }, bh);
+    let h2 = sg.push(Prim::Tanh { a: mb }, bh);
+    sg.outputs = vec![h2];
+    sg
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::memory::{evaluate_layout, planner::pq_plan, MemoryPlan};
+
+    #[test]
+    fn all_subgraphs_validate() {
+        for k in ALL_SUBGRAPHS {
+            let sg = k.build(16, 4);
+            sg.validate().unwrap_or_else(|e| panic!("{}: {e}", k.name()));
+            assert!(!sg.outputs.is_empty());
+        }
+    }
+
+    #[test]
+    fn lstm_gate_affines_batch_together() {
+        let sg = lstm_cell(16, 4);
+        let batches = sg.batch();
+        // the 8 x/h-side gate matmuls share a signature -> one 8-lane batch
+        let mm = batches
+            .iter()
+            .filter(|b| matches!(batch_prim_kind(&sg, b), Prim::MatMulXW { .. }))
+            .collect::<Vec<_>>();
+        assert_eq!(mm.len(), 1, "matmul batches: {}", mm.len());
+        assert_eq!(mm[0].lanes(), 8);
+    }
+
+    #[test]
+    fn batches_cover_all_compute_vars_once() {
+        for k in ALL_SUBGRAPHS {
+            let sg = k.build(8, 2);
+            let batches = sg.batch();
+            let mut seen = vec![false; sg.num_vars()];
+            for b in &batches {
+                for &v in &b.dst {
+                    assert!(!seen[v as usize], "{}: var {v} twice", k.name());
+                    seen[v as usize] = true;
+                }
+            }
+            for (i, d) in sg.defs.iter().enumerate() {
+                let computed = !matches!(d, Prim::Input | Prim::Param);
+                assert_eq!(seen[i], computed, "{}: var {i}", k.name());
+            }
+        }
+    }
+
+    #[test]
+    fn batches_respect_dependencies() {
+        for k in ALL_SUBGRAPHS {
+            let sg = k.build(8, 2);
+            let batches = sg.batch();
+            let mut done = vec![false; sg.num_vars()];
+            for (i, d) in sg.defs.iter().enumerate() {
+                if matches!(d, Prim::Input | Prim::Param) {
+                    done[i] = true;
+                }
+            }
+            for b in &batches {
+                for &v in &b.dst {
+                    for o in sg.defs[v as usize].operands() {
+                        assert!(done[o as usize], "{}: {v} before {o}", k.name());
+                    }
+                }
+                for &v in &b.dst {
+                    done[v as usize] = true;
+                }
+            }
+        }
+    }
+
+    #[test]
+    fn pq_plan_reduces_memcpy_on_lstm() {
+        let sg = lstm_cell(16, 4);
+        let batches = sg.batch();
+        let naive = evaluate_layout(
+            &MemoryPlan::creation_order(&sg.sizes),
+            &sg.sizes,
+            &batches,
+        );
+        let out = pq_plan(&batches, &sg.sizes);
+        let planned = evaluate_layout(&out.plan, &sg.sizes, &batches);
+        assert!(
+            planned.memcpy_elems < naive.memcpy_elems,
+            "planned {planned:?} naive {naive:?}"
+        );
+        assert!(planned.mem_kernels < naive.mem_kernels);
+    }
+
+    #[test]
+    fn pq_plan_reduces_memcpy_on_all_cells() {
+        for k in ALL_SUBGRAPHS {
+            let sg = k.build(16, 4);
+            let batches = sg.batch();
+            let naive = evaluate_layout(
+                &MemoryPlan::creation_order(&sg.sizes),
+                &sg.sizes,
+                &batches,
+            );
+            let out = pq_plan(&batches, &sg.sizes);
+            let planned = evaluate_layout(&out.plan, &sg.sizes, &batches);
+            assert!(
+                planned.memcpy_elems <= naive.memcpy_elems,
+                "{}: planned {planned:?} naive {naive:?}",
+                k.name()
+            );
+        }
+    }
+}

@@ -1,0 +1,155 @@
+//! Micro-benchmark harness — replaces criterion (unavailable offline).
+//!
+//! Usage inside a `harness = false` bench target:
+//! ```no_run
+//! use ed_batch::util::bench::Bencher;
+//! let mut b = Bencher::from_env("micro");
+//! b.bench("frontier_pop", || { /* hot code */ });
+//! b.finish();
+//! ```
+//! Auto-calibrates iteration counts to a target measurement time, reports
+//! mean / p50 / p99 per iteration and writes a JSON dump next to the target
+//! dir so perf regressions are diffable across the §Perf pass.
+
+use std::hint::black_box;
+use std::time::{Duration, Instant};
+
+use crate::util::json::Json;
+use crate::util::stats::{fmt_duration, Samples};
+
+pub use std::hint::black_box as bb;
+
+pub struct BenchResult {
+    pub name: String,
+    pub iters_per_sample: u64,
+    pub samples: Samples,
+}
+
+pub struct Bencher {
+    suite: String,
+    filter: Option<String>,
+    target_sample: Duration,
+    num_samples: usize,
+    results: Vec<BenchResult>,
+}
+
+impl Bencher {
+    pub fn new(suite: &str) -> Self {
+        Bencher {
+            suite: suite.to_string(),
+            filter: None,
+            target_sample: Duration::from_millis(50),
+            num_samples: 12,
+            results: Vec::new(),
+        }
+    }
+
+    /// Respects a CLI filter argument (`cargo bench -- <substring>`) and
+    /// `ED_BENCH_FAST=1` for smoke runs.
+    pub fn from_env(suite: &str) -> Self {
+        let mut b = Self::new(suite);
+        b.filter = std::env::args().nth(1).filter(|a| !a.starts_with('-'));
+        if std::env::var("ED_BENCH_FAST").is_ok() {
+            b.target_sample = Duration::from_millis(5);
+            b.num_samples = 3;
+        }
+        b
+    }
+
+    fn enabled(&self, name: &str) -> bool {
+        self.filter.as_deref().map_or(true, |f| name.contains(f))
+    }
+
+    /// Benchmark a closure; the closure's return value is black-boxed.
+    pub fn bench<T, F: FnMut() -> T>(&mut self, name: &str, mut f: F) {
+        if !self.enabled(name) {
+            return;
+        }
+        // Calibrate: find iters such that one sample ~= target_sample.
+        let mut iters: u64 = 1;
+        loop {
+            let t0 = Instant::now();
+            for _ in 0..iters {
+                black_box(f());
+            }
+            let dt = t0.elapsed();
+            if dt >= self.target_sample || iters >= 1 << 30 {
+                break;
+            }
+            let scale = (self.target_sample.as_secs_f64() / dt.as_secs_f64().max(1e-9))
+                .min(128.0)
+                .max(2.0);
+            iters = ((iters as f64) * scale).ceil() as u64;
+        }
+
+        let mut samples = Samples::new();
+        for _ in 0..self.num_samples {
+            let t0 = Instant::now();
+            for _ in 0..iters {
+                black_box(f());
+            }
+            samples.record(t0.elapsed().as_secs_f64() / iters as f64);
+        }
+        println!(
+            "{:<44} {:>12}/iter  p50 {:>12}  p99 {:>12}  ({} iters x {} samples)",
+            format!("{}::{}", self.suite, name),
+            fmt_duration(samples.mean()),
+            fmt_duration(samples.p50()),
+            fmt_duration(samples.p99()),
+            iters,
+            self.num_samples,
+        );
+        self.results.push(BenchResult {
+            name: name.to_string(),
+            iters_per_sample: iters,
+            samples,
+        });
+    }
+
+    /// Writes results to `target/ed-bench-<suite>.json` for §Perf diffing.
+    pub fn finish(self) {
+        let arr: Vec<Json> = self
+            .results
+            .iter()
+            .map(|r| {
+                Json::obj(vec![
+                    ("name", Json::from(r.name.clone())),
+                    ("mean_s", Json::from(r.samples.mean())),
+                    ("p50_s", Json::from(r.samples.p50())),
+                    ("p99_s", Json::from(r.samples.p99())),
+                    ("iters", Json::from(r.iters_per_sample)),
+                ])
+            })
+            .collect();
+        let path = format!("target/ed-bench-{}.json", self.suite);
+        let _ = std::fs::write(&path, Json::Arr(arr).to_string());
+        println!("bench results written to {path}");
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn bench_runs_and_records() {
+        let mut b = Bencher::new("test");
+        b.target_sample = Duration::from_micros(200);
+        b.num_samples = 2;
+        let mut acc = 0u64;
+        b.bench("noop_add", || {
+            acc = acc.wrapping_add(1);
+            acc
+        });
+        assert_eq!(b.results.len(), 1);
+        assert!(b.results[0].samples.mean() >= 0.0);
+    }
+
+    #[test]
+    fn filter_skips() {
+        let mut b = Bencher::new("test");
+        b.filter = Some("only_this".into());
+        b.bench("other", || 1);
+        assert!(b.results.is_empty());
+    }
+}

@@ -1,0 +1,115 @@
+//! Minimal CLI argument parser — replaces clap (unavailable offline).
+//!
+//! Supports `--key value`, `--key=value`, boolean `--flag`, and positional
+//! arguments. The `ed-batch` binary builds its subcommand dispatch on this.
+
+use std::collections::BTreeMap;
+
+#[derive(Clone, Debug, Default)]
+pub struct Args {
+    pub positional: Vec<String>,
+    pub flags: BTreeMap<String, String>,
+}
+
+impl Args {
+    pub fn parse(argv: impl Iterator<Item = String>) -> Args {
+        let mut out = Args::default();
+        let mut argv = argv.peekable();
+        while let Some(a) = argv.next() {
+            if let Some(rest) = a.strip_prefix("--") {
+                if let Some((k, v)) = rest.split_once('=') {
+                    out.flags.insert(k.to_string(), v.to_string());
+                } else if argv
+                    .peek()
+                    .map_or(false, |n| !n.starts_with("--"))
+                {
+                    let v = argv.next().unwrap();
+                    out.flags.insert(rest.to_string(), v);
+                } else {
+                    out.flags.insert(rest.to_string(), "true".to_string());
+                }
+            } else {
+                out.positional.push(a);
+            }
+        }
+        out
+    }
+
+    pub fn from_env() -> Args {
+        Args::parse(std::env::args().skip(1))
+    }
+
+    pub fn flag(&self, key: &str) -> bool {
+        self.flags.get(key).map_or(false, |v| v != "false")
+    }
+
+    pub fn get(&self, key: &str) -> Option<&str> {
+        self.flags.get(key).map(|s| s.as_str())
+    }
+
+    pub fn get_or<'a>(&'a self, key: &str, default: &'a str) -> &'a str {
+        self.get(key).unwrap_or(default)
+    }
+
+    pub fn usize(&self, key: &str, default: usize) -> usize {
+        self.get(key)
+            .and_then(|v| v.parse().ok())
+            .unwrap_or(default)
+    }
+
+    pub fn u64(&self, key: &str, default: u64) -> u64 {
+        self.get(key)
+            .and_then(|v| v.parse().ok())
+            .unwrap_or(default)
+    }
+
+    pub fn f64(&self, key: &str, default: f64) -> f64 {
+        self.get(key)
+            .and_then(|v| v.parse().ok())
+            .unwrap_or(default)
+    }
+
+    /// Comma-separated usize list, e.g. `--sizes 32,64,128`.
+    pub fn usize_list(&self, key: &str, default: &[usize]) -> Vec<usize> {
+        match self.get(key) {
+            None => default.to_vec(),
+            Some(v) => v
+                .split(',')
+                .filter_map(|s| s.trim().parse().ok())
+                .collect(),
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn parse(s: &[&str]) -> Args {
+        Args::parse(s.iter().map(|x| x.to_string()))
+    }
+
+    #[test]
+    fn positional_and_flags() {
+        let a = parse(&["bench", "fig9", "--seed", "7", "--fast"]);
+        assert_eq!(a.positional, vec!["bench", "fig9"]);
+        assert_eq!(a.u64("seed", 0), 7);
+        assert!(a.flag("fast"));
+        assert!(!a.flag("slow"));
+    }
+
+    #[test]
+    fn equals_form() {
+        let a = parse(&["--model-size=128", "--list=1,2,3"]);
+        assert_eq!(a.usize("model-size", 0), 128);
+        assert_eq!(a.usize_list("list", &[]), vec![1, 2, 3]);
+    }
+
+    #[test]
+    fn defaults() {
+        let a = parse(&[]);
+        assert_eq!(a.usize("x", 5), 5);
+        assert_eq!(a.get_or("y", "d"), "d");
+        assert_eq!(a.usize_list("sizes", &[32, 64]), vec![32, 64]);
+    }
+}

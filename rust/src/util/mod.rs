@@ -1,0 +1,13 @@
+//! Small self-contained infrastructure: RNG, JSON, CLI, stats, bench and
+//! property-test harnesses.
+//!
+//! These replace crates that are unavailable in the offline build
+//! environment (rand, serde_json, clap, criterion, proptest) — see the note
+//! in `Cargo.toml` and DESIGN.md §Substitutions.
+
+pub mod bench;
+pub mod cli;
+pub mod json;
+pub mod propcheck;
+pub mod rng;
+pub mod stats;

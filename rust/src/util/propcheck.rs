@@ -1,0 +1,123 @@
+//! Tiny property-testing driver — replaces proptest (unavailable offline).
+//!
+//! A property is a closure over a seeded [`Rng`]; the driver runs it across
+//! many deterministic seeds and reports the first failing seed so failures
+//! reproduce exactly. Shrinking is by re-running with a "size" knob the
+//! generators respect ([`Gen::size`]), from small to large, so the smallest
+//! failing size is reported first.
+
+use crate::util::rng::Rng;
+
+/// Generator context handed to properties: seeded RNG + a size hint that
+/// grows over the run (like proptest's size parameter).
+pub struct Gen {
+    pub rng: Rng,
+    pub size: usize,
+}
+
+impl Gen {
+    /// Uniform usize in [lo, hi], scaled availability by size.
+    pub fn int(&mut self, lo: usize, hi: usize) -> usize {
+        let hi = hi.min(lo + self.size.max(1));
+        lo + self.rng.usize_below(hi - lo + 1)
+    }
+
+    /// A vec of values of length in [min_len, min_len+size].
+    pub fn vec<T>(&mut self, min_len: usize, mut f: impl FnMut(&mut Gen) -> T) -> Vec<T> {
+        let extra = self.rng.usize_below(self.size.max(1));
+        let n = min_len + extra;
+        (0..n).map(|_| f(self)).collect()
+    }
+
+    /// Pick one of the given options.
+    pub fn pick<'a, T>(&mut self, xs: &'a [T]) -> &'a T {
+        &xs[self.rng.usize_below(xs.len())]
+    }
+}
+
+/// Run `cases` random cases of the property, sizes ramping 1..=max_size.
+/// Panics with the failing seed/size on first failure.
+#[track_caller]
+pub fn check<F: FnMut(&mut Gen) -> Result<(), String>>(name: &str, cases: u64, mut prop: F) {
+    let max_size = 40usize;
+    for case in 0..cases {
+        let seed = 0x5EED_0000 + case;
+        let size = 1 + (case as usize * max_size / cases.max(1) as usize);
+        let mut g = Gen {
+            rng: Rng::new(seed),
+            size,
+        };
+        if let Err(msg) = prop(&mut g) {
+            panic!(
+                "property '{name}' failed at case {case} (seed={seed:#x}, size={size}): {msg}"
+            );
+        }
+    }
+}
+
+/// Convenience assert for use inside properties.
+#[macro_export]
+macro_rules! prop_assert {
+    ($cond:expr, $($fmt:tt)+) => {
+        if !$cond {
+            return Err(format!($($fmt)+));
+        }
+    };
+    ($cond:expr) => {
+        if !$cond {
+            return Err(format!("assertion failed: {}", stringify!($cond)));
+        }
+    };
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn passing_property_runs_all_cases() {
+        let mut n = 0;
+        check("count", 25, |_g| {
+            n += 1;
+            Ok(())
+        });
+        assert_eq!(n, 25);
+    }
+
+    #[test]
+    #[should_panic(expected = "property 'fails'")]
+    fn failing_property_panics_with_seed() {
+        check("fails", 10, |g| {
+            let v = g.int(0, 100);
+            if v % 2 == 0 || v % 2 == 1 {
+                Err("always".into())
+            } else {
+                Ok(())
+            }
+        });
+    }
+
+    #[test]
+    fn gen_int_respects_bounds() {
+        check("bounds", 50, |g| {
+            let v = g.int(3, 10);
+            prop_assert!((3..=10).contains(&v), "v={v}");
+            Ok(())
+        });
+    }
+
+    #[test]
+    fn deterministic_across_runs() {
+        let mut first: Vec<usize> = vec![];
+        check("det1", 10, |g| {
+            first.push(g.int(0, 1000));
+            Ok(())
+        });
+        let mut second: Vec<usize> = vec![];
+        check("det2", 10, |g| {
+            second.push(g.int(0, 1000));
+            Ok(())
+        });
+        assert_eq!(first, second);
+    }
+}

@@ -1,0 +1,151 @@
+//! Latency/throughput statistics helpers shared by the coordinator metrics
+//! and the bench harness.
+
+use std::time::Duration;
+
+/// Online mean/min/max/percentile tracker over recorded samples.
+#[derive(Clone, Debug, Default)]
+pub struct Samples {
+    vals: Vec<f64>,
+}
+
+impl Samples {
+    pub fn new() -> Self {
+        Self::default()
+    }
+
+    pub fn record(&mut self, v: f64) {
+        self.vals.push(v);
+    }
+
+    pub fn record_duration(&mut self, d: Duration) {
+        self.record(d.as_secs_f64());
+    }
+
+    pub fn len(&self) -> usize {
+        self.vals.len()
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.vals.is_empty()
+    }
+
+    pub fn mean(&self) -> f64 {
+        if self.vals.is_empty() {
+            return 0.0;
+        }
+        self.vals.iter().sum::<f64>() / self.vals.len() as f64
+    }
+
+    pub fn min(&self) -> f64 {
+        self.vals.iter().cloned().fold(f64::INFINITY, f64::min)
+    }
+
+    pub fn max(&self) -> f64 {
+        self.vals.iter().cloned().fold(f64::NEG_INFINITY, f64::max)
+    }
+
+    pub fn stddev(&self) -> f64 {
+        if self.vals.len() < 2 {
+            return 0.0;
+        }
+        let m = self.mean();
+        (self.vals.iter().map(|v| (v - m) * (v - m)).sum::<f64>()
+            / (self.vals.len() - 1) as f64)
+            .sqrt()
+    }
+
+    /// Linear-interpolated percentile; `q` in [0, 100].
+    pub fn percentile(&self, q: f64) -> f64 {
+        if self.vals.is_empty() {
+            return 0.0;
+        }
+        let mut sorted = self.vals.clone();
+        sorted.sort_by(|a, b| a.partial_cmp(b).unwrap());
+        let rank = q / 100.0 * (sorted.len() - 1) as f64;
+        let lo = rank.floor() as usize;
+        let hi = rank.ceil() as usize;
+        if lo == hi {
+            sorted[lo]
+        } else {
+            let w = rank - lo as f64;
+            sorted[lo] * (1.0 - w) + sorted[hi] * w
+        }
+    }
+
+    pub fn p50(&self) -> f64 {
+        self.percentile(50.0)
+    }
+
+    pub fn p99(&self) -> f64 {
+        self.percentile(99.0)
+    }
+}
+
+/// Geometric mean — the paper reports per-family average speedups this way.
+pub fn geomean(xs: &[f64]) -> f64 {
+    if xs.is_empty() {
+        return 0.0;
+    }
+    (xs.iter().map(|x| x.ln()).sum::<f64>() / xs.len() as f64).exp()
+}
+
+/// Pretty-format a duration in adaptive units.
+pub fn fmt_duration(secs: f64) -> String {
+    if secs >= 1.0 {
+        format!("{:.3}s", secs)
+    } else if secs >= 1e-3 {
+        format!("{:.3}ms", secs * 1e3)
+    } else if secs >= 1e-6 {
+        format!("{:.3}us", secs * 1e6)
+    } else {
+        format!("{:.1}ns", secs * 1e9)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn percentile_interpolates() {
+        let mut s = Samples::new();
+        for v in [1.0, 2.0, 3.0, 4.0, 5.0] {
+            s.record(v);
+        }
+        assert_eq!(s.p50(), 3.0);
+        assert_eq!(s.percentile(0.0), 1.0);
+        assert_eq!(s.percentile(100.0), 5.0);
+        assert!((s.percentile(25.0) - 2.0).abs() < 1e-12);
+    }
+
+    #[test]
+    fn mean_std() {
+        let mut s = Samples::new();
+        for v in [2.0, 4.0, 4.0, 4.0, 5.0, 5.0, 7.0, 9.0] {
+            s.record(v);
+        }
+        assert!((s.mean() - 5.0).abs() < 1e-12);
+        assert!((s.stddev() - 2.138089935299395).abs() < 1e-9);
+    }
+
+    #[test]
+    fn geomean_basic() {
+        assert!((geomean(&[1.0, 4.0]) - 2.0).abs() < 1e-12);
+        assert!((geomean(&[2.0, 2.0, 2.0]) - 2.0).abs() < 1e-12);
+    }
+
+    #[test]
+    fn fmt_units() {
+        assert_eq!(fmt_duration(1.5), "1.500s");
+        assert_eq!(fmt_duration(0.0015), "1.500ms");
+        assert_eq!(fmt_duration(0.0000015), "1.500us");
+    }
+
+    #[test]
+    fn empty_is_safe() {
+        let s = Samples::new();
+        assert_eq!(s.mean(), 0.0);
+        assert_eq!(s.p99(), 0.0);
+    }
+}

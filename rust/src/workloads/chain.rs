@@ -1,0 +1,269 @@
+//! Chain-based workloads: BiLSTM tagger (+withchar variant) and LSTM-NMT.
+//!
+//! Node/pred conventions the executor relies on (see `exec::engine`):
+//! * LSTM/GRU chain cell: preds = [x-provider, prev-state?, extra-states...]
+//! * Classifier: preds = [h-providers...] (summed, then projected)
+//! * Source (embed): preds = []
+
+use crate::graph::{CellKind, Graph, NodeId, TypeRegistry};
+use crate::util::rng::Rng;
+
+use super::GenParams;
+
+fn lstm_flops(h: usize) -> u64 {
+    // two [1,H]x[H,4H] matmuls + pointwise
+    (2 * 2 * h * 4 * h + 8 * h) as u64
+}
+
+#[allow(dead_code)]
+fn gru_flops(h: usize) -> u64 {
+    (2 * 2 * h * 3 * h + 10 * h) as u64
+}
+
+fn clf_flops(h: usize) -> u64 {
+    (2 * h * 32) as u64
+}
+
+pub fn bilstm_tagger_registry(h: usize) -> TypeRegistry {
+    let mut r = TypeRegistry::new();
+    r.register("embed", CellKind::Source, h, 0);
+    r.register("lstm_fwd", CellKind::Lstm, 2 * h, lstm_flops(h));
+    r.register("lstm_bwd", CellKind::Lstm, 2 * h, lstm_flops(h));
+    r.register("tag", CellKind::Classifier, 32, clf_flops(h));
+    r
+}
+
+/// Bi-directional LSTM tagger over one sentence of length L:
+/// forward chain, backward chain, one tag head per token fed by both.
+pub fn bilstm_tagger(reg: &TypeRegistry, p: &GenParams, rng: &mut Rng) -> Graph {
+    let (embed, fwd, bwd, tag) = (
+        reg.lookup("embed").unwrap(),
+        reg.lookup("lstm_fwd").unwrap(),
+        reg.lookup("lstm_bwd").unwrap(),
+        reg.lookup("tag").unwrap(),
+    );
+    let len = p.sample_len(rng);
+    let mut g = Graph::new();
+    let embeds: Vec<NodeId> = (0..len).map(|_| g.add(embed, vec![], 0)).collect();
+    let mut f_nodes = Vec::with_capacity(len);
+    let mut prev: Option<NodeId> = None;
+    for &e in &embeds {
+        let preds = match prev {
+            Some(pv) => vec![e, pv],
+            None => vec![e],
+        };
+        let n = g.add(fwd, preds, 0);
+        f_nodes.push(n);
+        prev = Some(n);
+    }
+    let mut b_nodes = vec![NodeId(0); len];
+    let mut prev: Option<NodeId> = None;
+    for i in (0..len).rev() {
+        let preds = match prev {
+            Some(pv) => vec![embeds[i], pv],
+            None => vec![embeds[i]],
+        };
+        let n = g.add(bwd, preds, 0);
+        b_nodes[i] = n;
+        prev = Some(n);
+    }
+    for i in 0..len {
+        g.add(tag, vec![f_nodes[i], b_nodes[i]], 0);
+    }
+    g
+}
+
+pub fn bilstm_tagger_withchar_registry(h: usize) -> TypeRegistry {
+    let mut r = TypeRegistry::new();
+    r.register("char_embed", CellKind::Source, h, 0);
+    r.register("char_fwd", CellKind::Lstm, 2 * h, lstm_flops(h));
+    r.register("char_bwd", CellKind::Lstm, 2 * h, lstm_flops(h));
+    r.register("embed", CellKind::Source, h, 0);
+    r.register("word_in", CellKind::Reduce, h, h as u64);
+    r.register("lstm_fwd", CellKind::Lstm, 2 * h, lstm_flops(h));
+    r.register("lstm_bwd", CellKind::Lstm, 2 * h, lstm_flops(h));
+    r.register("tag", CellKind::Classifier, 32, clf_flops(h));
+    r
+}
+
+/// Tagger variant with a per-word character BiLSTM producing the word input
+/// (Table 3's bilstm-tagger-withchar). Chars per word ~ U[2, 8].
+pub fn bilstm_tagger_withchar(reg: &TypeRegistry, p: &GenParams, rng: &mut Rng) -> Graph {
+    let ce = reg.lookup("char_embed").unwrap();
+    let cf = reg.lookup("char_fwd").unwrap();
+    let cb = reg.lookup("char_bwd").unwrap();
+    let embed = reg.lookup("embed").unwrap();
+    let win = reg.lookup("word_in").unwrap();
+    let fwd = reg.lookup("lstm_fwd").unwrap();
+    let bwd = reg.lookup("lstm_bwd").unwrap();
+    let tag = reg.lookup("tag").unwrap();
+
+    let len = p.sample_len(rng);
+    let mut g = Graph::new();
+    // per-word char BiLSTM -> word_in combines char-final states + word embed
+    let word_inputs: Vec<NodeId> = (0..len)
+        .map(|_| {
+            let nchars = 2 + rng.usize_below(7);
+            let ces: Vec<NodeId> = (0..nchars).map(|_| g.add(ce, vec![], 0)).collect();
+            let mut prev = None;
+            for &c in &ces {
+                let preds = match prev {
+                    Some(pv) => vec![c, pv],
+                    None => vec![c],
+                };
+                prev = Some(g.add(cf, preds, 0));
+            }
+            let f_last = prev.unwrap();
+            let mut prev = None;
+            for &c in ces.iter().rev() {
+                let preds = match prev {
+                    Some(pv) => vec![c, pv],
+                    None => vec![c],
+                };
+                prev = Some(g.add(cb, preds, 0));
+            }
+            let b_last = prev.unwrap();
+            let we = g.add(embed, vec![], 0);
+            g.add(win, vec![we, f_last, b_last], 0)
+        })
+        .collect();
+
+    let mut f_nodes = Vec::with_capacity(len);
+    let mut prev: Option<NodeId> = None;
+    for &x in &word_inputs {
+        let preds = match prev {
+            Some(pv) => vec![x, pv],
+            None => vec![x],
+        };
+        let n = g.add(fwd, preds, 0);
+        f_nodes.push(n);
+        prev = Some(n);
+    }
+    let mut b_nodes = vec![NodeId(0); len];
+    let mut prev: Option<NodeId> = None;
+    for i in (0..len).rev() {
+        let preds = match prev {
+            Some(pv) => vec![word_inputs[i], pv],
+            None => vec![word_inputs[i]],
+        };
+        let n = g.add(bwd, preds, 0);
+        b_nodes[i] = n;
+        prev = Some(n);
+    }
+    for i in 0..len {
+        g.add(tag, vec![f_nodes[i], b_nodes[i]], 0);
+    }
+    g
+}
+
+pub fn lstm_nmt_registry(h: usize) -> TypeRegistry {
+    let mut r = TypeRegistry::new();
+    r.register("src_embed", CellKind::Source, h, 0);
+    r.register("enc", CellKind::Lstm, 2 * h, lstm_flops(h));
+    r.register("tgt_embed", CellKind::Source, h, 0);
+    r.register("dec", CellKind::Lstm, 2 * h, lstm_flops(h));
+    r.register("proj", CellKind::Classifier, 32, clf_flops(h));
+    r
+}
+
+/// Encoder-decoder LSTM for NMT: encoder chain over the source sentence,
+/// decoder chain (target length ~ 0.9-1.3x source) seeded from the final
+/// encoder state, a vocab projection per decoder step.
+pub fn lstm_nmt(reg: &TypeRegistry, p: &GenParams, rng: &mut Rng) -> Graph {
+    let se = reg.lookup("src_embed").unwrap();
+    let enc = reg.lookup("enc").unwrap();
+    let te = reg.lookup("tgt_embed").unwrap();
+    let dec = reg.lookup("dec").unwrap();
+    let proj = reg.lookup("proj").unwrap();
+
+    let src_len = p.sample_len(rng);
+    let tgt_len = ((src_len as f64) * (0.9 + 0.4 * rng.f64())).round().max(2.0) as usize;
+    let mut g = Graph::new();
+    let mut prev: Option<NodeId> = None;
+    for _ in 0..src_len {
+        let e = g.add(se, vec![], 0);
+        let preds = match prev {
+            Some(pv) => vec![e, pv],
+            None => vec![e],
+        };
+        prev = Some(g.add(enc, preds, 0));
+    }
+    let enc_final = prev.unwrap();
+    let mut prev = enc_final;
+    for i in 0..tgt_len {
+        let e = g.add(te, vec![], 0);
+        let d = g.add(dec, vec![e, prev], 0);
+        g.add(proj, vec![d], 0);
+        prev = d;
+        let _ = i;
+    }
+    g
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::graph::OpType;
+
+    fn params() -> GenParams {
+        GenParams::with_hidden(64)
+    }
+
+    #[test]
+    fn tagger_structure() {
+        let reg = bilstm_tagger_registry(64);
+        let g = bilstm_tagger(&reg, &params(), &mut Rng::new(5));
+        g.validate().unwrap();
+        let hist = g.type_histogram(reg.num_types());
+        let len = hist[0]; // embeds
+        assert_eq!(hist[1], len, "fwd count");
+        assert_eq!(hist[2], len, "bwd count");
+        assert_eq!(hist[3], len, "tag count");
+        assert_eq!(g.len(), 4 * len);
+    }
+
+    #[test]
+    fn tagger_is_optimally_batchable_in_2l_plus_2() {
+        // chains: lower bound = L (fwd) + L (bwd) + 1 (embed) + 1 (tag)
+        let reg = bilstm_tagger_registry(64);
+        let g = bilstm_tagger(&reg, &params(), &mut Rng::new(5));
+        let len = g.type_histogram(reg.num_types())[0];
+        assert_eq!(g.batch_lower_bound(reg.num_types()) as usize, 2 * len + 2);
+    }
+
+    #[test]
+    fn nmt_decoder_follows_encoder() {
+        let reg = lstm_nmt_registry(64);
+        let g = lstm_nmt(&reg, &params(), &mut Rng::new(6));
+        g.validate().unwrap();
+        // first dec node must depend (transitively) on last enc node
+        let enc_t = reg.lookup("enc").unwrap();
+        let dec_t = reg.lookup("dec").unwrap();
+        let first_dec = g
+            .nodes
+            .iter()
+            .position(|n| n.op == dec_t)
+            .expect("has dec");
+        let has_enc_pred = g.nodes[first_dec]
+            .preds
+            .iter()
+            .any(|p| g.op(*p) == enc_t);
+        assert!(has_enc_pred);
+    }
+
+    #[test]
+    fn withchar_has_char_cells() {
+        let reg = bilstm_tagger_withchar_registry(64);
+        let g = bilstm_tagger_withchar(&reg, &params(), &mut Rng::new(7));
+        g.validate().unwrap();
+        let cf = reg.lookup("char_fwd").unwrap();
+        assert!(g.nodes.iter().filter(|n| n.op == cf).count() > 0);
+    }
+
+    #[test]
+    fn op_type_ids_dense() {
+        let reg = lstm_nmt_registry(32);
+        assert_eq!(reg.lookup("src_embed"), Some(OpType(0)));
+        assert_eq!(reg.lookup("proj"), Some(OpType(4)));
+    }
+}

@@ -1,0 +1,218 @@
+//! Lattice-based workloads: LatticeLSTM (Chinese NER, Zhang & Yang 2018)
+//! and LatticeGRU (lattice-encoder NMT, Su et al. 2017).
+//!
+//! Topology (paper Fig.7): a chain of *character* cells with jump links of
+//! *word* cells: a word candidate spanning chars `[i, j)` reads the char
+//! state at `i-1` and feeds the char cell at `j-1`. Word candidates are
+//! sampled Poisson-per-position with lengths 2..=max_word_len, mirroring
+//! Chinese lexicon-match statistics.
+//!
+//! The FSM-based policy learns to *run all character cells of a timestep
+//! first and delay word cells* so each word batch is maximal — exactly the
+//! behaviour Fig.7's caption describes; depth/agenda heuristics interleave
+//! them arbitrarily.
+
+use crate::graph::{CellKind, Graph, NodeId, TypeRegistry};
+use crate::util::rng::Rng;
+
+use super::GenParams;
+
+fn lstm_flops(h: usize) -> u64 {
+    (2 * 2 * h * 4 * h + 8 * h) as u64
+}
+
+fn gru_flops(h: usize) -> u64 {
+    (2 * 2 * h * 3 * h + 10 * h) as u64
+}
+
+fn clf_flops(h: usize) -> u64 {
+    (2 * h * 32) as u64
+}
+
+pub fn lattice_lstm_registry(h: usize) -> TypeRegistry {
+    let mut r = TypeRegistry::new();
+    r.register("char_embed", CellKind::Source, h, 0);
+    r.register("word_embed", CellKind::Source, h, 0);
+    r.register("char_cell", CellKind::Lstm, 2 * h, lstm_flops(h));
+    r.register("word_cell", CellKind::Lstm, 2 * h, lstm_flops(h));
+    r.register("tag", CellKind::Classifier, 32, clf_flops(h));
+    r
+}
+
+/// Generate the lattice: char chain + word jump links + per-char tag head.
+fn lattice(
+    reg: &TypeRegistry,
+    p: &GenParams,
+    rng: &mut Rng,
+    char_cell_name: &str,
+    word_cell_name: &str,
+    with_tag: bool,
+) -> Graph {
+    let ce = reg.lookup("char_embed").unwrap();
+    let we = reg.lookup("word_embed").unwrap();
+    let cc = reg.lookup(char_cell_name).unwrap();
+    let wc = reg.lookup(word_cell_name).unwrap();
+    let tag = reg.lookup("tag");
+
+    let len = p.sample_len(rng);
+    let mut g = Graph::new();
+
+    // word candidates: for each start position, Poisson(word_rate) words
+    // with length 2..=max_word_len (clipped to sentence end)
+    // words_ending_at[j] = list of (start, word node placeholder filled later)
+    let mut spans: Vec<(usize, usize)> = Vec::new(); // (start, end) end exclusive
+    for i in 0..len {
+        let k = rng.poisson(p.word_rate) as usize;
+        for _ in 0..k {
+            let max_l = (p.max_word_len as usize).min(len - i);
+            if max_l < 2 {
+                continue;
+            }
+            let l = 2 + rng.usize_below(max_l - 1);
+            spans.push((i, i + l));
+        }
+    }
+
+    let mut char_nodes: Vec<NodeId> = Vec::with_capacity(len);
+    let mut word_by_end: Vec<Vec<NodeId>> = vec![Vec::new(); len + 1];
+
+    for j in 0..len {
+        // char cell at j: [char_embed, prev_char?, words ending at j...]
+        let e = g.add(ce, vec![], 0);
+        let mut preds = vec![e];
+        if j > 0 {
+            preds.push(char_nodes[j - 1]);
+        }
+        preds.extend(word_by_end[j].iter().copied());
+        let c = g.add(cc, preds, 0);
+        char_nodes.push(c);
+        // create word cells starting at j; a word spanning [j, e) reads the
+        // char state at its start and feeds the char cell at e (via
+        // word_by_end), matching Zhang & Yang's lattice wiring.
+        for &(s, e_pos) in spans.iter().filter(|&&(s, _)| s == j) {
+            let wemb = g.add(we, vec![], 0);
+            let w = g.add(wc, vec![wemb, char_nodes[s]], 0);
+            word_by_end[e_pos.min(len)].push(w);
+        }
+    }
+    if with_tag {
+        if let Some(tag) = tag {
+            for &c in &char_nodes {
+                g.add(tag, vec![c], 0);
+            }
+        }
+    }
+    g
+}
+
+pub fn lattice_lstm(reg: &TypeRegistry, p: &GenParams, rng: &mut Rng) -> Graph {
+    lattice(reg, p, rng, "char_cell", "word_cell", true)
+}
+
+pub fn lattice_gru_registry(h: usize) -> TypeRegistry {
+    let mut r = TypeRegistry::new();
+    r.register("char_embed", CellKind::Source, h, 0);
+    r.register("word_embed", CellKind::Source, h, 0);
+    r.register("char_cell", CellKind::Gru, h, gru_flops(h));
+    r.register("word_cell", CellKind::Gru, h, gru_flops(h));
+    r.register("tgt_embed", CellKind::Source, h, 0);
+    r.register("dec", CellKind::Gru, h, gru_flops(h));
+    r.register("tag", CellKind::Classifier, 32, clf_flops(h));
+    r
+}
+
+/// Lattice-GRU NMT encoder + GRU decoder chain with vocab projections.
+pub fn lattice_gru(reg: &TypeRegistry, p: &GenParams, rng: &mut Rng) -> Graph {
+    let mut g = lattice(reg, p, rng, "char_cell", "word_cell", false);
+    let te = reg.lookup("tgt_embed").unwrap();
+    let dec = reg.lookup("dec").unwrap();
+    let proj = reg.lookup("tag").unwrap();
+    let cc = reg.lookup("char_cell").unwrap();
+    // decoder seeded from the last encoder char cell
+    let enc_final = g
+        .nodes
+        .iter()
+        .enumerate()
+        .rev()
+        .find(|(_, n)| n.op == cc)
+        .map(|(i, _)| NodeId(i as u32))
+        .expect("encoder has char cells");
+    let tgt_len = ((g.type_histogram(reg.num_types())[2] as f64) * (0.9 + 0.4 * rng.f64()))
+        .round()
+        .max(2.0) as usize;
+    let mut prev = enc_final;
+    for _ in 0..tgt_len {
+        let e = g.add(te, vec![], 0);
+        let d = g.add(dec, vec![e, prev], 0);
+        g.add(proj, vec![d], 0);
+        prev = d;
+    }
+    g
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn params() -> GenParams {
+        GenParams::with_hidden(64)
+    }
+
+    #[test]
+    fn lattice_lstm_valid_and_has_words() {
+        let reg = lattice_lstm_registry(64);
+        let mut rng = Rng::new(1);
+        let mut word_total = 0;
+        for _ in 0..10 {
+            let g = lattice_lstm(&reg, &params(), &mut rng);
+            g.validate().unwrap();
+            word_total += g.type_histogram(reg.num_types())[3];
+        }
+        assert!(word_total > 0, "lattices must contain word cells");
+    }
+
+    #[test]
+    fn char_chain_is_connected() {
+        let reg = lattice_lstm_registry(64);
+        let g = lattice_lstm(&reg, &params(), &mut Rng::new(2));
+        let cc = reg.lookup("char_cell").unwrap();
+        let chars: Vec<_> = g
+            .nodes
+            .iter()
+            .enumerate()
+            .filter(|(_, n)| n.op == cc)
+            .collect();
+        // every char cell after the first must have a char-cell pred
+        for (idx, n) in &chars[1..] {
+            assert!(
+                n.preds.iter().any(|p| g.op(*p) == cc),
+                "char cell {idx} disconnected"
+            );
+        }
+    }
+
+    #[test]
+    fn word_cells_bridge_chars() {
+        let reg = lattice_lstm_registry(64);
+        let mut rng = Rng::new(3);
+        let g = lattice_lstm(&reg, &params(), &mut rng);
+        let wc = reg.lookup("word_cell").unwrap();
+        let cc = reg.lookup("char_cell").unwrap();
+        g.nodes
+            .iter()
+            .filter(|n| n.op == wc)
+            .for_each(|n| {
+                assert!(n.preds.iter().any(|p| g.op(*p) == cc));
+            });
+    }
+
+    #[test]
+    fn lattice_gru_has_decoder() {
+        let reg = lattice_gru_registry(64);
+        let g = lattice_gru(&reg, &params(), &mut Rng::new(4));
+        g.validate().unwrap();
+        let hist = g.type_histogram(reg.num_types());
+        assert!(hist[5] > 0, "decoder cells present");
+        assert_eq!(hist[5], hist[6], "one proj per dec step");
+    }
+}

@@ -1,0 +1,252 @@
+//! The eight evaluation workloads of Table 1 (+ BiLSTM-tagger-withchar from
+//! Table 3), as synthetic-but-structurally-faithful generators.
+//!
+//! The real datasets (WikiNER, IWSLT'15 en-vi, Penn Treebank, Chinese Weibo
+//! lattices) are not available offline; since dynamic batching depends
+//! *only* on graph topology and op types — never on token identity — we
+//! generate topologies with matched structural statistics (DESIGN.md §4):
+//!
+//! * sentence lengths: truncated log-normal (mean ≈ 20, like WikiNER/IWSLT),
+//! * parse trees: random binary trees over the same length distribution,
+//! * lattices: character chains with Poisson word-skip links (1–4 chars per
+//!   word, ≈0.4 word candidates per char, like Chinese NER lexicons).
+
+pub mod chain;
+pub mod lattice;
+pub mod tree;
+
+use crate::graph::{Graph, TypeRegistry};
+use crate::util::rng::Rng;
+
+/// Classifier/tagger label-space width (matches python model.NUM_CLASSES).
+pub const NUM_CLASSES: usize = 32;
+
+/// Workload family — the paper groups results by these.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum Family {
+    Chain,
+    Tree,
+    Lattice,
+}
+
+/// The evaluated models (Table 1 short names).
+#[derive(Clone, Copy, Debug, PartialEq, Eq, Hash)]
+pub enum WorkloadKind {
+    BiLstmTagger,
+    BiLstmTaggerWithChar,
+    LstmNmt,
+    TreeLstm,
+    TreeGru,
+    MvRnn,
+    TreeLstm2Type,
+    LatticeLstm,
+    LatticeGru,
+}
+
+pub const ALL_WORKLOADS: [WorkloadKind; 9] = [
+    WorkloadKind::BiLstmTagger,
+    WorkloadKind::BiLstmTaggerWithChar,
+    WorkloadKind::LstmNmt,
+    WorkloadKind::TreeLstm,
+    WorkloadKind::TreeGru,
+    WorkloadKind::MvRnn,
+    WorkloadKind::TreeLstm2Type,
+    WorkloadKind::LatticeLstm,
+    WorkloadKind::LatticeGru,
+];
+
+/// The paper's main 8 (Figures 6/9); withchar only appears in Table 3.
+pub const PAPER_WORKLOADS: [WorkloadKind; 8] = [
+    WorkloadKind::BiLstmTagger,
+    WorkloadKind::LstmNmt,
+    WorkloadKind::TreeLstm,
+    WorkloadKind::TreeGru,
+    WorkloadKind::MvRnn,
+    WorkloadKind::TreeLstm2Type,
+    WorkloadKind::LatticeLstm,
+    WorkloadKind::LatticeGru,
+];
+
+impl WorkloadKind {
+    pub fn name(self) -> &'static str {
+        match self {
+            WorkloadKind::BiLstmTagger => "bilstm-tagger",
+            WorkloadKind::BiLstmTaggerWithChar => "bilstm-tagger-withchar",
+            WorkloadKind::LstmNmt => "lstm-nmt",
+            WorkloadKind::TreeLstm => "treelstm",
+            WorkloadKind::TreeGru => "treegru",
+            WorkloadKind::MvRnn => "mv-rnn",
+            WorkloadKind::TreeLstm2Type => "treelstm-2type",
+            WorkloadKind::LatticeLstm => "lattice-lstm",
+            WorkloadKind::LatticeGru => "lattice-gru",
+        }
+    }
+
+    pub fn from_name(s: &str) -> Option<WorkloadKind> {
+        ALL_WORKLOADS.iter().copied().find(|w| w.name() == s)
+    }
+
+    pub fn family(self) -> Family {
+        match self {
+            WorkloadKind::BiLstmTagger
+            | WorkloadKind::BiLstmTaggerWithChar
+            | WorkloadKind::LstmNmt => Family::Chain,
+            WorkloadKind::TreeLstm
+            | WorkloadKind::TreeGru
+            | WorkloadKind::MvRnn
+            | WorkloadKind::TreeLstm2Type => Family::Tree,
+            WorkloadKind::LatticeLstm | WorkloadKind::LatticeGru => Family::Lattice,
+        }
+    }
+}
+
+/// Structural generation parameters (hidden size only affects metadata).
+#[derive(Clone, Copy, Debug)]
+pub struct GenParams {
+    pub hidden: usize,
+    /// log-normal sentence-length params (mean length ~ e^(mu + sigma^2/2))
+    pub len_mu: f64,
+    pub len_sigma: f64,
+    pub min_len: u64,
+    pub max_len: u64,
+    /// lattice: expected word candidates starting per character
+    pub word_rate: f64,
+    /// lattice: max word length in characters
+    pub max_word_len: u64,
+}
+
+impl GenParams {
+    pub fn with_hidden(hidden: usize) -> Self {
+        GenParams {
+            hidden,
+            len_mu: 2.85, // mean sentence length ≈ 18-20 tokens
+            len_sigma: 0.45,
+            min_len: 4,
+            max_len: 64,
+            // Chinese lexicon matches are dense: most positions start at
+            // least one candidate word (Zhang & Yang 2018 report multiple
+            // matched words per character on average).
+            word_rate: 0.8,
+            max_word_len: 4,
+        }
+    }
+
+    pub fn sample_len(&self, rng: &mut Rng) -> usize {
+        rng.lognormal_clamped(self.len_mu, self.len_sigma, self.min_len, self.max_len) as usize
+    }
+}
+
+/// A workload = a type registry + an instance-topology generator.
+pub struct Workload {
+    pub kind: WorkloadKind,
+    pub registry: TypeRegistry,
+    pub params: GenParams,
+}
+
+impl Workload {
+    pub fn new(kind: WorkloadKind, hidden: usize) -> Workload {
+        let params = GenParams::with_hidden(hidden);
+        let registry = match kind {
+            WorkloadKind::BiLstmTagger => chain::bilstm_tagger_registry(hidden),
+            WorkloadKind::BiLstmTaggerWithChar => chain::bilstm_tagger_withchar_registry(hidden),
+            WorkloadKind::LstmNmt => chain::lstm_nmt_registry(hidden),
+            WorkloadKind::TreeLstm => tree::treelstm_registry(hidden),
+            WorkloadKind::TreeGru => tree::treegru_registry(hidden),
+            WorkloadKind::MvRnn => tree::mvrnn_registry(hidden),
+            WorkloadKind::TreeLstm2Type => tree::treelstm_2type_registry(hidden),
+            WorkloadKind::LatticeLstm => lattice::lattice_lstm_registry(hidden),
+            WorkloadKind::LatticeGru => lattice::lattice_gru_registry(hidden),
+        };
+        Workload {
+            kind,
+            registry,
+            params,
+        }
+    }
+
+    /// Generate one input instance's dataflow graph.
+    pub fn gen_instance(&self, rng: &mut Rng) -> Graph {
+        match self.kind {
+            WorkloadKind::BiLstmTagger => chain::bilstm_tagger(&self.registry, &self.params, rng),
+            WorkloadKind::BiLstmTaggerWithChar => {
+                chain::bilstm_tagger_withchar(&self.registry, &self.params, rng)
+            }
+            WorkloadKind::LstmNmt => chain::lstm_nmt(&self.registry, &self.params, rng),
+            WorkloadKind::TreeLstm => tree::treelstm(&self.registry, &self.params, rng),
+            WorkloadKind::TreeGru => tree::treegru(&self.registry, &self.params, rng),
+            WorkloadKind::MvRnn => tree::mvrnn(&self.registry, &self.params, rng),
+            WorkloadKind::TreeLstm2Type => tree::treelstm_2type(&self.registry, &self.params, rng),
+            WorkloadKind::LatticeLstm => lattice::lattice_lstm(&self.registry, &self.params, rng),
+            WorkloadKind::LatticeGru => lattice::lattice_gru(&self.registry, &self.params, rng),
+        }
+    }
+
+    /// Generate a merged mini-batch graph of `batch_size` instances.
+    pub fn gen_batch(&self, batch_size: usize, rng: &mut Rng) -> Graph {
+        let mut g = Graph::new();
+        for _ in 0..batch_size {
+            let inst = self.gen_instance(rng);
+            g.merge(&inst);
+        }
+        g
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn all_workloads_generate_valid_dags() {
+        let mut rng = Rng::new(1);
+        for kind in ALL_WORKLOADS {
+            let w = Workload::new(kind, 64);
+            for _ in 0..5 {
+                let g = w.gen_instance(&mut rng);
+                assert!(g.len() > 0, "{:?} empty", kind);
+                g.validate().unwrap_or_else(|e| panic!("{kind:?}: {e}"));
+            }
+        }
+    }
+
+    #[test]
+    fn batch_merge_instances_are_disjoint() {
+        let mut rng = Rng::new(2);
+        let w = Workload::new(WorkloadKind::TreeLstm, 64);
+        let g = w.gen_batch(8, &mut rng);
+        g.validate().unwrap();
+        let max_inst = g.nodes.iter().map(|n| n.instance).max().unwrap();
+        assert_eq!(max_inst, 7);
+    }
+
+    #[test]
+    fn deterministic_generation() {
+        for kind in ALL_WORKLOADS {
+            let w = Workload::new(kind, 32);
+            let g1 = w.gen_instance(&mut Rng::new(99));
+            let g2 = w.gen_instance(&mut Rng::new(99));
+            assert_eq!(g1.len(), g2.len());
+            for (a, b) in g1.nodes.iter().zip(g2.nodes.iter()) {
+                assert_eq!(a.op, b.op);
+                assert_eq!(a.preds, b.preds);
+            }
+        }
+    }
+
+    #[test]
+    fn sentence_lengths_in_bounds() {
+        let p = GenParams::with_hidden(64);
+        let mut rng = Rng::new(3);
+        for _ in 0..200 {
+            let l = p.sample_len(&mut rng);
+            assert!((4..=64).contains(&l));
+        }
+    }
+
+    #[test]
+    fn names_roundtrip() {
+        for k in ALL_WORKLOADS {
+            assert_eq!(WorkloadKind::from_name(k.name()), Some(k));
+        }
+    }
+}

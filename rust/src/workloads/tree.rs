@@ -1,0 +1,279 @@
+//! Tree-based workloads: TreeLSTM, TreeGRU, MV-RNN, TreeLSTM-2Type.
+//!
+//! Topology follows the paper's Fig.1(a): a binary parse tree with
+//! * leaf cells (L) over the tokens,
+//! * internal cells (I) combining children bottom-up,
+//! * an output head (O) per tree node (sentiment-style per-node prediction),
+//! * a reduction chain (R) folding the outputs (loss aggregation).
+//!
+//! The O/R structure is exactly what makes depth- and agenda-based
+//! heuristics suboptimal (they split the O nodes across depths), so keeping
+//! it is essential for reproducing Fig.9.
+
+use crate::graph::{CellKind, Graph, NodeId, TypeRegistry};
+use crate::util::rng::Rng;
+
+use super::GenParams;
+
+fn treelstm_flops(h: usize) -> u64 {
+    (2 * 2 * h * 5 * h + 12 * h) as u64
+}
+
+fn treegru_flops(h: usize) -> u64 {
+    (2 * 2 * h * 3 * h + 2 * 2 * h * h + 10 * h) as u64
+}
+
+fn mv_flops(h: usize) -> u64 {
+    // two HxH mat-vecs + [1,2H]x[2H,H] + Hx2H matmat per node
+    (2 * 2 * h * h + 2 * 2 * h * h + 2 * h * 2 * h * h) as u64
+}
+
+fn clf_flops(h: usize) -> u64 {
+    (2 * h * 32) as u64
+}
+
+/// Random binary tree shape over `n` leaves, as uniform random splits
+/// (matches the shape statistics of binarized PTB constituency trees well
+/// enough for batching purposes — see DESIGN.md §4).
+/// Returns, for the recursion, the root NodeId given closures to build
+/// leaf / internal nodes.
+fn build_tree(
+    g: &mut Graph,
+    rng: &mut Rng,
+    n: usize,
+    leaf: &mut dyn FnMut(&mut Graph) -> NodeId,
+    internal: &mut dyn FnMut(&mut Graph, NodeId, NodeId) -> NodeId,
+    per_node: &mut Vec<NodeId>,
+) -> NodeId {
+    if n == 1 {
+        let id = leaf(g);
+        per_node.push(id);
+        return id;
+    }
+    let left_n = 1 + rng.usize_below(n - 1);
+    let l = build_tree(g, rng, left_n, leaf, internal, per_node);
+    let r = build_tree(g, rng, n - left_n, leaf, internal, per_node);
+    let id = internal(g, l, r);
+    per_node.push(id);
+    id
+}
+
+/// Shared scaffolding: build tree + per-node outputs + reduction chain.
+fn tree_with_outputs(
+    reg: &TypeRegistry,
+    p: &GenParams,
+    rng: &mut Rng,
+    leaf_name: &str,
+    mk_internal: &mut dyn FnMut(&mut Graph, &mut Rng, NodeId, NodeId) -> NodeId,
+) -> Graph {
+    let leaf_t = reg.lookup(leaf_name).unwrap();
+    let embed_t = reg.lookup("embed").unwrap();
+    let out_t = reg.lookup("output").unwrap();
+    let red_t = reg.lookup("reduce").unwrap();
+
+    let n_leaves = p.sample_len(rng);
+    let mut g = Graph::new();
+    let mut per_node = Vec::new();
+    let mut leaf = |g: &mut Graph| {
+        let e = g.add(embed_t, vec![], 0);
+        g.add(leaf_t, vec![e], 0)
+    };
+    // The shape recursion and the internal-cell construction both need
+    // randomness; fork two independent deterministic streams so the borrow
+    // checker is happy and generation stays reproducible.
+    let mut shape_rng = Rng::new(rng.next_u64());
+    let mut cell_rng = Rng::new(rng.next_u64());
+
+    let mut internal =
+        |g: &mut Graph, l: NodeId, r: NodeId| mk_internal(g, &mut cell_rng, l, r);
+    build_tree(
+        &mut g,
+        &mut shape_rng,
+        n_leaves,
+        &mut leaf,
+        &mut internal,
+        &mut per_node,
+    );
+
+    // one output head per tree node
+    let outs: Vec<NodeId> = per_node.iter().map(|&n| g.add(out_t, vec![n], 0)).collect();
+    // left-leaning reduction chain over outputs
+    let mut acc = outs[0];
+    for &o in &outs[1..] {
+        acc = g.add(red_t, vec![acc, o], 0);
+    }
+    g
+}
+
+/// Bare recursive tree (no per-node output heads / reduction chain) — the
+/// model class Cortex supports; used by the Table 5 comparison.
+pub fn bare_tree(
+    reg: &TypeRegistry,
+    p: &GenParams,
+    rng: &mut Rng,
+    leaf_name: &str,
+    internal_name: &str,
+) -> Graph {
+    let leaf_t = reg.lookup(leaf_name).unwrap();
+    let embed_t = reg.lookup("embed").unwrap();
+    let int_t = reg.lookup(internal_name).unwrap();
+    let n_leaves = p.sample_len(rng);
+    let mut g = Graph::new();
+    let mut per_node = Vec::new();
+    let mut shape_rng = Rng::new(rng.next_u64());
+    let mut leaf = |g: &mut Graph| {
+        let e = g.add(embed_t, vec![], 0);
+        g.add(leaf_t, vec![e], 0)
+    };
+    let mut internal = |g: &mut Graph, l: NodeId, r: NodeId| g.add(int_t, vec![l, r], 0);
+    build_tree(
+        &mut g,
+        &mut shape_rng,
+        n_leaves,
+        &mut leaf,
+        &mut internal,
+        &mut per_node,
+    );
+    g
+}
+
+pub fn treelstm_registry(h: usize) -> TypeRegistry {
+    let mut r = TypeRegistry::new();
+    r.register("embed", CellKind::Source, h, 0);
+    r.register("leaf", CellKind::TreeLstmLeaf, 2 * h, treelstm_flops(h) / 2);
+    r.register("internal", CellKind::TreeLstmInternal, 2 * h, treelstm_flops(h));
+    r.register("output", CellKind::Classifier, 32, clf_flops(h));
+    r.register("reduce", CellKind::Reduce, 32, 32);
+    r
+}
+
+pub fn treelstm(reg: &TypeRegistry, p: &GenParams, rng: &mut Rng) -> Graph {
+    let int_t = reg.lookup("internal").unwrap();
+    tree_with_outputs(reg, p, rng, "leaf", &mut |g, _rng, l, r| {
+        g.add(int_t, vec![l, r], 0)
+    })
+}
+
+pub fn treegru_registry(h: usize) -> TypeRegistry {
+    let mut r = TypeRegistry::new();
+    r.register("embed", CellKind::Source, h, 0);
+    r.register("leaf", CellKind::TreeGruLeaf, h, treegru_flops(h) / 2);
+    r.register("internal", CellKind::TreeGruInternal, h, treegru_flops(h));
+    r.register("output", CellKind::Classifier, 32, clf_flops(h));
+    r.register("reduce", CellKind::Reduce, 32, 32);
+    r
+}
+
+pub fn treegru(reg: &TypeRegistry, p: &GenParams, rng: &mut Rng) -> Graph {
+    let int_t = reg.lookup("internal").unwrap();
+    tree_with_outputs(reg, p, rng, "leaf", &mut |g, _rng, l, r| {
+        g.add(int_t, vec![l, r], 0)
+    })
+}
+
+pub fn mvrnn_registry(h: usize) -> TypeRegistry {
+    let mut r = TypeRegistry::new();
+    r.register("embed", CellKind::Source, h + h * h, 0);
+    r.register("leaf", CellKind::MvCell, h + h * h, mv_flops(h) / 2);
+    r.register("internal", CellKind::MvCell, h + h * h, mv_flops(h));
+    r.register("output", CellKind::Classifier, 32, clf_flops(h));
+    r.register("reduce", CellKind::Reduce, 32, 32);
+    r
+}
+
+pub fn mvrnn(reg: &TypeRegistry, p: &GenParams, rng: &mut Rng) -> Graph {
+    let int_t = reg.lookup("internal").unwrap();
+    tree_with_outputs(reg, p, rng, "leaf", &mut |g, _rng, l, r| {
+        g.add(int_t, vec![l, r], 0)
+    })
+}
+
+pub fn treelstm_2type_registry(h: usize) -> TypeRegistry {
+    let mut r = TypeRegistry::new();
+    r.register("embed", CellKind::Source, h, 0);
+    r.register("leaf", CellKind::TreeLstmLeaf, 2 * h, treelstm_flops(h) / 2);
+    r.register("internal_a", CellKind::TreeLstmInternal, 2 * h, treelstm_flops(h));
+    r.register("internal_b", CellKind::TreeLstmInternal, 2 * h, treelstm_flops(h));
+    r.register("output", CellKind::Classifier, 32, clf_flops(h));
+    r.register("reduce", CellKind::Reduce, 32, 32);
+    r
+}
+
+/// TreeLSTM-2Type: each internal node picks one of two cell types with 50%
+/// probability (Table 1) — the state space the FSM must distinguish grows.
+pub fn treelstm_2type(reg: &TypeRegistry, p: &GenParams, rng: &mut Rng) -> Graph {
+    let a = reg.lookup("internal_a").unwrap();
+    let b = reg.lookup("internal_b").unwrap();
+    tree_with_outputs(reg, p, rng, "leaf", &mut |g, rng, l, r| {
+        let t = if rng.chance(0.5) { a } else { b };
+        g.add(t, vec![l, r], 0)
+    })
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn params() -> GenParams {
+        GenParams::with_hidden(64)
+    }
+
+    #[test]
+    fn treelstm_node_counts() {
+        let reg = treelstm_registry(64);
+        let g = treelstm(&reg, &params(), &mut Rng::new(1));
+        g.validate().unwrap();
+        let hist = g.type_histogram(reg.num_types());
+        let leaves = hist[1];
+        let internals = hist[2];
+        assert_eq!(internals, leaves - 1, "binary tree invariant");
+        assert_eq!(hist[0], leaves, "one embed per leaf");
+        assert_eq!(hist[3], leaves + internals, "one output per tree node");
+        assert_eq!(hist[4], hist[3] - 1, "reduction chain length");
+    }
+
+    #[test]
+    fn output_nodes_can_all_batch_once() {
+        // the optimal policy executes all O nodes in ONE batch: G^O has no
+        // internal edges, so subgraph depth of O must be 1.
+        let reg = treelstm_registry(64);
+        let g = treelstm(&reg, &params(), &mut Rng::new(2));
+        let depths = g.per_type_subgraph_depths(reg.num_types());
+        assert_eq!(depths[3], 1, "output type depth");
+    }
+
+    #[test]
+    fn twotype_uses_both_internals() {
+        let reg = treelstm_2type_registry(64);
+        let mut rng = Rng::new(3);
+        let mut a_total = 0;
+        let mut b_total = 0;
+        for _ in 0..10 {
+            let g = treelstm_2type(&reg, &params(), &mut rng);
+            let hist = g.type_histogram(reg.num_types());
+            a_total += hist[2];
+            b_total += hist[3];
+        }
+        assert!(a_total > 0 && b_total > 0);
+        let ratio = a_total as f64 / (a_total + b_total) as f64;
+        assert!((0.3..0.7).contains(&ratio), "ratio {ratio}");
+    }
+
+    #[test]
+    fn mvrnn_structure_valid() {
+        let reg = mvrnn_registry(32);
+        let g = mvrnn(&reg, &params(), &mut Rng::new(4));
+        g.validate().unwrap();
+        assert!(g.len() > 10);
+    }
+
+    #[test]
+    fn tree_shapes_vary() {
+        let reg = treelstm_registry(64);
+        let mut rng = Rng::new(5);
+        let d1 = treelstm(&reg, &params(), &mut rng).depths();
+        let d2 = treelstm(&reg, &params(), &mut rng).depths();
+        // extremely unlikely to be identical shapes
+        assert!(d1 != d2 || d1.len() != d2.len());
+    }
+}

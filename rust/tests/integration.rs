@@ -1,0 +1,225 @@
+//! Cross-module integration tests (no PJRT required — CPU backend).
+
+use std::time::Duration;
+
+use ed_batch::batching::agenda::AgendaPolicy;
+use ed_batch::batching::depth::DepthPolicy;
+use ed_batch::batching::fsm::{Encoding, FsmPolicy};
+use ed_batch::batching::oracle::SufficientConditionPolicy;
+use ed_batch::batching::{run_policy, validate_schedule};
+use ed_batch::coordinator::engine::{Backend, CellEngine, StateStore};
+use ed_batch::coordinator::server::{Server, ServerConfig};
+use ed_batch::coordinator::SystemMode;
+use ed_batch::exec::SubgraphExec;
+use ed_batch::memory::planner::pq_plan;
+use ed_batch::memory::{evaluate_layout, MemoryPlan};
+use ed_batch::rl::{train, TrainConfig};
+use ed_batch::subgraph::ALL_SUBGRAPHS;
+use ed_batch::util::rng::Rng;
+use ed_batch::workloads::{Workload, WorkloadKind, ALL_WORKLOADS};
+
+fn quick_train_cfg() -> TrainConfig {
+    TrainConfig {
+        max_iters: 300,
+        check_every: 25,
+        train_batch: 3,
+        ..TrainConfig::default()
+    }
+}
+
+#[test]
+fn every_policy_produces_valid_schedules_on_every_workload() {
+    for kind in ALL_WORKLOADS {
+        let w = Workload::new(kind, 32);
+        let nt = w.registry.num_types();
+        let mut rng = Rng::new(kind.name().len() as u64);
+        let mut g = w.gen_batch(6, &mut rng);
+        g.freeze();
+        let schedules = vec![
+            run_policy(&g, nt, &mut DepthPolicy::new()),
+            run_policy(&g, nt, &mut AgendaPolicy::new(nt)),
+            run_policy(&g, nt, &mut FsmPolicy::new(Encoding::Sort)),
+            run_policy(&g, nt, &mut SufficientConditionPolicy),
+        ];
+        for s in &schedules {
+            validate_schedule(&g, s)
+                .unwrap_or_else(|e| panic!("{}: {e}", kind.name()));
+            assert!(s.num_batches() as u64 >= g.batch_lower_bound(nt));
+        }
+    }
+}
+
+#[test]
+fn trained_fsm_beats_or_matches_baselines_everywhere() {
+    for kind in [
+        WorkloadKind::BiLstmTagger,
+        WorkloadKind::TreeLstm,
+        WorkloadKind::TreeGru,
+        WorkloadKind::LatticeLstm,
+    ] {
+        let w = Workload::new(kind, 32);
+        let nt = w.registry.num_types();
+        let (mut policy, _) = train(&w, Encoding::Sort, &quick_train_cfg(), 13);
+        let mut rng = Rng::new(77);
+        let mut g = w.gen_batch(12, &mut rng);
+        g.freeze();
+        let fsm = run_policy(&g, nt, &mut policy).num_batches();
+        let agenda = run_policy(&g, nt, &mut AgendaPolicy::new(nt)).num_batches();
+        let depth = run_policy(&g, nt, &mut DepthPolicy::new()).num_batches();
+        assert!(
+            fsm <= agenda.min(depth),
+            "{}: fsm {fsm} agenda {agenda} depth {depth}",
+            kind.name()
+        );
+    }
+}
+
+#[test]
+fn lattice_fsm_reduction_mirrors_paper() {
+    // Fig.9's lattice result decomposes into two claims we check separately:
+    // (a) the Lemma-1 heuristic cuts the best baseline's batch count
+    //     substantially (the paper's batch-count reduction source), and
+    // (b) the learned FSM lands between the heuristic and the baseline —
+    //     §5.3 reports FSM executing ~44% more batches than the heuristic
+    //     on lattices while still beating agenda/depth.
+    let w = Workload::new(WorkloadKind::LatticeLstm, 32);
+    let nt = w.registry.num_types();
+    let cfg = TrainConfig {
+        max_iters: 800,
+        ..quick_train_cfg()
+    };
+    let (mut policy, _) = train(&w, Encoding::Sort, &cfg, 21);
+    let mut rng = Rng::new(500);
+    let mut g = w.gen_batch(64, &mut rng);
+    g.freeze();
+    let fsm = run_policy(&g, nt, &mut policy).num_batches();
+    let agenda = run_policy(&g, nt, &mut AgendaPolicy::new(nt)).num_batches();
+    let depth = run_policy(&g, nt, &mut DepthPolicy::new()).num_batches();
+    let sc = run_policy(&g, nt, &mut SufficientConditionPolicy).num_batches();
+    let best_baseline = agenda.min(depth);
+    assert!(
+        (best_baseline as f64) / (sc as f64) >= 1.25,
+        "(a) heuristic reduction only {:.2}x (sc {sc}, baseline {best_baseline})",
+        best_baseline as f64 / sc as f64
+    );
+    assert!(
+        fsm <= best_baseline,
+        "(b) fsm {fsm} worse than baseline {best_baseline} (sc {sc})"
+    );
+}
+
+#[test]
+fn subgraph_pipeline_end_to_end() {
+    // batch -> plan -> execute, PQ vs naive, for all 7 cells: values equal,
+    // copies reduced, metrics consistent.
+    for kind in ALL_SUBGRAPHS {
+        let sg = kind.build(16, 8);
+        let batches = sg.batch();
+        let naive_plan = MemoryPlan::creation_order(&sg.sizes);
+        let pq = pq_plan(&batches, &sg.sizes);
+
+        let naive_pred = evaluate_layout(&naive_plan, &sg.sizes, &batches);
+        let pq_pred = evaluate_layout(&pq.plan, &sg.sizes, &batches);
+        assert!(pq_pred.memcpy_elems <= naive_pred.memcpy_elems, "{}", kind.name());
+
+        let mut ex1 = SubgraphExec::new(sg.clone(), naive_plan, batches.clone());
+        ex1.init_random(3);
+        ex1.run();
+        let mut ex2 = SubgraphExec::new(sg.clone(), pq.plan, batches);
+        ex2.init_random(3);
+        ex2.run();
+        for (a, b) in ex1.output_values().iter().zip(ex2.output_values().iter()) {
+            for (x, y) in a.iter().zip(b.iter()) {
+                assert!((x - y).abs() < 1e-5, "{}: {x} vs {y}", kind.name());
+            }
+        }
+    }
+}
+
+#[test]
+fn server_ed_batch_mode_trains_and_serves() {
+    // EdBatch mode trains + persists a policy into a temp artifacts dir.
+    let dir = std::env::temp_dir().join(format!("edbatch_int_{}", std::process::id()));
+    std::fs::create_dir_all(&dir).unwrap();
+    let server = Server::start(ServerConfig {
+        workload: WorkloadKind::TreeGru,
+        hidden: 32,
+        mode: SystemMode::EdBatch,
+        max_batch: 8,
+        batch_window: Duration::from_millis(1),
+        artifacts_dir: None, // CPU backend...
+        encoding: Encoding::Sort,
+        seed: 3,
+    });
+    // ...but EdBatch policy persistence needs a dir: policy_for_mode uses
+    // "artifacts" default; ensure it exists in cwd for the test
+    std::fs::create_dir_all("artifacts").unwrap();
+    let server = server.unwrap();
+    let client = server.client();
+    let w = Workload::new(WorkloadKind::TreeGru, 32);
+    let mut rng = Rng::new(4);
+    for _ in 0..6 {
+        let resp = client.infer(w.gen_instance(&mut rng)).unwrap();
+        assert!(!resp.sink_outputs.is_empty());
+    }
+    let snap = server.metrics.snapshot();
+    assert_eq!(snap.requests, 6);
+    drop(client);
+    server.shutdown().unwrap();
+    let _ = std::fs::remove_dir_all(&dir);
+}
+
+#[test]
+fn engine_values_independent_of_policy_on_all_workloads() {
+    for kind in ALL_WORKLOADS {
+        let w = Workload::new(kind, 32);
+        let nt = w.registry.num_types();
+        let mut rng = Rng::new(8);
+        let mut g = w.gen_batch(3, &mut rng);
+        g.freeze();
+        let s1 = run_policy(&g, nt, &mut DepthPolicy::new());
+        let s2 = run_policy(&g, nt, &mut SufficientConditionPolicy);
+        let mut outs = Vec::new();
+        for s in [&s1, &s2] {
+            let mut engine = CellEngine::new(Backend::Cpu, 32, 1);
+            let mut store = StateStore::new(g.len());
+            engine.execute(&g, &w.registry, s, &mut store).unwrap();
+            outs.push(store.h);
+        }
+        for (i, (a, b)) in outs[0].iter().zip(outs[1].iter()).enumerate() {
+            for (x, y) in a.iter().zip(b.iter()) {
+                assert!(
+                    (x - y).abs() < 1e-4,
+                    "{}: node {i} differs across schedules",
+                    kind.name()
+                );
+            }
+        }
+    }
+}
+
+#[test]
+fn policy_persistence_roundtrip_through_server_path() {
+    let dir = std::env::temp_dir().join(format!("edbatch_pol_int_{}", std::process::id()));
+    let dirs = dir.to_str().unwrap();
+    let w = Workload::new(WorkloadKind::BiLstmTagger, 32);
+    let cfg = quick_train_cfg();
+    let (p1, s1) =
+        ed_batch::coordinator::policies::load_or_train(dirs, &w, Encoding::Sort, &cfg, 5).unwrap();
+    assert!(s1.is_some());
+    let (p2, s2) =
+        ed_batch::coordinator::policies::load_or_train(dirs, &w, Encoding::Sort, &cfg, 5).unwrap();
+    assert!(s2.is_none());
+    // loaded policy behaves identically
+    let mut rng = Rng::new(6);
+    let mut g = w.gen_batch(4, &mut rng);
+    g.freeze();
+    let nt = w.registry.num_types();
+    let mut p1 = p1;
+    let mut p2 = p2;
+    assert_eq!(
+        run_policy(&g, nt, &mut p1).num_batches(),
+        run_policy(&g, nt, &mut p2).num_batches()
+    );
+    let _ = std::fs::remove_dir_all(&dir);
+}

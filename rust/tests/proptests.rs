@@ -1,0 +1,254 @@
+//! Property-based tests over coordinator invariants (routing, batching,
+//! state, memory planning) — driven by util::propcheck (in-repo proptest
+//! replacement; deterministic seeds, ramping sizes).
+
+use ed_batch::batching::agenda::AgendaPolicy;
+use ed_batch::batching::depth::DepthPolicy;
+use ed_batch::batching::fsm::{Encoding, FsmPolicy};
+use ed_batch::batching::oracle::SufficientConditionPolicy;
+use ed_batch::batching::{run_policy, validate_schedule, Policy};
+use ed_batch::graph::frontier::Frontier;
+use ed_batch::graph::{Graph, NodeId, OpType};
+use ed_batch::memory::planner::pq_plan;
+use ed_batch::memory::{evaluate_layout, BatchOp, MemoryPlan};
+use ed_batch::pqtree::PqTree;
+use ed_batch::prop_assert;
+use ed_batch::util::propcheck::{check, Gen};
+
+/// Random typed DAG; topological by construction.
+fn gen_dag(g: &mut Gen, num_types: usize) -> Graph {
+    let n = 2 + g.int(1, 40);
+    let mut dag = Graph::new();
+    for i in 0..n {
+        let t = OpType(g.rng.below(num_types as u64) as u16);
+        let mut preds = Vec::new();
+        if i > 0 {
+            let np = g.rng.usize_below(3.min(i) + 1);
+            for _ in 0..np {
+                preds.push(NodeId(g.rng.below(i as u64) as u32));
+            }
+            preds.sort();
+            preds.dedup();
+        }
+        dag.add(t, preds, 0);
+    }
+    dag.freeze();
+    dag
+}
+
+#[test]
+fn prop_all_policies_execute_every_node_exactly_once() {
+    check("schedule completeness", 120, |g| {
+        let nt = 1 + g.rng.usize_below(4);
+        let dag = gen_dag(g, nt);
+        let policies: Vec<Box<dyn Policy>> = vec![
+            Box::new(DepthPolicy::new()),
+            Box::new(AgendaPolicy::new(nt)),
+            Box::new(FsmPolicy::new(Encoding::Sort)),
+            Box::new(SufficientConditionPolicy),
+        ];
+        for mut p in policies {
+            let s = run_policy(&dag, nt, p.as_mut());
+            if let Err(e) = validate_schedule(&dag, &s) {
+                return Err(format!("invalid schedule: {e}"));
+            }
+            prop_assert!(s.num_nodes() == dag.len(), "missing nodes");
+            prop_assert!(
+                s.num_batches() as u64 >= dag.batch_lower_bound(nt),
+                "beat the lower bound?!"
+            );
+        }
+        Ok(())
+    });
+}
+
+#[test]
+fn prop_frontier_counts_stay_consistent() {
+    check("frontier invariants", 120, |g| {
+        let nt = 1 + g.rng.usize_below(4);
+        let dag = gen_dag(g, nt);
+        let mut f = Frontier::new(&dag, nt);
+        let mut executed = 0usize;
+        while !f.is_done() {
+            let types = f.ready_types();
+            prop_assert!(!types.is_empty(), "deadlock with {} remaining", f.remaining());
+            // pick a random ready type
+            let t = *g.pick(&types);
+            // invariant: ready set is subset of subgraph frontier
+            prop_assert!(
+                f.ready_count(t) <= f.subgraph_frontier_count(t),
+                "Frontier_t(G) must be ⊆ Frontier(G^t)"
+            );
+            let ratio = f.reward_ratio(t);
+            prop_assert!((0.0..=1.0 + 1e-9).contains(&ratio), "ratio {ratio}");
+            let batch = f.execute_type(&dag, t);
+            executed += batch.len();
+        }
+        prop_assert!(executed == dag.len());
+        Ok(())
+    });
+}
+
+#[test]
+fn prop_lemma1_choices_never_hurt() {
+    // Following a ratio==1 type never produces a worse final batch count
+    // than the brute-force optimum (Lemma 1) on small graphs.
+    check("lemma 1", 40, |g| {
+        let nt = 2 + g.rng.usize_below(2);
+        let n = 3 + g.rng.usize_below(5);
+        let mut dag = Graph::new();
+        for i in 0..n {
+            let t = OpType(g.rng.below(nt as u64) as u16);
+            let mut preds = Vec::new();
+            if i > 0 && g.rng.chance(0.7) {
+                preds.push(NodeId(g.rng.below(i as u64) as u32));
+            }
+            dag.add(t, preds, 0);
+        }
+        dag.freeze();
+        let opt =
+            ed_batch::batching::oracle::optimal_batch_count(&dag, nt, 2 * n).unwrap();
+        // if at the initial state some type has ratio 1, committing it first
+        // must still allow an optimal completion
+        let f = Frontier::new(&dag, nt);
+        for t in f.ready_types() {
+            if (f.reward_ratio(t) - 1.0).abs() < 1e-12 {
+                let mut f2 = f.clone();
+                f2.execute_type(&dag, t);
+                // brute force the rest
+                let rest = brute_force_from(&dag, nt, &f2, opt);
+                prop_assert!(
+                    rest + 1 == opt || rest + 1 == opt.max(1),
+                    "type {t:?}: 1+{rest} != opt {opt}"
+                );
+            }
+        }
+        Ok(())
+    });
+}
+
+fn brute_force_from(graph: &Graph, nt: usize, f: &Frontier, limit: usize) -> usize {
+    fn dfs(graph: &Graph, f: &Frontier, depth: usize, best: &mut usize) {
+        if f.is_done() {
+            *best = (*best).min(depth);
+            return;
+        }
+        if depth + 1 >= *best {
+            return;
+        }
+        for t in f.ready_types() {
+            let mut f2 = f.clone();
+            f2.execute_type(graph, t);
+            dfs(graph, &f2, depth + 1, best);
+        }
+    }
+    let mut best = limit + 2;
+    dfs(graph, f, 0, &mut best);
+    let _ = nt;
+    best
+}
+
+#[test]
+fn prop_pqtree_reduce_preserves_feasible_constraints() {
+    check("pqtree soundness", 80, |g| {
+        let n = 3 + g.rng.usize_below(8);
+        let mut t = PqTree::universal(n);
+        let mut applied: Vec<Vec<u32>> = Vec::new();
+        for _ in 0..g.int(1, 5) {
+            let sz = 2 + g.rng.usize_below(n - 1);
+            let mut vars: Vec<u32> = (0..n as u32).collect();
+            g.rng.shuffle(&mut vars);
+            vars.truncate(sz);
+            if t.reduce(&vars) {
+                applied.push(vars);
+            }
+        }
+        // frontier satisfies all successfully applied constraints
+        let frontier = t.frontier();
+        prop_assert!(frontier.len() == n, "frontier must be a permutation");
+        let mut sorted = frontier.clone();
+        sorted.sort();
+        prop_assert!(sorted == (0..n as u32).collect::<Vec<_>>());
+        for cons in &applied {
+            let mut pos: Vec<usize> = cons
+                .iter()
+                .map(|v| frontier.iter().position(|x| x == v).unwrap())
+                .collect();
+            pos.sort();
+            prop_assert!(
+                pos.windows(2).all(|w| w[1] == w[0] + 1),
+                "constraint {cons:?} not consecutive in {frontier:?}"
+            );
+        }
+        Ok(())
+    });
+}
+
+#[test]
+fn prop_planner_layout_is_valid_permutation_and_not_worse() {
+    check("planner validity", 60, |g| {
+        // random SSA batch program
+        let base = 3 + g.rng.usize_below(5);
+        let mut next = base as u32;
+        let mut batches = Vec::new();
+        for _ in 0..g.int(1, 4) {
+            let lanes = 2 + g.rng.usize_below(3);
+            let n_src = 1 + g.rng.usize_below(2);
+            let srcs: Vec<Vec<u32>> = (0..n_src)
+                .map(|_| (0..lanes).map(|_| g.rng.below(next as u64) as u32).collect())
+                .collect();
+            let dst: Vec<u32> = (0..lanes)
+                .map(|_| {
+                    let v = next;
+                    next += 1;
+                    v
+                })
+                .collect();
+            batches.push(BatchOp {
+                name: "p".into(),
+                srcs,
+                dst,
+            });
+        }
+        let sizes = vec![1usize; next as usize];
+        let out = pq_plan(&batches, &sizes);
+        let mut sorted = out.order.clone();
+        sorted.sort();
+        prop_assert!(
+            sorted == (0..next).collect::<Vec<_>>(),
+            "order must be a permutation of all vars"
+        );
+        let naive = evaluate_layout(&MemoryPlan::creation_order(&sizes), &sizes, &batches);
+        let planned = evaluate_layout(&out.plan, &sizes, &batches);
+        prop_assert!(
+            planned.memcpy_elems <= naive.memcpy_elems + 2,
+            "planned {} much worse than naive {}",
+            planned.memcpy_elems,
+            naive.memcpy_elems
+        );
+        Ok(())
+    });
+}
+
+#[test]
+fn prop_graph_merge_preserves_topology() {
+    check("merge topology", 80, |g| {
+        let nt = 1 + g.rng.usize_below(3);
+        let a = gen_dag(g, nt);
+        let b = gen_dag(g, nt);
+        let mut merged = Graph::new();
+        merged.merge(&a);
+        let off = merged.merge(&b);
+        prop_assert!(off as usize == a.len());
+        prop_assert!(merged.len() == a.len() + b.len());
+        merged.validate().map_err(|e| e)?;
+        // lower bound of merged graph = max per type of... at least the max
+        // of the two parts' bounds (they can run in parallel)
+        let lba = a.batch_lower_bound(nt);
+        let lbb = b.batch_lower_bound(nt);
+        let lbm = merged.batch_lower_bound(nt);
+        prop_assert!(lbm >= lba.max(lbb), "merged lb {lbm} < max({lba},{lbb})");
+        prop_assert!(lbm <= lba + lbb, "merged lb {lbm} > sum");
+        Ok(())
+    });
+}

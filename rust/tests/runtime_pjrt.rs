@@ -1,0 +1,229 @@
+//! PJRT integration tests: load real AOT artifacts, execute them, and
+//! cross-check numerics against the CPU reference backend.
+//!
+//! Requires `make artifacts` to have produced `artifacts/manifest.json`
+//! (the Makefile `test` target guarantees this); tests are skipped with a
+//! message otherwise so `cargo test` stays runnable in a fresh checkout.
+
+use ed_batch::batching::fsm::{Encoding, FsmPolicy};
+use ed_batch::batching::run_policy;
+use ed_batch::coordinator::engine::{Backend, CellEngine, StateStore};
+use ed_batch::runtime::manifest::ArtifactKey;
+use ed_batch::runtime::ArtifactRegistry;
+use ed_batch::util::rng::Rng;
+use ed_batch::workloads::{Workload, WorkloadKind};
+
+fn registry_or_skip(hidden: usize) -> Option<ArtifactRegistry> {
+    if !std::path::Path::new("artifacts/manifest.json").exists() {
+        eprintln!("skipping: artifacts/ missing (run `make artifacts`)");
+        return None;
+    }
+    Some(
+        ArtifactRegistry::load("artifacts", Some(&move |k: &ArtifactKey| k.hidden == hidden))
+            .expect("load registry"),
+    )
+}
+
+#[test]
+fn loads_and_compiles_manifest() {
+    let Some(reg) = registry_or_skip(64) else {
+        return;
+    };
+    assert!(reg.len() >= 8 * 5, "expected all h=64 artifacts, got {}", reg.len());
+    assert_eq!(reg.bucket_for("lstm", 64, 3), Some(4));
+    assert_eq!(reg.bucket_for("lstm", 64, 64), Some(64));
+    assert_eq!(reg.bucket_for("lstm", 64, 1000), Some(256));
+}
+
+#[test]
+fn lstm_artifact_matches_cpu_reference() {
+    let Some(reg) = registry_or_skip(64) else {
+        return;
+    };
+    let h = 64;
+    let b = 4;
+    let compiled = reg.cell_for_batch("lstm", h, b).expect("lstm artifact");
+    // deterministic inputs
+    let mut rng = Rng::new(99);
+    let mut mk = |n: usize| -> Vec<f32> { (0..n).map(|_| (rng.f32() - 0.5) * 0.3).collect() };
+    let x = mk(b * h);
+    let hh = mk(b * h);
+    let c = mk(b * h);
+    let wx = mk(h * 4 * h);
+    let wh = mk(h * 4 * h);
+    let bias = mk(4 * h);
+    let outs = compiled
+        .execute(&[x.clone(), hh.clone(), c.clone(), wx.clone(), wh.clone(), bias.clone()])
+        .expect("execute");
+    assert_eq!(outs.len(), 2);
+    assert_eq!(outs[0].len(), b * h);
+
+    // CPU reference of the same math
+    let sigm = |v: f32| 1.0 / (1.0 + (-v).exp());
+    for i in 0..b {
+        for j in 0..h {
+            let mut gates = [0.0f32; 4];
+            for (g, gate) in gates.iter_mut().enumerate() {
+                let col = g * h + j;
+                let mut acc = bias[col];
+                for k in 0..h {
+                    acc += x[i * h + k] * wx[k * 4 * h + col];
+                    acc += hh[i * h + k] * wh[k * 4 * h + col];
+                }
+                *gate = acc;
+            }
+            let c_new = sigm(gates[1]) * c[i * h + j] + sigm(gates[0]) * gates[2].tanh();
+            let h_new = sigm(gates[3]) * c_new.tanh();
+            let dh = (outs[0][i * h + j] - h_new).abs();
+            let dc = (outs[1][i * h + j] - c_new).abs();
+            assert!(dh < 1e-4, "h mismatch at ({i},{j}): {dh}");
+            assert!(dc < 1e-4, "c mismatch at ({i},{j}): {dc}");
+        }
+    }
+}
+
+#[test]
+fn all_cells_execute_with_correct_shapes() {
+    let Some(reg) = registry_or_skip(64) else {
+        return;
+    };
+    let h = 64;
+    for cell in [
+        "lstm",
+        "gru",
+        "treelstm_internal",
+        "treelstm_leaf",
+        "treegru_internal",
+        "treegru_leaf",
+        "mv_cell",
+        "classifier",
+    ] {
+        let compiled = reg.cell_for_batch(cell, h, 4).unwrap_or_else(|| panic!("{cell}"));
+        let mut rng = Rng::new(5);
+        let args: Vec<Vec<f32>> = compiled
+            .arg_shapes
+            .iter()
+            .map(|s| {
+                let n: usize = s.iter().product();
+                (0..n).map(|_| (rng.f32() - 0.5) * 0.2).collect()
+            })
+            .collect();
+        let outs = compiled.execute(&args).unwrap_or_else(|e| panic!("{cell}: {e}"));
+        assert_eq!(outs.len(), compiled.num_outputs, "{cell}");
+        for o in &outs {
+            assert!(o.iter().all(|v| v.is_finite()), "{cell}: non-finite");
+        }
+    }
+}
+
+#[test]
+fn pjrt_engine_matches_cpu_engine_end_to_end() {
+    // The full path: workload -> merged graph -> FSM schedule -> engine.
+    // PJRT and CPU backends share weights, so node outputs must agree.
+    let Some(reg) = registry_or_skip(64) else {
+        return;
+    };
+    for kind in [
+        WorkloadKind::TreeLstm,
+        WorkloadKind::BiLstmTagger,
+        WorkloadKind::LatticeLstm,
+        WorkloadKind::TreeGru,
+    ] {
+        let w = Workload::new(kind, 64);
+        let mut rng = Rng::new(17);
+        let mut g = w.gen_batch(3, &mut rng);
+        g.freeze();
+        let schedule = run_policy(
+            &g,
+            w.registry.num_types(),
+            &mut FsmPolicy::new(Encoding::Sort),
+        );
+
+        let mut cpu_engine = CellEngine::new(Backend::Cpu, 64, 1);
+        let mut cpu_store = StateStore::new(g.len());
+        cpu_engine
+            .execute(&g, &w.registry, &schedule, &mut cpu_store)
+            .unwrap();
+
+        let mut pjrt_engine = CellEngine::new(Backend::Pjrt(&reg), 64, 1);
+        let mut pjrt_store = StateStore::new(g.len());
+        pjrt_engine
+            .execute(&g, &w.registry, &schedule, &mut pjrt_store)
+            .unwrap();
+
+        for (i, (a, b)) in cpu_store.h.iter().zip(pjrt_store.h.iter()).enumerate() {
+            assert_eq!(a.len(), b.len(), "{kind:?} node {i} width");
+            for (x, y) in a.iter().zip(b.iter()) {
+                assert!(
+                    (x - y).abs() < 2e-3,
+                    "{kind:?} node {i}: cpu {x} vs pjrt {y}"
+                );
+            }
+        }
+    }
+}
+
+#[test]
+fn padding_to_bucket_does_not_change_results() {
+    let Some(reg) = registry_or_skip(64) else {
+        return;
+    };
+    // batch of 3 -> bucket 4: padded lane must not disturb real lanes
+    let compiled = reg.cell_for_batch("treegru_leaf", 64, 3).expect("artifact");
+    assert_eq!(compiled.key.batch, 4);
+    let h = 64;
+    let mut rng = Rng::new(3);
+    let mut x4 = vec![0.0f32; 4 * h];
+    for v in x4.iter_mut().take(3 * h) {
+        *v = (rng.f32() - 0.5) * 0.4;
+    }
+    let w: Vec<f32> = (0..h * h).map(|_| (rng.f32() - 0.5) * 0.2).collect();
+    let b: Vec<f32> = (0..h).map(|_| (rng.f32() - 0.5) * 0.2).collect();
+    let out4 = compiled.execute(&[x4.clone(), w.clone(), b.clone()]).unwrap();
+    // execute bucket-1 per lane and compare
+    let single = reg.cell_for_batch("treegru_leaf", 64, 1).expect("b1");
+    for lane in 0..3 {
+        let x1 = x4[lane * h..(lane + 1) * h].to_vec();
+        let out1 = single.execute(&[x1, w.clone(), b.clone()]).unwrap();
+        for j in 0..h {
+            assert!(
+                (out4[0][lane * h + j] - out1[0][j]).abs() < 1e-4,
+                "lane {lane} elem {j}"
+            );
+        }
+    }
+}
+
+#[test]
+fn serving_stack_over_pjrt() {
+    // Full serving path with the PJRT backend: server + client + metrics.
+    use ed_batch::coordinator::server::{Server, ServerConfig};
+    use ed_batch::coordinator::SystemMode;
+    use std::time::Duration;
+    if !std::path::Path::new("artifacts/manifest.json").exists() {
+        eprintln!("skipping: artifacts missing");
+        return;
+    }
+    let cfg = ServerConfig {
+        workload: WorkloadKind::TreeLstm,
+        hidden: 64,
+        mode: SystemMode::CavsDyNet, // avoid policy-training I/O in tests
+        max_batch: 8,
+        batch_window: Duration::from_millis(5),
+        artifacts_dir: Some("artifacts".into()),
+        encoding: Encoding::Sort,
+        seed: 2,
+    };
+    let server = Server::start(cfg).unwrap();
+    let client = server.client();
+    let w = Workload::new(WorkloadKind::TreeLstm, 64);
+    let mut rng = Rng::new(8);
+    for _ in 0..4 {
+        let resp = client.infer(w.gen_instance(&mut rng)).unwrap();
+        assert!(!resp.sink_outputs.is_empty());
+    }
+    let snap = server.metrics.snapshot();
+    assert_eq!(snap.requests, 4);
+    drop(client);
+    server.shutdown().unwrap();
+}
