@@ -1,9 +1,12 @@
-//! Quickstart: the ED-Batch pipeline in ~60 lines.
+//! Quickstart: the ED-Batch pipeline in ~70 lines.
 //!
 //! 1. pick a workload (TreeLSTM over synthetic parse trees),
 //! 2. learn the FSM batching policy with tabular Q-learning,
 //! 3. batch a mini-batch of instances with it (vs the DyNet baselines),
-//! 4. execute through the PJRT artifacts if available (CPU otherwise).
+//! 4. execute through the unified pipeline — the schedule's PQ-tree
+//!    memory plan lays the state arena out so batched operands are
+//!    zero-copy views — on PJRT artifacts if available (CPU otherwise),
+//! 5. re-run under the unplanned DyNet layout to show the copies saved.
 //!
 //! Run: `cargo run --release --example quickstart`
 
@@ -11,7 +14,8 @@ use ed_batch::batching::agenda::AgendaPolicy;
 use ed_batch::batching::depth::DepthPolicy;
 use ed_batch::batching::fsm::Encoding;
 use ed_batch::batching::run_policy;
-use ed_batch::coordinator::engine::{Backend, CellEngine, StateStore};
+use ed_batch::coordinator::engine::{ArenaStateStore, Backend, CellEngine};
+use ed_batch::memory::MemoryMode;
 use ed_batch::rl::{train, TrainConfig};
 use ed_batch::runtime::ArtifactRegistry;
 use ed_batch::util::rng::Rng;
@@ -44,29 +48,42 @@ fn main() -> anyhow::Result<()> {
         graph.batch_lower_bound(nt)
     );
 
-    // -- 3. execute the FSM schedule -------------------------------------
+    // -- 3. execute through the unified pipeline --------------------------
     let registry = ArtifactRegistry::load("artifacts", Some(&|k| k.hidden == 64)).ok();
     let mut engine = match &registry {
         Some(reg) => {
             println!("executing through PJRT ({} artifacts)", reg.len());
-            CellEngine::new(Backend::Pjrt(reg), hidden, 7)
+            CellEngine::new(Backend::Pjrt(reg), hidden, 7)?
         }
         None => {
             println!("artifacts/ missing -> CPU reference backend (run `make artifacts`)");
-            CellEngine::new(Backend::Cpu, hidden, 7)
+            CellEngine::new(Backend::Cpu, hidden, 7)?
         }
     };
-    let mut store = StateStore::new(graph.len());
+    let mut store = ArenaStateStore::new();
     let report = engine.execute(&graph, &workload.registry, &fsm, &mut store)?;
     println!(
-        "executed {} batches in {:.2}ms ({} kernel calls, {} padded lanes)",
+        "executed {} batches in {:.2}ms ({} kernel calls, {} padded lanes, plan in {:.2}ms)",
         report.batches,
         report.exec_s * 1e3,
         report.kernel_calls,
-        report.padded_lanes
+        report.padded_lanes,
+        report.planning_s * 1e3,
     );
-    // root sentiment logits of instance 0 = output of its last output node
-    let sample = store.h.iter().rev().find(|h| !h.is_empty()).unwrap();
+    // root sentiment logits of instance 0 = output of the last node
+    let sample = store.h(graph.len() - 1);
     println!("sample output head: {:?}", &sample[..4.min(sample.len())]);
+
+    // -- 4. the memory-planning win: same schedule, DyNet layout ----------
+    engine.memory_mode = MemoryMode::Unplanned;
+    let mut legacy_store = ArenaStateStore::new();
+    let legacy = engine.execute(&graph, &workload.registry, &fsm, &mut legacy_store)?;
+    println!(
+        "graph-level memcpy: planned {} elems vs unplanned {} elems ({} avoided, {:.1}x less)",
+        report.memcpy_elems,
+        legacy.memcpy_elems,
+        report.copies_avoided_elems,
+        legacy.memcpy_elems as f64 / report.memcpy_elems.max(1) as f64,
+    );
     Ok(())
 }

@@ -32,8 +32,8 @@ fn main() -> anyhow::Result<()> {
         requests, 3, hidden, clients
     );
     println!(
-        "{:<14} {:<14} {:>9} {:>9} {:>9} {:>8} {:>9}",
-        "workload", "mode", "inst/s", "p50 ms", "p99 ms", "batches", "MB moved"
+        "{:<14} {:<14} {:>9} {:>9} {:>9} {:>8} {:>9} {:>10}",
+        "workload", "mode", "inst/s", "p50 ms", "p99 ms", "batches", "MB moved", "MB avoided"
     );
 
     for kind in [
@@ -75,7 +75,7 @@ fn main() -> anyhow::Result<()> {
             }
             let snap = server.metrics.snapshot();
             println!(
-                "{:<14} {:<14} {:>9.1} {:>9.2} {:>9.2} {:>8} {:>9.2}",
+                "{:<14} {:<14} {:>9.1} {:>9.2} {:>9.2} {:>8} {:>9.2} {:>10.2}",
                 kind.name(),
                 mode.name(),
                 snap.throughput(),
@@ -83,6 +83,7 @@ fn main() -> anyhow::Result<()> {
                 snap.latency_p99_s * 1e3,
                 snap.batches_executed,
                 snap.memcpy_elems as f64 * 4.0 / 1e6,
+                snap.copies_avoided_elems as f64 * 4.0 / 1e6,
             );
             server.shutdown()?;
         }

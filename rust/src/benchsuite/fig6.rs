@@ -18,8 +18,8 @@ use rustc_hash::FxHashMap;
 
 use crate::batching::agenda::AgendaPolicy;
 use crate::batching::run_policy;
-use crate::coordinator::engine::{Backend, CellEngine, StateStore};
-use crate::coordinator::server::policy_for_mode;
+use crate::coordinator::engine::{ArenaStateStore, Backend, CellEngine};
+use crate::coordinator::policies::policy_for_mode;
 use crate::coordinator::{SystemMode, TimeBreakdown};
 use crate::graph::{Graph, TypeRegistry};
 use crate::memory::planner::pq_plan;
@@ -214,7 +214,13 @@ pub fn run_pipeline(
     let mut construction_s = t0.elapsed().as_secs_f64();
 
     // -- scheduling ---------------------------------------------------------
-    let mut policy = policy_for_mode(mode, workload, crate::batching::fsm::Encoding::Sort, Some("artifacts"), seed)?;
+    let mut policy = policy_for_mode(
+        mode,
+        workload,
+        crate::batching::fsm::Encoding::Sort,
+        Some("artifacts"),
+        seed,
+    )?;
     let t1 = Instant::now();
     let schedule = run_policy(&merged, nt, policy.as_mut());
     let mut scheduling_s = t1.elapsed().as_secs_f64();
@@ -231,18 +237,20 @@ pub fn run_pipeline(
         scheduling_s += t3.elapsed().as_secs_f64();
     }
 
-    // -- execution -----------------------------------------------------------
-    let mut engine = CellEngine::new(Backend::Pjrt(registry), hidden, seed);
+    // -- memory planning + execution -----------------------------------------
+    let mut engine = CellEngine::new(Backend::Pjrt(registry), hidden, seed)?;
+    engine.memory_mode = mode.memory_mode();
     let charges = charges_for_mode(mode, &workload.registry, hidden);
     engine.in_cell_copy_elems = charges.copy_elems;
     engine.extra_launches = charges.extra_launches;
-    let mut store = StateStore::new(merged.len());
+    let mut store = ArenaStateStore::new();
     let report = engine.execute(&merged, &workload.registry, &schedule, &mut store)?;
 
     Ok((
         TimeBreakdown {
             construction_s,
             scheduling_s,
+            planning_s: report.planning_s,
             execution_s: report.exec_s,
         },
         report,

@@ -16,6 +16,7 @@ pub struct Fig8Row {
     pub mode: &'static str,
     pub construction_ms: f64,
     pub scheduling_ms: f64,
+    pub planning_ms: f64,
     pub execution_ms: f64,
 }
 
@@ -36,6 +37,7 @@ pub fn run(opts: &BenchOpts) -> Result<Vec<Fig8Row>> {
                 mode: mode.name(),
                 construction_ms: bd.construction_s * 1e3,
                 scheduling_ms: bd.scheduling_s * 1e3,
+                planning_ms: bd.planning_s * 1e3,
                 execution_ms: bd.execution_s * 1e3,
             });
         }
@@ -43,7 +45,15 @@ pub fn run(opts: &BenchOpts) -> Result<Vec<Fig8Row>> {
 
     print_table(
         &format!("Fig.8 — time decomposition (ms), model={hidden}, batch={batch}"),
-        &["workload", "system", "construction", "scheduling", "execution", "total"],
+        &[
+            "workload",
+            "system",
+            "construction",
+            "scheduling",
+            "planning",
+            "execution",
+            "total",
+        ],
         &rows
             .iter()
             .map(|r| {
@@ -52,8 +62,12 @@ pub fn run(opts: &BenchOpts) -> Result<Vec<Fig8Row>> {
                     r.mode.to_string(),
                     format!("{:.3}", r.construction_ms),
                     format!("{:.3}", r.scheduling_ms),
+                    format!("{:.3}", r.planning_ms),
                     format!("{:.3}", r.execution_ms),
-                    fmt_ms((r.construction_ms + r.scheduling_ms + r.execution_ms) / 1e3),
+                    fmt_ms(
+                        (r.construction_ms + r.scheduling_ms + r.planning_ms + r.execution_ms)
+                            / 1e3,
+                    ),
                 ]
             })
             .collect::<Vec<_>>(),

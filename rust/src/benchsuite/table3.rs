@@ -1,11 +1,19 @@
-//! Table 3 — RL training time and iterations per workload.
+//! Table 3 — RL training time and iterations per workload, plus what the
+//! learned policy's batch type-sequence buys the memory planner: the
+//! PQ-tree plan is keyed on the trained FSM's schedule, so each row also
+//! reports the fraction of graph-level gather/scatter the planned arena
+//! eliminates under that schedule.
 //!
 //! The paper trains up to 1000 trials, checking every 50 and stopping
 //! early when the greedy policy reaches the batch-count lower bound;
 //! reported times range from 0.14s (TreeLSTM) to 21.7s (LatticeLSTM).
 
 use crate::batching::fsm::Encoding;
+use crate::batching::run_policy;
+use crate::memory::graph_plan::GraphMemoryPlan;
+use crate::memory::MemoryMode;
 use crate::rl::{train, TrainConfig};
+use crate::util::rng::Rng;
 use crate::workloads::{Workload, ALL_WORKLOADS};
 
 use super::{print_table, BenchOpts};
@@ -17,6 +25,9 @@ pub struct Table3Row {
     pub iterations: usize,
     pub reached_lower_bound: bool,
     pub num_states: usize,
+    /// % of the baseline graph-level memcpy the PQ plan eliminates under
+    /// the trained policy's schedule
+    pub plan_avoided_pct: f64,
 }
 
 pub fn run(opts: &BenchOpts) -> Vec<Table3Row> {
@@ -25,21 +36,39 @@ pub fn run(opts: &BenchOpts) -> Vec<Table3Row> {
         check_every: 50,
         ..TrainConfig::default()
     };
+    let instances = if opts.fast { 4 } else { 8 };
     let mut rows = Vec::new();
     for kind in ALL_WORKLOADS {
         let w = Workload::new(kind, opts.hidden);
-        let (_, stats) = train(&w, Encoding::Sort, &cfg, opts.seed);
+        let (mut policy, stats) = train(&w, Encoding::Sort, &cfg, opts.seed);
+        // plan a sample mini-batch under the learned schedule
+        let mut rng = Rng::new(opts.seed);
+        let mut g = w.gen_batch(instances, &mut rng);
+        g.freeze();
+        let schedule = run_policy(&g, w.registry.num_types(), &mut policy);
+        let plan =
+            GraphMemoryPlan::build(&g, &w.registry, &schedule, opts.hidden, MemoryMode::Planned);
+        let plan_avoided_pct = 100.0 * plan.predicted_copies_avoided() as f64
+            / plan.baseline_memcpy_elems.max(1) as f64;
         rows.push(Table3Row {
             workload: kind.name().to_string(),
             time_s: stats.wall_time_s,
             iterations: stats.iterations,
             reached_lower_bound: stats.reached_lower_bound,
             num_states: stats.num_states,
+            plan_avoided_pct,
         });
     }
     print_table(
-        "Table 3 — RL training time and iterations",
-        &["workload", "time (s)", "train iter.", "hit lower bd", "|states|"],
+        "Table 3 — RL training time, iterations, and planned-memcpy win",
+        &[
+            "workload",
+            "time (s)",
+            "train iter.",
+            "hit lower bd",
+            "|states|",
+            "memcpy avoided",
+        ],
         &rows
             .iter()
             .map(|r| {
@@ -49,6 +78,7 @@ pub fn run(opts: &BenchOpts) -> Vec<Table3Row> {
                     r.iterations.to_string(),
                     r.reached_lower_bound.to_string(),
                     r.num_states.to_string(),
+                    format!("{:.0}%", r.plan_avoided_pct),
                 ]
             })
             .collect::<Vec<_>>(),
@@ -68,6 +98,12 @@ mod tests {
         for r in &rows {
             assert!(r.time_s > 0.0, "{}", r.workload);
             assert!(r.iterations >= 50, "{}", r.workload);
+            assert!(
+                (0.0..=100.0).contains(&r.plan_avoided_pct),
+                "{}: {}",
+                r.workload,
+                r.plan_avoided_pct
+            );
         }
         // chains and simple trees converge quickly (paper: 50 iterations)
         let tl = rows.iter().find(|r| r.workload == "treelstm").unwrap();

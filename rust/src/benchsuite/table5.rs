@@ -11,7 +11,7 @@ use anyhow::Result;
 use crate::batching::cortex_like::{CortexCostModel, CortexLikePolicy};
 use crate::batching::fsm::{Encoding, FsmPolicy};
 use crate::batching::run_policy;
-use crate::coordinator::engine::{Backend, CellEngine, StateStore};
+use crate::coordinator::engine::{ArenaStateStore, Backend, CellEngine};
 use crate::graph::Graph;
 use crate::runtime::ArtifactRegistry;
 use crate::util::rng::Rng;
@@ -73,13 +73,13 @@ pub fn run(opts: &BenchOpts) -> Result<Vec<Table5Row>> {
             // engine (weight staging, executable first-touch) and report
             // the median of several passes like the paper's steady-state
             // latency measurement.
-            let mut engine = CellEngine::new(Backend::Pjrt(&registry), hidden, opts.seed);
+            let mut engine = CellEngine::new(Backend::Pjrt(&registry), hidden, opts.seed)?;
             let reps = if opts.fast { 2 } else { 5 };
             let mut times = Vec::with_capacity(reps);
             for rep in 0..=reps {
                 let t0 = std::time::Instant::now();
                 let schedule = run_policy(&merged, nt, &mut FsmPolicy::new(Encoding::Sort));
-                let mut store = StateStore::new(merged.len());
+                let mut store = ArenaStateStore::new();
                 engine.execute(&merged, &reg, &schedule, &mut store)?;
                 if rep > 0 {
                     times.push(t0.elapsed().as_secs_f64());

@@ -1,41 +1,39 @@
-//! Cell-granularity batched execution engine.
+//! Cell-granularity batched execution engine — the tail of the unified
+//! pipeline `Graph → Schedule → MemoryPlan → ExecBackend`.
 //!
-//! Consumes a scheduled graph (output of the batching layer) and executes
-//! each batch through either:
-//! * **PJRT** — the AOT-compiled fused-cell artifacts (`make artifacts`),
-//!   the production hot path; or
-//! * **CPU** — a reference implementation on `exec::cpu_kernels`, used for
-//!   numerics cross-checks and artifact-free unit tests.
+//! The engine consumes a scheduled graph, asks `memory::graph_plan` for a
+//! (cached) arena layout keyed on the schedule, and executes every batch
+//! through an [`ExecBackend`] (PJRT artifacts on the production path, the
+//! CPU reference everywhere else — see `exec::backend`).
 //!
-//! Per batch: gather per-node inputs from the state store into `[lanes, W]`
-//! buffers, zero-pad to the artifact's batch bucket, execute, scatter
-//! results back. Gather/scatter volumes are counted (they are the
-//! graph-level data movement DyNet-style batching inherently pays).
+//! Per-node state lives in one flat arena ([`ArenaStateStore`]). Under
+//! [`MemoryMode::Planned`] the PQ-tree layout makes batched operands
+//! contiguous and aligned, so they are read as **zero-copy views** and
+//! results land **in place**; wherever the plan falls short — or under
+//! [`MemoryMode::Unplanned`], the DyNet baseline — operands are gathered
+//! and scattered through scratch buffers and the moved volume is counted.
+//! [`ExecReport::planned_memcpy_elems`] therefore matches the planner's
+//! static prediction exactly on the CPU backend (asserted in tests), and
+//! [`ExecReport::copies_avoided_elems`] is the measured win over the
+//! unplanned baseline on the same schedule.
 
-use anyhow::{anyhow, Result};
+use std::rc::Rc;
+use std::time::Instant;
+
+use anyhow::Result;
 use rustc_hash::FxHashMap;
 
 use crate::batching::Schedule;
+use crate::exec::backend::{CpuBackend, ExecBackend, PjrtBackend};
 use crate::exec::cpu_kernels as k;
+use crate::graph::cells::{self, ArgSemantics};
 use crate::graph::{CellKind, Graph, NodeId, TypeRegistry};
+use crate::memory::graph_plan::{
+    ArgAccess, BatchAccess, DstAccess, GraphMemoryPlan, PlanCache,
+};
+use crate::memory::MemoryMode;
 use crate::runtime::ArtifactRegistry;
 use crate::util::rng::Rng;
-
-/// How many leading artifact args are per-lane data (rest are weights).
-#[allow(dead_code)] // documented per-cell arg convention; kept for clarity
-fn data_arg_count(cell: &str) -> usize {
-    match cell {
-        "lstm" => 3,                // x, h, c
-        "gru" => 2,                 // x, h
-        "treelstm_internal" => 4,   // h_l, h_r, c_l, c_r
-        "treelstm_leaf" => 1,       // x
-        "treegru_internal" => 2,    // h_l, h_r
-        "treegru_leaf" => 1,        // x
-        "mv_cell" => 4,             // h_l, h_r, m_l, m_r
-        "classifier" => 1,          // h
-        _ => 1,
-    }
-}
 
 /// Execution statistics for one scheduled graph.
 #[derive(Clone, Copy, Debug, Default)]
@@ -44,22 +42,35 @@ pub struct ExecReport {
     pub kernel_calls: usize,
     /// lanes of padding added to reach artifact buckets
     pub padded_lanes: usize,
-    /// graph-level gather/scatter volume (elements)
+    /// graph-level gather/scatter volume actually moved (elements),
+    /// including the configured in-cell copy charges
     pub memcpy_elems: usize,
+    /// the subset of `memcpy_elems` moved on plannable operands — equals
+    /// [`ExecReport::plan_predicted_elems`] on the CPU backend
+    pub planned_memcpy_elems: usize,
+    /// the memory plan's static prediction for plannable operands
+    pub plan_predicted_elems: usize,
+    /// volume served through zero-copy views / in-place results instead of
+    /// gather/scatter — the measured win over the unplanned baseline
+    pub copies_avoided_elems: usize,
+    /// PQ-tree planning time (near-zero on plan-cache hits: only the
+    /// schedule fingerprint is recomputed)
+    pub planning_s: f64,
     pub exec_s: f64,
 }
 
+/// Backend selection for [`CellEngine::new`].
 pub enum Backend<'a> {
     Pjrt(&'a ArtifactRegistry),
     Cpu,
 }
 
-/// Engine: weights + per-node state store + batch dispatch.
+/// Engine: an [`ExecBackend`] + memory-plan cache + batch dispatch.
 pub struct CellEngine<'a> {
-    pub backend: Backend<'a>,
+    backend: Box<dyn ExecBackend + 'a>,
     pub hidden: usize,
-    /// per-cell weight buffers, generated once per engine (seeded)
-    weights: FxHashMap<String, Vec<Vec<f32>>>,
+    /// arena layout policy; [`MemoryMode::Planned`] is the paper system
+    pub memory_mode: MemoryMode,
     /// extra copy work charged inside cells as real copies, reproducing
     /// baseline in-cell gather costs measured by the subgraph executor
     /// (see benchsuite::fig6): per cell name, (fixed elems per batch —
@@ -71,128 +82,230 @@ pub struct CellEngine<'a> {
     /// a minimal artifact). PJRT backend only.
     pub extra_launches: FxHashMap<String, usize>,
     scratch_copy: Vec<f32>,
-    noop_args: Option<Vec<Vec<f32>>>,
-    /// device-staged weight buffers per cell (uploaded once; §Perf it.1)
-    weights_dev: FxHashMap<String, Vec<xla::PjRtBuffer>>,
+    plans: PlanCache,
 }
 
-/// Per-node output state (h plus optional second tensor c/M).
-pub struct StateStore {
-    pub h: Vec<Vec<f32>>,
-    pub c: Vec<Vec<f32>>,
+/// Arena-backed per-node state store: every node's h (and c/M) lives at
+/// the offset its [`GraphMemoryPlan`] assigned. Replaces the former
+/// per-node `Vec<Vec<f32>>` store on both the planned and baseline paths.
+#[derive(Default)]
+pub struct ArenaStateStore {
+    plan: Option<Rc<GraphMemoryPlan>>,
+    arena: Vec<f32>,
+    /// per-data-arg gather buffers (fallback staging)
+    scratch: Vec<Vec<f32>>,
 }
 
-impl StateStore {
-    pub fn new(n: usize) -> Self {
-        StateStore {
-            h: vec![Vec::new(); n],
-            c: vec![Vec::new(); n],
+impl ArenaStateStore {
+    pub fn new() -> ArenaStateStore {
+        ArenaStateStore::default()
+    }
+
+    fn reset(&mut self, plan: Rc<GraphMemoryPlan>) {
+        self.arena.clear();
+        self.arena.resize(plan.plan.total_elems, 0.0);
+        self.plan = Some(plan);
+    }
+
+    fn plan_ref(&self) -> &GraphMemoryPlan {
+        self.plan.as_deref().expect("execute() sets the plan")
+    }
+
+    /// Number of nodes the store currently holds state for.
+    pub fn len(&self) -> usize {
+        self.plan.as_ref().map_or(0, |p| p.sizes.len() / 2)
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.len() == 0
+    }
+
+    fn h_slot(&self, i: usize) -> (usize, usize) {
+        self.plan_ref().h_slot(i)
+    }
+
+    fn c_slot(&self, i: usize) -> (usize, usize) {
+        self.plan_ref().c_slot(i)
+    }
+
+    /// Node `i`'s h output (empty before execution only for 0-width slots).
+    pub fn h(&self, i: usize) -> &[f32] {
+        let (off, sz) = self.h_slot(i);
+        &self.arena[off..off + sz]
+    }
+
+    /// Node `i`'s second state tensor (c, or the MV matrix M).
+    pub fn c(&self, i: usize) -> &[f32] {
+        let (off, sz) = self.c_slot(i);
+        &self.arena[off..off + sz]
+    }
+
+    /// All h outputs as owned vectors (tests / response extraction).
+    pub fn h_vectors(&self) -> Vec<Vec<f32>> {
+        (0..self.len()).map(|i| self.h(i).to_vec()).collect()
+    }
+
+    fn ensure_scratch(&mut self, args: usize) {
+        while self.scratch.len() < args {
+            self.scratch.push(Vec::new());
+        }
+    }
+
+    /// Legacy gather semantics for one data argument of one chunk, reading
+    /// current arena state into scratch buffer `k` (zero-padded to
+    /// `bucket * w`). Mirrors the pre-arena engine exactly so baseline and
+    /// fallback numerics stay bitwise-identical.
+    #[allow(clippy::too_many_arguments)]
+    fn gather_arg(
+        &mut self,
+        graph: &Graph,
+        k: usize,
+        sem: ArgSemantics,
+        chunk: &[NodeId],
+        w: usize,
+        bucket: usize,
+        hidden: usize,
+    ) {
+        let ArenaStateStore {
+            plan,
+            arena,
+            scratch,
+        } = self;
+        let plan = plan.as_deref().expect("plan set");
+        let buf = &mut scratch[k];
+        buf.clear();
+        buf.resize(bucket * w, 0.0);
+        let h_slice = |i: usize| {
+            let (off, sz) = plan.h_slot(i);
+            &arena[off..off + sz]
+        };
+        // raw c slot (ChildM may read materialized matrices)
+        let c_slice = |i: usize| {
+            let (off, sz) = plan.c_slot(i);
+            &arena[off..off + sz]
+        };
+        // c *state* as the legacy engine stored it: synthetic matrix slots
+        // (source materialization for MV consumers) read as empty
+        let empty: &[f32] = &[];
+        let c_state = |i: usize| {
+            if plan.synthetic_c[i] {
+                empty
+            } else {
+                let (off, sz) = plan.c_slot(i);
+                &arena[off..off + sz]
+            }
+        };
+        for (lane, &n) in chunk.iter().enumerate() {
+            let preds = &graph.node(n).preds;
+            match sem {
+                ArgSemantics::XFirst => {
+                    if let Some(&x) = preds.first() {
+                        copy_lane(buf, lane, w, h_slice(x.idx()));
+                    }
+                }
+                ArgSemantics::SumStateH => {
+                    for &p in preds.iter().skip(1) {
+                        add_lane(buf, lane, w, h_slice(p.idx()));
+                    }
+                }
+                ArgSemantics::SumStateC => {
+                    for &p in preds.iter().skip(1) {
+                        add_lane(buf, lane, w, c_state(p.idx()));
+                    }
+                }
+                ArgSemantics::ChildH(i) => {
+                    let (l, r) = cells::two_children(preds);
+                    let child = if i == 0 { l } else { r };
+                    copy_lane(buf, lane, w, h_slice(child.idx()));
+                }
+                ArgSemantics::ChildC(i) => {
+                    let (l, r) = cells::two_children(preds);
+                    let child = if i == 0 { l } else { r };
+                    copy_lane(buf, lane, w, c_state(child.idx()));
+                }
+                ArgSemantics::ChildM(i) => {
+                    let (l, r) = cells::two_children(preds);
+                    let child = if i == 0 { l } else { r };
+                    copy_mv_matrix(buf, lane, hidden, child, c_slice(child.idx()));
+                }
+                ArgSemantics::SumAllH => {
+                    for &p in preds.iter() {
+                        add_lane(buf, lane, w, h_slice(p.idx()));
+                    }
+                }
+            }
         }
     }
 }
 
 impl<'a> CellEngine<'a> {
-    pub fn new(backend: Backend<'a>, hidden: usize, _seed: u64) -> Self {
-        CellEngine {
+    /// Build an engine over the chosen backend. PJRT construction
+    /// validates every compiled artifact's arg layout against the
+    /// per-cell convention (`graph::cells::data_arg_count` data args,
+    /// then the weight tensors) and fails fast on mismatch.
+    pub fn new(backend: Backend<'a>, hidden: usize, _seed: u64) -> Result<CellEngine<'a>> {
+        let backend: Box<dyn ExecBackend + 'a> = match backend {
+            Backend::Cpu => Box::new(CpuBackend::new(hidden)),
+            Backend::Pjrt(reg) => Box::new(PjrtBackend::new(reg, hidden)?),
+        };
+        Ok(CellEngine {
             backend,
             hidden,
-            weights: FxHashMap::default(),
+            memory_mode: MemoryMode::Planned,
             in_cell_copy_elems: FxHashMap::default(),
             extra_launches: FxHashMap::default(),
             scratch_copy: Vec::new(),
-            noop_args: None,
-            weights_dev: FxHashMap::default(),
-        }
-    }
-
-    fn weight_shapes(cell: &str, h: usize) -> Vec<Vec<usize>> {
-        let nc = crate::workloads::NUM_CLASSES;
-        match cell {
-            "lstm" => vec![vec![h, 4 * h], vec![h, 4 * h], vec![4 * h]],
-            "gru" => vec![
-                vec![h, 2 * h],
-                vec![h, 2 * h],
-                vec![2 * h],
-                vec![h, h],
-                vec![h, h],
-                vec![h],
-            ],
-            "treelstm_internal" => vec![vec![h, 5 * h], vec![h, 5 * h], vec![5 * h]],
-            "treelstm_leaf" => vec![vec![h, 3 * h], vec![3 * h]],
-            "treegru_internal" => vec![
-                vec![h, 3 * h],
-                vec![h, 3 * h],
-                vec![3 * h],
-                vec![h, h],
-                vec![h, h],
-                vec![h],
-            ],
-            "treegru_leaf" => vec![vec![h, h], vec![h]],
-            "mv_cell" => vec![vec![2 * h, h], vec![h], vec![h, 2 * h], vec![h, h]],
-            "classifier" => vec![vec![h, nc], vec![nc]],
-            _ => vec![],
-        }
-    }
-
-    fn weights_for(&mut self, cell: &str) -> &Vec<Vec<f32>> {
-        let h = self.hidden;
-        self.weights.entry(cell.to_string()).or_insert_with(|| {
-            // deterministic per (cell, hidden): both backends see the same
-            let mut rng = Rng::new(0xED0 ^ (h as u64) << 8 ^ cell.len() as u64);
-            let mut hasher: u64 = 0;
-            for b in cell.bytes() {
-                hasher = hasher.wrapping_mul(31).wrapping_add(b as u64);
-            }
-            let mut rng2 = Rng::new(rng.next_u64() ^ hasher);
-            Self::weight_shapes(cell, h)
-                .into_iter()
-                .map(|shape| {
-                    let n: usize = shape.iter().product();
-                    let scale = 1.0 / (h as f32).sqrt();
-                    (0..n).map(|_| (rng2.f32() - 0.5) * 2.0 * scale).collect()
-                })
-                .collect()
+            plans: PlanCache::new(),
         })
     }
 
-    /// Execute a scheduled graph; returns the report. State store must be
-    /// sized to the graph.
+    pub fn backend_name(&self) -> &'static str {
+        self.backend.name()
+    }
+
+    /// The (cached) memory plan this engine would execute `schedule` under.
+    pub fn plan_for(
+        &mut self,
+        graph: &Graph,
+        types: &TypeRegistry,
+        schedule: &Schedule,
+    ) -> Rc<GraphMemoryPlan> {
+        self.plans
+            .get_or_build(graph, types, schedule, self.hidden, self.memory_mode)
+    }
+
+    /// Execute a scheduled graph; returns the report. The store is reset
+    /// to the schedule's memory plan and holds every node's state after.
     pub fn execute(
         &mut self,
         graph: &Graph,
         types: &TypeRegistry,
         schedule: &Schedule,
-        store: &mut StateStore,
+        store: &mut ArenaStateStore,
     ) -> Result<ExecReport> {
-        let t0 = std::time::Instant::now();
+        let t_plan = Instant::now();
+        let plan = self.plan_for(graph, types, schedule);
+        let planning_s = t_plan.elapsed().as_secs_f64();
+        store.reset(plan.clone());
+
+        let t0 = Instant::now();
         let mut report = ExecReport {
             batches: schedule.batches.len(),
+            plan_predicted_elems: plan.predicted_memcpy_elems,
+            planning_s,
             ..Default::default()
         };
-        for batch in &schedule.batches {
+        for (bi, batch) in schedule.batches.iter().enumerate() {
             let info = types.info(batch.op);
             match info.cell {
-                CellKind::Source => self.exec_source(graph, &batch.nodes, store),
-                CellKind::Reduce => self.exec_reduce(graph, &batch.nodes, info.out_elems, store),
-                CellKind::Classifier => {
-                    self.exec_cell(graph, "classifier", &batch.nodes, store, &mut report)?
+                CellKind::Source => self.exec_source(&batch.nodes, store),
+                CellKind::Reduce => {
+                    self.exec_reduce(graph, &batch.nodes, info.out_elems, store)
                 }
-                CellKind::Lstm => self.exec_cell(graph, "lstm", &batch.nodes, store, &mut report)?,
-                CellKind::Gru => self.exec_cell(graph, "gru", &batch.nodes, store, &mut report)?,
-                CellKind::TreeLstmInternal => {
-                    self.exec_cell(graph, "treelstm_internal", &batch.nodes, store, &mut report)?
-                }
-                CellKind::TreeLstmLeaf => {
-                    self.exec_cell(graph, "treelstm_leaf", &batch.nodes, store, &mut report)?
-                }
-                CellKind::TreeGruInternal => {
-                    self.exec_cell(graph, "treegru_internal", &batch.nodes, store, &mut report)?
-                }
-                CellKind::TreeGruLeaf => {
-                    self.exec_cell(graph, "treegru_leaf", &batch.nodes, store, &mut report)?
-                }
-                CellKind::MvCell => {
-                    self.exec_cell(graph, "mv_cell", &batch.nodes, store, &mut report)?
+                kind => {
+                    let cell = kind.artifact_name().expect("artifact cell kind");
+                    let access = plan.batches[bi].as_ref().expect("cell batch access");
+                    self.exec_cell(graph, cell, access, &batch.nodes, store, &mut report)?;
                 }
             }
         }
@@ -202,14 +315,25 @@ impl<'a> CellEngine<'a> {
 
     // -- sources / reduce ------------------------------------------------
 
-    fn exec_source(&mut self, _graph: &Graph, nodes: &[NodeId], store: &mut StateStore) {
+    fn exec_source(&mut self, nodes: &[NodeId], store: &mut ArenaStateStore) {
         let h = self.hidden;
         for &n in nodes {
             // deterministic embedding per node index
+            let (off, sz) = store.h_slot(n.idx());
             let mut rng = Rng::new(0xE4BED ^ n.0 as u64);
-            store.h[n.idx()] = (0..h).map(|_| (rng.f32() - 0.5) * 0.2).collect();
-            // MV-RNN sources also carry a matrix; materialize lazily when a
-            // MvCell consumes it (see gather_mv_state)
+            for x in &mut store.arena[off..off + sz] {
+                *x = (rng.f32() - 0.5) * 0.2;
+            }
+            // sources feeding MV cells carry a matrix: materialize the
+            // same deterministic near-identity the gather path generates
+            let (coff, csz) = store.c_slot(n.idx());
+            if csz == h * h {
+                cells::near_identity_matrix_into(
+                    &mut store.arena[coff..coff + csz],
+                    h,
+                    n,
+                );
+            }
         }
     }
 
@@ -218,187 +342,138 @@ impl<'a> CellEngine<'a> {
         graph: &Graph,
         nodes: &[NodeId],
         width: usize,
-        store: &mut StateStore,
+        store: &mut ArenaStateStore,
     ) {
         for &n in nodes {
             let mut acc = vec![0.0f32; width];
             for &p in &graph.node(n).preds {
-                let src = &store.h[p.idx()];
-                let len = src.len().min(width);
-                k::axpy(1.0, &src[..len], &mut acc[..len]);
+                let (off, sz) = store.h_slot(p.idx());
+                let len = sz.min(width);
+                k::axpy(1.0, &store.arena[off..off + len], &mut acc[..len]);
             }
-            store.h[n.idx()] = acc;
+            let (off, sz) = store.h_slot(n.idx());
+            store.arena[off..off + sz].copy_from_slice(&acc[..sz]);
         }
     }
 
     // -- cell batches -----------------------------------------------------
 
-    /// Gather per-lane data args for `cell` from the predecessor states.
-    fn gather_data_args(
-        &mut self,
-        graph: &Graph,
-        cell: &str,
-        nodes: &[NodeId],
-        bucket: usize,
-        store: &StateStore,
-        report: &mut ExecReport,
-    ) -> Vec<Vec<f32>> {
-        let h = self.hidden;
-        let lanes = nodes.len();
-        let widths: Vec<usize> = match cell {
-            "lstm" => vec![h, h, h],
-            "gru" => vec![h, h],
-            "treelstm_internal" => vec![h, h, h, h],
-            "treelstm_leaf" => vec![h],
-            "treegru_internal" => vec![h, h],
-            "treegru_leaf" => vec![h],
-            "mv_cell" => vec![h, h, h * h, h * h],
-            "classifier" => vec![h],
-            _ => vec![h],
-        };
-        let mut args: Vec<Vec<f32>> = widths.iter().map(|w| vec![0.0; bucket * w]).collect();
-        for (lane, &n) in nodes.iter().enumerate() {
-            let preds = &graph.node(n).preds;
-            match cell {
-                "lstm" | "gru" => {
-                    // preds: [x-provider, state-providers...]
-                    if let Some(&x) = preds.first() {
-                        copy_lane(&mut args[0], lane, h, &store.h[x.idx()]);
-                    }
-                    for &p in preds.iter().skip(1) {
-                        add_lane(&mut args[1], lane, h, &store.h[p.idx()]);
-                        if cell == "lstm" {
-                            add_lane(&mut args[2], lane, h, &store.c[p.idx()]);
-                        }
-                    }
-                }
-                "treelstm_internal" => {
-                    let (l, r) = two_children(preds);
-                    copy_lane(&mut args[0], lane, h, &store.h[l.idx()]);
-                    copy_lane(&mut args[1], lane, h, &store.h[r.idx()]);
-                    copy_lane(&mut args[2], lane, h, &store.c[l.idx()]);
-                    copy_lane(&mut args[3], lane, h, &store.c[r.idx()]);
-                }
-                "treegru_internal" => {
-                    let (l, r) = two_children(preds);
-                    copy_lane(&mut args[0], lane, h, &store.h[l.idx()]);
-                    copy_lane(&mut args[1], lane, h, &store.h[r.idx()]);
-                }
-                "mv_cell" => {
-                    let (l, r) = two_children(preds);
-                    copy_lane(&mut args[0], lane, h, &store.h[l.idx()]);
-                    copy_lane(&mut args[1], lane, h, &store.h[r.idx()]);
-                    copy_mv_matrix(&mut args[2], lane, h, l, &store.c[l.idx()]);
-                    copy_mv_matrix(&mut args[3], lane, h, r, &store.c[r.idx()]);
-                }
-                "treelstm_leaf" | "treegru_leaf" => {
-                    if let Some(&x) = preds.first() {
-                        copy_lane(&mut args[0], lane, h, &store.h[x.idx()]);
-                    }
-                }
-                "classifier" => {
-                    for &p in preds {
-                        add_lane(&mut args[0], lane, h, &store.h[p.idx()]);
-                    }
-                }
-                _ => {}
-            }
-        }
-        report.memcpy_elems += args.iter().map(|a| a.len() / bucket * lanes).sum::<usize>();
-        args
-    }
-
     fn exec_cell(
         &mut self,
         graph: &Graph,
         cell: &str,
+        access: &BatchAccess,
         nodes: &[NodeId],
-        store: &mut StateStore,
+        store: &mut ArenaStateStore,
         report: &mut ExecReport,
     ) -> Result<()> {
         if nodes.is_empty() {
             return Ok(());
         }
         let h = self.hidden;
-        // split into chunks minimizing padded compute (see chunk_plan)
-        let chunk_sizes: Vec<usize> = match &self.backend {
-            Backend::Pjrt(reg) => reg
-                .chunk_plan(cell, h, nodes.len())
-                .ok_or_else(|| anyhow!("no artifact for {cell} h={h}"))?
-                .into_iter()
-                .collect(),
-            Backend::Cpu => vec![nodes.len().max(1)],
-        };
+        let widths = cells::data_arg_widths(cell, h);
+        let sems = cells::arg_semantics(cell);
+        debug_assert_eq!(access.exec_order.len(), nodes.len());
+        debug_assert_eq!(access.args.len(), sems.len());
+        // lanes in the plan's common operand order: views then slice
+        // contiguously, and per-lane results land on their own nodes
+        // regardless of order (cells are lane-independent)
+        let ordered: Vec<NodeId> = access
+            .exec_order
+            .iter()
+            .map(|&l| nodes[l as usize])
+            .collect();
+
+        // split into chunks minimizing padded compute (backend buckets)
+        let buckets = self.backend.chunk_plan(cell, nodes.len())?;
         let mut cursor = 0usize;
-        for planned_bucket in chunk_sizes {
-            let take = planned_bucket.min(nodes.len() - cursor);
-            let chunk = &nodes[cursor..cursor + take];
+        for bucket in buckets {
+            let take = bucket.min(nodes.len() - cursor);
+            if take == 0 {
+                break;
+            }
+            let chunk_start = cursor;
+            let chunk = &ordered[chunk_start..chunk_start + take];
             cursor += take;
-            let bucket = match &self.backend {
-                Backend::Pjrt(_) => planned_bucket,
-                Backend::Cpu => chunk.len(),
-            };
-            report.padded_lanes += bucket - chunk.len();
-            let data = self.gather_data_args(graph, cell, chunk, bucket, store, report);
+            report.padded_lanes += bucket - take;
+
+            // -- stage data args: zero-copy views where the plan achieves
+            //    adjacency (and no padding is needed), counted gathers
+            //    everywhere else --------------------------------------
+            enum Staged {
+                View(std::ops::Range<usize>),
+                Scratch,
+            }
+            let mut staged: Vec<Staged> = Vec::with_capacity(sems.len());
+            store.ensure_scratch(sems.len());
+            for (arg, sem) in sems.iter().enumerate() {
+                let w = widths[arg];
+                match access.args[arg] {
+                    ArgAccess::View { base } if bucket == take => {
+                        let lo = base + chunk_start * w;
+                        staged.push(Staged::View(lo..lo + take * w));
+                        report.copies_avoided_elems += take * w;
+                    }
+                    a => {
+                        let planned = match a {
+                            // padded chunk of a plannable operand: the
+                            // copy is real, charge it against the plan
+                            ArgAccess::View { .. } => true,
+                            ArgAccess::Gather { planned } => planned,
+                        };
+                        store.gather_arg(graph, arg, *sem, chunk, w, bucket, h);
+                        report.memcpy_elems += take * w;
+                        if planned {
+                            report.planned_memcpy_elems += take * w;
+                        }
+                        staged.push(Staged::Scratch);
+                    }
+                }
+            }
+
             // charge the configured in-cell copy work (baseline modes)
             if let Some(&(fixed, per_lane)) = self.in_cell_copy_elems.get(cell) {
-                let elems = fixed + per_lane * chunk.len();
+                let elems = fixed + per_lane * take;
                 if elems > 0 {
                     self.charge_copy(elems);
                     report.memcpy_elems += elems;
                     report.kernel_calls += 1;
                 }
             }
-            let outs = match &self.backend {
-                Backend::Pjrt(reg) => {
-                    let compiled = reg
-                        .cell_for_batch(cell, h, chunk.len())
-                        .ok_or_else(|| anyhow!("missing artifact {cell} h={h}"))?;
-                    // stage weights on device once per cell (§Perf it.1:
-                    // avoids re-uploading Θ(H²) tensors on every call)
-                    if !self.weights_dev.contains_key(cell) {
-                        let host = self.weights_for(cell).clone();
-                        let dims = Self::weight_shapes(cell, h);
-                        let staged: Vec<(Vec<f32>, Vec<usize>)> =
-                            host.into_iter().zip(dims).collect();
-                        let bufs = compiled.stage_weights(&staged)?;
-                        self.weights_dev.insert(cell.to_string(), bufs);
-                    }
-                    compiled.execute_with_weights(&data, &self.weights_dev[cell])?
-                }
-                Backend::Cpu => self.cpu_cell(cell, &data, bucket)?,
-            };
+
+            // -- execute through the backend ---------------------------
+            let data: Vec<&[f32]> = staged
+                .iter()
+                .enumerate()
+                .map(|(arg, s)| match s {
+                    Staged::View(r) => &store.arena[r.clone()],
+                    Staged::Scratch => &store.scratch[arg][..bucket * widths[arg]],
+                })
+                .collect();
+            let outs = self.backend.run_cell(cell, &data, bucket)?;
+            drop(data);
             report.kernel_calls += 1;
             // unfused-baseline launch charge: real extra launches of a
             // minimal artifact (one per primitive batch beyond the first)
             if let Some(&extra) = self.extra_launches.get(cell) {
-                if let Backend::Pjrt(reg) = &self.backend {
-                    if let Some(noop) = reg.cell_for_batch("classifier", h, 1) {
-                        if self.noop_args.is_none() {
-                            self.noop_args = Some(
-                                noop.arg_shapes
-                                    .iter()
-                                    .map(|s| vec![0.0f32; s.iter().product()])
-                                    .collect(),
-                            );
-                        }
-                        for _ in 0..extra {
-                            let _ = noop.execute(self.noop_args.as_ref().unwrap())?;
-                        }
-                        report.kernel_calls += extra;
-                    }
-                }
+                report.kernel_calls += self.backend.extra_launches(extra)?;
             }
-            // scatter outputs back to the per-node store
-            let out_w: Vec<usize> = outs.iter().map(|o| o.len() / bucket).collect();
-            for (lane, &n) in chunk.iter().enumerate() {
-                store.h[n.idx()] =
-                    outs[0][lane * out_w[0]..(lane + 1) * out_w[0]].to_vec();
-                if outs.len() > 1 {
-                    store.c[n.idx()] =
-                        outs[1][lane * out_w[1]..(lane + 1) * out_w[1]].to_vec();
-                }
-                report.memcpy_elems += out_w.iter().sum::<usize>();
+
+            // -- outputs: in place when the plan made the dst block
+            //    contiguous, counted scatter otherwise -----------------
+            let ow0 = outs[0].len() / bucket;
+            write_output(
+                store, report, &outs[0], ow0, access.dst_h, chunk, chunk_start, take, bucket,
+                false,
+            );
+            if outs.len() > 1 {
+                let dc = access
+                    .dst_c
+                    .unwrap_or(DstAccess::Scatter { planned: false });
+                let ow1 = outs[1].len() / bucket;
+                write_output(
+                    store, report, &outs[1], ow1, dc, chunk, chunk_start, take, bucket, true,
+                );
             }
         }
         Ok(())
@@ -413,142 +488,54 @@ impl<'a> CellEngine<'a> {
         let n = a.len().min(b.len());
         b[..n].copy_from_slice(&a[..n]);
     }
+}
 
-    // -- CPU reference backend --------------------------------------------
-
-    fn cpu_cell(&mut self, cell: &str, data: &[Vec<f32>], b: usize) -> Result<Vec<Vec<f32>>> {
-        let h = self.hidden;
-        let w = self.weights_for(cell).clone();
-        let nc = crate::workloads::NUM_CLASSES;
-        let out = match cell {
-            "lstm" => {
-                let gates = affine2(&data[0], &data[1], &w[0], &w[1], &w[2], b, h, 4 * h);
-                lstm_pointwise(&gates, &data[2], b, h)
+/// Write one kernel output tensor back to the arena: a single in-place
+/// block move when the plan made the destination contiguous (the vendor
+/// kernel would write there directly — counted as zero graph-level copy),
+/// or a counted per-lane scatter otherwise.
+#[allow(clippy::too_many_arguments)]
+fn write_output(
+    store: &mut ArenaStateStore,
+    report: &mut ExecReport,
+    out: &[f32],
+    w: usize,
+    access: DstAccess,
+    chunk: &[NodeId],
+    chunk_start: usize,
+    take: usize,
+    bucket: usize,
+    second: bool,
+) {
+    match access {
+        DstAccess::Direct { base } if bucket == take => {
+            let off = base + chunk_start * w;
+            store.arena[off..off + take * w].copy_from_slice(&out[..take * w]);
+            report.copies_avoided_elems += take * w;
+        }
+        _ => {
+            let planned = match access {
+                DstAccess::Direct { .. } => true, // padded chunk: real scatter
+                DstAccess::Scatter { planned } => planned,
+            };
+            for (pos, &n) in chunk.iter().enumerate() {
+                let (off, sz) = if second {
+                    store.c_slot(n.idx())
+                } else {
+                    store.h_slot(n.idx())
+                };
+                let m = sz.min(w);
+                store.arena[off..off + m].copy_from_slice(&out[pos * w..pos * w + m]);
             }
-            "gru" => {
-                let rz = affine2(&data[0], &data[1], &w[0], &w[1], &w[2], b, h, 2 * h);
-                let mut nx = vec![0.0; b * h];
-                k::matmul(&data[0], &w[3], &mut nx, b, h, h);
-                let mut nxb = vec![0.0; b * h];
-                k::add_bias(&nx, &w[5], &mut nxb);
-                let mut nh = vec![0.0; b * h];
-                k::matmul(&data[1], &w[4], &mut nh, b, h, h);
-                vec![gru_pointwise(&rz, &nxb, &nh, &data[1], b, h)]
+            report.memcpy_elems += take * w;
+            if planned {
+                report.planned_memcpy_elems += take * w;
             }
-            "treelstm_internal" => {
-                let gates = affine2(&data[0], &data[1], &w[0], &w[1], &w[2], b, h, 5 * h);
-                treelstm_pointwise(&gates, &data[2], &data[3], b, h)
-            }
-            "treelstm_leaf" => {
-                let mut g = vec![0.0; b * 3 * h];
-                k::matmul(&data[0], &w[0], &mut g, b, h, 3 * h);
-                let mut gb = vec![0.0; b * 3 * h];
-                k::add_bias(&g, &w[1], &mut gb);
-                treelstm_leaf_pointwise(&gb, b, h)
-            }
-            "treegru_internal" => {
-                let rz = affine2(&data[0], &data[1], &w[0], &w[1], &w[2], b, h, 3 * h);
-                let mut h2 = vec![0.0; b * h];
-                for i in 0..b {
-                    for j in 0..h {
-                        let r_l = sigm(rz[i * 3 * h + j]);
-                        let r_r = sigm(rz[i * 3 * h + h + j]);
-                        let _ = (r_l, r_r);
-                    }
-                }
-                // candidate: tanh((r_l*h_l) @ w3 + (r_r*h_r) @ w4 + b5)
-                let mut rhl = vec![0.0; b * h];
-                let mut rhr = vec![0.0; b * h];
-                for i in 0..b {
-                    for j in 0..h {
-                        rhl[i * h + j] = sigm(rz[i * 3 * h + j]) * data[0][i * h + j];
-                        rhr[i * h + j] = sigm(rz[i * 3 * h + h + j]) * data[1][i * h + j];
-                    }
-                }
-                let mut n1 = vec![0.0; b * h];
-                k::matmul(&rhl, &w[3], &mut n1, b, h, h);
-                let mut n2 = vec![0.0; b * h];
-                k::matmul(&rhr, &w[4], &mut n2, b, h, h);
-                for i in 0..b {
-                    for j in 0..h {
-                        let z = sigm(rz[i * 3 * h + 2 * h + j]);
-                        let n =
-                            (n1[i * h + j] + n2[i * h + j] + w[5][j]).tanh();
-                        let hbar = 0.5 * (data[0][i * h + j] + data[1][i * h + j]);
-                        h2[i * h + j] = (1.0 - z) * n + z * hbar;
-                    }
-                }
-                vec![h2]
-            }
-            "treegru_leaf" => {
-                let mut m = vec![0.0; b * h];
-                k::matmul(&data[0], &w[0], &mut m, b, h, h);
-                let mut mb = vec![0.0; b * h];
-                k::add_bias(&m, &w[1], &mut mb);
-                let mut out = vec![0.0; b * h];
-                k::tanh(&mb, &mut out);
-                vec![out]
-            }
-            "mv_cell" => {
-                // cross_l[b] = M_r[b] h_l[b]; cross_r[b] = M_l[b] h_r[b]
-                let mut cat = vec![0.0; b * 2 * h];
-                for i in 0..b {
-                    for r in 0..h {
-                        let mut acc_l = 0.0;
-                        let mut acc_r = 0.0;
-                        for cidx in 0..h {
-                            acc_l += data[3][i * h * h + r * h + cidx] * data[0][i * h + cidx];
-                            acc_r += data[2][i * h * h + r * h + cidx] * data[1][i * h + cidx];
-                        }
-                        cat[i * 2 * h + r] = acc_l;
-                        cat[i * 2 * h + h + r] = acc_r;
-                    }
-                }
-                let mut hv = vec![0.0; b * h];
-                k::matmul(&cat, &w[0], &mut hv, b, 2 * h, h);
-                let mut hvb = vec![0.0; b * h];
-                k::add_bias(&hv, &w[1], &mut hvb);
-                let mut hout = vec![0.0; b * h];
-                k::tanh(&hvb, &mut hout);
-                // m' = w2[h,2h] @ [M_l; M_r] + w3
-                let mut mout = vec![0.0; b * h * h];
-                for i in 0..b {
-                    let mut stacked = vec![0.0; 2 * h * h];
-                    stacked[..h * h].copy_from_slice(&data[2][i * h * h..(i + 1) * h * h]);
-                    stacked[h * h..].copy_from_slice(&data[3][i * h * h..(i + 1) * h * h]);
-                    let mut mm = vec![0.0; h * h];
-                    k::matmul(&w[2], &stacked, &mut mm, h, 2 * h, h);
-                    for (o, (&a, &bv)) in mout[i * h * h..(i + 1) * h * h]
-                        .iter_mut()
-                        .zip(mm.iter().zip(w[3].iter()))
-                    {
-                        *o = a + bv;
-                    }
-                }
-                vec![hout, mout]
-            }
-            "classifier" => {
-                let mut l = vec![0.0; b * nc];
-                k::matmul(&data[0], &w[0], &mut l, b, h, nc);
-                let mut lb = vec![0.0; b * nc];
-                k::add_bias(&l, &w[1], &mut lb);
-                vec![lb]
-            }
-            other => return Err(anyhow!("cpu backend: unknown cell {other}")),
-        };
-        Ok(out)
+        }
     }
 }
 
 // -- small helpers ---------------------------------------------------------
-
-fn two_children(preds: &[NodeId]) -> (NodeId, NodeId) {
-    match preds.len() {
-        0 => (NodeId(0), NodeId(0)),
-        1 => (preds[0], preds[0]),
-        _ => (preds[0], preds[1]),
-    }
-}
 
 fn copy_lane(buf: &mut [f32], lane: usize, w: usize, src: &[f32]) {
     if src.is_empty() {
@@ -566,112 +553,27 @@ fn add_lane(buf: &mut [f32], lane: usize, w: usize, src: &[f32]) {
     k::axpy(1.0, &src[..n], &mut buf[lane * w..lane * w + n]);
 }
 
-/// Sources don't carry an M matrix; leaves over embeds use a deterministic
-/// near-identity matrix so numerics stay bounded.
+/// Nodes without a real M matrix (children whose c-slot is absent or not
+/// `h*h`) use the shared deterministic near-identity so numerics stay
+/// bounded; real matrices — including source-materialized ones — copy
+/// through (identical values either way, see
+/// [`cells::near_identity_matrix_into`]).
 fn copy_mv_matrix(buf: &mut [f32], lane: usize, h: usize, node: NodeId, src: &[f32]) {
     let w = h * h;
     if src.len() == w {
         buf[lane * w..(lane + 1) * w].copy_from_slice(src);
         return;
     }
-    let mut rng = Rng::new(0x33AA ^ node.0 as u64);
-    for r in 0..h {
-        for c in 0..h {
-            let eye = if r == c { 1.0 } else { 0.0 };
-            buf[lane * w + r * h + c] = eye + (rng.f32() - 0.5) * 0.02;
-        }
-    }
+    cells::near_identity_matrix_into(&mut buf[lane * w..(lane + 1) * w], h, node);
 }
 
-fn sigm(x: f32) -> f32 {
-    1.0 / (1.0 + (-x).exp())
-}
-
-fn affine2(
-    x: &[f32],
-    hvec: &[f32],
-    wx: &[f32],
-    wh: &[f32],
-    bias: &[f32],
-    b: usize,
-    h: usize,
-    n: usize,
-) -> Vec<f32> {
-    let mut g1 = vec![0.0; b * n];
-    k::matmul(x, wx, &mut g1, b, h, n);
-    let mut g2 = vec![0.0; b * n];
-    k::matmul(hvec, wh, &mut g2, b, h, n);
-    let mut s = vec![0.0; b * n];
-    k::add(&g1, &g2, &mut s);
-    let mut out = vec![0.0; b * n];
-    k::add_bias(&s, bias, &mut out);
-    out
-}
-
-fn gru_pointwise(rz: &[f32], nx: &[f32], nh: &[f32], hprev: &[f32], b: usize, h: usize) -> Vec<f32> {
-    let mut out = vec![0.0; b * h];
-    for i in 0..b {
-        for j in 0..h {
-            let r = sigm(rz[i * 2 * h + j]);
-            let z = sigm(rz[i * 2 * h + h + j]);
-            let n = (nx[i * h + j] + r * nh[i * h + j]).tanh();
-            out[i * h + j] = (1.0 - z) * n + z * hprev[i * h + j];
-        }
-    }
-    out
-}
-
-fn lstm_pointwise(gates: &[f32], c: &[f32], b: usize, h: usize) -> Vec<Vec<f32>> {
-    let mut hn = vec![0.0; b * h];
-    let mut cn = vec![0.0; b * h];
-    for i in 0..b {
-        for j in 0..h {
-            let g = |k: usize| gates[i * 4 * h + k * h + j];
-            let cv = sigm(g(1)) * c[i * h + j] + sigm(g(0)) * g(2).tanh();
-            cn[i * h + j] = cv;
-            hn[i * h + j] = sigm(g(3)) * cv.tanh();
-        }
-    }
-    vec![hn, cn]
-}
-
-fn treelstm_pointwise(gates: &[f32], cl: &[f32], cr: &[f32], b: usize, h: usize) -> Vec<Vec<f32>> {
-    let mut hn = vec![0.0; b * h];
-    let mut cn = vec![0.0; b * h];
-    for i in 0..b {
-        for j in 0..h {
-            let g = |k: usize| gates[i * 5 * h + k * h + j];
-            let cv = sigm(g(1)) * cl[i * h + j] + sigm(g(2)) * cr[i * h + j]
-                + sigm(g(0)) * g(3).tanh();
-            cn[i * h + j] = cv;
-            hn[i * h + j] = sigm(g(4)) * cv.tanh();
-        }
-    }
-    vec![hn, cn]
-}
-
-fn treelstm_leaf_pointwise(gates: &[f32], b: usize, h: usize) -> Vec<Vec<f32>> {
-    let mut hn = vec![0.0; b * h];
-    let mut cn = vec![0.0; b * h];
-    for i in 0..b {
-        for j in 0..h {
-            let g = |k: usize| gates[i * 3 * h + k * h + j];
-            let cv = sigm(g(0)) * g(1).tanh();
-            cn[i * h + j] = cv;
-            hn[i * h + j] = sigm(g(2)) * cv.tanh();
-        }
-    }
-    vec![hn, cn]
-}
-
-/// Run a full pipeline (schedule + execute) on a merged graph.
+/// Run a full pipeline (schedule + plan + execute) on a merged graph.
 pub fn run_graph(
     engine: &mut CellEngine,
     graph: &mut Graph,
     types: &TypeRegistry,
     policy: &mut dyn crate::batching::Policy,
 ) -> Result<(crate::coordinator::TimeBreakdown, ExecReport)> {
-    use std::time::Instant;
     let t0 = Instant::now();
     graph.freeze();
     let construction_s = t0.elapsed().as_secs_f64();
@@ -680,12 +582,13 @@ pub fn run_graph(
     let schedule = crate::batching::run_policy(graph, types.num_types(), policy);
     let scheduling_s = t1.elapsed().as_secs_f64();
 
-    let mut store = StateStore::new(graph.len());
+    let mut store = ArenaStateStore::new();
     let report = engine.execute(graph, types, &schedule, &mut store)?;
     Ok((
         crate::coordinator::TimeBreakdown {
             construction_s,
             scheduling_s,
+            planning_s: report.planning_s,
             execution_s: report.exec_s,
         },
         report,
@@ -696,22 +599,32 @@ pub fn run_graph(
 mod tests {
     use super::*;
     use crate::batching::fsm::{Encoding, FsmPolicy};
+    use crate::batching::run_policy;
     use crate::util::rng::Rng;
     use crate::workloads::{Workload, WorkloadKind, ALL_WORKLOADS};
 
-    fn run_cpu(kind: WorkloadKind, seed: u64) -> (ExecReport, Vec<Vec<f32>>) {
+    fn run_mode(
+        kind: WorkloadKind,
+        seed: u64,
+        mode: MemoryMode,
+    ) -> (ExecReport, Vec<Vec<f32>>) {
         let w = Workload::new(kind, 32);
         let mut rng = Rng::new(seed);
         let mut g = w.gen_batch(3, &mut rng);
-        let mut engine = CellEngine::new(Backend::Cpu, 32, 1);
+        let mut engine = CellEngine::new(Backend::Cpu, 32, 1).unwrap();
+        engine.memory_mode = mode;
         let mut policy = FsmPolicy::new(Encoding::Sort);
         g.freeze();
-        let schedule = crate::batching::run_policy(&g, w.registry.num_types(), &mut policy);
-        let mut store = StateStore::new(g.len());
+        let schedule = run_policy(&g, w.registry.num_types(), &mut policy);
+        let mut store = ArenaStateStore::new();
         let report = engine
             .execute(&g, &w.registry, &schedule, &mut store)
             .unwrap();
-        (report, store.h)
+        (report, store.h_vectors())
+    }
+
+    fn run_cpu(kind: WorkloadKind, seed: u64) -> (ExecReport, Vec<Vec<f32>>) {
+        run_mode(kind, seed, MemoryMode::Planned)
     }
 
     #[test]
@@ -740,6 +653,94 @@ mod tests {
     }
 
     #[test]
+    fn planned_matches_unplanned_bitwise_everywhere() {
+        // The tentpole parity contract: for every workload, the
+        // arena-planned engine produces exactly the outputs of the legacy
+        // gather/scatter path at the same seed, measured plannable copies
+        // match the planner's static prediction, and the plan never moves
+        // more data than the baseline.
+        let mut total_planned = 0usize;
+        let mut total_unplanned = 0usize;
+        for kind in ALL_WORKLOADS {
+            let (rp, hp) = run_mode(kind, 11, MemoryMode::Planned);
+            let (ru, hu) = run_mode(kind, 11, MemoryMode::Unplanned);
+            assert_eq!(hp, hu, "{kind:?}: planned vs unplanned outputs differ");
+            assert_eq!(
+                rp.planned_memcpy_elems, rp.plan_predicted_elems,
+                "{kind:?}: planned measurement vs static prediction"
+            );
+            assert_eq!(
+                ru.planned_memcpy_elems, ru.plan_predicted_elems,
+                "{kind:?}: unplanned measurement vs baseline prediction"
+            );
+            assert!(
+                rp.memcpy_elems <= ru.memcpy_elems,
+                "{kind:?}: planned {} > unplanned {}",
+                rp.memcpy_elems,
+                ru.memcpy_elems
+            );
+            // the avoided volume is exactly the gap on plannable operands
+            assert_eq!(
+                rp.copies_avoided_elems,
+                ru.planned_memcpy_elems - rp.planned_memcpy_elems,
+                "{kind:?}: copies-avoided accounting"
+            );
+            total_planned += rp.memcpy_elems;
+            total_unplanned += ru.memcpy_elems;
+        }
+        assert!(
+            total_planned < total_unplanned,
+            "planner should eliminate copies somewhere across the suite"
+        );
+    }
+
+    #[test]
+    fn path_tree_is_strictly_cheaper_planned() {
+        // Deterministic strict win: a degenerate path-shaped TreeLSTM
+        // makes every internal batch single-lane, so the planned arena
+        // serves all its operands as views while the baseline gathers.
+        let w = Workload::new(WorkloadKind::TreeLstm, 16);
+        let reg = &w.registry;
+        let (embed, leaf, internal) = (
+            reg.lookup("embed").unwrap(),
+            reg.lookup("leaf").unwrap(),
+            reg.lookup("internal").unwrap(),
+        );
+        let mut g = Graph::new();
+        let e0 = g.add(embed, vec![], 0);
+        let l0 = g.add(leaf, vec![e0], 0);
+        let e1 = g.add(embed, vec![], 0);
+        let l1 = g.add(leaf, vec![e1], 0);
+        let mut acc = g.add(internal, vec![l0, l1], 0);
+        for _ in 0..4 {
+            let e = g.add(embed, vec![], 0);
+            let l = g.add(leaf, vec![e], 0);
+            acc = g.add(internal, vec![acc, l], 0);
+        }
+        g.freeze();
+        let nt = reg.num_types();
+        let schedule = run_policy(&g, nt, &mut FsmPolicy::new(Encoding::Sort));
+
+        let mut run = |mode: MemoryMode| {
+            let mut engine = CellEngine::new(Backend::Cpu, 16, 1).unwrap();
+            engine.memory_mode = mode;
+            let mut store = ArenaStateStore::new();
+            let r = engine.execute(&g, reg, &schedule, &mut store).unwrap();
+            (r, store.h_vectors())
+        };
+        let (rp, hp) = run(MemoryMode::Planned);
+        let (ru, hu) = run(MemoryMode::Unplanned);
+        assert_eq!(hp, hu);
+        assert!(
+            rp.memcpy_elems < ru.memcpy_elems,
+            "planned {} vs unplanned {}",
+            rp.memcpy_elems,
+            ru.memcpy_elems
+        );
+        assert!(rp.copies_avoided_elems > 0);
+    }
+
+    #[test]
     fn schedule_order_does_not_change_values() {
         // agenda vs fsm schedules must produce identical node outputs
         let w = Workload::new(WorkloadKind::LatticeLstm, 32);
@@ -751,20 +752,20 @@ mod tests {
         let mut outs = Vec::new();
         for agenda in [false, true] {
             let schedule = if agenda {
-                crate::batching::run_policy(
+                run_policy(
                     &g,
                     nt,
                     &mut crate::batching::agenda::AgendaPolicy::new(nt),
                 )
             } else {
-                crate::batching::run_policy(&g, nt, &mut FsmPolicy::new(Encoding::Sort))
+                run_policy(&g, nt, &mut FsmPolicy::new(Encoding::Sort))
             };
-            let mut engine = CellEngine::new(Backend::Cpu, 32, 1);
-            let mut store = StateStore::new(g.len());
+            let mut engine = CellEngine::new(Backend::Cpu, 32, 1).unwrap();
+            let mut store = ArenaStateStore::new();
             engine
                 .execute(&g, &w.registry, &schedule, &mut store)
                 .unwrap();
-            outs.push(store.h);
+            outs.push(store.h_vectors());
         }
         for (a, b) in outs[0].iter().zip(outs[1].iter()) {
             for (x, y) in a.iter().zip(b.iter()) {
@@ -779,22 +780,39 @@ mod tests {
         let mut rng = Rng::new(2);
         let mut g = w.gen_batch(2, &mut rng);
         g.freeze();
-        let schedule = crate::batching::run_policy(
+        let schedule = run_policy(
             &g,
             w.registry.num_types(),
             &mut FsmPolicy::new(Encoding::Sort),
         );
-        let mut base = CellEngine::new(Backend::Cpu, 32, 1);
-        let mut store = StateStore::new(g.len());
+        let mut base = CellEngine::new(Backend::Cpu, 32, 1).unwrap();
+        let mut store = ArenaStateStore::new();
         let r0 = base.execute(&g, &w.registry, &schedule, &mut store).unwrap();
-        let mut charged = CellEngine::new(Backend::Cpu, 32, 1);
+        let mut charged = CellEngine::new(Backend::Cpu, 32, 1).unwrap();
         charged
             .in_cell_copy_elems
             .insert("treelstm_internal".into(), (1000, 200));
-        let mut store2 = StateStore::new(g.len());
+        let mut store2 = ArenaStateStore::new();
         let r1 = charged
             .execute(&g, &w.registry, &schedule, &mut store2)
             .unwrap();
         assert!(r1.memcpy_elems > r0.memcpy_elems);
+    }
+
+    #[test]
+    fn plan_cache_amortizes_planning_time() {
+        let w = Workload::new(WorkloadKind::TreeGru, 32);
+        let mut rng = Rng::new(6);
+        let mut g = w.gen_batch(2, &mut rng);
+        g.freeze();
+        let schedule = run_policy(
+            &g,
+            w.registry.num_types(),
+            &mut FsmPolicy::new(Encoding::Sort),
+        );
+        let mut engine = CellEngine::new(Backend::Cpu, 32, 1).unwrap();
+        let p1 = engine.plan_for(&g, &w.registry, &schedule);
+        let p2 = engine.plan_for(&g, &w.registry, &schedule);
+        assert!(Rc::ptr_eq(&p1, &p2));
     }
 }

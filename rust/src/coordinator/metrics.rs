@@ -1,4 +1,6 @@
-//! Serving metrics: throughput, latency percentiles, batching counters.
+//! Serving metrics: throughput, latency percentiles, batching counters,
+//! and the memory-planning win (per-request gather/scatter volume and
+//! copies avoided vs the unplanned baseline).
 
 use std::sync::Mutex;
 use std::time::{Duration, Instant};
@@ -16,6 +18,7 @@ struct Inner {
     batches_executed: u64,
     kernel_calls: u64,
     memcpy_elems: u64,
+    copies_avoided_elems: u64,
     padded_lanes: u64,
 }
 
@@ -38,7 +41,10 @@ pub struct MetricsSnapshot {
     pub instances: u64,
     pub batches_executed: u64,
     pub kernel_calls: u64,
+    /// gather/scatter volume actually moved (elements)
     pub memcpy_elems: u64,
+    /// volume served zero-copy thanks to the memory plan (elements)
+    pub copies_avoided_elems: u64,
     pub padded_lanes: u64,
     pub latency_p50_s: f64,
     pub latency_p99_s: f64,
@@ -53,6 +59,31 @@ impl MetricsSnapshot {
             return 0.0;
         }
         self.instances as f64 / self.elapsed_s
+    }
+
+    /// Mean gather/scatter volume per request (elements).
+    pub fn memcpy_elems_per_request(&self) -> f64 {
+        if self.requests == 0 {
+            return 0.0;
+        }
+        self.memcpy_elems as f64 / self.requests as f64
+    }
+
+    /// Mean copies avoided per request vs the unplanned baseline (elements).
+    pub fn copies_avoided_per_request(&self) -> f64 {
+        if self.requests == 0 {
+            return 0.0;
+        }
+        self.copies_avoided_elems as f64 / self.requests as f64
+    }
+
+    /// Fraction of the baseline data movement the plan eliminated.
+    pub fn copies_avoided_frac(&self) -> f64 {
+        let base = self.memcpy_elems + self.copies_avoided_elems;
+        if base == 0 {
+            return 0.0;
+        }
+        self.copies_avoided_elems as f64 / base as f64
     }
 }
 
@@ -89,6 +120,7 @@ impl Metrics {
         g.batches_executed += report.batches as u64;
         g.kernel_calls += report.kernel_calls as u64;
         g.memcpy_elems += report.memcpy_elems as u64;
+        g.copies_avoided_elems += report.copies_avoided_elems as u64;
         g.padded_lanes += report.padded_lanes as u64;
     }
 
@@ -100,6 +132,7 @@ impl Metrics {
             batches_executed: g.batches_executed,
             kernel_calls: g.kernel_calls,
             memcpy_elems: g.memcpy_elems,
+            copies_avoided_elems: g.copies_avoided_elems,
             padded_lanes: g.padded_lanes,
             latency_p50_s: g.latencies.p50(),
             latency_p99_s: g.latencies.p99(),
@@ -125,11 +158,13 @@ mod tests {
             kernel_calls: 7,
             padded_lanes: 2,
             memcpy_elems: 100,
-            exec_s: 0.01,
+            copies_avoided_elems: 300,
+            ..Default::default()
         };
         let bd = TimeBreakdown {
             construction_s: 0.001,
             scheduling_s: 0.002,
+            planning_s: 0.003,
             execution_s: 0.01,
         };
         m.record_minibatch(4, &bd, &report);
@@ -138,6 +173,12 @@ mod tests {
         assert_eq!(s.instances, 4);
         assert_eq!(s.batches_executed, 5);
         assert_eq!(s.kernel_calls, 7);
+        assert_eq!(s.memcpy_elems, 100);
+        assert_eq!(s.copies_avoided_elems, 300);
+        assert_eq!(s.memcpy_elems_per_request(), 50.0);
+        assert_eq!(s.copies_avoided_per_request(), 150.0);
+        assert!((s.copies_avoided_frac() - 0.75).abs() < 1e-12);
+        assert!((s.breakdown.planning_s - 0.003).abs() < 1e-12);
         assert!(s.latency_p50_s >= 0.01);
         assert!(s.throughput() > 0.0);
     }

@@ -34,27 +34,42 @@ impl SystemMode {
             SystemMode::EdBatch => "ed-batch",
         }
     }
+
+    /// Graph-level state layout the mode executes under: only ED-Batch
+    /// plans the arena with the PQ tree; the DyNet baselines keep
+    /// creation-order allocation and pay full gather/scatter.
+    pub fn memory_mode(self) -> crate::memory::MemoryMode {
+        match self {
+            SystemMode::EdBatch => crate::memory::MemoryMode::Planned,
+            _ => crate::memory::MemoryMode::Unplanned,
+        }
+    }
 }
 
-/// Per-inference-pass time decomposition (Fig.8).
+/// Per-inference-pass time decomposition (Fig.8), following the unified
+/// pipeline `Graph → Schedule → MemoryPlan → ExecBackend`.
 #[derive(Clone, Copy, Debug, Default)]
 pub struct TimeBreakdown {
     /// dataflow-graph definition time
     pub construction_s: f64,
     /// dynamic-batching analysis time
     pub scheduling_s: f64,
+    /// PQ-tree memory planning (cached for repeated mini-batch
+    /// topologies; novel topologies plan fresh)
+    pub planning_s: f64,
     /// batched kernel execution (incl. gather/scatter)
     pub execution_s: f64,
 }
 
 impl TimeBreakdown {
     pub fn total(&self) -> f64 {
-        self.construction_s + self.scheduling_s + self.execution_s
+        self.construction_s + self.scheduling_s + self.planning_s + self.execution_s
     }
 
     pub fn add(&mut self, other: &TimeBreakdown) {
         self.construction_s += other.construction_s;
         self.scheduling_s += other.scheduling_s;
+        self.planning_s += other.planning_s;
         self.execution_s += other.execution_s;
     }
 }

@@ -1,4 +1,5 @@
-//! Policy store: train-or-load the per-workload FSM batching policies.
+//! Policy store: build, train-or-load, and persist the per-workload
+//! batching policies (one per [`SystemMode`]).
 //!
 //! Training happens once per (workload, encoding) before serving (paper §4:
 //! "Before execution, the RL algorithm learns the batching policy") and the
@@ -9,10 +10,49 @@ use std::path::Path;
 
 use anyhow::{anyhow, Result};
 
+use crate::batching::agenda::AgendaPolicy;
+use crate::batching::depth::DepthPolicy;
 use crate::batching::fsm::{Encoding, FsmPolicy};
+use crate::batching::{run_policy, Policy};
 use crate::rl::{train, TrainConfig, TrainStats};
 use crate::util::json::Json;
+use crate::util::rng::Rng;
 use crate::workloads::{Workload, WorkloadKind};
+
+use super::SystemMode;
+
+/// Build the batching policy for a mode. For Cavs, calibrate agenda vs
+/// depth on a sample graph and keep the better (paper §5.1).
+pub fn policy_for_mode(
+    mode: SystemMode,
+    workload: &Workload,
+    encoding: Encoding,
+    artifacts_dir: Option<&str>,
+    seed: u64,
+) -> Result<Box<dyn Policy + Send>> {
+    let nt = workload.registry.num_types();
+    match mode {
+        SystemMode::VanillaDyNet => Ok(Box::new(AgendaPolicy::new(nt))),
+        SystemMode::CavsDyNet => {
+            let mut rng = Rng::new(seed);
+            let mut sample = workload.gen_batch(8, &mut rng);
+            sample.freeze();
+            let agenda = run_policy(&sample, nt, &mut AgendaPolicy::new(nt)).num_batches();
+            let depth = run_policy(&sample, nt, &mut DepthPolicy::new()).num_batches();
+            if depth < agenda {
+                Ok(Box::new(DepthPolicy::new()))
+            } else {
+                Ok(Box::new(AgendaPolicy::new(nt)))
+            }
+        }
+        SystemMode::EdBatch => {
+            let dir = artifacts_dir.unwrap_or("artifacts");
+            let cfg = TrainConfig::default();
+            let (policy, _) = load_or_train(dir, workload, encoding, &cfg, seed)?;
+            Ok(Box::new(policy))
+        }
+    }
+}
 
 pub fn policy_path(dir: &str, kind: WorkloadKind, encoding: Encoding) -> String {
     format!("{dir}/policy_{}_{}.json", kind.name(), encoding.name())

@@ -19,18 +19,15 @@ use std::time::{Duration, Instant};
 
 use anyhow::{anyhow, Result};
 
-use crate::batching::agenda::AgendaPolicy;
-use crate::batching::depth::DepthPolicy;
 use crate::batching::fsm::Encoding;
 use crate::batching::{run_policy, Policy};
 use crate::graph::Graph;
-use crate::rl::TrainConfig;
 use crate::runtime::ArtifactRegistry;
-use crate::util::rng::Rng;
 use crate::workloads::{Workload, WorkloadKind};
 
-use super::engine::{Backend, CellEngine, ExecReport, StateStore};
+use super::engine::{ArenaStateStore, Backend, CellEngine, ExecReport};
 use super::metrics::Metrics;
+use super::policies::policy_for_mode;
 use super::{SystemMode, TimeBreakdown};
 
 #[derive(Clone, Debug)]
@@ -147,40 +144,6 @@ impl Server {
     }
 }
 
-/// Build the batching policy for a mode. For Cavs, calibrate agenda vs
-/// depth on a sample graph and keep the better (paper §5.1).
-pub fn policy_for_mode(
-    mode: SystemMode,
-    workload: &Workload,
-    encoding: Encoding,
-    artifacts_dir: Option<&str>,
-    seed: u64,
-) -> Result<Box<dyn Policy + Send>> {
-    let nt = workload.registry.num_types();
-    match mode {
-        SystemMode::VanillaDyNet => Ok(Box::new(AgendaPolicy::new(nt))),
-        SystemMode::CavsDyNet => {
-            let mut rng = Rng::new(seed);
-            let mut sample = workload.gen_batch(8, &mut rng);
-            sample.freeze();
-            let agenda = run_policy(&sample, nt, &mut AgendaPolicy::new(nt)).num_batches();
-            let depth = run_policy(&sample, nt, &mut DepthPolicy::new()).num_batches();
-            if depth < agenda {
-                Ok(Box::new(DepthPolicy::new()))
-            } else {
-                Ok(Box::new(AgendaPolicy::new(nt)))
-            }
-        }
-        SystemMode::EdBatch => {
-            let dir = artifacts_dir.unwrap_or("artifacts");
-            let cfg = TrainConfig::default();
-            let (policy, _) =
-                super::policies::load_or_train(dir, workload, encoding, &cfg, seed)?;
-            Ok(Box::new(policy))
-        }
-    }
-}
-
 fn worker_loop(
     config: ServerConfig,
     rx: Receiver<Request>,
@@ -200,9 +163,12 @@ fn worker_loop(
         None => None,
     };
     let mut engine = match &registry {
-        Some(reg) => CellEngine::new(Backend::Pjrt(reg), config.hidden, config.seed),
-        None => CellEngine::new(Backend::Cpu, config.hidden, config.seed),
+        Some(reg) => CellEngine::new(Backend::Pjrt(reg), config.hidden, config.seed)?,
+        None => CellEngine::new(Backend::Cpu, config.hidden, config.seed)?,
     };
+    // graph-level state layout: ED-Batch plans the arena with the PQ tree,
+    // the DyNet baselines keep creation order + full gather/scatter
+    engine.memory_mode = config.mode.memory_mode();
     // apply the mode's in-cell memory/launch profile (same accounting the
     // Fig.6/Fig.8 harnesses use)
     let charges =
@@ -279,13 +245,14 @@ fn process_minibatch(
     let schedule = run_policy(&merged, workload.registry.num_types(), policy);
     let scheduling_s = t1.elapsed().as_secs_f64();
 
-    // -- execution ----------------------------------------------------------
-    let mut store = StateStore::new(merged.len());
+    // -- memory planning + execution ---------------------------------------
+    let mut store = ArenaStateStore::new();
     let report: ExecReport = engine.execute(&merged, &workload.registry, &schedule, &mut store)?;
 
     let breakdown = TimeBreakdown {
         construction_s,
         scheduling_s,
+        planning_s: report.planning_s,
         execution_s: report.exec_s,
     };
     metrics.record_minibatch(pending.len(), &breakdown, &report);
@@ -307,7 +274,7 @@ fn process_minibatch(
         };
         let sink_outputs: Vec<Vec<f32>> = (start..end)
             .filter(|&j| !has_consumer[j])
-            .map(|j| store.h[j].clone())
+            .map(|j| store.h(j).to_vec())
             .collect();
         let latency = req.submitted.elapsed();
         metrics.record_request(latency);
@@ -322,6 +289,7 @@ fn process_minibatch(
 #[cfg(test)]
 mod tests {
     use super::*;
+    use crate::util::rng::Rng;
 
     fn quick_config(mode: SystemMode) -> ServerConfig {
         ServerConfig {

@@ -1,0 +1,531 @@
+//! Execution backends for batched cell kernels — the trait the unified
+//! pipeline (`Graph → Schedule → MemoryPlan → ExecBackend`) dispatches
+//! through, extracted from the former match-on-enum inside the engine.
+//!
+//! * [`CpuBackend`] — reference implementation on [`super::cpu_kernels`];
+//!   numerics ground truth, artifact-free tests, and the `--no-pjrt` path.
+//! * [`PjrtBackend`] — AOT-compiled fused-cell artifacts through PJRT, the
+//!   production hot path. Weights are staged on device once per cell
+//!   (§Perf it.1); artifact arg layouts are validated against
+//!   [`cells::data_arg_count`] and [`weight_shapes`] at construction so a
+//!   stale `make artifacts` fails fast instead of mid-serve.
+//!
+//! Both backends generate identical per-(cell, hidden) weights via
+//! [`CellWeights`], so CPU/PJRT numerics can be cross-checked end to end.
+
+use anyhow::{anyhow, Result};
+use rustc_hash::FxHashMap;
+
+use crate::graph::cells;
+use crate::runtime::ArtifactRegistry;
+use crate::util::rng::Rng;
+
+use super::cpu_kernels as k;
+
+/// A batched cell executor. `data` buffers hold `bucket` lanes per data
+/// argument (zero-padded past the real lane count); outputs come back flat
+/// with `bucket` lanes each, in [`cells::out_widths`] order.
+pub trait ExecBackend {
+    fn name(&self) -> &'static str;
+
+    /// Split a `lanes`-sized batch of `cell` into executable bucket sizes
+    /// (ascending cursor order; a bucket may exceed the lanes it covers,
+    /// the engine zero-pads).
+    fn chunk_plan(&self, cell: &str, lanes: usize) -> Result<Vec<usize>>;
+
+    /// Execute one chunk of `bucket` lanes.
+    fn run_cell(&mut self, cell: &str, data: &[&[f32]], bucket: usize) -> Result<Vec<Vec<f32>>>;
+
+    /// Launch `n` minimal no-op kernels (the unfused-baseline launch
+    /// charge); returns how many were actually launched.
+    fn extra_launches(&mut self, n: usize) -> Result<usize> {
+        let _ = n;
+        Ok(0)
+    }
+}
+
+/// Weight tensor shapes per cell (leading dims row-major); the artifact
+/// weight args follow the data args in exactly this order.
+pub fn weight_shapes(cell: &str, h: usize) -> Vec<Vec<usize>> {
+    let nc = cells::NUM_CLASSES;
+    match cell {
+        "lstm" => vec![vec![h, 4 * h], vec![h, 4 * h], vec![4 * h]],
+        "gru" => vec![
+            vec![h, 2 * h],
+            vec![h, 2 * h],
+            vec![2 * h],
+            vec![h, h],
+            vec![h, h],
+            vec![h],
+        ],
+        "treelstm_internal" => vec![vec![h, 5 * h], vec![h, 5 * h], vec![5 * h]],
+        "treelstm_leaf" => vec![vec![h, 3 * h], vec![3 * h]],
+        "treegru_internal" => vec![
+            vec![h, 3 * h],
+            vec![h, 3 * h],
+            vec![3 * h],
+            vec![h, h],
+            vec![h, h],
+            vec![h],
+        ],
+        "treegru_leaf" => vec![vec![h, h], vec![h]],
+        "mv_cell" => vec![vec![2 * h, h], vec![h], vec![h, 2 * h], vec![h, h]],
+        "classifier" => vec![vec![h, nc], vec![nc]],
+        _ => vec![],
+    }
+}
+
+/// Deterministic per-(cell, hidden) weight store shared by both backends.
+pub struct CellWeights {
+    hidden: usize,
+    cache: FxHashMap<String, Vec<Vec<f32>>>,
+}
+
+impl CellWeights {
+    pub fn new(hidden: usize) -> CellWeights {
+        CellWeights {
+            hidden,
+            cache: FxHashMap::default(),
+        }
+    }
+
+    pub fn get(&mut self, cell: &str) -> &Vec<Vec<f32>> {
+        let h = self.hidden;
+        self.cache.entry(cell.to_string()).or_insert_with(|| {
+            // deterministic per (cell, hidden): both backends see the same
+            let mut rng = Rng::new(0xED0 ^ (h as u64) << 8 ^ cell.len() as u64);
+            let mut hasher: u64 = 0;
+            for b in cell.bytes() {
+                hasher = hasher.wrapping_mul(31).wrapping_add(b as u64);
+            }
+            let mut rng2 = Rng::new(rng.next_u64() ^ hasher);
+            weight_shapes(cell, h)
+                .into_iter()
+                .map(|shape| {
+                    let n: usize = shape.iter().product();
+                    let scale = 1.0 / (h as f32).sqrt();
+                    (0..n).map(|_| (rng2.f32() - 0.5) * 2.0 * scale).collect()
+                })
+                .collect()
+        })
+    }
+}
+
+// ---------------------------------------------------------------------
+// CPU reference backend
+// ---------------------------------------------------------------------
+
+pub struct CpuBackend {
+    hidden: usize,
+    weights: CellWeights,
+}
+
+impl CpuBackend {
+    pub fn new(hidden: usize) -> CpuBackend {
+        CpuBackend {
+            hidden,
+            weights: CellWeights::new(hidden),
+        }
+    }
+}
+
+impl ExecBackend for CpuBackend {
+    fn name(&self) -> &'static str {
+        "cpu"
+    }
+
+    fn chunk_plan(&self, _cell: &str, lanes: usize) -> Result<Vec<usize>> {
+        Ok(vec![lanes.max(1)])
+    }
+
+    fn run_cell(&mut self, cell: &str, data: &[&[f32]], bucket: usize) -> Result<Vec<Vec<f32>>> {
+        let h = self.hidden;
+        let b = bucket;
+        let nc = cells::NUM_CLASSES;
+        // no clone: the borrow lives for the match below only (hot path)
+        let w = self.weights.get(cell);
+        let out = match cell {
+            "lstm" => {
+                let gates = affine2(data[0], data[1], &w[0], &w[1], &w[2], b, h, 4 * h);
+                lstm_pointwise(&gates, data[2], b, h)
+            }
+            "gru" => {
+                let rz = affine2(data[0], data[1], &w[0], &w[1], &w[2], b, h, 2 * h);
+                let mut nx = vec![0.0; b * h];
+                k::matmul(data[0], &w[3], &mut nx, b, h, h);
+                let mut nxb = vec![0.0; b * h];
+                k::add_bias(&nx, &w[5], &mut nxb);
+                let mut nh = vec![0.0; b * h];
+                k::matmul(data[1], &w[4], &mut nh, b, h, h);
+                vec![gru_pointwise(&rz, &nxb, &nh, data[1], b, h)]
+            }
+            "treelstm_internal" => {
+                let gates = affine2(data[0], data[1], &w[0], &w[1], &w[2], b, h, 5 * h);
+                treelstm_pointwise(&gates, data[2], data[3], b, h)
+            }
+            "treelstm_leaf" => {
+                let mut g = vec![0.0; b * 3 * h];
+                k::matmul(data[0], &w[0], &mut g, b, h, 3 * h);
+                let mut gb = vec![0.0; b * 3 * h];
+                k::add_bias(&g, &w[1], &mut gb);
+                treelstm_leaf_pointwise(&gb, b, h)
+            }
+            "treegru_internal" => {
+                let rz = affine2(data[0], data[1], &w[0], &w[1], &w[2], b, h, 3 * h);
+                // candidate: tanh((r_l*h_l) @ w3 + (r_r*h_r) @ w4 + b5)
+                let mut rhl = vec![0.0; b * h];
+                let mut rhr = vec![0.0; b * h];
+                for i in 0..b {
+                    for j in 0..h {
+                        rhl[i * h + j] = sigm(rz[i * 3 * h + j]) * data[0][i * h + j];
+                        rhr[i * h + j] = sigm(rz[i * 3 * h + h + j]) * data[1][i * h + j];
+                    }
+                }
+                let mut n1 = vec![0.0; b * h];
+                k::matmul(&rhl, &w[3], &mut n1, b, h, h);
+                let mut n2 = vec![0.0; b * h];
+                k::matmul(&rhr, &w[4], &mut n2, b, h, h);
+                let mut h2 = vec![0.0; b * h];
+                for i in 0..b {
+                    for j in 0..h {
+                        let z = sigm(rz[i * 3 * h + 2 * h + j]);
+                        let n = (n1[i * h + j] + n2[i * h + j] + w[5][j]).tanh();
+                        let hbar = 0.5 * (data[0][i * h + j] + data[1][i * h + j]);
+                        h2[i * h + j] = (1.0 - z) * n + z * hbar;
+                    }
+                }
+                vec![h2]
+            }
+            "treegru_leaf" => {
+                let mut m = vec![0.0; b * h];
+                k::matmul(data[0], &w[0], &mut m, b, h, h);
+                let mut mb = vec![0.0; b * h];
+                k::add_bias(&m, &w[1], &mut mb);
+                let mut out = vec![0.0; b * h];
+                k::tanh(&mb, &mut out);
+                vec![out]
+            }
+            "mv_cell" => {
+                // cross_l[b] = M_r[b] h_l[b]; cross_r[b] = M_l[b] h_r[b]
+                let mut cat = vec![0.0; b * 2 * h];
+                for i in 0..b {
+                    for r in 0..h {
+                        let mut acc_l = 0.0;
+                        let mut acc_r = 0.0;
+                        for cidx in 0..h {
+                            acc_l += data[3][i * h * h + r * h + cidx] * data[0][i * h + cidx];
+                            acc_r += data[2][i * h * h + r * h + cidx] * data[1][i * h + cidx];
+                        }
+                        cat[i * 2 * h + r] = acc_l;
+                        cat[i * 2 * h + h + r] = acc_r;
+                    }
+                }
+                let mut hv = vec![0.0; b * h];
+                k::matmul(&cat, &w[0], &mut hv, b, 2 * h, h);
+                let mut hvb = vec![0.0; b * h];
+                k::add_bias(&hv, &w[1], &mut hvb);
+                let mut hout = vec![0.0; b * h];
+                k::tanh(&hvb, &mut hout);
+                // m' = w2[h,2h] @ [M_l; M_r] + w3
+                let mut mout = vec![0.0; b * h * h];
+                for i in 0..b {
+                    let mut stacked = vec![0.0; 2 * h * h];
+                    stacked[..h * h].copy_from_slice(&data[2][i * h * h..(i + 1) * h * h]);
+                    stacked[h * h..].copy_from_slice(&data[3][i * h * h..(i + 1) * h * h]);
+                    let mut mm = vec![0.0; h * h];
+                    k::matmul(&w[2], &stacked, &mut mm, h, 2 * h, h);
+                    for (o, (&a, &bv)) in mout[i * h * h..(i + 1) * h * h]
+                        .iter_mut()
+                        .zip(mm.iter().zip(w[3].iter()))
+                    {
+                        *o = a + bv;
+                    }
+                }
+                vec![hout, mout]
+            }
+            "classifier" => {
+                let mut l = vec![0.0; b * nc];
+                k::matmul(data[0], &w[0], &mut l, b, h, nc);
+                let mut lb = vec![0.0; b * nc];
+                k::add_bias(&l, &w[1], &mut lb);
+                vec![lb]
+            }
+            other => return Err(anyhow!("cpu backend: unknown cell {other}")),
+        };
+        Ok(out)
+    }
+}
+
+// ---------------------------------------------------------------------
+// PJRT backend
+// ---------------------------------------------------------------------
+
+pub struct PjrtBackend<'a> {
+    reg: &'a ArtifactRegistry,
+    hidden: usize,
+    weights: CellWeights,
+    /// device-staged weight buffers per cell (uploaded once; §Perf it.1)
+    weights_dev: FxHashMap<String, Vec<xla::PjRtBuffer>>,
+    noop_args: Option<Vec<Vec<f32>>>,
+}
+
+impl<'a> PjrtBackend<'a> {
+    /// Wrap a loaded registry, validating every compiled artifact for this
+    /// hidden size against the per-cell arg-layout convention
+    /// ([`cells::data_arg_count`] data args, then [`weight_shapes`]).
+    pub fn new(reg: &'a ArtifactRegistry, hidden: usize) -> Result<PjrtBackend<'a>> {
+        for c in reg.compiled() {
+            if c.key.hidden != hidden {
+                continue;
+            }
+            let cell = c.key.cell.as_str();
+            let dac = cells::data_arg_count(cell);
+            if dac == 0 {
+                return Err(anyhow!("artifact {}: unknown cell kind", c.key.name()));
+            }
+            let widths = cells::data_arg_widths(cell, hidden);
+            let wshapes = weight_shapes(cell, hidden);
+            let expected = dac + wshapes.len();
+            if c.arg_shapes.len() != expected {
+                return Err(anyhow!(
+                    "artifact {}: expected {expected} args ({dac} data + {} weights), got {}",
+                    c.key.name(),
+                    wshapes.len(),
+                    c.arg_shapes.len()
+                ));
+            }
+            for (i, w) in widths.iter().enumerate() {
+                let elems: usize = c.arg_shapes[i].iter().product();
+                if elems != c.key.batch * w {
+                    return Err(anyhow!(
+                        "artifact {}: data arg {i} has {elems} elems, expected {} (bucket {} x width {w})",
+                        c.key.name(),
+                        c.key.batch * w,
+                        c.key.batch
+                    ));
+                }
+            }
+            for (j, ws) in wshapes.iter().enumerate() {
+                if &c.arg_shapes[dac + j] != ws {
+                    return Err(anyhow!(
+                        "artifact {}: weight arg {j} shape {:?}, expected {ws:?}",
+                        c.key.name(),
+                        c.arg_shapes[dac + j]
+                    ));
+                }
+            }
+            let outs = cells::out_widths(cell, hidden).len();
+            if c.num_outputs != outs {
+                return Err(anyhow!(
+                    "artifact {}: {} outputs, expected {outs}",
+                    c.key.name(),
+                    c.num_outputs
+                ));
+            }
+        }
+        Ok(PjrtBackend {
+            reg,
+            hidden,
+            weights: CellWeights::new(hidden),
+            weights_dev: FxHashMap::default(),
+            noop_args: None,
+        })
+    }
+}
+
+impl ExecBackend for PjrtBackend<'_> {
+    fn name(&self) -> &'static str {
+        "pjrt"
+    }
+
+    fn chunk_plan(&self, cell: &str, lanes: usize) -> Result<Vec<usize>> {
+        self.reg
+            .chunk_plan(cell, self.hidden, lanes)
+            .ok_or_else(|| anyhow!("no artifact for {cell} h={}", self.hidden))
+    }
+
+    fn run_cell(&mut self, cell: &str, data: &[&[f32]], bucket: usize) -> Result<Vec<Vec<f32>>> {
+        let reg = self.reg;
+        let h = self.hidden;
+        let compiled = reg
+            .cell_for_batch(cell, h, bucket)
+            .ok_or_else(|| anyhow!("missing artifact {cell} h={h}"))?;
+        // stage weights on device once per cell (§Perf it.1: avoids
+        // re-uploading Θ(H²) tensors on every call)
+        if !self.weights_dev.contains_key(cell) {
+            let host = self.weights.get(cell).clone();
+            let dims = weight_shapes(cell, h);
+            let staged: Vec<(Vec<f32>, Vec<usize>)> = host.into_iter().zip(dims).collect();
+            let bufs = compiled.stage_weights(&staged)?;
+            self.weights_dev.insert(cell.to_string(), bufs);
+        }
+        compiled.execute_with_weights(data, &self.weights_dev[cell])
+    }
+
+    fn extra_launches(&mut self, n: usize) -> Result<usize> {
+        if n == 0 {
+            return Ok(0);
+        }
+        let reg = self.reg;
+        let Some(noop) = reg.cell_for_batch("classifier", self.hidden, 1) else {
+            return Ok(0);
+        };
+        if self.noop_args.is_none() {
+            self.noop_args = Some(
+                noop.arg_shapes
+                    .iter()
+                    .map(|s| vec![0.0f32; s.iter().product()])
+                    .collect(),
+            );
+        }
+        for _ in 0..n {
+            let _ = noop.execute(self.noop_args.as_ref().unwrap())?;
+        }
+        Ok(n)
+    }
+}
+
+// ---------------------------------------------------------------------
+// shared cell math (CPU reference)
+// ---------------------------------------------------------------------
+
+fn sigm(x: f32) -> f32 {
+    1.0 / (1.0 + (-x).exp())
+}
+
+#[allow(clippy::too_many_arguments)]
+fn affine2(
+    x: &[f32],
+    hvec: &[f32],
+    wx: &[f32],
+    wh: &[f32],
+    bias: &[f32],
+    b: usize,
+    h: usize,
+    n: usize,
+) -> Vec<f32> {
+    let mut g1 = vec![0.0; b * n];
+    k::matmul(x, wx, &mut g1, b, h, n);
+    let mut g2 = vec![0.0; b * n];
+    k::matmul(hvec, wh, &mut g2, b, h, n);
+    let mut s = vec![0.0; b * n];
+    k::add(&g1, &g2, &mut s);
+    let mut out = vec![0.0; b * n];
+    k::add_bias(&s, bias, &mut out);
+    out
+}
+
+fn gru_pointwise(
+    rz: &[f32],
+    nx: &[f32],
+    nh: &[f32],
+    hprev: &[f32],
+    b: usize,
+    h: usize,
+) -> Vec<f32> {
+    let mut out = vec![0.0; b * h];
+    for i in 0..b {
+        for j in 0..h {
+            let r = sigm(rz[i * 2 * h + j]);
+            let z = sigm(rz[i * 2 * h + h + j]);
+            let n = (nx[i * h + j] + r * nh[i * h + j]).tanh();
+            out[i * h + j] = (1.0 - z) * n + z * hprev[i * h + j];
+        }
+    }
+    out
+}
+
+fn lstm_pointwise(gates: &[f32], c: &[f32], b: usize, h: usize) -> Vec<Vec<f32>> {
+    let mut hn = vec![0.0; b * h];
+    let mut cn = vec![0.0; b * h];
+    for i in 0..b {
+        for j in 0..h {
+            let g = |k: usize| gates[i * 4 * h + k * h + j];
+            let cv = sigm(g(1)) * c[i * h + j] + sigm(g(0)) * g(2).tanh();
+            cn[i * h + j] = cv;
+            hn[i * h + j] = sigm(g(3)) * cv.tanh();
+        }
+    }
+    vec![hn, cn]
+}
+
+fn treelstm_pointwise(gates: &[f32], cl: &[f32], cr: &[f32], b: usize, h: usize) -> Vec<Vec<f32>> {
+    let mut hn = vec![0.0; b * h];
+    let mut cn = vec![0.0; b * h];
+    for i in 0..b {
+        for j in 0..h {
+            let g = |k: usize| gates[i * 5 * h + k * h + j];
+            let cv = sigm(g(1)) * cl[i * h + j] + sigm(g(2)) * cr[i * h + j]
+                + sigm(g(0)) * g(3).tanh();
+            cn[i * h + j] = cv;
+            hn[i * h + j] = sigm(g(4)) * cv.tanh();
+        }
+    }
+    vec![hn, cn]
+}
+
+fn treelstm_leaf_pointwise(gates: &[f32], b: usize, h: usize) -> Vec<Vec<f32>> {
+    let mut hn = vec![0.0; b * h];
+    let mut cn = vec![0.0; b * h];
+    for i in 0..b {
+        for j in 0..h {
+            let g = |k: usize| gates[i * 3 * h + k * h + j];
+            let cv = sigm(g(0)) * g(1).tanh();
+            cn[i * h + j] = cv;
+            hn[i * h + j] = sigm(g(2)) * cv.tanh();
+        }
+    }
+    vec![hn, cn]
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn cpu_backend_runs_every_cell() {
+        let h = 8;
+        let mut be = CpuBackend::new(h);
+        for cell in [
+            "lstm",
+            "gru",
+            "treelstm_internal",
+            "treelstm_leaf",
+            "treegru_internal",
+            "treegru_leaf",
+            "mv_cell",
+            "classifier",
+        ] {
+            let widths = cells::data_arg_widths(cell, h);
+            let b = 3;
+            let bufs: Vec<Vec<f32>> = widths
+                .iter()
+                .enumerate()
+                .map(|(i, w)| (0..b * w).map(|j| ((i + j) as f32 * 0.01).sin() * 0.2).collect())
+                .collect();
+            let data: Vec<&[f32]> = bufs.iter().map(|v| v.as_slice()).collect();
+            let outs = be.run_cell(cell, &data, b).unwrap();
+            let expect = cells::out_widths(cell, h);
+            assert_eq!(outs.len(), expect.len(), "{cell}");
+            for (o, w) in outs.iter().zip(&expect) {
+                assert_eq!(o.len(), b * w, "{cell}");
+                assert!(o.iter().all(|v| v.is_finite()), "{cell}");
+            }
+        }
+    }
+
+    #[test]
+    fn cpu_chunk_plan_is_single_exact_chunk() {
+        let mut be = CpuBackend::new(8);
+        assert_eq!(be.chunk_plan("lstm", 5).unwrap(), vec![5]);
+        assert_eq!(be.extra_launches(3).unwrap(), 0);
+    }
+
+    #[test]
+    fn weights_deterministic_per_cell() {
+        let mut a = CellWeights::new(16);
+        let mut b = CellWeights::new(16);
+        assert_eq!(a.get("lstm"), b.get("lstm"));
+        assert_eq!(a.get("lstm").len(), weight_shapes("lstm", 16).len());
+    }
+}

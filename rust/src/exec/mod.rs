@@ -1,13 +1,15 @@
 //! Batched executors.
 //!
 //! * [`cpu_kernels`] — primitive CPU kernels (the vendor-library stand-in).
-//! * [`SubgraphExec`] — executes a static subgraph's batched ops over a
-//!   flat arena under a [`MemoryPlan`], performing *real* gather/scatter
-//!   copies wherever the layout falls short (the Table-2 measurement).
-//!
-//! The graph-level engine (cells through PJRT artifacts) lives in
-//! [`crate::coordinator::engine`].
+//! * [`backend`] — the [`backend::ExecBackend`] trait plus its CPU
+//!   reference and PJRT implementations; the cell-granularity engine in
+//!   [`crate::coordinator::engine`] dispatches every batch through it.
+//! * [`SubgraphExec`] — executes a static subgraph's batched *primitive*
+//!   ops over a flat arena under a [`MemoryPlan`], performing real
+//!   gather/scatter copies wherever the layout falls short (the Table-2
+//!   measurement and the source of the per-cell in-cell copy charges).
 
+pub mod backend;
 pub mod cpu_kernels;
 
 use std::time::Instant;

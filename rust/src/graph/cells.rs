@@ -1,0 +1,191 @@
+//! Per-cell operand conventions — the contract between the workload
+//! generators (which wire node `preds`), the memory planner (which turns
+//! operands into adjacency constraints), and the execution backends (which
+//! consume staged operand buffers).
+//!
+//! Every batched cell kernel takes `data_arg_count(cell)` leading per-lane
+//! data arguments (widths from [`data_arg_widths`], per-lane sourcing rules
+//! from [`arg_semantics`]) followed by the shared weight tensors, and
+//! produces [`out_widths`] outputs per lane (h, plus c/M for two-state
+//! cells). `exec::backend` validates compiled PJRT artifacts against this
+//! table at engine construction.
+
+use super::NodeId;
+use crate::util::rng::Rng;
+
+/// Classifier/tagger label-space width (matches python model.NUM_CLASSES).
+pub const NUM_CLASSES: usize = 32;
+
+/// Deterministic near-identity MV matrix for nodes without a real M
+/// (sources / degenerate children): written into `buf` (`h * h` elements).
+/// Single source of truth — the arena materialization at source execution
+/// and the gather fallback must generate bit-identical values.
+pub fn near_identity_matrix_into(buf: &mut [f32], h: usize, node: NodeId) {
+    let mut rng = Rng::new(0x33AA ^ node.0 as u64);
+    for r in 0..h {
+        for c in 0..h {
+            let eye = if r == c { 1.0 } else { 0.0 };
+            buf[r * h + c] = eye + (rng.f32() - 0.5) * 0.02;
+        }
+    }
+}
+
+/// How many leading artifact args are per-lane data (rest are weights).
+pub fn data_arg_count(cell: &str) -> usize {
+    match cell {
+        "lstm" => 3,              // x, h, c
+        "gru" => 2,               // x, h
+        "treelstm_internal" => 4, // h_l, h_r, c_l, c_r
+        "treelstm_leaf" => 1,     // x
+        "treegru_internal" => 2,  // h_l, h_r
+        "treegru_leaf" => 1,      // x
+        "mv_cell" => 4,           // h_l, h_r, m_l, m_r
+        "classifier" => 1,        // h
+        _ => 0,
+    }
+}
+
+/// Per-lane element width of each data argument.
+pub fn data_arg_widths(cell: &str, h: usize) -> Vec<usize> {
+    match cell {
+        "lstm" => vec![h, h, h],
+        "gru" => vec![h, h],
+        "treelstm_internal" => vec![h, h, h, h],
+        "treelstm_leaf" => vec![h],
+        "treegru_internal" => vec![h, h],
+        "treegru_leaf" => vec![h],
+        "mv_cell" => vec![h, h, h * h, h * h],
+        "classifier" => vec![h],
+        _ => vec![],
+    }
+}
+
+/// Per-lane element widths of the kernel outputs: h first, then the second
+/// state tensor (c, or the MV matrix M) when the cell has one.
+pub fn out_widths(cell: &str, h: usize) -> Vec<usize> {
+    match cell {
+        "lstm" => vec![h, h],
+        "gru" => vec![h],
+        "treelstm_internal" => vec![h, h],
+        "treelstm_leaf" => vec![h, h],
+        "treegru_internal" => vec![h],
+        "treegru_leaf" => vec![h],
+        "mv_cell" => vec![h, h * h],
+        "classifier" => vec![NUM_CLASSES],
+        _ => vec![],
+    }
+}
+
+/// How one data argument sources its per-lane value from a node's preds.
+///
+/// `Child*` variants index through [`two_children`]; the `Sum*` variants
+/// accumulate (DyNet-style implicit add), which is only a 1:1 copy — and
+/// therefore memory-plannable — when the pred list has the canonical arity
+/// (see `memory::graph_plan`).
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum ArgSemantics {
+    /// first pred's h (the x-provider); zeros when there are no preds
+    XFirst,
+    /// sum over `preds[1..]` h states (zeros when none)
+    SumStateH,
+    /// sum over `preds[1..]` c states (zeros when none)
+    SumStateC,
+    /// left/right child h via [`two_children`]
+    ChildH(u8),
+    /// left/right child c via [`two_children`]
+    ChildC(u8),
+    /// left/right child MV matrix (the child's second state tensor);
+    /// sources without one get a deterministic near-identity matrix
+    ChildM(u8),
+    /// sum over all preds' h (classifier heads)
+    SumAllH,
+}
+
+/// The data-argument sourcing rules per cell, aligned with
+/// [`data_arg_widths`].
+pub fn arg_semantics(cell: &str) -> &'static [ArgSemantics] {
+    use ArgSemantics::*;
+    match cell {
+        "lstm" => &[XFirst, SumStateH, SumStateC],
+        "gru" => &[XFirst, SumStateH],
+        "treelstm_internal" => &[ChildH(0), ChildH(1), ChildC(0), ChildC(1)],
+        "treelstm_leaf" => &[XFirst],
+        "treegru_internal" => &[ChildH(0), ChildH(1)],
+        "treegru_leaf" => &[XFirst],
+        "mv_cell" => &[ChildH(0), ChildH(1), ChildM(0), ChildM(1)],
+        "classifier" => &[SumAllH],
+        _ => &[],
+    }
+}
+
+/// Resolve a binary cell's (left, right) children from its pred list,
+/// duplicating a single pred and defaulting to node 0 when empty (the
+/// executor's long-standing convention for degenerate inputs).
+pub fn two_children(preds: &[NodeId]) -> (NodeId, NodeId) {
+    match preds.len() {
+        0 => (NodeId(0), NodeId(0)),
+        1 => (preds[0], preds[0]),
+        _ => (preds[0], preds[1]),
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::graph::CellKind;
+
+    const CELLS: [&str; 8] = [
+        "lstm",
+        "gru",
+        "treelstm_internal",
+        "treelstm_leaf",
+        "treegru_internal",
+        "treegru_leaf",
+        "mv_cell",
+        "classifier",
+    ];
+
+    #[test]
+    fn arg_tables_are_consistent() {
+        for cell in CELLS {
+            assert_eq!(
+                data_arg_count(cell),
+                data_arg_widths(cell, 16).len(),
+                "{cell}: count vs widths"
+            );
+            assert_eq!(
+                data_arg_count(cell),
+                arg_semantics(cell).len(),
+                "{cell}: count vs semantics"
+            );
+            assert!(!out_widths(cell, 16).is_empty(), "{cell}: outputs");
+        }
+    }
+
+    #[test]
+    fn every_artifact_cell_has_a_spec() {
+        for kind in [
+            CellKind::Lstm,
+            CellKind::Gru,
+            CellKind::TreeLstmInternal,
+            CellKind::TreeLstmLeaf,
+            CellKind::TreeGruInternal,
+            CellKind::TreeGruLeaf,
+            CellKind::MvCell,
+            CellKind::Classifier,
+        ] {
+            let name = kind.artifact_name().unwrap();
+            assert!(data_arg_count(name) > 0, "{name}");
+        }
+    }
+
+    #[test]
+    fn two_children_conventions() {
+        let (l, r) = two_children(&[]);
+        assert_eq!((l, r), (NodeId(0), NodeId(0)));
+        let (l, r) = two_children(&[NodeId(3)]);
+        assert_eq!((l, r), (NodeId(3), NodeId(3)));
+        let (l, r) = two_children(&[NodeId(3), NodeId(5), NodeId(9)]);
+        assert_eq!((l, r), (NodeId(3), NodeId(5)));
+    }
+}

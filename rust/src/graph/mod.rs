@@ -7,6 +7,7 @@
 //! (Cavs/ED-Batch style: one node = one LSTM cell application) but the same
 //! structure hosts primitive-op granularity for the Vanilla-DyNet baseline.
 
+pub mod cells;
 pub mod frontier;
 
 use rustc_hash::FxHashMap;

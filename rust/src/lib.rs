@@ -5,10 +5,23 @@
 //! (ICML 2023).
 //!
 //! Layering (see DESIGN.md):
-//! * **Layer 3 (this crate)** — the dynamic-batching coordinator: dataflow
-//!   graphs, FSM/depth/agenda batching policies, tabular-Q-learning policy
-//!   training, PQ-tree memory planning, arena executor, PJRT runtime and
-//!   the serving front-end.
+//! * **Layer 3 (this crate)** — the dynamic-batching coordinator, built
+//!   around one pipeline: `Graph → Schedule → MemoryPlan → ExecBackend`.
+//!   - [`graph`] — the dataflow substrate plus the per-cell operand
+//!     conventions ([`graph::cells`]) every other layer keys off,
+//!   - [`batching`] — FSM/depth/agenda batching policies producing the
+//!     [`batching::Schedule`] (learned via [`rl`]),
+//!   - [`memory`] — the PQ-tree planner ([`pqtree`], `memory::planner`)
+//!     and the graph-level arena plan (`memory::graph_plan`) that brings
+//!     it into the serving hot path,
+//!   - [`exec`] — the [`exec::backend::ExecBackend`] trait with CPU
+//!     reference and PJRT implementations, primitive CPU kernels, and the
+//!     static-subgraph executor behind Table 2,
+//!   - [`coordinator`] — the cell engine executing schedules over the
+//!     planned arena, the thread-based serving front-end, and metrics,
+//!   - [`runtime`] — PJRT artifact loading/compilation,
+//!   - [`workloads`], [`subgraph`], [`benchsuite`] — the paper's
+//!     evaluation surface.
 //! * **Layer 2 (python/compile/model.py)** — JAX cell definitions, lowered
 //!   AOT to `artifacts/*.hlo.txt`.
 //! * **Layer 1 (python/compile/kernels/)** — Pallas kernels for the fused

@@ -11,9 +11,11 @@ use anyhow::{anyhow, Result};
 
 use ed_batch::batching::agenda::AgendaPolicy;
 use ed_batch::batching::depth::DepthPolicy;
-use ed_batch::batching::fsm::Encoding;
+use ed_batch::batching::fsm::{Encoding, FsmPolicy};
 use ed_batch::batching::oracle::SufficientConditionPolicy;
 use ed_batch::batching::run_policy;
+use ed_batch::memory::graph_plan::GraphMemoryPlan;
+use ed_batch::memory::MemoryMode;
 use ed_batch::benchsuite::{self, BenchOpts};
 use ed_batch::coordinator::server::{Server, ServerConfig};
 use ed_batch::coordinator::SystemMode;
@@ -156,20 +158,28 @@ fn serve(args: &Args) -> Result<()> {
     }
     let snap = server.metrics.snapshot();
     println!(
-        "done: {} requests, {:.1} inst/s, p50 {:.2}ms p99 {:.2}ms | batches {}, kernels {}, memcpy {:.1} MB, padded lanes {}",
+        "done: {} requests, {:.1} inst/s, p50 {:.2}ms p99 {:.2}ms | batches {}, kernels {}, padded lanes {}",
         snap.requests,
         snap.throughput(),
         snap.latency_p50_s * 1e3,
         snap.latency_p99_s * 1e3,
         snap.batches_executed,
         snap.kernel_calls,
-        snap.memcpy_elems as f64 * 4.0 / 1e6,
         snap.padded_lanes,
     );
     println!(
-        "time decomposition: construction {:.1}ms scheduling {:.1}ms execution {:.1}ms",
+        "memory: memcpy {:.2} MB ({:.1} kB/req), copies avoided {:.2} MB ({:.1} kB/req, {:.0}% of baseline)",
+        snap.memcpy_elems as f64 * 4.0 / 1e6,
+        snap.memcpy_elems_per_request() * 4.0 / 1e3,
+        snap.copies_avoided_elems as f64 * 4.0 / 1e6,
+        snap.copies_avoided_per_request() * 4.0 / 1e3,
+        snap.copies_avoided_frac() * 100.0,
+    );
+    println!(
+        "time decomposition: construction {:.1}ms scheduling {:.1}ms planning {:.1}ms execution {:.1}ms",
         snap.breakdown.construction_s * 1e3,
         snap.breakdown.scheduling_s * 1e3,
+        snap.breakdown.planning_s * 1e3,
         snap.breakdown.execution_s * 1e3
     );
     let _ = w;
@@ -189,8 +199,9 @@ fn train_policy(args: &Args) -> Result<()> {
     let dir = args.get_or("artifacts", "artifacts");
     let path = ed_batch::coordinator::policies::policy_path(dir, kind, encoding);
     let _ = std::fs::remove_file(&path); // force retrain
+    let seed = args.u64("seed", 7);
     let (policy, stats) =
-        ed_batch::coordinator::policies::load_or_train(dir, &w, encoding, &cfg, args.u64("seed", 7))?;
+        ed_batch::coordinator::policies::load_or_train(dir, &w, encoding, &cfg, seed)?;
     let stats = stats.expect("trained");
     println!(
         "trained {} ({}): {} iters in {:.3}s, {} states, greedy {} batches (lower bound {}), saved to {path}",
@@ -238,6 +249,21 @@ fn inspect(args: &Args) -> Result<()> {
     println!(
         "sc-heur: {} batches",
         run_policy(&g, nt, &mut SufficientConditionPolicy).num_batches()
+    );
+    // memory-plan ablation of the FSM schedule through the unified
+    // pipeline: what the PQ-tree arena saves over DyNet allocation
+    let schedule = run_policy(&g, nt, &mut FsmPolicy::new(Encoding::Sort));
+    let planned = GraphMemoryPlan::build(&g, &w.registry, &schedule, hidden, MemoryMode::Planned);
+    let kb = |elems: usize| elems as f64 * 4.0 / 1024.0;
+    println!(
+        "fsm schedule: {} batches; memory plan: baseline memcpy {:.1} kB -> planned {:.1} kB \
+         ({:.0}% avoided, {} constraints dropped)",
+        schedule.num_batches(),
+        kb(planned.baseline_memcpy_elems),
+        kb(planned.predicted_memcpy_elems),
+        100.0 * planned.predicted_copies_avoided() as f64
+            / planned.baseline_memcpy_elems.max(1) as f64,
+        planned.dropped_constraints,
     );
     Ok(())
 }

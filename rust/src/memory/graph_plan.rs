@@ -1,0 +1,581 @@
+//! Graph-level memory planning — the piece that brings the PQ-tree planner
+//! (paper §3) into the *serving* hot path.
+//!
+//! Given a scheduled graph (the FSM policy's batch type-sequence over a
+//! merged mini-batch), every node's output state becomes a pair of arena
+//! variables — `h_var(i)` and, for two-state cells, `c_var(i)` — and every
+//! cell batch becomes a [`BatchOp`] whose operands are the per-lane state
+//! vars resolved through [`cells::arg_semantics`]. The PQ-tree planner then
+//! lays the arena out so batched operands are contiguous and mutually
+//! aligned: those operands execute as zero-copy views, and only the
+//! remainder pays the counted gather/scatter DyNet-style batching always
+//! pays. [`MemoryMode::Unplanned`] keeps the same pipeline but forces the
+//! DyNet layout + full gather/scatter, which is what serving metrics report
+//! copies-avoided against.
+//!
+//! Operands whose semantics are not a 1:1 per-lane copy (multi-pred state
+//! sums in lattices, dual-input classifier heads, width mismatches) are
+//! excluded from the optimization set — exactly the paper's treatment of
+//! infeasible constraints — and always gather.
+
+use rustc_hash::FxHashMap;
+
+use crate::batching::Schedule;
+use crate::graph::cells::{self, ArgSemantics};
+use crate::graph::{CellKind, Graph, TypeRegistry};
+
+use super::planner::pq_plan;
+use super::{access_plan, evaluate_layout, BatchOp, MemoryMode, MemoryPlan, OperandAccess, Var};
+
+/// Arena variable holding node `i`'s primary (h) output.
+#[inline]
+pub fn h_var(i: usize) -> Var {
+    (2 * i) as Var
+}
+
+/// Arena variable holding node `i`'s second state tensor (c, or the MV
+/// matrix M; sources feeding MV cells get a materialized matrix here).
+#[inline]
+pub fn c_var(i: usize) -> Var {
+    (2 * i + 1) as Var
+}
+
+/// How the executor accesses one data argument of a batch chunk.
+#[derive(Clone, Copy, Debug)]
+pub enum ArgAccess {
+    /// contiguous + aligned under the plan: zero-copy view from `base`
+    View { base: usize },
+    /// per-lane gather; `planned` marks operands inside the planner's
+    /// optimization set (their measured copies must match the static
+    /// prediction — asserted in engine tests)
+    Gather { planned: bool },
+}
+
+/// How the executor writes one output tensor of a batch chunk.
+#[derive(Clone, Copy, Debug)]
+pub enum DstAccess {
+    /// contiguous in lane order: the kernel result lands in place
+    Direct { base: usize },
+    /// per-lane scatter (counted)
+    Scatter { planned: bool },
+}
+
+/// Resolved access plan for one schedule batch.
+#[derive(Clone, Debug)]
+pub struct BatchAccess {
+    /// lane indices in execution order — the plan's common operand order
+    /// (identity when unplanned or when the dst block is not contiguous)
+    pub exec_order: Vec<u32>,
+    /// per data argument, aligned with [`cells::arg_semantics`]
+    pub args: Vec<ArgAccess>,
+    pub dst_h: DstAccess,
+    pub dst_c: Option<DstAccess>,
+}
+
+/// The full memory plan for one (graph, schedule) pair.
+#[derive(Clone, Debug)]
+pub struct GraphMemoryPlan {
+    pub mode: MemoryMode,
+    pub plan: MemoryPlan,
+    /// element size per arena var (2 per node; 0 = unused slot)
+    pub sizes: Vec<usize>,
+    /// per node: the c-slot holds a *materialized* near-identity matrix
+    /// for MV consumption (sources). The legacy engine stored no c for
+    /// these nodes, so only `ChildM` reads may observe the slot — state
+    /// reads (`SumStateC`/`ChildC`) must see an empty state instead.
+    pub synthetic_c: Vec<bool>,
+    /// per schedule batch; None for Source/Reduce batches (they execute
+    /// per-node straight into the arena)
+    pub batches: Vec<Option<BatchAccess>>,
+    /// static prediction of gather/scatter volume on plannable operands
+    /// under this layout (what the executor must measure on them)
+    pub predicted_memcpy_elems: usize,
+    /// the same operands' total volume when every one is gathered — the
+    /// DyNet baseline that copies-avoided is reported against
+    pub baseline_memcpy_elems: usize,
+    /// planner constraints dropped as infeasible (0 when unplanned)
+    pub dropped_constraints: usize,
+}
+
+impl GraphMemoryPlan {
+    /// Plan `schedule` over `graph`. The graph must be frozen and the
+    /// schedule a valid execution of it.
+    pub fn build(
+        graph: &Graph,
+        types: &TypeRegistry,
+        schedule: &Schedule,
+        hidden: usize,
+        mode: MemoryMode,
+    ) -> GraphMemoryPlan {
+        let n = graph.len();
+        let h = hidden;
+
+        // -- arena var sizes --------------------------------------------
+        let mut sizes = vec![0usize; 2 * n];
+        let mut synthetic_c = vec![false; n];
+        let mut need_m = vec![false; n];
+        for node in &graph.nodes {
+            if types.info(node.op).cell == CellKind::MvCell {
+                let (l, r) = cells::two_children(&node.preds);
+                need_m[l.idx()] = true;
+                need_m[r.idx()] = true;
+            }
+        }
+        for (i, node) in graph.nodes.iter().enumerate() {
+            let info = types.info(node.op);
+            match info.cell {
+                CellKind::Source => {
+                    sizes[2 * i] = h;
+                    // sources consumed by an MV cell carry a materialized
+                    // near-identity matrix (legacy generated it per read)
+                    if need_m[i] {
+                        sizes[2 * i + 1] = h * h;
+                        synthetic_c[i] = true;
+                    }
+                }
+                CellKind::Reduce => sizes[2 * i] = info.out_elems,
+                kind => {
+                    let cell = kind.artifact_name().expect("artifact cell kind");
+                    let ow = cells::out_widths(cell, h);
+                    sizes[2 * i] = ow[0];
+                    if ow.len() > 1 {
+                        sizes[2 * i + 1] = ow[1];
+                    }
+                }
+            }
+        }
+
+        // -- plannable operand structure per batch ----------------------
+        let mut ops: Vec<BatchOp> = Vec::new();
+        // per batch: (op index, arg idx -> op.srcs position, c-out position)
+        type Meta = (usize, Vec<Option<usize>>, Option<usize>);
+        let mut meta: Vec<Option<Meta>> = Vec::with_capacity(schedule.batches.len());
+        for batch in &schedule.batches {
+            let info = types.info(batch.op);
+            let Some(cell) = info.cell.artifact_name() else {
+                meta.push(None);
+                continue;
+            };
+            let sems = cells::arg_semantics(cell);
+            let widths = cells::data_arg_widths(cell, h);
+            let ow = cells::out_widths(cell, h);
+            let mut srcs: Vec<Vec<Var>> = Vec::new();
+            let mut arg_to_src: Vec<Option<usize>> = vec![None; sems.len()];
+            for (k, sem) in sems.iter().enumerate() {
+                let simple =
+                    simple_operand(graph, batch, *sem, widths[k], &sizes, &synthetic_c);
+                if let Some(vars) = simple {
+                    arg_to_src[k] = Some(srcs.len());
+                    srcs.push(vars);
+                }
+            }
+            // the second output (c/M) is an additional aligned operand: it
+            // must be contiguous in the same lane order as the h result
+            let c_src = if ow.len() > 1 {
+                srcs.push(batch.nodes.iter().map(|nd| c_var(nd.idx())).collect());
+                Some(srcs.len() - 1)
+            } else {
+                None
+            };
+            let dst: Vec<Var> = batch.nodes.iter().map(|nd| h_var(nd.idx())).collect();
+            meta.push(Some((ops.len(), arg_to_src, c_src)));
+            ops.push(BatchOp {
+                name: format!("{cell}:{}", ops.len()),
+                srcs,
+                dst,
+            });
+        }
+
+        // -- layout ------------------------------------------------------
+        let (plan, dropped_constraints) = match mode {
+            MemoryMode::Unplanned => (MemoryPlan::creation_order(&sizes), 0),
+            MemoryMode::Planned => {
+                if sizes.is_empty() || ops.is_empty() {
+                    (MemoryPlan::creation_order(&sizes), 0)
+                } else {
+                    let out = pq_plan(&ops, &sizes);
+                    let dropped =
+                        out.dropped_adjacency + out.dropped_broadcast + out.dropped_orders;
+                    (out.plan, dropped)
+                }
+            }
+        };
+
+        // -- static predictions -----------------------------------------
+        let baseline_memcpy_elems: usize = ops
+            .iter()
+            .map(|op| {
+                op.operands()
+                    .map(|o| o.iter().map(|&v| sizes[v as usize]).sum::<usize>())
+                    .sum::<usize>()
+            })
+            .sum();
+        let predicted_memcpy_elems = match mode {
+            MemoryMode::Planned => evaluate_layout(&plan, &sizes, &ops).memcpy_elems,
+            MemoryMode::Unplanned => baseline_memcpy_elems,
+        };
+
+        // -- per-batch access plans -------------------------------------
+        let mut batches = Vec::with_capacity(schedule.batches.len());
+        for m in &meta {
+            let Some((op_idx, arg_to_src, c_src)) = m else {
+                batches.push(None);
+                continue;
+            };
+            let (op_idx, c_src) = (*op_idx, *c_src);
+            let op = &ops[op_idx];
+            let lanes = op.dst.len();
+            let access = match mode {
+                MemoryMode::Unplanned => BatchAccess {
+                    exec_order: (0..lanes as u32).collect(),
+                    args: arg_to_src
+                        .iter()
+                        .map(|s| ArgAccess::Gather { planned: s.is_some() })
+                        .collect(),
+                    dst_h: DstAccess::Scatter { planned: true },
+                    dst_c: c_src.map(|_| DstAccess::Scatter { planned: true }),
+                },
+                MemoryMode::Planned => {
+                    let ap = access_plan(&plan, &sizes, op);
+                    let args = arg_to_src
+                        .iter()
+                        .map(|s| match s {
+                            None => ArgAccess::Gather { planned: false },
+                            Some(j) => match &ap.src_access[*j] {
+                                OperandAccess::Direct { base } => ArgAccess::View { base: *base },
+                                OperandAccess::Indirect { .. } => {
+                                    ArgAccess::Gather { planned: true }
+                                }
+                            },
+                        })
+                        .collect();
+                    let dst_h = match &ap.dst_access {
+                        OperandAccess::Direct { base } => DstAccess::Direct { base: *base },
+                        OperandAccess::Indirect { .. } => DstAccess::Scatter { planned: true },
+                    };
+                    let dst_c = c_src.map(|j| match &ap.src_access[j] {
+                        OperandAccess::Direct { base } => DstAccess::Direct { base: *base },
+                        OperandAccess::Indirect { .. } => DstAccess::Scatter { planned: true },
+                    });
+                    BatchAccess {
+                        exec_order: ap.lane_order.iter().map(|&l| l as u32).collect(),
+                        args,
+                        dst_h,
+                        dst_c,
+                    }
+                }
+            };
+            batches.push(Some(access));
+        }
+
+        GraphMemoryPlan {
+            mode,
+            plan,
+            sizes,
+            synthetic_c,
+            batches,
+            predicted_memcpy_elems,
+            baseline_memcpy_elems,
+            dropped_constraints,
+        }
+    }
+
+    /// Element offset + size of node `i`'s h state.
+    #[inline]
+    pub fn h_slot(&self, i: usize) -> (usize, usize) {
+        (self.plan.offset(h_var(i)), self.sizes[2 * i])
+    }
+
+    /// Element offset + size of node `i`'s second state tensor.
+    #[inline]
+    pub fn c_slot(&self, i: usize) -> (usize, usize) {
+        (self.plan.offset(c_var(i)), self.sizes[2 * i + 1])
+    }
+
+    /// Volume the plan moves through zero-copy views instead of gathers
+    /// (how much of the DyNet baseline it eliminates, statically).
+    pub fn predicted_copies_avoided(&self) -> usize {
+        self.baseline_memcpy_elems - self.predicted_memcpy_elems
+    }
+}
+
+/// Try to express one data argument as a 1:1 per-lane var copy; `None`
+/// means the operand needs legacy gather semantics (sums, zero states,
+/// width mismatches) and stays outside the optimization set.
+fn simple_operand(
+    graph: &Graph,
+    batch: &crate::batching::Batch,
+    sem: ArgSemantics,
+    width: usize,
+    sizes: &[usize],
+    synthetic_c: &[bool],
+) -> Option<Vec<Var>> {
+    let mut vars = Vec::with_capacity(batch.nodes.len());
+    for &nd in &batch.nodes {
+        let preds = &graph.node(nd).preds;
+        let var = match sem {
+            ArgSemantics::XFirst => h_var(preds.first()?.idx()),
+            ArgSemantics::SumStateH => {
+                if preds.len() != 2 {
+                    return None;
+                }
+                h_var(preds[1].idx())
+            }
+            ArgSemantics::SumStateC => {
+                // synthetic matrix slots are invisible to state reads
+                // (the legacy engine stored no c for those nodes)
+                if preds.len() != 2 || synthetic_c[preds[1].idx()] {
+                    return None;
+                }
+                c_var(preds[1].idx())
+            }
+            ArgSemantics::ChildH(i) => {
+                let (l, r) = cells::two_children(preds);
+                let child = if i == 0 { l } else { r };
+                h_var(child.idx())
+            }
+            ArgSemantics::ChildC(i) => {
+                let (l, r) = cells::two_children(preds);
+                let child = if i == 0 { l } else { r };
+                if synthetic_c[child.idx()] {
+                    return None;
+                }
+                c_var(child.idx())
+            }
+            ArgSemantics::ChildM(i) => {
+                let (l, r) = cells::two_children(preds);
+                let child = if i == 0 { l } else { r };
+                c_var(child.idx())
+            }
+            ArgSemantics::SumAllH => {
+                if preds.len() != 1 {
+                    return None;
+                }
+                h_var(preds[0].idx())
+            }
+        };
+        if sizes[var as usize] != width {
+            return None;
+        }
+        vars.push(var);
+    }
+    Some(vars)
+}
+
+/// Cache key for plans: everything [`GraphMemoryPlan::build`] depends on.
+/// Two identical merged mini-batch topologies under the same schedule map
+/// to the same plan (serving reuses it without re-running the planner).
+pub fn fingerprint(
+    graph: &Graph,
+    types: &TypeRegistry,
+    schedule: &Schedule,
+    hidden: usize,
+    mode: MemoryMode,
+) -> u64 {
+    const FNV_PRIME: u64 = 0x100000001b3;
+    let mut acc = 0xcbf29ce484222325u64;
+    let mut mix = |v: u64| {
+        acc ^= v;
+        acc = acc.wrapping_mul(FNV_PRIME);
+    };
+    mix(hidden as u64);
+    mix(match mode {
+        MemoryMode::Planned => 1,
+        MemoryMode::Unplanned => 2,
+    });
+    mix(types.num_types() as u64);
+    // the type registry's semantics feed var sizing and operand
+    // classification — two registries with identical type ids but
+    // different cells must never share a plan
+    for t in types.types() {
+        let info = types.info(t);
+        mix(cell_tag(info.cell));
+        mix(info.out_elems as u64);
+    }
+    mix(graph.len() as u64);
+    for node in &graph.nodes {
+        mix(node.op.0 as u64);
+        mix(node.preds.len() as u64);
+        for p in &node.preds {
+            mix(p.0 as u64);
+        }
+    }
+    mix(schedule.batches.len() as u64);
+    for b in &schedule.batches {
+        mix(b.op.0 as u64);
+        mix(b.nodes.len() as u64);
+        for nd in &b.nodes {
+            mix(nd.0 as u64);
+        }
+    }
+    acc
+}
+
+fn cell_tag(kind: crate::graph::CellKind) -> u64 {
+    use crate::graph::CellKind::*;
+    match kind {
+        Lstm => 1,
+        Gru => 2,
+        TreeLstmInternal => 3,
+        TreeLstmLeaf => 4,
+        TreeGruInternal => 5,
+        TreeGruLeaf => 6,
+        MvCell => 7,
+        Classifier => 8,
+        Reduce => 9,
+        Source => 10,
+    }
+}
+
+/// A small bounded plan cache (fingerprint -> plan). Plans are only
+/// reusable for *identical* merged topologies — the layout depends on the
+/// exact operand structure, not just the batch type-sequence — so the
+/// cache pays off for repeated request shapes, benches, and re-execution;
+/// novel mini-batch topologies plan fresh on the hot path (the `planning`
+/// column in the time decomposition makes that cost visible).
+#[derive(Default)]
+pub struct PlanCache {
+    plans: FxHashMap<u64, std::rc::Rc<GraphMemoryPlan>>,
+}
+
+impl PlanCache {
+    const MAX_ENTRIES: usize = 256;
+
+    pub fn new() -> PlanCache {
+        PlanCache::default()
+    }
+
+    pub fn get_or_build(
+        &mut self,
+        graph: &Graph,
+        types: &TypeRegistry,
+        schedule: &Schedule,
+        hidden: usize,
+        mode: MemoryMode,
+    ) -> std::rc::Rc<GraphMemoryPlan> {
+        let key = fingerprint(graph, types, schedule, hidden, mode);
+        if let Some(p) = self.plans.get(&key) {
+            // 64-bit collision backstop: a hit must at least describe a
+            // graph of this shape; rebuild (overwriting) otherwise
+            if p.sizes.len() == 2 * graph.len() && p.batches.len() == schedule.batches.len() {
+                return p.clone();
+            }
+        }
+        if self.plans.len() >= Self::MAX_ENTRIES {
+            self.plans.clear();
+        }
+        let plan = std::rc::Rc::new(GraphMemoryPlan::build(graph, types, schedule, hidden, mode));
+        self.plans.insert(key, plan.clone());
+        plan
+    }
+
+    pub fn len(&self) -> usize {
+        self.plans.len()
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.plans.is_empty()
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::batching::fsm::{Encoding, FsmPolicy};
+    use crate::batching::run_policy;
+    use crate::util::rng::Rng;
+    use crate::workloads::{Workload, WorkloadKind, ALL_WORKLOADS};
+
+    fn planned_pair(kind: WorkloadKind) -> (GraphMemoryPlan, GraphMemoryPlan) {
+        let w = Workload::new(kind, 16);
+        let mut rng = Rng::new(4);
+        let mut g = w.gen_batch(3, &mut rng);
+        g.freeze();
+        let s = run_policy(&g, w.registry.num_types(), &mut FsmPolicy::new(Encoding::Sort));
+        let planned = GraphMemoryPlan::build(&g, &w.registry, &s, 16, MemoryMode::Planned);
+        let unplanned = GraphMemoryPlan::build(&g, &w.registry, &s, 16, MemoryMode::Unplanned);
+        (planned, unplanned)
+    }
+
+    #[test]
+    fn plan_covers_every_var_and_batch() {
+        for kind in ALL_WORKLOADS {
+            let (p, u) = planned_pair(kind);
+            assert_eq!(p.sizes.len(), u.sizes.len(), "{kind:?}");
+            assert_eq!(p.batches.len(), u.batches.len(), "{kind:?}");
+            // every var has a valid in-bounds slot
+            let total: usize = p.sizes.iter().sum();
+            assert_eq!(p.plan.total_elems, total, "{kind:?}");
+            for (v, &sz) in p.sizes.iter().enumerate() {
+                assert!(p.plan.offset(v as Var) + sz <= total, "{kind:?} var {v}");
+            }
+        }
+    }
+
+    #[test]
+    fn planned_never_predicts_more_copies_than_unplanned() {
+        for kind in ALL_WORKLOADS {
+            let (p, u) = planned_pair(kind);
+            assert_eq!(u.predicted_memcpy_elems, u.baseline_memcpy_elems, "{kind:?}");
+            assert_eq!(p.baseline_memcpy_elems, u.baseline_memcpy_elems, "{kind:?}");
+            assert!(
+                p.predicted_memcpy_elems <= p.baseline_memcpy_elems,
+                "{kind:?}: {} > {}",
+                p.predicted_memcpy_elems,
+                p.baseline_memcpy_elems
+            );
+        }
+    }
+
+    #[test]
+    fn planned_achieves_adjacency_somewhere() {
+        // across the workload suite, the planner must eliminate copies on
+        // at least some operands (1-lane batches alone guarantee wins)
+        let mut total_avoided = 0usize;
+        for kind in ALL_WORKLOADS {
+            let (p, _) = planned_pair(kind);
+            total_avoided += p.predicted_copies_avoided();
+        }
+        assert!(total_avoided > 0);
+    }
+
+    #[test]
+    fn fingerprint_distinguishes_modes_and_graphs() {
+        let w = Workload::new(WorkloadKind::TreeLstm, 16);
+        let mut rng = Rng::new(9);
+        let mut g1 = w.gen_batch(2, &mut rng);
+        g1.freeze();
+        let mut g2 = w.gen_batch(2, &mut rng);
+        g2.freeze();
+        let nt = w.registry.num_types();
+        let s1 = run_policy(&g1, nt, &mut FsmPolicy::new(Encoding::Sort));
+        let s2 = run_policy(&g2, nt, &mut FsmPolicy::new(Encoding::Sort));
+        let f = |g, s, m| fingerprint(g, &w.registry, s, 16, m);
+        assert_eq!(
+            f(&g1, &s1, MemoryMode::Planned),
+            f(&g1, &s1, MemoryMode::Planned)
+        );
+        assert_ne!(
+            f(&g1, &s1, MemoryMode::Planned),
+            f(&g1, &s1, MemoryMode::Unplanned)
+        );
+        assert_ne!(
+            f(&g1, &s1, MemoryMode::Planned),
+            f(&g2, &s2, MemoryMode::Planned)
+        );
+    }
+
+    #[test]
+    fn plan_cache_hits_on_identical_topology() {
+        let w = Workload::new(WorkloadKind::BiLstmTagger, 16);
+        let mut g = w.gen_batch(2, &mut Rng::new(3));
+        g.freeze();
+        let nt = w.registry.num_types();
+        let s = run_policy(&g, nt, &mut FsmPolicy::new(Encoding::Sort));
+        let mut cache = PlanCache::new();
+        let a = cache.get_or_build(&g, &w.registry, &s, 16, MemoryMode::Planned);
+        let b = cache.get_or_build(&g, &w.registry, &s, 16, MemoryMode::Planned);
+        assert!(std::rc::Rc::ptr_eq(&a, &b));
+        assert_eq!(cache.len(), 1);
+    }
+}

@@ -7,11 +7,32 @@
 //! actually costs (the Table-2 numbers); the DyNet-style baseline allocates
 //! in creation order.
 
+pub mod graph_plan;
 pub mod planner;
 
 use rustc_hash::FxHashMap;
 
 pub type Var = crate::pqtree::Var;
+
+/// How the executor lays out per-node state (the serving-path ablation).
+#[derive(Clone, Copy, Debug, PartialEq, Eq, Hash)]
+pub enum MemoryMode {
+    /// PQ-tree planned arena: batched operands laid out contiguously, read
+    /// and written as zero-copy views wherever the plan achieves adjacency.
+    Planned,
+    /// DyNet-style baseline: creation-order layout, every batched operand
+    /// gathered/scattered (the copies the paper's planner eliminates).
+    Unplanned,
+}
+
+impl MemoryMode {
+    pub fn name(self) -> &'static str {
+        match self {
+            MemoryMode::Planned => "planned",
+            MemoryMode::Unplanned => "unplanned",
+        }
+    }
+}
 
 /// One batched operation over `lanes` parallel instances:
 /// `dst[i] = op(srcs[0][i], srcs[1][i], ...)`.

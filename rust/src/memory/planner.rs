@@ -114,49 +114,131 @@ fn lane_map(operand: &[Var]) -> Option<FxHashMap<Var, usize>> {
     Some(m)
 }
 
+/// Per-node view of one operand over the current tree: the sorted lane set
+/// under each node (nodes intersecting the operand only) plus total leaf
+/// counts. Built in one post-order DFS — O(tree + Σ|set|) — replacing the
+/// former per-node `leaves_under` scans that were quadratic on
+/// serving-scale graphs (the planner now sits on the serving hot path).
+struct OperandView {
+    /// node -> sorted lane indices of operand vars under it (nonempty only)
+    sets: FxHashMap<Idx, Vec<usize>>,
+    /// node -> total number of leaves under it (recorded alongside `sets`)
+    leaf_count: FxHashMap<Idx, usize>,
+}
+
+impl OperandView {
+    fn build(tree: &PqTree, lanes: &FxHashMap<Var, usize>) -> OperandView {
+        let mut view = OperandView {
+            sets: FxHashMap::default(),
+            leaf_count: FxHashMap::default(),
+        };
+        view.dfs(tree, tree.root(), lanes);
+        view
+    }
+
+    /// Returns (total leaves, sorted lane set) for `n`, recording both.
+    fn dfs(
+        &mut self,
+        tree: &PqTree,
+        n: Idx,
+        lanes: &FxHashMap<Var, usize>,
+    ) -> (usize, Vec<usize>) {
+        let (count, set) = match tree.kind(n) {
+            Kind::Leaf(v) => (1, lanes.get(v).map(|&l| vec![l]).unwrap_or_default()),
+            _ => {
+                let mut count = 0;
+                let mut set: Vec<usize> = Vec::new();
+                for &c in tree.children(n) {
+                    let (cc, cs) = self.dfs(tree, c, lanes);
+                    count += cc;
+                    set = merge_sorted(set, cs);
+                }
+                (count, set)
+            }
+        };
+        if !set.is_empty() {
+            self.sets.insert(n, set.clone());
+            self.leaf_count.insert(n, count);
+        }
+        (count, set)
+    }
+
+    /// All leaves under `n` belong to the operand.
+    fn covered(&self, n: Idx) -> bool {
+        match (self.sets.get(&n), self.leaf_count.get(&n)) {
+            (Some(s), Some(&c)) => s.len() == c,
+            _ => false,
+        }
+    }
+}
+
+/// Merge two sorted, disjoint lane vectors.
+fn merge_sorted(a: Vec<usize>, b: Vec<usize>) -> Vec<usize> {
+    if a.is_empty() {
+        return b;
+    }
+    if b.is_empty() {
+        return a;
+    }
+    let mut out = Vec::with_capacity(a.len() + b.len());
+    let (mut i, mut j) = (0, 0);
+    while i < a.len() && j < b.len() {
+        if a[i] <= b[j] {
+            out.push(a[i]);
+            i += 1;
+        } else {
+            out.push(b[j]);
+            j += 1;
+        }
+    }
+    out.extend_from_slice(&a[i..]);
+    out.extend_from_slice(&b[j..]);
+    out
+}
+
 /// Parse the tree structure induced on `operand` as lane-index constraint
 /// sets (GETSUBTREECONS + the index transform of PARSECONSTRAINTS).
 fn subtree_constraints(tree: &PqTree, lanes: &FxHashMap<Var, usize>) -> Vec<Vec<usize>> {
+    let view = OperandView::build(tree, lanes);
     let mut out = Vec::new();
-    let oset: FxHashSet<Var> = lanes.keys().copied().collect();
-    collect_node_constraints(tree, tree.root(), &oset, lanes, &mut out);
+    collect_node_constraints(tree, tree.root(), &view, &mut out);
     out
 }
 
 fn collect_node_constraints(
     tree: &PqTree,
     n: Idx,
-    oset: &FxHashSet<Var>,
-    lanes: &FxHashMap<Var, usize>,
+    view: &OperandView,
     out: &mut Vec<Vec<usize>>,
 ) {
+    // subtrees disjoint from the operand contribute nothing
+    if !view.sets.contains_key(&n) {
+        return;
+    }
     match tree.kind(n) {
-        Kind::Leaf(_) => {}
+        Kind::Leaf(_) => return,
         Kind::P => {
-            let leaves = tree.leaves_under(n);
-            if leaves.len() >= 2 && leaves.iter().all(|v| oset.contains(v)) {
-                out.push(leaves.iter().map(|v| lanes[v]).collect());
-            }
-            for &c in tree.children(n) {
-                collect_node_constraints(tree, c, oset, lanes, out);
+            let set = &view.sets[&n];
+            if set.len() >= 2 && view.covered(n) {
+                out.push(set.clone());
             }
         }
         Kind::Q => {
-            let child_leaves: Vec<Vec<Var>> = tree
-                .children(n)
-                .iter()
-                .map(|&c| tree.leaves_under(c))
-                .collect();
-            for w in child_leaves.windows(2) {
-                let union: Vec<Var> = w[0].iter().chain(w[1].iter()).copied().collect();
-                if union.len() >= 2 && union.iter().all(|v| oset.contains(v)) {
-                    out.push(union.iter().map(|v| lanes[v]).collect());
+            // adjacent-child unions, valid when both children are wholly
+            // inside the operand
+            for w in tree.children(n).windows(2) {
+                if view.covered(w[0]) && view.covered(w[1]) {
+                    let union =
+                        merge_sorted(view.sets[&w[0]].clone(), view.sets[&w[1]].clone());
+                    if union.len() >= 2 {
+                        out.push(union);
+                    }
                 }
             }
-            for &c in tree.children(n) {
-                collect_node_constraints(tree, c, oset, lanes, out);
-            }
         }
+    }
+    for &c in tree.children(n) {
+        collect_node_constraints(tree, c, view, out);
     }
 }
 
@@ -317,35 +399,18 @@ impl PermDsu {
     }
 }
 
-/// Position set + traversal direction of node `n` restricted to an operand.
-/// Returns (sorted lane set, dir) where dir is Some(false)=ascending /
-/// Some(true)=descending / None if non-monotone or single-child coverage.
-fn node_lane_profile(
+/// Profile every internal node against one operand: sorted lane set of the
+/// node mapped to (node, per-child sorted lane sets in child order). Nodes
+/// with fewer than two intersecting children carry no order information and
+/// are skipped. Built from a single [`OperandView`] DFS.
+fn operand_profiles(
     tree: &PqTree,
-    n: Idx,
     lanes: &FxHashMap<Var, usize>,
-) -> Option<(Vec<usize>, Vec<Vec<usize>>)> {
-    // per-child sorted lane sets (children with empty intersection skipped)
-    let mut per_child: Vec<Vec<usize>> = Vec::new();
-    let mut all: Vec<usize> = Vec::new();
-    for &c in tree.children(n) {
-        let ls: Vec<usize> = tree
-            .leaves_under(c)
-            .iter()
-            .filter_map(|v| lanes.get(v).copied())
-            .collect();
-        if !ls.is_empty() {
-            let mut s = ls;
-            s.sort_unstable();
-            all.extend(s.iter().copied());
-            per_child.push(s);
-        }
-    }
-    if all.len() < 2 || per_child.len() < 2 {
-        return None;
-    }
-    all.sort_unstable();
-    Some((all, per_child))
+) -> FxHashMap<Vec<usize>, (Idx, Vec<Vec<usize>>)> {
+    let view = OperandView::build(tree, lanes);
+    let mut out = FxHashMap::default();
+    collect_profiles(tree, tree.root(), &view, &mut out);
+    out
 }
 
 fn decide_orders_for_batch(
@@ -366,16 +431,14 @@ fn decide_orders_for_batch(
     let ref_lanes = lane_maps[ref_i].as_ref().unwrap();
 
     // profile every internal node against the reference operand
-    let mut ref_profiles: FxHashMap<Vec<usize>, (Idx, Vec<Vec<usize>>)> = FxHashMap::default();
-    collect_profiles(tree, tree.root(), ref_lanes, &mut ref_profiles);
+    let ref_profiles = operand_profiles(tree, ref_lanes);
 
     for (oi, lm) in lane_maps.iter().enumerate() {
         if oi == ref_i {
             continue;
         }
         let Some(lm) = lm else { continue };
-        let mut other: FxHashMap<Vec<usize>, (Idx, Vec<Vec<usize>>)> = FxHashMap::default();
-        collect_profiles(tree, tree.root(), lm, &mut other);
+        let other = operand_profiles(tree, lm);
         for (laneset, (n1, ch1)) in &ref_profiles {
             let Some((n2, ch2)) = other.get(laneset) else {
                 continue;
@@ -388,16 +451,24 @@ fn decide_orders_for_batch(
 fn collect_profiles(
     tree: &PqTree,
     n: Idx,
-    lanes: &FxHashMap<Var, usize>,
+    view: &OperandView,
     out: &mut FxHashMap<Vec<usize>, (Idx, Vec<Vec<usize>>)>,
 ) {
-    if !matches!(tree.kind(n), Kind::Leaf(_)) {
-        if let Some((all, per_child)) = node_lane_profile(tree, n, lanes) {
-            out.insert(all, (n, per_child));
-        }
-        for &c in tree.children(n) {
-            collect_profiles(tree, c, lanes, out);
-        }
+    if matches!(tree.kind(n), Kind::Leaf(_)) || !view.sets.contains_key(&n) {
+        return;
+    }
+    // per-child sorted lane sets in child order (empty intersections skipped)
+    let per_child: Vec<Vec<usize>> = tree
+        .children(n)
+        .iter()
+        .filter_map(|c| view.sets.get(c).cloned())
+        .collect();
+    let all = view.sets[&n].clone();
+    if all.len() >= 2 && per_child.len() >= 2 {
+        out.insert(all, (n, per_child));
+    }
+    for &c in tree.children(n) {
+        collect_profiles(tree, c, view, out);
     }
 }
 

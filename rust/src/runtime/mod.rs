@@ -63,7 +63,7 @@ impl CompiledCell {
     /// cost of re-uploading Θ(H²) weights (§Perf iteration 1).
     pub fn execute_with_weights(
         &self,
-        data: &[Vec<f32>],
+        data: &[&[f32]],
         weights: &[xla::PjRtBuffer],
     ) -> Result<Vec<Vec<f32>>> {
         if data.len() + weights.len() != self.arg_shapes.len() {
@@ -104,7 +104,10 @@ impl CompiledCell {
     }
 
     /// Upload host weight tensors to device buffers (done once per engine).
-    pub fn stage_weights(&self, weights: &[(Vec<f32>, Vec<usize>)]) -> Result<Vec<xla::PjRtBuffer>> {
+    pub fn stage_weights(
+        &self,
+        weights: &[(Vec<f32>, Vec<usize>)],
+    ) -> Result<Vec<xla::PjRtBuffer>> {
         weights
             .iter()
             .map(|(w, dims)| {
@@ -183,6 +186,12 @@ impl ArtifactRegistry {
 
     pub fn get(&self, key: &ArtifactKey) -> Option<&CompiledCell> {
         self.cells.get(key)
+    }
+
+    /// Every compiled cell (backend construction validates these against
+    /// the per-cell arg-layout convention in `graph::cells`).
+    pub fn compiled(&self) -> impl Iterator<Item = &CompiledCell> {
+        self.cells.values()
     }
 
     /// Smallest compiled bucket >= n for (cell, hidden); None if none fits.

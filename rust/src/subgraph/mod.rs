@@ -52,7 +52,10 @@ impl Prim {
             Prim::Input | Prim::Param => vec![],
             Prim::MatMulXW { x, w } => vec![*x, *w],
             Prim::MatMatWM { w, m } => vec![*w, *m],
-            Prim::Add { a, b } | Prim::AddBias { a, b } | Prim::CMult { a, b } | Prim::Mean2 { a, b } => {
+            Prim::Add { a, b }
+            | Prim::AddBias { a, b }
+            | Prim::CMult { a, b }
+            | Prim::Mean2 { a, b } => {
                 vec![*a, *b]
             }
             Prim::Add3 { a, b, c } => vec![*a, *b, *c],

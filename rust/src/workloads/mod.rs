@@ -19,7 +19,7 @@ use crate::graph::{Graph, TypeRegistry};
 use crate::util::rng::Rng;
 
 /// Classifier/tagger label-space width (matches python model.NUM_CLASSES).
-pub const NUM_CLASSES: usize = 32;
+pub use crate::graph::cells::NUM_CLASSES;
 
 /// Workload family — the paper groups results by these.
 #[derive(Clone, Copy, Debug, PartialEq, Eq)]

@@ -7,7 +7,8 @@ use ed_batch::batching::depth::DepthPolicy;
 use ed_batch::batching::fsm::{Encoding, FsmPolicy};
 use ed_batch::batching::oracle::SufficientConditionPolicy;
 use ed_batch::batching::{run_policy, validate_schedule};
-use ed_batch::coordinator::engine::{Backend, CellEngine, StateStore};
+use ed_batch::coordinator::engine::{ArenaStateStore, Backend, CellEngine};
+use ed_batch::memory::MemoryMode;
 use ed_batch::coordinator::server::{Server, ServerConfig};
 use ed_batch::coordinator::SystemMode;
 use ed_batch::exec::SubgraphExec;
@@ -181,10 +182,10 @@ fn engine_values_independent_of_policy_on_all_workloads() {
         let s2 = run_policy(&g, nt, &mut SufficientConditionPolicy);
         let mut outs = Vec::new();
         for s in [&s1, &s2] {
-            let mut engine = CellEngine::new(Backend::Cpu, 32, 1);
-            let mut store = StateStore::new(g.len());
+            let mut engine = CellEngine::new(Backend::Cpu, 32, 1).unwrap();
+            let mut store = ArenaStateStore::new();
             engine.execute(&g, &w.registry, s, &mut store).unwrap();
-            outs.push(store.h);
+            outs.push(store.h_vectors());
         }
         for (i, (a, b)) in outs[0].iter().zip(outs[1].iter()).enumerate() {
             for (x, y) in a.iter().zip(b.iter()) {
@@ -195,6 +196,43 @@ fn engine_values_independent_of_policy_on_all_workloads() {
                 );
             }
         }
+    }
+}
+
+#[test]
+fn arena_parity_holds_across_policies_and_workloads() {
+    // cross-module version of the engine parity contract: whatever policy
+    // produced the schedule, planned and unplanned execution agree exactly
+    // and the planned path never moves more data.
+    for kind in [
+        WorkloadKind::TreeLstm,
+        WorkloadKind::LatticeLstm,
+        WorkloadKind::MvRnn,
+    ] {
+        let w = Workload::new(kind, 32);
+        let nt = w.registry.num_types();
+        let mut rng = Rng::new(23);
+        let mut g = w.gen_batch(4, &mut rng);
+        g.freeze();
+        let schedule = run_policy(&g, nt, &mut AgendaPolicy::new(nt));
+        let mut run = |mode: MemoryMode| {
+            let mut engine = CellEngine::new(Backend::Cpu, 32, 1).unwrap();
+            engine.memory_mode = mode;
+            let mut store = ArenaStateStore::new();
+            let report = engine.execute(&g, &w.registry, &schedule, &mut store).unwrap();
+            (report, store.h_vectors())
+        };
+        let (rp, hp) = run(MemoryMode::Planned);
+        let (ru, hu) = run(MemoryMode::Unplanned);
+        assert_eq!(hp, hu, "{}", kind.name());
+        assert!(
+            rp.memcpy_elems <= ru.memcpy_elems,
+            "{}: planned {} unplanned {}",
+            kind.name(),
+            rp.memcpy_elems,
+            ru.memcpy_elems
+        );
+        assert_eq!(rp.planned_memcpy_elems, rp.plan_predicted_elems, "{}", kind.name());
     }
 }
 

@@ -7,7 +7,7 @@
 
 use ed_batch::batching::fsm::{Encoding, FsmPolicy};
 use ed_batch::batching::run_policy;
-use ed_batch::coordinator::engine::{Backend, CellEngine, StateStore};
+use ed_batch::coordinator::engine::{ArenaStateStore, Backend, CellEngine};
 use ed_batch::runtime::manifest::ArtifactKey;
 use ed_batch::runtime::ArtifactRegistry;
 use ed_batch::util::rng::Rng;
@@ -139,19 +139,20 @@ fn pjrt_engine_matches_cpu_engine_end_to_end() {
             &mut FsmPolicy::new(Encoding::Sort),
         );
 
-        let mut cpu_engine = CellEngine::new(Backend::Cpu, 64, 1);
-        let mut cpu_store = StateStore::new(g.len());
+        let mut cpu_engine = CellEngine::new(Backend::Cpu, 64, 1).unwrap();
+        let mut cpu_store = ArenaStateStore::new();
         cpu_engine
             .execute(&g, &w.registry, &schedule, &mut cpu_store)
             .unwrap();
 
-        let mut pjrt_engine = CellEngine::new(Backend::Pjrt(&reg), 64, 1);
-        let mut pjrt_store = StateStore::new(g.len());
+        let mut pjrt_engine = CellEngine::new(Backend::Pjrt(&reg), 64, 1).unwrap();
+        let mut pjrt_store = ArenaStateStore::new();
         pjrt_engine
             .execute(&g, &w.registry, &schedule, &mut pjrt_store)
             .unwrap();
 
-        for (i, (a, b)) in cpu_store.h.iter().zip(pjrt_store.h.iter()).enumerate() {
+        let (cpu_h, pjrt_h) = (cpu_store.h_vectors(), pjrt_store.h_vectors());
+        for (i, (a, b)) in cpu_h.iter().zip(pjrt_h.iter()).enumerate() {
             assert_eq!(a.len(), b.len(), "{kind:?} node {i} width");
             for (x, y) in a.iter().zip(b.iter()) {
                 assert!(

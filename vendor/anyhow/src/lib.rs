@@ -1,0 +1,197 @@
+//! Vendored minimal `anyhow` — the API subset this workspace uses, kept
+//! source-compatible with the crates.io crate (the build environment has no
+//! crates.io access, see the workspace Cargo.toml): `Error`, `Result`,
+//! `anyhow!`, `bail!`, and the `Context` extension trait.
+//!
+//! An [`Error`] is a flattened message chain (outermost context first).
+//! `{e}` prints the outermost message, `{e:#}` the full `a: b: c` chain,
+//! matching anyhow's Display behaviour.
+
+use std::fmt::{self, Display};
+
+/// Flattened error chain, outermost message first.
+pub struct Error {
+    chain: Vec<String>,
+}
+
+pub type Result<T, E = Error> = std::result::Result<T, E>;
+
+impl Error {
+    /// Construct from a single message (what `anyhow!` expands to).
+    pub fn msg<M: Display>(message: M) -> Error {
+        Error {
+            chain: vec![message.to_string()],
+        }
+    }
+
+    fn from_std<E: std::error::Error>(err: E) -> Error {
+        let mut chain = vec![err.to_string()];
+        let mut src = err.source();
+        while let Some(s) = src {
+            chain.push(s.to_string());
+            src = s.source();
+        }
+        Error { chain }
+    }
+
+    fn wrap<C: Display>(mut self, context: C) -> Error {
+        self.chain.insert(0, context.to_string());
+        self
+    }
+
+    /// Add context, parity with `anyhow::Error::context`.
+    pub fn context<C: Display>(self, context: C) -> Error {
+        self.wrap(context)
+    }
+
+    /// The error messages from outermost to innermost.
+    pub fn chain(&self) -> impl Iterator<Item = &str> {
+        self.chain.iter().map(|s| s.as_str())
+    }
+}
+
+impl Display for Error {
+    fn fmt(&self, f: &mut fmt::Formatter<'_>) -> fmt::Result {
+        if f.alternate() {
+            write!(f, "{}", self.chain.join(": "))
+        } else {
+            write!(f, "{}", self.chain[0])
+        }
+    }
+}
+
+impl fmt::Debug for Error {
+    fn fmt(&self, f: &mut fmt::Formatter<'_>) -> fmt::Result {
+        write!(f, "{}", self.chain[0])?;
+        if self.chain.len() > 1 {
+            write!(f, "\n\nCaused by:")?;
+            for c in &self.chain[1..] {
+                write!(f, "\n    {c}")?;
+            }
+        }
+        Ok(())
+    }
+}
+
+// `Error` deliberately does not implement `std::error::Error`, exactly like
+// anyhow: that keeps this blanket From (used by `?` conversions) coherent
+// alongside core's identity `From<Error> for Error`.
+impl<E: std::error::Error + Send + Sync + 'static> From<E> for Error {
+    fn from(err: E) -> Error {
+        Error::from_std(err)
+    }
+}
+
+mod ext {
+    use super::{Display, Error};
+
+    /// Sealed helper so `Context` covers both std errors and `Error`
+    /// itself without overlapping impls (anyhow's `ext::StdError` trick).
+    pub trait IntoError {
+        fn ext_context<C: Display>(self, context: C) -> Error;
+    }
+
+    impl<E> IntoError for E
+    where
+        E: std::error::Error + Send + Sync + 'static,
+    {
+        fn ext_context<C: Display>(self, context: C) -> Error {
+            Error::from_std(self).wrap(context)
+        }
+    }
+
+    impl IntoError for Error {
+        fn ext_context<C: Display>(self, context: C) -> Error {
+            self.wrap(context)
+        }
+    }
+}
+
+/// Result extension adding `.context(...)` / `.with_context(|| ...)`.
+pub trait Context<T, E> {
+    fn context<C: Display + Send + Sync + 'static>(self, context: C) -> Result<T, Error>;
+    fn with_context<C, F>(self, f: F) -> Result<T, Error>
+    where
+        C: Display + Send + Sync + 'static,
+        F: FnOnce() -> C;
+}
+
+impl<T, E: ext::IntoError> Context<T, E> for Result<T, E> {
+    fn context<C: Display + Send + Sync + 'static>(self, context: C) -> Result<T, Error> {
+        self.map_err(|e| e.ext_context(context))
+    }
+
+    fn with_context<C, F>(self, f: F) -> Result<T, Error>
+    where
+        C: Display + Send + Sync + 'static,
+        F: FnOnce() -> C,
+    {
+        self.map_err(|e| e.ext_context(f()))
+    }
+}
+
+/// Construct an [`Error`] from a format string.
+#[macro_export]
+macro_rules! anyhow {
+    ($($arg:tt)*) => {
+        $crate::Error::msg(format!($($arg)*))
+    };
+}
+
+/// Return early with a formatted [`Error`].
+#[macro_export]
+macro_rules! bail {
+    ($($arg:tt)*) => {
+        return Err($crate::anyhow!($($arg)*))
+    };
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn io_err() -> std::io::Error {
+        std::io::Error::new(std::io::ErrorKind::NotFound, "missing")
+    }
+
+    #[test]
+    fn macro_and_display() {
+        let e = anyhow!("bad {}", 7);
+        assert_eq!(format!("{e}"), "bad 7");
+        assert_eq!(format!("{e:#}"), "bad 7");
+    }
+
+    #[test]
+    fn question_mark_converts_std_errors() {
+        fn inner() -> Result<()> {
+            Err(io_err())?;
+            Ok(())
+        }
+        let e = inner().unwrap_err();
+        assert_eq!(format!("{e}"), "missing");
+    }
+
+    #[test]
+    fn context_chains() {
+        let r: Result<(), std::io::Error> = Err(io_err());
+        let e = r.with_context(|| "loading manifest").unwrap_err();
+        assert_eq!(format!("{e}"), "loading manifest");
+        assert_eq!(format!("{e:#}"), "loading manifest: missing");
+        // context on an anyhow::Result too
+        let r2: Result<()> = Err(anyhow!("inner"));
+        let e2 = r2.context("outer").unwrap_err();
+        assert_eq!(format!("{e2:#}"), "outer: inner");
+    }
+
+    #[test]
+    fn bail_returns() {
+        fn f(x: bool) -> Result<u32> {
+            if x {
+                bail!("nope");
+            }
+            Ok(1)
+        }
+        assert!(f(true).is_err());
+        assert_eq!(f(false).unwrap(), 1);
+    }
+}
