@@ -1,68 +1,86 @@
 //! End-to-end serving driver (the DESIGN.md validation run): boots the full
-//! three-layer stack — learned FSM policies (L3), AOT-compiled JAX/Pallas
-//! cell artifacts (L2/L1) over PJRT — and serves batched requests from
-//! concurrent clients across all workload families, reporting throughput
-//! and latency percentiles per workload and per system mode.
+//! three-layer stack — learned FSM policies served from the PolicyStore
+//! (L3), AOT-compiled JAX/Pallas cell artifacts (L2/L1) over PJRT — and
+//! serves **all three workload families concurrently** on one worker pool,
+//! reporting throughput and latency percentiles per workload and per
+//! system mode.
 //!
 //! Requires `make artifacts`. Results recorded in EXPERIMENTS.md.
 //!
-//! Run: `cargo run --release --example serve_e2e -- [--requests 128] [--hidden 64]`
+//! Run: `cargo run --release --example serve_e2e -- [--requests 128]
+//!       [--hidden 64] [--workers 4] [--store artifacts/policystore]`
 
 use std::time::Duration;
 
 use ed_batch::batching::fsm::Encoding;
 use ed_batch::coordinator::server::{Server, ServerConfig};
 use ed_batch::coordinator::SystemMode;
+use ed_batch::rl::TrainConfig;
 use ed_batch::util::cli::Args;
 use ed_batch::util::rng::Rng;
 use ed_batch::workloads::{Workload, WorkloadKind};
+
+const KINDS: [WorkloadKind; 3] = [
+    WorkloadKind::BiLstmTagger, // chain
+    WorkloadKind::TreeLstm,     // tree
+    WorkloadKind::LatticeLstm,  // lattice
+];
 
 fn main() -> anyhow::Result<()> {
     let args = Args::from_env();
     let requests = args.usize("requests", 128);
     let hidden = args.usize("hidden", 64);
-    let clients = args.usize("clients", 4);
+    let clients = args.usize("clients", 2).max(1); // per workload kind
+    let workers = args.usize("workers", 4);
+    let store = args.get_or("store", "artifacts/policystore").to_string();
 
     if !std::path::Path::new("artifacts/manifest.json").exists() {
         anyhow::bail!("artifacts/manifest.json missing — run `make artifacts` first");
     }
 
     println!(
-        "# serve_e2e: {} requests x {} workloads, hidden={}, {} clients, PJRT backend",
-        requests, 3, hidden, clients
+        "# serve_e2e: {} requests x {} workloads served concurrently, hidden={}, \
+         {} clients/workload, {} workers, PJRT backend, store={}",
+        requests,
+        KINDS.len(),
+        hidden,
+        clients,
+        workers,
+        store,
     );
     println!(
-        "{:<14} {:<14} {:>9} {:>9} {:>9} {:>8} {:>9} {:>10}",
-        "workload", "mode", "inst/s", "p50 ms", "p99 ms", "batches", "MB moved", "MB avoided"
+        "{:<14} {:<14} {:>7} {:>9} {:>9} {:>9} {:>8} {:>9} {:>10}",
+        "mode", "workload", "req", "inst/s", "p50 ms", "p99 ms", "batches", "MB moved", "MB avoided"
     );
 
-    for kind in [
-        WorkloadKind::BiLstmTagger, // chain
-        WorkloadKind::TreeLstm,     // tree
-        WorkloadKind::LatticeLstm,  // lattice
+    for mode in [
+        SystemMode::VanillaDyNet,
+        SystemMode::CavsDyNet,
+        SystemMode::EdBatch,
     ] {
-        for mode in [
-            SystemMode::VanillaDyNet,
-            SystemMode::CavsDyNet,
-            SystemMode::EdBatch,
-        ] {
-            let server = Server::start(ServerConfig {
-                workload: kind,
-                hidden,
-                mode,
-                max_batch: 32,
-                batch_window: Duration::from_millis(2),
-                artifacts_dir: Some("artifacts".into()),
-                encoding: Encoding::Sort,
-                seed: 7,
-            })?;
-            let mut handles = Vec::new();
+        let server = Server::start(ServerConfig {
+            workloads: KINDS.to_vec(),
+            hidden,
+            mode,
+            max_batch: 32,
+            batch_window: Duration::from_millis(2),
+            workers,
+            artifacts_dir: Some("artifacts".into()),
+            store_dir: Some(store.clone()),
+            train_on_miss: true, // first boot trains + persists; later boots hit
+            train_cfg: TrainConfig::default(),
+            encoding: Encoding::Sort,
+            seed: 7,
+        })?;
+        let mut handles = Vec::new();
+        for (i, &kind) in KINDS.iter().enumerate() {
             for c in 0..clients {
-                let client = server.client();
-                let w = Workload::new(kind, hidden);
-                let n = requests / clients;
+                let client = server.client(kind);
+                let n = requests / (KINDS.len() * clients);
+                let seed = 31 * (i * clients + c + 1) as u64;
                 handles.push(std::thread::spawn(move || {
-                    let mut rng = Rng::new(31 * (c as u64 + 1));
+                    let w = Workload::new(kind, hidden);
+                    let mut rng = Rng::new(seed);
                     for _ in 0..n {
                         let g = w.gen_instance(&mut rng);
                         let resp = client.infer(g).expect("infer");
@@ -70,24 +88,49 @@ fn main() -> anyhow::Result<()> {
                     }
                 }));
             }
-            for h in handles {
-                h.join().expect("client thread");
-            }
-            let snap = server.metrics.snapshot();
-            println!(
-                "{:<14} {:<14} {:>9.1} {:>9.2} {:>9.2} {:>8} {:>9.2} {:>10.2}",
-                kind.name(),
-                mode.name(),
-                snap.throughput(),
-                snap.latency_p50_s * 1e3,
-                snap.latency_p99_s * 1e3,
-                snap.batches_executed,
-                snap.memcpy_elems as f64 * 4.0 / 1e6,
-                snap.copies_avoided_elems as f64 * 4.0 / 1e6,
-            );
-            server.shutdown()?;
         }
+        for h in handles {
+            h.join().expect("client thread");
+        }
+        let snap = server.metrics.snapshot();
+        for row in &snap.per_workload {
+            println!(
+                "{:<14} {:<14} {:>7} {:>9} {:>9.2} {:>9.2} {:>8} {:>9} {:>10}",
+                mode.name(),
+                row.workload,
+                row.requests,
+                "",
+                row.p50_s * 1e3,
+                row.p99_s * 1e3,
+                "",
+                "",
+                "",
+            );
+        }
+        println!(
+            "{:<14} {:<14} {:>7} {:>9.1} {:>9.2} {:>9.2} {:>8} {:>9.2} {:>10.2}",
+            mode.name(),
+            "(total)",
+            snap.requests,
+            snap.throughput(),
+            snap.latency_p50_s * 1e3,
+            snap.latency_p99_s * 1e3,
+            snap.batches_executed,
+            snap.memcpy_elems as f64 * 4.0 / 1e6,
+            snap.copies_avoided_elems as f64 * 4.0 / 1e6,
+        );
+        if mode == SystemMode::EdBatch {
+            println!(
+                "{:<14} policy store: {} hits, {} misses ({} trained at boot, {} fallbacks)",
+                "",
+                snap.store_hits,
+                snap.store_misses,
+                snap.store_trained,
+                snap.store_fallbacks,
+            );
+        }
+        server.shutdown()?;
     }
-    println!("\nall workloads served successfully over the PJRT artifact path.");
+    println!("\nall workload families served concurrently over the PJRT artifact path.");
     Ok(())
 }

@@ -13,6 +13,7 @@ use std::time::Duration;
 use ed_batch::batching::fsm::Encoding;
 use ed_batch::coordinator::server::{Server, ServerConfig};
 use ed_batch::coordinator::SystemMode;
+use ed_batch::rl::TrainConfig;
 use ed_batch::util::cli::Args;
 use ed_batch::util::rng::Rng;
 use ed_batch::workloads::{Workload, WorkloadKind};
@@ -34,19 +35,23 @@ fn main() -> anyhow::Result<()> {
         SystemMode::EdBatch,
     ] {
         let server = Server::start(ServerConfig {
-            workload: WorkloadKind::TreeLstm,
+            workloads: vec![WorkloadKind::TreeLstm],
             hidden,
             mode,
             max_batch: 16,
             batch_window: Duration::from_millis(2),
+            workers: args.usize("workers", 2),
             artifacts_dir: artifacts.clone(),
+            store_dir: Some(args.get_or("store", "artifacts/policystore").to_string()),
+            train_on_miss: true,
+            train_cfg: TrainConfig::default(),
             encoding: Encoding::Sort,
             seed: 11,
         })?;
         // 4 concurrent clients submitting parse trees
         let mut handles = Vec::new();
         for c in 0..4u64 {
-            let client = server.client();
+            let client = server.client(WorkloadKind::TreeLstm);
             let w = Workload::new(WorkloadKind::TreeLstm, hidden);
             let n = requests / 4;
             handles.push(std::thread::spawn(move || {

@@ -2,11 +2,13 @@
 //! evaluation (§5). Each submodule prints the same rows/series the paper
 //! reports and returns structured results for tests / EXPERIMENTS.md.
 //!
-//! Run via `ed-batch bench <fig6|fig8|fig9|table2|table3|table4|table5|all>`.
+//! Run via `ed-batch bench <fig6|fig8|fig9|table2|table3|table4|table5|serving|all>`
+//! (`serving` is a repo extension: worker-pool scaling over the PolicyStore).
 
 pub mod fig6;
 pub mod fig8;
 pub mod fig9;
+pub mod serving;
 pub mod table2;
 pub mod table3;
 pub mod table4;

@@ -1,0 +1,145 @@
+//! Serving-scaling table (repo extension beyond the paper's evaluation):
+//! throughput and latency percentiles vs worker-pool size for *mixed*
+//! workloads served concurrently from a pre-trained [`PolicyStore`] —
+//! the zero-in-request-training serving configuration.
+//!
+//! Runs on the CPU backend so it measures the scheduler (per-workload
+//! queues + continuous dispatch), not kernel speed.
+
+use std::time::Duration;
+
+use crate::batching::fsm::Encoding;
+use crate::coordinator::server::{Server, ServerConfig};
+use crate::coordinator::SystemMode;
+use crate::policystore::PolicyStore;
+use crate::rl::TrainConfig;
+use crate::util::rng::Rng;
+use crate::workloads::{Workload, WorkloadKind};
+
+use super::{print_table, BenchOpts};
+
+/// One row of the scaling table.
+#[derive(Clone, Debug)]
+pub struct ServingRow {
+    pub workers: usize,
+    pub throughput: f64,
+    pub p50_ms: f64,
+    pub p99_ms: f64,
+    pub store_hit_rate: f64,
+}
+
+/// Two workload families served concurrently (tree + chain).
+const KINDS: [WorkloadKind; 2] = [WorkloadKind::TreeLstm, WorkloadKind::BiLstmTagger];
+
+pub fn run(opts: &BenchOpts) -> Vec<ServingRow> {
+    let hidden = if opts.fast { 32 } else { opts.hidden };
+    let requests_per_client = if opts.fast { 8 } else { 32 };
+    let clients_per_kind = if opts.fast { 2 } else { 4 };
+    let train_cfg = TrainConfig {
+        max_iters: if opts.fast { 150 } else { 600 },
+        ..TrainConfig::default()
+    };
+
+    // train once into a scratch store; every server boot below must hit
+    let dir = std::env::temp_dir().join(format!(
+        "edbatch_bench_store_{}",
+        std::process::id()
+    ));
+    let _ = std::fs::remove_dir_all(&dir);
+    let mut store = PolicyStore::open(&dir).expect("open store");
+    for kind in KINDS {
+        let w = Workload::new(kind, hidden);
+        store
+            .train_into(&w, Encoding::Sort, &train_cfg, opts.seed)
+            .expect("train policy");
+    }
+    drop(store);
+
+    let mut rows = Vec::new();
+    for workers in [1usize, 2, 4] {
+        let server = Server::start(ServerConfig {
+            workloads: KINDS.to_vec(),
+            hidden,
+            mode: SystemMode::EdBatch,
+            max_batch: 16,
+            batch_window: Duration::from_millis(2),
+            workers,
+            artifacts_dir: None,
+            store_dir: Some(dir.to_string_lossy().into_owned()),
+            train_on_miss: false, // a miss here would be a bench bug
+            train_cfg,
+            encoding: Encoding::Sort,
+            seed: opts.seed,
+        })
+        .expect("server boot");
+        let mut handles = Vec::new();
+        for (c, kind) in KINDS
+            .iter()
+            .copied()
+            .cycle()
+            .take(clients_per_kind * KINDS.len())
+            .enumerate()
+        {
+            let client = server.client(kind);
+            let seed = opts.seed + 31 * (c as u64 + 1);
+            handles.push(std::thread::spawn(move || {
+                let w = Workload::new(kind, hidden);
+                let mut rng = Rng::new(seed);
+                for _ in 0..requests_per_client {
+                    let g = w.gen_instance(&mut rng);
+                    client.infer(g).expect("infer");
+                }
+            }));
+        }
+        for h in handles {
+            h.join().expect("client thread");
+        }
+        let snap = server.metrics.snapshot();
+        rows.push(ServingRow {
+            workers,
+            throughput: snap.throughput(),
+            p50_ms: snap.latency_p50_s * 1e3,
+            p99_ms: snap.latency_p99_s * 1e3,
+            store_hit_rate: snap.store_hit_rate(),
+        });
+        server.shutdown().expect("shutdown");
+    }
+    let _ = std::fs::remove_dir_all(&dir);
+
+    print_table(
+        "Serving scaling: worker pool vs throughput/latency \
+         (mixed treelstm + bilstm-tagger, store-served policies, CPU backend)",
+        &["workers", "inst/s", "p50 ms", "p99 ms", "store hit rate"],
+        &rows
+            .iter()
+            .map(|r| {
+                vec![
+                    format!("{}", r.workers),
+                    format!("{:.1}", r.throughput),
+                    format!("{:.2}", r.p50_ms),
+                    format!("{:.2}", r.p99_ms),
+                    format!("{:.0}%", r.store_hit_rate * 100.0),
+                ]
+            })
+            .collect::<Vec<_>>(),
+    );
+    rows
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn serving_scaling_smoke() {
+        let rows = run(&BenchOpts::fast_default());
+        assert_eq!(rows.len(), 3);
+        for r in &rows {
+            assert!(r.throughput > 0.0, "workers={}", r.workers);
+            assert!(
+                (r.store_hit_rate - 1.0).abs() < 1e-12,
+                "every boot must resolve policies from the store"
+            );
+        }
+    }
+}

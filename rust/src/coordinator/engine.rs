@@ -226,7 +226,10 @@ impl ArenaStateStore {
                 ArgSemantics::ChildM(i) => {
                     let (l, r) = cells::two_children(preds);
                     let child = if i == 0 { l } else { r };
-                    copy_mv_matrix(buf, lane, hidden, child, c_slice(child.idx()));
+                    // key the degenerate-matrix fallback on the instance-
+                    // local id (matches source materialization)
+                    let local = NodeId(graph.local_id(child));
+                    copy_mv_matrix(buf, lane, hidden, local, c_slice(child.idx()));
                 }
                 ArgSemantics::SumAllH => {
                     for &p in preds.iter() {
@@ -298,7 +301,7 @@ impl<'a> CellEngine<'a> {
         for (bi, batch) in schedule.batches.iter().enumerate() {
             let info = types.info(batch.op);
             match info.cell {
-                CellKind::Source => self.exec_source(&batch.nodes, store),
+                CellKind::Source => self.exec_source(graph, &batch.nodes, store),
                 CellKind::Reduce => {
                     self.exec_reduce(graph, &batch.nodes, info.out_elems, store)
                 }
@@ -315,12 +318,15 @@ impl<'a> CellEngine<'a> {
 
     // -- sources / reduce ------------------------------------------------
 
-    fn exec_source(&mut self, nodes: &[NodeId], store: &mut ArenaStateStore) {
+    fn exec_source(&mut self, graph: &Graph, nodes: &[NodeId], store: &mut ArenaStateStore) {
         let h = self.hidden;
         for &n in nodes {
-            // deterministic embedding per node index
+            // deterministic embedding per *instance-local* node index, so a
+            // request's values are identical whether it executes alone or
+            // merged at any offset into a mini-batch (serving bit-equality)
+            let local = NodeId(graph.local_id(n));
             let (off, sz) = store.h_slot(n.idx());
-            let mut rng = Rng::new(0xE4BED ^ n.0 as u64);
+            let mut rng = Rng::new(0xE4BED ^ local.0 as u64);
             for x in &mut store.arena[off..off + sz] {
                 *x = (rng.f32() - 0.5) * 0.2;
             }
@@ -331,7 +337,7 @@ impl<'a> CellEngine<'a> {
                 cells::near_identity_matrix_into(
                     &mut store.arena[coff..coff + csz],
                     h,
-                    n,
+                    local,
                 );
             }
         }
@@ -557,7 +563,8 @@ fn add_lane(buf: &mut [f32], lane: usize, w: usize, src: &[f32]) {
 /// `h*h`) use the shared deterministic near-identity so numerics stay
 /// bounded; real matrices — including source-materialized ones — copy
 /// through (identical values either way, see
-/// [`cells::near_identity_matrix_into`]).
+/// [`cells::near_identity_matrix_into`]). `node` is the child's
+/// instance-local id, keeping the fallback batch-invariant.
 fn copy_mv_matrix(buf: &mut [f32], lane: usize, h: usize, node: NodeId, src: &[f32]) {
     let w = h * h;
     if src.len() == w {
@@ -738,6 +745,53 @@ mod tests {
             ru.memcpy_elems
         );
         assert!(rp.copies_avoided_elems > 0);
+    }
+
+    #[test]
+    fn merged_execution_bit_equal_to_single_instance() {
+        // the serving bit-equality contract: local-id-keyed sources make an
+        // instance's outputs identical whether it executes alone or merged
+        // at any offset into a mini-batch
+        for kind in [
+            WorkloadKind::TreeLstm,
+            WorkloadKind::MvRnn,
+            WorkloadKind::LatticeLstm,
+            WorkloadKind::BiLstmTagger,
+        ] {
+            let w = Workload::new(kind, 16);
+            let mut rng = Rng::new(77);
+            let instances: Vec<Graph> = (0..3).map(|_| w.gen_instance(&mut rng)).collect();
+            let nt = w.registry.num_types();
+            let mut refs = Vec::new();
+            for inst in &instances {
+                let mut g = inst.clone();
+                g.freeze();
+                let s = run_policy(&g, nt, &mut FsmPolicy::new(Encoding::Sort));
+                let mut engine = CellEngine::new(Backend::Cpu, 16, 1).unwrap();
+                let mut store = ArenaStateStore::new();
+                engine.execute(&g, &w.registry, &s, &mut store).unwrap();
+                refs.push(store.h_vectors());
+            }
+            let mut merged = Graph::new();
+            let mut offs = Vec::new();
+            for inst in &instances {
+                offs.push(merged.merge(inst) as usize);
+            }
+            merged.freeze();
+            let s = run_policy(&merged, nt, &mut FsmPolicy::new(Encoding::Sort));
+            let mut engine = CellEngine::new(Backend::Cpu, 16, 1).unwrap();
+            let mut store = ArenaStateStore::new();
+            engine.execute(&merged, &w.registry, &s, &mut store).unwrap();
+            for (i, inst) in instances.iter().enumerate() {
+                for j in 0..inst.len() {
+                    assert_eq!(
+                        store.h(offs[i] + j),
+                        refs[i][j].as_slice(),
+                        "{kind:?} instance {i} node {j}"
+                    );
+                }
+            }
+        }
     }
 
     #[test]

@@ -1,7 +1,9 @@
-//! Serving metrics: throughput, latency percentiles, batching counters,
-//! and the memory-planning win (per-request gather/scatter volume and
-//! copies avoided vs the unplanned baseline).
+//! Serving metrics: throughput, latency percentiles (global and
+//! per-workload), queue-depth gauges, policy-store resolution counters,
+//! batching counters, and the memory-planning win (per-request
+//! gather/scatter volume and copies avoided vs the unplanned baseline).
 
+use std::collections::BTreeMap;
 use std::sync::Mutex;
 use std::time::{Duration, Instant};
 
@@ -12,6 +14,7 @@ use super::TimeBreakdown;
 #[derive(Default)]
 struct Inner {
     latencies: Samples,
+    per_workload: BTreeMap<String, Samples>,
     breakdown: TimeBreakdown,
     requests: u64,
     instances: u64,
@@ -20,6 +23,15 @@ struct Inner {
     memcpy_elems: u64,
     copies_avoided_elems: u64,
     padded_lanes: u64,
+    // queue-depth gauge, sampled at every enqueue
+    queue_depth_sum: u64,
+    queue_depth_samples: u64,
+    queue_depth_max: u64,
+    // boot-time policy-store resolution
+    store_hits: u64,
+    store_misses: u64,
+    store_fallbacks: u64,
+    store_trained: u64,
 }
 
 /// Thread-safe metrics sink shared between server workers.
@@ -32,6 +44,15 @@ impl Default for Metrics {
     fn default() -> Self {
         Metrics::new()
     }
+}
+
+/// Per-workload latency summary.
+#[derive(Clone, Debug)]
+pub struct WorkloadLatency {
+    pub workload: String,
+    pub requests: u64,
+    pub p50_s: f64,
+    pub p99_s: f64,
 }
 
 /// Snapshot for reporting.
@@ -47,8 +68,22 @@ pub struct MetricsSnapshot {
     pub copies_avoided_elems: u64,
     pub padded_lanes: u64,
     pub latency_p50_s: f64,
+    pub latency_p95_s: f64,
     pub latency_p99_s: f64,
     pub latency_mean_s: f64,
+    /// per-workload latency rows (sorted by workload name)
+    pub per_workload: Vec<WorkloadLatency>,
+    /// mean queue depth observed at enqueue time
+    pub queue_depth_mean: f64,
+    pub queue_depth_max: u64,
+    /// policies served straight from the store at boot
+    pub store_hits: u64,
+    /// workloads whose fingerprint had no artifact in the store
+    pub store_misses: u64,
+    /// misses that fell back to the agenda baseline (no training allowed)
+    pub store_fallbacks: u64,
+    /// misses resolved by training + persisting at boot
+    pub store_trained: u64,
     pub breakdown: TimeBreakdown,
     pub elapsed_s: f64,
 }
@@ -59,6 +94,15 @@ impl MetricsSnapshot {
             return 0.0;
         }
         self.instances as f64 / self.elapsed_s
+    }
+
+    /// Fraction of workloads resolved straight from the store.
+    pub fn store_hit_rate(&self) -> f64 {
+        let total = self.store_hits + self.store_misses;
+        if total == 0 {
+            return 0.0;
+        }
+        self.store_hits as f64 / total as f64
     }
 
     /// Mean gather/scatter volume per request (elements).
@@ -96,16 +140,43 @@ impl Metrics {
     }
 
     /// Restart the throughput clock (called once the server finishes boot —
-    /// artifact compilation and policy training shouldn't count against
+    /// artifact compilation and policy resolution shouldn't count against
     /// serving throughput).
     pub fn reset_clock(&self) {
         *self.started.lock().unwrap() = Instant::now();
     }
 
-    pub fn record_request(&self, latency: Duration) {
+    pub fn record_request(&self, workload: &str, latency: Duration) {
         let mut g = self.inner.lock().unwrap();
         g.requests += 1;
         g.latencies.record_duration(latency);
+        g.per_workload
+            .entry(workload.to_string())
+            .or_default()
+            .record_duration(latency);
+    }
+
+    /// Queue depth (requests waiting across all queues) after an enqueue.
+    pub fn record_enqueue(&self, depth: usize) {
+        let mut g = self.inner.lock().unwrap();
+        g.queue_depth_sum += depth as u64;
+        g.queue_depth_samples += 1;
+        g.queue_depth_max = g.queue_depth_max.max(depth as u64);
+    }
+
+    /// Boot-time policy resolution outcome for one workload kind.
+    pub fn record_store_resolution(&self, hit: bool, trained: bool) {
+        let mut g = self.inner.lock().unwrap();
+        if hit {
+            g.store_hits += 1;
+        } else {
+            g.store_misses += 1;
+            if trained {
+                g.store_trained += 1;
+            } else {
+                g.store_fallbacks += 1;
+            }
+        }
     }
 
     pub fn record_minibatch(
@@ -135,8 +206,29 @@ impl Metrics {
             copies_avoided_elems: g.copies_avoided_elems,
             padded_lanes: g.padded_lanes,
             latency_p50_s: g.latencies.p50(),
+            latency_p95_s: g.latencies.percentile(95.0),
             latency_p99_s: g.latencies.p99(),
             latency_mean_s: g.latencies.mean(),
+            per_workload: g
+                .per_workload
+                .iter()
+                .map(|(name, s)| WorkloadLatency {
+                    workload: name.clone(),
+                    requests: s.len() as u64,
+                    p50_s: s.p50(),
+                    p99_s: s.p99(),
+                })
+                .collect(),
+            queue_depth_mean: if g.queue_depth_samples == 0 {
+                0.0
+            } else {
+                g.queue_depth_sum as f64 / g.queue_depth_samples as f64
+            },
+            queue_depth_max: g.queue_depth_max,
+            store_hits: g.store_hits,
+            store_misses: g.store_misses,
+            store_fallbacks: g.store_fallbacks,
+            store_trained: g.store_trained,
             breakdown: g.breakdown,
             elapsed_s: self.started.lock().unwrap().elapsed().as_secs_f64(),
         }
@@ -151,8 +243,8 @@ mod tests {
     #[test]
     fn records_and_snapshots() {
         let m = Metrics::new();
-        m.record_request(Duration::from_millis(10));
-        m.record_request(Duration::from_millis(30));
+        m.record_request("treelstm", Duration::from_millis(10));
+        m.record_request("bilstm-tagger", Duration::from_millis(30));
         let report = ExecReport {
             batches: 5,
             kernel_calls: 7,
@@ -180,6 +272,38 @@ mod tests {
         assert!((s.copies_avoided_frac() - 0.75).abs() < 1e-12);
         assert!((s.breakdown.planning_s - 0.003).abs() < 1e-12);
         assert!(s.latency_p50_s >= 0.01);
+        assert!(s.latency_p95_s >= s.latency_p50_s);
+        assert!(s.latency_p99_s >= s.latency_p95_s);
         assert!(s.throughput() > 0.0);
+        // per-workload rows sorted by name, one request each
+        assert_eq!(s.per_workload.len(), 2);
+        assert_eq!(s.per_workload[0].workload, "bilstm-tagger");
+        assert_eq!(s.per_workload[0].requests, 1);
+        assert_eq!(s.per_workload[1].workload, "treelstm");
+    }
+
+    #[test]
+    fn queue_depth_gauge() {
+        let m = Metrics::new();
+        m.record_enqueue(1);
+        m.record_enqueue(5);
+        m.record_enqueue(3);
+        let s = m.snapshot();
+        assert_eq!(s.queue_depth_max, 5);
+        assert!((s.queue_depth_mean - 3.0).abs() < 1e-12);
+    }
+
+    #[test]
+    fn store_resolution_counters() {
+        let m = Metrics::new();
+        m.record_store_resolution(true, false); // hit
+        m.record_store_resolution(false, true); // miss -> trained at boot
+        m.record_store_resolution(false, false); // miss -> agenda fallback
+        let s = m.snapshot();
+        assert_eq!(s.store_hits, 1);
+        assert_eq!(s.store_misses, 2);
+        assert_eq!(s.store_trained, 1);
+        assert_eq!(s.store_fallbacks, 1);
+        assert!((s.store_hit_rate() - 1.0 / 3.0).abs() < 1e-12);
     }
 }

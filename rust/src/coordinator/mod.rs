@@ -3,9 +3,11 @@
 //! * [`engine`] — cell-granularity batched execution of scheduled graphs
 //!   (PJRT artifacts on the hot path, plus a CPU reference backend used to
 //!   cross-check numerics in tests),
-//! * [`server`] — thread-based request router + dynamic batcher,
-//! * [`metrics`] — throughput/latency accounting,
-//! * [`policies`] — load/train/persist the per-workload FSM policies.
+//! * [`server`] — multi-workload request router over a worker pool
+//!   (per-workload queues, continuous full-or-timed-out dispatch),
+//! * [`metrics`] — throughput/latency/queue-depth/policy-store accounting,
+//! * [`policies`] — mode → policy resolution (persistence lives in
+//!   [`crate::policystore`]).
 
 pub mod engine;
 pub mod metrics;

@@ -1,21 +1,21 @@
-//! Policy store: build, train-or-load, and persist the per-workload
-//! batching policies (one per [`SystemMode`]).
+//! Mode → batching-policy resolution for serving and benches.
 //!
-//! Training happens once per (workload, encoding) before serving (paper §4:
-//! "Before execution, the RL algorithm learns the batching policy") and the
-//! learned Q-table is persisted to `artifacts/policy_<workload>.json` so
-//! subsequent boots skip training.
+//! Persistence lives in [`crate::policystore`]: training happens once per
+//! (workload, encoding) before serving (paper §4: "Before execution, the RL
+//! algorithm learns the batching policy") and the learned policy is stored
+//! as a versioned artifact keyed by the workload's op-type-space
+//! fingerprint. `load_or_train` is the store-backed train-or-load
+//! primitive; the serving scheduler does its own store resolution (with
+//! hit/miss/fallback accounting) in `server.rs`.
 
-use std::path::Path;
-
-use anyhow::{anyhow, Result};
+use anyhow::Result;
 
 use crate::batching::agenda::AgendaPolicy;
 use crate::batching::depth::DepthPolicy;
 use crate::batching::fsm::{Encoding, FsmPolicy};
 use crate::batching::{run_policy, Policy};
-use crate::rl::{train, TrainConfig, TrainStats};
-use crate::util::json::Json;
+use crate::policystore::{PolicyArtifact, PolicyStore};
+use crate::rl::{TrainConfig, TrainStats};
 use crate::util::rng::Rng;
 use crate::workloads::{Workload, WorkloadKind};
 
@@ -34,12 +34,7 @@ pub fn policy_for_mode(
     match mode {
         SystemMode::VanillaDyNet => Ok(Box::new(AgendaPolicy::new(nt))),
         SystemMode::CavsDyNet => {
-            let mut rng = Rng::new(seed);
-            let mut sample = workload.gen_batch(8, &mut rng);
-            sample.freeze();
-            let agenda = run_policy(&sample, nt, &mut AgendaPolicy::new(nt)).num_batches();
-            let depth = run_policy(&sample, nt, &mut DepthPolicy::new()).num_batches();
-            if depth < agenda {
+            if calibrate_prefers_depth(workload, seed) {
                 Ok(Box::new(DepthPolicy::new()))
             } else {
                 Ok(Box::new(AgendaPolicy::new(nt)))
@@ -54,11 +49,25 @@ pub fn policy_for_mode(
     }
 }
 
-pub fn policy_path(dir: &str, kind: WorkloadKind, encoding: Encoding) -> String {
-    format!("{dir}/policy_{}_{}.json", kind.name(), encoding.name())
+/// Cavs calibration: does depth-based batching beat agenda on a sample?
+pub fn calibrate_prefers_depth(workload: &Workload, seed: u64) -> bool {
+    let nt = workload.registry.num_types();
+    let mut rng = Rng::new(seed);
+    let mut sample = workload.gen_batch(8, &mut rng);
+    sample.freeze();
+    let agenda = run_policy(&sample, nt, &mut AgendaPolicy::new(nt)).num_batches();
+    let depth = run_policy(&sample, nt, &mut DepthPolicy::new()).num_batches();
+    depth < agenda
 }
 
-/// Load a persisted policy, or train one and persist it.
+/// Path the policy artifact for (workload, encoding) lives at inside `dir`
+/// (delete it to force a retrain).
+pub fn policy_path(dir: &str, kind: WorkloadKind, encoding: Encoding) -> String {
+    format!("{dir}/{}", PolicyArtifact::file_name(kind, encoding))
+}
+
+/// Load a persisted policy from the store at `dir`, or train one and
+/// persist it. `stats` is `Some` exactly when training ran.
 pub fn load_or_train(
     dir: &str,
     workload: &Workload,
@@ -66,19 +75,18 @@ pub fn load_or_train(
     cfg: &TrainConfig,
     seed: u64,
 ) -> Result<(FsmPolicy, Option<TrainStats>)> {
-    let path = policy_path(dir, workload.kind, encoding);
-    if Path::new(&path).exists() {
-        let text = std::fs::read_to_string(&path)?;
-        let j = Json::parse(&text).map_err(|e| anyhow!("policy json: {e}"))?;
-        let p = FsmPolicy::from_json(&j).map_err(|e| anyhow!("policy decode: {e}"))?;
-        return Ok((p, None));
+    // targeted single-file read first: avoids re-parsing every artifact in
+    // the store on each call (benches call this per workload x mode)
+    if let Some(artifact) = PolicyStore::read_artifact(dir, workload.kind, encoding)? {
+        if artifact.fingerprint
+            == crate::memory::graph_plan::registry_fingerprint(&workload.registry)
+        {
+            return Ok((artifact.policy, None));
+        }
     }
-    let (policy, stats) = train(workload, encoding, cfg, seed);
-    if let Some(parent) = Path::new(&path).parent() {
-        let _ = std::fs::create_dir_all(parent);
-    }
-    std::fs::write(&path, policy.to_json().to_string())?;
-    Ok((policy, Some(stats)))
+    let mut store = PolicyStore::open(dir)?;
+    let (artifact, stats) = store.train_into(workload, encoding, cfg, seed)?;
+    Ok((artifact.policy, Some(stats)))
 }
 
 #[cfg(test)]
@@ -88,6 +96,7 @@ mod tests {
     #[test]
     fn trains_then_loads_roundtrip() {
         let dir = std::env::temp_dir().join(format!("edbatch_pol_{}", std::process::id()));
+        let _ = std::fs::remove_dir_all(&dir);
         let dir = dir.to_str().unwrap().to_string();
         let w = Workload::new(WorkloadKind::TreeLstm, 32);
         let cfg = TrainConfig {
@@ -102,6 +111,26 @@ mod tests {
         assert!(stats2.is_none(), "second call loads");
         assert_eq!(p1.states.len(), p2.states.len());
         assert_eq!(p1.q.len(), p2.q.len());
+        let _ = std::fs::remove_dir_all(&dir);
+    }
+
+    #[test]
+    fn deleting_the_artifact_forces_retrain() {
+        let dir = std::env::temp_dir().join(format!("edbatch_pol_rm_{}", std::process::id()));
+        let _ = std::fs::remove_dir_all(&dir);
+        let dir = dir.to_str().unwrap().to_string();
+        let w = Workload::new(WorkloadKind::TreeGru, 32);
+        let cfg = TrainConfig {
+            max_iters: 80,
+            check_every: 20,
+            train_batch: 2,
+            ..TrainConfig::default()
+        };
+        let (_, s1) = load_or_train(&dir, &w, Encoding::Sort, &cfg, 3).unwrap();
+        assert!(s1.is_some());
+        std::fs::remove_file(policy_path(&dir, WorkloadKind::TreeGru, Encoding::Sort)).unwrap();
+        let (_, s2) = load_or_train(&dir, &w, Encoding::Sort, &cfg, 3).unwrap();
+        assert!(s2.is_some(), "artifact gone -> retrains");
         let _ = std::fs::remove_dir_all(&dir);
     }
 }

@@ -1,46 +1,79 @@
-//! The serving front-end: request router + dynamic batcher.
+//! The serving front-end: a multi-workload request router over a worker
+//! pool.
 //!
-//! A worker thread owns the engine (and the PJRT client, which is not
-//! shared across threads); clients submit instances through a channel and
-//! block on a per-request response channel. The batcher groups up to
-//! `max_batch` instances arriving within `batch_window` (classic
-//! size-or-timeout dynamic batching), merges their dataflow graphs, runs
-//! the configured batching policy, and executes.
+//! Requests are tagged with their [`WorkloadKind`] and land in a
+//! **per-workload queue**, so heterogeneous traffic (TreeLSTM + chain +
+//! lattice concurrently) batches under its own policy and memory plan
+//! instead of head-of-line blocking a single queue. A pool of N workers —
+//! each owning its own engine (and PJRT client, which is not shared across
+//! threads) — pulls mini-batches with **continuous dispatch**: an idle
+//! worker takes the next full-or-timed-out batch immediately (classic
+//! size-or-timeout batching, but with no lock-step batch window across
+//! workers).
+//!
+//! Batching policies are resolved **once at boot**: EdBatch mode loads
+//! learned FSM policies from a [`crate::policystore::PolicyStore`] by
+//! op-type-space fingerprint (training at boot and persisting on a miss
+//! when allowed, falling back to the agenda baseline otherwise — every
+//! outcome is counted in [`Metrics`]). No request ever trains in-band.
 //!
 //! (tokio is unavailable in this build environment — see Cargo.toml — so
-//! the router is built on std::sync::mpsc + threads; the architecture is
-//! the same as an async one: one logical task per request, one batcher.)
+//! the router is built on `Mutex<queues>` + `Condvar` + threads; the
+//! architecture is the same as an async one: one logical task per request,
+//! a shared dispatch state, N executor workers.)
 
-use std::sync::atomic::{AtomicBool, Ordering};
-use std::sync::mpsc::{sync_channel, Receiver, RecvTimeoutError, SyncSender};
-use std::sync::Arc;
+use std::collections::VecDeque;
+use std::sync::mpsc::{sync_channel, SyncSender};
+use std::sync::{Arc, Condvar, Mutex};
 use std::thread::JoinHandle;
 use std::time::{Duration, Instant};
 
-use anyhow::{anyhow, Result};
+use anyhow::{anyhow, bail, Result};
+use rustc_hash::FxHashMap;
 
-use crate::batching::fsm::Encoding;
+use crate::batching::agenda::AgendaPolicy;
+use crate::batching::depth::DepthPolicy;
+use crate::batching::fsm::{Encoding, FsmPolicy};
 use crate::batching::{run_policy, Policy};
 use crate::graph::Graph;
+use crate::policystore::PolicyStore;
+use crate::rl::TrainConfig;
 use crate::runtime::ArtifactRegistry;
 use crate::workloads::{Workload, WorkloadKind};
 
 use super::engine::{ArenaStateStore, Backend, CellEngine, ExecReport};
 use super::metrics::Metrics;
-use super::policies::policy_for_mode;
+use super::policies::calibrate_prefers_depth;
 use super::{SystemMode, TimeBreakdown};
+
+/// How long an idle worker sleeps between dispatch checks when no queue
+/// has a deadline pending (also bounds shutdown-flag latency).
+const IDLE_POLL: Duration = Duration::from_millis(20);
 
 #[derive(Clone, Debug)]
 pub struct ServerConfig {
-    pub workload: WorkloadKind,
+    /// workload kinds the front-end accepts; each gets its own queue,
+    /// policy, and memory-planning profile
+    pub workloads: Vec<WorkloadKind>,
     pub hidden: usize,
     pub mode: SystemMode,
     /// max instances per merged mini-batch
     pub max_batch: usize,
-    /// how long the batcher waits to fill a mini-batch
+    /// how long a queue's oldest request waits for company before an idle
+    /// worker dispatches the partial batch
     pub batch_window: Duration,
+    /// worker-pool size (each worker owns one engine)
+    pub workers: usize,
     /// artifacts directory; None = CPU reference backend
     pub artifacts_dir: Option<String>,
+    /// PolicyStore directory (EdBatch mode); None = train in memory at
+    /// boot without persistence
+    pub store_dir: Option<String>,
+    /// on a store miss, train + persist at boot instead of falling back to
+    /// the agenda baseline
+    pub train_on_miss: bool,
+    /// training budget for boot-time training (tests shrink this)
+    pub train_cfg: TrainConfig,
     pub encoding: Encoding,
     pub seed: u64,
 }
@@ -48,20 +81,37 @@ pub struct ServerConfig {
 impl Default for ServerConfig {
     fn default() -> Self {
         ServerConfig {
-            workload: WorkloadKind::TreeLstm,
+            workloads: vec![WorkloadKind::TreeLstm],
             hidden: 64,
             mode: SystemMode::EdBatch,
             max_batch: 32,
             batch_window: Duration::from_millis(2),
+            workers: 1,
             artifacts_dir: None,
+            store_dir: None,
+            train_on_miss: true,
+            train_cfg: TrainConfig::default(),
             encoding: Encoding::Sort,
             seed: 7,
         }
     }
 }
 
-/// One inference request: a single instance's dataflow graph.
+impl ServerConfig {
+    /// Single-workload convenience constructor.
+    pub fn single(workload: WorkloadKind, mode: SystemMode) -> ServerConfig {
+        ServerConfig {
+            workloads: vec![workload],
+            mode,
+            ..ServerConfig::default()
+        }
+    }
+}
+
+/// One inference request: a single instance's dataflow graph, tagged with
+/// the workload kind whose queue/policy it belongs to.
 pub struct Request {
+    pub kind: WorkloadKind,
     pub graph: Graph,
     submitted: Instant,
     respond: SyncSender<Response>,
@@ -75,151 +125,431 @@ pub struct Response {
     pub latency: Duration,
 }
 
-pub struct Server {
-    tx: SyncSender<Request>,
-    pub metrics: Arc<Metrics>,
-    stop: Arc<AtomicBool>,
-    handle: Option<JoinHandle<Result<()>>>,
+/// Shared dispatch state: per-workload FIFO queues + shutdown flag.
+struct DispatchState {
+    queues: FxHashMap<WorkloadKind, VecDeque<Request>>,
+    closed: bool,
 }
 
+impl DispatchState {
+    fn total_queued(&self) -> usize {
+        self.queues.values().map(|q| q.len()).sum()
+    }
+
+    /// Pick the next dispatchable mini-batch: a queue that is full
+    /// (`max_batch`) or whose oldest request has aged past `window` (any
+    /// nonempty queue when `flush`). Among eligible queues the one with
+    /// the oldest head wins (FIFO fairness across workloads).
+    fn take_ready(
+        &mut self,
+        now: Instant,
+        max_batch: usize,
+        window: Duration,
+        flush: bool,
+    ) -> Option<(WorkloadKind, Vec<Request>)> {
+        let mut pick: Option<(WorkloadKind, Instant)> = None;
+        for (&kind, q) in &self.queues {
+            let Some(front) = q.front() else { continue };
+            let ready =
+                flush || q.len() >= max_batch || now.duration_since(front.submitted) >= window;
+            if !ready {
+                continue;
+            }
+            let older = match pick {
+                None => true,
+                Some((_, oldest)) => front.submitted < oldest,
+            };
+            if older {
+                pick = Some((kind, front.submitted));
+            }
+        }
+        let (kind, _) = pick?;
+        let q = self.queues.get_mut(&kind).unwrap();
+        let take = q.len().min(max_batch);
+        Some((kind, q.drain(..take).collect()))
+    }
+
+    /// Earliest instant at which some queued request's window expires.
+    fn next_deadline(&self, window: Duration) -> Option<Instant> {
+        self.queues
+            .values()
+            .filter_map(|q| q.front().map(|r| r.submitted + window))
+            .min()
+    }
+}
+
+struct Dispatcher {
+    state: Mutex<DispatchState>,
+    cv: Condvar,
+}
+
+/// Boot-resolved policy prototype; each worker instantiates its own
+/// mutable copy (FSM inference interns states on the fly).
+#[derive(Clone)]
+enum PolicySeed {
+    Agenda,
+    Depth,
+    Fsm(FsmPolicy),
+}
+
+impl PolicySeed {
+    fn instantiate(&self, num_types: usize) -> Box<dyn Policy + Send> {
+        match self {
+            PolicySeed::Agenda => Box::new(AgendaPolicy::new(num_types)),
+            PolicySeed::Depth => Box::new(DepthPolicy::new()),
+            PolicySeed::Fsm(p) => Box::new(p.clone()),
+        }
+    }
+}
+
+pub struct Server {
+    dispatcher: Arc<Dispatcher>,
+    pub metrics: Arc<Metrics>,
+    handles: Vec<JoinHandle<Result<()>>>,
+}
+
+/// Handle for submitting requests of one workload kind.
 pub struct Client {
-    tx: SyncSender<Request>,
+    dispatcher: Arc<Dispatcher>,
+    metrics: Arc<Metrics>,
+    kind: WorkloadKind,
 }
 
 impl Client {
     /// Blocking inference call.
     pub fn infer(&self, graph: Graph) -> Result<Response> {
         let (rtx, rrx) = sync_channel(1);
-        self.tx
-            .send(Request {
+        {
+            let mut st = self.dispatcher.state.lock().unwrap();
+            if st.closed {
+                bail!("server stopped");
+            }
+            let q = st
+                .queues
+                .get_mut(&self.kind)
+                .ok_or_else(|| anyhow!("workload {} not served", self.kind.name()))?;
+            q.push_back(Request {
+                kind: self.kind,
                 graph,
                 submitted: Instant::now(),
                 respond: rtx,
-            })
-            .map_err(|_| anyhow!("server stopped"))?;
+            });
+            let depth = st.total_queued();
+            self.metrics.record_enqueue(depth);
+        }
+        self.dispatcher.cv.notify_one();
         rrx.recv().map_err(|_| anyhow!("server dropped request"))
     }
 }
 
 impl Server {
-    pub fn start(config: ServerConfig) -> Result<Server> {
+    pub fn start(mut config: ServerConfig) -> Result<Server> {
+        if config.workloads.is_empty() {
+            bail!("server needs at least one workload kind");
+        }
+        {
+            let mut seen = FxHashMap::default();
+            config.workloads.retain(|&k| seen.insert(k, ()).is_none());
+        }
+        config.workers = config.workers.max(1);
+
         let metrics = Arc::new(Metrics::new());
-        let (tx, rx) = sync_channel::<Request>(1024);
-        let (ready_tx, ready_rx) = sync_channel::<()>(1);
-        let m2 = metrics.clone();
-        let stop = Arc::new(AtomicBool::new(false));
-        let s2 = stop.clone();
-        let handle = std::thread::Builder::new()
-            .name("ed-batch-worker".into())
-            .spawn(move || worker_loop(config, rx, m2, s2, ready_tx))
-            .expect("spawn worker");
-        // block until the engine is built (artifacts compiled, policy
-        // trained/loaded) so boot time never counts as request latency
-        let _ = ready_rx.recv();
+        // resolve every workload's policy before any worker starts: store
+        // lookups, boot-time training, fallbacks — never in-request
+        let seeds = Arc::new(resolve_policies(&config, &metrics)?);
+
+        let dispatcher = Arc::new(Dispatcher {
+            state: Mutex::new(DispatchState {
+                queues: config
+                    .workloads
+                    .iter()
+                    .map(|&k| (k, VecDeque::new()))
+                    .collect(),
+                closed: false,
+            }),
+            cv: Condvar::new(),
+        });
+
+        let (ready_tx, ready_rx) = sync_channel::<Result<()>>(config.workers);
+        let mut handles = Vec::with_capacity(config.workers);
+        for wid in 0..config.workers {
+            let cfg = config.clone();
+            let d = dispatcher.clone();
+            let m = metrics.clone();
+            let s = seeds.clone();
+            let rtx = ready_tx.clone();
+            let handle = std::thread::Builder::new()
+                .name(format!("ed-batch-worker-{wid}"))
+                .spawn(move || worker_loop(cfg, d, m, s, rtx))
+                .expect("spawn worker");
+            handles.push(handle);
+        }
+        drop(ready_tx);
+        // block until every engine is built (artifacts compiled) so boot
+        // time never counts as request latency; surface boot failures now
+        for _ in 0..config.workers {
+            match ready_rx.recv() {
+                Ok(Ok(())) => {}
+                Ok(Err(e)) => {
+                    // tear down whatever booted
+                    let server = Server {
+                        dispatcher,
+                        metrics,
+                        handles,
+                    };
+                    let _ = server.shutdown();
+                    return Err(e);
+                }
+                Err(_) => {
+                    // a worker panicked before signalling: tear down the
+                    // rest of the pool instead of leaking polling threads
+                    let server = Server {
+                        dispatcher,
+                        metrics,
+                        handles,
+                    };
+                    let _ = server.shutdown();
+                    bail!("worker died during boot");
+                }
+            }
+        }
         metrics.reset_clock();
         Ok(Server {
-            tx,
+            dispatcher,
             metrics,
-            stop,
-            handle: Some(handle),
+            handles,
         })
     }
 
-    pub fn client(&self) -> Client {
+    /// A client handle for one of the served workload kinds.
+    pub fn client(&self, kind: WorkloadKind) -> Client {
         Client {
-            tx: self.tx.clone(),
+            dispatcher: self.dispatcher.clone(),
+            metrics: self.metrics.clone(),
+            kind,
         }
     }
 
-    /// Graceful shutdown: signal the worker and join it. In-flight
-    /// requests are completed; clients holding a [`Client`] afterwards
-    /// get an error on `infer`.
+    /// Graceful shutdown: close the queues, wake the pool, join every
+    /// worker. Already-queued requests are flushed and answered; clients
+    /// holding a [`Client`] afterwards get an error on `infer`.
     pub fn shutdown(mut self) -> Result<()> {
-        self.stop.store(true, Ordering::SeqCst);
-        drop(self.tx);
-        if let Some(h) = self.handle.take() {
-            h.join().map_err(|_| anyhow!("worker panicked"))??;
+        self.dispatcher.state.lock().unwrap().closed = true;
+        self.dispatcher.cv.notify_all();
+        let mut first_err = None;
+        for h in self.handles.drain(..) {
+            match h.join() {
+                Ok(Ok(())) => {}
+                Ok(Err(e)) => first_err = first_err.or(Some(e)),
+                Err(_) => first_err = first_err.or(Some(anyhow!("worker panicked"))),
+            }
         }
-        Ok(())
+        match first_err {
+            Some(e) => Err(e),
+            None => Ok(()),
+        }
     }
+}
+
+/// Resolve the batching policy for every configured workload (once, at
+/// boot). EdBatch consults the PolicyStore; outcomes are counted on
+/// `metrics` when a store is configured.
+fn resolve_policies(
+    config: &ServerConfig,
+    metrics: &Metrics,
+) -> Result<FxHashMap<WorkloadKind, PolicySeed>> {
+    let mut seeds = FxHashMap::default();
+    let mut store = match (&config.store_dir, config.mode) {
+        (Some(dir), SystemMode::EdBatch) => Some(PolicyStore::open(dir)?),
+        _ => None,
+    };
+    for &kind in &config.workloads {
+        let workload = Workload::new(kind, config.hidden);
+        let seed = match config.mode {
+            SystemMode::VanillaDyNet => PolicySeed::Agenda,
+            SystemMode::CavsDyNet => {
+                if calibrate_prefers_depth(&workload, config.seed) {
+                    PolicySeed::Depth
+                } else {
+                    PolicySeed::Agenda
+                }
+            }
+            SystemMode::EdBatch => match &mut store {
+                Some(store) => {
+                    if let Some(artifact) = store.lookup_workload(&workload, config.encoding) {
+                        metrics.record_store_resolution(true, false);
+                        PolicySeed::Fsm(artifact.policy.clone())
+                    } else if config.train_on_miss {
+                        let (artifact, _) = store.train_into(
+                            &workload,
+                            config.encoding,
+                            &config.train_cfg,
+                            config.seed,
+                        )?;
+                        metrics.record_store_resolution(false, true);
+                        PolicySeed::Fsm(artifact.policy)
+                    } else {
+                        // unseen topology, training disallowed: DyNet-style
+                        // agenda batching still serves it correctly
+                        metrics.record_store_resolution(false, false);
+                        PolicySeed::Agenda
+                    }
+                }
+                // no store configured: train in memory at boot (keeps
+                // EdBatch filesystem-free for unit tests and ad-hoc runs)
+                None => {
+                    let (policy, _) = crate::rl::train(
+                        &workload,
+                        config.encoding,
+                        &config.train_cfg,
+                        config.seed,
+                    );
+                    PolicySeed::Fsm(policy)
+                }
+            },
+        };
+        seeds.insert(kind, seed);
+    }
+    Ok(seeds)
+}
+
+/// Per-workload execution context owned by one worker.
+struct WorkerCtx {
+    workload: Workload,
+    policy: Box<dyn Policy + Send>,
+    charges: crate::benchsuite::fig6::CellCharges,
 }
 
 fn worker_loop(
     config: ServerConfig,
-    rx: Receiver<Request>,
+    dispatcher: Arc<Dispatcher>,
     metrics: Arc<Metrics>,
-    stop: Arc<AtomicBool>,
-    ready: SyncSender<()>,
+    seeds: Arc<FxHashMap<WorkloadKind, PolicySeed>>,
+    ready: SyncSender<Result<()>>,
 ) -> Result<()> {
-    let workload = Workload::new(config.workload, config.hidden);
-    let registry = match &config.artifacts_dir {
-        Some(dir) => {
-            let hidden = config.hidden;
-            Some(ArtifactRegistry::load(
-                dir,
-                Some(&move |k| k.hidden == hidden),
-            )?)
+    let boot = (|| -> Result<_> {
+        let mut ctxs: FxHashMap<WorkloadKind, WorkerCtx> = FxHashMap::default();
+        for &kind in &config.workloads {
+            let workload = Workload::new(kind, config.hidden);
+            let charges = crate::benchsuite::fig6::charges_for_mode(
+                config.mode,
+                &workload.registry,
+                config.hidden,
+            );
+            let policy = seeds[&kind].instantiate(workload.registry.num_types());
+            ctxs.insert(
+                kind,
+                WorkerCtx {
+                    workload,
+                    policy,
+                    charges,
+                },
+            );
         }
-        None => None,
+        let registry = match &config.artifacts_dir {
+            Some(dir) => {
+                let hidden = config.hidden;
+                Some(ArtifactRegistry::load(
+                    dir,
+                    Some(&move |k| k.hidden == hidden),
+                )?)
+            }
+            None => None,
+        };
+        Ok((ctxs, registry))
+    })();
+    let (mut ctxs, registry) = match boot {
+        Ok(v) => v,
+        Err(e) => {
+            let msg = format!("{e:#}");
+            let _ = ready.send(Err(e));
+            bail!("worker boot failed: {msg}");
+        }
     };
-    let mut engine = match &registry {
-        Some(reg) => CellEngine::new(Backend::Pjrt(reg), config.hidden, config.seed)?,
-        None => CellEngine::new(Backend::Cpu, config.hidden, config.seed)?,
+    let engine_res = match &registry {
+        Some(reg) => CellEngine::new(Backend::Pjrt(reg), config.hidden, config.seed),
+        None => CellEngine::new(Backend::Cpu, config.hidden, config.seed),
+    };
+    let mut engine = match engine_res {
+        Ok(e) => e,
+        Err(e) => {
+            let msg = format!("{e:#}");
+            let _ = ready.send(Err(e));
+            bail!("worker boot failed: {msg}");
+        }
     };
     // graph-level state layout: ED-Batch plans the arena with the PQ tree,
     // the DyNet baselines keep creation order + full gather/scatter
     engine.memory_mode = config.mode.memory_mode();
-    // apply the mode's in-cell memory/launch profile (same accounting the
-    // Fig.6/Fig.8 harnesses use)
-    let charges =
-        crate::benchsuite::fig6::charges_for_mode(config.mode, &workload.registry, config.hidden);
-    engine.in_cell_copy_elems = charges.copy_elems;
-    engine.extra_launches = charges.extra_launches;
-    let mut policy = policy_for_mode(
-        config.mode,
-        &workload,
-        config.encoding,
-        config.artifacts_dir.as_deref(),
-        config.seed,
-    )?;
-    let _ = ready.send(());
+    let _ = ready.send(Ok(()));
+    drop(ready);
 
-    loop {
-        // wait for the first request of a mini-batch, polling the stop flag
-        let first = loop {
-            if stop.load(Ordering::SeqCst) {
-                // drain anything already queued, then exit
-                match rx.try_recv() {
-                    Ok(r) => break r,
-                    Err(_) => return Ok(()),
-                }
-            }
-            match rx.recv_timeout(Duration::from_millis(20)) {
-                Ok(r) => break r,
-                Err(RecvTimeoutError::Timeout) => continue,
-                Err(RecvTimeoutError::Disconnected) => return Ok(()),
-            }
-        };
-        let mut pending = vec![first];
-        let deadline = Instant::now() + config.batch_window;
-        while pending.len() < config.max_batch {
-            let now = Instant::now();
-            if now >= deadline {
-                break;
-            }
-            match rx.recv_timeout(deadline - now) {
-                Ok(r) => pending.push(r),
-                Err(RecvTimeoutError::Timeout) => break,
-                Err(RecvTimeoutError::Disconnected) => break,
-            }
+    // continuous dispatch: grab the next ready batch the moment we go idle
+    let mut current_kind: Option<WorkloadKind> = None;
+    while let Some((kind, pending)) =
+        next_batch(&dispatcher, config.max_batch, config.batch_window)
+    {
+        let ctx = ctxs.get_mut(&kind).expect("queue implies context");
+        // apply this workload's in-cell memory/launch profile (same
+        // accounting the Fig.6/Fig.8 harnesses use); skip the map clones
+        // when consecutive batches are the same kind (the common case)
+        if current_kind != Some(kind) {
+            engine.in_cell_copy_elems = ctx.charges.copy_elems.clone();
+            engine.extra_launches = ctx.charges.extra_launches.clone();
+            current_kind = Some(kind);
         }
-        process_minibatch(
-            &workload,
+        let result = process_minibatch(
+            &ctx.workload,
             &mut engine,
-            policy.as_mut(),
+            ctx.policy.as_mut(),
             &metrics,
             pending,
-        )?;
+        );
+        if let Err(e) = result {
+            // fail-stop: close the server so blocked and future clients get
+            // an error instead of hanging on a dead queue (the failing
+            // batch's requests were dropped above, unblocking their
+            // clients; clearing the queues unblocks the rest)
+            let mut st = dispatcher.state.lock().unwrap();
+            st.closed = true;
+            for q in st.queues.values_mut() {
+                q.clear();
+            }
+            drop(st);
+            dispatcher.cv.notify_all();
+            return Err(e);
+        }
+    }
+    Ok(())
+}
+
+/// Block until a mini-batch is dispatchable (or the server is closed and
+/// drained). Returns `None` exactly when the worker should exit.
+fn next_batch(
+    dispatcher: &Dispatcher,
+    max_batch: usize,
+    window: Duration,
+) -> Option<(WorkloadKind, Vec<Request>)> {
+    let mut st = dispatcher.state.lock().unwrap();
+    loop {
+        let now = Instant::now();
+        let flush = st.closed;
+        if let Some(batch) = st.take_ready(now, max_batch, window, flush) {
+            return Some(batch);
+        }
+        if st.closed {
+            return None; // closed and fully drained
+        }
+        let wait = st
+            .next_deadline(window)
+            .map(|d| d.saturating_duration_since(now))
+            .unwrap_or(IDLE_POLL)
+            .min(IDLE_POLL);
+        let (guard, _) = dispatcher
+            .cv
+            .wait_timeout(st, wait.max(Duration::from_micros(100)))
+            .unwrap();
+        st = guard;
     }
 }
 
@@ -277,7 +607,7 @@ fn process_minibatch(
             .map(|j| store.h(j).to_vec())
             .collect();
         let latency = req.submitted.elapsed();
-        metrics.record_request(latency);
+        metrics.record_request(req.kind.name(), latency);
         let _ = req.respond.send(Response {
             sink_outputs,
             latency,
@@ -291,14 +621,27 @@ mod tests {
     use super::*;
     use crate::util::rng::Rng;
 
+    fn quick_train_cfg() -> TrainConfig {
+        TrainConfig {
+            max_iters: 120,
+            check_every: 20,
+            train_batch: 2,
+            ..TrainConfig::default()
+        }
+    }
+
     fn quick_config(mode: SystemMode) -> ServerConfig {
         ServerConfig {
-            workload: WorkloadKind::TreeLstm,
+            workloads: vec![WorkloadKind::TreeLstm],
             hidden: 32,
             mode,
             max_batch: 8,
             batch_window: Duration::from_millis(1),
+            workers: 1,
             artifacts_dir: None, // CPU backend for unit tests
+            store_dir: None,     // filesystem-free: trains in memory
+            train_on_miss: true,
+            train_cfg: quick_train_cfg(),
             encoding: Encoding::Sort,
             seed: 3,
         }
@@ -306,11 +649,8 @@ mod tests {
 
     #[test]
     fn serves_requests_cpu_backend() {
-        // NOTE: EdBatch mode would train + persist a policy; use Cavs here
-        // to keep unit tests filesystem-free. EdBatch covered in
-        // integration tests with a temp dir.
         let server = Server::start(quick_config(SystemMode::CavsDyNet)).unwrap();
-        let client = server.client();
+        let client = server.client(WorkloadKind::TreeLstm);
         let w = Workload::new(WorkloadKind::TreeLstm, 32);
         let mut rng = Rng::new(1);
         for _ in 0..5 {
@@ -326,6 +666,22 @@ mod tests {
     }
 
     #[test]
+    fn ed_batch_mode_needs_no_filesystem() {
+        // EdBatch with no store dir trains in memory at boot — the old
+        // single-worker server silently substituted Cavs here
+        let server = Server::start(quick_config(SystemMode::EdBatch)).unwrap();
+        let client = server.client(WorkloadKind::TreeLstm);
+        let w = Workload::new(WorkloadKind::TreeLstm, 32);
+        let mut rng = Rng::new(2);
+        let resp = client.infer(w.gen_instance(&mut rng)).unwrap();
+        assert!(!resp.sink_outputs.is_empty());
+        let snap = server.metrics.snapshot();
+        // no store configured -> no store counters
+        assert_eq!(snap.store_hits + snap.store_misses, 0);
+        server.shutdown().unwrap();
+    }
+
+    #[test]
     fn concurrent_clients_get_batched() {
         let mut cfg = quick_config(SystemMode::CavsDyNet);
         cfg.batch_window = Duration::from_millis(20);
@@ -333,7 +689,7 @@ mod tests {
         let w = Arc::new(Workload::new(WorkloadKind::TreeLstm, 32));
         let mut handles = Vec::new();
         for t in 0..6 {
-            let client = server.client();
+            let client = server.client(WorkloadKind::TreeLstm);
             let w = w.clone();
             handles.push(std::thread::spawn(move || {
                 let mut rng = Rng::new(100 + t);
@@ -349,13 +705,112 @@ mod tests {
         assert_eq!(snap.requests, 6);
         // the 20ms window should have merged several requests per mini-batch
         assert!(snap.instances >= 6);
+        assert!(snap.queue_depth_max >= 1);
         server.shutdown().unwrap();
     }
 
     #[test]
+    fn worker_pool_serves_mixed_workloads() {
+        let cfg = ServerConfig {
+            workloads: vec![WorkloadKind::TreeLstm, WorkloadKind::BiLstmTagger],
+            workers: 2,
+            hidden: 32,
+            mode: SystemMode::CavsDyNet,
+            max_batch: 4,
+            batch_window: Duration::from_millis(2),
+            train_cfg: quick_train_cfg(),
+            ..ServerConfig::default()
+        };
+        let server = Server::start(cfg).unwrap();
+        let mut handles = Vec::new();
+        for (t, kind) in [WorkloadKind::TreeLstm, WorkloadKind::BiLstmTagger]
+            .into_iter()
+            .cycle()
+            .take(6)
+            .enumerate()
+        {
+            let client = server.client(kind);
+            handles.push(std::thread::spawn(move || {
+                let w = Workload::new(kind, 32);
+                let mut rng = Rng::new(500 + t as u64);
+                for _ in 0..3 {
+                    let resp = client.infer(w.gen_instance(&mut rng)).unwrap();
+                    assert!(!resp.sink_outputs.is_empty());
+                }
+            }));
+        }
+        for h in handles {
+            h.join().unwrap();
+        }
+        let snap = server.metrics.snapshot();
+        assert_eq!(snap.requests, 18);
+        assert_eq!(snap.per_workload.len(), 2);
+        assert_eq!(snap.per_workload[0].workload, "bilstm-tagger");
+        assert_eq!(snap.per_workload[1].workload, "treelstm");
+        assert_eq!(
+            snap.per_workload.iter().map(|w| w.requests).sum::<u64>(),
+            18
+        );
+        server.shutdown().unwrap();
+    }
+
+    #[test]
+    fn unknown_workload_is_rejected() {
+        let server = Server::start(quick_config(SystemMode::CavsDyNet)).unwrap();
+        let client = server.client(WorkloadKind::LatticeLstm); // not configured
+        let w = Workload::new(WorkloadKind::LatticeLstm, 32);
+        let mut rng = Rng::new(9);
+        let err = client.infer(w.gen_instance(&mut rng)).unwrap_err();
+        assert!(err.to_string().contains("not served"), "{err}");
+        server.shutdown().unwrap();
+    }
+
+    #[test]
+    fn store_resolution_counters_on_boot() {
+        let dir = std::env::temp_dir().join(format!("edbatch_srv_store_{}", std::process::id()));
+        let _ = std::fs::remove_dir_all(&dir);
+        let dirs = dir.to_str().unwrap().to_string();
+        // pre-train only TreeLstm into the store
+        let mut store = PolicyStore::open(&dirs).unwrap();
+        let w = Workload::new(WorkloadKind::TreeLstm, 32);
+        store
+            .train_into(&w, Encoding::Sort, &quick_train_cfg(), 3)
+            .unwrap();
+        drop(store);
+
+        let cfg = ServerConfig {
+            workloads: vec![WorkloadKind::TreeLstm, WorkloadKind::TreeGru],
+            hidden: 32,
+            mode: SystemMode::EdBatch,
+            store_dir: Some(dirs.clone()),
+            train_on_miss: false, // TreeGru miss must fall back, not train
+            max_batch: 4,
+            batch_window: Duration::from_millis(1),
+            train_cfg: quick_train_cfg(),
+            ..ServerConfig::default()
+        };
+        let server = Server::start(cfg).unwrap();
+        let snap = server.metrics.snapshot();
+        assert_eq!(snap.store_hits, 1);
+        assert_eq!(snap.store_misses, 1);
+        assert_eq!(snap.store_fallbacks, 1);
+        assert_eq!(snap.store_trained, 0);
+        // the fallback workload still serves correctly (agenda baseline)
+        let client = server.client(WorkloadKind::TreeGru);
+        let w = Workload::new(WorkloadKind::TreeGru, 32);
+        let mut rng = Rng::new(4);
+        let resp = client.infer(w.gen_instance(&mut rng)).unwrap();
+        assert!(!resp.sink_outputs.is_empty());
+        server.shutdown().unwrap();
+        let _ = std::fs::remove_dir_all(&dir);
+    }
+
+    #[test]
     fn vanilla_mode_works() {
-        let server = Server::start(quick_config(SystemMode::VanillaDyNet)).unwrap();
-        let client = server.client();
+        let mut cfg = quick_config(SystemMode::VanillaDyNet);
+        cfg.workloads = vec![WorkloadKind::BiLstmTagger];
+        let server = Server::start(cfg).unwrap();
+        let client = server.client(WorkloadKind::BiLstmTagger);
         let w = Workload::new(WorkloadKind::BiLstmTagger, 32);
         let mut rng = Rng::new(5);
         let resp = client.infer(w.gen_instance(&mut rng)).unwrap();

@@ -17,9 +17,11 @@ use crate::util::rng::Rng;
 pub const NUM_CLASSES: usize = 32;
 
 /// Deterministic near-identity MV matrix for nodes without a real M
-/// (sources / degenerate children): written into `buf` (`h * h` elements).
-/// Single source of truth — the arena materialization at source execution
-/// and the gather fallback must generate bit-identical values.
+/// (sources / degenerate children): written into `buf` (`h * h` elements),
+/// keyed on an *instance-local* node id (callers pass `Graph::local_id`) so
+/// values are batch-invariant. Single source of truth — the arena
+/// materialization at source execution and the gather fallback must
+/// generate bit-identical values.
 pub fn near_identity_matrix_into(buf: &mut [f32], h: usize, node: NodeId) {
     let mut rng = Rng::new(0x33AA ^ node.0 as u64);
     for r in 0..h {

@@ -144,6 +144,11 @@ pub struct Node {
 pub struct Graph {
     pub nodes: Vec<Node>,
     succs: Option<SuccTable>,
+    /// per-node index *within its instance* (filled at [`Graph::freeze`]).
+    /// Stable under [`Graph::merge`]: the same instance graph keeps the same
+    /// local ids at any merge offset, so anything keyed on them (source
+    /// embeddings, materialized MV matrices) is batch-invariant.
+    local_ids: Vec<u32>,
 }
 
 /// CSR successor table.
@@ -215,6 +220,15 @@ impl Graph {
         if self.succs.is_some() {
             return;
         }
+        // instance-local ids: node index minus the first index seen for its
+        // instance (merge shifts both by the same offset, so they cancel)
+        let mut first_seen: FxHashMap<u32, u32> = FxHashMap::default();
+        self.local_ids = self
+            .nodes
+            .iter()
+            .enumerate()
+            .map(|(i, node)| i as u32 - *first_seen.entry(node.instance).or_insert(i as u32))
+            .collect();
         let n = self.nodes.len();
         let mut counts = vec![0u32; n + 1];
         for node in &self.nodes {
@@ -235,6 +249,17 @@ impl Graph {
             }
         }
         self.succs = Some(SuccTable { offsets, targets });
+    }
+
+    /// Node `id`'s index within its own instance (requires [`Graph::freeze`]).
+    /// Deterministic per instance topology regardless of where the instance
+    /// landed in a merged mini-batch.
+    pub fn local_id(&self, id: NodeId) -> u32 {
+        debug_assert!(
+            self.succs.is_some(),
+            "call freeze() before querying local ids"
+        );
+        self.local_ids[id.idx()]
     }
 
     pub fn succs(&self, id: NodeId) -> &[NodeId] {
@@ -369,6 +394,26 @@ mod tests {
         assert_eq!(a.node(NodeId(7)).preds, vec![NodeId(5), NodeId(6)]);
         assert_eq!(a.node(NodeId(7)).instance, 1);
         assert!(a.validate().is_ok());
+    }
+
+    #[test]
+    fn local_ids_stable_under_merge() {
+        let mut single = diamond();
+        single.freeze();
+        let mut merged = diamond();
+        merged.merge(&diamond());
+        merged.merge(&diamond());
+        merged.freeze();
+        for inst in 0..3u32 {
+            let off = 4 * inst;
+            for i in 0..4u32 {
+                assert_eq!(
+                    merged.local_id(NodeId(off + i)),
+                    single.local_id(NodeId(i)),
+                    "instance {inst} node {i}"
+                );
+            }
+        }
     }
 
     #[test]

@@ -17,8 +17,10 @@
 //!   - [`exec`] — the [`exec::backend::ExecBackend`] trait with CPU
 //!     reference and PJRT implementations, primitive CPU kernels, and the
 //!     static-subgraph executor behind Table 2,
+//!   - [`policystore`] — versioned on-disk artifacts of learned policies,
+//!     keyed by op-type-space fingerprint (train once, serve forever),
 //!   - [`coordinator`] — the cell engine executing schedules over the
-//!     planned arena, the thread-based serving front-end, and metrics,
+//!     planned arena, the multi-worker serving front-end, and metrics,
 //!   - [`runtime`] — PJRT artifact loading/compilation,
 //!   - [`workloads`], [`subgraph`], [`benchsuite`] — the paper's
 //!     evaluation surface.
@@ -35,6 +37,7 @@ pub mod coordinator;
 pub mod exec;
 pub mod graph;
 pub mod memory;
+pub mod policystore;
 pub mod pqtree;
 pub mod rl;
 pub mod runtime;

@@ -1,28 +1,29 @@
 //! `ed-batch` — CLI for the ED-Batch reproduction.
 //!
 //! ```text
-//! ed-batch bench <fig6|fig8|fig9|table2|table3|table4|table5|all> [--fast]
-//!          serve  --workload treelstm [--mode ed-batch] [--hidden 64] ...
-//!          train-policy --workload treelstm [--encoding sort]
+//! ed-batch bench <fig6|fig8|fig9|table2|table3|table4|table5|serving|all> [--fast]
+//!          train  --workload treelstm[,bilstm-tagger|all] [--store DIR]
+//!          serve  --workloads treelstm,bilstm-tagger [--workers 4] [--store DIR]
 //!          inspect --workload treelstm           # graph stats + schedules
 //! ```
 
-use anyhow::{anyhow, Result};
+use anyhow::{anyhow, bail, Result};
 
 use ed_batch::batching::agenda::AgendaPolicy;
 use ed_batch::batching::depth::DepthPolicy;
 use ed_batch::batching::fsm::{Encoding, FsmPolicy};
 use ed_batch::batching::oracle::SufficientConditionPolicy;
 use ed_batch::batching::run_policy;
-use ed_batch::memory::graph_plan::GraphMemoryPlan;
-use ed_batch::memory::MemoryMode;
 use ed_batch::benchsuite::{self, BenchOpts};
 use ed_batch::coordinator::server::{Server, ServerConfig};
 use ed_batch::coordinator::SystemMode;
+use ed_batch::memory::graph_plan::GraphMemoryPlan;
+use ed_batch::memory::MemoryMode;
+use ed_batch::policystore::PolicyStore;
 use ed_batch::rl::TrainConfig;
 use ed_batch::util::cli::Args;
 use ed_batch::util::rng::Rng;
-use ed_batch::workloads::{Workload, WorkloadKind};
+use ed_batch::workloads::{Workload, WorkloadKind, ALL_WORKLOADS};
 
 fn main() {
     let args = Args::from_env();
@@ -40,16 +41,18 @@ fn run(args: &Args) -> Result<()> {
     match args.positional.first().map(|s| s.as_str()) {
         Some("bench") => bench(args),
         Some("serve") => serve(args),
-        Some("train-policy") => train_policy(args),
+        Some("train") | Some("train-policy") => train(args),
         Some("inspect") => inspect(args),
         _ => {
             println!(
                 "ed-batch — FSM-batched dynamic-DNN serving (ICML'23 reproduction)\n\n\
                  usage:\n  \
-                 ed-batch bench <fig6|fig8|fig9|table2|table3|table4|table5|all> [--fast] [--hidden N]\n  \
-                 ed-batch serve --workload <name> [--mode ed-batch|cavs-dynet|vanilla-dynet]\n             \
+                 ed-batch bench <fig6|fig8|fig9|table2|table3|table4|table5|serving|all> [--fast] [--hidden N]\n  \
+                 ed-batch train --workload <name[,name...]|all> [--encoding base|max|sort]\n             \
+                 [--store DIR] [--hidden N] [--max-iters N] [--force]\n  \
+                 ed-batch serve --workloads <name[,name...]> [--mode ed-batch|cavs-dynet|vanilla-dynet]\n             \
+                 [--workers N] [--store DIR] [--no-train-on-miss] [--require-store-hits]\n             \
                  [--hidden N] [--requests N] [--max-batch N] [--no-pjrt]\n  \
-                 ed-batch train-policy --workload <name> [--encoding base|max|sort]\n  \
                  ed-batch inspect --workload <name> [--instances N]\n\n\
                  workloads: bilstm-tagger bilstm-tagger-withchar lstm-nmt treelstm treegru\n            \
                  mv-rnn treelstm-2type lattice-lstm lattice-gru"
@@ -87,11 +90,17 @@ fn bench(args: &Args) -> Result<()> {
                 Ok(())
             }
             "table5" => benchsuite::table5::run(&opts).map(|_| ()),
+            "serving" => {
+                benchsuite::serving::run(&opts);
+                Ok(())
+            }
             other => Err(anyhow!("unknown bench target '{other}'")),
         }
     };
     if which == "all" {
-        for name in ["fig9", "table2", "table3", "table4", "fig8", "fig6", "table5"] {
+        for name in [
+            "fig9", "table2", "table3", "table4", "fig8", "fig6", "table5", "serving",
+        ] {
             run_one(name)?;
         }
         Ok(())
@@ -105,8 +114,84 @@ fn workload_from(args: &Args) -> Result<WorkloadKind> {
     WorkloadKind::from_name(name).ok_or_else(|| anyhow!("unknown workload '{name}'"))
 }
 
+/// Parse `--workloads a,b,c` (falling back to `--workload`, which also
+/// accepts a comma list or `all`).
+fn workload_list(args: &Args, default: &str) -> Result<Vec<WorkloadKind>> {
+    let spec = args
+        .get("workloads")
+        .or_else(|| args.get("workload"))
+        .unwrap_or(default);
+    if spec == "all" {
+        return Ok(ALL_WORKLOADS.to_vec());
+    }
+    spec.split(',')
+        .map(|s| s.trim())
+        .filter(|s| !s.is_empty())
+        .map(|name| {
+            WorkloadKind::from_name(name).ok_or_else(|| anyhow!("unknown workload '{name}'"))
+        })
+        .collect()
+}
+
+/// Default PolicyStore location (shared by `train` and `serve`).
+const DEFAULT_STORE: &str = "artifacts/policystore";
+
+fn train(args: &Args) -> Result<()> {
+    let kinds = workload_list(args, "all")?;
+    let hidden = args.usize("hidden", 64);
+    let encoding = Encoding::from_name(args.get_or("encoding", "sort"))
+        .ok_or_else(|| anyhow!("bad encoding"))?;
+    let cfg = TrainConfig {
+        max_iters: args.usize("max-iters", 1000),
+        ..TrainConfig::default()
+    };
+    let dir = args.get_or("store", DEFAULT_STORE);
+    let seed = args.u64("seed", 7);
+    let force = args.flag("force");
+
+    let mut store = PolicyStore::open(dir)?;
+    println!(
+        "training {} workload(s) into policy store {dir} (encoding={}, hidden={hidden})",
+        kinds.len(),
+        encoding.name()
+    );
+    for kind in kinds {
+        let w = Workload::new(kind, hidden);
+        if !force {
+            if let Some(a) = store.lookup_workload(&w, encoding) {
+                println!(
+                    "  {:<22} cached ({} states, greedy {} vs lb {}) — use --force to retrain",
+                    kind.name(),
+                    a.training.num_states,
+                    a.training.greedy_batches,
+                    a.training.lower_bound,
+                );
+                continue;
+            }
+        }
+        let (artifact, stats) = store.train_into(&w, encoding, &cfg, seed)?;
+        println!(
+            "  {:<22} {} iters in {:.3}s, {} states, greedy {} batches (lower bound {}){} -> {}",
+            kind.name(),
+            stats.iterations,
+            stats.wall_time_s,
+            stats.num_states,
+            stats.greedy_batches,
+            stats.lower_bound,
+            if stats.reached_lower_bound {
+                ""
+            } else {
+                " [above bound]"
+            },
+            ed_batch::policystore::PolicyArtifact::file_name(artifact.workload, artifact.encoding),
+        );
+    }
+    println!("store now holds {} polic(ies)", store.len());
+    Ok(())
+}
+
 fn serve(args: &Args) -> Result<()> {
-    let kind = workload_from(args)?;
+    let kinds = workload_list(args, "treelstm")?;
     let hidden = args.usize("hidden", 64);
     let mode = match args.get_or("mode", "ed-batch") {
         "ed-batch" => SystemMode::EdBatch,
@@ -115,57 +200,90 @@ fn serve(args: &Args) -> Result<()> {
         m => return Err(anyhow!("unknown mode '{m}'")),
     };
     let requests = args.usize("requests", 256);
+    let workers = args.usize("workers", 2);
     let config = ServerConfig {
-        workload: kind,
+        workloads: kinds.clone(),
         hidden,
         mode,
         max_batch: args.usize("max-batch", 32),
         batch_window: std::time::Duration::from_millis(args.u64("window-ms", 2)),
+        workers,
         artifacts_dir: if args.flag("no-pjrt") {
             None
         } else {
             Some(args.get_or("artifacts", "artifacts").to_string())
+        },
+        store_dir: Some(args.get_or("store", DEFAULT_STORE).to_string()),
+        train_on_miss: !args.flag("no-train-on-miss"),
+        train_cfg: TrainConfig {
+            max_iters: args.usize("max-iters", 1000),
+            ..TrainConfig::default()
         },
         encoding: Encoding::from_name(args.get_or("encoding", "sort"))
             .ok_or_else(|| anyhow!("bad encoding"))?,
         seed: args.u64("seed", 7),
     };
     println!(
-        "serving {} (mode={}, hidden={hidden}, pjrt={})",
-        kind.name(),
+        "serving {} workload(s) [{}] (mode={}, hidden={hidden}, workers={workers}, pjrt={}, store={})",
+        kinds.len(),
+        kinds.iter().map(|k| k.name()).collect::<Vec<_>>().join(","),
         mode.name(),
-        config.artifacts_dir.is_some()
+        config.artifacts_dir.is_some(),
+        config.store_dir.as_deref().unwrap_or("-"),
     );
     let server = Server::start(config)?;
-    let w = Workload::new(kind, hidden);
-    let clients = args.usize("clients", 4);
-    let per_client = requests / clients.max(1);
+
+    // load generation: N clients per workload kind, each a thread
+    let clients_per_kind = args.usize("clients", 2).max(1);
+    let per_client = (requests / (kinds.len() * clients_per_kind)).max(1);
     let mut handles = Vec::new();
-    for c in 0..clients {
-        let client = server.client();
-        let w = Workload::new(kind, hidden);
-        let seed = args.u64("seed", 7) + c as u64;
-        handles.push(std::thread::spawn(move || {
-            let mut rng = Rng::new(seed);
-            for _ in 0..per_client {
-                let g = w.gen_instance(&mut rng);
-                client.infer(g).expect("infer");
-            }
-        }));
+    for (i, &kind) in kinds.iter().enumerate() {
+        for c in 0..clients_per_kind {
+            let client = server.client(kind);
+            let seed = args.u64("seed", 7) + (i * clients_per_kind + c) as u64;
+            handles.push(std::thread::spawn(move || {
+                let w = Workload::new(kind, hidden);
+                let mut rng = Rng::new(seed);
+                for _ in 0..per_client {
+                    let g = w.gen_instance(&mut rng);
+                    client.infer(g).expect("infer");
+                }
+            }));
+        }
     }
     for h in handles {
         h.join().map_err(|_| anyhow!("client panicked"))?;
     }
+
     let snap = server.metrics.snapshot();
     println!(
-        "done: {} requests, {:.1} inst/s, p50 {:.2}ms p99 {:.2}ms | batches {}, kernels {}, padded lanes {}",
+        "done: {} requests, {:.1} inst/s | p50 {:.2}ms p95 {:.2}ms p99 {:.2}ms | batches {}, kernels {}, padded lanes {}",
         snap.requests,
         snap.throughput(),
         snap.latency_p50_s * 1e3,
+        snap.latency_p95_s * 1e3,
         snap.latency_p99_s * 1e3,
         snap.batches_executed,
         snap.kernel_calls,
         snap.padded_lanes,
+    );
+    for row in &snap.per_workload {
+        println!(
+            "  {:<24} {:>6} req | p50 {:.2}ms p99 {:.2}ms",
+            row.workload,
+            row.requests,
+            row.p50_s * 1e3,
+            row.p99_s * 1e3,
+        );
+    }
+    println!(
+        "policy store: {} hits, {} misses ({} trained at boot, {} agenda fallbacks) | queue depth mean {:.1} max {}",
+        snap.store_hits,
+        snap.store_misses,
+        snap.store_trained,
+        snap.store_fallbacks,
+        snap.queue_depth_mean,
+        snap.queue_depth_max,
     );
     println!(
         "memory: memcpy {:.2} MB ({:.1} kB/req), copies avoided {:.2} MB ({:.1} kB/req, {:.0}% of baseline)",
@@ -182,37 +300,16 @@ fn serve(args: &Args) -> Result<()> {
         snap.breakdown.planning_s * 1e3,
         snap.breakdown.execution_s * 1e3
     );
-    let _ = w;
-    server.shutdown()
-}
-
-fn train_policy(args: &Args) -> Result<()> {
-    let kind = workload_from(args)?;
-    let hidden = args.usize("hidden", 64);
-    let encoding = Encoding::from_name(args.get_or("encoding", "sort"))
-        .ok_or_else(|| anyhow!("bad encoding"))?;
-    let w = Workload::new(kind, hidden);
-    let cfg = TrainConfig {
-        max_iters: args.usize("max-iters", 1000),
-        ..TrainConfig::default()
-    };
-    let dir = args.get_or("artifacts", "artifacts");
-    let path = ed_batch::coordinator::policies::policy_path(dir, kind, encoding);
-    let _ = std::fs::remove_file(&path); // force retrain
-    let seed = args.u64("seed", 7);
-    let (policy, stats) =
-        ed_batch::coordinator::policies::load_or_train(dir, &w, encoding, &cfg, seed)?;
-    let stats = stats.expect("trained");
-    println!(
-        "trained {} ({}): {} iters in {:.3}s, {} states, greedy {} batches (lower bound {}), saved to {path}",
-        kind.name(),
-        encoding.name(),
-        stats.iterations,
-        stats.wall_time_s,
-        policy.states.len(),
-        stats.greedy_batches,
-        stats.lower_bound,
-    );
+    server.shutdown()?;
+    // CI smoke gate: with a pre-trained store, serving must never miss
+    if args.flag("require-store-hits") && snap.store_misses > 0 {
+        bail!(
+            "--require-store-hits: {} store miss(es) ({} fallbacks, {} boot trainings)",
+            snap.store_misses,
+            snap.store_fallbacks,
+            snap.store_trained
+        );
+    }
     Ok(())
 }
 

@@ -411,6 +411,31 @@ pub fn fingerprint(
     acc
 }
 
+/// Structural fingerprint of a workload's op-type space — the key persisted
+/// policies are stored and looked up under (see `crate::policystore`). Mixes
+/// the type count and every type's name + cell kind in id order (the FSM's
+/// actions are positional type ids, so a permuted registry must never match)
+/// but *not* tensor widths: the batching policy is purely topological and
+/// transfers across hidden sizes.
+pub fn registry_fingerprint(types: &TypeRegistry) -> u64 {
+    const FNV_PRIME: u64 = 0x100000001b3;
+    let mut acc = 0xcbf29ce484222325u64;
+    let mut mix = |v: u64| {
+        acc ^= v;
+        acc = acc.wrapping_mul(FNV_PRIME);
+    };
+    mix(types.num_types() as u64);
+    for t in types.types() {
+        let info = types.info(t);
+        for b in info.name.bytes() {
+            mix(b as u64);
+        }
+        mix(0x1F); // name terminator (no name byte collides with it)
+        mix(cell_tag(info.cell));
+    }
+    acc
+}
+
 fn cell_tag(kind: crate::graph::CellKind) -> u64 {
     use crate::graph::CellKind::*;
     match kind {
@@ -562,6 +587,28 @@ mod tests {
         assert_ne!(
             f(&g1, &s1, MemoryMode::Planned),
             f(&g2, &s2, MemoryMode::Planned)
+        );
+    }
+
+    #[test]
+    fn registry_fingerprint_keys_on_type_space_not_widths() {
+        // distinct workloads -> distinct keys; same workload at different
+        // hidden sizes -> the same key (the FSM transfers across widths)
+        let tree16 = Workload::new(WorkloadKind::TreeLstm, 16);
+        let tree64 = Workload::new(WorkloadKind::TreeLstm, 64);
+        let lattice = Workload::new(WorkloadKind::LatticeLstm, 16);
+        let chain = Workload::new(WorkloadKind::BiLstmTagger, 16);
+        assert_eq!(
+            registry_fingerprint(&tree16.registry),
+            registry_fingerprint(&tree64.registry)
+        );
+        assert_ne!(
+            registry_fingerprint(&tree16.registry),
+            registry_fingerprint(&lattice.registry)
+        );
+        assert_ne!(
+            registry_fingerprint(&chain.registry),
+            registry_fingerprint(&lattice.registry)
         );
     }
 

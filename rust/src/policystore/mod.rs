@@ -1,0 +1,476 @@
+//! PolicyStore — durable, shareable learned-FSM batching policies.
+//!
+//! ED-Batch's premise is that a batching policy is learned *once per DNN*
+//! and reused at execution time (paper §4: "Before execution, the RL
+//! algorithm learns the batching policy"). This module makes the learned
+//! artifact durable: a versioned on-disk directory of policy artifacts,
+//! each carrying the Q-table + state encoding, the op-type-space
+//! fingerprint it was trained against
+//! ([`crate::memory::graph_plan::registry_fingerprint`]), and training
+//! provenance. The serving scheduler boot-loads the store once, looks
+//! policies up by fingerprint, and serves every request with **zero
+//! in-request training**; topologies with no stored policy fall back to the
+//! agenda baseline (DyNet's on-the-fly batching) and are counted.
+//!
+//! On-disk layout:
+//!
+//! ```text
+//! store/
+//!   index.json                       # {"version": 1} — format gate
+//!   policy_<workload>_<encoding>.json  # one self-describing artifact each
+//! ```
+//!
+//! Artifacts carry their own version + fingerprint, so the index is purely
+//! a format gate; discovery scans the directory. Everything is encoded with
+//! the repo's own [`crate::util::json`] codec — no external deps.
+
+use std::path::{Path, PathBuf};
+
+use anyhow::{anyhow, bail, Result};
+use rustc_hash::FxHashMap;
+
+use crate::batching::fsm::{Encoding, FsmPolicy};
+use crate::memory::graph_plan::registry_fingerprint;
+use crate::rl::{train, TrainConfig, TrainStats};
+use crate::util::json::Json;
+use crate::workloads::{Workload, WorkloadKind};
+
+/// On-disk format version shared by the index and every artifact.
+pub const STORE_VERSION: u64 = 1;
+
+/// Training provenance persisted with each policy (a Table-3-style row).
+#[derive(Clone, Debug, PartialEq)]
+pub struct TrainMeta {
+    pub iterations: usize,
+    pub wall_time_s: f64,
+    pub greedy_batches: usize,
+    pub lower_bound: u64,
+    pub num_states: usize,
+    pub reached_lower_bound: bool,
+    pub seed: u64,
+}
+
+impl TrainMeta {
+    pub fn from_stats(stats: &TrainStats, seed: u64) -> TrainMeta {
+        TrainMeta {
+            iterations: stats.iterations,
+            wall_time_s: stats.wall_time_s,
+            greedy_batches: stats.greedy_batches,
+            lower_bound: stats.lower_bound,
+            num_states: stats.num_states,
+            reached_lower_bound: stats.reached_lower_bound,
+            seed,
+        }
+    }
+
+    fn to_json(&self) -> Json {
+        Json::obj(vec![
+            ("iterations", Json::from(self.iterations)),
+            ("wall_time_s", Json::from(self.wall_time_s)),
+            ("greedy_batches", Json::from(self.greedy_batches)),
+            ("lower_bound", Json::from(self.lower_bound)),
+            ("num_states", Json::from(self.num_states)),
+            ("reached_lower_bound", Json::Bool(self.reached_lower_bound)),
+            // u64 seeds don't fit an f64 mantissa losslessly: keep as text
+            ("seed", Json::from(format!("{}", self.seed))),
+        ])
+    }
+
+    fn from_json(j: &Json) -> Result<TrainMeta> {
+        let num =
+            |k: &str| j.get(k).and_then(|v| v.as_u64()).ok_or_else(|| anyhow!("training.{k}"));
+        Ok(TrainMeta {
+            iterations: num("iterations")? as usize,
+            wall_time_s: j
+                .get("wall_time_s")
+                .and_then(|v| v.as_f64())
+                .ok_or_else(|| anyhow!("training.wall_time_s"))?,
+            greedy_batches: num("greedy_batches")? as usize,
+            lower_bound: num("lower_bound")?,
+            num_states: num("num_states")? as usize,
+            reached_lower_bound: matches!(j.get("reached_lower_bound"), Some(Json::Bool(true))),
+            seed: j
+                .get("seed")
+                .and_then(|v| v.as_str())
+                .and_then(|s| s.parse().ok())
+                .ok_or_else(|| anyhow!("training.seed"))?,
+        })
+    }
+}
+
+/// One persisted policy: the learned FSM plus everything needed to match it
+/// to a workload at serve time.
+#[derive(Clone, Debug)]
+pub struct PolicyArtifact {
+    pub workload: WorkloadKind,
+    pub encoding: Encoding,
+    /// hidden size at training time (provenance only: the FSM is purely
+    /// topological and transfers across hidden sizes)
+    pub hidden: usize,
+    /// op-type-space fingerprint the policy was trained against
+    pub fingerprint: u64,
+    pub policy: FsmPolicy,
+    pub training: TrainMeta,
+}
+
+impl PolicyArtifact {
+    /// Canonical artifact file name inside a store directory.
+    pub fn file_name(workload: WorkloadKind, encoding: Encoding) -> String {
+        format!("policy_{}_{}.json", workload.name(), encoding.name())
+    }
+
+    pub fn to_json(&self) -> Json {
+        Json::obj(vec![
+            ("version", Json::from(STORE_VERSION)),
+            ("workload", Json::from(self.workload.name())),
+            ("encoding", Json::from(self.encoding.name())),
+            ("hidden", Json::from(self.hidden)),
+            // full 64 bits survive only as text (JSON numbers are f64)
+            ("fingerprint", Json::from(format!("{:016x}", self.fingerprint))),
+            ("policy", self.policy.to_json()),
+            ("training", self.training.to_json()),
+        ])
+    }
+
+    pub fn from_json(j: &Json) -> Result<PolicyArtifact> {
+        let version = j
+            .get("version")
+            .and_then(|v| v.as_u64())
+            .ok_or_else(|| anyhow!("artifact missing version (pre-store format? retrain)"))?;
+        if version != STORE_VERSION {
+            bail!("artifact version {version}, this build reads {STORE_VERSION}");
+        }
+        let workload = j
+            .get("workload")
+            .and_then(|v| v.as_str())
+            .and_then(WorkloadKind::from_name)
+            .ok_or_else(|| anyhow!("bad workload name"))?;
+        let encoding = j
+            .get("encoding")
+            .and_then(|v| v.as_str())
+            .and_then(Encoding::from_name)
+            .ok_or_else(|| anyhow!("bad encoding name"))?;
+        let hidden = j
+            .get("hidden")
+            .and_then(|v| v.as_usize())
+            .ok_or_else(|| anyhow!("missing hidden"))?;
+        let fingerprint = j
+            .get("fingerprint")
+            .and_then(|v| v.as_str())
+            .and_then(|s| u64::from_str_radix(s, 16).ok())
+            .ok_or_else(|| anyhow!("bad fingerprint"))?;
+        let policy = FsmPolicy::from_json(
+            j.get("policy").ok_or_else(|| anyhow!("missing policy"))?,
+        )
+        .map_err(|e| anyhow!("policy decode: {e}"))?;
+        let training = TrainMeta::from_json(
+            j.get("training").ok_or_else(|| anyhow!("missing training"))?,
+        )?;
+        Ok(PolicyArtifact {
+            workload,
+            encoding,
+            hidden,
+            fingerprint,
+            policy,
+            training,
+        })
+    }
+}
+
+/// The store: an eagerly-loaded map from (fingerprint, encoding) to
+/// artifact, backed by one directory. Serving never touches the filesystem
+/// per request — only [`PolicyStore::open`] and [`PolicyStore::insert`] do
+/// I/O.
+pub struct PolicyStore {
+    dir: PathBuf,
+    entries: FxHashMap<(u64, Encoding), PolicyArtifact>,
+    /// artifact files present on disk but unreadable at open (warned once)
+    pub skipped: usize,
+}
+
+impl PolicyStore {
+    /// Open the store at `dir`, loading every readable artifact. A missing
+    /// directory yields an empty store (first boot); an index with a wrong
+    /// version is a hard error (format gate); an individually unreadable
+    /// artifact is skipped with a warning so serving can still boot and
+    /// fall back.
+    pub fn open(dir: impl AsRef<Path>) -> Result<PolicyStore> {
+        let dir = dir.as_ref().to_path_buf();
+        let mut store = PolicyStore {
+            dir: dir.clone(),
+            entries: FxHashMap::default(),
+            skipped: 0,
+        };
+        let index = dir.join("index.json");
+        if index.exists() {
+            let text = std::fs::read_to_string(&index)?;
+            let j = Json::parse(&text).map_err(|e| anyhow!("index.json: {e}"))?;
+            let v = j.get("version").and_then(|v| v.as_u64()).unwrap_or(0);
+            if v != STORE_VERSION {
+                bail!(
+                    "policy store {} has format version {v}; this build reads {STORE_VERSION}",
+                    dir.display()
+                );
+            }
+        }
+        let Ok(read) = std::fs::read_dir(&dir) else {
+            return Ok(store); // no directory yet: empty store
+        };
+        for entry in read.flatten() {
+            let name = entry.file_name().to_string_lossy().into_owned();
+            if !name.starts_with("policy_") || !name.ends_with(".json") {
+                continue;
+            }
+            let parsed = std::fs::read_to_string(entry.path())
+                .map_err(|e| anyhow!("{e}"))
+                .and_then(|text| Json::parse(&text).map_err(|e| anyhow!("{e}")))
+                .and_then(|j| PolicyArtifact::from_json(&j));
+            match parsed {
+                Ok(a) => {
+                    store.entries.insert((a.fingerprint, a.encoding), a);
+                }
+                Err(e) => {
+                    eprintln!("policystore: skipping {name}: {e}");
+                    store.skipped += 1;
+                }
+            }
+        }
+        Ok(store)
+    }
+
+    pub fn dir(&self) -> &Path {
+        &self.dir
+    }
+
+    pub fn len(&self) -> usize {
+        self.entries.len()
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.entries.is_empty()
+    }
+
+    pub fn artifacts(&self) -> impl Iterator<Item = &PolicyArtifact> {
+        self.entries.values()
+    }
+
+    /// Targeted single-artifact read, skipping the whole-store scan
+    /// (hot for per-workload callers like `load_or_train`/the benches).
+    /// `Ok(None)` for a missing *or unreadable* file — consistent with
+    /// [`PolicyStore::open`]'s skip-with-warning behaviour.
+    pub fn read_artifact(
+        dir: impl AsRef<Path>,
+        workload: WorkloadKind,
+        encoding: Encoding,
+    ) -> Result<Option<PolicyArtifact>> {
+        let path = dir.as_ref().join(PolicyArtifact::file_name(workload, encoding));
+        if !path.exists() {
+            return Ok(None);
+        }
+        let parsed = std::fs::read_to_string(&path)
+            .map_err(|e| anyhow!("{e}"))
+            .and_then(|text| Json::parse(&text).map_err(|e| anyhow!("{e}")))
+            .and_then(|j| PolicyArtifact::from_json(&j));
+        match parsed {
+            Ok(a) => Ok(Some(a)),
+            Err(e) => {
+                eprintln!("policystore: skipping {}: {e}", path.display());
+                Ok(None)
+            }
+        }
+    }
+
+    /// Look a policy up by op-type-space fingerprint + encoding.
+    pub fn lookup(&self, fingerprint: u64, encoding: Encoding) -> Option<&PolicyArtifact> {
+        self.entries.get(&(fingerprint, encoding))
+    }
+
+    /// Convenience: look up the policy matching a workload's registry.
+    pub fn lookup_workload(&self, w: &Workload, encoding: Encoding) -> Option<&PolicyArtifact> {
+        self.lookup(registry_fingerprint(&w.registry), encoding)
+    }
+
+    /// Persist an artifact (write the file, ensure the index), replacing
+    /// any existing entry under the same key.
+    pub fn insert(&mut self, artifact: PolicyArtifact) -> Result<()> {
+        std::fs::create_dir_all(&self.dir)?;
+        let index = self.dir.join("index.json");
+        if !index.exists() {
+            std::fs::write(
+                &index,
+                Json::obj(vec![("version", Json::from(STORE_VERSION))]).to_string(),
+            )?;
+        }
+        let path = self
+            .dir
+            .join(PolicyArtifact::file_name(artifact.workload, artifact.encoding));
+        std::fs::write(&path, artifact.to_json().to_string())?;
+        self.entries
+            .insert((artifact.fingerprint, artifact.encoding), artifact);
+        Ok(())
+    }
+
+    /// Offline training entry point (the CLI `train` subcommand and the
+    /// server's train-on-miss boot path): train a policy for `workload`
+    /// and persist it.
+    pub fn train_into(
+        &mut self,
+        workload: &Workload,
+        encoding: Encoding,
+        cfg: &TrainConfig,
+        seed: u64,
+    ) -> Result<(PolicyArtifact, TrainStats)> {
+        let (policy, stats) = train(workload, encoding, cfg, seed);
+        let artifact = PolicyArtifact {
+            workload: workload.kind,
+            encoding,
+            hidden: workload.params.hidden,
+            fingerprint: registry_fingerprint(&workload.registry),
+            policy,
+            training: TrainMeta::from_stats(&stats, seed),
+        };
+        self.insert(artifact.clone())?;
+        Ok((artifact, stats))
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::batching::run_policy;
+    use crate::util::rng::Rng;
+
+    fn tmp_dir(tag: &str) -> PathBuf {
+        std::env::temp_dir().join(format!("edbatch_store_{tag}_{}", std::process::id()))
+    }
+
+    fn quick_cfg() -> TrainConfig {
+        TrainConfig {
+            max_iters: 150,
+            check_every: 25,
+            train_batch: 2,
+            ..TrainConfig::default()
+        }
+    }
+
+    #[test]
+    fn artifact_json_roundtrip() {
+        let mut policy = FsmPolicy::new(Encoding::Sort);
+        policy.states.intern(&[0, 2]);
+        policy.states.intern(&[1]);
+        policy.set_q(0, crate::graph::OpType(0), 0.25);
+        policy.set_q(1, crate::graph::OpType(2), -1.5);
+        let a = PolicyArtifact {
+            workload: WorkloadKind::TreeLstm,
+            encoding: Encoding::Sort,
+            hidden: 64,
+            fingerprint: 0xDEAD_BEEF_1234_5678,
+            policy,
+            training: TrainMeta {
+                iterations: 250,
+                wall_time_s: 0.125,
+                greedy_batches: 17,
+                lower_bound: 17,
+                num_states: 2,
+                reached_lower_bound: true,
+                seed: u64::MAX - 3, // exercises the text encoding
+            },
+        };
+        let j = Json::parse(&a.to_json().to_string()).unwrap();
+        let b = PolicyArtifact::from_json(&j).unwrap();
+        assert_eq!(b.workload, a.workload);
+        assert_eq!(b.encoding, a.encoding);
+        assert_eq!(b.hidden, a.hidden);
+        assert_eq!(b.fingerprint, a.fingerprint);
+        assert_eq!(b.training, a.training);
+        assert_eq!(b.policy.states.len(), a.policy.states.len());
+        assert_eq!(b.policy.q, a.policy.q);
+    }
+
+    #[test]
+    fn open_missing_dir_is_empty() {
+        let store = PolicyStore::open(tmp_dir("missing")).unwrap();
+        assert!(store.is_empty());
+        assert_eq!(store.skipped, 0);
+    }
+
+    #[test]
+    fn train_save_reopen_lookup_hits() {
+        let dir = tmp_dir("roundtrip");
+        let _ = std::fs::remove_dir_all(&dir);
+        let w = Workload::new(WorkloadKind::TreeLstm, 32);
+        let mut store = PolicyStore::open(&dir).unwrap();
+        let (_, stats) = store
+            .train_into(&w, Encoding::Sort, &quick_cfg(), 3)
+            .unwrap();
+        assert!(stats.iterations >= 1);
+        assert!(store.lookup_workload(&w, Encoding::Sort).is_some());
+
+        let reopened = PolicyStore::open(&dir).unwrap();
+        assert_eq!(reopened.len(), 1);
+        let art = reopened.lookup_workload(&w, Encoding::Sort).unwrap();
+        assert_eq!(art.workload, WorkloadKind::TreeLstm);
+        // a different workload's fingerprint misses
+        let other = Workload::new(WorkloadKind::LatticeLstm, 32);
+        assert!(reopened.lookup_workload(&other, Encoding::Sort).is_none());
+        let _ = std::fs::remove_dir_all(&dir);
+    }
+
+    #[test]
+    fn loaded_policy_schedules_identically_on_held_out_graphs() {
+        // the acceptance-criteria determinism contract: save -> load ->
+        // batch-for-batch identical schedules on graphs never seen in
+        // training
+        let dir = tmp_dir("determinism");
+        let _ = std::fs::remove_dir_all(&dir);
+        let w = Workload::new(WorkloadKind::TreeGru, 32);
+        let mut store = PolicyStore::open(&dir).unwrap();
+        let (trained, _) = store
+            .train_into(&w, Encoding::Sort, &quick_cfg(), 9)
+            .unwrap();
+        let loaded = PolicyStore::open(&dir).unwrap();
+        let mut p_mem = trained.policy;
+        let mut p_disk = loaded
+            .lookup_workload(&w, Encoding::Sort)
+            .unwrap()
+            .policy
+            .clone();
+        let nt = w.registry.num_types();
+        let mut rng = Rng::new(4242); // held out: training used seed 9
+        for batch in [1usize, 4, 9] {
+            let mut g = w.gen_batch(batch, &mut rng);
+            g.freeze();
+            let s1 = run_policy(&g, nt, &mut p_mem);
+            let s2 = run_policy(&g, nt, &mut p_disk);
+            assert_eq!(s1.batches.len(), s2.batches.len(), "batch {batch}");
+            for (a, b) in s1.batches.iter().zip(s2.batches.iter()) {
+                assert_eq!(a.op, b.op);
+                assert_eq!(a.nodes, b.nodes);
+            }
+        }
+        let _ = std::fs::remove_dir_all(&dir);
+    }
+
+    #[test]
+    fn version_gate_rejects_future_stores() {
+        let dir = tmp_dir("version");
+        let _ = std::fs::remove_dir_all(&dir);
+        std::fs::create_dir_all(&dir).unwrap();
+        std::fs::write(dir.join("index.json"), r#"{"version":99}"#).unwrap();
+        let err = PolicyStore::open(&dir).unwrap_err();
+        assert!(err.to_string().contains("version 99"), "{err}");
+        let _ = std::fs::remove_dir_all(&dir);
+    }
+
+    #[test]
+    fn unreadable_artifact_is_skipped_not_fatal() {
+        let dir = tmp_dir("skip");
+        let _ = std::fs::remove_dir_all(&dir);
+        std::fs::create_dir_all(&dir).unwrap();
+        std::fs::write(dir.join("policy_bogus_sort.json"), "not json at all").unwrap();
+        let store = PolicyStore::open(&dir).unwrap();
+        assert!(store.is_empty());
+        assert_eq!(store.skipped, 1);
+        let _ = std::fs::remove_dir_all(&dir);
+    }
+}

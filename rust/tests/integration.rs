@@ -138,36 +138,119 @@ fn subgraph_pipeline_end_to_end() {
 }
 
 #[test]
-fn server_ed_batch_mode_trains_and_serves() {
-    // EdBatch mode trains + persists a policy into a temp artifacts dir.
+fn server_ed_batch_persists_policy_across_boots() {
+    // First boot with an empty store: the miss is resolved by training +
+    // persisting at boot. Second boot: pure store hit, zero training.
     let dir = std::env::temp_dir().join(format!("edbatch_int_{}", std::process::id()));
-    std::fs::create_dir_all(&dir).unwrap();
-    let server = Server::start(ServerConfig {
-        workload: WorkloadKind::TreeGru,
+    let _ = std::fs::remove_dir_all(&dir);
+    let dirs = dir.to_str().unwrap().to_string();
+    let cfg = ServerConfig {
+        workloads: vec![WorkloadKind::TreeGru],
         hidden: 32,
         mode: SystemMode::EdBatch,
         max_batch: 8,
         batch_window: Duration::from_millis(1),
-        artifacts_dir: None, // CPU backend...
+        workers: 1,
+        artifacts_dir: None, // CPU backend
+        store_dir: Some(dirs.clone()),
+        train_on_miss: true,
+        train_cfg: quick_train_cfg(),
         encoding: Encoding::Sort,
         seed: 3,
-    });
-    // ...but EdBatch policy persistence needs a dir: policy_for_mode uses
-    // "artifacts" default; ensure it exists in cwd for the test
-    std::fs::create_dir_all("artifacts").unwrap();
-    let server = server.unwrap();
-    let client = server.client();
+    };
+    let server = Server::start(cfg.clone()).unwrap();
+    let snap = server.metrics.snapshot();
+    assert_eq!(snap.store_hits, 0);
+    assert_eq!(snap.store_trained, 1, "empty store -> boot training");
+    let client = server.client(WorkloadKind::TreeGru);
     let w = Workload::new(WorkloadKind::TreeGru, 32);
     let mut rng = Rng::new(4);
     for _ in 0..6 {
         let resp = client.infer(w.gen_instance(&mut rng)).unwrap();
         assert!(!resp.sink_outputs.is_empty());
     }
+    assert_eq!(server.metrics.snapshot().requests, 6);
+    drop(client);
+    server.shutdown().unwrap();
+
+    let server = Server::start(cfg).unwrap();
     let snap = server.metrics.snapshot();
-    assert_eq!(snap.requests, 6);
+    assert_eq!(snap.store_hits, 1, "second boot loads the persisted policy");
+    assert_eq!(snap.store_trained, 0);
+    let client = server.client(WorkloadKind::TreeGru);
+    assert!(!client.infer(w.gen_instance(&mut rng)).unwrap().sink_outputs.is_empty());
     drop(client);
     server.shutdown().unwrap();
     let _ = std::fs::remove_dir_all(&dir);
+}
+
+#[test]
+fn concurrent_mixed_workloads_bit_equal_to_reference() {
+    // Multi-threaded clients submit three workload families concurrently to
+    // a 3-worker pool; every response must be bit-equal to executing the
+    // same instance alone through the reference pipeline (local-id-keyed
+    // sources make batched execution invariant to merge offsets).
+    let kinds = [
+        WorkloadKind::TreeLstm,
+        WorkloadKind::BiLstmTagger,
+        WorkloadKind::LatticeLstm,
+    ];
+    let server = Server::start(ServerConfig {
+        workloads: kinds.to_vec(),
+        hidden: 32,
+        mode: SystemMode::EdBatch,
+        max_batch: 8,
+        batch_window: Duration::from_millis(5),
+        workers: 3,
+        artifacts_dir: None,
+        store_dir: None, // in-memory boot training, filesystem-free
+        train_on_miss: true,
+        train_cfg: quick_train_cfg(),
+        encoding: Encoding::Sort,
+        seed: 3,
+    })
+    .unwrap();
+    let mut handles = Vec::new();
+    for (t, kind) in kinds.into_iter().cycle().take(6).enumerate() {
+        let client = server.client(kind);
+        handles.push(std::thread::spawn(move || {
+            let w = Workload::new(kind, 32);
+            let mut rng = Rng::new(900 + t as u64);
+            let mut results = Vec::new();
+            for _ in 0..3 {
+                let g = w.gen_instance(&mut rng);
+                let resp = client.infer(g.clone()).unwrap();
+                results.push((g, resp));
+            }
+            (kind, results)
+        }));
+    }
+    for h in handles {
+        let (kind, results) = h.join().unwrap();
+        let w = Workload::new(kind, 32);
+        let nt = w.registry.num_types();
+        for (g, resp) in results {
+            let mut g = g;
+            g.freeze();
+            // any valid schedule works: engine values are policy-invariant
+            let schedule = run_policy(&g, nt, &mut AgendaPolicy::new(nt));
+            let mut engine = CellEngine::new(Backend::Cpu, 32, 1).unwrap();
+            let mut store = ArenaStateStore::new();
+            engine.execute(&g, &w.registry, &schedule, &mut store).unwrap();
+            let mut has_consumer = vec![false; g.len()];
+            for n in &g.nodes {
+                for p in &n.preds {
+                    has_consumer[p.idx()] = true;
+                }
+            }
+            let expected: Vec<Vec<f32>> = (0..g.len())
+                .filter(|&j| !has_consumer[j])
+                .map(|j| store.h(j).to_vec())
+                .collect();
+            assert_eq!(resp.sink_outputs, expected, "{}", kind.name());
+        }
+    }
+    server.shutdown().unwrap();
 }
 
 #[test]

@@ -206,17 +206,16 @@ fn serving_stack_over_pjrt() {
         return;
     }
     let cfg = ServerConfig {
-        workload: WorkloadKind::TreeLstm,
+        workloads: vec![WorkloadKind::TreeLstm],
         hidden: 64,
         mode: SystemMode::CavsDyNet, // avoid policy-training I/O in tests
         max_batch: 8,
         batch_window: Duration::from_millis(5),
         artifacts_dir: Some("artifacts".into()),
-        encoding: Encoding::Sort,
-        seed: 2,
+        ..ServerConfig::default()
     };
     let server = Server::start(cfg).unwrap();
-    let client = server.client();
+    let client = server.client(WorkloadKind::TreeLstm);
     let w = Workload::new(WorkloadKind::TreeLstm, 64);
     let mut rng = Rng::new(8);
     for _ in 0..4 {
