@@ -84,7 +84,7 @@ fn main() -> anyhow::Result<()> {
                     for _ in 0..n {
                         let g = w.gen_instance(&mut rng);
                         let resp = client.infer(g).expect("infer");
-                        assert!(resp.sink_outputs.iter().flatten().all(|v| v.is_finite()));
+                        assert!(resp.sink_outputs().flatten().all(|v| v.is_finite()));
                     }
                 }));
             }

@@ -3,17 +3,27 @@
 //! workloads served concurrently from a pre-trained [`PolicyStore`] —
 //! the zero-in-request-training serving configuration.
 //!
-//! Runs on the CPU backend so it measures the scheduler (per-workload
-//! queues + continuous dispatch), not kernel speed.
+//! Traffic replays a fixed pool of distinct instance topologies per
+//! workload (steady-state production traffic: request shapes repeat), so
+//! the compositional plan cache must reach a 100% compose rate after each
+//! topology's first sight — asserted here and gated in CI. Results are
+//! also written to `BENCH_serving.json` so the perf trajectory
+//! (throughput, p50/p99, plans composed vs built, copies avoided) is
+//! tracked across PRs.
+//!
+//! Runs on the CPU backend so it measures the scheduler + hot path
+//! (per-workload queues, continuous dispatch, plan composition), not
+//! kernel speed.
 
 use std::time::Duration;
 
 use crate::batching::fsm::Encoding;
 use crate::coordinator::server::{Server, ServerConfig};
 use crate::coordinator::SystemMode;
+use crate::graph::Graph;
 use crate::policystore::PolicyStore;
 use crate::rl::TrainConfig;
-use crate::util::rng::Rng;
+use crate::util::json::Json;
 use crate::workloads::{Workload, WorkloadKind};
 
 use super::{print_table, BenchOpts};
@@ -26,15 +36,29 @@ pub struct ServingRow {
     pub p50_ms: f64,
     pub p99_ms: f64,
     pub store_hit_rate: f64,
+    pub minibatches: u64,
+    pub plans_composed: u64,
+    pub plans_built: u64,
+    pub cache_hits: u64,
+    pub cache_misses: u64,
+    pub copies_avoided_elems: u64,
+    pub memcpy_elems: u64,
+    pub arena_grows: u64,
+    /// every mini-batch composed, misses bounded by warmup
+    pub compose_ok: bool,
 }
 
 /// Two workload families served concurrently (tree + chain).
 const KINDS: [WorkloadKind; 2] = [WorkloadKind::TreeLstm, WorkloadKind::BiLstmTagger];
 
+/// Where the machine-readable results land (uploaded as a CI artifact).
+pub const JSON_PATH: &str = "BENCH_serving.json";
+
 pub fn run(opts: &BenchOpts) -> Vec<ServingRow> {
     let hidden = if opts.fast { 32 } else { opts.hidden };
-    let requests_per_client = if opts.fast { 8 } else { 32 };
+    let requests_per_client = if opts.fast { 12 } else { 48 };
     let clients_per_kind = if opts.fast { 2 } else { 4 };
+    let distinct = if opts.fast { 6 } else { 16 };
     let train_cfg = TrainConfig {
         max_iters: if opts.fast { 150 } else { 600 },
         ..TrainConfig::default()
@@ -55,6 +79,16 @@ pub fn run(opts: &BenchOpts) -> Vec<ServingRow> {
     }
     drop(store);
 
+    // fixed instance pools: request topologies repeat, as in production
+    let pools: Vec<std::sync::Arc<Vec<Graph>>> = KINDS
+        .iter()
+        .enumerate()
+        .map(|(i, &kind)| {
+            let w = Workload::new(kind, hidden);
+            std::sync::Arc::new(w.gen_pool(distinct, opts.seed + i as u64))
+        })
+        .collect();
+
     let mut rows = Vec::new();
     for workers in [1usize, 2, 4] {
         let server = Server::start(ServerConfig {
@@ -73,20 +107,19 @@ pub fn run(opts: &BenchOpts) -> Vec<ServingRow> {
         })
         .expect("server boot");
         let mut handles = Vec::new();
-        for (c, kind) in KINDS
+        for (c, (kind_ix, kind)) in KINDS
             .iter()
             .copied()
+            .enumerate()
             .cycle()
             .take(clients_per_kind * KINDS.len())
             .enumerate()
         {
             let client = server.client(kind);
-            let seed = opts.seed + 31 * (c as u64 + 1);
+            let pool = pools[kind_ix].clone();
             handles.push(std::thread::spawn(move || {
-                let w = Workload::new(kind, hidden);
-                let mut rng = Rng::new(seed);
-                for _ in 0..requests_per_client {
-                    let g = w.gen_instance(&mut rng);
+                for r in 0..requests_per_client {
+                    let g = pool[(c + r) % pool.len()].clone();
                     client.infer(g).expect("infer");
                 }
             }));
@@ -95,21 +128,45 @@ pub fn run(opts: &BenchOpts) -> Vec<ServingRow> {
             h.join().expect("client thread");
         }
         let snap = server.metrics.snapshot();
+        // warmup bound: each worker builds each distinct topology at most
+        // once per workload; everything else must compose
+        let warmup_cap = (distinct * KINDS.len() * workers) as u64;
+        let compose_ok = snap.plans_composed == snap.minibatches
+            && snap.instance_cache_misses <= warmup_cap;
         rows.push(ServingRow {
             workers,
             throughput: snap.throughput(),
             p50_ms: snap.latency_p50_s * 1e3,
             p99_ms: snap.latency_p99_s * 1e3,
             store_hit_rate: snap.store_hit_rate(),
+            minibatches: snap.minibatches,
+            plans_composed: snap.plans_composed,
+            plans_built: snap.plans_built,
+            cache_hits: snap.instance_cache_hits,
+            cache_misses: snap.instance_cache_misses,
+            copies_avoided_elems: snap.copies_avoided_elems,
+            memcpy_elems: snap.memcpy_elems,
+            arena_grows: snap.arena_grows,
+            compose_ok,
         });
         server.shutdown().expect("shutdown");
     }
     let _ = std::fs::remove_dir_all(&dir);
 
     print_table(
-        "Serving scaling: worker pool vs throughput/latency \
-         (mixed treelstm + bilstm-tagger, store-served policies, CPU backend)",
-        &["workers", "inst/s", "p50 ms", "p99 ms", "store hit rate"],
+        "Serving scaling: worker pool vs throughput/latency + hot-path provenance \
+         (mixed treelstm + bilstm-tagger, store-served policies, pool-replay traffic, CPU backend)",
+        &[
+            "workers",
+            "inst/s",
+            "p50 ms",
+            "p99 ms",
+            "composed",
+            "built",
+            "cache h/m",
+            "kB avoided",
+            "store hits",
+        ],
         &rows
             .iter()
             .map(|r| {
@@ -118,12 +175,55 @@ pub fn run(opts: &BenchOpts) -> Vec<ServingRow> {
                     format!("{:.1}", r.throughput),
                     format!("{:.2}", r.p50_ms),
                     format!("{:.2}", r.p99_ms),
+                    format!("{}/{}", r.plans_composed, r.minibatches),
+                    format!("{}", r.plans_built),
+                    format!("{}/{}", r.cache_hits, r.cache_misses),
+                    format!("{:.1}", r.copies_avoided_elems as f64 * 4.0 / 1e3),
                     format!("{:.0}%", r.store_hit_rate * 100.0),
                 ]
             })
             .collect::<Vec<_>>(),
     );
+
+    write_json(opts, hidden, distinct, &rows);
     rows
+}
+
+/// Dump the rows to [`JSON_PATH`] so CI archives the perf trajectory.
+fn write_json(opts: &BenchOpts, hidden: usize, distinct: usize, rows: &[ServingRow]) {
+    let row_json: Vec<Json> = rows
+        .iter()
+        .map(|r| {
+            Json::obj(vec![
+                ("workers", Json::from(r.workers as u64)),
+                ("throughput_inst_per_s", Json::from(r.throughput)),
+                ("p50_ms", Json::from(r.p50_ms)),
+                ("p99_ms", Json::from(r.p99_ms)),
+                ("store_hit_rate", Json::from(r.store_hit_rate)),
+                ("minibatches", Json::from(r.minibatches)),
+                ("plans_composed", Json::from(r.plans_composed)),
+                ("plans_built", Json::from(r.plans_built)),
+                ("instance_cache_hits", Json::from(r.cache_hits)),
+                ("instance_cache_misses", Json::from(r.cache_misses)),
+                ("copies_avoided_elems", Json::from(r.copies_avoided_elems)),
+                ("memcpy_elems", Json::from(r.memcpy_elems)),
+                ("arena_grows", Json::from(r.arena_grows)),
+                ("compose_ok", Json::Bool(r.compose_ok)),
+            ])
+        })
+        .collect();
+    let all_ok = rows.iter().all(|r| r.compose_ok);
+    let doc = Json::obj(vec![
+        ("bench", Json::from("serving")),
+        ("hidden", Json::from(hidden as u64)),
+        ("distinct_topologies", Json::from(distinct as u64)),
+        ("fast", Json::Bool(opts.fast)),
+        ("seed", Json::from(opts.seed)),
+        ("compose_ok_all", Json::Bool(all_ok)),
+        ("rows", Json::Arr(row_json)),
+    ]);
+    // best-effort: a read-only workdir must not fail the bench itself
+    let _ = std::fs::write(JSON_PATH, doc.to_string());
 }
 
 #[cfg(test)]
@@ -140,6 +240,14 @@ mod tests {
                 (r.store_hit_rate - 1.0).abs() < 1e-12,
                 "every boot must resolve policies from the store"
             );
+            // the CI perf gate: pool-replay traffic must compose every
+            // mini-batch, with planner runs bounded by warmup
+            assert!(
+                r.compose_ok,
+                "workers={}: composed {}/{} minibatches, {} misses",
+                r.workers, r.plans_composed, r.minibatches, r.cache_misses
+            );
+            assert!(r.plans_built <= r.cache_misses);
         }
     }
 }

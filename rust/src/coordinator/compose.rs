@@ -1,0 +1,455 @@
+//! Compositional plan/schedule cache — the serving hot path's way out of
+//! per-minibatch policy runs and PQ planning.
+//!
+//! The old loop re-ran the FSM and the PQ planner on every merged
+//! mini-batch: the `memory::graph_plan::PlanCache` keys on *merged*
+//! topology, which varies with batch composition, so it misses in steady
+//! state even when every individual request topology has been seen before.
+//! This module caches per-*instance* artifacts instead — the schedule, the
+//! memory plan, and the sink set of one request topology, keyed by
+//! [`Graph::topology_fingerprint`] (maintained incrementally at
+//! `Graph::add`/`Graph::merge` time, so the lookup never walks the graph)
+//! — and composes the merged mini-batch's schedule + arena layout from
+//! them by pure offset translation:
+//!
+//! * **Arena**: instance `i`'s planned arena is placed verbatim at
+//!   `arena_bases[i]`; every slot offset shifts by a constant.
+//! * **Schedule**: per-instance batch sequences merge head-to-head —
+//!   instances are disjoint in the merged graph, so any interleaving is
+//!   dependency-safe, and same-type heads fuse into one batched kernel
+//!   launch (identical topologies recover exactly the fully-batched
+//!   schedule).
+//!
+//! Soundness of the value semantics rests on the bit-equality contract
+//! established for serving: source embeddings and MV matrices key on
+//! *instance-local* node ids and cell kernels are lane-independent, so an
+//! instance's outputs are bit-identical whether it executes alone, merged
+//! at any offset, or lane-fused with other instances (asserted in
+//! integration tests). The FSM and the PQ planner therefore run only on
+//! first sight of a topology; afterwards a mini-batch costs one hash
+//! lookup per request plus an O(total batches) merge over cached
+//! sequences.
+
+use std::rc::Rc;
+use std::time::Instant;
+
+use rustc_hash::FxHashMap;
+
+use crate::batching::{run_policy, Batch, Policy, Schedule};
+use crate::graph::{Graph, NodeId, OpType, TypeRegistry};
+use crate::memory::graph_plan::GraphMemoryPlan;
+use crate::memory::MemoryMode;
+
+/// Everything the hot path needs about one request topology, computed once.
+pub struct InstanceArtifact {
+    /// frozen representative instance graph (preds for gather fallbacks,
+    /// local ids for source embeddings — identical for every request with
+    /// this topology fingerprint)
+    pub graph: Graph,
+    /// the policy's schedule over the instance alone (instance-local ids)
+    pub schedule: Schedule,
+    /// PQ-tree (or creation-order) arena plan for the instance alone
+    pub plan: Rc<GraphMemoryPlan>,
+    /// instance-local ids of nodes with no consumers — the response set
+    /// (precomputed so the serving response path never rebuilds
+    /// `has_consumer` per mini-batch)
+    pub sinks: Vec<u32>,
+}
+
+impl InstanceArtifact {
+    /// Build the artifact for `graph`'s topology; returns it plus the
+    /// seconds spent inside the PQ planner (for the time decomposition).
+    pub fn build(
+        graph: &Graph,
+        types: &TypeRegistry,
+        policy: &mut dyn Policy,
+        hidden: usize,
+        mode: MemoryMode,
+    ) -> (InstanceArtifact, f64) {
+        let mut g = graph.clone();
+        g.freeze();
+        let schedule = run_policy(&g, types.num_types(), policy);
+        let t0 = Instant::now();
+        let plan = Rc::new(GraphMemoryPlan::build(&g, types, &schedule, hidden, mode));
+        let plan_s = t0.elapsed().as_secs_f64();
+        let sinks = (0..g.len() as u32)
+            .filter(|&i| g.succs(NodeId(i)).is_empty())
+            .collect();
+        (
+            InstanceArtifact {
+                graph: g,
+                schedule,
+                plan,
+                sinks,
+            },
+            plan_s,
+        )
+    }
+}
+
+/// Bounded per-worker cache: topology fingerprint → artifact. One cache
+/// per (worker, workload kind) context, so the key never needs to mix the
+/// registry, hidden size, memory mode, or policy identity — those are
+/// fixed per context at boot.
+pub struct InstanceCache {
+    entries: FxHashMap<u64, Rc<InstanceArtifact>>,
+    pub hits: u64,
+    pub misses: u64,
+    /// cumulative seconds spent in the PQ planner on misses
+    pub plan_build_s: f64,
+}
+
+impl Default for InstanceCache {
+    fn default() -> Self {
+        InstanceCache::new()
+    }
+}
+
+impl InstanceCache {
+    const MAX_ENTRIES: usize = 512;
+
+    pub fn new() -> InstanceCache {
+        InstanceCache {
+            entries: FxHashMap::default(),
+            hits: 0,
+            misses: 0,
+            plan_build_s: 0.0,
+        }
+    }
+
+    pub fn len(&self) -> usize {
+        self.entries.len()
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.entries.is_empty()
+    }
+
+    /// Fetch (or build, on first sight of the topology) the artifact for
+    /// one request graph. The graph itself is never frozen or mutated on a
+    /// hit — the fingerprint read is O(1).
+    pub fn get_or_build(
+        &mut self,
+        graph: &Graph,
+        types: &TypeRegistry,
+        policy: &mut dyn Policy,
+        hidden: usize,
+        mode: MemoryMode,
+    ) -> Rc<InstanceArtifact> {
+        let key = graph.topology_fingerprint();
+        if let Some(a) = self.entries.get(&key) {
+            // 64-bit collision backstop (mirrors PlanCache)
+            if a.graph.len() == graph.len() {
+                self.hits += 1;
+                return a.clone();
+            }
+        }
+        if self.entries.len() >= Self::MAX_ENTRIES {
+            self.entries.clear();
+        }
+        self.misses += 1;
+        let (art, plan_s) = InstanceArtifact::build(graph, types, policy, hidden, mode);
+        self.plan_build_s += plan_s;
+        let art = Rc::new(art);
+        self.entries.insert(key, art.clone());
+        art
+    }
+}
+
+/// The composed execution plan for one mini-batch: per-instance artifacts
+/// plus the merged batch sequence, all held in pooled buffers so a warm
+/// worker composes without allocating. Node ids inside segments stay
+/// instance-local; the executor adds `node_offsets`/`arena_bases` on the
+/// fly.
+#[derive(Default)]
+pub struct ComposedPlan {
+    instances: Vec<Rc<InstanceArtifact>>,
+    node_offsets: Vec<u32>,
+    arena_bases: Vec<usize>,
+    total_nodes: usize,
+    total_elems: usize,
+    predicted_memcpy_elems: usize,
+    /// merged batches: op per batch + CSR segment table
+    batch_ops: Vec<OpType>,
+    seg_start: Vec<u32>,
+    /// (instance index, batch index within that instance's schedule)
+    segs: Vec<(u32, u32)>,
+    /// compose scratch: per-instance head cursor + per-type lane tally
+    heads: Vec<u32>,
+    type_lanes: Vec<(u16, usize)>,
+}
+
+impl ComposedPlan {
+    pub fn new() -> ComposedPlan {
+        ComposedPlan::default()
+    }
+
+    /// Drop the previous mini-batch (buffers keep their capacity).
+    pub fn clear(&mut self) {
+        self.instances.clear();
+        self.node_offsets.clear();
+        self.arena_bases.clear();
+        self.total_nodes = 0;
+        self.total_elems = 0;
+        self.predicted_memcpy_elems = 0;
+        self.batch_ops.clear();
+        self.seg_start.clear();
+        self.segs.clear();
+    }
+
+    /// Append one request's artifact to the mini-batch being assembled.
+    pub fn push_instance(&mut self, art: Rc<InstanceArtifact>) {
+        self.node_offsets.push(self.total_nodes as u32);
+        self.arena_bases.push(self.total_elems);
+        self.total_nodes += art.graph.len();
+        self.total_elems += art.plan.plan.total_elems;
+        self.predicted_memcpy_elems += art.plan.predicted_memcpy_elems;
+        self.instances.push(art);
+    }
+
+    /// Merge the pushed instances' schedules into the mini-batch sequence:
+    /// repeatedly fuse all same-type *head* batches (largest total lane
+    /// count first, ties to the smallest type id). Instances are disjoint,
+    /// so every head is dependency-ready and the result is a valid
+    /// schedule of the merged graph; identical topologies fuse completely,
+    /// recovering the per-instance batch count.
+    pub fn compose(&mut self) {
+        self.heads.clear();
+        self.heads.resize(self.instances.len(), 0);
+        self.seg_start.push(0);
+        loop {
+            // tally ready lanes per head type in one pass over the heads
+            // (the tally list is bounded by the workload's type count, so a
+            // fused step costs O(instances * types), not O(instances^2))
+            self.type_lanes.clear();
+            for (i, inst) in self.instances.iter().enumerate() {
+                let hi = self.heads[i] as usize;
+                if hi >= inst.schedule.batches.len() {
+                    continue;
+                }
+                let t = inst.schedule.batches[hi].op.0;
+                let lanes = inst.schedule.batches[hi].nodes.len();
+                match self.type_lanes.iter().position(|&(tt, _)| tt == t) {
+                    Some(p) => self.type_lanes[p].1 += lanes,
+                    None => self.type_lanes.push((t, lanes)),
+                }
+            }
+            // pick the type with the most ready lanes, ties to smallest id
+            let mut best: Option<(usize, u16)> = None; // (lanes, type id)
+            for &(t, lanes) in &self.type_lanes {
+                let better = match best {
+                    None => true,
+                    Some((bl, bt)) => lanes > bl || (lanes == bl && t < bt),
+                };
+                if better {
+                    best = Some((lanes, t));
+                }
+            }
+            let Some((_, t)) = best else { break };
+            // fuse every head of type t into one merged batch
+            self.batch_ops.push(OpType(t));
+            for (i, inst) in self.instances.iter().enumerate() {
+                let hi = self.heads[i] as usize;
+                if hi < inst.schedule.batches.len() && inst.schedule.batches[hi].op.0 == t {
+                    self.segs.push((i as u32, hi as u32));
+                    self.heads[i] += 1;
+                }
+            }
+            self.seg_start.push(self.segs.len() as u32);
+        }
+    }
+
+    pub fn num_instances(&self) -> usize {
+        self.instances.len()
+    }
+
+    pub fn instance(&self, i: usize) -> &InstanceArtifact {
+        &self.instances[i]
+    }
+
+    pub fn arena_base(&self, i: usize) -> usize {
+        self.arena_bases[i]
+    }
+
+    pub fn node_offset(&self, i: usize) -> u32 {
+        self.node_offsets[i]
+    }
+
+    pub fn total_elems(&self) -> usize {
+        self.total_elems
+    }
+
+    pub fn total_nodes(&self) -> usize {
+        self.total_nodes
+    }
+
+    pub fn num_batches(&self) -> usize {
+        self.batch_ops.len()
+    }
+
+    pub fn batch_op(&self, b: usize) -> OpType {
+        self.batch_ops[b]
+    }
+
+    /// The merged batch's segments: (instance index, instance batch index).
+    pub fn segments(&self, b: usize) -> &[(u32, u32)] {
+        &self.segs[self.seg_start[b] as usize..self.seg_start[b + 1] as usize]
+    }
+
+    /// Sum of the instances' static copy predictions (reporting).
+    pub fn predicted_memcpy_elems(&self) -> usize {
+        self.predicted_memcpy_elems
+    }
+
+    /// Materialize the composed sequence as a schedule over merged node
+    /// ids (tests / diagnostics — the hot path never builds this).
+    pub fn to_merged_schedule(&self) -> Schedule {
+        let mut batches = Vec::with_capacity(self.num_batches());
+        for b in 0..self.num_batches() {
+            let mut nodes = Vec::new();
+            for &(i, bi) in self.segments(b) {
+                let off = self.node_offsets[i as usize];
+                nodes.extend(
+                    self.instances[i as usize].schedule.batches[bi as usize]
+                        .nodes
+                        .iter()
+                        .map(|n| NodeId(n.0 + off)),
+                );
+            }
+            batches.push(Batch {
+                op: self.batch_ops[b],
+                nodes,
+            });
+        }
+        Schedule { batches }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::batching::fsm::{Encoding, FsmPolicy};
+    use crate::batching::validate_schedule;
+    use crate::util::rng::Rng;
+    use crate::workloads::{Workload, WorkloadKind};
+
+    fn artifact_for(
+        w: &Workload,
+        cache: &mut InstanceCache,
+        policy: &mut FsmPolicy,
+        g: &Graph,
+    ) -> Rc<InstanceArtifact> {
+        cache.get_or_build(g, &w.registry, policy, 16, MemoryMode::Planned)
+    }
+
+    #[test]
+    fn cache_hits_on_repeated_topology() {
+        let w = Workload::new(WorkloadKind::TreeLstm, 16);
+        let mut rng = Rng::new(5);
+        let g = w.gen_instance(&mut rng);
+        let mut cache = InstanceCache::new();
+        let mut policy = FsmPolicy::new(Encoding::Sort);
+        let a = artifact_for(&w, &mut cache, &mut policy, &g);
+        let b = artifact_for(&w, &mut cache, &mut policy, &g.clone());
+        assert!(Rc::ptr_eq(&a, &b));
+        assert_eq!(cache.misses, 1);
+        assert_eq!(cache.hits, 1);
+        // a different topology builds fresh
+        let g2 = w.gen_instance(&mut rng);
+        let _ = artifact_for(&w, &mut cache, &mut policy, &g2);
+        assert_eq!(cache.misses, 2);
+    }
+
+    #[test]
+    fn sinks_match_consumer_scan() {
+        let w = Workload::new(WorkloadKind::LatticeLstm, 16);
+        let g = w.gen_instance(&mut Rng::new(8));
+        let mut cache = InstanceCache::new();
+        let mut policy = FsmPolicy::new(Encoding::Sort);
+        let art = artifact_for(&w, &mut cache, &mut policy, &g);
+        let mut has_consumer = vec![false; g.len()];
+        for n in &g.nodes {
+            for p in &n.preds {
+                has_consumer[p.idx()] = true;
+            }
+        }
+        let expected: Vec<u32> = (0..g.len() as u32)
+            .filter(|&i| !has_consumer[i as usize])
+            .collect();
+        assert_eq!(art.sinks, expected);
+    }
+
+    #[test]
+    fn identical_instances_fuse_completely() {
+        // k copies of one topology compose to exactly the per-instance
+        // batch count: every step fuses all k heads
+        let w = Workload::new(WorkloadKind::TreeGru, 16);
+        let g = w.gen_instance(&mut Rng::new(3));
+        let mut cache = InstanceCache::new();
+        let mut policy = FsmPolicy::new(Encoding::Sort);
+        let art = artifact_for(&w, &mut cache, &mut policy, &g);
+        let mut comp = ComposedPlan::new();
+        comp.clear();
+        for _ in 0..4 {
+            comp.push_instance(art.clone());
+        }
+        comp.compose();
+        assert_eq!(comp.num_batches(), art.schedule.batches.len());
+        for b in 0..comp.num_batches() {
+            assert_eq!(comp.segments(b).len(), 4, "batch {b}");
+        }
+    }
+
+    #[test]
+    fn composed_schedule_is_valid_on_the_merged_graph() {
+        for kind in [
+            WorkloadKind::TreeLstm,
+            WorkloadKind::BiLstmTagger,
+            WorkloadKind::LatticeLstm,
+            WorkloadKind::MvRnn,
+        ] {
+            let w = Workload::new(kind, 16);
+            let mut rng = Rng::new(11);
+            let insts: Vec<Graph> = (0..3).map(|_| w.gen_instance(&mut rng)).collect();
+            let mut cache = InstanceCache::new();
+            let mut policy = FsmPolicy::new(Encoding::Sort);
+            let mut comp = ComposedPlan::new();
+            comp.clear();
+            for g in &insts {
+                let art = artifact_for(&w, &mut cache, &mut policy, g);
+                comp.push_instance(art);
+            }
+            comp.compose();
+            let mut merged = Graph::new();
+            for g in &insts {
+                merged.merge(g);
+            }
+            merged.freeze();
+            assert_eq!(comp.total_nodes(), merged.len(), "{kind:?}");
+            let schedule = comp.to_merged_schedule();
+            validate_schedule(&merged, &schedule)
+                .unwrap_or_else(|e| panic!("{kind:?}: {e}"));
+        }
+    }
+
+    #[test]
+    fn compose_buffers_are_reusable() {
+        let w = Workload::new(WorkloadKind::BiLstmTagger, 16);
+        let mut rng = Rng::new(7);
+        let mut cache = InstanceCache::new();
+        let mut policy = FsmPolicy::new(Encoding::Sort);
+        let mut comp = ComposedPlan::new();
+        for round in 0..3 {
+            let g = w.gen_instance(&mut rng);
+            let art = artifact_for(&w, &mut cache, &mut policy, &g);
+            comp.clear();
+            comp.push_instance(art.clone());
+            comp.push_instance(art);
+            comp.compose();
+            assert!(comp.num_batches() > 0, "round {round}");
+            assert_eq!(comp.num_instances(), 2);
+            assert_eq!(comp.arena_base(0), 0);
+            assert!(comp.arena_base(1) > 0);
+        }
+    }
+}

@@ -8,14 +8,25 @@
 //!
 //! Per-node state lives in one flat arena ([`ArenaStateStore`]). Under
 //! [`MemoryMode::Planned`] the PQ-tree layout makes batched operands
-//! contiguous and aligned, so they are read as **zero-copy views** and
-//! results land **in place**; wherever the plan falls short — or under
+//! contiguous and aligned, so they are read as **zero-copy views** and —
+//! via [`ExecBackend::run_cell_into`] — results are **written by the
+//! kernel directly into the arena**, with no per-batch output allocation
+//! and no output copy at all. Wherever the plan falls short — or under
 //! [`MemoryMode::Unplanned`], the DyNet baseline — operands are gathered
-//! and scattered through scratch buffers and the moved volume is counted.
-//! [`ExecReport::planned_memcpy_elems`] therefore matches the planner's
-//! static prediction exactly on the CPU backend (asserted in tests), and
-//! [`ExecReport::copies_avoided_elems`] is the measured win over the
-//! unplanned baseline on the same schedule.
+//! and scattered through pooled scratch buffers and the moved volume is
+//! counted. [`ExecReport::planned_memcpy_elems`] therefore matches the
+//! planner's static prediction exactly on the CPU backend (asserted in
+//! tests), and [`ExecReport::copies_avoided_elems`] is the measured win
+//! over the unplanned baseline on the same schedule.
+//!
+//! [`CellEngine::execute_composed`] is the serving steady-state entry
+//! point: it executes a [`ComposedPlan`] (per-instance cached schedules +
+//! plans, merged by offset translation — see `coordinator::compose`)
+//! without a merged graph, without running any policy, and without
+//! invoking the PQ planner. All buffers (arena, gather scratch, output
+//! staging, kernel temporaries) are pooled, so a warm engine loop
+//! performs no heap allocation; [`ExecReport::arena_grows`] counts the
+//! only exception (a mini-batch larger than any seen before).
 
 use std::rc::Rc;
 use std::time::Instant;
@@ -24,16 +35,17 @@ use anyhow::Result;
 use rustc_hash::FxHashMap;
 
 use crate::batching::Schedule;
+use crate::coordinator::compose::ComposedPlan;
 use crate::exec::backend::{CpuBackend, ExecBackend, PjrtBackend};
-use crate::exec::cpu_kernels as k;
 use crate::graph::cells::{self, ArgSemantics};
 use crate::graph::{CellKind, Graph, NodeId, TypeRegistry};
-use crate::memory::graph_plan::{
-    ArgAccess, BatchAccess, DstAccess, GraphMemoryPlan, PlanCache,
-};
+use crate::memory::graph_plan::{ArgAccess, DstAccess, GraphMemoryPlan, PlanCache};
 use crate::memory::MemoryMode;
 use crate::runtime::ArtifactRegistry;
 use crate::util::rng::Rng;
+
+/// Largest per-cell data-argument count (see `graph::cells`).
+const MAX_DATA_ARGS: usize = 4;
 
 /// Execution statistics for one scheduled graph.
 #[derive(Clone, Copy, Debug, Default)]
@@ -46,17 +58,32 @@ pub struct ExecReport {
     /// including the configured in-cell copy charges
     pub memcpy_elems: usize,
     /// the subset of `memcpy_elems` moved on plannable operands — equals
-    /// [`ExecReport::plan_predicted_elems`] on the CPU backend
+    /// [`ExecReport::plan_predicted_elems`] on the CPU backend (merged
+    /// path; composed execution reports only totals)
     pub planned_memcpy_elems: usize,
     /// the memory plan's static prediction for plannable operands
     pub plan_predicted_elems: usize,
-    /// volume served through zero-copy views / in-place results instead of
-    /// gather/scatter — the measured win over the unplanned baseline
+    /// volume served through zero-copy views / kernel-written in-place
+    /// results instead of gather/scatter — the measured win over the
+    /// unplanned baseline
     pub copies_avoided_elems: usize,
-    /// PQ-tree planning time (near-zero on plan-cache hits: only the
-    /// schedule fingerprint is recomputed)
+    /// PQ-tree planning time (zero on plan-cache/compose hits)
     pub planning_s: f64,
     pub exec_s: f64,
+    /// batching-policy executions this mini-batch required (0 on the
+    /// steady-state composed path)
+    pub policy_runs: usize,
+    /// PQ-planner invocations (plan-cache or instance-cache misses)
+    pub plans_built: usize,
+    /// 1 when this mini-batch executed from a composed plan
+    pub plans_composed: usize,
+    /// instance-cache hits (composed path; set by the caller that owns
+    /// the cache)
+    pub cache_hits: usize,
+    /// instance-cache misses (composed path)
+    pub cache_misses: usize,
+    /// 1 when the arena buffer had to grow — zero in steady state
+    pub arena_grows: usize,
 }
 
 /// Backend selection for [`CellEngine::new`].
@@ -83,17 +110,39 @@ pub struct CellEngine<'a> {
     pub extra_launches: FxHashMap<String, usize>,
     scratch_copy: Vec<f32>,
     plans: PlanCache,
+    // -- pooled hot-path buffers (reused across batches/minibatches) ----
+    /// output staging for non-contiguous destinations (h, then c/M)
+    stage_h: Vec<f32>,
+    stage_c: Vec<f32>,
+    /// batch lanes in the plan's common operand order (merged path)
+    ordered: Vec<NodeId>,
+    /// lane prefix per composed-batch segment
+    seg_lanes: Vec<usize>,
+}
+
+/// How one staged data argument reaches the kernel.
+#[derive(Clone, Copy)]
+enum ArgStage {
+    /// zero-copy arena view: (element offset, length)
+    View(usize, usize),
+    /// gathered into the store's pooled scratch buffer for this arg
+    Scratch,
 }
 
 /// Arena-backed per-node state store: every node's h (and c/M) lives at
-/// the offset its [`GraphMemoryPlan`] assigned. Replaces the former
-/// per-node `Vec<Vec<f32>>` store on both the planned and baseline paths.
+/// the offset its [`GraphMemoryPlan`] assigned (plus the instance's arena
+/// base on the composed path). Replaces the former per-node
+/// `Vec<Vec<f32>>` store on both the planned and baseline paths. The
+/// arena and all gather scratch are pooled: they only reallocate when a
+/// mini-batch needs more capacity than any before ([`ArenaStateStore::grows`]).
 #[derive(Default)]
 pub struct ArenaStateStore {
     plan: Option<Rc<GraphMemoryPlan>>,
     arena: Vec<f32>,
     /// per-data-arg gather buffers (fallback staging)
     scratch: Vec<Vec<f32>>,
+    /// times the arena buffer actually grew — flat after warmup
+    pub grows: u64,
 }
 
 impl ArenaStateStore {
@@ -101,17 +150,35 @@ impl ArenaStateStore {
         ArenaStateStore::default()
     }
 
-    fn reset(&mut self, plan: Rc<GraphMemoryPlan>) {
+    /// Zero the arena at `total` elements; true when the buffer grew.
+    fn ensure_arena(&mut self, total: usize) -> bool {
+        let grew = total > self.arena.capacity();
+        if grew {
+            self.grows += 1;
+        }
         self.arena.clear();
-        self.arena.resize(plan.plan.total_elems, 0.0);
+        self.arena.resize(total, 0.0);
+        grew
+    }
+
+    fn reset(&mut self, plan: Rc<GraphMemoryPlan>) -> bool {
+        let grew = self.ensure_arena(plan.plan.total_elems);
         self.plan = Some(plan);
+        grew
+    }
+
+    /// Composed-path reset: the layout lives in the per-instance plans,
+    /// the store only provides the flat arena.
+    pub fn reset_flat(&mut self, total_elems: usize) -> bool {
+        self.plan = None;
+        self.ensure_arena(total_elems)
     }
 
     fn plan_ref(&self) -> &GraphMemoryPlan {
         self.plan.as_deref().expect("execute() sets the plan")
     }
 
-    /// Number of nodes the store currently holds state for.
+    /// Number of nodes the store currently holds state for (merged path).
     pub fn len(&self) -> usize {
         self.plan.as_ref().map_or(0, |p| p.sizes.len() / 2)
     }
@@ -140,6 +207,12 @@ impl ArenaStateStore {
         &self.arena[off..off + sz]
     }
 
+    /// Raw arena window — composed-path state access: callers resolve
+    /// slots through an instance plan plus its arena base.
+    pub fn slice(&self, off: usize, len: usize) -> &[f32] {
+        &self.arena[off..off + len]
+    }
+
     /// All h outputs as owned vectors (tests / response extraction).
     pub fn h_vectors(&self) -> Vec<Vec<f32>> {
         (0..self.len()).map(|i| self.h(i).to_vec()).collect()
@@ -150,92 +223,322 @@ impl ArenaStateStore {
             self.scratch.push(Vec::new());
         }
     }
+}
 
-    /// Legacy gather semantics for one data argument of one chunk, reading
-    /// current arena state into scratch buffer `k` (zero-padded to
-    /// `bucket * w`). Mirrors the pre-arena engine exactly so baseline and
-    /// fallback numerics stay bitwise-identical.
-    #[allow(clippy::too_many_arguments)]
-    fn gather_arg(
-        &mut self,
-        graph: &Graph,
-        k: usize,
-        sem: ArgSemantics,
-        chunk: &[NodeId],
-        w: usize,
-        bucket: usize,
-        hidden: usize,
-    ) {
-        let ArenaStateStore {
-            plan,
-            arena,
-            scratch,
-        } = self;
-        let plan = plan.as_deref().expect("plan set");
-        let buf = &mut scratch[k];
-        buf.clear();
-        buf.resize(bucket * w, 0.0);
-        let h_slice = |i: usize| {
-            let (off, sz) = plan.h_slot(i);
-            &arena[off..off + sz]
-        };
-        // raw c slot (ChildM may read materialized matrices)
-        let c_slice = |i: usize| {
-            let (off, sz) = plan.c_slot(i);
-            &arena[off..off + sz]
-        };
-        // c *state* as the legacy engine stored it: synthetic matrix slots
-        // (source materialization for MV consumers) read as empty
-        let empty: &[f32] = &[];
-        let c_state = |i: usize| {
-            if plan.synthetic_c[i] {
-                empty
-            } else {
-                let (off, sz) = plan.c_slot(i);
-                &arena[off..off + sz]
+// ---------------------------------------------------------------------
+// split-borrow machinery: kernels write into the arena they read from
+// ---------------------------------------------------------------------
+
+/// Read-only access to the arena outside the direct-output windows.
+struct ArenaSplit<'a> {
+    pieces: [(usize, &'a [f32]); 3],
+    n: usize,
+}
+
+impl<'a> ArenaSplit<'a> {
+    /// Resolve an operand view. Views never overlap output windows: a
+    /// batch's source vars (its preds' slots) are disjoint from its dst
+    /// vars (its own slots) because batched nodes are simultaneously
+    /// ready, so no batch node feeds another — panics if the invariant is
+    /// ever violated.
+    fn view(&self, off: usize, len: usize) -> &'a [f32] {
+        for (start, p) in &self.pieces[..self.n] {
+            if off >= *start && off + len <= *start + p.len() {
+                return &p[off - *start..off - *start + len];
             }
+        }
+        panic!(
+            "operand view [{off}, {}) overlaps a direct output window",
+            off + len
+        );
+    }
+}
+
+/// Split `arena` into up to two disjoint mutable output windows plus a
+/// shared reader over everything else — the safe-borrow construction that
+/// lets [`ExecBackend::run_cell_into`] write kernel results straight into
+/// the arena its operand views also come from.
+fn split_outputs<'a>(
+    arena: &'a mut [f32],
+    d0: Option<(usize, usize)>,
+    d1: Option<(usize, usize)>,
+) -> (Option<&'a mut [f32]>, Option<&'a mut [f32]>, ArenaSplit<'a>) {
+    let (first, second, swapped) = match (d0, d1) {
+        (Some(a), Some(b)) => {
+            if a.0 <= b.0 {
+                (Some(a), Some(b), false)
+            } else {
+                (Some(b), Some(a), true)
+            }
+        }
+        (Some(a), None) => (Some(a), None, false),
+        (None, Some(b)) => (Some(b), None, true),
+        (None, None) => (None, None, false),
+    };
+    let mut pieces: [(usize, &'a [f32]); 3] = [(0, &[]), (0, &[]), (0, &[])];
+    let mut n = 0;
+    let mut grabbed: [Option<&'a mut [f32]>; 2] = [None, None];
+    let mut gi = 0;
+    let mut cursor = 0usize;
+    let mut rest: &'a mut [f32] = arena;
+    for (off, len) in [first, second].into_iter().flatten() {
+        let tail = std::mem::take(&mut rest);
+        let (pre, mid) = tail.split_at_mut(off - cursor);
+        if !pre.is_empty() {
+            pieces[n] = (cursor, &*pre);
+            n += 1;
+        }
+        let (dst, post) = mid.split_at_mut(len);
+        grabbed[gi] = Some(dst);
+        gi += 1;
+        rest = post;
+        cursor = off + len;
+    }
+    if !rest.is_empty() {
+        pieces[n] = (cursor, &*rest);
+        n += 1;
+    }
+    let [g0, g1] = grabbed;
+    let (o0, o1) = match (d0.is_some(), d1.is_some()) {
+        (true, true) => {
+            if swapped {
+                (g1, g0)
+            } else {
+                (g0, g1)
+            }
+        }
+        (true, false) => (g0, None),
+        (false, true) => (None, g0),
+        (false, false) => (None, None),
+    };
+    (o0, o1, ArenaSplit { pieces, n })
+}
+
+/// Stage operand views/scratch and run one chunk through the backend,
+/// writing directly into the arena wherever `dh`/`dc` provide windows.
+#[allow(clippy::too_many_arguments)]
+fn run_chunk(
+    backend: &mut dyn ExecBackend,
+    cell: &str,
+    arena: &mut [f32],
+    scratch: &[Vec<f32>],
+    staged: &[ArgStage],
+    widths: &[usize],
+    bucket: usize,
+    n_outs: usize,
+    dh: Option<(usize, usize)>,
+    dc: Option<(usize, usize)>,
+    stage_h: &mut [f32],
+    stage_c: &mut [f32],
+) -> Result<()> {
+    let (mh, mc, reader) = split_outputs(arena, dh, dc);
+    let mut data: [&[f32]; MAX_DATA_ARGS] = [&[]; MAX_DATA_ARGS];
+    for (arg, st) in staged.iter().enumerate() {
+        data[arg] = match *st {
+            ArgStage::View(off, len) => reader.view(off, len),
+            ArgStage::Scratch => &scratch[arg][..bucket * widths[arg]],
         };
-        for (lane, &n) in chunk.iter().enumerate() {
-            let preds = &graph.node(n).preds;
-            match sem {
-                ArgSemantics::XFirst => {
-                    if let Some(&x) = preds.first() {
-                        copy_lane(buf, lane, w, h_slice(x.idx()));
-                    }
-                }
-                ArgSemantics::SumStateH => {
-                    for &p in preds.iter().skip(1) {
-                        add_lane(buf, lane, w, h_slice(p.idx()));
-                    }
-                }
-                ArgSemantics::SumStateC => {
-                    for &p in preds.iter().skip(1) {
-                        add_lane(buf, lane, w, c_state(p.idx()));
-                    }
-                }
-                ArgSemantics::ChildH(i) => {
-                    let (l, r) = cells::two_children(preds);
-                    let child = if i == 0 { l } else { r };
-                    copy_lane(buf, lane, w, h_slice(child.idx()));
-                }
-                ArgSemantics::ChildC(i) => {
-                    let (l, r) = cells::two_children(preds);
-                    let child = if i == 0 { l } else { r };
-                    copy_lane(buf, lane, w, c_state(child.idx()));
-                }
-                ArgSemantics::ChildM(i) => {
-                    let (l, r) = cells::two_children(preds);
-                    let child = if i == 0 { l } else { r };
-                    // key the degenerate-matrix fallback on the instance-
-                    // local id (matches source materialization)
-                    let local = NodeId(graph.local_id(child));
-                    copy_mv_matrix(buf, lane, hidden, local, c_slice(child.idx()));
-                }
-                ArgSemantics::SumAllH => {
-                    for &p in preds.iter() {
-                        add_lane(buf, lane, w, h_slice(p.idx()));
-                    }
-                }
+    }
+    let o0: &mut [f32] = match mh {
+        Some(s) => s,
+        None => stage_h,
+    };
+    if n_outs > 1 {
+        let o1: &mut [f32] = match mc {
+            Some(s) => s,
+            None => stage_c,
+        };
+        let mut outs = [o0, o1];
+        backend.run_cell_into(cell, &data[..staged.len()], bucket, &mut outs)
+    } else {
+        let mut outs = [o0];
+        backend.run_cell_into(cell, &data[..staged.len()], bucket, &mut outs)
+    }
+}
+
+// ---------------------------------------------------------------------
+// shared per-node execution helpers (merged + composed paths)
+// ---------------------------------------------------------------------
+
+/// Gather one lane of one data argument into `buf` at `lane`, resolving
+/// slots through `plan` shifted by `base`. Mirrors the legacy engine
+/// exactly so baseline and fallback numerics stay bitwise-identical.
+#[allow(clippy::too_many_arguments)]
+fn gather_one_lane(
+    arena: &[f32],
+    buf: &mut [f32],
+    lane: usize,
+    plan: &GraphMemoryPlan,
+    base: usize,
+    graph: &Graph,
+    n: NodeId,
+    sem: ArgSemantics,
+    w: usize,
+    hidden: usize,
+) {
+    let h_slice = |i: usize| {
+        let (off, sz) = plan.h_slot(i);
+        &arena[base + off..base + off + sz]
+    };
+    // raw c slot (ChildM may read materialized matrices)
+    let c_slice = |i: usize| {
+        let (off, sz) = plan.c_slot(i);
+        &arena[base + off..base + off + sz]
+    };
+    // c *state* as the legacy engine stored it: synthetic matrix slots
+    // (source materialization for MV consumers) read as empty
+    let empty: &[f32] = &[];
+    let c_state = |i: usize| {
+        if plan.synthetic_c[i] {
+            empty
+        } else {
+            c_slice(i)
+        }
+    };
+    let preds = &graph.node(n).preds;
+    match sem {
+        ArgSemantics::XFirst => {
+            if let Some(&x) = preds.first() {
+                copy_lane(buf, lane, w, h_slice(x.idx()));
+            }
+        }
+        ArgSemantics::SumStateH => {
+            for &p in preds.iter().skip(1) {
+                add_lane(buf, lane, w, h_slice(p.idx()));
+            }
+        }
+        ArgSemantics::SumStateC => {
+            for &p in preds.iter().skip(1) {
+                add_lane(buf, lane, w, c_state(p.idx()));
+            }
+        }
+        ArgSemantics::ChildH(i) => {
+            let (l, r) = cells::two_children(preds);
+            let child = if i == 0 { l } else { r };
+            copy_lane(buf, lane, w, h_slice(child.idx()));
+        }
+        ArgSemantics::ChildC(i) => {
+            let (l, r) = cells::two_children(preds);
+            let child = if i == 0 { l } else { r };
+            copy_lane(buf, lane, w, c_state(child.idx()));
+        }
+        ArgSemantics::ChildM(i) => {
+            let (l, r) = cells::two_children(preds);
+            let child = if i == 0 { l } else { r };
+            // key the degenerate-matrix fallback on the instance-local id
+            // (matches source materialization)
+            let local = NodeId(graph.local_id(child));
+            copy_mv_matrix(buf, lane, hidden, local, c_slice(child.idx()));
+        }
+        ArgSemantics::SumAllH => {
+            for &p in preds.iter() {
+                add_lane(buf, lane, w, h_slice(p.idx()));
+            }
+        }
+    }
+}
+
+/// Gather a whole chunk of one data argument into the store's pooled
+/// scratch buffer for `arg` (zero-padded to `bucket * w`).
+#[allow(clippy::too_many_arguments)]
+fn stage_gather(
+    store: &mut ArenaStateStore,
+    plan: &GraphMemoryPlan,
+    base: usize,
+    graph: &Graph,
+    chunk: &[NodeId],
+    arg: usize,
+    sem: ArgSemantics,
+    w: usize,
+    bucket: usize,
+    hidden: usize,
+) {
+    let ArenaStateStore {
+        arena, scratch, ..
+    } = store;
+    let buf = &mut scratch[arg];
+    buf.clear();
+    buf.resize(bucket * w, 0.0);
+    for (lane, &n) in chunk.iter().enumerate() {
+        gather_one_lane(arena, buf, lane, plan, base, graph, n, sem, w, hidden);
+    }
+}
+
+/// Scatter a staged output back to per-node slots (merged path).
+fn scatter_lanes(
+    store: &mut ArenaStateStore,
+    out: &[f32],
+    w: usize,
+    chunk: &[NodeId],
+    second: bool,
+) {
+    for (pos, &n) in chunk.iter().enumerate() {
+        let (off, sz) = if second {
+            store.c_slot(n.idx())
+        } else {
+            store.h_slot(n.idx())
+        };
+        let m = sz.min(w);
+        store.arena[off..off + m].copy_from_slice(&out[pos * w..pos * w + m]);
+    }
+}
+
+/// Write deterministic per-instance-local-id source embeddings (and
+/// materialized MV matrices) for `nodes`, via `plan` shifted by `base`.
+fn write_sources(
+    arena: &mut [f32],
+    plan: &GraphMemoryPlan,
+    base: usize,
+    graph: &Graph,
+    nodes: &[NodeId],
+    hidden: usize,
+) {
+    for &n in nodes {
+        // deterministic embedding per *instance-local* node index, so a
+        // request's values are identical whether it executes alone or
+        // merged at any offset into a mini-batch (serving bit-equality)
+        let local = NodeId(graph.local_id(n));
+        let (off, sz) = plan.h_slot(n.idx());
+        let mut rng = Rng::new(0xE4BED ^ local.0 as u64);
+        for x in &mut arena[base + off..base + off + sz] {
+            *x = (rng.f32() - 0.5) * 0.2;
+        }
+        // sources feeding MV cells carry a matrix: materialize the
+        // same deterministic near-identity the gather path generates
+        let (coff, csz) = plan.c_slot(n.idx());
+        if csz == hidden * hidden {
+            cells::near_identity_matrix_into(
+                &mut arena[base + coff..base + coff + csz],
+                hidden,
+                local,
+            );
+        }
+    }
+}
+
+/// Execute reduce nodes (sum of pred h states) in place — index-based so
+/// no temporary is allocated; accumulation order matches the legacy path.
+fn write_reduce(
+    arena: &mut [f32],
+    plan: &GraphMemoryPlan,
+    base: usize,
+    graph: &Graph,
+    nodes: &[NodeId],
+    width: usize,
+) {
+    for &n in nodes {
+        let (doff, dsz) = plan.h_slot(n.idx());
+        let doff = base + doff;
+        for x in &mut arena[doff..doff + dsz] {
+            *x = 0.0;
+        }
+        let m = dsz.min(width);
+        for &p in &graph.node(n).preds {
+            let (poff, psz) = plan.h_slot(p.idx());
+            let poff = base + poff;
+            let len = psz.min(m);
+            for j in 0..len {
+                arena[doff + j] += arena[poff + j];
             }
         }
     }
@@ -259,11 +562,20 @@ impl<'a> CellEngine<'a> {
             extra_launches: FxHashMap::default(),
             scratch_copy: Vec::new(),
             plans: PlanCache::new(),
+            stage_h: Vec::new(),
+            stage_c: Vec::new(),
+            ordered: Vec::new(),
+            seg_lanes: Vec::new(),
         })
     }
 
     pub fn backend_name(&self) -> &'static str {
         self.backend.name()
+    }
+
+    /// Cumulative PQ-planner invocations through this engine's plan cache.
+    pub fn plans_built(&self) -> u64 {
+        self.plans.builds
     }
 
     /// The (cached) memory plan this engine would execute `schedule` under.
@@ -287,28 +599,38 @@ impl<'a> CellEngine<'a> {
         store: &mut ArenaStateStore,
     ) -> Result<ExecReport> {
         let t_plan = Instant::now();
+        let builds0 = self.plans.builds;
         let plan = self.plan_for(graph, types, schedule);
         let planning_s = t_plan.elapsed().as_secs_f64();
-        store.reset(plan.clone());
+        let grew = store.reset(plan.clone());
 
         let t0 = Instant::now();
         let mut report = ExecReport {
             batches: schedule.batches.len(),
             plan_predicted_elems: plan.predicted_memcpy_elems,
             planning_s,
+            plans_built: (self.plans.builds - builds0) as usize,
+            arena_grows: grew as usize,
             ..Default::default()
         };
         for (bi, batch) in schedule.batches.iter().enumerate() {
             let info = types.info(batch.op);
             match info.cell {
-                CellKind::Source => self.exec_source(graph, &batch.nodes, store),
-                CellKind::Reduce => {
-                    self.exec_reduce(graph, &batch.nodes, info.out_elems, store)
+                CellKind::Source => {
+                    write_sources(&mut store.arena, &plan, 0, graph, &batch.nodes, self.hidden)
                 }
+                CellKind::Reduce => write_reduce(
+                    &mut store.arena,
+                    &plan,
+                    0,
+                    graph,
+                    &batch.nodes,
+                    info.out_elems,
+                ),
                 kind => {
                     let cell = kind.artifact_name().expect("artifact cell kind");
                     let access = plan.batches[bi].as_ref().expect("cell batch access");
-                    self.exec_cell(graph, cell, access, &batch.nodes, store, &mut report)?;
+                    self.exec_cell(graph, cell, &plan, access, &batch.nodes, store, &mut report)?;
                 }
             }
         }
@@ -316,59 +638,73 @@ impl<'a> CellEngine<'a> {
         Ok(report)
     }
 
-    // -- sources / reduce ------------------------------------------------
-
-    fn exec_source(&mut self, graph: &Graph, nodes: &[NodeId], store: &mut ArenaStateStore) {
-        let h = self.hidden;
-        for &n in nodes {
-            // deterministic embedding per *instance-local* node index, so a
-            // request's values are identical whether it executes alone or
-            // merged at any offset into a mini-batch (serving bit-equality)
-            let local = NodeId(graph.local_id(n));
-            let (off, sz) = store.h_slot(n.idx());
-            let mut rng = Rng::new(0xE4BED ^ local.0 as u64);
-            for x in &mut store.arena[off..off + sz] {
-                *x = (rng.f32() - 0.5) * 0.2;
-            }
-            // sources feeding MV cells carry a matrix: materialize the
-            // same deterministic near-identity the gather path generates
-            let (coff, csz) = store.c_slot(n.idx());
-            if csz == h * h {
-                cells::near_identity_matrix_into(
-                    &mut store.arena[coff..coff + csz],
-                    h,
-                    local,
-                );
-            }
-        }
-    }
-
-    fn exec_reduce(
+    /// Execute a composed mini-batch (see `coordinator::compose`): cached
+    /// per-instance schedules and arena plans, merged by offset
+    /// translation. No merged graph, no policy run, no PQ planning —
+    /// the steady-state serving hot path.
+    pub fn execute_composed(
         &mut self,
-        graph: &Graph,
-        nodes: &[NodeId],
-        width: usize,
+        types: &TypeRegistry,
+        comp: &ComposedPlan,
         store: &mut ArenaStateStore,
-    ) {
-        for &n in nodes {
-            let mut acc = vec![0.0f32; width];
-            for &p in &graph.node(n).preds {
-                let (off, sz) = store.h_slot(p.idx());
-                let len = sz.min(width);
-                k::axpy(1.0, &store.arena[off..off + len], &mut acc[..len]);
+    ) -> Result<ExecReport> {
+        let grew = store.reset_flat(comp.total_elems());
+        let t0 = Instant::now();
+        let mut report = ExecReport {
+            batches: comp.num_batches(),
+            plan_predicted_elems: comp.predicted_memcpy_elems(),
+            plans_composed: 1,
+            arena_grows: grew as usize,
+            ..Default::default()
+        };
+        for b in 0..comp.num_batches() {
+            let info = types.info(comp.batch_op(b));
+            match info.cell {
+                CellKind::Source => {
+                    for &(i, bi) in comp.segments(b) {
+                        let art = comp.instance(i as usize);
+                        write_sources(
+                            &mut store.arena,
+                            &art.plan,
+                            comp.arena_base(i as usize),
+                            &art.graph,
+                            &art.schedule.batches[bi as usize].nodes,
+                            self.hidden,
+                        );
+                    }
+                }
+                CellKind::Reduce => {
+                    for &(i, bi) in comp.segments(b) {
+                        let art = comp.instance(i as usize);
+                        write_reduce(
+                            &mut store.arena,
+                            &art.plan,
+                            comp.arena_base(i as usize),
+                            &art.graph,
+                            &art.schedule.batches[bi as usize].nodes,
+                            info.out_elems,
+                        );
+                    }
+                }
+                kind => {
+                    let cell = kind.artifact_name().expect("artifact cell kind");
+                    self.exec_cell_composed(cell, comp, b, store, &mut report)?;
+                }
             }
-            let (off, sz) = store.h_slot(n.idx());
-            store.arena[off..off + sz].copy_from_slice(&acc[..sz]);
         }
+        report.exec_s = t0.elapsed().as_secs_f64();
+        Ok(report)
     }
 
-    // -- cell batches -----------------------------------------------------
+    // -- cell batches (merged-graph path) ---------------------------------
 
+    #[allow(clippy::too_many_arguments)]
     fn exec_cell(
         &mut self,
         graph: &Graph,
         cell: &str,
-        access: &BatchAccess,
+        plan: &GraphMemoryPlan,
+        access: &crate::memory::graph_plan::BatchAccess,
         nodes: &[NodeId],
         store: &mut ArenaStateStore,
         report: &mut ExecReport,
@@ -379,16 +715,16 @@ impl<'a> CellEngine<'a> {
         let h = self.hidden;
         let widths = cells::data_arg_widths(cell, h);
         let sems = cells::arg_semantics(cell);
+        let ow = cells::out_widths(cell, h);
         debug_assert_eq!(access.exec_order.len(), nodes.len());
         debug_assert_eq!(access.args.len(), sems.len());
+        debug_assert!(sems.len() <= MAX_DATA_ARGS);
         // lanes in the plan's common operand order: views then slice
         // contiguously, and per-lane results land on their own nodes
         // regardless of order (cells are lane-independent)
-        let ordered: Vec<NodeId> = access
-            .exec_order
-            .iter()
-            .map(|&l| nodes[l as usize])
-            .collect();
+        self.ordered.clear();
+        self.ordered
+            .extend(access.exec_order.iter().map(|&l| nodes[l as usize]));
 
         // split into chunks minimizing padded compute (backend buckets)
         let buckets = self.backend.chunk_plan(cell, nodes.len())?;
@@ -399,25 +735,19 @@ impl<'a> CellEngine<'a> {
                 break;
             }
             let chunk_start = cursor;
-            let chunk = &ordered[chunk_start..chunk_start + take];
             cursor += take;
             report.padded_lanes += bucket - take;
 
             // -- stage data args: zero-copy views where the plan achieves
             //    adjacency (and no padding is needed), counted gathers
             //    everywhere else --------------------------------------
-            enum Staged {
-                View(std::ops::Range<usize>),
-                Scratch,
-            }
-            let mut staged: Vec<Staged> = Vec::with_capacity(sems.len());
             store.ensure_scratch(sems.len());
+            let mut staged = [ArgStage::Scratch; MAX_DATA_ARGS];
             for (arg, sem) in sems.iter().enumerate() {
                 let w = widths[arg];
                 match access.args[arg] {
                     ArgAccess::View { base } if bucket == take => {
-                        let lo = base + chunk_start * w;
-                        staged.push(Staged::View(lo..lo + take * w));
+                        staged[arg] = ArgStage::View(base + chunk_start * w, take * w);
                         report.copies_avoided_elems += take * w;
                     }
                     a => {
@@ -427,12 +757,22 @@ impl<'a> CellEngine<'a> {
                             ArgAccess::View { .. } => true,
                             ArgAccess::Gather { planned } => planned,
                         };
-                        store.gather_arg(graph, arg, *sem, chunk, w, bucket, h);
+                        stage_gather(
+                            store,
+                            plan,
+                            0,
+                            graph,
+                            &self.ordered[chunk_start..chunk_start + take],
+                            arg,
+                            *sem,
+                            w,
+                            bucket,
+                            h,
+                        );
                         report.memcpy_elems += take * w;
                         if planned {
                             report.planned_memcpy_elems += take * w;
                         }
-                        staged.push(Staged::Scratch);
                     }
                 }
             }
@@ -447,17 +787,60 @@ impl<'a> CellEngine<'a> {
                 }
             }
 
-            // -- execute through the backend ---------------------------
-            let data: Vec<&[f32]> = staged
-                .iter()
-                .enumerate()
-                .map(|(arg, s)| match s {
-                    Staged::View(r) => &store.arena[r.clone()],
-                    Staged::Scratch => &store.scratch[arg][..bucket * widths[arg]],
-                })
-                .collect();
-            let outs = self.backend.run_cell(cell, &data, bucket)?;
-            drop(data);
+            // -- destinations: direct arena windows when the plan made
+            //    the block contiguous (kernel writes in place) ---------
+            let two = ow.len() > 1;
+            let dh = match access.dst_h {
+                DstAccess::Direct { base } if bucket == take => {
+                    Some((base + chunk_start * ow[0], take * ow[0]))
+                }
+                _ => None,
+            };
+            let dc = if two {
+                match access.dst_c {
+                    Some(DstAccess::Direct { base }) if bucket == take => {
+                        Some((base + chunk_start * ow[1], take * ow[1]))
+                    }
+                    _ => None,
+                }
+            } else {
+                None
+            };
+            if dh.is_none() {
+                self.stage_h.clear();
+                self.stage_h.resize(bucket * ow[0], 0.0);
+            }
+            if two && dc.is_none() {
+                self.stage_c.clear();
+                self.stage_c.resize(bucket * ow[1], 0.0);
+            }
+
+            // -- execute through the backend, writing into the arena ----
+            {
+                let CellEngine {
+                    backend,
+                    stage_h,
+                    stage_c,
+                    ..
+                } = &mut *self;
+                let ArenaStateStore {
+                    arena, scratch, ..
+                } = &mut *store;
+                run_chunk(
+                    &mut **backend,
+                    cell,
+                    arena,
+                    scratch,
+                    &staged[..sems.len()],
+                    &widths,
+                    bucket,
+                    ow.len(),
+                    dh,
+                    dc,
+                    stage_h.as_mut_slice(),
+                    stage_c.as_mut_slice(),
+                )?;
+            }
             report.kernel_calls += 1;
             // unfused-baseline launch charge: real extra launches of a
             // minimal artifact (one per primitive batch beyond the first)
@@ -465,21 +848,264 @@ impl<'a> CellEngine<'a> {
                 report.kernel_calls += self.backend.extra_launches(extra)?;
             }
 
-            // -- outputs: in place when the plan made the dst block
-            //    contiguous, counted scatter otherwise -----------------
-            let ow0 = outs[0].len() / bucket;
-            write_output(
-                store, report, &outs[0], ow0, access.dst_h, chunk, chunk_start, take, bucket,
-                false,
-            );
-            if outs.len() > 1 {
-                let dc = access
+            // -- outputs that could not land in place: counted scatter --
+            match access.dst_h {
+                DstAccess::Direct { .. } if bucket == take => {
+                    report.copies_avoided_elems += take * ow[0];
+                }
+                a => {
+                    let planned = match a {
+                        DstAccess::Direct { .. } => true, // padded chunk
+                        DstAccess::Scatter { planned } => planned,
+                    };
+                    scatter_lanes(
+                        store,
+                        &self.stage_h,
+                        ow[0],
+                        &self.ordered[chunk_start..chunk_start + take],
+                        false,
+                    );
+                    report.memcpy_elems += take * ow[0];
+                    if planned {
+                        report.planned_memcpy_elems += take * ow[0];
+                    }
+                }
+            }
+            if two {
+                let dcacc = access
                     .dst_c
                     .unwrap_or(DstAccess::Scatter { planned: false });
-                let ow1 = outs[1].len() / bucket;
-                write_output(
-                    store, report, &outs[1], ow1, dc, chunk, chunk_start, take, bucket, true,
+                match dcacc {
+                    DstAccess::Direct { .. } if bucket == take => {
+                        report.copies_avoided_elems += take * ow[1];
+                    }
+                    a => {
+                        let planned = match a {
+                            DstAccess::Direct { .. } => true,
+                            DstAccess::Scatter { planned } => planned,
+                        };
+                        scatter_lanes(
+                            store,
+                            &self.stage_c,
+                            ow[1],
+                            &self.ordered[chunk_start..chunk_start + take],
+                            true,
+                        );
+                        report.memcpy_elems += take * ow[1];
+                        if planned {
+                            report.planned_memcpy_elems += take * ow[1];
+                        }
+                    }
+                }
+            }
+        }
+        Ok(())
+    }
+
+    // -- cell batches (composed path) -------------------------------------
+
+    fn exec_cell_composed(
+        &mut self,
+        cell: &str,
+        comp: &ComposedPlan,
+        b: usize,
+        store: &mut ArenaStateStore,
+        report: &mut ExecReport,
+    ) -> Result<()> {
+        let h = self.hidden;
+        let widths = cells::data_arg_widths(cell, h);
+        let sems = cells::arg_semantics(cell);
+        let ow = cells::out_widths(cell, h);
+        debug_assert!(sems.len() <= MAX_DATA_ARGS);
+        let segs = comp.segments(b);
+
+        // lane prefix per segment (pooled); lanes within a segment follow
+        // that instance's plan exec order, so instance views stay
+        // contiguous blocks of the composed lane space
+        self.seg_lanes.clear();
+        let mut lanes_total = 0usize;
+        for &(i, bi) in segs {
+            self.seg_lanes.push(lanes_total);
+            lanes_total += comp.instance(i as usize).schedule.batches[bi as usize]
+                .nodes
+                .len();
+        }
+        self.seg_lanes.push(lanes_total);
+        if lanes_total == 0 {
+            return Ok(());
+        }
+
+        let buckets = self.backend.chunk_plan(cell, lanes_total)?;
+        let mut cursor = 0usize;
+        for bucket in buckets {
+            let take = bucket.min(lanes_total - cursor);
+            if take == 0 {
+                break;
+            }
+            let c0 = cursor;
+            cursor += take;
+            report.padded_lanes += bucket - take;
+
+            // the single segment covering the whole chunk, if any — the
+            // common case (one instance per chunk) keeps full zero-copy
+            let mut single: Option<usize> = None;
+            for (s, win) in self.seg_lanes.windows(2).enumerate() {
+                if win[0] <= c0 && c0 + take <= win[1] {
+                    single = Some(s);
+                    break;
+                }
+            }
+
+            // -- stage data args ------------------------------------
+            store.ensure_scratch(sems.len());
+            let mut staged = [ArgStage::Scratch; MAX_DATA_ARGS];
+            for (arg, sem) in sems.iter().enumerate() {
+                let w = widths[arg];
+                let mut fast = None;
+                if bucket == take {
+                    if let Some(s) = single {
+                        let (i, bi) = segs[s];
+                        let art = comp.instance(i as usize);
+                        if let Some(acc) = art.plan.batches[bi as usize].as_ref() {
+                            if let ArgAccess::View { base } = acc.args[arg] {
+                                let off = comp.arena_base(i as usize)
+                                    + base
+                                    + (c0 - self.seg_lanes[s]) * w;
+                                fast = Some((off, take * w));
+                            }
+                        }
+                    }
+                }
+                match fast {
+                    Some((off, len)) => {
+                        staged[arg] = ArgStage::View(off, len);
+                        report.copies_avoided_elems += take * w;
+                    }
+                    None => {
+                        let moved = stage_gather_composed(
+                            store,
+                            comp,
+                            segs,
+                            &self.seg_lanes,
+                            arg,
+                            *sem,
+                            w,
+                            c0,
+                            take,
+                            bucket,
+                            h,
+                        );
+                        report.memcpy_elems += moved;
+                    }
+                }
+            }
+
+            // charge the configured in-cell copy work (kept for parity
+            // with the merged path; zero under EdBatch profiles)
+            if let Some(&(fixed, per_lane)) = self.in_cell_copy_elems.get(cell) {
+                let elems = fixed + per_lane * take;
+                if elems > 0 {
+                    self.charge_copy(elems);
+                    report.memcpy_elems += elems;
+                    report.kernel_calls += 1;
+                }
+            }
+
+            // -- destinations --------------------------------------
+            let two = ow.len() > 1;
+            let mut dh = None;
+            let mut dc = None;
+            if bucket == take {
+                if let Some(s) = single {
+                    let (i, bi) = segs[s];
+                    let art = comp.instance(i as usize);
+                    if let Some(acc) = art.plan.batches[bi as usize].as_ref() {
+                        let abase = comp.arena_base(i as usize);
+                        let in0 = c0 - self.seg_lanes[s];
+                        if let DstAccess::Direct { base } = acc.dst_h {
+                            dh = Some((abase + base + in0 * ow[0], take * ow[0]));
+                        }
+                        if two {
+                            if let Some(DstAccess::Direct { base }) = acc.dst_c {
+                                dc = Some((abase + base + in0 * ow[1], take * ow[1]));
+                            }
+                        }
+                    }
+                }
+            }
+            if dh.is_none() {
+                self.stage_h.clear();
+                self.stage_h.resize(bucket * ow[0], 0.0);
+            }
+            if two && dc.is_none() {
+                self.stage_c.clear();
+                self.stage_c.resize(bucket * ow[1], 0.0);
+            }
+
+            {
+                let CellEngine {
+                    backend,
+                    stage_h,
+                    stage_c,
+                    ..
+                } = &mut *self;
+                let ArenaStateStore {
+                    arena, scratch, ..
+                } = &mut *store;
+                run_chunk(
+                    &mut **backend,
+                    cell,
+                    arena,
+                    scratch,
+                    &staged[..sems.len()],
+                    &widths,
+                    bucket,
+                    ow.len(),
+                    dh,
+                    dc,
+                    stage_h.as_mut_slice(),
+                    stage_c.as_mut_slice(),
+                )?;
+            }
+            report.kernel_calls += 1;
+            if let Some(&extra) = self.extra_launches.get(cell) {
+                report.kernel_calls += self.backend.extra_launches(extra)?;
+            }
+
+            // -- scatter staged outputs ----------------------------
+            if dh.is_some() {
+                report.copies_avoided_elems += take * ow[0];
+            } else {
+                let moved = scatter_composed(
+                    store,
+                    comp,
+                    segs,
+                    &self.seg_lanes,
+                    &self.stage_h,
+                    ow[0],
+                    c0,
+                    take,
+                    false,
                 );
+                report.memcpy_elems += moved;
+            }
+            if two {
+                if dc.is_some() {
+                    report.copies_avoided_elems += take * ow[1];
+                } else {
+                    let moved = scatter_composed(
+                        store,
+                        comp,
+                        segs,
+                        &self.seg_lanes,
+                        &self.stage_c,
+                        ow[1],
+                        c0,
+                        take,
+                        true,
+                    );
+                    report.memcpy_elems += moved;
+                }
             }
         }
         Ok(())
@@ -496,49 +1122,135 @@ impl<'a> CellEngine<'a> {
     }
 }
 
-/// Write one kernel output tensor back to the arena: a single in-place
-/// block move when the plan made the destination contiguous (the vendor
-/// kernel would write there directly — counted as zero graph-level copy),
-/// or a counted per-lane scatter otherwise.
+/// Stage one data argument of a composed chunk: per overlapped segment,
+/// either one block copy (the instance plan already made the operand
+/// contiguous) or per-lane gathers. Returns elements moved.
 #[allow(clippy::too_many_arguments)]
-fn write_output(
+fn stage_gather_composed(
     store: &mut ArenaStateStore,
-    report: &mut ExecReport,
-    out: &[f32],
+    comp: &ComposedPlan,
+    segs: &[(u32, u32)],
+    seg_lanes: &[usize],
+    arg: usize,
+    sem: ArgSemantics,
     w: usize,
-    access: DstAccess,
-    chunk: &[NodeId],
-    chunk_start: usize,
+    c0: usize,
     take: usize,
     bucket: usize,
-    second: bool,
-) {
-    match access {
-        DstAccess::Direct { base } if bucket == take => {
-            let off = base + chunk_start * w;
-            store.arena[off..off + take * w].copy_from_slice(&out[..take * w]);
-            report.copies_avoided_elems += take * w;
+    hidden: usize,
+) -> usize {
+    let ArenaStateStore {
+        arena, scratch, ..
+    } = store;
+    let buf = &mut scratch[arg];
+    buf.clear();
+    buf.resize(bucket * w, 0.0);
+    let mut moved = 0usize;
+    for (s, &(i, bi)) in segs.iter().enumerate() {
+        let (seg0, seg1) = (seg_lanes[s], seg_lanes[s + 1]);
+        let lo = c0.max(seg0);
+        let hi = (c0 + take).min(seg1);
+        if lo >= hi {
+            continue;
         }
-        _ => {
-            let planned = match access {
-                DstAccess::Direct { .. } => true, // padded chunk: real scatter
-                DstAccess::Scatter { planned } => planned,
-            };
-            for (pos, &n) in chunk.iter().enumerate() {
-                let (off, sz) = if second {
-                    store.c_slot(n.idx())
-                } else {
-                    store.h_slot(n.idx())
-                };
-                let m = sz.min(w);
-                store.arena[off..off + m].copy_from_slice(&out[pos * w..pos * w + m]);
+        let art = comp.instance(i as usize);
+        let base = comp.arena_base(i as usize);
+        let batch = &art.schedule.batches[bi as usize];
+        let acc = art.plan.batches[bi as usize]
+            .as_ref()
+            .expect("cell batch access");
+        let cnt = hi - lo;
+        let lane0 = lo - c0;
+        let in0 = lo - seg0;
+        match acc.args[arg] {
+            ArgAccess::View { base: vbase } => {
+                let src = base + vbase + in0 * w;
+                buf[lane0 * w..lane0 * w + cnt * w]
+                    .copy_from_slice(&arena[src..src + cnt * w]);
             }
-            report.memcpy_elems += take * w;
-            if planned {
-                report.planned_memcpy_elems += take * w;
+            ArgAccess::Gather { .. } => {
+                for p in 0..cnt {
+                    let node = batch.nodes[acc.exec_order[in0 + p] as usize];
+                    gather_one_lane(
+                        arena,
+                        buf,
+                        lane0 + p,
+                        &art.plan,
+                        base,
+                        &art.graph,
+                        node,
+                        sem,
+                        w,
+                        hidden,
+                    );
+                }
             }
         }
+        moved += cnt * w;
     }
+    moved
+}
+
+/// Scatter a staged composed output back to per-node slots: one block copy
+/// per segment whose instance plan made the destination contiguous,
+/// per-lane stores otherwise. Returns elements moved.
+#[allow(clippy::too_many_arguments)]
+fn scatter_composed(
+    store: &mut ArenaStateStore,
+    comp: &ComposedPlan,
+    segs: &[(u32, u32)],
+    seg_lanes: &[usize],
+    out: &[f32],
+    w: usize,
+    c0: usize,
+    take: usize,
+    second: bool,
+) -> usize {
+    let mut moved = 0usize;
+    for (s, &(i, bi)) in segs.iter().enumerate() {
+        let (seg0, seg1) = (seg_lanes[s], seg_lanes[s + 1]);
+        let lo = c0.max(seg0);
+        let hi = (c0 + take).min(seg1);
+        if lo >= hi {
+            continue;
+        }
+        let art = comp.instance(i as usize);
+        let base = comp.arena_base(i as usize);
+        let batch = &art.schedule.batches[bi as usize];
+        let acc = art.plan.batches[bi as usize]
+            .as_ref()
+            .expect("cell batch access");
+        let cnt = hi - lo;
+        let lane0 = lo - c0;
+        let in0 = lo - seg0;
+        let dst_acc = if second {
+            acc.dst_c.unwrap_or(DstAccess::Scatter { planned: false })
+        } else {
+            acc.dst_h
+        };
+        match dst_acc {
+            DstAccess::Direct { base: dbase } => {
+                let dst = base + dbase + in0 * w;
+                store.arena[dst..dst + cnt * w]
+                    .copy_from_slice(&out[lane0 * w..lane0 * w + cnt * w]);
+            }
+            DstAccess::Scatter { .. } => {
+                for p in 0..cnt {
+                    let node = batch.nodes[acc.exec_order[in0 + p] as usize];
+                    let (off, sz) = if second {
+                        art.plan.c_slot(node.idx())
+                    } else {
+                        art.plan.h_slot(node.idx())
+                    };
+                    let m = sz.min(w);
+                    store.arena[base + off..base + off + m]
+                        .copy_from_slice(&out[(lane0 + p) * w..(lane0 + p) * w + m]);
+                }
+            }
+        }
+        moved += cnt * w;
+    }
+    moved
 }
 
 // -- small helpers ---------------------------------------------------------
@@ -556,7 +1268,7 @@ fn add_lane(buf: &mut [f32], lane: usize, w: usize, src: &[f32]) {
         return;
     }
     let n = w.min(src.len());
-    k::axpy(1.0, &src[..n], &mut buf[lane * w..lane * w + n]);
+    crate::exec::cpu_kernels::axpy(1.0, &src[..n], &mut buf[lane * w..lane * w + n]);
 }
 
 /// Nodes without a real M matrix (children whose c-slot is absent or not
@@ -590,7 +1302,8 @@ pub fn run_graph(
     let scheduling_s = t1.elapsed().as_secs_f64();
 
     let mut store = ArenaStateStore::new();
-    let report = engine.execute(graph, types, &schedule, &mut store)?;
+    let mut report = engine.execute(graph, types, &schedule, &mut store)?;
+    report.policy_runs = 1;
     Ok((
         crate::coordinator::TimeBreakdown {
             construction_s,
@@ -607,6 +1320,7 @@ mod tests {
     use super::*;
     use crate::batching::fsm::{Encoding, FsmPolicy};
     use crate::batching::run_policy;
+    use crate::coordinator::compose::InstanceCache;
     use crate::util::rng::Rng;
     use crate::workloads::{Workload, WorkloadKind, ALL_WORKLOADS};
 
@@ -795,6 +1509,121 @@ mod tests {
     }
 
     #[test]
+    fn composed_execution_bit_equal_to_solo_references() {
+        // The compositional-cache soundness contract: executing a
+        // mini-batch from cached per-instance schedules + offset-translated
+        // plans produces, for every instance, outputs bit-identical to
+        // executing that instance alone through the fresh pipeline — across
+        // mixed compositions, duplicate topologies, and repeated reuse of
+        // the pooled store/engine buffers.
+        for kind in [
+            WorkloadKind::TreeLstm,
+            WorkloadKind::TreeGru,
+            WorkloadKind::MvRnn,
+            WorkloadKind::LatticeLstm,
+            WorkloadKind::BiLstmTagger,
+        ] {
+            let w = Workload::new(kind, 16);
+            let nt = w.registry.num_types();
+            let mut rng = Rng::new(42);
+            let insts: Vec<Graph> = (0..3).map(|_| w.gen_instance(&mut rng)).collect();
+            // solo references through the fresh merged-graph pipeline
+            let mut refs = Vec::new();
+            for g in &insts {
+                let mut g2 = g.clone();
+                g2.freeze();
+                let s = run_policy(&g2, nt, &mut FsmPolicy::new(Encoding::Sort));
+                let mut engine = CellEngine::new(Backend::Cpu, 16, 1).unwrap();
+                let mut store = ArenaStateStore::new();
+                engine.execute(&g2, &w.registry, &s, &mut store).unwrap();
+                refs.push(store.h_vectors());
+            }
+            // composed executions of varying composition (incl. duplicates)
+            let mixes: [&[usize]; 4] = [&[0], &[0, 1], &[2, 0, 1], &[1, 1, 2]];
+            let mut engine = CellEngine::new(Backend::Cpu, 16, 1).unwrap();
+            let mut cache = InstanceCache::new();
+            let mut policy = FsmPolicy::new(Encoding::Sort);
+            let mut comp = ComposedPlan::new();
+            let mut store = ArenaStateStore::new();
+            for mix in mixes {
+                comp.clear();
+                for &ix in mix {
+                    let art = cache.get_or_build(
+                        &insts[ix],
+                        &w.registry,
+                        &mut policy,
+                        16,
+                        MemoryMode::Planned,
+                    );
+                    comp.push_instance(art);
+                }
+                comp.compose();
+                let report = engine
+                    .execute_composed(&w.registry, &comp, &mut store)
+                    .unwrap();
+                assert_eq!(report.plans_composed, 1, "{kind:?}");
+                for (slot, &ix) in mix.iter().enumerate() {
+                    let art = comp.instance(slot);
+                    let base = comp.arena_base(slot);
+                    for node in 0..insts[ix].len() {
+                        let (off, sz) = art.plan.h_slot(node);
+                        assert_eq!(
+                            store.slice(base + off, sz),
+                            refs[ix][node].as_slice(),
+                            "{kind:?} mix {mix:?} slot {slot} node {node}"
+                        );
+                    }
+                }
+            }
+            // after warmup the cache never misses: at most one build per
+            // distinct topology (identical random draws would only lower it)
+            assert!(cache.misses <= 3, "{kind:?}: {} misses", cache.misses);
+            // 9 artifact lookups across the four mixes
+            assert_eq!(cache.hits + cache.misses, 9, "{kind:?}");
+        }
+    }
+
+    #[test]
+    fn composed_steady_state_has_no_planner_or_arena_growth() {
+        let w = Workload::new(WorkloadKind::BiLstmTagger, 16);
+        let g = w.gen_instance(&mut Rng::new(9));
+        let mut engine = CellEngine::new(Backend::Cpu, 16, 1).unwrap();
+        let mut cache = InstanceCache::new();
+        let mut policy = FsmPolicy::new(Encoding::Sort);
+        let mut comp = ComposedPlan::new();
+        let mut store = ArenaStateStore::new();
+        // warmup: first sight of the topology + largest mini-batch shape
+        comp.clear();
+        for _ in 0..4 {
+            let art = cache.get_or_build(&g, &w.registry, &mut policy, 16, MemoryMode::Planned);
+            comp.push_instance(art);
+        }
+        comp.compose();
+        engine
+            .execute_composed(&w.registry, &comp, &mut store)
+            .unwrap();
+        let (misses0, grows0) = (cache.misses, store.grows);
+        // steady state: same and smaller shapes, many times over
+        for round in 0..10 {
+            comp.clear();
+            for _ in 0..(1 + round % 4) {
+                let art =
+                    cache.get_or_build(&g, &w.registry, &mut policy, 16, MemoryMode::Planned);
+                comp.push_instance(art);
+            }
+            comp.compose();
+            let r = engine
+                .execute_composed(&w.registry, &comp, &mut store)
+                .unwrap();
+            assert_eq!(r.plans_built, 0, "round {round}");
+            assert_eq!(r.arena_grows, 0, "round {round}");
+            assert_eq!(r.plans_composed, 1, "round {round}");
+        }
+        assert_eq!(cache.misses, misses0, "steady state must not re-plan");
+        assert_eq!(store.grows, grows0, "steady state must not reallocate");
+    }
+
+    #[test]
     fn schedule_order_does_not_change_values() {
         // agenda vs fsm schedules must produce identical node outputs
         let w = Workload::new(WorkloadKind::LatticeLstm, 32);
@@ -868,5 +1697,6 @@ mod tests {
         let p1 = engine.plan_for(&g, &w.registry, &schedule);
         let p2 = engine.plan_for(&g, &w.registry, &schedule);
         assert!(Rc::ptr_eq(&p1, &p2));
+        assert_eq!(engine.plans_built(), 1);
     }
 }

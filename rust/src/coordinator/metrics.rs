@@ -14,15 +14,25 @@ use super::TimeBreakdown;
 #[derive(Default)]
 struct Inner {
     latencies: Samples,
-    per_workload: BTreeMap<String, Samples>,
+    // keys are workload names (&'static str) so the per-request hot path
+    // never allocates a String
+    per_workload: BTreeMap<&'static str, Samples>,
     breakdown: TimeBreakdown,
     requests: u64,
     instances: u64,
+    minibatches: u64,
     batches_executed: u64,
     kernel_calls: u64,
     memcpy_elems: u64,
     copies_avoided_elems: u64,
     padded_lanes: u64,
+    // hot-path plan provenance: composed vs planned fresh
+    policy_runs: u64,
+    plans_built: u64,
+    plans_composed: u64,
+    instance_cache_hits: u64,
+    instance_cache_misses: u64,
+    arena_grows: u64,
     // queue-depth gauge, sampled at every enqueue
     queue_depth_sum: u64,
     queue_depth_samples: u64,
@@ -60,6 +70,8 @@ pub struct WorkloadLatency {
 pub struct MetricsSnapshot {
     pub requests: u64,
     pub instances: u64,
+    /// merged mini-batches executed
+    pub minibatches: u64,
     pub batches_executed: u64,
     pub kernel_calls: u64,
     /// gather/scatter volume actually moved (elements)
@@ -67,6 +79,18 @@ pub struct MetricsSnapshot {
     /// volume served zero-copy thanks to the memory plan (elements)
     pub copies_avoided_elems: u64,
     pub padded_lanes: u64,
+    /// batching-policy executions (FSM/agenda) — zero per mini-batch in
+    /// the steady-state composed path
+    pub policy_runs: u64,
+    /// PQ-planner invocations (instance-cache / plan-cache misses)
+    pub plans_built: u64,
+    /// mini-batches served by composing cached per-instance plans
+    pub plans_composed: u64,
+    /// instance-cache hit/miss counts (requests resolved from cache)
+    pub instance_cache_hits: u64,
+    pub instance_cache_misses: u64,
+    /// arena buffer growth events — flat after warmup
+    pub arena_grows: u64,
     pub latency_p50_s: f64,
     pub latency_p95_s: f64,
     pub latency_p99_s: f64,
@@ -129,6 +153,24 @@ impl MetricsSnapshot {
         }
         self.copies_avoided_elems as f64 / base as f64
     }
+
+    /// Fraction of mini-batches served from composed (cached) plans
+    /// instead of fresh policy + planner runs.
+    pub fn compose_rate(&self) -> f64 {
+        if self.minibatches == 0 {
+            return 0.0;
+        }
+        self.plans_composed as f64 / self.minibatches as f64
+    }
+
+    /// Instance-cache hit rate over all requests on the composed path.
+    pub fn instance_cache_hit_rate(&self) -> f64 {
+        let total = self.instance_cache_hits + self.instance_cache_misses;
+        if total == 0 {
+            return 0.0;
+        }
+        self.instance_cache_hits as f64 / total as f64
+    }
 }
 
 impl Metrics {
@@ -146,12 +188,12 @@ impl Metrics {
         *self.started.lock().unwrap() = Instant::now();
     }
 
-    pub fn record_request(&self, workload: &str, latency: Duration) {
+    pub fn record_request(&self, workload: &'static str, latency: Duration) {
         let mut g = self.inner.lock().unwrap();
         g.requests += 1;
         g.latencies.record_duration(latency);
         g.per_workload
-            .entry(workload.to_string())
+            .entry(workload)
             .or_default()
             .record_duration(latency);
     }
@@ -187,12 +229,19 @@ impl Metrics {
     ) {
         let mut g = self.inner.lock().unwrap();
         g.instances += instances as u64;
+        g.minibatches += 1;
         g.breakdown.add(breakdown);
         g.batches_executed += report.batches as u64;
         g.kernel_calls += report.kernel_calls as u64;
         g.memcpy_elems += report.memcpy_elems as u64;
         g.copies_avoided_elems += report.copies_avoided_elems as u64;
         g.padded_lanes += report.padded_lanes as u64;
+        g.policy_runs += report.policy_runs as u64;
+        g.plans_built += report.plans_built as u64;
+        g.plans_composed += report.plans_composed as u64;
+        g.instance_cache_hits += report.cache_hits as u64;
+        g.instance_cache_misses += report.cache_misses as u64;
+        g.arena_grows += report.arena_grows as u64;
     }
 
     pub fn snapshot(&self) -> MetricsSnapshot {
@@ -200,11 +249,18 @@ impl Metrics {
         MetricsSnapshot {
             requests: g.requests,
             instances: g.instances,
+            minibatches: g.minibatches,
             batches_executed: g.batches_executed,
             kernel_calls: g.kernel_calls,
             memcpy_elems: g.memcpy_elems,
             copies_avoided_elems: g.copies_avoided_elems,
             padded_lanes: g.padded_lanes,
+            policy_runs: g.policy_runs,
+            plans_built: g.plans_built,
+            plans_composed: g.plans_composed,
+            instance_cache_hits: g.instance_cache_hits,
+            instance_cache_misses: g.instance_cache_misses,
+            arena_grows: g.arena_grows,
             latency_p50_s: g.latencies.p50(),
             latency_p95_s: g.latencies.percentile(95.0),
             latency_p99_s: g.latencies.p99(),
@@ -213,7 +269,7 @@ impl Metrics {
                 .per_workload
                 .iter()
                 .map(|(name, s)| WorkloadLatency {
-                    workload: name.clone(),
+                    workload: name.to_string(),
                     requests: s.len() as u64,
                     p50_s: s.p50(),
                     p99_s: s.p99(),
@@ -280,6 +336,46 @@ mod tests {
         assert_eq!(s.per_workload[0].workload, "bilstm-tagger");
         assert_eq!(s.per_workload[0].requests, 1);
         assert_eq!(s.per_workload[1].workload, "treelstm");
+    }
+
+    #[test]
+    fn hot_path_counters_aggregate() {
+        let m = Metrics::new();
+        let bd = TimeBreakdown::default();
+        // warmup minibatch: policy + planner ran, arena grew
+        m.record_minibatch(
+            2,
+            &bd,
+            &ExecReport {
+                policy_runs: 2,
+                plans_built: 2,
+                plans_composed: 1,
+                cache_hits: 0,
+                cache_misses: 2,
+                arena_grows: 1,
+                ..Default::default()
+            },
+        );
+        // steady-state minibatch: pure composition
+        m.record_minibatch(
+            3,
+            &bd,
+            &ExecReport {
+                plans_composed: 1,
+                cache_hits: 3,
+                ..Default::default()
+            },
+        );
+        let s = m.snapshot();
+        assert_eq!(s.minibatches, 2);
+        assert_eq!(s.policy_runs, 2);
+        assert_eq!(s.plans_built, 2);
+        assert_eq!(s.plans_composed, 2);
+        assert_eq!(s.instance_cache_hits, 3);
+        assert_eq!(s.instance_cache_misses, 2);
+        assert_eq!(s.arena_grows, 1);
+        assert!((s.compose_rate() - 1.0).abs() < 1e-12);
+        assert!((s.instance_cache_hit_rate() - 0.6).abs() < 1e-12);
     }
 
     #[test]

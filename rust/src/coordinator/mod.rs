@@ -3,12 +3,16 @@
 //! * [`engine`] — cell-granularity batched execution of scheduled graphs
 //!   (PJRT artifacts on the hot path, plus a CPU reference backend used to
 //!   cross-check numerics in tests),
+//! * [`compose`] — the compositional per-instance schedule/plan cache the
+//!   steady-state serving path executes from (zero policy runs, zero PQ
+//!   planning after first sight of a topology),
 //! * [`server`] — multi-workload request router over a worker pool
 //!   (per-workload queues, continuous full-or-timed-out dispatch),
 //! * [`metrics`] — throughput/latency/queue-depth/policy-store accounting,
 //! * [`policies`] — mode → policy resolution (persistence lives in
 //!   [`crate::policystore`]).
 
+pub mod compose;
 pub mod engine;
 pub mod metrics;
 pub mod policies;

@@ -23,18 +23,51 @@ use crate::util::rng::Rng;
 use super::cpu_kernels as k;
 
 /// A batched cell executor. `data` buffers hold `bucket` lanes per data
-/// argument (zero-padded past the real lane count); outputs come back flat
-/// with `bucket` lanes each, in [`cells::out_widths`] order.
+/// argument (zero-padded past the real lane count); outputs are written
+/// flat with `bucket` lanes each, in [`cells::out_widths`] order.
 pub trait ExecBackend {
     fn name(&self) -> &'static str;
+
+    /// Hidden size this backend executes at (fixes output widths).
+    fn hidden(&self) -> usize;
 
     /// Split a `lanes`-sized batch of `cell` into executable bucket sizes
     /// (ascending cursor order; a bucket may exceed the lanes it covers,
     /// the engine zero-pads).
     fn chunk_plan(&self, cell: &str, lanes: usize) -> Result<Vec<usize>>;
 
-    /// Execute one chunk of `bucket` lanes.
-    fn run_cell(&mut self, cell: &str, data: &[&[f32]], bucket: usize) -> Result<Vec<Vec<f32>>>;
+    /// Execute one chunk of `bucket` lanes, writing each output tensor
+    /// into the caller-provided buffer: `outs[i]` must hold exactly
+    /// `bucket * out_widths[i]` elements and is fully overwritten. The
+    /// serving hot path passes planned-contiguous **arena slices** here,
+    /// so results land in place with zero output allocation and zero
+    /// output copies; lanes must be computed independently (lane `i`'s
+    /// outputs depend only on lane `i`'s inputs) so values are invariant
+    /// to how lanes are grouped into chunks — the serving bit-equality
+    /// contract.
+    fn run_cell_into(
+        &mut self,
+        cell: &str,
+        data: &[&[f32]],
+        bucket: usize,
+        outs: &mut [&mut [f32]],
+    ) -> Result<()>;
+
+    /// Allocating convenience wrapper around [`ExecBackend::run_cell_into`]
+    /// (tests and cold paths).
+    fn run_cell(&mut self, cell: &str, data: &[&[f32]], bucket: usize) -> Result<Vec<Vec<f32>>> {
+        let ow = cells::out_widths(cell, self.hidden());
+        if ow.is_empty() {
+            return Err(anyhow!("unknown cell {cell}"));
+        }
+        let mut outs: Vec<Vec<f32>> = ow.iter().map(|w| vec![0.0f32; bucket * w]).collect();
+        {
+            let mut refs: Vec<&mut [f32]> =
+                outs.iter_mut().map(|v| v.as_mut_slice()).collect();
+            self.run_cell_into(cell, data, bucket, &mut refs)?;
+        }
+        Ok(outs)
+    }
 
     /// Launch `n` minimal no-op kernels (the unfused-baseline launch
     /// charge); returns how many were actually launched.
@@ -118,6 +151,13 @@ impl CellWeights {
 pub struct CpuBackend {
     hidden: usize,
     weights: CellWeights,
+    /// pooled intermediate buffers (gates / candidates / per-lane staging)
+    /// reused across [`ExecBackend::run_cell_into`] calls — the backend
+    /// allocates nothing per batch once warm
+    t0: Vec<f32>,
+    t1: Vec<f32>,
+    t2: Vec<f32>,
+    t3: Vec<f32>,
 }
 
 impl CpuBackend {
@@ -125,8 +165,26 @@ impl CpuBackend {
         CpuBackend {
             hidden,
             weights: CellWeights::new(hidden),
+            t0: Vec::new(),
+            t1: Vec::new(),
+            t2: Vec::new(),
+            t3: Vec::new(),
         }
     }
+}
+
+/// Size a pooled buffer (allocation-free once capacity is reached) and hand
+/// out the zeroed slice.
+fn fit(buf: &mut Vec<f32>, n: usize) -> &mut [f32] {
+    buf.clear();
+    buf.resize(n, 0.0);
+    &mut buf[..]
+}
+
+/// Split a two-output `outs` into its (h, c/M) buffers.
+fn split2<'a>(outs: &'a mut [&mut [f32]]) -> (&'a mut [f32], &'a mut [f32]) {
+    let (a, rest) = outs.split_at_mut(1);
+    (&mut *a[0], &mut *rest[0])
 }
 
 impl ExecBackend for CpuBackend {
@@ -134,80 +192,118 @@ impl ExecBackend for CpuBackend {
         "cpu"
     }
 
+    fn hidden(&self) -> usize {
+        self.hidden
+    }
+
     fn chunk_plan(&self, _cell: &str, lanes: usize) -> Result<Vec<usize>> {
         Ok(vec![lanes.max(1)])
     }
 
-    fn run_cell(&mut self, cell: &str, data: &[&[f32]], bucket: usize) -> Result<Vec<Vec<f32>>> {
-        let h = self.hidden;
+    fn run_cell_into(
+        &mut self,
+        cell: &str,
+        data: &[&[f32]],
+        bucket: usize,
+        outs: &mut [&mut [f32]],
+    ) -> Result<()> {
         let b = bucket;
         let nc = cells::NUM_CLASSES;
-        // no clone: the borrow lives for the match below only (hot path)
-        let w = self.weights.get(cell);
-        let out = match cell {
+        // disjoint field borrows: weights for the shared tensors, t0..t3 as
+        // scratch, so the whole call is allocation-free once warm
+        let CpuBackend {
+            hidden,
+            weights,
+            t0,
+            t1,
+            t2,
+            t3,
+        } = self;
+        let h = *hidden;
+        debug_assert_eq!(outs.len(), cells::out_widths(cell, h).len(), "{cell}");
+        debug_assert_eq!(data.len(), cells::data_arg_count(cell), "{cell}");
+        let w = weights.get(cell);
+        match cell {
             "lstm" => {
-                let gates = affine2(data[0], data[1], &w[0], &w[1], &w[2], b, h, 4 * h);
-                lstm_pointwise(&gates, data[2], b, h)
+                let gates = fit(t0, b * 4 * h);
+                affine2_into(data[0], data[1], &w[0], &w[1], &w[2], b, h, 4 * h, t1, gates);
+                let (hn, cn) = split2(outs);
+                lstm_pointwise_into(gates, data[2], b, h, hn, cn);
             }
             "gru" => {
-                let rz = affine2(data[0], data[1], &w[0], &w[1], &w[2], b, h, 2 * h);
-                let mut nx = vec![0.0; b * h];
-                k::matmul(data[0], &w[3], &mut nx, b, h, h);
-                let mut nxb = vec![0.0; b * h];
-                k::add_bias(&nx, &w[5], &mut nxb);
-                let mut nh = vec![0.0; b * h];
-                k::matmul(data[1], &w[4], &mut nh, b, h, h);
-                vec![gru_pointwise(&rz, &nxb, &nh, data[1], b, h)]
+                let rz = fit(t0, b * 2 * h);
+                affine2_into(data[0], data[1], &w[0], &w[1], &w[2], b, h, 2 * h, t1, rz);
+                let nx = fit(t1, b * h);
+                k::matmul(data[0], &w[3], nx, b, h, h);
+                let nh = fit(t2, b * h);
+                k::matmul(data[1], &w[4], nh, b, h, h);
+                let out = &mut *outs[0];
+                for i in 0..b {
+                    for j in 0..h {
+                        let r = sigm(rz[i * 2 * h + j]);
+                        let z = sigm(rz[i * 2 * h + h + j]);
+                        let n = ((nx[i * h + j] + w[5][j]) + r * nh[i * h + j]).tanh();
+                        out[i * h + j] = (1.0 - z) * n + z * data[1][i * h + j];
+                    }
+                }
             }
             "treelstm_internal" => {
-                let gates = affine2(data[0], data[1], &w[0], &w[1], &w[2], b, h, 5 * h);
-                treelstm_pointwise(&gates, data[2], data[3], b, h)
+                let gates = fit(t0, b * 5 * h);
+                affine2_into(data[0], data[1], &w[0], &w[1], &w[2], b, h, 5 * h, t1, gates);
+                let (hn, cn) = split2(outs);
+                treelstm_pointwise_into(gates, data[2], data[3], b, h, hn, cn);
             }
             "treelstm_leaf" => {
-                let mut g = vec![0.0; b * 3 * h];
-                k::matmul(data[0], &w[0], &mut g, b, h, 3 * h);
-                let mut gb = vec![0.0; b * 3 * h];
-                k::add_bias(&g, &w[1], &mut gb);
-                treelstm_leaf_pointwise(&gb, b, h)
+                let g = fit(t0, b * 3 * h);
+                k::matmul(data[0], &w[0], g, b, h, 3 * h);
+                let gb = fit(t1, b * 3 * h);
+                k::add_bias(g, &w[1], gb);
+                let (hn, cn) = split2(outs);
+                for i in 0..b {
+                    for j in 0..h {
+                        let g = |kk: usize| gb[i * 3 * h + kk * h + j];
+                        let cv = sigm(g(0)) * g(1).tanh();
+                        cn[i * h + j] = cv;
+                        hn[i * h + j] = sigm(g(2)) * cv.tanh();
+                    }
+                }
             }
             "treegru_internal" => {
-                let rz = affine2(data[0], data[1], &w[0], &w[1], &w[2], b, h, 3 * h);
+                let rz = fit(t0, b * 3 * h);
+                affine2_into(data[0], data[1], &w[0], &w[1], &w[2], b, h, 3 * h, t1, rz);
                 // candidate: tanh((r_l*h_l) @ w3 + (r_r*h_r) @ w4 + b5)
-                let mut rhl = vec![0.0; b * h];
-                let mut rhr = vec![0.0; b * h];
+                let rhl = fit(t1, b * h);
+                let rhr = fit(t2, b * h);
                 for i in 0..b {
                     for j in 0..h {
                         rhl[i * h + j] = sigm(rz[i * 3 * h + j]) * data[0][i * h + j];
                         rhr[i * h + j] = sigm(rz[i * 3 * h + h + j]) * data[1][i * h + j];
                     }
                 }
-                let mut n1 = vec![0.0; b * h];
-                k::matmul(&rhl, &w[3], &mut n1, b, h, h);
-                let mut n2 = vec![0.0; b * h];
-                k::matmul(&rhr, &w[4], &mut n2, b, h, h);
-                let mut h2 = vec![0.0; b * h];
+                let n1 = fit(t3, b * h);
+                k::matmul(rhl, &w[3], n1, b, h, h);
+                let n2 = fit(t1, b * h);
+                k::matmul(rhr, &w[4], n2, b, h, h);
+                let out = &mut *outs[0];
                 for i in 0..b {
                     for j in 0..h {
                         let z = sigm(rz[i * 3 * h + 2 * h + j]);
                         let n = (n1[i * h + j] + n2[i * h + j] + w[5][j]).tanh();
                         let hbar = 0.5 * (data[0][i * h + j] + data[1][i * h + j]);
-                        h2[i * h + j] = (1.0 - z) * n + z * hbar;
+                        out[i * h + j] = (1.0 - z) * n + z * hbar;
                     }
                 }
-                vec![h2]
             }
             "treegru_leaf" => {
-                let mut m = vec![0.0; b * h];
-                k::matmul(data[0], &w[0], &mut m, b, h, h);
-                let mut mb = vec![0.0; b * h];
-                k::add_bias(&m, &w[1], &mut mb);
-                let mut out = vec![0.0; b * h];
-                k::tanh(&mb, &mut out);
-                vec![out]
+                let m = fit(t0, b * h);
+                k::matmul(data[0], &w[0], m, b, h, h);
+                let mb = fit(t1, b * h);
+                k::add_bias(m, &w[1], mb);
+                k::tanh(mb, &mut *outs[0]);
             }
             "mv_cell" => {
                 // cross_l[b] = M_r[b] h_l[b]; cross_r[b] = M_l[b] h_r[b]
-                let mut cat = vec![0.0; b * 2 * h];
+                let cat = fit(t0, b * 2 * h);
                 for i in 0..b {
                     for r in 0..h {
                         let mut acc_l = 0.0;
@@ -220,20 +316,21 @@ impl ExecBackend for CpuBackend {
                         cat[i * 2 * h + h + r] = acc_r;
                     }
                 }
-                let mut hv = vec![0.0; b * h];
-                k::matmul(&cat, &w[0], &mut hv, b, 2 * h, h);
-                let mut hvb = vec![0.0; b * h];
-                k::add_bias(&hv, &w[1], &mut hvb);
-                let mut hout = vec![0.0; b * h];
-                k::tanh(&hvb, &mut hout);
-                // m' = w2[h,2h] @ [M_l; M_r] + w3
-                let mut mout = vec![0.0; b * h * h];
+                let hv = fit(t1, b * h);
+                k::matmul(cat, &w[0], hv, b, 2 * h, h);
+                let (hout, mout) = split2(outs);
                 for i in 0..b {
-                    let mut stacked = vec![0.0; 2 * h * h];
+                    for j in 0..h {
+                        hout[i * h + j] = (hv[i * h + j] + w[1][j]).tanh();
+                    }
+                }
+                // m' = w2[h,2h] @ [M_l; M_r] + w3
+                let stacked = fit(t2, 2 * h * h);
+                let mm = fit(t3, h * h);
+                for i in 0..b {
                     stacked[..h * h].copy_from_slice(&data[2][i * h * h..(i + 1) * h * h]);
                     stacked[h * h..].copy_from_slice(&data[3][i * h * h..(i + 1) * h * h]);
-                    let mut mm = vec![0.0; h * h];
-                    k::matmul(&w[2], &stacked, &mut mm, h, 2 * h, h);
+                    k::matmul(&w[2], stacked, mm, h, 2 * h, h);
                     for (o, (&a, &bv)) in mout[i * h * h..(i + 1) * h * h]
                         .iter_mut()
                         .zip(mm.iter().zip(w[3].iter()))
@@ -241,18 +338,15 @@ impl ExecBackend for CpuBackend {
                         *o = a + bv;
                     }
                 }
-                vec![hout, mout]
             }
             "classifier" => {
-                let mut l = vec![0.0; b * nc];
-                k::matmul(data[0], &w[0], &mut l, b, h, nc);
-                let mut lb = vec![0.0; b * nc];
-                k::add_bias(&l, &w[1], &mut lb);
-                vec![lb]
+                let l = fit(t0, b * nc);
+                k::matmul(data[0], &w[0], l, b, h, nc);
+                k::add_bias(l, &w[1], &mut *outs[0]);
             }
             other => return Err(anyhow!("cpu backend: unknown cell {other}")),
-        };
-        Ok(out)
+        }
+        Ok(())
     }
 }
 
@@ -338,6 +432,44 @@ impl ExecBackend for PjrtBackend<'_> {
         "pjrt"
     }
 
+    fn hidden(&self) -> usize {
+        self.hidden
+    }
+
+    /// Device outputs come back as host vectors from the PJRT bindings, so
+    /// this copies them into the caller's buffers — the copy sits at the
+    /// stub/device boundary, not in the engine loop. With real bindings the
+    /// donated-output path would land directly in `outs`. Size mismatches
+    /// (an artifact whose output widths disagree with [`cells::out_widths`])
+    /// fail loudly instead of truncating into stale arena contents.
+    fn run_cell_into(
+        &mut self,
+        cell: &str,
+        data: &[&[f32]],
+        bucket: usize,
+        outs: &mut [&mut [f32]],
+    ) -> Result<()> {
+        let vals = self.run_cell(cell, data, bucket)?;
+        if vals.len() != outs.len() {
+            return Err(anyhow!(
+                "artifact {cell}: {} outputs, caller expected {}",
+                vals.len(),
+                outs.len()
+            ));
+        }
+        for (i, (o, v)) in outs.iter_mut().zip(vals.iter()).enumerate() {
+            if o.len() != v.len() {
+                return Err(anyhow!(
+                    "artifact {cell}: output {i} has {} elems, caller buffer holds {}",
+                    v.len(),
+                    o.len()
+                ));
+            }
+            o.copy_from_slice(v);
+        }
+        Ok(())
+    }
+
     fn chunk_plan(&self, cell: &str, lanes: usize) -> Result<Vec<usize>> {
         self.reg
             .chunk_plan(cell, self.hidden, lanes)
@@ -393,8 +525,11 @@ fn sigm(x: f32) -> f32 {
     1.0 / (1.0 + (-x).exp())
 }
 
+/// `out = x @ wx + hvec @ wh + bias`, using `tmp` as the pooled buffer for
+/// the second product. Accumulation order matches the legacy path:
+/// `(g1 + g2) + bias` per element.
 #[allow(clippy::too_many_arguments)]
-fn affine2(
+fn affine2_into(
     x: &[f32],
     hvec: &[f32],
     wx: &[f32],
@@ -403,41 +538,21 @@ fn affine2(
     b: usize,
     h: usize,
     n: usize,
-) -> Vec<f32> {
-    let mut g1 = vec![0.0; b * n];
-    k::matmul(x, wx, &mut g1, b, h, n);
-    let mut g2 = vec![0.0; b * n];
-    k::matmul(hvec, wh, &mut g2, b, h, n);
-    let mut s = vec![0.0; b * n];
-    k::add(&g1, &g2, &mut s);
-    let mut out = vec![0.0; b * n];
-    k::add_bias(&s, bias, &mut out);
-    out
-}
-
-fn gru_pointwise(
-    rz: &[f32],
-    nx: &[f32],
-    nh: &[f32],
-    hprev: &[f32],
-    b: usize,
-    h: usize,
-) -> Vec<f32> {
-    let mut out = vec![0.0; b * h];
+    tmp: &mut Vec<f32>,
+    out: &mut [f32],
+) {
+    k::matmul(x, wx, out, b, h, n);
+    tmp.clear();
+    tmp.resize(b * n, 0.0);
+    k::matmul(hvec, wh, tmp, b, h, n);
     for i in 0..b {
-        for j in 0..h {
-            let r = sigm(rz[i * 2 * h + j]);
-            let z = sigm(rz[i * 2 * h + h + j]);
-            let n = (nx[i * h + j] + r * nh[i * h + j]).tanh();
-            out[i * h + j] = (1.0 - z) * n + z * hprev[i * h + j];
+        for j in 0..n {
+            out[i * n + j] = (out[i * n + j] + tmp[i * n + j]) + bias[j];
         }
     }
-    out
 }
 
-fn lstm_pointwise(gates: &[f32], c: &[f32], b: usize, h: usize) -> Vec<Vec<f32>> {
-    let mut hn = vec![0.0; b * h];
-    let mut cn = vec![0.0; b * h];
+fn lstm_pointwise_into(gates: &[f32], c: &[f32], b: usize, h: usize, hn: &mut [f32], cn: &mut [f32]) {
     for i in 0..b {
         for j in 0..h {
             let g = |k: usize| gates[i * 4 * h + k * h + j];
@@ -446,12 +561,18 @@ fn lstm_pointwise(gates: &[f32], c: &[f32], b: usize, h: usize) -> Vec<Vec<f32>>
             hn[i * h + j] = sigm(g(3)) * cv.tanh();
         }
     }
-    vec![hn, cn]
 }
 
-fn treelstm_pointwise(gates: &[f32], cl: &[f32], cr: &[f32], b: usize, h: usize) -> Vec<Vec<f32>> {
-    let mut hn = vec![0.0; b * h];
-    let mut cn = vec![0.0; b * h];
+#[allow(clippy::too_many_arguments)]
+fn treelstm_pointwise_into(
+    gates: &[f32],
+    cl: &[f32],
+    cr: &[f32],
+    b: usize,
+    h: usize,
+    hn: &mut [f32],
+    cn: &mut [f32],
+) {
     for i in 0..b {
         for j in 0..h {
             let g = |k: usize| gates[i * 5 * h + k * h + j];
@@ -461,21 +582,6 @@ fn treelstm_pointwise(gates: &[f32], cl: &[f32], cr: &[f32], b: usize, h: usize)
             hn[i * h + j] = sigm(g(4)) * cv.tanh();
         }
     }
-    vec![hn, cn]
-}
-
-fn treelstm_leaf_pointwise(gates: &[f32], b: usize, h: usize) -> Vec<Vec<f32>> {
-    let mut hn = vec![0.0; b * h];
-    let mut cn = vec![0.0; b * h];
-    for i in 0..b {
-        for j in 0..h {
-            let g = |k: usize| gates[i * 3 * h + k * h + j];
-            let cv = sigm(g(0)) * g(1).tanh();
-            cn[i * h + j] = cv;
-            hn[i * h + j] = sigm(g(2)) * cv.tanh();
-        }
-    }
-    vec![hn, cn]
 }
 
 #[cfg(test)]
@@ -511,6 +617,41 @@ mod tests {
                 assert_eq!(o.len(), b * w, "{cell}");
                 assert!(o.iter().all(|v| v.is_finite()), "{cell}");
             }
+        }
+    }
+
+    #[test]
+    fn run_cell_into_overwrites_caller_buffers_and_matches_run_cell() {
+        let h = 8;
+        let b = 3;
+        let mut be = CpuBackend::new(h);
+        for cell in [
+            "lstm",
+            "gru",
+            "treelstm_internal",
+            "treelstm_leaf",
+            "treegru_internal",
+            "treegru_leaf",
+            "mv_cell",
+            "classifier",
+        ] {
+            let widths = cells::data_arg_widths(cell, h);
+            let bufs: Vec<Vec<f32>> = widths
+                .iter()
+                .enumerate()
+                .map(|(i, w)| (0..b * w).map(|j| ((i + j) as f32 * 0.03).cos() * 0.3).collect())
+                .collect();
+            let data: Vec<&[f32]> = bufs.iter().map(|v| v.as_slice()).collect();
+            let via_alloc = be.run_cell(cell, &data, b).unwrap();
+            // pre-fill with garbage: run_cell_into must fully overwrite
+            let ow = cells::out_widths(cell, h);
+            let mut direct: Vec<Vec<f32>> = ow.iter().map(|w| vec![9.0; b * w]).collect();
+            {
+                let mut refs: Vec<&mut [f32]> =
+                    direct.iter_mut().map(|v| v.as_mut_slice()).collect();
+                be.run_cell_into(cell, &data, b, &mut refs).unwrap();
+            }
+            assert_eq!(via_alloc, direct, "{cell}");
         }
     }
 

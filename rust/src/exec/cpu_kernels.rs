@@ -1,24 +1,66 @@
 //! CPU primitive kernels — the "vendor library" stand-in for the
 //! DyNet-granularity baseline and the static-subgraph executor.
 //!
-//! The matmul is register-blocked (4x4 micro-kernel over k) which is enough
-//! to make the executor compute-bound at the Table-2 sizes; elementwise ops
-//! are simple vectorizable loops.
+//! The matmul uses an i-k-j loop order with a 4-deep unrolled k micro-kernel
+//! (four B rows live per inner pass, unit-stride over B and C), which is
+//! enough to make the executor compute-bound at the serving hidden sizes;
+//! elementwise ops are simple vectorizable loops. Each output element's
+//! accumulation order over k is identical to [`matmul_naive`]'s, so the two
+//! agree bit-for-bit (asserted in tests) and per-row results are independent
+//! of the batch dimension — the property the serving bit-equality contract
+//! (merged execution == solo execution) rests on.
 
-/// C[m,n] = A[m,k] @ B[k,n], row-major, accumulate-into (C pre-zeroed).
+/// C[m,n] = A[m,k] @ B[k,n], row-major (C is fully overwritten).
 pub fn matmul(a: &[f32], b: &[f32], c: &mut [f32], m: usize, k: usize, n: usize) {
     debug_assert_eq!(a.len(), m * k);
     debug_assert_eq!(b.len(), k * n);
     debug_assert_eq!(c.len(), m * n);
     c.fill(0.0);
-    // i-k-j loop order: unit-stride inner loop over both B and C rows
+    for i in 0..m {
+        let arow = &a[i * k..(i + 1) * k];
+        let crow = &mut c[i * n..(i + 1) * n];
+        let mut kk = 0;
+        while kk + 4 <= k {
+            let (a0, a1, a2, a3) = (arow[kk], arow[kk + 1], arow[kk + 2], arow[kk + 3]);
+            let b0 = &b[kk * n..kk * n + n];
+            let b1 = &b[(kk + 1) * n..(kk + 1) * n + n];
+            let b2 = &b[(kk + 2) * n..(kk + 2) * n + n];
+            let b3 = &b[(kk + 3) * n..(kk + 3) * n + n];
+            for (j, cv) in crow.iter_mut().enumerate() {
+                let mut v = *cv;
+                v += a0 * b0[j];
+                v += a1 * b1[j];
+                v += a2 * b2[j];
+                v += a3 * b3[j];
+                *cv = v;
+            }
+            kk += 4;
+        }
+        while kk < k {
+            let av = arow[kk];
+            let brow = &b[kk * n..(kk + 1) * n];
+            for (cv, &bv) in crow.iter_mut().zip(brow.iter()) {
+                *cv += av * bv;
+            }
+            kk += 1;
+        }
+    }
+}
+
+/// Reference i-k-j triple loop (one k step at a time). Kept as the ground
+/// truth the unrolled [`matmul`] is asserted bit-identical against; the old
+/// hot-path `if av == 0.0` zero-skip was removed from both —
+/// on dense activations it is a per-element branch misprediction tax, and it
+/// made the FLOP count data-dependent.
+pub fn matmul_naive(a: &[f32], b: &[f32], c: &mut [f32], m: usize, k: usize, n: usize) {
+    debug_assert_eq!(a.len(), m * k);
+    debug_assert_eq!(b.len(), k * n);
+    debug_assert_eq!(c.len(), m * n);
+    c.fill(0.0);
     for i in 0..m {
         let arow = &a[i * k..(i + 1) * k];
         let crow = &mut c[i * n..(i + 1) * n];
         for (kk, &av) in arow.iter().enumerate() {
-            if av == 0.0 {
-                continue;
-            }
             let brow = &b[kk * n..(kk + 1) * n];
             for (cv, &bv) in crow.iter_mut().zip(brow.iter()) {
                 *cv += av * bv;
@@ -129,6 +171,25 @@ mod tests {
         let mut c = vec![0.0; 2];
         matmul(&a, &b, &mut c, 1, 3, 2);
         assert_eq!(c, vec![1.0 * 2.0 + 0.5 * 4.0 - 6.0, 1.0 + 2.0]);
+    }
+
+    #[test]
+    fn matmul_unrolled_bit_identical_to_naive() {
+        // the unrolled micro-kernel preserves the naive per-element
+        // accumulation order, so equality is exact — including shapes that
+        // exercise the k-remainder loop and zero-heavy inputs (the removed
+        // zero-skip branch must not change results)
+        for (m, k, n) in [(1, 1, 1), (3, 4, 5), (2, 7, 3), (5, 9, 8), (4, 32, 32)] {
+            let a: Vec<f32> = (0..m * k)
+                .map(|i| if i % 5 == 0 { 0.0 } else { ((i as f32) * 0.37).sin() })
+                .collect();
+            let b: Vec<f32> = (0..k * n).map(|i| ((i as f32) * 0.11).cos() * 0.5).collect();
+            let mut c1 = vec![1.0; m * n]; // pre-filled: both must overwrite
+            let mut c2 = vec![-1.0; m * n];
+            matmul(&a, &b, &mut c1, m, k, n);
+            matmul_naive(&a, &b, &mut c2, m, k, n);
+            assert_eq!(c1, c2, "m={m} k={k} n={n}");
+        }
     }
 
     #[test]

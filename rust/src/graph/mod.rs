@@ -149,6 +149,33 @@ pub struct Graph {
     /// local ids at any merge offset, so anything keyed on them (source
     /// embeddings, materialized MV matrices) is batch-invariant.
     local_ids: Vec<u32>,
+    /// Incrementally-maintained topology fingerprint: a running FNV mix of
+    /// every node's (op, instance, pred distances), updated in O(preds) at
+    /// [`Graph::add`] / [`Graph::merge`] time. Predecessors are encoded as
+    /// *relative* distances, so two structurally identical instance graphs
+    /// hash identically no matter how they were assembled — the key the
+    /// serving-path instance cache (`coordinator::compose`) looks plans and
+    /// schedules up under without walking the graph again.
+    fp: u64,
+}
+
+const FP_PRIME: u64 = 0x100000001b3;
+
+#[inline]
+fn fp_mix(acc: u64, v: u64) -> u64 {
+    (acc ^ v).wrapping_mul(FP_PRIME)
+}
+
+#[inline]
+fn fp_node(mut acc: u64, id: u32, op: OpType, instance: u32, preds: &[NodeId]) -> u64 {
+    acc = fp_mix(acc, 0x9E37 ^ op.0 as u64);
+    acc = fp_mix(acc, instance as u64);
+    acc = fp_mix(acc, preds.len() as u64);
+    for p in preds {
+        // relative encoding: invariant under the uniform id shift merge applies
+        acc = fp_mix(acc, (id - p.0) as u64);
+    }
+    acc
 }
 
 /// CSR successor table.
@@ -170,12 +197,22 @@ impl Graph {
         );
         debug_assert!(self.succs.is_none(), "graph frozen after successor build");
         let id = NodeId(self.nodes.len() as u32);
+        self.fp = fp_node(self.fp, id.0, op, instance, &preds);
         self.nodes.push(Node {
             op,
             preds,
             instance,
         });
         id
+    }
+
+    /// Topology fingerprint of the graph as built so far (O(1): maintained
+    /// incrementally by [`Graph::add`] and [`Graph::merge`]). Two graphs
+    /// with identical (op, instance, preds) node streams share it; the
+    /// serving instance cache keys per-request schedules and memory plans
+    /// on it.
+    pub fn topology_fingerprint(&self) -> u64 {
+        fp_mix(self.fp, self.nodes.len() as u64)
     }
 
     pub fn len(&self) -> usize {
@@ -206,11 +243,14 @@ impl Graph {
             .max()
             .unwrap_or(0);
         for n in &other.nodes {
-            self.nodes.push(Node {
+            let id = NodeId(self.nodes.len() as u32);
+            let node = Node {
                 op: n.op,
                 preds: n.preds.iter().map(|p| NodeId(p.0 + off)).collect(),
                 instance: n.instance + inst_off,
-            });
+            };
+            self.fp = fp_node(self.fp, id.0, node.op, node.instance, &node.preds);
+            self.nodes.push(node);
         }
         off
     }
@@ -414,6 +454,45 @@ mod tests {
                 );
             }
         }
+    }
+
+    #[test]
+    fn fingerprint_identical_for_identical_builds() {
+        let a = diamond();
+        let b = diamond();
+        assert_eq!(a.topology_fingerprint(), b.topology_fingerprint());
+        // a different shape must (practically) never collide
+        let mut c = diamond();
+        c.add(OpType(2), vec![NodeId(3)], 0);
+        assert_ne!(a.topology_fingerprint(), c.topology_fingerprint());
+        // same shape, different op types
+        let mut d = Graph::new();
+        let x = d.add(OpType(1), vec![], 0);
+        let y = d.add(OpType(1), vec![x], 0);
+        let z = d.add(OpType(1), vec![x], 0);
+        d.add(OpType(2), vec![y, z], 0);
+        assert_ne!(a.topology_fingerprint(), d.topology_fingerprint());
+    }
+
+    #[test]
+    fn fingerprint_matches_incremental_merge() {
+        // the fingerprint maintained through merge() equals the one a
+        // from-scratch build of the same node stream produces
+        let mut merged = diamond();
+        merged.merge(&diamond());
+        let mut rebuilt = Graph::new();
+        for n in merged.nodes.clone() {
+            rebuilt.add(n.op, n.preds, n.instance);
+        }
+        assert_eq!(
+            merged.topology_fingerprint(),
+            rebuilt.topology_fingerprint()
+        );
+        // and differs from the single-instance graph
+        assert_ne!(
+            merged.topology_fingerprint(),
+            diamond().topology_fingerprint()
+        );
     }
 
     #[test]

@@ -52,7 +52,9 @@ fn run(args: &Args) -> Result<()> {
                  [--store DIR] [--hidden N] [--max-iters N] [--force]\n  \
                  ed-batch serve --workloads <name[,name...]> [--mode ed-batch|cavs-dynet|vanilla-dynet]\n             \
                  [--workers N] [--store DIR] [--no-train-on-miss] [--require-store-hits]\n             \
-                 [--hidden N] [--requests N] [--max-batch N] [--no-pjrt]\n  \
+                 [--hidden N] [--requests N] [--max-batch N] [--no-pjrt]\n             \
+                 [--distinct N  (replay a pool of N instance topologies per workload)]\n             \
+                 [--require-compose  (fail unless steady state composed every mini-batch)]\n  \
                  ed-batch inspect --workload <name> [--instances N]\n\n\
                  workloads: bilstm-tagger bilstm-tagger-withchar lstm-nmt treelstm treegru\n            \
                  mv-rnn treelstm-2type lattice-lstm lattice-gru"
@@ -233,19 +235,32 @@ fn serve(args: &Args) -> Result<()> {
     );
     let server = Server::start(config)?;
 
-    // load generation: N clients per workload kind, each a thread
+    // load generation: N clients per workload kind, each a thread. With
+    // --distinct D, each workload replays a fixed pool of D instance
+    // topologies (steady-state production traffic: request shapes repeat),
+    // which lets the compositional plan cache reach a 100% hit rate after
+    // warmup; without it every request is a fresh random topology.
+    let distinct = args.usize("distinct", 0);
     let clients_per_kind = args.usize("clients", 2).max(1);
     let per_client = (requests / (kinds.len() * clients_per_kind)).max(1);
     let mut handles = Vec::new();
     for (i, &kind) in kinds.iter().enumerate() {
+        let pool = std::sync::Arc::new(
+            Workload::new(kind, hidden).gen_pool(distinct, args.u64("seed", 7) + i as u64),
+        );
         for c in 0..clients_per_kind {
             let client = server.client(kind);
+            let pool = pool.clone();
             let seed = args.u64("seed", 7) + (i * clients_per_kind + c) as u64;
             handles.push(std::thread::spawn(move || {
                 let w = Workload::new(kind, hidden);
                 let mut rng = Rng::new(seed);
-                for _ in 0..per_client {
-                    let g = w.gen_instance(&mut rng);
+                for r in 0..per_client {
+                    let g = if pool.is_empty() {
+                        w.gen_instance(&mut rng)
+                    } else {
+                        pool[(c + r) % pool.len()].clone()
+                    };
                     client.infer(g).expect("infer");
                 }
             }));
@@ -294,6 +309,18 @@ fn serve(args: &Args) -> Result<()> {
         snap.copies_avoided_frac() * 100.0,
     );
     println!(
+        "hot path: {}/{} minibatches composed ({:.0}%), {} policy runs, {} plans built | \
+         instance cache {} hits / {} misses | arena grows {}",
+        snap.plans_composed,
+        snap.minibatches,
+        snap.compose_rate() * 100.0,
+        snap.policy_runs,
+        snap.plans_built,
+        snap.instance_cache_hits,
+        snap.instance_cache_misses,
+        snap.arena_grows,
+    );
+    println!(
         "time decomposition: construction {:.1}ms scheduling {:.1}ms planning {:.1}ms execution {:.1}ms",
         snap.breakdown.construction_s * 1e3,
         snap.breakdown.scheduling_s * 1e3,
@@ -309,6 +336,24 @@ fn serve(args: &Args) -> Result<()> {
             snap.store_fallbacks,
             snap.store_trained
         );
+    }
+    // CI smoke gate: under pool-replay traffic the compositional cache
+    // must serve every mini-batch, with misses bounded by warmup (each
+    // worker sees each distinct topology at most once)
+    if args.flag("require-compose") {
+        if distinct == 0 {
+            bail!("--require-compose needs --distinct N (a finite instance pool to warm up on)");
+        }
+        let warmup_cap = (distinct * kinds.len() * workers) as u64;
+        if snap.plans_composed != snap.minibatches || snap.instance_cache_misses > warmup_cap {
+            bail!(
+                "--require-compose: {}/{} minibatches composed, {} cache misses (warmup cap {})",
+                snap.plans_composed,
+                snap.minibatches,
+                snap.instance_cache_misses,
+                warmup_cap
+            );
+        }
     }
     Ok(())
 }

@@ -461,6 +461,11 @@ fn cell_tag(kind: crate::graph::CellKind) -> u64 {
 #[derive(Default)]
 pub struct PlanCache {
     plans: FxHashMap<u64, std::rc::Rc<GraphMemoryPlan>>,
+    /// plans served from the cache (hot-path counter)
+    pub hits: u64,
+    /// PQ-planner invocations — a steady-state serving loop must not add
+    /// to this after warmup (asserted in serving tests)
+    pub builds: u64,
 }
 
 impl PlanCache {
@@ -483,12 +488,14 @@ impl PlanCache {
             // 64-bit collision backstop: a hit must at least describe a
             // graph of this shape; rebuild (overwriting) otherwise
             if p.sizes.len() == 2 * graph.len() && p.batches.len() == schedule.batches.len() {
+                self.hits += 1;
                 return p.clone();
             }
         }
         if self.plans.len() >= Self::MAX_ENTRIES {
             self.plans.clear();
         }
+        self.builds += 1;
         let plan = std::rc::Rc::new(GraphMemoryPlan::build(graph, types, schedule, hidden, mode));
         self.plans.insert(key, plan.clone());
         plan

@@ -190,6 +190,16 @@ impl Workload {
         }
         g
     }
+
+    /// Fixed pool of `distinct` instance topologies for pool-replay load
+    /// generation (steady-state production traffic: request shapes repeat,
+    /// so the serving-path instance cache warms up and then always hits).
+    /// Shared by `serve --distinct` and `bench serving` so their compose
+    /// gates exercise identical traffic construction.
+    pub fn gen_pool(&self, distinct: usize, seed: u64) -> Vec<Graph> {
+        let mut rng = Rng::new(seed ^ 0xD157);
+        (0..distinct).map(|_| self.gen_instance(&mut rng)).collect()
+    }
 }
 
 #[cfg(test)]

@@ -8,6 +8,7 @@ use ed_batch::batching::fsm::{Encoding, FsmPolicy};
 use ed_batch::batching::oracle::SufficientConditionPolicy;
 use ed_batch::batching::{run_policy, validate_schedule};
 use ed_batch::coordinator::engine::{ArenaStateStore, Backend, CellEngine};
+use ed_batch::graph::Graph;
 use ed_batch::memory::MemoryMode;
 use ed_batch::coordinator::server::{Server, ServerConfig};
 use ed_batch::coordinator::SystemMode;
@@ -167,7 +168,7 @@ fn server_ed_batch_persists_policy_across_boots() {
     let mut rng = Rng::new(4);
     for _ in 0..6 {
         let resp = client.infer(w.gen_instance(&mut rng)).unwrap();
-        assert!(!resp.sink_outputs.is_empty());
+        assert!(resp.num_sinks() > 0);
     }
     assert_eq!(server.metrics.snapshot().requests, 6);
     drop(client);
@@ -178,7 +179,7 @@ fn server_ed_batch_persists_policy_across_boots() {
     assert_eq!(snap.store_hits, 1, "second boot loads the persisted policy");
     assert_eq!(snap.store_trained, 0);
     let client = server.client(WorkloadKind::TreeGru);
-    assert!(!client.infer(w.gen_instance(&mut rng)).unwrap().sink_outputs.is_empty());
+    assert!(client.infer(w.gen_instance(&mut rng)).unwrap().num_sinks() > 0);
     drop(client);
     server.shutdown().unwrap();
     let _ = std::fs::remove_dir_all(&dir);
@@ -247,7 +248,7 @@ fn concurrent_mixed_workloads_bit_equal_to_reference() {
                 .filter(|&j| !has_consumer[j])
                 .map(|j| store.h(j).to_vec())
                 .collect();
-            assert_eq!(resp.sink_outputs, expected, "{}", kind.name());
+            assert_eq!(resp.to_vecs(), expected, "{}", kind.name());
         }
     }
     server.shutdown().unwrap();
@@ -343,4 +344,134 @@ fn policy_persistence_roundtrip_through_server_path() {
         run_policy(&g, nt, &mut p2).num_batches()
     );
     let _ = std::fs::remove_dir_all(&dir);
+}
+
+#[test]
+fn composed_serving_matches_merged_serving_bitwise() {
+    // The compositional hot path (EdBatch: cached per-instance schedules +
+    // offset-translated plans, no merged graph) must answer every request
+    // with exactly the bytes the merged-graph baseline path produces —
+    // across concurrent clients, so mini-batch compositions vary between
+    // the two runs and between threads. Values are policy-, layout-, and
+    // composition-invariant by construction; this asserts it end to end.
+    let kinds = [WorkloadKind::TreeLstm, WorkloadKind::LatticeLstm];
+    let pools: Vec<std::sync::Arc<Vec<Graph>>> = kinds
+        .iter()
+        .enumerate()
+        .map(|(i, &kind)| {
+            let w = Workload::new(kind, 32);
+            let mut rng = Rng::new(700 + i as u64);
+            std::sync::Arc::new((0..4).map(|_| w.gen_instance(&mut rng)).collect())
+        })
+        .collect();
+
+    // [kind][thread][request] -> per-request sink outputs
+    #[allow(clippy::type_complexity)]
+    let run_mode = |mode: SystemMode| -> Vec<Vec<Vec<Vec<Vec<f32>>>>> {
+        let server = Server::start(ServerConfig {
+            workloads: kinds.to_vec(),
+            hidden: 32,
+            mode,
+            max_batch: 4,
+            batch_window: Duration::from_millis(5),
+            workers: 1,
+            train_cfg: quick_train_cfg(),
+            ..ServerConfig::default()
+        })
+        .unwrap();
+        let mut per_kind = Vec::new();
+        for (ki, &kind) in kinds.iter().enumerate() {
+            let mut handles = Vec::new();
+            for _t in 0..3 {
+                let client = server.client(kind);
+                let pool = pools[ki].clone();
+                handles.push(std::thread::spawn(move || {
+                    let mut results = Vec::new();
+                    for _pass in 0..2 {
+                        for g in pool.iter() {
+                            let resp = client.infer(g.clone()).unwrap();
+                            results.push(resp.to_vecs());
+                        }
+                    }
+                    results
+                }));
+            }
+            per_kind.push(
+                handles
+                    .into_iter()
+                    .map(|h| h.join().unwrap())
+                    .collect::<Vec<_>>(),
+            );
+        }
+        server.shutdown().unwrap();
+        per_kind
+    };
+
+    let composed = run_mode(SystemMode::EdBatch);
+    let merged = run_mode(SystemMode::CavsDyNet);
+    assert_eq!(composed, merged, "composed vs merged serving responses");
+    // and within a run, every thread saw identical results per request
+    for per_thread in &composed {
+        for t in 1..per_thread.len() {
+            assert_eq!(per_thread[0], per_thread[t]);
+        }
+    }
+}
+
+#[test]
+fn steady_state_serving_is_plan_free_and_allocation_free() {
+    // The perf regression gate: once every request topology has been seen
+    // (warmup), serving runs zero batching-policy invocations, zero PQ
+    // planner invocations, and zero arena reallocations — every mini-batch
+    // is served by composing cached per-instance artifacts.
+    let kind = WorkloadKind::TreeLstm;
+    let w = Workload::new(kind, 32);
+    let mut rng = Rng::new(42);
+    let pool: Vec<Graph> = (0..5).map(|_| w.gen_instance(&mut rng)).collect();
+    let server = Server::start(ServerConfig {
+        workloads: vec![kind],
+        hidden: 32,
+        mode: SystemMode::EdBatch,
+        max_batch: 4,
+        batch_window: Duration::from_millis(1),
+        workers: 1,
+        train_cfg: quick_train_cfg(),
+        ..ServerConfig::default()
+    })
+    .unwrap();
+    let client = server.client(kind);
+    // warmup: first sight of each of the 5 topologies (serial requests →
+    // deterministic single-instance mini-batches)
+    for g in &pool {
+        client.infer(g.clone()).unwrap();
+    }
+    let warm = server.metrics.snapshot();
+    // one build per distinct topology (identical random draws only lower it)
+    assert!(warm.instance_cache_misses >= 1 && warm.instance_cache_misses <= 5);
+    assert_eq!(warm.plans_built, warm.instance_cache_misses);
+    assert_eq!(warm.policy_runs, warm.instance_cache_misses);
+    // steady state: replay the same traffic 4 more times
+    for _ in 0..4 {
+        for g in &pool {
+            client.infer(g.clone()).unwrap();
+        }
+    }
+    let snap = server.metrics.snapshot();
+    assert_eq!(snap.policy_runs, warm.policy_runs, "FSM ran after warmup");
+    assert_eq!(snap.plans_built, warm.plans_built, "PQ planner ran after warmup");
+    assert_eq!(
+        snap.instance_cache_misses, warm.instance_cache_misses,
+        "instance cache missed after warmup"
+    );
+    assert_eq!(
+        snap.arena_grows, warm.arena_grows,
+        "arena reallocated after warmup"
+    );
+    assert_eq!(
+        snap.plans_composed, snap.minibatches,
+        "every mini-batch must be served from composed plans"
+    );
+    assert_eq!(snap.instance_cache_hits - warm.instance_cache_hits, 20);
+    assert_eq!(snap.requests, 25);
+    server.shutdown().unwrap();
 }
