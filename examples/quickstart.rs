@@ -1,12 +1,22 @@
-//! Quickstart: the ED-Batch pipeline in ~70 lines.
+//! Quickstart: the ED-Batch pipeline in one asserting walkthrough.
+//!
+//! Every stage is the real serving code path (`Graph → Schedule →
+//! MemoryPlan → ExecBackend`), and every claim is asserted, not printed:
 //!
 //! 1. pick a workload (TreeLSTM over synthetic parse trees),
-//! 2. learn the FSM batching policy with tabular Q-learning,
-//! 3. batch a mini-batch of instances with it (vs the DyNet baselines),
+//! 2. learn the FSM batching policy with tabular Q-learning — asserts it
+//!    reaches the Appendix-A.3 lower bound,
+//! 3. batch a mini-batch of instances with it — asserts the learned
+//!    schedule needs no more kernel launches than the DyNet-style agenda
+//!    and depth baselines,
 //! 4. execute through the unified pipeline — the schedule's PQ-tree
 //!    memory plan lays the state arena out so batched operands are
 //!    zero-copy views — on PJRT artifacts if available (CPU otherwise),
-//! 5. re-run under the unplanned DyNet layout to show the copies saved.
+//! 5. re-run under the unplanned DyNet layout — asserts outputs are
+//!    **bit-identical** and the planned layout moved no more bytes.
+//!
+//! (The README's "Quickstart (library walkthrough)" section mirrors this
+//! list verbatim; if you change one, change both.)
 //!
 //! Run: `cargo run --release --example quickstart`
 
@@ -22,17 +32,22 @@ use ed_batch::util::rng::Rng;
 use ed_batch::workloads::{Workload, WorkloadKind};
 
 fn main() -> anyhow::Result<()> {
+    // -- 1. pick a workload ----------------------------------------------
     let hidden = 64;
     let workload = Workload::new(WorkloadKind::TreeLstm, hidden);
 
-    // -- 1. learn the batching FSM (paper §2.3) -------------------------
+    // -- 2. learn the batching FSM (paper §2.3) -------------------------
     let (mut policy, stats) = train(&workload, Encoding::Sort, &TrainConfig::default(), 7);
     println!(
         "learned FSM in {} iterations / {:.3}s ({} states, reached lower bound: {})",
         stats.iterations, stats.wall_time_s, stats.num_states, stats.reached_lower_bound
     );
+    assert!(
+        stats.reached_lower_bound,
+        "training must reach the Appendix-A.3 lower bound on TreeLSTM"
+    );
 
-    // -- 2. batch a mini-batch of 16 parse trees ------------------------
+    // -- 3. batch a mini-batch of 16 parse trees ------------------------
     let mut rng = Rng::new(42);
     let mut graph = workload.gen_batch(16, &mut rng);
     graph.freeze();
@@ -47,8 +62,10 @@ fn main() -> anyhow::Result<()> {
         depth.num_batches(),
         graph.batch_lower_bound(nt)
     );
+    assert!(fsm.num_batches() <= agenda.num_batches());
+    assert!(fsm.num_batches() <= depth.num_batches());
 
-    // -- 3. execute through the unified pipeline --------------------------
+    // -- 4. execute through the unified pipeline --------------------------
     let registry = ArtifactRegistry::load("artifacts", Some(&|k| k.hidden == 64)).ok();
     let mut engine = match &registry {
         Some(reg) => {
@@ -72,12 +89,22 @@ fn main() -> anyhow::Result<()> {
     );
     // root sentiment logits of instance 0 = output of the last node
     let sample = store.h(graph.len() - 1);
+    assert!(sample.iter().all(|v| v.is_finite()), "non-finite outputs");
     println!("sample output head: {:?}", &sample[..4.min(sample.len())]);
 
-    // -- 4. the memory-planning win: same schedule, DyNet layout ----------
+    // -- 5. the memory-planning win: same schedule, DyNet layout ----------
     engine.memory_mode = MemoryMode::Unplanned;
     let mut legacy_store = ArenaStateStore::new();
     let legacy = engine.execute(&graph, &workload.registry, &fsm, &mut legacy_store)?;
+    assert_eq!(
+        store.h_vectors(),
+        legacy_store.h_vectors(),
+        "planned and unplanned layouts must produce bit-identical outputs"
+    );
+    assert!(
+        report.memcpy_elems <= legacy.memcpy_elems,
+        "the planned layout must never move more than the DyNet layout"
+    );
     println!(
         "graph-level memcpy: planned {} elems vs unplanned {} elems ({} avoided, {:.1}x less)",
         report.memcpy_elems,
@@ -85,5 +112,6 @@ fn main() -> anyhow::Result<()> {
         report.copies_avoided_elems,
         legacy.memcpy_elems as f64 / report.memcpy_elems.max(1) as f64,
     );
+    println!("quickstart: all assertions passed");
     Ok(())
 }

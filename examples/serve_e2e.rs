@@ -71,6 +71,7 @@ fn main() -> anyhow::Result<()> {
             train_cfg: TrainConfig::default(),
             encoding: Encoding::Sort,
             seed: 7,
+            ..ServerConfig::default()
         })?;
         let mut handles = Vec::new();
         for (i, &kind) in KINDS.iter().enumerate() {

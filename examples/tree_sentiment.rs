@@ -47,6 +47,7 @@ fn main() -> anyhow::Result<()> {
             train_cfg: TrainConfig::default(),
             encoding: Encoding::Sort,
             seed: 11,
+            ..ServerConfig::default()
         })?;
         // 4 concurrent clients submitting parse trees
         let mut handles = Vec::new();

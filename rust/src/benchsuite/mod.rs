@@ -2,8 +2,11 @@
 //! evaluation (§5). Each submodule prints the same rows/series the paper
 //! reports and returns structured results for tests / EXPERIMENTS.md.
 //!
-//! Run via `ed-batch bench <fig6|fig8|fig9|table2|table3|table4|table5|serving|all>`
-//! (`serving` is a repo extension: worker-pool scaling over the PolicyStore).
+//! Run via `ed-batch bench <fig6|fig8|fig9|table2|table3|table4|table5|serving|serving-slo|all>`
+//! (`serving` is a repo extension: worker-pool scaling over the
+//! PolicyStore plus the SLO dispatch comparison — fixed vs adaptive vs
+//! learned batching under open-loop Poisson/bursty traffic; `serving-slo`
+//! runs the comparison alone).
 
 pub mod fig6;
 pub mod fig8;

@@ -85,6 +85,15 @@ impl InstanceArtifact {
             plan_s,
         )
     }
+
+    /// Static per-instance service-cost proxy: arena elements written
+    /// plus the plan's predicted gather/scatter volume. The dispatch
+    /// controller ([`crate::coordinator::dispatch`]) multiplies this by a
+    /// per-element time prior to seed its service estimate on first
+    /// sight of a topology, before any execution has been measured.
+    pub fn cost_elems(&self) -> usize {
+        self.plan.plan.total_elems + self.plan.predicted_memcpy_elems
+    }
 }
 
 /// Bounded per-worker cache: topology fingerprint → artifact. One cache

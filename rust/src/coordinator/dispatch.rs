@@ -1,0 +1,744 @@
+//! Adaptive SLO-aware dispatch control — *when* and *how much* to batch.
+//!
+//! The server used to dispatch on one fixed rule per queue: full
+//! (`max_batch`) or timed-out (`batch_window`). That is exactly the kind
+//! of hand-written heuristic the paper's FSM-batching insight argues
+//! against, transplanted to serving time: a window tuned for batch
+//! occupancy under bursts over-delays sparse traffic, and a window tuned
+//! for sparse traffic forfeits batching under load. This module makes the
+//! batch-size / max-wait decision *adaptive*, per (worker, workload):
+//!
+//! * [`DispatchMode::Fixed`] — the legacy full-or-timed-out rule,
+//!   reproduced exactly (the baseline the SLO bench measures against).
+//! * [`DispatchMode::Adaptive`] — a deterministic Little's-law
+//!   controller: track an inter-arrival EWMA and a per-instance
+//!   service-time EWMA (seeded from the topology's plan cost in
+//!   [`crate::coordinator::compose`] before the first measurement), pick
+//!   the largest batch whose accumulation wait plus service time fits
+//!   inside the p99 budget, and close the loop with an AIMD scale driven
+//!   by the observed latency-window p99 vs the `--slo-p99-ms` target.
+//! * [`DispatchMode::Learned`] — a tabular-Q [`SchedulerPolicy`]
+//!   (mirroring [`crate::rl`], trained offline on the queue simulator in
+//!   [`crate::rl::dispatch_sim`] and persisted via
+//!   [`crate::policystore`] under its own artifact kind) that maps a
+//!   discretized (queue occupancy, offered load, p99/SLO ratio) state to
+//!   a batch-size action; max-wait derives from the same latency budget.
+//!
+//! The controller is **deterministic and clock-free**: it consumes only
+//! relative observations (inter-arrival gaps, service durations, request
+//! latencies), so unit tests drive it with a simulated clock, and a
+//! policy loaded from disk replays decisions bit-identically (asserted in
+//! `policystore`). Whatever the mode decides, batch *composition* never
+//! changes response bytes — outputs are bit-equal under any dispatch
+//! (asserted in `tests/integration.rs`).
+
+use std::time::Duration;
+
+use crate::util::json::Json;
+
+/// Which dispatch rule a server runs. Parsed from `--dispatch`.
+#[derive(Clone, Copy, Debug, PartialEq, Eq, Hash)]
+pub enum DispatchMode {
+    /// Legacy rule: dispatch when a queue holds `max_batch` requests or
+    /// its oldest request has waited `batch_window`.
+    Fixed,
+    /// Little's-law batch sizing + AIMD feedback against the p99 SLO.
+    Adaptive,
+    /// Learned tabular-Q scheduler policy over discretized queue state.
+    Learned,
+}
+
+impl DispatchMode {
+    pub fn name(self) -> &'static str {
+        match self {
+            DispatchMode::Fixed => "fixed",
+            DispatchMode::Adaptive => "adaptive",
+            DispatchMode::Learned => "learned",
+        }
+    }
+
+    pub fn from_name(s: &str) -> Option<DispatchMode> {
+        match s {
+            "fixed" => Some(DispatchMode::Fixed),
+            "adaptive" => Some(DispatchMode::Adaptive),
+            "learned" => Some(DispatchMode::Learned),
+            _ => None,
+        }
+    }
+}
+
+/// The latency target the adaptive/learned controllers steer toward.
+#[derive(Clone, Copy, Debug)]
+pub struct SloConfig {
+    /// p99 latency target in seconds (`--slo-p99-ms`).
+    pub p99_target_s: f64,
+    /// Fraction of the target the controller actually budgets for
+    /// (headroom absorbs service-time variance and queueing jitter).
+    pub headroom: f64,
+}
+
+impl Default for SloConfig {
+    fn default() -> Self {
+        SloConfig {
+            p99_target_s: 0.020,
+            headroom: 0.8,
+        }
+    }
+}
+
+impl SloConfig {
+    pub fn with_target(p99_target_s: f64) -> SloConfig {
+        SloConfig {
+            p99_target_s,
+            ..SloConfig::default()
+        }
+    }
+
+    /// The wait + service budget a dispatch decision must fit inside.
+    pub fn budget_s(&self) -> f64 {
+        self.p99_target_s * self.headroom
+    }
+}
+
+/// One dispatch decision: drain up to `target_batch` requests, or
+/// whatever is queued once the oldest request has waited `max_wait`.
+#[derive(Clone, Copy, Debug, PartialEq)]
+pub struct DispatchDecision {
+    pub target_batch: usize,
+    pub max_wait: Duration,
+}
+
+// -- learned scheduler policy ------------------------------------------------
+
+/// Batch-size action set of the learned scheduler (capped by the server's
+/// `max_batch` at decision time).
+pub const SCHED_ACTIONS: [usize; 6] = [1, 2, 4, 8, 16, 32];
+
+/// Queue-occupancy buckets (log2 of queue length, clamped).
+pub const SCHED_OCC_BUCKETS: usize = 6;
+/// Offered-load buckets (per-instance service time / inter-arrival gap).
+pub const SCHED_LOAD_BUCKETS: usize = 6;
+/// Observed-p99 / SLO-target ratio buckets.
+pub const SCHED_P99_BUCKETS: usize = 5;
+/// Total discretized states.
+pub const SCHED_STATES: usize = SCHED_OCC_BUCKETS * SCHED_LOAD_BUCKETS * SCHED_P99_BUCKETS;
+
+/// Discretize the controller observables into a scheduler state id.
+///
+/// The state is built from *ratios* (load = service/inter-arrival, p99
+/// relative to the SLO target), so a policy trained on the simulator's
+/// abstract service model transfers across workloads and hardware speeds
+/// — the same argument that lets FSM policies transfer across hidden
+/// sizes.
+pub fn sched_state_id(
+    queue_len: usize,
+    inter_arrival_s: Option<f64>,
+    per_inst_service_s: f64,
+    p99_s: f64,
+    slo_target_s: f64,
+) -> usize {
+    let occ = match queue_len {
+        0 => 0,
+        1 => 1,
+        2..=3 => 2,
+        4..=7 => 3,
+        8..=15 => 4,
+        _ => 5,
+    };
+    let load_ratio = match inter_arrival_s {
+        Some(ia) if ia > 0.0 && per_inst_service_s > 0.0 => per_inst_service_s / ia,
+        _ => 0.0,
+    };
+    let load = if load_ratio < 0.25 {
+        0
+    } else if load_ratio < 0.5 {
+        1
+    } else if load_ratio < 1.0 {
+        2
+    } else if load_ratio < 2.0 {
+        3
+    } else if load_ratio < 4.0 {
+        4
+    } else {
+        5
+    };
+    let p99_ratio = if slo_target_s > 0.0 {
+        p99_s / slo_target_s
+    } else {
+        0.0
+    };
+    let p99 = if p99_ratio < 0.5 {
+        0
+    } else if p99_ratio < 0.8 {
+        1
+    } else if p99_ratio < 1.0 {
+        2
+    } else if p99_ratio < 1.5 {
+        3
+    } else {
+        4
+    };
+    (occ * SCHED_LOAD_BUCKETS + load) * SCHED_P99_BUCKETS + p99
+}
+
+/// Tabular Q-function over [`SCHED_STATES`] × [`SCHED_ACTIONS`]: the
+/// learned serving-time policy (the FSM learns *graph-time* batching;
+/// this learns *dispatch-time* batching). Trained by
+/// [`crate::rl::dispatch_sim::train_scheduler`], persisted by
+/// [`crate::policystore`] under the `scheduler` artifact kind.
+#[derive(Clone, Debug, PartialEq)]
+pub struct SchedulerPolicy {
+    q: Vec<f64>,
+}
+
+impl Default for SchedulerPolicy {
+    fn default() -> Self {
+        SchedulerPolicy::new()
+    }
+}
+
+impl SchedulerPolicy {
+    pub fn new() -> SchedulerPolicy {
+        SchedulerPolicy {
+            q: vec![0.0; SCHED_STATES * SCHED_ACTIONS.len()],
+        }
+    }
+
+    pub fn q_value(&self, state: usize, action: usize) -> f64 {
+        self.q[state * SCHED_ACTIONS.len() + action]
+    }
+
+    pub fn set_q(&mut self, state: usize, action: usize, v: f64) {
+        self.q[state * SCHED_ACTIONS.len() + action] = v;
+    }
+
+    /// Greedy action for `state`; ties break to the smallest batch size,
+    /// so an untrained (all-zero) policy degenerates to batch=1 — always
+    /// SLO-safe, never wrong.
+    pub fn best_action(&self, state: usize) -> usize {
+        let mut best = 0;
+        for a in 1..SCHED_ACTIONS.len() {
+            if self.q_value(state, a) > self.q_value(state, best) {
+                best = a;
+            }
+        }
+        best
+    }
+
+    /// Number of (state, action) entries with a learned (nonzero) value.
+    pub fn visited(&self) -> usize {
+        self.q.iter().filter(|v| **v != 0.0).count()
+    }
+
+    /// Serialize the Q-table. f64 values round-trip exactly through the
+    /// repo codec (Rust's shortest-float `Display`), which is what makes
+    /// the save→load→identical-decisions contract hold bitwise.
+    pub fn to_json(&self) -> Json {
+        Json::obj(vec![
+            ("states", Json::from(SCHED_STATES)),
+            (
+                "actions",
+                Json::Arr(SCHED_ACTIONS.iter().map(|&a| Json::from(a)).collect()),
+            ),
+            ("q", Json::Arr(self.q.iter().map(|&v| Json::from(v)).collect())),
+        ])
+    }
+
+    pub fn from_json(j: &Json) -> Result<SchedulerPolicy, String> {
+        let states = j
+            .get("states")
+            .and_then(|v| v.as_usize())
+            .ok_or("missing states")?;
+        if states != SCHED_STATES {
+            return Err(format!(
+                "scheduler state space {states}, this build uses {SCHED_STATES}"
+            ));
+        }
+        let actions: Vec<usize> = j
+            .get("actions")
+            .and_then(|v| v.as_arr())
+            .ok_or("missing actions")?
+            .iter()
+            .filter_map(|v| v.as_usize())
+            .collect();
+        if actions != SCHED_ACTIONS {
+            return Err(format!(
+                "scheduler action set {actions:?}, this build uses {SCHED_ACTIONS:?}"
+            ));
+        }
+        let q: Vec<f64> = j
+            .get("q")
+            .and_then(|v| v.as_arr())
+            .ok_or("missing q")?
+            .iter()
+            .filter_map(|v| v.as_f64())
+            .collect();
+        if q.len() != SCHED_STATES * SCHED_ACTIONS.len() {
+            return Err(format!("q length {}", q.len()));
+        }
+        Ok(SchedulerPolicy { q })
+    }
+}
+
+// -- shared estimator pieces -------------------------------------------------
+//
+// The training simulator (`rl::dispatch_sim`) must implement the *same*
+// dispatch rule the live controller runs, or Learned-mode policies train
+// against a different world than they serve in. Everything both sides
+// share — the EWMA weight, the latency window, the max-wait formula — is
+// therefore defined once here and used by both.
+
+/// EWMA weight of a new observation (service + arrival estimates).
+pub(crate) const EWMA_ALPHA: f64 = 0.2;
+/// Latency observations kept for the windowed p99 estimate.
+pub(crate) const LAT_WINDOW: usize = 128;
+/// Observations required before the AIMD loop reacts.
+const MIN_ADAPT_SAMPLES: usize = 16;
+/// Multiplicative shrink applied while the window p99 violates the SLO.
+const SHRINK_FACTOR: f64 = 0.6;
+/// Additive scale recovery per under-target batch.
+const GROW_STEP: f64 = 0.15;
+/// p99/budget fraction under which the scale is allowed to recover.
+const GROW_BELOW: f64 = 0.7;
+/// Floor on the max-wait so a decision never spins on a zero deadline.
+pub(crate) const MIN_WAIT_S: f64 = 0.0002;
+
+/// Max-wait for a chosen batch size: whatever slice of the latency
+/// budget the expected service time leaves over.
+pub(crate) fn max_wait_s(slo: &SloConfig, per_inst_s: f64, batch: usize) -> f64 {
+    let budget = slo.budget_s();
+    (budget - per_inst_s * batch as f64).clamp(MIN_WAIT_S, budget.max(MIN_WAIT_S))
+}
+
+/// Fixed-capacity latency ring with a reusable sort buffer: the windowed
+/// p99 estimate costs no allocation after construction.
+pub(crate) struct LatencyWindow {
+    ring: Vec<f64>,
+    pos: usize,
+    seen: usize,
+    scratch: Vec<f64>,
+}
+
+impl LatencyWindow {
+    pub(crate) fn new() -> LatencyWindow {
+        LatencyWindow {
+            ring: Vec::with_capacity(LAT_WINDOW),
+            pos: 0,
+            seen: 0,
+            scratch: Vec::with_capacity(LAT_WINDOW),
+        }
+    }
+
+    pub(crate) fn record(&mut self, v: f64) {
+        if !v.is_finite() || v < 0.0 {
+            return;
+        }
+        if self.ring.len() < LAT_WINDOW {
+            self.ring.push(v);
+        } else {
+            self.ring[self.pos] = v;
+        }
+        self.pos = (self.pos + 1) % LAT_WINDOW;
+        self.seen += 1;
+    }
+
+    pub(crate) fn seen(&self) -> usize {
+        self.seen
+    }
+
+    pub(crate) fn p99(&mut self) -> f64 {
+        if self.ring.is_empty() {
+            return 0.0;
+        }
+        self.scratch.clear();
+        self.scratch.extend_from_slice(&self.ring);
+        self.scratch.sort_by(|a, b| a.partial_cmp(b).unwrap());
+        let rank = ((self.scratch.len() as f64) * 0.99).ceil() as usize;
+        self.scratch[rank.clamp(1, self.scratch.len()) - 1]
+    }
+}
+
+// -- the controller ----------------------------------------------------------
+
+/// Per-(worker, workload) dispatch controller.
+///
+/// Fed with relative observations only (no clock inside): inter-arrival
+/// gaps of drained requests, per-mini-batch service durations, and
+/// per-request latencies. [`DispatchController::decide`] is a pure
+/// function of this state plus the current queue length.
+pub struct DispatchController {
+    mode: DispatchMode,
+    slo: SloConfig,
+    max_batch: usize,
+    fixed_window: Duration,
+    /// inter-arrival EWMA; `None` until the first gap is observed
+    ia_ewma_s: Option<f64>,
+    /// per-instance service-time EWMA (plan-cost prior until measured)
+    per_inst_s: f64,
+    measured_service: bool,
+    /// recent request latencies → windowed p99
+    window: LatencyWindow,
+    p99_s: f64,
+    /// AIMD multiplier on the Little's-law batch target, in (0, 1]
+    scale: f64,
+    learned: Option<SchedulerPolicy>,
+    /// counters (surfaced for tests/diagnostics)
+    pub shrinks: u64,
+    pub grows: u64,
+}
+
+impl DispatchController {
+    pub fn new(
+        mode: DispatchMode,
+        slo: SloConfig,
+        max_batch: usize,
+        fixed_window: Duration,
+        learned: Option<SchedulerPolicy>,
+    ) -> DispatchController {
+        DispatchController {
+            mode,
+            slo,
+            max_batch: max_batch.max(1),
+            fixed_window,
+            ia_ewma_s: None,
+            per_inst_s: 0.0,
+            measured_service: false,
+            window: LatencyWindow::new(),
+            p99_s: 0.0,
+            scale: 1.0,
+            learned,
+            shrinks: 0,
+            grows: 0,
+        }
+    }
+
+    pub fn mode(&self) -> DispatchMode {
+        self.mode
+    }
+
+    /// Windowed p99 latency estimate (seconds) as of the last
+    /// [`DispatchController::observe_batch`].
+    pub fn window_p99_s(&self) -> f64 {
+        self.p99_s
+    }
+
+    /// Current AIMD scale (1.0 = uncut Little's-law target).
+    pub fn scale(&self) -> f64 {
+        self.scale
+    }
+
+    /// Seed the service estimate from a topology's static plan cost
+    /// (arena elements × a per-element prior) before any measurement
+    /// exists. A no-op once a real service time has been observed.
+    pub fn prime_service(&mut self, per_inst_s: f64) {
+        if !self.measured_service && per_inst_s > 0.0 {
+            self.per_inst_s = per_inst_s;
+        }
+    }
+
+    /// One inter-arrival gap between consecutively submitted requests of
+    /// this workload (tests and the training simulator feed gaps
+    /// directly; the live server instead syncs the queue-level EWMA via
+    /// [`DispatchController::set_arrival_ewma`]).
+    pub fn observe_arrival_gap(&mut self, dt_s: f64) {
+        if self.mode == DispatchMode::Fixed || !dt_s.is_finite() || dt_s < 0.0 {
+            return;
+        }
+        self.ia_ewma_s = Some(match self.ia_ewma_s {
+            None => dt_s,
+            Some(prev) => prev + EWMA_ALPHA * (dt_s - prev),
+        });
+    }
+
+    /// Replace the arrival estimate with the queue-level EWMA maintained
+    /// by the dispatcher at enqueue time. Authoritative under
+    /// multi-worker draining: a worker-local view would read the seam
+    /// between its own consecutive batches as one giant gap whenever
+    /// other workers drained the requests in between, overestimating the
+    /// inter-arrival time and under-batching.
+    pub fn set_arrival_ewma(&mut self, ia_s: Option<f64>) {
+        if self.mode == DispatchMode::Fixed {
+            return;
+        }
+        if let Some(ia) = ia_s {
+            if ia.is_finite() && ia >= 0.0 {
+                self.ia_ewma_s = Some(ia);
+            }
+        }
+    }
+
+    /// One completed request's latency (queue wait + service).
+    pub fn observe_latency(&mut self, lat_s: f64) {
+        if self.mode == DispatchMode::Fixed {
+            return; // fixed dispatch ignores all feedback: keep it free
+        }
+        self.window.record(lat_s);
+    }
+
+    /// One completed mini-batch: update the service model and run the
+    /// AIMD feedback step against the windowed p99.
+    pub fn observe_batch(&mut self, batch: usize, service_s: f64) {
+        if self.mode == DispatchMode::Fixed {
+            return; // fixed dispatch ignores all feedback: keep it free
+        }
+        if batch == 0 || !service_s.is_finite() || service_s < 0.0 {
+            return;
+        }
+        let per = service_s / batch as f64;
+        self.per_inst_s = if self.measured_service {
+            self.per_inst_s + EWMA_ALPHA * (per - self.per_inst_s)
+        } else {
+            per
+        };
+        self.measured_service = true;
+
+        self.p99_s = self.window.p99();
+        if self.window.seen() >= MIN_ADAPT_SAMPLES {
+            if self.p99_s > self.slo.p99_target_s {
+                let floor = (1.0 / self.max_batch as f64).max(0.03);
+                let next = (self.scale * SHRINK_FACTOR).max(floor);
+                if next < self.scale {
+                    self.shrinks += 1;
+                }
+                self.scale = next;
+            } else if self.p99_s < self.slo.p99_target_s * GROW_BELOW && self.scale < 1.0 {
+                self.scale = (self.scale + GROW_STEP).min(1.0);
+                self.grows += 1;
+            }
+        }
+    }
+
+    /// Largest batch whose accumulation wait plus service fits the
+    /// budget: `(b-1)·ia + b·per ≤ budget` (Little's law applied to the
+    /// batch-accumulation delay of the *first* request in the batch).
+    fn littles_fit(&self) -> usize {
+        let budget = self.slo.budget_s();
+        let per = self.per_inst_s;
+        let Some(ia) = self.ia_ewma_s else {
+            // no arrival information yet: dispatch singly, never delay
+            return 1;
+        };
+        let mut b = 1usize;
+        while b < self.max_batch {
+            let next = (b + 1) as f64;
+            if (next - 1.0) * ia + next * per <= budget {
+                b += 1;
+            } else {
+                break;
+            }
+        }
+        b
+    }
+
+    /// Max-wait for a chosen batch size (the shared [`max_wait_s`] rule).
+    fn wait_for(&self, batch: usize) -> Duration {
+        Duration::from_secs_f64(max_wait_s(&self.slo, self.per_inst_s, batch))
+    }
+
+    /// The dispatch decision for a queue currently holding `queue_len`
+    /// requests. Pure in the controller state — no clock, no RNG.
+    pub fn decide(&self, queue_len: usize) -> DispatchDecision {
+        match self.mode {
+            DispatchMode::Fixed => DispatchDecision {
+                target_batch: self.max_batch,
+                max_wait: self.fixed_window,
+            },
+            DispatchMode::Adaptive => {
+                let fit = self.littles_fit();
+                let target = ((fit as f64 * self.scale).round() as usize).clamp(1, self.max_batch);
+                DispatchDecision {
+                    target_batch: target,
+                    max_wait: self.wait_for(target),
+                }
+            }
+            DispatchMode::Learned => {
+                let state = sched_state_id(
+                    queue_len,
+                    self.ia_ewma_s,
+                    self.per_inst_s,
+                    self.p99_s,
+                    self.slo.p99_target_s,
+                );
+                let action = match &self.learned {
+                    Some(p) => p.best_action(state),
+                    None => 0,
+                };
+                let target = SCHED_ACTIONS[action].clamp(1, self.max_batch);
+                DispatchDecision {
+                    target_batch: target,
+                    max_wait: self.wait_for(target),
+                }
+            }
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn adaptive(slo_ms: f64, max_batch: usize) -> DispatchController {
+        DispatchController::new(
+            DispatchMode::Adaptive,
+            SloConfig::with_target(slo_ms * 1e-3),
+            max_batch,
+            Duration::from_millis(25),
+            None,
+        )
+    }
+
+    /// Drive the controller with a simulated steady state: `gap_s`
+    /// inter-arrivals, `lat_s` request latencies, `batches` feedback steps.
+    fn feed(c: &mut DispatchController, gap_s: f64, lat_s: f64, per_inst_s: f64, batches: usize) {
+        for _ in 0..batches {
+            for _ in 0..8 {
+                c.observe_arrival_gap(gap_s);
+                c.observe_latency(lat_s);
+            }
+            c.observe_batch(8, per_inst_s * 8.0);
+        }
+    }
+
+    #[test]
+    fn fixed_mode_reproduces_legacy_rule() {
+        let c = DispatchController::new(
+            DispatchMode::Fixed,
+            SloConfig::default(),
+            32,
+            Duration::from_millis(25),
+            None,
+        );
+        let d = c.decide(1);
+        assert_eq!(d.target_batch, 32);
+        assert_eq!(d.max_wait, Duration::from_millis(25));
+        // fixed never adapts, whatever it observes
+        let mut c = c;
+        feed(&mut c, 0.0001, 1.0, 0.001, 10);
+        assert_eq!(c.decide(100), d);
+    }
+
+    #[test]
+    fn no_observations_means_dispatch_singly() {
+        let c = adaptive(10.0, 32);
+        let d = c.decide(3);
+        assert_eq!(d.target_batch, 1, "no arrival info -> never delay");
+    }
+
+    #[test]
+    fn littles_law_sizes_batches_under_load() {
+        let mut c = adaptive(10.0, 32);
+        // heavy arrivals (0.5ms gaps), cheap service (0.5ms/inst), healthy
+        // latencies: budget 8ms fits (b-1)*0.5 + b*0.5 <= 8 -> b = 8
+        feed(&mut c, 0.0005, 0.004, 0.0005, 4);
+        let d = c.decide(8);
+        assert_eq!(d.target_batch, 8);
+        assert!(d.max_wait >= Duration::from_secs_f64(MIN_WAIT_S));
+        assert!(d.max_wait.as_secs_f64() <= c.slo.budget_s() + 1e-9);
+    }
+
+    #[test]
+    fn batch_shrinks_when_p99_exceeds_slo_and_grows_back() {
+        // the ISSUE's deterministic-clock contract, end to end
+        let mut c = adaptive(10.0, 32);
+        feed(&mut c, 0.0005, 0.004, 0.0005, 4);
+        let healthy = c.decide(8).target_batch;
+        assert!(healthy >= 4, "healthy target {healthy}");
+
+        // simulated overload: window p99 lands at 30ms > 10ms SLO
+        feed(&mut c, 0.0005, 0.030, 0.0005, 3);
+        assert!(c.shrinks >= 1);
+        let degraded = c.decide(8).target_batch;
+        assert!(
+            degraded < healthy,
+            "batch must shrink under SLO violation ({degraded} vs {healthy})"
+        );
+
+        // light load again: the latency window refills with healthy
+        // samples (ring = 128, 8 per batch -> 16 batches flush it) and the
+        // additive recovery restores the full target
+        feed(&mut c, 0.0005, 0.002, 0.0005, 24);
+        assert!(c.grows >= 1);
+        let recovered = c.decide(8).target_batch;
+        assert_eq!(recovered, healthy, "batch must grow back under light load");
+        assert!((c.scale() - 1.0).abs() < 1e-12);
+    }
+
+    #[test]
+    fn sparse_arrivals_shrink_the_fit() {
+        let mut c = adaptive(10.0, 32);
+        // 50ms between requests: waiting for even one more blows the budget
+        feed(&mut c, 0.050, 0.002, 0.0005, 4);
+        assert_eq!(c.decide(1).target_batch, 1);
+    }
+
+    #[test]
+    fn prime_is_overridden_by_measurement() {
+        let mut c = adaptive(10.0, 32);
+        c.prime_service(0.0035); // plan-cost prior: 3.5ms/inst
+        c.observe_arrival_gap(0.0001);
+        // prior limits the fit: (b-1)*0.1ms + b*3.5ms <= 8ms -> b = 2
+        assert_eq!(c.decide(4).target_batch, 2);
+        // a real measurement replaces the prior outright
+        c.observe_batch(8, 0.0008); // 0.1ms/inst measured
+        c.prime_service(0.0035); // later primes are no-ops
+        assert!(c.decide(4).target_batch > 2);
+    }
+
+    #[test]
+    fn learned_zero_q_degenerates_to_singles() {
+        let c = DispatchController::new(
+            DispatchMode::Learned,
+            SloConfig::with_target(0.010),
+            32,
+            Duration::from_millis(25),
+            Some(SchedulerPolicy::new()),
+        );
+        assert_eq!(c.decide(10).target_batch, 1);
+    }
+
+    #[test]
+    fn learned_policy_selects_trained_action() {
+        let mut p = SchedulerPolicy::new();
+        // make action 3 (batch 8) the best in every state
+        for s in 0..SCHED_STATES {
+            p.set_q(s, 3, 1.0);
+        }
+        let mut c = DispatchController::new(
+            DispatchMode::Learned,
+            SloConfig::with_target(0.010),
+            32,
+            Duration::from_millis(25),
+            Some(p),
+        );
+        feed(&mut c, 0.0005, 0.004, 0.0005, 2);
+        assert_eq!(c.decide(8).target_batch, 8);
+    }
+
+    #[test]
+    fn scheduler_policy_json_roundtrip_is_exact() {
+        let mut p = SchedulerPolicy::new();
+        p.set_q(0, 1, 0.1 + 0.2); // a value with no short decimal form
+        p.set_q(17, 4, -3.25e-7);
+        p.set_q(SCHED_STATES - 1, 5, f64::from_bits(0x3FD5_5555_5555_5555));
+        let j = crate::util::json::Json::parse(&p.to_json().to_string()).unwrap();
+        let q = SchedulerPolicy::from_json(&j).unwrap();
+        assert_eq!(p, q, "Q-table must round-trip bit-exactly");
+    }
+
+    #[test]
+    fn state_id_buckets_cover_and_stay_in_range() {
+        let mut seen = vec![false; SCHED_STATES];
+        for len in [0usize, 1, 3, 6, 12, 40] {
+            for ia in [None, Some(0.0001), Some(0.001), Some(0.01), Some(1.0)] {
+                for per in [0.0, 0.0001, 0.001, 0.01] {
+                    for p99 in [0.0, 0.004, 0.009, 0.012, 0.05] {
+                        let s = sched_state_id(len, ia, per, p99, 0.010);
+                        assert!(s < SCHED_STATES);
+                        seen[s] = true;
+                    }
+                }
+            }
+        }
+        assert!(seen.iter().filter(|s| **s).count() > 40, "grid too coarse");
+    }
+}

@@ -1,7 +1,8 @@
 //! Serving metrics: throughput, latency percentiles (global and
-//! per-workload), queue-depth gauges, policy-store resolution counters,
-//! batching counters, and the memory-planning win (per-request
-//! gather/scatter volume and copies avoided vs the unplanned baseline).
+//! per-workload), SLO-violation accounting, queue-depth gauges,
+//! policy-store resolution counters, batching counters, and the
+//! memory-planning win (per-request gather/scatter volume and copies
+//! avoided vs the unplanned baseline).
 
 use std::collections::BTreeMap;
 use std::sync::Mutex;
@@ -42,6 +43,9 @@ struct Inner {
     store_misses: u64,
     store_fallbacks: u64,
     store_trained: u64,
+    // SLO accounting (0 target = no SLO configured)
+    slo_target_s: f64,
+    slo_violations: u64,
 }
 
 /// Thread-safe metrics sink shared between server workers.
@@ -108,6 +112,10 @@ pub struct MetricsSnapshot {
     pub store_fallbacks: u64,
     /// misses resolved by training + persisting at boot
     pub store_trained: u64,
+    /// p99 latency target in seconds (0 = no SLO configured)
+    pub slo_target_s: f64,
+    /// requests whose latency exceeded the SLO target
+    pub slo_violations: u64,
     pub breakdown: TimeBreakdown,
     pub elapsed_s: f64,
 }
@@ -171,6 +179,24 @@ impl MetricsSnapshot {
         }
         self.instance_cache_hits as f64 / total as f64
     }
+
+    /// Fraction of requests that exceeded the SLO target (0 when no SLO
+    /// is configured).
+    pub fn slo_violation_rate(&self) -> f64 {
+        if self.requests == 0 {
+            return 0.0;
+        }
+        self.slo_violations as f64 / self.requests as f64
+    }
+
+    /// Mean instances per dispatched mini-batch — the occupancy the
+    /// SLO bench trades off against tail latency.
+    pub fn mean_batch_occupancy(&self) -> f64 {
+        if self.minibatches == 0 {
+            return 0.0;
+        }
+        self.instances as f64 / self.minibatches as f64
+    }
 }
 
 impl Metrics {
@@ -188,9 +214,18 @@ impl Metrics {
         *self.started.lock().unwrap() = Instant::now();
     }
 
+    /// Configure the p99 latency target every recorded request is checked
+    /// against (called once at server boot when `--slo-p99-ms` is set).
+    pub fn set_slo(&self, p99_target_s: f64) {
+        self.inner.lock().unwrap().slo_target_s = p99_target_s;
+    }
+
     pub fn record_request(&self, workload: &'static str, latency: Duration) {
         let mut g = self.inner.lock().unwrap();
         g.requests += 1;
+        if g.slo_target_s > 0.0 && latency.as_secs_f64() > g.slo_target_s {
+            g.slo_violations += 1;
+        }
         g.latencies.record_duration(latency);
         g.per_workload
             .entry(workload)
@@ -285,6 +320,8 @@ impl Metrics {
             store_misses: g.store_misses,
             store_fallbacks: g.store_fallbacks,
             store_trained: g.store_trained,
+            slo_target_s: g.slo_target_s,
+            slo_violations: g.slo_violations,
             breakdown: g.breakdown,
             elapsed_s: self.started.lock().unwrap().elapsed().as_secs_f64(),
         }
@@ -376,6 +413,25 @@ mod tests {
         assert_eq!(s.arena_grows, 1);
         assert!((s.compose_rate() - 1.0).abs() < 1e-12);
         assert!((s.instance_cache_hit_rate() - 0.6).abs() < 1e-12);
+    }
+
+    #[test]
+    fn slo_violations_counted_against_target() {
+        let m = Metrics::new();
+        m.record_request("treelstm", Duration::from_millis(5)); // before target set: not counted
+        m.set_slo(0.010);
+        m.record_request("treelstm", Duration::from_millis(5));
+        m.record_request("treelstm", Duration::from_millis(30));
+        m.record_request("treelstm", Duration::from_millis(12));
+        let s = m.snapshot();
+        assert_eq!(s.slo_target_s, 0.010);
+        assert_eq!(s.slo_violations, 2);
+        assert!((s.slo_violation_rate() - 0.5).abs() < 1e-12);
+        // occupancy helper
+        let bd = TimeBreakdown::default();
+        m.record_minibatch(6, &bd, &ExecReport::default());
+        m.record_minibatch(2, &bd, &ExecReport::default());
+        assert!((m.snapshot().mean_batch_occupancy() - 4.0).abs() < 1e-12);
     }
 
     #[test]

@@ -7,16 +7,26 @@
 //!   steady-state serving path executes from (zero policy runs, zero PQ
 //!   planning after first sight of a topology),
 //! * [`server`] — multi-workload request router over a worker pool
-//!   (per-workload queues, continuous full-or-timed-out dispatch),
-//! * [`metrics`] — throughput/latency/queue-depth/policy-store accounting,
+//!   (per-workload queues, continuous dispatch),
+//! * [`dispatch`] — the per-(worker, workload) batch-size / max-wait
+//!   controller: the legacy fixed full-or-timed-out rule, an adaptive
+//!   Little's-law + AIMD controller steering toward a p99 SLO, and a
+//!   learned tabular-Q scheduler policy (trained in
+//!   [`crate::rl::dispatch_sim`]),
+//! * [`traffic`] — open-loop load generation (Poisson and bursty ON/OFF
+//!   arrival processes) for realistic serving benchmarks,
+//! * [`metrics`] — throughput/latency/queue-depth/SLO/policy-store
+//!   accounting,
 //! * [`policies`] — mode → policy resolution (persistence lives in
 //!   [`crate::policystore`]).
 
 pub mod compose;
+pub mod dispatch;
 pub mod engine;
 pub mod metrics;
 pub mod policies;
 pub mod server;
+pub mod traffic;
 
 /// Which batching policy + memory mode a serving configuration uses —
 /// the three systems Fig.6/Fig.8 compare.

@@ -17,6 +17,20 @@
 //! when allowed, falling back to the agenda baseline otherwise — every
 //! outcome is counted in [`Metrics`]). No request ever trains in-band.
 //!
+//! **Dispatch is pluggable** ([`crate::coordinator::dispatch`]): the
+//! legacy fixed full-or-timed-out rule, an adaptive Little's-law + AIMD
+//! controller steering batch size and max-wait toward a p99 SLO target
+//! (`--slo-p99-ms`), or a learned tabular-Q scheduler policy (its own
+//! PolicyStore artifact kind, trained on the queue simulator at boot on
+//! a miss). Each worker owns one controller per workload, fed from the
+//! queue-level arrival EWMA (maintained at enqueue time, shared across
+//! workers), the mini-batches it executes (service times), and the
+//! responses it sends (latencies); the
+//! controller's first service estimate is seeded from the topology's
+//! plan cost ([`InstanceCache`] artifacts). Whatever the controller
+//! decides only changes *when* requests are grouped — responses stay
+//! bit-identical to the fixed rule (asserted in integration tests).
+//!
 //! **Steady-state hot path (EdBatch mode):** each worker keeps a
 //! per-workload [`InstanceCache`] of request-topology artifacts and serves
 //! every mini-batch by *composing* the cached per-instance schedules and
@@ -34,7 +48,7 @@
 //! a shared dispatch state, N executor workers.)
 
 use std::collections::VecDeque;
-use std::sync::mpsc::{sync_channel, SyncSender};
+use std::sync::mpsc::{sync_channel, Receiver, SyncSender};
 use std::sync::{Arc, Condvar, Mutex};
 use std::thread::JoinHandle;
 use std::time::{Duration, Instant};
@@ -48,11 +62,14 @@ use crate::batching::fsm::{Encoding, FsmPolicy};
 use crate::batching::{run_policy, Policy};
 use crate::graph::Graph;
 use crate::policystore::PolicyStore;
+use crate::rl::dispatch_sim::SimConfig;
 use crate::rl::TrainConfig;
 use crate::runtime::ArtifactRegistry;
+use crate::util::rng::Rng;
 use crate::workloads::{Workload, WorkloadKind};
 
 use super::compose::{ComposedPlan, InstanceCache};
+use super::dispatch::{DispatchController, DispatchMode, SchedulerPolicy, SloConfig};
 use super::engine::{ArenaStateStore, Backend, CellEngine, ExecReport};
 use super::metrics::Metrics;
 use super::policies::calibrate_prefers_depth;
@@ -61,6 +78,15 @@ use super::{SystemMode, TimeBreakdown};
 /// How long an idle worker sleeps between dispatch checks when no queue
 /// has a deadline pending (also bounds shutdown-flag latency).
 const IDLE_POLL: Duration = Duration::from_millis(20);
+
+/// p99 target assumed by adaptive/learned dispatch when `--slo-p99-ms`
+/// is not given.
+const DEFAULT_SLO_S: f64 = 0.020;
+
+/// Per-element service-time prior: converts a topology's static plan
+/// cost ([`super::compose::InstanceArtifact::cost_elems`]) into the
+/// controller's first service estimate, before anything is measured.
+const SERVICE_PRIOR_S_PER_ELEM: f64 = 30e-9;
 
 #[derive(Clone, Debug)]
 pub struct ServerConfig {
@@ -88,6 +114,17 @@ pub struct ServerConfig {
     pub train_cfg: TrainConfig,
     pub encoding: Encoding,
     pub seed: u64,
+    /// how batch size + max-wait are decided per dispatch: the fixed
+    /// full-or-timed-out rule, the adaptive SLO controller, or the
+    /// learned scheduler policy
+    pub dispatch: DispatchMode,
+    /// p99 latency target for adaptive/learned dispatch and for the
+    /// metrics violation counter; `None` = no SLO configured (adaptive
+    /// modes assume [`DEFAULT_SLO_S`])
+    pub slo_p99: Option<Duration>,
+    /// pre-resolved scheduler policy (Learned mode); `None` = resolve
+    /// from the store, training at boot on a miss
+    pub scheduler: Option<SchedulerPolicy>,
 }
 
 impl Default for ServerConfig {
@@ -105,6 +142,9 @@ impl Default for ServerConfig {
             train_cfg: TrainConfig::default(),
             encoding: Encoding::Sort,
             seed: 7,
+            dispatch: DispatchMode::Fixed,
+            slo_p99: None,
+            scheduler: None,
         }
     }
 }
@@ -167,59 +207,53 @@ impl Response {
     }
 }
 
-/// Shared dispatch state: per-workload FIFO queues + shutdown flag.
+/// One workload's FIFO queue plus its queue-level arrival statistics.
+///
+/// The inter-arrival EWMA lives *here*, updated at enqueue time, rather
+/// than in the per-worker controllers: with multiple workers a
+/// worker-local view would read the seam between its own consecutive
+/// batches as one giant gap (the requests in between were drained by
+/// other workers), overestimating the inter-arrival time and making the
+/// adaptive controller under-batch. Workers sync the authoritative value
+/// into their controller before each decision.
+struct WorkQueue {
+    q: VecDeque<Request>,
+    last_submitted: Option<Instant>,
+    ia_ewma_s: Option<f64>,
+}
+
+impl WorkQueue {
+    fn new() -> WorkQueue {
+        WorkQueue {
+            q: VecDeque::new(),
+            last_submitted: None,
+            ia_ewma_s: None,
+        }
+    }
+
+    /// Fold one enqueue instant into the arrival EWMA (called under the
+    /// dispatcher lock; one subtraction + one multiply-add).
+    fn record_arrival(&mut self, now: Instant) {
+        if let Some(prev) = self.last_submitted {
+            let gap = now.saturating_duration_since(prev).as_secs_f64();
+            self.ia_ewma_s = Some(match self.ia_ewma_s {
+                None => gap,
+                Some(e) => e + super::dispatch::EWMA_ALPHA * (gap - e),
+            });
+        }
+        self.last_submitted = Some(now);
+    }
+}
+
+/// Shared dispatch state: per-workload queues + shutdown flag.
 struct DispatchState {
-    queues: FxHashMap<WorkloadKind, VecDeque<Request>>,
+    queues: FxHashMap<WorkloadKind, WorkQueue>,
     closed: bool,
 }
 
 impl DispatchState {
     fn total_queued(&self) -> usize {
-        self.queues.values().map(|q| q.len()).sum()
-    }
-
-    /// Pick the next dispatchable mini-batch: a queue that is full
-    /// (`max_batch`) or whose oldest request has aged past `window` (any
-    /// nonempty queue when `flush`). Among eligible queues the one with
-    /// the oldest head wins (FIFO fairness across workloads). Drains into
-    /// the caller's pooled buffer (no per-dispatch allocation).
-    fn take_ready_into(
-        &mut self,
-        now: Instant,
-        max_batch: usize,
-        window: Duration,
-        flush: bool,
-        out: &mut Vec<Request>,
-    ) -> Option<WorkloadKind> {
-        let mut pick: Option<(WorkloadKind, Instant)> = None;
-        for (&kind, q) in &self.queues {
-            let Some(front) = q.front() else { continue };
-            let ready =
-                flush || q.len() >= max_batch || now.duration_since(front.submitted) >= window;
-            if !ready {
-                continue;
-            }
-            let older = match pick {
-                None => true,
-                Some((_, oldest)) => front.submitted < oldest,
-            };
-            if older {
-                pick = Some((kind, front.submitted));
-            }
-        }
-        let (kind, _) = pick?;
-        let q = self.queues.get_mut(&kind).unwrap();
-        let take = q.len().min(max_batch);
-        out.extend(q.drain(..take));
-        Some(kind)
-    }
-
-    /// Earliest instant at which some queued request's window expires.
-    fn next_deadline(&self, window: Duration) -> Option<Instant> {
-        self.queues
-            .values()
-            .filter_map(|q| q.front().map(|r| r.submitted + window))
-            .min()
+        self.queues.values().map(|w| w.q.len()).sum()
     }
 }
 
@@ -261,29 +295,41 @@ pub struct Client {
 }
 
 impl Client {
-    /// Blocking inference call.
-    pub fn infer(&self, graph: Graph) -> Result<Response> {
+    /// Non-blocking submission: enqueue the request and return the
+    /// receiver its [`Response`] will arrive on. The open-loop load
+    /// generator ([`crate::coordinator::traffic`]) is built on this —
+    /// arrivals must not be gated on completions.
+    pub fn submit(&self, graph: Graph) -> Result<Receiver<Response>> {
         let (rtx, rrx) = sync_channel(1);
         {
             let mut st = self.dispatcher.state.lock().unwrap();
             if st.closed {
                 bail!("server stopped");
             }
-            let q = st
+            let wq = st
                 .queues
                 .get_mut(&self.kind)
                 .ok_or_else(|| anyhow!("workload {} not served", self.kind.name()))?;
-            q.push_back(Request {
+            let now = Instant::now();
+            wq.record_arrival(now);
+            wq.q.push_back(Request {
                 kind: self.kind,
                 graph,
-                submitted: Instant::now(),
+                submitted: now,
                 respond: rtx,
             });
             let depth = st.total_queued();
             self.metrics.record_enqueue(depth);
         }
         self.dispatcher.cv.notify_one();
-        rrx.recv().map_err(|_| anyhow!("server dropped request"))
+        Ok(rrx)
+    }
+
+    /// Blocking inference call (closed-loop clients).
+    pub fn infer(&self, graph: Graph) -> Result<Response> {
+        self.submit(graph)?
+            .recv()
+            .map_err(|_| anyhow!("server dropped request"))
     }
 }
 
@@ -299,16 +345,22 @@ impl Server {
         config.workers = config.workers.max(1);
 
         let metrics = Arc::new(Metrics::new());
+        if let Some(slo) = config.slo_p99 {
+            metrics.set_slo(slo.as_secs_f64());
+        }
         // resolve every workload's policy before any worker starts: store
         // lookups, boot-time training, fallbacks — never in-request
         let seeds = Arc::new(resolve_policies(&config, &metrics)?);
+        // same discipline for the serving-time scheduler policy (Learned
+        // dispatch): store lookup or simulator training, never in-request
+        let sched_seeds = Arc::new(resolve_schedulers(&config)?);
 
         let dispatcher = Arc::new(Dispatcher {
             state: Mutex::new(DispatchState {
                 queues: config
                     .workloads
                     .iter()
-                    .map(|&k| (k, VecDeque::new()))
+                    .map(|&k| (k, WorkQueue::new()))
                     .collect(),
                 closed: false,
             }),
@@ -322,10 +374,11 @@ impl Server {
             let d = dispatcher.clone();
             let m = metrics.clone();
             let s = seeds.clone();
+            let sch = sched_seeds.clone();
             let rtx = ready_tx.clone();
             let handle = std::thread::Builder::new()
                 .name(format!("ed-batch-worker-{wid}"))
-                .spawn(move || worker_loop(cfg, d, m, s, rtx))
+                .spawn(move || worker_loop(cfg, d, m, s, sch, rtx))
                 .expect("spawn worker");
             handles.push(handle);
         }
@@ -458,6 +511,69 @@ fn resolve_policies(
     Ok(seeds)
 }
 
+/// Effective SLO for the dispatch controllers.
+fn effective_slo(config: &ServerConfig) -> SloConfig {
+    SloConfig::with_target(
+        config
+            .slo_p99
+            .map(|d| d.as_secs_f64())
+            .unwrap_or(DEFAULT_SLO_S),
+    )
+}
+
+/// Crude static service prior for a workload (used only to calibrate the
+/// scheduler-training simulator; real controllers re-seed from actual
+/// plan costs and then from measurements).
+fn service_prior_for(workload: &Workload, seed: u64) -> f64 {
+    let mut rng = Rng::new(seed);
+    let g = workload.gen_instance(&mut rng);
+    (g.len() * workload.params.hidden * 2) as f64 * SERVICE_PRIOR_S_PER_ELEM
+}
+
+/// Resolve the learned scheduler policy for every workload (Learned
+/// dispatch only): an explicitly provided policy wins, then a store hit
+/// by op-type-space fingerprint, then boot-time training on the queue
+/// simulator (persisted under the `scheduler` artifact kind when a store
+/// is configured).
+fn resolve_schedulers(
+    config: &ServerConfig,
+) -> Result<FxHashMap<WorkloadKind, SchedulerPolicy>> {
+    let mut out = FxHashMap::default();
+    if config.dispatch != DispatchMode::Learned {
+        return Ok(out);
+    }
+    let slo = effective_slo(config);
+    let mut store = match &config.store_dir {
+        Some(dir) => Some(PolicyStore::open(dir)?),
+        None => None,
+    };
+    for &kind in &config.workloads {
+        if let Some(p) = &config.scheduler {
+            out.insert(kind, p.clone());
+            continue;
+        }
+        let workload = Workload::new(kind, config.hidden);
+        if let Some(store) = &store {
+            if let Some(a) = store.lookup_scheduler_workload(&workload) {
+                out.insert(kind, a.policy.clone());
+                continue;
+            }
+        }
+        let sim = SimConfig {
+            slo,
+            per_inst_s: service_prior_for(&workload, config.seed),
+            max_batch: config.max_batch,
+            ..SimConfig::quick()
+        };
+        let policy = match &mut store {
+            Some(store) => store.train_scheduler_into(&workload, &sim, config.seed)?.0.policy,
+            None => crate::rl::dispatch_sim::train_scheduler(&sim, config.seed).0,
+        };
+        out.insert(kind, policy);
+    }
+    Ok(out)
+}
+
 /// Per-workload execution context owned by one worker.
 struct WorkerCtx {
     workload: Workload,
@@ -467,6 +583,9 @@ struct WorkerCtx {
     cache: InstanceCache,
     /// pooled compose buffers, reused across mini-batches
     composed: ComposedPlan,
+    /// this worker's dispatch controller for this workload's queue
+    /// (arrival estimates are synced from the shared queue state)
+    ctrl: DispatchController,
 }
 
 fn worker_loop(
@@ -474,9 +593,11 @@ fn worker_loop(
     dispatcher: Arc<Dispatcher>,
     metrics: Arc<Metrics>,
     seeds: Arc<FxHashMap<WorkloadKind, PolicySeed>>,
+    sched_seeds: Arc<FxHashMap<WorkloadKind, SchedulerPolicy>>,
     ready: SyncSender<Result<()>>,
 ) -> Result<()> {
     let boot = (|| -> Result<_> {
+        let slo = effective_slo(&config);
         let mut ctxs: FxHashMap<WorkloadKind, WorkerCtx> = FxHashMap::default();
         for &kind in &config.workloads {
             let workload = Workload::new(kind, config.hidden);
@@ -486,6 +607,13 @@ fn worker_loop(
                 config.hidden,
             );
             let policy = seeds[&kind].instantiate(workload.registry.num_types());
+            let ctrl = DispatchController::new(
+                config.dispatch,
+                slo,
+                config.max_batch,
+                config.batch_window,
+                sched_seeds.get(&kind).cloned(),
+            );
             ctxs.insert(
                 kind,
                 WorkerCtx {
@@ -494,6 +622,7 @@ fn worker_loop(
                     charges,
                     cache: InstanceCache::new(),
                     composed: ComposedPlan::new(),
+                    ctrl,
                 },
             );
         }
@@ -548,8 +677,7 @@ fn worker_loop(
     let mut current_kind: Option<WorkloadKind> = None;
     loop {
         pending.clear();
-        let Some(kind) =
-            next_batch(&dispatcher, config.max_batch, config.batch_window, &mut pending)
+        let Some(kind) = next_batch(&dispatcher, &mut ctxs, config.max_batch, &mut pending)
         else {
             break;
         };
@@ -562,6 +690,8 @@ fn worker_loop(
             engine.extra_launches = ctx.charges.extra_launches.clone();
             current_kind = Some(kind);
         }
+        let batch_len = pending.len();
+        let t_service = Instant::now();
         let result = if compose {
             process_composed(ctx, &mut engine, &metrics, &mut pending, &mut store)
         } else {
@@ -574,6 +704,11 @@ fn worker_loop(
                 &mut has_consumer,
             )
         };
+        if result.is_ok() {
+            // service-time feedback closes the controller's loop
+            ctx.ctrl
+                .observe_batch(batch_len, t_service.elapsed().as_secs_f64());
+        }
         if let Err(e) = result {
             // fail-stop: close the server so blocked and future clients get
             // an error instead of hanging on a dead queue (the failing
@@ -581,8 +716,8 @@ fn worker_loop(
             // clients; clearing the queues unblocks the rest)
             let mut st = dispatcher.state.lock().unwrap();
             st.closed = true;
-            for q in st.queues.values_mut() {
-                q.clear();
+            for wq in st.queues.values_mut() {
+                wq.q.clear();
             }
             drop(st);
             dispatcher.cv.notify_all();
@@ -595,24 +730,62 @@ fn worker_loop(
 /// Block until a mini-batch is dispatchable (or the server is closed and
 /// drained), filling `out`. Returns `None` exactly when the worker should
 /// exit.
+///
+/// Eligibility is decided **per queue by this worker's controller**: a
+/// queue is ready when it holds the controller's current `target_batch`
+/// or its oldest request has waited the controller's current `max_wait`
+/// (any nonempty queue when flushing at shutdown). Among ready queues the
+/// oldest head wins (FIFO fairness across workloads); the drain is capped
+/// at the decided target so an adaptive controller can serve *smaller*
+/// batches than the queue holds when the SLO calls for it. With
+/// [`DispatchMode::Fixed`] controllers this reproduces the legacy
+/// full-or-timed-out rule exactly.
 fn next_batch(
     dispatcher: &Dispatcher,
+    ctxs: &mut FxHashMap<WorkloadKind, WorkerCtx>,
     max_batch: usize,
-    window: Duration,
     out: &mut Vec<Request>,
 ) -> Option<WorkloadKind> {
     let mut st = dispatcher.state.lock().unwrap();
     loop {
         let now = Instant::now();
         let flush = st.closed;
-        if let Some(kind) = st.take_ready_into(now, max_batch, window, flush, out) {
+        let mut pick: Option<(WorkloadKind, Instant, usize)> = None;
+        let mut earliest: Option<Instant> = None;
+        for (&kind, wq) in &st.queues {
+            let Some(front) = wq.q.front() else { continue };
+            let ctx = ctxs.get_mut(&kind).expect("queue implies context");
+            // sync the queue-level arrival estimate before deciding
+            ctx.ctrl.set_arrival_ewma(wq.ia_ewma_s);
+            let d = ctx.ctrl.decide(wq.q.len());
+            let deadline = front.submitted + d.max_wait;
+            let ready = flush || wq.q.len() >= d.target_batch || now >= deadline;
+            if ready {
+                let older = match pick {
+                    None => true,
+                    Some((_, oldest, _)) => front.submitted < oldest,
+                };
+                if older {
+                    pick = Some((kind, front.submitted, d.target_batch));
+                }
+            } else {
+                earliest = Some(match earliest {
+                    None => deadline,
+                    Some(e) => e.min(deadline),
+                });
+            }
+        }
+        if let Some((kind, _, target)) = pick {
+            let wq = st.queues.get_mut(&kind).unwrap();
+            let cap = if flush { max_batch } else { target.clamp(1, max_batch) };
+            let take = wq.q.len().min(cap);
+            out.extend(wq.q.drain(..take));
             return Some(kind);
         }
         if st.closed {
             return None; // closed and fully drained
         }
-        let wait = st
-            .next_deadline(window)
+        let wait = earliest
             .map(|d| d.saturating_duration_since(now))
             .unwrap_or(IDLE_POLL)
             .min(IDLE_POLL);
@@ -654,6 +827,16 @@ fn process_composed(
         ctx.composed.push_instance(art);
     }
     ctx.composed.compose();
+    if ctx.cache.misses != misses0 && !pending.is_empty() {
+        // first sight of a topology: seed the dispatch controller's
+        // service estimate from the static plan cost (replaced by the
+        // real measurement as soon as this batch completes)
+        let cost: usize = (0..ctx.composed.num_instances())
+            .map(|i| ctx.composed.instance(i).cost_elems())
+            .sum();
+        let per_inst = cost as f64 / ctx.composed.num_instances() as f64;
+        ctx.ctrl.prime_service(per_inst * SERVICE_PRIOR_S_PER_ELEM);
+    }
     let assemble_s = t0.elapsed().as_secs_f64();
     let plan_s = ctx.cache.plan_build_s - plan_s0;
 
@@ -692,6 +875,7 @@ fn process_composed(
         }
         let latency = req.submitted.elapsed();
         metrics.record_request(req.kind.name(), latency);
+        ctx.ctrl.observe_latency(latency.as_secs_f64());
         let _ = req.respond.send(Response {
             data,
             spans,
@@ -773,6 +957,7 @@ fn process_merged(
         }
         let latency = req.submitted.elapsed();
         metrics.record_request(req.kind.name(), latency);
+        ctx.ctrl.observe_latency(latency.as_secs_f64());
         let _ = req.respond.send(Response {
             data,
             spans,
@@ -810,6 +995,7 @@ mod tests {
             train_cfg: quick_train_cfg(),
             encoding: Encoding::Sort,
             seed: 3,
+            ..ServerConfig::default()
         }
     }
 
@@ -1007,6 +1193,61 @@ mod tests {
         let resp = client.infer(w.gen_instance(&mut rng)).unwrap();
         assert!(resp.num_sinks() > 0);
         server.shutdown().unwrap();
+        let _ = std::fs::remove_dir_all(&dir);
+    }
+
+    #[test]
+    fn adaptive_dispatch_serves_and_counts_slo() {
+        let mut cfg = quick_config(SystemMode::EdBatch);
+        cfg.dispatch = DispatchMode::Adaptive;
+        cfg.slo_p99 = Some(Duration::from_millis(50));
+        let server = Server::start(cfg).unwrap();
+        let client = server.client(WorkloadKind::TreeLstm);
+        let w = Workload::new(WorkloadKind::TreeLstm, 32);
+        let mut rng = Rng::new(21);
+        let g = w.gen_instance(&mut rng);
+        for _ in 0..8 {
+            let resp = client.infer(g.clone()).unwrap();
+            assert!(resp.num_sinks() > 0);
+        }
+        let snap = server.metrics.snapshot();
+        assert_eq!(snap.requests, 8);
+        assert_eq!(snap.slo_target_s, 0.050);
+        // serial CPU requests on a trivial workload stay far under 50ms
+        assert_eq!(snap.slo_violations, 0);
+        server.shutdown().unwrap();
+    }
+
+    #[test]
+    fn learned_dispatch_trains_scheduler_in_memory_at_boot() {
+        // no store dir: the scheduler policy comes from boot-time
+        // simulator training, mirroring the FSM's filesystem-free path
+        let mut cfg = quick_config(SystemMode::EdBatch);
+        cfg.dispatch = DispatchMode::Learned;
+        cfg.slo_p99 = Some(Duration::from_millis(20));
+        let server = Server::start(cfg).unwrap();
+        let client = server.client(WorkloadKind::TreeLstm);
+        let w = Workload::new(WorkloadKind::TreeLstm, 32);
+        let mut rng = Rng::new(22);
+        let resp = client.infer(w.gen_instance(&mut rng)).unwrap();
+        assert!(resp.num_sinks() > 0);
+        server.shutdown().unwrap();
+    }
+
+    #[test]
+    fn learned_dispatch_persists_scheduler_artifact() {
+        let dir = std::env::temp_dir().join(format!("edbatch_srv_sched_{}", std::process::id()));
+        let _ = std::fs::remove_dir_all(&dir);
+        let mut cfg = quick_config(SystemMode::EdBatch);
+        cfg.dispatch = DispatchMode::Learned;
+        cfg.store_dir = Some(dir.to_str().unwrap().to_string());
+        let server = Server::start(cfg).unwrap();
+        server.shutdown().unwrap();
+        // the boot miss trained + persisted a scheduler-kind artifact
+        let store = PolicyStore::open(&dir).unwrap();
+        assert_eq!(store.num_schedulers(), 1);
+        let w = Workload::new(WorkloadKind::TreeLstm, 32);
+        assert!(store.lookup_scheduler_workload(&w).is_some());
         let _ = std::fs::remove_dir_all(&dir);
     }
 

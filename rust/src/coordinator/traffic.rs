@@ -1,0 +1,262 @@
+//! Open-loop load generation — realistic traffic for the serving stack.
+//!
+//! The closed-loop clients used by the original `serve` command (each
+//! thread waits for its response before submitting again) self-throttle:
+//! when the server slows down, offered load drops, which hides queueing
+//! and masks tail latency. Production traffic does not wait. This module
+//! generates **open-loop** arrivals — requests are submitted at
+//! pre-sampled timestamps regardless of completion — under two arrival
+//! processes:
+//!
+//! * [`TrafficProfile::Poisson`] — memoryless arrivals at a constant
+//!   rate (the classic M/·/· offered load),
+//! * [`TrafficProfile::OnOff`] — bursty two-phase traffic: Poisson at a
+//!   high rate during ON windows, a low rate during OFF windows (the
+//!   regime where a fixed dispatch window is provably mis-tuned at one
+//!   end: either it over-delays the sparse phase or under-batches the
+//!   burst — what the adaptive controller in
+//!   [`crate::coordinator::dispatch`] exists to fix).
+//!
+//! Arrival schedules are sampled **deterministically** from the repo RNG
+//! before the run starts, so fixed-vs-adaptive comparisons in
+//! `benchsuite::serving` replay byte-identical offered load. The driver
+//! submits through the non-blocking [`Client::submit`] and collects every
+//! response at the end (latency is measured server-side from enqueue
+//! time, so late collection does not distort the percentiles).
+
+use std::sync::Arc;
+use std::thread::JoinHandle;
+use std::time::{Duration, Instant};
+
+use crate::graph::Graph;
+use crate::util::rng::Rng;
+
+use super::server::Client;
+
+/// An arrival process for one workload's request stream.
+#[derive(Clone, Copy, Debug, PartialEq)]
+pub enum TrafficProfile {
+    /// Each client thread submits, waits for the response, repeats
+    /// (the legacy `serve` behaviour; self-throttling).
+    ClosedLoop,
+    /// Open-loop Poisson arrivals at `rate_per_s`.
+    Poisson { rate_per_s: f64 },
+    /// Open-loop ON/OFF bursts: Poisson at `on_rate_per_s` for `on_s`
+    /// seconds, then at `off_rate_per_s` for `off_s` seconds, repeating.
+    OnOff {
+        on_rate_per_s: f64,
+        off_rate_per_s: f64,
+        on_s: f64,
+        off_s: f64,
+    },
+}
+
+impl TrafficProfile {
+    pub fn poisson(rate_per_s: f64) -> TrafficProfile {
+        TrafficProfile::Poisson { rate_per_s }
+    }
+
+    /// The canonical bursty profile at a given *mean* rate: 20% duty
+    /// cycle ON windows at 4× the mean, OFF windows at 0.25× the mean
+    /// (0.2·4r + 0.8·0.25r = r, so the offered volume matches the
+    /// Poisson profile of the same mean rate).
+    pub fn bursty(mean_rate_per_s: f64) -> TrafficProfile {
+        TrafficProfile::OnOff {
+            on_rate_per_s: 4.0 * mean_rate_per_s,
+            off_rate_per_s: 0.25 * mean_rate_per_s,
+            on_s: 0.2,
+            off_s: 0.8,
+        }
+    }
+
+    pub fn name(&self) -> &'static str {
+        match self {
+            TrafficProfile::ClosedLoop => "closed",
+            TrafficProfile::Poisson { .. } => "poisson",
+            TrafficProfile::OnOff { .. } => "bursty",
+        }
+    }
+
+    /// Long-run mean arrival rate (requests/s); 0 for closed loop.
+    pub fn mean_rate(&self) -> f64 {
+        match *self {
+            TrafficProfile::ClosedLoop => 0.0,
+            TrafficProfile::Poisson { rate_per_s } => rate_per_s,
+            TrafficProfile::OnOff {
+                on_rate_per_s,
+                off_rate_per_s,
+                on_s,
+                off_s,
+            } => (on_rate_per_s * on_s + off_rate_per_s * off_s) / (on_s + off_s),
+        }
+    }
+
+    /// Instantaneous rate at time `t` since the stream started.
+    pub fn rate_at(&self, t_s: f64) -> f64 {
+        match *self {
+            TrafficProfile::ClosedLoop => 0.0,
+            TrafficProfile::Poisson { rate_per_s } => rate_per_s,
+            TrafficProfile::OnOff {
+                on_rate_per_s,
+                off_rate_per_s,
+                on_s,
+                off_s,
+            } => {
+                let phase = t_s.rem_euclid(on_s + off_s);
+                if phase < on_s {
+                    on_rate_per_s
+                } else {
+                    off_rate_per_s
+                }
+            }
+        }
+    }
+
+    /// Sample the gap to the next arrival given the current stream time
+    /// (exponential at the instantaneous rate; the phase is re-read per
+    /// gap, which is exact for Poisson and a standard fine-grained
+    /// approximation for ON/OFF boundaries).
+    pub fn sample_gap(&self, t_s: f64, rng: &mut Rng) -> f64 {
+        let rate = self.rate_at(t_s);
+        if rate <= 0.0 {
+            return f64::INFINITY;
+        }
+        -(1.0 - rng.f64()).ln() / rate
+    }
+
+    /// Pre-sample the full arrival schedule for `duration_s` seconds:
+    /// sorted offsets from stream start. Deterministic in (profile, seed).
+    pub fn arrivals(&self, duration_s: f64, rng: &mut Rng) -> Vec<f64> {
+        let mut out = Vec::new();
+        if matches!(self, TrafficProfile::ClosedLoop) {
+            return out;
+        }
+        let mut t = 0.0;
+        loop {
+            let gap = self.sample_gap(t, rng);
+            if !gap.is_finite() {
+                break;
+            }
+            t += gap;
+            if t >= duration_s {
+                break;
+            }
+            out.push(t);
+        }
+        out
+    }
+}
+
+/// What one open-loop driver thread observed.
+#[derive(Clone, Copy, Debug, Default)]
+pub struct OpenLoopStats {
+    /// requests submitted (the offered load)
+    pub offered: usize,
+    /// responses received
+    pub completed: usize,
+    /// worst lateness of a submission vs its scheduled instant — if this
+    /// grows to the order of the latency percentiles, the *generator* was
+    /// the bottleneck and the measurement is suspect
+    pub gen_lag_max_s: f64,
+}
+
+/// Drive one workload's open-loop request stream on its own thread:
+/// submit `pool[i % pool.len()]` at each scheduled arrival offset, then
+/// collect every response. Panics (in the returned handle) if the server
+/// drops a request — open-loop benches treat that as a harness bug.
+pub fn drive_open_loop(
+    client: Client,
+    pool: Arc<Vec<Graph>>,
+    arrivals: Vec<f64>,
+) -> JoinHandle<OpenLoopStats> {
+    assert!(!pool.is_empty(), "open-loop driver needs a topology pool");
+    std::thread::spawn(move || {
+        let epoch = Instant::now();
+        let mut stats = OpenLoopStats::default();
+        let mut receivers = Vec::with_capacity(arrivals.len());
+        for (i, &offset) in arrivals.iter().enumerate() {
+            let due = epoch + Duration::from_secs_f64(offset);
+            let now = Instant::now();
+            if due > now {
+                std::thread::sleep(due - now);
+            } else {
+                stats.gen_lag_max_s = stats
+                    .gen_lag_max_s
+                    .max(now.saturating_duration_since(due).as_secs_f64());
+            }
+            let rx = client
+                .submit(pool[i % pool.len()].clone())
+                .expect("open-loop submit");
+            stats.offered += 1;
+            receivers.push(rx);
+        }
+        for rx in receivers {
+            rx.recv().expect("open-loop response");
+            stats.completed += 1;
+        }
+        stats
+    })
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn poisson_volume_tracks_rate() {
+        let p = TrafficProfile::poisson(1000.0);
+        let mut rng = Rng::new(7);
+        let n = p.arrivals(2.0, &mut rng).len() as f64;
+        assert!((n - 2000.0).abs() < 300.0, "got {n} arrivals");
+        assert_eq!(p.mean_rate(), 1000.0);
+    }
+
+    #[test]
+    fn arrivals_are_sorted_and_bounded() {
+        let p = TrafficProfile::bursty(500.0);
+        let mut rng = Rng::new(9);
+        let xs = p.arrivals(3.0, &mut rng);
+        assert!(xs.windows(2).all(|w| w[0] <= w[1]));
+        assert!(xs.iter().all(|&t| (0.0..3.0).contains(&t)));
+        // mean volume matches the equivalent poisson profile by design
+        let n = xs.len() as f64;
+        assert!((n - 1500.0).abs() < 400.0, "got {n} arrivals");
+    }
+
+    #[test]
+    fn bursty_is_denser_in_on_windows() {
+        let p = TrafficProfile::bursty(400.0);
+        let mut rng = Rng::new(11);
+        let xs = p.arrivals(5.0, &mut rng);
+        let (mut on, mut off) = (0usize, 0usize);
+        for &t in &xs {
+            if t.rem_euclid(1.0) < 0.2 {
+                on += 1;
+            } else {
+                off += 1;
+            }
+        }
+        // ON windows are 1/4 of the time but carry ~80% of the volume
+        assert!(on > 2 * off, "on={on} off={off}");
+        // instantaneous rates expose the two phases
+        assert_eq!(p.rate_at(0.1), 1600.0);
+        assert_eq!(p.rate_at(0.5), 100.0);
+    }
+
+    #[test]
+    fn closed_loop_generates_nothing() {
+        let p = TrafficProfile::ClosedLoop;
+        let mut rng = Rng::new(3);
+        assert!(p.arrivals(1.0, &mut rng).is_empty());
+        assert_eq!(p.mean_rate(), 0.0);
+        assert_eq!(p.name(), "closed");
+    }
+
+    #[test]
+    fn deterministic_in_seed() {
+        let p = TrafficProfile::poisson(300.0);
+        let a = p.arrivals(1.0, &mut Rng::new(42));
+        let b = p.arrivals(1.0, &mut Rng::new(42));
+        assert_eq!(a, b);
+    }
+}

@@ -17,10 +17,13 @@
 //!   - [`exec`] — the [`exec::backend::ExecBackend`] trait with CPU
 //!     reference and PJRT implementations, primitive CPU kernels, and the
 //!     static-subgraph executor behind Table 2,
-//!   - [`policystore`] — versioned on-disk artifacts of learned policies,
+//!   - [`policystore`] — versioned on-disk artifacts of learned policies
+//!     (graph-time batching FSMs *and* serving-time dispatch schedulers),
 //!     keyed by op-type-space fingerprint (train once, serve forever),
 //!   - [`coordinator`] — the cell engine executing schedules over the
-//!     planned arena, the multi-worker serving front-end, and metrics,
+//!     planned arena, the multi-worker serving front-end with adaptive
+//!     SLO-aware dispatch ([`coordinator::dispatch`]), open-loop traffic
+//!     generation ([`coordinator::traffic`]), and metrics,
 //!   - [`runtime`] — PJRT artifact loading/compilation,
 //!   - [`workloads`], [`subgraph`], [`benchsuite`] — the paper's
 //!     evaluation surface.

@@ -1,9 +1,11 @@
 //! `ed-batch` — CLI for the ED-Batch reproduction.
 //!
 //! ```text
-//! ed-batch bench <fig6|fig8|fig9|table2|table3|table4|table5|serving|all> [--fast]
+//! ed-batch bench <fig6|fig8|fig9|table2|table3|table4|table5|serving|serving-slo|all> [--fast]
 //!          train  --workload treelstm[,bilstm-tagger|all] [--store DIR]
 //!          serve  --workloads treelstm,bilstm-tagger [--workers 4] [--store DIR]
+//!                 [--dispatch fixed|adaptive|learned] [--slo-p99-ms F]
+//!                 [--traffic closed|poisson|bursty --rate R --duration-s S]
 //!          inspect --workload treelstm           # graph stats + schedules
 //! ```
 
@@ -15,7 +17,9 @@ use ed_batch::batching::fsm::{Encoding, FsmPolicy};
 use ed_batch::batching::oracle::SufficientConditionPolicy;
 use ed_batch::batching::run_policy;
 use ed_batch::benchsuite::{self, BenchOpts};
+use ed_batch::coordinator::dispatch::DispatchMode;
 use ed_batch::coordinator::server::{Server, ServerConfig};
+use ed_batch::coordinator::traffic::{drive_open_loop, TrafficProfile};
 use ed_batch::coordinator::SystemMode;
 use ed_batch::memory::graph_plan::GraphMemoryPlan;
 use ed_batch::memory::MemoryMode;
@@ -47,12 +51,16 @@ fn run(args: &Args) -> Result<()> {
             println!(
                 "ed-batch — FSM-batched dynamic-DNN serving (ICML'23 reproduction)\n\n\
                  usage:\n  \
-                 ed-batch bench <fig6|fig8|fig9|table2|table3|table4|table5|serving|all> [--fast] [--hidden N]\n  \
+                 ed-batch bench <fig6|fig8|fig9|table2|table3|table4|table5|serving|serving-slo|all> [--fast] [--hidden N]\n  \
                  ed-batch train --workload <name[,name...]|all> [--encoding base|max|sort]\n             \
                  [--store DIR] [--hidden N] [--max-iters N] [--force]\n  \
                  ed-batch serve --workloads <name[,name...]> [--mode ed-batch|cavs-dynet|vanilla-dynet]\n             \
                  [--workers N] [--store DIR] [--no-train-on-miss] [--require-store-hits]\n             \
                  [--hidden N] [--requests N] [--max-batch N] [--no-pjrt]\n             \
+                 [--dispatch fixed|adaptive|learned  (batch-size/max-wait rule per dispatch)]\n             \
+                 [--slo-p99-ms F  (p99 latency target for adaptive/learned dispatch + violation accounting)]\n             \
+                 [--traffic closed|poisson|bursty --rate R --duration-s S  (open-loop load generation;\n              \
+                 volume = rate x duration per workload — --requests/--clients are closed-loop only)]\n             \
                  [--distinct N  (replay a pool of N instance topologies per workload)]\n             \
                  [--require-compose  (fail unless steady state composed every mini-batch)]\n  \
                  ed-batch inspect --workload <name> [--instances N]\n\n\
@@ -94,6 +102,11 @@ fn bench(args: &Args) -> Result<()> {
             "table5" => benchsuite::table5::run(&opts).map(|_| ()),
             "serving" => {
                 benchsuite::serving::run(&opts);
+                benchsuite::serving::run_slo(&opts);
+                Ok(())
+            }
+            "serving-slo" => {
+                benchsuite::serving::run_slo(&opts);
                 Ok(())
             }
             other => Err(anyhow!("unknown bench target '{other}'")),
@@ -203,6 +216,12 @@ fn serve(args: &Args) -> Result<()> {
     };
     let requests = args.usize("requests", 256);
     let workers = args.usize("workers", 2);
+    let dispatch = DispatchMode::from_name(args.get_or("dispatch", "fixed"))
+        .ok_or_else(|| anyhow!("bad dispatch mode (fixed|adaptive|learned)"))?;
+    let slo_p99 = match args.f64("slo-p99-ms", 0.0) {
+        ms if ms > 0.0 => Some(std::time::Duration::from_secs_f64(ms * 1e-3)),
+        _ => None,
+    };
     let config = ServerConfig {
         workloads: kinds.clone(),
         hidden,
@@ -224,50 +243,98 @@ fn serve(args: &Args) -> Result<()> {
         encoding: Encoding::from_name(args.get_or("encoding", "sort"))
             .ok_or_else(|| anyhow!("bad encoding"))?,
         seed: args.u64("seed", 7),
+        dispatch,
+        slo_p99,
+        scheduler: None, // Learned resolves from the store (or trains at boot)
     };
     println!(
-        "serving {} workload(s) [{}] (mode={}, hidden={hidden}, workers={workers}, pjrt={}, store={})",
+        "serving {} workload(s) [{}] (mode={}, dispatch={}, hidden={hidden}, workers={workers}, pjrt={}, store={})",
         kinds.len(),
         kinds.iter().map(|k| k.name()).collect::<Vec<_>>().join(","),
         mode.name(),
+        dispatch.name(),
         config.artifacts_dir.is_some(),
         config.store_dir.as_deref().unwrap_or("-"),
     );
     let server = Server::start(config)?;
 
-    // load generation: N clients per workload kind, each a thread. With
-    // --distinct D, each workload replays a fixed pool of D instance
+    // load generation. Two regimes:
+    //  * closed loop (default): N client threads per workload, each waits
+    //    for its response before submitting again — self-throttling;
+    //  * open loop (--traffic poisson|bursty --rate R --duration-s S):
+    //    requests are submitted at pre-sampled arrival instants whether or
+    //    not earlier ones finished — realistic offered load for the
+    //    adaptive dispatch path.
+    // With --distinct D, each workload replays a fixed pool of D instance
     // topologies (steady-state production traffic: request shapes repeat),
     // which lets the compositional plan cache reach a 100% hit rate after
     // warmup; without it every request is a fresh random topology.
     let distinct = args.usize("distinct", 0);
-    let clients_per_kind = args.usize("clients", 2).max(1);
-    let per_client = (requests / (kinds.len() * clients_per_kind)).max(1);
-    let mut handles = Vec::new();
-    for (i, &kind) in kinds.iter().enumerate() {
-        let pool = std::sync::Arc::new(
-            Workload::new(kind, hidden).gen_pool(distinct, args.u64("seed", 7) + i as u64),
-        );
-        for c in 0..clients_per_kind {
-            let client = server.client(kind);
-            let pool = pool.clone();
-            let seed = args.u64("seed", 7) + (i * clients_per_kind + c) as u64;
-            handles.push(std::thread::spawn(move || {
-                let w = Workload::new(kind, hidden);
-                let mut rng = Rng::new(seed);
-                for r in 0..per_client {
-                    let g = if pool.is_empty() {
-                        w.gen_instance(&mut rng)
-                    } else {
-                        pool[(c + r) % pool.len()].clone()
-                    };
-                    client.infer(g).expect("infer");
-                }
-            }));
+    let traffic = match args.get_or("traffic", "closed") {
+        "closed" => TrafficProfile::ClosedLoop,
+        "poisson" => TrafficProfile::poisson(args.f64("rate", 200.0)),
+        "bursty" => TrafficProfile::bursty(args.f64("rate", 200.0)),
+        t => return Err(anyhow!("unknown traffic profile '{t}'")),
+    };
+    if traffic == TrafficProfile::ClosedLoop {
+        let clients_per_kind = args.usize("clients", 2).max(1);
+        let per_client = (requests / (kinds.len() * clients_per_kind)).max(1);
+        let mut handles = Vec::new();
+        for (i, &kind) in kinds.iter().enumerate() {
+            let pool = std::sync::Arc::new(
+                Workload::new(kind, hidden).gen_pool(distinct, args.u64("seed", 7) + i as u64),
+            );
+            for c in 0..clients_per_kind {
+                let client = server.client(kind);
+                let pool = pool.clone();
+                let seed = args.u64("seed", 7) + (i * clients_per_kind + c) as u64;
+                handles.push(std::thread::spawn(move || {
+                    let w = Workload::new(kind, hidden);
+                    let mut rng = Rng::new(seed);
+                    for r in 0..per_client {
+                        let g = if pool.is_empty() {
+                            w.gen_instance(&mut rng)
+                        } else {
+                            pool[(c + r) % pool.len()].clone()
+                        };
+                        client.infer(g).expect("infer");
+                    }
+                }));
+            }
         }
-    }
-    for h in handles {
-        h.join().map_err(|_| anyhow!("client panicked"))?;
+        for h in handles {
+            h.join().map_err(|_| anyhow!("client panicked"))?;
+        }
+    } else {
+        if args.get("requests").is_some() || args.get("clients").is_some() {
+            eprintln!(
+                "note: --requests/--clients apply to closed-loop traffic only; \
+                 open-loop volume is --rate x --duration-s per workload"
+            );
+        }
+        let duration_s = args.f64("duration-s", 3.0);
+        let pool_size = if distinct > 0 { distinct } else { 8 };
+        let mut handles = Vec::new();
+        for (i, &kind) in kinds.iter().enumerate() {
+            let pool = std::sync::Arc::new(
+                Workload::new(kind, hidden).gen_pool(pool_size, args.u64("seed", 7) + i as u64),
+            );
+            let mut rng = Rng::new(args.u64("seed", 7) ^ (0xA1 + i as u64));
+            let arrivals = traffic.arrivals(duration_s, &mut rng);
+            handles.push(drive_open_loop(server.client(kind), pool, arrivals));
+        }
+        let mut gen_lag_max_s = 0.0f64;
+        for h in handles {
+            let stats = h.join().map_err(|_| anyhow!("open-loop driver panicked"))?;
+            gen_lag_max_s = gen_lag_max_s.max(stats.gen_lag_max_s);
+        }
+        println!(
+            "open-loop {} traffic: {:.0} req/s per workload for {:.1}s (max generator lag {:.2}ms)",
+            traffic.name(),
+            traffic.mean_rate(),
+            duration_s,
+            gen_lag_max_s * 1e3,
+        );
     }
 
     let snap = server.metrics.snapshot();
@@ -300,6 +367,17 @@ fn serve(args: &Args) -> Result<()> {
         snap.queue_depth_mean,
         snap.queue_depth_max,
     );
+    if snap.slo_target_s > 0.0 {
+        println!(
+            "slo: p99 target {:.1}ms -> observed p99 {:.2}ms | {} violations / {} requests ({:.1}%) | mean batch occupancy {:.2}",
+            snap.slo_target_s * 1e3,
+            snap.latency_p99_s * 1e3,
+            snap.slo_violations,
+            snap.requests,
+            snap.slo_violation_rate() * 100.0,
+            snap.mean_batch_occupancy(),
+        );
+    }
     println!(
         "memory: memcpy {:.2} MB ({:.1} kB/req), copies avoided {:.2} MB ({:.1} kB/req, {:.0}% of baseline)",
         snap.memcpy_elems as f64 * 4.0 / 1e6,

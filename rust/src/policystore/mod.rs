@@ -12,17 +12,29 @@
 //! in-request training**; topologies with no stored policy fall back to the
 //! agenda baseline (DyNet's on-the-fly batching) and are counted.
 //!
+//! The store holds **two artifact kinds**, version-gated independently:
+//!
+//! * `policy` — the graph-time batching FSM (Q-table + state keys),
+//! * `scheduler` — the serving-time dispatch policy
+//!   ([`crate::coordinator::dispatch::SchedulerPolicy`]): the tabular-Q
+//!   batch-size controller trained on the queue simulator
+//!   ([`crate::rl::dispatch_sim`]). Same fingerprint keying, its own
+//!   format version, and a save → load → **identical dispatch
+//!   decisions** determinism contract (asserted below).
+//!
 //! On-disk layout:
 //!
 //! ```text
 //! store/
-//!   index.json                       # {"version": 1} — format gate
-//!   policy_<workload>_<encoding>.json  # one self-describing artifact each
+//!   index.json                         # {"version":1, "scheduler_version":1}
+//!   policy_<workload>_<encoding>.json  # graph-time batching FSMs
+//!   scheduler_<workload>.json          # serving-time dispatch policies
 //! ```
 //!
-//! Artifacts carry their own version + fingerprint, so the index is purely
-//! a format gate; discovery scans the directory. Everything is encoded with
-//! the repo's own [`crate::util::json`] codec — no external deps.
+//! Artifacts carry their own kind + version + fingerprint, so the index is
+//! purely a format gate; discovery scans the directory. Everything is
+//! encoded with the repo's own [`crate::util::json`] codec — no external
+//! deps.
 
 use std::path::{Path, PathBuf};
 
@@ -30,13 +42,19 @@ use anyhow::{anyhow, bail, Result};
 use rustc_hash::FxHashMap;
 
 use crate::batching::fsm::{Encoding, FsmPolicy};
+use crate::coordinator::dispatch::SchedulerPolicy;
 use crate::memory::graph_plan::registry_fingerprint;
+use crate::rl::dispatch_sim::{train_scheduler, SchedTrainStats, SimConfig};
 use crate::rl::{train, TrainConfig, TrainStats};
 use crate::util::json::Json;
 use crate::workloads::{Workload, WorkloadKind};
 
-/// On-disk format version shared by the index and every artifact.
+/// On-disk format version shared by the index and every `policy` artifact.
 pub const STORE_VERSION: u64 = 1;
+
+/// On-disk format version of `scheduler` artifacts (independent gate: the
+/// scheduler state/action space can evolve without invalidating FSMs).
+pub const SCHEDULER_VERSION: u64 = 1;
 
 /// Training provenance persisted with each policy (a Table-3-style row).
 #[derive(Clone, Debug, PartialEq)]
@@ -177,13 +195,164 @@ impl PolicyArtifact {
     }
 }
 
+/// Training provenance persisted with each scheduler policy.
+#[derive(Clone, Debug, PartialEq)]
+pub struct SchedTrainMeta {
+    pub episodes: usize,
+    pub decisions: usize,
+    pub wall_time_s: f64,
+    pub eval_violation_rate: f64,
+    pub eval_mean_sojourn_ratio: f64,
+    pub seed: u64,
+}
+
+impl SchedTrainMeta {
+    pub fn from_stats(stats: &SchedTrainStats) -> SchedTrainMeta {
+        SchedTrainMeta {
+            episodes: stats.episodes,
+            decisions: stats.decisions,
+            wall_time_s: stats.wall_time_s,
+            eval_violation_rate: stats.eval_violation_rate,
+            eval_mean_sojourn_ratio: stats.eval_mean_sojourn_ratio,
+            seed: stats.seed,
+        }
+    }
+
+    fn to_json(&self) -> Json {
+        Json::obj(vec![
+            ("episodes", Json::from(self.episodes)),
+            ("decisions", Json::from(self.decisions)),
+            ("wall_time_s", Json::from(self.wall_time_s)),
+            ("eval_violation_rate", Json::from(self.eval_violation_rate)),
+            (
+                "eval_mean_sojourn_ratio",
+                Json::from(self.eval_mean_sojourn_ratio),
+            ),
+            // u64 seeds don't fit an f64 mantissa losslessly: keep as text
+            ("seed", Json::from(format!("{}", self.seed))),
+        ])
+    }
+
+    fn from_json(j: &Json) -> Result<SchedTrainMeta> {
+        let num = |k: &str| {
+            j.get(k)
+                .and_then(|v| v.as_u64())
+                .ok_or_else(|| anyhow!("training.{k}"))
+        };
+        let f = |k: &str| {
+            j.get(k)
+                .and_then(|v| v.as_f64())
+                .ok_or_else(|| anyhow!("training.{k}"))
+        };
+        Ok(SchedTrainMeta {
+            episodes: num("episodes")? as usize,
+            decisions: num("decisions")? as usize,
+            wall_time_s: f("wall_time_s")?,
+            eval_violation_rate: f("eval_violation_rate")?,
+            eval_mean_sojourn_ratio: f("eval_mean_sojourn_ratio")?,
+            seed: j
+                .get("seed")
+                .and_then(|v| v.as_str())
+                .and_then(|s| s.parse().ok())
+                .ok_or_else(|| anyhow!("training.seed"))?,
+        })
+    }
+}
+
+/// One persisted serving-time dispatch policy — the `scheduler` artifact
+/// kind. Keyed, like FSM policies, by the workload's op-type-space
+/// fingerprint; additionally records the SLO target and the service-time
+/// scale the simulator was calibrated to (provenance — the policy itself
+/// conditions on ratios and transfers across absolute speeds).
+#[derive(Clone, Debug)]
+pub struct SchedulerArtifact {
+    pub workload: WorkloadKind,
+    pub fingerprint: u64,
+    /// p99 target (seconds) the policy was trained against
+    pub slo_p99_s: f64,
+    /// simulator per-instance service time (seconds) at training time
+    pub sim_per_inst_s: f64,
+    pub policy: SchedulerPolicy,
+    pub training: SchedTrainMeta,
+}
+
+impl SchedulerArtifact {
+    /// Canonical artifact file name inside a store directory.
+    pub fn file_name(workload: WorkloadKind) -> String {
+        format!("scheduler_{}.json", workload.name())
+    }
+
+    pub fn to_json(&self) -> Json {
+        Json::obj(vec![
+            // the kind tag is what keeps the two artifact families from
+            // ever being decoded as each other
+            ("kind", Json::from("scheduler")),
+            ("version", Json::from(SCHEDULER_VERSION)),
+            ("workload", Json::from(self.workload.name())),
+            ("fingerprint", Json::from(format!("{:016x}", self.fingerprint))),
+            ("slo_p99_s", Json::from(self.slo_p99_s)),
+            ("sim_per_inst_s", Json::from(self.sim_per_inst_s)),
+            ("policy", self.policy.to_json()),
+            ("training", self.training.to_json()),
+        ])
+    }
+
+    pub fn from_json(j: &Json) -> Result<SchedulerArtifact> {
+        match j.get("kind").and_then(|v| v.as_str()) {
+            Some("scheduler") => {}
+            other => bail!("artifact kind {other:?}, expected \"scheduler\""),
+        }
+        let version = j
+            .get("version")
+            .and_then(|v| v.as_u64())
+            .ok_or_else(|| anyhow!("scheduler artifact missing version"))?;
+        if version != SCHEDULER_VERSION {
+            bail!("scheduler artifact version {version}, this build reads {SCHEDULER_VERSION}");
+        }
+        let workload = j
+            .get("workload")
+            .and_then(|v| v.as_str())
+            .and_then(WorkloadKind::from_name)
+            .ok_or_else(|| anyhow!("bad workload name"))?;
+        let fingerprint = j
+            .get("fingerprint")
+            .and_then(|v| v.as_str())
+            .and_then(|s| u64::from_str_radix(s, 16).ok())
+            .ok_or_else(|| anyhow!("bad fingerprint"))?;
+        let slo_p99_s = j
+            .get("slo_p99_s")
+            .and_then(|v| v.as_f64())
+            .ok_or_else(|| anyhow!("missing slo_p99_s"))?;
+        let sim_per_inst_s = j
+            .get("sim_per_inst_s")
+            .and_then(|v| v.as_f64())
+            .ok_or_else(|| anyhow!("missing sim_per_inst_s"))?;
+        let policy = SchedulerPolicy::from_json(
+            j.get("policy").ok_or_else(|| anyhow!("missing policy"))?,
+        )
+        .map_err(|e| anyhow!("scheduler policy decode: {e}"))?;
+        let training = SchedTrainMeta::from_json(
+            j.get("training").ok_or_else(|| anyhow!("missing training"))?,
+        )?;
+        Ok(SchedulerArtifact {
+            workload,
+            fingerprint,
+            slo_p99_s,
+            sim_per_inst_s,
+            policy,
+            training,
+        })
+    }
+}
+
 /// The store: an eagerly-loaded map from (fingerprint, encoding) to
-/// artifact, backed by one directory. Serving never touches the filesystem
-/// per request — only [`PolicyStore::open`] and [`PolicyStore::insert`] do
-/// I/O.
+/// artifact — plus the scheduler-kind map keyed by fingerprint alone —
+/// backed by one directory. Serving never touches the filesystem per
+/// request — only [`PolicyStore::open`] and the insert paths do I/O.
 pub struct PolicyStore {
     dir: PathBuf,
     entries: FxHashMap<(u64, Encoding), PolicyArtifact>,
+    sched_entries: FxHashMap<u64, SchedulerArtifact>,
     /// artifact files present on disk but unreadable at open (warned once)
     pub skipped: usize,
 }
@@ -199,6 +368,7 @@ impl PolicyStore {
         let mut store = PolicyStore {
             dir: dir.clone(),
             entries: FxHashMap::default(),
+            sched_entries: FxHashMap::default(),
             skipped: 0,
         };
         let index = dir.join("index.json");
@@ -212,26 +382,53 @@ impl PolicyStore {
                     dir.display()
                 );
             }
+            // scheduler-kind gate: absent (pre-scheduler store) is fine,
+            // a mismatching version is a hard error
+            if let Some(sv) = j.get("scheduler_version").and_then(|v| v.as_u64()) {
+                if sv != SCHEDULER_VERSION {
+                    bail!(
+                        "policy store {} has scheduler format version {sv}; \
+                         this build reads {SCHEDULER_VERSION}",
+                        dir.display()
+                    );
+                }
+            }
         }
         let Ok(read) = std::fs::read_dir(&dir) else {
             return Ok(store); // no directory yet: empty store
         };
         for entry in read.flatten() {
             let name = entry.file_name().to_string_lossy().into_owned();
-            if !name.starts_with("policy_") || !name.ends_with(".json") {
+            if !name.ends_with(".json") {
                 continue;
             }
-            let parsed = std::fs::read_to_string(entry.path())
-                .map_err(|e| anyhow!("{e}"))
-                .and_then(|text| Json::parse(&text).map_err(|e| anyhow!("{e}")))
-                .and_then(|j| PolicyArtifact::from_json(&j));
-            match parsed {
-                Ok(a) => {
-                    store.entries.insert((a.fingerprint, a.encoding), a);
+            if name.starts_with("policy_") {
+                let parsed = std::fs::read_to_string(entry.path())
+                    .map_err(|e| anyhow!("{e}"))
+                    .and_then(|text| Json::parse(&text).map_err(|e| anyhow!("{e}")))
+                    .and_then(|j| PolicyArtifact::from_json(&j));
+                match parsed {
+                    Ok(a) => {
+                        store.entries.insert((a.fingerprint, a.encoding), a);
+                    }
+                    Err(e) => {
+                        eprintln!("policystore: skipping {name}: {e}");
+                        store.skipped += 1;
+                    }
                 }
-                Err(e) => {
-                    eprintln!("policystore: skipping {name}: {e}");
-                    store.skipped += 1;
+            } else if name.starts_with("scheduler_") {
+                let parsed = std::fs::read_to_string(entry.path())
+                    .map_err(|e| anyhow!("{e}"))
+                    .and_then(|text| Json::parse(&text).map_err(|e| anyhow!("{e}")))
+                    .and_then(|j| SchedulerArtifact::from_json(&j));
+                match parsed {
+                    Ok(a) => {
+                        store.sched_entries.insert(a.fingerprint, a);
+                    }
+                    Err(e) => {
+                        eprintln!("policystore: skipping {name}: {e}");
+                        store.skipped += 1;
+                    }
                 }
             }
         }
@@ -290,17 +487,25 @@ impl PolicyStore {
         self.lookup(registry_fingerprint(&w.registry), encoding)
     }
 
+    /// Write (or upgrade) the index: the whole-store format gate plus the
+    /// scheduler-kind gate.
+    fn ensure_index(&self) -> Result<()> {
+        std::fs::create_dir_all(&self.dir)?;
+        let index = self.dir.join("index.json");
+        let doc = Json::obj(vec![
+            ("version", Json::from(STORE_VERSION)),
+            ("scheduler_version", Json::from(SCHEDULER_VERSION)),
+        ]);
+        // rewrite unconditionally: idempotent, and upgrades a
+        // pre-scheduler index in place (both gates stay satisfied)
+        std::fs::write(&index, doc.to_string())?;
+        Ok(())
+    }
+
     /// Persist an artifact (write the file, ensure the index), replacing
     /// any existing entry under the same key.
     pub fn insert(&mut self, artifact: PolicyArtifact) -> Result<()> {
-        std::fs::create_dir_all(&self.dir)?;
-        let index = self.dir.join("index.json");
-        if !index.exists() {
-            std::fs::write(
-                &index,
-                Json::obj(vec![("version", Json::from(STORE_VERSION))]).to_string(),
-            )?;
-        }
+        self.ensure_index()?;
         let path = self
             .dir
             .join(PolicyArtifact::file_name(artifact.workload, artifact.encoding));
@@ -308,6 +513,57 @@ impl PolicyStore {
         self.entries
             .insert((artifact.fingerprint, artifact.encoding), artifact);
         Ok(())
+    }
+
+    /// Look a scheduler policy up by op-type-space fingerprint.
+    pub fn lookup_scheduler(&self, fingerprint: u64) -> Option<&SchedulerArtifact> {
+        self.sched_entries.get(&fingerprint)
+    }
+
+    /// Convenience: the scheduler policy matching a workload's registry.
+    pub fn lookup_scheduler_workload(&self, w: &Workload) -> Option<&SchedulerArtifact> {
+        self.lookup_scheduler(registry_fingerprint(&w.registry))
+    }
+
+    pub fn num_schedulers(&self) -> usize {
+        self.sched_entries.len()
+    }
+
+    pub fn schedulers(&self) -> impl Iterator<Item = &SchedulerArtifact> {
+        self.sched_entries.values()
+    }
+
+    /// Persist a scheduler artifact under its own kind, replacing any
+    /// existing entry for the same fingerprint.
+    pub fn insert_scheduler(&mut self, artifact: SchedulerArtifact) -> Result<()> {
+        self.ensure_index()?;
+        let path = self.dir.join(SchedulerArtifact::file_name(artifact.workload));
+        std::fs::write(&path, artifact.to_json().to_string())?;
+        self.sched_entries.insert(artifact.fingerprint, artifact);
+        Ok(())
+    }
+
+    /// Offline scheduler training entry point: train a dispatch policy
+    /// for `workload` on the queue simulator (calibrated to the
+    /// workload's plan-cost service scale via `sim_cfg.per_inst_s`) and
+    /// persist it under the `scheduler` kind.
+    pub fn train_scheduler_into(
+        &mut self,
+        workload: &Workload,
+        sim_cfg: &SimConfig,
+        seed: u64,
+    ) -> Result<(SchedulerArtifact, SchedTrainStats)> {
+        let (policy, stats) = train_scheduler(sim_cfg, seed);
+        let artifact = SchedulerArtifact {
+            workload: workload.kind,
+            fingerprint: registry_fingerprint(&workload.registry),
+            slo_p99_s: sim_cfg.slo.p99_target_s,
+            sim_per_inst_s: sim_cfg.per_inst_s,
+            policy,
+            training: SchedTrainMeta::from_stats(&stats),
+        };
+        self.insert_scheduler(artifact.clone())?;
+        Ok((artifact, stats))
     }
 
     /// Offline training entry point (the CLI `train` subcommand and the
@@ -459,6 +715,115 @@ mod tests {
         std::fs::write(dir.join("index.json"), r#"{"version":99}"#).unwrap();
         let err = PolicyStore::open(&dir).unwrap_err();
         assert!(err.to_string().contains("version 99"), "{err}");
+        let _ = std::fs::remove_dir_all(&dir);
+    }
+
+    #[test]
+    fn scheduler_artifact_roundtrip_and_kind_gate() {
+        let mut policy = SchedulerPolicy::new();
+        policy.set_q(3, 2, 0.1 + 0.2); // no short decimal form
+        policy.set_q(44, 5, -1.75e-9);
+        let a = SchedulerArtifact {
+            workload: WorkloadKind::TreeLstm,
+            fingerprint: 0xFEED_FACE_CAFE_0001,
+            slo_p99_s: 0.01,
+            sim_per_inst_s: 0.0005,
+            policy,
+            training: SchedTrainMeta {
+                episodes: 24,
+                decisions: 3600,
+                wall_time_s: 0.05,
+                eval_violation_rate: 0.01,
+                eval_mean_sojourn_ratio: 0.4,
+                seed: u64::MAX - 7,
+            },
+        };
+        let j = Json::parse(&a.to_json().to_string()).unwrap();
+        let b = SchedulerArtifact::from_json(&j).unwrap();
+        assert_eq!(b.workload, a.workload);
+        assert_eq!(b.fingerprint, a.fingerprint);
+        assert_eq!(b.slo_p99_s, a.slo_p99_s);
+        assert_eq!(b.training, a.training);
+        assert_eq!(b.policy, a.policy, "Q-table must round-trip bit-exactly");
+        // a policy-kind artifact must never decode as a scheduler
+        let policy_json = Json::parse(r#"{"version":1,"workload":"treelstm"}"#).unwrap();
+        assert!(SchedulerArtifact::from_json(&policy_json).is_err());
+    }
+
+    #[test]
+    fn scheduler_version_gate_rejects_future_stores() {
+        let dir = tmp_dir("sched_version");
+        let _ = std::fs::remove_dir_all(&dir);
+        std::fs::create_dir_all(&dir).unwrap();
+        std::fs::write(
+            dir.join("index.json"),
+            r#"{"version":1,"scheduler_version":99}"#,
+        )
+        .unwrap();
+        let err = PolicyStore::open(&dir).unwrap_err();
+        assert!(err.to_string().contains("scheduler format version 99"), "{err}");
+        // a pre-scheduler index (no scheduler_version key) still opens
+        std::fs::write(dir.join("index.json"), r#"{"version":1}"#).unwrap();
+        assert!(PolicyStore::open(&dir).is_ok());
+        let _ = std::fs::remove_dir_all(&dir);
+    }
+
+    #[test]
+    fn scheduler_roundtrip_replays_identical_dispatch_decisions() {
+        // the acceptance-criteria determinism contract for the scheduler
+        // kind: save -> load -> bit-identical dispatch decisions on a
+        // replayed observation trace
+        use crate::coordinator::dispatch::{DispatchController, DispatchMode, SloConfig};
+        use crate::rl::dispatch_sim::SimConfig;
+        use std::time::Duration;
+
+        let dir = tmp_dir("sched_determinism");
+        let _ = std::fs::remove_dir_all(&dir);
+        let w = Workload::new(WorkloadKind::TreeLstm, 32);
+        let mut store = PolicyStore::open(&dir).unwrap();
+        let (trained, stats) = store
+            .train_scheduler_into(&w, &SimConfig::quick(), 17)
+            .unwrap();
+        assert!(stats.decisions > 0);
+        assert!(store.lookup_scheduler_workload(&w).is_some());
+
+        let reopened = PolicyStore::open(&dir).unwrap();
+        assert_eq!(reopened.num_schedulers(), 1);
+        let loaded = reopened.lookup_scheduler_workload(&w).unwrap();
+        assert_eq!(loaded.policy, trained.policy);
+
+        let slo = SloConfig::with_target(trained.slo_p99_s);
+        let mk = |policy: SchedulerPolicy| {
+            DispatchController::new(
+                DispatchMode::Learned,
+                slo,
+                32,
+                Duration::from_millis(25),
+                Some(policy),
+            )
+        };
+        let mut a = mk(trained.policy.clone());
+        let mut b = mk(loaded.policy.clone());
+        // replayed trace: a deterministic mix of load levels, latency
+        // spikes, and queue depths
+        let mut rng = Rng::new(4242);
+        for step in 0..400 {
+            let gap = 0.0002 + rng.f64() * 0.01;
+            let lat = if step % 37 == 0 {
+                0.03 + rng.f64() * 0.02
+            } else {
+                0.001 + rng.f64() * 0.004
+            };
+            let batch = 1 + rng.usize_below(8);
+            a.observe_arrival_gap(gap);
+            b.observe_arrival_gap(gap);
+            a.observe_latency(lat);
+            b.observe_latency(lat);
+            a.observe_batch(batch, 0.0004 * batch as f64);
+            b.observe_batch(batch, 0.0004 * batch as f64);
+            let q = rng.usize_below(40);
+            assert_eq!(a.decide(q), b.decide(q), "step {step}");
+        }
         let _ = std::fs::remove_dir_all(&dir);
     }
 

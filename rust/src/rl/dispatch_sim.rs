@@ -1,0 +1,379 @@
+//! Offline Q-learning of the serving-time dispatch policy on a
+//! deterministic queue simulator.
+//!
+//! The graph-time FSM (trained in [`crate::rl`]) decides *which op type
+//! to batch next inside a mini-batch*; the scheduler policy trained here
+//! decides *how many requests a mini-batch should hold* given the queue
+//! state — the SMDP-style batch-size/wait-time decision of
+//! SMDP-Based Dynamic Batching (Xu et al., 2023) cast into the same
+//! tabular-Q mold as the rest of the repo. Training never touches the
+//! real server: a single-server queue is simulated event-by-event under
+//! the [`TrafficProfile`]s the bench replays (Poisson sweeps across
+//! utilization plus bursty ON/OFF episodes), with a linear service model
+//! `service(b) = overhead + b · per_instance`.
+//!
+//! Because the scheduler state ([`sched_state_id`]) is built from
+//! *ratios* — offered load (service/inter-arrival) and p99 relative to
+//! the SLO target — a policy trained on the simulator's abstract service
+//! scale transfers to real workloads whose absolute speeds differ; the
+//! per-instance scale is seeded from the workload's plan cost
+//! (`policystore::train_scheduler_into`) so the simulated utilizations
+//! bracket the real ones.
+//!
+//! Everything is driven by the repo RNG on a virtual f64 clock, so a
+//! (config, seed) pair reproduces training bit-for-bit — the property
+//! the policystore round-trip test (save → load → identical dispatch
+//! decisions on a replayed trace) rests on.
+
+use std::collections::VecDeque;
+use std::time::Instant;
+
+use crate::coordinator::dispatch::{
+    max_wait_s, sched_state_id, LatencyWindow, SchedulerPolicy, SloConfig, EWMA_ALPHA,
+    SCHED_ACTIONS,
+};
+use crate::coordinator::traffic::TrafficProfile;
+use crate::util::rng::Rng;
+
+/// Simulator + training hyperparameters.
+#[derive(Clone, Copy, Debug)]
+pub struct SimConfig {
+    pub slo: SloConfig,
+    /// per-instance service time of the simulated server (seconds)
+    pub per_inst_s: f64,
+    /// fixed per-dispatch overhead (kernel launch, compose, respond)
+    pub dispatch_overhead_s: f64,
+    pub max_batch: usize,
+    /// training episodes (each re-samples a traffic regime)
+    pub episodes: usize,
+    /// dispatch decisions simulated per episode
+    pub decisions_per_episode: usize,
+    pub lr: f64,
+    pub gamma: f64,
+    pub eps_init: f64,
+    pub eps_final: f64,
+}
+
+impl Default for SimConfig {
+    fn default() -> Self {
+        SimConfig {
+            slo: SloConfig::default(),
+            per_inst_s: 0.0005,
+            dispatch_overhead_s: 0.0002,
+            max_batch: 32,
+            episodes: 60,
+            decisions_per_episode: 300,
+            lr: 0.2,
+            gamma: 0.9,
+            eps_init: 0.4,
+            eps_final: 0.02,
+        }
+    }
+}
+
+impl SimConfig {
+    /// A shrunken budget for unit tests and boot-time training.
+    pub fn quick() -> SimConfig {
+        SimConfig {
+            episodes: 24,
+            decisions_per_episode: 150,
+            ..SimConfig::default()
+        }
+    }
+}
+
+/// Outcome of a scheduler training run (persisted as provenance).
+#[derive(Clone, Debug, PartialEq)]
+pub struct SchedTrainStats {
+    pub episodes: usize,
+    pub decisions: usize,
+    pub wall_time_s: f64,
+    /// greedy-policy SLO violation rate on the held-out eval episodes
+    pub eval_violation_rate: f64,
+    /// greedy-policy mean sojourn / SLO target on the eval episodes
+    pub eval_mean_sojourn_ratio: f64,
+    pub seed: u64,
+}
+
+/// The traffic regimes an episode cycles through: Poisson at several
+/// utilizations (including mild overload, where batching is mandatory)
+/// plus the bursty profile the bench gates on.
+fn episode_profile(cfg: &SimConfig, episode: usize) -> TrafficProfile {
+    // utilization = arrival rate × per-instance service time
+    const UTILS: [f64; 5] = [0.2, 0.5, 0.8, 1.1, 1.5];
+    let service_rate = 1.0 / cfg.per_inst_s;
+    if episode % 3 == 2 {
+        TrafficProfile::bursty(0.6 * service_rate)
+    } else {
+        let u = UTILS[(episode / 3) % UTILS.len()];
+        TrafficProfile::poisson(u * service_rate)
+    }
+}
+
+/// One simulated serving episode. When `policy_mut` is `Some`, actions
+/// are ε-greedy and Q-values are updated in place (training); when
+/// `None`, `policy` is followed greedily and only metrics are collected
+/// (evaluation / trace replay).
+struct Episode<'a> {
+    cfg: &'a SimConfig,
+    profile: TrafficProfile,
+    /// virtual clock (seconds since episode start)
+    t: f64,
+    next_arrival: f64,
+    queue: VecDeque<f64>,
+    ia_ewma: Option<f64>,
+    last_arrival: Option<f64>,
+    /// the controller's own latency-window estimator (shared type, so
+    /// the simulated state matches the served state exactly)
+    window: LatencyWindow,
+    p99: f64,
+    // episode-level tallies
+    completed: usize,
+    violations: usize,
+    sojourn_sum: f64,
+}
+
+impl<'a> Episode<'a> {
+    fn new(cfg: &'a SimConfig, profile: TrafficProfile, rng: &mut Rng) -> Episode<'a> {
+        let first = profile.sample_gap(0.0, rng);
+        Episode {
+            cfg,
+            profile,
+            t: 0.0,
+            next_arrival: first,
+            queue: VecDeque::new(),
+            ia_ewma: None,
+            last_arrival: None,
+            window: LatencyWindow::new(),
+            p99: 0.0,
+            completed: 0,
+            violations: 0,
+            sojourn_sum: 0.0,
+        }
+    }
+
+    fn enqueue_next_arrival(&mut self, rng: &mut Rng) {
+        let at = self.next_arrival;
+        self.queue.push_back(at);
+        if let Some(prev) = self.last_arrival {
+            let gap = at - prev;
+            self.ia_ewma = Some(match self.ia_ewma {
+                None => gap,
+                Some(e) => e + EWMA_ALPHA * (gap - e),
+            });
+        }
+        self.last_arrival = Some(at);
+        self.next_arrival = at + self.profile.sample_gap(at, rng);
+    }
+
+    fn state(&self) -> usize {
+        sched_state_id(
+            self.queue.len(),
+            self.ia_ewma,
+            self.cfg.per_inst_s,
+            self.p99,
+            self.cfg.slo.p99_target_s,
+        )
+    }
+
+    /// Simulate one dispatch under batch-size action `action`; returns
+    /// the reward. Mirrors the server rule exactly: drain when the queue
+    /// reaches the target or the oldest request has waited `max_wait`.
+    fn step(&mut self, action: usize, rng: &mut Rng) -> f64 {
+        let cfg = self.cfg;
+        // ensure at least one queued request (idle-advance the clock)
+        if self.queue.is_empty() {
+            self.t = self.t.max(self.next_arrival);
+            self.enqueue_next_arrival(rng);
+        }
+        let target = SCHED_ACTIONS[action].clamp(1, cfg.max_batch);
+        // the exact max-wait rule the live controller applies
+        let max_wait = max_wait_s(&cfg.slo, cfg.per_inst_s, target);
+        let deadline = self.queue.front().unwrap() + max_wait;
+        // accumulate until the target is met or the deadline passes
+        while self.queue.len() < target && self.next_arrival <= deadline.max(self.t) {
+            self.enqueue_next_arrival(rng);
+        }
+        let dispatch_at = if self.queue.len() >= target {
+            // reached the target: dispatch as soon as the server is free
+            self.t.max(*self.queue.iter().nth(target - 1).unwrap())
+        } else {
+            self.t.max(deadline)
+        };
+        // any arrival up to the dispatch instant joins the queue
+        while self.next_arrival <= dispatch_at {
+            self.enqueue_next_arrival(rng);
+        }
+        let b = self.queue.len().min(target);
+        let service = cfg.dispatch_overhead_s + cfg.per_inst_s * b as f64;
+        let done_at = dispatch_at + service;
+        let mut sojourn_sum = 0.0;
+        let mut violations = 0usize;
+        for _ in 0..b {
+            let submitted = self.queue.pop_front().unwrap();
+            let sojourn = done_at - submitted;
+            sojourn_sum += sojourn;
+            if sojourn > cfg.slo.p99_target_s {
+                violations += 1;
+            }
+            self.window.record(sojourn);
+        }
+        self.t = done_at;
+        self.p99 = self.window.p99();
+        self.completed += b;
+        self.violations += violations;
+        self.sojourn_sum += sojourn_sum;
+        let mean_sojourn = sojourn_sum / b as f64;
+        // reward: stay under the target (dominant terms), with a small
+        // occupancy bonus so equal-latency choices prefer batching
+        -(mean_sojourn / cfg.slo.p99_target_s) - 2.0 * (violations as f64 / b as f64)
+            + 0.1 * ((b - 1) as f64 / cfg.max_batch as f64)
+    }
+}
+
+/// Train a [`SchedulerPolicy`] on the simulator. Deterministic in
+/// (`cfg`, `seed`).
+pub fn train_scheduler(cfg: &SimConfig, seed: u64) -> (SchedulerPolicy, SchedTrainStats) {
+    let t0 = Instant::now();
+    let mut rng = Rng::new(seed);
+    let mut policy = SchedulerPolicy::new();
+    let mut decisions = 0usize;
+    for ep in 0..cfg.episodes {
+        let eps = cfg.eps_init
+            + (cfg.eps_final - cfg.eps_init) * (ep as f64 / cfg.episodes.max(1) as f64);
+        let mut sim = Episode::new(cfg, episode_profile(cfg, ep), &mut rng);
+        for _ in 0..cfg.decisions_per_episode {
+            // materialize a queued request before reading the state, so
+            // the state the action is conditioned on is the dispatch state
+            if sim.queue.is_empty() {
+                sim.t = sim.t.max(sim.next_arrival);
+                sim.enqueue_next_arrival(&mut rng);
+            }
+            let s = sim.state();
+            let a = if rng.chance(eps) {
+                rng.usize_below(SCHED_ACTIONS.len())
+            } else {
+                policy.best_action(s)
+            };
+            let r = sim.step(a, &mut rng);
+            let s2 = sim.state();
+            let best_next = (0..SCHED_ACTIONS.len())
+                .map(|a2| policy.q_value(s2, a2))
+                .fold(f64::NEG_INFINITY, f64::max);
+            let old = policy.q_value(s, a);
+            policy.set_q(s, a, old + cfg.lr * (r + cfg.gamma * best_next - old));
+            decisions += 1;
+        }
+    }
+    let (eval_violation_rate, eval_mean_sojourn_ratio) = evaluate(&policy, cfg, seed ^ 0x5EED);
+    let stats = SchedTrainStats {
+        episodes: cfg.episodes,
+        decisions,
+        wall_time_s: t0.elapsed().as_secs_f64(),
+        eval_violation_rate,
+        eval_mean_sojourn_ratio,
+        seed,
+    };
+    (policy, stats)
+}
+
+/// Greedy evaluation on held-out episodes (a moderate-load Poisson
+/// stream and a bursty stream): (SLO violation rate, mean sojourn /
+/// SLO target).
+pub fn evaluate(policy: &SchedulerPolicy, cfg: &SimConfig, seed: u64) -> (f64, f64) {
+    let mut rng = Rng::new(seed);
+    let service_rate = 1.0 / cfg.per_inst_s;
+    let mut completed = 0usize;
+    let mut violations = 0usize;
+    let mut sojourn_sum = 0.0;
+    for profile in [
+        TrafficProfile::poisson(0.7 * service_rate),
+        TrafficProfile::poisson(1.2 * service_rate),
+        TrafficProfile::bursty(0.6 * service_rate),
+    ] {
+        let mut sim = Episode::new(cfg, profile, &mut rng);
+        for _ in 0..cfg.decisions_per_episode {
+            if sim.queue.is_empty() {
+                sim.t = sim.t.max(sim.next_arrival);
+                sim.enqueue_next_arrival(&mut rng);
+            }
+            let a = policy.best_action(sim.state());
+            let _ = sim.step(a, &mut rng);
+        }
+        completed += sim.completed;
+        violations += sim.violations;
+        sojourn_sum += sim.sojourn_sum;
+    }
+    if completed == 0 {
+        return (0.0, 0.0);
+    }
+    (
+        violations as f64 / completed as f64,
+        (sojourn_sum / completed as f64) / cfg.slo.p99_target_s,
+    )
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn training_is_deterministic_in_seed() {
+        let cfg = SimConfig::quick();
+        let (p1, s1) = train_scheduler(&cfg, 7);
+        let (p2, s2) = train_scheduler(&cfg, 7);
+        assert_eq!(p1, p2);
+        assert_eq!(s1.decisions, s2.decisions);
+        assert_eq!(s1.eval_violation_rate, s2.eval_violation_rate);
+    }
+
+    #[test]
+    fn training_visits_states_and_reports_stats() {
+        let cfg = SimConfig::quick();
+        let (policy, stats) = train_scheduler(&cfg, 11);
+        assert!(policy.visited() > 20, "visited {}", policy.visited());
+        assert_eq!(stats.episodes, cfg.episodes);
+        assert_eq!(stats.decisions, cfg.episodes * cfg.decisions_per_episode);
+        assert!(stats.wall_time_s > 0.0);
+    }
+
+    #[test]
+    fn trained_policy_beats_always_singles_under_load() {
+        // batch=1 cannot sustain utilization > overhead-inclusive
+        // capacity; a trained policy must batch its way out under the
+        // overload episodes and land far fewer violations
+        let cfg = SimConfig::quick();
+        let (trained, _) = train_scheduler(&cfg, 13);
+        let untrained = SchedulerPolicy::new(); // all-zero Q = always batch 1
+        let (v_trained, s_trained) = evaluate(&trained, &cfg, 99);
+        let (v_single, s_single) = evaluate(&untrained, &cfg, 99);
+        assert!(
+            s_trained < s_single,
+            "mean sojourn ratio: trained {s_trained} vs singles {s_single}"
+        );
+        assert!(
+            v_trained <= v_single,
+            "violation rate: trained {v_trained} vs singles {v_single}"
+        );
+    }
+
+    #[test]
+    fn simulator_conserves_requests() {
+        let cfg = SimConfig::quick();
+        let mut rng = Rng::new(5);
+        let mut sim = Episode::new(&cfg, TrafficProfile::poisson(800.0), &mut rng);
+        let mut drained = 0;
+        for _ in 0..200 {
+            if sim.queue.is_empty() {
+                sim.t = sim.t.max(sim.next_arrival);
+                sim.enqueue_next_arrival(&mut rng);
+            }
+            let before = sim.queue.len();
+            sim.step(3, &mut rng);
+            drained += before.saturating_sub(sim.queue.len());
+        }
+        assert!(drained > 0);
+        assert!(sim.completed >= drained);
+        assert!(sim.t > 0.0);
+    }
+}

@@ -8,6 +8,13 @@
 //! * early stopping: every `check_every` trials the greedy policy is
 //!   evaluated; stop when the batch count reaches the Appendix-A.3 lower
 //!   bound (the paper checks every 50 iterations, max 1000).
+//!
+//! The same tabular-Q machinery, pointed at *serving-time* decisions
+//! instead of graph-time ones, lives in [`dispatch_sim`]: it trains the
+//! batch-size scheduler policy of
+//! [`crate::coordinator::dispatch`] on a deterministic queue simulator.
+
+pub mod dispatch_sim;
 
 use std::time::Instant;
 

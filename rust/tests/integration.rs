@@ -158,6 +158,7 @@ fn server_ed_batch_persists_policy_across_boots() {
         train_cfg: quick_train_cfg(),
         encoding: Encoding::Sort,
         seed: 3,
+        ..ServerConfig::default()
     };
     let server = Server::start(cfg.clone()).unwrap();
     let snap = server.metrics.snapshot();
@@ -209,6 +210,7 @@ fn concurrent_mixed_workloads_bit_equal_to_reference() {
         train_cfg: quick_train_cfg(),
         encoding: Encoding::Sort,
         seed: 3,
+        ..ServerConfig::default()
     })
     .unwrap();
     let mut handles = Vec::new();
@@ -474,4 +476,77 @@ fn steady_state_serving_is_plan_free_and_allocation_free() {
     assert_eq!(snap.instance_cache_hits - warm.instance_cache_hits, 20);
     assert_eq!(snap.requests, 25);
     server.shutdown().unwrap();
+}
+
+#[test]
+fn adaptive_dispatch_responses_bit_equal_to_fixed_rule() {
+    // Dispatch policy changes *when* requests are grouped into
+    // mini-batches, never *what* they compute: the adaptive and learned
+    // controllers must answer every request with exactly the bytes the
+    // fixed full-or-timed-out rule produces (composition-invariance of
+    // the execution path, extended to dispatch-time decisions). Driven
+    // with concurrent clients so batch compositions genuinely differ
+    // across the three runs.
+    use ed_batch::coordinator::dispatch::DispatchMode;
+
+    let kinds = [WorkloadKind::TreeLstm, WorkloadKind::BiLstmTagger];
+    let pools: Vec<std::sync::Arc<Vec<Graph>>> = kinds
+        .iter()
+        .enumerate()
+        .map(|(i, &kind)| {
+            let w = Workload::new(kind, 32);
+            let mut rng = Rng::new(900 + i as u64);
+            std::sync::Arc::new((0..4).map(|_| w.gen_instance(&mut rng)).collect())
+        })
+        .collect();
+
+    // [kind][thread][request] -> per-request sink outputs
+    #[allow(clippy::type_complexity)]
+    let run_dispatch = |dispatch: DispatchMode| -> Vec<Vec<Vec<Vec<Vec<f32>>>>> {
+        let server = Server::start(ServerConfig {
+            workloads: kinds.to_vec(),
+            hidden: 32,
+            mode: SystemMode::EdBatch,
+            max_batch: 8,
+            batch_window: Duration::from_millis(5),
+            workers: 1,
+            train_cfg: quick_train_cfg(),
+            dispatch,
+            slo_p99: Some(Duration::from_millis(10)),
+            ..ServerConfig::default()
+        })
+        .unwrap();
+        let mut per_kind = Vec::new();
+        for (ki, &kind) in kinds.iter().enumerate() {
+            let mut handles = Vec::new();
+            for _t in 0..3 {
+                let client = server.client(kind);
+                let pool = pools[ki].clone();
+                handles.push(std::thread::spawn(move || {
+                    let mut results = Vec::new();
+                    for _pass in 0..2 {
+                        for g in pool.iter() {
+                            let resp = client.infer(g.clone()).unwrap();
+                            results.push(resp.to_vecs());
+                        }
+                    }
+                    results
+                }));
+            }
+            per_kind.push(
+                handles
+                    .into_iter()
+                    .map(|h| h.join().unwrap())
+                    .collect::<Vec<_>>(),
+            );
+        }
+        server.shutdown().unwrap();
+        per_kind
+    };
+
+    let fixed = run_dispatch(DispatchMode::Fixed);
+    let adaptive = run_dispatch(DispatchMode::Adaptive);
+    let learned = run_dispatch(DispatchMode::Learned);
+    assert_eq!(adaptive, fixed, "adaptive dispatch must preserve bit-equality");
+    assert_eq!(learned, fixed, "learned dispatch must preserve bit-equality");
 }
