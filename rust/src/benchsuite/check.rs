@@ -1,0 +1,302 @@
+//! `bench check` — the CI perf-regression gate.
+//!
+//! Compares the current `BENCH_serving.json` (written by `bench serving`)
+//! against a checked-in baseline (`ci/bench_baseline.json`) within a
+//! generous tolerance band and fails on regression:
+//!
+//! * per worker-scaling row (keyed by `workers`): throughput must not
+//!   fall more than `tolerance` below the baseline, p99 must not rise
+//!   more than `tolerance` above it;
+//! * per thread-scaling row (keyed by `threads`): same two checks;
+//! * boolean gates (`compose_ok_all`, `bitwise_parallel_ok`): must be
+//!   true in the current run whenever the baseline asserts them.
+//!
+//! The default tolerance is deliberately wide (25%) because CI runners
+//! are shared and noisy — this gate exists to catch order-of-magnitude
+//! regressions (a hot path silently falling off the compose/zero-copy
+//! fast path, a kernel regressing to quadratic), not 5% drift. The
+//! baseline values themselves are conservative floors; after an
+//! intentional perf change, refresh them from a trusted run with
+//! `bench check --baseline ci/bench_baseline.json --update`.
+//!
+//! Rows present in the baseline but missing from the current run fail
+//! the check (a silently dropped measurement is a regression of the
+//! bench itself); extra current rows are ignored, so adding sweep points
+//! never requires a lockstep baseline update.
+
+use anyhow::{anyhow, bail, Context, Result};
+
+use crate::util::cli::Args;
+use crate::util::json::Json;
+
+use super::print_table;
+use super::serving::JSON_PATH;
+
+/// One compared metric.
+#[derive(Clone, Debug)]
+pub struct DeltaRow {
+    /// row key, e.g. `workers=2` or `threads=4`
+    pub key: String,
+    pub metric: &'static str,
+    pub baseline: f64,
+    pub current: f64,
+    /// relative change, positive = current above baseline
+    pub delta_frac: f64,
+    pub ok: bool,
+}
+
+/// Outcome of a baseline comparison.
+#[derive(Clone, Debug)]
+pub struct CheckOutcome {
+    pub rows: Vec<DeltaRow>,
+    /// failed boolean gates (names)
+    pub failed_gates: Vec<String>,
+}
+
+impl CheckOutcome {
+    pub fn ok(&self) -> bool {
+        self.failed_gates.is_empty() && self.rows.iter().all(|r| r.ok)
+    }
+}
+
+/// CLI entry: `bench check --baseline <path> [--current <path>]
+/// [--tolerance 0.25] [--update]`.
+pub fn run(args: &Args) -> Result<()> {
+    let baseline_path = args
+        .get("baseline")
+        .ok_or_else(|| anyhow!("bench check needs --baseline <path>"))?;
+    let current_path = args.get_or("current", JSON_PATH);
+    let tolerance = args.f64("tolerance", 0.25);
+    if !(0.0..1.0).contains(&tolerance) {
+        bail!("--tolerance must be in [0, 1), got {tolerance}");
+    }
+
+    let current_text = std::fs::read_to_string(current_path)
+        .with_context(|| format!("reading {current_path} (run `bench serving` first)"))?;
+    // parse before any use: a truncated bench dump must never be
+    // promoted to the baseline (or compared) silently
+    let current = Json::parse(&current_text)
+        .map_err(|e| anyhow!("current {current_path}: {e}"))?;
+    if args.flag("update") {
+        std::fs::write(baseline_path, &current_text)
+            .with_context(|| format!("writing baseline {baseline_path}"))?;
+        println!("baseline {baseline_path} refreshed from {current_path}");
+        return Ok(());
+    }
+    let baseline_text = std::fs::read_to_string(baseline_path)
+        .with_context(|| format!("reading baseline {baseline_path}"))?;
+    let baseline = Json::parse(&baseline_text)
+        .map_err(|e| anyhow!("baseline {baseline_path}: {e}"))?;
+
+    let outcome = compare(&baseline, &current, tolerance)?;
+    print_table(
+        &format!(
+            "bench check: {current_path} vs baseline {baseline_path} (tolerance {:.0}%)",
+            tolerance * 100.0
+        ),
+        &["row", "metric", "baseline", "current", "delta", "ok"],
+        &outcome
+            .rows
+            .iter()
+            .map(|r| {
+                vec![
+                    r.key.clone(),
+                    r.metric.to_string(),
+                    format!("{:.2}", r.baseline),
+                    format!("{:.2}", r.current),
+                    format!("{:+.1}%", r.delta_frac * 100.0),
+                    if r.ok { "ok" } else { "FAIL" }.to_string(),
+                ]
+            })
+            .collect::<Vec<_>>(),
+    );
+    for g in &outcome.failed_gates {
+        println!("gate FAILED: {g}");
+    }
+    if !outcome.ok() {
+        bail!(
+            "perf regression: {} metric(s) outside the {:.0}% band, {} gate(s) failed \
+             (refresh an intentional change with --update)",
+            outcome.rows.iter().filter(|r| !r.ok).count(),
+            tolerance * 100.0,
+            outcome.failed_gates.len()
+        );
+    }
+    println!("bench check: ok ({} metrics within band)", outcome.rows.len());
+    Ok(())
+}
+
+/// Pure comparison (separated from I/O for tests).
+pub fn compare(baseline: &Json, current: &Json, tolerance: f64) -> Result<CheckOutcome> {
+    let mut out = CheckOutcome {
+        rows: Vec::new(),
+        failed_gates: Vec::new(),
+    };
+    for gate in ["compose_ok_all", "bitwise_parallel_ok"] {
+        let expected = matches!(baseline.get(gate), Some(Json::Bool(true)));
+        if expected && !matches!(current.get(gate), Some(Json::Bool(true))) {
+            out.failed_gates.push(gate.to_string());
+        }
+    }
+    compare_rows(baseline, current, "rows", "workers", tolerance, &mut out)?;
+    compare_rows(baseline, current, "thread_rows", "threads", tolerance, &mut out)?;
+    if out.rows.is_empty() {
+        bail!("baseline has no comparable rows (neither `rows` nor `thread_rows`)");
+    }
+    Ok(out)
+}
+
+fn compare_rows(
+    baseline: &Json,
+    current: &Json,
+    table: &str,
+    key_field: &str,
+    tolerance: f64,
+    out: &mut CheckOutcome,
+) -> Result<()> {
+    let base_rows = match baseline.get(table).and_then(|v| v.as_arr()) {
+        Some(rows) => rows,
+        None => return Ok(()), // baseline doesn't gate this table
+    };
+    let cur_rows = current.get(table).and_then(|v| v.as_arr()).unwrap_or(&[]);
+    for b in base_rows {
+        let key_val = b
+            .get(key_field)
+            .and_then(|v| v.as_u64())
+            .ok_or_else(|| anyhow!("baseline {table} row missing `{key_field}`"))?;
+        let key = format!("{key_field}={key_val}");
+        let cur = cur_rows
+            .iter()
+            .find(|r| r.get(key_field).and_then(|v| v.as_u64()) == Some(key_val));
+        let Some(cur) = cur else {
+            // a row the baseline gates vanished from the bench output
+            out.failed_gates.push(format!("{table}: missing row {key}"));
+            continue;
+        };
+        // throughput: a floor (higher is better)
+        push_metric(out, &key, "throughput_inst_per_s", b, cur, |base, now| {
+            now >= base * (1.0 - tolerance)
+        });
+        // p99: a ceiling (lower is better)
+        push_metric(out, &key, "p99_ms", b, cur, |base, now| {
+            now <= base * (1.0 + tolerance)
+        });
+    }
+    Ok(())
+}
+
+fn push_metric(
+    out: &mut CheckOutcome,
+    key: &str,
+    metric: &'static str,
+    baseline: &Json,
+    current: &Json,
+    within: impl Fn(f64, f64) -> bool,
+) {
+    let (Some(b), Some(c)) = (
+        baseline.get(metric).and_then(|v| v.as_f64()),
+        current.get(metric).and_then(|v| v.as_f64()),
+    ) else {
+        return; // metric not gated by the baseline (or absent): skip
+    };
+    if b <= 0.0 {
+        return; // zero/negative baselines carry no signal
+    }
+    out.rows.push(DeltaRow {
+        key: key.to_string(),
+        metric,
+        baseline: b,
+        current: c,
+        delta_frac: (c - b) / b,
+        ok: within(b, c),
+    });
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn doc(tp1: f64, p99_1: f64, tp_t4: f64, bitwise: bool) -> Json {
+        Json::parse(&format!(
+            r#"{{
+                "compose_ok_all": true,
+                "bitwise_parallel_ok": {bitwise},
+                "rows": [
+                    {{"workers": 1, "throughput_inst_per_s": {tp1}, "p99_ms": {p99_1}}},
+                    {{"workers": 2, "throughput_inst_per_s": 200.0, "p99_ms": 20.0}}
+                ],
+                "thread_rows": [
+                    {{"threads": 1, "throughput_inst_per_s": 100.0, "p99_ms": 30.0}},
+                    {{"threads": 4, "throughput_inst_per_s": {tp_t4}, "p99_ms": 30.0}}
+                ]
+            }}"#
+        ))
+        .unwrap()
+    }
+
+    #[test]
+    fn identical_results_pass() {
+        let b = doc(100.0, 25.0, 150.0, true);
+        let o = compare(&b, &b, 0.25).unwrap();
+        assert!(o.ok(), "{o:?}");
+        // 2 metrics x (2 worker rows + 2 thread rows)
+        assert_eq!(o.rows.len(), 8);
+        assert!(o.rows.iter().all(|r| r.delta_frac == 0.0));
+    }
+
+    #[test]
+    fn within_band_passes_and_regression_fails() {
+        let b = doc(100.0, 25.0, 150.0, true);
+        // 20% slower: inside the 25% band
+        let ok = doc(80.0, 25.0, 150.0, true);
+        assert!(compare(&b, &ok, 0.25).unwrap().ok());
+        // 40% slower: outside the band
+        let bad = doc(60.0, 25.0, 150.0, true);
+        let o = compare(&b, &bad, 0.25).unwrap();
+        assert!(!o.ok());
+        let fail = o.rows.iter().find(|r| !r.ok).unwrap();
+        assert_eq!(fail.key, "workers=1");
+        assert_eq!(fail.metric, "throughput_inst_per_s");
+        // p99 blowing past the ceiling also fails
+        let slow_tail = doc(100.0, 40.0, 150.0, true);
+        assert!(!compare(&b, &slow_tail, 0.25).unwrap().ok());
+    }
+
+    #[test]
+    fn thread_rows_and_gates_are_checked() {
+        let b = doc(100.0, 25.0, 150.0, true);
+        // thread-4 throughput collapsed (pool regression)
+        let bad = doc(100.0, 25.0, 50.0, true);
+        let o = compare(&b, &bad, 0.25).unwrap();
+        assert!(!o.ok());
+        assert!(o.rows.iter().any(|r| !r.ok && r.key == "threads=4"));
+        // determinism verdict flipping fails via the boolean gate
+        let broken = doc(100.0, 25.0, 150.0, false);
+        let o = compare(&b, &broken, 0.25).unwrap();
+        assert_eq!(o.failed_gates, vec!["bitwise_parallel_ok".to_string()]);
+        assert!(!o.ok());
+    }
+
+    #[test]
+    fn missing_gated_row_fails_extra_rows_ignored() {
+        let b = doc(100.0, 25.0, 150.0, true);
+        let mut cur = doc(100.0, 25.0, 150.0, true);
+        // drop the workers=2 row from the current results
+        if let Json::Obj(o) = &mut cur {
+            if let Some(Json::Arr(rows)) = o.get_mut("rows") {
+                rows.truncate(1);
+            }
+        }
+        let o = compare(&b, &cur, 0.25).unwrap();
+        assert!(o.failed_gates.iter().any(|g| g.contains("workers=2")));
+        // extra current rows (a wider sweep) never fail against an older
+        // baseline: compare the narrow baseline against the full doc
+        let mut narrow = doc(100.0, 25.0, 150.0, true);
+        if let Json::Obj(o) = &mut narrow {
+            if let Some(Json::Arr(rows)) = o.get_mut("rows") {
+                rows.truncate(1);
+            }
+        }
+        assert!(compare(&narrow, &b, 0.25).unwrap().ok());
+    }
+}

@@ -252,6 +252,7 @@ pub fn run_pipeline(
             scheduling_s,
             planning_s: report.planning_s,
             execution_s: report.exec_s,
+            parallel_s: report.par_wall_s,
         },
         report,
     ))

@@ -8,6 +8,7 @@
 //! learned batching under open-loop Poisson/bursty traffic; `serving-slo`
 //! runs the comparison alone).
 
+pub mod check;
 pub mod fig6;
 pub mod fig8;
 pub mod fig9;
@@ -28,6 +29,9 @@ pub struct BenchOpts {
     /// fewer repetitions / smaller sweeps for smoke runs
     pub fast: bool,
     pub artifacts_dir: String,
+    /// extra `--threads` point for the serving thread-scaling sweep
+    /// (0 = just the fixed {1, 2, 4} list)
+    pub threads: usize,
 }
 
 impl BenchOpts {
@@ -38,6 +42,7 @@ impl BenchOpts {
             seed: args.u64("seed", 42),
             fast: args.flag("fast") || std::env::var("ED_BENCH_FAST").is_ok(),
             artifacts_dir: args.get_or("artifacts", "artifacts").to_string(),
+            threads: args.usize("threads", 0),
         }
     }
 
@@ -48,6 +53,7 @@ impl BenchOpts {
             seed: 42,
             fast: true,
             artifacts_dir: "artifacts".to_string(),
+            threads: 0,
         }
     }
 }

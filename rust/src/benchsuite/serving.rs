@@ -15,15 +15,23 @@
 //! (per-workload queues, continuous dispatch, plan composition), not
 //! kernel speed.
 //!
+//! The worker-scaling table is followed by a **thread-scaling table**
+//! (`--threads` intra-batch CPU pool at a fixed single worker), whose
+//! speedup-vs-threads rows land in the same JSON together with the
+//! engine-level `bitwise_parallel_ok` determinism verdict; CI gates both
+//! via `bench check --baseline ci/bench_baseline.json`.
+//!
 //! The second half ([`run_slo`]) is the **SLO dispatch comparison**:
 //! fixed full-or-timed-out vs adaptive vs learned dispatch under
 //! open-loop Poisson and bursty traffic, reporting throughput, p50/p99,
 //! SLO-violation rate, and mean batch occupancy per combination, written
 //! to `BENCH_serving_slo.json`. The gate CI enforces: under the bursty
 //! profile, adaptive dispatch must land a lower p99 than the fixed rule
-//! at the same completed volume, with throughput within 10% (open-loop
-//! volume is arrival-driven, so the rates are equal by construction; the
-//! slack only absorbs elapsed-clock jitter).
+//! at the same completed volume, with throughput within 10%. Under
+//! `--fast` / `ED_BENCH_FAST` (the CI smoke) the verdict is computed on
+//! the deterministic **virtual clock** of `rl::dispatch_sim` rather than
+//! from wall-clock percentiles, so a loaded shared runner cannot flake
+//! the gate; full runs keep the wall-clock measurement.
 
 use std::time::Duration;
 
@@ -61,13 +69,37 @@ pub struct ServingRow {
     pub compose_ok: bool,
 }
 
+/// One row of the thread-scaling table: a single worker whose engine
+/// spreads each batched kernel over an intra-batch pool (`--threads`).
+#[derive(Clone, Debug)]
+pub struct ThreadRow {
+    pub threads: usize,
+    pub throughput: f64,
+    pub p50_ms: f64,
+    pub p99_ms: f64,
+    /// throughput relative to the `threads = 1` row
+    pub speedup: f64,
+    pub par_sections: u64,
+    pub pool_occupancy: f64,
+}
+
+/// Everything `bench serving` measures (both tables + the parallel
+/// determinism verdict), as written to [`JSON_PATH`].
+pub struct ServingBench {
+    pub rows: Vec<ServingRow>,
+    pub thread_rows: Vec<ThreadRow>,
+    /// engine-level `--threads` determinism self-check
+    /// ([`crate::coordinator::engine::parallel_bitwise_ok`])
+    pub bitwise_parallel_ok: bool,
+}
+
 /// Two workload families served concurrently (tree + chain).
 const KINDS: [WorkloadKind; 2] = [WorkloadKind::TreeLstm, WorkloadKind::BiLstmTagger];
 
 /// Where the machine-readable results land (uploaded as a CI artifact).
 pub const JSON_PATH: &str = "BENCH_serving.json";
 
-pub fn run(opts: &BenchOpts) -> Vec<ServingRow> {
+pub fn run(opts: &BenchOpts) -> ServingBench {
     let hidden = if opts.fast { 32 } else { opts.hidden };
     let requests_per_client = if opts.fast { 12 } else { 48 };
     let clients_per_kind = if opts.fast { 2 } else { 4 };
@@ -102,24 +134,9 @@ pub fn run(opts: &BenchOpts) -> Vec<ServingRow> {
         })
         .collect();
 
-    let mut rows = Vec::new();
-    for workers in [1usize, 2, 4] {
-        let server = Server::start(ServerConfig {
-            workloads: KINDS.to_vec(),
-            hidden,
-            mode: SystemMode::EdBatch,
-            max_batch: 16,
-            batch_window: Duration::from_millis(2),
-            workers,
-            artifacts_dir: None,
-            store_dir: Some(dir.to_string_lossy().into_owned()),
-            train_on_miss: false, // a miss here would be a bench bug
-            train_cfg,
-            encoding: Encoding::Sort,
-            seed: opts.seed,
-            ..ServerConfig::default()
-        })
-        .expect("server boot");
+    // drive one booted server with the pool-replay closed-loop traffic
+    // (shared by the worker-scaling and thread-scaling sweeps)
+    let drive = |server: &Server| {
         let mut handles = Vec::new();
         for (c, (kind_ix, kind)) in KINDS
             .iter()
@@ -141,6 +158,31 @@ pub fn run(opts: &BenchOpts) -> Vec<ServingRow> {
         for h in handles {
             h.join().expect("client thread");
         }
+    };
+    let boot = |workers: usize, threads: usize| {
+        Server::start(ServerConfig {
+            workloads: KINDS.to_vec(),
+            hidden,
+            mode: SystemMode::EdBatch,
+            max_batch: 16,
+            batch_window: Duration::from_millis(2),
+            workers,
+            threads,
+            artifacts_dir: None,
+            store_dir: Some(dir.to_string_lossy().into_owned()),
+            train_on_miss: false, // a miss here would be a bench bug
+            train_cfg,
+            encoding: Encoding::Sort,
+            seed: opts.seed,
+            ..ServerConfig::default()
+        })
+        .expect("server boot")
+    };
+
+    let mut rows = Vec::new();
+    for workers in [1usize, 2, 4] {
+        let server = boot(workers, 1);
+        drive(&server);
         let snap = server.metrics.snapshot();
         // warmup bound: each worker builds each distinct topology at most
         // once per workload; everything else must compose
@@ -165,7 +207,40 @@ pub fn run(opts: &BenchOpts) -> Vec<ServingRow> {
         });
         server.shutdown().expect("shutdown");
     }
+
+    // -- thread scaling: one worker, intra-batch lane-parallel pool --------
+    // speedup-vs-threads is the tentpole's perf signature; the thread list
+    // is fixed so the row set (and the baseline gate's keys) is stable
+    // across machines
+    let mut thread_list = vec![1usize, 2, 4];
+    if opts.threads > 1 && !thread_list.contains(&opts.threads) {
+        thread_list.push(opts.threads); // extra operator-requested point
+    }
+    let mut thread_rows: Vec<ThreadRow> = Vec::new();
+    for threads in thread_list {
+        let server = boot(1, threads);
+        drive(&server);
+        let snap = server.metrics.snapshot();
+        let base = thread_rows.first().map(|r: &ThreadRow| r.throughput);
+        thread_rows.push(ThreadRow {
+            threads,
+            throughput: snap.throughput(),
+            p50_ms: snap.latency_p50_s * 1e3,
+            p99_ms: snap.latency_p99_s * 1e3,
+            speedup: match base {
+                Some(b) if b > 0.0 => snap.throughput() / b,
+                _ => 1.0,
+            },
+            par_sections: snap.par_sections,
+            pool_occupancy: snap.pool_occupancy(),
+        });
+        server.shutdown().expect("shutdown");
+    }
     let _ = std::fs::remove_dir_all(&dir);
+
+    // the end-to-end determinism verdict CI's baseline gate checks
+    let bitwise_parallel_ok =
+        crate::coordinator::engine::parallel_bitwise_ok(hidden, 4, opts.seed);
 
     print_table(
         "Serving scaling: worker pool vs throughput/latency + hot-path provenance \
@@ -199,12 +274,49 @@ pub fn run(opts: &BenchOpts) -> Vec<ServingRow> {
             .collect::<Vec<_>>(),
     );
 
-    write_json(opts, hidden, distinct, &rows);
-    rows
+    print_table(
+        &format!(
+            "Serving thread scaling: intra-batch CPU pool (1 worker) vs throughput \
+             (bitwise_parallel_ok={bitwise_parallel_ok})"
+        ),
+        &[
+            "threads",
+            "inst/s",
+            "speedup",
+            "p50 ms",
+            "p99 ms",
+            "par sections",
+            "occupancy",
+        ],
+        &thread_rows
+            .iter()
+            .map(|r| {
+                vec![
+                    format!("{}", r.threads),
+                    format!("{:.1}", r.throughput),
+                    format!("{:.2}x", r.speedup),
+                    format!("{:.2}", r.p50_ms),
+                    format!("{:.2}", r.p99_ms),
+                    format!("{}", r.par_sections),
+                    format!("{:.0}%", r.pool_occupancy * 100.0),
+                ]
+            })
+            .collect::<Vec<_>>(),
+    );
+
+    let out = ServingBench {
+        rows,
+        thread_rows,
+        bitwise_parallel_ok,
+    };
+    write_json(opts, hidden, distinct, &out);
+    out
 }
 
-/// Dump the rows to [`JSON_PATH`] so CI archives the perf trajectory.
-fn write_json(opts: &BenchOpts, hidden: usize, distinct: usize, rows: &[ServingRow]) {
+/// Dump both tables to [`JSON_PATH`] so CI archives the perf trajectory
+/// (and `bench check` can gate it against `ci/bench_baseline.json`).
+fn write_json(opts: &BenchOpts, hidden: usize, distinct: usize, bench: &ServingBench) {
+    let rows = &bench.rows;
     let row_json: Vec<Json> = rows
         .iter()
         .map(|r| {
@@ -226,6 +338,21 @@ fn write_json(opts: &BenchOpts, hidden: usize, distinct: usize, rows: &[ServingR
             ])
         })
         .collect();
+    let thread_json: Vec<Json> = bench
+        .thread_rows
+        .iter()
+        .map(|r| {
+            Json::obj(vec![
+                ("threads", Json::from(r.threads as u64)),
+                ("throughput_inst_per_s", Json::from(r.throughput)),
+                ("p50_ms", Json::from(r.p50_ms)),
+                ("p99_ms", Json::from(r.p99_ms)),
+                ("speedup_vs_1", Json::from(r.speedup)),
+                ("par_sections", Json::from(r.par_sections)),
+                ("pool_occupancy", Json::from(r.pool_occupancy)),
+            ])
+        })
+        .collect();
     let all_ok = rows.iter().all(|r| r.compose_ok);
     let doc = Json::obj(vec![
         ("bench", Json::from("serving")),
@@ -234,7 +361,9 @@ fn write_json(opts: &BenchOpts, hidden: usize, distinct: usize, rows: &[ServingR
         ("fast", Json::Bool(opts.fast)),
         ("seed", Json::from(opts.seed)),
         ("compose_ok_all", Json::Bool(all_ok)),
+        ("bitwise_parallel_ok", Json::Bool(bench.bitwise_parallel_ok)),
         ("rows", Json::Arr(row_json)),
+        ("thread_rows", Json::Arr(thread_json)),
     ]);
     // best-effort: a read-only workdir must not fail the bench itself
     let _ = std::fs::write(JSON_PATH, doc.to_string());
@@ -244,6 +373,14 @@ fn write_json(opts: &BenchOpts, hidden: usize, distinct: usize, rows: &[ServingR
 
 /// Where the machine-readable SLO comparison lands (CI artifact + gate).
 pub const SLO_JSON_PATH: &str = "BENCH_serving_slo.json";
+
+/// The SLO-comparison configuration, shared between [`run_slo`], the
+/// virtual-clock gate, and the smoke test (so tuning the bench cannot
+/// silently leave the gate on a stale configuration).
+pub const SLO_P99: Duration = Duration::from_millis(10);
+/// Occupancy-oriented window of the fixed baseline rule.
+pub const SLO_FIXED_WINDOW: Duration = Duration::from_millis(25);
+pub const SLO_MAX_BATCH: usize = 32;
 
 /// One (traffic profile, dispatch mode) measurement.
 #[derive(Clone, Debug)]
@@ -291,11 +428,11 @@ pub fn slo_gate_ok(rows: &[SloRow]) -> bool {
 /// profile from the bench seed).
 pub fn run_slo(opts: &BenchOpts) -> Vec<SloRow> {
     let hidden = if opts.fast { 32 } else { opts.hidden };
-    let slo = Duration::from_millis(10);
+    let slo = SLO_P99;
     let rate_per_kind = if opts.fast { 150.0 } else { 300.0 };
     let duration_s = if opts.fast { 1.2 } else { 4.0 };
-    let fixed_window = Duration::from_millis(25);
-    let max_batch = 32;
+    let fixed_window = SLO_FIXED_WINDOW;
+    let max_batch = SLO_MAX_BATCH;
     let train_cfg = TrainConfig {
         max_iters: if opts.fast { 150 } else { 600 },
         ..TrainConfig::default()
@@ -439,17 +576,52 @@ pub fn run_slo(opts: &BenchOpts) -> Vec<SloRow> {
             })
             .collect::<Vec<_>>(),
     );
-    let gate = slo_gate_ok(&rows);
+    // The gate verdict. Wall-clock p99s of real server runs depend on the
+    // runner's load — a scheduler hiccup during either run can flip the
+    // comparison with no code change. Under the smoke configuration
+    // (--fast / ED_BENCH_FAST, which is what CI runs on shared runners)
+    // the verdict therefore comes from the deterministic virtual-clock
+    // replay in `rl::dispatch_sim`: the same fixed-vs-adaptive criterion,
+    // evaluated as a pure function of (config, seed). Full (non-fast)
+    // runs keep the wall-clock verdict — that is the measurement runs on
+    // dedicated hardware exist to make.
+    let (gate, gate_source) = if opts.fast {
+        let v = crate::rl::dispatch_sim::virtual_slo_gate(
+            SloConfig::with_target(slo.as_secs_f64()),
+            fixed_window.as_secs_f64(),
+            max_batch,
+            opts.seed,
+        );
+        println!(
+            "slo gate [virtual clock]: fixed p99 {:.2}ms vs adaptive p99 {:.2}ms over {} arrivals",
+            v.fixed.p99_s * 1e3,
+            v.adaptive.p99_s * 1e3,
+            v.offered,
+        );
+        (v.ok(), "virtual-clock")
+    } else {
+        (slo_gate_ok(&rows), "wall-clock")
+    };
     println!(
-        "slo gate (bursty: adaptive p99 < fixed p99 at equal volume): {}",
+        "slo gate (bursty: adaptive p99 < fixed p99 at equal volume, {gate_source}): {}",
         if gate { "ok" } else { "FAILED" }
     );
 
-    write_slo_json(opts, hidden, slo.as_secs_f64(), rate_per_kind, duration_s, &rows);
+    write_slo_json(
+        opts,
+        hidden,
+        slo.as_secs_f64(),
+        rate_per_kind,
+        duration_s,
+        &rows,
+        gate,
+        gate_source,
+    );
     rows
 }
 
 /// Dump the SLO comparison to [`SLO_JSON_PATH`] (CI artifact + gate).
+#[allow(clippy::too_many_arguments)]
 fn write_slo_json(
     opts: &BenchOpts,
     hidden: usize,
@@ -457,6 +629,8 @@ fn write_slo_json(
     rate_per_kind: f64,
     duration_s: f64,
     rows: &[SloRow],
+    gate_ok: bool,
+    gate_source: &str,
 ) {
     let row_json: Vec<Json> = rows
         .iter()
@@ -483,7 +657,10 @@ fn write_slo_json(
         ("duration_s", Json::from(duration_s)),
         ("fast", Json::Bool(opts.fast)),
         ("seed", Json::from(opts.seed)),
-        ("slo_gate_ok", Json::Bool(slo_gate_ok(rows))),
+        ("slo_gate_ok", Json::Bool(gate_ok)),
+        ("slo_gate_source", Json::from(gate_source)),
+        // the raw wall-clock verdict stays visible for trend-watching
+        ("slo_gate_wall_ok", Json::Bool(slo_gate_ok(rows))),
         ("rows", Json::Arr(row_json)),
     ]);
     // best-effort: a read-only workdir must not fail the bench itself
@@ -508,31 +685,25 @@ mod tests {
             // the percentiles
             assert!(r.gen_lag_max_ms < 50.0, "generator fell behind: {:?}", r);
         }
-        // the acceptance gate: under bursty traffic, adaptive dispatch
-        // beats the fixed rule's p99 at equal volume and throughput
-        assert!(slo_gate_ok(&rows), "rows: {rows:#?}");
-        // and it actually meets the SLO far more often than fixed does
-        let fixed = rows
-            .iter()
-            .find(|r| r.profile == "bursty" && r.dispatch == DispatchMode::Fixed)
-            .unwrap();
-        let adaptive = rows
-            .iter()
-            .find(|r| r.profile == "bursty" && r.dispatch == DispatchMode::Adaptive)
-            .unwrap();
-        assert!(
-            adaptive.violation_rate < fixed.violation_rate,
-            "adaptive {} vs fixed {}",
-            adaptive.violation_rate,
-            fixed.violation_rate
+        // the acceptance gate, on the deterministic virtual clock (the
+        // wall-clock comparison stays in the report but is not asserted —
+        // p99s of real runs on a loaded shared runner are not a fact
+        // about this code): fixed full-or-timed-out vs the real adaptive
+        // controller over one pre-sampled bursty schedule
+        let v = crate::rl::dispatch_sim::virtual_slo_gate(
+            SloConfig::with_target(SLO_P99.as_secs_f64()),
+            SLO_FIXED_WINDOW.as_secs_f64(),
+            SLO_MAX_BATCH,
+            BenchOpts::fast_default().seed,
         );
+        assert!(v.ok(), "{v:?}");
     }
 
     #[test]
     fn serving_scaling_smoke() {
-        let rows = run(&BenchOpts::fast_default());
-        assert_eq!(rows.len(), 3);
-        for r in &rows {
+        let bench = run(&BenchOpts::fast_default());
+        assert_eq!(bench.rows.len(), 3);
+        for r in &bench.rows {
             assert!(r.throughput > 0.0, "workers={}", r.workers);
             assert!(
                 (r.store_hit_rate - 1.0).abs() < 1e-12,
@@ -547,5 +718,18 @@ mod tests {
             );
             assert!(r.plans_built <= r.cache_misses);
         }
+        // thread-scaling rows: fixed row set, parallel sections actually
+        // ran at threads > 1, and the determinism verdict holds
+        assert_eq!(bench.thread_rows.len(), 3);
+        assert_eq!(
+            bench.thread_rows.iter().map(|r| r.threads).collect::<Vec<_>>(),
+            vec![1, 2, 4]
+        );
+        assert_eq!(bench.thread_rows[0].par_sections, 0, "threads=1 is serial");
+        for r in &bench.thread_rows[1..] {
+            assert!(r.throughput > 0.0, "threads={}", r.threads);
+            assert!(r.speedup > 0.0);
+        }
+        assert!(bench.bitwise_parallel_ok, "parallel execution diverged");
     }
 }

@@ -29,6 +29,7 @@
 //! only exception (a mini-batch larger than any seen before).
 
 use std::rc::Rc;
+use std::sync::Arc;
 use std::time::Instant;
 
 use anyhow::Result;
@@ -37,6 +38,7 @@ use rustc_hash::FxHashMap;
 use crate::batching::Schedule;
 use crate::coordinator::compose::ComposedPlan;
 use crate::exec::backend::{CpuBackend, ExecBackend, PjrtBackend};
+use crate::exec::pool::{PoolStats, ThreadPool};
 use crate::graph::cells::{self, ArgSemantics};
 use crate::graph::{CellKind, Graph, NodeId, TypeRegistry};
 use crate::memory::graph_plan::{ArgAccess, DstAccess, GraphMemoryPlan, PlanCache};
@@ -84,6 +86,17 @@ pub struct ExecReport {
     pub cache_misses: usize,
     /// 1 when the arena buffer had to grow — zero in steady state
     pub arena_grows: usize,
+    /// parallel kernel sections executed by the intra-batch thread pool
+    /// (zero without `--threads` > 1)
+    pub par_sections: usize,
+    /// lane chunks executed inside those sections
+    pub par_chunks: usize,
+    /// wall time spent inside parallel sections (a subset of
+    /// [`ExecReport::exec_s`])
+    pub par_wall_s: f64,
+    /// summed per-chunk busy time across pool threads;
+    /// `par_busy_s / (par_wall_s × threads)` is the pool occupancy
+    pub par_busy_s: f64,
 }
 
 /// Backend selection for [`CellEngine::new`].
@@ -110,6 +123,9 @@ pub struct CellEngine<'a> {
     pub extra_launches: FxHashMap<String, usize>,
     scratch_copy: Vec<f32>,
     plans: PlanCache,
+    /// intra-batch lane-parallel pool, shared with the backend (the
+    /// engine keeps its own handle to read occupancy counters)
+    pool: Option<Arc<ThreadPool>>,
     // -- pooled hot-path buffers (reused across batches/minibatches) ----
     /// output staging for non-contiguous destinations (h, then c/M)
     stage_h: Vec<f32>,
@@ -562,6 +578,7 @@ impl<'a> CellEngine<'a> {
             extra_launches: FxHashMap::default(),
             scratch_copy: Vec::new(),
             plans: PlanCache::new(),
+            pool: None,
             stage_h: Vec::new(),
             stage_c: Vec::new(),
             ordered: Vec::new(),
@@ -571,6 +588,38 @@ impl<'a> CellEngine<'a> {
 
     pub fn backend_name(&self) -> &'static str {
         self.backend.name()
+    }
+
+    /// Install an intra-batch lane-parallel thread pool: the backend
+    /// splits every batched kernel into fixed lane chunks work-shared
+    /// across the pool ([`crate::exec::pool`]), and the engine reports
+    /// pool occupancy per mini-batch. Outputs stay bit-identical to
+    /// serial execution at any thread count (chunk boundaries are
+    /// thread-count-independent and every kernel is lane-independent).
+    pub fn set_thread_pool(&mut self, pool: Arc<ThreadPool>) {
+        self.backend.set_pool(pool.clone());
+        self.pool = Some(pool);
+    }
+
+    /// Worker slots of the installed pool (1 = serial execution).
+    pub fn pool_threads(&self) -> usize {
+        self.pool.as_ref().map_or(1, |p| p.threads())
+    }
+
+    fn pool_stats(&self) -> PoolStats {
+        self.pool.as_ref().map(|p| p.stats()).unwrap_or_default()
+    }
+
+    /// Fold the pool-counter delta since `before` into `report`.
+    fn fold_pool_stats(&self, before: PoolStats, report: &mut ExecReport) {
+        if self.pool.is_none() {
+            return;
+        }
+        let now = self.pool_stats();
+        report.par_sections = (now.sections - before.sections) as usize;
+        report.par_chunks = (now.chunks - before.chunks) as usize;
+        report.par_wall_s = now.wall_s - before.wall_s;
+        report.par_busy_s = now.busy_s - before.busy_s;
     }
 
     /// Cumulative PQ-planner invocations through this engine's plan cache.
@@ -604,6 +653,7 @@ impl<'a> CellEngine<'a> {
         let planning_s = t_plan.elapsed().as_secs_f64();
         let grew = store.reset(plan.clone());
 
+        let pool0 = self.pool_stats();
         let t0 = Instant::now();
         let mut report = ExecReport {
             batches: schedule.batches.len(),
@@ -635,6 +685,7 @@ impl<'a> CellEngine<'a> {
             }
         }
         report.exec_s = t0.elapsed().as_secs_f64();
+        self.fold_pool_stats(pool0, &mut report);
         Ok(report)
     }
 
@@ -649,6 +700,7 @@ impl<'a> CellEngine<'a> {
         store: &mut ArenaStateStore,
     ) -> Result<ExecReport> {
         let grew = store.reset_flat(comp.total_elems());
+        let pool0 = self.pool_stats();
         let t0 = Instant::now();
         let mut report = ExecReport {
             batches: comp.num_batches(),
@@ -693,6 +745,7 @@ impl<'a> CellEngine<'a> {
             }
         }
         report.exec_s = t0.elapsed().as_secs_f64();
+        self.fold_pool_stats(pool0, &mut report);
         Ok(report)
     }
 
@@ -1310,9 +1363,47 @@ pub fn run_graph(
             scheduling_s,
             planning_s: report.planning_s,
             execution_s: report.exec_s,
+            parallel_s: report.par_wall_s,
         },
         report,
     ))
+}
+
+/// End-to-end parallel-determinism self-check: for every workload kind,
+/// execute the same scheduled mini-batch through a serial CPU engine and
+/// through one driving a [`ThreadPool`] of `threads` workers, and compare
+/// every node's outputs **bitwise**. This is the `--threads` contract
+/// (fixed lane chunking + lane-independent kernels + disjoint in-place
+/// output slices ⇒ values invariant to thread count) made observable:
+/// `serve` prints the verdict as `bitwise_parallel_ok=<bool>` and the CI
+/// thread matrix greps for it.
+pub fn parallel_bitwise_ok(hidden: usize, threads: usize, seed: u64) -> bool {
+    use crate::batching::agenda::AgendaPolicy;
+    use crate::workloads::{Workload, ALL_WORKLOADS};
+    for kind in ALL_WORKLOADS {
+        let w = Workload::new(kind, hidden);
+        let mut rng = Rng::new(seed ^ 0xB17);
+        let mut g = w.gen_batch(2, &mut rng);
+        g.freeze();
+        let nt = w.registry.num_types();
+        let schedule = crate::batching::run_policy(&g, nt, &mut AgendaPolicy::new(nt));
+        let run = |pool: Option<Arc<ThreadPool>>| -> Option<Vec<Vec<f32>>> {
+            let mut engine = CellEngine::new(Backend::Cpu, hidden, seed).ok()?;
+            if let Some(p) = pool {
+                engine.set_thread_pool(p);
+            }
+            let mut store = ArenaStateStore::new();
+            engine.execute(&g, &w.registry, &schedule, &mut store).ok()?;
+            Some(store.h_vectors())
+        };
+        let serial = run(None);
+        let pooled = run(Some(Arc::new(ThreadPool::new(threads))));
+        match (serial, pooled) {
+            (Some(a), Some(b)) if a == b => {}
+            _ => return false,
+        }
+    }
+    true
 }
 
 #[cfg(test)]
@@ -1698,5 +1789,90 @@ mod tests {
         let p2 = engine.plan_for(&g, &w.registry, &schedule);
         assert!(Rc::ptr_eq(&p1, &p2));
         assert_eq!(engine.plans_built(), 1);
+    }
+
+    #[test]
+    fn pooled_engine_bit_equal_to_serial_planned_and_unplanned() {
+        // the tentpole contract through the whole engine: same schedule,
+        // same memory mode, pooled vs serial — every node's state bitwise
+        // identical, on both the planned (views + in-place writes) and
+        // unplanned (gather/scatter) paths
+        for kind in ALL_WORKLOADS {
+            for mode in [MemoryMode::Planned, MemoryMode::Unplanned] {
+                let w = Workload::new(kind, 32);
+                let mut rng = Rng::new(31);
+                let mut g = w.gen_batch(3, &mut rng);
+                g.freeze();
+                let schedule = run_policy(
+                    &g,
+                    w.registry.num_types(),
+                    &mut FsmPolicy::new(Encoding::Sort),
+                );
+                let run = |pool: Option<Arc<ThreadPool>>| {
+                    let mut engine = CellEngine::new(Backend::Cpu, 32, 1).unwrap();
+                    engine.memory_mode = mode;
+                    if let Some(p) = pool {
+                        engine.set_thread_pool(p);
+                    }
+                    let mut store = ArenaStateStore::new();
+                    let r = engine.execute(&g, &w.registry, &schedule, &mut store).unwrap();
+                    (r, store.h_vectors())
+                };
+                let (_, serial) = run(None);
+                let (report, pooled) = run(Some(Arc::new(ThreadPool::new(3))));
+                assert_eq!(serial, pooled, "{kind:?} {mode:?}");
+                // wide batches must actually have exercised the pool
+                if report.par_sections > 0 {
+                    assert!(report.par_chunks >= 2 * report.par_sections, "{kind:?}");
+                    assert!(report.par_wall_s >= 0.0 && report.par_busy_s > 0.0);
+                }
+            }
+        }
+    }
+
+    #[test]
+    fn pooled_composed_execution_bit_equal_to_serial_composed() {
+        // the serving steady-state path under --threads: composing cached
+        // plans and executing through the pool must reproduce serial
+        // composed execution bitwise
+        let w = Workload::new(WorkloadKind::TreeLstm, 16);
+        let mut rng = Rng::new(17);
+        let insts: Vec<Graph> = (0..3).map(|_| w.gen_instance(&mut rng)).collect();
+        let run = |pool: Option<Arc<ThreadPool>>| {
+            let mut engine = CellEngine::new(Backend::Cpu, 16, 1).unwrap();
+            if let Some(p) = pool {
+                engine.set_thread_pool(p);
+            }
+            let mut cache = InstanceCache::new();
+            let mut policy = FsmPolicy::new(Encoding::Sort);
+            let mut comp = ComposedPlan::new();
+            let mut store = ArenaStateStore::new();
+            comp.clear();
+            for g in &insts {
+                let art =
+                    cache.get_or_build(g, &w.registry, &mut policy, 16, MemoryMode::Planned);
+                comp.push_instance(art);
+            }
+            comp.compose();
+            engine
+                .execute_composed(&w.registry, &comp, &mut store)
+                .unwrap();
+            let mut out = Vec::new();
+            for slot in 0..comp.num_instances() {
+                let art = comp.instance(slot);
+                let base = comp.arena_base(slot);
+                for node in 0..art.graph.len() {
+                    let (off, sz) = art.plan.h_slot(node);
+                    out.push(store.slice(base + off, sz).to_vec());
+                }
+            }
+            out
+        };
+        assert_eq!(run(None), run(Some(Arc::new(ThreadPool::new(4)))));
+    }
+
+    #[test]
+    fn parallel_bitwise_ok_self_check_passes() {
+        assert!(parallel_bitwise_ok(16, 3, 7));
     }
 }

@@ -46,6 +46,12 @@ struct Inner {
     // SLO accounting (0 target = no SLO configured)
     slo_target_s: f64,
     slo_violations: u64,
+    // intra-batch thread-pool accounting (--threads)
+    pool_threads: u64,
+    par_sections: u64,
+    par_chunks: u64,
+    par_wall_s: f64,
+    par_busy_s: f64,
 }
 
 /// Thread-safe metrics sink shared between server workers.
@@ -116,6 +122,16 @@ pub struct MetricsSnapshot {
     pub slo_target_s: f64,
     /// requests whose latency exceeded the SLO target
     pub slo_violations: u64,
+    /// per-worker intra-batch pool size (1 = serial kernels)
+    pub pool_threads: u64,
+    /// parallel kernel sections executed across all workers
+    pub par_sections: u64,
+    /// lane chunks executed inside those sections
+    pub par_chunks: u64,
+    /// wall time inside parallel sections (subset of execution time)
+    pub par_wall_s: f64,
+    /// summed per-chunk busy time across pool threads
+    pub par_busy_s: f64,
     pub breakdown: TimeBreakdown,
     pub elapsed_s: f64,
 }
@@ -197,6 +213,16 @@ impl MetricsSnapshot {
         }
         self.instances as f64 / self.minibatches as f64
     }
+
+    /// Intra-batch pool occupancy: fraction of the pool's capacity kept
+    /// busy while inside parallel sections
+    /// (`busy / (wall × threads)`; 0 when no parallel section ran).
+    pub fn pool_occupancy(&self) -> f64 {
+        if self.par_wall_s <= 0.0 || self.pool_threads == 0 {
+            return 0.0;
+        }
+        self.par_busy_s / (self.par_wall_s * self.pool_threads as f64)
+    }
 }
 
 impl Metrics {
@@ -218,6 +244,12 @@ impl Metrics {
     /// against (called once at server boot when `--slo-p99-ms` is set).
     pub fn set_slo(&self, p99_target_s: f64) {
         self.inner.lock().unwrap().slo_target_s = p99_target_s;
+    }
+
+    /// Record the per-worker intra-batch pool size (called once at
+    /// server boot; denominates the occupancy ratio).
+    pub fn set_pool_threads(&self, threads: u64) {
+        self.inner.lock().unwrap().pool_threads = threads.max(1);
     }
 
     pub fn record_request(&self, workload: &'static str, latency: Duration) {
@@ -277,6 +309,10 @@ impl Metrics {
         g.instance_cache_hits += report.cache_hits as u64;
         g.instance_cache_misses += report.cache_misses as u64;
         g.arena_grows += report.arena_grows as u64;
+        g.par_sections += report.par_sections as u64;
+        g.par_chunks += report.par_chunks as u64;
+        g.par_wall_s += report.par_wall_s;
+        g.par_busy_s += report.par_busy_s;
     }
 
     pub fn snapshot(&self) -> MetricsSnapshot {
@@ -322,6 +358,11 @@ impl Metrics {
             store_trained: g.store_trained,
             slo_target_s: g.slo_target_s,
             slo_violations: g.slo_violations,
+            pool_threads: g.pool_threads.max(1),
+            par_sections: g.par_sections,
+            par_chunks: g.par_chunks,
+            par_wall_s: g.par_wall_s,
+            par_busy_s: g.par_busy_s,
             breakdown: g.breakdown,
             elapsed_s: self.started.lock().unwrap().elapsed().as_secs_f64(),
         }
@@ -351,6 +392,7 @@ mod tests {
             scheduling_s: 0.002,
             planning_s: 0.003,
             execution_s: 0.01,
+            parallel_s: 0.004,
         };
         m.record_minibatch(4, &bd, &report);
         let s = m.snapshot();
@@ -432,6 +474,32 @@ mod tests {
         m.record_minibatch(6, &bd, &ExecReport::default());
         m.record_minibatch(2, &bd, &ExecReport::default());
         assert!((m.snapshot().mean_batch_occupancy() - 4.0).abs() < 1e-12);
+    }
+
+    #[test]
+    fn pool_occupancy_accounting() {
+        let m = Metrics::new();
+        m.set_pool_threads(4);
+        let bd = TimeBreakdown::default();
+        m.record_minibatch(
+            2,
+            &bd,
+            &ExecReport {
+                par_sections: 3,
+                par_chunks: 12,
+                par_wall_s: 0.010,
+                par_busy_s: 0.030,
+                ..Default::default()
+            },
+        );
+        let s = m.snapshot();
+        assert_eq!(s.pool_threads, 4);
+        assert_eq!(s.par_sections, 3);
+        assert_eq!(s.par_chunks, 12);
+        // busy 30ms over 10ms wall on 4 threads = 75% occupancy
+        assert!((s.pool_occupancy() - 0.75).abs() < 1e-12);
+        // no parallel work ever -> occupancy reads 0, not NaN
+        assert_eq!(Metrics::new().snapshot().pool_occupancy(), 0.0);
     }
 
     #[test]

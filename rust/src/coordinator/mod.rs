@@ -75,10 +75,16 @@ pub struct TimeBreakdown {
     pub planning_s: f64,
     /// batched kernel execution (incl. gather/scatter)
     pub execution_s: f64,
+    /// wall time spent inside intra-batch parallel kernel sections
+    /// (`--threads` pool). A **subset** of `execution_s`, so
+    /// [`TimeBreakdown::total`] does not add it; zero under serial
+    /// execution.
+    pub parallel_s: f64,
 }
 
 impl TimeBreakdown {
     pub fn total(&self) -> f64 {
+        // parallel_s is contained in execution_s — not summed again
         self.construction_s + self.scheduling_s + self.planning_s + self.execution_s
     }
 
@@ -87,5 +93,6 @@ impl TimeBreakdown {
         self.scheduling_s += other.scheduling_s;
         self.planning_s += other.planning_s;
         self.execution_s += other.execution_s;
+        self.parallel_s += other.parallel_s;
     }
 }

@@ -102,6 +102,12 @@ pub struct ServerConfig {
     pub batch_window: Duration,
     /// worker-pool size (each worker owns one engine)
     pub workers: usize,
+    /// intra-batch lane-parallel threads **per worker** (`--threads`):
+    /// each worker's CPU engine splits batched kernels into fixed lane
+    /// chunks work-shared across its own [`crate::exec::pool::ThreadPool`].
+    /// 1 = serial kernels (the default; responses are bit-identical at
+    /// any value)
+    pub threads: usize,
     /// artifacts directory; None = CPU reference backend
     pub artifacts_dir: Option<String>,
     /// PolicyStore directory (EdBatch mode); None = train in memory at
@@ -136,6 +142,7 @@ impl Default for ServerConfig {
             max_batch: 32,
             batch_window: Duration::from_millis(2),
             workers: 1,
+            threads: 1,
             artifacts_dir: None,
             store_dir: None,
             train_on_miss: true,
@@ -343,11 +350,13 @@ impl Server {
             config.workloads.retain(|&k| seen.insert(k, ()).is_none());
         }
         config.workers = config.workers.max(1);
+        config.threads = config.threads.max(1);
 
         let metrics = Arc::new(Metrics::new());
         if let Some(slo) = config.slo_p99 {
             metrics.set_slo(slo.as_secs_f64());
         }
+        metrics.set_pool_threads(config.threads as u64);
         // resolve every workload's policy before any worker starts: store
         // lookups, boot-time training, fallbacks — never in-request
         let seeds = Arc::new(resolve_policies(&config, &metrics)?);
@@ -661,6 +670,14 @@ fn worker_loop(
     // graph-level state layout: ED-Batch plans the arena with the PQ tree,
     // the DyNet baselines keep creation order + full gather/scatter
     engine.memory_mode = config.mode.memory_mode();
+    // intra-batch lane parallelism: one pool per worker, so the total
+    // thread budget is workers × threads and engines never share a pool
+    // (PJRT backends ignore it — device-side parallelism is PJRT's job).
+    // Bit-equality across thread counts is the backend contract, asserted
+    // end to end by `engine::parallel_bitwise_ok` and the CI thread matrix.
+    if config.threads > 1 {
+        engine.set_thread_pool(Arc::new(crate::exec::pool::ThreadPool::new(config.threads)));
+    }
     // the compositional hot path is ED-Batch's contribution; the baselines
     // keep re-running their policy per mini-batch (that overhead is what
     // they exist to measure)
@@ -853,6 +870,7 @@ fn process_composed(
         scheduling_s: (assemble_s - plan_s).max(0.0),
         planning_s: plan_s,
         execution_s: report.exec_s,
+        parallel_s: report.par_wall_s,
     };
     metrics.record_minibatch(pending.len(), &breakdown, &report);
 
@@ -925,6 +943,7 @@ fn process_merged(
         scheduling_s,
         planning_s: report.planning_s,
         execution_s: report.exec_s,
+        parallel_s: report.par_wall_s,
     };
     metrics.record_minibatch(pending.len(), &breakdown, &report);
 
@@ -1249,6 +1268,33 @@ mod tests {
         let w = Workload::new(WorkloadKind::TreeLstm, 32);
         assert!(store.lookup_scheduler_workload(&w).is_some());
         let _ = std::fs::remove_dir_all(&dir);
+    }
+
+    #[test]
+    fn threaded_workers_serve_bit_identical_responses() {
+        // the --threads serving contract: same requests, same policy seed,
+        // different intra-batch thread counts -> byte-identical responses
+        let w = Workload::new(WorkloadKind::TreeLstm, 32);
+        let mut rng = Rng::new(44);
+        let graphs: Vec<Graph> = (0..5).map(|_| w.gen_instance(&mut rng)).collect();
+        let run = |threads: usize| {
+            let mut cfg = quick_config(SystemMode::EdBatch);
+            cfg.threads = threads;
+            let server = Server::start(cfg).unwrap();
+            let client = server.client(WorkloadKind::TreeLstm);
+            let outs: Vec<Vec<Vec<f32>>> = graphs
+                .iter()
+                .map(|g| client.infer(g.clone()).unwrap().to_vecs())
+                .collect();
+            let snap = server.metrics.snapshot();
+            server.shutdown().unwrap();
+            (outs, snap.pool_threads)
+        };
+        let (serial, t1) = run(1);
+        let (pooled, t3) = run(3);
+        assert_eq!(t1, 1);
+        assert_eq!(t3, 3);
+        assert_eq!(serial, pooled, "responses must be bit-identical across --threads");
     }
 
     #[test]

@@ -13,6 +13,8 @@
 //! Both backends generate identical per-(cell, hidden) weights via
 //! [`CellWeights`], so CPU/PJRT numerics can be cross-checked end to end.
 
+use std::sync::Arc;
+
 use anyhow::{anyhow, Result};
 use rustc_hash::FxHashMap;
 
@@ -21,6 +23,7 @@ use crate::runtime::ArtifactRegistry;
 use crate::util::rng::Rng;
 
 use super::cpu_kernels as k;
+use super::pool::{self, SendPtr, ThreadPool};
 
 /// A batched cell executor. `data` buffers hold `bucket` lanes per data
 /// argument (zero-padded past the real lane count); outputs are written
@@ -74,6 +77,18 @@ pub trait ExecBackend {
     fn extra_launches(&mut self, n: usize) -> Result<usize> {
         let _ = n;
         Ok(0)
+    }
+
+    /// Install a thread pool for intra-batch lane parallelism
+    /// ([`super::pool`]). Backends without a parallel path ignore it
+    /// (default no-op); the CPU backend splits every
+    /// [`ExecBackend::run_cell_into`] call into fixed lane chunks whose
+    /// disjoint output slices are computed work-shared across the pool —
+    /// bit-identical to serial execution at any thread count, because
+    /// chunk boundaries are thread-count-independent and no kernel has a
+    /// cross-lane reduction.
+    fn set_pool(&mut self, pool: Arc<ThreadPool>) {
+        let _ = pool;
     }
 }
 
@@ -148,16 +163,39 @@ impl CellWeights {
 // CPU reference backend
 // ---------------------------------------------------------------------
 
-pub struct CpuBackend {
-    hidden: usize,
-    weights: CellWeights,
-    /// pooled intermediate buffers (gates / candidates / per-lane staging)
-    /// reused across [`ExecBackend::run_cell_into`] calls — the backend
-    /// allocates nothing per batch once warm
+/// Pooled kernel temporaries (gates / candidates / per-lane staging) for
+/// one chunk of lanes. The serial path owns one; under a thread pool
+/// every worker slot owns its own, so chunks never share intermediate
+/// buffers (outputs are disjoint by lane range regardless).
+#[derive(Default)]
+struct LaneScratch {
     t0: Vec<f32>,
     t1: Vec<f32>,
     t2: Vec<f32>,
     t3: Vec<f32>,
+}
+
+/// Memoized per-cell layout (output widths + data-arg widths): computed
+/// once per cell so the warm [`ExecBackend::run_cell_into`] path never
+/// allocates for them.
+struct CellMeta {
+    ow: Vec<usize>,
+    widths: Vec<usize>,
+}
+
+pub struct CpuBackend {
+    hidden: usize,
+    weights: CellWeights,
+    /// per-cell width tables (see [`CellMeta`])
+    meta: FxHashMap<String, CellMeta>,
+    /// serial-path temporaries, reused across
+    /// [`ExecBackend::run_cell_into`] calls — the backend allocates
+    /// nothing per batch once warm
+    scratch: LaneScratch,
+    /// intra-batch lane-parallel pool ([`ExecBackend::set_pool`])
+    pool: Option<Arc<ThreadPool>>,
+    /// one scratch set per pool worker slot (allocation-free once warm)
+    par_scratch: Vec<LaneScratch>,
 }
 
 impl CpuBackend {
@@ -165,10 +203,10 @@ impl CpuBackend {
         CpuBackend {
             hidden,
             weights: CellWeights::new(hidden),
-            t0: Vec::new(),
-            t1: Vec::new(),
-            t2: Vec::new(),
-            t3: Vec::new(),
+            meta: FxHashMap::default(),
+            scratch: LaneScratch::default(),
+            pool: None,
+            par_scratch: Vec::new(),
         }
     }
 }
@@ -179,12 +217,6 @@ fn fit(buf: &mut Vec<f32>, n: usize) -> &mut [f32] {
     buf.clear();
     buf.resize(n, 0.0);
     &mut buf[..]
-}
-
-/// Split a two-output `outs` into its (h, c/M) buffers.
-fn split2<'a>(outs: &'a mut [&mut [f32]]) -> (&'a mut [f32], &'a mut [f32]) {
-    let (a, rest) = outs.split_at_mut(1);
-    (&mut *a[0], &mut *rest[0])
 }
 
 impl ExecBackend for CpuBackend {
@@ -200,6 +232,12 @@ impl ExecBackend for CpuBackend {
         Ok(vec![lanes.max(1)])
     }
 
+    /// Dispatch: one serial chunk over every lane, or — with a pool
+    /// installed — fixed lane chunks work-shared across the pool's
+    /// threads. Both paths run [`run_cell_lanes`], the single per-lane
+    /// kernel body, so values are bit-identical by construction; the
+    /// chunk split only decides which thread computes which disjoint
+    /// output rows.
     fn run_cell_into(
         &mut self,
         cell: &str,
@@ -207,146 +245,228 @@ impl ExecBackend for CpuBackend {
         bucket: usize,
         outs: &mut [&mut [f32]],
     ) -> Result<()> {
-        let b = bucket;
-        let nc = cells::NUM_CLASSES;
-        // disjoint field borrows: weights for the shared tensors, t0..t3 as
-        // scratch, so the whole call is allocation-free once warm
+        // disjoint field borrows: weights for the shared tensors, the
+        // scratch sets for temporaries, memoized width tables — the
+        // whole call is allocation-free once warm
         let CpuBackend {
             hidden,
             weights,
-            t0,
-            t1,
-            t2,
-            t3,
+            meta,
+            scratch,
+            pool,
+            par_scratch,
         } = self;
         let h = *hidden;
-        debug_assert_eq!(outs.len(), cells::out_widths(cell, h).len(), "{cell}");
-        debug_assert_eq!(data.len(), cells::data_arg_count(cell), "{cell}");
-        let w = weights.get(cell);
-        match cell {
-            "lstm" => {
-                let gates = fit(t0, b * 4 * h);
-                affine2_into(data[0], data[1], &w[0], &w[1], &w[2], b, h, 4 * h, t1, gates);
-                let (hn, cn) = split2(outs);
-                lstm_pointwise_into(gates, data[2], b, h, hn, cn);
+        if !meta.contains_key(cell) {
+            let ow = cells::out_widths(cell, h);
+            if ow.is_empty() {
+                return Err(anyhow!("cpu backend: unknown cell {cell}"));
             }
-            "gru" => {
-                let rz = fit(t0, b * 2 * h);
-                affine2_into(data[0], data[1], &w[0], &w[1], &w[2], b, h, 2 * h, t1, rz);
-                let nx = fit(t1, b * h);
-                k::matmul(data[0], &w[3], nx, b, h, h);
-                let nh = fit(t2, b * h);
-                k::matmul(data[1], &w[4], nh, b, h, h);
-                let out = &mut *outs[0];
-                for i in 0..b {
-                    for j in 0..h {
-                        let r = sigm(rz[i * 2 * h + j]);
-                        let z = sigm(rz[i * 2 * h + h + j]);
-                        let n = ((nx[i * h + j] + w[5][j]) + r * nh[i * h + j]).tanh();
-                        out[i * h + j] = (1.0 - z) * n + z * data[1][i * h + j];
-                    }
-                }
-            }
-            "treelstm_internal" => {
-                let gates = fit(t0, b * 5 * h);
-                affine2_into(data[0], data[1], &w[0], &w[1], &w[2], b, h, 5 * h, t1, gates);
-                let (hn, cn) = split2(outs);
-                treelstm_pointwise_into(gates, data[2], data[3], b, h, hn, cn);
-            }
-            "treelstm_leaf" => {
-                let g = fit(t0, b * 3 * h);
-                k::matmul(data[0], &w[0], g, b, h, 3 * h);
-                let gb = fit(t1, b * 3 * h);
-                k::add_bias(g, &w[1], gb);
-                let (hn, cn) = split2(outs);
-                for i in 0..b {
-                    for j in 0..h {
-                        let g = |kk: usize| gb[i * 3 * h + kk * h + j];
-                        let cv = sigm(g(0)) * g(1).tanh();
-                        cn[i * h + j] = cv;
-                        hn[i * h + j] = sigm(g(2)) * cv.tanh();
-                    }
-                }
-            }
-            "treegru_internal" => {
-                let rz = fit(t0, b * 3 * h);
-                affine2_into(data[0], data[1], &w[0], &w[1], &w[2], b, h, 3 * h, t1, rz);
-                // candidate: tanh((r_l*h_l) @ w3 + (r_r*h_r) @ w4 + b5)
-                let rhl = fit(t1, b * h);
-                let rhr = fit(t2, b * h);
-                for i in 0..b {
-                    for j in 0..h {
-                        rhl[i * h + j] = sigm(rz[i * 3 * h + j]) * data[0][i * h + j];
-                        rhr[i * h + j] = sigm(rz[i * 3 * h + h + j]) * data[1][i * h + j];
-                    }
-                }
-                let n1 = fit(t3, b * h);
-                k::matmul(rhl, &w[3], n1, b, h, h);
-                let n2 = fit(t1, b * h);
-                k::matmul(rhr, &w[4], n2, b, h, h);
-                let out = &mut *outs[0];
-                for i in 0..b {
-                    for j in 0..h {
-                        let z = sigm(rz[i * 3 * h + 2 * h + j]);
-                        let n = (n1[i * h + j] + n2[i * h + j] + w[5][j]).tanh();
-                        let hbar = 0.5 * (data[0][i * h + j] + data[1][i * h + j]);
-                        out[i * h + j] = (1.0 - z) * n + z * hbar;
-                    }
-                }
-            }
-            "treegru_leaf" => {
-                let m = fit(t0, b * h);
-                k::matmul(data[0], &w[0], m, b, h, h);
-                let mb = fit(t1, b * h);
-                k::add_bias(m, &w[1], mb);
-                k::tanh(mb, &mut *outs[0]);
-            }
-            "mv_cell" => {
-                // cross_l[b] = M_r[b] h_l[b]; cross_r[b] = M_l[b] h_r[b]
-                let cat = fit(t0, b * 2 * h);
-                for i in 0..b {
-                    for r in 0..h {
-                        let mut acc_l = 0.0;
-                        let mut acc_r = 0.0;
-                        for cidx in 0..h {
-                            acc_l += data[3][i * h * h + r * h + cidx] * data[0][i * h + cidx];
-                            acc_r += data[2][i * h * h + r * h + cidx] * data[1][i * h + cidx];
-                        }
-                        cat[i * 2 * h + r] = acc_l;
-                        cat[i * 2 * h + h + r] = acc_r;
-                    }
-                }
-                let hv = fit(t1, b * h);
-                k::matmul(cat, &w[0], hv, b, 2 * h, h);
-                let (hout, mout) = split2(outs);
-                for i in 0..b {
-                    for j in 0..h {
-                        hout[i * h + j] = (hv[i * h + j] + w[1][j]).tanh();
-                    }
-                }
-                // m' = w2[h,2h] @ [M_l; M_r] + w3
-                let stacked = fit(t2, 2 * h * h);
-                let mm = fit(t3, h * h);
-                for i in 0..b {
-                    stacked[..h * h].copy_from_slice(&data[2][i * h * h..(i + 1) * h * h]);
-                    stacked[h * h..].copy_from_slice(&data[3][i * h * h..(i + 1) * h * h]);
-                    k::matmul(&w[2], stacked, mm, h, 2 * h, h);
-                    for (o, (&a, &bv)) in mout[i * h * h..(i + 1) * h * h]
-                        .iter_mut()
-                        .zip(mm.iter().zip(w[3].iter()))
-                    {
-                        *o = a + bv;
-                    }
-                }
-            }
-            "classifier" => {
-                let l = fit(t0, b * nc);
-                k::matmul(data[0], &w[0], l, b, h, nc);
-                k::add_bias(l, &w[1], &mut *outs[0]);
-            }
-            other => return Err(anyhow!("cpu backend: unknown cell {other}")),
+            let widths = cells::data_arg_widths(cell, h);
+            meta.insert(cell.to_string(), CellMeta { ow, widths });
         }
+        let m = &meta[cell];
+        let (ow, widths) = (&m.ow, &m.widths);
+        debug_assert_eq!(outs.len(), ow.len(), "{cell}");
+        debug_assert_eq!(data.len(), cells::data_arg_count(cell), "{cell}");
+        for (o, wo) in outs.iter().zip(ow) {
+            debug_assert_eq!(o.len(), bucket * wo, "{cell}");
+        }
+        let w = weights.get(cell);
+
+        let nch = pool::num_lane_chunks(bucket);
+        if let Some(p) = pool {
+            if p.threads() > 1 && nch > 1 {
+                debug_assert!(par_scratch.len() >= p.threads());
+                // disjoint raw windows: split first so neither pointer is
+                // derived from a borrow the other invalidates
+                let (first, rest) = outs.split_at_mut(1);
+                let o0 = SendPtr(first[0].as_mut_ptr());
+                let o1 = rest
+                    .first_mut()
+                    .map(|o| SendPtr(o.as_mut_ptr()))
+                    .zip(ow.get(1).copied());
+                let sp = SendPtr(par_scratch.as_mut_ptr());
+                p.run(nch, |slot, chunk| {
+                    let (lo, hi) = pool::lane_chunk(chunk, bucket);
+                    let b = hi - lo;
+                    // SAFETY: one LaneScratch per worker slot; a slot
+                    // identifies exactly one concurrently-running thread
+                    let s = unsafe { &mut *sp.0.add(slot) };
+                    let mut dsub: [&[f32]; 4] = [&[]; 4];
+                    for (a, full) in data.iter().enumerate() {
+                        dsub[a] = &full[lo * widths[a]..hi * widths[a]];
+                    }
+                    // SAFETY: chunks own disjoint lane ranges, so these
+                    // row windows never overlap across chunks
+                    let out0 = unsafe {
+                        std::slice::from_raw_parts_mut(o0.0.add(lo * ow[0]), b * ow[0])
+                    };
+                    let out1 = o1.map(|(p1, w1)| unsafe {
+                        std::slice::from_raw_parts_mut(p1.0.add(lo * w1), b * w1)
+                    });
+                    run_cell_lanes(cell, &dsub[..data.len()], w, h, b, out0, out1, s);
+                });
+                return Ok(());
+            }
+        }
+
+        // serial: a single chunk covering every lane
+        let (first, rest) = outs.split_at_mut(1);
+        let out1 = rest.first_mut().map(|o| &mut **o);
+        run_cell_lanes(cell, data, w, h, bucket, &mut *first[0], out1, scratch);
         Ok(())
+    }
+
+    fn set_pool(&mut self, pool: Arc<ThreadPool>) {
+        self.par_scratch = (0..pool.threads()).map(|_| LaneScratch::default()).collect();
+        self.pool = Some(pool);
+    }
+}
+
+/// Execute `b` lanes of `cell` — the one kernel body both the serial
+/// path (one call, `b` = the whole bucket) and the parallel path (one
+/// call per fixed lane chunk) run. All slices hold exactly `b` lanes:
+/// `data[a]` is `b * data_arg_widths[a]` elements, `out0`/`out1` are
+/// `b * out_widths[i]` and fully overwritten. Every loop touches only
+/// its own lane's rows (no cross-lane reduction anywhere), so splitting
+/// a batch into lane ranges cannot change any output bit — the serving
+/// bit-equality contract the `--threads` path rests on.
+///
+/// `cell` must be a known artifact cell (callers validate via
+/// [`cells::out_widths`] first).
+#[allow(clippy::too_many_arguments)]
+fn run_cell_lanes(
+    cell: &str,
+    data: &[&[f32]],
+    w: &[Vec<f32>],
+    h: usize,
+    b: usize,
+    out0: &mut [f32],
+    out1: Option<&mut [f32]>,
+    s: &mut LaneScratch,
+) {
+    let nc = cells::NUM_CLASSES;
+    match cell {
+        "lstm" => {
+            let gates = fit(&mut s.t0, b * 4 * h);
+            affine2_into(data[0], data[1], &w[0], &w[1], &w[2], b, h, 4 * h, &mut s.t1, gates);
+            let cn = out1.expect("lstm has two outputs");
+            lstm_pointwise_into(gates, data[2], b, h, out0, cn);
+        }
+        "gru" => {
+            let rz = fit(&mut s.t0, b * 2 * h);
+            affine2_into(data[0], data[1], &w[0], &w[1], &w[2], b, h, 2 * h, &mut s.t1, rz);
+            let nx = fit(&mut s.t1, b * h);
+            k::matmul(data[0], &w[3], nx, b, h, h);
+            let nh = fit(&mut s.t2, b * h);
+            k::matmul(data[1], &w[4], nh, b, h, h);
+            for i in 0..b {
+                for j in 0..h {
+                    let r = sigm(rz[i * 2 * h + j]);
+                    let z = sigm(rz[i * 2 * h + h + j]);
+                    let n = ((nx[i * h + j] + w[5][j]) + r * nh[i * h + j]).tanh();
+                    out0[i * h + j] = (1.0 - z) * n + z * data[1][i * h + j];
+                }
+            }
+        }
+        "treelstm_internal" => {
+            let gates = fit(&mut s.t0, b * 5 * h);
+            affine2_into(data[0], data[1], &w[0], &w[1], &w[2], b, h, 5 * h, &mut s.t1, gates);
+            let cn = out1.expect("treelstm has two outputs");
+            treelstm_pointwise_into(gates, data[2], data[3], b, h, out0, cn);
+        }
+        "treelstm_leaf" => {
+            let g = fit(&mut s.t0, b * 3 * h);
+            k::matmul(data[0], &w[0], g, b, h, 3 * h);
+            let gb = fit(&mut s.t1, b * 3 * h);
+            k::add_bias(g, &w[1], gb);
+            let cn = out1.expect("treelstm leaf has two outputs");
+            for i in 0..b {
+                for j in 0..h {
+                    let g = |kk: usize| gb[i * 3 * h + kk * h + j];
+                    let cv = sigm(g(0)) * g(1).tanh();
+                    cn[i * h + j] = cv;
+                    out0[i * h + j] = sigm(g(2)) * cv.tanh();
+                }
+            }
+        }
+        "treegru_internal" => {
+            let rz = fit(&mut s.t0, b * 3 * h);
+            affine2_into(data[0], data[1], &w[0], &w[1], &w[2], b, h, 3 * h, &mut s.t1, rz);
+            // candidate: tanh((r_l*h_l) @ w3 + (r_r*h_r) @ w4 + b5)
+            let rhl = fit(&mut s.t1, b * h);
+            let rhr = fit(&mut s.t2, b * h);
+            for i in 0..b {
+                for j in 0..h {
+                    rhl[i * h + j] = sigm(rz[i * 3 * h + j]) * data[0][i * h + j];
+                    rhr[i * h + j] = sigm(rz[i * 3 * h + h + j]) * data[1][i * h + j];
+                }
+            }
+            let n1 = fit(&mut s.t3, b * h);
+            k::matmul(rhl, &w[3], n1, b, h, h);
+            let n2 = fit(&mut s.t1, b * h);
+            k::matmul(rhr, &w[4], n2, b, h, h);
+            for i in 0..b {
+                for j in 0..h {
+                    let z = sigm(rz[i * 3 * h + 2 * h + j]);
+                    let n = (n1[i * h + j] + n2[i * h + j] + w[5][j]).tanh();
+                    let hbar = 0.5 * (data[0][i * h + j] + data[1][i * h + j]);
+                    out0[i * h + j] = (1.0 - z) * n + z * hbar;
+                }
+            }
+        }
+        "treegru_leaf" => {
+            let m = fit(&mut s.t0, b * h);
+            k::matmul(data[0], &w[0], m, b, h, h);
+            let mb = fit(&mut s.t1, b * h);
+            k::add_bias(m, &w[1], mb);
+            k::tanh(mb, out0);
+        }
+        "mv_cell" => {
+            // cross_l[b] = M_r[b] h_l[b]; cross_r[b] = M_l[b] h_r[b]
+            let cat = fit(&mut s.t0, b * 2 * h);
+            for i in 0..b {
+                for r in 0..h {
+                    let mut acc_l = 0.0;
+                    let mut acc_r = 0.0;
+                    for cidx in 0..h {
+                        acc_l += data[3][i * h * h + r * h + cidx] * data[0][i * h + cidx];
+                        acc_r += data[2][i * h * h + r * h + cidx] * data[1][i * h + cidx];
+                    }
+                    cat[i * 2 * h + r] = acc_l;
+                    cat[i * 2 * h + h + r] = acc_r;
+                }
+            }
+            let hv = fit(&mut s.t1, b * h);
+            k::matmul(cat, &w[0], hv, b, 2 * h, h);
+            let mout = out1.expect("mv_cell has two outputs");
+            for i in 0..b {
+                for j in 0..h {
+                    out0[i * h + j] = (hv[i * h + j] + w[1][j]).tanh();
+                }
+            }
+            // m' = w2[h,2h] @ [M_l; M_r] + w3
+            let stacked = fit(&mut s.t2, 2 * h * h);
+            let mm = fit(&mut s.t3, h * h);
+            for i in 0..b {
+                stacked[..h * h].copy_from_slice(&data[2][i * h * h..(i + 1) * h * h]);
+                stacked[h * h..].copy_from_slice(&data[3][i * h * h..(i + 1) * h * h]);
+                k::matmul(&w[2], stacked, mm, h, 2 * h, h);
+                for (o, (&a, &bv)) in mout[i * h * h..(i + 1) * h * h]
+                    .iter_mut()
+                    .zip(mm.iter().zip(w[3].iter()))
+                {
+                    *o = a + bv;
+                }
+            }
+        }
+        "classifier" => {
+            let l = fit(&mut s.t0, b * nc);
+            k::matmul(data[0], &w[0], l, b, h, nc);
+            k::add_bias(l, &w[1], out0);
+        }
+        other => unreachable!("run_cell_lanes: unvalidated cell {other}"),
     }
 }
 
@@ -668,5 +788,63 @@ mod tests {
         let mut b = CellWeights::new(16);
         assert_eq!(a.get("lstm"), b.get("lstm"));
         assert_eq!(a.get("lstm").len(), weight_shapes("lstm", 16).len());
+    }
+
+    #[test]
+    fn pooled_run_cell_into_bit_identical_to_serial_every_cell() {
+        // the tentpole contract at the kernel level: a pooled backend must
+        // reproduce the serial backend's outputs bit-for-bit for every
+        // cell, at lane counts exercising full chunks + a partial tail,
+        // at several thread counts (incl. more threads than chunks)
+        let h = 16;
+        for cell in [
+            "lstm",
+            "gru",
+            "treelstm_internal",
+            "treelstm_leaf",
+            "treegru_internal",
+            "treegru_leaf",
+            "mv_cell",
+            "classifier",
+        ] {
+            for b in [1usize, 7, 8, 9, 21, 40] {
+                let widths = cells::data_arg_widths(cell, h);
+                let bufs: Vec<Vec<f32>> = widths
+                    .iter()
+                    .enumerate()
+                    .map(|(i, w)| {
+                        (0..b * w).map(|j| ((i * 31 + j) as f32 * 0.013).sin() * 0.4).collect()
+                    })
+                    .collect();
+                let data: Vec<&[f32]> = bufs.iter().map(|v| v.as_slice()).collect();
+                let mut serial = CpuBackend::new(h);
+                let want = serial.run_cell(cell, &data, b).unwrap();
+                for threads in [2usize, 3, 8] {
+                    let mut pooled = CpuBackend::new(h);
+                    pooled.set_pool(Arc::new(ThreadPool::new(threads)));
+                    let got = pooled.run_cell(cell, &data, b).unwrap();
+                    assert_eq!(want, got, "{cell} b={b} threads={threads}");
+                }
+            }
+        }
+    }
+
+    #[test]
+    fn pooled_backend_reports_parallel_sections() {
+        let h = 16;
+        let pool = Arc::new(ThreadPool::new(2));
+        let mut be = CpuBackend::new(h);
+        be.set_pool(pool.clone());
+        let b = 24; // 3 chunks
+        let widths = cells::data_arg_widths("lstm", h);
+        let bufs: Vec<Vec<f32>> = widths
+            .iter()
+            .map(|w| vec![0.1f32; b * w])
+            .collect();
+        let data: Vec<&[f32]> = bufs.iter().map(|v| v.as_slice()).collect();
+        be.run_cell("lstm", &data, b).unwrap();
+        let s = pool.stats();
+        assert_eq!(s.sections, 1);
+        assert_eq!(s.chunks, 3);
     }
 }

@@ -4,6 +4,11 @@
 //! * [`backend`] — the [`backend::ExecBackend`] trait plus its CPU
 //!   reference and PJRT implementations; the cell-granularity engine in
 //!   [`crate::coordinator::engine`] dispatches every batch through it.
+//! * [`pool`] — hand-rolled scoped work-sharing thread pool for
+//!   intra-batch lane parallelism: the CPU backend splits each batched
+//!   kernel into fixed, thread-count-independent lane chunks whose
+//!   disjoint output slices are computed in place across `--threads`
+//!   workers, bit-identical to serial execution.
 //! * [`SubgraphExec`] — executes a static subgraph's batched *primitive*
 //!   ops over a flat arena under a [`MemoryPlan`], performing real
 //!   gather/scatter copies wherever the layout falls short (the Table-2
@@ -11,6 +16,7 @@
 
 pub mod backend;
 pub mod cpu_kernels;
+pub mod pool;
 
 use std::time::Instant;
 

@@ -1,0 +1,461 @@
+//! Hand-rolled scoped work-sharing thread pool for intra-batch lane
+//! parallelism (vendor-style: std-only, no crates.io — the build must
+//! work fully offline, see Cargo.toml).
+//!
+//! The CPU backend executes every batched cell kernel on one core; at
+//! serving widths the mini-batch is embarrassingly parallel across
+//! *lanes* (lane `i`'s outputs depend only on lane `i`'s inputs — the
+//! serving bit-equality contract, see `exec::backend`). This pool lets
+//! one engine spread a batch's lanes over several cores while keeping
+//! outputs **bit-identical to serial execution at any thread count**:
+//!
+//! * Work is split into **fixed lane chunks** ([`lane_chunk`], chunk size
+//!   [`CHUNK_LANES`]): chunk boundaries depend only on the lane count,
+//!   never on how many threads exist or which thread claims which chunk.
+//! * Each chunk computes with the exact per-lane arithmetic of the
+//!   serial path and writes a **disjoint slice** of the output buffers
+//!   in place. No cross-lane reductions exist anywhere in the cell
+//!   kernels, so there is nothing whose result could depend on chunk
+//!   assignment or completion order.
+//! * Threads **share work dynamically** (an atomic chunk cursor), which
+//!   only affects *who* computes a chunk, never *what* the chunk
+//!   computes.
+//!
+//! The pool is **scoped**: [`ThreadPool::run`] accepts a closure that
+//! borrows the caller's stack (operand views, output slices, per-thread
+//! scratch) and does not return until every chunk has executed and every
+//! worker has left the parallel section, so the borrow never escapes.
+//! Workers are persistent (spawned once, parked on a condvar between
+//! sections) — a parallel section costs two condvar signals, not N
+//! thread spawns.
+//!
+//! Occupancy accounting: the pool tracks parallel-section wall time and
+//! summed per-chunk busy time ([`PoolStats`]); the engine surfaces both
+//! per mini-batch (`ExecReport`) and the serve summary reports
+//! `busy / (wall × threads)` as pool occupancy.
+
+use std::sync::atomic::{AtomicU64, AtomicUsize, Ordering};
+use std::sync::{Arc, Condvar, Mutex};
+use std::thread::JoinHandle;
+use std::time::Instant;
+
+/// Lanes per parallel chunk. Fixed — chunk boundaries are a pure
+/// function of the lane count ([`lane_chunk`]), independent of thread
+/// count, so the set of (disjoint) output slices written is identical at
+/// any `--threads` value. 8 lanes of a hidden-64 cell is enough work
+/// (~100k flops) to amortize the chunk-claim atomics.
+pub const CHUNK_LANES: usize = 8;
+
+/// Number of fixed lane chunks a batch of `lanes` splits into.
+pub fn num_lane_chunks(lanes: usize) -> usize {
+    lanes.div_ceil(CHUNK_LANES)
+}
+
+/// Lane range `[lo, hi)` of chunk `chunk` in a batch of `lanes`: full
+/// [`CHUNK_LANES`]-sized chunks with a short tail. Depends only on
+/// (`chunk`, `lanes`) — never on thread count (pinned in tests).
+pub fn lane_chunk(chunk: usize, lanes: usize) -> (usize, usize) {
+    let lo = chunk * CHUNK_LANES;
+    (lo.min(lanes), lanes.min(lo + CHUNK_LANES))
+}
+
+/// Default intra-batch thread count for a process running `workers`
+/// engine workers: the machine's available parallelism divided evenly,
+/// at least 1 (so `serve --workers N` never oversubscribes by default).
+pub fn default_threads(workers: usize) -> usize {
+    let cores = std::thread::available_parallelism()
+        .map(|n| n.get())
+        .unwrap_or(1);
+    (cores / workers.max(1)).max(1)
+}
+
+/// Raw-pointer wrapper that asserts cross-thread shareability. Used by
+/// kernels to hand each chunk a disjoint `&mut` sub-slice of a shared
+/// output buffer (or a per-worker-slot scratch entry).
+///
+/// Safety contract (on the *user* of the pointer): concurrent accesses
+/// through copies of one `SendPtr` must target disjoint memory — for
+/// lane-chunked kernels this holds because chunks own disjoint lane
+/// ranges, and worker slots are unique per concurrent thread.
+pub struct SendPtr<T>(pub *mut T);
+
+impl<T> Clone for SendPtr<T> {
+    fn clone(&self) -> Self {
+        SendPtr(self.0)
+    }
+}
+impl<T> Copy for SendPtr<T> {}
+unsafe impl<T> Send for SendPtr<T> {}
+unsafe impl<T> Sync for SendPtr<T> {}
+
+/// Cumulative pool counters (monotonic; diff two snapshots for a
+/// per-mini-batch view).
+#[derive(Clone, Copy, Debug, Default, PartialEq)]
+pub struct PoolStats {
+    /// parallel sections executed (serial fallbacks are not counted)
+    pub sections: u64,
+    /// chunks executed inside parallel sections
+    pub chunks: u64,
+    /// wall time spent inside parallel sections (seconds)
+    pub wall_s: f64,
+    /// summed per-chunk execution time across all threads (seconds);
+    /// `busy / (wall × threads)` is the pool occupancy
+    pub busy_s: f64,
+}
+
+/// The job workers see: a type-erased borrow of the caller's closure
+/// (thin data pointer + monomorphized call thunk) plus the chunk count.
+/// Only ever dereferenced between the moment a worker registers as
+/// active (under the pool lock) and the moment it deregisters — and
+/// [`ThreadPool::run`] does not return (ending the closure's lifetime)
+/// until no worker is active and no chunk is pending, so the pointer is
+/// always valid when used.
+#[derive(Clone, Copy)]
+struct Job {
+    data: *const (),
+    /// SAFETY(caller): `data` must point to the live `F` this thunk was
+    /// monomorphized for
+    call: unsafe fn(*const (), usize, usize),
+    num_chunks: usize,
+}
+unsafe impl Send for Job {}
+
+/// Monomorphized trampoline reconstructing `&F` from the erased pointer.
+unsafe fn call_thunk<F: Fn(usize, usize) + Sync>(data: *const (), slot: usize, chunk: usize) {
+    (*(data as *const F))(slot, chunk)
+}
+
+struct PoolState {
+    job: Option<Job>,
+    /// bumped once per installed job so sleeping workers can tell a new
+    /// job from a spurious wakeup
+    generation: u64,
+    /// workers currently inside the chunk-claim loop for the current job
+    active: usize,
+    shutdown: bool,
+}
+
+struct Shared {
+    state: Mutex<PoolState>,
+    /// workers park here between jobs
+    work_cv: Condvar,
+    /// the caller parks here waiting for stragglers
+    done_cv: Condvar,
+    /// next chunk index to claim (work sharing)
+    next_chunk: AtomicUsize,
+    /// chunks claimed but not yet completed + chunks never claimed
+    pending: AtomicUsize,
+    busy_ns: AtomicU64,
+    chunks_done: AtomicU64,
+}
+
+/// Persistent work-sharing pool of `threads` workers (the calling thread
+/// counts as worker slot 0; `threads - 1` background threads are
+/// spawned). Dropping the pool joins every worker.
+pub struct ThreadPool {
+    shared: Arc<Shared>,
+    handles: Vec<JoinHandle<()>>,
+    threads: usize,
+    sections: AtomicU64,
+    wall_ns: AtomicU64,
+    /// reentrancy guard: a pool belongs to one engine thread; two
+    /// concurrent [`ThreadPool::run`] calls would race the chunk cursor
+    in_run: std::sync::atomic::AtomicBool,
+}
+
+impl ThreadPool {
+    pub fn new(threads: usize) -> ThreadPool {
+        let threads = threads.max(1);
+        let shared = Arc::new(Shared {
+            state: Mutex::new(PoolState {
+                job: None,
+                generation: 0,
+                active: 0,
+                shutdown: false,
+            }),
+            work_cv: Condvar::new(),
+            done_cv: Condvar::new(),
+            next_chunk: AtomicUsize::new(0),
+            pending: AtomicUsize::new(0),
+            busy_ns: AtomicU64::new(0),
+            chunks_done: AtomicU64::new(0),
+        });
+        let mut handles = Vec::with_capacity(threads - 1);
+        for slot in 1..threads {
+            let sh = shared.clone();
+            let h = std::thread::Builder::new()
+                .name(format!("ed-pool-{slot}"))
+                .spawn(move || worker_main(sh, slot))
+                .expect("spawn pool worker");
+            handles.push(h);
+        }
+        ThreadPool {
+            shared,
+            handles,
+            threads,
+            sections: AtomicU64::new(0),
+            wall_ns: AtomicU64::new(0),
+            in_run: std::sync::atomic::AtomicBool::new(false),
+        }
+    }
+
+    /// Total worker slots, including the calling thread.
+    pub fn threads(&self) -> usize {
+        self.threads
+    }
+
+    /// Monotonic counters; diff two snapshots for a per-call view.
+    pub fn stats(&self) -> PoolStats {
+        PoolStats {
+            sections: self.sections.load(Ordering::Relaxed),
+            chunks: self.shared.chunks_done.load(Ordering::Relaxed),
+            wall_s: self.wall_ns.load(Ordering::Relaxed) as f64 * 1e-9,
+            busy_s: self.shared.busy_ns.load(Ordering::Relaxed) as f64 * 1e-9,
+        }
+    }
+
+    /// Execute `f(worker_slot, chunk)` for every `chunk` in
+    /// `0..num_chunks`, sharing chunks across all worker slots; blocks
+    /// until every chunk has run. `worker_slot < threads()` identifies
+    /// the executing thread (slot 0 = the caller), so callers may hand
+    /// out per-slot scratch. With one thread (or one chunk) the call
+    /// degenerates to a serial loop on the caller — same chunks, same
+    /// values, by construction.
+    pub fn run<F: Fn(usize, usize) + Sync>(&self, num_chunks: usize, f: F) {
+        if num_chunks == 0 {
+            return;
+        }
+        if self.threads == 1 || num_chunks == 1 {
+            for c in 0..num_chunks {
+                f(0, c);
+            }
+            return;
+        }
+        let t0 = Instant::now();
+        debug_assert!(
+            !self.in_run.swap(true, Ordering::SeqCst),
+            "ThreadPool::run is not reentrant/concurrent: one pool per engine thread"
+        );
+        // Lifetime erasure through a thin pointer + monomorphized thunk.
+        // SAFETY: the job pointer is only dereferenced by workers
+        // registered as `active`, and this function does not return
+        // until `pending == 0 && active == 0`, so `f` strictly outlives
+        // every use.
+        let job = Job {
+            data: &f as *const F as *const (),
+            call: call_thunk::<F>,
+            num_chunks,
+        };
+        // counters are only reset here, and only after the previous
+        // run() observed active == 0 — no stale worker can still claim
+        self.shared.next_chunk.store(0, Ordering::SeqCst);
+        self.shared.pending.store(num_chunks, Ordering::SeqCst);
+        {
+            let mut st = self.shared.state.lock().unwrap();
+            st.generation += 1;
+            st.job = Some(job);
+        }
+        self.shared.work_cv.notify_all();
+
+        // the caller is worker slot 0
+        drain(&self.shared, 0, job);
+
+        let mut st = self.shared.state.lock().unwrap();
+        while self.shared.pending.load(Ordering::SeqCst) != 0 || st.active != 0 {
+            st = self.shared.done_cv.wait(st).unwrap();
+        }
+        st.job = None;
+        drop(st);
+        self.in_run.store(false, Ordering::SeqCst);
+        self.sections.fetch_add(1, Ordering::Relaxed);
+        self.wall_ns
+            .fetch_add(t0.elapsed().as_nanos() as u64, Ordering::Relaxed);
+    }
+}
+
+impl Drop for ThreadPool {
+    fn drop(&mut self) {
+        {
+            let mut st = self.shared.state.lock().unwrap();
+            st.shutdown = true;
+        }
+        self.shared.work_cv.notify_all();
+        for h in self.handles.drain(..) {
+            let _ = h.join();
+        }
+    }
+}
+
+/// Claim and execute chunks of `job` until none remain.
+fn drain(shared: &Shared, slot: usize, job: Job) {
+    loop {
+        let c = shared.next_chunk.fetch_add(1, Ordering::SeqCst);
+        if c >= job.num_chunks {
+            return;
+        }
+        let t0 = Instant::now();
+        // SAFETY: see `Job` — the closure is alive while any worker is
+        // registered active / any chunk is pending.
+        unsafe { (job.call)(job.data, slot, c) };
+        shared
+            .busy_ns
+            .fetch_add(t0.elapsed().as_nanos() as u64, Ordering::Relaxed);
+        shared.chunks_done.fetch_add(1, Ordering::Relaxed);
+        if shared.pending.fetch_sub(1, Ordering::SeqCst) == 1 {
+            // last chunk: wake the caller (lock orders the notify after
+            // the caller's pending/active check or before its wait)
+            let _g = shared.state.lock().unwrap();
+            shared.done_cv.notify_all();
+        }
+    }
+}
+
+fn worker_main(shared: Arc<Shared>, slot: usize) {
+    let mut seen_gen = 0u64;
+    loop {
+        // park until a new job generation (or shutdown)
+        let job = {
+            let mut st = shared.state.lock().unwrap();
+            loop {
+                if st.shutdown {
+                    return;
+                }
+                if st.generation != seen_gen {
+                    seen_gen = st.generation;
+                    if let Some(job) = st.job {
+                        // register as active *under the lock*: run()
+                        // cannot return (and reuse the counters) until
+                        // this worker deregisters
+                        st.active += 1;
+                        break job;
+                    }
+                    // job already fully drained before this worker woke:
+                    // nothing to do for this generation
+                }
+                st = shared.work_cv.wait(st).unwrap();
+            }
+        };
+        drain(&shared, slot, job);
+        let mut st = shared.state.lock().unwrap();
+        st.active -= 1;
+        if st.active == 0 && shared.pending.load(Ordering::SeqCst) == 0 {
+            shared.done_cv.notify_all();
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use std::sync::atomic::AtomicU32;
+
+    #[test]
+    fn lane_chunk_boundaries_are_fixed_and_thread_count_free() {
+        // the determinism pin: boundaries are a pure function of the lane
+        // count (the function does not even take a thread count)
+        assert_eq!(num_lane_chunks(0), 0);
+        assert_eq!(num_lane_chunks(1), 1);
+        assert_eq!(num_lane_chunks(CHUNK_LANES), 1);
+        assert_eq!(num_lane_chunks(CHUNK_LANES + 1), 2);
+        assert_eq!(num_lane_chunks(20), 3);
+        assert_eq!(lane_chunk(0, 20), (0, 8));
+        assert_eq!(lane_chunk(1, 20), (8, 16));
+        assert_eq!(lane_chunk(2, 20), (16, 20));
+        assert_eq!(lane_chunk(0, 5), (0, 5));
+        // chunks tile the lane space exactly, for any lane count
+        for lanes in 0..100 {
+            let mut covered = 0;
+            for c in 0..num_lane_chunks(lanes) {
+                let (lo, hi) = lane_chunk(c, lanes);
+                assert_eq!(lo, covered, "lanes={lanes} chunk={c}");
+                assert!(hi > lo && hi - lo <= CHUNK_LANES);
+                covered = hi;
+            }
+            assert_eq!(covered, lanes);
+        }
+    }
+
+    #[test]
+    fn pool_executes_every_chunk_exactly_once() {
+        let pool = ThreadPool::new(4);
+        for round in 0..50 {
+            let n = 1 + (round * 7) % 23;
+            let hits: Vec<AtomicU32> = (0..n).map(|_| AtomicU32::new(0)).collect();
+            pool.run(n, |_, c| {
+                hits[c].fetch_add(1, Ordering::SeqCst);
+            });
+            for (c, h) in hits.iter().enumerate() {
+                assert_eq!(h.load(Ordering::SeqCst), 1, "round {round} chunk {c}");
+            }
+        }
+    }
+
+    #[test]
+    fn disjoint_chunked_writes_match_serial() {
+        let pool = ThreadPool::new(3);
+        let lanes = 45;
+        let mut serial = vec![0.0f32; lanes * 4];
+        for c in 0..num_lane_chunks(lanes) {
+            let (lo, hi) = lane_chunk(c, lanes);
+            for i in lo..hi {
+                for j in 0..4 {
+                    serial[i * 4 + j] = (i * 4 + j) as f32 * 0.5;
+                }
+            }
+        }
+        let mut par = vec![0.0f32; lanes * 4];
+        let p = SendPtr(par.as_mut_ptr());
+        pool.run(num_lane_chunks(lanes), |_, c| {
+            let (lo, hi) = lane_chunk(c, lanes);
+            // SAFETY: chunks own disjoint lane ranges
+            let rows = unsafe { std::slice::from_raw_parts_mut(p.0.add(lo * 4), (hi - lo) * 4) };
+            for (k, v) in rows.iter_mut().enumerate() {
+                *v = (lo * 4 + k) as f32 * 0.5;
+            }
+        });
+        assert_eq!(serial, par);
+    }
+
+    #[test]
+    fn worker_slots_are_in_range_and_stats_accumulate() {
+        // slot ids index per-thread scratch: they must stay < threads()
+        let pool = ThreadPool::new(3);
+        let bad = AtomicU32::new(0);
+        pool.run(16, |slot, _| {
+            if slot >= 3 {
+                bad.fetch_add(1, Ordering::SeqCst);
+            }
+            // give other workers a chance to claim chunks
+            std::thread::yield_now();
+        });
+        assert_eq!(bad.load(Ordering::SeqCst), 0);
+        let s = pool.stats();
+        assert_eq!(s.sections, 1);
+        assert_eq!(s.chunks, 16);
+        assert!(s.wall_s > 0.0);
+        assert!(s.busy_s > 0.0);
+    }
+
+    #[test]
+    fn single_thread_pool_runs_serially_on_the_caller() {
+        let pool = ThreadPool::new(1);
+        let mut out = vec![0usize; 10];
+        let p = SendPtr(out.as_mut_ptr());
+        pool.run(10, |slot, c| {
+            assert_eq!(slot, 0);
+            unsafe { *p.0.add(c) = c + 1 };
+        });
+        assert_eq!(out, (1..=10).collect::<Vec<_>>());
+        // serial fallback is not a parallel section
+        assert_eq!(pool.stats().sections, 0);
+    }
+
+    #[test]
+    fn default_threads_divides_cores_across_workers() {
+        let one = default_threads(1);
+        assert!(one >= 1);
+        assert!(default_threads(usize::MAX) == 1);
+        assert!(default_threads(one) >= 1);
+        assert!(default_threads(2) <= one);
+    }
+}

@@ -52,11 +52,15 @@ fn run(args: &Args) -> Result<()> {
                 "ed-batch — FSM-batched dynamic-DNN serving (ICML'23 reproduction)\n\n\
                  usage:\n  \
                  ed-batch bench <fig6|fig8|fig9|table2|table3|table4|table5|serving|serving-slo|all> [--fast] [--hidden N]\n  \
+                 ed-batch bench check --baseline ci/bench_baseline.json [--current BENCH_serving.json]\n             \
+                 [--tolerance 0.25] [--update]  (perf-regression gate over bench serving results)\n  \
                  ed-batch train --workload <name[,name...]|all> [--encoding base|max|sort]\n             \
                  [--store DIR] [--hidden N] [--max-iters N] [--force]\n  \
                  ed-batch serve --workloads <name[,name...]> [--mode ed-batch|cavs-dynet|vanilla-dynet]\n             \
                  [--workers N] [--store DIR] [--no-train-on-miss] [--require-store-hits]\n             \
                  [--hidden N] [--requests N] [--max-batch N] [--no-pjrt]\n             \
+                 [--threads N  (intra-batch CPU lane parallelism per worker; default =\n              \
+                 available cores / workers; responses bit-identical at any N)]\n             \
                  [--dispatch fixed|adaptive|learned  (batch-size/max-wait rule per dispatch)]\n             \
                  [--slo-p99-ms F  (p99 latency target for adaptive/learned dispatch + violation accounting)]\n             \
                  [--traffic closed|poisson|bursty --rate R --duration-s S  (open-loop load generation;\n              \
@@ -79,6 +83,11 @@ fn bench(args: &Args) -> Result<()> {
         .get(1)
         .map(|s| s.as_str())
         .unwrap_or("all");
+    if which == "check" {
+        // perf-regression gate over BENCH_serving.json (CI runs this
+        // against ci/bench_baseline.json after `bench serving`)
+        return benchsuite::check::run(args);
+    }
     let run_one = |name: &str| -> Result<()> {
         match name {
             "fig6" => benchsuite::fig6::run(&opts).map(|_| ()),
@@ -216,6 +225,13 @@ fn serve(args: &Args) -> Result<()> {
     };
     let requests = args.usize("requests", 256);
     let workers = args.usize("workers", 2);
+    // intra-batch lane parallelism per worker: default divides the
+    // machine's cores across the worker pool so workers x threads never
+    // oversubscribes out of the box
+    let threads = match args.usize("threads", 0) {
+        0 => ed_batch::exec::pool::default_threads(workers.max(1)),
+        n => n,
+    };
     let dispatch = DispatchMode::from_name(args.get_or("dispatch", "fixed"))
         .ok_or_else(|| anyhow!("bad dispatch mode (fixed|adaptive|learned)"))?;
     let slo_p99 = match args.f64("slo-p99-ms", 0.0) {
@@ -229,6 +245,7 @@ fn serve(args: &Args) -> Result<()> {
         max_batch: args.usize("max-batch", 32),
         batch_window: std::time::Duration::from_millis(args.u64("window-ms", 2)),
         workers,
+        threads,
         artifacts_dir: if args.flag("no-pjrt") {
             None
         } else {
@@ -248,7 +265,7 @@ fn serve(args: &Args) -> Result<()> {
         scheduler: None, // Learned resolves from the store (or trains at boot)
     };
     println!(
-        "serving {} workload(s) [{}] (mode={}, dispatch={}, hidden={hidden}, workers={workers}, pjrt={}, store={})",
+        "serving {} workload(s) [{}] (mode={}, dispatch={}, hidden={hidden}, workers={workers}, threads={threads}, pjrt={}, store={})",
         kinds.len(),
         kinds.iter().map(|k| k.name()).collect::<Vec<_>>().join(","),
         mode.name(),
@@ -399,13 +416,35 @@ fn serve(args: &Args) -> Result<()> {
         snap.arena_grows,
     );
     println!(
-        "time decomposition: construction {:.1}ms scheduling {:.1}ms planning {:.1}ms execution {:.1}ms",
+        "time decomposition: construction {:.1}ms scheduling {:.1}ms planning {:.1}ms execution {:.1}ms (parallel sections {:.1}ms)",
         snap.breakdown.construction_s * 1e3,
         snap.breakdown.scheduling_s * 1e3,
         snap.breakdown.planning_s * 1e3,
-        snap.breakdown.execution_s * 1e3
+        snap.breakdown.execution_s * 1e3,
+        snap.breakdown.parallel_s * 1e3,
+    );
+    // intra-batch parallel pool summary + the end-to-end determinism
+    // self-check (serial vs pooled engine, every workload, bitwise). The
+    // check always drives a pool of >= 2 threads so it is a real
+    // assertion even when serving ran with --threads 1; the CI thread
+    // matrix greps the bitwise_parallel_ok field at --threads 1 and 4.
+    let pcheck = ed_batch::coordinator::engine::parallel_bitwise_ok(
+        hidden,
+        threads.max(2),
+        args.u64("seed", 7),
+    );
+    println!(
+        "parallel: threads={threads} | {} sections, {} chunks | busy {:.1}ms / wall {:.1}ms | pool occupancy {:.0}% | bitwise_parallel_ok={pcheck}",
+        snap.par_sections,
+        snap.par_chunks,
+        snap.par_busy_s * 1e3,
+        snap.par_wall_s * 1e3,
+        snap.pool_occupancy() * 100.0,
     );
     server.shutdown()?;
+    if !pcheck {
+        bail!("parallel execution diverged from serial (bitwise) — refusing to pass the smoke");
+    }
     // CI smoke gate: with a pre-trained store, serving must never miss
     if args.flag("require-store-hits") && snap.store_misses > 0 {
         bail!(

@@ -29,8 +29,8 @@ use std::collections::VecDeque;
 use std::time::Instant;
 
 use crate::coordinator::dispatch::{
-    max_wait_s, sched_state_id, LatencyWindow, SchedulerPolicy, SloConfig, EWMA_ALPHA,
-    SCHED_ACTIONS,
+    max_wait_s, sched_state_id, DispatchController, DispatchMode, LatencyWindow,
+    SchedulerPolicy, SloConfig, EWMA_ALPHA, SCHED_ACTIONS,
 };
 use crate::coordinator::traffic::TrafficProfile;
 use crate::util::rng::Rng;
@@ -313,6 +313,259 @@ pub fn evaluate(policy: &SchedulerPolicy, cfg: &SimConfig, seed: u64) -> (f64, f
     )
 }
 
+// -- deterministic virtual-clock SLO-gate replay ----------------------------
+//
+// The bench's SLO gate used to compare *wall-clock* p99s of real server
+// runs, which flakes on loaded CI runners: a scheduler hiccup during the
+// fixed-dispatch run (or the adaptive one) flips the verdict without any
+// code change. Under `ED_BENCH_FAST` the gate verdict therefore comes
+// from this replay instead: both dispatch rules process the **same
+// pre-sampled bursty arrival schedule** on the simulator's virtual f64
+// clock, so the comparison is a pure function of (config, seed) — no
+// flake is possible. The real controller object is driven (not a model
+// of it): `DispatchController` is clock-free by design, consuming only
+// relative observations the replay feeds it.
+
+/// Queue state handed to a replayed dispatch rule before each decision.
+/// (Latency feedback flows through [`ReplayRule::observe`] instead — the
+/// adaptive controller keeps its own latency window.)
+pub struct ReplayState {
+    pub queue_len: usize,
+    /// inter-arrival EWMA over enqueued requests (None before 2 arrivals)
+    pub ia_ewma_s: Option<f64>,
+}
+
+/// A dispatch rule replayable on the virtual clock.
+pub trait ReplayRule {
+    /// (target batch, max-wait seconds) for the current queue state.
+    fn decide(&mut self, st: &ReplayState) -> (usize, f64);
+    /// Feedback after one dispatched mini-batch (service time + the
+    /// sojourn of every completed request, dispatch order).
+    fn observe(&mut self, batch: usize, service_s: f64, sojourns: &[f64]) {
+        let _ = (batch, service_s, sojourns);
+    }
+}
+
+/// The legacy full-or-timed-out rule: constant target + window.
+pub struct FixedRule {
+    pub target: usize,
+    pub window_s: f64,
+}
+
+impl ReplayRule for FixedRule {
+    fn decide(&mut self, _st: &ReplayState) -> (usize, f64) {
+        (self.target, self.window_s)
+    }
+}
+
+/// Drives a real (clock-free) [`DispatchController`] through the replay.
+pub struct ControllerRule {
+    pub ctrl: DispatchController,
+}
+
+impl ControllerRule {
+    pub fn adaptive(slo: SloConfig, max_batch: usize) -> ControllerRule {
+        ControllerRule {
+            ctrl: DispatchController::new(
+                DispatchMode::Adaptive,
+                slo,
+                max_batch,
+                std::time::Duration::from_millis(25),
+                None,
+            ),
+        }
+    }
+}
+
+impl ReplayRule for ControllerRule {
+    fn decide(&mut self, st: &ReplayState) -> (usize, f64) {
+        self.ctrl.set_arrival_ewma(st.ia_ewma_s);
+        let d = self.ctrl.decide(st.queue_len);
+        (d.target_batch, d.max_wait.as_secs_f64())
+    }
+
+    fn observe(&mut self, batch: usize, service_s: f64, sojourns: &[f64]) {
+        for &s in sojourns {
+            self.ctrl.observe_latency(s);
+        }
+        self.ctrl.observe_batch(batch, service_s);
+    }
+}
+
+/// What one replayed run produced.
+#[derive(Clone, Copy, Debug, Default)]
+pub struct ReplayStats {
+    pub completed: usize,
+    pub dispatches: usize,
+    /// exact p99 over *all* sojourns (not windowed)
+    pub p99_s: f64,
+    pub mean_sojourn_s: f64,
+    /// virtual time at which the last request completed
+    pub makespan_s: f64,
+}
+
+/// Replay one pre-sampled arrival schedule through `rule` on the virtual
+/// clock, under the linear service model `overhead + b · per_inst`.
+/// Mirrors the live queue semantics (accumulate until the target is met
+/// or the oldest request times out; late arrivals up to the dispatch
+/// instant join the batch). Fully deterministic in its inputs.
+pub fn replay_schedule(
+    arrivals: &[f64],
+    per_inst_s: f64,
+    overhead_s: f64,
+    max_batch: usize,
+    rule: &mut dyn ReplayRule,
+) -> ReplayStats {
+    let mut t = 0.0f64;
+    let mut next = 0usize;
+    let mut queue: VecDeque<f64> = VecDeque::new();
+    let mut ia: Option<f64> = None;
+    let mut last: Option<f64> = None;
+    let mut sojourns: Vec<f64> = Vec::with_capacity(arrivals.len());
+    let mut batch_sojourns: Vec<f64> = Vec::new();
+    let mut dispatches = 0usize;
+
+    fn enq(
+        queue: &mut VecDeque<f64>,
+        ia: &mut Option<f64>,
+        last: &mut Option<f64>,
+        at: f64,
+    ) {
+        queue.push_back(at);
+        if let Some(prev) = *last {
+            let gap = at - prev;
+            *ia = Some(match *ia {
+                None => gap,
+                Some(e) => e + EWMA_ALPHA * (gap - e),
+            });
+        }
+        *last = Some(at);
+    }
+
+    while next < arrivals.len() || !queue.is_empty() {
+        if queue.is_empty() {
+            // idle-advance to the next arrival
+            let at = arrivals[next];
+            next += 1;
+            t = t.max(at);
+            enq(&mut queue, &mut ia, &mut last, at);
+        }
+        let st = ReplayState {
+            queue_len: queue.len(),
+            ia_ewma_s: ia,
+        };
+        let (target, max_wait) = rule.decide(&st);
+        let target = target.clamp(1, max_batch);
+        let deadline = queue.front().unwrap() + max_wait.max(0.0);
+        // accumulate until the target is met or the deadline passes
+        while queue.len() < target && next < arrivals.len() && arrivals[next] <= deadline.max(t)
+        {
+            let at = arrivals[next];
+            next += 1;
+            enq(&mut queue, &mut ia, &mut last, at);
+        }
+        let dispatch_at = if queue.len() >= target {
+            t.max(*queue.iter().nth(target - 1).unwrap())
+        } else {
+            t.max(deadline)
+        };
+        // any arrival up to the dispatch instant joins the queue
+        while next < arrivals.len() && arrivals[next] <= dispatch_at {
+            let at = arrivals[next];
+            next += 1;
+            enq(&mut queue, &mut ia, &mut last, at);
+        }
+        let b = queue.len().min(target);
+        let service = overhead_s + per_inst_s * b as f64;
+        let done = dispatch_at + service;
+        batch_sojourns.clear();
+        for _ in 0..b {
+            let submitted = queue.pop_front().unwrap();
+            let s = done - submitted;
+            batch_sojourns.push(s);
+            sojourns.push(s);
+        }
+        rule.observe(b, service, &batch_sojourns);
+        t = done;
+        dispatches += 1;
+    }
+
+    let completed = sojourns.len();
+    let mut sorted = sojourns.clone();
+    sorted.sort_by(|a, b| a.partial_cmp(b).unwrap());
+    let p99 = if sorted.is_empty() {
+        0.0
+    } else {
+        let rank = ((sorted.len() as f64) * 0.99).ceil() as usize;
+        sorted[rank.clamp(1, sorted.len()) - 1]
+    };
+    ReplayStats {
+        completed,
+        dispatches,
+        p99_s: p99,
+        mean_sojourn_s: if completed == 0 {
+            0.0
+        } else {
+            sojourns.iter().sum::<f64>() / completed as f64
+        },
+        makespan_s: t,
+    }
+}
+
+/// The virtual-clock SLO-gate verdict the fast-mode bench uses.
+#[derive(Clone, Copy, Debug)]
+pub struct VirtualGate {
+    pub offered: usize,
+    pub fixed: ReplayStats,
+    pub adaptive: ReplayStats,
+}
+
+impl VirtualGate {
+    /// Same criterion as the wall-clock gate: at equal completed volume,
+    /// adaptive beats fixed's p99 without giving up more than 10% of the
+    /// completion rate (makespans compared instead of elapsed clocks).
+    pub fn ok(&self) -> bool {
+        self.fixed.completed == self.offered
+            && self.adaptive.completed == self.offered
+            && self.adaptive.p99_s < self.fixed.p99_s
+            && self.adaptive.makespan_s <= self.fixed.makespan_s / 0.9
+    }
+}
+
+/// Replay the bursty SLO comparison — the legacy fixed rule (full batch
+/// or `fixed_window_s` timeout) vs the real adaptive controller — on one
+/// pre-sampled arrival schedule. Deterministic in (`slo`,
+/// `fixed_window_s`, `max_batch`, `seed`).
+pub fn virtual_slo_gate(
+    slo: SloConfig,
+    fixed_window_s: f64,
+    max_batch: usize,
+    seed: u64,
+) -> VirtualGate {
+    let cfg = SimConfig::default();
+    let (per, over) = (cfg.per_inst_s, cfg.dispatch_overhead_s);
+    // the same bursty shape the bench offers. Mean utilization 0.15 so
+    // the 4x ON bursts (0.6) stay under server capacity: the gate
+    // isolates the *dispatch-delay* difference (25ms fixed window vs the
+    // SLO budget) rather than burst-backlog drain dynamics, which is the
+    // regression the gate exists to catch
+    let rate = 0.15 / per;
+    let mut rng = Rng::new(seed ^ 0x51_0A7E);
+    let arrivals = TrafficProfile::bursty(rate).arrivals(3.0, &mut rng);
+    let mut fixed = FixedRule {
+        target: max_batch,
+        window_s: fixed_window_s,
+    };
+    let f = replay_schedule(&arrivals, per, over, max_batch, &mut fixed);
+    let mut adaptive = ControllerRule::adaptive(slo, max_batch);
+    let a = replay_schedule(&arrivals, per, over, max_batch, &mut adaptive);
+    VirtualGate {
+        offered: arrivals.len(),
+        fixed: f,
+        adaptive: a,
+    }
+}
+
 #[cfg(test)]
 mod tests {
     use super::*;
@@ -355,6 +608,40 @@ mod tests {
             v_trained <= v_single,
             "violation rate: trained {v_trained} vs singles {v_single}"
         );
+    }
+
+    #[test]
+    fn replay_is_deterministic_and_conserves_requests() {
+        let arrivals: Vec<f64> = (0..500).map(|i| i as f64 * 0.0007).collect();
+        let run = || {
+            let mut rule = FixedRule {
+                target: 8,
+                window_s: 0.005,
+            };
+            replay_schedule(&arrivals, 0.0005, 0.0002, 32, &mut rule)
+        };
+        let (s1, s2) = (run(), run());
+        assert_eq!(s1.completed, 500, "every arrival must complete");
+        assert_eq!(s1.completed, s2.completed);
+        assert_eq!(s1.p99_s, s2.p99_s, "virtual clock must be bit-deterministic");
+        assert_eq!(s1.makespan_s, s2.makespan_s);
+        assert!(s1.dispatches >= 500 / 8 && s1.dispatches <= 500);
+        assert!(s1.p99_s > 0.0 && s1.mean_sojourn_s > 0.0);
+    }
+
+    #[test]
+    fn virtual_slo_gate_is_deterministic_and_passes() {
+        // the de-flaked bench gate: pure function of (config, seed)
+        let slo = SloConfig::with_target(0.010);
+        let g1 = virtual_slo_gate(slo, 0.025, 32, 42);
+        let g2 = virtual_slo_gate(slo, 0.025, 32, 42);
+        assert_eq!(g1.fixed.p99_s, g2.fixed.p99_s);
+        assert_eq!(g1.adaptive.p99_s, g2.adaptive.p99_s);
+        assert_eq!(g1.offered, g2.offered);
+        assert!(g1.offered > 200, "bursty schedule too short: {}", g1.offered);
+        // the separation is structural — a 25ms fixed window vs an 8ms
+        // adaptive budget — not a marginal timing artifact
+        assert!(g1.ok(), "{g1:?}");
     }
 
     #[test]

@@ -550,3 +550,72 @@ fn adaptive_dispatch_responses_bit_equal_to_fixed_rule() {
     assert_eq!(adaptive, fixed, "adaptive dispatch must preserve bit-equality");
     assert_eq!(learned, fixed, "learned dispatch must preserve bit-equality");
 }
+
+#[test]
+fn threaded_serving_bit_equal_to_serial_across_workload_mix() {
+    // The intra-batch parallel pool (`--threads`) must never change a
+    // response byte: serve the same mixed-workload request sequence
+    // through a serial server and a 4-thread-per-worker server (same
+    // policy seed, same instances, concurrent clients so wide
+    // mini-batches actually form) and compare every response bitwise.
+    let kinds = [WorkloadKind::TreeLstm, WorkloadKind::BiLstmTagger];
+    let pools: Vec<std::sync::Arc<Vec<Graph>>> = kinds
+        .iter()
+        .enumerate()
+        .map(|(i, &kind)| {
+            let w = Workload::new(kind, 32);
+            let mut rng = Rng::new(1500 + i as u64);
+            std::sync::Arc::new((0..4).map(|_| w.gen_instance(&mut rng)).collect())
+        })
+        .collect();
+
+    // [kind][client][request] -> per-request sink outputs
+    #[allow(clippy::type_complexity)]
+    let run_threads = |threads: usize| -> Vec<Vec<Vec<Vec<Vec<f32>>>>> {
+        let server = Server::start(ServerConfig {
+            workloads: kinds.to_vec(),
+            hidden: 32,
+            mode: SystemMode::EdBatch,
+            max_batch: 8,
+            batch_window: Duration::from_millis(5),
+            workers: 2,
+            threads,
+            train_cfg: quick_train_cfg(),
+            ..ServerConfig::default()
+        })
+        .unwrap();
+        let mut per_kind = Vec::new();
+        for (ki, &kind) in kinds.iter().enumerate() {
+            let mut handles = Vec::new();
+            for _c in 0..3 {
+                let client = server.client(kind);
+                let pool = pools[ki].clone();
+                handles.push(std::thread::spawn(move || {
+                    let mut results = Vec::new();
+                    for _pass in 0..2 {
+                        for g in pool.iter() {
+                            results.push(client.infer(g.clone()).unwrap().to_vecs());
+                        }
+                    }
+                    results
+                }));
+            }
+            per_kind.push(
+                handles
+                    .into_iter()
+                    .map(|h| h.join().unwrap())
+                    .collect::<Vec<_>>(),
+            );
+        }
+        server.shutdown().unwrap();
+        per_kind
+    };
+
+    let serial = run_threads(1);
+    let pooled = run_threads(4);
+    assert_eq!(pooled, serial, "--threads changed response bytes");
+
+    // and the engine-level self-check the serve CLI prints as
+    // bitwise_parallel_ok must agree
+    assert!(ed_batch::coordinator::engine::parallel_bitwise_ok(32, 4, 7));
+}

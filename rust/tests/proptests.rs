@@ -231,6 +231,54 @@ fn prop_planner_layout_is_valid_permutation_and_not_worse() {
 }
 
 #[test]
+fn prop_parallel_execution_bitwise_equals_serial() {
+    // The --threads contract as a property: for every workload kind,
+    // random seed, and thread count in {1, 2, 3, 8}, executing the same
+    // schedule through a pooled engine reproduces the serial engine's
+    // node states bit-for-bit. Kinds and thread counts cycle
+    // deterministically (gcd(9, 4) = 1, so 36 iterations cover every
+    // (kind, threads) pair); graph shapes and seeds come from the
+    // propcheck rng.
+    use ed_batch::coordinator::engine::{ArenaStateStore, Backend, CellEngine};
+    use ed_batch::exec::pool::ThreadPool;
+    use ed_batch::util::rng::Rng;
+    use ed_batch::workloads::{Workload, ALL_WORKLOADS};
+    use std::sync::Arc;
+
+    let iter = std::cell::Cell::new(0usize);
+    check("parallel == serial (bitwise)", 36, |g| {
+        let i = iter.get();
+        iter.set(i + 1);
+        let kind = ALL_WORKLOADS[i % ALL_WORKLOADS.len()];
+        let threads = [1usize, 2, 3, 8][i % 4];
+        let hidden = 16;
+        let seed = g.rng.next_u64();
+        let w = Workload::new(kind, hidden);
+        let mut rng = Rng::new(seed);
+        let mut dag = w.gen_batch(1 + g.rng.usize_below(3), &mut rng);
+        dag.freeze();
+        let nt = w.registry.num_types();
+        let schedule = run_policy(&dag, nt, &mut AgendaPolicy::new(nt));
+        let run = |pool: Option<Arc<ThreadPool>>| {
+            let mut engine = CellEngine::new(Backend::Cpu, hidden, 1).unwrap();
+            if let Some(p) = pool {
+                engine.set_thread_pool(p);
+            }
+            let mut store = ArenaStateStore::new();
+            engine.execute(&dag, &w.registry, &schedule, &mut store).unwrap();
+            store.h_vectors()
+        };
+        let serial = run(None);
+        let pooled = run(Some(Arc::new(ThreadPool::new(threads))));
+        prop_assert!(
+            serial == pooled,
+            "{kind:?} threads={threads} seed={seed}: pooled outputs diverged"
+        );
+        Ok(())
+    });
+}
+
+#[test]
 fn prop_graph_merge_preserves_topology() {
     check("merge topology", 80, |g| {
         let nt = 1 + g.rng.usize_below(3);
