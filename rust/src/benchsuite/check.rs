@@ -8,8 +8,22 @@
 //!   fall more than `tolerance` below the baseline, p99 must not rise
 //!   more than `tolerance` above it;
 //! * per thread-scaling row (keyed by `threads`): same two checks;
-//! * boolean gates (`compose_ok_all`, `bitwise_parallel_ok`): must be
-//!   true in the current run whenever the baseline asserts them.
+//! * boolean gates (`compose_ok_all`, `bitwise_parallel_ok`,
+//!   `simd_parity_ok`): must be true in the current run whenever the
+//!   baseline asserts them;
+//! * per SIMD micro-kernel row (keyed by shape `m`/`k`/`n`): the
+//!   measured `speedup_vs_scalar` must meet the baseline's absolute
+//!   `min_speedup` floor — **skipped entirely when the current run has
+//!   `simd_active: false`** (scalar-fallback hosts and `--strict-bitwise`
+//!   report 1.0x by design and must pass).
+//!
+//! With `--trajectory <path>` the current run is additionally ratcheted
+//! against the last committed row of the append-only perf trajectory
+//! (`BENCH_trajectory.json`): throughput floor and p99 ceiling within
+//! the same tolerance, against the most recent row recorded under a
+//! *different* git sha (so re-running on one commit never ratchets
+//! against itself). Rows from a different configuration (hidden/fast)
+//! are not comparable and make the ratchet a no-op.
 //!
 //! The default tolerance is deliberately wide (25%) because CI runners
 //! are shared and noisy — this gate exists to catch order-of-magnitude
@@ -29,8 +43,8 @@ use anyhow::{anyhow, bail, Context, Result};
 use crate::util::cli::Args;
 use crate::util::json::Json;
 
-use super::print_table;
 use super::serving::JSON_PATH;
+use super::{print_table, trajectory};
 
 /// One compared metric.
 #[derive(Clone, Debug)]
@@ -123,7 +137,103 @@ pub fn run(args: &Args) -> Result<()> {
         );
     }
     println!("bench check: ok ({} metrics within band)", outcome.rows.len());
+
+    // optional second gate: ratchet against the committed perf trajectory
+    if let Some(tpath) = args.get("trajectory") {
+        let text = std::fs::read_to_string(tpath)
+            .with_context(|| format!("reading trajectory {tpath}"))?;
+        let doc = Json::parse(&text).map_err(|e| anyhow!("trajectory {tpath}: {e}"))?;
+        let trows = doc
+            .as_arr()
+            .ok_or_else(|| anyhow!("trajectory {tpath}: not a JSON array"))?;
+        let rows = ratchet(trows, &current, tolerance, &trajectory::git_sha());
+        if rows.is_empty() {
+            println!("trajectory {tpath}: no comparable committed row — ratchet is a no-op");
+        } else {
+            print_table(
+                &format!("trajectory ratchet: vs last committed row of {tpath}"),
+                &["row", "metric", "baseline", "current", "delta", "ok"],
+                &rows
+                    .iter()
+                    .map(|r| {
+                        vec![
+                            r.key.clone(),
+                            r.metric.to_string(),
+                            format!("{:.2}", r.baseline),
+                            format!("{:.2}", r.current),
+                            format!("{:+.1}%", r.delta_frac * 100.0),
+                            if r.ok { "ok" } else { "FAIL" }.to_string(),
+                        ]
+                    })
+                    .collect::<Vec<_>>(),
+            );
+            if rows.iter().any(|r| !r.ok) {
+                bail!(
+                    "trajectory ratchet failed: current run regressed past the last \
+                     committed trajectory row (tolerance {:.0}%)",
+                    tolerance * 100.0
+                );
+            }
+        }
+    }
     Ok(())
+}
+
+/// The trajectory ratchet, pure for tests: compare the current bench doc
+/// against the last trajectory row from a different sha. Returns no rows
+/// (a no-op) when there is nothing comparable: empty trajectory, config
+/// mismatch (hidden/fast differ), or the matching worker row is absent.
+pub fn ratchet(trows: &[Json], current: &Json, tolerance: f64, head_sha: &str) -> Vec<DeltaRow> {
+    let mut out = Vec::new();
+    let Some(base) = trajectory::baseline_row(trows, head_sha) else {
+        return out;
+    };
+    // only same-configuration rows are comparable
+    let same = |field: &str| base.get(field).map(|v| v.to_string())
+        == current.get(field).map(|v| v.to_string());
+    if !same("hidden") || !same("fast") {
+        return out;
+    }
+    // the trajectory headline is the widest worker row; find its peer
+    let Some(workers) = base.get("workers").and_then(|v| v.as_u64()) else {
+        return out;
+    };
+    let cur = current
+        .get("rows")
+        .and_then(|v| v.as_arr())
+        .and_then(|rows| {
+            rows.iter()
+                .find(|r| r.get("workers").and_then(|v| v.as_u64()) == Some(workers))
+        });
+    let Some(cur) = cur else {
+        return out;
+    };
+    let key = format!(
+        "sha={} workers={workers}",
+        base.get("sha").and_then(|v| v.as_str()).unwrap_or("?")
+    );
+    let mut push = |metric: &'static str, within: &dyn Fn(f64, f64) -> bool| {
+        let (Some(b), Some(c)) = (
+            base.get(metric).and_then(|v| v.as_f64()),
+            cur.get(metric).and_then(|v| v.as_f64()),
+        ) else {
+            return;
+        };
+        if b <= 0.0 {
+            return; // placeholder rows (unbenchmarkable hosts) carry no signal
+        }
+        out.push(DeltaRow {
+            key: key.clone(),
+            metric,
+            baseline: b,
+            current: c,
+            delta_frac: (c - b) / b,
+            ok: within(b, c),
+        });
+    };
+    push("throughput_inst_per_s", &|b, c| c >= b * (1.0 - tolerance));
+    push("p99_ms", &|b, c| c <= b * (1.0 + tolerance));
+    out
 }
 
 /// Pure comparison (separated from I/O for tests).
@@ -132,7 +242,7 @@ pub fn compare(baseline: &Json, current: &Json, tolerance: f64) -> Result<CheckO
         rows: Vec::new(),
         failed_gates: Vec::new(),
     };
-    for gate in ["compose_ok_all", "bitwise_parallel_ok"] {
+    for gate in ["compose_ok_all", "bitwise_parallel_ok", "simd_parity_ok"] {
         let expected = matches!(baseline.get(gate), Some(Json::Bool(true)));
         if expected && !matches!(current.get(gate), Some(Json::Bool(true))) {
             out.failed_gates.push(gate.to_string());
@@ -140,6 +250,7 @@ pub fn compare(baseline: &Json, current: &Json, tolerance: f64) -> Result<CheckO
     }
     compare_rows(baseline, current, "rows", "workers", tolerance, &mut out)?;
     compare_rows(baseline, current, "thread_rows", "threads", tolerance, &mut out)?;
+    compare_simd_rows(baseline, current, &mut out)?;
     if out.rows.is_empty() {
         bail!("baseline has no comparable rows (neither `rows` nor `thread_rows`)");
     }
@@ -180,6 +291,54 @@ fn compare_rows(
         // p99: a ceiling (lower is better)
         push_metric(out, &key, "p99_ms", b, cur, |base, now| {
             now <= base * (1.0 + tolerance)
+        });
+    }
+    Ok(())
+}
+
+/// SIMD micro-kernel speedup floors. Unlike the tolerance-band metrics,
+/// `min_speedup` is an *absolute* floor the baseline author chose (e.g.
+/// 1.2x for big gate blocks on AVX2 hosts) — a host where the SIMD path
+/// is inactive (`simd_active: false`: scalar fallback or
+/// `--strict-bitwise`) reports exactly 1.0x by construction, so the
+/// whole table is skipped there rather than failed.
+fn compare_simd_rows(baseline: &Json, current: &Json, out: &mut CheckOutcome) -> Result<()> {
+    let base_rows = match baseline.get("simd_rows").and_then(|v| v.as_arr()) {
+        Some(rows) => rows,
+        None => return Ok(()), // baseline doesn't gate micro-kernels
+    };
+    if !matches!(current.get("simd_active"), Some(Json::Bool(true))) {
+        return Ok(());
+    }
+    let cur_rows = current.get("simd_rows").and_then(|v| v.as_arr()).unwrap_or(&[]);
+    for b in base_rows {
+        let dim = |field: &str, row: &Json| row.get(field).and_then(|v| v.as_u64());
+        let (Some(m), Some(kd), Some(n)) = (dim("m", b), dim("k", b), dim("n", b)) else {
+            return Err(anyhow!("baseline simd_rows row missing m/k/n"));
+        };
+        let key = format!("simd {m}x{kd}x{n}");
+        let Some(floor) = b.get("min_speedup").and_then(|v| v.as_f64()) else {
+            continue; // shape listed but not gated
+        };
+        let cur = cur_rows.iter().find(|r| {
+            dim("m", r) == Some(m) && dim("k", r) == Some(kd) && dim("n", r) == Some(n)
+        });
+        let Some(cur) = cur else {
+            out.failed_gates.push(format!("simd_rows: missing row {key}"));
+            continue;
+        };
+        let Some(speedup) = cur.get("speedup_vs_scalar").and_then(|v| v.as_f64()) else {
+            out.failed_gates
+                .push(format!("simd_rows: row {key} missing speedup_vs_scalar"));
+            continue;
+        };
+        out.rows.push(DeltaRow {
+            key,
+            metric: "speedup_vs_scalar",
+            baseline: floor,
+            current: speedup,
+            delta_frac: (speedup - floor) / floor,
+            ok: speedup >= floor,
         });
     }
     Ok(())
@@ -275,6 +434,103 @@ mod tests {
         let o = compare(&b, &broken, 0.25).unwrap();
         assert_eq!(o.failed_gates, vec!["bitwise_parallel_ok".to_string()]);
         assert!(!o.ok());
+    }
+
+    #[test]
+    fn simd_floors_gate_only_active_hosts() {
+        let base = Json::parse(
+            r#"{
+                "rows": [{"workers": 1, "throughput_inst_per_s": 100.0, "p99_ms": 25.0}],
+                "simd_rows": [
+                    {"m": 64, "k": 64, "n": 256, "min_speedup": 1.2},
+                    {"m": 16, "k": 64, "n": 32, "min_speedup": 1.0}
+                ]
+            }"#,
+        )
+        .unwrap();
+        let cur = |active: bool, big: f64| {
+            Json::parse(&format!(
+                r#"{{
+                    "simd_active": {active},
+                    "rows": [{{"workers": 1, "throughput_inst_per_s": 100.0, "p99_ms": 25.0}}],
+                    "simd_rows": [
+                        {{"m": 64, "k": 64, "n": 256, "speedup_vs_scalar": {big}}},
+                        {{"m": 16, "k": 64, "n": 32, "speedup_vs_scalar": 1.1}}
+                    ]
+                }}"#
+            ))
+            .unwrap()
+        };
+        // AVX2 host meeting the floors: both rows pass
+        let o = compare(&base, &cur(true, 1.7), 0.25).unwrap();
+        assert!(o.ok(), "{o:?}");
+        assert!(o.rows.iter().filter(|r| r.metric == "speedup_vs_scalar").count() == 2);
+        // AVX2 host below the 1.2x floor: fails
+        let o = compare(&base, &cur(true, 1.05), 0.25).unwrap();
+        assert!(!o.ok());
+        assert!(o.rows.iter().any(|r| !r.ok && r.key == "simd 64x64x256"));
+        // scalar-fallback host (speedup 1.0 by construction): table skipped
+        let o = compare(&base, &cur(false, 1.0), 0.25).unwrap();
+        assert!(o.ok(), "{o:?}");
+        assert!(o.rows.iter().all(|r| r.metric != "speedup_vs_scalar"));
+        // gate asserted in baseline + violated in current fails
+        let base2 = Json::parse(
+            r#"{"simd_parity_ok": true,
+                "rows": [{"workers": 1, "throughput_inst_per_s": 100.0, "p99_ms": 25.0}]}"#,
+        )
+        .unwrap();
+        let bad = Json::parse(
+            r#"{"simd_parity_ok": false,
+                "rows": [{"workers": 1, "throughput_inst_per_s": 100.0, "p99_ms": 25.0}]}"#,
+        )
+        .unwrap();
+        let o = compare(&base2, &bad, 0.25).unwrap();
+        assert_eq!(o.failed_gates, vec!["simd_parity_ok".to_string()]);
+    }
+
+    #[test]
+    fn trajectory_ratchet_compares_last_committed_row() {
+        let trows = vec![
+            Json::parse(
+                r#"{"sha": "old1", "hidden": 32, "fast": true, "workers": 4,
+                    "throughput_inst_per_s": 50.0, "p99_ms": 40.0}"#,
+            )
+            .unwrap(),
+            Json::parse(
+                r#"{"sha": "old2", "hidden": 32, "fast": true, "workers": 4,
+                    "throughput_inst_per_s": 100.0, "p99_ms": 25.0}"#,
+            )
+            .unwrap(),
+            Json::parse(
+                r#"{"sha": "head", "hidden": 32, "fast": true, "workers": 4,
+                    "throughput_inst_per_s": 90.0, "p99_ms": 26.0}"#,
+            )
+            .unwrap(),
+        ];
+        let cur = |tp: f64| {
+            Json::parse(&format!(
+                r#"{{"hidden": 32, "fast": true,
+                     "rows": [{{"workers": 4, "throughput_inst_per_s": {tp}, "p99_ms": 25.0}}]}}"#
+            ))
+            .unwrap()
+        };
+        // ratchets against old2 (the last non-HEAD row), not the head row
+        let rows = ratchet(&trows, &cur(95.0), 0.25, "head");
+        assert_eq!(rows.len(), 2);
+        assert!(rows.iter().all(|r| r.ok), "{rows:?}");
+        assert!(rows[0].key.contains("old2"));
+        // 40% below the committed throughput: outside the band
+        let rows = ratchet(&trows, &cur(60.0), 0.25, "head");
+        assert!(rows.iter().any(|r| !r.ok));
+        // config mismatch (different hidden) is a no-op, not a failure
+        let other = Json::parse(
+            r#"{"hidden": 64, "fast": true,
+                "rows": [{"workers": 4, "throughput_inst_per_s": 1.0, "p99_ms": 999.0}]}"#,
+        )
+        .unwrap();
+        assert!(ratchet(&trows, &other, 0.25, "head").is_empty());
+        // empty trajectory: nothing to ratchet against
+        assert!(ratchet(&[], &cur(1.0), 0.25, "head").is_empty());
     }
 
     #[test]

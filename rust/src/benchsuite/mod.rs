@@ -17,6 +17,7 @@ pub mod table2;
 pub mod table3;
 pub mod table4;
 pub mod table5;
+pub mod trajectory;
 
 use crate::util::cli::Args;
 
@@ -32,6 +33,13 @@ pub struct BenchOpts {
     /// extra `--threads` point for the serving thread-scaling sweep
     /// (0 = just the fixed {1, 2, 4} list)
     pub threads: usize,
+    /// pin the scalar kernel oracle (`--strict-bitwise`): servers boot
+    /// with SIMD micro-kernels disabled, reproducing pre-SIMD bits
+    pub strict_bitwise: bool,
+    /// append-only perf-trajectory file `bench serving` appends a row to
+    /// (`None` = don't append; `--no-trajectory`, and the default for
+    /// in-test [`BenchOpts::fast_default`] runs)
+    pub trajectory: Option<String>,
 }
 
 impl BenchOpts {
@@ -43,6 +51,15 @@ impl BenchOpts {
             fast: args.flag("fast") || std::env::var("ED_BENCH_FAST").is_ok(),
             artifacts_dir: args.get_or("artifacts", "artifacts").to_string(),
             threads: args.usize("threads", 0),
+            strict_bitwise: args.flag("strict-bitwise"),
+            trajectory: if args.flag("no-trajectory") {
+                None
+            } else {
+                Some(
+                    args.get_or("trajectory", trajectory::TRAJECTORY_PATH)
+                        .to_string(),
+                )
+            },
         }
     }
 
@@ -54,6 +71,8 @@ impl BenchOpts {
             fast: true,
             artifacts_dir: "artifacts".to_string(),
             threads: 0,
+            strict_bitwise: false,
+            trajectory: None, // unit tests must not append to the repo file
         }
     }
 }

@@ -33,21 +33,25 @@
 //! from wall-clock percentiles, so a loaded shared runner cannot flake
 //! the gate; full runs keep the wall-clock measurement.
 
-use std::time::Duration;
+use std::time::{Duration, Instant};
 
 use crate::batching::fsm::Encoding;
 use crate::coordinator::dispatch::{DispatchMode, SloConfig};
 use crate::coordinator::server::{Server, ServerConfig};
 use crate::coordinator::traffic::{drive_open_loop, TrafficProfile};
 use crate::coordinator::SystemMode;
+use crate::exec::cpu_kernels as k;
+use crate::exec::parity;
+use crate::exec::simd::{self, PackedMat, SimdLevel};
 use crate::graph::Graph;
 use crate::policystore::PolicyStore;
 use crate::rl::dispatch_sim::SimConfig;
 use crate::rl::TrainConfig;
 use crate::util::json::Json;
+use crate::util::rng::Rng;
 use crate::workloads::{Workload, WorkloadKind};
 
-use super::{print_table, BenchOpts};
+use super::{print_table, trajectory, BenchOpts};
 
 /// One row of the scaling table.
 #[derive(Clone, Debug)]
@@ -67,6 +71,11 @@ pub struct ServingRow {
     pub arena_grows: u64,
     /// every mini-batch composed, misses bounded by warmup
     pub compose_ok: bool,
+    /// batched kernel calls dispatched to the SIMD micro-kernels
+    pub simd_kernel_calls: u64,
+    /// one-time AOT weight packs (flat after warmup, like arena_grows)
+    pub pack_events: u64,
+    pub pack_elems: u64,
 }
 
 /// One row of the thread-scaling table: a single worker whose engine
@@ -83,6 +92,20 @@ pub struct ThreadRow {
     pub pool_occupancy: f64,
 }
 
+/// One micro-kernel speedup measurement: the scalar matmul oracle vs the
+/// packed SIMD kernel at the host's effective level, same operands.
+#[derive(Clone, Debug)]
+pub struct SimdRow {
+    pub m: usize,
+    pub k: usize,
+    pub n: usize,
+    pub scalar_ms: f64,
+    pub simd_ms: f64,
+    /// scalar time / SIMD time; **exactly** 1.0 on scalar-fallback hosts
+    /// (no second measurement is taken, so noise cannot fake a speedup)
+    pub speedup: f64,
+}
+
 /// Everything `bench serving` measures (both tables + the parallel
 /// determinism verdict), as written to [`JSON_PATH`].
 pub struct ServingBench {
@@ -91,6 +114,14 @@ pub struct ServingBench {
     /// engine-level `--threads` determinism self-check
     /// ([`crate::coordinator::engine::parallel_bitwise_ok`])
     pub bitwise_parallel_ok: bool,
+    /// effective micro-kernel level name ("scalar" under --strict-bitwise)
+    pub simd_level: &'static str,
+    pub simd_active: bool,
+    pub strict_bitwise: bool,
+    /// ULP-contract verdict of `exec::parity` at the effective level
+    /// (trivially true when the scalar oracle is pinned)
+    pub simd_parity_ok: bool,
+    pub simd_rows: Vec<SimdRow>,
 }
 
 /// Two workload families served concurrently (tree + chain).
@@ -174,6 +205,7 @@ pub fn run(opts: &BenchOpts) -> ServingBench {
             train_cfg,
             encoding: Encoding::Sort,
             seed: opts.seed,
+            strict_bitwise: opts.strict_bitwise,
             ..ServerConfig::default()
         })
         .expect("server boot")
@@ -204,6 +236,9 @@ pub fn run(opts: &BenchOpts) -> ServingBench {
             memcpy_elems: snap.memcpy_elems,
             arena_grows: snap.arena_grows,
             compose_ok,
+            simd_kernel_calls: snap.simd_kernel_calls,
+            pack_events: snap.pack_events,
+            pack_elems: snap.pack_elems,
         });
         server.shutdown().expect("shutdown");
     }
@@ -241,6 +276,17 @@ pub fn run(opts: &BenchOpts) -> ServingBench {
     // the end-to-end determinism verdict CI's baseline gate checks
     let bitwise_parallel_ok =
         crate::coordinator::engine::parallel_bitwise_ok(hidden, 4, opts.seed);
+
+    // -- micro-kernel speedup: packed SIMD vs the scalar oracle ------------
+    // measured at the *effective* level, so --strict-bitwise reports an
+    // honestly pinned 1.0x instead of the host's idle capability
+    let eff_level = if opts.strict_bitwise {
+        SimdLevel::Scalar
+    } else {
+        SimdLevel::detect()
+    };
+    let simd_parity_ok = opts.strict_bitwise || parity::simd_parity_ok(hidden, opts.seed);
+    let simd_rows = simd_micro_rows(eff_level, hidden, opts.seed, opts.fast);
 
     print_table(
         "Serving scaling: worker pool vs throughput/latency + hot-path provenance \
@@ -304,13 +350,153 @@ pub fn run(opts: &BenchOpts) -> ServingBench {
             .collect::<Vec<_>>(),
     );
 
+    print_table(
+        &format!(
+            "SIMD micro-kernels: packed {} vs scalar oracle \
+             (simd_parity_ok={simd_parity_ok}, strict_bitwise={})",
+            eff_level.name(),
+            opts.strict_bitwise,
+        ),
+        &["m", "k", "n", "scalar ms", "simd ms", "speedup"],
+        &simd_rows
+            .iter()
+            .map(|r| {
+                vec![
+                    format!("{}", r.m),
+                    format!("{}", r.k),
+                    format!("{}", r.n),
+                    format!("{:.4}", r.scalar_ms),
+                    format!("{:.4}", r.simd_ms),
+                    format!("{:.2}x", r.speedup),
+                ]
+            })
+            .collect::<Vec<_>>(),
+    );
+
     let out = ServingBench {
         rows,
         thread_rows,
         bitwise_parallel_ok,
+        simd_level: eff_level.name(),
+        simd_active: eff_level.simd_active(),
+        strict_bitwise: opts.strict_bitwise,
+        simd_parity_ok,
+        simd_rows,
     };
     write_json(opts, hidden, distinct, &out);
+    if let Some(path) = &opts.trajectory {
+        match trajectory::append_row(path, trajectory_row(opts, hidden, &out)) {
+            Ok(()) => println!("trajectory: appended a row to {path}"),
+            Err(e) => eprintln!("trajectory: {e:#} (row not recorded)"),
+        }
+    }
     out
+}
+
+/// Dense-kernel shapes the serving cells actually hit (gate blocks,
+/// projections, small-batch tails, the ragged classifier head).
+fn simd_micro_rows(level: SimdLevel, hidden: usize, seed: u64, fast: bool) -> Vec<SimdRow> {
+    let h = hidden.max(8);
+    let shapes = [
+        (64, h, 4 * h), // LSTM gate block
+        (64, h, h),     // square projection
+        (33, h, 5 * h), // ragged m, TreeLSTM gate block
+        (8, 2 * h, h),  // small-batch concat input
+        (16, h, 32),    // classifier head (ragged n tail)
+    ];
+    // per-leg flop budget keeps smoke runs fast and full runs stable
+    let budget = if fast { 4.0e6 } else { 4.0e8 };
+    let mut rng = Rng::new(seed ^ 0x51D);
+    let mut rows = Vec::new();
+    for (m, kdim, n) in shapes {
+        let a: Vec<f32> = (0..m * kdim).map(|_| rng.f32() - 0.5).collect();
+        let b: Vec<f32> = (0..kdim * n).map(|_| rng.f32() - 0.5).collect();
+        let pb = PackedMat::pack(&b, kdim, n);
+        let mut c = vec![0.0f32; m * n];
+        let flops = (2 * m * kdim * n) as f64;
+        let reps = ((budget / flops) as usize).clamp(3, 20_000);
+        let scalar_s = best_of(3, reps, || k::matmul(&a, &b, &mut c, m, kdim, n));
+        std::hint::black_box(&c);
+        let (simd_s, speedup) = if level.simd_active() {
+            let s = best_of(3, reps, || simd::matmul_packed(level, &a, &pb, &mut c, m));
+            std::hint::black_box(&c);
+            (s, scalar_s / s.max(1e-12))
+        } else {
+            // no second measurement: scalar hosts report exactly 1.0
+            (scalar_s, 1.0)
+        };
+        rows.push(SimdRow {
+            m,
+            k: kdim,
+            n,
+            scalar_ms: scalar_s * 1e3,
+            simd_ms: simd_s * 1e3,
+            speedup,
+        });
+    }
+    rows
+}
+
+/// Best-of-`trials` mean seconds per call of `f` over `reps` calls.
+fn best_of<F: FnMut()>(trials: usize, reps: usize, mut f: F) -> f64 {
+    let mut best = f64::INFINITY;
+    for _ in 0..trials {
+        let t0 = Instant::now();
+        for _ in 0..reps {
+            f();
+        }
+        best = best.min(t0.elapsed().as_secs_f64() / reps as f64);
+    }
+    best
+}
+
+/// One append-only perf-trajectory row (provenance + headline numbers).
+fn trajectory_row(opts: &BenchOpts, hidden: usize, bench: &ServingBench) -> Json {
+    // headline = the widest worker row; thread/simd speedups as maxima
+    let head = bench.rows.last();
+    let fmax = |it: &mut dyn Iterator<Item = f64>| it.fold(0.0f64, f64::max);
+    Json::obj(vec![
+        ("sha", Json::from(trajectory::git_sha())),
+        ("date", Json::from(trajectory::today_utc())),
+        ("bench", Json::from("serving")),
+        ("hidden", Json::from(hidden as u64)),
+        ("fast", Json::Bool(opts.fast)),
+        ("seed", Json::from(opts.seed)),
+        (
+            "workers",
+            Json::from(head.map(|r| r.workers as u64).unwrap_or(0)),
+        ),
+        (
+            "throughput_inst_per_s",
+            Json::from(head.map(|r| r.throughput).unwrap_or(0.0)),
+        ),
+        ("p50_ms", Json::from(head.map(|r| r.p50_ms).unwrap_or(0.0))),
+        ("p99_ms", Json::from(head.map(|r| r.p99_ms).unwrap_or(0.0))),
+        (
+            "thread_speedup_max",
+            Json::from(fmax(&mut bench.thread_rows.iter().map(|r| r.speedup))),
+        ),
+        ("simd_level", Json::from(bench.simd_level)),
+        ("simd_active", Json::Bool(bench.simd_active)),
+        ("strict_bitwise", Json::Bool(bench.strict_bitwise)),
+        ("simd_parity_ok", Json::Bool(bench.simd_parity_ok)),
+        (
+            "simd_speedup_max",
+            Json::from(fmax(&mut bench.simd_rows.iter().map(|r| r.speedup))),
+        ),
+        (
+            "simd_kernel_calls",
+            Json::from(head.map(|r| r.simd_kernel_calls).unwrap_or(0)),
+        ),
+        (
+            "pack_events",
+            Json::from(head.map(|r| r.pack_events).unwrap_or(0)),
+        ),
+        (
+            "pack_elems",
+            Json::from(head.map(|r| r.pack_elems).unwrap_or(0)),
+        ),
+    ])
 }
 
 /// Dump both tables to [`JSON_PATH`] so CI archives the perf trajectory
@@ -335,6 +521,9 @@ fn write_json(opts: &BenchOpts, hidden: usize, distinct: usize, bench: &ServingB
                 ("memcpy_elems", Json::from(r.memcpy_elems)),
                 ("arena_grows", Json::from(r.arena_grows)),
                 ("compose_ok", Json::Bool(r.compose_ok)),
+                ("simd_kernel_calls", Json::from(r.simd_kernel_calls)),
+                ("pack_events", Json::from(r.pack_events)),
+                ("pack_elems", Json::from(r.pack_elems)),
             ])
         })
         .collect();
@@ -353,6 +542,20 @@ fn write_json(opts: &BenchOpts, hidden: usize, distinct: usize, bench: &ServingB
             ])
         })
         .collect();
+    let simd_json: Vec<Json> = bench
+        .simd_rows
+        .iter()
+        .map(|r| {
+            Json::obj(vec![
+                ("m", Json::from(r.m as u64)),
+                ("k", Json::from(r.k as u64)),
+                ("n", Json::from(r.n as u64)),
+                ("scalar_ms", Json::from(r.scalar_ms)),
+                ("simd_ms", Json::from(r.simd_ms)),
+                ("speedup_vs_scalar", Json::from(r.speedup)),
+            ])
+        })
+        .collect();
     let all_ok = rows.iter().all(|r| r.compose_ok);
     let doc = Json::obj(vec![
         ("bench", Json::from("serving")),
@@ -362,8 +565,13 @@ fn write_json(opts: &BenchOpts, hidden: usize, distinct: usize, bench: &ServingB
         ("seed", Json::from(opts.seed)),
         ("compose_ok_all", Json::Bool(all_ok)),
         ("bitwise_parallel_ok", Json::Bool(bench.bitwise_parallel_ok)),
+        ("simd_level", Json::from(bench.simd_level)),
+        ("simd_active", Json::Bool(bench.simd_active)),
+        ("strict_bitwise", Json::Bool(bench.strict_bitwise)),
+        ("simd_parity_ok", Json::Bool(bench.simd_parity_ok)),
         ("rows", Json::Arr(row_json)),
         ("thread_rows", Json::Arr(thread_json)),
+        ("simd_rows", Json::Arr(simd_json)),
     ]);
     // best-effort: a read-only workdir must not fail the bench itself
     let _ = std::fs::write(JSON_PATH, doc.to_string());
@@ -496,6 +704,7 @@ pub fn run_slo(opts: &BenchOpts) -> Vec<SloRow> {
                 max_batch,
                 batch_window: fixed_window,
                 workers: 2,
+                threads: 1,
                 artifacts_dir: None,
                 store_dir: Some(dir.to_string_lossy().into_owned()),
                 train_on_miss: false,
@@ -505,6 +714,7 @@ pub fn run_slo(opts: &BenchOpts) -> Vec<SloRow> {
                 dispatch,
                 slo_p99: Some(slo),
                 scheduler: None, // Learned resolves from the store
+                strict_bitwise: opts.strict_bitwise,
             })
             .expect("server boot");
             let mut handles = Vec::new();
@@ -731,5 +941,39 @@ mod tests {
             assert!(r.speedup > 0.0);
         }
         assert!(bench.bitwise_parallel_ok, "parallel execution diverged");
+        // SIMD numerics contract + micro-kernel table: parity must hold
+        // at whatever level this host detected; scalar-fallback hosts
+        // report exactly 1.0x (never a measured pseudo-speedup)
+        assert!(bench.simd_parity_ok, "SIMD violated the ULP contract");
+        assert_eq!(bench.simd_rows.len(), 5);
+        for r in &bench.simd_rows {
+            assert!(r.scalar_ms > 0.0 && r.simd_ms > 0.0, "{r:?}");
+            if bench.simd_active {
+                assert!(r.speedup > 0.0, "{r:?}");
+            } else {
+                assert_eq!(r.speedup, 1.0, "{r:?}");
+                assert_eq!(r.scalar_ms, r.simd_ms, "{r:?}");
+            }
+        }
+        assert_eq!(
+            bench.simd_active,
+            crate::exec::simd::SimdLevel::detect().simd_active()
+        );
+    }
+
+    #[test]
+    fn strict_bitwise_bench_pins_scalar() {
+        let opts = BenchOpts {
+            strict_bitwise: true,
+            ..BenchOpts::fast_default()
+        };
+        let bench = run(&opts);
+        assert!(bench.strict_bitwise);
+        assert!(!bench.simd_active);
+        assert_eq!(bench.simd_level, "scalar");
+        assert!(bench.simd_parity_ok, "pinned oracle is trivially in-contract");
+        assert!(bench.simd_rows.iter().all(|r| r.speedup == 1.0));
+        assert!(bench.rows.iter().all(|r| r.simd_kernel_calls == 0));
+        assert!(bench.rows.iter().all(|r| r.pack_events == 0));
     }
 }

@@ -1,0 +1,167 @@
+//! Durable perf trajectory (ROADMAP item 5 slice): an append-only,
+//! committed JSON array of one summary row per trusted `bench serving`
+//! run, so performance history survives machine changes and CI artifact
+//! expiry.
+//!
+//! Each row records provenance (git sha, UTC date), configuration
+//! (hidden, fast, seed, strict/SIMD state), and the headline numbers
+//! (throughput, p50/p99 of the widest worker row, max thread speedup,
+//! pack counters). `bench serving` appends a row unless `--no-trajectory`
+//! is passed; `bench check --trajectory <path>` ratchets the current run
+//! against the last row from a *different* commit (so re-running on the
+//! same sha never self-ratchets), with the usual wide tolerance band.
+//!
+//! The file starts life as `[]` and only ever grows; rewriting history is
+//! a deliberate `git` operation, not something the bench can do. Rows
+//! appended on unbenchmarkable hosts (containers without a toolchain, or
+//! laptops under load) are expected to be pruned in review — the ratchet
+//! compares against the *last committed* row, so a bad appended row is
+//! caught before it becomes the baseline.
+
+use std::time::{SystemTime, UNIX_EPOCH};
+
+use anyhow::{anyhow, Context, Result};
+
+use crate::util::json::Json;
+
+/// Default trajectory location (repo root, committed).
+pub const TRAJECTORY_PATH: &str = "BENCH_trajectory.json";
+
+/// Current `git rev-parse HEAD`, or `"unknown"` when git is unavailable
+/// (e.g. running from an exported tarball) — the ratchet then treats
+/// every committed row as "a different commit", which is the safe side.
+pub fn git_sha() -> String {
+    std::process::Command::new("git")
+        .args(["rev-parse", "--short=12", "HEAD"])
+        .output()
+        .ok()
+        .filter(|o| o.status.success())
+        .and_then(|o| String::from_utf8(o.stdout).ok())
+        .map(|s| s.trim().to_string())
+        .filter(|s| !s.is_empty())
+        .unwrap_or_else(|| "unknown".to_string())
+}
+
+/// Today as `YYYY-MM-DD` (UTC), from the civil-from-days algorithm —
+/// no clock dependencies beyond `SystemTime`.
+pub fn today_utc() -> String {
+    let secs = SystemTime::now()
+        .duration_since(UNIX_EPOCH)
+        .map(|d| d.as_secs())
+        .unwrap_or(0);
+    let (y, m, d) = civil_from_days((secs / 86_400) as i64);
+    format!("{y:04}-{m:02}-{d:02}")
+}
+
+/// Days-since-epoch -> (year, month, day). Howard Hinnant's public-domain
+/// `civil_from_days`, transliterated.
+fn civil_from_days(z: i64) -> (i64, u32, u32) {
+    let z = z + 719_468;
+    let era = if z >= 0 { z } else { z - 146_096 } / 146_097;
+    let doe = (z - era * 146_097) as u64; // [0, 146096]
+    let yoe = (doe - doe / 1460 + doe / 36_524 - doe / 146_096) / 365; // [0, 399]
+    let y = yoe as i64 + era * 400;
+    let doy = doe - (365 * yoe + yoe / 4 - yoe / 100); // [0, 365]
+    let mp = (5 * doy + 2) / 153; // [0, 11]
+    let d = (doy - (153 * mp + 2) / 5 + 1) as u32; // [1, 31]
+    let m = if mp < 10 { mp + 3 } else { mp - 9 } as u32; // [1, 12]
+    (if m <= 2 { y + 1 } else { y }, m, d)
+}
+
+/// Append `row` to the JSON array at `path`. A missing file starts as
+/// `[]`; an unparseable or non-array file is an error (never clobber a
+/// corrupt trajectory silently — that *is* history loss).
+pub fn append_row(path: &str, row: Json) -> Result<()> {
+    let mut rows = match std::fs::read_to_string(path) {
+        Ok(text) => match Json::parse(&text) {
+            Ok(Json::Arr(rows)) => rows,
+            Ok(_) => return Err(anyhow!("{path}: not a JSON array")),
+            Err(e) => return Err(anyhow!("{path}: {e} (refusing to overwrite)")),
+        },
+        Err(e) if e.kind() == std::io::ErrorKind::NotFound => Vec::new(),
+        Err(e) => return Err(e).with_context(|| format!("reading {path}")),
+    };
+    rows.push(row);
+    // one row per line keeps `git diff` append-only and review-friendly
+    let mut text = String::from("[\n");
+    for (i, r) in rows.iter().enumerate() {
+        text.push_str("  ");
+        text.push_str(&r.to_string());
+        if i + 1 < rows.len() {
+            text.push(',');
+        }
+        text.push('\n');
+    }
+    text.push_str("]\n");
+    std::fs::write(path, text).with_context(|| format!("writing {path}"))
+}
+
+/// The ratchet baseline: the last row recorded under a different sha
+/// than `head_sha` (the last *committed* point), falling back to the
+/// last row when every row is from HEAD (first run on a fresh branch).
+pub fn baseline_row<'a>(rows: &'a [Json], head_sha: &str) -> Option<&'a Json> {
+    rows.iter()
+        .rev()
+        .find(|r| r.get("sha").and_then(|v| v.as_str()) != Some(head_sha))
+        .or_else(|| rows.last())
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn civil_from_days_known_dates() {
+        assert_eq!(civil_from_days(0), (1970, 1, 1));
+        assert_eq!(civil_from_days(19_723), (2024, 1, 1)); // leap year
+        assert_eq!(civil_from_days(19_783), (2024, 3, 1)); // past Feb 29
+        assert_eq!(civil_from_days(20_484), (2026, 1, 31));
+    }
+
+    #[test]
+    fn today_is_well_formed() {
+        let d = today_utc();
+        assert_eq!(d.len(), 10);
+        assert_eq!(d.as_bytes()[4], b'-');
+        assert_eq!(d.as_bytes()[7], b'-');
+        assert!(d.starts_with("20"), "{d}");
+    }
+
+    #[test]
+    fn append_grows_array_and_rejects_corruption() {
+        let path = std::env::temp_dir().join(format!(
+            "edbatch_traj_{}_{:?}.json",
+            std::process::id(),
+            std::thread::current().id()
+        ));
+        let path = path.to_string_lossy().into_owned();
+        let _ = std::fs::remove_file(&path);
+        // missing file starts as []
+        append_row(&path, Json::obj(vec![("sha", Json::from("aaa"))])).unwrap();
+        append_row(&path, Json::obj(vec![("sha", Json::from("bbb"))])).unwrap();
+        let doc = Json::parse(&std::fs::read_to_string(&path).unwrap()).unwrap();
+        let rows = doc.as_arr().unwrap();
+        assert_eq!(rows.len(), 2);
+        assert_eq!(rows[1].get("sha").and_then(|v| v.as_str()), Some("bbb"));
+        // corrupt file: refuse, leave bytes untouched
+        std::fs::write(&path, "{not json").unwrap();
+        assert!(append_row(&path, Json::Arr(vec![])).is_err());
+        assert_eq!(std::fs::read_to_string(&path).unwrap(), "{not json");
+        let _ = std::fs::remove_file(&path);
+    }
+
+    #[test]
+    fn baseline_skips_head_rows() {
+        let rows = vec![
+            Json::obj(vec![("sha", Json::from("old"))]),
+            Json::obj(vec![("sha", Json::from("head"))]),
+            Json::obj(vec![("sha", Json::from("head"))]),
+        ];
+        let b = baseline_row(&rows, "head").unwrap();
+        assert_eq!(b.get("sha").and_then(|v| v.as_str()), Some("old"));
+        // all rows from HEAD: fall back to the most recent one
+        let only_head = vec![Json::obj(vec![("sha", Json::from("head"))])];
+        assert!(baseline_row(&only_head, "head").is_some());
+        assert!(baseline_row(&[], "head").is_none());
+    }
+}

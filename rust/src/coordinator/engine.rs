@@ -37,8 +37,9 @@ use rustc_hash::FxHashMap;
 
 use crate::batching::Schedule;
 use crate::coordinator::compose::ComposedPlan;
-use crate::exec::backend::{CpuBackend, ExecBackend, PjrtBackend};
+use crate::exec::backend::{CpuBackend, ExecBackend, KernelReport, PjrtBackend};
 use crate::exec::pool::{PoolStats, ThreadPool};
+use crate::exec::simd::SimdLevel;
 use crate::graph::cells::{self, ArgSemantics};
 use crate::graph::{CellKind, Graph, NodeId, TypeRegistry};
 use crate::memory::graph_plan::{ArgAccess, DstAccess, GraphMemoryPlan, PlanCache};
@@ -97,6 +98,16 @@ pub struct ExecReport {
     /// summed per-chunk busy time across pool threads;
     /// `par_busy_s / (par_wall_s × threads)` is the pool occupancy
     pub par_busy_s: f64,
+    /// batched kernel calls dispatched to the SIMD micro-kernels (zero
+    /// under `--strict-bitwise` or on scalar-only hosts)
+    pub simd_kernel_calls: usize,
+    /// cells whose weights were AOT panel-packed during this mini-batch
+    /// (nonzero only on first use of a cell — zero in steady state)
+    pub pack_events: usize,
+    /// elements written into packed weight panels this mini-batch
+    pub pack_elems: usize,
+    /// wall seconds spent packing weights (one-time, off the hot path)
+    pub pack_s: f64,
 }
 
 /// Backend selection for [`CellEngine::new`].
@@ -622,6 +633,38 @@ impl<'a> CellEngine<'a> {
         report.par_busy_s = now.busy_s - before.busy_s;
     }
 
+    /// Fold the backend kernel-counter delta since `before` into `report`.
+    fn fold_kernel_report(&self, before: KernelReport, report: &mut ExecReport) {
+        let now = self.backend.kernel_report();
+        report.simd_kernel_calls = (now.simd_calls - before.simd_calls) as usize;
+        report.pack_events = (now.pack_events - before.pack_events) as usize;
+        report.pack_elems = (now.pack_elems - before.pack_elems) as usize;
+        report.pack_s = now.pack_s - before.pack_s;
+    }
+
+    /// Pin the backend to the scalar oracle kernels — the engine half of
+    /// `--strict-bitwise`. With this set, outputs are bit-for-bit the
+    /// pre-SIMD scalar path at any thread count.
+    pub fn set_strict_bitwise(&mut self, strict: bool) {
+        self.backend.set_strict_scalar(strict);
+    }
+
+    /// The backend's cumulative kernel counters (level, dispatches, pack
+    /// work).
+    pub fn kernel_report(&self) -> KernelReport {
+        self.backend.kernel_report()
+    }
+
+    /// Micro-kernel level the backend detected at construction.
+    pub fn simd_level(&self) -> SimdLevel {
+        self.backend.kernel_report().level
+    }
+
+    /// Is the SIMD path in use (vector level detected and not pinned)?
+    pub fn simd_active(&self) -> bool {
+        self.backend.kernel_report().simd_active()
+    }
+
     /// Cumulative PQ-planner invocations through this engine's plan cache.
     pub fn plans_built(&self) -> u64 {
         self.plans.builds
@@ -654,6 +697,7 @@ impl<'a> CellEngine<'a> {
         let grew = store.reset(plan.clone());
 
         let pool0 = self.pool_stats();
+        let kr0 = self.backend.kernel_report();
         let t0 = Instant::now();
         let mut report = ExecReport {
             batches: schedule.batches.len(),
@@ -686,6 +730,7 @@ impl<'a> CellEngine<'a> {
         }
         report.exec_s = t0.elapsed().as_secs_f64();
         self.fold_pool_stats(pool0, &mut report);
+        self.fold_kernel_report(kr0, &mut report);
         Ok(report)
     }
 
@@ -701,6 +746,7 @@ impl<'a> CellEngine<'a> {
     ) -> Result<ExecReport> {
         let grew = store.reset_flat(comp.total_elems());
         let pool0 = self.pool_stats();
+        let kr0 = self.backend.kernel_report();
         let t0 = Instant::now();
         let mut report = ExecReport {
             batches: comp.num_batches(),
@@ -746,6 +792,7 @@ impl<'a> CellEngine<'a> {
         }
         report.exec_s = t0.elapsed().as_secs_f64();
         self.fold_pool_stats(pool0, &mut report);
+        self.fold_kernel_report(kr0, &mut report);
         Ok(report)
     }
 
@@ -1874,5 +1921,54 @@ mod tests {
     #[test]
     fn parallel_bitwise_ok_self_check_passes() {
         assert!(parallel_bitwise_ok(16, 3, 7));
+    }
+
+    #[test]
+    fn strict_bitwise_engine_matches_forced_scalar_engine_bitwise() {
+        // the --strict-bitwise contract end to end: an engine with the
+        // scalar path pinned reproduces a forced-scalar backend exactly,
+        // whatever SIMD level the host detects
+        for kind in ALL_WORKLOADS {
+            let w = Workload::new(kind, 16);
+            let mut rng = Rng::new(0xC0DE);
+            let mut g = w.gen_batch(2, &mut rng);
+            g.freeze();
+            let nt = w.registry.num_types();
+            let schedule = run_policy(&g, nt, &mut FsmPolicy::new(Encoding::Sort));
+            let run = |strict: bool, force_scalar: bool| {
+                let mut engine = CellEngine::new(Backend::Cpu, 16, 1).unwrap();
+                if force_scalar {
+                    engine.backend = Box::new(CpuBackend::with_level(16, SimdLevel::Scalar));
+                }
+                engine.set_strict_bitwise(strict);
+                let mut store = ArenaStateStore::new();
+                engine.execute(&g, &w.registry, &schedule, &mut store).unwrap();
+                store.h_vectors()
+            };
+            assert_eq!(run(true, false), run(false, true), "{kind:?}");
+        }
+    }
+
+    #[test]
+    fn exec_report_counts_simd_dispatches_and_one_time_packs() {
+        let w = Workload::new(WorkloadKind::TreeLstm, 16);
+        let mut rng = Rng::new(5);
+        let mut g = w.gen_batch(2, &mut rng);
+        g.freeze();
+        let nt = w.registry.num_types();
+        let schedule = run_policy(&g, nt, &mut FsmPolicy::new(Encoding::Sort));
+        let mut engine = CellEngine::new(Backend::Cpu, 16, 1).unwrap();
+        let mut store = ArenaStateStore::new();
+        let r1 = engine.execute(&g, &w.registry, &schedule, &mut store).unwrap();
+        let r2 = engine.execute(&g, &w.registry, &schedule, &mut store).unwrap();
+        if engine.simd_active() {
+            assert!(r1.simd_kernel_calls > 0);
+            assert!(r1.pack_events > 0, "first run packs each cell once");
+            assert_eq!(r2.pack_events, 0, "steady state never re-packs");
+            assert_eq!(r2.pack_elems, 0);
+        } else {
+            assert_eq!(r1.simd_kernel_calls, 0);
+            assert_eq!(r1.pack_events + r2.pack_events, 0);
+        }
     }
 }

@@ -52,6 +52,14 @@ struct Inner {
     par_chunks: u64,
     par_wall_s: f64,
     par_busy_s: f64,
+    // micro-kernel accounting (exec::simd)
+    simd_level: &'static str,
+    simd_active: bool,
+    strict_bitwise: bool,
+    simd_kernel_calls: u64,
+    pack_events: u64,
+    pack_elems: u64,
+    pack_s: f64,
 }
 
 /// Thread-safe metrics sink shared between server workers.
@@ -122,6 +130,21 @@ pub struct MetricsSnapshot {
     pub slo_target_s: f64,
     /// requests whose latency exceeded the SLO target
     pub slo_violations: u64,
+    /// detected micro-kernel level ("scalar", "avx2+fma", "neon")
+    pub simd_level: String,
+    /// true when the SIMD path is in use (vector level, not pinned)
+    pub simd_active: bool,
+    /// true when `--strict-bitwise` pinned the scalar oracle
+    pub strict_bitwise: bool,
+    /// batched kernel calls dispatched to the SIMD micro-kernels
+    pub simd_kernel_calls: u64,
+    /// cells whose weights were AOT panel-packed (once per cell; flat in
+    /// steady state, like `arena_grows`)
+    pub pack_events: u64,
+    /// elements written into packed weight panels
+    pub pack_elems: u64,
+    /// wall seconds spent packing weights (one-time, off the hot path)
+    pub pack_s: f64,
     /// per-worker intra-batch pool size (1 = serial kernels)
     pub pool_threads: u64,
     /// parallel kernel sections executed across all workers
@@ -252,6 +275,15 @@ impl Metrics {
         self.inner.lock().unwrap().pool_threads = threads.max(1);
     }
 
+    /// Record the worker engines' kernel configuration (called once per
+    /// worker at boot; every worker reports the same detection result).
+    pub fn set_kernel_config(&self, level: &'static str, simd_active: bool, strict: bool) {
+        let mut g = self.inner.lock().unwrap();
+        g.simd_level = level;
+        g.simd_active = simd_active;
+        g.strict_bitwise = strict;
+    }
+
     pub fn record_request(&self, workload: &'static str, latency: Duration) {
         let mut g = self.inner.lock().unwrap();
         g.requests += 1;
@@ -313,6 +345,10 @@ impl Metrics {
         g.par_chunks += report.par_chunks as u64;
         g.par_wall_s += report.par_wall_s;
         g.par_busy_s += report.par_busy_s;
+        g.simd_kernel_calls += report.simd_kernel_calls as u64;
+        g.pack_events += report.pack_events as u64;
+        g.pack_elems += report.pack_elems as u64;
+        g.pack_s += report.pack_s;
     }
 
     pub fn snapshot(&self) -> MetricsSnapshot {
@@ -358,6 +394,17 @@ impl Metrics {
             store_trained: g.store_trained,
             slo_target_s: g.slo_target_s,
             slo_violations: g.slo_violations,
+            simd_level: if g.simd_level.is_empty() {
+                "scalar".to_string()
+            } else {
+                g.simd_level.to_string()
+            },
+            simd_active: g.simd_active,
+            strict_bitwise: g.strict_bitwise,
+            simd_kernel_calls: g.simd_kernel_calls,
+            pack_events: g.pack_events,
+            pack_elems: g.pack_elems,
+            pack_s: g.pack_s,
             pool_threads: g.pool_threads.max(1),
             par_sections: g.par_sections,
             par_chunks: g.par_chunks,
@@ -500,6 +547,44 @@ mod tests {
         assert!((s.pool_occupancy() - 0.75).abs() < 1e-12);
         // no parallel work ever -> occupancy reads 0, not NaN
         assert_eq!(Metrics::new().snapshot().pool_occupancy(), 0.0);
+    }
+
+    #[test]
+    fn kernel_config_and_pack_counters() {
+        let m = Metrics::new();
+        // before any worker reports: level reads as the scalar oracle
+        assert_eq!(m.snapshot().simd_level, "scalar");
+        assert!(!m.snapshot().simd_active);
+        m.set_kernel_config("avx2+fma", true, false);
+        let bd = TimeBreakdown::default();
+        // warmup minibatch packs weights; steady state does not
+        m.record_minibatch(
+            2,
+            &bd,
+            &ExecReport {
+                simd_kernel_calls: 4,
+                pack_events: 2,
+                pack_elems: 1024,
+                pack_s: 0.001,
+                ..Default::default()
+            },
+        );
+        m.record_minibatch(
+            3,
+            &bd,
+            &ExecReport {
+                simd_kernel_calls: 6,
+                ..Default::default()
+            },
+        );
+        let s = m.snapshot();
+        assert_eq!(s.simd_level, "avx2+fma");
+        assert!(s.simd_active);
+        assert!(!s.strict_bitwise);
+        assert_eq!(s.simd_kernel_calls, 10);
+        assert_eq!(s.pack_events, 2);
+        assert_eq!(s.pack_elems, 1024);
+        assert!((s.pack_s - 0.001).abs() < 1e-12);
     }
 
     #[test]

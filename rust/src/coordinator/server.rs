@@ -131,6 +131,11 @@ pub struct ServerConfig {
     /// pre-resolved scheduler policy (Learned mode); `None` = resolve
     /// from the store, training at boot on a miss
     pub scheduler: Option<SchedulerPolicy>,
+    /// `--strict-bitwise`: pin every worker engine to the scalar oracle
+    /// kernels, so responses are bit-for-bit the pre-SIMD behavior (the
+    /// strict half of the numerics contract; see `exec::parity` for the
+    /// ULP-bounded contract the SIMD path answers to instead)
+    pub strict_bitwise: bool,
 }
 
 impl Default for ServerConfig {
@@ -152,6 +157,7 @@ impl Default for ServerConfig {
             dispatch: DispatchMode::Fixed,
             slo_p99: None,
             scheduler: None,
+            strict_bitwise: false,
         }
     }
 }
@@ -678,6 +684,14 @@ fn worker_loop(
     if config.threads > 1 {
         engine.set_thread_pool(Arc::new(crate::exec::pool::ThreadPool::new(config.threads)));
     }
+    // numerics mode: --strict-bitwise pins the scalar oracle kernels;
+    // otherwise the backend runs whatever micro-kernel level it detected
+    // (answering to the ULP parity contract instead of bit-equality)
+    if config.strict_bitwise {
+        engine.set_strict_bitwise(true);
+    }
+    let kr = engine.kernel_report();
+    metrics.set_kernel_config(engine.simd_level().name(), kr.simd_active(), config.strict_bitwise);
     // the compositional hot path is ED-Batch's contribution; the baselines
     // keep re-running their policy per mini-batch (that overhead is what
     // they exist to measure)

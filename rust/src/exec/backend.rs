@@ -14,6 +14,7 @@
 //! [`CellWeights`], so CPU/PJRT numerics can be cross-checked end to end.
 
 use std::sync::Arc;
+use std::time::Instant;
 
 use anyhow::{anyhow, Result};
 use rustc_hash::FxHashMap;
@@ -24,6 +25,7 @@ use crate::util::rng::Rng;
 
 use super::cpu_kernels as k;
 use super::pool::{self, SendPtr, ThreadPool};
+use super::simd::{self, PackedMat, PackedWeights, SimdLevel};
 
 /// A batched cell executor. `data` buffers hold `bucket` lanes per data
 /// argument (zero-padded past the real lane count); outputs are written
@@ -89,6 +91,49 @@ pub trait ExecBackend {
     /// cross-lane reduction.
     fn set_pool(&mut self, pool: Arc<ThreadPool>) {
         let _ = pool;
+    }
+
+    /// Pin this backend to the scalar oracle kernels regardless of
+    /// detected SIMD support (the `--strict-bitwise` numerics mode).
+    /// Default no-op for backends without a SIMD path.
+    fn set_strict_scalar(&mut self, strict: bool) {
+        let _ = strict;
+    }
+
+    /// Cumulative kernel-dispatch counters (SIMD level, call counts, AOT
+    /// weight-pack work). The engine folds per-minibatch deltas of this
+    /// into its exec report; backends without a SIMD path return the
+    /// default (scalar, all-zero).
+    fn kernel_report(&self) -> KernelReport {
+        KernelReport::default()
+    }
+}
+
+/// Cumulative kernel-dispatch counters — what [`ExecBackend::kernel_report`]
+/// exposes so metrics can attribute work to the SIMD vs scalar path and
+/// price the one-time AOT weight packing.
+#[derive(Clone, Copy, Debug, Default, PartialEq)]
+pub struct KernelReport {
+    /// detected micro-kernel level of this backend
+    pub level: SimdLevel,
+    /// true when `--strict-bitwise` pinned the scalar oracle
+    pub strict_scalar: bool,
+    /// `run_cell_into` calls dispatched to SIMD kernels
+    pub simd_calls: u64,
+    /// `run_cell_into` calls dispatched to the scalar oracle
+    pub scalar_calls: u64,
+    /// cells whose weights were panel-packed (once per (cell, hidden))
+    pub pack_events: u64,
+    /// total elements written into packed panels (incl. tail padding)
+    pub pack_elems: u64,
+    /// wall seconds spent packing (AOT, off the steady-state path)
+    pub pack_s: f64,
+}
+
+impl KernelReport {
+    /// Is the SIMD path actually in use (a vector level, not pinned)?
+    pub fn simd_active(&self) -> bool {
+        self.level.simd_active() && !self.strict_scalar
     }
 }
 
@@ -173,6 +218,8 @@ struct LaneScratch {
     t1: Vec<f32>,
     t2: Vec<f32>,
     t3: Vec<f32>,
+    /// panel-pack buffer for per-lane B operands ([`simd::matmul_any`])
+    pk: Vec<f32>,
 }
 
 /// Memoized per-cell layout (output widths + data-arg widths): computed
@@ -196,10 +243,26 @@ pub struct CpuBackend {
     pool: Option<Arc<ThreadPool>>,
     /// one scratch set per pool worker slot (allocation-free once warm)
     par_scratch: Vec<LaneScratch>,
+    /// detected (or injected) micro-kernel level
+    level: SimdLevel,
+    /// `--strict-bitwise`: pin the scalar oracle even when `level` is SIMD
+    strict: bool,
+    /// AOT panel-packed weights per cell — the per-(kind, width) weight
+    /// table's SIMD-friendly layout, built once at first use so
+    /// steady-state serving never touches row-major weights
+    packed: FxHashMap<String, PackedWeights>,
+    /// cumulative dispatch/pack counters ([`ExecBackend::kernel_report`])
+    stats: KernelReport,
 }
 
 impl CpuBackend {
     pub fn new(hidden: usize) -> CpuBackend {
+        CpuBackend::with_level(hidden, SimdLevel::detect())
+    }
+
+    /// Construct at an explicit kernel level (tests, parity harness,
+    /// forced-scalar runs). [`CpuBackend::new`] uses runtime detection.
+    pub fn with_level(hidden: usize, level: SimdLevel) -> CpuBackend {
         CpuBackend {
             hidden,
             weights: CellWeights::new(hidden),
@@ -207,7 +270,15 @@ impl CpuBackend {
             scratch: LaneScratch::default(),
             pool: None,
             par_scratch: Vec::new(),
+            level,
+            strict: false,
+            packed: FxHashMap::default(),
+            stats: KernelReport::default(),
         }
+    }
+
+    pub fn level(&self) -> SimdLevel {
+        self.level
     }
 }
 
@@ -255,8 +326,15 @@ impl ExecBackend for CpuBackend {
             scratch,
             pool,
             par_scratch,
+            level,
+            strict,
+            packed,
+            stats,
         } = self;
         let h = *hidden;
+        // the kernel level this call dispatches at: --strict-bitwise pins
+        // the scalar oracle, making every bitwise assertion exact again
+        let eff = if *strict { SimdLevel::Scalar } else { *level };
         if !meta.contains_key(cell) {
             let ow = cells::out_widths(cell, h);
             if ow.is_empty() {
@@ -273,6 +351,27 @@ impl ExecBackend for CpuBackend {
             debug_assert_eq!(o.len(), bucket * wo, "{cell}");
         }
         let w = weights.get(cell);
+        // AOT weight packing: once per (cell, hidden), before any chunk
+        // dispatch, under &mut self — the pooled section below only ever
+        // sees the finished shared &PackedWeights
+        let pw = if eff.simd_active() {
+            if !packed.contains_key(cell) {
+                let t0 = Instant::now();
+                let pwk = PackedWeights::pack(&weight_shapes(cell, h), w);
+                stats.pack_events += 1;
+                stats.pack_elems += pwk.elems() as u64;
+                stats.pack_s += t0.elapsed().as_secs_f64();
+                packed.insert(cell.to_string(), pwk);
+            }
+            packed.get(cell)
+        } else {
+            None
+        };
+        if eff.simd_active() {
+            stats.simd_calls += 1;
+        } else {
+            stats.scalar_calls += 1;
+        }
 
         let nch = pool::num_lane_chunks(bucket);
         if let Some(p) = pool {
@@ -305,7 +404,7 @@ impl ExecBackend for CpuBackend {
                     let out1 = o1.map(|(p1, w1)| unsafe {
                         std::slice::from_raw_parts_mut(p1.0.add(lo * w1), b * w1)
                     });
-                    run_cell_lanes(cell, &dsub[..data.len()], w, h, b, out0, out1, s);
+                    run_cell_lanes(cell, &dsub[..data.len()], w, eff, pw, h, b, out0, out1, s);
                 });
                 return Ok(());
             }
@@ -314,13 +413,24 @@ impl ExecBackend for CpuBackend {
         // serial: a single chunk covering every lane
         let (first, rest) = outs.split_at_mut(1);
         let out1 = rest.first_mut().map(|o| &mut **o);
-        run_cell_lanes(cell, data, w, h, bucket, &mut *first[0], out1, scratch);
+        run_cell_lanes(cell, data, w, eff, pw, h, bucket, &mut *first[0], out1, scratch);
         Ok(())
     }
 
     fn set_pool(&mut self, pool: Arc<ThreadPool>) {
         self.par_scratch = (0..pool.threads()).map(|_| LaneScratch::default()).collect();
         self.pool = Some(pool);
+    }
+
+    fn set_strict_scalar(&mut self, strict: bool) {
+        self.strict = strict;
+    }
+
+    fn kernel_report(&self) -> KernelReport {
+        let mut r = self.stats;
+        r.level = self.level;
+        r.strict_scalar = self.strict;
+        r
     }
 }
 
@@ -335,11 +445,20 @@ impl ExecBackend for CpuBackend {
 ///
 /// `cell` must be a known artifact cell (callers validate via
 /// [`cells::out_widths`] first).
+///
+/// `level` picks the micro-kernel family (the per-chunk kernel vtable);
+/// `pw` holds the cell's AOT panel-packed weights when `level` is a SIMD
+/// level. Both are per-chunk-immutable, so the chunking argument above is
+/// untouched: at any level, lane `i`'s outputs depend only on lane `i`'s
+/// inputs and each output element's k-accumulation order is fixed, so the
+/// chunk split still cannot change any output bit.
 #[allow(clippy::too_many_arguments)]
 fn run_cell_lanes(
     cell: &str,
     data: &[&[f32]],
     w: &[Vec<f32>],
+    level: SimdLevel,
+    pw: Option<&PackedWeights>,
     h: usize,
     b: usize,
     out0: &mut [f32],
@@ -350,35 +469,28 @@ fn run_cell_lanes(
     match cell {
         "lstm" => {
             let gates = fit(&mut s.t0, b * 4 * h);
-            affine2_into(data[0], data[1], &w[0], &w[1], &w[2], b, h, 4 * h, &mut s.t1, gates);
+            affine2_into(level, data[0], data[1], &w[0], pmat(pw, 0), &w[1], pmat(pw, 1), &w[2], b, h, 4 * h, &mut s.t1, gates);
             let cn = out1.expect("lstm has two outputs");
-            lstm_pointwise_into(gates, data[2], b, h, out0, cn);
+            simd::lstm_pointwise(level, gates, data[2], b, h, out0, cn);
         }
         "gru" => {
             let rz = fit(&mut s.t0, b * 2 * h);
-            affine2_into(data[0], data[1], &w[0], &w[1], &w[2], b, h, 2 * h, &mut s.t1, rz);
+            affine2_into(level, data[0], data[1], &w[0], pmat(pw, 0), &w[1], pmat(pw, 1), &w[2], b, h, 2 * h, &mut s.t1, rz);
             let nx = fit(&mut s.t1, b * h);
-            k::matmul(data[0], &w[3], nx, b, h, h);
+            wmm(level, data[0], &w[3], pmat(pw, 3), nx, b, h, h);
             let nh = fit(&mut s.t2, b * h);
-            k::matmul(data[1], &w[4], nh, b, h, h);
-            for i in 0..b {
-                for j in 0..h {
-                    let r = sigm(rz[i * 2 * h + j]);
-                    let z = sigm(rz[i * 2 * h + h + j]);
-                    let n = ((nx[i * h + j] + w[5][j]) + r * nh[i * h + j]).tanh();
-                    out0[i * h + j] = (1.0 - z) * n + z * data[1][i * h + j];
-                }
-            }
+            wmm(level, data[1], &w[4], pmat(pw, 4), nh, b, h, h);
+            simd::gru_gates(level, rz, nx, nh, &w[5], data[1], b, h, out0);
         }
         "treelstm_internal" => {
             let gates = fit(&mut s.t0, b * 5 * h);
-            affine2_into(data[0], data[1], &w[0], &w[1], &w[2], b, h, 5 * h, &mut s.t1, gates);
+            affine2_into(level, data[0], data[1], &w[0], pmat(pw, 0), &w[1], pmat(pw, 1), &w[2], b, h, 5 * h, &mut s.t1, gates);
             let cn = out1.expect("treelstm has two outputs");
-            treelstm_pointwise_into(gates, data[2], data[3], b, h, out0, cn);
+            simd::treelstm_pointwise(level, gates, data[2], data[3], b, h, out0, cn);
         }
         "treelstm_leaf" => {
             let g = fit(&mut s.t0, b * 3 * h);
-            k::matmul(data[0], &w[0], g, b, h, 3 * h);
+            wmm(level, data[0], &w[0], pmat(pw, 0), g, b, h, 3 * h);
             let gb = fit(&mut s.t1, b * 3 * h);
             k::add_bias(g, &w[1], gb);
             let cn = out1.expect("treelstm leaf has two outputs");
@@ -393,7 +505,7 @@ fn run_cell_lanes(
         }
         "treegru_internal" => {
             let rz = fit(&mut s.t0, b * 3 * h);
-            affine2_into(data[0], data[1], &w[0], &w[1], &w[2], b, h, 3 * h, &mut s.t1, rz);
+            affine2_into(level, data[0], data[1], &w[0], pmat(pw, 0), &w[1], pmat(pw, 1), &w[2], b, h, 3 * h, &mut s.t1, rz);
             // candidate: tanh((r_l*h_l) @ w3 + (r_r*h_r) @ w4 + b5)
             let rhl = fit(&mut s.t1, b * h);
             let rhr = fit(&mut s.t2, b * h);
@@ -404,9 +516,9 @@ fn run_cell_lanes(
                 }
             }
             let n1 = fit(&mut s.t3, b * h);
-            k::matmul(rhl, &w[3], n1, b, h, h);
+            wmm(level, rhl, &w[3], pmat(pw, 3), n1, b, h, h);
             let n2 = fit(&mut s.t1, b * h);
-            k::matmul(rhr, &w[4], n2, b, h, h);
+            wmm(level, rhr, &w[4], pmat(pw, 4), n2, b, h, h);
             for i in 0..b {
                 for j in 0..h {
                     let z = sigm(rz[i * 3 * h + 2 * h + j]);
@@ -418,7 +530,7 @@ fn run_cell_lanes(
         }
         "treegru_leaf" => {
             let m = fit(&mut s.t0, b * h);
-            k::matmul(data[0], &w[0], m, b, h, h);
+            wmm(level, data[0], &w[0], pmat(pw, 0), m, b, h, h);
             let mb = fit(&mut s.t1, b * h);
             k::add_bias(m, &w[1], mb);
             k::tanh(mb, out0);
@@ -439,7 +551,7 @@ fn run_cell_lanes(
                 }
             }
             let hv = fit(&mut s.t1, b * h);
-            k::matmul(cat, &w[0], hv, b, 2 * h, h);
+            wmm(level, cat, &w[0], pmat(pw, 0), hv, b, 2 * h, h);
             let mout = out1.expect("mv_cell has two outputs");
             for i in 0..b {
                 for j in 0..h {
@@ -452,7 +564,10 @@ fn run_cell_lanes(
             for i in 0..b {
                 stacked[..h * h].copy_from_slice(&data[2][i * h * h..(i + 1) * h * h]);
                 stacked[h * h..].copy_from_slice(&data[3][i * h * h..(i + 1) * h * h]);
-                k::matmul(&w[2], stacked, mm, h, 2 * h, h);
+                // B operand is per-lane data, not a weight: no AOT pack,
+                // so this goes through the pack-on-the-fly entry (scratch
+                // pack buffer, allocation-free once warm)
+                simd::matmul_any(level, &w[2], stacked, mm, h, 2 * h, h, &mut s.pk);
                 for (o, (&a, &bv)) in mout[i * h * h..(i + 1) * h * h]
                     .iter_mut()
                     .zip(mm.iter().zip(w[3].iter()))
@@ -463,7 +578,7 @@ fn run_cell_lanes(
         }
         "classifier" => {
             let l = fit(&mut s.t0, b * nc);
-            k::matmul(data[0], &w[0], l, b, h, nc);
+            wmm(level, data[0], &w[0], pmat(pw, 0), l, b, h, nc);
             k::add_bias(l, &w[1], out0);
         }
         other => unreachable!("run_cell_lanes: unvalidated cell {other}"),
@@ -645,15 +760,46 @@ fn sigm(x: f32) -> f32 {
     1.0 / (1.0 + (-x).exp())
 }
 
+/// The packed panel form of weight tensor `i`, when the cell's weights
+/// were AOT-packed and the tensor is 2-D.
+fn pmat<'a>(pw: Option<&'a PackedWeights>, i: usize) -> Option<&'a PackedMat> {
+    pw.and_then(|p| p.mat(i))
+}
+
+/// One weight-matmul dispatch: the panel micro-kernel when this level has
+/// one and the operand was AOT-packed, else the scalar oracle. This (plus
+/// [`simd::matmul_any`] for per-lane B operands) is the kernel vtable the
+/// whole cell layer funnels through.
+#[allow(clippy::too_many_arguments)]
+fn wmm(
+    level: SimdLevel,
+    a: &[f32],
+    bmat: &[f32],
+    pb: Option<&PackedMat>,
+    c: &mut [f32],
+    m: usize,
+    kdim: usize,
+    n: usize,
+) {
+    match pb {
+        Some(p) if level.simd_active() => simd::matmul_packed(level, a, p, c, m),
+        _ => k::matmul(a, bmat, c, m, kdim, n),
+    }
+}
+
 /// `out = x @ wx + hvec @ wh + bias`, using `tmp` as the pooled buffer for
 /// the second product. Accumulation order matches the legacy path:
-/// `(g1 + g2) + bias` per element.
+/// `(g1 + g2) + bias` per element (on any kernel level — only the matmul
+/// interiors change with `level`).
 #[allow(clippy::too_many_arguments)]
 fn affine2_into(
+    level: SimdLevel,
     x: &[f32],
     hvec: &[f32],
     wx: &[f32],
+    pwx: Option<&PackedMat>,
     wh: &[f32],
+    pwh: Option<&PackedMat>,
     bias: &[f32],
     b: usize,
     h: usize,
@@ -661,45 +807,13 @@ fn affine2_into(
     tmp: &mut Vec<f32>,
     out: &mut [f32],
 ) {
-    k::matmul(x, wx, out, b, h, n);
+    wmm(level, x, wx, pwx, out, b, h, n);
     tmp.clear();
     tmp.resize(b * n, 0.0);
-    k::matmul(hvec, wh, tmp, b, h, n);
+    wmm(level, hvec, wh, pwh, tmp, b, h, n);
     for i in 0..b {
         for j in 0..n {
             out[i * n + j] = (out[i * n + j] + tmp[i * n + j]) + bias[j];
-        }
-    }
-}
-
-fn lstm_pointwise_into(gates: &[f32], c: &[f32], b: usize, h: usize, hn: &mut [f32], cn: &mut [f32]) {
-    for i in 0..b {
-        for j in 0..h {
-            let g = |k: usize| gates[i * 4 * h + k * h + j];
-            let cv = sigm(g(1)) * c[i * h + j] + sigm(g(0)) * g(2).tanh();
-            cn[i * h + j] = cv;
-            hn[i * h + j] = sigm(g(3)) * cv.tanh();
-        }
-    }
-}
-
-#[allow(clippy::too_many_arguments)]
-fn treelstm_pointwise_into(
-    gates: &[f32],
-    cl: &[f32],
-    cr: &[f32],
-    b: usize,
-    h: usize,
-    hn: &mut [f32],
-    cn: &mut [f32],
-) {
-    for i in 0..b {
-        for j in 0..h {
-            let g = |k: usize| gates[i * 5 * h + k * h + j];
-            let cv = sigm(g(1)) * cl[i * h + j] + sigm(g(2)) * cr[i * h + j]
-                + sigm(g(0)) * g(3).tanh();
-            cn[i * h + j] = cv;
-            hn[i * h + j] = sigm(g(4)) * cv.tanh();
         }
     }
 }
@@ -846,5 +960,105 @@ mod tests {
         let s = pool.stats();
         assert_eq!(s.sections, 1);
         assert_eq!(s.chunks, 3);
+    }
+
+    fn cell_inputs(cell: &str, h: usize, b: usize, phase: f32) -> Vec<Vec<f32>> {
+        cells::data_arg_widths(cell, h)
+            .iter()
+            .enumerate()
+            .map(|(i, w)| {
+                (0..b * w)
+                    .map(|j| ((i * 13 + j) as f32 * 0.021 + phase).sin() * 0.4)
+                    .collect()
+            })
+            .collect()
+    }
+
+    #[test]
+    fn strict_scalar_pins_bitwise_to_scalar_backend() {
+        // the --strict-bitwise contract at the backend level: a detected
+        // backend with strict pinning must reproduce a Scalar backend
+        // bit-for-bit, whatever level the host detects (on scalar hosts
+        // this degenerates to comparing the same code with itself)
+        let h = 16;
+        for cell in cells::ALL_CELLS {
+            for b in [1usize, 7, 13] {
+                let bufs = cell_inputs(cell, h, b, 0.3);
+                let data: Vec<&[f32]> = bufs.iter().map(|v| v.as_slice()).collect();
+                let mut oracle = CpuBackend::with_level(h, SimdLevel::Scalar);
+                let want = oracle.run_cell(cell, &data, b).unwrap();
+                let mut pinned = CpuBackend::new(h);
+                pinned.set_strict_scalar(true);
+                let got = pinned.run_cell(cell, &data, b).unwrap();
+                assert_eq!(want, got, "{cell} b={b}");
+                assert!(!pinned.kernel_report().simd_active());
+            }
+        }
+    }
+
+    #[test]
+    fn detected_level_within_ulp_of_scalar_every_cell() {
+        // the SIMD acceptance gate at the backend level (exact on hosts
+        // that detect Scalar)
+        let h = 16;
+        for cell in cells::ALL_CELLS {
+            for b in [1usize, 7, 13] {
+                let bufs = cell_inputs(cell, h, b, 0.6);
+                let data: Vec<&[f32]> = bufs.iter().map(|v| v.as_slice()).collect();
+                let mut oracle = CpuBackend::with_level(h, SimdLevel::Scalar);
+                let want = oracle.run_cell(cell, &data, b).unwrap();
+                let mut native = CpuBackend::new(h);
+                let got = native.run_cell(cell, &data, b).unwrap();
+                for (o, (g, wv)) in got.iter().zip(&want).enumerate() {
+                    super::super::parity::assert_ulp_close(
+                        g,
+                        wv,
+                        super::super::parity::DEFAULT_MAX_ULP,
+                        &format!("{cell} b={b} out{o}"),
+                    );
+                }
+            }
+        }
+    }
+
+    #[test]
+    fn kernel_report_counts_dispatches_and_packs_once_per_cell() {
+        let h = 8;
+        let mut be = CpuBackend::new(h);
+        let bufs = cell_inputs("lstm", h, 3, 0.1);
+        let data: Vec<&[f32]> = bufs.iter().map(|v| v.as_slice()).collect();
+        be.run_cell("lstm", &data, 3).unwrap();
+        be.run_cell("lstm", &data, 3).unwrap();
+        let r = be.kernel_report();
+        assert_eq!(r.level, SimdLevel::detect());
+        if r.simd_active() {
+            // weights packed exactly once, both calls on the SIMD path
+            assert_eq!(r.pack_events, 1);
+            assert!(r.pack_elems > 0);
+            assert_eq!(r.simd_calls, 2);
+            assert_eq!(r.scalar_calls, 0);
+        } else {
+            assert_eq!(r.pack_events, 0);
+            assert_eq!(r.scalar_calls, 2);
+        }
+    }
+
+    #[test]
+    fn pooled_simd_backend_bit_identical_to_serial_simd_backend() {
+        // chunk invariance must hold on the SIMD path too: the vector
+        // kernels are lane-independent and accumulate k in a fixed order,
+        // so pooled == serial bit-for-bit at the *same* level
+        let h = 16;
+        let b = 21;
+        for cell in ["lstm", "gru", "mv_cell"] {
+            let bufs = cell_inputs(cell, h, b, 0.9);
+            let data: Vec<&[f32]> = bufs.iter().map(|v| v.as_slice()).collect();
+            let mut serial = CpuBackend::new(h);
+            let want = serial.run_cell(cell, &data, b).unwrap();
+            let mut pooled = CpuBackend::new(h);
+            pooled.set_pool(Arc::new(ThreadPool::new(3)));
+            let got = pooled.run_cell(cell, &data, b).unwrap();
+            assert_eq!(want, got, "{cell}");
+        }
     }
 }

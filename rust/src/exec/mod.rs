@@ -16,13 +16,17 @@
 
 pub mod backend;
 pub mod cpu_kernels;
+pub mod parity;
 pub mod pool;
+pub mod simd;
 
 use std::time::Instant;
 
 use crate::memory::{access_plan, BatchAccessPlan, BatchOp, MemoryPlan, OperandAccess};
 use crate::subgraph::{Prim, Subgraph};
 use crate::util::rng::Rng;
+
+use simd::SimdLevel;
 
 /// Copy counters accumulated during execution (matches `evaluate_layout`'s
 /// static prediction — asserted in tests).
@@ -42,6 +46,12 @@ pub struct SubgraphExec {
     arena: Vec<f32>,
     scratch: Vec<f32>,
     pub counters: ExecCounters,
+    /// micro-kernel level for the matmul prims — same dispatch path as
+    /// `backend.rs`, so SIMD/scalar selection applies here too and no
+    /// second kernel entry point can drift
+    level: SimdLevel,
+    /// panel-pack buffer for [`simd::matmul_any`] (reused across lanes)
+    pack_buf: Vec<f32>,
 }
 
 impl SubgraphExec {
@@ -71,6 +81,8 @@ impl SubgraphExec {
             arena,
             scratch,
             counters: ExecCounters::default(),
+            level: SimdLevel::detect(),
+            pack_buf: Vec::new(),
         }
     }
 
@@ -240,11 +252,11 @@ impl SubgraphExec {
             Prim::MatMulXW { .. } => {
                 let h = self.sg.hidden;
                 let bsz = srcs[0].len() / h;
-                k::matmul(&srcs[0], &srcs[1], &mut out, bsz, h, h);
+                simd::matmul_any(self.level, &srcs[0], &srcs[1], &mut out, bsz, h, h, &mut self.pack_buf);
             }
             Prim::MatMatWM { .. } => {
                 let h = self.sg.hidden;
-                k::matmul(&srcs[0], &srcs[1], &mut out, h, h, h);
+                simd::matmul_any(self.level, &srcs[0], &srcs[1], &mut out, h, h, h, &mut self.pack_buf);
             }
             Prim::Add { .. } => k::add(&srcs[0], &srcs[1], &mut out),
             Prim::Add3 { .. } => k::add3(&srcs[0], &srcs[1], &srcs[2], &mut out),

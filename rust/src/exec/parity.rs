@@ -1,0 +1,191 @@
+//! ULP-bounded parity harness — the enforcement half of the numerics
+//! contract in [`super::simd`].
+//!
+//! The scalar kernels are the oracle; the SIMD path may diverge from them
+//! only by FMA's single rounding per accumulation step and the polynomial
+//! transcendentals in the gate epilogues. This module bounds that
+//! divergence: two values agree when they are bitwise equal, within
+//! [`DEFAULT_MAX_ULP`] units-in-the-last-place, **or** within
+//! [`ABS_FLOOR`] absolutely. The absolute floor is load-bearing: gate
+//! outputs pass through sigmoid/tanh, so near-zero results (where one ULP
+//! is ~1e-45) would fail any pure ULP bound while being numerically
+//! indistinguishable.
+//!
+//! [`simd_parity_ok`] is the engine self-check wired into `serve`/`bench`
+//! startup (printed as `simd_parity_ok=<bool>` next to
+//! `bitwise_parallel_ok`): it runs every cell kind through a scalar and a
+//! native-level backend on identical deterministic inputs and compares
+//! under this contract. On hosts without SIMD both backends run the same
+//! code and the check is trivially (and exactly) true.
+
+use crate::graph::cells;
+use crate::util::rng::Rng;
+
+use super::backend::{CpuBackend, ExecBackend};
+use super::simd::SimdLevel;
+
+/// Default ULP tolerance of the SIMD-vs-scalar contract (ISSUE 6: ≤4).
+pub const DEFAULT_MAX_ULP: u64 = 4;
+
+/// Absolute tolerance floor: differences at most this large pass
+/// regardless of ULP distance (see module docs for why).
+pub const ABS_FLOOR: f32 = 1e-5;
+
+/// Distance between two floats in units-in-the-last-place, via the
+/// monotone integer mapping of IEEE-754 bit patterns (negative floats are
+/// reflected below zero so the distance is valid across the sign change).
+pub fn ulp_dist(a: f32, b: f32) -> u64 {
+    fn key(x: f32) -> i64 {
+        let i = x.to_bits() as i32 as i64;
+        if i < 0 {
+            (i32::MIN as i64) - i
+        } else {
+            i
+        }
+    }
+    key(a).abs_diff(key(b))
+}
+
+/// The numerics contract for one value pair: bitwise equal, within
+/// `max_ulp` ULPs, or within [`ABS_FLOOR`] absolutely. NaNs never agree.
+pub fn ulp_close(a: f32, b: f32, max_ulp: u64) -> bool {
+    if a == b {
+        return true;
+    }
+    if a.is_nan() || b.is_nan() {
+        return false;
+    }
+    (a - b).abs() <= ABS_FLOOR || ulp_dist(a, b) <= max_ulp
+}
+
+/// First contract violation in a slice pair: `(index, got, want, ulps)`.
+pub fn slices_ulp_violation(
+    got: &[f32],
+    want: &[f32],
+    max_ulp: u64,
+) -> Option<(usize, f32, f32, u64)> {
+    assert_eq!(got.len(), want.len(), "parity: length mismatch");
+    got.iter()
+        .zip(want)
+        .enumerate()
+        .find(|(_, (g, w))| !ulp_close(**g, **w, max_ulp))
+        .map(|(i, (g, w))| (i, *g, *w, ulp_dist(*g, *w)))
+}
+
+/// Assert the slice pair satisfies the contract, with a diagnostic naming
+/// the first offending element.
+#[track_caller]
+pub fn assert_ulp_close(got: &[f32], want: &[f32], max_ulp: u64, what: &str) {
+    if let Some((i, g, w, d)) = slices_ulp_violation(got, want, max_ulp) {
+        panic!(
+            "{what}: element {i} differs by {d} ULP (> {max_ulp}): got {g:e}, want {w:e} \
+             (abs diff {:e} > floor {ABS_FLOOR:e})",
+            (g - w).abs()
+        );
+    }
+}
+
+/// Per-cell-kind parity sweep: run every cell through a scalar backend and
+/// a `level` backend on identical deterministic inputs; `Err` names the
+/// first cell/batch/element violating the contract.
+pub fn simd_parity_report(hidden: usize, seed: u64, level: SimdLevel) -> Result<(), String> {
+    let h = hidden;
+    let mut scalar = CpuBackend::with_level(h, SimdLevel::Scalar);
+    let mut native = CpuBackend::with_level(h, level);
+    for cell in cells::ALL_CELLS {
+        for b in [1usize, 3, 8, 13] {
+            let widths = cells::data_arg_widths(cell, h);
+            let mut rng = Rng::new(seed ^ (cell.len() as u64) << 17 ^ b as u64);
+            let bufs: Vec<Vec<f32>> = widths
+                .iter()
+                .map(|w| (0..b * w).map(|_| (rng.f32() - 0.5) * 0.8).collect())
+                .collect();
+            let data: Vec<&[f32]> = bufs.iter().map(|v| v.as_slice()).collect();
+            let want = scalar
+                .run_cell(cell, &data, b)
+                .map_err(|e| format!("{cell}: scalar run failed: {e}"))?;
+            let got = native
+                .run_cell(cell, &data, b)
+                .map_err(|e| format!("{cell}: {} run failed: {e}", level.name()))?;
+            for (o, (g, w)) in got.iter().zip(&want).enumerate() {
+                if let Some((i, gv, wv, d)) = slices_ulp_violation(g, w, DEFAULT_MAX_ULP) {
+                    return Err(format!(
+                        "{cell} b={b} out{o}[{i}]: {d} ULP (> {DEFAULT_MAX_ULP}): \
+                         {} got {gv:e}, scalar {wv:e}",
+                        level.name()
+                    ));
+                }
+            }
+        }
+    }
+    Ok(())
+}
+
+/// The boolean the serve/bench summaries print: does the detected SIMD
+/// level satisfy the ≤[`DEFAULT_MAX_ULP`]-ULP contract on every cell kind?
+pub fn simd_parity_ok(hidden: usize, seed: u64) -> bool {
+    simd_parity_ok_at(hidden, seed, SimdLevel::detect())
+}
+
+/// [`simd_parity_ok`] at an explicit level (tests / forced-scalar runs).
+pub fn simd_parity_ok_at(hidden: usize, seed: u64, level: SimdLevel) -> bool {
+    match simd_parity_report(hidden, seed, level) {
+        Ok(()) => true,
+        Err(msg) => {
+            eprintln!("simd parity violation: {msg}");
+            false
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn ulp_dist_basics() {
+        assert_eq!(ulp_dist(1.0, 1.0), 0);
+        assert_eq!(ulp_dist(1.0, f32::from_bits(1.0f32.to_bits() + 1)), 1);
+        assert_eq!(ulp_dist(0.0, -0.0), 0);
+        // across the sign boundary: -min_positive .. +min_positive = 2 ulps
+        let tiny = f32::from_bits(1);
+        assert_eq!(ulp_dist(tiny, -tiny), 2);
+        assert!(ulp_dist(1.0, 2.0) > 1_000_000);
+    }
+
+    #[test]
+    fn ulp_close_contract() {
+        assert!(ulp_close(1.0, 1.0, 0));
+        assert!(ulp_close(f32::INFINITY, f32::INFINITY, 0));
+        assert!(!ulp_close(f32::NAN, f32::NAN, u64::MAX));
+        // 3 ulps apart passes at 4, fails at 2 (magnitude > floor)
+        let a = 1000.0f32;
+        let b = f32::from_bits(a.to_bits() + 3);
+        assert!(ulp_close(a, b, 4));
+        assert!(!ulp_close(a, b, 2));
+        // absolute floor: tiny numbers are many ULPs but within 1e-5
+        assert!(ulp_close(1.0e-7, -1.0e-7, 4));
+    }
+
+    #[test]
+    fn assert_ulp_close_names_offender() {
+        let got = [1.0f32, 2.0, 3.5];
+        let want = [1.0f32, 2.0, 3.0];
+        let v = slices_ulp_violation(&got, &want, 4).expect("must violate");
+        assert_eq!(v.0, 2);
+        assert_ulp_close(&got[..2], &want[..2], 0, "prefix agrees");
+    }
+
+    #[test]
+    fn parity_holds_at_detected_level() {
+        // the acceptance gate: every cell kind within ≤4 ULP of scalar at
+        // whatever level this host detects (exact on scalar hosts)
+        assert!(simd_parity_ok(16, 7));
+        assert!(simd_parity_ok(17, 11), "ragged hidden size");
+    }
+
+    #[test]
+    fn parity_trivially_true_for_scalar_level() {
+        assert!(simd_parity_ok_at(8, 3, SimdLevel::Scalar));
+    }
+}

@@ -16,6 +16,19 @@ use crate::util::rng::Rng;
 /// Classifier/tagger label-space width (matches python model.NUM_CLASSES).
 pub const NUM_CLASSES: usize = 32;
 
+/// Every artifact cell kind, for sweeps that must cover the full kernel
+/// surface (parity harness, backend tests, bench tables).
+pub const ALL_CELLS: [&str; 8] = [
+    "lstm",
+    "gru",
+    "treelstm_internal",
+    "treelstm_leaf",
+    "treegru_internal",
+    "treegru_leaf",
+    "mv_cell",
+    "classifier",
+];
+
 /// Deterministic near-identity MV matrix for nodes without a real M
 /// (sources / degenerate children): written into `buf` (`h * h` elements),
 /// keyed on an *instance-local* node id (callers pass `Graph::local_id`) so
@@ -136,16 +149,7 @@ mod tests {
     use super::*;
     use crate::graph::CellKind;
 
-    const CELLS: [&str; 8] = [
-        "lstm",
-        "gru",
-        "treelstm_internal",
-        "treelstm_leaf",
-        "treegru_internal",
-        "treegru_leaf",
-        "mv_cell",
-        "classifier",
-    ];
+    const CELLS: [&str; 8] = ALL_CELLS;
 
     #[test]
     fn arg_tables_are_consistent() {

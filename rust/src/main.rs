@@ -51,9 +51,11 @@ fn run(args: &Args) -> Result<()> {
             println!(
                 "ed-batch — FSM-batched dynamic-DNN serving (ICML'23 reproduction)\n\n\
                  usage:\n  \
-                 ed-batch bench <fig6|fig8|fig9|table2|table3|table4|table5|serving|serving-slo|all> [--fast] [--hidden N]\n  \
+                 ed-batch bench <fig6|fig8|fig9|table2|table3|table4|table5|serving|serving-slo|all> [--fast] [--hidden N]\n             \
+                 [--strict-bitwise] [--no-trajectory  (skip appending a row to BENCH_trajectory.json)]\n  \
                  ed-batch bench check --baseline ci/bench_baseline.json [--current BENCH_serving.json]\n             \
-                 [--tolerance 0.25] [--update]  (perf-regression gate over bench serving results)\n  \
+                 [--tolerance 0.25] [--update] [--trajectory BENCH_trajectory.json  (ratchet\n             \
+                 against the last committed trajectory row)]  (perf-regression gate over bench serving results)\n  \
                  ed-batch train --workload <name[,name...]|all> [--encoding base|max|sort]\n             \
                  [--store DIR] [--hidden N] [--max-iters N] [--force]\n  \
                  ed-batch serve --workloads <name[,name...]> [--mode ed-batch|cavs-dynet|vanilla-dynet]\n             \
@@ -66,7 +68,9 @@ fn run(args: &Args) -> Result<()> {
                  [--traffic closed|poisson|bursty --rate R --duration-s S  (open-loop load generation;\n              \
                  volume = rate x duration per workload — --requests/--clients are closed-loop only)]\n             \
                  [--distinct N  (replay a pool of N instance topologies per workload)]\n             \
-                 [--require-compose  (fail unless steady state composed every mini-batch)]\n  \
+                 [--require-compose  (fail unless steady state composed every mini-batch)]\n             \
+                 [--strict-bitwise  (pin the scalar kernel oracle: responses bit-identical to\n              \
+                 pre-SIMD builds; SIMD micro-kernels disabled regardless of host CPU)]\n  \
                  ed-batch inspect --workload <name> [--instances N]\n\n\
                  workloads: bilstm-tagger bilstm-tagger-withchar lstm-nmt treelstm treegru\n            \
                  mv-rnn treelstm-2type lattice-lstm lattice-gru"
@@ -263,7 +267,9 @@ fn serve(args: &Args) -> Result<()> {
         dispatch,
         slo_p99,
         scheduler: None, // Learned resolves from the store (or trains at boot)
+        strict_bitwise: args.flag("strict-bitwise"),
     };
+    let strict_bitwise = config.strict_bitwise;
     println!(
         "serving {} workload(s) [{}] (mode={}, dispatch={}, hidden={hidden}, workers={workers}, threads={threads}, pjrt={}, store={})",
         kinds.len(),
@@ -423,6 +429,24 @@ fn serve(args: &Args) -> Result<()> {
         snap.breakdown.execution_s * 1e3,
         snap.breakdown.parallel_s * 1e3,
     );
+    // micro-kernel summary + the SIMD numerics self-check: every cell
+    // kind is re-run at the detected SIMD level against the scalar
+    // oracle and must stay within the ULP contract (exec::parity,
+    // default <= 4 ULP or 1e-5 absolute). Under --strict-bitwise the
+    // SIMD path is pinned off, so the gate is trivially satisfied; it is
+    // still reported so CI can grep the same field in every leg.
+    let kcheck = strict_bitwise
+        || ed_batch::exec::parity::simd_parity_ok(hidden, args.u64("seed", 7));
+    println!(
+        "kernels: level={} simd_active={} strict_bitwise={} | {} simd calls | {} packs ({} elems, {:.2}ms) | simd_parity_ok={kcheck}",
+        snap.simd_level,
+        snap.simd_active,
+        snap.strict_bitwise,
+        snap.simd_kernel_calls,
+        snap.pack_events,
+        snap.pack_elems,
+        snap.pack_s * 1e3,
+    );
     // intra-batch parallel pool summary + the end-to-end determinism
     // self-check (serial vs pooled engine, every workload, bitwise). The
     // check always drives a pool of >= 2 threads so it is a real
@@ -442,6 +466,9 @@ fn serve(args: &Args) -> Result<()> {
         snap.pool_occupancy() * 100.0,
     );
     server.shutdown()?;
+    if !kcheck {
+        bail!("SIMD kernels violated the ULP parity contract vs the scalar oracle — refusing to pass the smoke");
+    }
     if !pcheck {
         bail!("parallel execution diverged from serial (bitwise) — refusing to pass the smoke");
     }

@@ -619,3 +619,84 @@ fn threaded_serving_bit_equal_to_serial_across_workload_mix() {
     // bitwise_parallel_ok must agree
     assert!(ed_batch::coordinator::engine::parallel_bitwise_ok(32, 4, 7));
 }
+
+#[test]
+fn strict_bitwise_serving_reproduces_scalar_reference_bytes() {
+    // --strict-bitwise is the numerics contract's escape hatch: it pins
+    // the scalar kernel oracle, so even on a SIMD-capable host every
+    // response must be byte-equal to a reference engine with the oracle
+    // pinned — which is the pre-SIMD execution path verbatim (the scalar
+    // kernels were moved, not rewritten). Pooled workers (threads=2)
+    // ride along so the pinned path is exercised through the chunked
+    // dispatch too, and the metrics must report the pinned state.
+    let kinds = [WorkloadKind::TreeLstm, WorkloadKind::BiLstmTagger];
+    let server = Server::start(ServerConfig {
+        workloads: kinds.to_vec(),
+        hidden: 32,
+        mode: SystemMode::EdBatch,
+        max_batch: 8,
+        batch_window: Duration::from_millis(5),
+        workers: 2,
+        threads: 2,
+        artifacts_dir: None,
+        store_dir: None, // in-memory boot training, filesystem-free
+        train_on_miss: true,
+        train_cfg: quick_train_cfg(),
+        encoding: Encoding::Sort,
+        seed: 3,
+        strict_bitwise: true,
+        ..ServerConfig::default()
+    })
+    .unwrap();
+    let mut handles = Vec::new();
+    for (t, kind) in kinds.into_iter().cycle().take(4).enumerate() {
+        let client = server.client(kind);
+        handles.push(std::thread::spawn(move || {
+            let w = Workload::new(kind, 32);
+            let mut rng = Rng::new(4100 + t as u64);
+            let mut results = Vec::new();
+            for _ in 0..3 {
+                let g = w.gen_instance(&mut rng);
+                let resp = client.infer(g.clone()).unwrap();
+                results.push((g, resp));
+            }
+            (kind, results)
+        }));
+    }
+    for h in handles {
+        let (kind, results) = h.join().unwrap();
+        let w = Workload::new(kind, 32);
+        let nt = w.registry.num_types();
+        for (g, resp) in results {
+            let mut g = g;
+            g.freeze();
+            let schedule = run_policy(&g, nt, &mut AgendaPolicy::new(nt));
+            let mut engine = CellEngine::new(Backend::Cpu, 32, 1).unwrap();
+            engine.set_strict_bitwise(true);
+            let mut store = ArenaStateStore::new();
+            engine.execute(&g, &w.registry, &schedule, &mut store).unwrap();
+            let mut has_consumer = vec![false; g.len()];
+            for n in &g.nodes {
+                for p in &n.preds {
+                    has_consumer[p.idx()] = true;
+                }
+            }
+            let expected: Vec<Vec<f32>> = (0..g.len())
+                .filter(|&j| !has_consumer[j])
+                .map(|j| store.h(j).to_vec())
+                .collect();
+            assert_eq!(
+                resp.to_vecs(),
+                expected,
+                "{}: --strict-bitwise response drifted from the scalar oracle",
+                kind.name()
+            );
+        }
+    }
+    let snap = server.metrics.snapshot();
+    assert!(snap.strict_bitwise, "metrics must report the pinned config");
+    assert!(!snap.simd_active, "SIMD must be off under --strict-bitwise");
+    assert_eq!(snap.simd_kernel_calls, 0, "a kernel escaped the pin");
+    assert_eq!(snap.pack_events, 0, "strict mode must never pack weights");
+    server.shutdown().unwrap();
+}

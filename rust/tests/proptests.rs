@@ -279,6 +279,56 @@ fn prop_parallel_execution_bitwise_equals_serial() {
 }
 
 #[test]
+fn prop_simd_cell_outputs_within_ulp_of_scalar() {
+    // The SIMD numerics contract as a property: for every cell kind, a
+    // sweep of ragged hidden sizes (vector-width multiples and odd
+    // tails) and batch sizes, running the cell on the host's detected
+    // kernel level stays within the ULP bound of the pinned scalar
+    // oracle on the same random data. On scalar-fallback hosts both
+    // backends run identical code and the property is trivially exact —
+    // the test still exercises the dispatch plumbing. Cell kinds and
+    // sizes cycle deterministically so 48 iterations cover every
+    // (cell, hidden) pair; batch sizes and data come from the
+    // propcheck rng.
+    use ed_batch::exec::backend::{CpuBackend, ExecBackend};
+    use ed_batch::exec::parity;
+    use ed_batch::exec::simd::SimdLevel;
+    use ed_batch::graph::cells;
+
+    let iter = std::cell::Cell::new(0usize);
+    check("simd within ULP of scalar", 48, |g| {
+        let i = iter.get();
+        iter.set(i + 1);
+        let cell = cells::ALL_CELLS[i % cells::ALL_CELLS.len()];
+        let hidden = [3usize, 5, 8, 16, 17, 32][i % 6];
+        let b = 1 + g.rng.usize_below(13);
+        // cell inputs live in the pre-activation regime where the gate
+        // nonlinearities are steepest (the hardest case for the bound)
+        let widths = cells::data_arg_widths(cell, hidden);
+        let bufs: Vec<Vec<f32>> = widths
+            .iter()
+            .map(|w| (0..b * w).map(|_| g.rng.f32() - 0.5).collect())
+            .collect();
+        let data: Vec<&[f32]> = bufs.iter().map(|v| v.as_slice()).collect();
+        let mut oracle = CpuBackend::with_level(hidden, SimdLevel::Scalar);
+        let mut native = CpuBackend::new(hidden);
+        let want = oracle.run_cell(cell, &data, b).map_err(|e| e.to_string())?;
+        let got = native.run_cell(cell, &data, b).map_err(|e| e.to_string())?;
+        prop_assert!(want.len() == got.len(), "{cell}: output arity diverged");
+        for (o, (w, gt)) in want.iter().zip(got.iter()).enumerate() {
+            if let Some((j, a, bb, ulp)) =
+                parity::slices_ulp_violation(gt, w, parity::DEFAULT_MAX_ULP)
+            {
+                return Err(format!(
+                    "{cell} h={hidden} b={b} out{o}[{j}]: simd {a} vs scalar {bb} ({ulp} ULP)"
+                ));
+            }
+        }
+        Ok(())
+    });
+}
+
+#[test]
 fn prop_graph_merge_preserves_topology() {
     check("merge topology", 80, |g| {
         let nt = 1 + g.rng.usize_below(3);
