@@ -1,0 +1,347 @@
+//! `bench kernels` — standalone micro-kernel comparison (repo extension):
+//! the dense matmul ladder (textbook naive → cache-blocked scalar →
+//! AOT-packed SIMD) and the fused gate epilogues (LSTM / TreeLSTM
+//! pointwise, GRU gates) at scalar vs the host's detected SIMD level,
+//! over the operand shapes the serving cells actually hit.
+//!
+//! `bench serving` already embeds a packed-vs-scalar matmul table inside
+//! its JSON; this subcommand isolates the kernel story so it can be run
+//! (and archived as `BENCH_kernels.json`) without booting a server or a
+//! policy store. Measurement discipline follows the serving bench: a
+//! per-leg flop budget picks the rep count, best-of-3 trial means, and on
+//! scalar-fallback hosts no second measurement is taken — the speedup is
+//! reported as exactly 1.0 so noise cannot fake a win.
+
+use std::time::Instant;
+
+use crate::exec::cpu_kernels as k;
+use crate::exec::simd::{self, PackedMat, SimdLevel};
+use crate::util::json::Json;
+use crate::util::rng::Rng;
+
+use super::{print_table, BenchOpts};
+
+/// One matmul ladder measurement at a serving shape.
+#[derive(Clone, Debug)]
+pub struct MatmulRow {
+    pub label: &'static str,
+    pub m: usize,
+    pub k: usize,
+    pub n: usize,
+    pub naive_ms: f64,
+    pub blocked_ms: f64,
+    pub packed_ms: f64,
+    /// naive / blocked (the cache-blocking win)
+    pub blocked_speedup: f64,
+    /// naive / packed (the full ladder win; 1x packed == blocked on
+    /// scalar-fallback hosts)
+    pub packed_speedup: f64,
+}
+
+/// One fused-epilogue measurement: scalar arm vs the detected level.
+#[derive(Clone, Debug)]
+pub struct EpilogueRow {
+    pub label: &'static str,
+    /// lanes per call
+    pub b: usize,
+    pub h: usize,
+    pub scalar_ms: f64,
+    pub simd_ms: f64,
+    pub speedup: f64,
+}
+
+/// Everything `bench kernels` measures, as written to [`JSON_PATH`].
+pub struct KernelsBench {
+    pub simd_level: &'static str,
+    pub simd_active: bool,
+    pub matmul_rows: Vec<MatmulRow>,
+    pub epilogue_rows: Vec<EpilogueRow>,
+}
+
+/// Where the machine-readable results land (uploaded as a CI artifact).
+pub const JSON_PATH: &str = "BENCH_kernels.json";
+
+/// Best-of-`trials` mean seconds per call of `f` over `reps` calls.
+fn best_of<F: FnMut()>(trials: usize, reps: usize, mut f: F) -> f64 {
+    let mut best = f64::INFINITY;
+    for _ in 0..trials {
+        let t0 = Instant::now();
+        for _ in 0..reps {
+            f();
+        }
+        best = best.min(t0.elapsed().as_secs_f64() / reps as f64);
+    }
+    best
+}
+
+fn matmul_rows(level: SimdLevel, hidden: usize, seed: u64, fast: bool) -> Vec<MatmulRow> {
+    let h = hidden.max(8);
+    // the same serving shapes the embedded serving-bench table uses, so
+    // the two reports stay comparable across PRs
+    let shapes: [(&'static str, usize, usize, usize); 5] = [
+        ("lstm-gates", 64, h, 4 * h),
+        ("projection", 64, h, h),
+        ("treelstm-gates", 33, h, 5 * h),
+        ("concat-input", 8, 2 * h, h),
+        ("classifier", 16, h, 32),
+    ];
+    let budget = if fast { 4.0e6 } else { 4.0e8 };
+    let mut rng = Rng::new(seed ^ 0xBE7C);
+    let mut rows = Vec::new();
+    for (label, m, kdim, n) in shapes {
+        let a: Vec<f32> = (0..m * kdim).map(|_| rng.f32() - 0.5).collect();
+        let b: Vec<f32> = (0..kdim * n).map(|_| rng.f32() - 0.5).collect();
+        let pb = PackedMat::pack(&b, kdim, n);
+        let mut c = vec![0.0f32; m * n];
+        let flops = (2 * m * kdim * n) as f64;
+        let reps = ((budget / flops) as usize).clamp(3, 20_000);
+        let naive_s = best_of(3, reps, || k::matmul_naive(&a, &b, &mut c, m, kdim, n));
+        std::hint::black_box(&c);
+        let blocked_s = best_of(3, reps, || k::matmul(&a, &b, &mut c, m, kdim, n));
+        std::hint::black_box(&c);
+        let packed_s = if level.simd_active() {
+            let s = best_of(3, reps, || simd::matmul_packed(level, &a, &pb, &mut c, m));
+            std::hint::black_box(&c);
+            s
+        } else {
+            blocked_s
+        };
+        rows.push(MatmulRow {
+            label,
+            m,
+            k: kdim,
+            n,
+            naive_ms: naive_s * 1e3,
+            blocked_ms: blocked_s * 1e3,
+            packed_ms: packed_s * 1e3,
+            blocked_speedup: naive_s / blocked_s.max(1e-12),
+            packed_speedup: naive_s / packed_s.max(1e-12),
+        });
+    }
+    rows
+}
+
+fn epilogue_rows(level: SimdLevel, hidden: usize, seed: u64, fast: bool) -> Vec<EpilogueRow> {
+    let h = hidden.max(8);
+    let b = 64usize;
+    let budget = if fast { 2.0e6 } else { 2.0e8 };
+    let mut rng = Rng::new(seed ^ 0xE7);
+    let mut buf = |len: usize| -> Vec<f32> { (0..len).map(|_| rng.f32() - 0.5).collect() };
+    // operands per epilogue; element count drives the rep budget
+    let lstm_gates = buf(b * 4 * h);
+    let tree_gates = buf(b * 5 * h);
+    let rz = buf(b * 2 * h);
+    let (cin, cl, cr) = (buf(b * h), buf(b * h), buf(b * h));
+    let (nx, nh, hprev) = (buf(b * h), buf(b * h), buf(b * h));
+    let bn = buf(h);
+    let mut hn = vec![0.0f32; b * h];
+    let mut cn = vec![0.0f32; b * h];
+    let reps = ((budget / (b * h) as f64 / 16.0) as usize).clamp(3, 50_000);
+    // one closure pair per epilogue, measured scalar then (if active) SIMD
+    let mut rows = Vec::new();
+    {
+        let scalar_s = best_of(3, reps, || {
+            simd::lstm_pointwise(SimdLevel::Scalar, &lstm_gates, &cin, b, h, &mut hn, &mut cn)
+        });
+        let (simd_s, speedup) = if level.simd_active() {
+            let s = best_of(3, reps, || {
+                simd::lstm_pointwise(level, &lstm_gates, &cin, b, h, &mut hn, &mut cn)
+            });
+            (s, scalar_s / s.max(1e-12))
+        } else {
+            (scalar_s, 1.0)
+        };
+        std::hint::black_box((&hn, &cn));
+        rows.push(EpilogueRow {
+            label: "lstm-pointwise",
+            b,
+            h,
+            scalar_ms: scalar_s * 1e3,
+            simd_ms: simd_s * 1e3,
+            speedup,
+        });
+    }
+    {
+        let scalar_s = best_of(3, reps, || {
+            simd::treelstm_pointwise(
+                SimdLevel::Scalar,
+                &tree_gates,
+                &cl,
+                &cr,
+                b,
+                h,
+                &mut hn,
+                &mut cn,
+            )
+        });
+        let (simd_s, speedup) = if level.simd_active() {
+            let s = best_of(3, reps, || {
+                simd::treelstm_pointwise(level, &tree_gates, &cl, &cr, b, h, &mut hn, &mut cn)
+            });
+            (s, scalar_s / s.max(1e-12))
+        } else {
+            (scalar_s, 1.0)
+        };
+        std::hint::black_box((&hn, &cn));
+        rows.push(EpilogueRow {
+            label: "treelstm-pointwise",
+            b,
+            h,
+            scalar_ms: scalar_s * 1e3,
+            simd_ms: simd_s * 1e3,
+            speedup,
+        });
+    }
+    {
+        let scalar_s = best_of(3, reps, || {
+            simd::gru_gates(SimdLevel::Scalar, &rz, &nx, &nh, &bn, &hprev, b, h, &mut hn)
+        });
+        let (simd_s, speedup) = if level.simd_active() {
+            let s = best_of(3, reps, || {
+                simd::gru_gates(level, &rz, &nx, &nh, &bn, &hprev, b, h, &mut hn)
+            });
+            (s, scalar_s / s.max(1e-12))
+        } else {
+            (scalar_s, 1.0)
+        };
+        std::hint::black_box(&hn);
+        rows.push(EpilogueRow {
+            label: "gru-gates",
+            b,
+            h,
+            scalar_ms: scalar_s * 1e3,
+            simd_ms: simd_s * 1e3,
+            speedup,
+        });
+    }
+    rows
+}
+
+pub fn run(opts: &BenchOpts) -> KernelsBench {
+    let hidden = if opts.fast { 32 } else { opts.hidden };
+    let level = if opts.strict_bitwise {
+        SimdLevel::Scalar
+    } else {
+        SimdLevel::detect()
+    };
+    let bench = KernelsBench {
+        simd_level: level.name(),
+        simd_active: level.simd_active(),
+        matmul_rows: matmul_rows(level, hidden, opts.seed, opts.fast),
+        epilogue_rows: epilogue_rows(level, hidden, opts.seed, opts.fast),
+    };
+    print_table(
+        &format!("matmul ladder (level={})", bench.simd_level),
+        &[
+            "shape", "m", "k", "n", "naive ms", "blocked ms", "packed ms", "blocked x", "packed x",
+        ],
+        &bench
+            .matmul_rows
+            .iter()
+            .map(|r| {
+                vec![
+                    r.label.to_string(),
+                    r.m.to_string(),
+                    r.k.to_string(),
+                    r.n.to_string(),
+                    format!("{:.4}", r.naive_ms),
+                    format!("{:.4}", r.blocked_ms),
+                    format!("{:.4}", r.packed_ms),
+                    format!("{:.2}", r.blocked_speedup),
+                    format!("{:.2}", r.packed_speedup),
+                ]
+            })
+            .collect::<Vec<_>>(),
+    );
+    print_table(
+        &format!("gate epilogues (level={})", bench.simd_level),
+        &["epilogue", "lanes", "hidden", "scalar ms", "simd ms", "speedup"],
+        &bench
+            .epilogue_rows
+            .iter()
+            .map(|r| {
+                vec![
+                    r.label.to_string(),
+                    r.b.to_string(),
+                    r.h.to_string(),
+                    format!("{:.4}", r.scalar_ms),
+                    format!("{:.4}", r.simd_ms),
+                    format!("{:.2}", r.speedup),
+                ]
+            })
+            .collect::<Vec<_>>(),
+    );
+    write_json(opts, hidden, &bench);
+    bench
+}
+
+fn write_json(opts: &BenchOpts, hidden: usize, bench: &KernelsBench) {
+    let matmul_json: Vec<Json> = bench
+        .matmul_rows
+        .iter()
+        .map(|r| {
+            Json::obj(vec![
+                ("shape", Json::from(r.label)),
+                ("m", Json::from(r.m as u64)),
+                ("k", Json::from(r.k as u64)),
+                ("n", Json::from(r.n as u64)),
+                ("naive_ms", Json::from(r.naive_ms)),
+                ("blocked_ms", Json::from(r.blocked_ms)),
+                ("packed_ms", Json::from(r.packed_ms)),
+                ("blocked_speedup", Json::from(r.blocked_speedup)),
+                ("packed_speedup", Json::from(r.packed_speedup)),
+            ])
+        })
+        .collect();
+    let epi_json: Vec<Json> = bench
+        .epilogue_rows
+        .iter()
+        .map(|r| {
+            Json::obj(vec![
+                ("epilogue", Json::from(r.label)),
+                ("lanes", Json::from(r.b as u64)),
+                ("hidden", Json::from(r.h as u64)),
+                ("scalar_ms", Json::from(r.scalar_ms)),
+                ("simd_ms", Json::from(r.simd_ms)),
+                ("speedup_vs_scalar", Json::from(r.speedup)),
+            ])
+        })
+        .collect();
+    let doc = Json::obj(vec![
+        ("bench", Json::from("kernels")),
+        ("hidden", Json::from(hidden as u64)),
+        ("fast", Json::Bool(opts.fast)),
+        ("seed", Json::from(opts.seed)),
+        ("simd_level", Json::from(bench.simd_level)),
+        ("simd_active", Json::Bool(bench.simd_active)),
+        ("matmul_rows", Json::Arr(matmul_json)),
+        ("epilogue_rows", Json::Arr(epi_json)),
+    ]);
+    // best-effort: a read-only workdir must not fail the bench itself
+    let _ = std::fs::write(JSON_PATH, doc.to_string());
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn kernels_bench_smoke() {
+        let mut opts = BenchOpts::fast_default();
+        opts.seed = 9;
+        let bench = run(&opts);
+        assert_eq!(bench.matmul_rows.len(), 5);
+        assert_eq!(bench.epilogue_rows.len(), 3);
+        for r in &bench.matmul_rows {
+            assert!(r.naive_ms > 0.0 && r.blocked_ms > 0.0 && r.packed_ms > 0.0);
+            assert!(r.blocked_speedup > 0.0 && r.packed_speedup > 0.0);
+        }
+        for r in &bench.epilogue_rows {
+            assert!(r.scalar_ms > 0.0 && r.simd_ms > 0.0 && r.speedup > 0.0);
+        }
+        // on scalar-fallback hosts the epilogue speedup is pinned to 1.0
+        if !bench.simd_active {
+            assert!(bench.epilogue_rows.iter().all(|r| r.speedup == 1.0));
+        }
+    }
+}

@@ -2,16 +2,18 @@
 //! evaluation (§5). Each submodule prints the same rows/series the paper
 //! reports and returns structured results for tests / EXPERIMENTS.md.
 //!
-//! Run via `ed-batch bench <fig6|fig8|fig9|table2|table3|table4|table5|serving|serving-slo|all>`
+//! Run via `ed-batch bench <fig6|fig8|fig9|table2|table3|table4|table5|serving|serving-slo|kernels|all>`
 //! (`serving` is a repo extension: worker-pool scaling over the
 //! PolicyStore plus the SLO dispatch comparison — fixed vs adaptive vs
 //! learned batching under open-loop Poisson/bursty traffic; `serving-slo`
-//! runs the comparison alone).
+//! runs the comparison alone; `kernels` is the standalone micro-kernel
+//! ladder written to `BENCH_kernels.json`).
 
 pub mod check;
 pub mod fig6;
 pub mod fig8;
 pub mod fig9;
+pub mod kernels;
 pub mod serving;
 pub mod table2;
 pub mod table3;

@@ -45,7 +45,7 @@ use crate::exec::parity;
 use crate::exec::simd::{self, PackedMat, SimdLevel};
 use crate::graph::Graph;
 use crate::policystore::PolicyStore;
-use crate::rl::dispatch_sim::SimConfig;
+use crate::rl::dispatch_sim::{admission_gate, AdmissionGate, SimConfig};
 use crate::rl::TrainConfig;
 use crate::util::json::Json;
 use crate::util::rng::Rng;
@@ -122,6 +122,11 @@ pub struct ServingBench {
     /// (trivially true when the scalar oracle is pinned)
     pub simd_parity_ok: bool,
     pub simd_rows: Vec<SimdRow>,
+    /// deterministic multi-class overload-shedding replay
+    /// ([`crate::rl::dispatch_sim::admission_gate`]): the gold budget
+    /// sheds under a bursty overload while the admitted gold p99 stays
+    /// under its SLO target — a pure function of the bench seed
+    pub admission: AdmissionGate,
 }
 
 /// Two workload families served concurrently (tree + chain).
@@ -373,6 +378,39 @@ pub fn run(opts: &BenchOpts) -> ServingBench {
             .collect::<Vec<_>>(),
     );
 
+    // multi-class overload shedding on the deterministic virtual clock:
+    // the network front-end's admission control, gated without a server
+    // boot (the replay drives the same weighted-fair + projected-cost
+    // rules the live path uses)
+    let admission = admission_gate(opts.seed);
+    print_table(
+        &format!(
+            "admission replay (virtual clock): gold bursty overload (budget 6, weight 4, \
+             slo {:.0}ms) vs unbudgeted bulk poisson",
+            admission.gold_slo_s * 1e3,
+        ),
+        &["class", "offered", "admitted", "rejected", "p99 ms", "mean ms"],
+        &[("gold", &admission.gold), ("bulk", &admission.bulk)]
+            .iter()
+            .map(|(name, c)| {
+                vec![
+                    name.to_string(),
+                    c.offered.to_string(),
+                    c.admitted.to_string(),
+                    c.rejected.to_string(),
+                    format!("{:.2}", c.p99_s * 1e3),
+                    format!("{:.2}", c.mean_sojourn_s * 1e3),
+                ]
+            })
+            .collect::<Vec<_>>(),
+    );
+    println!(
+        "admission gate (gold sheds + admitted p99 {:.2}ms <= {:.0}ms target): {}",
+        admission.gold.p99_s * 1e3,
+        admission.gold_slo_s * 1e3,
+        if admission.ok() { "ok" } else { "FAILED" },
+    );
+
     let out = ServingBench {
         rows,
         thread_rows,
@@ -382,6 +420,7 @@ pub fn run(opts: &BenchOpts) -> ServingBench {
         strict_bitwise: opts.strict_bitwise,
         simd_parity_ok,
         simd_rows,
+        admission,
     };
     write_json(opts, hidden, distinct, &out);
     if let Some(path) = &opts.trajectory {
@@ -569,9 +608,29 @@ fn write_json(opts: &BenchOpts, hidden: usize, distinct: usize, bench: &ServingB
         ("simd_active", Json::Bool(bench.simd_active)),
         ("strict_bitwise", Json::Bool(bench.strict_bitwise)),
         ("simd_parity_ok", Json::Bool(bench.simd_parity_ok)),
+        ("admission_gate_ok", Json::Bool(bench.admission.ok())),
         ("rows", Json::Arr(row_json)),
         ("thread_rows", Json::Arr(thread_json)),
         ("simd_rows", Json::Arr(simd_json)),
+        (
+            "admission_rows",
+            Json::Arr(
+                [("gold", &bench.admission.gold), ("bulk", &bench.admission.bulk)]
+                    .iter()
+                    .map(|(name, c)| {
+                        Json::obj(vec![
+                            ("class", Json::from(*name)),
+                            ("offered", Json::from(c.offered as u64)),
+                            ("admitted", Json::from(c.admitted as u64)),
+                            ("rejected", Json::from(c.rejected as u64)),
+                            ("completed", Json::from(c.completed as u64)),
+                            ("p99_ms", Json::from(c.p99_s * 1e3)),
+                            ("mean_ms", Json::from(c.mean_sojourn_s * 1e3)),
+                        ])
+                    })
+                    .collect(),
+            ),
+        ),
     ]);
     // best-effort: a read-only workdir must not fail the bench itself
     let _ = std::fs::write(JSON_PATH, doc.to_string());
@@ -715,6 +774,7 @@ pub fn run_slo(opts: &BenchOpts) -> Vec<SloRow> {
                 slo_p99: Some(slo),
                 scheduler: None, // Learned resolves from the store
                 strict_bitwise: opts.strict_bitwise,
+                ..ServerConfig::default()
             })
             .expect("server boot");
             let mut handles = Vec::new();
@@ -912,6 +972,11 @@ mod tests {
     #[test]
     fn serving_scaling_smoke() {
         let bench = run(&BenchOpts::fast_default());
+        // the deterministic overload-shedding gate: the gold budget must
+        // actually reject (shedding observed) while the admitted gold
+        // p99 stays under its target on the virtual clock
+        assert!(bench.admission.gold.rejected > 0, "{:?}", bench.admission);
+        assert!(bench.admission.ok(), "{:?}", bench.admission);
         assert_eq!(bench.rows.len(), 3);
         for r in &bench.rows {
             assert!(r.throughput > 0.0, "workers={}", r.workers);

@@ -108,6 +108,100 @@ pub struct DispatchDecision {
     pub max_wait: Duration,
 }
 
+// -- SLO classes (multi-tenant serving) --------------------------------------
+
+/// One tenant SLO class: a named service tier with its own latency
+/// target, weighted-fair share, and admission limits. Parsed from
+/// `--tenants` (`serve`), owned by `ServerConfig::classes`; every class
+/// gets its own queues and [`DispatchController`]s.
+#[derive(Clone, Debug, PartialEq)]
+pub struct SloClassConfig {
+    /// class name (`[a-z0-9-]`, also the scheduler-artifact suffix)
+    pub name: String,
+    /// per-class p99 target; `None` inherits the server-wide
+    /// `--slo-p99-ms` (or its default)
+    pub slo_p99_s: Option<f64>,
+    /// weighted-fair drain share relative to other classes (≥ 1)
+    pub weight: u32,
+    /// admission budget in arena elements: a submit is NACKed when the
+    /// queue's projected cost `(depth + 1) × cost_elems` exceeds this
+    /// (`None` = unlimited, the single-tenant default)
+    pub admit_budget_elems: Option<f64>,
+    /// token-bucket refill rate in requests/second (`None` = no bucket)
+    pub bucket_rate: Option<f64>,
+    /// token-bucket capacity (burst size); ≥ 1 when a rate is set
+    pub bucket_burst: f64,
+}
+
+impl SloClassConfig {
+    /// The implicit single-tenant class: no budget, no bucket, weight 1.
+    /// Every pre-existing `ServerConfig` maps onto exactly this, so the
+    /// in-process API is unchanged for single-tenant callers.
+    pub fn default_class() -> SloClassConfig {
+        SloClassConfig {
+            name: "default".to_string(),
+            slo_p99_s: None,
+            weight: 1,
+            admit_budget_elems: None,
+            bucket_rate: None,
+            bucket_burst: 0.0,
+        }
+    }
+
+    /// Parse a `--tenants` spec: comma-separated classes, each
+    /// `name[:key=value]*` with keys `slo` (ms), `weight`, `budget`
+    /// (arena elements), `rate` (req/s), `burst` (tokens).
+    ///
+    /// Example: `gold:slo=10:weight=4:budget=200000:rate=500:burst=64,bulk:slo=50`
+    pub fn parse_spec(spec: &str) -> Result<Vec<SloClassConfig>, String> {
+        let mut out = Vec::new();
+        for part in spec.split(',').filter(|p| !p.trim().is_empty()) {
+            let mut fields = part.trim().split(':');
+            let name = fields.next().unwrap_or("").trim().to_string();
+            if name.is_empty()
+                || !name
+                    .chars()
+                    .all(|c| c.is_ascii_lowercase() || c.is_ascii_digit() || c == '-')
+            {
+                return Err(format!(
+                    "class name {name:?} must be nonempty [a-z0-9-] (it names scheduler artifacts)"
+                ));
+            }
+            let mut class = SloClassConfig {
+                name,
+                ..SloClassConfig::default_class()
+            };
+            for field in fields {
+                let (key, val) = field
+                    .split_once('=')
+                    .ok_or_else(|| format!("expected key=value, got {field:?}"))?;
+                let num: f64 = val
+                    .parse()
+                    .map_err(|_| format!("bad numeric value {val:?} for {key}"))?;
+                match key {
+                    "slo" => class.slo_p99_s = Some(num * 1e-3),
+                    "weight" => class.weight = (num as u32).max(1),
+                    "budget" => class.admit_budget_elems = Some(num),
+                    "rate" => class.bucket_rate = Some(num),
+                    "burst" => class.bucket_burst = num,
+                    _ => return Err(format!("unknown tenant key {key:?}")),
+                }
+            }
+            if class.bucket_rate.is_some() && class.bucket_burst < 1.0 {
+                class.bucket_burst = 1.0;
+            }
+            if out.iter().any(|c: &SloClassConfig| c.name == class.name) {
+                return Err(format!("duplicate class name {:?}", class.name));
+            }
+            out.push(class);
+        }
+        if out.is_empty() {
+            return Err("empty --tenants spec".to_string());
+        }
+        Ok(out)
+    }
+}
+
 // -- learned scheduler policy ------------------------------------------------
 
 /// Batch-size action set of the learned scheduler (capped by the server's
@@ -427,6 +521,13 @@ impl DispatchController {
         self.scale
     }
 
+    /// Replace the learned scheduler policy in place (policy hot-reload:
+    /// the controller keeps its measured arrival/service/latency state —
+    /// only the decision table swaps, so there is no re-warmup glitch).
+    pub fn set_learned(&mut self, learned: Option<SchedulerPolicy>) {
+        self.learned = learned;
+    }
+
     /// Seed the service estimate from a topology's static plan cost
     /// (arena elements × a per-element prior) before any measurement
     /// exists. A no-op once a real service time has been observed.
@@ -723,6 +824,57 @@ mod tests {
         let j = crate::util::json::Json::parse(&p.to_json().to_string()).unwrap();
         let q = SchedulerPolicy::from_json(&j).unwrap();
         assert_eq!(p, q, "Q-table must round-trip bit-exactly");
+    }
+
+    #[test]
+    fn tenant_spec_parses_classes() {
+        let classes =
+            SloClassConfig::parse_spec("gold:slo=10:weight=4:budget=200000:rate=500:burst=64,bulk:slo=50")
+                .unwrap();
+        assert_eq!(classes.len(), 2);
+        assert_eq!(classes[0].name, "gold");
+        assert!((classes[0].slo_p99_s.unwrap() - 0.010).abs() < 1e-12);
+        assert_eq!(classes[0].weight, 4);
+        assert_eq!(classes[0].admit_budget_elems, Some(200000.0));
+        assert_eq!(classes[0].bucket_rate, Some(500.0));
+        assert_eq!(classes[0].bucket_burst, 64.0);
+        assert_eq!(classes[1].name, "bulk");
+        assert_eq!(classes[1].weight, 1);
+        assert_eq!(classes[1].admit_budget_elems, None);
+        assert_eq!(classes[1].bucket_rate, None);
+    }
+
+    #[test]
+    fn tenant_spec_rejects_bad_input() {
+        assert!(SloClassConfig::parse_spec("").is_err());
+        assert!(SloClassConfig::parse_spec("Bad_Name").is_err());
+        assert!(SloClassConfig::parse_spec("a,a").is_err());
+        assert!(SloClassConfig::parse_spec("a:slo").is_err());
+        assert!(SloClassConfig::parse_spec("a:slo=abc").is_err());
+        assert!(SloClassConfig::parse_spec("a:nope=1").is_err());
+        // a rate without a burst still gets a usable bucket
+        let c = SloClassConfig::parse_spec("a:rate=100").unwrap();
+        assert_eq!(c[0].bucket_burst, 1.0);
+    }
+
+    #[test]
+    fn set_learned_swaps_policy_without_resetting_estimators() {
+        let mut p = SchedulerPolicy::new();
+        for s in 0..SCHED_STATES {
+            p.set_q(s, 3, 1.0); // batch 8 everywhere
+        }
+        let mut c = DispatchController::new(
+            DispatchMode::Learned,
+            SloConfig::with_target(0.010),
+            32,
+            Duration::from_millis(25),
+            Some(SchedulerPolicy::new()), // untrained: batch 1
+        );
+        feed(&mut c, 0.0005, 0.004, 0.0005, 2);
+        assert_eq!(c.decide(8).target_batch, 1);
+        c.set_learned(Some(p));
+        // new policy applies instantly, on the already-warm estimators
+        assert_eq!(c.decide(8).target_batch, 8);
     }
 
     #[test]

@@ -1,5 +1,7 @@
-//! Serving metrics: throughput, latency percentiles (global and
-//! per-workload), SLO-violation accounting, queue-depth gauges,
+//! Serving metrics: throughput, latency percentiles (global,
+//! per-workload, and per-SLO-class), SLO-violation accounting,
+//! admission-control counters (admitted / rejected per class), network
+//! front-end counters, policy hot-reload counters, queue-depth gauges,
 //! policy-store resolution counters, batching counters, and the
 //! memory-planning win (per-request gather/scatter volume and copies
 //! avoided vs the unplanned baseline).
@@ -12,12 +14,36 @@ use crate::util::stats::Samples;
 
 use super::TimeBreakdown;
 
+/// Admission-control outcome for one submission attempt.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum Admission {
+    Admitted,
+    /// projected queue cost exceeded the class budget
+    RejectedBudget,
+    /// the class token bucket was empty
+    RejectedBucket,
+}
+
+/// Per-SLO-class accounting (indexed by tenant id / class index).
+#[derive(Default)]
+struct ClassInner {
+    name: String,
+    slo_target_s: f64,
+    latencies: Samples,
+    admitted: u64,
+    rejected_budget: u64,
+    rejected_bucket: u64,
+    slo_violations: u64,
+}
+
 #[derive(Default)]
 struct Inner {
     latencies: Samples,
     // keys are workload names (&'static str) so the per-request hot path
     // never allocates a String
     per_workload: BTreeMap<&'static str, Samples>,
+    // indexed by class id; registered once at server boot
+    classes: Vec<ClassInner>,
     breakdown: TimeBreakdown,
     requests: u64,
     instances: u64,
@@ -60,6 +86,14 @@ struct Inner {
     pack_events: u64,
     pack_elems: u64,
     pack_s: f64,
+    // network front-end (coordinator::net)
+    net_conns: u64,
+    net_frames_in: u64,
+    net_frames_out: u64,
+    net_nacks: u64,
+    // zero-downtime policy hot-reload
+    reload_swaps: u64,
+    reload_generation: u64,
 }
 
 /// Thread-safe metrics sink shared between server workers.
@@ -79,6 +113,23 @@ impl Default for Metrics {
 pub struct WorkloadLatency {
     pub workload: String,
     pub requests: u64,
+    pub p50_s: f64,
+    pub p99_s: f64,
+}
+
+/// Per-SLO-class latency + admission summary (rows in tenant-id order).
+#[derive(Clone, Debug)]
+pub struct ClassLatency {
+    pub class: String,
+    /// this class's effective p99 target (seconds)
+    pub slo_target_s: f64,
+    /// requests completed (latency samples recorded)
+    pub requests: u64,
+    pub admitted: u64,
+    pub rejected_budget: u64,
+    pub rejected_bucket: u64,
+    /// completed requests whose latency exceeded the class target
+    pub slo_violations: u64,
     pub p50_s: f64,
     pub p99_s: f64,
 }
@@ -115,6 +166,9 @@ pub struct MetricsSnapshot {
     pub latency_mean_s: f64,
     /// per-workload latency rows (sorted by workload name)
     pub per_workload: Vec<WorkloadLatency>,
+    /// per-SLO-class latency + admission rows (tenant-id order; empty
+    /// unless the server registered classes at boot)
+    pub per_class: Vec<ClassLatency>,
     /// mean queue depth observed at enqueue time
     pub queue_depth_mean: f64,
     pub queue_depth_max: u64,
@@ -155,6 +209,18 @@ pub struct MetricsSnapshot {
     pub par_wall_s: f64,
     /// summed per-chunk busy time across pool threads
     pub par_busy_s: f64,
+    /// TCP connections accepted by the network front-end
+    pub net_conns: u64,
+    /// wire frames decoded from clients (requests)
+    pub net_frames_in: u64,
+    /// wire frames written to clients (responses + NACKs)
+    pub net_frames_out: u64,
+    /// NACK frames sent (admission rejections + protocol errors)
+    pub net_nacks: u64,
+    /// policy hot-reload swaps published since boot
+    pub reload_swaps: u64,
+    /// PolicyStore generation observed at the latest reload (0 = none)
+    pub reload_generation: u64,
     pub breakdown: TimeBreakdown,
     pub elapsed_s: f64,
 }
@@ -284,10 +350,65 @@ impl Metrics {
         g.strict_bitwise = strict;
     }
 
-    pub fn record_request(&self, workload: &'static str, latency: Duration) {
+    /// Register the SLO classes once at server boot: `(name, p99 target
+    /// seconds)` per class, in tenant-id order. Until this is called,
+    /// per-class recording is a no-op (filesystem-free unit tests).
+    pub fn register_classes(&self, classes: &[(String, f64)]) {
+        let mut g = self.inner.lock().unwrap();
+        g.classes = classes
+            .iter()
+            .map(|(name, slo)| ClassInner {
+                name: name.clone(),
+                slo_target_s: *slo,
+                ..ClassInner::default()
+            })
+            .collect();
+    }
+
+    /// Admission-control outcome for one submission under class `class`.
+    pub fn record_admission(&self, class: usize, outcome: Admission) {
+        let mut g = self.inner.lock().unwrap();
+        if let Some(c) = g.classes.get_mut(class) {
+            match outcome {
+                Admission::Admitted => c.admitted += 1,
+                Admission::RejectedBudget => c.rejected_budget += 1,
+                Admission::RejectedBucket => c.rejected_bucket += 1,
+            }
+        }
+    }
+
+    /// A policy hot-reload swap was published (`generation` = PolicyStore
+    /// generation observed, 0 when no store is configured).
+    pub fn record_reload(&self, generation: u64) {
+        let mut g = self.inner.lock().unwrap();
+        g.reload_swaps += 1;
+        g.reload_generation = g.reload_generation.max(generation);
+    }
+
+    /// One TCP connection accepted by the network front-end.
+    pub fn record_net_conn(&self) {
+        self.inner.lock().unwrap().net_conns += 1;
+    }
+
+    /// One request frame decoded from a client.
+    pub fn record_net_frame_in(&self) {
+        self.inner.lock().unwrap().net_frames_in += 1;
+    }
+
+    /// One frame written to a client; `nack` marks rejection frames.
+    pub fn record_net_frame_out(&self, nack: bool) {
+        let mut g = self.inner.lock().unwrap();
+        g.net_frames_out += 1;
+        if nack {
+            g.net_nacks += 1;
+        }
+    }
+
+    pub fn record_request(&self, workload: &'static str, class: usize, latency: Duration) {
         let mut g = self.inner.lock().unwrap();
         g.requests += 1;
-        if g.slo_target_s > 0.0 && latency.as_secs_f64() > g.slo_target_s {
+        let lat_s = latency.as_secs_f64();
+        if g.slo_target_s > 0.0 && lat_s > g.slo_target_s {
             g.slo_violations += 1;
         }
         g.latencies.record_duration(latency);
@@ -295,6 +416,12 @@ impl Metrics {
             .entry(workload)
             .or_default()
             .record_duration(latency);
+        if let Some(c) = g.classes.get_mut(class) {
+            c.latencies.record_duration(latency);
+            if c.slo_target_s > 0.0 && lat_s > c.slo_target_s {
+                c.slo_violations += 1;
+            }
+        }
     }
 
     /// Queue depth (requests waiting across all queues) after an enqueue.
@@ -382,6 +509,21 @@ impl Metrics {
                     p99_s: s.p99(),
                 })
                 .collect(),
+            per_class: g
+                .classes
+                .iter()
+                .map(|c| ClassLatency {
+                    class: c.name.clone(),
+                    slo_target_s: c.slo_target_s,
+                    requests: c.latencies.len() as u64,
+                    admitted: c.admitted,
+                    rejected_budget: c.rejected_budget,
+                    rejected_bucket: c.rejected_bucket,
+                    slo_violations: c.slo_violations,
+                    p50_s: c.latencies.p50(),
+                    p99_s: c.latencies.p99(),
+                })
+                .collect(),
             queue_depth_mean: if g.queue_depth_samples == 0 {
                 0.0
             } else {
@@ -410,6 +552,12 @@ impl Metrics {
             par_chunks: g.par_chunks,
             par_wall_s: g.par_wall_s,
             par_busy_s: g.par_busy_s,
+            net_conns: g.net_conns,
+            net_frames_in: g.net_frames_in,
+            net_frames_out: g.net_frames_out,
+            net_nacks: g.net_nacks,
+            reload_swaps: g.reload_swaps,
+            reload_generation: g.reload_generation,
             breakdown: g.breakdown,
             elapsed_s: self.started.lock().unwrap().elapsed().as_secs_f64(),
         }
@@ -424,8 +572,8 @@ mod tests {
     #[test]
     fn records_and_snapshots() {
         let m = Metrics::new();
-        m.record_request("treelstm", Duration::from_millis(10));
-        m.record_request("bilstm-tagger", Duration::from_millis(30));
+        m.record_request("treelstm", 0, Duration::from_millis(10));
+        m.record_request("bilstm-tagger", 0, Duration::from_millis(30));
         let report = ExecReport {
             batches: 5,
             kernel_calls: 7,
@@ -507,11 +655,11 @@ mod tests {
     #[test]
     fn slo_violations_counted_against_target() {
         let m = Metrics::new();
-        m.record_request("treelstm", Duration::from_millis(5)); // before target set: not counted
+        m.record_request("treelstm", 0, Duration::from_millis(5)); // before target set: not counted
         m.set_slo(0.010);
-        m.record_request("treelstm", Duration::from_millis(5));
-        m.record_request("treelstm", Duration::from_millis(30));
-        m.record_request("treelstm", Duration::from_millis(12));
+        m.record_request("treelstm", 0, Duration::from_millis(5));
+        m.record_request("treelstm", 0, Duration::from_millis(30));
+        m.record_request("treelstm", 0, Duration::from_millis(12));
         let s = m.snapshot();
         assert_eq!(s.slo_target_s, 0.010);
         assert_eq!(s.slo_violations, 2);
@@ -610,5 +758,55 @@ mod tests {
         assert_eq!(s.store_trained, 1);
         assert_eq!(s.store_fallbacks, 1);
         assert!((s.store_hit_rate() - 1.0 / 3.0).abs() < 1e-12);
+    }
+
+    #[test]
+    fn per_class_admission_and_latency_rows() {
+        let m = Metrics::new();
+        // unregistered classes: per-class recording is a no-op, not a panic
+        m.record_admission(3, Admission::Admitted);
+        m.record_request("treelstm", 3, Duration::from_millis(1));
+        assert!(m.snapshot().per_class.is_empty());
+
+        m.register_classes(&[("gold".to_string(), 0.010), ("bulk".to_string(), 0.100)]);
+        m.record_admission(0, Admission::Admitted);
+        m.record_admission(0, Admission::Admitted);
+        m.record_admission(0, Admission::RejectedBudget);
+        m.record_admission(1, Admission::Admitted);
+        m.record_admission(1, Admission::RejectedBucket);
+        m.record_request("treelstm", 0, Duration::from_millis(5));
+        m.record_request("treelstm", 0, Duration::from_millis(30)); // gold violation
+        m.record_request("treelstm", 1, Duration::from_millis(30)); // under bulk's 100ms
+        let s = m.snapshot();
+        assert_eq!(s.per_class.len(), 2);
+        assert_eq!(s.per_class[0].class, "gold");
+        assert_eq!(s.per_class[0].admitted, 2);
+        assert_eq!(s.per_class[0].rejected_budget, 1);
+        assert_eq!(s.per_class[0].requests, 2);
+        assert_eq!(s.per_class[0].slo_violations, 1);
+        assert!((s.per_class[0].slo_target_s - 0.010).abs() < 1e-12);
+        assert_eq!(s.per_class[1].class, "bulk");
+        assert_eq!(s.per_class[1].rejected_bucket, 1);
+        assert_eq!(s.per_class[1].slo_violations, 0);
+        assert!(s.per_class[0].p99_s >= s.per_class[0].p50_s);
+    }
+
+    #[test]
+    fn net_and_reload_counters() {
+        let m = Metrics::new();
+        m.record_net_conn();
+        m.record_net_conn();
+        m.record_net_frame_in();
+        m.record_net_frame_out(false);
+        m.record_net_frame_out(true);
+        m.record_reload(0);
+        m.record_reload(7);
+        let s = m.snapshot();
+        assert_eq!(s.net_conns, 2);
+        assert_eq!(s.net_frames_in, 1);
+        assert_eq!(s.net_frames_out, 2);
+        assert_eq!(s.net_nacks, 1);
+        assert_eq!(s.reload_swaps, 2);
+        assert_eq!(s.reload_generation, 7);
     }
 }

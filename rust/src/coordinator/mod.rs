@@ -13,6 +13,10 @@
 //!   Little's-law + AIMD controller steering toward a p99 SLO, and a
 //!   learned tabular-Q scheduler policy (trained in
 //!   [`crate::rl::dispatch_sim`]),
+//! * [`net`] — TCP network ingress: a std-only non-blocking front-end
+//!   speaking the length-prefixed binary wire protocol of
+//!   [`crate::util::wire`], mapping tenant ids to SLO classes and
+//!   answering admission rejections with typed NACK frames,
 //! * [`traffic`] — open-loop load generation (Poisson and bursty ON/OFF
 //!   arrival processes) for realistic serving benchmarks,
 //! * [`metrics`] — throughput/latency/queue-depth/SLO/policy-store
@@ -24,6 +28,7 @@ pub mod compose;
 pub mod dispatch;
 pub mod engine;
 pub mod metrics;
+pub mod net;
 pub mod policies;
 pub mod server;
 pub mod traffic;

@@ -1,0 +1,659 @@
+//! Network ingress: a std-only non-blocking TCP front-end speaking the
+//! length-prefixed binary wire protocol of [`crate::util::wire`].
+//!
+//! One IO thread owns the listener and every connection (the
+//! `exec::pool` discipline: plain `std` threads, atomics for shutdown,
+//! join on drop — tokio is unavailable in this build environment, see
+//! Cargo.toml). The loop is non-blocking end to end: accept, read, and
+//! write all use `WouldBlock` as "try the next connection", with a short
+//! park only when a full sweep makes no progress.
+//!
+//! Decoded request frames are mapped tenant-id → SLO class and workload
+//! code → [`ALL_WORKLOADS`] index, then submitted through the same
+//! [`Client::try_submit`] admission path in-process clients use — so a
+//! TCP request is **bit-identical** to an in-process one (the decoded
+//! graph replays `Graph::add` and hits the same instance-cache entries;
+//! integration-tested in `tests/integration.rs`) and every admission
+//! rejection comes back as a typed NACK frame instead of a dropped
+//! connection. Responses are polled off the per-request channels and
+//! written back in completion order; clients match them by request id
+//! (pipelining is expected — batching reorders completions).
+//!
+//! Shutdown is graceful: stop accepting, keep pumping until every
+//! pending response has been delivered (bounded by a drain deadline),
+//! then join the IO thread.
+
+use std::collections::VecDeque;
+use std::io::{ErrorKind, Read, Write};
+use std::net::{SocketAddr, TcpListener, TcpStream};
+use std::sync::atomic::{AtomicBool, Ordering};
+use std::sync::mpsc::{Receiver, TryRecvError};
+use std::sync::Arc;
+use std::thread::JoinHandle;
+use std::time::{Duration, Instant};
+
+use anyhow::{anyhow, bail, Context, Result};
+use rustc_hash::FxHashMap;
+
+use crate::graph::Graph;
+use crate::util::wire::{
+    decode_frame, encode_frame, Frame, NackFrame, NackReason, RequestFrame, ResponseFrame,
+};
+use crate::workloads::{WorkloadKind, ALL_WORKLOADS};
+
+use super::metrics::Metrics;
+use super::server::{Client, Response, Server, SubmitError};
+
+/// Park time when a full accept/read/write sweep made no progress.
+const IDLE_SLEEP: Duration = Duration::from_micros(500);
+/// How long shutdown keeps pumping to deliver already-admitted responses.
+const DRAIN_DEADLINE: Duration = Duration::from_secs(2);
+/// Read chunk size.
+const READ_CHUNK: usize = 64 * 1024;
+
+/// The wire workload code for a kind (index into [`ALL_WORKLOADS`]).
+pub fn workload_code(kind: WorkloadKind) -> u16 {
+    ALL_WORKLOADS
+        .iter()
+        .position(|&k| k == kind)
+        .expect("every kind is in ALL_WORKLOADS") as u16
+}
+
+/// One request admitted into the server, awaiting its response channel.
+struct PendingReq {
+    rid: u64,
+    tenant: u16,
+    workload: u16,
+    rx: Receiver<Response>,
+}
+
+/// Per-connection state: read buffer, pending responses, write queue.
+struct Conn {
+    stream: TcpStream,
+    rbuf: Vec<u8>,
+    wbuf: VecDeque<u8>,
+    pending: Vec<PendingReq>,
+    /// peer closed its read side or the stream errored; no more reads
+    eof: bool,
+    /// protocol poisoned (malformed frame): flush the NACK, then close
+    dead: bool,
+}
+
+impl Conn {
+    fn new(stream: TcpStream) -> Conn {
+        Conn {
+            stream,
+            rbuf: Vec::new(),
+            wbuf: VecDeque::new(),
+            pending: Vec::new(),
+            eof: false,
+            dead: false,
+        }
+    }
+
+    fn queue_frame(&mut self, frame: &Frame, metrics: &Metrics) {
+        self.wbuf.extend(encode_frame(frame));
+        metrics.record_net_frame_out(matches!(frame, Frame::Nack(_)));
+    }
+
+    fn queue_nack(
+        &mut self,
+        metrics: &Metrics,
+        tenant: u16,
+        workload: u16,
+        rid: u64,
+        reason: NackReason,
+        message: String,
+    ) {
+        self.queue_frame(
+            &Frame::Nack(NackFrame {
+                tenant,
+                workload,
+                request_id: rid,
+                reason,
+                message,
+            }),
+            metrics,
+        );
+    }
+
+    /// One non-blocking sweep: read, decode+submit, poll responses,
+    /// write. Returns true when any byte or frame moved.
+    fn pump(
+        &mut self,
+        clients: &FxHashMap<(u16, WorkloadKind), Client>,
+        metrics: &Metrics,
+        nclasses: u16,
+    ) -> bool {
+        let mut progress = false;
+        // -- read ------------------------------------------------------------
+        if !self.eof && !self.dead {
+            let mut chunk = [0u8; READ_CHUNK];
+            loop {
+                match self.stream.read(&mut chunk) {
+                    Ok(0) => {
+                        self.eof = true;
+                        break;
+                    }
+                    Ok(n) => {
+                        self.rbuf.extend_from_slice(&chunk[..n]);
+                        progress = true;
+                    }
+                    Err(e) if e.kind() == ErrorKind::WouldBlock => break,
+                    Err(e) if e.kind() == ErrorKind::Interrupted => continue,
+                    Err(_) => {
+                        self.eof = true;
+                        self.dead = true;
+                        break;
+                    }
+                }
+            }
+        }
+        // -- decode + submit ---------------------------------------------------
+        if !self.dead {
+            let mut consumed = 0usize;
+            loop {
+                match decode_frame(&self.rbuf[consumed..]) {
+                    Ok(Some((frame, used))) => {
+                        consumed += used;
+                        progress = true;
+                        self.handle_frame(frame, clients, metrics, nclasses);
+                        if self.dead {
+                            break;
+                        }
+                    }
+                    Ok(None) => break,
+                    Err(e) => {
+                        // framing cannot resync after a malformed prefix:
+                        // answer with a typed NACK and poison the stream
+                        self.queue_nack(
+                            metrics,
+                            0,
+                            0,
+                            0,
+                            NackReason::Malformed,
+                            format!("{e}"),
+                        );
+                        self.dead = true;
+                        progress = true;
+                        break;
+                    }
+                }
+            }
+            if consumed > 0 {
+                self.rbuf.drain(..consumed);
+            }
+        }
+        // -- poll pending responses -------------------------------------------
+        let mut i = 0;
+        while i < self.pending.len() {
+            match self.pending[i].rx.try_recv() {
+                Ok(resp) => {
+                    let p = self.pending.swap_remove(i);
+                    let (spans, data) = resp.wire_parts();
+                    self.queue_frame(
+                        &Frame::Response(ResponseFrame {
+                            tenant: p.tenant,
+                            workload: p.workload,
+                            request_id: p.rid,
+                            latency_s: resp.latency.as_secs_f64(),
+                            spans: spans.to_vec(),
+                            data: data.to_vec(),
+                        }),
+                        metrics,
+                    );
+                    progress = true;
+                }
+                Err(TryRecvError::Disconnected) => {
+                    // worker fail-stop dropped the request: typed NACK
+                    // instead of a silent hang
+                    let p = self.pending.swap_remove(i);
+                    self.queue_nack(
+                        metrics,
+                        p.tenant,
+                        p.workload,
+                        p.rid,
+                        NackReason::Closed,
+                        "server dropped request".into(),
+                    );
+                    progress = true;
+                }
+                Err(TryRecvError::Empty) => i += 1,
+            }
+        }
+        // -- write -------------------------------------------------------------
+        while !self.wbuf.is_empty() {
+            let (head, _) = self.wbuf.as_slices();
+            match self.stream.write(head) {
+                Ok(0) => {
+                    self.dead = true;
+                    break;
+                }
+                Ok(n) => {
+                    self.wbuf.drain(..n);
+                    progress = true;
+                }
+                Err(e) if e.kind() == ErrorKind::WouldBlock => break,
+                Err(e) if e.kind() == ErrorKind::Interrupted => continue,
+                Err(_) => {
+                    self.dead = true;
+                    break;
+                }
+            }
+        }
+        progress
+    }
+
+    fn handle_frame(
+        &mut self,
+        frame: Frame,
+        clients: &FxHashMap<(u16, WorkloadKind), Client>,
+        metrics: &Metrics,
+        nclasses: u16,
+    ) {
+        let rf: RequestFrame = match frame {
+            Frame::Request(rf) => rf,
+            // clients must only send requests; anything else poisons
+            other => {
+                self.queue_nack(
+                    metrics,
+                    0,
+                    0,
+                    other.request_id(),
+                    NackReason::Malformed,
+                    "only request frames are accepted".into(),
+                );
+                self.dead = true;
+                return;
+            }
+        };
+        metrics.record_net_frame_in();
+        let (tenant, workload, rid) = (rf.tenant, rf.workload, rf.request_id);
+        if tenant >= nclasses {
+            self.queue_nack(
+                metrics,
+                tenant,
+                workload,
+                rid,
+                NackReason::BadTenant,
+                format!("tenant {tenant} outside {nclasses} configured classes"),
+            );
+            return;
+        }
+        let Some(&kind) = ALL_WORKLOADS.get(workload as usize) else {
+            self.queue_nack(
+                metrics,
+                tenant,
+                workload,
+                rid,
+                NackReason::UnknownWorkload,
+                format!("workload code {workload} unknown"),
+            );
+            return;
+        };
+        let client = &clients[&(tenant, kind)];
+        match client.try_submit(rf.graph) {
+            Ok(rx) => self.pending.push(PendingReq {
+                rid,
+                tenant,
+                workload,
+                rx,
+            }),
+            Err(SubmitError::Rejected { reason, message }) => {
+                self.queue_nack(metrics, tenant, workload, rid, reason, message)
+            }
+            Err(SubmitError::NotServed(k)) => self.queue_nack(
+                metrics,
+                tenant,
+                workload,
+                rid,
+                NackReason::UnknownWorkload,
+                format!("workload {} not served", k.name()),
+            ),
+            Err(SubmitError::Closed) => self.queue_nack(
+                metrics,
+                tenant,
+                workload,
+                rid,
+                NackReason::Closed,
+                "server stopped".into(),
+            ),
+        }
+    }
+
+    /// Connection can be dropped: poisoned with nothing left to flush, or
+    /// peer gone with no responses still owed.
+    fn finished(&self) -> bool {
+        if self.dead {
+            return self.wbuf.is_empty();
+        }
+        self.eof && self.pending.is_empty() && self.wbuf.is_empty()
+    }
+}
+
+/// The TCP front-end: owns the listener + IO thread for one [`Server`].
+pub struct NetServer {
+    local: SocketAddr,
+    stop: Arc<AtomicBool>,
+    handle: Option<JoinHandle<Result<()>>>,
+}
+
+impl NetServer {
+    /// Bind `addr` (e.g. `127.0.0.1:0` for an ephemeral port) and start
+    /// serving the wire protocol on top of `server`'s admission path.
+    pub fn start(server: &Server, addr: &str) -> Result<NetServer> {
+        let listener = TcpListener::bind(addr).with_context(|| format!("bind {addr}"))?;
+        listener.set_nonblocking(true)?;
+        let local = listener.local_addr()?;
+        let nclasses = server.num_classes() as u16;
+        // pre-built clients for every (class, workload) pair: submission
+        // needs no locking beyond the dispatcher's own
+        let mut clients: FxHashMap<(u16, WorkloadKind), Client> = FxHashMap::default();
+        for ci in 0..nclasses {
+            for &kind in ALL_WORKLOADS.iter() {
+                clients.insert((ci, kind), server.client_for_class(ci, kind));
+            }
+        }
+        let metrics = server.metrics.clone();
+        let stop = Arc::new(AtomicBool::new(false));
+        let stop2 = stop.clone();
+        let handle = std::thread::Builder::new()
+            .name("ed-batch-net".into())
+            .spawn(move || io_loop(listener, clients, metrics, nclasses, stop2))
+            .expect("spawn net io thread");
+        Ok(NetServer {
+            local,
+            stop,
+            handle: Some(handle),
+        })
+    }
+
+    /// The bound address (resolves `:0` to the actual ephemeral port).
+    pub fn local_addr(&self) -> SocketAddr {
+        self.local
+    }
+
+    /// Stop accepting, drain pending responses (bounded), join the IO
+    /// thread. Call **before** shutting the [`Server`] down so admitted
+    /// requests still have workers to answer them.
+    pub fn shutdown(mut self) -> Result<()> {
+        self.stop.store(true, Ordering::Relaxed);
+        match self.handle.take() {
+            Some(h) => h.join().map_err(|_| anyhow!("net io thread panicked"))?,
+            None => Ok(()),
+        }
+    }
+}
+
+impl Drop for NetServer {
+    fn drop(&mut self) {
+        self.stop.store(true, Ordering::Relaxed);
+        if let Some(h) = self.handle.take() {
+            let _ = h.join();
+        }
+    }
+}
+
+fn io_loop(
+    listener: TcpListener,
+    clients: FxHashMap<(u16, WorkloadKind), Client>,
+    metrics: Arc<Metrics>,
+    nclasses: u16,
+    stop: Arc<AtomicBool>,
+) -> Result<()> {
+    let mut conns: Vec<Conn> = Vec::new();
+    let mut drain_until: Option<Instant> = None;
+    loop {
+        let stopping = stop.load(Ordering::Relaxed);
+        let mut progress = false;
+        if !stopping {
+            loop {
+                match listener.accept() {
+                    Ok((s, _)) => {
+                        s.set_nonblocking(true)?;
+                        let _ = s.set_nodelay(true);
+                        metrics.record_net_conn();
+                        conns.push(Conn::new(s));
+                        progress = true;
+                    }
+                    Err(e) if e.kind() == ErrorKind::WouldBlock => break,
+                    Err(e) if e.kind() == ErrorKind::Interrupted => continue,
+                    Err(e) => return Err(e.into()),
+                }
+            }
+        }
+        for conn in conns.iter_mut() {
+            progress |= conn.pump(&clients, &metrics, nclasses);
+        }
+        conns.retain(|c| !c.finished());
+        if stopping {
+            let deadline = *drain_until.get_or_insert_with(|| Instant::now() + DRAIN_DEADLINE);
+            let drained = conns
+                .iter()
+                .all(|c| c.pending.is_empty() && c.wbuf.is_empty());
+            if drained || Instant::now() >= deadline {
+                break;
+            }
+        }
+        if !progress {
+            std::thread::sleep(IDLE_SLEEP);
+        }
+    }
+    Ok(())
+}
+
+/// Blocking wire-protocol client (tests, benchmarks, the `serve --listen`
+/// parity check). Supports pipelining: [`TcpClient::submit`] returns the
+/// request id, [`TcpClient::collect`] matches responses by id (buffering
+/// reordered completions).
+pub struct TcpClient {
+    stream: TcpStream,
+    rbuf: Vec<u8>,
+    inbox: FxHashMap<u64, Frame>,
+    tenant: u16,
+    next_id: u64,
+}
+
+impl TcpClient {
+    pub fn connect(addr: &SocketAddr, tenant: u16) -> Result<TcpClient> {
+        let stream = TcpStream::connect(addr).with_context(|| format!("connect {addr}"))?;
+        let _ = stream.set_nodelay(true);
+        Ok(TcpClient {
+            stream,
+            rbuf: Vec::new(),
+            inbox: FxHashMap::default(),
+            tenant,
+            next_id: 1,
+        })
+    }
+
+    /// Send one request frame; returns its request id.
+    pub fn submit(&mut self, kind: WorkloadKind, graph: Graph) -> Result<u64> {
+        let rid = self.next_id;
+        self.next_id += 1;
+        let frame = Frame::Request(RequestFrame {
+            tenant: self.tenant,
+            workload: workload_code(kind),
+            request_id: rid,
+            graph,
+        });
+        self.stream.write_all(&encode_frame(&frame))?;
+        Ok(rid)
+    }
+
+    /// Read frames until the one answering `rid` arrives (other requests'
+    /// answers are parked in the inbox). A NACK for `rid` becomes a typed
+    /// error carrying the reason name.
+    pub fn collect(&mut self, rid: u64) -> Result<Response> {
+        loop {
+            if let Some(frame) = self.inbox.remove(&rid) {
+                return Self::unwrap_response(frame);
+            }
+            let frame = self.read_frame()?;
+            let id = frame.request_id();
+            if id == rid {
+                return Self::unwrap_response(frame);
+            }
+            self.inbox.insert(id, frame);
+        }
+    }
+
+    /// Blocking round trip.
+    pub fn infer(&mut self, kind: WorkloadKind, graph: Graph) -> Result<Response> {
+        let rid = self.submit(kind, graph)?;
+        self.collect(rid)
+    }
+
+    fn unwrap_response(frame: Frame) -> Result<Response> {
+        match frame {
+            Frame::Response(r) => Ok(Response::from_wire(
+                r.spans,
+                r.data,
+                Duration::from_secs_f64(r.latency_s.max(0.0)),
+            )),
+            Frame::Nack(n) => bail!("request NACKed ({}): {}", n.reason.name(), n.message),
+            Frame::Request(_) => bail!("server sent a request frame"),
+        }
+    }
+
+    fn read_frame(&mut self) -> Result<Frame> {
+        let mut chunk = [0u8; READ_CHUNK];
+        loop {
+            if let Some((frame, used)) = decode_frame(&self.rbuf)? {
+                self.rbuf.drain(..used);
+                return Ok(frame);
+            }
+            let n = self.stream.read(&mut chunk)?;
+            if n == 0 {
+                bail!("connection closed mid-frame");
+            }
+            self.rbuf.extend_from_slice(&chunk[..n]);
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::batching::fsm::Encoding;
+    use crate::coordinator::server::ServerConfig;
+    use crate::coordinator::SystemMode;
+    use crate::rl::TrainConfig;
+    use crate::util::rng::Rng;
+    use crate::workloads::Workload;
+
+    fn quick_server() -> Server {
+        let cfg = ServerConfig {
+            workloads: vec![WorkloadKind::TreeLstm],
+            hidden: 32,
+            mode: SystemMode::EdBatch,
+            max_batch: 8,
+            batch_window: Duration::from_millis(1),
+            workers: 1,
+            artifacts_dir: None, // CPU backend for unit tests
+            store_dir: None,     // filesystem-free: trains in memory
+            train_on_miss: true,
+            train_cfg: TrainConfig {
+                max_iters: 120,
+                check_every: 20,
+                train_batch: 2,
+                ..TrainConfig::default()
+            },
+            encoding: Encoding::Sort,
+            seed: 3,
+            ..ServerConfig::default()
+        };
+        Server::start(cfg).unwrap()
+    }
+
+    #[test]
+    fn workload_codes_are_stable_indices() {
+        for (i, &kind) in ALL_WORKLOADS.iter().enumerate() {
+            assert_eq!(workload_code(kind) as usize, i);
+        }
+    }
+
+    #[test]
+    fn loopback_round_trip_serves_finite_outputs() {
+        let server = quick_server();
+        let net = NetServer::start(&server, "127.0.0.1:0").unwrap();
+        let addr = net.local_addr();
+        let w = Workload::new(WorkloadKind::TreeLstm, 32);
+        let mut rng = Rng::new(61);
+        let mut client = TcpClient::connect(&addr, 0).unwrap();
+        for _ in 0..3 {
+            let resp = client.infer(WorkloadKind::TreeLstm, w.gen_instance(&mut rng)).unwrap();
+            assert!(resp.num_sinks() > 0);
+            assert!(resp.sink_outputs().flatten().all(|v| v.is_finite()));
+        }
+        let snap = server.metrics.snapshot();
+        assert_eq!(snap.net_conns, 1);
+        assert_eq!(snap.net_frames_in, 3);
+        assert_eq!(snap.net_frames_out, 3);
+        assert_eq!(snap.net_nacks, 0);
+        net.shutdown().unwrap();
+        server.shutdown().unwrap();
+    }
+
+    #[test]
+    fn pipelined_submissions_match_by_request_id() {
+        let server = quick_server();
+        let net = NetServer::start(&server, "127.0.0.1:0").unwrap();
+        let w = Workload::new(WorkloadKind::TreeLstm, 32);
+        let mut rng = Rng::new(62);
+        let mut client = TcpClient::connect(&net.local_addr(), 0).unwrap();
+        let graphs: Vec<Graph> = (0..4).map(|_| w.gen_instance(&mut rng)).collect();
+        let rids: Vec<u64> = graphs
+            .iter()
+            .map(|g| client.submit(WorkloadKind::TreeLstm, g.clone()).unwrap())
+            .collect();
+        // collect in reverse order: the inbox reorders for us
+        for &rid in rids.iter().rev() {
+            assert!(client.collect(rid).unwrap().num_sinks() > 0);
+        }
+        net.shutdown().unwrap();
+        server.shutdown().unwrap();
+    }
+
+    #[test]
+    fn bad_tenant_and_unknown_workload_get_typed_nacks() {
+        let server = quick_server();
+        let net = NetServer::start(&server, "127.0.0.1:0").unwrap();
+        let w = Workload::new(WorkloadKind::TreeLstm, 32);
+        let mut rng = Rng::new(63);
+        // tenant 9 is outside the single default class
+        let mut bad_tenant = TcpClient::connect(&net.local_addr(), 9).unwrap();
+        let err = bad_tenant
+            .infer(WorkloadKind::TreeLstm, w.gen_instance(&mut rng))
+            .unwrap_err();
+        assert!(err.to_string().contains("bad-tenant"), "{err}");
+        // served tenant, unserved workload
+        let mut bad_wl = TcpClient::connect(&net.local_addr(), 0).unwrap();
+        let err = bad_wl
+            .infer(WorkloadKind::LatticeGru, w.gen_instance(&mut rng))
+            .unwrap_err();
+        assert!(err.to_string().contains("unknown-workload"), "{err}");
+        let snap = server.metrics.snapshot();
+        assert_eq!(snap.net_nacks, 2);
+        net.shutdown().unwrap();
+        server.shutdown().unwrap();
+    }
+
+    #[test]
+    fn malformed_bytes_get_nack_and_close() {
+        let server = quick_server();
+        let net = NetServer::start(&server, "127.0.0.1:0").unwrap();
+        let mut stream = TcpStream::connect(net.local_addr()).unwrap();
+        stream.write_all(b"GET / HTTP/1.1\r\n\r\n").unwrap();
+        // the server answers with a malformed-NACK then closes
+        let mut buf = Vec::new();
+        stream.read_to_end(&mut buf).unwrap();
+        let (frame, _) = decode_frame(&buf).unwrap().unwrap();
+        match frame {
+            Frame::Nack(n) => assert_eq!(n.reason, NackReason::Malformed),
+            other => panic!("expected NACK, got {other:?}"),
+        }
+        net.shutdown().unwrap();
+        server.shutdown().unwrap();
+    }
+}

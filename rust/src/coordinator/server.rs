@@ -42,12 +42,32 @@
 //! re-running the policy per mini-batch is part of the overhead they
 //! exist to measure.
 //!
+//! **Multi-tenant SLO classes** (`--tenants`): queues are keyed by
+//! *(SLO class, workload)*, so every tenant tier batches independently
+//! under its own [`DispatchController`] and latency target, and ready
+//! queues drain under **weighted fairness** (virtual-time: the queue with
+//! the least weighted service so far wins; ties to the oldest head, which
+//! with a single class reproduces the legacy FIFO pick exactly). On top
+//! sit two admission controls enforced at submit time — a projected-cost
+//! budget (`(depth + 1) × plan-cost EWMA` vs the class budget, NACKed as
+//! [`NackReason::QueueBudget`]) and a per-tenant token bucket — so
+//! overload sheds load *by class* instead of growing every queue.
+//!
+//! **Zero-downtime policy hot-reload**: policies live behind a versioned
+//! atomic swap ([`Server::reload_policies`], optionally driven by a
+//! PolicyStore-generation watcher). Workers notice the epoch bump between
+//! mini-batches and swap in the new batching + scheduler policies without
+//! draining: queued and in-flight requests are untouched (the engine's
+//! values are policy-invariant — a policy only changes batching order),
+//! so nothing is dropped or misrouted (counter-asserted in tests).
+//!
 //! (tokio is unavailable in this build environment — see Cargo.toml — so
 //! the router is built on `Mutex<queues>` + `Condvar` + threads; the
 //! architecture is the same as an async one: one logical task per request,
 //! a shared dispatch state, N executor workers.)
 
 use std::collections::VecDeque;
+use std::sync::atomic::{AtomicBool, AtomicU64, Ordering};
 use std::sync::mpsc::{sync_channel, Receiver, SyncSender};
 use std::sync::{Arc, Condvar, Mutex};
 use std::thread::JoinHandle;
@@ -66,12 +86,15 @@ use crate::rl::dispatch_sim::SimConfig;
 use crate::rl::TrainConfig;
 use crate::runtime::ArtifactRegistry;
 use crate::util::rng::Rng;
+use crate::util::wire::NackReason;
 use crate::workloads::{Workload, WorkloadKind};
 
 use super::compose::{ComposedPlan, InstanceCache};
-use super::dispatch::{DispatchController, DispatchMode, SchedulerPolicy, SloConfig};
+use super::dispatch::{
+    DispatchController, DispatchMode, SchedulerPolicy, SloClassConfig, SloConfig,
+};
 use super::engine::{ArenaStateStore, Backend, CellEngine, ExecReport};
-use super::metrics::Metrics;
+use super::metrics::{Admission, Metrics};
 use super::policies::calibrate_prefers_depth;
 use super::{SystemMode, TimeBreakdown};
 
@@ -136,6 +159,14 @@ pub struct ServerConfig {
     /// strict half of the numerics contract; see `exec::parity` for the
     /// ULP-bounded contract the SIMD path answers to instead)
     pub strict_bitwise: bool,
+    /// tenant SLO classes (`--tenants`): each class gets its own queues,
+    /// dispatch controllers, weighted-fair share, and admission limits.
+    /// Empty = one implicit unlimited "default" class (legacy behavior;
+    /// class index 0 is always the default [`Server::client`] submits to)
+    pub classes: Vec<SloClassConfig>,
+    /// poll interval for the PolicyStore-generation hot-reload watcher;
+    /// `None` = reload only on explicit [`Server::reload_policies`] calls
+    pub hot_reload_poll: Option<Duration>,
 }
 
 impl Default for ServerConfig {
@@ -158,6 +189,8 @@ impl Default for ServerConfig {
             slo_p99: None,
             scheduler: None,
             strict_bitwise: false,
+            classes: Vec::new(),
+            hot_reload_poll: None,
         }
     }
 }
@@ -178,6 +211,9 @@ impl ServerConfig {
 pub struct Request {
     pub kind: WorkloadKind,
     pub graph: Graph,
+    /// SLO class index (always 0 unless the client came from
+    /// [`Server::client_for_class`])
+    class: u16,
     submitted: Instant,
     respond: SyncSender<Response>,
 }
@@ -218,6 +254,18 @@ impl Response {
     pub fn to_vecs(&self) -> Vec<Vec<f32>> {
         self.sink_outputs().map(|s| s.to_vec()).collect()
     }
+
+    /// The raw spans + data, exactly as the wire codec transmits them
+    /// (`util::wire` response payload; bit-preserving).
+    pub fn wire_parts(&self) -> (&[(u32, u32)], &[f32]) {
+        (&self.spans, &self.data)
+    }
+
+    /// Rebuild a response from wire-decoded parts (the TCP client's side
+    /// of [`Response::wire_parts`]).
+    pub fn from_wire(spans: Vec<(u32, u32)>, data: Vec<f32>, latency: Duration) -> Response {
+        Response { data, spans, latency }
+    }
 }
 
 /// One workload's FIFO queue plus its queue-level arrival statistics.
@@ -233,6 +281,13 @@ struct WorkQueue {
     q: VecDeque<Request>,
     last_submitted: Option<Instant>,
     ia_ewma_s: Option<f64>,
+    /// EWMA of the measured per-instance plan cost (elems) of batches
+    /// drained from this queue; 0 = nothing measured yet (admission falls
+    /// back to the `nodes × hidden × 2` static prior)
+    cost_ewma_elems: f64,
+    /// weighted-fair virtual finish time: cumulative instances drained
+    /// divided by the class weight (see [`next_batch`])
+    vtime: f64,
 }
 
 impl WorkQueue {
@@ -241,7 +296,20 @@ impl WorkQueue {
             q: VecDeque::new(),
             last_submitted: None,
             ia_ewma_s: None,
+            cost_ewma_elems: 0.0,
+            vtime: 0.0,
         }
+    }
+
+    /// Fold a measured per-instance batch cost into the admission EWMA
+    /// (called under the dispatcher lock after each mini-batch).
+    fn observe_cost(&mut self, cost_elems: f64) {
+        self.cost_ewma_elems = if self.cost_ewma_elems > 0.0 {
+            self.cost_ewma_elems
+                + super::dispatch::EWMA_ALPHA * (cost_elems - self.cost_ewma_elems)
+        } else {
+            cost_elems
+        };
     }
 
     /// Fold one enqueue instant into the arrival EWMA (called under the
@@ -258,9 +326,58 @@ impl WorkQueue {
     }
 }
 
-/// Shared dispatch state: per-workload queues + shutdown flag.
+/// Queue identity: one FIFO per *(SLO class, workload)* pair.
+#[derive(Clone, Copy, PartialEq, Eq, Hash, Debug)]
+struct QueueKey {
+    class: u16,
+    kind: WorkloadKind,
+}
+
+/// Classic token bucket (per tenant class): refills continuously at
+/// `rate` tokens/s up to `burst`, one token per admitted request.
+struct TokenBucket {
+    tokens: f64,
+    rate: f64,
+    burst: f64,
+    last: Instant,
+}
+
+impl TokenBucket {
+    fn new(rate: f64, burst: f64) -> TokenBucket {
+        TokenBucket {
+            tokens: burst,
+            rate,
+            burst,
+            last: Instant::now(),
+        }
+    }
+
+    fn try_take(&mut self, now: Instant) -> bool {
+        let dt = now.saturating_duration_since(self.last).as_secs_f64();
+        self.last = now;
+        self.tokens = (self.tokens + dt * self.rate).min(self.burst);
+        if self.tokens >= 1.0 {
+            self.tokens -= 1.0;
+            true
+        } else {
+            false
+        }
+    }
+}
+
+/// One SLO class's runtime admission state.
+struct ClassRuntime {
+    cfg: SloClassConfig,
+    bucket: Option<TokenBucket>,
+}
+
+/// Shared dispatch state: per-(class, workload) queues + shutdown flag.
 struct DispatchState {
-    queues: FxHashMap<WorkloadKind, WorkQueue>,
+    queues: FxHashMap<QueueKey, WorkQueue>,
+    classes: Vec<ClassRuntime>,
+    /// weighted-fair virtual clock (monotone; queues lagging behind it
+    /// restart from it so idle classes cannot bank unbounded credit)
+    vclock: f64,
     closed: bool,
 }
 
@@ -273,6 +390,8 @@ impl DispatchState {
 struct Dispatcher {
     state: Mutex<DispatchState>,
     cv: Condvar,
+    /// hidden width, for the static admission cost prior
+    hidden: usize,
 }
 
 /// Boot-resolved policy prototype; each worker instantiates its own
@@ -294,48 +413,159 @@ impl PolicySeed {
     }
 }
 
+/// One immutable generation of resolved policies: batching seeds per
+/// workload + scheduler policies per (class, workload).
+struct PolicySet {
+    seeds: FxHashMap<WorkloadKind, PolicySeed>,
+    scheds: FxHashMap<(u16, WorkloadKind), SchedulerPolicy>,
+}
+
+/// Versioned atomic policy swap: readers (workers) watch `epoch` between
+/// mini-batches and clone the current [`PolicySet`] `Arc` only when it
+/// moved — the hot path pays one relaxed-ordering load per batch and the
+/// swap never blocks request flow (zero-downtime hot-reload).
+struct PolicySwap {
+    epoch: AtomicU64,
+    set: Mutex<Arc<PolicySet>>,
+}
+
+impl PolicySwap {
+    fn current(&self) -> Arc<PolicySet> {
+        self.set.lock().unwrap().clone()
+    }
+}
+
 pub struct Server {
     dispatcher: Arc<Dispatcher>,
     pub metrics: Arc<Metrics>,
     handles: Vec<JoinHandle<Result<()>>>,
+    /// normalized boot config, kept for policy re-resolution on reload
+    config: ServerConfig,
+    swap: Arc<PolicySwap>,
+    watcher_stop: Arc<AtomicBool>,
+    watcher: Option<JoinHandle<()>>,
 }
 
-/// Handle for submitting requests of one workload kind.
+/// Typed submission failure: the wire front-end maps these onto NACK
+/// frames; in-process callers usually go through [`Client::submit`],
+/// which flattens them into `anyhow` errors.
+#[derive(Debug, Clone)]
+pub enum SubmitError {
+    /// server shut down (or failed-stop)
+    Closed,
+    /// the workload kind has no queue on this server
+    NotServed(WorkloadKind),
+    /// admission control turned the request away
+    Rejected { reason: NackReason, message: String },
+}
+
+impl std::fmt::Display for SubmitError {
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        match self {
+            SubmitError::Closed => write!(f, "server stopped"),
+            SubmitError::NotServed(k) => write!(f, "workload {} not served", k.name()),
+            SubmitError::Rejected { reason, message } => {
+                write!(f, "admission rejected ({}): {}", reason.name(), message)
+            }
+        }
+    }
+}
+
+impl std::error::Error for SubmitError {}
+
+/// Handle for submitting requests of one workload kind under one SLO
+/// class.
 pub struct Client {
     dispatcher: Arc<Dispatcher>,
     metrics: Arc<Metrics>,
     kind: WorkloadKind,
+    class: u16,
 }
 
 impl Client {
-    /// Non-blocking submission: enqueue the request and return the
-    /// receiver its [`Response`] will arrive on. The open-loop load
-    /// generator ([`crate::coordinator::traffic`]) is built on this —
-    /// arrivals must not be gated on completions.
-    pub fn submit(&self, graph: Graph) -> Result<Receiver<Response>> {
+    /// Non-blocking submission with typed admission outcomes: enqueue the
+    /// request and return the receiver its [`Response`] will arrive on,
+    /// or a typed rejection. Admission runs under the dispatcher lock:
+    /// first the class **cost budget** — reject when
+    /// `(depth + 1) × cost-EWMA` (static `nodes × hidden × 2` prior until
+    /// a batch has been measured) exceeds `admit_budget_elems` — then the
+    /// class **token bucket**. The default class has neither limit, so
+    /// the legacy open-loop path never sheds.
+    pub fn try_submit(&self, graph: Graph) -> Result<Receiver<Response>, SubmitError> {
         let (rtx, rrx) = sync_channel(1);
         {
             let mut st = self.dispatcher.state.lock().unwrap();
             if st.closed {
-                bail!("server stopped");
+                return Err(SubmitError::Closed);
             }
-            let wq = st
-                .queues
-                .get_mut(&self.kind)
-                .ok_or_else(|| anyhow!("workload {} not served", self.kind.name()))?;
+            let ci = self.class as usize;
+            if ci >= st.classes.len() {
+                return Err(SubmitError::Rejected {
+                    reason: NackReason::BadTenant,
+                    message: format!("tenant class {} not configured", self.class),
+                });
+            }
+            let key = QueueKey {
+                class: self.class,
+                kind: self.kind,
+            };
             let now = Instant::now();
+            {
+                let Some(wq) = st.queues.get(&key) else {
+                    return Err(SubmitError::NotServed(self.kind));
+                };
+                if let Some(budget) = st.classes[ci].cfg.admit_budget_elems {
+                    let cost = if wq.cost_ewma_elems > 0.0 {
+                        wq.cost_ewma_elems
+                    } else {
+                        (graph.len() * self.dispatcher.hidden * 2) as f64
+                    };
+                    let projected = (wq.q.len() + 1) as f64 * cost;
+                    if projected > budget {
+                        self.metrics.record_admission(ci, Admission::RejectedBudget);
+                        return Err(SubmitError::Rejected {
+                            reason: NackReason::QueueBudget,
+                            message: format!(
+                                "class {} projected queue cost {projected:.0} elems \
+                                 exceeds budget {budget:.0}",
+                                st.classes[ci].cfg.name
+                            ),
+                        });
+                    }
+                }
+            }
+            if let Some(bucket) = st.classes[ci].bucket.as_mut() {
+                if !bucket.try_take(now) {
+                    let name = st.classes[ci].cfg.name.clone();
+                    self.metrics.record_admission(ci, Admission::RejectedBucket);
+                    return Err(SubmitError::Rejected {
+                        reason: NackReason::TokenBucket,
+                        message: format!("class {name} rate limit exceeded"),
+                    });
+                }
+            }
+            let wq = st.queues.get_mut(&key).expect("checked above");
             wq.record_arrival(now);
             wq.q.push_back(Request {
                 kind: self.kind,
+                class: self.class,
                 graph,
                 submitted: now,
                 respond: rtx,
             });
             let depth = st.total_queued();
+            self.metrics.record_admission(ci, Admission::Admitted);
             self.metrics.record_enqueue(depth);
         }
         self.dispatcher.cv.notify_one();
         Ok(rrx)
+    }
+
+    /// Non-blocking submission, `anyhow`-flattened (legacy API; the
+    /// open-loop load generator [`crate::coordinator::traffic`] is built
+    /// on this — arrivals must not be gated on completions).
+    pub fn submit(&self, graph: Graph) -> Result<Receiver<Response>> {
+        self.try_submit(graph).map_err(|e| anyhow!("{e}"))
     }
 
     /// Blocking inference call (closed-loop clients).
@@ -357,30 +587,68 @@ impl Server {
         }
         config.workers = config.workers.max(1);
         config.threads = config.threads.max(1);
+        if config.classes.is_empty() {
+            config.classes = vec![SloClassConfig::default_class()];
+        }
+        {
+            let mut seen = FxHashMap::default();
+            for c in &config.classes {
+                if seen.insert(c.name.clone(), ()).is_some() {
+                    bail!("duplicate SLO class '{}'", c.name);
+                }
+            }
+        }
 
         let metrics = Arc::new(Metrics::new());
         if let Some(slo) = config.slo_p99 {
             metrics.set_slo(slo.as_secs_f64());
         }
         metrics.set_pool_threads(config.threads as u64);
+        let class_rows: Vec<(String, f64)> = config
+            .classes
+            .iter()
+            .map(|c| (c.name.clone(), class_slo(&config, c).p99_target_s))
+            .collect();
+        metrics.register_classes(&class_rows);
         // resolve every workload's policy before any worker starts: store
         // lookups, boot-time training, fallbacks — never in-request
-        let seeds = Arc::new(resolve_policies(&config, &metrics)?);
-        // same discipline for the serving-time scheduler policy (Learned
-        // dispatch): store lookup or simulator training, never in-request
-        let sched_seeds = Arc::new(resolve_schedulers(&config)?);
+        let seeds = resolve_policies(&config, &metrics)?;
+        // same discipline for the serving-time scheduler policies (Learned
+        // dispatch, one per (class, workload)): store lookup or simulator
+        // training, never in-request
+        let scheds = resolve_schedulers(&config)?;
+        let swap = Arc::new(PolicySwap {
+            epoch: AtomicU64::new(0),
+            set: Mutex::new(Arc::new(PolicySet { seeds, scheds })),
+        });
 
         let dispatcher = Arc::new(Dispatcher {
             state: Mutex::new(DispatchState {
-                queues: config
-                    .workloads
-                    .iter()
-                    .map(|&k| (k, WorkQueue::new()))
+                queues: (0..config.classes.len() as u16)
+                    .flat_map(|ci| {
+                        config
+                            .workloads
+                            .iter()
+                            .map(move |&k| (QueueKey { class: ci, kind: k }, WorkQueue::new()))
+                    })
                     .collect(),
+                classes: config
+                    .classes
+                    .iter()
+                    .map(|c| ClassRuntime {
+                        bucket: c
+                            .bucket_rate
+                            .map(|r| TokenBucket::new(r, c.bucket_burst.max(1.0))),
+                        cfg: c.clone(),
+                    })
+                    .collect(),
+                vclock: 0.0,
                 closed: false,
             }),
             cv: Condvar::new(),
+            hidden: config.hidden,
         });
+        let watcher_stop = Arc::new(AtomicBool::new(false));
 
         let (ready_tx, ready_rx) = sync_channel::<Result<()>>(config.workers);
         let mut handles = Vec::with_capacity(config.workers);
@@ -388,12 +656,11 @@ impl Server {
             let cfg = config.clone();
             let d = dispatcher.clone();
             let m = metrics.clone();
-            let s = seeds.clone();
-            let sch = sched_seeds.clone();
+            let sw = swap.clone();
             let rtx = ready_tx.clone();
             let handle = std::thread::Builder::new()
                 .name(format!("ed-batch-worker-{wid}"))
-                .spawn(move || worker_loop(cfg, d, m, s, sch, rtx))
+                .spawn(move || worker_loop(cfg, d, m, sw, rtx))
                 .expect("spawn worker");
             handles.push(handle);
         }
@@ -409,6 +676,10 @@ impl Server {
                         dispatcher,
                         metrics,
                         handles,
+                        config,
+                        swap,
+                        watcher_stop,
+                        watcher: None,
                     };
                     let _ = server.shutdown();
                     return Err(e);
@@ -420,33 +691,121 @@ impl Server {
                         dispatcher,
                         metrics,
                         handles,
+                        config,
+                        swap,
+                        watcher_stop,
+                        watcher: None,
                     };
                     let _ = server.shutdown();
                     bail!("worker died during boot");
                 }
             }
         }
+        // PolicyStore-generation watcher (optional): polls index.json's
+        // monotone generation counter and republishes policies when some
+        // other process trained new artifacts — zero-downtime hot-reload
+        // without an operator in the loop
+        let watcher = match (&config.hot_reload_poll, &config.store_dir) {
+            (Some(poll), Some(dir)) => {
+                let poll = *poll;
+                let dir = dir.clone();
+                let stop = watcher_stop.clone();
+                let cfg = config.clone();
+                let m = metrics.clone();
+                let sw = swap.clone();
+                let d = dispatcher.clone();
+                let mut last = PolicyStore::read_generation(&dir).unwrap_or(0);
+                Some(
+                    std::thread::Builder::new()
+                        .name("ed-batch-reload-watch".into())
+                        .spawn(move || {
+                            while !stop.load(Ordering::Relaxed) {
+                                // sleep in short slices so shutdown stays
+                                // responsive at any poll interval
+                                let mut slept = Duration::ZERO;
+                                while slept < poll && !stop.load(Ordering::Relaxed) {
+                                    let step = (poll - slept).min(IDLE_POLL);
+                                    std::thread::sleep(step);
+                                    slept += step;
+                                }
+                                if stop.load(Ordering::Relaxed) {
+                                    break;
+                                }
+                                let gen = PolicyStore::read_generation(&dir).unwrap_or(0);
+                                if gen > last
+                                    && publish_reload(&cfg, &m, &sw, &d).is_ok()
+                                {
+                                    // on error: keep the last good policy
+                                    // set and retry next poll
+                                    last = gen;
+                                }
+                            }
+                        })
+                        .expect("spawn reload watcher"),
+                )
+            }
+            _ => None,
+        };
         metrics.reset_clock();
         Ok(Server {
             dispatcher,
             metrics,
             handles,
+            config,
+            swap,
+            watcher_stop,
+            watcher,
         })
     }
 
-    /// A client handle for one of the served workload kinds.
+    /// A client handle for one of the served workload kinds (submits
+    /// under the default SLO class, index 0).
     pub fn client(&self, kind: WorkloadKind) -> Client {
+        self.client_for_class(0, kind)
+    }
+
+    /// A client handle submitting under SLO class `class` (index into
+    /// [`ServerConfig::classes`]; the wire front-end maps tenant ids
+    /// here). Out-of-range classes are rejected at submit time with a
+    /// typed `BadTenant` error, not at handle creation.
+    pub fn client_for_class(&self, class: u16, kind: WorkloadKind) -> Client {
         Client {
             dispatcher: self.dispatcher.clone(),
             metrics: self.metrics.clone(),
             kind,
+            class,
         }
     }
 
-    /// Graceful shutdown: close the queues, wake the pool, join every
-    /// worker. Already-queued requests are flushed and answered; clients
-    /// holding a [`Client`] afterwards get an error on `infer`.
+    /// Number of configured SLO classes (tenant ids `0..n` are valid).
+    pub fn num_classes(&self) -> usize {
+        self.config.classes.len()
+    }
+
+    /// Names of the configured SLO classes, in tenant-id order.
+    pub fn class_names(&self) -> Vec<String> {
+        self.config.classes.iter().map(|c| c.name.clone()).collect()
+    }
+
+    /// Re-resolve every batching + scheduler policy from the configured
+    /// sources (PolicyStore / boot-time training) and publish them as a
+    /// new policy generation. Workers pick the swap up between
+    /// mini-batches: no drain, no dropped or misrouted in-flight
+    /// requests (responses are policy-invariant — a policy only changes
+    /// batching order). Returns the new swap epoch.
+    pub fn reload_policies(&self) -> Result<u64> {
+        publish_reload(&self.config, &self.metrics, &self.swap, &self.dispatcher)
+    }
+
+    /// Graceful shutdown: stop the reload watcher, close the queues, wake
+    /// the pool, join every worker. Already-queued requests are flushed
+    /// and answered; clients holding a [`Client`] afterwards get an error
+    /// on `infer`.
     pub fn shutdown(mut self) -> Result<()> {
+        self.watcher_stop.store(true, Ordering::Relaxed);
+        if let Some(w) = self.watcher.take() {
+            let _ = w.join();
+        }
         self.dispatcher.state.lock().unwrap().closed = true;
         self.dispatcher.cv.notify_all();
         let mut first_err = None;
@@ -462,6 +821,29 @@ impl Server {
             None => Ok(()),
         }
     }
+}
+
+/// Resolve + publish a fresh [`PolicySet`] and bump the swap epoch
+/// (shared by [`Server::reload_policies`] and the generation watcher).
+fn publish_reload(
+    config: &ServerConfig,
+    metrics: &Metrics,
+    swap: &PolicySwap,
+    dispatcher: &Dispatcher,
+) -> Result<u64> {
+    let seeds = resolve_policies(config, metrics)?;
+    let scheds = resolve_schedulers(config)?;
+    *swap.set.lock().unwrap() = Arc::new(PolicySet { seeds, scheds });
+    let epoch = swap.epoch.fetch_add(1, Ordering::AcqRel) + 1;
+    let generation = config
+        .store_dir
+        .as_deref()
+        .and_then(PolicyStore::read_generation)
+        .unwrap_or(0);
+    metrics.record_reload(generation);
+    // wake idle workers so the swap applies promptly even with no traffic
+    dispatcher.cv.notify_all();
+    Ok(epoch)
 }
 
 /// Resolve the batching policy for every configured workload (once, at
@@ -526,14 +908,15 @@ fn resolve_policies(
     Ok(seeds)
 }
 
-/// Effective SLO for the dispatch controllers.
-fn effective_slo(config: &ServerConfig) -> SloConfig {
-    SloConfig::with_target(
+/// Effective SLO for one class's dispatch controllers: the class target
+/// if set, else the server-wide `--slo-p99-ms`, else [`DEFAULT_SLO_S`].
+fn class_slo(config: &ServerConfig, class: &SloClassConfig) -> SloConfig {
+    SloConfig::with_target(class.slo_p99_s.unwrap_or_else(|| {
         config
             .slo_p99
             .map(|d| d.as_secs_f64())
-            .unwrap_or(DEFAULT_SLO_S),
-    )
+            .unwrap_or(DEFAULT_SLO_S)
+    }))
 }
 
 /// Crude static service prior for a workload (used only to calibrate the
@@ -545,51 +928,61 @@ fn service_prior_for(workload: &Workload, seed: u64) -> f64 {
     (g.len() * workload.params.hidden * 2) as f64 * SERVICE_PRIOR_S_PER_ELEM
 }
 
-/// Resolve the learned scheduler policy for every workload (Learned
-/// dispatch only): an explicitly provided policy wins, then a store hit
-/// by op-type-space fingerprint, then boot-time training on the queue
-/// simulator (persisted under the `scheduler` artifact kind when a store
+/// Resolve the learned scheduler policy for every (SLO class, workload)
+/// pair (Learned dispatch only): an explicitly provided policy wins, then
+/// a store hit by op-type-space fingerprint + class name, then boot-time
+/// training on the queue simulator **under the class's own SLO target**
+/// (persisted per class under the `scheduler` artifact kind when a store
 /// is configured).
 fn resolve_schedulers(
     config: &ServerConfig,
-) -> Result<FxHashMap<WorkloadKind, SchedulerPolicy>> {
+) -> Result<FxHashMap<(u16, WorkloadKind), SchedulerPolicy>> {
     let mut out = FxHashMap::default();
     if config.dispatch != DispatchMode::Learned {
         return Ok(out);
     }
-    let slo = effective_slo(config);
     let mut store = match &config.store_dir {
         Some(dir) => Some(PolicyStore::open(dir)?),
         None => None,
     };
-    for &kind in &config.workloads {
-        if let Some(p) = &config.scheduler {
-            out.insert(kind, p.clone());
-            continue;
-        }
-        let workload = Workload::new(kind, config.hidden);
-        if let Some(store) = &store {
-            if let Some(a) = store.lookup_scheduler_workload(&workload) {
-                out.insert(kind, a.policy.clone());
+    for (ci, class) in config.classes.iter().enumerate() {
+        let ci = ci as u16;
+        let slo = class_slo(config, class);
+        for &kind in &config.workloads {
+            if let Some(p) = &config.scheduler {
+                out.insert((ci, kind), p.clone());
                 continue;
             }
+            let workload = Workload::new(kind, config.hidden);
+            if let Some(store) = &store {
+                if let Some(a) = store.lookup_scheduler_workload_class(&workload, &class.name) {
+                    out.insert((ci, kind), a.policy.clone());
+                    continue;
+                }
+            }
+            let sim = SimConfig {
+                slo,
+                per_inst_s: service_prior_for(&workload, config.seed),
+                max_batch: config.max_batch,
+                ..SimConfig::quick()
+            };
+            let policy = match &mut store {
+                Some(store) => {
+                    store
+                        .train_scheduler_class_into(&workload, &class.name, &sim, config.seed)?
+                        .0
+                        .policy
+                }
+                None => crate::rl::dispatch_sim::train_scheduler(&sim, config.seed).0,
+            };
+            out.insert((ci, kind), policy);
         }
-        let sim = SimConfig {
-            slo,
-            per_inst_s: service_prior_for(&workload, config.seed),
-            max_batch: config.max_batch,
-            ..SimConfig::quick()
-        };
-        let policy = match &mut store {
-            Some(store) => store.train_scheduler_into(&workload, &sim, config.seed)?.0.policy,
-            None => crate::rl::dispatch_sim::train_scheduler(&sim, config.seed).0,
-        };
-        out.insert(kind, policy);
     }
     Ok(out)
 }
 
-/// Per-workload execution context owned by one worker.
+/// Per-workload execution context owned by one worker (dispatch
+/// controllers live separately, keyed per (class, workload) queue).
 struct WorkerCtx {
     workload: Workload,
     policy: Box<dyn Policy + Send>,
@@ -598,21 +991,18 @@ struct WorkerCtx {
     cache: InstanceCache,
     /// pooled compose buffers, reused across mini-batches
     composed: ComposedPlan,
-    /// this worker's dispatch controller for this workload's queue
-    /// (arrival estimates are synced from the shared queue state)
-    ctrl: DispatchController,
 }
 
 fn worker_loop(
     config: ServerConfig,
     dispatcher: Arc<Dispatcher>,
     metrics: Arc<Metrics>,
-    seeds: Arc<FxHashMap<WorkloadKind, PolicySeed>>,
-    sched_seeds: Arc<FxHashMap<WorkloadKind, SchedulerPolicy>>,
+    swap: Arc<PolicySwap>,
     ready: SyncSender<Result<()>>,
 ) -> Result<()> {
+    let mut epoch_seen = swap.epoch.load(Ordering::Acquire);
     let boot = (|| -> Result<_> {
-        let slo = effective_slo(&config);
+        let set0 = swap.current();
         let mut ctxs: FxHashMap<WorkloadKind, WorkerCtx> = FxHashMap::default();
         for &kind in &config.workloads {
             let workload = Workload::new(kind, config.hidden);
@@ -621,14 +1011,7 @@ fn worker_loop(
                 &workload.registry,
                 config.hidden,
             );
-            let policy = seeds[&kind].instantiate(workload.registry.num_types());
-            let ctrl = DispatchController::new(
-                config.dispatch,
-                slo,
-                config.max_batch,
-                config.batch_window,
-                sched_seeds.get(&kind).cloned(),
-            );
+            let policy = set0.seeds[&kind].instantiate(workload.registry.num_types());
             ctxs.insert(
                 kind,
                 WorkerCtx {
@@ -637,9 +1020,26 @@ fn worker_loop(
                     charges,
                     cache: InstanceCache::new(),
                     composed: ComposedPlan::new(),
-                    ctrl,
                 },
             );
+        }
+        // one controller per (class, workload) queue, each under its
+        // class's own SLO target and scheduler policy
+        let mut ctrls: FxHashMap<QueueKey, DispatchController> = FxHashMap::default();
+        for (ci, class) in config.classes.iter().enumerate() {
+            let ci = ci as u16;
+            for &kind in &config.workloads {
+                ctrls.insert(
+                    QueueKey { class: ci, kind },
+                    DispatchController::new(
+                        config.dispatch,
+                        class_slo(&config, class),
+                        config.max_batch,
+                        config.batch_window,
+                        set0.scheds.get(&(ci, kind)).cloned(),
+                    ),
+                );
+            }
         }
         let registry = match &config.artifacts_dir {
             Some(dir) => {
@@ -651,9 +1051,9 @@ fn worker_loop(
             }
             None => None,
         };
-        Ok((ctxs, registry))
+        Ok((ctxs, ctrls, registry))
     })();
-    let (mut ctxs, registry) = match boot {
+    let (mut ctxs, mut ctrls, registry) = match boot {
         Ok(v) => v,
         Err(e) => {
             let msg = format!("{e:#}");
@@ -707,27 +1107,50 @@ fn worker_loop(
     // continuous dispatch: grab the next ready batch the moment we go idle
     let mut current_kind: Option<WorkloadKind> = None;
     loop {
+        // hot-reload: apply a published policy swap between mini-batches —
+        // one atomic load per batch on the hot path; on a swap, fresh
+        // policies + cleared plan caches (artifacts embed schedules from
+        // the old policy), controllers keep their measured estimators
+        let epoch_now = swap.epoch.load(Ordering::Acquire);
+        if epoch_now != epoch_seen {
+            let set = swap.current();
+            for (&kind, ctx) in ctxs.iter_mut() {
+                if let Some(seed) = set.seeds.get(&kind) {
+                    ctx.policy = seed.instantiate(ctx.workload.registry.num_types());
+                    ctx.cache = InstanceCache::new();
+                    ctx.composed = ComposedPlan::new();
+                }
+            }
+            for (key, ctrl) in ctrls.iter_mut() {
+                if config.dispatch == DispatchMode::Learned {
+                    ctrl.set_learned(set.scheds.get(&(key.class, key.kind)).cloned());
+                }
+            }
+            epoch_seen = epoch_now;
+        }
         pending.clear();
-        let Some(kind) = next_batch(&dispatcher, &mut ctxs, config.max_batch, &mut pending)
+        let Some(key) = next_batch(&dispatcher, &mut ctrls, config.max_batch, &mut pending)
         else {
             break;
         };
-        let ctx = ctxs.get_mut(&kind).expect("queue implies context");
+        let ctx = ctxs.get_mut(&key.kind).expect("queue implies context");
+        let ctrl = ctrls.get_mut(&key).expect("queue implies controller");
         // apply this workload's in-cell memory/launch profile (same
         // accounting the Fig.6/Fig.8 harnesses use); skip the map clones
         // when consecutive batches are the same kind (the common case)
-        if current_kind != Some(kind) {
+        if current_kind != Some(key.kind) {
             engine.in_cell_copy_elems = ctx.charges.copy_elems.clone();
             engine.extra_launches = ctx.charges.extra_launches.clone();
-            current_kind = Some(kind);
+            current_kind = Some(key.kind);
         }
         let batch_len = pending.len();
         let t_service = Instant::now();
         let result = if compose {
-            process_composed(ctx, &mut engine, &metrics, &mut pending, &mut store)
+            process_composed(ctx, ctrl, &mut engine, &metrics, &mut pending, &mut store)
         } else {
             process_merged(
                 ctx,
+                ctrl,
                 &mut engine,
                 &metrics,
                 &mut pending,
@@ -735,24 +1158,32 @@ fn worker_loop(
                 &mut has_consumer,
             )
         };
-        if result.is_ok() {
-            // service-time feedback closes the controller's loop
-            ctx.ctrl
-                .observe_batch(batch_len, t_service.elapsed().as_secs_f64());
-        }
-        if let Err(e) = result {
-            // fail-stop: close the server so blocked and future clients get
-            // an error instead of hanging on a dead queue (the failing
-            // batch's requests were dropped above, unblocking their
-            // clients; clearing the queues unblocks the rest)
-            let mut st = dispatcher.state.lock().unwrap();
-            st.closed = true;
-            for wq in st.queues.values_mut() {
-                wq.q.clear();
+        match result {
+            Ok(cost_per_inst) => {
+                // service-time feedback closes the controller's loop
+                ctrl.observe_batch(batch_len, t_service.elapsed().as_secs_f64());
+                // feed the measured plan cost back to admission control
+                if cost_per_inst > 0.0 {
+                    let mut st = dispatcher.state.lock().unwrap();
+                    if let Some(wq) = st.queues.get_mut(&key) {
+                        wq.observe_cost(cost_per_inst);
+                    }
+                }
             }
-            drop(st);
-            dispatcher.cv.notify_all();
-            return Err(e);
+            Err(e) => {
+                // fail-stop: close the server so blocked and future clients
+                // get an error instead of hanging on a dead queue (the
+                // failing batch's requests were dropped above, unblocking
+                // their clients; clearing the queues unblocks the rest)
+                let mut st = dispatcher.state.lock().unwrap();
+                st.closed = true;
+                for wq in st.queues.values_mut() {
+                    wq.q.clear();
+                }
+                drop(st);
+                dispatcher.cv.notify_all();
+                return Err(e);
+            }
         }
     }
     Ok(())
@@ -766,38 +1197,44 @@ fn worker_loop(
 /// queue is ready when it holds the controller's current `target_batch`
 /// or its oldest request has waited the controller's current `max_wait`
 /// (any nonempty queue when flushing at shutdown). Among ready queues the
-/// oldest head wins (FIFO fairness across workloads); the drain is capped
-/// at the decided target so an adaptive controller can serve *smaller*
+/// one with the least weighted-fair virtual time wins (start-time fair
+/// queueing over instances ÷ class weight), ties broken by the oldest
+/// head — with a single class every vtime ties, so the pick degenerates
+/// to the legacy oldest-head FIFO rule exactly. The drain is capped at
+/// the decided target so an adaptive controller can serve *smaller*
 /// batches than the queue holds when the SLO calls for it. With
 /// [`DispatchMode::Fixed`] controllers this reproduces the legacy
 /// full-or-timed-out rule exactly.
 fn next_batch(
     dispatcher: &Dispatcher,
-    ctxs: &mut FxHashMap<WorkloadKind, WorkerCtx>,
+    ctrls: &mut FxHashMap<QueueKey, DispatchController>,
     max_batch: usize,
     out: &mut Vec<Request>,
-) -> Option<WorkloadKind> {
+) -> Option<QueueKey> {
     let mut st = dispatcher.state.lock().unwrap();
     loop {
         let now = Instant::now();
         let flush = st.closed;
-        let mut pick: Option<(WorkloadKind, Instant, usize)> = None;
+        // (key, vtime, oldest head, target)
+        let mut pick: Option<(QueueKey, f64, Instant, usize)> = None;
         let mut earliest: Option<Instant> = None;
-        for (&kind, wq) in &st.queues {
+        for (&key, wq) in &st.queues {
             let Some(front) = wq.q.front() else { continue };
-            let ctx = ctxs.get_mut(&kind).expect("queue implies context");
+            let ctrl = ctrls.get_mut(&key).expect("queue implies controller");
             // sync the queue-level arrival estimate before deciding
-            ctx.ctrl.set_arrival_ewma(wq.ia_ewma_s);
-            let d = ctx.ctrl.decide(wq.q.len());
+            ctrl.set_arrival_ewma(wq.ia_ewma_s);
+            let d = ctrl.decide(wq.q.len());
             let deadline = front.submitted + d.max_wait;
             let ready = flush || wq.q.len() >= d.target_batch || now >= deadline;
             if ready {
-                let older = match pick {
+                let better = match &pick {
                     None => true,
-                    Some((_, oldest, _)) => front.submitted < oldest,
+                    Some((_, vt, oldest, _)) => {
+                        wq.vtime < *vt || (wq.vtime == *vt && front.submitted < *oldest)
+                    }
                 };
-                if older {
-                    pick = Some((kind, front.submitted, d.target_batch));
+                if better {
+                    pick = Some((key, wq.vtime, front.submitted, d.target_batch));
                 }
             } else {
                 earliest = Some(match earliest {
@@ -806,12 +1243,20 @@ fn next_batch(
                 });
             }
         }
-        if let Some((kind, _, target)) = pick {
-            let wq = st.queues.get_mut(&kind).unwrap();
+        if let Some((key, _, _, target)) = pick {
+            let weight = st.classes[key.class as usize].cfg.weight.max(1) as f64;
+            let vclock = st.vclock;
+            let wq = st.queues.get_mut(&key).unwrap();
             let cap = if flush { max_batch } else { target.clamp(1, max_batch) };
             let take = wq.q.len().min(cap);
             out.extend(wq.q.drain(..take));
-            return Some(kind);
+            // weighted-fair accounting: charge the queue `take ÷ weight`
+            // virtual time; queues lagging the clock restart from it so an
+            // idle class cannot bank unbounded credit and starve the rest
+            let base = wq.vtime.max(vclock);
+            wq.vtime = base + take as f64 / weight;
+            st.vclock = base;
+            return Some(key);
         }
         if st.closed {
             return None; // closed and fully drained
@@ -833,13 +1278,15 @@ fn next_batch(
 /// offset translation, execute without a merged graph, and answer from
 /// the precomputed per-topology sink sets. After warmup this performs
 /// zero policy runs, zero PQ planning, and zero engine-loop allocations.
+/// Returns the mean per-instance plan cost (elems) for admission control.
 fn process_composed(
     ctx: &mut WorkerCtx,
+    ctrl: &mut DispatchController,
     engine: &mut CellEngine,
     metrics: &Metrics,
     pending: &mut Vec<Request>,
     store: &mut ArenaStateStore,
-) -> Result<()> {
+) -> Result<f64> {
     let t0 = Instant::now();
     let hits0 = ctx.cache.hits;
     let misses0 = ctx.cache.misses;
@@ -858,15 +1305,19 @@ fn process_composed(
         ctx.composed.push_instance(art);
     }
     ctx.composed.compose();
+    let cost: usize = (0..ctx.composed.num_instances())
+        .map(|i| ctx.composed.instance(i).cost_elems())
+        .sum();
+    let cost_per_inst = if ctx.composed.num_instances() > 0 {
+        cost as f64 / ctx.composed.num_instances() as f64
+    } else {
+        0.0
+    };
     if ctx.cache.misses != misses0 && !pending.is_empty() {
         // first sight of a topology: seed the dispatch controller's
         // service estimate from the static plan cost (replaced by the
         // real measurement as soon as this batch completes)
-        let cost: usize = (0..ctx.composed.num_instances())
-            .map(|i| ctx.composed.instance(i).cost_elems())
-            .sum();
-        let per_inst = cost as f64 / ctx.composed.num_instances() as f64;
-        ctx.ctrl.prime_service(per_inst * SERVICE_PRIOR_S_PER_ELEM);
+        ctrl.prime_service(cost_per_inst * SERVICE_PRIOR_S_PER_ELEM);
     }
     let assemble_s = t0.elapsed().as_secs_f64();
     let plan_s = ctx.cache.plan_build_s - plan_s0;
@@ -906,28 +1357,30 @@ fn process_composed(
             data.extend_from_slice(store.slice(base + off, len));
         }
         let latency = req.submitted.elapsed();
-        metrics.record_request(req.kind.name(), latency);
-        ctx.ctrl.observe_latency(latency.as_secs_f64());
+        metrics.record_request(req.kind.name(), req.class as usize, latency);
+        ctrl.observe_latency(latency.as_secs_f64());
         let _ = req.respond.send(Response {
             data,
             spans,
             latency,
         });
     }
-    Ok(())
+    Ok(cost_per_inst)
 }
 
 /// Baseline path (Vanilla/Cavs modes): merge the request graphs, run the
 /// mode's policy over the merged mini-batch, execute, and respond. State
 /// (arena store, `has_consumer` scan buffer) is pooled per worker.
+/// Returns the mean per-instance cost estimate (elems) for admission.
 fn process_merged(
     ctx: &mut WorkerCtx,
+    ctrl: &mut DispatchController,
     engine: &mut CellEngine,
     metrics: &Metrics,
     pending: &mut Vec<Request>,
     store: &mut ArenaStateStore,
     has_consumer: &mut Vec<bool>,
-) -> Result<()> {
+) -> Result<f64> {
     // -- construction: merge instance graphs -----------------------------
     let t0 = Instant::now();
     let mut merged = Graph::new();
@@ -970,6 +1423,8 @@ fn process_merged(
         }
     }
     let count = pending.len();
+    // static cost estimate for admission (no plan artifacts on this path)
+    let cost_per_inst = (merged.len() * engine.hidden * 2) as f64 / count.max(1) as f64;
     for (i, req) in pending.drain(..).enumerate() {
         let start = offsets[i] as usize;
         let end = if i + 1 < count {
@@ -989,15 +1444,15 @@ fn process_merged(
             data.extend_from_slice(s);
         }
         let latency = req.submitted.elapsed();
-        metrics.record_request(req.kind.name(), latency);
-        ctx.ctrl.observe_latency(latency.as_secs_f64());
+        metrics.record_request(req.kind.name(), req.class as usize, latency);
+        ctrl.observe_latency(latency.as_secs_f64());
         let _ = req.respond.send(Response {
             data,
             spans,
             latency,
         });
     }
-    Ok(())
+    Ok(cost_per_inst)
 }
 
 #[cfg(test)]
@@ -1321,6 +1776,130 @@ mod tests {
         let mut rng = Rng::new(5);
         let resp = client.infer(w.gen_instance(&mut rng)).unwrap();
         assert!(resp.num_sinks() > 0);
+        server.shutdown().unwrap();
+    }
+
+    fn two_class_config(mode: SystemMode) -> ServerConfig {
+        let mut cfg = quick_config(mode);
+        cfg.classes = SloClassConfig::parse_spec("gold:slo=25:weight=4,bulk:slo=100").unwrap();
+        cfg
+    }
+
+    #[test]
+    fn classes_get_independent_queues_and_metrics() {
+        let server = Server::start(two_class_config(SystemMode::EdBatch)).unwrap();
+        assert_eq!(server.num_classes(), 2);
+        assert_eq!(server.class_names(), vec!["gold", "bulk"]);
+        let w = Workload::new(WorkloadKind::TreeLstm, 32);
+        let mut rng = Rng::new(31);
+        let gold = server.client_for_class(0, WorkloadKind::TreeLstm);
+        let bulk = server.client_for_class(1, WorkloadKind::TreeLstm);
+        for _ in 0..3 {
+            assert!(gold.infer(w.gen_instance(&mut rng)).unwrap().num_sinks() > 0);
+            assert!(bulk.infer(w.gen_instance(&mut rng)).unwrap().num_sinks() > 0);
+        }
+        let snap = server.metrics.snapshot();
+        assert_eq!(snap.requests, 6);
+        assert_eq!(snap.per_class.len(), 2);
+        assert_eq!(snap.per_class[0].class, "gold");
+        assert_eq!(snap.per_class[1].class, "bulk");
+        assert_eq!(snap.per_class[0].requests, 3);
+        assert_eq!(snap.per_class[1].requests, 3);
+        assert_eq!(snap.per_class[0].admitted, 3);
+        assert_eq!(snap.per_class[0].rejected_budget, 0);
+        assert!((snap.per_class[0].slo_target_s - 0.025).abs() < 1e-12);
+        assert!((snap.per_class[1].slo_target_s - 0.100).abs() < 1e-12);
+        server.shutdown().unwrap();
+    }
+
+    #[test]
+    fn queue_budget_rejects_with_typed_nack() {
+        let mut cfg = quick_config(SystemMode::EdBatch);
+        // a 1-elem budget cannot admit any real graph: even the first
+        // request's static prior (nodes × hidden × 2) exceeds it
+        cfg.classes = SloClassConfig::parse_spec("default,tiny:budget=1").unwrap();
+        let server = Server::start(cfg).unwrap();
+        let w = Workload::new(WorkloadKind::TreeLstm, 32);
+        let mut rng = Rng::new(32);
+        let tiny = server.client_for_class(1, WorkloadKind::TreeLstm);
+        match tiny.try_submit(w.gen_instance(&mut rng)) {
+            Err(SubmitError::Rejected { reason, .. }) => {
+                assert_eq!(reason, NackReason::QueueBudget)
+            }
+            other => panic!("expected budget rejection, got {other:?}"),
+        }
+        // the default class is untouched by the tiny class's budget
+        let ok = server.client(WorkloadKind::TreeLstm);
+        assert!(ok.infer(w.gen_instance(&mut rng)).unwrap().num_sinks() > 0);
+        let snap = server.metrics.snapshot();
+        assert_eq!(snap.per_class[1].rejected_budget, 1);
+        assert_eq!(snap.per_class[1].admitted, 0);
+        assert_eq!(snap.per_class[0].admitted, 1);
+        server.shutdown().unwrap();
+    }
+
+    #[test]
+    fn token_bucket_rejects_burst_overflow() {
+        let mut cfg = quick_config(SystemMode::EdBatch);
+        // burst of 1 token refilled at ~0/s: first request admitted,
+        // second (immediately after) rejected by the bucket
+        cfg.classes = SloClassConfig::parse_spec("limited:rate=0.000001:burst=1").unwrap();
+        let server = Server::start(cfg).unwrap();
+        let w = Workload::new(WorkloadKind::TreeLstm, 32);
+        let mut rng = Rng::new(33);
+        let client = server.client_for_class(0, WorkloadKind::TreeLstm);
+        let first = client.try_submit(w.gen_instance(&mut rng));
+        assert!(first.is_ok());
+        match client.try_submit(w.gen_instance(&mut rng)) {
+            Err(SubmitError::Rejected { reason, .. }) => {
+                assert_eq!(reason, NackReason::TokenBucket)
+            }
+            other => panic!("expected bucket rejection, got {:?}", other.map(|_| ())),
+        }
+        assert!(first.unwrap().recv().is_ok());
+        let snap = server.metrics.snapshot();
+        assert_eq!(snap.per_class[0].admitted, 1);
+        assert_eq!(snap.per_class[0].rejected_bucket, 1);
+        server.shutdown().unwrap();
+    }
+
+    #[test]
+    fn unknown_tenant_class_is_rejected_typed() {
+        let server = Server::start(quick_config(SystemMode::EdBatch)).unwrap();
+        let w = Workload::new(WorkloadKind::TreeLstm, 32);
+        let mut rng = Rng::new(34);
+        let client = server.client_for_class(7, WorkloadKind::TreeLstm);
+        match client.try_submit(w.gen_instance(&mut rng)) {
+            Err(SubmitError::Rejected { reason, .. }) => {
+                assert_eq!(reason, NackReason::BadTenant)
+            }
+            other => panic!("expected tenant rejection, got {:?}", other.map(|_| ())),
+        }
+        server.shutdown().unwrap();
+    }
+
+    #[test]
+    fn reload_policies_swaps_without_dropping_requests() {
+        let server = Server::start(quick_config(SystemMode::EdBatch)).unwrap();
+        let client = server.client(WorkloadKind::TreeLstm);
+        let w = Workload::new(WorkloadKind::TreeLstm, 32);
+        let mut rng = Rng::new(35);
+        let g = w.gen_instance(&mut rng);
+        // traffic before, across, and after the swap; every request must
+        // be answered (zero-downtime contract)
+        for _ in 0..2 {
+            assert!(client.infer(g.clone()).unwrap().num_sinks() > 0);
+        }
+        let inflight = client.submit(g.clone()).unwrap();
+        let epoch = server.reload_policies().unwrap();
+        assert_eq!(epoch, 1);
+        assert!(inflight.recv().unwrap().num_sinks() > 0);
+        for _ in 0..2 {
+            assert!(client.infer(g.clone()).unwrap().num_sinks() > 0);
+        }
+        let snap = server.metrics.snapshot();
+        assert_eq!(snap.requests, 5);
+        assert_eq!(snap.reload_swaps, 1);
         server.shutdown().unwrap();
     }
 }

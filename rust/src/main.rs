@@ -1,11 +1,13 @@
 //! `ed-batch` — CLI for the ED-Batch reproduction.
 //!
 //! ```text
-//! ed-batch bench <fig6|fig8|fig9|table2|table3|table4|table5|serving|serving-slo|all> [--fast]
+//! ed-batch bench <fig6|fig8|fig9|table2|table3|table4|table5|serving|serving-slo|kernels|all> [--fast]
 //!          train  --workload treelstm[,bilstm-tagger|all] [--store DIR]
 //!          serve  --workloads treelstm,bilstm-tagger [--workers 4] [--store DIR]
 //!                 [--dispatch fixed|adaptive|learned] [--slo-p99-ms F]
 //!                 [--traffic closed|poisson|bursty --rate R --duration-s S]
+//!                 [--listen 127.0.0.1:7401] [--tenants gold:slo=10:weight=4,bulk:slo=50]
+//!                 [--hot-reload-ms 250]
 //!          inspect --workload treelstm           # graph stats + schedules
 //! ```
 
@@ -17,7 +19,8 @@ use ed_batch::batching::fsm::{Encoding, FsmPolicy};
 use ed_batch::batching::oracle::SufficientConditionPolicy;
 use ed_batch::batching::run_policy;
 use ed_batch::benchsuite::{self, BenchOpts};
-use ed_batch::coordinator::dispatch::DispatchMode;
+use ed_batch::coordinator::dispatch::{DispatchMode, SloClassConfig};
+use ed_batch::coordinator::net::{NetServer, TcpClient};
 use ed_batch::coordinator::server::{Server, ServerConfig};
 use ed_batch::coordinator::traffic::{drive_open_loop, TrafficProfile};
 use ed_batch::coordinator::SystemMode;
@@ -51,7 +54,7 @@ fn run(args: &Args) -> Result<()> {
             println!(
                 "ed-batch — FSM-batched dynamic-DNN serving (ICML'23 reproduction)\n\n\
                  usage:\n  \
-                 ed-batch bench <fig6|fig8|fig9|table2|table3|table4|table5|serving|serving-slo|all> [--fast] [--hidden N]\n             \
+                 ed-batch bench <fig6|fig8|fig9|table2|table3|table4|table5|serving|serving-slo|kernels|all> [--fast] [--hidden N]\n             \
                  [--strict-bitwise] [--no-trajectory  (skip appending a row to BENCH_trajectory.json)]\n  \
                  ed-batch bench check --baseline ci/bench_baseline.json [--current BENCH_serving.json]\n             \
                  [--tolerance 0.25] [--update] [--trajectory BENCH_trajectory.json  (ratchet\n             \
@@ -70,7 +73,13 @@ fn run(args: &Args) -> Result<()> {
                  [--distinct N  (replay a pool of N instance topologies per workload)]\n             \
                  [--require-compose  (fail unless steady state composed every mini-batch)]\n             \
                  [--strict-bitwise  (pin the scalar kernel oracle: responses bit-identical to\n              \
-                 pre-SIMD builds; SIMD micro-kernels disabled regardless of host CPU)]\n  \
+                 pre-SIMD builds; SIMD micro-kernels disabled regardless of host CPU)]\n             \
+                 [--listen ADDR  (TCP wire-protocol front-end, e.g. 127.0.0.1:7401 or :0 for an\n              \
+                 ephemeral port; runs a bitwise TCP-vs-in-process parity gate before exit)]\n             \
+                 [--tenants SPEC  (SLO classes, e.g. gold:slo=10:weight=4:budget=2e5:rate=500:burst=64,bulk:slo=50;\n              \
+                 tenant ids on the wire map to classes in spec order)]\n             \
+                 [--hot-reload-ms N  (poll the policy store generation and hot-swap policies\n              \
+                 without draining workers or dropping in-flight requests)]\n  \
                  ed-batch inspect --workload <name> [--instances N]\n\n\
                  workloads: bilstm-tagger bilstm-tagger-withchar lstm-nmt treelstm treegru\n            \
                  mv-rnn treelstm-2type lattice-lstm lattice-gru"
@@ -122,12 +131,16 @@ fn bench(args: &Args) -> Result<()> {
                 benchsuite::serving::run_slo(&opts);
                 Ok(())
             }
+            "kernels" => {
+                benchsuite::kernels::run(&opts);
+                Ok(())
+            }
             other => Err(anyhow!("unknown bench target '{other}'")),
         }
     };
     if which == "all" {
         for name in [
-            "fig9", "table2", "table3", "table4", "fig8", "fig6", "table5", "serving",
+            "kernels", "fig9", "table2", "table3", "table4", "fig8", "fig6", "table5", "serving",
         ] {
             run_one(name)?;
         }
@@ -268,6 +281,15 @@ fn serve(args: &Args) -> Result<()> {
         slo_p99,
         scheduler: None, // Learned resolves from the store (or trains at boot)
         strict_bitwise: args.flag("strict-bitwise"),
+        // --tenants gold:slo=10:weight=4:budget=2e5:rate=500:burst=64,bulk:slo=50
+        classes: match args.get("tenants") {
+            Some(spec) => SloClassConfig::parse_spec(spec).map_err(|e| anyhow!(e))?,
+            None => Vec::new(), // implicit single "default" class
+        },
+        hot_reload_poll: match args.u64("hot-reload-ms", 0) {
+            0 => None,
+            ms => Some(std::time::Duration::from_millis(ms)),
+        },
     };
     let strict_bitwise = config.strict_bitwise;
     println!(
@@ -280,6 +302,26 @@ fn serve(args: &Args) -> Result<()> {
         config.store_dir.as_deref().unwrap_or("-"),
     );
     let server = Server::start(config)?;
+
+    // --listen ADDR: expose the wire protocol on TCP. The in-process
+    // load below still runs; before shutdown a parity pass replays a
+    // fresh pool through BOTH paths and requires bit-identical responses
+    // (net_parity_ok), so the smoke proves the network path end to end.
+    let net = match args.get("listen") {
+        Some(addr) => {
+            let n = NetServer::start(&server, addr)?;
+            println!("listening on {} (wire protocol v1)", n.local_addr());
+            Some(n)
+        }
+        None => None,
+    };
+    let nclasses = server.num_classes();
+    if nclasses > 1 {
+        println!(
+            "tenant classes: {} (closed-loop clients round-robin across them)",
+            server.class_names().join(","),
+        );
+    }
 
     // load generation. Two regimes:
     //  * closed loop (default): N client threads per workload, each waits
@@ -308,7 +350,8 @@ fn serve(args: &Args) -> Result<()> {
                 Workload::new(kind, hidden).gen_pool(distinct, args.u64("seed", 7) + i as u64),
             );
             for c in 0..clients_per_kind {
-                let client = server.client(kind);
+                // multi-tenant runs spread clients across the SLO classes
+                let client = server.client_for_class((c % nclasses) as u16, kind);
                 let pool = pool.clone();
                 let seed = args.u64("seed", 7) + (i * clients_per_kind + c) as u64;
                 handles.push(std::thread::spawn(move || {
@@ -379,6 +422,27 @@ fn serve(args: &Args) -> Result<()> {
             row.requests,
             row.p50_s * 1e3,
             row.p99_s * 1e3,
+        );
+    }
+    if snap.per_class.len() > 1 || snap.per_class.iter().any(|c| c.rejected_budget + c.rejected_bucket > 0) {
+        for row in &snap.per_class {
+            println!(
+                "  class {:<12} slo {:>6.1}ms | {:>6} admitted ({} budget-rejected, {} rate-rejected) | p50 {:.2}ms p99 {:.2}ms | {} violations",
+                row.class,
+                row.slo_target_s * 1e3,
+                row.admitted,
+                row.rejected_budget,
+                row.rejected_bucket,
+                row.p50_s * 1e3,
+                row.p99_s * 1e3,
+                row.slo_violations,
+            );
+        }
+    }
+    if snap.reload_swaps > 0 {
+        println!(
+            "hot-reload: {} policy swap(s), store generation {}",
+            snap.reload_swaps, snap.reload_generation,
         );
     }
     println!(
@@ -465,12 +529,38 @@ fn serve(args: &Args) -> Result<()> {
         snap.par_wall_s * 1e3,
         snap.pool_occupancy() * 100.0,
     );
+    // network-path self-check: replay a fresh pool through TCP and the
+    // in-process client and require bit-identical responses, then report
+    // the front-end counters. Runs after the main snapshot so the legacy
+    // numbers above are unperturbed.
+    let ncheck = match &net {
+        Some(n) => {
+            let ok = net_parity_check(&server, n, &kinds, hidden, args.u64("seed", 7))?;
+            let ns = server.metrics.snapshot();
+            println!(
+                "net: addr={} conns={} frames_in={} frames_out={} nacks={} | net_parity_ok={ok}",
+                n.local_addr(),
+                ns.net_conns,
+                ns.net_frames_in,
+                ns.net_frames_out,
+                ns.net_nacks,
+            );
+            Some(ok)
+        }
+        None => None,
+    };
+    if let Some(n) = net {
+        n.shutdown()?;
+    }
     server.shutdown()?;
     if !kcheck {
         bail!("SIMD kernels violated the ULP parity contract vs the scalar oracle — refusing to pass the smoke");
     }
     if !pcheck {
         bail!("parallel execution diverged from serial (bitwise) — refusing to pass the smoke");
+    }
+    if ncheck == Some(false) {
+        bail!("TCP responses diverged from in-process responses (bitwise) — refusing to pass the smoke");
     }
     // CI smoke gate: with a pre-trained store, serving must never miss
     if args.flag("require-store-hits") && snap.store_misses > 0 {
@@ -500,6 +590,40 @@ fn serve(args: &Args) -> Result<()> {
         }
     }
     Ok(())
+}
+
+/// Replay a fresh instance pool through the TCP front-end and the
+/// in-process client side by side; responses must be **bit-identical**
+/// (same spans, same f32 bit patterns) — the network path adds a codec,
+/// not a numerics path.
+fn net_parity_check(
+    server: &Server,
+    net: &NetServer,
+    kinds: &[WorkloadKind],
+    hidden: usize,
+    seed: u64,
+) -> Result<bool> {
+    let addr = net.local_addr();
+    for (i, &kind) in kinds.iter().enumerate() {
+        let w = Workload::new(kind, hidden);
+        let mut rng = Rng::new(seed ^ (0x0E7 + i as u64));
+        let mut tcp = TcpClient::connect(&addr, 0)?;
+        let local = server.client(kind);
+        for _ in 0..4 {
+            let g = w.gen_instance(&mut rng);
+            let via_net = tcp.infer(kind, g.clone())?;
+            let in_proc = local.infer(g)?;
+            let (ns, nd) = via_net.wire_parts();
+            let (ls, ld) = in_proc.wire_parts();
+            if ns != ls
+                || nd.len() != ld.len()
+                || nd.iter().zip(ld).any(|(a, b)| a.to_bits() != b.to_bits())
+            {
+                return Ok(false);
+            }
+        }
+    }
+    Ok(true)
 }
 
 fn inspect(args: &Args) -> Result<()> {

@@ -26,7 +26,7 @@
 //!
 //! ```text
 //! store/
-//!   index.json                         # {"version":1, "scheduler_version":1}
+//!   index.json                         # {"version":1, "scheduler_version":1, "generation":N}
 //!   policy_<workload>_<encoding>.json  # graph-time batching FSMs
 //!   scheduler_<workload>.json          # serving-time dispatch policies
 //! ```
@@ -268,6 +268,10 @@ impl SchedTrainMeta {
 pub struct SchedulerArtifact {
     pub workload: WorkloadKind,
     pub fingerprint: u64,
+    /// SLO class the policy was trained for (`"default"` for the
+    /// single-tenant class; `--tenants` class names otherwise). Part of
+    /// the lookup key: each class trains against its own latency target.
+    pub class: String,
     /// p99 target (seconds) the policy was trained against
     pub slo_p99_s: f64,
     /// simulator per-instance service time (seconds) at training time
@@ -276,10 +280,26 @@ pub struct SchedulerArtifact {
     pub training: SchedTrainMeta,
 }
 
+/// The SLO class every pre-multi-tenant artifact implicitly belongs to.
+pub const DEFAULT_CLASS: &str = "default";
+
 impl SchedulerArtifact {
-    /// Canonical artifact file name inside a store directory.
+    /// Canonical artifact file name inside a store directory (the
+    /// implicit default class — kept stable so pre-multi-tenant stores
+    /// read and write unchanged).
     pub fn file_name(workload: WorkloadKind) -> String {
-        format!("scheduler_{}.json", workload.name())
+        Self::file_name_class(workload, DEFAULT_CLASS)
+    }
+
+    /// Class-qualified artifact file name. The default class keeps the
+    /// legacy name; others append `__<class>` (class names are restricted
+    /// to `[a-z0-9-]` at parse time, so the file name stays portable).
+    pub fn file_name_class(workload: WorkloadKind, class: &str) -> String {
+        if class == DEFAULT_CLASS {
+            format!("scheduler_{}.json", workload.name())
+        } else {
+            format!("scheduler_{}__{}.json", workload.name(), class)
+        }
     }
 
     pub fn to_json(&self) -> Json {
@@ -290,6 +310,7 @@ impl SchedulerArtifact {
             ("version", Json::from(SCHEDULER_VERSION)),
             ("workload", Json::from(self.workload.name())),
             ("fingerprint", Json::from(format!("{:016x}", self.fingerprint))),
+            ("class", Json::from(self.class.as_str())),
             ("slo_p99_s", Json::from(self.slo_p99_s)),
             ("sim_per_inst_s", Json::from(self.sim_per_inst_s)),
             ("policy", self.policy.to_json()),
@@ -319,6 +340,12 @@ impl SchedulerArtifact {
             .and_then(|v| v.as_str())
             .and_then(|s| u64::from_str_radix(s, 16).ok())
             .ok_or_else(|| anyhow!("bad fingerprint"))?;
+        // pre-multi-tenant artifacts carry no class field: default class
+        let class = j
+            .get("class")
+            .and_then(|v| v.as_str())
+            .unwrap_or(DEFAULT_CLASS)
+            .to_string();
         let slo_p99_s = j
             .get("slo_p99_s")
             .and_then(|v| v.as_f64())
@@ -337,6 +364,7 @@ impl SchedulerArtifact {
         Ok(SchedulerArtifact {
             workload,
             fingerprint,
+            class,
             slo_p99_s,
             sim_per_inst_s,
             policy,
@@ -352,7 +380,12 @@ impl SchedulerArtifact {
 pub struct PolicyStore {
     dir: PathBuf,
     entries: FxHashMap<(u64, Encoding), PolicyArtifact>,
-    sched_entries: FxHashMap<u64, SchedulerArtifact>,
+    sched_entries: FxHashMap<(u64, String), SchedulerArtifact>,
+    /// monotonic store generation: bumped by every insert (any kind) and
+    /// persisted in `index.json`. The serving hot-reload watcher polls
+    /// this single number — a change means "new policies exist, re-resolve
+    /// and swap". Pre-generation stores read as generation 0.
+    generation: u64,
     /// artifact files present on disk but unreadable at open (warned once)
     pub skipped: usize,
 }
@@ -369,6 +402,7 @@ impl PolicyStore {
             dir: dir.clone(),
             entries: FxHashMap::default(),
             sched_entries: FxHashMap::default(),
+            generation: 0,
             skipped: 0,
         };
         let index = dir.join("index.json");
@@ -376,6 +410,7 @@ impl PolicyStore {
             let text = std::fs::read_to_string(&index)?;
             let j = Json::parse(&text).map_err(|e| anyhow!("index.json: {e}"))?;
             let v = j.get("version").and_then(|v| v.as_u64()).unwrap_or(0);
+            store.generation = j.get("generation").and_then(|v| v.as_u64()).unwrap_or(0);
             if v != STORE_VERSION {
                 bail!(
                     "policy store {} has format version {v}; this build reads {STORE_VERSION}",
@@ -423,7 +458,7 @@ impl PolicyStore {
                     .and_then(|j| SchedulerArtifact::from_json(&j));
                 match parsed {
                     Ok(a) => {
-                        store.sched_entries.insert(a.fingerprint, a);
+                        store.sched_entries.insert((a.fingerprint, a.class.clone()), a);
                     }
                     Err(e) => {
                         eprintln!("policystore: skipping {name}: {e}");
@@ -487,19 +522,40 @@ impl PolicyStore {
         self.lookup(registry_fingerprint(&w.registry), encoding)
     }
 
-    /// Write (or upgrade) the index: the whole-store format gate plus the
-    /// scheduler-kind gate.
-    fn ensure_index(&self) -> Result<()> {
+    /// Write (or upgrade) the index: the whole-store format gate, the
+    /// scheduler-kind gate, and the monotonic generation — bumped here so
+    /// *every* insert advances it and hot-reload watchers see one number.
+    fn ensure_index(&mut self) -> Result<()> {
         std::fs::create_dir_all(&self.dir)?;
         let index = self.dir.join("index.json");
+        // another process may have inserted since we opened: never move
+        // the generation backwards, always strictly forwards
+        let on_disk = Self::read_generation(&self.dir).unwrap_or(0);
+        self.generation = self.generation.max(on_disk) + 1;
         let doc = Json::obj(vec![
             ("version", Json::from(STORE_VERSION)),
             ("scheduler_version", Json::from(SCHEDULER_VERSION)),
+            ("generation", Json::from(self.generation)),
         ]);
-        // rewrite unconditionally: idempotent, and upgrades a
+        // rewrite unconditionally: idempotent gates, and upgrades a
         // pre-scheduler index in place (both gates stay satisfied)
         std::fs::write(&index, doc.to_string())?;
         Ok(())
+    }
+
+    /// The store generation as of the last open/insert through this
+    /// handle (0 for a fresh or pre-generation store).
+    pub fn generation(&self) -> u64 {
+        self.generation
+    }
+
+    /// Cheap on-disk generation probe (reads only `index.json`) — what
+    /// the serving hot-reload watcher polls. `None` when the store or its
+    /// index does not exist yet.
+    pub fn read_generation(dir: impl AsRef<Path>) -> Option<u64> {
+        let text = std::fs::read_to_string(dir.as_ref().join("index.json")).ok()?;
+        let j = Json::parse(&text).ok()?;
+        j.get("generation").and_then(|v| v.as_u64()).or(Some(0))
     }
 
     /// Persist an artifact (write the file, ensure the index), replacing
@@ -515,14 +571,34 @@ impl PolicyStore {
         Ok(())
     }
 
-    /// Look a scheduler policy up by op-type-space fingerprint.
+    /// Look the default class's scheduler policy up by op-type-space
+    /// fingerprint.
     pub fn lookup_scheduler(&self, fingerprint: u64) -> Option<&SchedulerArtifact> {
-        self.sched_entries.get(&fingerprint)
+        self.lookup_scheduler_class(fingerprint, DEFAULT_CLASS)
     }
 
-    /// Convenience: the scheduler policy matching a workload's registry.
+    /// Look a scheduler policy up by (fingerprint, SLO class).
+    pub fn lookup_scheduler_class(
+        &self,
+        fingerprint: u64,
+        class: &str,
+    ) -> Option<&SchedulerArtifact> {
+        self.sched_entries.get(&(fingerprint, class.to_string()))
+    }
+
+    /// Convenience: the default-class scheduler policy matching a
+    /// workload's registry.
     pub fn lookup_scheduler_workload(&self, w: &Workload) -> Option<&SchedulerArtifact> {
         self.lookup_scheduler(registry_fingerprint(&w.registry))
+    }
+
+    /// Convenience: the scheduler policy for (workload registry, class).
+    pub fn lookup_scheduler_workload_class(
+        &self,
+        w: &Workload,
+        class: &str,
+    ) -> Option<&SchedulerArtifact> {
+        self.lookup_scheduler_class(registry_fingerprint(&w.registry), class)
     }
 
     pub fn num_schedulers(&self) -> usize {
@@ -534,22 +610,39 @@ impl PolicyStore {
     }
 
     /// Persist a scheduler artifact under its own kind, replacing any
-    /// existing entry for the same fingerprint.
+    /// existing entry for the same (fingerprint, class).
     pub fn insert_scheduler(&mut self, artifact: SchedulerArtifact) -> Result<()> {
         self.ensure_index()?;
-        let path = self.dir.join(SchedulerArtifact::file_name(artifact.workload));
+        let path = self
+            .dir
+            .join(SchedulerArtifact::file_name_class(artifact.workload, &artifact.class));
         std::fs::write(&path, artifact.to_json().to_string())?;
-        self.sched_entries.insert(artifact.fingerprint, artifact);
+        self.sched_entries
+            .insert((artifact.fingerprint, artifact.class.clone()), artifact);
         Ok(())
     }
 
     /// Offline scheduler training entry point: train a dispatch policy
     /// for `workload` on the queue simulator (calibrated to the
     /// workload's plan-cost service scale via `sim_cfg.per_inst_s`) and
-    /// persist it under the `scheduler` kind.
+    /// persist it under the `scheduler` kind, default class.
     pub fn train_scheduler_into(
         &mut self,
         workload: &Workload,
+        sim_cfg: &SimConfig,
+        seed: u64,
+    ) -> Result<(SchedulerArtifact, SchedTrainStats)> {
+        self.train_scheduler_class_into(workload, DEFAULT_CLASS, sim_cfg, seed)
+    }
+
+    /// Per-class scheduler training: same simulator, but the `sim_cfg`
+    /// carries the class's own SLO target, and the artifact persists under
+    /// the (fingerprint, class) key so every SLO class serves with a
+    /// policy trained against *its* latency target.
+    pub fn train_scheduler_class_into(
+        &mut self,
+        workload: &Workload,
+        class: &str,
         sim_cfg: &SimConfig,
         seed: u64,
     ) -> Result<(SchedulerArtifact, SchedTrainStats)> {
@@ -557,6 +650,7 @@ impl PolicyStore {
         let artifact = SchedulerArtifact {
             workload: workload.kind,
             fingerprint: registry_fingerprint(&workload.registry),
+            class: class.to_string(),
             slo_p99_s: sim_cfg.slo.p99_target_s,
             sim_per_inst_s: sim_cfg.per_inst_s,
             policy,
@@ -836,6 +930,72 @@ mod tests {
         let store = PolicyStore::open(&dir).unwrap();
         assert!(store.is_empty());
         assert_eq!(store.skipped, 1);
+        let _ = std::fs::remove_dir_all(&dir);
+    }
+
+    #[test]
+    fn every_insert_bumps_the_generation() {
+        let dir = tmp_dir("generation");
+        let _ = std::fs::remove_dir_all(&dir);
+        let w = Workload::new(WorkloadKind::TreeLstm, 32);
+        let mut store = PolicyStore::open(&dir).unwrap();
+        assert_eq!(store.generation(), 0);
+        assert_eq!(PolicyStore::read_generation(&dir), None); // no index yet
+        store.train_into(&w, Encoding::Sort, &quick_cfg(), 3).unwrap();
+        let g1 = store.generation();
+        assert!(g1 >= 1);
+        assert_eq!(PolicyStore::read_generation(&dir), Some(g1));
+        store
+            .train_scheduler_into(&w, &crate::rl::dispatch_sim::SimConfig::quick(), 3)
+            .unwrap();
+        assert!(store.generation() > g1, "scheduler insert must bump too");
+        // a second handle (another process) keeps advancing, never rewinds
+        let mut other = PolicyStore::open(&dir).unwrap();
+        assert_eq!(other.generation(), store.generation());
+        other.train_into(&w, Encoding::Sort, &quick_cfg(), 4).unwrap();
+        assert!(other.generation() > store.generation());
+        // reopen sees the latest on-disk value
+        assert_eq!(
+            PolicyStore::open(&dir).unwrap().generation(),
+            other.generation()
+        );
+        // a pre-generation index reads as 0, not an error
+        std::fs::write(
+            dir.join("index.json"),
+            r#"{"version":1,"scheduler_version":1}"#,
+        )
+        .unwrap();
+        assert_eq!(PolicyStore::read_generation(&dir), Some(0));
+        let _ = std::fs::remove_dir_all(&dir);
+    }
+
+    #[test]
+    fn per_class_scheduler_artifacts_coexist() {
+        let dir = tmp_dir("sched_classes");
+        let _ = std::fs::remove_dir_all(&dir);
+        let w = Workload::new(WorkloadKind::TreeLstm, 32);
+        let mut store = PolicyStore::open(&dir).unwrap();
+        let sim = crate::rl::dispatch_sim::SimConfig::quick();
+        // default class and a named class, same fingerprint
+        store.train_scheduler_into(&w, &sim, 5).unwrap();
+        let mut gold_sim = sim.clone();
+        gold_sim.slo = crate::coordinator::dispatch::SloConfig::with_target(0.005);
+        store
+            .train_scheduler_class_into(&w, "gold", &gold_sim, 5)
+            .unwrap();
+        assert_eq!(store.num_schedulers(), 2);
+        // distinct files: the default keeps the legacy (pre-class) name
+        assert!(dir.join("scheduler_treelstm.json").exists());
+        assert!(dir.join("scheduler_treelstm__gold.json").exists());
+
+        let reopened = PolicyStore::open(&dir).unwrap();
+        assert_eq!(reopened.num_schedulers(), 2);
+        let dflt = reopened.lookup_scheduler_workload(&w).unwrap();
+        assert_eq!(dflt.class, DEFAULT_CLASS);
+        let gold = reopened.lookup_scheduler_workload_class(&w, "gold").unwrap();
+        assert_eq!(gold.class, "gold");
+        assert!((gold.slo_p99_s - 0.005).abs() < 1e-12);
+        assert!(reopened.lookup_scheduler_workload_class(&w, "silver").is_none());
         let _ = std::fs::remove_dir_all(&dir);
     }
 }

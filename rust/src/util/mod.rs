@@ -11,3 +11,4 @@ pub mod json;
 pub mod propcheck;
 pub mod rng;
 pub mod stats;
+pub mod wire;

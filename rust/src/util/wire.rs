@@ -1,0 +1,643 @@
+//! Length-prefixed binary wire protocol for the TCP front-end
+//! (`coordinator::net`).
+//!
+//! Like `util::json`, this is a vendored-style codec: no external crates,
+//! a byte-cursor decoder with typed errors, and round-trip tests. Unlike
+//! JSON it is *binary and versioned* — the network boundary is the one
+//! place where the decoder faces bytes it does not control, so every
+//! failure mode (bad magic, unknown version, oversized length prefix,
+//! truncated or malformed payload) maps to a [`WireError`] variant and
+//! never a panic (property-tested against arbitrary byte streams in
+//! `tests/proptests.rs`).
+//!
+//! ## Frame layout (all integers little-endian)
+//!
+//! | offset | size | field       | notes                                   |
+//! |--------|------|-------------|-----------------------------------------|
+//! | 0      | 2    | magic       | `0xED 0xB1`                             |
+//! | 2      | 1    | version     | [`PROTO_VERSION`]                       |
+//! | 3      | 1    | frame kind  | 1 = request, 2 = response, 3 = NACK     |
+//! | 4      | 2    | tenant id   | SLO-class index (`--tenants` order)     |
+//! | 6      | 2    | workload    | index into `workloads::ALL_WORKLOADS`   |
+//! | 8      | 8    | request id  | client-chosen; echoed on the response   |
+//! | 16     | 4    | payload len | ≤ [`MAX_PAYLOAD`]                       |
+//! | 20     | len  | payload     | per-kind encoding (below)               |
+//!
+//! **Request payload** is the instance graph as a node stream — exactly
+//! the `(op, instance, preds)` triples [`crate::graph::Graph::add`]
+//! consumes, with predecessors as absolute node indices that must point
+//! strictly earlier. Decoding replays `Graph::add`, so a decoded graph
+//! reproduces the sender's incremental topology fingerprint and hits the
+//! same server-side instance-cache entries — the bit-identical-over-TCP
+//! contract rests on this.
+//!
+//! **Response payload**: `f64`-bits latency, sink spans, then the flat
+//! `f32` output buffer (bit-preserved: floats cross the wire as raw bits,
+//! never reformatted).
+//!
+//! **NACK payload**: one [`NackReason`] code byte plus a short UTF-8
+//! message. NACKs are the admission-control/backpressure signal — a typed
+//! reject, not a dropped connection.
+
+use crate::graph::{Graph, NodeId, OpType};
+
+/// First two bytes of every frame.
+pub const MAGIC: [u8; 2] = [0xED, 0xB1];
+/// Current protocol version; bumped on any layout change.
+pub const PROTO_VERSION: u8 = 1;
+/// Fixed frame-header size in bytes.
+pub const HEADER_LEN: usize = 20;
+/// Upper bound on the payload length prefix. Anything larger is rejected
+/// before allocation — a hostile length prefix must not OOM the server.
+pub const MAX_PAYLOAD: u32 = 16 * 1024 * 1024;
+
+/// Typed decode failure. `Truncated` is recoverable (feed more bytes);
+/// everything else poisons the stream (the connection should NACK and
+/// close — binary framing cannot resync after a malformed header).
+#[derive(Clone, Debug, PartialEq, Eq)]
+pub enum WireError {
+    BadMagic([u8; 2]),
+    BadVersion(u8),
+    BadKind(u8),
+    Oversized(u32),
+    Malformed(String),
+}
+
+impl std::fmt::Display for WireError {
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        match self {
+            WireError::BadMagic(m) => write!(f, "bad magic {:02x}{:02x}", m[0], m[1]),
+            WireError::BadVersion(v) => write!(f, "unsupported proto version {v}"),
+            WireError::BadKind(k) => write!(f, "unknown frame kind {k}"),
+            WireError::Oversized(n) => write!(f, "payload length {n} exceeds {MAX_PAYLOAD}"),
+            WireError::Malformed(m) => write!(f, "malformed payload: {m}"),
+        }
+    }
+}
+
+impl std::error::Error for WireError {}
+
+/// Why a request was NACKed instead of enqueued.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum NackReason {
+    /// Projected queue cost (depth × plan cost) exceeds the class budget.
+    QueueBudget,
+    /// The tenant's token bucket is empty (per-tenant rate limit).
+    TokenBucket,
+    /// Workload code not served by this server.
+    UnknownWorkload,
+    /// Tenant id outside the configured SLO classes.
+    BadTenant,
+    /// The request frame failed to decode.
+    Malformed,
+    /// Server is shutting down.
+    Closed,
+}
+
+impl NackReason {
+    pub fn code(self) -> u8 {
+        match self {
+            NackReason::QueueBudget => 1,
+            NackReason::TokenBucket => 2,
+            NackReason::UnknownWorkload => 3,
+            NackReason::BadTenant => 4,
+            NackReason::Malformed => 5,
+            NackReason::Closed => 6,
+        }
+    }
+
+    pub fn from_code(c: u8) -> Option<NackReason> {
+        Some(match c {
+            1 => NackReason::QueueBudget,
+            2 => NackReason::TokenBucket,
+            3 => NackReason::UnknownWorkload,
+            4 => NackReason::BadTenant,
+            5 => NackReason::Malformed,
+            6 => NackReason::Closed,
+            _ => return None,
+        })
+    }
+
+    pub fn name(self) -> &'static str {
+        match self {
+            NackReason::QueueBudget => "queue-budget",
+            NackReason::TokenBucket => "token-bucket",
+            NackReason::UnknownWorkload => "unknown-workload",
+            NackReason::BadTenant => "bad-tenant",
+            NackReason::Malformed => "malformed",
+            NackReason::Closed => "closed",
+        }
+    }
+}
+
+/// An inference request: one instance graph, tagged with the tenant
+/// (SLO class) and workload queue it belongs to.
+#[derive(Clone, Debug)]
+pub struct RequestFrame {
+    pub tenant: u16,
+    pub workload: u16,
+    pub request_id: u64,
+    pub graph: Graph,
+}
+
+/// The server's answer: sink spans over one flat `f32` buffer, plus the
+/// measured latency. Mirrors `coordinator::server::Response` exactly.
+#[derive(Clone, Debug)]
+pub struct ResponseFrame {
+    pub tenant: u16,
+    pub workload: u16,
+    pub request_id: u64,
+    pub latency_s: f64,
+    pub spans: Vec<(u32, u32)>,
+    pub data: Vec<f32>,
+}
+
+/// Typed rejection.
+#[derive(Clone, Debug)]
+pub struct NackFrame {
+    pub tenant: u16,
+    pub workload: u16,
+    pub request_id: u64,
+    pub reason: NackReason,
+    pub message: String,
+}
+
+#[derive(Clone, Debug)]
+pub enum Frame {
+    Request(RequestFrame),
+    Response(ResponseFrame),
+    Nack(NackFrame),
+}
+
+impl Frame {
+    fn kind_code(&self) -> u8 {
+        match self {
+            Frame::Request(_) => 1,
+            Frame::Response(_) => 2,
+            Frame::Nack(_) => 3,
+        }
+    }
+
+    pub fn request_id(&self) -> u64 {
+        match self {
+            Frame::Request(f) => f.request_id,
+            Frame::Response(f) => f.request_id,
+            Frame::Nack(f) => f.request_id,
+        }
+    }
+}
+
+// -- encoding ---------------------------------------------------------------
+
+fn put_u16(out: &mut Vec<u8>, v: u16) {
+    out.extend_from_slice(&v.to_le_bytes());
+}
+
+fn put_u32(out: &mut Vec<u8>, v: u32) {
+    out.extend_from_slice(&v.to_le_bytes());
+}
+
+fn put_u64(out: &mut Vec<u8>, v: u64) {
+    out.extend_from_slice(&v.to_le_bytes());
+}
+
+fn encode_payload(frame: &Frame, out: &mut Vec<u8>) {
+    match frame {
+        Frame::Request(f) => {
+            put_u32(out, f.graph.len() as u32);
+            for n in &f.graph.nodes {
+                put_u16(out, n.op.0);
+                put_u32(out, n.instance);
+                put_u16(out, n.preds.len() as u16);
+                for p in &n.preds {
+                    put_u32(out, p.0);
+                }
+            }
+        }
+        Frame::Response(f) => {
+            put_u64(out, f.latency_s.to_bits());
+            put_u32(out, f.spans.len() as u32);
+            for &(off, len) in &f.spans {
+                put_u32(out, off);
+                put_u32(out, len);
+            }
+            put_u32(out, f.data.len() as u32);
+            for &v in &f.data {
+                put_u32(out, v.to_bits());
+            }
+        }
+        Frame::Nack(f) => {
+            out.push(f.reason.code());
+            let msg = f.message.as_bytes();
+            let len = msg.len().min(u16::MAX as usize);
+            put_u16(out, len as u16);
+            out.extend_from_slice(&msg[..len]);
+        }
+    }
+}
+
+/// Serialize one frame (header + payload) into a fresh buffer.
+pub fn encode_frame(frame: &Frame) -> Vec<u8> {
+    let mut out = Vec::with_capacity(HEADER_LEN + 64);
+    out.extend_from_slice(&MAGIC);
+    out.push(PROTO_VERSION);
+    out.push(frame.kind_code());
+    let (tenant, workload, rid) = match frame {
+        Frame::Request(f) => (f.tenant, f.workload, f.request_id),
+        Frame::Response(f) => (f.tenant, f.workload, f.request_id),
+        Frame::Nack(f) => (f.tenant, f.workload, f.request_id),
+    };
+    put_u16(&mut out, tenant);
+    put_u16(&mut out, workload);
+    put_u64(&mut out, rid);
+    put_u32(&mut out, 0); // payload length backpatched below
+    encode_payload(frame, &mut out);
+    let plen = (out.len() - HEADER_LEN) as u32;
+    out[16..20].copy_from_slice(&plen.to_le_bytes());
+    out
+}
+
+// -- decoding ---------------------------------------------------------------
+
+/// Byte cursor over one payload (the `util::json::Parser` idiom, binary).
+struct Cursor<'a> {
+    b: &'a [u8],
+    i: usize,
+}
+
+impl<'a> Cursor<'a> {
+    fn take(&mut self, n: usize) -> Result<&'a [u8], WireError> {
+        if self.i + n > self.b.len() {
+            return Err(WireError::Malformed(format!(
+                "payload truncated at byte {} (wanted {n} more)",
+                self.i
+            )));
+        }
+        let s = &self.b[self.i..self.i + n];
+        self.i += n;
+        Ok(s)
+    }
+
+    fn u8(&mut self) -> Result<u8, WireError> {
+        Ok(self.take(1)?[0])
+    }
+
+    fn u16(&mut self) -> Result<u16, WireError> {
+        Ok(u16::from_le_bytes(self.take(2)?.try_into().unwrap()))
+    }
+
+    fn u32(&mut self) -> Result<u32, WireError> {
+        Ok(u32::from_le_bytes(self.take(4)?.try_into().unwrap()))
+    }
+
+    fn u64(&mut self) -> Result<u64, WireError> {
+        Ok(u64::from_le_bytes(self.take(8)?.try_into().unwrap()))
+    }
+
+    fn done(&self) -> Result<(), WireError> {
+        if self.i != self.b.len() {
+            return Err(WireError::Malformed(format!(
+                "{} trailing payload bytes",
+                self.b.len() - self.i
+            )));
+        }
+        Ok(())
+    }
+}
+
+fn decode_request(c: &mut Cursor, tenant: u16, workload: u16, rid: u64) -> Result<Frame, WireError> {
+    let n = c.u32()? as usize;
+    // each node costs ≥ 8 payload bytes: a cheap structural bound that
+    // rejects absurd node counts before building anything
+    if n > c.b.len() / 8 + 1 {
+        return Err(WireError::Malformed(format!("node count {n} exceeds payload")));
+    }
+    let mut g = Graph::new();
+    for i in 0..n {
+        let op = c.u16()?;
+        let instance = c.u32()?;
+        let np = c.u16()? as usize;
+        let mut preds = Vec::with_capacity(np);
+        for _ in 0..np {
+            let p = c.u32()?;
+            if p as usize >= i {
+                return Err(WireError::Malformed(format!(
+                    "node {i} pred {p} not strictly earlier"
+                )));
+            }
+            preds.push(NodeId(p));
+        }
+        g.add(OpType(op), preds, instance);
+    }
+    c.done()?;
+    Ok(Frame::Request(RequestFrame {
+        tenant,
+        workload,
+        request_id: rid,
+        graph: g,
+    }))
+}
+
+fn decode_response(
+    c: &mut Cursor,
+    tenant: u16,
+    workload: u16,
+    rid: u64,
+) -> Result<Frame, WireError> {
+    let latency_s = f64::from_bits(c.u64()?);
+    let nspans = c.u32()? as usize;
+    if nspans > c.b.len() / 8 + 1 {
+        return Err(WireError::Malformed(format!("span count {nspans} exceeds payload")));
+    }
+    let mut spans = Vec::with_capacity(nspans);
+    for _ in 0..nspans {
+        let off = c.u32()?;
+        let len = c.u32()?;
+        spans.push((off, len));
+    }
+    let ndata = c.u32()? as usize;
+    if ndata > (c.b.len() - c.i) / 4 {
+        return Err(WireError::Malformed(format!("data count {ndata} exceeds payload")));
+    }
+    let mut data = Vec::with_capacity(ndata);
+    for _ in 0..ndata {
+        data.push(f32::from_bits(c.u32()?));
+    }
+    for &(off, len) in &spans {
+        let end = off as usize + len as usize;
+        if end > data.len() {
+            return Err(WireError::Malformed(format!(
+                "span ({off}, {len}) outside data of {}",
+                data.len()
+            )));
+        }
+    }
+    c.done()?;
+    Ok(Frame::Response(ResponseFrame {
+        tenant,
+        workload,
+        request_id: rid,
+        latency_s,
+        spans,
+        data,
+    }))
+}
+
+fn decode_nack(c: &mut Cursor, tenant: u16, workload: u16, rid: u64) -> Result<Frame, WireError> {
+    let code = c.u8()?;
+    let reason = NackReason::from_code(code)
+        .ok_or_else(|| WireError::Malformed(format!("unknown NACK reason {code}")))?;
+    let mlen = c.u16()? as usize;
+    let bytes = c.take(mlen)?;
+    let message = String::from_utf8_lossy(bytes).into_owned();
+    c.done()?;
+    Ok(Frame::Nack(NackFrame {
+        tenant,
+        workload,
+        request_id: rid,
+        reason,
+        message,
+    }))
+}
+
+/// Streaming decode: try to pull one complete frame off the front of
+/// `buf`.
+///
+/// * `Ok(Some((frame, consumed)))` — a full frame; drop `consumed` bytes.
+/// * `Ok(None)` — `buf` is a valid prefix; read more bytes and retry.
+/// * `Err(_)` — the stream is poisoned (bad header or malformed payload);
+///   the connection should answer with a NACK where possible and close.
+pub fn decode_frame(buf: &[u8]) -> Result<Option<(Frame, usize)>, WireError> {
+    if buf.len() < 2 {
+        if !MAGIC.starts_with(buf) {
+            return Err(WireError::BadMagic([buf[0], *MAGIC.last().unwrap()]));
+        }
+        return Ok(None);
+    }
+    if buf[0] != MAGIC[0] || buf[1] != MAGIC[1] {
+        return Err(WireError::BadMagic([buf[0], buf[1]]));
+    }
+    if buf.len() < HEADER_LEN {
+        // validate what we can see of the fixed header before asking for more
+        if buf.len() >= 3 && buf[2] != PROTO_VERSION {
+            return Err(WireError::BadVersion(buf[2]));
+        }
+        if buf.len() >= 4 && !(1..=3).contains(&buf[3]) {
+            return Err(WireError::BadKind(buf[3]));
+        }
+        return Ok(None);
+    }
+    if buf[2] != PROTO_VERSION {
+        return Err(WireError::BadVersion(buf[2]));
+    }
+    let kind = buf[3];
+    if !(1..=3).contains(&kind) {
+        return Err(WireError::BadKind(kind));
+    }
+    let tenant = u16::from_le_bytes([buf[4], buf[5]]);
+    let workload = u16::from_le_bytes([buf[6], buf[7]]);
+    let rid = u64::from_le_bytes(buf[8..16].try_into().unwrap());
+    let plen = u32::from_le_bytes(buf[16..20].try_into().unwrap());
+    if plen > MAX_PAYLOAD {
+        return Err(WireError::Oversized(plen));
+    }
+    let total = HEADER_LEN + plen as usize;
+    if buf.len() < total {
+        return Ok(None);
+    }
+    let mut c = Cursor {
+        b: &buf[HEADER_LEN..total],
+        i: 0,
+    };
+    let frame = match kind {
+        1 => decode_request(&mut c, tenant, workload, rid)?,
+        2 => decode_response(&mut c, tenant, workload, rid)?,
+        _ => decode_nack(&mut c, tenant, workload, rid)?,
+    };
+    Ok(Some((frame, total)))
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::util::rng::Rng;
+    use crate::workloads::{Workload, WorkloadKind};
+
+    fn sample_graph() -> Graph {
+        let w = Workload::new(WorkloadKind::TreeLstm, 16);
+        let mut rng = Rng::new(11);
+        w.gen_instance(&mut rng)
+    }
+
+    #[test]
+    fn header_layout_is_pinned() {
+        let f = Frame::Nack(NackFrame {
+            tenant: 0x0102,
+            workload: 0x0304,
+            request_id: 0x1122334455667788,
+            reason: NackReason::Closed,
+            message: String::new(),
+        });
+        let b = encode_frame(&f);
+        assert_eq!(&b[..2], &MAGIC);
+        assert_eq!(b[2], PROTO_VERSION);
+        assert_eq!(b[3], 3);
+        assert_eq!(u16::from_le_bytes([b[4], b[5]]), 0x0102);
+        assert_eq!(u16::from_le_bytes([b[6], b[7]]), 0x0304);
+        assert_eq!(
+            u64::from_le_bytes(b[8..16].try_into().unwrap()),
+            0x1122334455667788
+        );
+        assert_eq!(b.len(), HEADER_LEN + 3);
+    }
+
+    #[test]
+    fn request_roundtrip_preserves_fingerprint() {
+        let g = sample_graph();
+        let f = Frame::Request(RequestFrame {
+            tenant: 2,
+            workload: 3,
+            request_id: 99,
+            graph: g.clone(),
+        });
+        let b = encode_frame(&f);
+        let (d, used) = decode_frame(&b).unwrap().unwrap();
+        assert_eq!(used, b.len());
+        let Frame::Request(r) = d else { panic!("kind") };
+        assert_eq!(r.tenant, 2);
+        assert_eq!(r.workload, 3);
+        assert_eq!(r.request_id, 99);
+        // the decoded graph replays Graph::add, so the incremental
+        // fingerprint — the instance-cache key — matches exactly
+        assert_eq!(
+            r.graph.topology_fingerprint(),
+            g.topology_fingerprint()
+        );
+        assert_eq!(r.graph.len(), g.len());
+        r.graph.validate().unwrap();
+    }
+
+    #[test]
+    fn response_roundtrip_is_bit_exact() {
+        let f = Frame::Response(ResponseFrame {
+            tenant: 1,
+            workload: 0,
+            request_id: 7,
+            latency_s: 0.001234567891234,
+            spans: vec![(0, 2), (2, 1)],
+            data: vec![1.5, f32::from_bits(0x7F80_0001), -0.0],
+        });
+        let b = encode_frame(&f);
+        let (d, _) = decode_frame(&b).unwrap().unwrap();
+        let Frame::Response(r) = d else { panic!("kind") };
+        assert_eq!(r.latency_s.to_bits(), 0.001234567891234f64.to_bits());
+        assert_eq!(r.spans, vec![(0, 2), (2, 1)]);
+        // float payloads travel as raw bits: NaN payloads and signed
+        // zeros survive
+        let bits: Vec<u32> = r.data.iter().map(|v| v.to_bits()).collect();
+        assert_eq!(bits, vec![1.5f32.to_bits(), 0x7F80_0001, (-0.0f32).to_bits()]);
+    }
+
+    #[test]
+    fn nack_roundtrip() {
+        let f = Frame::Nack(NackFrame {
+            tenant: 9,
+            workload: 4,
+            request_id: 3,
+            reason: NackReason::QueueBudget,
+            message: "projected cost 9000 over budget 128".into(),
+        });
+        let b = encode_frame(&f);
+        let (d, _) = decode_frame(&b).unwrap().unwrap();
+        let Frame::Nack(n) = d else { panic!("kind") };
+        assert_eq!(n.reason, NackReason::QueueBudget);
+        assert!(n.message.contains("9000"));
+    }
+
+    #[test]
+    fn truncated_prefixes_ask_for_more() {
+        let b = encode_frame(&Frame::Request(RequestFrame {
+            tenant: 0,
+            workload: 0,
+            request_id: 1,
+            graph: sample_graph(),
+        }));
+        for cut in 0..b.len() {
+            assert_eq!(
+                decode_frame(&b[..cut]).unwrap().map(|_| ()),
+                None,
+                "prefix of {cut} bytes must be incomplete, not an error"
+            );
+        }
+    }
+
+    #[test]
+    fn two_frames_decode_in_sequence() {
+        let mut b = encode_frame(&Frame::Nack(NackFrame {
+            tenant: 0,
+            workload: 0,
+            request_id: 1,
+            reason: NackReason::Closed,
+            message: String::new(),
+        }));
+        let first_len = b.len();
+        b.extend_from_slice(&encode_frame(&Frame::Nack(NackFrame {
+            tenant: 0,
+            workload: 0,
+            request_id: 2,
+            reason: NackReason::TokenBucket,
+            message: String::new(),
+        })));
+        let (f1, used) = decode_frame(&b).unwrap().unwrap();
+        assert_eq!(used, first_len);
+        assert_eq!(f1.request_id(), 1);
+        let (f2, _) = decode_frame(&b[used..]).unwrap().unwrap();
+        assert_eq!(f2.request_id(), 2);
+    }
+
+    #[test]
+    fn typed_errors_for_bad_headers() {
+        assert_eq!(
+            decode_frame(&[0x00, 0xB1]).unwrap_err(),
+            WireError::BadMagic([0x00, 0xB1])
+        );
+        assert_eq!(
+            decode_frame(&[0xED, 0xB1, 9, 1]).unwrap_err(),
+            WireError::BadVersion(9)
+        );
+        assert_eq!(
+            decode_frame(&[0xED, 0xB1, PROTO_VERSION, 77]).unwrap_err(),
+            WireError::BadKind(77)
+        );
+        // oversized length prefix rejected without allocating the payload
+        let mut h = vec![0xED, 0xB1, PROTO_VERSION, 3];
+        h.extend_from_slice(&[0; 12]);
+        h.extend_from_slice(&(MAX_PAYLOAD + 1).to_le_bytes());
+        assert_eq!(
+            decode_frame(&h).unwrap_err(),
+            WireError::Oversized(MAX_PAYLOAD + 1)
+        );
+    }
+
+    #[test]
+    fn forward_referencing_preds_are_malformed() {
+        // a hand-built request whose node 0 cites pred 5
+        let mut b = vec![0xED, 0xB1, PROTO_VERSION, 1];
+        b.extend_from_slice(&[0; 12]); // tenant, workload, request id
+        let payload: Vec<u8> = {
+            let mut p = Vec::new();
+            p.extend_from_slice(&1u32.to_le_bytes()); // 1 node
+            p.extend_from_slice(&0u16.to_le_bytes()); // op
+            p.extend_from_slice(&0u32.to_le_bytes()); // instance
+            p.extend_from_slice(&1u16.to_le_bytes()); // 1 pred
+            p.extend_from_slice(&5u32.to_le_bytes()); // forward ref
+            p
+        };
+        b.extend_from_slice(&(payload.len() as u32).to_le_bytes());
+        b.extend_from_slice(&payload);
+        match decode_frame(&b) {
+            Err(WireError::Malformed(m)) => assert!(m.contains("not strictly earlier"), "{m}"),
+            other => panic!("expected Malformed, got {other:?}"),
+        }
+    }
+}

@@ -700,3 +700,198 @@ fn strict_bitwise_serving_reproduces_scalar_reference_bytes() {
     assert_eq!(snap.pack_events, 0, "strict mode must never pack weights");
     server.shutdown().unwrap();
 }
+
+#[test]
+fn tcp_loopback_responses_bit_identical_to_in_process() {
+    // The wire front-end is a transport, not a compute path: a response
+    // that crossed loopback TCP (encode -> decode -> re-encode) must be
+    // bit-identical to one obtained from an in-process Client on the
+    // same server — for every served workload and every tenant class.
+    use ed_batch::coordinator::dispatch::SloClassConfig;
+    use ed_batch::coordinator::net::{NetServer, TcpClient};
+
+    let kinds = [WorkloadKind::TreeLstm, WorkloadKind::BiLstmTagger];
+    let server = Server::start(ServerConfig {
+        workloads: kinds.to_vec(),
+        hidden: 32,
+        mode: SystemMode::EdBatch,
+        max_batch: 8,
+        batch_window: Duration::from_millis(5),
+        workers: 2,
+        artifacts_dir: None,
+        store_dir: None,
+        train_on_miss: true,
+        train_cfg: quick_train_cfg(),
+        encoding: Encoding::Sort,
+        seed: 5,
+        classes: SloClassConfig::parse_spec("gold:slo=25:weight=4,bulk:slo=100").unwrap(),
+        ..ServerConfig::default()
+    })
+    .unwrap();
+    let net = NetServer::start(&server, "127.0.0.1:0").unwrap();
+    let addr = net.local_addr();
+
+    for tenant in 0u16..2 {
+        let mut tcp = TcpClient::connect(&addr, tenant).unwrap();
+        for (i, kind) in kinds.into_iter().enumerate() {
+            let w = Workload::new(kind, 32);
+            let local = server.client_for_class(tenant, kind);
+            let mut rng = Rng::new(7200 + 10 * tenant as u64 + i as u64);
+            for _ in 0..3 {
+                let g = w.gen_instance(&mut rng);
+                let over_wire = tcp.infer(kind, g.clone()).unwrap();
+                let in_proc = local.infer(g).unwrap();
+                let (wspans, wdata) = over_wire.wire_parts();
+                let (lspans, ldata) = in_proc.wire_parts();
+                assert_eq!(wspans, lspans, "{}: sink spans diverged over TCP", kind.name());
+                assert_eq!(wdata.len(), ldata.len());
+                for (a, b) in wdata.iter().zip(ldata) {
+                    assert_eq!(
+                        a.to_bits(),
+                        b.to_bits(),
+                        "{}: TCP response not bit-identical to in-process",
+                        kind.name()
+                    );
+                }
+            }
+        }
+    }
+
+    let snap = server.metrics.snapshot();
+    assert_eq!(snap.per_class.len(), 2, "both SLO classes must report rows");
+    for row in &snap.per_class {
+        assert!(row.requests > 0, "class {} served no requests", row.class);
+        assert_eq!(row.rejected_budget + row.rejected_bucket, 0);
+    }
+    assert!(snap.net_conns >= 2);
+    assert_eq!(snap.net_nacks, 0, "clean run must not NACK");
+    net.shutdown().unwrap();
+    server.shutdown().unwrap();
+}
+
+#[test]
+fn hot_reload_drops_no_in_flight_requests() {
+    // Zero-downtime contract: reload_policies() swaps the policy
+    // generation while traffic is in flight; every submitted request
+    // still completes (counter-asserted) and the swap is visible in the
+    // metrics. Responses stay correct because policies only change
+    // batching order, never values.
+    let kind = WorkloadKind::TreeLstm;
+    let server = Server::start(ServerConfig {
+        workloads: vec![kind],
+        hidden: 32,
+        mode: SystemMode::EdBatch,
+        max_batch: 8,
+        batch_window: Duration::from_millis(2),
+        workers: 2,
+        artifacts_dir: None,
+        store_dir: None,
+        train_on_miss: true,
+        train_cfg: quick_train_cfg(),
+        encoding: Encoding::Sort,
+        seed: 6,
+        ..ServerConfig::default()
+    })
+    .unwrap();
+
+    let total = 24usize;
+    let client = server.client(kind);
+    let submitter = std::thread::spawn(move || {
+        let w = Workload::new(kind, 32);
+        let mut rng = Rng::new(7300);
+        let mut rx = Vec::new();
+        for _ in 0..total {
+            rx.push(client.try_submit(w.gen_instance(&mut rng)).unwrap());
+            std::thread::sleep(Duration::from_millis(1));
+        }
+        rx
+    });
+    // swap generations repeatedly while the submissions stream in
+    let mut last_epoch = 0;
+    for _ in 0..3 {
+        std::thread::sleep(Duration::from_millis(5));
+        let epoch = server.reload_policies().unwrap();
+        assert!(epoch > last_epoch, "swap epoch must be monotonic");
+        last_epoch = epoch;
+    }
+    let receivers = submitter.join().unwrap();
+    assert_eq!(receivers.len(), total);
+    for rx in receivers {
+        let resp = rx.recv().expect("in-flight request dropped across hot reload");
+        assert!(resp.num_sinks() > 0);
+        for out in resp.sink_outputs() {
+            assert!(out.iter().all(|v| v.is_finite()));
+        }
+    }
+
+    let snap = server.metrics.snapshot();
+    assert!(snap.reload_swaps >= 3, "reloads must be counted");
+    assert_eq!(
+        snap.per_class.iter().map(|c| c.requests).sum::<u64>(),
+        total as u64,
+        "completed-request conservation across swaps"
+    );
+    server.shutdown().unwrap();
+}
+
+#[test]
+fn admission_rejections_are_typed_and_do_not_leak_across_classes() {
+    // A class with a near-zero queue budget sheds with a typed
+    // QueueBudget rejection while the default class keeps admitting;
+    // the per-class counters must attribute the rejections correctly.
+    use ed_batch::coordinator::dispatch::SloClassConfig;
+    use ed_batch::coordinator::server::SubmitError;
+    use ed_batch::util::wire::NackReason;
+
+    let kind = WorkloadKind::TreeLstm;
+    let server = Server::start(ServerConfig {
+        workloads: vec![kind],
+        hidden: 32,
+        mode: SystemMode::EdBatch,
+        max_batch: 8,
+        batch_window: Duration::from_millis(5),
+        workers: 1,
+        artifacts_dir: None,
+        store_dir: None,
+        train_on_miss: true,
+        train_cfg: quick_train_cfg(),
+        encoding: Encoding::Sort,
+        seed: 7,
+        classes: SloClassConfig::parse_spec("default:slo=50,tiny:slo=50:budget=1").unwrap(),
+        ..ServerConfig::default()
+    })
+    .unwrap();
+
+    let w = Workload::new(kind, 32);
+    let mut rng = Rng::new(7400);
+    let tiny = server.client_for_class(1, kind);
+    let mut rejected = 0u32;
+    let mut tiny_rx = Vec::new();
+    for _ in 0..12 {
+        match tiny.try_submit(w.gen_instance(&mut rng)) {
+            Ok(rx) => tiny_rx.push(rx),
+            Err(SubmitError::Rejected { reason, .. }) => {
+                assert_eq!(reason, NackReason::QueueBudget, "wrong rejection type");
+                rejected += 1;
+            }
+            Err(e) => panic!("unexpected submit error: {e:?}"),
+        }
+    }
+    assert!(rejected > 0, "budget=1 must shed under a 12-deep burst");
+
+    // the unbudgeted default class is unaffected by tiny's shedding
+    let default = server.client(kind);
+    for _ in 0..4 {
+        default.try_submit(w.gen_instance(&mut rng)).unwrap();
+    }
+    for rx in tiny_rx {
+        rx.recv().unwrap(); // admitted tiny-class requests still complete
+    }
+
+    let snap = server.metrics.snapshot();
+    let tiny_row = snap.per_class.iter().find(|c| c.class == "tiny").unwrap();
+    let def_row = snap.per_class.iter().find(|c| c.class == "default").unwrap();
+    assert_eq!(tiny_row.rejected_budget, rejected as u64);
+    assert_eq!(def_row.rejected_budget + def_row.rejected_bucket, 0);
+    server.shutdown().unwrap();
+}

@@ -329,6 +329,163 @@ fn prop_simd_cell_outputs_within_ulp_of_scalar() {
 }
 
 #[test]
+fn prop_wire_roundtrip_all_frame_kinds() {
+    // Round-trip equality for every frame type: encode → decode must
+    // reproduce the header fields, the request graph's topology
+    // fingerprint (the instance-cache key), and the response payload
+    // bit-for-bit (f32/f64 payloads go through to_bits, so NaN patterns
+    // and signed zeros must survive).
+    use ed_batch::util::wire::{
+        decode_frame, encode_frame, Frame, NackFrame, NackReason, RequestFrame, ResponseFrame,
+    };
+
+    check("wire roundtrip", 120, |g| {
+        let tenant = g.rng.below(u16::MAX as u64 + 1) as u16;
+        let workload = g.rng.below(9) as u16;
+        let rid = g.rng.next_u64();
+        let frame = match g.rng.usize_below(3) {
+            0 => {
+                let dag = gen_dag(g, 1 + g.rng.usize_below(4));
+                Frame::Request(RequestFrame {
+                    tenant,
+                    workload,
+                    request_id: rid,
+                    graph: dag,
+                })
+            }
+            1 => Frame::Response(ResponseFrame {
+                tenant,
+                workload,
+                request_id: rid,
+                latency_s: f64::from_bits(g.rng.next_u64()),
+                spans: (0..g.rng.usize_below(5))
+                    .map(|_| (g.rng.below(1 << 20) as u32, g.rng.below(64) as u32))
+                    .collect(),
+                // raw bit patterns: NaNs and infinities must round-trip
+                data: (0..g.rng.usize_below(40))
+                    .map(|_| f32::from_bits(g.rng.below(u32::MAX as u64 + 1) as u32))
+                    .collect(),
+            }),
+            _ => Frame::Nack(NackFrame {
+                tenant,
+                workload,
+                request_id: rid,
+                reason: NackReason::from_code(1 + g.rng.below(6) as u8).unwrap(),
+                message: "x".repeat(g.rng.usize_below(50)),
+            }),
+        };
+        let bytes = encode_frame(&frame);
+        let (back, used) = decode_frame(&bytes)
+            .map_err(|e| format!("decode of a just-encoded frame failed: {e}"))?
+            .ok_or("decode of a complete frame returned need-more")?;
+        prop_assert!(used == bytes.len(), "partial consume: {used} of {}", bytes.len());
+        prop_assert!(back.request_id() == rid);
+        match (&frame, &back) {
+            (Frame::Request(a), Frame::Request(b)) => {
+                prop_assert!(a.tenant == b.tenant && a.workload == b.workload);
+                prop_assert!(
+                    a.graph.topology_fingerprint() == b.graph.topology_fingerprint(),
+                    "fingerprint diverged"
+                );
+                prop_assert!(a.graph.len() == b.graph.len());
+            }
+            (Frame::Response(a), Frame::Response(b)) => {
+                prop_assert!(a.tenant == b.tenant && a.workload == b.workload);
+                prop_assert!(a.latency_s.to_bits() == b.latency_s.to_bits());
+                prop_assert!(a.spans == b.spans);
+                prop_assert!(a.data.len() == b.data.len());
+                prop_assert!(
+                    a.data
+                        .iter()
+                        .zip(&b.data)
+                        .all(|(x, y)| x.to_bits() == y.to_bits()),
+                    "response payload bits diverged"
+                );
+            }
+            (Frame::Nack(a), Frame::Nack(b)) => {
+                prop_assert!(a.reason == b.reason && a.message == b.message);
+            }
+            _ => return Err("frame kind changed across the roundtrip".into()),
+        }
+        Ok(())
+    });
+}
+
+#[test]
+fn prop_wire_decoder_never_panics_and_errors_are_typed() {
+    // The decoder's safety contract: arbitrary bytes, truncated frames,
+    // oversized length prefixes, and unknown versions must produce
+    // Ok(None) (need more) or a typed WireError — never a panic and
+    // never a giant allocation. Four adversarial generators cycle.
+    use ed_batch::util::wire::{
+        decode_frame, encode_frame, Frame, RequestFrame, WireError, HEADER_LEN, MAGIC,
+        MAX_PAYLOAD, PROTO_VERSION,
+    };
+
+    let iter = std::cell::Cell::new(0usize);
+    check("wire decoder total", 160, |g| {
+        let i = iter.get();
+        iter.set(i + 1);
+        match i % 4 {
+            0 => {
+                // arbitrary garbage of arbitrary length
+                let n = g.rng.usize_below(64);
+                let bytes: Vec<u8> = (0..n).map(|_| g.rng.below(256) as u8).collect();
+                let _ = decode_frame(&bytes); // must not panic
+            }
+            1 => {
+                // every strict prefix of a valid frame asks for more
+                let dag = gen_dag(g, 2);
+                let bytes = encode_frame(&Frame::Request(RequestFrame {
+                    tenant: 1,
+                    workload: 0,
+                    request_id: 7,
+                    graph: dag,
+                }));
+                let cut = g.rng.usize_below(bytes.len());
+                match decode_frame(&bytes[..cut]) {
+                    Ok(None) => {}
+                    Ok(Some(_)) => return Err(format!("prefix {cut} decoded a frame")),
+                    Err(e) => return Err(format!("valid prefix {cut} errored: {e}")),
+                }
+            }
+            2 => {
+                // oversized length prefix: typed error, no allocation
+                let mut b = vec![0u8; HEADER_LEN];
+                b[..2].copy_from_slice(&MAGIC);
+                b[2] = PROTO_VERSION;
+                b[3] = 1; // request
+                let len = MAX_PAYLOAD + 1 + g.rng.below(1 << 20) as u32;
+                b[16..20].copy_from_slice(&len.to_le_bytes());
+                match decode_frame(&b) {
+                    Err(WireError::Oversized(l)) => prop_assert!(l == len),
+                    other => return Err(format!("expected Oversized, got {other:?}")),
+                }
+            }
+            _ => {
+                // unknown protocol version: typed error even on a short
+                // prefix (the header is validated before length-waiting)
+                let v = loop {
+                    let v = g.rng.below(256) as u8;
+                    if v != PROTO_VERSION {
+                        break v;
+                    }
+                };
+                let mut b = vec![0u8; HEADER_LEN];
+                b[..2].copy_from_slice(&MAGIC);
+                b[2] = v;
+                b[3] = 1;
+                match decode_frame(&b) {
+                    Err(WireError::BadVersion(got)) => prop_assert!(got == v),
+                    other => return Err(format!("expected BadVersion, got {other:?}")),
+                }
+            }
+        }
+        Ok(())
+    });
+}
+
+#[test]
 fn prop_graph_merge_preserves_topology() {
     check("merge topology", 80, |g| {
         let nt = 1 + g.rng.usize_below(3);
