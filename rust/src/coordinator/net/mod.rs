@@ -39,7 +39,7 @@ use crate::graph::Graph;
 use crate::util::wire::{
     decode_frame, encode_frame, Frame, NackFrame, NackReason, RequestFrame, ResponseFrame,
 };
-use crate::workloads::{WorkloadKind, ALL_WORKLOADS};
+use crate::workloads::{Workload, WorkloadKind, ALL_WORKLOADS};
 
 use super::metrics::Metrics;
 use super::server::{Client, Response, Server, SubmitError};
@@ -50,6 +50,11 @@ const IDLE_SLEEP: Duration = Duration::from_micros(500);
 const DRAIN_DEADLINE: Duration = Duration::from_secs(2);
 /// Read chunk size.
 const READ_CHUNK: usize = 64 * 1024;
+/// Pause after a failed `accept` before retrying (fd exhaustion etc.).
+const ACCEPT_BACKOFF: Duration = Duration::from_millis(5);
+/// Consecutive non-transient accept failures before the listener is
+/// declared dead.
+const MAX_ACCEPT_ERRS: u32 = 256;
 
 /// The wire workload code for a kind (index into [`ALL_WORKLOADS`]).
 pub fn workload_code(kind: WorkloadKind) -> u16 {
@@ -65,6 +70,20 @@ struct PendingReq {
     tenant: u16,
     workload: u16,
     rx: Receiver<Response>,
+}
+
+/// Shared routing state for the IO thread: submission clients plus the
+/// validation tables requests are checked against before admission.
+struct Router {
+    clients: FxHashMap<(u16, WorkloadKind), Client>,
+    metrics: Arc<Metrics>,
+    nclasses: u16,
+    /// Per workload code: number of op types in its registry. The wire
+    /// decoder is registry-blind (it only checks structure), so op codes
+    /// are range-checked here — an out-of-range op would index past the
+    /// per-type frontier tables inside a worker (a panic, not an `Err`,
+    /// so it must never pass admission).
+    op_limits: Vec<u16>,
 }
 
 /// Per-connection state: read buffer, pending responses, write queue.
@@ -92,7 +111,28 @@ impl Conn {
     }
 
     fn queue_frame(&mut self, frame: &Frame, metrics: &Metrics) {
-        self.wbuf.extend(encode_frame(frame));
+        let bytes = match encode_frame(frame) {
+            Ok(b) => b,
+            Err(e) => {
+                // a response too large for the wire degrades to a typed
+                // NACK — the encoder and decoder share MAX_PAYLOAD, so
+                // this frame would have been rejected by the peer anyway.
+                // NACKs themselves always fit (u16-capped message).
+                let (tenant, workload, rid) = frame.ids();
+                let nack = Frame::Nack(NackFrame {
+                    tenant,
+                    workload,
+                    request_id: rid,
+                    reason: NackReason::Oversized,
+                    message: format!("{e}"),
+                });
+                metrics.record_net_frame_out(true);
+                self.wbuf
+                    .extend(encode_frame(&nack).expect("NACK frames always encode"));
+                return;
+            }
+        };
+        self.wbuf.extend(bytes);
         metrics.record_net_frame_out(matches!(frame, Frame::Nack(_)));
     }
 
@@ -119,12 +159,8 @@ impl Conn {
 
     /// One non-blocking sweep: read, decode+submit, poll responses,
     /// write. Returns true when any byte or frame moved.
-    fn pump(
-        &mut self,
-        clients: &FxHashMap<(u16, WorkloadKind), Client>,
-        metrics: &Metrics,
-        nclasses: u16,
-    ) -> bool {
+    fn pump(&mut self, router: &Router) -> bool {
+        let metrics: &Metrics = &router.metrics;
         let mut progress = false;
         // -- read ------------------------------------------------------------
         if !self.eof && !self.dead {
@@ -157,7 +193,7 @@ impl Conn {
                     Ok(Some((frame, used))) => {
                         consumed += used;
                         progress = true;
-                        self.handle_frame(frame, clients, metrics, nclasses);
+                        self.handle_frame(frame, router);
                         if self.dead {
                             break;
                         }
@@ -244,13 +280,8 @@ impl Conn {
         progress
     }
 
-    fn handle_frame(
-        &mut self,
-        frame: Frame,
-        clients: &FxHashMap<(u16, WorkloadKind), Client>,
-        metrics: &Metrics,
-        nclasses: u16,
-    ) {
+    fn handle_frame(&mut self, frame: Frame, router: &Router) {
+        let metrics: &Metrics = &router.metrics;
         let rf: RequestFrame = match frame {
             Frame::Request(rf) => rf,
             // clients must only send requests; anything else poisons
@@ -269,14 +300,17 @@ impl Conn {
         };
         metrics.record_net_frame_in();
         let (tenant, workload, rid) = (rf.tenant, rf.workload, rf.request_id);
-        if tenant >= nclasses {
+        if tenant >= router.nclasses {
             self.queue_nack(
                 metrics,
                 tenant,
                 workload,
                 rid,
                 NackReason::BadTenant,
-                format!("tenant {tenant} outside {nclasses} configured classes"),
+                format!(
+                    "tenant {tenant} outside {} configured classes",
+                    router.nclasses
+                ),
             );
             return;
         }
@@ -291,7 +325,26 @@ impl Conn {
             );
             return;
         };
-        let client = &clients[&(tenant, kind)];
+        // op codes are workload-relative and the decoder cannot know the
+        // registry; a request-level NACK (the framing is intact, so the
+        // connection survives) keeps hostile op indices out of workers
+        let limit = router.op_limits[workload as usize];
+        if let Some(bad) = rf.graph.nodes.iter().find(|n| n.op.0 >= limit) {
+            self.queue_nack(
+                metrics,
+                tenant,
+                workload,
+                rid,
+                NackReason::Malformed,
+                format!(
+                    "op type {} outside the {limit} registered types of {}",
+                    bad.op.0,
+                    kind.name()
+                ),
+            );
+            return;
+        }
+        let client = &router.clients[&(tenant, kind)];
         match client.try_submit(rf.graph) {
             Ok(rx) => self.pending.push(PendingReq {
                 rid,
@@ -354,12 +407,23 @@ impl NetServer {
                 clients.insert((ci, kind), server.client_for_class(ci, kind));
             }
         }
-        let metrics = server.metrics.clone();
+        // per-workload op-type counts for request validation (the type
+        // count is a registry property independent of hidden size)
+        let op_limits: Vec<u16> = ALL_WORKLOADS
+            .iter()
+            .map(|&k| Workload::new(k, 1).registry.num_types() as u16)
+            .collect();
+        let router = Router {
+            clients,
+            metrics: server.metrics.clone(),
+            nclasses,
+            op_limits,
+        };
         let stop = Arc::new(AtomicBool::new(false));
         let stop2 = stop.clone();
         let handle = std::thread::Builder::new()
             .name("ed-batch-net".into())
-            .spawn(move || io_loop(listener, clients, metrics, nclasses, stop2))
+            .spawn(move || io_loop(listener, router, stop2))
             .expect("spawn net io thread");
         Ok(NetServer {
             local,
@@ -394,15 +458,20 @@ impl Drop for NetServer {
     }
 }
 
-fn io_loop(
-    listener: TcpListener,
-    clients: FxHashMap<(u16, WorkloadKind), Client>,
-    metrics: Arc<Metrics>,
-    nclasses: u16,
-    stop: Arc<AtomicBool>,
-) -> Result<()> {
+/// Accept failures that must never take the front-end down: the peer
+/// vanishing mid-handshake, or fd exhaustion under load (which heals as
+/// connections close).
+fn transient_accept_error(e: &std::io::Error) -> bool {
+    matches!(
+        e.kind(),
+        ErrorKind::ConnectionAborted | ErrorKind::ConnectionReset | ErrorKind::TimedOut
+    ) || matches!(e.raw_os_error(), Some(23) | Some(24)) // ENFILE / EMFILE
+}
+
+fn io_loop(listener: TcpListener, router: Router, stop: Arc<AtomicBool>) -> Result<()> {
     let mut conns: Vec<Conn> = Vec::new();
     let mut drain_until: Option<Instant> = None;
+    let mut accept_errs: u32 = 0;
     loop {
         let stopping = stop.load(Ordering::Relaxed);
         let mut progress = false;
@@ -410,20 +479,36 @@ fn io_loop(
             loop {
                 match listener.accept() {
                     Ok((s, _)) => {
-                        s.set_nonblocking(true)?;
+                        accept_errs = 0;
+                        // a socket we cannot make non-blocking is dropped
+                        // (closed), not allowed to stall the poll loop
+                        if s.set_nonblocking(true).is_err() {
+                            continue;
+                        }
                         let _ = s.set_nodelay(true);
-                        metrics.record_net_conn();
+                        router.metrics.record_net_conn();
                         conns.push(Conn::new(s));
                         progress = true;
                     }
                     Err(e) if e.kind() == ErrorKind::WouldBlock => break,
                     Err(e) if e.kind() == ErrorKind::Interrupted => continue,
-                    Err(e) => return Err(e.into()),
+                    Err(e) => {
+                        // a failed accept must not kill the IO thread —
+                        // existing connections keep being served. Only a
+                        // long unbroken run of non-transient errors means
+                        // the listener itself is gone.
+                        accept_errs += 1;
+                        if !transient_accept_error(&e) && accept_errs > MAX_ACCEPT_ERRS {
+                            bail!("tcp accept failed persistently: {e}");
+                        }
+                        std::thread::sleep(ACCEPT_BACKOFF);
+                        break;
+                    }
                 }
             }
         }
         for conn in conns.iter_mut() {
-            progress |= conn.pump(&clients, &metrics, nclasses);
+            progress |= conn.pump(&router);
         }
         conns.retain(|c| !c.finished());
         if stopping {
@@ -477,7 +562,7 @@ impl TcpClient {
             request_id: rid,
             graph,
         });
-        self.stream.write_all(&encode_frame(&frame))?;
+        self.stream.write_all(&encode_frame(&frame)?)?;
         Ok(rid)
     }
 
@@ -493,6 +578,15 @@ impl TcpClient {
             let id = frame.request_id();
             if id == rid {
                 return Self::unwrap_response(frame);
+            }
+            // request id 0 is the server's stream-level error slot (our
+            // ids start at 1): the connection is poisoned and about to
+            // close, so surface the typed reason now instead of parking
+            // it and failing later with "connection closed mid-frame"
+            if id == 0 {
+                if let Frame::Nack(n) = &frame {
+                    bail!("stream NACKed ({}): {}", n.reason.name(), n.message);
+                }
             }
             self.inbox.insert(id, frame);
         }
@@ -540,7 +634,6 @@ mod tests {
     use crate::coordinator::SystemMode;
     use crate::rl::TrainConfig;
     use crate::util::rng::Rng;
-    use crate::workloads::Workload;
 
     fn quick_server() -> Server {
         let cfg = ServerConfig {
@@ -635,6 +728,32 @@ mod tests {
         assert!(err.to_string().contains("unknown-workload"), "{err}");
         let snap = server.metrics.snapshot();
         assert_eq!(snap.net_nacks, 2);
+        net.shutdown().unwrap();
+        server.shutdown().unwrap();
+    }
+
+    #[test]
+    fn out_of_range_op_nacks_without_killing_workers() {
+        use crate::graph::OpType;
+        let server = quick_server();
+        let net = NetServer::start(&server, "127.0.0.1:0").unwrap();
+        let w = Workload::new(WorkloadKind::TreeLstm, 32);
+        let mut rng = Rng::new(64);
+        let mut client = TcpClient::connect(&net.local_addr(), 0).unwrap();
+        // a frame-valid request whose op code indexes past the registry:
+        // before validation this panicked a worker (frontier tables are
+        // sized num_types); now it must NACK and leave the stream usable
+        let mut evil = Graph::new();
+        evil.add(OpType(999), vec![], 0);
+        let err = client.infer(WorkloadKind::TreeLstm, evil).unwrap_err();
+        assert!(err.to_string().contains("malformed"), "{err}");
+        // same connection, same workers: a legitimate request still runs
+        let resp = client
+            .infer(WorkloadKind::TreeLstm, w.gen_instance(&mut rng))
+            .unwrap();
+        assert!(resp.num_sinks() > 0);
+        let snap = server.metrics.snapshot();
+        assert_eq!(snap.net_nacks, 1);
         net.shutdown().unwrap();
         server.shutdown().unwrap();
     }

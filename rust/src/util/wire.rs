@@ -26,7 +26,10 @@
 //! **Request payload** is the instance graph as a node stream — exactly
 //! the `(op, instance, preds)` triples [`crate::graph::Graph::add`]
 //! consumes, with predecessors as absolute node indices that must point
-//! strictly earlier. Decoding replays `Graph::add`, so a decoded graph
+//! strictly earlier and instance indices bounded by the node count (an
+//! instance owns at least one node). Op codes are workload-relative, so
+//! their range check happens in `coordinator::net` against the target
+//! registry, not here. Decoding replays `Graph::add`, so a decoded graph
 //! reproduces the sender's incremental topology fingerprint and hits the
 //! same server-side instance-cache entries — the bit-identical-over-TCP
 //! contract rests on this.
@@ -88,10 +91,12 @@ pub enum NackReason {
     UnknownWorkload,
     /// Tenant id outside the configured SLO classes.
     BadTenant,
-    /// The request frame failed to decode.
+    /// The request frame failed to decode or validate.
     Malformed,
     /// Server is shutting down.
     Closed,
+    /// The response did not fit in a wire frame ([`MAX_PAYLOAD`]).
+    Oversized,
 }
 
 impl NackReason {
@@ -103,6 +108,7 @@ impl NackReason {
             NackReason::BadTenant => 4,
             NackReason::Malformed => 5,
             NackReason::Closed => 6,
+            NackReason::Oversized => 7,
         }
     }
 
@@ -114,6 +120,7 @@ impl NackReason {
             4 => NackReason::BadTenant,
             5 => NackReason::Malformed,
             6 => NackReason::Closed,
+            7 => NackReason::Oversized,
             _ => return None,
         })
     }
@@ -126,6 +133,7 @@ impl NackReason {
             NackReason::BadTenant => "bad-tenant",
             NackReason::Malformed => "malformed",
             NackReason::Closed => "closed",
+            NackReason::Oversized => "oversized",
         }
     }
 }
@@ -185,6 +193,15 @@ impl Frame {
             Frame::Nack(f) => f.request_id,
         }
     }
+
+    /// The shared header fields: (tenant, workload, request id).
+    pub fn ids(&self) -> (u16, u16, u64) {
+        match self {
+            Frame::Request(f) => (f.tenant, f.workload, f.request_id),
+            Frame::Response(f) => (f.tenant, f.workload, f.request_id),
+            Frame::Nack(f) => (f.tenant, f.workload, f.request_id),
+        }
+    }
 }
 
 // -- encoding ---------------------------------------------------------------
@@ -201,11 +218,20 @@ fn put_u64(out: &mut Vec<u8>, v: u64) {
     out.extend_from_slice(&v.to_le_bytes());
 }
 
-fn encode_payload(frame: &Frame, out: &mut Vec<u8>) {
+fn encode_payload(frame: &Frame, out: &mut Vec<u8>) -> Result<(), WireError> {
     match frame {
         Frame::Request(f) => {
             put_u32(out, f.graph.len() as u32);
-            for n in &f.graph.nodes {
+            for (i, n) in f.graph.nodes.iter().enumerate() {
+                if n.preds.len() > u16::MAX as usize {
+                    // a silent u16 truncation here would produce a frame
+                    // that decodes to a *different* graph — refuse instead
+                    return Err(WireError::Malformed(format!(
+                        "node {i} has {} preds (wire max {})",
+                        n.preds.len(),
+                        u16::MAX
+                    )));
+                }
                 put_u16(out, n.op.0);
                 put_u32(out, n.instance);
                 put_u16(out, n.preds.len() as u16);
@@ -228,33 +254,41 @@ fn encode_payload(frame: &Frame, out: &mut Vec<u8>) {
         }
         Frame::Nack(f) => {
             out.push(f.reason.code());
+            // the message is a diagnostic string: capping it at u16::MAX
+            // bytes is lossy but harmless (unlike preds above)
             let msg = f.message.as_bytes();
             let len = msg.len().min(u16::MAX as usize);
             put_u16(out, len as u16);
             out.extend_from_slice(&msg[..len]);
         }
     }
+    Ok(())
 }
 
 /// Serialize one frame (header + payload) into a fresh buffer.
-pub fn encode_frame(frame: &Frame) -> Vec<u8> {
+///
+/// The encoder enforces the same bounds the decoder does — a payload
+/// over [`MAX_PAYLOAD`] or a node with more than `u16::MAX` preds is an
+/// error here, never a frame the peer would reject (or misread) later.
+pub fn encode_frame(frame: &Frame) -> Result<Vec<u8>, WireError> {
     let mut out = Vec::with_capacity(HEADER_LEN + 64);
     out.extend_from_slice(&MAGIC);
     out.push(PROTO_VERSION);
     out.push(frame.kind_code());
-    let (tenant, workload, rid) = match frame {
-        Frame::Request(f) => (f.tenant, f.workload, f.request_id),
-        Frame::Response(f) => (f.tenant, f.workload, f.request_id),
-        Frame::Nack(f) => (f.tenant, f.workload, f.request_id),
-    };
+    let (tenant, workload, rid) = frame.ids();
     put_u16(&mut out, tenant);
     put_u16(&mut out, workload);
     put_u64(&mut out, rid);
     put_u32(&mut out, 0); // payload length backpatched below
-    encode_payload(frame, &mut out);
-    let plen = (out.len() - HEADER_LEN) as u32;
-    out[16..20].copy_from_slice(&plen.to_le_bytes());
-    out
+    encode_payload(frame, &mut out)?;
+    let plen = out.len() - HEADER_LEN;
+    if plen > MAX_PAYLOAD as usize {
+        return Err(WireError::Oversized(
+            u32::try_from(plen).unwrap_or(u32::MAX),
+        ));
+    }
+    out[16..20].copy_from_slice(&(plen as u32).to_le_bytes());
+    Ok(out)
 }
 
 // -- decoding ---------------------------------------------------------------
@@ -316,6 +350,14 @@ fn decode_request(c: &mut Cursor, tenant: u16, workload: u16, rid: u64) -> Resul
     for i in 0..n {
         let op = c.u16()?;
         let instance = c.u32()?;
+        // every instance owns ≥ 1 node, so a legitimate batch of n nodes
+        // never uses an instance index ≥ n; unbounded indices would
+        // overflow `Graph::merge`'s instance offset in a worker
+        if instance as usize >= n {
+            return Err(WireError::Malformed(format!(
+                "node {i} instance {instance} out of range for {n} nodes"
+            )));
+        }
         let np = c.u16()? as usize;
         let mut preds = Vec::with_capacity(np);
         for _ in 0..np {
@@ -409,9 +451,9 @@ fn decode_nack(c: &mut Cursor, tenant: u16, workload: u16, rid: u64) -> Result<F
 ///   the connection should answer with a NACK where possible and close.
 pub fn decode_frame(buf: &[u8]) -> Result<Option<(Frame, usize)>, WireError> {
     if buf.len() < 2 {
-        if !MAGIC.starts_with(buf) {
-            return Err(WireError::BadMagic([buf[0], *MAGIC.last().unwrap()]));
-        }
+        // too short to classify: `BadMagic` must carry only bytes that
+        // actually arrived, so wait for the second byte (a bad first
+        // byte is caught as soon as it has company, or at stream close)
         return Ok(None);
     }
     if buf[0] != MAGIC[0] || buf[1] != MAGIC[1] {
@@ -478,7 +520,7 @@ mod tests {
             reason: NackReason::Closed,
             message: String::new(),
         });
-        let b = encode_frame(&f);
+        let b = encode_frame(&f).unwrap();
         assert_eq!(&b[..2], &MAGIC);
         assert_eq!(b[2], PROTO_VERSION);
         assert_eq!(b[3], 3);
@@ -500,7 +542,7 @@ mod tests {
             request_id: 99,
             graph: g.clone(),
         });
-        let b = encode_frame(&f);
+        let b = encode_frame(&f).unwrap();
         let (d, used) = decode_frame(&b).unwrap().unwrap();
         assert_eq!(used, b.len());
         let Frame::Request(r) = d else { panic!("kind") };
@@ -527,7 +569,7 @@ mod tests {
             spans: vec![(0, 2), (2, 1)],
             data: vec![1.5, f32::from_bits(0x7F80_0001), -0.0],
         });
-        let b = encode_frame(&f);
+        let b = encode_frame(&f).unwrap();
         let (d, _) = decode_frame(&b).unwrap().unwrap();
         let Frame::Response(r) = d else { panic!("kind") };
         assert_eq!(r.latency_s.to_bits(), 0.001234567891234f64.to_bits());
@@ -547,7 +589,7 @@ mod tests {
             reason: NackReason::QueueBudget,
             message: "projected cost 9000 over budget 128".into(),
         });
-        let b = encode_frame(&f);
+        let b = encode_frame(&f).unwrap();
         let (d, _) = decode_frame(&b).unwrap().unwrap();
         let Frame::Nack(n) = d else { panic!("kind") };
         assert_eq!(n.reason, NackReason::QueueBudget);
@@ -561,7 +603,8 @@ mod tests {
             workload: 0,
             request_id: 1,
             graph: sample_graph(),
-        }));
+        }))
+        .unwrap();
         for cut in 0..b.len() {
             assert_eq!(
                 decode_frame(&b[..cut]).unwrap().map(|_| ()),
@@ -579,15 +622,19 @@ mod tests {
             request_id: 1,
             reason: NackReason::Closed,
             message: String::new(),
-        }));
+        }))
+        .unwrap();
         let first_len = b.len();
-        b.extend_from_slice(&encode_frame(&Frame::Nack(NackFrame {
-            tenant: 0,
-            workload: 0,
-            request_id: 2,
-            reason: NackReason::TokenBucket,
-            message: String::new(),
-        })));
+        b.extend_from_slice(
+            &encode_frame(&Frame::Nack(NackFrame {
+                tenant: 0,
+                workload: 0,
+                request_id: 2,
+                reason: NackReason::TokenBucket,
+                message: String::new(),
+            }))
+            .unwrap(),
+        );
         let (f1, used) = decode_frame(&b).unwrap().unwrap();
         assert_eq!(used, first_len);
         assert_eq!(f1.request_id(), 1);
@@ -617,6 +664,79 @@ mod tests {
             decode_frame(&h).unwrap_err(),
             WireError::Oversized(MAX_PAYLOAD + 1)
         );
+    }
+
+    #[test]
+    fn one_byte_prefix_asks_for_more_without_fabricating_magic() {
+        // a single byte — right or wrong — is not yet classifiable; the
+        // old behavior invented the second magic byte in the error
+        assert_eq!(decode_frame(&[0x00]).unwrap().map(|_| ()), None);
+        assert_eq!(decode_frame(&[MAGIC[0]]).unwrap().map(|_| ()), None);
+        // with two real bytes the error reports exactly what arrived
+        assert_eq!(
+            decode_frame(&[0x00, 0x01]).unwrap_err(),
+            WireError::BadMagic([0x00, 0x01])
+        );
+    }
+
+    #[test]
+    fn encoder_enforces_decoder_payload_bound() {
+        // a response whose f32 payload exceeds MAX_PAYLOAD would encode
+        // fine under the old encoder and then be rejected by every
+        // compliant peer — now the sender gets the error
+        let f = Frame::Response(ResponseFrame {
+            tenant: 0,
+            workload: 0,
+            request_id: 1,
+            latency_s: 0.0,
+            spans: vec![],
+            data: vec![0.0; MAX_PAYLOAD as usize / 4 + 1],
+        });
+        assert!(matches!(encode_frame(&f), Err(WireError::Oversized(_))));
+    }
+
+    #[test]
+    fn encoder_refuses_pred_count_truncation() {
+        // >u16::MAX preds would silently truncate to a frame that decodes
+        // to a *different* graph
+        let mut g = Graph::new();
+        for _ in 0..=(u16::MAX as usize) {
+            g.add(OpType(0), vec![], 0);
+        }
+        let preds: Vec<NodeId> = (0..=u16::MAX as u32).map(NodeId).collect();
+        g.add(OpType(0), preds, 0);
+        let f = Frame::Request(RequestFrame {
+            tenant: 0,
+            workload: 0,
+            request_id: 1,
+            graph: g,
+        });
+        match encode_frame(&f) {
+            Err(WireError::Malformed(m)) => assert!(m.contains("preds"), "{m}"),
+            other => panic!("expected Malformed, got {other:?}"),
+        }
+    }
+
+    #[test]
+    fn out_of_range_instance_is_malformed() {
+        // hand-built single-node request claiming instance 7: a real
+        // batch of n nodes never uses an instance index >= n
+        let mut b = vec![0xED, 0xB1, PROTO_VERSION, 1];
+        b.extend_from_slice(&[0; 12]); // tenant, workload, request id
+        let payload: Vec<u8> = {
+            let mut p = Vec::new();
+            p.extend_from_slice(&1u32.to_le_bytes()); // 1 node
+            p.extend_from_slice(&0u16.to_le_bytes()); // op
+            p.extend_from_slice(&7u32.to_le_bytes()); // instance 7
+            p.extend_from_slice(&0u16.to_le_bytes()); // 0 preds
+            p
+        };
+        b.extend_from_slice(&(payload.len() as u32).to_le_bytes());
+        b.extend_from_slice(&payload);
+        match decode_frame(&b) {
+            Err(WireError::Malformed(m)) => assert!(m.contains("instance"), "{m}"),
+            other => panic!("expected Malformed, got {other:?}"),
+        }
     }
 
     #[test]

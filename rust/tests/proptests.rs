@@ -370,11 +370,12 @@ fn prop_wire_roundtrip_all_frame_kinds() {
                 tenant,
                 workload,
                 request_id: rid,
-                reason: NackReason::from_code(1 + g.rng.below(6) as u8).unwrap(),
+                reason: NackReason::from_code(1 + g.rng.below(7) as u8).unwrap(),
                 message: "x".repeat(g.rng.usize_below(50)),
             }),
         };
-        let bytes = encode_frame(&frame);
+        let bytes =
+            encode_frame(&frame).map_err(|e| format!("encode of a valid frame failed: {e}"))?;
         let (back, used) = decode_frame(&bytes)
             .map_err(|e| format!("decode of a just-encoded frame failed: {e}"))?
             .ok_or("decode of a complete frame returned need-more")?;
@@ -441,7 +442,8 @@ fn prop_wire_decoder_never_panics_and_errors_are_typed() {
                     workload: 0,
                     request_id: 7,
                     graph: dag,
-                }));
+                }))
+                .map_err(|e| format!("encode of a valid frame failed: {e}"))?;
                 let cut = g.rng.usize_below(bytes.len());
                 match decode_frame(&bytes[..cut]) {
                     Ok(None) => {}
