@@ -789,7 +789,12 @@ pub fn run_slo(opts: &BenchOpts) -> Vec<SloRow> {
             let mut gen_lag_max_s = 0.0f64;
             for h in handles {
                 let stats = h.join().expect("open-loop driver");
-                assert_eq!(stats.offered, stats.completed, "server dropped requests");
+                assert_eq!(
+                    stats.offered,
+                    stats.completed + stats.failed,
+                    "server dropped requests"
+                );
+                assert_eq!(stats.failed, 0, "typed failures in an unarmed bench run");
                 offered += stats.offered;
                 gen_lag_max_s = gen_lag_max_s.max(stats.gen_lag_max_s);
             }

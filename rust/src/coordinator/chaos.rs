@@ -1,0 +1,195 @@
+//! Chaos replay — the fault-tolerance acceptance harness behind
+//! `serve --chaos`.
+//!
+//! With injection points armed (see [`crate::util::fault`]) the driver
+//! pushes deterministic bursty traffic through the TCP front-end and
+//! classifies the terminal outcome of **every** submitted request:
+//!
+//! * `responses` — a well-formed response frame,
+//! * `nacks` — a typed NACK (internal/expired/quarantined/admission/...),
+//! * `transport` — the connection died (an armed `wire.corrupt` poisons
+//!   framing; the stream-level NACK-then-close is itself a typed terminal
+//!   outcome for everything in flight on that connection).
+//!
+//! The **conservation invariant** the run asserts: every submission lands
+//! in exactly one of those buckets, no `collect` call times out (a
+//! timeout with a live connection means a request was silently dropped —
+//! precisely the hang the supervision plane exists to prevent), and the
+//! server + front-end drain within a bounded shutdown window. The
+//! verdict is printed as `chaos_conservation_ok=` (CI greps it) and
+//! merged into `BENCH_serving.json` under the `"chaos"` key.
+
+use std::collections::BTreeMap;
+use std::time::{Duration, Instant};
+
+use anyhow::{Context, Result};
+
+use crate::coordinator::net::{NetOutcome, NetServer, TcpClient};
+use crate::coordinator::server::Server;
+use crate::util::json::Json;
+use crate::util::rng::Rng;
+use crate::workloads::{Workload, WorkloadKind};
+
+/// Per-collect budget: generous enough for a loaded CI runner, small
+/// enough that a genuinely hung request fails the run quickly.
+const COLLECT_TIMEOUT: Duration = Duration::from_secs(20);
+/// Pipelined submissions per burst (stays far below the per-connection
+/// in-flight cap so the cap never converts chaos traffic into NACKs).
+const BURST: usize = 8;
+/// Shutdown must drain within this bound for `drained_ok`.
+const DRAIN_BOUND: Duration = Duration::from_secs(30);
+
+/// What one chaos replay observed, client-side.
+#[derive(Debug, Default)]
+pub struct ChaosReport {
+    pub submitted: u64,
+    pub responses: u64,
+    /// typed NACKs by reason name
+    pub nacks: BTreeMap<String, u64>,
+    /// requests terminated by connection teardown (wire corruption)
+    pub transport: u64,
+    /// collect timeouts — any nonzero count is a conservation violation
+    pub timeouts: u64,
+    /// fresh connections dialed after a poisoned one
+    pub reconnects: u64,
+    pub drain_s: f64,
+    pub drained_ok: bool,
+}
+
+impl ChaosReport {
+    pub fn nacks_total(&self) -> u64 {
+        self.nacks.values().sum()
+    }
+
+    /// Every submission reached exactly one terminal outcome, nothing
+    /// hung, and shutdown drained in time.
+    pub fn conservation_ok(&self) -> bool {
+        self.submitted == self.responses + self.nacks_total() + self.transport
+            && self.timeouts == 0
+            && self.drained_ok
+    }
+
+    pub fn to_json(&self) -> Json {
+        Json::obj(vec![
+            ("submitted", Json::from(self.submitted)),
+            ("responses", Json::from(self.responses)),
+            (
+                "nacks",
+                Json::Obj(
+                    self.nacks
+                        .iter()
+                        .map(|(k, v)| (k.clone(), Json::from(*v)))
+                        .collect(),
+                ),
+            ),
+            ("transport", Json::from(self.transport)),
+            ("timeouts", Json::from(self.timeouts)),
+            ("reconnects", Json::from(self.reconnects)),
+            ("drain_s", Json::from(self.drain_s)),
+            ("drained_ok", Json::Bool(self.drained_ok)),
+            ("conservation_ok", Json::Bool(self.conservation_ok())),
+        ])
+    }
+}
+
+/// Drive the replay and shut both servers down (shutdown latency is part
+/// of the verdict). `requests` is the total submission budget, split
+/// evenly across workloads.
+pub fn run(
+    server: Server,
+    net: NetServer,
+    kinds: &[WorkloadKind],
+    hidden: usize,
+    seed: u64,
+    requests: usize,
+) -> Result<ChaosReport> {
+    let addr = net.local_addr();
+    let mut report = ChaosReport::default();
+    let per_kind = (requests / kinds.len().max(1)).max(1);
+    for (ki, &kind) in kinds.iter().enumerate() {
+        let w = Workload::new(kind, hidden);
+        // a small fixed pool: topologies repeat, so a poison pill (a
+        // topology that panics workers twice) actually gets re-submitted
+        // and exercises the quarantine path
+        let mut rng = Rng::new(seed ^ (0xC4A0 + ki as u64));
+        let pool: Vec<_> = (0..6).map(|_| w.gen_instance(&mut rng)).collect();
+        let mut client = connect(&addr)?;
+        let mut sent = 0usize;
+        while sent < per_kind {
+            let burst = BURST.min(per_kind - sent);
+            let mut rids = Vec::with_capacity(burst);
+            let mut submit_dead = false;
+            for b in 0..burst {
+                match client.submit(kind, pool[(sent + b) % pool.len()].clone()) {
+                    Ok(rid) => {
+                        report.submitted += 1;
+                        rids.push(rid);
+                    }
+                    Err(_) => {
+                        // the write side noticed the poisoned connection
+                        // first: this request never left the process, so
+                        // it is not `submitted` — retry it next burst on
+                        // a fresh connection
+                        submit_dead = true;
+                        break;
+                    }
+                }
+            }
+            sent += rids.len();
+            let mut conn_dead = false;
+            for rid in rids {
+                if conn_dead {
+                    // teardown already classified: everything still owed
+                    // on this connection terminated with it
+                    report.transport += 1;
+                    continue;
+                }
+                match client.collect_outcome(rid) {
+                    Ok(NetOutcome::Response(_)) => report.responses += 1,
+                    Ok(NetOutcome::Nack { reason, .. }) => {
+                        *report.nacks.entry(reason.name().to_string()).or_insert(0) += 1;
+                    }
+                    Err(e) if format!("{e}").contains("timed out") => {
+                        // live connection, no answer: a hung request —
+                        // the exact failure mode supervision must prevent
+                        report.timeouts += 1;
+                    }
+                    Err(_) => {
+                        report.transport += 1;
+                        conn_dead = true;
+                    }
+                }
+            }
+            if conn_dead || submit_dead {
+                report.reconnects += 1;
+                client = connect(&addr)?;
+            }
+        }
+    }
+    let t0 = Instant::now();
+    net.shutdown()?;
+    server.shutdown()?;
+    report.drain_s = t0.elapsed().as_secs_f64();
+    report.drained_ok = t0.elapsed() <= DRAIN_BOUND;
+    Ok(report)
+}
+
+fn connect(addr: &std::net::SocketAddr) -> Result<TcpClient> {
+    let mut c = TcpClient::connect(addr, 0).context("chaos reconnect")?;
+    c.set_read_timeout(Some(COLLECT_TIMEOUT));
+    Ok(c)
+}
+
+/// Merge the chaos verdict into `BENCH_serving.json` (preserving any
+/// bench sections already there; the file is created if absent).
+pub fn write_bench_json(path: &str, report: &ChaosReport) -> Result<()> {
+    let mut root = match std::fs::read_to_string(path) {
+        Ok(text) => Json::parse(&text).unwrap_or_else(|_| Json::Obj(BTreeMap::new())),
+        Err(_) => Json::Obj(BTreeMap::new()),
+    };
+    if let Json::Obj(o) = &mut root {
+        o.insert("chaos".to_string(), report.to_json());
+    }
+    std::fs::write(path, root.to_string())
+        .with_context(|| format!("write chaos verdict to {path}"))
+}

@@ -108,6 +108,10 @@ pub struct ExecReport {
     pub pack_elems: usize,
     /// wall seconds spent packing weights (one-time, off the hot path)
     pub pack_s: f64,
+    /// cells newly degraded to the scalar oracle after the SIMD path
+    /// produced a non-finite value (see `exec::backend`); zero in any
+    /// healthy run
+    pub numerics_degraded: usize,
 }
 
 /// Backend selection for [`CellEngine::new`].
@@ -182,6 +186,12 @@ impl ArenaStateStore {
         let grew = total > self.arena.capacity();
         if grew {
             self.grows += 1;
+            // chaos harness: an armed arena.grow fault turns a growth
+            // event into a panic, exercising the worker supervision path
+            // at a realistic allocation boundary
+            if crate::util::fault::hit("arena.grow") {
+                panic!("injected fault: arena.grow");
+            }
         }
         self.arena.clear();
         self.arena.resize(total, 0.0);
@@ -640,6 +650,7 @@ impl<'a> CellEngine<'a> {
         report.pack_events = (now.pack_events - before.pack_events) as usize;
         report.pack_elems = (now.pack_elems - before.pack_elems) as usize;
         report.pack_s = now.pack_s - before.pack_s;
+        report.numerics_degraded = (now.numerics_degraded - before.numerics_degraded) as usize;
     }
 
     /// Pin the backend to the scalar oracle kernels — the engine half of

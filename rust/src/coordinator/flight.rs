@@ -1,0 +1,196 @@
+//! Opt-in per-request flight recorder (ROADMAP item 5).
+//!
+//! A fixed-size ring buffer of per-request traces — class, workload,
+//! queue wait, batch context, plan/cache provenance, terminal outcome —
+//! recorded at respond time by the worker loop. When something goes
+//! wrong (an SLO violation, a worker panic, a quarantine event) the
+//! ring is dumped to `flight_<epoch_ms>_<n>.json` in the configured
+//! directory, so tail-latency spikes and crashes are debuggable from
+//! artifacts alone: the dump shows exactly which requests shared the
+//! offending batch and what the queue looked like leading up to it.
+//!
+//! Disabled (the default: `ServerConfig::flight_dir == None`) the
+//! server constructs no recorder and the hot path pays nothing. Enabled,
+//! recording is one short mutex-guarded ring push per request — the
+//! serving path never serializes JSON; that cost is paid only on dump.
+
+use std::path::PathBuf;
+use std::sync::atomic::{AtomicU64, Ordering};
+use std::sync::Mutex;
+use std::time::{Instant, SystemTime, UNIX_EPOCH};
+
+use crate::util::json::Json;
+
+/// Ring capacity: enough to hold the recent history around a tail spike
+/// at serving batch sizes without unbounded memory.
+pub const RING_CAPACITY: usize = 256;
+
+/// One request's trace through the serving pipeline. Times are seconds
+/// relative to submission; `at_s` is seconds since recorder creation
+/// (a monotonic session clock, comparable across records).
+#[derive(Clone, Debug)]
+pub struct FlightRecord {
+    pub at_s: f64,
+    pub class: u16,
+    pub workload: &'static str,
+    /// submission → batch dispatch (queue wait)
+    pub queued_s: f64,
+    /// batch dispatch → response send (execution + respond)
+    pub exec_s: f64,
+    /// requests sharing the mini-batch
+    pub batch: usize,
+    /// composed-plan cache provenance: hit, miss, or merged fallback
+    pub plan: &'static str,
+    pub outcome: &'static str,
+}
+
+struct Ring {
+    records: Vec<FlightRecord>,
+    /// next slot to overwrite once the ring is full
+    head: usize,
+    total: u64,
+}
+
+/// The recorder: a mutex-guarded ring plus dump bookkeeping.
+pub struct FlightRecorder {
+    ring: Mutex<Ring>,
+    dir: PathBuf,
+    boot: Instant,
+    dumps: AtomicU64,
+}
+
+impl FlightRecorder {
+    pub fn new(dir: PathBuf) -> FlightRecorder {
+        FlightRecorder {
+            ring: Mutex::new(Ring {
+                records: Vec::with_capacity(RING_CAPACITY),
+                head: 0,
+                total: 0,
+            }),
+            dir,
+            boot: Instant::now(),
+            dumps: AtomicU64::new(0),
+        }
+    }
+
+    /// Seconds since the recorder was created (stamped into records by
+    /// the caller so one lock acquisition covers the whole push).
+    pub fn now_s(&self) -> f64 {
+        self.boot.elapsed().as_secs_f64()
+    }
+
+    pub fn record(&self, rec: FlightRecord) {
+        let mut g = self.lock();
+        g.total += 1;
+        if g.records.len() < RING_CAPACITY {
+            g.records.push(rec);
+        } else {
+            let head = g.head;
+            g.records[head] = rec;
+            g.head = (head + 1) % RING_CAPACITY;
+        }
+    }
+
+    /// Dump the ring (oldest first) to `flight_<epoch_ms>_<n>.json`,
+    /// tagged with the trigger (`"slo-violation"`, `"worker-panic"`,
+    /// `"quarantine"`). Returns the path written. Dump failures are
+    /// reported, never propagated — the recorder must not be able to
+    /// take the serving path down.
+    pub fn dump(&self, trigger: &str) -> Option<PathBuf> {
+        let n = self.dumps.fetch_add(1, Ordering::Relaxed);
+        let (snapshot, total) = {
+            let g = self.lock();
+            let mut v = Vec::with_capacity(g.records.len());
+            v.extend_from_slice(&g.records[g.head..]);
+            v.extend_from_slice(&g.records[..g.head]);
+            (v, g.total)
+        };
+        let epoch_ms = SystemTime::now()
+            .duration_since(UNIX_EPOCH)
+            .map(|d| d.as_millis() as u64)
+            .unwrap_or(0);
+        let rows: Vec<Json> = snapshot
+            .iter()
+            .map(|r| {
+                Json::obj(vec![
+                    ("at_s", Json::Num(r.at_s)),
+                    ("class", Json::Num(r.class as f64)),
+                    ("workload", Json::Str(r.workload.to_string())),
+                    ("queued_s", Json::Num(r.queued_s)),
+                    ("exec_s", Json::Num(r.exec_s)),
+                    ("batch", Json::Num(r.batch as f64)),
+                    ("plan", Json::Str(r.plan.to_string())),
+                    ("outcome", Json::Str(r.outcome.to_string())),
+                ])
+            })
+            .collect();
+        let doc = Json::obj(vec![
+            ("trigger", Json::Str(trigger.to_string())),
+            ("epoch_ms", Json::Num(epoch_ms as f64)),
+            ("recorded_total", Json::Num(total as f64)),
+            ("ring_capacity", Json::Num(RING_CAPACITY as f64)),
+            ("records", Json::Arr(rows)),
+        ]);
+        let path = self.dir.join(format!("flight_{epoch_ms}_{n}.json"));
+        if let Err(e) = std::fs::create_dir_all(&self.dir)
+            .and_then(|()| std::fs::write(&path, doc.to_string()))
+        {
+            eprintln!("flight recorder: dump to {} failed: {e}", path.display());
+            return None;
+        }
+        Some(path)
+    }
+
+    pub fn dump_count(&self) -> u64 {
+        self.dumps.load(Ordering::Relaxed)
+    }
+
+    fn lock(&self) -> std::sync::MutexGuard<'_, Ring> {
+        // worker panics must not wedge the recorder
+        self.ring.lock().unwrap_or_else(|p| p.into_inner())
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn rec(at: f64) -> FlightRecord {
+        FlightRecord {
+            at_s: at,
+            class: 0,
+            workload: "treelstm",
+            queued_s: 0.001,
+            exec_s: 0.002,
+            batch: 4,
+            plan: "hit",
+            outcome: "response",
+        }
+    }
+
+    #[test]
+    fn ring_overwrites_oldest_and_dump_orders_oldest_first() {
+        let dir = std::env::temp_dir().join(format!("ed_flight_test_{}", std::process::id()));
+        let fr = FlightRecorder::new(dir.clone());
+        for i in 0..(RING_CAPACITY + 10) {
+            fr.record(rec(i as f64));
+        }
+        let path = fr.dump("slo-violation").expect("dump");
+        let doc = Json::parse(&std::fs::read_to_string(&path).unwrap()).unwrap();
+        assert_eq!(doc.get("trigger").unwrap().as_str(), Some("slo-violation"));
+        assert_eq!(
+            doc.get("recorded_total").unwrap().as_usize(),
+            Some(RING_CAPACITY + 10)
+        );
+        let rows = doc.get("records").unwrap().as_arr().unwrap();
+        assert_eq!(rows.len(), RING_CAPACITY);
+        // oldest surviving record is #10, newest is the last pushed
+        assert_eq!(rows[0].get("at_s").unwrap().as_usize(), Some(10));
+        assert_eq!(
+            rows[RING_CAPACITY - 1].get("at_s").unwrap().as_usize(),
+            Some(RING_CAPACITY + 9)
+        );
+        assert_eq!(fr.dump_count(), 1);
+        let _ = std::fs::remove_dir_all(&dir);
+    }
+}

@@ -94,6 +94,16 @@ struct Inner {
     // zero-downtime policy hot-reload
     reload_swaps: u64,
     reload_generation: u64,
+    // fault-tolerance plane (coordinator::supervise / util::fault)
+    worker_panics: u64,
+    worker_respawns: u64,
+    quarantined: u64,
+    quarantine_rejects: u64,
+    expired: u64,
+    internal_failures: u64,
+    flight_dumps: u64,
+    conn_cap_rejects: u64,
+    numerics_degraded: u64,
 }
 
 /// Thread-safe metrics sink shared between server workers.
@@ -221,6 +231,24 @@ pub struct MetricsSnapshot {
     pub reload_swaps: u64,
     /// PolicyStore generation observed at the latest reload (0 = none)
     pub reload_generation: u64,
+    /// worker panics contained at the batch `catch_unwind` boundary
+    pub worker_panics: u64,
+    /// engines rebuilt in place after a contained panic
+    pub worker_respawns: u64,
+    /// topology fingerprints quarantined as poison pills
+    pub quarantined: u64,
+    /// submissions rejected because their fingerprint is quarantined
+    pub quarantine_rejects: u64,
+    /// requests shed pre-dispatch because their deadline passed
+    pub expired: u64,
+    /// requests terminated with an `Internal` outcome (batch died)
+    pub internal_failures: u64,
+    /// flight-recorder ring dumps written
+    pub flight_dumps: u64,
+    /// frames NACKed by the per-connection in-flight cap
+    pub conn_cap_rejects: u64,
+    /// cells degraded to the scalar oracle after a non-finite SIMD result
+    pub numerics_degraded: u64,
     pub breakdown: TimeBreakdown,
     pub elapsed_s: f64,
 }
@@ -322,29 +350,39 @@ impl Metrics {
         }
     }
 
+    /// Poison-tolerant lock: the supervision path records metrics from
+    /// workers that have just caught a panic, and a panic elsewhere must
+    /// never wedge the whole sink.
+    fn lock(&self) -> std::sync::MutexGuard<'_, Inner> {
+        self.inner.lock().unwrap_or_else(|p| p.into_inner())
+    }
+
     /// Restart the throughput clock (called once the server finishes boot —
     /// artifact compilation and policy resolution shouldn't count against
     /// serving throughput).
     pub fn reset_clock(&self) {
-        *self.started.lock().unwrap() = Instant::now();
+        *self
+            .started
+            .lock()
+            .unwrap_or_else(|p| p.into_inner()) = Instant::now();
     }
 
     /// Configure the p99 latency target every recorded request is checked
     /// against (called once at server boot when `--slo-p99-ms` is set).
     pub fn set_slo(&self, p99_target_s: f64) {
-        self.inner.lock().unwrap().slo_target_s = p99_target_s;
+        self.lock().slo_target_s = p99_target_s;
     }
 
     /// Record the per-worker intra-batch pool size (called once at
     /// server boot; denominates the occupancy ratio).
     pub fn set_pool_threads(&self, threads: u64) {
-        self.inner.lock().unwrap().pool_threads = threads.max(1);
+        self.lock().pool_threads = threads.max(1);
     }
 
     /// Record the worker engines' kernel configuration (called once per
     /// worker at boot; every worker reports the same detection result).
     pub fn set_kernel_config(&self, level: &'static str, simd_active: bool, strict: bool) {
-        let mut g = self.inner.lock().unwrap();
+        let mut g = self.lock();
         g.simd_level = level;
         g.simd_active = simd_active;
         g.strict_bitwise = strict;
@@ -354,7 +392,7 @@ impl Metrics {
     /// seconds)` per class, in tenant-id order. Until this is called,
     /// per-class recording is a no-op (filesystem-free unit tests).
     pub fn register_classes(&self, classes: &[(String, f64)]) {
-        let mut g = self.inner.lock().unwrap();
+        let mut g = self.lock();
         g.classes = classes
             .iter()
             .map(|(name, slo)| ClassInner {
@@ -367,7 +405,7 @@ impl Metrics {
 
     /// Admission-control outcome for one submission under class `class`.
     pub fn record_admission(&self, class: usize, outcome: Admission) {
-        let mut g = self.inner.lock().unwrap();
+        let mut g = self.lock();
         if let Some(c) = g.classes.get_mut(class) {
             match outcome {
                 Admission::Admitted => c.admitted += 1,
@@ -380,32 +418,72 @@ impl Metrics {
     /// A policy hot-reload swap was published (`generation` = PolicyStore
     /// generation observed, 0 when no store is configured).
     pub fn record_reload(&self, generation: u64) {
-        let mut g = self.inner.lock().unwrap();
+        let mut g = self.lock();
         g.reload_swaps += 1;
         g.reload_generation = g.reload_generation.max(generation);
     }
 
     /// One TCP connection accepted by the network front-end.
     pub fn record_net_conn(&self) {
-        self.inner.lock().unwrap().net_conns += 1;
+        self.lock().net_conns += 1;
     }
 
     /// One request frame decoded from a client.
     pub fn record_net_frame_in(&self) {
-        self.inner.lock().unwrap().net_frames_in += 1;
+        self.lock().net_frames_in += 1;
     }
 
     /// One frame written to a client; `nack` marks rejection frames.
     pub fn record_net_frame_out(&self, nack: bool) {
-        let mut g = self.inner.lock().unwrap();
+        let mut g = self.lock();
         g.net_frames_out += 1;
         if nack {
             g.net_nacks += 1;
         }
     }
 
+    /// A worker panic was contained at the batch boundary.
+    pub fn record_worker_panic(&self) {
+        self.lock().worker_panics += 1;
+    }
+
+    /// A worker finished rebuilding its engine after a contained panic.
+    pub fn record_worker_respawn(&self) {
+        self.lock().worker_respawns += 1;
+    }
+
+    /// `n` topology fingerprints were newly quarantined as poison pills.
+    pub fn record_quarantined(&self, n: u64) {
+        self.lock().quarantined += n;
+    }
+
+    /// A submission was rejected because its fingerprint is quarantined.
+    pub fn record_quarantine_reject(&self) {
+        self.lock().quarantine_rejects += 1;
+    }
+
+    /// A queued request was shed pre-dispatch: its deadline passed.
+    pub fn record_expired(&self) {
+        self.lock().expired += 1;
+    }
+
+    /// A request was terminated with a typed `Internal` outcome.
+    pub fn record_internal_failure(&self) {
+        self.lock().internal_failures += 1;
+    }
+
+    /// The flight recorder dumped its ring to disk.
+    pub fn record_flight_dump(&self) {
+        self.lock().flight_dumps += 1;
+    }
+
+    /// A frame was NACKed by the per-connection in-flight cap.
+    pub fn record_conn_cap_reject(&self) {
+        self.lock().conn_cap_rejects += 1;
+    }
+
     pub fn record_request(&self, workload: &'static str, class: usize, latency: Duration) {
-        let mut g = self.inner.lock().unwrap();
+        let mut g = self.lock();
         g.requests += 1;
         let lat_s = latency.as_secs_f64();
         if g.slo_target_s > 0.0 && lat_s > g.slo_target_s {
@@ -426,7 +504,7 @@ impl Metrics {
 
     /// Queue depth (requests waiting across all queues) after an enqueue.
     pub fn record_enqueue(&self, depth: usize) {
-        let mut g = self.inner.lock().unwrap();
+        let mut g = self.lock();
         g.queue_depth_sum += depth as u64;
         g.queue_depth_samples += 1;
         g.queue_depth_max = g.queue_depth_max.max(depth as u64);
@@ -434,7 +512,7 @@ impl Metrics {
 
     /// Boot-time policy resolution outcome for one workload kind.
     pub fn record_store_resolution(&self, hit: bool, trained: bool) {
-        let mut g = self.inner.lock().unwrap();
+        let mut g = self.lock();
         if hit {
             g.store_hits += 1;
         } else {
@@ -453,7 +531,7 @@ impl Metrics {
         breakdown: &TimeBreakdown,
         report: &crate::coordinator::engine::ExecReport,
     ) {
-        let mut g = self.inner.lock().unwrap();
+        let mut g = self.lock();
         g.instances += instances as u64;
         g.minibatches += 1;
         g.breakdown.add(breakdown);
@@ -476,10 +554,11 @@ impl Metrics {
         g.pack_events += report.pack_events as u64;
         g.pack_elems += report.pack_elems as u64;
         g.pack_s += report.pack_s;
+        g.numerics_degraded += report.numerics_degraded as u64;
     }
 
     pub fn snapshot(&self) -> MetricsSnapshot {
-        let g = self.inner.lock().unwrap();
+        let g = self.lock();
         MetricsSnapshot {
             requests: g.requests,
             instances: g.instances,
@@ -558,8 +637,22 @@ impl Metrics {
             net_nacks: g.net_nacks,
             reload_swaps: g.reload_swaps,
             reload_generation: g.reload_generation,
+            worker_panics: g.worker_panics,
+            worker_respawns: g.worker_respawns,
+            quarantined: g.quarantined,
+            quarantine_rejects: g.quarantine_rejects,
+            expired: g.expired,
+            internal_failures: g.internal_failures,
+            flight_dumps: g.flight_dumps,
+            conn_cap_rejects: g.conn_cap_rejects,
+            numerics_degraded: g.numerics_degraded,
             breakdown: g.breakdown,
-            elapsed_s: self.started.lock().unwrap().elapsed().as_secs_f64(),
+            elapsed_s: self
+                .started
+                .lock()
+                .unwrap_or_else(|p| p.into_inner())
+                .elapsed()
+                .as_secs_f64(),
         }
     }
 }
@@ -789,6 +882,43 @@ mod tests {
         assert_eq!(s.per_class[1].rejected_bucket, 1);
         assert_eq!(s.per_class[1].slo_violations, 0);
         assert!(s.per_class[0].p99_s >= s.per_class[0].p50_s);
+    }
+
+    #[test]
+    fn fault_tolerance_counters() {
+        let m = Metrics::new();
+        // all zero when the plane never fires (unarmed byte-identity)
+        let s0 = m.snapshot();
+        assert_eq!(s0.worker_panics, 0);
+        assert_eq!(s0.expired, 0);
+        assert_eq!(s0.numerics_degraded, 0);
+        m.record_worker_panic();
+        m.record_worker_respawn();
+        m.record_quarantined(2);
+        m.record_quarantine_reject();
+        m.record_expired();
+        m.record_expired();
+        m.record_internal_failure();
+        m.record_flight_dump();
+        m.record_conn_cap_reject();
+        m.record_minibatch(
+            1,
+            &TimeBreakdown::default(),
+            &ExecReport {
+                numerics_degraded: 1,
+                ..Default::default()
+            },
+        );
+        let s = m.snapshot();
+        assert_eq!(s.worker_panics, 1);
+        assert_eq!(s.worker_respawns, 1);
+        assert_eq!(s.quarantined, 2);
+        assert_eq!(s.quarantine_rejects, 1);
+        assert_eq!(s.expired, 2);
+        assert_eq!(s.internal_failures, 1);
+        assert_eq!(s.flight_dumps, 1);
+        assert_eq!(s.conn_cap_rejects, 1);
+        assert_eq!(s.numerics_degraded, 1);
     }
 
     #[test]

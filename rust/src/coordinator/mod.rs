@@ -17,6 +17,16 @@
 //!   speaking the length-prefixed binary wire protocol of
 //!   [`crate::util::wire`], mapping tenant ids to SLO classes and
 //!   answering admission rejections with typed NACK frames,
+//! * [`supervise`] — the fault-tolerance plane: `catch_unwind` batch
+//!   boundaries, worker respawn accounting, and poison-pill quarantine
+//!   keyed on topology fingerprints,
+//! * [`flight`] — opt-in per-request flight recorder (ring buffer of
+//!   pipeline timestamps + provenance, dumped on SLO violation, panic,
+//!   or quarantine),
+//! * [`chaos`] — the `serve --chaos` replay: deterministic bursty wire
+//!   traffic under armed fault injection, asserting the request
+//!   conservation invariant (every submission reaches exactly one typed
+//!   terminal outcome),
 //! * [`traffic`] — open-loop load generation (Poisson and bursty ON/OFF
 //!   arrival processes) for realistic serving benchmarks,
 //! * [`metrics`] — throughput/latency/queue-depth/SLO/policy-store
@@ -24,13 +34,16 @@
 //! * [`policies`] — mode → policy resolution (persistence lives in
 //!   [`crate::policystore`]).
 
+pub mod chaos;
 pub mod compose;
 pub mod dispatch;
 pub mod engine;
+pub mod flight;
 pub mod metrics;
 pub mod net;
 pub mod policies;
 pub mod server;
+pub mod supervise;
 pub mod traffic;
 
 /// Which batching policy + memory mode a serving configuration uses —

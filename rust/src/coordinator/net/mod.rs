@@ -36,13 +36,14 @@ use anyhow::{anyhow, bail, Context, Result};
 use rustc_hash::FxHashMap;
 
 use crate::graph::Graph;
+use crate::util::fault;
 use crate::util::wire::{
     decode_frame, encode_frame, Frame, NackFrame, NackReason, RequestFrame, ResponseFrame,
 };
 use crate::workloads::{Workload, WorkloadKind, ALL_WORKLOADS};
 
 use super::metrics::Metrics;
-use super::server::{Client, Response, Server, SubmitError};
+use super::server::{Client, ReqOutcome, Response, Server, SubmitError};
 
 /// Park time when a full accept/read/write sweep made no progress.
 const IDLE_SLEEP: Duration = Duration::from_micros(500);
@@ -55,6 +56,10 @@ const ACCEPT_BACKOFF: Duration = Duration::from_millis(5);
 /// Consecutive non-transient accept failures before the listener is
 /// declared dead.
 const MAX_ACCEPT_ERRS: u32 = 256;
+/// Default per-connection in-flight request cap (ROADMAP item 3): one
+/// pipelining client cannot queue unbounded work ahead of admission.
+/// Excess frames get a typed `QueueBudget` NACK, the connection lives on.
+pub const DEFAULT_INFLIGHT_CAP: usize = 256;
 
 /// The wire workload code for a kind (index into [`ALL_WORKLOADS`]).
 pub fn workload_code(kind: WorkloadKind) -> u16 {
@@ -69,7 +74,7 @@ struct PendingReq {
     rid: u64,
     tenant: u16,
     workload: u16,
-    rx: Receiver<Response>,
+    rx: Receiver<ReqOutcome>,
 }
 
 /// Shared routing state for the IO thread: submission clients plus the
@@ -84,6 +89,8 @@ struct Router {
     /// per-type frontier tables inside a worker (a panic, not an `Err`,
     /// so it must never pass admission).
     op_limits: Vec<u16>,
+    /// per-connection in-flight cap ([`DEFAULT_INFLIGHT_CAP`])
+    inflight_cap: usize,
 }
 
 /// Per-connection state: read buffer, pending responses, write queue.
@@ -172,6 +179,13 @@ impl Conn {
                         break;
                     }
                     Ok(n) => {
+                        // chaos point: an armed `wire.corrupt` flips one byte
+                        // of the freshly-read chunk before it enters framing,
+                        // so corruption surfaces as a Malformed NACK (a typed
+                        // terminal outcome), never a hang
+                        if fault::hit("wire.corrupt") {
+                            chunk[n / 2] ^= 0xA5;
+                        }
                         self.rbuf.extend_from_slice(&chunk[..n]);
                         progress = true;
                     }
@@ -224,7 +238,7 @@ impl Conn {
         let mut i = 0;
         while i < self.pending.len() {
             match self.pending[i].rx.try_recv() {
-                Ok(resp) => {
+                Ok(ReqOutcome::Response(resp)) => {
                     let p = self.pending.swap_remove(i);
                     let (spans, data) = resp.wire_parts();
                     self.queue_frame(
@@ -238,6 +252,13 @@ impl Conn {
                         }),
                         metrics,
                     );
+                    progress = true;
+                }
+                Ok(ReqOutcome::Failed(f)) => {
+                    // typed terminal failure from the serving plane (worker
+                    // panic, expired deadline, ...): relay it as a NACK
+                    let p = self.pending.swap_remove(i);
+                    self.queue_nack(metrics, p.tenant, p.workload, p.rid, f.reason, f.message);
                     progress = true;
                 }
                 Err(TryRecvError::Disconnected) => {
@@ -300,6 +321,23 @@ impl Conn {
         };
         metrics.record_net_frame_in();
         let (tenant, workload, rid) = (rf.tenant, rf.workload, rf.request_id);
+        // per-connection in-flight cap: shed before any per-request work so
+        // a pipelining client cannot amplify load past admission control
+        if self.pending.len() >= router.inflight_cap {
+            metrics.record_conn_cap_reject();
+            self.queue_nack(
+                metrics,
+                tenant,
+                workload,
+                rid,
+                NackReason::QueueBudget,
+                format!(
+                    "connection in-flight cap {} reached; collect responses before submitting more",
+                    router.inflight_cap
+                ),
+            );
+            return;
+        }
         if tenant >= router.nclasses {
             self.queue_nack(
                 metrics,
@@ -395,6 +433,12 @@ impl NetServer {
     /// Bind `addr` (e.g. `127.0.0.1:0` for an ephemeral port) and start
     /// serving the wire protocol on top of `server`'s admission path.
     pub fn start(server: &Server, addr: &str) -> Result<NetServer> {
+        Self::start_with_cap(server, addr, DEFAULT_INFLIGHT_CAP)
+    }
+
+    /// [`NetServer::start`] with an explicit per-connection in-flight cap
+    /// (`0` rejects every request — useful for testing the shed path).
+    pub fn start_with_cap(server: &Server, addr: &str, inflight_cap: usize) -> Result<NetServer> {
         let listener = TcpListener::bind(addr).with_context(|| format!("bind {addr}"))?;
         listener.set_nonblocking(true)?;
         let local = listener.local_addr()?;
@@ -418,6 +462,7 @@ impl NetServer {
             metrics: server.metrics.clone(),
             nclasses,
             op_limits,
+            inflight_cap,
         };
         let stop = Arc::new(AtomicBool::new(false));
         let stop2 = stop.clone();
@@ -537,6 +582,18 @@ pub struct TcpClient {
     inbox: FxHashMap<u64, Frame>,
     tenant: u16,
     next_id: u64,
+    /// per-`collect` budget: how long one call may block waiting for its
+    /// frame before it fails with a typed timeout (None = wait forever)
+    read_timeout: Option<Duration>,
+}
+
+/// Typed terminal outcome of one wire request. NACKs are first-class here
+/// (the chaos driver counts them as expected completions, not errors);
+/// [`TcpClient::collect`] flattens them into `Err`.
+#[derive(Debug)]
+pub enum NetOutcome {
+    Response(Response),
+    Nack { reason: NackReason, message: String },
 }
 
 impl TcpClient {
@@ -549,7 +606,15 @@ impl TcpClient {
             inbox: FxHashMap::default(),
             tenant,
             next_id: 1,
+            read_timeout: None,
         })
+    }
+
+    /// Bound every subsequent [`TcpClient::collect`] call: if the matching
+    /// frame has not arrived within `t`, the call fails instead of hanging
+    /// on a server that will never answer.
+    pub fn set_read_timeout(&mut self, t: Option<Duration>) {
+        self.read_timeout = t;
     }
 
     /// Send one request frame; returns its request id.
@@ -570,14 +635,27 @@ impl TcpClient {
     /// answers are parked in the inbox). A NACK for `rid` becomes a typed
     /// error carrying the reason name.
     pub fn collect(&mut self, rid: u64) -> Result<Response> {
+        match self.collect_outcome(rid)? {
+            NetOutcome::Response(r) => Ok(r),
+            NetOutcome::Nack { reason, message } => {
+                bail!("request NACKed ({}): {message}", reason.name())
+            }
+        }
+    }
+
+    /// Like [`TcpClient::collect`] but keeps NACKs typed instead of
+    /// flattening them into errors; `Err` is reserved for transport-level
+    /// failures (disconnect, framing, timeout).
+    pub fn collect_outcome(&mut self, rid: u64) -> Result<NetOutcome> {
+        let deadline = self.read_timeout.map(|t| Instant::now() + t);
         loop {
             if let Some(frame) = self.inbox.remove(&rid) {
-                return Self::unwrap_response(frame);
+                return Self::unwrap_outcome(frame);
             }
-            let frame = self.read_frame()?;
+            let frame = self.read_frame(deadline)?;
             let id = frame.request_id();
             if id == rid {
-                return Self::unwrap_response(frame);
+                return Self::unwrap_outcome(frame);
             }
             // request id 0 is the server's stream-level error slot (our
             // ids start at 1): the connection is poisoned and about to
@@ -598,30 +676,48 @@ impl TcpClient {
         self.collect(rid)
     }
 
-    fn unwrap_response(frame: Frame) -> Result<Response> {
+    fn unwrap_outcome(frame: Frame) -> Result<NetOutcome> {
         match frame {
-            Frame::Response(r) => Ok(Response::from_wire(
+            Frame::Response(r) => Ok(NetOutcome::Response(Response::from_wire(
                 r.spans,
                 r.data,
                 Duration::from_secs_f64(r.latency_s.max(0.0)),
-            )),
-            Frame::Nack(n) => bail!("request NACKed ({}): {}", n.reason.name(), n.message),
+            ))),
+            Frame::Nack(n) => Ok(NetOutcome::Nack {
+                reason: n.reason,
+                message: n.message,
+            }),
             Frame::Request(_) => bail!("server sent a request frame"),
         }
     }
 
-    fn read_frame(&mut self) -> Result<Frame> {
+    fn read_frame(&mut self, deadline: Option<Instant>) -> Result<Frame> {
         let mut chunk = [0u8; READ_CHUNK];
         loop {
             if let Some((frame, used)) = decode_frame(&self.rbuf)? {
                 self.rbuf.drain(..used);
                 return Ok(frame);
             }
-            let n = self.stream.read(&mut chunk)?;
-            if n == 0 {
-                bail!("connection closed mid-frame");
+            if let Some(d) = deadline {
+                let now = Instant::now();
+                if now >= d {
+                    bail!("timed out waiting for a frame");
+                }
+                self.stream.set_read_timeout(Some(d - now))?;
             }
-            self.rbuf.extend_from_slice(&chunk[..n]);
+            let read = self.stream.read(&mut chunk);
+            if deadline.is_some() {
+                let _ = self.stream.set_read_timeout(None);
+            }
+            match read {
+                Ok(0) => bail!("connection closed mid-frame"),
+                Ok(n) => self.rbuf.extend_from_slice(&chunk[..n]),
+                Err(e) if matches!(e.kind(), ErrorKind::WouldBlock | ErrorKind::TimedOut) => {
+                    bail!("timed out waiting for a frame")
+                }
+                Err(e) if e.kind() == ErrorKind::Interrupted => continue,
+                Err(e) => return Err(e.into()),
+            }
         }
     }
 }
@@ -774,5 +870,44 @@ mod tests {
         }
         net.shutdown().unwrap();
         server.shutdown().unwrap();
+    }
+
+    #[test]
+    fn conn_inflight_cap_sheds_with_typed_nack() {
+        let server = quick_server();
+        // cap 0: every request is shed at the connection before admission,
+        // which makes the test deterministic (no race against completion)
+        let net = NetServer::start_with_cap(&server, "127.0.0.1:0", 0).unwrap();
+        let w = Workload::new(WorkloadKind::TreeLstm, 32);
+        let mut rng = Rng::new(63);
+        let mut client = TcpClient::connect(&net.local_addr(), 0).unwrap();
+        let rid = client.submit(WorkloadKind::TreeLstm, w.gen_instance(&mut rng)).unwrap();
+        match client.collect_outcome(rid).unwrap() {
+            NetOutcome::Nack { reason, message } => {
+                assert_eq!(reason, NackReason::QueueBudget);
+                assert!(message.contains("in-flight cap"), "message: {message}");
+            }
+            NetOutcome::Response(_) => panic!("request should have been shed by the conn cap"),
+        }
+        // the connection survives the shed: a plain error path, not poison
+        let rid2 = client.submit(WorkloadKind::TreeLstm, w.gen_instance(&mut rng)).unwrap();
+        assert!(client.collect(rid2).is_err());
+        assert_eq!(server.metrics.snapshot().conn_cap_rejects, 2);
+        net.shutdown().unwrap();
+        server.shutdown().unwrap();
+    }
+
+    #[test]
+    fn collect_read_timeout_fails_instead_of_hanging() {
+        // a bare listener that accepts and never answers
+        let listener = TcpListener::bind("127.0.0.1:0").unwrap();
+        let addr = listener.local_addr().unwrap();
+        let mut client = TcpClient::connect(&addr, 0).unwrap();
+        let (_peer, _) = listener.accept().unwrap();
+        client.set_read_timeout(Some(Duration::from_millis(50)));
+        let start = Instant::now();
+        let err = client.collect_outcome(1).unwrap_err();
+        assert!(err.to_string().contains("timed out"), "err: {err:#}");
+        assert!(start.elapsed() < Duration::from_secs(10));
     }
 }

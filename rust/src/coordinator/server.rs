@@ -61,12 +61,25 @@
 //! values are policy-invariant — a policy only changes batching order),
 //! so nothing is dropped or misrouted (counter-asserted in tests).
 //!
+//! **Fault-tolerance plane** ([`super::supervise`], DESIGN.md §11):
+//! every batch executes behind a `catch_unwind` boundary. A panic fails
+//! only the dying batch — each of its requests gets a typed `Internal`
+//! terminal outcome on its channel (the wire front-end maps it to a NACK,
+//! never a hung client), the worker rebuilds a fresh engine in place,
+//! and a topology fingerprint implicated in two kills is quarantined at
+//! admission. Requests optionally carry an SLO-derived **deadline**
+//! (`--deadline-factor`); expired requests are shed pre-dispatch with a
+//! typed `Expired` outcome. The conservation invariant — every admitted
+//! request reaches exactly one terminal outcome — is what `serve
+//! --chaos` replays under seeded fault injection ([`crate::util::fault`]).
+//!
 //! (tokio is unavailable in this build environment — see Cargo.toml — so
 //! the router is built on `Mutex<queues>` + `Condvar` + threads; the
 //! architecture is the same as an async one: one logical task per request,
 //! a shared dispatch state, N executor workers.)
 
 use std::collections::VecDeque;
+use std::path::PathBuf;
 use std::sync::atomic::{AtomicBool, AtomicU64, Ordering};
 use std::sync::mpsc::{sync_channel, Receiver, SyncSender};
 use std::sync::{Arc, Condvar, Mutex};
@@ -85,6 +98,7 @@ use crate::policystore::PolicyStore;
 use crate::rl::dispatch_sim::SimConfig;
 use crate::rl::TrainConfig;
 use crate::runtime::ArtifactRegistry;
+use crate::util::fault;
 use crate::util::rng::Rng;
 use crate::util::wire::NackReason;
 use crate::workloads::{Workload, WorkloadKind};
@@ -94,8 +108,10 @@ use super::dispatch::{
     DispatchController, DispatchMode, SchedulerPolicy, SloClassConfig, SloConfig,
 };
 use super::engine::{ArenaStateStore, Backend, CellEngine, ExecReport};
+use super::flight::{FlightRecord, FlightRecorder};
 use super::metrics::{Admission, Metrics};
 use super::policies::calibrate_prefers_depth;
+use super::supervise::{run_guarded, BatchAttempt, Supervisor};
 use super::{SystemMode, TimeBreakdown};
 
 /// How long an idle worker sleeps between dispatch checks when no queue
@@ -167,6 +183,15 @@ pub struct ServerConfig {
     /// poll interval for the PolicyStore-generation hot-reload watcher;
     /// `None` = reload only on explicit [`Server::reload_policies`] calls
     pub hot_reload_poll: Option<Duration>,
+    /// `--deadline-factor`: each request's pre-dispatch deadline is
+    /// `factor × class p99 target`; requests still queued past it are
+    /// shed with a typed `Expired` outcome. `0.0` (the default)
+    /// disables deadlines entirely — no per-request state, no shedding
+    /// scan behavior change (the unarmed byte-identity contract)
+    pub deadline_factor: f64,
+    /// flight-recorder dump directory (`--flight-dir`); `None` (the
+    /// default) disables recording entirely (see [`super::flight`])
+    pub flight_dir: Option<String>,
 }
 
 impl Default for ServerConfig {
@@ -191,6 +216,8 @@ impl Default for ServerConfig {
             strict_bitwise: false,
             classes: Vec::new(),
             hot_reload_poll: None,
+            deadline_factor: 0.0,
+            flight_dir: None,
         }
     }
 }
@@ -215,7 +242,61 @@ pub struct Request {
     /// [`Server::client_for_class`])
     class: u16,
     submitted: Instant,
-    respond: SyncSender<Response>,
+    /// pre-dispatch deadline (`--deadline-factor` × class p99 target);
+    /// `None` when deadlines are disabled
+    deadline: Option<Instant>,
+    /// topology fingerprint, computed once at admission: the quarantine
+    /// key the supervisor attributes worker kills to
+    fingerprint: u64,
+    respond: SyncSender<ReqOutcome>,
+}
+
+impl Request {
+    /// Deliver a typed terminal failure on the request's channel. The
+    /// channel is `sync_channel(1)` and this is its only send, so the
+    /// call never blocks (safe under the dispatcher lock).
+    fn fail(self, reason: NackReason, message: String) {
+        let _ = self
+            .respond
+            .send(ReqOutcome::Failed(RequestFailure { reason, message }));
+    }
+}
+
+/// A typed terminal failure: what a request's waiter receives when the
+/// request will never produce a [`Response`] — worker panic
+/// (`Internal`), deadline shed (`Expired`), or server stop (`Closed`).
+/// The wire front-end maps it onto a NACK frame with the same reason.
+#[derive(Clone, Debug)]
+pub struct RequestFailure {
+    pub reason: NackReason,
+    pub message: String,
+}
+
+impl std::fmt::Display for RequestFailure {
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        write!(f, "request failed ({}): {}", self.reason.name(), self.message)
+    }
+}
+
+/// The exactly-one terminal outcome every admitted request receives on
+/// its channel (the conservation invariant `serve --chaos` asserts):
+/// either the response or a typed failure. A `RecvError` on the channel
+/// is still possible if the whole process is torn down mid-request, but
+/// no code path drops a `Request` without sending first.
+#[derive(Clone, Debug)]
+pub enum ReqOutcome {
+    Response(Response),
+    Failed(RequestFailure),
+}
+
+impl ReqOutcome {
+    /// Flatten into a `Result` (in-process callers).
+    pub fn into_result(self) -> Result<Response, RequestFailure> {
+        match self {
+            ReqOutcome::Response(r) => Ok(r),
+            ReqOutcome::Failed(f) => Err(f),
+        }
+    }
 }
 
 /// Response: the h-outputs of the instance's sink nodes (nodes with no
@@ -369,6 +450,9 @@ impl TokenBucket {
 struct ClassRuntime {
     cfg: SloClassConfig,
     bucket: Option<TokenBucket>,
+    /// pre-dispatch request deadline (`--deadline-factor` × class p99
+    /// target); `None` when deadlines are disabled
+    deadline: Option<Duration>,
 }
 
 /// Shared dispatch state: per-(class, workload) queues + shutdown flag.
@@ -392,6 +476,9 @@ struct Dispatcher {
     cv: Condvar,
     /// hidden width, for the static admission cost prior
     hidden: usize,
+    /// pool-wide supervision ledger: panic/respawn counters + the
+    /// poison-pill quarantine checked at admission
+    supervisor: Supervisor,
 }
 
 /// Boot-resolved policy prototype; each worker instantiates its own
@@ -484,14 +571,27 @@ pub struct Client {
 
 impl Client {
     /// Non-blocking submission with typed admission outcomes: enqueue the
-    /// request and return the receiver its [`Response`] will arrive on,
+    /// request and return the receiver its [`ReqOutcome`] will arrive on,
     /// or a typed rejection. Admission runs under the dispatcher lock:
     /// first the class **cost budget** — reject when
     /// `(depth + 1) × cost-EWMA` (static `nodes × hidden × 2` prior until
     /// a batch has been measured) exceeds `admit_budget_elems` — then the
     /// class **token bucket**. The default class has neither limit, so
-    /// the legacy open-loop path never sheds.
-    pub fn try_submit(&self, graph: Graph) -> Result<Receiver<Response>, SubmitError> {
+    /// the legacy open-loop path never sheds. A topology fingerprint the
+    /// supervisor has quarantined (it killed workers twice) is rejected
+    /// before either check — the poison-pill NACK.
+    pub fn try_submit(&self, graph: Graph) -> Result<Receiver<ReqOutcome>, SubmitError> {
+        let fingerprint = graph.topology_fingerprint();
+        if self.dispatcher.supervisor.is_quarantined(fingerprint) {
+            self.dispatcher.supervisor.record_reject();
+            self.metrics.record_quarantine_reject();
+            return Err(SubmitError::Rejected {
+                reason: NackReason::Quarantined,
+                message: format!(
+                    "topology {fingerprint:#018x} is quarantined: it killed workers twice"
+                ),
+            });
+        }
         let (rtx, rrx) = sync_channel(1);
         {
             let mut st = self.dispatcher.state.lock().unwrap();
@@ -544,6 +644,7 @@ impl Client {
                     });
                 }
             }
+            let deadline = st.classes[ci].deadline.map(|d| now + d);
             let wq = st.queues.get_mut(&key).expect("checked above");
             wq.record_arrival(now);
             wq.q.push_back(Request {
@@ -551,6 +652,8 @@ impl Client {
                 class: self.class,
                 graph,
                 submitted: now,
+                deadline,
+                fingerprint,
                 respond: rtx,
             });
             let depth = st.total_queued();
@@ -564,15 +667,18 @@ impl Client {
     /// Non-blocking submission, `anyhow`-flattened (legacy API; the
     /// open-loop load generator [`crate::coordinator::traffic`] is built
     /// on this — arrivals must not be gated on completions).
-    pub fn submit(&self, graph: Graph) -> Result<Receiver<Response>> {
+    pub fn submit(&self, graph: Graph) -> Result<Receiver<ReqOutcome>> {
         self.try_submit(graph).map_err(|e| anyhow!("{e}"))
     }
 
-    /// Blocking inference call (closed-loop clients).
+    /// Blocking inference call (closed-loop clients). Typed terminal
+    /// failures (internal, expired, closed) flatten into errors carrying
+    /// the reason name.
     pub fn infer(&self, graph: Graph) -> Result<Response> {
-        self.submit(graph)?
-            .recv()
-            .map_err(|_| anyhow!("server dropped request"))
+        match self.submit(graph)?.recv() {
+            Ok(out) => out.into_result().map_err(|f| anyhow!("{f}")),
+            Err(_) => Err(anyhow!("server dropped request")),
+        }
     }
 }
 
@@ -639,6 +745,11 @@ impl Server {
                         bucket: c
                             .bucket_rate
                             .map(|r| TokenBucket::new(r, c.bucket_burst.max(1.0))),
+                        deadline: (config.deadline_factor > 0.0).then(|| {
+                            Duration::from_secs_f64(
+                                config.deadline_factor * class_slo(&config, c).p99_target_s,
+                            )
+                        }),
                         cfg: c.clone(),
                     })
                     .collect(),
@@ -647,7 +758,14 @@ impl Server {
             }),
             cv: Condvar::new(),
             hidden: config.hidden,
+            supervisor: Supervisor::new(),
         });
+        // opt-in flight recorder, shared by every worker (None = the hot
+        // path records nothing)
+        let flight: Option<Arc<FlightRecorder>> = config
+            .flight_dir
+            .as_ref()
+            .map(|d| Arc::new(FlightRecorder::new(PathBuf::from(d))));
         let watcher_stop = Arc::new(AtomicBool::new(false));
 
         let (ready_tx, ready_rx) = sync_channel::<Result<()>>(config.workers);
@@ -657,10 +775,11 @@ impl Server {
             let d = dispatcher.clone();
             let m = metrics.clone();
             let sw = swap.clone();
+            let fr = flight.clone();
             let rtx = ready_tx.clone();
             let handle = std::thread::Builder::new()
                 .name(format!("ed-batch-worker-{wid}"))
-                .spawn(move || worker_loop(cfg, d, m, sw, rtx))
+                .spawn(move || worker_loop(cfg, d, m, sw, fr, rtx))
                 .expect("spawn worker");
             handles.push(handle);
         }
@@ -795,6 +914,12 @@ impl Server {
     /// batching order). Returns the new swap epoch.
     pub fn reload_policies(&self) -> Result<u64> {
         publish_reload(&self.config, &self.metrics, &self.swap, &self.dispatcher)
+    }
+
+    /// The pool-wide supervision ledger (panic / respawn / quarantine
+    /// counters), for operator summaries and the chaos harness.
+    pub fn supervisor(&self) -> &Supervisor {
+        &self.dispatcher.supervisor
     }
 
     /// Graceful shutdown: stop the reload watcher, close the queues, wake
@@ -993,11 +1118,40 @@ struct WorkerCtx {
     composed: ComposedPlan,
 }
 
+/// Build (or rebuild, on a post-panic respawn) one worker's engine with
+/// the boot configuration applied: backend, memory mode, thread pool,
+/// strict-bitwise pin.
+fn build_engine(config: &ServerConfig, registry: Option<&ArtifactRegistry>) -> Result<CellEngine> {
+    let mut engine = match registry {
+        Some(reg) => CellEngine::new(Backend::Pjrt(reg), config.hidden, config.seed)?,
+        None => CellEngine::new(Backend::Cpu, config.hidden, config.seed)?,
+    };
+    // graph-level state layout: ED-Batch plans the arena with the PQ tree,
+    // the DyNet baselines keep creation order + full gather/scatter
+    engine.memory_mode = config.mode.memory_mode();
+    // intra-batch lane parallelism: one pool per worker, so the total
+    // thread budget is workers × threads and engines never share a pool
+    // (PJRT backends ignore it — device-side parallelism is PJRT's job).
+    // Bit-equality across thread counts is the backend contract, asserted
+    // end to end by `engine::parallel_bitwise_ok` and the CI thread matrix.
+    if config.threads > 1 {
+        engine.set_thread_pool(Arc::new(crate::exec::pool::ThreadPool::new(config.threads)));
+    }
+    // numerics mode: --strict-bitwise pins the scalar oracle kernels;
+    // otherwise the backend runs whatever micro-kernel level it detected
+    // (answering to the ULP parity contract instead of bit-equality)
+    if config.strict_bitwise {
+        engine.set_strict_bitwise(true);
+    }
+    Ok(engine)
+}
+
 fn worker_loop(
     config: ServerConfig,
     dispatcher: Arc<Dispatcher>,
     metrics: Arc<Metrics>,
     swap: Arc<PolicySwap>,
+    flight: Option<Arc<FlightRecorder>>,
     ready: SyncSender<Result<()>>,
 ) -> Result<()> {
     let mut epoch_seen = swap.epoch.load(Ordering::Acquire);
@@ -1061,11 +1215,7 @@ fn worker_loop(
             bail!("worker boot failed: {msg}");
         }
     };
-    let engine_res = match &registry {
-        Some(reg) => CellEngine::new(Backend::Pjrt(reg), config.hidden, config.seed),
-        None => CellEngine::new(Backend::Cpu, config.hidden, config.seed),
-    };
-    let mut engine = match engine_res {
+    let mut engine = match build_engine(&config, registry.as_ref()) {
         Ok(e) => e,
         Err(e) => {
             let msg = format!("{e:#}");
@@ -1073,23 +1223,6 @@ fn worker_loop(
             bail!("worker boot failed: {msg}");
         }
     };
-    // graph-level state layout: ED-Batch plans the arena with the PQ tree,
-    // the DyNet baselines keep creation order + full gather/scatter
-    engine.memory_mode = config.mode.memory_mode();
-    // intra-batch lane parallelism: one pool per worker, so the total
-    // thread budget is workers × threads and engines never share a pool
-    // (PJRT backends ignore it — device-side parallelism is PJRT's job).
-    // Bit-equality across thread counts is the backend contract, asserted
-    // end to end by `engine::parallel_bitwise_ok` and the CI thread matrix.
-    if config.threads > 1 {
-        engine.set_thread_pool(Arc::new(crate::exec::pool::ThreadPool::new(config.threads)));
-    }
-    // numerics mode: --strict-bitwise pins the scalar oracle kernels;
-    // otherwise the backend runs whatever micro-kernel level it detected
-    // (answering to the ULP parity contract instead of bit-equality)
-    if config.strict_bitwise {
-        engine.set_strict_bitwise(true);
-    }
     let kr = engine.kernel_report();
     metrics.set_kernel_config(engine.simd_level().name(), kr.simd_active(), config.strict_bitwise);
     // the compositional hot path is ED-Batch's contribution; the baselines
@@ -1103,6 +1236,12 @@ fn worker_loop(
     let mut store = ArenaStateStore::new();
     let mut pending: Vec<Request> = Vec::new();
     let mut has_consumer: Vec<bool> = Vec::new();
+    // per-class p99 targets, for the flight recorder's SLO-violation dump
+    let slo_targets: Vec<f64> = config
+        .classes
+        .iter()
+        .map(|c| class_slo(&config, c).p99_target_s)
+        .collect();
 
     // continuous dispatch: grab the next ready batch the moment we go idle
     let mut current_kind: Option<WorkloadKind> = None;
@@ -1129,7 +1268,7 @@ fn worker_loop(
             epoch_seen = epoch_now;
         }
         pending.clear();
-        let Some(key) = next_batch(&dispatcher, &mut ctrls, config.max_batch, &mut pending)
+        let Some(key) = next_batch(&dispatcher, &mut ctrls, config.max_batch, &metrics, &mut pending)
         else {
             break;
         };
@@ -1143,20 +1282,108 @@ fn worker_loop(
             engine.extra_launches = ctx.charges.extra_launches.clone();
             current_kind = Some(key.kind);
         }
+        // chaos harness: an armed worker.stall_ms freezes the worker
+        // before every batch (drives deadline shedding + drain bounds)
+        if let Some(stall) = fault::stall_ms("worker.stall_ms") {
+            std::thread::sleep(stall);
+        }
         let batch_len = pending.len();
         let t_service = Instant::now();
-        let result = if compose {
-            process_composed(ctx, ctrl, &mut engine, &metrics, &mut pending, &mut store)
-        } else {
-            process_merged(
-                ctx,
-                ctrl,
-                &mut engine,
-                &metrics,
-                &mut pending,
-                &mut store,
-                &mut has_consumer,
-            )
+        // fail-stop boundary: a panic anywhere in batch execution —
+        // kernels, planning, an injected worker.panic/arena.grow fault —
+        // is contained here. The dispatcher lock is never held across
+        // this call, so a panic cannot poison the queues.
+        let attempt = run_guarded(|| {
+            if fault::hit("worker.panic") {
+                panic!("injected fault: worker.panic");
+            }
+            // reborrows (&mut *) keep ctx/ctrl usable after the guard
+            if compose {
+                process_composed(
+                    &mut *ctx,
+                    &mut *ctrl,
+                    &mut engine,
+                    &metrics,
+                    &mut pending,
+                    &mut store,
+                    flight.as_deref(),
+                    &slo_targets,
+                )
+            } else {
+                process_merged(
+                    &mut *ctx,
+                    &mut *ctrl,
+                    &mut engine,
+                    &metrics,
+                    &mut pending,
+                    &mut store,
+                    &mut has_consumer,
+                    flight.as_deref(),
+                    &slo_targets,
+                )
+            }
+        });
+        let result = match attempt {
+            BatchAttempt::Completed(r) => r,
+            BatchAttempt::Panicked(msg) => {
+                // supervision path: fail the dying batch with typed
+                // outcomes, attribute the kill, respawn in place
+                metrics.record_worker_panic();
+                let fps: Vec<u64> = pending.iter().map(|r| r.fingerprint).collect();
+                let batch = pending.len();
+                if let Some(fr) = &flight {
+                    let at_s = fr.now_s();
+                    for req in pending.iter() {
+                        fr.record(FlightRecord {
+                            at_s,
+                            class: req.class,
+                            workload: req.kind.name(),
+                            queued_s: req.submitted.elapsed().as_secs_f64(),
+                            exec_s: 0.0,
+                            batch,
+                            plan: "-",
+                            outcome: "internal",
+                        });
+                    }
+                }
+                for req in pending.drain(..) {
+                    metrics.record_internal_failure();
+                    req.fail(
+                        NackReason::Internal,
+                        format!("worker panicked executing this batch: {msg}"),
+                    );
+                }
+                let newly = dispatcher.supervisor.record_panic(&fps);
+                if !newly.is_empty() {
+                    metrics.record_quarantined(newly.len() as u64);
+                }
+                if let Some(fr) = &flight {
+                    let trigger = if newly.is_empty() { "worker-panic" } else { "quarantine" };
+                    if fr.dump(trigger).is_some() {
+                        metrics.record_flight_dump();
+                    }
+                }
+                // respawn: the panicked execution may have torn the
+                // engine, caches, or arena — rebuild all of them. The
+                // thread, its queues, and its controllers live on.
+                match build_engine(&config, registry.as_ref()) {
+                    Ok(e) => engine = e,
+                    Err(e) => {
+                        // cannot rebuild: genuine fail-stop for the pool
+                        fail_stop(&dispatcher);
+                        return Err(e.context("respawn after worker panic failed"));
+                    }
+                }
+                for ctx in ctxs.values_mut() {
+                    ctx.cache = InstanceCache::new();
+                    ctx.composed = ComposedPlan::new();
+                }
+                store = ArenaStateStore::new();
+                current_kind = None;
+                dispatcher.supervisor.record_respawn();
+                metrics.record_worker_respawn();
+                continue;
+            }
         };
         match result {
             Ok(cost_per_inst) => {
@@ -1171,17 +1398,16 @@ fn worker_loop(
                 }
             }
             Err(e) => {
-                // fail-stop: close the server so blocked and future clients
-                // get an error instead of hanging on a dead queue (the
-                // failing batch's requests were dropped above, unblocking
-                // their clients; clearing the queues unblocks the rest)
-                let mut st = dispatcher.state.lock().unwrap();
-                st.closed = true;
-                for wq in st.queues.values_mut() {
-                    wq.q.clear();
+                // fail-stop: a non-panic engine error (bad configuration,
+                // backend failure) closes the server so blocked and
+                // future clients get typed errors instead of hanging on a
+                // dead queue. The failing batch's undrained requests get
+                // Internal outcomes here; queued requests get Closed.
+                for req in pending.drain(..) {
+                    metrics.record_internal_failure();
+                    req.fail(NackReason::Internal, format!("worker failed: {e:#}"));
                 }
-                drop(st);
-                dispatcher.cv.notify_all();
+                fail_stop(&dispatcher);
                 return Err(e);
             }
         }
@@ -1189,9 +1415,32 @@ fn worker_loop(
     Ok(())
 }
 
+/// Close the server and terminate every queued request with a typed
+/// `Closed` outcome (fail-stop for unrecoverable worker errors).
+fn fail_stop(dispatcher: &Dispatcher) {
+    let mut st = dispatcher.state.lock().unwrap();
+    st.closed = true;
+    for wq in st.queues.values_mut() {
+        for req in wq.q.drain(..) {
+            req.fail(NackReason::Closed, "server stopped after worker failure".into());
+        }
+    }
+    drop(st);
+    dispatcher.cv.notify_all();
+}
+
 /// Block until a mini-batch is dispatchable (or the server is closed and
 /// drained), filling `out`. Returns `None` exactly when the worker should
 /// exit.
+///
+/// **Deadline shedding** happens here, before eligibility: requests whose
+/// SLO-derived deadline has passed are popped and terminated with a typed
+/// `Expired` outcome instead of being dispatched (queues are FIFO and all
+/// requests in one queue share a class, so expired requests are always a
+/// prefix). The send is safe under the dispatcher lock — the respond
+/// channel is `sync_channel(1)` and this is its only send. With deadlines
+/// disabled (`--deadline-factor 0`) every `deadline` is `None` and the
+/// scan touches only each queue's front.
 ///
 /// Eligibility is decided **per queue by this worker's controller**: a
 /// queue is ready when it holds the controller's current `target_batch`
@@ -1209,12 +1458,27 @@ fn next_batch(
     dispatcher: &Dispatcher,
     ctrls: &mut FxHashMap<QueueKey, DispatchController>,
     max_batch: usize,
+    metrics: &Metrics,
     out: &mut Vec<Request>,
 ) -> Option<QueueKey> {
     let mut st = dispatcher.state.lock().unwrap();
     loop {
         let now = Instant::now();
         let flush = st.closed;
+        for wq in st.queues.values_mut() {
+            while wq
+                .q
+                .front()
+                .is_some_and(|r| r.deadline.is_some_and(|d| now >= d))
+            {
+                let req = wq.q.pop_front().expect("front checked");
+                metrics.record_expired();
+                req.fail(
+                    NackReason::Expired,
+                    "deadline expired before dispatch".into(),
+                );
+            }
+        }
         // (key, vtime, oldest head, target)
         let mut pick: Option<(QueueKey, f64, Instant, usize)> = None;
         let mut earliest: Option<Instant> = None;
@@ -1279,6 +1543,7 @@ fn next_batch(
 /// the precomputed per-topology sink sets. After warmup this performs
 /// zero policy runs, zero PQ planning, and zero engine-loop allocations.
 /// Returns the mean per-instance plan cost (elems) for admission control.
+#[allow(clippy::too_many_arguments)]
 fn process_composed(
     ctx: &mut WorkerCtx,
     ctrl: &mut DispatchController,
@@ -1286,6 +1551,8 @@ fn process_composed(
     metrics: &Metrics,
     pending: &mut Vec<Request>,
     store: &mut ArenaStateStore,
+    flight: Option<&FlightRecorder>,
+    slo_targets: &[f64],
 ) -> Result<f64> {
     let t0 = Instant::now();
     let hits0 = ctx.cache.hits;
@@ -1339,6 +1606,11 @@ fn process_composed(
     };
     metrics.record_minibatch(pending.len(), &breakdown, &report);
 
+    let plan_tag = if report.cache_misses > 0 { "miss" } else { "hit" };
+    let batch_size = pending.len();
+    let exec_done_s = t0.elapsed().as_secs_f64();
+    let mut slo_violated = false;
+
     // respond straight from the arena through cached sink sets: one flat
     // buffer per response, no per-sink vectors, no consumer-scan rebuild
     for (i, req) in pending.drain(..).enumerate() {
@@ -1359,11 +1631,35 @@ fn process_composed(
         let latency = req.submitted.elapsed();
         metrics.record_request(req.kind.name(), req.class as usize, latency);
         ctrl.observe_latency(latency.as_secs_f64());
-        let _ = req.respond.send(Response {
+        if let Some(fr) = flight {
+            let lat_s = latency.as_secs_f64();
+            let queued_s = (lat_s - exec_done_s).max(0.0);
+            slo_violated |= slo_targets
+                .get(req.class as usize)
+                .is_some_and(|&t| lat_s > t);
+            fr.record(FlightRecord {
+                at_s: fr.now_s(),
+                class: req.class,
+                workload: req.kind.name(),
+                queued_s,
+                exec_s: lat_s - queued_s,
+                batch: batch_size,
+                plan: plan_tag,
+                outcome: "response",
+            });
+        }
+        let _ = req.respond.send(ReqOutcome::Response(Response {
             data,
             spans,
             latency,
-        });
+        }));
+    }
+    if slo_violated {
+        if let Some(fr) = flight {
+            if fr.dump("slo-violation").is_some() {
+                metrics.record_flight_dump();
+            }
+        }
     }
     Ok(cost_per_inst)
 }
@@ -1372,6 +1668,7 @@ fn process_composed(
 /// mode's policy over the merged mini-batch, execute, and respond. State
 /// (arena store, `has_consumer` scan buffer) is pooled per worker.
 /// Returns the mean per-instance cost estimate (elems) for admission.
+#[allow(clippy::too_many_arguments)]
 fn process_merged(
     ctx: &mut WorkerCtx,
     ctrl: &mut DispatchController,
@@ -1380,6 +1677,8 @@ fn process_merged(
     pending: &mut Vec<Request>,
     store: &mut ArenaStateStore,
     has_consumer: &mut Vec<bool>,
+    flight: Option<&FlightRecorder>,
+    slo_targets: &[f64],
 ) -> Result<f64> {
     // -- construction: merge instance graphs -----------------------------
     let t0 = Instant::now();
@@ -1425,6 +1724,8 @@ fn process_merged(
     let count = pending.len();
     // static cost estimate for admission (no plan artifacts on this path)
     let cost_per_inst = (merged.len() * engine.hidden * 2) as f64 / count.max(1) as f64;
+    let exec_done_s = t0.elapsed().as_secs_f64();
+    let mut slo_violated = false;
     for (i, req) in pending.drain(..).enumerate() {
         let start = offsets[i] as usize;
         let end = if i + 1 < count {
@@ -1446,11 +1747,35 @@ fn process_merged(
         let latency = req.submitted.elapsed();
         metrics.record_request(req.kind.name(), req.class as usize, latency);
         ctrl.observe_latency(latency.as_secs_f64());
-        let _ = req.respond.send(Response {
+        if let Some(fr) = flight {
+            let lat_s = latency.as_secs_f64();
+            let queued_s = (lat_s - exec_done_s).max(0.0);
+            slo_violated |= slo_targets
+                .get(req.class as usize)
+                .is_some_and(|&t| lat_s > t);
+            fr.record(FlightRecord {
+                at_s: fr.now_s(),
+                class: req.class,
+                workload: req.kind.name(),
+                queued_s,
+                exec_s: lat_s - queued_s,
+                batch: count,
+                plan: "merged",
+                outcome: "response",
+            });
+        }
+        let _ = req.respond.send(ReqOutcome::Response(Response {
             data,
             spans,
             latency,
-        });
+        }));
+    }
+    if slo_violated {
+        if let Some(fr) = flight {
+            if fr.dump("slo-violation").is_some() {
+                metrics.record_flight_dump();
+            }
+        }
     }
     Ok(cost_per_inst)
 }
@@ -1893,7 +2218,7 @@ mod tests {
         let inflight = client.submit(g.clone()).unwrap();
         let epoch = server.reload_policies().unwrap();
         assert_eq!(epoch, 1);
-        assert!(inflight.recv().unwrap().num_sinks() > 0);
+        assert!(inflight.recv().unwrap().into_result().unwrap().num_sinks() > 0);
         for _ in 0..2 {
             assert!(client.infer(g.clone()).unwrap().num_sinks() > 0);
         }

@@ -1,0 +1,217 @@
+//! Worker supervision: fail-stop panic containment, respawn accounting,
+//! and poison-pill quarantine.
+//!
+//! The worker loop in [`super::server`] wraps every batch execution in
+//! [`run_guarded`] — a `catch_unwind` boundary. A panic inside kernel
+//! code (or an injected `worker.panic`/`arena.grow` fault) no longer
+//! unwinds through the pool: the batch's requests each get a typed
+//! `Internal` terminal outcome, the engine and per-workload caches are
+//! rebuilt from scratch (the "respawn" — worker threads themselves are
+//! reused, so thread identity and queue ownership never churn), and the
+//! loop continues.
+//!
+//! The [`Supervisor`] is the pool-wide ledger behind that protocol. It
+//! attributes each kill to every topology fingerprint present in the
+//! dying batch (the panic cannot be blamed on one request without
+//! replaying, which is exactly the crash-loop this module exists to
+//! prevent); a fingerprint implicated in [`KILL_LIMIT`] kills is
+//! **quarantined** — subsequent submissions are rejected at admission
+//! with a `Quarantined` NACK before they can reach a worker. Innocent
+//! fingerprints that ride along in a poisoned batch stop accumulating
+//! blame as soon as the true pill is quarantined, so they never reach
+//! the limit themselves under the fixed fault seed.
+//!
+//! The guard is deliberately scoped to batch execution only: the
+//! dispatcher mutex is never held across it, so a panic cannot poison
+//! the queue lock, and the respond channels (`sync_channel(1)`) are
+//! drained by the supervisor path itself — the conservation invariant
+//! ("every admitted request reaches exactly one terminal outcome")
+//! holds through a panic.
+
+use std::panic::{catch_unwind, AssertUnwindSafe};
+use std::sync::atomic::{AtomicU64, AtomicUsize, Ordering};
+use std::sync::Mutex;
+
+use rustc_hash::{FxHashMap, FxHashSet};
+
+/// Kills a topology fingerprint may be implicated in before it is
+/// quarantined as a poison pill.
+pub const KILL_LIMIT: u32 = 2;
+
+/// Outcome of one guarded batch execution.
+pub enum BatchAttempt<T> {
+    /// The closure returned (its own `Result` is untouched inside).
+    Completed(T),
+    /// The closure panicked; the payload rendered as a message.
+    Panicked(String),
+}
+
+/// Run `f` behind a `catch_unwind` boundary. `AssertUnwindSafe` is sound
+/// here because the caller discards every `&mut` the closure touched on
+/// the panic path: the engine is rebuilt, caches are cleared, and the
+/// batch's requests get terminal errors — no torn state is observed.
+pub fn run_guarded<T>(f: impl FnOnce() -> T) -> BatchAttempt<T> {
+    match catch_unwind(AssertUnwindSafe(f)) {
+        Ok(v) => BatchAttempt::Completed(v),
+        Err(payload) => BatchAttempt::Panicked(panic_message(&payload)),
+    }
+}
+
+fn panic_message(payload: &(dyn std::any::Any + Send)) -> String {
+    if let Some(s) = payload.downcast_ref::<&str>() {
+        (*s).to_string()
+    } else if let Some(s) = payload.downcast_ref::<String>() {
+        s.clone()
+    } else {
+        "non-string panic payload".to_string()
+    }
+}
+
+struct Ledger {
+    /// fingerprint → kills it was implicated in (present in the batch)
+    kills: FxHashMap<u64, u32>,
+    quarantined: FxHashSet<u64>,
+}
+
+/// Pool-wide supervision ledger, shared by every worker thread and the
+/// admission path (`Arc` inside the dispatcher).
+pub struct Supervisor {
+    ledger: Mutex<Ledger>,
+    /// cached `quarantined.len()` so admission's common case — nothing
+    /// quarantined — is one relaxed load, no lock
+    nquarantined: AtomicUsize,
+    panics: AtomicU64,
+    respawns: AtomicU64,
+    rejects: AtomicU64,
+}
+
+impl Default for Supervisor {
+    fn default() -> Supervisor {
+        Supervisor::new()
+    }
+}
+
+impl Supervisor {
+    pub fn new() -> Supervisor {
+        Supervisor {
+            ledger: Mutex::new(Ledger {
+                kills: FxHashMap::default(),
+                quarantined: FxHashSet::default(),
+            }),
+            nquarantined: AtomicUsize::new(0),
+            panics: AtomicU64::new(0),
+            respawns: AtomicU64::new(0),
+            rejects: AtomicU64::new(0),
+        }
+    }
+
+    fn lock(&self) -> std::sync::MutexGuard<'_, Ledger> {
+        self.ledger.lock().unwrap_or_else(|p| p.into_inner())
+    }
+
+    /// Admission check: is this topology fingerprint a known poison
+    /// pill? Callers count the rejection with [`Supervisor::record_reject`]
+    /// only when they actually reject (the check also runs on paths that
+    /// go on to fail for other reasons).
+    pub fn is_quarantined(&self, fp: u64) -> bool {
+        if self.nquarantined.load(Ordering::Relaxed) == 0 {
+            return false;
+        }
+        self.lock().quarantined.contains(&fp)
+    }
+
+    /// A worker panicked while executing a batch containing `fps`
+    /// (one entry per request; duplicates are counted once per kill).
+    /// Every fingerprint in the batch is implicated; those reaching
+    /// [`KILL_LIMIT`] are quarantined. Returns the newly quarantined
+    /// fingerprints (empty on the first kill).
+    pub fn record_panic(&self, fps: &[u64]) -> Vec<u64> {
+        self.panics.fetch_add(1, Ordering::Relaxed);
+        let mut g = self.lock();
+        let mut newly = Vec::new();
+        let mut seen = FxHashSet::default();
+        for &fp in fps {
+            if !seen.insert(fp) || g.quarantined.contains(&fp) {
+                continue;
+            }
+            let k = g.kills.entry(fp).or_insert(0);
+            *k += 1;
+            if *k >= KILL_LIMIT {
+                g.quarantined.insert(fp);
+                newly.push(fp);
+            }
+        }
+        self.nquarantined
+            .store(g.quarantined.len(), Ordering::Relaxed);
+        newly
+    }
+
+    /// The worker finished rebuilding its engine after a panic.
+    pub fn record_respawn(&self) {
+        self.respawns.fetch_add(1, Ordering::Relaxed);
+    }
+
+    /// A submission was rejected because its fingerprint is quarantined.
+    pub fn record_reject(&self) {
+        self.rejects.fetch_add(1, Ordering::Relaxed);
+    }
+
+    pub fn panic_count(&self) -> u64 {
+        self.panics.load(Ordering::Relaxed)
+    }
+
+    pub fn respawn_count(&self) -> u64 {
+        self.respawns.load(Ordering::Relaxed)
+    }
+
+    pub fn reject_count(&self) -> u64 {
+        self.rejects.load(Ordering::Relaxed)
+    }
+
+    pub fn quarantine_len(&self) -> usize {
+        self.nquarantined.load(Ordering::Relaxed)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn guarded_panic_is_contained_with_message() {
+        match run_guarded(|| -> u32 { panic!("injected: boom") }) {
+            BatchAttempt::Panicked(msg) => assert!(msg.contains("boom"), "{msg}"),
+            BatchAttempt::Completed(_) => panic!("panic not caught"),
+        }
+        match run_guarded(|| 7u32) {
+            BatchAttempt::Completed(v) => assert_eq!(v, 7),
+            BatchAttempt::Panicked(m) => panic!("spurious panic: {m}"),
+        }
+    }
+
+    #[test]
+    fn second_kill_quarantines_the_fingerprint() {
+        let sup = Supervisor::new();
+        assert!(!sup.is_quarantined(42));
+        assert!(sup.record_panic(&[42]).is_empty());
+        assert!(!sup.is_quarantined(42), "one kill is not enough");
+        assert_eq!(sup.record_panic(&[42]), vec![42]);
+        assert!(sup.is_quarantined(42));
+        assert_eq!(sup.quarantine_len(), 1);
+        assert_eq!(sup.panic_count(), 2);
+        // further kills of a quarantined fp are idempotent
+        assert!(sup.record_panic(&[42]).is_empty());
+        assert_eq!(sup.quarantine_len(), 1);
+    }
+
+    #[test]
+    fn batch_mates_share_blame_but_duplicates_count_once() {
+        let sup = Supervisor::new();
+        // a batch holding fp 1 twice and fp 2 once dies: one kill each
+        assert!(sup.record_panic(&[1, 1, 2]).is_empty());
+        // fp 1 dies again alone → quarantined; fp 2 still clean
+        assert_eq!(sup.record_panic(&[1]), vec![1]);
+        assert!(sup.is_quarantined(1));
+        assert!(!sup.is_quarantined(2));
+    }
+}

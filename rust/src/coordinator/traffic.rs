@@ -154,6 +154,10 @@ pub struct OpenLoopStats {
     pub offered: usize,
     /// responses received
     pub completed: usize,
+    /// typed terminal failures (worker panic, expired deadline, ...) —
+    /// still exactly one outcome per submission, so
+    /// `completed + failed == offered` when the server conserves requests
+    pub failed: usize,
     /// worst lateness of a submission vs its scheduled instant — if this
     /// grows to the order of the latency percentiles, the *generator* was
     /// the bottleneck and the measurement is suspect
@@ -191,8 +195,12 @@ pub fn drive_open_loop(
             receivers.push(rx);
         }
         for rx in receivers {
-            rx.recv().expect("open-loop response");
-            stats.completed += 1;
+            // a typed failure (worker panic, expired deadline) is still a
+            // terminal outcome — only a *dropped* channel is a harness bug
+            match rx.recv().expect("open-loop response") {
+                super::server::ReqOutcome::Response(_) => stats.completed += 1,
+                super::server::ReqOutcome::Failed(_) => stats.failed += 1,
+            }
         }
         stats
     })

@@ -17,7 +17,7 @@ use std::sync::Arc;
 use std::time::Instant;
 
 use anyhow::{anyhow, Result};
-use rustc_hash::FxHashMap;
+use rustc_hash::{FxHashMap, FxHashSet};
 
 use crate::graph::cells;
 use crate::runtime::ArtifactRegistry;
@@ -128,6 +128,9 @@ pub struct KernelReport {
     pub pack_elems: u64,
     /// wall seconds spent packing (AOT, off the steady-state path)
     pub pack_s: f64,
+    /// cells degraded to the scalar oracle after the SIMD path produced
+    /// a non-finite value (counted once per cell, at degrade time)
+    pub numerics_degraded: u64,
 }
 
 impl KernelReport {
@@ -251,6 +254,10 @@ pub struct CpuBackend {
     /// table's SIMD-friendly layout, built once at first use so
     /// steady-state serving never touches row-major weights
     packed: FxHashMap<String, PackedWeights>,
+    /// cells whose SIMD path once produced a non-finite value: pinned to
+    /// the scalar oracle for the rest of this backend's life (numerics
+    /// fail-safe; see the guard in [`ExecBackend::run_cell_into`])
+    degraded: FxHashSet<String>,
     /// cumulative dispatch/pack counters ([`ExecBackend::kernel_report`])
     stats: KernelReport,
 }
@@ -273,6 +280,7 @@ impl CpuBackend {
             level,
             strict: false,
             packed: FxHashMap::default(),
+            degraded: FxHashSet::default(),
             stats: KernelReport::default(),
         }
     }
@@ -329,12 +337,18 @@ impl ExecBackend for CpuBackend {
             level,
             strict,
             packed,
+            degraded,
             stats,
         } = self;
         let h = *hidden;
         // the kernel level this call dispatches at: --strict-bitwise pins
-        // the scalar oracle, making every bitwise assertion exact again
-        let eff = if *strict { SimdLevel::Scalar } else { *level };
+        // the scalar oracle, making every bitwise assertion exact again;
+        // a cell the numerics guard has degraded stays pinned for good
+        let eff = if *strict || degraded.contains(cell) {
+            SimdLevel::Scalar
+        } else {
+            *level
+        };
         if !meta.contains_key(cell) {
             let ow = cells::out_widths(cell, h);
             if ow.is_empty() {
@@ -374,6 +388,7 @@ impl ExecBackend for CpuBackend {
         }
 
         let nch = pool::num_lane_chunks(bucket);
+        let mut ran_parallel = false;
         if let Some(p) = pool {
             if p.threads() > 1 && nch > 1 {
                 debug_assert!(par_scratch.len() >= p.threads());
@@ -406,14 +421,42 @@ impl ExecBackend for CpuBackend {
                     });
                     run_cell_lanes(cell, &dsub[..data.len()], w, eff, pw, h, b, out0, out1, s);
                 });
-                return Ok(());
+                ran_parallel = true;
             }
         }
 
-        // serial: a single chunk covering every lane
-        let (first, rest) = outs.split_at_mut(1);
-        let out1 = rest.first_mut().map(|o| &mut **o);
-        run_cell_lanes(cell, data, w, eff, pw, h, bucket, &mut *first[0], out1, scratch);
+        if !ran_parallel {
+            // serial: a single chunk covering every lane
+            let (first, rest) = outs.split_at_mut(1);
+            let out1 = rest.first_mut().map(|o| &mut **o);
+            run_cell_lanes(cell, data, w, eff, pw, h, bucket, &mut *first[0], out1, scratch);
+        }
+
+        // numerics fail-safe, SIMD path only (the scalar oracle is the
+        // reference — if *it* is non-finite the inputs are, and masking
+        // that would hide a real workload bug): a NaN/Inf anywhere in
+        // this cell's outputs degrades the cell to the scalar oracle —
+        // this call re-runs serially, and the cell stays pinned scalar
+        // for the backend's lifetime.
+        if eff.simd_active() && outs.iter().any(|o| o.iter().any(|v| !v.is_finite())) {
+            degraded.insert(cell.to_string());
+            stats.numerics_degraded += 1;
+            stats.scalar_calls += 1;
+            let (first, rest) = outs.split_at_mut(1);
+            let out1 = rest.first_mut().map(|o| &mut **o);
+            run_cell_lanes(
+                cell,
+                data,
+                w,
+                SimdLevel::Scalar,
+                None,
+                h,
+                bucket,
+                &mut *first[0],
+                out1,
+                scratch,
+            );
+        }
         Ok(())
     }
 
@@ -1040,6 +1083,52 @@ mod tests {
         } else {
             assert_eq!(r.pack_events, 0);
             assert_eq!(r.scalar_calls, 2);
+        }
+    }
+
+    #[test]
+    fn non_finite_simd_output_degrades_cell_to_scalar_oracle() {
+        let h = 8;
+        let b = 3;
+        // poison one input lane: NaN propagates through the gates, so
+        // whatever level runs produces a non-finite output
+        let mut bufs = cell_inputs("lstm", h, b, 0.2);
+        bufs[0][h / 2] = f32::NAN;
+        let data: Vec<&[f32]> = bufs.iter().map(|v| v.as_slice()).collect();
+
+        let mut oracle = CpuBackend::with_level(h, SimdLevel::Scalar);
+        let want = oracle.run_cell("lstm", &data, b).unwrap();
+        assert_eq!(oracle.kernel_report().numerics_degraded, 0, "scalar path never degrades");
+
+        // NaNs compare unequal to themselves — compare bit patterns
+        let bits = |outs: &Vec<Vec<f32>>| -> Vec<Vec<u32>> {
+            outs.iter()
+                .map(|o| o.iter().map(|v| v.to_bits()).collect())
+                .collect()
+        };
+
+        let mut be = CpuBackend::new(h);
+        let got = be.run_cell("lstm", &data, b).unwrap();
+        let r = be.kernel_report();
+        if r.level.simd_active() {
+            // guard fired: cell re-ran on (and equals) the scalar oracle
+            assert_eq!(r.numerics_degraded, 1);
+            assert_eq!(bits(&got), bits(&want));
+            // the cell stays pinned scalar afterwards, healthy inputs or not
+            let clean = cell_inputs("lstm", h, b, 0.2);
+            let cdata: Vec<&[f32]> = clean.iter().map(|v| v.as_slice()).collect();
+            be.run_cell("lstm", &cdata, b).unwrap();
+            let r2 = be.kernel_report();
+            assert_eq!(r2.numerics_degraded, 1, "degrade counted once per cell");
+            assert_eq!(r2.scalar_calls, r.scalar_calls + 1, "pinned scalar after degrade");
+            // an unrelated cell still dispatches SIMD
+            let gru = cell_inputs("gru", h, b, 0.4);
+            let gdata: Vec<&[f32]> = gru.iter().map(|v| v.as_slice()).collect();
+            be.run_cell("gru", &gdata, b).unwrap();
+            assert_eq!(be.kernel_report().simd_calls, r.simd_calls + 1);
+        } else {
+            assert_eq!(r.numerics_degraded, 0);
+            assert_eq!(bits(&got), bits(&want));
         }
     }
 

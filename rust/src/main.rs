@@ -19,6 +19,7 @@ use ed_batch::batching::fsm::{Encoding, FsmPolicy};
 use ed_batch::batching::oracle::SufficientConditionPolicy;
 use ed_batch::batching::run_policy;
 use ed_batch::benchsuite::{self, BenchOpts};
+use ed_batch::coordinator::chaos;
 use ed_batch::coordinator::dispatch::{DispatchMode, SloClassConfig};
 use ed_batch::coordinator::net::{NetServer, TcpClient};
 use ed_batch::coordinator::server::{Server, ServerConfig};
@@ -29,6 +30,7 @@ use ed_batch::memory::MemoryMode;
 use ed_batch::policystore::PolicyStore;
 use ed_batch::rl::TrainConfig;
 use ed_batch::util::cli::Args;
+use ed_batch::util::fault;
 use ed_batch::util::rng::Rng;
 use ed_batch::workloads::{Workload, WorkloadKind, ALL_WORKLOADS};
 
@@ -79,7 +81,16 @@ fn run(args: &Args) -> Result<()> {
                  [--tenants SPEC  (SLO classes, e.g. gold:slo=10:weight=4:budget=2e5:rate=500:burst=64,bulk:slo=50;\n              \
                  tenant ids on the wire map to classes in spec order)]\n             \
                  [--hot-reload-ms N  (poll the policy store generation and hot-swap policies\n              \
-                 without draining workers or dropping in-flight requests)]\n  \
+                 without draining workers or dropping in-flight requests)]\n             \
+                 [--deadline-factor F  (shed requests older than F x their class p99 SLO with a\n              \
+                 typed 'expired' outcome before dispatch; 0 = no deadlines)]\n             \
+                 [--flight-dir DIR  (opt-in flight recorder: ring of per-request pipeline\n              \
+                 timestamps, dumped to DIR/flight_<ts>.json on SLO violation/panic/quarantine)]\n             \
+                 [--faults SPEC  (arm deterministic fault injection, e.g.\n              \
+                 'worker.panic=0.02,wire.corrupt=0.01,seed=7'; also via ED_FAULTS;\n              \
+                 points: worker.panic worker.stall_ms arena.grow wire.corrupt store.write)]\n             \
+                 [--chaos  (bursty wire-path replay asserting request conservation — every\n              \
+                 submission gets exactly one typed outcome; prints chaos_conservation_ok=)]\n  \
                  ed-batch inspect --workload <name> [--instances N]\n\n\
                  workloads: bilstm-tagger bilstm-tagger-withchar lstm-nmt treelstm treegru\n            \
                  mv-rnn treelstm-2type lattice-lstm lattice-gru"
@@ -290,8 +301,24 @@ fn serve(args: &Args) -> Result<()> {
             0 => None,
             ms => Some(std::time::Duration::from_millis(ms)),
         },
+        // deadline = factor x the class p99 SLO target; 0 disables shedding
+        deadline_factor: args.f64("deadline-factor", 0.0),
+        flight_dir: args.get("flight-dir").map(|s| s.to_string()),
     };
     let strict_bitwise = config.strict_bitwise;
+    // --faults 'worker.panic=0.02,wire.corrupt=0.01,seed=7' (or ED_FAULTS):
+    // arm the deterministic injection registry before any worker boots so
+    // sequence counters cover the whole run
+    let fault_spec = args
+        .get("faults")
+        .map(|s| s.to_string())
+        .or_else(|| std::env::var("ED_FAULTS").ok().filter(|s| !s.is_empty()));
+    if let Some(spec) = &fault_spec {
+        let parsed = fault::FaultSpec::parse(spec).map_err(|e| anyhow!("--faults: {e}"))?;
+        fault::arm(&parsed);
+        println!("faults armed: {spec}");
+    }
+    let chaos_mode = args.flag("chaos");
     println!(
         "serving {} workload(s) [{}] (mode={}, dispatch={}, hidden={hidden}, workers={workers}, threads={threads}, pjrt={}, store={})",
         kinds.len(),
@@ -307,7 +334,13 @@ fn serve(args: &Args) -> Result<()> {
     // load below still runs; before shutdown a parity pass replays a
     // fresh pool through BOTH paths and requires bit-identical responses
     // (net_parity_ok), so the smoke proves the network path end to end.
-    let net = match args.get("listen") {
+    // --chaos drives the wire path, so it forces a listener even when
+    // --listen was not given (ephemeral port)
+    let listen_addr = args
+        .get("listen")
+        .map(|s| s.to_string())
+        .or_else(|| chaos_mode.then(|| "127.0.0.1:0".to_string()));
+    let net = match &listen_addr {
         Some(addr) => {
             let n = NetServer::start(&server, addr)?;
             println!("listening on {} (wire protocol v1)", n.local_addr());
@@ -315,6 +348,11 @@ fn serve(args: &Args) -> Result<()> {
         }
         None => None,
     };
+
+    if chaos_mode {
+        let net = net.expect("chaos forces a listener");
+        return serve_chaos(args.u64("seed", 7), &kinds, hidden, requests, server, net);
+    }
     let nclasses = server.num_classes();
     if nclasses > 1 {
         println!(
@@ -443,6 +481,34 @@ fn serve(args: &Args) -> Result<()> {
         println!(
             "hot-reload: {} policy swap(s), store generation {}",
             snap.reload_swaps, snap.reload_generation,
+        );
+    }
+    // fault-tolerance counters: silent when the run was clean and no
+    // faults were armed (byte-identical summary to pre-supervision builds)
+    if fault::armed()
+        || snap.worker_panics
+            + snap.worker_respawns
+            + snap.quarantined
+            + snap.quarantine_rejects
+            + snap.expired
+            + snap.internal_failures
+            + snap.conn_cap_rejects
+            + snap.numerics_degraded
+            + snap.flight_dumps
+            > 0
+    {
+        println!(
+            "supervision: worker_panics={} worker_respawns={} quarantined={} quarantine_rejects={} \
+             expired={} internal_failures={} conn_cap_rejects={} numerics_degraded={} flight_dumps={}",
+            snap.worker_panics,
+            snap.worker_respawns,
+            snap.quarantined,
+            snap.quarantine_rejects,
+            snap.expired,
+            snap.internal_failures,
+            snap.conn_cap_rejects,
+            snap.numerics_degraded,
+            snap.flight_dumps,
         );
     }
     println!(
@@ -588,6 +654,77 @@ fn serve(args: &Args) -> Result<()> {
                 warmup_cap
             );
         }
+    }
+    Ok(())
+}
+
+/// The `serve --chaos` leg: drive deterministic bursty wire traffic
+/// (with whatever faults the operator armed), classify every submission
+/// into exactly one terminal outcome, print the counters CI greps
+/// (`chaos_conservation_ok=`, `quarantined=`), and merge the verdict
+/// into `BENCH_serving.json`.
+fn serve_chaos(
+    seed: u64,
+    kinds: &[WorkloadKind],
+    hidden: usize,
+    requests: usize,
+    server: Server,
+    net: NetServer,
+) -> Result<()> {
+    if !fault::armed() {
+        println!("note: --chaos without --faults/ED_FAULTS exercises only the happy path");
+    }
+    let metrics = server.metrics.clone();
+    let report = chaos::run(server, net, kinds, hidden, seed, requests)?;
+    for (name, queried, fired) in fault::counts() {
+        println!("fault {name}: fired {fired}/{queried}");
+    }
+    fault::disarm();
+    let snap = metrics.snapshot();
+    println!(
+        "chaos: submitted={} responses={} nacks={} transport={} timeouts={} reconnects={} | drained in {:.2}s (ok={})",
+        report.submitted,
+        report.responses,
+        report.nacks_total(),
+        report.transport,
+        report.timeouts,
+        report.reconnects,
+        report.drain_s,
+        report.drained_ok,
+    );
+    for (reason, n) in &report.nacks {
+        println!("  nack[{reason}]={n}");
+    }
+    println!(
+        "supervision: worker_panics={} worker_respawns={} quarantined={} quarantine_rejects={} \
+         expired={} internal_failures={} conn_cap_rejects={} numerics_degraded={} flight_dumps={}",
+        snap.worker_panics,
+        snap.worker_respawns,
+        snap.quarantined,
+        snap.quarantine_rejects,
+        snap.expired,
+        snap.internal_failures,
+        snap.conn_cap_rejects,
+        snap.numerics_degraded,
+        snap.flight_dumps,
+    );
+    println!("chaos_conservation_ok={}", report.conservation_ok());
+    chaos::write_bench_json(benchsuite::serving::JSON_PATH, &report)?;
+    println!(
+        "chaos verdict merged into {} under \"chaos\"",
+        benchsuite::serving::JSON_PATH
+    );
+    if !report.conservation_ok() {
+        bail!(
+            "chaos conservation violated: {} submitted vs {} responses + {} nacks + {} transport \
+             ({} timeouts, drained_ok={})",
+            report.submitted,
+            report.responses,
+            report.nacks_total(),
+            report.transport,
+            report.timeouts,
+            report.drained_ok,
+        );
     }
     Ok(())
 }

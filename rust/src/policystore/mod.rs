@@ -373,6 +373,67 @@ impl SchedulerArtifact {
     }
 }
 
+/// Crash-safe file write: the payload goes to `<file>.tmp`, is fsynced,
+/// then renamed over the final name, and the parent directory is synced
+/// so the rename itself is durable. A crash (or an armed `store.write`
+/// fault) at any point leaves either the previous artifact or the new
+/// one at the final path — never a torn file. `.tmp` leftovers are
+/// invisible to [`PolicyStore::open`] (its scan keys on the `.json`
+/// suffix) and are truncated by the next successful write.
+fn atomic_write(path: &Path, bytes: &[u8]) -> Result<()> {
+    use std::io::Write as _;
+    let mut os = path.as_os_str().to_owned();
+    os.push(".tmp");
+    let tmp = PathBuf::from(os);
+    let mut f = std::fs::File::create(&tmp)?;
+    if crate::util::fault::hit("store.write") {
+        // simulated crash mid-write: half the payload reaches the tmp
+        // file; the final path is never touched
+        let _ = f.write_all(&bytes[..bytes.len() / 2]);
+        let _ = f.sync_all();
+        bail!(
+            "injected fault: store.write (crashed writing {})",
+            tmp.display()
+        );
+    }
+    f.write_all(bytes)?;
+    f.sync_all()?;
+    drop(f);
+    std::fs::rename(&tmp, path)?;
+    if let Some(parent) = path.parent() {
+        if let Ok(d) = std::fs::File::open(parent) {
+            let _ = d.sync_all();
+        }
+    }
+    Ok(())
+}
+
+/// Move a corrupt artifact into `quarantine/`, never clobbering an
+/// earlier capture (collisions get a numeric suffix), so the bad bytes
+/// stay diagnosable and can never block a fresh write of the same
+/// artifact name. Best-effort: a failed move warns and returns false
+/// (the artifact was already skipped either way).
+fn quarantine_corrupt(dir: &Path, path: &Path, name: &str) -> bool {
+    let qdir = dir.join("quarantine");
+    if let Err(e) = std::fs::create_dir_all(&qdir) {
+        eprintln!("policystore: cannot create {}: {e}", qdir.display());
+        return false;
+    }
+    let mut target = qdir.join(name);
+    let mut n = 1u32;
+    while target.exists() {
+        target = qdir.join(format!("{name}.{n}"));
+        n += 1;
+    }
+    match std::fs::rename(path, &target) {
+        Ok(()) => true,
+        Err(e) => {
+            eprintln!("policystore: quarantine of {name} failed: {e}");
+            false
+        }
+    }
+}
+
 /// The store: an eagerly-loaded map from (fingerprint, encoding) to
 /// artifact — plus the scheduler-kind map keyed by fingerprint alone —
 /// backed by one directory. Serving never touches the filesystem per
@@ -388,6 +449,9 @@ pub struct PolicyStore {
     generation: u64,
     /// artifact files present on disk but unreadable at open (warned once)
     pub skipped: usize,
+    /// unreadable artifacts moved into `quarantine/` at open (a subset of
+    /// `skipped`: the move itself can fail, which only warns)
+    pub quarantined: usize,
 }
 
 impl PolicyStore {
@@ -404,6 +468,7 @@ impl PolicyStore {
             sched_entries: FxHashMap::default(),
             generation: 0,
             skipped: 0,
+            quarantined: 0,
         };
         let index = dir.join("index.json");
         if index.exists() {
@@ -447,8 +512,11 @@ impl PolicyStore {
                         store.entries.insert((a.fingerprint, a.encoding), a);
                     }
                     Err(e) => {
-                        eprintln!("policystore: skipping {name}: {e}");
+                        eprintln!("policystore: quarantining {name}: {e}");
                         store.skipped += 1;
+                        if quarantine_corrupt(&dir, &entry.path(), &name) {
+                            store.quarantined += 1;
+                        }
                     }
                 }
             } else if name.starts_with("scheduler_") {
@@ -461,8 +529,11 @@ impl PolicyStore {
                         store.sched_entries.insert((a.fingerprint, a.class.clone()), a);
                     }
                     Err(e) => {
-                        eprintln!("policystore: skipping {name}: {e}");
+                        eprintln!("policystore: quarantining {name}: {e}");
                         store.skipped += 1;
+                        if quarantine_corrupt(&dir, &entry.path(), &name) {
+                            store.quarantined += 1;
+                        }
                     }
                 }
             }
@@ -539,7 +610,7 @@ impl PolicyStore {
         ]);
         // rewrite unconditionally: idempotent gates, and upgrades a
         // pre-scheduler index in place (both gates stay satisfied)
-        std::fs::write(&index, doc.to_string())?;
+        atomic_write(&index, doc.to_string().as_bytes())?;
         Ok(())
     }
 
@@ -565,7 +636,7 @@ impl PolicyStore {
         let path = self
             .dir
             .join(PolicyArtifact::file_name(artifact.workload, artifact.encoding));
-        std::fs::write(&path, artifact.to_json().to_string())?;
+        atomic_write(&path, artifact.to_json().to_string().as_bytes())?;
         self.entries
             .insert((artifact.fingerprint, artifact.encoding), artifact);
         Ok(())
@@ -616,7 +687,7 @@ impl PolicyStore {
         let path = self
             .dir
             .join(SchedulerArtifact::file_name_class(artifact.workload, &artifact.class));
-        std::fs::write(&path, artifact.to_json().to_string())?;
+        atomic_write(&path, artifact.to_json().to_string().as_bytes())?;
         self.sched_entries
             .insert((artifact.fingerprint, artifact.class.clone()), artifact);
         Ok(())
@@ -820,6 +891,7 @@ mod tests {
         let a = SchedulerArtifact {
             workload: WorkloadKind::TreeLstm,
             fingerprint: 0xFEED_FACE_CAFE_0001,
+            class: DEFAULT_CLASS.to_string(),
             slo_p99_s: 0.01,
             sim_per_inst_s: 0.0005,
             policy,
@@ -922,7 +994,7 @@ mod tests {
     }
 
     #[test]
-    fn unreadable_artifact_is_skipped_not_fatal() {
+    fn unreadable_artifact_is_quarantined_not_fatal() {
         let dir = tmp_dir("skip");
         let _ = std::fs::remove_dir_all(&dir);
         std::fs::create_dir_all(&dir).unwrap();
@@ -930,6 +1002,67 @@ mod tests {
         let store = PolicyStore::open(&dir).unwrap();
         assert!(store.is_empty());
         assert_eq!(store.skipped, 1);
+        assert_eq!(store.quarantined, 1);
+        // the corrupt bytes moved aside, preserved for diagnosis
+        assert!(!dir.join("policy_bogus_sort.json").exists());
+        assert_eq!(
+            std::fs::read_to_string(dir.join("quarantine/policy_bogus_sort.json")).unwrap(),
+            "not json at all"
+        );
+        // a clean reopen sees nothing to skip
+        let clean = PolicyStore::open(&dir).unwrap();
+        assert_eq!(clean.skipped, 0);
+        assert_eq!(clean.quarantined, 0);
+        // a second corrupt capture under the same name never clobbers
+        // the first — it lands beside it with a numeric suffix
+        std::fs::write(dir.join("policy_bogus_sort.json"), "corrupt again").unwrap();
+        let store2 = PolicyStore::open(&dir).unwrap();
+        assert_eq!(store2.quarantined, 1);
+        assert_eq!(
+            std::fs::read_to_string(dir.join("quarantine/policy_bogus_sort.json")).unwrap(),
+            "not json at all"
+        );
+        assert_eq!(
+            std::fs::read_to_string(dir.join("quarantine/policy_bogus_sort.json.1")).unwrap(),
+            "corrupt again"
+        );
+        let _ = std::fs::remove_dir_all(&dir);
+    }
+
+    #[test]
+    fn stale_tmp_files_are_invisible_and_do_not_block_writes() {
+        // a crash between "tmp written" and "rename" leaves a .tmp file:
+        // it must not load, must not quarantine, and the next write of
+        // the same artifact must succeed over it
+        let dir = tmp_dir("tmp_crash");
+        let _ = std::fs::remove_dir_all(&dir);
+        std::fs::create_dir_all(&dir).unwrap();
+        let name = PolicyArtifact::file_name(WorkloadKind::TreeLstm, Encoding::Sort);
+        std::fs::write(dir.join(format!("{name}.tmp")), r#"{"version":1,"wor"#).unwrap();
+        let store = PolicyStore::open(&dir).unwrap();
+        assert!(store.is_empty());
+        assert_eq!(store.skipped, 0, ".tmp leftovers are not artifacts");
+        let w = Workload::new(WorkloadKind::TreeLstm, 32);
+        let mut store = store;
+        store.train_into(&w, Encoding::Sort, &quick_cfg(), 3).unwrap();
+        let reopened = PolicyStore::open(&dir).unwrap();
+        assert_eq!(reopened.len(), 1);
+        assert!(reopened.lookup_workload(&w, Encoding::Sort).is_some());
+        let _ = std::fs::remove_dir_all(&dir);
+    }
+
+    #[test]
+    fn atomic_write_replaces_existing_artifact_in_place() {
+        let dir = tmp_dir("atomic");
+        let _ = std::fs::remove_dir_all(&dir);
+        std::fs::create_dir_all(&dir).unwrap();
+        let path = dir.join("policy_probe_sort.json");
+        atomic_write(&path, b"first").unwrap();
+        assert_eq!(std::fs::read_to_string(&path).unwrap(), "first");
+        atomic_write(&path, b"second").unwrap();
+        assert_eq!(std::fs::read_to_string(&path).unwrap(), "second");
+        // no tmp residue after a successful write
+        assert!(!dir.join("policy_probe_sort.json.tmp").exists());
         let _ = std::fs::remove_dir_all(&dir);
     }
 

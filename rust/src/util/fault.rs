@@ -1,0 +1,328 @@
+//! Deterministic fault injection for the chaos harness.
+//!
+//! A small registry of **named injection points** compiled into the
+//! serving stack (`worker.panic`, `arena.grow`, `wire.corrupt`,
+//! `store.write`, `worker.stall_ms`). Each point is queried with
+//! [`hit`] at the site where the corresponding failure would occur in
+//! production; when the registry is unarmed — the default — the query
+//! is a single relaxed atomic load and the branch is dead.
+//!
+//! Armed via `--faults 'worker.panic=0.02,seed=7'` (or the `ED_FAULTS`
+//! environment variable), every decision is a **pure function of
+//! `(seed, point name, per-point sequence index)`** — see [`decide`],
+//! property-tested in `tests/proptests.rs`. Two runs with the same
+//! spec produce the same per-point fire sequence regardless of how
+//! queries from different points interleave, which is what makes the
+//! `serve --chaos` conservation replay reproducible: thread timing can
+//! reorder *which batch* asks, but the k-th query of a given point
+//! always gets the same answer.
+//!
+//! Probability points carry a rate in `[0, 1]`. `worker.stall_ms` is a
+//! *parameter* point: its value is a stall duration in milliseconds,
+//! applied on every query while armed (exercises deadline shedding and
+//! the drain path rather than a crash).
+
+use std::sync::atomic::{AtomicBool, Ordering};
+use std::sync::Mutex;
+use std::time::Duration;
+
+/// Every injection point the serving stack compiles in. Specs naming
+/// anything else (other than `test.*` points used by unit tests) are
+/// rejected at parse time so a typo cannot silently disarm a chaos run.
+pub const KNOWN_POINTS: &[&str] = &[
+    "worker.panic",
+    "worker.stall_ms",
+    "arena.grow",
+    "wire.corrupt",
+    "store.write",
+];
+
+/// Fast-path flag: false means every [`hit`] returns false without
+/// touching the registry lock.
+static ARMED: AtomicBool = AtomicBool::new(false);
+
+static STATE: Mutex<Option<Registry>> = Mutex::new(None);
+
+struct PointState {
+    name: String,
+    value: f64,
+    /// queries so far — the sequence index fed to [`decide`]
+    seq: u64,
+    fired: u64,
+}
+
+struct Registry {
+    seed: u64,
+    points: Vec<PointState>,
+}
+
+/// A parsed `--faults` spec: `name=value` entries plus an optional
+/// `seed=N` (default 0).
+#[derive(Debug, Clone, PartialEq)]
+pub struct FaultSpec {
+    pub seed: u64,
+    pub points: Vec<(String, f64)>,
+}
+
+impl FaultSpec {
+    /// Parse `'worker.panic=0.02,wire.corrupt=0.01,seed=7'`.
+    pub fn parse(spec: &str) -> Result<FaultSpec, String> {
+        let mut seed = 0u64;
+        let mut points: Vec<(String, f64)> = Vec::new();
+        for entry in spec.split(',') {
+            let entry = entry.trim();
+            if entry.is_empty() {
+                continue;
+            }
+            let (name, value) = entry
+                .split_once('=')
+                .ok_or_else(|| format!("fault entry '{entry}' is not name=value"))?;
+            let (name, value) = (name.trim(), value.trim());
+            if name == "seed" {
+                seed = value
+                    .parse::<u64>()
+                    .map_err(|_| format!("fault seed '{value}' is not a u64"))?;
+                continue;
+            }
+            if !KNOWN_POINTS.contains(&name) && !name.starts_with("test.") {
+                return Err(format!(
+                    "unknown fault point '{name}' (known: {})",
+                    KNOWN_POINTS.join(", ")
+                ));
+            }
+            let v = value
+                .parse::<f64>()
+                .map_err(|_| format!("fault value '{value}' for '{name}' is not a number"))?;
+            if !v.is_finite() || v < 0.0 {
+                return Err(format!("fault value for '{name}' must be finite and >= 0"));
+            }
+            if points.iter().any(|(n, _)| n == name) {
+                return Err(format!("fault point '{name}' given twice"));
+            }
+            points.push((name.to_string(), v));
+        }
+        if points.is_empty() {
+            return Err("fault spec names no injection points".into());
+        }
+        Ok(FaultSpec { seed, points })
+    }
+}
+
+/// Arm the registry. Replaces any previous spec and resets all
+/// sequence counters (a fresh chaos run replays from index 0).
+pub fn arm(spec: &FaultSpec) {
+    let reg = Registry {
+        seed: spec.seed,
+        points: spec
+            .points
+            .iter()
+            .map(|(n, v)| PointState {
+                name: n.clone(),
+                value: *v,
+                seq: 0,
+                fired: 0,
+            })
+            .collect(),
+    };
+    *lock() = Some(reg);
+    ARMED.store(true, Ordering::Release);
+}
+
+/// Disarm: every subsequent [`hit`] is false again at atomic-load cost.
+pub fn disarm() {
+    ARMED.store(false, Ordering::Release);
+    *lock() = None;
+}
+
+pub fn armed() -> bool {
+    ARMED.load(Ordering::Relaxed)
+}
+
+/// Should the failure at `point` fire now? Unarmed (or unlisted point):
+/// always false. Armed: a deterministic Bernoulli draw — the k-th query
+/// of a point fires iff `decide(seed, point, k) < rate`.
+pub fn hit(point: &str) -> bool {
+    if !ARMED.load(Ordering::Relaxed) {
+        return false;
+    }
+    hit_slow(point)
+}
+
+#[cold]
+fn hit_slow(point: &str) -> bool {
+    let mut g = lock();
+    let Some(reg) = g.as_mut() else { return false };
+    let seed = reg.seed;
+    let Some(p) = reg.points.iter_mut().find(|p| p.name == point) else {
+        return false;
+    };
+    let seq = p.seq;
+    p.seq += 1;
+    let fire = decide(seed, point, seq) < p.value;
+    if fire {
+        p.fired += 1;
+    }
+    fire
+}
+
+/// Parameter points (`worker.stall_ms`): the configured duration, fired
+/// on every query while armed. `None` when unarmed or unlisted.
+pub fn stall_ms(point: &str) -> Option<Duration> {
+    if !ARMED.load(Ordering::Relaxed) {
+        return None;
+    }
+    let mut g = lock();
+    let reg = g.as_mut()?;
+    let p = reg.points.iter_mut().find(|p| p.name == point)?;
+    p.seq += 1;
+    if p.value < 1.0 {
+        return None;
+    }
+    p.fired += 1;
+    Some(Duration::from_millis(p.value as u64))
+}
+
+/// Per-point `(name, queried, fired)` counters for run summaries.
+pub fn counts() -> Vec<(String, u64, u64)> {
+    let g = lock();
+    match g.as_ref() {
+        Some(reg) => reg
+            .points
+            .iter()
+            .map(|p| (p.name.clone(), p.seq, p.fired))
+            .collect(),
+        None => Vec::new(),
+    }
+}
+
+/// The deterministic draw: a pure function of `(seed, point, seq)` in
+/// `[0, 1)`. FNV-1a folds the point name, a splitmix64-style finalizer
+/// mixes in seed and sequence index — no shared state, so the value is
+/// independent of thread interleaving and of queries to other points.
+pub fn decide(seed: u64, point: &str, seq: u64) -> f64 {
+    let mut h: u64 = 0xcbf2_9ce4_8422_2325;
+    for b in point.bytes() {
+        h ^= b as u64;
+        h = h.wrapping_mul(0x0000_0100_0000_01b3);
+    }
+    let mut z = seed
+        ^ h.rotate_left(17)
+        ^ seq.wrapping_mul(0x9E37_79B9_7F4A_7C15);
+    z = (z ^ (z >> 30)).wrapping_mul(0xBF58_476D_1CE4_E5B9);
+    z = (z ^ (z >> 27)).wrapping_mul(0x94D0_49BB_1331_11EB);
+    z ^= z >> 31;
+    ((z >> 11) as f64) * (1.0 / (1u64 << 53) as f64)
+}
+
+fn lock() -> std::sync::MutexGuard<'static, Option<Registry>> {
+    // a panic while holding this lock must not wedge every later query
+    STATE.lock().unwrap_or_else(|p| p.into_inner())
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    /// Tests that arm the global registry must not interleave.
+    static TEST_LOCK: Mutex<()> = Mutex::new(());
+
+    fn guard() -> std::sync::MutexGuard<'static, ()> {
+        TEST_LOCK.lock().unwrap_or_else(|p| p.into_inner())
+    }
+
+    #[test]
+    fn parse_accepts_points_and_seed() {
+        let s = FaultSpec::parse("worker.panic=0.5, seed=9 ,wire.corrupt=0.01").unwrap();
+        assert_eq!(s.seed, 9);
+        assert_eq!(
+            s.points,
+            vec![
+                ("worker.panic".to_string(), 0.5),
+                ("wire.corrupt".to_string(), 0.01)
+            ]
+        );
+    }
+
+    #[test]
+    fn parse_rejects_typos_duplicates_and_garbage() {
+        assert!(FaultSpec::parse("worker.pancake=0.5").is_err());
+        assert!(FaultSpec::parse("worker.panic=0.5,worker.panic=0.1").is_err());
+        assert!(FaultSpec::parse("worker.panic=nan").is_err());
+        assert!(FaultSpec::parse("worker.panic=-1").is_err());
+        assert!(FaultSpec::parse("seed=3").is_err(), "no points named");
+        assert!(FaultSpec::parse("worker.panic").is_err());
+    }
+
+    #[test]
+    fn decide_is_deterministic_and_in_unit_range() {
+        for seed in [0u64, 7, u64::MAX] {
+            for seq in [0u64, 1, 1000] {
+                let a = decide(seed, "worker.panic", seq);
+                let b = decide(seed, "worker.panic", seq);
+                assert_eq!(a.to_bits(), b.to_bits());
+                assert!((0.0..1.0).contains(&a));
+            }
+        }
+        // different points decouple even at the same (seed, seq)
+        assert_ne!(
+            decide(7, "worker.panic", 0).to_bits(),
+            decide(7, "wire.corrupt", 0).to_bits()
+        );
+    }
+
+    #[test]
+    fn unarmed_is_never_hit_and_unlisted_points_stay_cold() {
+        let _g = guard();
+        disarm();
+        assert!(!hit("test.always"));
+        assert!(stall_ms("test.stall").is_none());
+        // armed registry, but a point the spec does not name
+        arm(&FaultSpec::parse("test.always=1.0").unwrap());
+        assert!(!hit("test.other"));
+        assert!(hit("test.always"));
+        disarm();
+        assert!(!hit("test.always"));
+    }
+
+    #[test]
+    fn rate_one_always_fires_and_rate_zero_never_does() {
+        let _g = guard();
+        arm(&FaultSpec::parse("test.always=1.0,test.never=0.0,seed=3").unwrap());
+        for _ in 0..64 {
+            assert!(hit("test.always"));
+            assert!(!hit("test.never"));
+        }
+        let c = counts();
+        let always = c.iter().find(|(n, _, _)| n == "test.always").unwrap();
+        let never = c.iter().find(|(n, _, _)| n == "test.never").unwrap();
+        assert_eq!((always.1, always.2), (64, 64));
+        assert_eq!((never.1, never.2), (64, 0));
+        disarm();
+    }
+
+    #[test]
+    fn rearming_replays_the_same_fire_sequence() {
+        let _g = guard();
+        let spec = FaultSpec::parse("test.maybe=0.37,seed=11").unwrap();
+        arm(&spec);
+        let first: Vec<bool> = (0..128).map(|_| hit("test.maybe")).collect();
+        arm(&spec); // reset counters
+        let second: Vec<bool> = (0..128).map(|_| hit("test.maybe")).collect();
+        assert_eq!(first, second);
+        assert!(first.iter().any(|&b| b) && first.iter().any(|&b| !b));
+        disarm();
+    }
+
+    #[test]
+    fn stall_point_reports_duration_every_query() {
+        let _g = guard();
+        arm(&FaultSpec::parse("test.stall=25").unwrap());
+        for _ in 0..3 {
+            assert_eq!(stall_ms("test.stall"), Some(Duration::from_millis(25)));
+        }
+        // sub-millisecond values are a disabled stall, not a zero sleep
+        arm(&FaultSpec::parse("test.stall=0.5").unwrap());
+        assert_eq!(stall_ms("test.stall"), None);
+        disarm();
+    }
+}

@@ -7,6 +7,7 @@
 
 pub mod bench;
 pub mod cli;
+pub mod fault;
 pub mod json;
 pub mod propcheck;
 pub mod rng;

@@ -97,6 +97,16 @@ pub enum NackReason {
     Closed,
     /// The response did not fit in a wire frame ([`MAX_PAYLOAD`]).
     Oversized,
+    /// A worker failed (panicked) while executing the batch holding this
+    /// request. The request got a terminal error instead of a hung
+    /// channel; the worker was respawned.
+    Internal,
+    /// The request's SLO-derived deadline passed before dispatch; it was
+    /// shed from the queue without being executed.
+    Expired,
+    /// The request's topology fingerprint has killed workers twice and
+    /// is quarantined as a poison pill.
+    Quarantined,
 }
 
 impl NackReason {
@@ -109,6 +119,9 @@ impl NackReason {
             NackReason::Malformed => 5,
             NackReason::Closed => 6,
             NackReason::Oversized => 7,
+            NackReason::Internal => 8,
+            NackReason::Expired => 9,
+            NackReason::Quarantined => 10,
         }
     }
 
@@ -121,6 +134,9 @@ impl NackReason {
             5 => NackReason::Malformed,
             6 => NackReason::Closed,
             7 => NackReason::Oversized,
+            8 => NackReason::Internal,
+            9 => NackReason::Expired,
+            10 => NackReason::Quarantined,
             _ => return None,
         })
     }
@@ -134,6 +150,9 @@ impl NackReason {
             NackReason::Malformed => "malformed",
             NackReason::Closed => "closed",
             NackReason::Oversized => "oversized",
+            NackReason::Internal => "internal",
+            NackReason::Expired => "expired",
+            NackReason::Quarantined => "quarantined",
         }
     }
 }

@@ -1,0 +1,308 @@
+//! Chaos integration tests — deterministic fault injection against the
+//! full serving stack (PR 8 acceptance).
+//!
+//! The fault registry in `util::fault` is process-global, so every test
+//! here serializes on one mutex and disarms via an RAII guard (a failing
+//! assertion must not leave faults armed for the next test). Rates are
+//! pinned to 0.0/1.0 wherever an assertion depends on *which* request
+//! fails, so nothing in here is probabilistic.
+
+use std::sync::Mutex;
+use std::time::Duration;
+
+use ed_batch::batching::fsm::Encoding;
+use ed_batch::coordinator::chaos;
+use ed_batch::coordinator::net::{NetOutcome, NetServer, TcpClient};
+use ed_batch::coordinator::server::{ReqOutcome, Server, ServerConfig, SubmitError};
+use ed_batch::coordinator::SystemMode;
+use ed_batch::rl::TrainConfig;
+use ed_batch::util::fault::{self, FaultSpec};
+use ed_batch::util::rng::Rng;
+use ed_batch::util::wire::NackReason;
+use ed_batch::workloads::{Workload, WorkloadKind};
+
+/// Global-fault-state serialization: one test at a time may arm.
+static FAULT_LOCK: Mutex<()> = Mutex::new(());
+
+/// Arm a spec for the current scope; disarms on drop even if the test
+/// panics mid-assertion.
+struct Armed;
+
+impl Armed {
+    fn new(spec: &str) -> Armed {
+        fault::arm(&FaultSpec::parse(spec).expect("valid fault spec"));
+        Armed
+    }
+}
+
+impl Drop for Armed {
+    fn drop(&mut self) {
+        fault::disarm();
+    }
+}
+
+fn lock() -> std::sync::MutexGuard<'static, ()> {
+    FAULT_LOCK.lock().unwrap_or_else(|p| p.into_inner())
+}
+
+fn quick_config() -> ServerConfig {
+    ServerConfig {
+        workloads: vec![WorkloadKind::TreeLstm],
+        hidden: 32,
+        mode: SystemMode::EdBatch,
+        max_batch: 8,
+        batch_window: Duration::from_millis(1),
+        workers: 1,
+        artifacts_dir: None, // CPU backend
+        store_dir: None,     // in-memory training
+        train_on_miss: true,
+        train_cfg: TrainConfig {
+            max_iters: 120,
+            check_every: 20,
+            train_batch: 2,
+            ..TrainConfig::default()
+        },
+        encoding: Encoding::Sort,
+        seed: 5,
+        ..ServerConfig::default()
+    }
+}
+
+#[test]
+fn worker_panic_is_typed_then_respawned_then_quarantined() {
+    let _g = lock();
+    let server = Server::start(quick_config()).unwrap();
+    let w = Workload::new(WorkloadKind::TreeLstm, 32);
+    let mut rng = Rng::new(81);
+    let poison = w.gen_instance(&mut rng);
+    let healthy = w.gen_instance(&mut rng);
+    let client = server.client(WorkloadKind::TreeLstm);
+    {
+        let _armed = Armed::new("worker.panic=1.0,seed=3");
+        // kill #1 and #2: each submission dies with a typed internal
+        // failure (never a hang), the worker respawns in between
+        for kill in 0..2 {
+            let out = client
+                .submit(poison.clone())
+                .unwrap()
+                .recv()
+                .expect("panicked batch must still answer");
+            match out {
+                ReqOutcome::Failed(f) => {
+                    assert_eq!(f.reason, NackReason::Internal, "kill {kill}: {f}")
+                }
+                ReqOutcome::Response(_) => panic!("kill {kill}: rate-1.0 panic did not fire"),
+            }
+        }
+        // kill #2 tripped the quarantine: the same topology is now
+        // rejected at admission with a poison-pill NACK
+        match client.try_submit(poison.clone()) {
+            Err(SubmitError::Rejected { reason, message }) => {
+                assert_eq!(reason, NackReason::Quarantined);
+                assert!(message.contains("quarantined"), "message: {message}");
+            }
+            other => panic!("expected quarantine rejection, got {:?}", other.map(|_| ())),
+        }
+    }
+    // disarmed: the respawned worker serves other topologies normally...
+    let resp = client.infer(healthy.clone()).expect("respawned worker serves");
+    assert!(resp.num_sinks() > 0);
+    // ...but the quarantine ledger survives disarming (a poison pill is a
+    // property of the request, not of the injection harness)
+    assert!(matches!(
+        client.try_submit(poison),
+        Err(SubmitError::Rejected {
+            reason: NackReason::Quarantined,
+            ..
+        })
+    ));
+    let snap = server.metrics.snapshot();
+    assert_eq!(snap.worker_panics, 2);
+    assert_eq!(snap.worker_respawns, 2);
+    assert_eq!(snap.quarantined, 1);
+    assert_eq!(snap.quarantine_rejects, 2);
+    assert_eq!(snap.internal_failures, 2);
+    server.shutdown().unwrap();
+}
+
+#[test]
+fn partial_panics_conserve_requests_and_leave_survivors_bit_identical() {
+    let _g = lock();
+    let w = Workload::new(WorkloadKind::TreeLstm, 32);
+    let mut rng = Rng::new(82);
+    let pool: Vec<_> = (0..12).map(|_| w.gen_instance(&mut rng)).collect();
+    // baseline: unarmed, record every response's exact bits
+    let baseline: Vec<Vec<u32>> = {
+        let server = Server::start(quick_config()).unwrap();
+        let client = server.client(WorkloadKind::TreeLstm);
+        let bits = pool
+            .iter()
+            .map(|g| {
+                let (_, data) = client.infer(g.clone()).unwrap().wire_parts();
+                data.iter().map(|v| v.to_bits()).collect()
+            })
+            .collect();
+        server.shutdown().unwrap();
+        bits
+    };
+    // chaos: a fresh identical server with a partial panic rate; every
+    // submission must reach exactly one outcome, and every *surviving*
+    // response must be bit-identical to the unaffected baseline
+    let server = Server::start(quick_config()).unwrap();
+    let client = server.client(WorkloadKind::TreeLstm);
+    let (mut responses, mut failures) = (0u32, 0u32);
+    {
+        let _armed = Armed::new("worker.panic=0.4,seed=11");
+        for (i, g) in pool.iter().enumerate() {
+            match client.submit(g.clone()).unwrap().recv().expect("no hangs") {
+                ReqOutcome::Response(r) => {
+                    let (_, data) = r.wire_parts();
+                    let got: Vec<u32> = data.iter().map(|v| v.to_bits()).collect();
+                    assert_eq!(got, baseline[i], "survivor {i} diverged from baseline");
+                    responses += 1;
+                }
+                ReqOutcome::Failed(f) => {
+                    assert!(
+                        matches!(f.reason, NackReason::Internal | NackReason::Quarantined),
+                        "unexpected failure reason: {f}"
+                    );
+                    failures += 1;
+                }
+            }
+        }
+    }
+    assert_eq!(responses + failures, pool.len() as u32, "conservation");
+    let snap = server.metrics.snapshot();
+    assert_eq!(snap.worker_panics, snap.worker_respawns);
+    server.shutdown().unwrap();
+}
+
+#[test]
+fn wire_corrupt_terminates_requests_and_connection_heals_on_disarm() {
+    let _g = lock();
+    let server = Server::start(quick_config()).unwrap();
+    let net = NetServer::start(&server, "127.0.0.1:0").unwrap();
+    let addr = net.local_addr();
+    let w = Workload::new(WorkloadKind::TreeLstm, 32);
+    let mut rng = Rng::new(83);
+    {
+        let _armed = Armed::new("wire.corrupt=1.0,seed=17");
+        let mut client = TcpClient::connect(&addr, 0).unwrap();
+        client.set_read_timeout(Some(Duration::from_secs(20)));
+        // every ingress chunk is corrupted: without a payload checksum the
+        // flip can land anywhere, so the *specific* typed outcome varies
+        // (malformed stream NACK, op-range NACK, even a mutated-but-valid
+        // graph) — the invariant is that collect terminates, never hangs
+        let rid = client.submit(WorkloadKind::TreeLstm, w.gen_instance(&mut rng)).unwrap();
+        match client.collect_outcome(rid) {
+            Ok(NetOutcome::Response(_)) | Ok(NetOutcome::Nack { .. }) => {}
+            Err(e) => {
+                let msg = format!("{e}");
+                assert!(!msg.contains("timed out"), "request hung under corruption: {msg}");
+            }
+        }
+    }
+    // disarmed: a fresh connection round-trips cleanly
+    let mut client = TcpClient::connect(&addr, 0).unwrap();
+    client.set_read_timeout(Some(Duration::from_secs(20)));
+    let resp = client.infer(WorkloadKind::TreeLstm, w.gen_instance(&mut rng)).unwrap();
+    assert!(resp.num_sinks() > 0);
+    net.shutdown().unwrap();
+    server.shutdown().unwrap();
+}
+
+#[test]
+fn chaos_driver_conserves_under_mixed_faults_and_merges_bench_json() {
+    let _g = lock();
+    let server = Server::start(quick_config()).unwrap();
+    let net = NetServer::start(&server, "127.0.0.1:0").unwrap();
+    let metrics = server.metrics.clone();
+    let report = {
+        let _armed = Armed::new("worker.panic=0.2,wire.corrupt=0.05,seed=23");
+        chaos::run(server, net, &[WorkloadKind::TreeLstm], 32, 23, 40).unwrap()
+    };
+    assert_eq!(report.submitted, 40);
+    assert!(report.conservation_ok(), "report: {report:?}");
+    assert_eq!(report.timeouts, 0);
+    let snap = metrics.snapshot();
+    assert_eq!(snap.worker_panics, snap.worker_respawns);
+    // the verdict merges into an existing bench JSON without clobbering it
+    let dir = std::env::temp_dir().join(format!("edbatch_chaos_json_{}", std::process::id()));
+    std::fs::create_dir_all(&dir).unwrap();
+    let path = dir.join("BENCH_serving.json");
+    std::fs::write(&path, r#"{"rows":[{"workers":1}]}"#).unwrap();
+    chaos::write_bench_json(path.to_str().unwrap(), &report).unwrap();
+    let merged = ed_batch::util::json::Json::parse(&std::fs::read_to_string(&path).unwrap())
+        .expect("merged file parses");
+    assert!(merged.get("rows").is_some(), "existing sections preserved");
+    let chaos_obj = merged.get("chaos").expect("chaos section written");
+    assert_eq!(
+        chaos_obj.get("conservation_ok"),
+        Some(&ed_batch::util::json::Json::Bool(true))
+    );
+    let _ = std::fs::remove_dir_all(&dir);
+}
+
+#[test]
+fn expired_requests_are_shed_with_typed_outcome() {
+    let _g = lock();
+    let mut cfg = quick_config();
+    // deadline = 1.0 x the default 20ms class SLO; each batch stalls
+    // 200ms, so everything queued behind the first dispatch expires
+    cfg.deadline_factor = 1.0;
+    cfg.max_batch = 1;
+    let server = Server::start(cfg).unwrap();
+    let w = Workload::new(WorkloadKind::TreeLstm, 32);
+    let mut rng = Rng::new(84);
+    let client = server.client(WorkloadKind::TreeLstm);
+    let (mut responses, mut expired) = (0u32, 0u32);
+    {
+        let _armed = Armed::new("worker.stall_ms=200,seed=29");
+        let receivers: Vec<_> = (0..3)
+            .map(|_| client.submit(w.gen_instance(&mut rng)).unwrap())
+            .collect();
+        for rx in receivers {
+            match rx.recv().expect("expired requests still answer") {
+                ReqOutcome::Response(_) => responses += 1,
+                ReqOutcome::Failed(f) => {
+                    assert_eq!(f.reason, NackReason::Expired, "{f}");
+                    expired += 1;
+                }
+            }
+        }
+    }
+    assert_eq!(responses + expired, 3, "conservation");
+    assert!(expired >= 2, "stalled queue must shed expired requests");
+    assert_eq!(server.metrics.snapshot().expired, expired as u64);
+    server.shutdown().unwrap();
+}
+
+#[test]
+fn store_write_crash_never_clobbers_previous_artifact() {
+    let _g = lock();
+    let dir = std::env::temp_dir().join(format!("edbatch_chaos_store_{}", std::process::id()));
+    let _ = std::fs::remove_dir_all(&dir);
+    let w = Workload::new(WorkloadKind::TreeLstm, 16);
+    let cfg = TrainConfig {
+        max_iters: 60,
+        check_every: 20,
+        train_batch: 2,
+        ..TrainConfig::default()
+    };
+    // generation 1 lands cleanly
+    let mut store = ed_batch::policystore::PolicyStore::open(&dir).unwrap();
+    store.train_into(&w, Encoding::Sort, &cfg, 7).unwrap();
+    {
+        // generation 2 crashes mid-write: tmp+fsync+rename means the
+        // half-written bytes never reach the published name
+        let _armed = Armed::new("store.write=1.0,seed=31");
+        assert!(store.train_into(&w, Encoding::Sort, &cfg, 8).is_err());
+    }
+    drop(store);
+    let reopened = ed_batch::policystore::PolicyStore::open(&dir).unwrap();
+    assert!(
+        reopened.lookup_workload(&w, Encoding::Sort).is_some(),
+        "previous generation must survive a crashed write"
+    );
+    let _ = std::fs::remove_dir_all(&dir);
+}

@@ -817,7 +817,11 @@ fn hot_reload_drops_no_in_flight_requests() {
     let receivers = submitter.join().unwrap();
     assert_eq!(receivers.len(), total);
     for rx in receivers {
-        let resp = rx.recv().expect("in-flight request dropped across hot reload");
+        let resp = rx
+            .recv()
+            .expect("in-flight request dropped across hot reload")
+            .into_result()
+            .expect("in-flight request failed across hot reload");
         assert!(resp.num_sinks() > 0);
         for out in resp.sink_outputs() {
             assert!(out.iter().all(|v| v.is_finite()));
@@ -885,7 +889,8 @@ fn admission_rejections_are_typed_and_do_not_leak_across_classes() {
         default.try_submit(w.gen_instance(&mut rng)).unwrap();
     }
     for rx in tiny_rx {
-        rx.recv().unwrap(); // admitted tiny-class requests still complete
+        // admitted tiny-class requests still complete
+        rx.recv().unwrap().into_result().unwrap();
     }
 
     let snap = server.metrics.snapshot();
