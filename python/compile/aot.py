@@ -7,6 +7,23 @@ reassigns ids and round-trips cleanly.  See /opt/xla-example/load_hlo/.
 
 Run once via ``make artifacts``; rust never invokes python at request time.
 
+Two modes:
+
+* default — import jax, lower each cell through ``model.CELLS`` and write
+  real HLO modules.  Requires the full accelerator stack.
+* ``--stub`` — no jax anywhere: emit the complete version-2 manifest from
+  the jax-free ``shapes`` tables plus one placeholder ``.hlo.txt`` per
+  entry.  The manifest *validates* on the rust side (shapes, arities,
+  file existence) so CI hosts with no accelerator stack can exercise the
+  whole manifest → registry → steering path; only PJRT *compilation* of
+  the placeholder text fails, which the runtime tolerates (``load_errors``)
+  and degrades to CPU.
+
+``--fingerprints FILE`` embeds the rust side's live registry fingerprints
+(the JSON printed by ``ed-batch fingerprint``) as ``registry_fingerprints``
+so a manifest built for one policy registry is rejected wholesale when the
+registry drifts.
+
 Output layout::
 
     artifacts/
@@ -17,20 +34,11 @@ Output layout::
 from __future__ import annotations
 
 import argparse
-import functools
 import json
-import operator
 import pathlib
 import time
 
-import jax
-
-
-def np_prod(xs):
-    return functools.reduce(operator.mul, xs, 1)
-from jax._src.lib import xla_client as xc
-
-from . import model
+from . import shapes
 
 DEFAULT_HIDDEN = [64, 128, 256, 512]
 DEFAULT_BUCKETS = [1, 4, 16, 32, 64, 128, 256]
@@ -39,9 +47,13 @@ DEFAULT_BUCKETS = [1, 4, 16, 32, 64, 128, 256]
 # MV-RNN's per-instance [B, H, H] matrices at B=256, H=512 would be 256 MB).
 MAX_ARG_ELEMS = 16 * 2**20
 
+STUB_HLO_HEADER = "// ed-batch stub artifact (no accelerator stack on build host)\n"
+
 
 def to_hlo_text(lowered) -> str:
     """StableHLO -> XlaComputation -> HLO text (ids reassigned by the parser)."""
+    from jax._src.lib import xla_client as xc  # deferred: stub mode is jax-free
+
     mlir_mod = lowered.compiler_ir("stablehlo")
     comp = xc._xla.mlir.mlir_module_to_xla_computation(
         str(mlir_mod), use_tuple_args=False, return_tuple=True
@@ -50,38 +62,33 @@ def to_hlo_text(lowered) -> str:
 
 
 def lower_cell(cell: str, hidden: int, batch: int) -> str:
-    fn, shapes, _ = model.CELLS[cell]
-    args = [jax.ShapeDtypeStruct(s, jax.numpy.float32) for s in shapes(batch, hidden)]
+    import jax  # deferred: stub mode is jax-free
+
+    from . import model
+
+    fn, shape_fn, _ = model.CELLS[cell]
+    args = [jax.ShapeDtypeStruct(s, jax.numpy.float32) for s in shape_fn(batch, hidden)]
     lowered = jax.jit(fn).lower(*args)
     return to_hlo_text(lowered)
 
 
-def main() -> None:
-    ap = argparse.ArgumentParser(description=__doc__)
-    ap.add_argument("--out-dir", default="../artifacts")
-    ap.add_argument("--hidden", type=int, nargs="*", default=DEFAULT_HIDDEN)
-    ap.add_argument("--buckets", type=int, nargs="*", default=DEFAULT_BUCKETS)
-    ap.add_argument("--cells", nargs="*", default=list(model.CELLS.keys()))
-    args = ap.parse_args()
-
-    out_dir = pathlib.Path(args.out_dir)
-    out_dir.mkdir(parents=True, exist_ok=True)
-
+def build_entries(cells, hiddens, buckets, out_dir, stub):
+    """Write one artifact per in-budget (cell, hidden, bucket); return entries."""
     entries = []
-    t0 = time.time()
-    for cell in args.cells:
-        fn, shapes, n_out = model.CELLS[cell]
-        for hidden in args.hidden:
-            for bucket in args.buckets:
-                biggest = max(
-                    int(np_prod(s)) for s in shapes(bucket, hidden)
-                )
+    for cell in cells:
+        for hidden in hiddens:
+            for bucket in buckets:
+                arg_shapes = shapes.arg_shapes(cell, bucket, hidden)
+                biggest = max(shapes.prod(s) for s in arg_shapes)
                 if biggest > MAX_ARG_ELEMS:
                     print(f"  skip {cell}_h{hidden}_b{bucket} (arg {biggest} elems)")
                     continue
                 name = f"{cell}_h{hidden}_b{bucket}"
                 path = out_dir / f"{name}.hlo.txt"
-                text = lower_cell(cell, hidden, bucket)
+                if stub:
+                    text = f"{STUB_HLO_HEADER}// {name}\n"
+                else:
+                    text = lower_cell(cell, hidden, bucket)
                 path.write_text(text)
                 entries.append(
                     {
@@ -89,18 +96,67 @@ def main() -> None:
                         "hidden": hidden,
                         "batch": bucket,
                         "file": path.name,
-                        "arg_shapes": [list(s) for s in shapes(bucket, hidden)],
-                        "num_outputs": n_out,
+                        "arg_shapes": [list(s) for s in arg_shapes],
+                        "num_outputs": shapes.num_outputs(cell),
+                        "cost": shapes.estimate_cost_ns(cell, bucket, hidden),
                     }
                 )
-                print(f"  lowered {name} ({len(text)} chars)")
+                print(f"  {'stubbed' if stub else 'lowered'} {name} ({len(text)} chars)")
+    return entries
+
+
+def load_fingerprints(path: str):
+    """Parse `ed-batch fingerprint` output: {workload: decimal-string u64}."""
+    fps = json.loads(pathlib.Path(path).read_text())
+    if not isinstance(fps, dict):
+        raise SystemExit(f"--fingerprints {path}: expected a JSON object")
+    out = {}
+    for workload, fp in fps.items():
+        # normalize to decimal strings — u64 values overflow some JSON
+        # number parsers, and the rust loader only accepts strings
+        out[str(workload)] = str(int(fp))
+    return out
+
+
+def main(argv=None) -> None:
+    ap = argparse.ArgumentParser(description=__doc__)
+    ap.add_argument("--out-dir", default="../artifacts")
+    ap.add_argument("--hidden", type=int, nargs="*", default=DEFAULT_HIDDEN)
+    ap.add_argument("--buckets", type=int, nargs="*", default=DEFAULT_BUCKETS)
+    ap.add_argument("--cells", nargs="*", default=shapes.cells())
+    ap.add_argument(
+        "--stub",
+        action="store_true",
+        help="emit manifest + placeholder artifacts without importing jax",
+    )
+    ap.add_argument(
+        "--fingerprints",
+        default=None,
+        help="JSON file from `ed-batch fingerprint` to embed as registry_fingerprints",
+    )
+    args = ap.parse_args(argv)
+
+    unknown = [c for c in args.cells if c not in shapes.cells()]
+    if unknown:
+        raise SystemExit(f"unknown cells: {unknown} (have {shapes.cells()})")
+
+    out_dir = pathlib.Path(args.out_dir)
+    out_dir.mkdir(parents=True, exist_ok=True)
+
+    t0 = time.time()
+    entries = build_entries(args.cells, args.hidden, args.buckets, out_dir, args.stub)
 
     manifest = {
-        "version": 1,
-        "generated_unix": int(time.time()),
+        "version": 2,
+        # stub manifests are byte-reproducible (golden-fixture diffing)
+        "generated_unix": 0 if args.stub else int(time.time()),
         "entries": entries,
     }
-    (out_dir / "manifest.json").write_text(json.dumps(manifest, indent=1))
+    if args.fingerprints:
+        manifest["registry_fingerprints"] = load_fingerprints(args.fingerprints)
+    (out_dir / "manifest.json").write_text(
+        json.dumps(manifest, indent=1, sort_keys=True) + "\n"
+    )
     print(
         f"wrote {len(entries)} artifacts + manifest to {out_dir} "
         f"in {time.time() - t0:.1f}s"

@@ -21,6 +21,7 @@ from typing import Callable, Dict, List, Tuple
 import jax
 import jax.numpy as jnp
 
+from . import shapes
 from .kernels import pallas_ops as pk
 
 
@@ -100,66 +101,31 @@ def classifier(h, w, b):
 
 # ---------------------------------------------------------------------------
 # Registry: cell name -> (fn, arg-shape builder, #outputs).
-# Shapes are functions of (batch B, hidden H); label space fixed small.
+# Shape tables and output arities live in the jax-free ``shapes`` module
+# (the single source of truth shared with ``aot.py --stub`` and, via the
+# golden manifest fixture, the rust engine's own tables).
 # ---------------------------------------------------------------------------
 
-NUM_CLASSES = 32  # tagger label space / NMT vocab slice used by benchmarks
+NUM_CLASSES = shapes.NUM_CLASSES
 
 CellSpec = Tuple[Callable, Callable[[int, int], List[Tuple[int, ...]]], int]
 
+_STEP_FNS: Dict[str, Callable] = {
+    "lstm": lstm_step,
+    "gru": gru_step,
+    "treelstm_internal": treelstm_internal,
+    "treelstm_leaf": treelstm_leaf,
+    "treegru_internal": treegru_internal,
+    "treegru_leaf": treegru_leaf,
+    "mv_cell": mv_cell,
+    "classifier": classifier,
+}
+
 CELLS: Dict[str, CellSpec] = {
-    "lstm": (
-        lstm_step,
-        lambda b, h: [(b, h), (b, h), (b, h), (h, 4 * h), (h, 4 * h), (4 * h,)],
-        2,
-    ),
-    "gru": (
-        gru_step,
-        lambda b, h: [
-            (b, h), (b, h),
-            (h, 2 * h), (h, 2 * h), (2 * h,),
-            (h, h), (h, h), (h,),
-        ],
-        1,
-    ),
-    "treelstm_internal": (
-        treelstm_internal,
-        lambda b, h: [
-            (b, h), (b, h), (b, h), (b, h),
-            (h, 5 * h), (h, 5 * h), (5 * h,),
-        ],
-        2,
-    ),
-    "treelstm_leaf": (
-        treelstm_leaf,
-        lambda b, h: [(b, h), (h, 3 * h), (3 * h,)],
-        2,
-    ),
-    "treegru_internal": (
-        treegru_internal,
-        lambda b, h: [
-            (b, h), (b, h),
-            (h, 3 * h), (h, 3 * h), (3 * h,),
-            (h, h), (h, h), (h,),
-        ],
-        1,
-    ),
-    "treegru_leaf": (
-        treegru_leaf,
-        lambda b, h: [(b, h), (h, h), (h,)],
-        1,
-    ),
-    "mv_cell": (
-        mv_cell,
-        lambda b, h: [
-            (b, h), (b, h), (b, h, h), (b, h, h),
-            (2 * h, h), (h,), (h, 2 * h), (h, h),
-        ],
-        2,
-    ),
-    "classifier": (
-        classifier,
-        lambda b, h: [(b, h), (h, NUM_CLASSES), (NUM_CLASSES,)],
-        1,
-    ),
+    cell: (
+        _STEP_FNS[cell],
+        (lambda c: lambda b, h: shapes.arg_shapes(c, b, h))(cell),
+        shapes.num_outputs(cell),
+    )
+    for cell in shapes.cells()
 }

@@ -1,0 +1,136 @@
+"""Jax-free shape and cost tables for the AOT artifact pipeline.
+
+Single source of truth on the python side for every cell's argument
+shapes, output arity, and estimated per-launch device cost.  ``model.py``
+builds its jit-able ``CELLS`` registry on top of these tables, and
+``aot.py --stub`` emits a complete, validating manifest from them without
+importing jax at all — which is what lets the manifest round-trip tests
+and the CI `artifacts` job run on hosts with no accelerator stack.
+
+The tables must agree field-for-field with the rust engine's
+``cells::data_arg_widths`` / ``exec::backend::weight_shapes`` /
+``cells::out_widths``; ``Manifest::validate`` re-derives every shape on
+the rust side and rejects any disagreement with a typed reason, and the
+committed golden fixture (``python/tests/golden/manifest_stub.json``) is
+parsed by both languages' test suites.
+
+Conventions: batch dim ``B`` leads every data argument; weights follow
+the data arguments in declaration order; all float32.
+"""
+
+from __future__ import annotations
+
+from functools import reduce
+from operator import mul
+from typing import Dict, List, Tuple
+
+NUM_CLASSES = 32  # tagger label space / NMT vocab slice used by benchmarks
+
+ShapeFn = "Callable[[int, int], List[Tuple[int, ...]]]"
+
+# cell -> (arg-shape builder, #data args, #outputs)
+_TABLES: Dict[str, Tuple[object, int, int]] = {
+    "lstm": (
+        lambda b, h: [(b, h), (b, h), (b, h), (h, 4 * h), (h, 4 * h), (4 * h,)],
+        3,
+        2,
+    ),
+    "gru": (
+        lambda b, h: [
+            (b, h), (b, h),
+            (h, 2 * h), (h, 2 * h), (2 * h,),
+            (h, h), (h, h), (h,),
+        ],
+        2,
+        1,
+    ),
+    "treelstm_internal": (
+        lambda b, h: [
+            (b, h), (b, h), (b, h), (b, h),
+            (h, 5 * h), (h, 5 * h), (5 * h,),
+        ],
+        4,
+        2,
+    ),
+    "treelstm_leaf": (
+        lambda b, h: [(b, h), (h, 3 * h), (3 * h,)],
+        1,
+        2,
+    ),
+    "treegru_internal": (
+        lambda b, h: [
+            (b, h), (b, h),
+            (h, 3 * h), (h, 3 * h), (3 * h,),
+            (h, h), (h, h), (h,),
+        ],
+        2,
+        1,
+    ),
+    "treegru_leaf": (
+        lambda b, h: [(b, h), (h, h), (h,)],
+        1,
+        1,
+    ),
+    "mv_cell": (
+        lambda b, h: [
+            (b, h), (b, h), (b, h, h), (b, h, h),
+            (2 * h, h), (h,), (h, 2 * h), (h, h),
+        ],
+        4,
+        2,
+    ),
+    "classifier": (
+        lambda b, h: [(b, h), (h, NUM_CLASSES), (NUM_CLASSES,)],
+        1,
+        1,
+    ),
+}
+
+
+def cells() -> List[str]:
+    """Every artifact cell kind, in registry order."""
+    return list(_TABLES.keys())
+
+
+def arg_shapes(cell: str, batch: int, hidden: int) -> List[Tuple[int, ...]]:
+    """All argument shapes (data args first, then weights)."""
+    return _TABLES[cell][0](batch, hidden)
+
+
+def data_arg_count(cell: str) -> int:
+    return _TABLES[cell][1]
+
+
+def num_outputs(cell: str) -> int:
+    return _TABLES[cell][2]
+
+
+def prod(xs) -> int:
+    return reduce(mul, xs, 1)
+
+
+# Cost-model constants for `estimate_cost_ns`.  Deliberately coarse: the
+# declared cost only has to *rank* a compiled launch against the rust
+# side's measured CPU ns-per-lane EWMA (exec::steer), not predict wall
+# time.  Overhead dominates tiny buckets (so steering keeps b=1 chunks on
+# CPU), flops dominate large ones.
+LAUNCH_OVERHEAD_NS = 30_000.0  # PJRT dispatch + transfer setup per launch
+DEVICE_FLOPS_PER_NS = 50.0  # ~50 GFLOP/s sustained on the modeled device
+
+
+def flops(cell: str, batch: int, hidden: int) -> int:
+    """Approximate flops of one batched cell launch: 2*B*prod(W) per 2-D
+    weight matmul, plus the MV-RNN's per-lane batched einsum terms."""
+    all_shapes = arg_shapes(cell, batch, hidden)
+    weights = all_shapes[data_arg_count(cell):]
+    total = sum(2 * batch * prod(w) for w in weights if len(w) == 2)
+    if cell == "mv_cell":
+        h = hidden
+        # two [H,H]@[H] cross matvecs + the [2H,H]->[H,H] matrix map, per lane
+        total += batch * (2 * 2 * h * h + 2 * 2 * h * h * h)
+    return total
+
+
+def estimate_cost_ns(cell: str, batch: int, hidden: int) -> float:
+    """Manifest-declared cost: estimated device-ns for one launch."""
+    return LAUNCH_OVERHEAD_NS + flops(cell, batch, hidden) / DEVICE_FLOPS_PER_NS

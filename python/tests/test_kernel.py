@@ -4,10 +4,13 @@ Hypothesis sweeps the shape space (batch buckets x hidden sizes) and random
 seeds; every kernel must match ``ref`` to f32 tolerance.
 """
 
-import jax
+import pytest
+
+jax = pytest.importorskip("jax", reason="accelerator stack not installed")
+pytest.importorskip("hypothesis", reason="hypothesis not installed")
+
 import jax.numpy as jnp
 import numpy as np
-import pytest
 from hypothesis import given, settings, strategies as st
 
 from compile.kernels import pallas_ops as pk

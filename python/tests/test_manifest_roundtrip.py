@@ -1,0 +1,102 @@
+"""Manifest round-trip: ``aot.py --stub`` output vs the committed golden.
+
+Entirely jax-free — these tests must pass on any host with bare python,
+because the CI `artifacts` job leans on them to prove the python emitter
+and the rust loader (whose own golden test parses the *same* fixture via
+``include_str!``) agree on the manifest schema.
+
+Golden params: ``--stub --hidden 16 --buckets 1 4`` -> 16 entries
+(8 cells x 1 hidden x 2 buckets), generated_unix pinned to 0.
+"""
+
+import json
+import pathlib
+import subprocess
+import sys
+
+import pytest
+
+from compile import aot, shapes
+
+GOLDEN = pathlib.Path(__file__).parent / "golden" / "manifest_stub.json"
+GOLDEN_ARGS = ["--stub", "--hidden", "16", "--buckets", "1", "4"]
+
+
+def regen(tmp_path, extra=()):
+    aot.main(GOLDEN_ARGS + ["--out-dir", str(tmp_path)] + list(extra))
+    return tmp_path / "manifest.json"
+
+
+def test_stub_regeneration_is_byte_identical_to_golden(tmp_path):
+    manifest = regen(tmp_path)
+    assert manifest.read_bytes() == GOLDEN.read_bytes(), (
+        "stub manifest drifted from the golden fixture — if the schema change "
+        "is intentional, regenerate python/tests/golden/manifest_stub.json "
+        "and re-run the rust golden test (runtime::manifest)"
+    )
+
+
+def test_golden_covers_every_cell_with_costs_and_shapes():
+    doc = json.loads(GOLDEN.read_text())
+    assert doc["version"] == 2
+    assert doc["generated_unix"] == 0, "golden must be reproducible"
+    entries = doc["entries"]
+    assert {e["cell"] for e in entries} == set(shapes.cells())
+    for e in entries:
+        assert e["cost"] > 0, f"{e['file']}: missing cost"
+        assert e["arg_shapes"] == [
+            list(s) for s in shapes.arg_shapes(e["cell"], e["batch"], e["hidden"])
+        ], f"{e['file']}: shape table drift"
+        assert e["num_outputs"] == shapes.num_outputs(e["cell"])
+
+
+def test_stub_writes_one_placeholder_artifact_per_entry(tmp_path):
+    manifest = regen(tmp_path)
+    doc = json.loads(manifest.read_text())
+    for e in doc["entries"]:
+        text = (tmp_path / e["file"]).read_text()
+        assert text.startswith(aot.STUB_HLO_HEADER)
+
+
+def test_fingerprints_embed_as_decimal_strings(tmp_path):
+    fps = {"treelstm": 18446744073709551615, "chain_lstm": "7"}  # u64::MAX + str
+    fp_file = tmp_path / "fps.json"
+    fp_file.write_text(json.dumps(fps))
+    manifest = regen(tmp_path, ["--fingerprints", str(fp_file)])
+    doc = json.loads(manifest.read_text())
+    assert doc["registry_fingerprints"] == {
+        "treelstm": "18446744073709551615",
+        "chain_lstm": "7",
+    }
+
+
+def test_unknown_cell_is_rejected(tmp_path):
+    with pytest.raises(SystemExit):
+        aot.main(["--stub", "--out-dir", str(tmp_path), "--cells", "nope"])
+
+
+def test_cost_model_is_monotone_in_batch_and_hidden():
+    for cell in shapes.cells():
+        assert shapes.estimate_cost_ns(cell, 4, 64) > shapes.estimate_cost_ns(
+            cell, 1, 64
+        )
+        assert shapes.estimate_cost_ns(cell, 4, 128) > shapes.estimate_cost_ns(
+            cell, 4, 64
+        )
+
+
+def test_module_entry_point_runs_without_jax(tmp_path):
+    """`python -m compile.aot --stub` must work with jax imports poisoned."""
+    code = (
+        "import sys; sys.modules['jax'] = None\n"
+        "from compile import aot\n"
+        f"aot.main({GOLDEN_ARGS + ['--out-dir', str(tmp_path)]!r})\n"
+    )
+    proc = subprocess.run(
+        [sys.executable, "-c", code],
+        cwd=pathlib.Path(__file__).parent.parent,
+        capture_output=True,
+        text=True,
+    )
+    assert proc.returncode == 0, proc.stderr
+    assert (tmp_path / "manifest.json").read_bytes() == GOLDEN.read_bytes()

@@ -1,9 +1,12 @@
 """L2 cell functions vs pure-jnp oracles + lowering sanity for every cell."""
 
-import jax
+import pytest
+
+jax = pytest.importorskip("jax", reason="accelerator stack not installed")
+pytest.importorskip("hypothesis", reason="hypothesis not installed")
+
 import jax.numpy as jnp
 import numpy as np
-import pytest
 from hypothesis import given, settings, strategies as st
 
 from compile import model

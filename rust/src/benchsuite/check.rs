@@ -9,8 +9,8 @@
 //!   more than `tolerance` above it;
 //! * per thread-scaling row (keyed by `threads`): same two checks;
 //! * boolean gates (`compose_ok_all`, `bitwise_parallel_ok`,
-//!   `simd_parity_ok`): must be true in the current run whenever the
-//!   baseline asserts them;
+//!   `simd_parity_ok`, `backend_parity_ok`): must be true in the current
+//!   run whenever the baseline asserts them;
 //! * per SIMD micro-kernel row (keyed by shape `m`/`k`/`n`): the
 //!   measured `speedup_vs_scalar` must meet the baseline's absolute
 //!   `min_speedup` floor — **skipped entirely when the current run has
@@ -242,7 +242,12 @@ pub fn compare(baseline: &Json, current: &Json, tolerance: f64) -> Result<CheckO
         rows: Vec::new(),
         failed_gates: Vec::new(),
     };
-    for gate in ["compose_ok_all", "bitwise_parallel_ok", "simd_parity_ok"] {
+    for gate in [
+        "compose_ok_all",
+        "bitwise_parallel_ok",
+        "simd_parity_ok",
+        "backend_parity_ok",
+    ] {
         let expected = matches!(baseline.get(gate), Some(Json::Bool(true)));
         if expected && !matches!(current.get(gate), Some(Json::Bool(true))) {
             out.failed_gates.push(gate.to_string());

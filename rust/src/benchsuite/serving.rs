@@ -121,6 +121,9 @@ pub struct ServingBench {
     /// ULP-contract verdict of `exec::parity` at the effective level
     /// (trivially true when the scalar oracle is pinned)
     pub simd_parity_ok: bool,
+    /// bucketed/steered-vs-CPU-oracle verdict of [`crate::exec::steer`]:
+    /// padded lanes proven inert, real lanes bitwise identical
+    pub backend_parity_ok: bool,
     pub simd_rows: Vec<SimdRow>,
     /// deterministic multi-class overload-shedding replay
     /// ([`crate::rl::dispatch_sim::admission_gate`]): the gold budget
@@ -291,6 +294,10 @@ pub fn run(opts: &BenchOpts) -> ServingBench {
         SimdLevel::detect()
     };
     let simd_parity_ok = opts.strict_bitwise || parity::simd_parity_ok(hidden, opts.seed);
+    // bucketing/padding parity: registry-free (deterministic on any host),
+    // default power-of-two ladder — the same gate `serve` prints and bails on
+    let backend_parity_ok =
+        crate::exec::steer::backend_parity_ok(hidden, opts.seed, None, None);
     let simd_rows = simd_micro_rows(eff_level, hidden, opts.seed, opts.fast);
 
     print_table(
@@ -419,6 +426,7 @@ pub fn run(opts: &BenchOpts) -> ServingBench {
         simd_active: eff_level.simd_active(),
         strict_bitwise: opts.strict_bitwise,
         simd_parity_ok,
+        backend_parity_ok,
         simd_rows,
         admission,
     };
@@ -519,6 +527,7 @@ fn trajectory_row(opts: &BenchOpts, hidden: usize, bench: &ServingBench) -> Json
         ("simd_active", Json::Bool(bench.simd_active)),
         ("strict_bitwise", Json::Bool(bench.strict_bitwise)),
         ("simd_parity_ok", Json::Bool(bench.simd_parity_ok)),
+        ("backend_parity_ok", Json::Bool(bench.backend_parity_ok)),
         (
             "simd_speedup_max",
             Json::from(fmax(&mut bench.simd_rows.iter().map(|r| r.speedup))),
@@ -608,6 +617,7 @@ fn write_json(opts: &BenchOpts, hidden: usize, distinct: usize, bench: &ServingB
         ("simd_active", Json::Bool(bench.simd_active)),
         ("strict_bitwise", Json::Bool(bench.strict_bitwise)),
         ("simd_parity_ok", Json::Bool(bench.simd_parity_ok)),
+        ("backend_parity_ok", Json::Bool(bench.backend_parity_ok)),
         ("admission_gate_ok", Json::Bool(bench.admission.ok())),
         ("rows", Json::Arr(row_json)),
         ("thread_rows", Json::Arr(thread_json)),
@@ -1015,6 +1025,7 @@ mod tests {
         // at whatever level this host detected; scalar-fallback hosts
         // report exactly 1.0x (never a measured pseudo-speedup)
         assert!(bench.simd_parity_ok, "SIMD violated the ULP contract");
+        assert!(bench.backend_parity_ok, "bucketed/steered path diverged");
         assert_eq!(bench.simd_rows.len(), 5);
         for r in &bench.simd_rows {
             assert!(r.scalar_ms > 0.0 && r.simd_ms > 0.0, "{r:?}");

@@ -39,6 +39,7 @@ use crate::batching::Schedule;
 use crate::coordinator::compose::ComposedPlan;
 use crate::exec::backend::{CpuBackend, ExecBackend, KernelReport, PjrtBackend};
 use crate::exec::pool::{PoolStats, ThreadPool};
+use crate::exec::steer::{BackendChoice, SteerReport, SteeredBackend};
 use crate::exec::simd::SimdLevel;
 use crate::graph::cells::{self, ArgSemantics};
 use crate::graph::{CellKind, Graph, NodeId, TypeRegistry};
@@ -112,12 +113,29 @@ pub struct ExecReport {
     /// produced a non-finite value (see `exec::backend`); zero in any
     /// healthy run
     pub numerics_degraded: usize,
+    /// chunks this mini-batch executed on the CPU pool (steered backend;
+    /// includes typed PJRT fallback re-runs)
+    pub backend_cpu_batches: usize,
+    /// chunks this mini-batch executed on the PJRT backend
+    pub backend_pjrt_batches: usize,
+    /// typed PJRT failures degraded to CPU this mini-batch — the request
+    /// still succeeds (see `exec::steer`)
+    pub pjrt_fallbacks: usize,
 }
 
 /// Backend selection for [`CellEngine::new`].
 pub enum Backend<'a> {
     Pjrt(&'a ArtifactRegistry),
     Cpu,
+    /// Cost-model steered CPU/PJRT backend (`--backend pjrt|auto`):
+    /// bucketed chunk plans, padded lanes, typed fallback-to-CPU. The
+    /// registry is optional — without one the PJRT side always falls
+    /// back (stub hosts exercise the full fallback ladder).
+    Steered {
+        reg: Option<&'a ArtifactRegistry>,
+        choice: BackendChoice,
+        buckets: Option<Vec<usize>>,
+    },
 }
 
 /// Engine: an [`ExecBackend`] + memory-plan cache + batch dispatch.
@@ -590,6 +608,9 @@ impl<'a> CellEngine<'a> {
         let backend: Box<dyn ExecBackend + 'a> = match backend {
             Backend::Cpu => Box::new(CpuBackend::new(hidden)),
             Backend::Pjrt(reg) => Box::new(PjrtBackend::new(reg, hidden)?),
+            Backend::Steered { reg, choice, buckets } => {
+                Box::new(SteeredBackend::new(reg, hidden, choice, buckets.as_deref())?)
+            }
         };
         Ok(CellEngine {
             backend,
@@ -653,6 +674,21 @@ impl<'a> CellEngine<'a> {
         report.numerics_degraded = (now.numerics_degraded - before.numerics_degraded) as usize;
     }
 
+    /// Fold the backend steering-counter delta since `before` into
+    /// `report` (CPU vs PJRT chunk attribution; zero deltas on the plain
+    /// CPU and PJRT backends, which don't steer).
+    fn fold_steer_report(&self, before: SteerReport, report: &mut ExecReport) {
+        let now = self.backend.steer_report();
+        report.backend_cpu_batches = (now.cpu_batches - before.cpu_batches) as usize;
+        report.backend_pjrt_batches = (now.pjrt_batches - before.pjrt_batches) as usize;
+        report.pjrt_fallbacks = (now.pjrt_fallbacks - before.pjrt_fallbacks) as usize;
+    }
+
+    /// The backend's cumulative steering counters.
+    pub fn steer_report(&self) -> SteerReport {
+        self.backend.steer_report()
+    }
+
     /// Pin the backend to the scalar oracle kernels — the engine half of
     /// `--strict-bitwise`. With this set, outputs are bit-for-bit the
     /// pre-SIMD scalar path at any thread count.
@@ -709,6 +745,7 @@ impl<'a> CellEngine<'a> {
 
         let pool0 = self.pool_stats();
         let kr0 = self.backend.kernel_report();
+        let sr0 = self.backend.steer_report();
         let t0 = Instant::now();
         let mut report = ExecReport {
             batches: schedule.batches.len(),
@@ -742,6 +779,7 @@ impl<'a> CellEngine<'a> {
         report.exec_s = t0.elapsed().as_secs_f64();
         self.fold_pool_stats(pool0, &mut report);
         self.fold_kernel_report(kr0, &mut report);
+        self.fold_steer_report(sr0, &mut report);
         Ok(report)
     }
 
@@ -758,6 +796,7 @@ impl<'a> CellEngine<'a> {
         let grew = store.reset_flat(comp.total_elems());
         let pool0 = self.pool_stats();
         let kr0 = self.backend.kernel_report();
+        let sr0 = self.backend.steer_report();
         let t0 = Instant::now();
         let mut report = ExecReport {
             batches: comp.num_batches(),
@@ -804,6 +843,7 @@ impl<'a> CellEngine<'a> {
         report.exec_s = t0.elapsed().as_secs_f64();
         self.fold_pool_stats(pool0, &mut report);
         self.fold_kernel_report(kr0, &mut report);
+        self.fold_steer_report(sr0, &mut report);
         Ok(report)
     }
 

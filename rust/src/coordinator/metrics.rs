@@ -104,6 +104,14 @@ struct Inner {
     flight_dumps: u64,
     conn_cap_rejects: u64,
     numerics_degraded: u64,
+    // backend steering (exec::steer): chunk attribution + typed fallbacks
+    backend_mode: &'static str,
+    backend_cpu_batches: u64,
+    backend_pjrt_batches: u64,
+    pjrt_fallbacks: u64,
+    // manifest entries rejected at boot (stale fingerprint, bad shapes,
+    // missing artifact files) — the serving path stays intact on CPU
+    manifest_rejects: u64,
 }
 
 /// Thread-safe metrics sink shared between server workers.
@@ -249,6 +257,17 @@ pub struct MetricsSnapshot {
     pub conn_cap_rejects: u64,
     /// cells degraded to the scalar oracle after a non-finite SIMD result
     pub numerics_degraded: u64,
+    /// configured steering mode ("cpu", "pjrt", "auto")
+    pub backend_mode: String,
+    /// chunks executed on the CPU pool (includes PJRT fallback re-runs)
+    pub backend_cpu_batches: u64,
+    /// chunks executed on the PJRT backend
+    pub backend_pjrt_batches: u64,
+    /// typed PJRT failures degraded to CPU — requests still succeeded
+    pub pjrt_fallbacks: u64,
+    /// manifest entries rejected at boot (stale fingerprint, bad shapes,
+    /// missing files); nonzero means the PJRT surface shrank, not an error
+    pub manifest_rejects: u64,
     pub breakdown: TimeBreakdown,
     pub elapsed_s: f64,
 }
@@ -386,6 +405,20 @@ impl Metrics {
         g.simd_level = level;
         g.simd_active = simd_active;
         g.strict_bitwise = strict;
+    }
+
+    /// Record the configured steering mode once at server boot
+    /// ("cpu" / "pjrt" / "auto"; see `exec::steer::BackendChoice`).
+    pub fn set_backend_config(&self, mode: &'static str) {
+        self.lock().backend_mode = mode;
+    }
+
+    /// Manifest validation outcome at boot: `n` entries rejected (stale
+    /// fingerprint, bad arg shapes, missing artifact file). Serving
+    /// continues on CPU. Set-semantics, not additive: every worker
+    /// validates the same manifest and reports the same count.
+    pub fn record_manifest_rejects(&self, n: u64) {
+        self.lock().manifest_rejects = n;
     }
 
     /// Register the SLO classes once at server boot: `(name, p99 target
@@ -555,6 +588,9 @@ impl Metrics {
         g.pack_elems += report.pack_elems as u64;
         g.pack_s += report.pack_s;
         g.numerics_degraded += report.numerics_degraded as u64;
+        g.backend_cpu_batches += report.backend_cpu_batches as u64;
+        g.backend_pjrt_batches += report.backend_pjrt_batches as u64;
+        g.pjrt_fallbacks += report.pjrt_fallbacks as u64;
     }
 
     pub fn snapshot(&self) -> MetricsSnapshot {
@@ -646,6 +682,15 @@ impl Metrics {
             flight_dumps: g.flight_dumps,
             conn_cap_rejects: g.conn_cap_rejects,
             numerics_degraded: g.numerics_degraded,
+            backend_mode: if g.backend_mode.is_empty() {
+                "cpu".to_string()
+            } else {
+                g.backend_mode.to_string()
+            },
+            backend_cpu_batches: g.backend_cpu_batches,
+            backend_pjrt_batches: g.backend_pjrt_batches,
+            pjrt_fallbacks: g.pjrt_fallbacks,
+            manifest_rejects: g.manifest_rejects,
             breakdown: g.breakdown,
             elapsed_s: self
                 .started
@@ -919,6 +964,45 @@ mod tests {
         assert_eq!(s.flight_dumps, 1);
         assert_eq!(s.conn_cap_rejects, 1);
         assert_eq!(s.numerics_degraded, 1);
+    }
+
+    #[test]
+    fn backend_steering_counters() {
+        let m = Metrics::new();
+        // before any worker reports: the mode reads as the CPU default
+        let s0 = m.snapshot();
+        assert_eq!(s0.backend_mode, "cpu");
+        assert_eq!(s0.backend_pjrt_batches, 0);
+        assert_eq!(s0.manifest_rejects, 0);
+        m.set_backend_config("auto");
+        // set-semantics: every worker reports the same validation count
+        m.record_manifest_rejects(3);
+        m.record_manifest_rejects(3);
+        let bd = TimeBreakdown::default();
+        m.record_minibatch(
+            2,
+            &bd,
+            &ExecReport {
+                backend_cpu_batches: 4,
+                backend_pjrt_batches: 1,
+                pjrt_fallbacks: 1,
+                ..Default::default()
+            },
+        );
+        m.record_minibatch(
+            1,
+            &bd,
+            &ExecReport {
+                backend_cpu_batches: 2,
+                ..Default::default()
+            },
+        );
+        let s = m.snapshot();
+        assert_eq!(s.backend_mode, "auto");
+        assert_eq!(s.backend_cpu_batches, 6);
+        assert_eq!(s.backend_pjrt_batches, 1);
+        assert_eq!(s.pjrt_fallbacks, 1);
+        assert_eq!(s.manifest_rejects, 3);
     }
 
     #[test]

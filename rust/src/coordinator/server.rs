@@ -97,6 +97,9 @@ use crate::graph::Graph;
 use crate::policystore::PolicyStore;
 use crate::rl::dispatch_sim::SimConfig;
 use crate::rl::TrainConfig;
+use crate::exec::steer::BackendChoice;
+use crate::memory::graph_plan::registry_fingerprint;
+use crate::runtime::manifest::{Manifest, ManifestReject};
 use crate::runtime::ArtifactRegistry;
 use crate::util::fault;
 use crate::util::rng::Rng;
@@ -149,6 +152,14 @@ pub struct ServerConfig {
     pub threads: usize,
     /// artifacts directory; None = CPU reference backend
     pub artifacts_dir: Option<String>,
+    /// `--backend cpu|pjrt|auto`: per-mini-batch CPU/PJRT steering (see
+    /// `exec::steer`). `Cpu` (the default) preserves the exact legacy
+    /// CPU path; `Pjrt`/`Auto` run the bucketed steered backend, which
+    /// degrades to CPU with typed counters on any PJRT failure
+    pub backend: BackendChoice,
+    /// `--buckets` override for the compiled batch-size ladder; `None`
+    /// defers to the artifact registry's declared buckets
+    pub buckets: Option<Vec<usize>>,
     /// PolicyStore directory (EdBatch mode); None = train in memory at
     /// boot without persistence
     pub store_dir: Option<String>,
@@ -205,6 +216,8 @@ impl Default for ServerConfig {
             workers: 1,
             threads: 1,
             artifacts_dir: None,
+            backend: BackendChoice::Cpu,
+            buckets: None,
             store_dir: None,
             train_on_miss: true,
             train_cfg: TrainConfig::default(),
@@ -1121,10 +1134,79 @@ struct WorkerCtx {
 /// Build (or rebuild, on a post-panic respawn) one worker's engine with
 /// the boot configuration applied: backend, memory mode, thread pool,
 /// strict-bitwise pin.
+/// Load + validate the artifact manifest for serving: shape/file checks
+/// ([`Manifest::validate`]) and fingerprint keying against the live
+/// policy-registry fingerprints. Returns the (possibly shrunken) registry
+/// and the number of typed rejects. Never fails boot: an unusable
+/// manifest or a fingerprint mismatch drops the whole PJRT surface and
+/// serving continues on CPU.
+fn load_validated_registry(
+    dir: &str,
+    hidden: usize,
+    live: &[(String, u64)],
+) -> (Option<ArtifactRegistry>, u64) {
+    let manifest = match Manifest::load(dir) {
+        Ok(m) => m,
+        Err(e) => {
+            eprintln!("artifacts: manifest unusable, serving on cpu: {e:#}");
+            return (None, 1);
+        }
+    };
+    let mut rejects = manifest.validate(Some(dir));
+    rejects.extend(manifest.fingerprint_rejects(live));
+    for r in &rejects {
+        eprintln!("artifacts: manifest reject: {r}");
+    }
+    let n = rejects.len() as u64;
+    if rejects
+        .iter()
+        .any(|r| matches!(r, ManifestReject::FingerprintMismatch { .. }))
+    {
+        // the whole artifact set was compiled against a different op-type
+        // space — nothing in it is trustworthy
+        eprintln!("artifacts: stale registry fingerprint, dropping all artifacts (cpu fallback)");
+        return (None, n);
+    }
+    let bad: std::collections::HashSet<String> = rejects
+        .iter()
+        .filter_map(|r| r.entry_name().map(str::to_string))
+        .collect();
+    let filter =
+        move |k: &crate::runtime::manifest::ArtifactKey| k.hidden == hidden && !bad.contains(&k.name());
+    match ArtifactRegistry::from_manifest(dir, &manifest, Some(&filter)) {
+        Ok(reg) => {
+            if !reg.load_errors().is_empty() {
+                eprintln!(
+                    "artifacts: {} entr(ies) declared but not compiled (cpu fallback per batch)",
+                    reg.load_errors().len()
+                );
+            }
+            (Some(reg), n)
+        }
+        Err(e) => {
+            eprintln!("artifacts: registry load failed, serving on cpu: {e:#}");
+            (None, n + 1)
+        }
+    }
+}
+
 fn build_engine(config: &ServerConfig, registry: Option<&ArtifactRegistry>) -> Result<CellEngine> {
-    let mut engine = match registry {
-        Some(reg) => CellEngine::new(Backend::Pjrt(reg), config.hidden, config.seed)?,
-        None => CellEngine::new(Backend::Cpu, config.hidden, config.seed)?,
+    let mut engine = match (config.backend, registry) {
+        // `--backend cpu` is the exact legacy CPU path: no steering, no
+        // bucketing, registry ignored for execution
+        (BackendChoice::Cpu, _) => CellEngine::new(Backend::Cpu, config.hidden, config.seed)?,
+        // pjrt/auto: the steered backend — bucketed chunk plans, cost
+        // model, typed fallback-to-CPU on any PJRT failure (the registry
+        // may be None when the manifest was rejected wholesale)
+        (choice, reg) => CellEngine::new(
+            Backend::Steered {
+                reg,
+                choice,
+                buckets: config.buckets.clone(),
+            },
+            config.hidden,
+            config.seed,
+        )?,
     };
     // graph-level state layout: ED-Batch plans the arena with the PQ tree,
     // the DyNet baselines keep creation order + full gather/scatter
@@ -1195,15 +1277,27 @@ fn worker_loop(
                 );
             }
         }
+        // artifact registry: validated, tolerant load. Any manifest
+        // problem — unreadable file, stale registry fingerprint, bad
+        // shapes, missing artifact files — shrinks or drops the PJRT
+        // surface with a typed `manifest_rejects` count; it NEVER fails
+        // worker boot (serving continues on CPU).
         let registry = match &config.artifacts_dir {
-            Some(dir) => {
-                let hidden = config.hidden;
-                Some(ArtifactRegistry::load(
-                    dir,
-                    Some(&move |k| k.hidden == hidden),
-                )?)
+            Some(dir) if config.backend != BackendChoice::Cpu => {
+                let live: Vec<(String, u64)> = ctxs
+                    .iter()
+                    .map(|(kind, ctx)| {
+                        (
+                            kind.name().to_string(),
+                            registry_fingerprint(&ctx.workload.registry),
+                        )
+                    })
+                    .collect();
+                let (reg, rejects) = load_validated_registry(dir, config.hidden, &live);
+                metrics.record_manifest_rejects(rejects);
+                reg
             }
-            None => None,
+            _ => None,
         };
         Ok((ctxs, ctrls, registry))
     })();
@@ -1225,6 +1319,7 @@ fn worker_loop(
     };
     let kr = engine.kernel_report();
     metrics.set_kernel_config(engine.simd_level().name(), kr.simd_active(), config.strict_bitwise);
+    metrics.set_backend_config(config.backend.as_str());
     // the compositional hot path is ED-Batch's contribution; the baselines
     // keep re-running their policy per mini-batch (that overhead is what
     // they exist to measure)

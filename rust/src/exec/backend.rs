@@ -107,6 +107,14 @@ pub trait ExecBackend {
     fn kernel_report(&self) -> KernelReport {
         KernelReport::default()
     }
+
+    /// Cumulative backend-steering counters (CPU vs PJRT chunk
+    /// attribution and typed fallbacks). Non-steering backends report
+    /// every chunk as CPU-side zero — the engine folds per-minibatch
+    /// deltas into its exec report exactly like [`KernelReport`].
+    fn steer_report(&self) -> super::steer::SteerReport {
+        super::steer::SteerReport::default()
+    }
 }
 
 /// Cumulative kernel-dispatch counters — what [`ExecBackend::kernel_report`]

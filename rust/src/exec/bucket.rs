@@ -1,0 +1,153 @@
+//! Batch-bucketing ladder: map ragged composed-plan lane counts onto the
+//! fixed batch sizes that AOT-compiled accelerator artifacts exist for.
+//!
+//! Compiled PJRT artifacts are shape-specialised — one HLO module per
+//! (cell, hidden, batch) — so a mini-batch of 13 lanes cannot run on the
+//! accelerator directly. The ladder rounds each lane count *up* to the
+//! smallest compiled bucket (power-of-two by default, `--buckets`
+//! override) and the engine zero-pads the missing lanes. Padding is
+//! inert: every kernel computes lanes independently (no cross-lane
+//! reductions — the same contract that makes the thread pool bit-exact),
+//! so the real lanes' outputs are unchanged and the padded lanes are
+//! simply never scattered back (see `ExecReport::padded_lanes`).
+//!
+//! Two properties are load-bearing and proptested (`prop_bucket_ladder_
+//! total_and_monotone` in `rust/tests/proptests.rs`):
+//!
+//! * **totality** — every lane count `n >= 1` maps to exactly one plan
+//!   whose chunks sum to at least `n`;
+//! * **monotonicity** — `bucket_for` is non-decreasing in `n`, and every
+//!   chunk in a plan is a ladder bucket.
+
+use anyhow::{bail, Result};
+
+/// Sorted, deduplicated set of compiled batch sizes.
+#[derive(Clone, Debug, PartialEq, Eq)]
+pub struct BucketLadder {
+    buckets: Vec<usize>,
+}
+
+impl BucketLadder {
+    /// Explicit ladder (the `--buckets 1,4,16,64` override). Rejects an
+    /// empty list and zero-sized buckets; sorts and dedups the rest.
+    pub fn new(mut buckets: Vec<usize>) -> Result<Self> {
+        buckets.sort_unstable();
+        buckets.dedup();
+        if buckets.is_empty() {
+            bail!("bucket ladder must name at least one bucket size");
+        }
+        if buckets[0] == 0 {
+            bail!("bucket sizes must be >= 1");
+        }
+        Ok(Self { buckets })
+    }
+
+    /// Default ladder: powers of two `1, 2, 4, ... , >= max_batch`.
+    pub fn pow2(max_batch: usize) -> Self {
+        let mut buckets = vec![1usize];
+        while *buckets.last().unwrap() < max_batch.max(1) {
+            let next = buckets.last().unwrap() * 2;
+            buckets.push(next);
+        }
+        Self { buckets }
+    }
+
+    pub fn buckets(&self) -> &[usize] {
+        &self.buckets
+    }
+
+    pub fn max(&self) -> usize {
+        *self.buckets.last().unwrap()
+    }
+
+    /// The smallest bucket `>= n`, or the largest bucket when `n` exceeds
+    /// the ladder (the caller then splits — see [`BucketLadder::plan`]).
+    /// Total over all `n` and monotone non-decreasing.
+    pub fn bucket_for(&self, n: usize) -> usize {
+        for &b in &self.buckets {
+            if b >= n {
+                return b;
+            }
+        }
+        self.max()
+    }
+
+    /// Split `lanes` into a sequence of ladder buckets covering all of
+    /// them: repeated max-bucket chunks while the remainder exceeds the
+    /// ladder, then one rounded-up bucket for the tail. The sum of the
+    /// returned chunks is always `>= lanes` (never `== 0`); the engine
+    /// zero-pads the final chunk's `sum - lanes` surplus lanes.
+    pub fn plan(&self, lanes: usize) -> Vec<usize> {
+        let mut remaining = lanes.max(1);
+        let max = self.max();
+        let mut out = Vec::new();
+        while remaining > max {
+            out.push(max);
+            remaining -= max;
+        }
+        out.push(self.bucket_for(remaining));
+        out
+    }
+
+    /// Padded-lane overhead of [`BucketLadder::plan`] for `lanes`.
+    pub fn padding(&self, lanes: usize) -> usize {
+        self.plan(lanes).iter().sum::<usize>() - lanes.max(1)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn pow2_ladder_covers_max_batch() {
+        let l = BucketLadder::pow2(48);
+        assert_eq!(l.buckets(), &[1, 2, 4, 8, 16, 32, 64]);
+        assert_eq!(BucketLadder::pow2(1).buckets(), &[1]);
+        assert_eq!(BucketLadder::pow2(0).buckets(), &[1]);
+    }
+
+    #[test]
+    fn explicit_ladder_sorts_dedups_and_rejects_invalid() {
+        let l = BucketLadder::new(vec![16, 4, 4, 1]).unwrap();
+        assert_eq!(l.buckets(), &[1, 4, 16]);
+        assert!(BucketLadder::new(vec![]).is_err());
+        assert!(BucketLadder::new(vec![0, 4]).is_err());
+    }
+
+    #[test]
+    fn bucket_for_rounds_up_and_saturates() {
+        let l = BucketLadder::new(vec![1, 4, 16]).unwrap();
+        assert_eq!(l.bucket_for(1), 1);
+        assert_eq!(l.bucket_for(2), 4);
+        assert_eq!(l.bucket_for(4), 4);
+        assert_eq!(l.bucket_for(5), 16);
+        assert_eq!(l.bucket_for(16), 16);
+        // beyond the ladder: saturate at the max (plan() splits)
+        assert_eq!(l.bucket_for(17), 16);
+    }
+
+    #[test]
+    fn plan_covers_all_lanes_with_ladder_chunks() {
+        let l = BucketLadder::new(vec![1, 4, 16]).unwrap();
+        assert_eq!(l.plan(3), vec![4]);
+        assert_eq!(l.plan(16), vec![16]);
+        assert_eq!(l.plan(17), vec![16, 1]);
+        assert_eq!(l.plan(37), vec![16, 16, 16]);
+        assert_eq!(l.plan(0), vec![1]);
+        for lanes in 1..200 {
+            let plan = l.plan(lanes);
+            let sum: usize = plan.iter().sum();
+            assert!(sum >= lanes, "plan {plan:?} under-covers {lanes}");
+            assert!(plan.iter().all(|c| l.buckets().contains(c)));
+        }
+    }
+
+    #[test]
+    fn padding_matches_plan_surplus() {
+        let l = BucketLadder::new(vec![1, 4, 16]).unwrap();
+        assert_eq!(l.padding(3), 1);
+        assert_eq!(l.padding(16), 0);
+        assert_eq!(l.padding(18), 2); // 16 + 4 covers 18
+    }
+}

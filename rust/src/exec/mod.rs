@@ -4,6 +4,11 @@
 //! * [`backend`] — the [`backend::ExecBackend`] trait plus its CPU
 //!   reference and PJRT implementations; the cell-granularity engine in
 //!   [`crate::coordinator::engine`] dispatches every batch through it.
+//! * [`bucket`] — the batch-bucketing ladder mapping ragged lane counts
+//!   onto compiled artifact batch sizes (padding proven inert).
+//! * [`steer`] — the cost-model steered backend choosing CPU vs PJRT
+//!   per mini-batch, with typed fallback counters and the
+//!   `backend_parity_ok` serve gate.
 //! * [`pool`] — hand-rolled scoped work-sharing thread pool for
 //!   intra-batch lane parallelism: the CPU backend splits each batched
 //!   kernel into fixed, thread-count-independent lane chunks whose
@@ -15,10 +20,12 @@
 //!   measurement and the source of the per-cell in-cell copy charges).
 
 pub mod backend;
+pub mod bucket;
 pub mod cpu_kernels;
 pub mod parity;
 pub mod pool;
 pub mod simd;
+pub mod steer;
 
 use std::time::Instant;
 

@@ -52,6 +52,7 @@ fn run(args: &Args) -> Result<()> {
         Some("serve") => serve(args),
         Some("train") | Some("train-policy") => train(args),
         Some("inspect") => inspect(args),
+        Some("fingerprint") => fingerprint_cmd(args),
         _ => {
             println!(
                 "ed-batch — FSM-batched dynamic-DNN serving (ICML'23 reproduction)\n\n\
@@ -66,6 +67,11 @@ fn run(args: &Args) -> Result<()> {
                  ed-batch serve --workloads <name[,name...]> [--mode ed-batch|cavs-dynet|vanilla-dynet]\n             \
                  [--workers N] [--store DIR] [--no-train-on-miss] [--require-store-hits]\n             \
                  [--hidden N] [--requests N] [--max-batch N] [--no-pjrt]\n             \
+                 [--backend cpu|pjrt|auto  (per-mini-batch backend steering: cpu = legacy exact\n              \
+                 CPU path; pjrt = force the bucketed accelerator path (typed CPU fallback on\n              \
+                 failure); auto = cost model picks per chunk; default auto, cpu under --no-pjrt)]\n             \
+                 [--buckets 1,4,16,64  (override the compiled batch-size ladder; default =\n              \
+                 the artifact manifest's declared buckets, else powers of two)]\n             \
                  [--threads N  (intra-batch CPU lane parallelism per worker; default =\n              \
                  available cores / workers; responses bit-identical at any N)]\n             \
                  [--dispatch fixed|adaptive|learned  (batch-size/max-wait rule per dispatch)]\n             \
@@ -91,6 +97,9 @@ fn run(args: &Args) -> Result<()> {
                  points: worker.panic worker.stall_ms arena.grow wire.corrupt store.write)]\n             \
                  [--chaos  (bursty wire-path replay asserting request conservation — every\n              \
                  submission gets exactly one typed outcome; prints chaos_conservation_ok=)]\n  \
+                 ed-batch fingerprint [--workloads <name[,name...]|all>] [--hidden N]\n             \
+                 (print the live policy-registry fingerprint per workload as JSON —\n              \
+                 the keying `aot.py --fingerprints` bakes into artifact manifests)\n  \
                  ed-batch inspect --workload <name> [--instances N]\n\n\
                  workloads: bilstm-tagger bilstm-tagger-withchar lstm-nmt treelstm treegru\n            \
                  mv-rnn treelstm-2type lattice-lstm lattice-gru"
@@ -266,6 +275,15 @@ fn serve(args: &Args) -> Result<()> {
         ms if ms > 0.0 => Some(std::time::Duration::from_secs_f64(ms * 1e-3)),
         _ => None,
     };
+    // Backend steering: --no-pjrt pins the exact legacy CPU path; with
+    // artifacts enabled the default is the cost-model-steered auto mode.
+    // --buckets overrides the batch-bucket ladder (manifest-declared or
+    // power-of-two by default); an explicit empty list is an error.
+    let backend = ed_batch::exec::steer::BackendChoice::parse(
+        args.get_or("backend", if args.flag("no-pjrt") { "cpu" } else { "auto" }),
+    )
+    .map_err(|e| anyhow!(e))?;
+    let buckets: Option<Vec<usize>> = args.get("buckets").map(|_| args.usize_list("buckets", &[]));
     let config = ServerConfig {
         workloads: kinds.clone(),
         hidden,
@@ -304,6 +322,8 @@ fn serve(args: &Args) -> Result<()> {
         // deadline = factor x the class p99 SLO target; 0 disables shedding
         deadline_factor: args.f64("deadline-factor", 0.0),
         flight_dir: args.get("flight-dir").map(|s| s.to_string()),
+        backend,
+        buckets: buckets.clone(),
     };
     let strict_bitwise = config.strict_bitwise;
     // --faults 'worker.panic=0.02,wire.corrupt=0.01,seed=7' (or ED_FAULTS):
@@ -595,6 +615,26 @@ fn serve(args: &Args) -> Result<()> {
         snap.par_wall_s * 1e3,
         snap.pool_occupancy() * 100.0,
     );
+    // backend-steering summary + the bucketing/padding parity self-check:
+    // every cell kind is replayed at ragged lane counts through the
+    // bucketed+padded steered path and must be bitwise identical on the
+    // real lanes to the unbucketed CPU oracle (exec::steer). The check
+    // runs registry-free (deterministic, artifact-independent); artifact
+    // numerics themselves are covered by the runtime PJRT tests.
+    let bcheck = ed_batch::exec::steer::backend_parity_ok(
+        hidden,
+        args.u64("seed", 7),
+        None,
+        buckets.as_deref(),
+    );
+    println!(
+        "backend: mode={} cpu_batches={} pjrt_batches={} pjrt_fallbacks={} manifest_rejects={} | backend_parity_ok={bcheck}",
+        snap.backend_mode,
+        snap.backend_cpu_batches,
+        snap.backend_pjrt_batches,
+        snap.pjrt_fallbacks,
+        snap.manifest_rejects,
+    );
     // network-path self-check: replay a fresh pool through TCP and the
     // in-process client and require bit-identical responses, then report
     // the front-end counters. Runs after the main snapshot so the legacy
@@ -624,6 +664,9 @@ fn serve(args: &Args) -> Result<()> {
     }
     if !pcheck {
         bail!("parallel execution diverged from serial (bitwise) — refusing to pass the smoke");
+    }
+    if !bcheck {
+        bail!("bucketed/steered execution diverged from the CPU oracle on real lanes — refusing to pass the smoke");
     }
     if ncheck == Some(false) {
         bail!("TCP responses diverged from in-process responses (bitwise) — refusing to pass the smoke");
@@ -708,6 +751,17 @@ fn serve_chaos(
         snap.numerics_degraded,
         snap.flight_dumps,
     );
+    // backend steering counters under chaos: the integration grep needs
+    // manifest_rejects / fallback visibility on this leg too (no parity
+    // re-run here — chaos verdicts come from conservation, not numerics)
+    println!(
+        "backend: mode={} cpu_batches={} pjrt_batches={} pjrt_fallbacks={} manifest_rejects={}",
+        snap.backend_mode,
+        snap.backend_cpu_batches,
+        snap.backend_pjrt_batches,
+        snap.pjrt_fallbacks,
+        snap.manifest_rejects,
+    );
     println!("chaos_conservation_ok={}", report.conservation_ok());
     chaos::write_bench_json(benchsuite::serving::JSON_PATH, &report)?;
     println!(
@@ -761,6 +815,32 @@ fn net_parity_check(
         }
     }
     Ok(true)
+}
+
+/// `ed-batch fingerprint`: print the live policy-registry fingerprint
+/// for each requested workload as a JSON object. The values are u64
+/// FNV-1a digests serialized as **decimal strings** (JSON numbers are
+/// f64 and would silently round above 2^53); `python/compile/aot.py
+/// --fingerprints` consumes this verbatim and bakes it into the artifact
+/// manifest, which `serve` then re-validates against the same live
+/// registries at boot.
+fn fingerprint_cmd(args: &Args) -> Result<()> {
+    use ed_batch::memory::graph_plan::registry_fingerprint;
+    use ed_batch::util::json::Json;
+    let kinds = workload_list(args, "all")?;
+    let hidden = args.usize("hidden", 64);
+    let pairs: Vec<(&str, Json)> = kinds
+        .iter()
+        .map(|&kind| {
+            let w = Workload::new(kind, hidden);
+            (
+                kind.name(),
+                Json::Str(registry_fingerprint(&w.registry).to_string()),
+            )
+        })
+        .collect();
+    println!("{}", Json::obj(pairs).to_string());
+    Ok(())
 }
 
 fn inspect(args: &Args) -> Result<()> {

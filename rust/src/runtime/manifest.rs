@@ -1,5 +1,26 @@
 //! `artifacts/manifest.json` parsing — the contract between `aot.py` and
 //! the rust runtime.
+//!
+//! Version 1 manifests carry `entries` only. This module additionally
+//! understands two optional extensions (both backward compatible — old
+//! manifests still parse):
+//!
+//! * a top-level `registry_fingerprints` object mapping workload names to
+//!   the op-type-space fingerprint
+//!   ([`crate::memory::graph_plan::registry_fingerprint`], emitted as a
+//!   decimal *string* because the JSON codec stores numbers as f64) the
+//!   artifacts were generated against — the server rejects a manifest
+//!   whose fingerprint disagrees with the live registry (typed
+//!   [`ManifestReject::FingerprintMismatch`], counted as
+//!   `manifest_rejects`, degrade to CPU, never a boot failure);
+//! * a per-entry `cost` (estimated device-nanoseconds for one launch of
+//!   the compiled module) feeding the CPU-vs-PJRT steering decision in
+//!   [`crate::exec::steer`].
+//!
+//! [`Manifest::validate`] checks every *declared* entry against the
+//! engine's own shape tables without compiling anything, so stale or
+//! hand-damaged manifests are rejected with a typed reason even on hosts
+//! where the XLA stub cannot compile at all.
 
 use anyhow::{anyhow, Result};
 
@@ -24,11 +45,89 @@ pub struct ManifestEntry {
     pub file: String,
     pub arg_shapes: Vec<Vec<usize>>,
     pub num_outputs: usize,
+    /// Estimated device-ns per launch (steering input); absent in v1
+    /// manifests.
+    pub cost: Option<f64>,
 }
 
 #[derive(Clone, Debug)]
 pub struct Manifest {
     pub entries: Vec<ManifestEntry>,
+    /// `workload name -> registry fingerprint` the artifacts were keyed
+    /// on at generation time. Empty for v1 (unkeyed) manifests — those
+    /// are accepted; only a *disagreeing* fingerprint is a reject.
+    pub registry_fingerprints: Vec<(String, u64)>,
+}
+
+/// A typed reason the serving layer refused (part of) a manifest. Every
+/// variant degrades the affected scope to the CPU backend and increments
+/// the `manifest_rejects` counter — a reject is never a request error and
+/// never a boot failure.
+#[derive(Clone, Debug, PartialEq, Eq)]
+pub enum ManifestReject {
+    /// The manifest was keyed on a different op-type space than the live
+    /// workload registry (stale artifacts after a workload change).
+    FingerprintMismatch {
+        workload: String,
+        declared: u64,
+        live: u64,
+    },
+    /// An entry names an artifact file that does not exist on disk.
+    MissingFile { name: String, file: String },
+    /// An entry's `arg_shapes` disagree with the engine's own
+    /// `data_arg_count`/`data_arg_widths`/`weight_shapes` tables.
+    BadArgShapes { name: String, detail: String },
+    /// An entry declares an output arity the engine does not expect.
+    BadOutputs {
+        name: String,
+        declared: usize,
+        expected: usize,
+    },
+    /// An entry names a cell kind the engine has no kernel for.
+    UnknownCell { name: String, cell: String },
+}
+
+impl ManifestReject {
+    /// The manifest entry this reject excludes, or `None` for
+    /// manifest-wide rejects (fingerprint mismatch rejects everything).
+    pub fn entry_name(&self) -> Option<&str> {
+        match self {
+            ManifestReject::FingerprintMismatch { .. } => None,
+            ManifestReject::MissingFile { name, .. }
+            | ManifestReject::BadArgShapes { name, .. }
+            | ManifestReject::BadOutputs { name, .. }
+            | ManifestReject::UnknownCell { name, .. } => Some(name),
+        }
+    }
+}
+
+impl std::fmt::Display for ManifestReject {
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        match self {
+            ManifestReject::FingerprintMismatch {
+                workload,
+                declared,
+                live,
+            } => write!(
+                f,
+                "fingerprint mismatch for {workload}: manifest {declared} vs live {live}"
+            ),
+            ManifestReject::MissingFile { name, file } => {
+                write!(f, "{name}: artifact file {file} missing")
+            }
+            ManifestReject::BadArgShapes { name, detail } => {
+                write!(f, "{name}: bad arg_shapes ({detail})")
+            }
+            ManifestReject::BadOutputs {
+                name,
+                declared,
+                expected,
+            } => write!(f, "{name}: declares {declared} outputs, engine expects {expected}"),
+            ManifestReject::UnknownCell { name, cell } => {
+                write!(f, "{name}: unknown cell kind {cell:?}")
+            }
+        }
+    }
 }
 
 impl Manifest {
@@ -76,9 +175,27 @@ impl Manifest {
                 file: get_str("file")?,
                 arg_shapes,
                 num_outputs: get_usize("num_outputs")?,
+                cost: e.get("cost").and_then(|v| v.as_f64()),
             });
         }
-        Ok(Manifest { entries: out })
+        // fingerprints ride as decimal strings (the codec's numbers are
+        // f64 and would corrupt u64 values above 2^53)
+        let mut fps = Vec::new();
+        if let Some(obj) = j.get("registry_fingerprints").and_then(|v| v.as_obj()) {
+            for (workload, v) in obj {
+                let fp = v
+                    .as_str()
+                    .and_then(|s| s.parse::<u64>().ok())
+                    .ok_or_else(|| {
+                        anyhow!("registry_fingerprints.{workload}: not a decimal u64 string")
+                    })?;
+                fps.push((workload.clone(), fp));
+            }
+        }
+        Ok(Manifest {
+            entries: out,
+            registry_fingerprints: fps,
+        })
     }
 
     /// Cells present in the manifest (deduped).
@@ -87,6 +204,117 @@ impl Manifest {
         v.sort();
         v.dedup();
         v
+    }
+
+    /// The fingerprint the manifest declares for `workload`, if keyed.
+    pub fn fingerprint_for(&self, workload: &str) -> Option<u64> {
+        self.registry_fingerprints
+            .iter()
+            .find(|(w, _)| w == workload)
+            .map(|(_, fp)| *fp)
+    }
+
+    /// Validate every declared entry against the engine's shape tables
+    /// and (when `dir` is given) the artifact files on disk. Returns one
+    /// typed reject per offending entry; an empty vec means the manifest
+    /// is internally consistent. Fingerprints are *not* checked here —
+    /// they need live workload registries (see
+    /// [`Manifest::fingerprint_rejects`]).
+    pub fn validate(&self, dir: Option<&str>) -> Vec<ManifestReject> {
+        use crate::exec::backend::weight_shapes;
+        use crate::graph::cells;
+
+        let mut rejects = Vec::new();
+        for e in &self.entries {
+            let name = e.key.name();
+            if !cells::ALL_CELLS.contains(&e.key.cell.as_str()) {
+                rejects.push(ManifestReject::UnknownCell {
+                    name,
+                    cell: e.key.cell.clone(),
+                });
+                continue;
+            }
+            let (h, b) = (e.key.hidden, e.key.batch);
+            let data_widths = cells::data_arg_widths(&e.key.cell, h);
+            let weights = weight_shapes(&e.key.cell, h);
+            if e.arg_shapes.len() != data_widths.len() + weights.len() {
+                rejects.push(ManifestReject::BadArgShapes {
+                    name,
+                    detail: format!(
+                        "{} args declared, engine expects {} data + {} weights",
+                        e.arg_shapes.len(),
+                        data_widths.len(),
+                        weights.len()
+                    ),
+                });
+                continue;
+            }
+            let mut bad = None;
+            for (i, (shape, want)) in e.arg_shapes.iter().zip(&data_widths).enumerate() {
+                let lanes = shape.first().copied().unwrap_or(0);
+                let width: usize = shape.iter().skip(1).product();
+                if lanes != b || width != *want {
+                    bad = Some(format!(
+                        "data arg {i}: shape {shape:?} vs batch {b} x width {want}"
+                    ));
+                    break;
+                }
+            }
+            if bad.is_none() {
+                for (i, (shape, want)) in e.arg_shapes[data_widths.len()..]
+                    .iter()
+                    .zip(&weights)
+                    .enumerate()
+                {
+                    if shape != want {
+                        bad = Some(format!("weight arg {i}: shape {shape:?} vs {want:?}"));
+                        break;
+                    }
+                }
+            }
+            if let Some(detail) = bad {
+                rejects.push(ManifestReject::BadArgShapes { name, detail });
+                continue;
+            }
+            let expected_outs = cells::out_widths(&e.key.cell, h).len();
+            if e.num_outputs != expected_outs {
+                rejects.push(ManifestReject::BadOutputs {
+                    name,
+                    declared: e.num_outputs,
+                    expected: expected_outs,
+                });
+                continue;
+            }
+            if let Some(dir) = dir {
+                let path = format!("{dir}/{}", e.file);
+                if !std::path::Path::new(&path).exists() {
+                    rejects.push(ManifestReject::MissingFile {
+                        name,
+                        file: e.file.clone(),
+                    });
+                }
+            }
+        }
+        rejects
+    }
+
+    /// Check the declared fingerprints against live `(workload, fp)`
+    /// pairs. Workloads the manifest does not key are accepted (v1
+    /// compatibility); only a disagreement is a reject.
+    pub fn fingerprint_rejects(&self, live: &[(String, u64)]) -> Vec<ManifestReject> {
+        let mut rejects = Vec::new();
+        for (workload, live_fp) in live {
+            if let Some(declared) = self.fingerprint_for(workload) {
+                if declared != *live_fp {
+                    rejects.push(ManifestReject::FingerprintMismatch {
+                        workload: workload.clone(),
+                        declared,
+                        live: *live_fp,
+                    });
+                }
+            }
+        }
+        rejects
     }
 }
 
@@ -104,6 +332,11 @@ mod tests {
         ]
     }"#;
 
+    /// The committed golden fixture emitted by `aot.py --stub` (see
+    /// `python/tests/test_manifest_roundtrip.py` — both sides pin the
+    /// same bytes).
+    const GOLDEN: &str = include_str!("../../../python/tests/golden/manifest_stub.json");
+
     #[test]
     fn parses_sample() {
         let m = Manifest::parse(SAMPLE).unwrap();
@@ -115,7 +348,9 @@ mod tests {
         assert_eq!(e.arg_shapes.len(), 6);
         assert_eq!(e.arg_shapes[3], vec![64, 256]);
         assert_eq!(e.num_outputs, 2);
+        assert_eq!(e.cost, None);
         assert_eq!(e.key.name(), "lstm_h64_b4");
+        assert!(m.registry_fingerprints.is_empty());
     }
 
     #[test]
@@ -129,6 +364,112 @@ mod tests {
     fn cells_deduped() {
         let m = Manifest::parse(SAMPLE).unwrap();
         assert_eq!(m.cells(), vec!["lstm".to_string()]);
+    }
+
+    #[test]
+    fn parses_fingerprints_and_cost() {
+        let text = r#"{
+            "version": 2,
+            "registry_fingerprints": {"treelstm": "12345678901234567890"},
+            "entries": [
+                {"cell": "lstm", "hidden": 64, "batch": 4,
+                 "file": "lstm_h64_b4.hlo.txt", "cost": 1500.5,
+                 "arg_shapes": [[4,64],[4,64],[4,64],[64,256],[64,256],[256]],
+                 "num_outputs": 2}
+            ]
+        }"#;
+        let m = Manifest::parse(text).unwrap();
+        assert_eq!(m.fingerprint_for("treelstm"), Some(12345678901234567890));
+        assert_eq!(m.fingerprint_for("other"), None);
+        assert_eq!(m.entries[0].cost, Some(1500.5));
+        // a fingerprint above 2^53 must survive exactly (string codec)
+        assert!(12345678901234567890u64 > (1u64 << 53));
+    }
+
+    #[test]
+    fn rejects_non_string_fingerprint() {
+        let text = r#"{
+            "registry_fingerprints": {"treelstm": 123},
+            "entries": []
+        }"#;
+        assert!(Manifest::parse(text).is_err());
+    }
+
+    #[test]
+    fn validate_accepts_consistent_entries() {
+        let m = Manifest::parse(SAMPLE).unwrap();
+        // no dir: file existence is not checked, shapes are
+        assert_eq!(m.validate(None), vec![]);
+    }
+
+    #[test]
+    fn validate_rejects_shape_and_cell_damage() {
+        // wrong data width (lstm wants [4,64] x 3 data args)
+        let bad_shape = SAMPLE.replace("[4,64],[4,64],[4,64]", "[4,64],[4,64],[4,32]");
+        let m = Manifest::parse(&bad_shape).unwrap();
+        let r = m.validate(None);
+        assert_eq!(r.len(), 1);
+        assert!(matches!(&r[0], ManifestReject::BadArgShapes { name, .. } if name == "lstm_h64_b4"));
+
+        // batch dim disagrees with the declared bucket
+        let bad_batch = SAMPLE.replace("\"batch\": 4", "\"batch\": 8");
+        let m = Manifest::parse(&bad_batch).unwrap();
+        assert!(matches!(m.validate(None)[0], ManifestReject::BadArgShapes { .. }));
+
+        // unknown cell kind
+        let bad_cell = SAMPLE.replace("\"lstm\"", "\"transformer\"");
+        let m = Manifest::parse(&bad_cell).unwrap();
+        assert!(matches!(m.validate(None)[0], ManifestReject::UnknownCell { .. }));
+
+        // wrong output arity
+        let bad_outs = SAMPLE.replace("\"num_outputs\": 2", "\"num_outputs\": 3");
+        let m = Manifest::parse(&bad_outs).unwrap();
+        assert!(
+            matches!(m.validate(None)[0], ManifestReject::BadOutputs { declared: 3, expected: 2, .. })
+        );
+
+        // missing file (checked only with a dir)
+        let m = Manifest::parse(SAMPLE).unwrap();
+        let r = m.validate(Some("/nonexistent-artifacts-dir"));
+        assert!(matches!(&r[0], ManifestReject::MissingFile { .. }));
+    }
+
+    #[test]
+    fn fingerprint_rejects_only_on_disagreement() {
+        let text = r#"{
+            "registry_fingerprints": {"treelstm": "42"},
+            "entries": []
+        }"#;
+        let m = Manifest::parse(text).unwrap();
+        // agreement: clean
+        assert!(m.fingerprint_rejects(&[("treelstm".into(), 42)]).is_empty());
+        // unkeyed workload: accepted (v1 compatibility)
+        assert!(m.fingerprint_rejects(&[("chain".into(), 7)]).is_empty());
+        // disagreement: typed reject
+        let r = m.fingerprint_rejects(&[("treelstm".into(), 43)]);
+        assert_eq!(
+            r,
+            vec![ManifestReject::FingerprintMismatch {
+                workload: "treelstm".into(),
+                declared: 42,
+                live: 43,
+            }]
+        );
+    }
+
+    #[test]
+    fn golden_stub_fixture_parses_and_validates() {
+        // the fixture aot.py --stub emits, committed as the cross-language
+        // contract: python writes it, rust must read it — field for field
+        let m = Manifest::parse(GOLDEN).unwrap();
+        assert!(!m.entries.is_empty());
+        for e in &m.entries {
+            assert!(e.cost.is_some(), "{}: stub manifests carry costs", e.key.name());
+        }
+        // shape tables on both sides of the language boundary must agree
+        assert_eq!(m.validate(None), vec![]);
+        // the fixture covers every cell kind the engine knows
+        assert_eq!(m.cells().len(), crate::graph::cells::ALL_CELLS.len());
     }
 
     #[test]

@@ -123,19 +123,46 @@ impl CompiledCell {
 pub struct ArtifactRegistry {
     pub client: xla::PjRtClient,
     cells: FxHashMap<ArtifactKey, CompiledCell>,
-    /// available batch buckets per (cell, hidden), ascending
+    /// *declared* batch buckets per (cell, hidden), ascending — fed from
+    /// the manifest even when an entry fails to compile (the xla stub
+    /// case), so bucketing/padding stays exercisable on stub hosts
     buckets: FxHashMap<(String, usize), Vec<usize>>,
+    /// manifest-declared per-launch cost (device-ns) per artifact key —
+    /// the steering cost model's accelerator side
+    costs: FxHashMap<ArtifactKey, f64>,
+    /// per-entry parse/compile failures (artifact name, error). Non-fatal:
+    /// the entry keeps its declared bucket but has no compiled cell, so
+    /// execution steers to CPU (typed `pjrt_fallbacks` when forced).
+    load_errors: Vec<(String, String)>,
 }
 
 impl ArtifactRegistry {
     /// Load and compile every artifact in `dir`'s manifest.
     /// `filter` can restrict to specific cells/hiddens to cut boot time.
+    ///
+    /// Per-entry parse/compile failures are *not* fatal — the entry is
+    /// recorded in [`ArtifactRegistry::load_errors`] and its declared
+    /// bucket retained, so a stub-xla host still exercises the full
+    /// bucketing/padding policy and degrades per-batch to CPU. Only a
+    /// missing/unreadable manifest or a dead PJRT client fails the load.
     pub fn load(dir: &str, filter: Option<&dyn Fn(&ArtifactKey) -> bool>) -> Result<Self> {
         let manifest = Manifest::load(dir)
             .with_context(|| format!("loading manifest from {dir} (run `make artifacts`)"))?;
+        Self::from_manifest(dir, &manifest, filter)
+    }
+
+    /// As [`ArtifactRegistry::load`], from an already-parsed (and
+    /// typically already-validated — see [`Manifest::validate`]) manifest.
+    pub fn from_manifest(
+        dir: &str,
+        manifest: &Manifest,
+        filter: Option<&dyn Fn(&ArtifactKey) -> bool>,
+    ) -> Result<Self> {
         let client = xla::PjRtClient::cpu()?;
         let mut cells = FxHashMap::default();
         let mut buckets: FxHashMap<(String, usize), Vec<usize>> = FxHashMap::default();
+        let mut costs = FxHashMap::default();
+        let mut load_errors = Vec::new();
         for e in &manifest.entries {
             let key = e.key.clone();
             if let Some(f) = filter {
@@ -143,27 +170,37 @@ impl ArtifactRegistry {
                     continue;
                 }
             }
-            let path = format!("{dir}/{}", e.file);
-            let proto = xla::HloModuleProto::from_text_file(&path)
-                .with_context(|| format!("parsing {path}"))?;
-            let comp = xla::XlaComputation::from_proto(&proto);
-            let exe = client
-                .compile(&comp)
-                .with_context(|| format!("compiling {path}"))?;
             buckets
                 .entry((key.cell.clone(), key.hidden))
                 .or_default()
                 .push(key.batch);
-            cells.insert(
-                key.clone(),
-                CompiledCell {
-                    key,
-                    arg_shapes: e.arg_shapes.clone(),
-                    num_outputs: e.num_outputs,
-                    exe,
-                    client: client.clone(),
-                },
-            );
+            if let Some(cost) = e.cost {
+                costs.insert(key.clone(), cost);
+            }
+            let path = format!("{dir}/{}", e.file);
+            let compiled = xla::HloModuleProto::from_text_file(&path)
+                .with_context(|| format!("parsing {path}"))
+                .and_then(|proto| {
+                    let comp = xla::XlaComputation::from_proto(&proto);
+                    client
+                        .compile(&comp)
+                        .with_context(|| format!("compiling {path}"))
+                });
+            match compiled {
+                Ok(exe) => {
+                    cells.insert(
+                        key.clone(),
+                        CompiledCell {
+                            key,
+                            arg_shapes: e.arg_shapes.clone(),
+                            num_outputs: e.num_outputs,
+                            exe,
+                            client: client.clone(),
+                        },
+                    );
+                }
+                Err(err) => load_errors.push((key.name(), format!("{err:#}"))),
+            }
         }
         for v in buckets.values_mut() {
             v.sort_unstable();
@@ -173,7 +210,69 @@ impl ArtifactRegistry {
             client,
             cells,
             buckets,
+            costs,
+            load_errors,
         })
+    }
+
+    /// Per-entry parse/compile failures from the last load (empty on a
+    /// fully-compiled registry; every entry on an xla-stub host).
+    pub fn load_errors(&self) -> &[(String, String)] {
+        &self.load_errors
+    }
+
+    /// Manifest-declared per-launch device cost for the artifact covering
+    /// a batch of `n` lanes of `cell`, if declared.
+    pub fn declared_cost(&self, cell: &str, hidden: usize, n: usize) -> Option<f64> {
+        let bucket = self.bucket_for(cell, hidden, n)?;
+        self.costs
+            .get(&ArtifactKey {
+                cell: cell.to_string(),
+                hidden,
+                batch: bucket,
+            })
+            .copied()
+    }
+
+    /// Whether any *compiled* (not merely declared) artifact exists for
+    /// (cell, hidden) — the steering precondition in auto mode.
+    pub fn has_compiled(&self, cell: &str, hidden: usize) -> bool {
+        self.cells
+            .keys()
+            .any(|k| k.cell == cell && k.hidden == hidden)
+    }
+
+    /// Test/bench support: a registry with declared buckets for one
+    /// (cell, hidden) but no compiled executables — the shape a stub-xla
+    /// host produces. Lets bucketing/steering logic be exercised without
+    /// artifacts on disk.
+    #[doc(hidden)]
+    pub fn stub_with_buckets(cell: &str, hidden: usize, mut bs: Vec<usize>) -> ArtifactRegistry {
+        bs.sort_unstable();
+        bs.dedup();
+        let mut buckets = FxHashMap::default();
+        buckets.insert((cell.to_string(), hidden), bs);
+        ArtifactRegistry {
+            client: xla::PjRtClient::cpu().expect("cpu client"),
+            cells: FxHashMap::default(),
+            buckets,
+            costs: FxHashMap::default(),
+            load_errors: Vec::new(),
+        }
+    }
+
+    /// Test/bench support: declare a per-launch cost for an artifact key
+    /// (pairs with [`ArtifactRegistry::stub_with_buckets`]).
+    #[doc(hidden)]
+    pub fn stub_declare_cost(&mut self, cell: &str, hidden: usize, batch: usize, cost: f64) {
+        self.costs.insert(
+            ArtifactKey {
+                cell: cell.to_string(),
+                hidden,
+                batch,
+            },
+            cost,
+        );
     }
 
     pub fn len(&self) -> usize {
@@ -261,13 +360,7 @@ mod tests {
     use super::*;
 
     fn registry_with_buckets(bs: Vec<usize>) -> ArtifactRegistry {
-        let mut buckets = FxHashMap::default();
-        buckets.insert(("lstm".to_string(), 64), bs);
-        ArtifactRegistry {
-            client: xla::PjRtClient::cpu().expect("cpu client"),
-            cells: FxHashMap::default(),
-            buckets,
-        }
+        ArtifactRegistry::stub_with_buckets("lstm", 64, bs)
     }
 
     #[test]

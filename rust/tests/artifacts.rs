@@ -1,0 +1,161 @@
+//! Artifact-manifest rejection integration tests: a stale, damaged, or
+//! missing manifest must degrade serving to the CPU backend with typed
+//! `manifest_rejects` counters — never a boot failure, never a request
+//! error. (The CI `artifacts` job asserts the same behavior end to end
+//! through `serve --chaos` with a deliberately damaged manifest.)
+
+use std::time::Duration;
+
+use ed_batch::coordinator::server::{Server, ServerConfig};
+use ed_batch::coordinator::SystemMode;
+use ed_batch::exec::steer::BackendChoice;
+use ed_batch::memory::graph_plan::registry_fingerprint;
+use ed_batch::util::rng::Rng;
+use ed_batch::workloads::{Workload, WorkloadKind};
+
+/// A per-test scratch dir (removed on drop so reruns start clean).
+struct ScratchDir(std::path::PathBuf);
+
+impl ScratchDir {
+    fn new(tag: &str) -> ScratchDir {
+        let dir = std::env::temp_dir().join(format!(
+            "edbatch_artifacts_{tag}_{}",
+            std::process::id()
+        ));
+        let _ = std::fs::remove_dir_all(&dir);
+        std::fs::create_dir_all(&dir).expect("create scratch dir");
+        ScratchDir(dir)
+    }
+
+    fn path(&self) -> &str {
+        self.0.to_str().expect("utf8 temp path")
+    }
+}
+
+impl Drop for ScratchDir {
+    fn drop(&mut self) {
+        let _ = std::fs::remove_dir_all(&self.0);
+    }
+}
+
+/// A shape-correct lstm h=32 b=4 manifest entry (the engine's own
+/// tables: 3 data args of width h, then [h,4h],[h,4h],[4h] weights).
+const LSTM_ENTRY: &str = r#"{"cell": "lstm", "hidden": 32, "batch": 4,
+ "file": "lstm_h32_b4.hlo.txt", "cost": 1000.0,
+ "arg_shapes": [[4,32],[4,32],[4,32],[32,128],[32,128],[128]],
+ "num_outputs": 2}"#;
+
+fn boot_config(dir: &str) -> ServerConfig {
+    ServerConfig {
+        workloads: vec![WorkloadKind::TreeLstm],
+        hidden: 32,
+        mode: SystemMode::CavsDyNet, // avoid policy-training I/O in tests
+        max_batch: 8,
+        batch_window: Duration::from_millis(2),
+        artifacts_dir: Some(dir.to_string()),
+        backend: BackendChoice::Pjrt,
+        ..ServerConfig::default()
+    }
+}
+
+/// Boot, serve a few requests, and return the final metrics snapshot —
+/// the shared "serving stays intact" assertion of every scenario.
+fn serve_and_snapshot(cfg: ServerConfig) -> ed_batch::coordinator::metrics::MetricsSnapshot {
+    let server = Server::start(cfg).expect("boot must survive a bad manifest");
+    let client = server.client(WorkloadKind::TreeLstm);
+    let w = Workload::new(WorkloadKind::TreeLstm, 32);
+    let mut rng = Rng::new(11);
+    for _ in 0..4 {
+        let resp = client.infer(w.gen_instance(&mut rng)).expect("infer");
+        assert!(resp.num_sinks() > 0);
+    }
+    let snap = server.metrics.snapshot();
+    drop(client);
+    server.shutdown().expect("shutdown");
+    snap
+}
+
+#[test]
+fn stale_fingerprint_rejects_whole_manifest_and_serving_survives() {
+    let dir = ScratchDir::new("stale_fp");
+    // key the manifest on a fingerprint guaranteed to disagree with the
+    // live treelstm registry (bit-flipped live value)
+    let live = registry_fingerprint(&Workload::new(WorkloadKind::TreeLstm, 32).registry);
+    let manifest = format!(
+        r#"{{"version": 2,
+ "registry_fingerprints": {{"treelstm": "{}"}},
+ "entries": [{LSTM_ENTRY}]}}"#,
+        live ^ 1
+    );
+    std::fs::write(format!("{}/manifest.json", dir.path()), manifest).unwrap();
+    // the artifact file exists — only the fingerprint is stale
+    std::fs::write(format!("{}/lstm_h32_b4.hlo.txt", dir.path()), "stale hlo").unwrap();
+
+    let snap = serve_and_snapshot(boot_config(dir.path()));
+    assert_eq!(snap.requests, 4, "serving must stay intact");
+    assert!(
+        snap.manifest_rejects >= 1,
+        "fingerprint mismatch must be a typed reject, got {}",
+        snap.manifest_rejects
+    );
+    assert_eq!(snap.backend_mode, "pjrt", "operator's choice is still reported");
+    assert_eq!(snap.backend_pjrt_batches, 0, "stale artifacts must never launch");
+}
+
+#[test]
+fn missing_artifact_file_rejects_entry_and_serving_survives() {
+    let dir = ScratchDir::new("missing_file");
+    // fingerprint agrees; the declared artifact file does not exist
+    let live = registry_fingerprint(&Workload::new(WorkloadKind::TreeLstm, 32).registry);
+    let manifest = format!(
+        r#"{{"version": 2,
+ "registry_fingerprints": {{"treelstm": "{live}"}},
+ "entries": [{LSTM_ENTRY}]}}"#
+    );
+    std::fs::write(format!("{}/manifest.json", dir.path()), manifest).unwrap();
+
+    let snap = serve_and_snapshot(boot_config(dir.path()));
+    assert_eq!(snap.requests, 4);
+    assert_eq!(snap.manifest_rejects, 1, "exactly the missing-file reject");
+    assert_eq!(snap.backend_pjrt_batches, 0);
+}
+
+#[test]
+fn bad_arg_shapes_reject_entry_and_serving_survives() {
+    let dir = ScratchDir::new("bad_shapes");
+    // shape table disagreement: lstm data args must be width h=32
+    let entry = LSTM_ENTRY.replace("[4,32],[4,32],[4,32]", "[4,32],[4,32],[4,16]");
+    let manifest = format!(r#"{{"version": 2, "entries": [{entry}]}}"#);
+    std::fs::write(format!("{}/manifest.json", dir.path()), manifest).unwrap();
+    std::fs::write(format!("{}/lstm_h32_b4.hlo.txt", dir.path()), "hlo").unwrap();
+
+    let snap = serve_and_snapshot(boot_config(dir.path()));
+    assert_eq!(snap.requests, 4);
+    assert_eq!(snap.manifest_rejects, 1, "exactly the bad-shape reject");
+    assert_eq!(snap.backend_pjrt_batches, 0);
+}
+
+#[test]
+fn absent_manifest_degrades_to_cpu_without_boot_failure() {
+    let dir = ScratchDir::new("absent");
+    // dir exists but holds no manifest.json at all
+    let snap = serve_and_snapshot(boot_config(dir.path()));
+    assert_eq!(snap.requests, 4);
+    assert_eq!(snap.manifest_rejects, 1, "unreadable manifest is one typed reject");
+    assert_eq!(snap.backend_pjrt_batches, 0);
+}
+
+#[test]
+fn cpu_backend_never_reads_the_manifest() {
+    let dir = ScratchDir::new("cpu_ignores");
+    // garbage manifest: with --backend cpu it must never even be parsed
+    std::fs::write(format!("{}/manifest.json", dir.path()), "not json at all").unwrap();
+    let cfg = ServerConfig {
+        backend: BackendChoice::Cpu,
+        ..boot_config(dir.path())
+    };
+    let snap = serve_and_snapshot(cfg);
+    assert_eq!(snap.requests, 4);
+    assert_eq!(snap.manifest_rejects, 0, "cpu mode must not validate artifacts");
+    assert_eq!(snap.backend_mode, "cpu");
+}

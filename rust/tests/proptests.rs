@@ -511,6 +511,126 @@ fn prop_graph_merge_preserves_topology() {
 }
 
 #[test]
+fn prop_bucket_ladder_total_and_monotone() {
+    // The batch-bucketing contract as a property (referenced from
+    // exec::bucket's module docs): for a random valid ladder,
+    // * `bucket_for` is total, stays on the ladder, rounds up, and is
+    //   monotone non-decreasing below the ladder max (it saturates above —
+    //   `plan` splits those);
+    // * `plan` covers every lane count with on-ladder chunks whose surplus
+    //   equals `padding()` and is strictly smaller than the largest bucket
+    //   (a full wasted chunk is never planned).
+    use ed_batch::exec::bucket::BucketLadder;
+    check("bucket ladder total + monotone", 150, |g| {
+        let nb = 1 + g.rng.usize_below(5);
+        let sizes: Vec<usize> = (0..nb).map(|_| 1 + g.rng.usize_below(64)).collect();
+        let l = BucketLadder::new(sizes).map_err(|e| e.to_string())?;
+        let mut prev = 0usize;
+        for n in 1..=l.max() {
+            let b = l.bucket_for(n);
+            prop_assert!(l.buckets().contains(&b), "bucket_for({n})={b} off-ladder");
+            prop_assert!(b >= n, "bucket_for({n})={b} under-rounds");
+            prop_assert!(b >= prev, "bucket_for not monotone at {n}: {b} < {prev}");
+            prev = b;
+        }
+        prop_assert!(
+            l.bucket_for(l.max() + 1 + g.rng.usize_below(100)) == l.max(),
+            "bucket_for must saturate beyond the ladder"
+        );
+        let lanes = 1 + g.rng.usize_below(4 * l.max() + 8);
+        let plan = l.plan(lanes);
+        let sum: usize = plan.iter().sum();
+        prop_assert!(!plan.is_empty());
+        prop_assert!(sum >= lanes, "plan {plan:?} under-covers {lanes} lanes");
+        prop_assert!(
+            plan.iter().all(|c| l.buckets().contains(c)),
+            "off-ladder chunk in {plan:?}"
+        );
+        prop_assert!(sum - lanes == l.padding(lanes), "padding() disagrees with plan()");
+        prop_assert!(
+            sum - lanes < l.max(),
+            "padding {} >= max bucket {} (wasted chunk)",
+            sum - lanes,
+            l.max()
+        );
+        Ok(())
+    });
+}
+
+#[test]
+fn prop_bucketed_padding_is_inert_bitwise() {
+    // The padding-neutrality contract as a property: for every cell kind,
+    // ragged hidden sizes, random lane counts, and random ladders, running
+    // each plan chunk zero-padded to its bucket and scattering back only
+    // the real lanes reproduces the unpadded CPU oracle bit-for-bit. This
+    // is exactly the transform the engine applies around
+    // `ExecBackend::chunk_plan`, and it is sound for the same reason the
+    // thread pool is bit-exact: no kernel reduces across lanes.
+    use ed_batch::exec::backend::{CpuBackend, ExecBackend};
+    use ed_batch::exec::bucket::BucketLadder;
+    use ed_batch::graph::cells;
+
+    let iter = std::cell::Cell::new(0usize);
+    check("bucketed padding inert (bitwise)", 96, |g| {
+        let i = iter.get();
+        iter.set(i + 1);
+        let cell = cells::ALL_CELLS[i % cells::ALL_CELLS.len()];
+        let hidden = [3usize, 8, 16, 17][i % 4];
+        let lanes = 1 + g.rng.usize_below(21);
+        let ladder = if g.rng.chance(0.3) {
+            BucketLadder::pow2(8) // the serve default
+        } else {
+            let nb = 1 + g.rng.usize_below(4);
+            BucketLadder::new((0..nb).map(|_| 1 + g.rng.usize_below(16)).collect())
+                .map_err(|e| e.to_string())?
+        };
+        let widths = cells::data_arg_widths(cell, hidden);
+        let bufs: Vec<Vec<f32>> = widths
+            .iter()
+            .map(|w| (0..lanes * w).map(|_| g.rng.f32() - 0.5).collect())
+            .collect();
+        let data: Vec<&[f32]> = bufs.iter().map(|v| v.as_slice()).collect();
+        let mut cpu = CpuBackend::new(hidden);
+        let want = cpu.run_cell(cell, &data, lanes).map_err(|e| e.to_string())?;
+        // engine-equivalent bucketing: chunk by the plan, zero-pad each
+        // chunk to its bucket, scatter back only the real lanes
+        let ow = cells::out_widths(cell, hidden);
+        let mut got: Vec<Vec<f32>> = want.iter().map(|o| vec![0.0; o.len()]).collect();
+        let mut off = 0usize;
+        for bucket in ladder.plan(lanes) {
+            let take = bucket.min(lanes - off);
+            let padded: Vec<Vec<f32>> = widths
+                .iter()
+                .zip(&bufs)
+                .map(|(w, buf)| {
+                    let mut p = vec![0.0f32; bucket * w];
+                    p[..take * w].copy_from_slice(&buf[off * w..(off + take) * w]);
+                    p
+                })
+                .collect();
+            let pd: Vec<&[f32]> = padded.iter().map(|v| v.as_slice()).collect();
+            let outs = cpu.run_cell(cell, &pd, bucket).map_err(|e| e.to_string())?;
+            for (o, out) in outs.iter().enumerate() {
+                let w = ow[o];
+                got[o][off * w..(off + take) * w].copy_from_slice(&out[..take * w]);
+            }
+            off += take;
+            if off >= lanes {
+                break;
+            }
+        }
+        for (o, (a, b)) in want.iter().zip(&got).enumerate() {
+            prop_assert!(
+                a.iter().zip(b.iter()).all(|(x, y)| x.to_bits() == y.to_bits()),
+                "{cell} h={hidden} lanes={lanes} ladder={:?} out{o}: padding perturbed real lanes",
+                ladder.buckets()
+            );
+        }
+        Ok(())
+    });
+}
+
+#[test]
 fn prop_fault_decisions_are_pure_in_seed_point_and_sequence() {
     // the chaos harness's determinism contract: `fault::decide` is a pure
     // function of (seed, point, sequence index) — no global state, no

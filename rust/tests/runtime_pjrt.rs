@@ -212,6 +212,8 @@ fn serving_stack_over_pjrt() {
         max_batch: 8,
         batch_window: Duration::from_millis(5),
         artifacts_dir: Some("artifacts".into()),
+        // backend defaults to Cpu; the PJRT path is opt-in per config
+        backend: ed_batch::exec::steer::BackendChoice::Pjrt,
         ..ServerConfig::default()
     };
     let server = Server::start(cfg).unwrap();
@@ -224,6 +226,7 @@ fn serving_stack_over_pjrt() {
     }
     let snap = server.metrics.snapshot();
     assert_eq!(snap.requests, 4);
+    assert_eq!(snap.backend_mode, "pjrt");
     drop(client);
     server.shutdown().unwrap();
 }
