@@ -9,7 +9,7 @@
 //! park only when a full sweep makes no progress.
 //!
 //! Decoded request frames are mapped tenant-id → SLO class and workload
-//! code → [`ALL_WORKLOADS`] index, then submitted through the same
+//! code → [`WorkloadKind::from_wire_id`], then submitted through the same
 //! [`Client::try_submit`] admission path in-process clients use — so a
 //! TCP request is **bit-identical** to an in-process one (the decoded
 //! graph replays `Graph::add` and hits the same instance-cache entries;
@@ -61,12 +61,12 @@ const MAX_ACCEPT_ERRS: u32 = 256;
 /// Excess frames get a typed `QueueBudget` NACK, the connection lives on.
 pub const DEFAULT_INFLIGHT_CAP: usize = 256;
 
-/// The wire workload code for a kind (index into [`ALL_WORKLOADS`]).
+/// The wire workload code for a kind. Delegates to the pinned
+/// [`WorkloadKind::wire_id`] mapping: ids are append-only protocol
+/// constants, not positions, so reordering [`ALL_WORKLOADS`] can never
+/// corrupt frames (ids 0–8 predate the explicit mapping and are frozen).
 pub fn workload_code(kind: WorkloadKind) -> u16 {
-    ALL_WORKLOADS
-        .iter()
-        .position(|&k| k == kind)
-        .expect("every kind is in ALL_WORKLOADS") as u16
+    kind.wire_id()
 }
 
 /// One request admitted into the server, awaiting its response channel.
@@ -352,7 +352,7 @@ impl Conn {
             );
             return;
         }
-        let Some(&kind) = ALL_WORKLOADS.get(workload as usize) else {
+        let Some(kind) = WorkloadKind::from_wire_id(workload) else {
             self.queue_nack(
                 metrics,
                 tenant,
@@ -451,12 +451,14 @@ impl NetServer {
                 clients.insert((ci, kind), server.client_for_class(ci, kind));
             }
         }
-        // per-workload op-type counts for request validation (the type
-        // count is a registry property independent of hidden size)
-        let op_limits: Vec<u16> = ALL_WORKLOADS
-            .iter()
-            .map(|&k| Workload::new(k, 1).registry.num_types() as u16)
-            .collect();
+        // per-workload op-type counts for request validation, indexed by
+        // wire id (the type count is a registry property independent of
+        // hidden size)
+        let mut op_limits = vec![0u16; ALL_WORKLOADS.len()];
+        for &k in ALL_WORKLOADS.iter() {
+            op_limits[workload_code(k) as usize] =
+                Workload::new(k, 1).registry.num_types() as u16;
+        }
         let router = Router {
             clients,
             metrics: server.metrics.clone(),
@@ -757,9 +759,21 @@ mod tests {
 
     #[test]
     fn workload_codes_are_stable_indices() {
+        // the pinned wire ids happen to coincide with today's array order
+        // (appending preserved the historical positional codes); this
+        // equality is a property of the current array, NOT the protocol —
+        // `legacy_wire_ids_are_stable` in workloads/ pins the contract
         for (i, &kind) in ALL_WORKLOADS.iter().enumerate() {
             assert_eq!(workload_code(kind) as usize, i);
         }
+    }
+
+    #[test]
+    fn workload_codes_roundtrip_through_from_wire_id() {
+        for &kind in ALL_WORKLOADS.iter() {
+            assert_eq!(WorkloadKind::from_wire_id(workload_code(kind)), Some(kind));
+        }
+        assert_eq!(WorkloadKind::from_wire_id(ALL_WORKLOADS.len() as u16), None);
     }
 
     #[test]

@@ -15,11 +15,40 @@ use crate::batching::depth::DepthPolicy;
 use crate::batching::fsm::{Encoding, FsmPolicy};
 use crate::batching::{run_policy, Policy};
 use crate::policystore::{PolicyArtifact, PolicyStore};
+use crate::rl::approx::ApproxPolicy;
 use crate::rl::{TrainConfig, TrainStats};
 use crate::util::rng::Rng;
 use crate::workloads::{Workload, WorkloadKind};
 
 use super::SystemMode;
+
+/// Which learned-policy representation EdBatch mode trains and serves
+/// with: the tabular FSM (the paper's policy, bitwise oracle on small
+/// state spaces) or the linear function-approximation policy (for the
+/// dynamic workload family whose state space the table cannot intern).
+#[derive(Clone, Copy, Debug, Default, PartialEq, Eq)]
+pub enum PolicyChoice {
+    #[default]
+    Tabular,
+    Approx,
+}
+
+impl PolicyChoice {
+    pub fn name(self) -> &'static str {
+        match self {
+            PolicyChoice::Tabular => "tabular",
+            PolicyChoice::Approx => "approx",
+        }
+    }
+
+    pub fn from_name(s: &str) -> Option<PolicyChoice> {
+        match s {
+            "tabular" => Some(PolicyChoice::Tabular),
+            "approx" => Some(PolicyChoice::Approx),
+            _ => None,
+        }
+    }
+}
 
 /// Build the batching policy for a mode. For Cavs, calibrate agenda vs
 /// depth on a sample graph and keep the better (paper §5.1).
@@ -89,6 +118,23 @@ pub fn load_or_train(
     Ok((artifact.policy, Some(stats)))
 }
 
+/// Load a persisted linear-Q policy from the store at `dir`, or train one
+/// and persist it. `stats` is `Some` exactly when training ran.
+pub fn load_or_train_approx(
+    dir: &str,
+    workload: &Workload,
+    cfg: &TrainConfig,
+    seed: u64,
+) -> Result<(ApproxPolicy, Option<TrainStats>)> {
+    let store = PolicyStore::open(dir)?;
+    if let Some(artifact) = store.lookup_approx_workload(workload) {
+        return Ok((artifact.policy.clone(), None));
+    }
+    let mut store = store;
+    let (artifact, stats) = store.train_approx_into(workload, cfg, seed)?;
+    Ok((artifact.policy, Some(stats)))
+}
+
 #[cfg(test)]
 mod tests {
     use super::*;
@@ -111,6 +157,35 @@ mod tests {
         assert!(stats2.is_none(), "second call loads");
         assert_eq!(p1.states.len(), p2.states.len());
         assert_eq!(p1.q.len(), p2.q.len());
+        let _ = std::fs::remove_dir_all(&dir);
+    }
+
+    #[test]
+    fn policy_choice_names_roundtrip() {
+        for c in [PolicyChoice::Tabular, PolicyChoice::Approx] {
+            assert_eq!(PolicyChoice::from_name(c.name()), Some(c));
+        }
+        assert_eq!(PolicyChoice::from_name("fsm"), None);
+        assert_eq!(PolicyChoice::default(), PolicyChoice::Tabular);
+    }
+
+    #[test]
+    fn approx_trains_then_loads_roundtrip() {
+        let dir = std::env::temp_dir().join(format!("edbatch_apx_{}", std::process::id()));
+        let _ = std::fs::remove_dir_all(&dir);
+        let dir = dir.to_str().unwrap().to_string();
+        let w = Workload::new(WorkloadKind::BeamNmt, 32);
+        let cfg = TrainConfig {
+            max_iters: 100,
+            check_every: 25,
+            train_batch: 2,
+            ..TrainConfig::default()
+        };
+        let (p1, stats1) = load_or_train_approx(&dir, &w, &cfg, 3).unwrap();
+        assert!(stats1.is_some(), "first call trains");
+        let (p2, stats2) = load_or_train_approx(&dir, &w, &cfg, 3).unwrap();
+        assert!(stats2.is_none(), "second call loads");
+        assert_eq!(p1.weights, p2.weights);
         let _ = std::fs::remove_dir_all(&dir);
     }
 

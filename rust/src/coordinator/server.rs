@@ -95,6 +95,7 @@ use crate::batching::fsm::{Encoding, FsmPolicy};
 use crate::batching::{run_policy, Policy};
 use crate::graph::Graph;
 use crate::policystore::PolicyStore;
+use crate::rl::approx::ApproxPolicy;
 use crate::rl::dispatch_sim::SimConfig;
 use crate::rl::TrainConfig;
 use crate::exec::steer::BackendChoice;
@@ -113,7 +114,7 @@ use super::dispatch::{
 use super::engine::{ArenaStateStore, Backend, CellEngine, ExecReport};
 use super::flight::{FlightRecord, FlightRecorder};
 use super::metrics::{Admission, Metrics};
-use super::policies::calibrate_prefers_depth;
+use super::policies::{calibrate_prefers_depth, PolicyChoice};
 use super::supervise::{run_guarded, BatchAttempt, Supervisor};
 use super::{SystemMode, TimeBreakdown};
 
@@ -169,6 +170,11 @@ pub struct ServerConfig {
     /// training budget for boot-time training (tests shrink this)
     pub train_cfg: TrainConfig,
     pub encoding: Encoding,
+    /// `--policy tabular|approx`: which learned representation EdBatch
+    /// mode resolves per workload — the tabular FSM (default, the exact
+    /// pre-existing behavior) or the linear function-approximation policy
+    /// (for the dynamic workload family). Ignored outside EdBatch mode.
+    pub policy: PolicyChoice,
     pub seed: u64,
     /// how batch size + max-wait are decided per dispatch: the fixed
     /// full-or-timed-out rule, the adaptive SLO controller, or the
@@ -222,6 +228,7 @@ impl Default for ServerConfig {
             train_on_miss: true,
             train_cfg: TrainConfig::default(),
             encoding: Encoding::Sort,
+            policy: PolicyChoice::Tabular,
             seed: 7,
             dispatch: DispatchMode::Fixed,
             slo_p99: None,
@@ -501,6 +508,7 @@ enum PolicySeed {
     Agenda,
     Depth,
     Fsm(FsmPolicy),
+    Approx(ApproxPolicy),
 }
 
 impl PolicySeed {
@@ -509,6 +517,7 @@ impl PolicySeed {
             PolicySeed::Agenda => Box::new(AgendaPolicy::new(num_types)),
             PolicySeed::Depth => Box::new(DepthPolicy::new()),
             PolicySeed::Fsm(p) => Box::new(p.clone()),
+            PolicySeed::Approx(p) => Box::new(p.clone()),
         }
     }
 }
@@ -1007,8 +1016,8 @@ fn resolve_policies(
                     PolicySeed::Agenda
                 }
             }
-            SystemMode::EdBatch => match &mut store {
-                Some(store) => {
+            SystemMode::EdBatch => match (&mut store, config.policy) {
+                (Some(store), PolicyChoice::Tabular) => {
                     if let Some(artifact) = store.lookup_workload(&workload, config.encoding) {
                         metrics.record_store_resolution(true, false);
                         PolicySeed::Fsm(artifact.policy.clone())
@@ -1028,9 +1037,23 @@ fn resolve_policies(
                         PolicySeed::Agenda
                     }
                 }
+                (Some(store), PolicyChoice::Approx) => {
+                    if let Some(artifact) = store.lookup_approx_workload(&workload) {
+                        metrics.record_store_resolution(true, false);
+                        PolicySeed::Approx(artifact.policy.clone())
+                    } else if config.train_on_miss {
+                        let (artifact, _) =
+                            store.train_approx_into(&workload, &config.train_cfg, config.seed)?;
+                        metrics.record_store_resolution(false, true);
+                        PolicySeed::Approx(artifact.policy)
+                    } else {
+                        metrics.record_store_resolution(false, false);
+                        PolicySeed::Agenda
+                    }
+                }
                 // no store configured: train in memory at boot (keeps
                 // EdBatch filesystem-free for unit tests and ad-hoc runs)
-                None => {
+                (None, PolicyChoice::Tabular) => {
                     let (policy, _) = crate::rl::train(
                         &workload,
                         config.encoding,
@@ -1038,6 +1061,14 @@ fn resolve_policies(
                         config.seed,
                     );
                     PolicySeed::Fsm(policy)
+                }
+                (None, PolicyChoice::Approx) => {
+                    let (policy, _) = crate::rl::approx::train_approx(
+                        &workload,
+                        &config.train_cfg,
+                        config.seed,
+                    );
+                    PolicySeed::Approx(policy)
                 }
             },
         };
@@ -1939,6 +1970,53 @@ mod tests {
         // no store configured -> no store counters
         assert_eq!(snap.store_hits + snap.store_misses, 0);
         server.shutdown().unwrap();
+    }
+
+    #[test]
+    fn approx_policy_serves_dynamic_workloads() {
+        // `--policy approx` on a beam-search workload: trains the linear
+        // policy in memory at boot and serves with it
+        let mut cfg = quick_config(SystemMode::EdBatch);
+        cfg.workloads = vec![WorkloadKind::BeamNmt];
+        cfg.policy = PolicyChoice::Approx;
+        let server = Server::start(cfg).unwrap();
+        let client = server.client(WorkloadKind::BeamNmt);
+        let w = Workload::new(WorkloadKind::BeamNmt, 32);
+        let mut rng = Rng::new(4);
+        for _ in 0..3 {
+            let resp = client.infer(w.gen_instance(&mut rng)).unwrap();
+            assert!(resp.num_sinks() > 0);
+            assert!(resp.sink_outputs().flatten().all(|v| v.is_finite()));
+        }
+        assert_eq!(server.metrics.snapshot().requests, 3);
+        server.shutdown().unwrap();
+    }
+
+    #[test]
+    fn approx_policy_resolves_from_store() {
+        // pre-train an approx artifact, then boot with train_on_miss off:
+        // the server must resolve it as a store hit
+        let dir = std::env::temp_dir().join(format!("edbatch_srv_apx_{}", std::process::id()));
+        let _ = std::fs::remove_dir_all(&dir);
+        let w = Workload::new(WorkloadKind::MoeRouting, 32);
+        let mut store = PolicyStore::open(&dir).unwrap();
+        store.train_approx_into(&w, &quick_train_cfg(), 3).unwrap();
+        drop(store);
+        let mut cfg = quick_config(SystemMode::EdBatch);
+        cfg.workloads = vec![WorkloadKind::MoeRouting];
+        cfg.policy = PolicyChoice::Approx;
+        cfg.store_dir = Some(dir.to_str().unwrap().to_string());
+        cfg.train_on_miss = false;
+        let server = Server::start(cfg).unwrap();
+        let client = server.client(WorkloadKind::MoeRouting);
+        let mut rng = Rng::new(5);
+        let resp = client.infer(w.gen_instance(&mut rng)).unwrap();
+        assert!(resp.num_sinks() > 0);
+        let snap = server.metrics.snapshot();
+        assert_eq!(snap.store_hits, 1);
+        assert_eq!(snap.store_misses, 0);
+        server.shutdown().unwrap();
+        let _ = std::fs::remove_dir_all(&dir);
     }
 
     #[test]

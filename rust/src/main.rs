@@ -2,7 +2,7 @@
 //!
 //! ```text
 //! ed-batch bench <fig6|fig8|fig9|table2|table3|table4|table5|serving|serving-slo|kernels|all> [--fast]
-//!          train  --workload treelstm[,bilstm-tagger|all] [--store DIR]
+//!          train  --workload treelstm[,bilstm-tagger|all] [--store DIR] [--policy tabular|approx]
 //!          serve  --workloads treelstm,bilstm-tagger [--workers 4] [--store DIR]
 //!                 [--dispatch fixed|adaptive|learned] [--slo-p99-ms F]
 //!                 [--traffic closed|poisson|bursty --rate R --duration-s S]
@@ -22,6 +22,7 @@ use ed_batch::benchsuite::{self, BenchOpts};
 use ed_batch::coordinator::chaos;
 use ed_batch::coordinator::dispatch::{DispatchMode, SloClassConfig};
 use ed_batch::coordinator::net::{NetServer, TcpClient};
+use ed_batch::coordinator::policies::PolicyChoice;
 use ed_batch::coordinator::server::{Server, ServerConfig};
 use ed_batch::coordinator::traffic::{drive_open_loop, TrafficProfile};
 use ed_batch::coordinator::SystemMode;
@@ -102,7 +103,10 @@ fn run(args: &Args) -> Result<()> {
                  the keying `aot.py --fingerprints` bakes into artifact manifests)\n  \
                  ed-batch inspect --workload <name> [--instances N]\n\n\
                  workloads: bilstm-tagger bilstm-tagger-withchar lstm-nmt treelstm treegru\n            \
-                 mv-rnn treelstm-2type lattice-lstm lattice-gru"
+                 mv-rnn treelstm-2type lattice-lstm lattice-gru beam-nmt moe-routing gnn-dag\n\n\
+                 train/serve take [--policy tabular|approx]: tabular (default) is the paper's\n  \
+                 FSM Q-table; approx is the linear function-approximation policy for the\n  \
+                 data-dependent workloads (beam-nmt, moe-routing, gnn-dag)"
             );
             Ok(())
         }
@@ -209,15 +213,49 @@ fn train(args: &Args) -> Result<()> {
     let dir = args.get_or("store", DEFAULT_STORE);
     let seed = args.u64("seed", 7);
     let force = args.flag("force");
+    let policy = PolicyChoice::from_name(args.get_or("policy", "tabular"))
+        .ok_or_else(|| anyhow!("bad --policy (tabular|approx)"))?;
 
     let mut store = PolicyStore::open(dir)?;
     println!(
-        "training {} workload(s) into policy store {dir} (encoding={}, hidden={hidden})",
+        "training {} workload(s) into policy store {dir} (policy={}, encoding={}, hidden={hidden})",
         kinds.len(),
+        policy.name(),
         encoding.name()
     );
     for kind in kinds {
         let w = Workload::new(kind, hidden);
+        if policy == PolicyChoice::Approx {
+            if !force {
+                if let Some(a) = store.lookup_approx_workload(&w) {
+                    println!(
+                        "  {:<22} cached ({} params, greedy {} vs lb {}) — use --force to retrain",
+                        kind.name(),
+                        a.training.num_states,
+                        a.training.greedy_batches,
+                        a.training.lower_bound,
+                    );
+                    continue;
+                }
+            }
+            let (artifact, stats) = store.train_approx_into(&w, &cfg, seed)?;
+            println!(
+                "  {:<22} {} iters in {:.3}s, {} params, greedy {} batches (lower bound {}){} -> {}",
+                kind.name(),
+                stats.iterations,
+                stats.wall_time_s,
+                stats.num_states,
+                stats.greedy_batches,
+                stats.lower_bound,
+                if stats.reached_lower_bound {
+                    ""
+                } else {
+                    " [above bound]"
+                },
+                ed_batch::policystore::ApproxArtifact::file_name(artifact.workload),
+            );
+            continue;
+        }
         if !force {
             if let Some(a) = store.lookup_workload(&w, encoding) {
                 println!(
@@ -247,7 +285,11 @@ fn train(args: &Args) -> Result<()> {
             ed_batch::policystore::PolicyArtifact::file_name(artifact.workload, artifact.encoding),
         );
     }
-    println!("store now holds {} polic(ies)", store.len());
+    println!(
+        "store now holds {} tabular + {} approx polic(ies)",
+        store.len(),
+        store.num_approx()
+    );
     Ok(())
 }
 
@@ -305,6 +347,8 @@ fn serve(args: &Args) -> Result<()> {
         },
         encoding: Encoding::from_name(args.get_or("encoding", "sort"))
             .ok_or_else(|| anyhow!("bad encoding"))?,
+        policy: PolicyChoice::from_name(args.get_or("policy", "tabular"))
+            .ok_or_else(|| anyhow!("bad --policy (tabular|approx)"))?,
         seed: args.u64("seed", 7),
         dispatch,
         slo_p99,

@@ -12,7 +12,7 @@
 //! in-request training**; topologies with no stored policy fall back to the
 //! agenda baseline (DyNet's on-the-fly batching) and are counted.
 //!
-//! The store holds **two artifact kinds**, version-gated independently:
+//! The store holds **three artifact kinds**, version-gated independently:
 //!
 //! * `policy` — the graph-time batching FSM (Q-table + state keys),
 //! * `scheduler` — the serving-time dispatch policy
@@ -20,15 +20,22 @@
 //!   batch-size controller trained on the queue simulator
 //!   ([`crate::rl::dispatch_sim`]). Same fingerprint keying, its own
 //!   format version, and a save → load → **identical dispatch
-//!   decisions** determinism contract (asserted below).
+//!   decisions** determinism contract (asserted below),
+//! * `approx` — the linear function-approximation batching policy
+//!   ([`crate::rl::approx::ApproxPolicy`]) for the dynamic workload
+//!   family, whose frontier state space the tabular FSM cannot intern.
+//!   Same fingerprint keying, its own format version, and the same
+//!   save → load → **identical schedules** determinism contract.
 //!
 //! On-disk layout:
 //!
 //! ```text
 //! store/
-//!   index.json                         # {"version":1, "scheduler_version":1, "generation":N}
+//!   index.json                         # {"version":1, "scheduler_version":1,
+//!                                      #  "approx_version":1, "generation":N}
 //!   policy_<workload>_<encoding>.json  # graph-time batching FSMs
 //!   scheduler_<workload>.json          # serving-time dispatch policies
+//!   approx_<workload>.json             # linear-Q batching policies
 //! ```
 //!
 //! Artifacts carry their own kind + version + fingerprint, so the index is
@@ -44,6 +51,7 @@ use rustc_hash::FxHashMap;
 use crate::batching::fsm::{Encoding, FsmPolicy};
 use crate::coordinator::dispatch::SchedulerPolicy;
 use crate::memory::graph_plan::registry_fingerprint;
+use crate::rl::approx::{train_approx, ApproxPolicy};
 use crate::rl::dispatch_sim::{train_scheduler, SchedTrainStats, SimConfig};
 use crate::rl::{train, TrainConfig, TrainStats};
 use crate::util::json::Json;
@@ -55,6 +63,10 @@ pub const STORE_VERSION: u64 = 1;
 /// On-disk format version of `scheduler` artifacts (independent gate: the
 /// scheduler state/action space can evolve without invalidating FSMs).
 pub const SCHEDULER_VERSION: u64 = 1;
+
+/// On-disk format version of `approx` artifacts (independent gate: the
+/// feature vector can evolve without invalidating tabular FSMs).
+pub const APPROX_VERSION: u64 = 1;
 
 /// Training provenance persisted with each policy (a Table-3-style row).
 #[derive(Clone, Debug, PartialEq)]
@@ -373,6 +385,81 @@ impl SchedulerArtifact {
     }
 }
 
+/// One persisted linear-Q batching policy — the `approx` artifact kind.
+/// Keyed by the workload's op-type-space fingerprint alone (the feature
+/// vector is encoding-free, so there is no per-encoding axis).
+#[derive(Clone, Debug)]
+pub struct ApproxArtifact {
+    pub workload: WorkloadKind,
+    pub fingerprint: u64,
+    /// hidden size at training time (provenance only — like the FSM, the
+    /// policy is purely topological)
+    pub hidden: usize,
+    pub policy: ApproxPolicy,
+    pub training: TrainMeta,
+}
+
+impl ApproxArtifact {
+    /// Canonical artifact file name inside a store directory.
+    pub fn file_name(workload: WorkloadKind) -> String {
+        format!("approx_{}.json", workload.name())
+    }
+
+    pub fn to_json(&self) -> Json {
+        Json::obj(vec![
+            ("kind", Json::from("approx")),
+            ("version", Json::from(APPROX_VERSION)),
+            ("workload", Json::from(self.workload.name())),
+            ("hidden", Json::from(self.hidden)),
+            ("fingerprint", Json::from(format!("{:016x}", self.fingerprint))),
+            ("policy", self.policy.to_json()),
+            ("training", self.training.to_json()),
+        ])
+    }
+
+    pub fn from_json(j: &Json) -> Result<ApproxArtifact> {
+        match j.get("kind").and_then(|v| v.as_str()) {
+            Some("approx") => {}
+            other => bail!("artifact kind {other:?}, expected \"approx\""),
+        }
+        let version = j
+            .get("version")
+            .and_then(|v| v.as_u64())
+            .ok_or_else(|| anyhow!("approx artifact missing version"))?;
+        if version != APPROX_VERSION {
+            bail!("approx artifact version {version}, this build reads {APPROX_VERSION}");
+        }
+        let workload = j
+            .get("workload")
+            .and_then(|v| v.as_str())
+            .and_then(WorkloadKind::from_name)
+            .ok_or_else(|| anyhow!("bad workload name"))?;
+        let hidden = j
+            .get("hidden")
+            .and_then(|v| v.as_usize())
+            .ok_or_else(|| anyhow!("missing hidden"))?;
+        let fingerprint = j
+            .get("fingerprint")
+            .and_then(|v| v.as_str())
+            .and_then(|s| u64::from_str_radix(s, 16).ok())
+            .ok_or_else(|| anyhow!("bad fingerprint"))?;
+        let policy = ApproxPolicy::from_json(
+            j.get("policy").ok_or_else(|| anyhow!("missing policy"))?,
+        )
+        .map_err(|e| anyhow!("approx policy decode: {e}"))?;
+        let training = TrainMeta::from_json(
+            j.get("training").ok_or_else(|| anyhow!("missing training"))?,
+        )?;
+        Ok(ApproxArtifact {
+            workload,
+            fingerprint,
+            hidden,
+            policy,
+            training,
+        })
+    }
+}
+
 /// Crash-safe file write: the payload goes to `<file>.tmp`, is fsynced,
 /// then renamed over the final name, and the parent directory is synced
 /// so the rename itself is durable. A crash (or an armed `store.write`
@@ -442,6 +529,7 @@ pub struct PolicyStore {
     dir: PathBuf,
     entries: FxHashMap<(u64, Encoding), PolicyArtifact>,
     sched_entries: FxHashMap<(u64, String), SchedulerArtifact>,
+    approx_entries: FxHashMap<u64, ApproxArtifact>,
     /// monotonic store generation: bumped by every insert (any kind) and
     /// persisted in `index.json`. The serving hot-reload watcher polls
     /// this single number — a change means "new policies exist, re-resolve
@@ -466,6 +554,7 @@ impl PolicyStore {
             dir: dir.clone(),
             entries: FxHashMap::default(),
             sched_entries: FxHashMap::default(),
+            approx_entries: FxHashMap::default(),
             generation: 0,
             skipped: 0,
             quarantined: 0,
@@ -489,6 +578,17 @@ impl PolicyStore {
                     bail!(
                         "policy store {} has scheduler format version {sv}; \
                          this build reads {SCHEDULER_VERSION}",
+                        dir.display()
+                    );
+                }
+            }
+            // approx-kind gate: absent (pre-approx store) is fine, a
+            // mismatching version is a hard error
+            if let Some(av) = j.get("approx_version").and_then(|v| v.as_u64()) {
+                if av != APPROX_VERSION {
+                    bail!(
+                        "policy store {} has approx format version {av}; \
+                         this build reads {APPROX_VERSION}",
                         dir.display()
                     );
                 }
@@ -527,6 +627,23 @@ impl PolicyStore {
                 match parsed {
                     Ok(a) => {
                         store.sched_entries.insert((a.fingerprint, a.class.clone()), a);
+                    }
+                    Err(e) => {
+                        eprintln!("policystore: quarantining {name}: {e}");
+                        store.skipped += 1;
+                        if quarantine_corrupt(&dir, &entry.path(), &name) {
+                            store.quarantined += 1;
+                        }
+                    }
+                }
+            } else if name.starts_with("approx_") {
+                let parsed = std::fs::read_to_string(entry.path())
+                    .map_err(|e| anyhow!("{e}"))
+                    .and_then(|text| Json::parse(&text).map_err(|e| anyhow!("{e}")))
+                    .and_then(|j| ApproxArtifact::from_json(&j));
+                match parsed {
+                    Ok(a) => {
+                        store.approx_entries.insert(a.fingerprint, a);
                     }
                     Err(e) => {
                         eprintln!("policystore: quarantining {name}: {e}");
@@ -606,6 +723,7 @@ impl PolicyStore {
         let doc = Json::obj(vec![
             ("version", Json::from(STORE_VERSION)),
             ("scheduler_version", Json::from(SCHEDULER_VERSION)),
+            ("approx_version", Json::from(APPROX_VERSION)),
             ("generation", Json::from(self.generation)),
         ]);
         // rewrite unconditionally: idempotent gates, and upgrades a
@@ -728,6 +846,55 @@ impl PolicyStore {
             training: SchedTrainMeta::from_stats(&stats),
         };
         self.insert_scheduler(artifact.clone())?;
+        Ok((artifact, stats))
+    }
+
+    /// Look a linear-Q policy up by op-type-space fingerprint.
+    pub fn lookup_approx(&self, fingerprint: u64) -> Option<&ApproxArtifact> {
+        self.approx_entries.get(&fingerprint)
+    }
+
+    /// Convenience: the linear-Q policy matching a workload's registry.
+    pub fn lookup_approx_workload(&self, w: &Workload) -> Option<&ApproxArtifact> {
+        self.lookup_approx(registry_fingerprint(&w.registry))
+    }
+
+    pub fn num_approx(&self) -> usize {
+        self.approx_entries.len()
+    }
+
+    pub fn approx_artifacts(&self) -> impl Iterator<Item = &ApproxArtifact> {
+        self.approx_entries.values()
+    }
+
+    /// Persist a linear-Q artifact under its own kind, replacing any
+    /// existing entry for the same fingerprint.
+    pub fn insert_approx(&mut self, artifact: ApproxArtifact) -> Result<()> {
+        self.ensure_index()?;
+        let path = self.dir.join(ApproxArtifact::file_name(artifact.workload));
+        atomic_write(&path, artifact.to_json().to_string().as_bytes())?;
+        self.approx_entries.insert(artifact.fingerprint, artifact);
+        Ok(())
+    }
+
+    /// Offline linear-Q training entry point (`train --policy approx` and
+    /// the server's train-on-miss boot path for approx-policy configs):
+    /// train a linear policy for `workload` and persist it.
+    pub fn train_approx_into(
+        &mut self,
+        workload: &Workload,
+        cfg: &TrainConfig,
+        seed: u64,
+    ) -> Result<(ApproxArtifact, TrainStats)> {
+        let (policy, stats) = train_approx(workload, cfg, seed);
+        let artifact = ApproxArtifact {
+            workload: workload.kind,
+            fingerprint: registry_fingerprint(&workload.registry),
+            hidden: workload.params.hidden,
+            policy,
+            training: TrainMeta::from_stats(&stats, seed),
+        };
+        self.insert_approx(artifact.clone())?;
         Ok((artifact, stats))
     }
 
@@ -1099,6 +1266,111 @@ mod tests {
         )
         .unwrap();
         assert_eq!(PolicyStore::read_generation(&dir), Some(0));
+        let _ = std::fs::remove_dir_all(&dir);
+    }
+
+    #[test]
+    fn approx_artifact_roundtrip_and_kind_gate() {
+        let mut policy = ApproxPolicy::new(4);
+        policy.weights[0][0] = 0.1 + 0.2; // no short decimal form
+        policy.weights[3][7] = -1.75e-9;
+        let a = ApproxArtifact {
+            workload: WorkloadKind::BeamNmt,
+            fingerprint: 0xFEED_FACE_CAFE_0002,
+            hidden: 64,
+            policy,
+            training: TrainMeta {
+                iterations: 120,
+                wall_time_s: 0.25,
+                greedy_batches: 40,
+                lower_bound: 38,
+                num_states: 40,
+                reached_lower_bound: false,
+                seed: u64::MAX - 11,
+            },
+        };
+        let j = Json::parse(&a.to_json().to_string()).unwrap();
+        let b = ApproxArtifact::from_json(&j).unwrap();
+        assert_eq!(b.workload, a.workload);
+        assert_eq!(b.fingerprint, a.fingerprint);
+        assert_eq!(b.hidden, a.hidden);
+        assert_eq!(b.training, a.training);
+        assert_eq!(b.policy.weights, a.policy.weights, "weights must round-trip bit-exactly");
+        // a policy-kind artifact must never decode as an approx artifact
+        let policy_json = Json::parse(r#"{"version":1,"workload":"treelstm"}"#).unwrap();
+        assert!(ApproxArtifact::from_json(&policy_json).is_err());
+    }
+
+    #[test]
+    fn approx_version_gate_rejects_future_stores() {
+        let dir = tmp_dir("approx_version");
+        let _ = std::fs::remove_dir_all(&dir);
+        std::fs::create_dir_all(&dir).unwrap();
+        std::fs::write(
+            dir.join("index.json"),
+            r#"{"version":1,"scheduler_version":1,"approx_version":99}"#,
+        )
+        .unwrap();
+        let err = PolicyStore::open(&dir).unwrap_err();
+        assert!(err.to_string().contains("approx format version 99"), "{err}");
+        // a pre-approx index (no approx_version key) still opens
+        std::fs::write(dir.join("index.json"), r#"{"version":1,"scheduler_version":1}"#)
+            .unwrap();
+        assert!(PolicyStore::open(&dir).is_ok());
+        let _ = std::fs::remove_dir_all(&dir);
+    }
+
+    #[test]
+    fn approx_roundtrip_schedules_identically_on_held_out_graphs() {
+        // the acceptance-criteria determinism contract for the approx
+        // kind: save -> load -> batch-for-batch identical schedules on
+        // graphs never seen in training
+        let dir = tmp_dir("approx_determinism");
+        let _ = std::fs::remove_dir_all(&dir);
+        let w = Workload::new(WorkloadKind::MoeRouting, 32);
+        let mut store = PolicyStore::open(&dir).unwrap();
+        let (trained, stats) = store.train_approx_into(&w, &quick_cfg(), 9).unwrap();
+        assert!(stats.iterations >= 1);
+        assert!(store.lookup_approx_workload(&w).is_some());
+        assert!(dir.join(ApproxArtifact::file_name(WorkloadKind::MoeRouting)).exists());
+
+        let reopened = PolicyStore::open(&dir).unwrap();
+        assert_eq!(reopened.num_approx(), 1);
+        let mut p_mem = trained.policy;
+        let mut p_disk = reopened.lookup_approx_workload(&w).unwrap().policy.clone();
+        assert_eq!(p_mem.weights, p_disk.weights);
+        let nt = w.registry.num_types();
+        let mut rng = Rng::new(4242); // held out: training used seed 9
+        for batch in [1usize, 4, 9] {
+            let mut g = w.gen_batch(batch, &mut rng);
+            g.freeze();
+            let s1 = run_policy(&g, nt, &mut p_mem);
+            let s2 = run_policy(&g, nt, &mut p_disk);
+            crate::batching::validate_schedule(&g, &s1).unwrap();
+            assert_eq!(s1.batches.len(), s2.batches.len(), "batch {batch}");
+            for (a, b) in s1.batches.iter().zip(s2.batches.iter()) {
+                assert_eq!(a.op, b.op);
+                assert_eq!(a.nodes, b.nodes);
+            }
+        }
+        let _ = std::fs::remove_dir_all(&dir);
+    }
+
+    #[test]
+    fn approx_insert_bumps_generation_and_coexists_with_tabular() {
+        let dir = tmp_dir("approx_coexist");
+        let _ = std::fs::remove_dir_all(&dir);
+        let w = Workload::new(WorkloadKind::GnnDag, 32);
+        let mut store = PolicyStore::open(&dir).unwrap();
+        store.train_into(&w, Encoding::Sort, &quick_cfg(), 3).unwrap();
+        let g1 = store.generation();
+        store.train_approx_into(&w, &quick_cfg(), 3).unwrap();
+        assert!(store.generation() > g1, "approx insert must bump too");
+        let reopened = PolicyStore::open(&dir).unwrap();
+        assert_eq!(reopened.len(), 1);
+        assert_eq!(reopened.num_approx(), 1);
+        assert!(reopened.lookup_workload(&w, Encoding::Sort).is_some());
+        assert!(reopened.lookup_approx_workload(&w).is_some());
         let _ = std::fs::remove_dir_all(&dir);
     }
 

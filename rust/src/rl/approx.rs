@@ -1,0 +1,453 @@
+//! Linear function-approximation Q policy for data-dependent workloads.
+//!
+//! The tabular FSM (paper §2.3) interns every distinct frontier state; on
+//! the `dynamic` workload family (beam search, MoE routing, random DAGs)
+//! topology is decided during generation, so frontier-count vectors rarely
+//! repeat and the table degenerates into one entry per visited state with
+//! no generalization. This module replaces the table with a per-action
+//! linear value function Q(s, a) = w_a · φ(s, a) over a fixed
+//! [`NUM_FEATURES`]-dimensional feature vector of frontier type counts and
+//! a depth histogram (DESIGN.md §13), trained with the exact episode
+//! machinery of [`super::train`]: Eq.1 rewards, ε-greedy exploration with
+//! linear decay, N-step bootstrapped returns.
+//!
+//! Action selection keeps the Lemma-1 safe-set guard of the tabular greedy:
+//! when any ready type satisfies the sufficient condition (ratio == 1), the
+//! argmax is restricted to those types, so learned weights can never make
+//! the policy *worse* than the sufficient-condition heuristic on states
+//! where the condition fires. Tabular remains the bitwise oracle on small
+//! state spaces; approx trades exactness for generalization.
+
+use crate::batching::fsm::fallback_choice;
+use crate::batching::{run_policy, Policy};
+use crate::graph::frontier::Frontier;
+use crate::graph::{Graph, OpType};
+use crate::util::json::Json;
+use crate::util::rng::Rng;
+use crate::workloads::Workload;
+
+use super::{TrainConfig, TrainStats};
+use std::time::Instant;
+
+/// Relative-depth histogram bins (0, 1, 2, ≥3 above the shallowest ready
+/// node) — coarse positional context that distinguishes "output head now"
+/// from "output head can wait" without interning exact depths.
+pub const NUM_DEPTH_BINS: usize = 4;
+
+/// φ(s, a) layout:
+/// 0: bias,
+/// 1: ready(a) / remaining,
+/// 2: Eq.1 readiness ratio ready(a) / subgraph_frontier(a),
+/// 3: ready(a) / total ready over all ready types,
+/// 4: Lemma-1 flag (ratio == 1),
+/// 5: subgraph_frontier(a) / remaining,
+/// 6..10: relative-depth histogram of type-a ready nodes, normalized.
+pub const NUM_FEATURES: usize = 6 + NUM_DEPTH_BINS;
+
+/// Linear Q policy: one weight vector per op type, plus a cached depth map
+/// for the graph currently being scheduled (keyed by topology fingerprint).
+#[derive(Clone, Debug)]
+pub struct ApproxPolicy {
+    pub num_types: usize,
+    /// `weights[a][i]`, `num_types` rows of [`NUM_FEATURES`].
+    pub weights: Vec<Vec<f64>>,
+    depth_fp: u64,
+    depths: Vec<u32>,
+}
+
+impl ApproxPolicy {
+    pub fn new(num_types: usize) -> ApproxPolicy {
+        ApproxPolicy {
+            num_types,
+            weights: vec![vec![0.0; NUM_FEATURES]; num_types],
+            depth_fp: 0,
+            depths: Vec::new(),
+        }
+    }
+
+    /// Refresh the cached node-depth vector if `graph` differs from the one
+    /// last scheduled (depths are topology-only, so the fingerprint is a
+    /// sound cache key).
+    pub fn ensure_depths(&mut self, graph: &Graph) {
+        let fp = graph.topology_fingerprint();
+        if self.depth_fp != fp || self.depths.len() != graph.len() {
+            self.depths = graph.depths();
+            self.depth_fp = fp;
+        }
+    }
+
+    /// Shallowest depth among all ready nodes (histogram reference point).
+    /// Call [`ensure_depths`] for the frontier's graph first.
+    fn min_ready_depth(&self, frontier: &Frontier) -> u32 {
+        let mut min = u32::MAX;
+        for t in frontier.ready_types() {
+            for n in frontier.ready_nodes(t) {
+                min = min.min(self.depths[n.idx()]);
+            }
+        }
+        min
+    }
+
+    /// Feature vector for taking action `a` in the current frontier.
+    fn features(&self, frontier: &Frontier, a: OpType, min_depth: u32) -> [f64; NUM_FEATURES] {
+        let remaining = frontier.remaining().max(1) as f64;
+        let ready = frontier.ready_count(a);
+        let ratio = frontier.reward_ratio(a);
+        let total_ready: usize = frontier
+            .ready_types()
+            .into_iter()
+            .map(|t| frontier.ready_count(t))
+            .sum();
+        let mut phi = [0.0; NUM_FEATURES];
+        phi[0] = 1.0;
+        phi[1] = ready as f64 / remaining;
+        phi[2] = ratio;
+        phi[3] = ready as f64 / (total_ready.max(1) as f64);
+        phi[4] = if (ratio - 1.0).abs() < 1e-12 { 1.0 } else { 0.0 };
+        phi[5] = frontier.subgraph_frontier_count(a) as f64 / remaining;
+        for n in frontier.ready_nodes(a) {
+            let rel = (self.depths[n.idx()] - min_depth).min(NUM_DEPTH_BINS as u32 - 1);
+            phi[6 + rel as usize] += 1.0;
+        }
+        if ready > 0 {
+            for b in phi[6..].iter_mut() {
+                *b /= ready as f64;
+            }
+        }
+        phi
+    }
+
+    fn q(&self, a: OpType, phi: &[f64; NUM_FEATURES]) -> f64 {
+        self.weights[a.0 as usize]
+            .iter()
+            .zip(phi.iter())
+            .map(|(w, x)| w * x)
+            .sum()
+    }
+
+    /// Greedy action: Lemma-1 safe-set guard, then argmax Q, tie to the
+    /// smaller type id (mirrors `FsmPolicy::greedy`).
+    pub fn greedy(&mut self, graph: &Graph, frontier: &Frontier) -> OpType {
+        self.ensure_depths(graph);
+        let ready = frontier.ready_types();
+        let safe: Vec<OpType> = ready
+            .iter()
+            .copied()
+            .filter(|&t| (frontier.reward_ratio(t) - 1.0).abs() < 1e-12)
+            .collect();
+        let candidates = if safe.is_empty() { &ready } else { &safe };
+        let min_depth = self.min_ready_depth(frontier);
+        let mut best: Option<(f64, OpType)> = None;
+        for &t in candidates {
+            let v = self.q(t, &self.features(frontier, t, min_depth));
+            let better = match best {
+                None => true,
+                Some((bv, bt)) => v > bv || (v == bv && t < bt),
+            };
+            if better {
+                best = Some((v, t));
+            }
+        }
+        best.expect("no ready types").1
+    }
+
+    pub fn to_json(&self) -> Json {
+        let rows: Vec<Json> = self
+            .weights
+            .iter()
+            .map(|row| Json::Arr(row.iter().map(|&w| Json::from(w)).collect()))
+            .collect();
+        Json::obj(vec![
+            ("num_types", Json::from(self.num_types)),
+            ("num_features", Json::from(NUM_FEATURES)),
+            ("weights", Json::Arr(rows)),
+        ])
+    }
+
+    pub fn from_json(j: &Json) -> Result<ApproxPolicy, String> {
+        let num_types = j
+            .get("num_types")
+            .and_then(|v| v.as_usize())
+            .ok_or("missing num_types")?;
+        let nf = j
+            .get("num_features")
+            .and_then(|v| v.as_usize())
+            .ok_or("missing num_features")?;
+        if nf != NUM_FEATURES {
+            return Err(format!("feature dim {nf} != {NUM_FEATURES}"));
+        }
+        let rows = j.get("weights").and_then(|v| v.as_arr()).ok_or("weights")?;
+        if rows.len() != num_types {
+            return Err(format!("{} weight rows for {num_types} types", rows.len()));
+        }
+        let mut weights = Vec::with_capacity(num_types);
+        for row in rows {
+            let r = row.as_arr().ok_or("weight row")?;
+            if r.len() != NUM_FEATURES {
+                return Err("weight row len".into());
+            }
+            weights.push(
+                r.iter()
+                    .map(|v| v.as_f64().ok_or("weight value"))
+                    .collect::<Result<Vec<f64>, _>>()?,
+            );
+        }
+        Ok(ApproxPolicy {
+            num_types,
+            weights,
+            depth_fp: 0,
+            depths: Vec::new(),
+        })
+    }
+}
+
+impl Policy for ApproxPolicy {
+    fn next_type(&mut self, graph: &Graph, frontier: &Frontier) -> OpType {
+        self.greedy(graph, frontier)
+    }
+
+    fn reset(&mut self, graph: &Graph) {
+        self.ensure_depths(graph);
+    }
+}
+
+/// Number of batches the greedy approx policy produces on `graph`.
+pub fn evaluate_approx(graph: &Graph, num_types: usize, policy: &mut ApproxPolicy) -> usize {
+    run_policy(graph, num_types, policy).num_batches()
+}
+
+/// Train a linear Q policy for one workload. Mirrors [`super::train`]
+/// (same graph pools, ε schedule, Eq.1 reward, N-step returns); only the
+/// value representation differs. `TrainStats::num_states` reports the
+/// parameter count (`num_types * NUM_FEATURES`) since there is no table.
+pub fn train_approx(workload: &Workload, cfg: &TrainConfig, seed: u64) -> (ApproxPolicy, TrainStats) {
+    let t0 = Instant::now();
+    let num_types = workload.registry.num_types();
+    let mut rng = Rng::new(seed);
+
+    let mut graphs: Vec<Graph> = (0..cfg.num_train_graphs)
+        .map(|_| {
+            let mut g = workload.gen_batch(cfg.train_batch, &mut rng);
+            g.freeze();
+            g
+        })
+        .collect();
+    let mut eval_graph = workload.gen_batch(cfg.train_batch, &mut rng);
+    eval_graph.freeze();
+    let lower_bound: u64 = eval_graph.batch_lower_bound(num_types);
+
+    let mut policy = ApproxPolicy::new(num_types);
+    let mut iterations = 0;
+    let mut greedy_batches = usize::MAX;
+    let mut reached = false;
+
+    'outer: for iter in 0..cfg.max_iters {
+        iterations = iter + 1;
+        let eps = cfg.eps_init
+            + (cfg.eps_final - cfg.eps_init) * (iter as f64 / cfg.max_iters as f64);
+        let g = &graphs[iter % graphs.len()];
+        run_episode_approx(g, num_types, &mut policy, cfg, eps, &mut rng);
+
+        if (iter + 1) % cfg.check_every == 0 {
+            let batches = evaluate_approx(&eval_graph, num_types, &mut policy);
+            greedy_batches = greedy_batches.min(batches);
+            if batches as u64 <= lower_bound {
+                reached = true;
+                break 'outer;
+            }
+        }
+    }
+    if greedy_batches == usize::MAX {
+        greedy_batches = evaluate_approx(&eval_graph, num_types, &mut policy);
+        reached = greedy_batches as u64 <= lower_bound;
+    }
+    graphs.clear();
+
+    let stats = TrainStats {
+        iterations,
+        wall_time_s: t0.elapsed().as_secs_f64(),
+        greedy_batches,
+        lower_bound,
+        num_states: num_types * NUM_FEATURES,
+        reached_lower_bound: reached,
+    };
+    (policy, stats)
+}
+
+/// One ε-greedy episode with N-step semi-gradient updates. Unlike the
+/// tabular episode, the trajectory stores the feature vector of each taken
+/// action (the state itself is never interned).
+fn run_episode_approx(
+    graph: &Graph,
+    num_types: usize,
+    policy: &mut ApproxPolicy,
+    cfg: &TrainConfig,
+    eps: f64,
+    rng: &mut Rng,
+) {
+    policy.ensure_depths(graph);
+    let mut frontier = Frontier::new(graph, num_types);
+    let mut traj: Vec<([f64; NUM_FEATURES], OpType, f64)> = Vec::new();
+
+    while !frontier.is_done() {
+        let ready = frontier.ready_types();
+        let a = if rng.chance(eps) {
+            *rng.choose(&ready)
+        } else if rng.chance(0.5) {
+            fallback_choice(&frontier)
+        } else {
+            policy.greedy(graph, &frontier)
+        };
+        let min_depth = policy.min_ready_depth(&frontier);
+        let phi = policy.features(&frontier, a, min_depth);
+        let r = -1.0 + cfg.alpha * frontier.reward_ratio(a);
+        frontier.execute_type(graph, a);
+        traj.push((phi, a, r));
+
+        if traj.len() >= cfg.nstep {
+            let t = traj.len() - cfg.nstep;
+            let bootstrap = if frontier.is_done() {
+                0.0
+            } else {
+                max_q_over_ready_approx(policy, &frontier)
+            };
+            nstep_update_approx(policy, &traj, t, cfg, bootstrap);
+        }
+    }
+    let start = traj.len().saturating_sub(cfg.nstep - 1);
+    for t in start..traj.len() {
+        nstep_update_approx(policy, &traj, t, cfg, 0.0);
+    }
+}
+
+fn max_q_over_ready_approx(policy: &ApproxPolicy, frontier: &Frontier) -> f64 {
+    let min_depth = policy.min_ready_depth(frontier);
+    frontier
+        .ready_types()
+        .into_iter()
+        .map(|t| policy.q(t, &policy.features(frontier, t, min_depth)))
+        .fold(f64::NEG_INFINITY, f64::max)
+}
+
+/// Semi-gradient N-step update:
+/// `w_a += (lr / NUM_FEATURES) * (G_t - w_a · φ_t) * φ_t`
+/// (learning rate scaled down by the feature count so the per-weight step
+/// matches the tabular `lr` in magnitude).
+fn nstep_update_approx(
+    policy: &mut ApproxPolicy,
+    traj: &[([f64; NUM_FEATURES], OpType, f64)],
+    t: usize,
+    cfg: &TrainConfig,
+    bootstrap: f64,
+) {
+    let horizon = (traj.len() - t).min(cfg.nstep);
+    let mut ret = 0.0;
+    let mut disc = 1.0;
+    for i in 0..horizon {
+        ret += disc * traj[t + i].2;
+        disc *= cfg.gamma;
+    }
+    ret += disc * bootstrap;
+    let (phi, a, _) = &traj[t];
+    let q = policy.q(*a, phi);
+    let step = (cfg.lr / NUM_FEATURES as f64) * (ret - q);
+    for (w, x) in policy.weights[a.0 as usize].iter_mut().zip(phi.iter()) {
+        *w += step * x;
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::batching::validate_schedule;
+    use crate::workloads::WorkloadKind;
+
+    fn quick_cfg() -> TrainConfig {
+        TrainConfig {
+            max_iters: 300,
+            check_every: 25,
+            train_batch: 2,
+            ..TrainConfig::default()
+        }
+    }
+
+    #[test]
+    fn approx_schedules_are_valid_on_all_dynamic_kinds() {
+        for kind in [
+            WorkloadKind::BeamNmt,
+            WorkloadKind::MoeRouting,
+            WorkloadKind::GnnDag,
+        ] {
+            let w = Workload::new(kind, 32);
+            let (mut p, stats) = train_approx(&w, &quick_cfg(), 21);
+            assert!(stats.iterations >= 1);
+            let mut g = w.gen_batch(2, &mut Rng::new(777));
+            g.freeze();
+            let nt = w.registry.num_types();
+            let s = run_policy(&g, nt, &mut p);
+            validate_schedule(&g, &s).unwrap_or_else(|e| panic!("{kind:?}: {e}"));
+        }
+    }
+
+    #[test]
+    fn untrained_policy_follows_lemma1_guard() {
+        // zero weights: Q ties everywhere, so the safe-set guard + smaller-id
+        // tiebreak alone drive the schedule — it must still be valid and
+        // optimal on a chain workload where the sufficient condition
+        // always fires.
+        let w = Workload::new(WorkloadKind::BiLstmTagger, 32);
+        let mut g = w.gen_batch(4, &mut Rng::new(5));
+        g.freeze();
+        let nt = w.registry.num_types();
+        let mut p = ApproxPolicy::new(nt);
+        let s = run_policy(&g, nt, &mut p);
+        validate_schedule(&g, &s).unwrap();
+        assert_eq!(s.num_batches() as u64, g.batch_lower_bound(nt));
+    }
+
+    #[test]
+    fn json_roundtrip_is_exact() {
+        let mut p = ApproxPolicy::new(3);
+        p.weights[0][0] = 0.1 + 0.2; // not exactly representable in decimal
+        p.weights[1][5] = -7.25;
+        p.weights[2][NUM_FEATURES - 1] = 1e-17;
+        let j = Json::parse(&p.to_json().to_string()).unwrap();
+        let p2 = ApproxPolicy::from_json(&j).unwrap();
+        assert_eq!(p2.num_types, 3);
+        assert_eq!(p.weights, p2.weights);
+    }
+
+    #[test]
+    fn from_json_rejects_bad_dims() {
+        let p = ApproxPolicy::new(2);
+        let text = p.to_json().to_string().replace(
+            &format!("\"num_features\":{NUM_FEATURES}"),
+            "\"num_features\":3",
+        );
+        let j = Json::parse(&text).unwrap();
+        assert!(ApproxPolicy::from_json(&j).is_err());
+    }
+
+    #[test]
+    fn training_is_deterministic() {
+        let w = Workload::new(WorkloadKind::BeamNmt, 32);
+        let (p1, s1) = train_approx(&w, &quick_cfg(), 42);
+        let (p2, s2) = train_approx(&w, &quick_cfg(), 42);
+        assert_eq!(p1.weights, p2.weights);
+        assert_eq!(s1.iterations, s2.iterations);
+        assert_eq!(s1.greedy_batches, s2.greedy_batches);
+    }
+
+    #[test]
+    fn depth_cache_refreshes_across_graphs() {
+        let w = Workload::new(WorkloadKind::GnnDag, 32);
+        let (mut p, _) = train_approx(&w, &quick_cfg(), 13);
+        let nt = w.registry.num_types();
+        for seed in [1u64, 2, 3] {
+            let mut g = w.gen_batch(1, &mut Rng::new(seed));
+            g.freeze();
+            let s = run_policy(&g, nt, &mut p);
+            validate_schedule(&g, &s).unwrap();
+        }
+    }
+}

@@ -14,6 +14,7 @@
 //! batch-size scheduler policy of
 //! [`crate::coordinator::dispatch`] on a deterministic queue simulator.
 
+pub mod approx;
 pub mod dispatch_sim;
 
 use std::time::Instant;

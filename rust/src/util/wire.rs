@@ -18,7 +18,7 @@
 //! | 2      | 1    | version     | [`PROTO_VERSION`]                       |
 //! | 3      | 1    | frame kind  | 1 = request, 2 = response, 3 = NACK     |
 //! | 4      | 2    | tenant id   | SLO-class index (`--tenants` order)     |
-//! | 6      | 2    | workload    | index into `workloads::ALL_WORKLOADS`   |
+//! | 6      | 2    | workload    | pinned `WorkloadKind::wire_id` code     |
 //! | 8      | 8    | request id  | client-chosen; echoed on the response   |
 //! | 16     | 4    | payload len | ≤ [`MAX_PAYLOAD`]                       |
 //! | 20     | len  | payload     | per-kind encoding (below)               |

@@ -1,0 +1,303 @@
+//! Data-dependent workloads whose topology is decided *during* generation:
+//! beam-search NMT decoding (live beam width shrinks as hypotheses finish),
+//! mixture-of-experts routing (data-dependent expert choice yields ragged
+//! per-expert mini-batches), and GNN-style message passing over random DAGs
+//! (arbitrary fan-in/fan-out outside the chain/tree/lattice taxonomy).
+//!
+//! All three reuse the existing cell kinds (Source/Lstm/Gru/Classifier), so
+//! the exec engine, planner, SIMD paths, and AOT pipeline cover them without
+//! new kernels. Pred conventions follow `exec::engine`:
+//! * LSTM/GRU cell: preds = [x-provider, prev-state?, extra-states...]
+//!   (state preds of an LSTM must themselves carry a c state, i.e. be LSTMs)
+//! * Classifier: preds = [h-providers...] (summed, then projected)
+//! * Source: preds = []
+//!
+//! Each workload also carries per-step classifier heads with no consumers —
+//! the paper's Fig.1 I/O-head structure on which agenda-style min-depth
+//! heuristics split the heads into many small batches while Lemma-1-guarded
+//! policies legally delay them into one.
+
+use crate::graph::{CellKind, Graph, NodeId, TypeRegistry};
+use crate::util::rng::Rng;
+
+use super::GenParams;
+
+fn lstm_flops(h: usize) -> u64 {
+    (2 * 2 * h * 4 * h + 8 * h) as u64
+}
+
+fn gru_flops(h: usize) -> u64 {
+    (2 * 2 * h * 3 * h + 10 * h) as u64
+}
+
+fn clf_flops(h: usize) -> u64 {
+    (2 * h * 32) as u64
+}
+
+pub fn beam_nmt_registry(h: usize) -> TypeRegistry {
+    let mut r = TypeRegistry::new();
+    r.register("src_embed", CellKind::Source, h, 0);
+    r.register("enc", CellKind::Lstm, 2 * h, lstm_flops(h));
+    r.register("tgt_embed", CellKind::Source, h, 0);
+    r.register("dec", CellKind::Lstm, 2 * h, lstm_flops(h));
+    r.register("score", CellKind::Classifier, 32, clf_flops(h));
+    r
+}
+
+/// Beam-search NMT decoding with beam width 4: encoder chain over the source,
+/// then per step each live hypothesis extends (tgt_embed -> dec -> score
+/// head). Hypotheses finish stochastically once past a minimum length, so the
+/// number of ready `dec` nodes shrinks mid-episode — the frontier type counts
+/// the FSM policy observes are data-dependent, not fixed per depth.
+pub fn beam_nmt(reg: &TypeRegistry, p: &GenParams, rng: &mut Rng) -> Graph {
+    let se = reg.lookup("src_embed").unwrap();
+    let enc = reg.lookup("enc").unwrap();
+    let te = reg.lookup("tgt_embed").unwrap();
+    let dec = reg.lookup("dec").unwrap();
+    let score = reg.lookup("score").unwrap();
+
+    let src_len = (p.sample_len(rng) / 2).max(3);
+    let beam = 4usize;
+    let min_steps = (src_len / 2).max(2);
+    let max_steps = src_len + 2;
+
+    let mut g = Graph::new();
+    let mut prev: Option<NodeId> = None;
+    for _ in 0..src_len {
+        let e = g.add(se, vec![], 0);
+        let preds = match prev {
+            Some(pv) => vec![e, pv],
+            None => vec![e],
+        };
+        prev = Some(g.add(enc, preds, 0));
+    }
+    let enc_final = prev.unwrap();
+
+    // every hypothesis starts from the final encoder state
+    let mut live: Vec<NodeId> = vec![enc_final; beam];
+    for step in 0..max_steps {
+        let mut next = Vec::with_capacity(live.len());
+        for &h in &live {
+            let e = g.add(te, vec![], 0);
+            let d = g.add(dec, vec![e, h], 0);
+            g.add(score, vec![d], 0);
+            let finished = step + 1 >= min_steps && rng.chance(0.35);
+            if !finished {
+                next.push(d);
+            }
+        }
+        live = next;
+        if live.is_empty() {
+            break;
+        }
+    }
+    g
+}
+
+pub fn moe_routing_registry(h: usize) -> TypeRegistry {
+    let mut r = TypeRegistry::new();
+    r.register("tok_embed", CellKind::Source, h, 0);
+    r.register("router", CellKind::Gru, h, gru_flops(h));
+    r.register("expert0", CellKind::Lstm, 2 * h, lstm_flops(h));
+    r.register("expert1", CellKind::Lstm, 2 * h, lstm_flops(h));
+    r.register("expert2", CellKind::Lstm, 2 * h, lstm_flops(h));
+    r.register("expert3", CellKind::Lstm, 2 * h, lstm_flops(h));
+    r.register("gate_score", CellKind::Classifier, 32, clf_flops(h));
+    r.register("out", CellKind::Classifier, 32, clf_flops(h));
+    r
+}
+
+/// Two-layer mixture-of-experts stack: per token and layer a router GRU picks
+/// one of four expert LSTMs (uniform data-dependent choice), so each expert
+/// sees a ragged mini-batch whose size varies per instance. The per-layer
+/// gate_score heads and per-token out heads are pure outputs (Fig.1
+/// structure). Expert state preds (`preds[1..]`) are always expert LSTMs.
+pub fn moe_routing(reg: &TypeRegistry, p: &GenParams, rng: &mut Rng) -> Graph {
+    let embed = reg.lookup("tok_embed").unwrap();
+    let router = reg.lookup("router").unwrap();
+    let experts = [
+        reg.lookup("expert0").unwrap(),
+        reg.lookup("expert1").unwrap(),
+        reg.lookup("expert2").unwrap(),
+        reg.lookup("expert3").unwrap(),
+    ];
+    let gate = reg.lookup("gate_score").unwrap();
+    let out = reg.lookup("out").unwrap();
+
+    let len = (p.sample_len(rng) / 2).max(3);
+    let layers = 2usize;
+    let mut g = Graph::new();
+    let mut cur: Vec<NodeId> = (0..len).map(|_| g.add(embed, vec![], 0)).collect();
+    for layer in 0..layers {
+        let mut next = Vec::with_capacity(len);
+        for &x in &cur {
+            let r = g.add(router, vec![x], 0);
+            g.add(gate, vec![r], 0);
+            let ex = experts[rng.usize_below(4)];
+            let preds = if layer == 0 {
+                vec![r]
+            } else {
+                // carry the previous layer's expert state: x is an expert
+                // LSTM here, so it legally provides the c state
+                vec![r, x]
+            };
+            next.push(g.add(ex, preds, 0));
+        }
+        cur = next;
+    }
+    for &x in &cur {
+        g.add(out, vec![x], 0);
+    }
+    g
+}
+
+pub fn gnn_dag_registry(h: usize) -> TypeRegistry {
+    let mut r = TypeRegistry::new();
+    r.register("node_feat", CellKind::Source, h, 0);
+    r.register("msg", CellKind::Gru, h, gru_flops(h));
+    r.register("readout", CellKind::Classifier, 32, clf_flops(h));
+    r
+}
+
+/// Two rounds of GNN-style message passing over a random DAG: vertex i draws
+/// 0–4 distinct predecessors among vertices < i (Poisson fan-in), so fan-in
+/// and fan-out are arbitrary. Round-1 state of a vertex aggregates its
+/// feature plus the round-1 states of its DAG predecessors; round 2 stacks on
+/// round 1. A readout head per vertex closes with the I/O-head structure.
+pub fn gnn_dag(reg: &TypeRegistry, p: &GenParams, rng: &mut Rng) -> Graph {
+    let feat = reg.lookup("node_feat").unwrap();
+    let msg = reg.lookup("msg").unwrap();
+    let readout = reg.lookup("readout").unwrap();
+
+    let n = p.sample_len(rng).max(6);
+    // random DAG adjacency: preds[i] ⊂ {0..i}, |preds[i]| ≤ min(i, 4)
+    let mut adj: Vec<Vec<usize>> = Vec::with_capacity(n);
+    for i in 0..n {
+        let k = ((1 + rng.poisson(0.8) as usize).min(i)).min(4);
+        let mut picks: Vec<usize> = Vec::with_capacity(k);
+        while picks.len() < k {
+            let j = rng.usize_below(i);
+            if !picks.contains(&j) {
+                picks.push(j);
+            }
+        }
+        picks.sort_unstable();
+        adj.push(picks);
+    }
+
+    let mut g = Graph::new();
+    let feats: Vec<NodeId> = (0..n).map(|_| g.add(feat, vec![], 0)).collect();
+    let mut s1: Vec<NodeId> = Vec::with_capacity(n);
+    for i in 0..n {
+        let mut preds = vec![feats[i]];
+        preds.extend(adj[i].iter().map(|&j| s1[j]));
+        s1.push(g.add(msg, preds, 0));
+    }
+    let mut s2: Vec<NodeId> = Vec::with_capacity(n);
+    for i in 0..n {
+        let mut preds = vec![s1[i]];
+        preds.extend(adj[i].iter().map(|&j| s2[j]));
+        s2.push(g.add(msg, preds, 0));
+    }
+    for i in 0..n {
+        g.add(readout, vec![s2[i]], 0);
+    }
+    g
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn params() -> GenParams {
+        GenParams::with_hidden(64)
+    }
+
+    #[test]
+    fn beam_structure_and_shrinkage() {
+        let reg = beam_nmt_registry(64);
+        let dec_t = reg.lookup("dec").unwrap();
+        let score_t = reg.lookup("score").unwrap();
+        let mut shrank = false;
+        for seed in 0..20 {
+            let g = beam_nmt(&reg, &params(), &mut Rng::new(seed));
+            g.validate().unwrap();
+            let hist = g.type_histogram(reg.num_types());
+            // one score head per decoder step, one tgt embed per decoder step
+            assert_eq!(hist[dec_t.0 as usize], hist[score_t.0 as usize]);
+            assert_eq!(hist[2], hist[dec_t.0 as usize]);
+            // live beam width per depth = number of dec nodes whose state
+            // pred is a dec at the previous depth; it must never grow
+            let mut widths: Vec<usize> = Vec::new();
+            let mut depth_of = vec![0usize; g.len()];
+            for (i, node) in g.nodes.iter().enumerate() {
+                if node.op != dec_t {
+                    continue;
+                }
+                let state = node.preds[1];
+                let d = if g.op(state) == dec_t {
+                    depth_of[state.0 as usize] + 1
+                } else {
+                    0
+                };
+                depth_of[i] = d;
+                if widths.len() <= d {
+                    widths.resize(d + 1, 0);
+                }
+                widths[d] += 1;
+            }
+            assert_eq!(widths[0], 4, "beam starts at width 4");
+            for w in widths.windows(2) {
+                assert!(w[1] <= w[0], "beam grew: {widths:?}");
+            }
+            if widths.last().copied().unwrap_or(4) < 4 {
+                shrank = true;
+            }
+        }
+        assert!(shrank, "no seed shrank the beam");
+    }
+
+    #[test]
+    fn moe_routes_are_ragged_and_states_are_lstm() {
+        let reg = moe_routing_registry(64);
+        let g = moe_routing(&reg, &params(), &mut Rng::new(11));
+        g.validate().unwrap();
+        let hist = g.type_histogram(reg.num_types());
+        let tokens = hist[0];
+        // 2 layers: routers = gate heads = 2 * tokens, out heads = tokens
+        assert_eq!(hist[1], 2 * tokens);
+        assert_eq!(hist[6], 2 * tokens);
+        assert_eq!(hist[7], tokens);
+        let expert_total: usize = hist[2..6].iter().sum();
+        assert_eq!(expert_total, 2 * tokens);
+        // raggedness: with >=3 tokens over 2 layers some expert differs
+        assert!(hist[2..6].iter().any(|&c| c != hist[2]) || tokens < 2);
+        // every Lstm state pred must itself be an Lstm (c-state contract)
+        for node in &g.nodes {
+            if (2..6).contains(&(node.op.0 as usize)) {
+                for &s in &node.preds[1..] {
+                    assert!((2..6).contains(&(g.op(s).0 as usize)));
+                }
+            }
+        }
+    }
+
+    #[test]
+    fn gnn_dag_has_multi_fanin() {
+        let reg = gnn_dag_registry(64);
+        let msg_t = reg.lookup("msg").unwrap();
+        let g = gnn_dag(&reg, &params(), &mut Rng::new(17));
+        g.validate().unwrap();
+        let max_fanin = g
+            .nodes
+            .iter()
+            .filter(|n| n.op == msg_t)
+            .map(|n| n.preds.len())
+            .max()
+            .unwrap();
+        assert!(max_fanin >= 3, "expected DAG fan-in beyond a chain");
+        let hist = g.type_histogram(reg.num_types());
+        assert_eq!(hist[1], 2 * hist[0], "two msg rounds per vertex");
+        assert_eq!(hist[2], hist[0], "one readout per vertex");
+    }
+}

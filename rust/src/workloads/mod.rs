@@ -1,5 +1,7 @@
 //! The eight evaluation workloads of Table 1 (+ BiLSTM-tagger-withchar from
-//! Table 3), as synthetic-but-structurally-faithful generators.
+//! Table 3), as synthetic-but-structurally-faithful generators, plus three
+//! post-paper data-dependent families (`dynamic`): beam-search decoding,
+//! mixture-of-experts routing, and GNN message passing on random DAGs.
 //!
 //! The real datasets (WikiNER, IWSLT'15 en-vi, Penn Treebank, Chinese Weibo
 //! lattices) are not available offline; since dynamic batching depends
@@ -12,6 +14,7 @@
 //!   word, ≈0.4 word candidates per char, like Chinese NER lexicons).
 
 pub mod chain;
+pub mod dynamic;
 pub mod lattice;
 pub mod tree;
 
@@ -21,12 +24,54 @@ use crate::util::rng::Rng;
 /// Classifier/tagger label-space width (matches python model.NUM_CLASSES).
 pub use crate::graph::cells::NUM_CLASSES;
 
-/// Workload family — the paper groups results by these.
+/// Workload family — the paper groups results by these. `Dynamic` covers the
+/// post-paper data-dependent families (beam search, MoE routing, random
+/// DAGs) whose topology is decided during generation.
 #[derive(Clone, Copy, Debug, PartialEq, Eq)]
 pub enum Family {
     Chain,
     Tree,
     Lattice,
+    Dynamic,
+}
+
+impl Family {
+    pub fn name(self) -> &'static str {
+        match self {
+            Family::Chain => "chain",
+            Family::Tree => "tree",
+            Family::Lattice => "lattice",
+            Family::Dynamic => "dynamic",
+        }
+    }
+
+    pub fn from_name(s: &str) -> Option<Family> {
+        [Family::Chain, Family::Tree, Family::Lattice, Family::Dynamic]
+            .into_iter()
+            .find(|f| f.name() == s)
+    }
+}
+
+/// Workload kinds for the current CI shard: all of them, unless the
+/// `ED_WORKLOAD_FAMILY` env var names one family (the CI workload-matrix
+/// jobs set it to `chain`/`tree`/`lattice`/`dynamic` so each shard runs
+/// the cross-workload bit-equality suites over just its slice). An
+/// unrecognized value is a hard error — a typo in the CI matrix must not
+/// silently run the full (or an empty) set and report shard coverage it
+/// does not have.
+pub fn ci_shard_kinds() -> Vec<WorkloadKind> {
+    match std::env::var("ED_WORKLOAD_FAMILY") {
+        Ok(s) => {
+            let f = Family::from_name(&s)
+                .unwrap_or_else(|| panic!("ED_WORKLOAD_FAMILY={s}: unknown family"));
+            ALL_WORKLOADS
+                .iter()
+                .copied()
+                .filter(|k| k.family() == f)
+                .collect()
+        }
+        Err(_) => ALL_WORKLOADS.to_vec(),
+    }
 }
 
 /// The evaluated models (Table 1 short names).
@@ -41,9 +86,12 @@ pub enum WorkloadKind {
     TreeLstm2Type,
     LatticeLstm,
     LatticeGru,
+    BeamNmt,
+    MoeRouting,
+    GnnDag,
 }
 
-pub const ALL_WORKLOADS: [WorkloadKind; 9] = [
+pub const ALL_WORKLOADS: [WorkloadKind; 12] = [
     WorkloadKind::BiLstmTagger,
     WorkloadKind::BiLstmTaggerWithChar,
     WorkloadKind::LstmNmt,
@@ -53,6 +101,9 @@ pub const ALL_WORKLOADS: [WorkloadKind; 9] = [
     WorkloadKind::TreeLstm2Type,
     WorkloadKind::LatticeLstm,
     WorkloadKind::LatticeGru,
+    WorkloadKind::BeamNmt,
+    WorkloadKind::MoeRouting,
+    WorkloadKind::GnnDag,
 ];
 
 /// The paper's main 8 (Figures 6/9); withchar only appears in Table 3.
@@ -79,7 +130,35 @@ impl WorkloadKind {
             WorkloadKind::TreeLstm2Type => "treelstm-2type",
             WorkloadKind::LatticeLstm => "lattice-lstm",
             WorkloadKind::LatticeGru => "lattice-gru",
+            WorkloadKind::BeamNmt => "beam-nmt",
+            WorkloadKind::MoeRouting => "moe-routing",
+            WorkloadKind::GnnDag => "gnn-dag",
         }
+    }
+
+    /// Pinned wire-protocol id (the u16 at header offset 6). Historically
+    /// this was the kind's index into `ALL_WORKLOADS`; the mapping is now
+    /// explicit so the protocol survives any future reordering of that
+    /// array. Ids are append-only and must NEVER be reassigned.
+    pub fn wire_id(self) -> u16 {
+        match self {
+            WorkloadKind::BiLstmTagger => 0,
+            WorkloadKind::BiLstmTaggerWithChar => 1,
+            WorkloadKind::LstmNmt => 2,
+            WorkloadKind::TreeLstm => 3,
+            WorkloadKind::TreeGru => 4,
+            WorkloadKind::MvRnn => 5,
+            WorkloadKind::TreeLstm2Type => 6,
+            WorkloadKind::LatticeLstm => 7,
+            WorkloadKind::LatticeGru => 8,
+            WorkloadKind::BeamNmt => 9,
+            WorkloadKind::MoeRouting => 10,
+            WorkloadKind::GnnDag => 11,
+        }
+    }
+
+    pub fn from_wire_id(id: u16) -> Option<WorkloadKind> {
+        ALL_WORKLOADS.iter().copied().find(|w| w.wire_id() == id)
     }
 
     pub fn from_name(s: &str) -> Option<WorkloadKind> {
@@ -96,6 +175,9 @@ impl WorkloadKind {
             | WorkloadKind::MvRnn
             | WorkloadKind::TreeLstm2Type => Family::Tree,
             WorkloadKind::LatticeLstm | WorkloadKind::LatticeGru => Family::Lattice,
+            WorkloadKind::BeamNmt | WorkloadKind::MoeRouting | WorkloadKind::GnnDag => {
+                Family::Dynamic
+            }
         }
     }
 }
@@ -156,6 +238,9 @@ impl Workload {
             WorkloadKind::TreeLstm2Type => tree::treelstm_2type_registry(hidden),
             WorkloadKind::LatticeLstm => lattice::lattice_lstm_registry(hidden),
             WorkloadKind::LatticeGru => lattice::lattice_gru_registry(hidden),
+            WorkloadKind::BeamNmt => dynamic::beam_nmt_registry(hidden),
+            WorkloadKind::MoeRouting => dynamic::moe_routing_registry(hidden),
+            WorkloadKind::GnnDag => dynamic::gnn_dag_registry(hidden),
         };
         Workload {
             kind,
@@ -178,6 +263,9 @@ impl Workload {
             WorkloadKind::TreeLstm2Type => tree::treelstm_2type(&self.registry, &self.params, rng),
             WorkloadKind::LatticeLstm => lattice::lattice_lstm(&self.registry, &self.params, rng),
             WorkloadKind::LatticeGru => lattice::lattice_gru(&self.registry, &self.params, rng),
+            WorkloadKind::BeamNmt => dynamic::beam_nmt(&self.registry, &self.params, rng),
+            WorkloadKind::MoeRouting => dynamic::moe_routing(&self.registry, &self.params, rng),
+            WorkloadKind::GnnDag => dynamic::gnn_dag(&self.registry, &self.params, rng),
         }
     }
 
@@ -258,5 +346,50 @@ mod tests {
         for k in ALL_WORKLOADS {
             assert_eq!(WorkloadKind::from_name(k.name()), Some(k));
         }
+    }
+
+    #[test]
+    fn wire_ids_roundtrip_and_are_dense() {
+        let mut seen = vec![false; ALL_WORKLOADS.len()];
+        for k in ALL_WORKLOADS {
+            let id = k.wire_id();
+            assert_eq!(WorkloadKind::from_wire_id(id), Some(k));
+            assert!(!seen[id as usize], "duplicate wire id {id}");
+            seen[id as usize] = true;
+        }
+        assert!(seen.iter().all(|&s| s));
+        assert_eq!(WorkloadKind::from_wire_id(ALL_WORKLOADS.len() as u16), None);
+    }
+
+    #[test]
+    fn legacy_wire_ids_are_stable() {
+        // ids 0-8 predate the explicit mapping (they were ALL_WORKLOADS
+        // indices); peers on old builds still send them, so they are frozen.
+        let legacy = [
+            (WorkloadKind::BiLstmTagger, 0u16),
+            (WorkloadKind::BiLstmTaggerWithChar, 1),
+            (WorkloadKind::LstmNmt, 2),
+            (WorkloadKind::TreeLstm, 3),
+            (WorkloadKind::TreeGru, 4),
+            (WorkloadKind::MvRnn, 5),
+            (WorkloadKind::TreeLstm2Type, 6),
+            (WorkloadKind::LatticeLstm, 7),
+            (WorkloadKind::LatticeGru, 8),
+        ];
+        for (k, id) in legacy {
+            assert_eq!(k.wire_id(), id, "{:?}", k);
+        }
+    }
+
+    #[test]
+    fn dynamic_family_covers_new_kinds() {
+        for k in [
+            WorkloadKind::BeamNmt,
+            WorkloadKind::MoeRouting,
+            WorkloadKind::GnnDag,
+        ] {
+            assert_eq!(k.family(), Family::Dynamic);
+        }
+        assert!(!PAPER_WORKLOADS.contains(&WorkloadKind::BeamNmt));
     }
 }
